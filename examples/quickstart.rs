@@ -1,0 +1,29 @@
+//! Quickstart: verify the paper's Figure-3 example (tensor-parallel
+//! matmul) and the Figure-1 BSH layout bug.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use scalify::modelgen::demo;
+use scalify::verifier::{Verifier, VerifyConfig};
+
+fn main() {
+    let verifier = Verifier::new(VerifyConfig::default());
+
+    // Figure 3: Y = X·W vs contracted-dim-sharded TP + all-reduce
+    let pair = demo::matmul_allreduce_pair(4);
+    let report = verifier.verify_pair(&pair);
+    println!("tensor-parallel matmul:   {}", report.summary());
+    assert!(report.verified());
+
+    // Figure 1: the BSH layout transformation, correct and buggy
+    let ok = verifier.verify_pair(&demo::bsh_pair(false));
+    println!("BSH output (correct):     {}", ok.summary());
+    assert!(ok.verified());
+
+    let buggy = verifier.verify_pair(&demo::bsh_pair(true));
+    println!("BSH output (buggy):       {}", buggy.summary());
+    assert!(!buggy.verified());
+    for d in buggy.discrepancies() {
+        println!("  localized: {}", d.render());
+    }
+}

@@ -1,0 +1,50 @@
+//! Verify Llama-3.1-shaped models under the paper's parallelism configs
+//! (the Table-2 workload at example scale).
+//!
+//! Run: `cargo run --release --example verify_llama_tp`
+
+use scalify::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
+use scalify::util::fmt_duration;
+use scalify::verifier::{Verifier, VerifyConfig};
+
+fn main() {
+    let verifier = Verifier::new(VerifyConfig::default());
+
+    // Llama-3.1-8B-shaped graph at TP=32, the paper's headline workload
+    let cfg = LlamaConfig::llama3_8b();
+    println!(
+        "Llama-8B graph: {} layers, hidden {}, heads {}, tp 32",
+        cfg.layers, cfg.hidden, cfg.heads
+    );
+    let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 32 });
+    println!(
+        "  baseline {} nodes, distributed {} nodes",
+        pair.base.len(),
+        pair.dist.len()
+    );
+    let report = verifier.verify_pair(&pair);
+    println!("  {}", report.summary());
+    assert!(report.verified());
+
+    // sequence parallelism and flash decoding on the same model family
+    for (label, par) in [
+        ("sequence parallel (tp=32)", Parallelism::Sequence { tp: 32 }),
+        ("flash decoding (kv-shard=32)", Parallelism::FlashDecoding { tp: 32 }),
+    ] {
+        let pair = llama_pair(&cfg, par);
+        let report = verifier.verify_pair(&pair);
+        println!("{label}: {}", report.summary());
+        assert!(report.verified());
+    }
+
+    // Mixtral expert parallelism with the unrolled expert-sum baseline
+    let mcfg = MixtralConfig::mixtral_8x7b();
+    let pair = mixtral_pair(&mcfg, Parallelism::Expert { ep: 8 });
+    let (report, dur) = {
+        let t0 = std::time::Instant::now();
+        let r = verifier.verify_pair(&pair);
+        (r, t0.elapsed())
+    };
+    println!("Mixtral-8x7B expert parallel: {} ({})", report.summary(), fmt_duration(dur));
+    assert!(report.verified());
+}

@@ -1,0 +1,76 @@
+"""AOT lowering: JAX model variants → HLO *text* artifacts.
+
+HLO text, NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that the
+runtime's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never executes on the
+verification / request path.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    BlockConfig,
+    block_baseline,
+    block_optimized,
+    block_optimized_buggy,
+)
+
+
+def to_hlo_text(fn, cfg: BlockConfig) -> str:
+    """Lower a block function to HLO text."""
+    shapes = cfg.param_shapes()
+    specs = [
+        jax.ShapeDtypeStruct(shapes[name], jax.numpy.float32)
+        for name in (
+            "x",
+            "g_attn",
+            "wq",
+            "wk",
+            "wv",
+            "wo",
+            "g_mlp",
+            "wg",
+            "wu",
+            "wd",
+        )
+    ]
+    lowered = jax.jit(lambda *args: fn(cfg, *args)).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+VARIANTS = {
+    "model_single": block_baseline,
+    "model_opt": block_optimized,
+    "model_opt_buggy": block_optimized_buggy,
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = BlockConfig()
+    for name, fn in VARIANTS.items():
+        text = to_hlo_text(fn, cfg)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""L1: flash-style attention as a Pallas kernel (interpret=True).
+
+The kernel streams the key/value sequence in blocks with an online
+(running max / running sum) softmax — the flash-attention recurrence,
+adapted for TPU-style tiling:
+
+* block sizes are chosen for VMEM residency (see DESIGN.md §L1 perf
+  model): a (heads, T, d) query tile plus one (heads, block_k, d) kv tile
+  fit comfortably in a TPU core's 16 MiB VMEM with double-buffering
+  headroom;
+* the two matmuls per block are batched over heads and contract over
+  head_dim — MXU-shaped work.
+
+Two structural choices keep the lowered HLO a pure dataflow DAG (no HLO
+`while`/`call`), which the AOT interchange requires so the Rust verifier
+can traverse it and the PJRT/interpreter cross-check can run it:
+
+* the kv-block loop is **statically unrolled** (shapes are static);
+* the kernel runs **gridless** (one program instance, batched over
+  heads) — pallas interpret mode lowers multi-program grids via an HLO
+  `while` loop.
+
+``interpret=True`` is mandatory: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_K = 64
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """All heads at once: online-softmax attention over kv blocks."""
+    q = q_ref[...]  # (nh, T, d)
+    nh, t, d = q.shape
+    seq = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+
+    n_blocks = pl.cdiv(seq, block_k)
+    k_all = k_ref[...]
+    v_all = v_ref[...]
+
+    acc = jnp.zeros((nh, t, d), dtype=q.dtype)
+    m = jnp.full((nh, t), -jnp.inf, dtype=q.dtype)
+    l = jnp.zeros((nh, t), dtype=q.dtype)
+
+    for i in range(n_blocks):  # static unroll — pure dataflow HLO
+        start = min(i * block_k, max(seq - block_k, 0))
+        k_blk = jax.lax.slice_in_dim(k_all, start, start + block_k, axis=1)
+        v_blk = jax.lax.slice_in_dim(v_all, start, start + block_k, axis=1)
+        s = jnp.einsum("htd,hkd->htk", q, k_blk) * scale
+        # the last partial block re-reads earlier keys (the start index is
+        # clamped); mask to exactly the not-yet-seen positions
+        idx = start + jnp.arange(block_k)
+        fresh = (idx >= i * block_k) & (idx < seq)
+        s = jnp.where(fresh[None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("htk,hkd->htd", p, v_blk)
+        m = m_new
+
+    o_ref[...] = acc / l[..., None]
+
+
+def attention(q, k, v, block_k: int = DEFAULT_BLOCK_K):
+    """Flash-style attention over (heads, seq, head_dim) tensors."""
+    nh, t, d = q.shape
+    block_k = min(block_k, k.shape[1])
+    kernel = functools.partial(_attention_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((nh, t, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracle for the Pallas attention kernel.
+
+The reference is deliberately naive (materializes the full score matrix)
+so the flash-style kernel has an independent ground truth.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """softmax(q·kᵀ/√d)·v over (heads, seq, head_dim) tensors."""
+    d = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def rmsnorm_ref(x, g, eps=1e-5):
+    """RMSNorm reference."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(var + eps)) * g
+
+
+def silu_ref(x):
+    """SiLU reference."""
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))

@@ -1,0 +1,107 @@
+"""L2: the JAX transformer block whose lowered HLO the Rust verifier
+consumes and the Rust runtime executes.
+
+Two variants of the same block are authored:
+
+* ``block_baseline`` — the trusted oracle form;
+* ``block_optimized`` — the framework-optimized form (reciprocal-multiply
+  scaling, fused output reshape) that a production pipeline would emit.
+
+Both call the L1 Pallas attention kernel, so the kernel's computation
+lowers into the same artifacts. ``block_optimized_buggy`` reproduces the
+paper's Figure-1 BSH layout fault for the bug-hunting example.
+
+This module is build-time only: it is lowered once by ``aot.py`` and never
+imported on the Rust request path.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.ref import rmsnorm_ref, silu_ref
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    """Shape configuration of the demo block."""
+
+    seq: int = 8
+    batch: int = 2
+    heads: int = 4
+    head_dim: int = 8
+    ffn: int = 32
+
+    @property
+    def hidden(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def tokens(self) -> int:
+        return self.seq * self.batch
+
+    def param_shapes(self):
+        h, f = self.hidden, self.ffn
+        return dict(
+            x=(self.tokens, h),
+            g_attn=(h,),
+            wq=(h, h),
+            wk=(h, h),
+            wv=(h, h),
+            wo=(h, h),
+            g_mlp=(h,),
+            wg=(h, f),
+            wu=(h, f),
+            wd=(f, h),
+        )
+
+
+def _attention_part(cfg, x, g_attn, wq, wk, wv):
+    xn = rmsnorm_ref(x, g_attn)
+    q = (xn @ wq).reshape(cfg.tokens, cfg.heads, cfg.head_dim).transpose(1, 0, 2)
+    k = (xn @ wk).reshape(cfg.tokens, cfg.heads, cfg.head_dim).transpose(1, 0, 2)
+    v = (xn @ wv).reshape(cfg.tokens, cfg.heads, cfg.head_dim).transpose(1, 0, 2)
+    return attention(q, k, v)  # (heads, T, head_dim) — the L1 kernel
+
+
+def block_baseline(cfg, x, g_attn, wq, wk, wv, wo, g_mlp, wg, wu, wd):
+    """Oracle form of the decoder block."""
+    ctx = _attention_part(cfg, x, g_attn, wq, wk, wv)
+    # BSH output path, oracle order: transpose then merge
+    ctx = ctx.transpose(1, 0, 2).reshape(cfg.tokens, cfg.hidden)
+    x = x + ctx @ wo
+    xn = rmsnorm_ref(x, g_mlp)
+    h = silu_ref(xn @ wg) * (xn @ wu)
+    return (x + h @ wd,)
+
+
+def block_optimized(cfg, x, g_attn, wq, wk, wv, wo, g_mlp, wg, wu, wd):
+    """Framework-optimized form: same semantics, different HLO graph.
+
+    Differences vs the baseline (each survives jax tracing and is closed
+    by Scalify's rewrite rules): the BSH transpose is expressed as a
+    two-transpose chain `(2,1,0)∘(1,2,0) ≡ (1,0,2)`, and the residual adds
+    flip operand order (commutativity).
+    """
+    import jax.lax as lax
+
+    ctx = _attention_part(cfg, x, g_attn, wq, wk, wv)
+    # transpose chain equivalent to transpose(1, 0, 2)
+    ctx = lax.transpose(lax.transpose(ctx, (2, 1, 0)), (1, 2, 0))
+    ctx = ctx.reshape(cfg.tokens, cfg.hidden)
+    x = (ctx @ wo) + x  # flipped residual
+    xn = rmsnorm_ref(x, g_mlp)
+    h = silu_ref(xn @ wg) * (xn @ wu)
+    return ((h @ wd) + x,)
+
+
+def block_optimized_buggy(cfg, x, g_attn, wq, wk, wv, wo, g_mlp, wg, wu, wd):
+    """The Figure-1 BSH fault: reshape without the transpose."""
+    ctx = _attention_part(cfg, x, g_attn, wq, wk, wv)
+    # BUG: merges (heads, T) instead of (T, heads)
+    ctx = ctx.reshape(cfg.tokens, cfg.hidden)
+    x = x + ctx @ wo
+    xn = rmsnorm_ref(x, g_mlp)
+    h = silu_ref(xn @ wg) * (xn @ wu)
+    return (x + h @ wd,)

@@ -1,0 +1,76 @@
+"""L1 kernel correctness: Pallas attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nh=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([1, 3, 8, 17, 64]),
+    d=st.sampled_from([4, 8, 16]),
+    block_k=st.sampled_from([4, 8, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(nh, t, d, block_k, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (nh, t, d), jnp.float32)
+    k = _rand(kk, (nh, t, d), jnp.float32)
+    v = _rand(kv, (nh, t, d), jnp.float32)
+    out = attention(q, k, v, block_k=block_k)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_bf16(seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (2, 16, 8), jnp.bfloat16)
+    k = _rand(kk, (2, 16, 8), jnp.bfloat16)
+    v = _rand(kv, (2, 16, 8), jnp.bfloat16)
+    out = attention(q, k, v, block_k=8)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref, rtol=5e-2, atol=5e-2
+    )
+
+
+def test_kernel_rows_sum_to_one_property():
+    # softmax(QKᵀ)V with V = identity-ish rows exposes the row-stochastic
+    # property: output rows are convex combinations of V rows
+    key = jax.random.PRNGKey(0)
+    q = _rand(key, (1, 8, 4), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (1, 8, 4), jnp.float32)
+    v = jnp.ones((1, 8, 4), dtype=jnp.float32)
+    out = attention(q, k, v, block_k=4)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_block_size_invariance():
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (2, 32, 8), jnp.float32)
+    k = _rand(kk, (2, 32, 8), jnp.float32)
+    v = _rand(kv, (2, 32, 8), jnp.float32)
+    outs = [attention(q, k, v, block_k=b) for b in (4, 8, 16, 32)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,63 @@
+//! Engine microbenchmarks: the hot paths of the verifier (L3 perf pass
+//! targets, EXPERIMENTS.md §Perf).
+
+use scalify::bench::bench;
+use scalify::egraph::{default_rules, EGraph, ENode, RunLimits, Runner};
+use scalify::hlo::{parse_hlo_module, print_hlo_module};
+use scalify::layout::{infer_bijection, AtomStore, AxisExpr};
+use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
+use scalify::report::Table;
+use scalify::util::fmt_duration;
+use scalify::verifier::{Verifier, VerifyConfig};
+
+fn main() {
+    let mut table = Table::new("Engine microbenchmarks", &["Path", "Median", "Mean"]);
+    let mut add = |label: &str, stats: scalify::bench::Stats| {
+        table.row(&[label.into(), fmt_duration(stats.median()), fmt_duration(stats.mean())]);
+    };
+
+    // e-graph: build + saturate one decoder layer pair worth of nodes
+    add("egraph: saturate transpose/reshape tower", bench("egraph", 3, 20, || {
+        let mut eg = EGraph::new();
+        let x = eg.add(ENode::new(
+            scalify::ir::Op::Parameter { index: 0, name: "x".into() },
+            vec![],
+        ));
+        let mut cur = x;
+        for i in 0..40u32 {
+            let perm = if i % 2 == 0 { vec![1, 0, 2] } else { vec![2, 0, 1] };
+            cur = eg.add(ENode::new(scalify::ir::Op::Transpose { perm }, vec![cur]));
+        }
+        let rules = default_rules();
+        Runner::new(&rules, RunLimits::default()).run(&mut eg)
+    }));
+
+    // bijection inference on Figure-9-scale expressions
+    add("bijection inference (Fig. 9 shape)", bench("bij", 10, 200, || {
+        let mut st = AtomStore::new();
+        let x = AxisExpr::from_shape(&mut st, &[4, 64, 4096]);
+        let b = x.reshape(&mut st, &[256, 4096]).unwrap();
+        let d = x.transpose(&[1, 0, 2]).unwrap();
+        infer_bijection(&st, &b, &d).unwrap()
+    }));
+
+    // HLO parse + print round-trip throughput on a real decoder layer
+    let pair = llama_pair(
+        &LlamaConfig { layers: 1, ..LlamaConfig::llama3_8b() },
+        Parallelism::Tensor { tp: 32 },
+    );
+    let text = print_hlo_module(&pair.dist);
+    add(
+        &format!("hlo parse ({} nodes)", pair.dist.len()),
+        bench("parse", 3, 30, || parse_hlo_module(&text, 32).unwrap()),
+    );
+
+    // one full layer-pair verification (the per-layer unit of Algorithm 1)
+    let verifier = Verifier::new(VerifyConfig { parallel: false, memoize: false, ..Default::default() });
+    add("verify one decoder layer pair", bench("layer", 2, 10, || {
+        verifier.verify_pair(&pair)
+    }));
+
+    print!("{}", table.render());
+    table.save_csv("engine_microbench");
+}

@@ -1,0 +1,69 @@
+//! Figure 11: verification-time scaling over the five controlled sweeps
+//! (Table 3 configurations). Expected shapes: (a) seqlen, (b) batch,
+//! (d) tp and (e) heads are ~constant; (c) layers is linear (flattened by
+//! memoization only in the memo-on config; the paper sweeps with the full
+//! pipeline, which we mirror).
+
+use scalify::bench::bench;
+use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
+use scalify::report::Table;
+use scalify::util::fmt_duration;
+use scalify::verifier::{Verifier, VerifyConfig};
+
+fn base_cfg() -> LlamaConfig {
+    // Table 3 base: seqlen 64, bs 4, layers 32, tp 32, heads 32 — with
+    // bench-scale layer count kept at the paper's 32
+    LlamaConfig { layers: 32, hidden: 4096, heads: 32, ffn: 14336, seqlen: 64, batch: 4 }
+}
+
+fn run(table: &mut Table, group: &str, label: String, cfg: LlamaConfig, tp: u32) {
+    let verifier = Verifier::new(VerifyConfig::default());
+    let pair = llama_pair(&cfg, Parallelism::Tensor { tp });
+    let stats = bench(&label, 1, 3, || {
+        let r = verifier.verify_pair(&pair);
+        assert!(r.verified());
+        r
+    });
+    table.row(&[
+        group.into(),
+        label,
+        pair.total_nodes().to_string(),
+        fmt_duration(stats.median()),
+    ]);
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Figure 11 — scalability sweeps (Table 3 configs)",
+        &["Group", "Config", "Nodes", "Median time"],
+    );
+
+    // (a) sequence length — constant (graph size is shape-independent)
+    for seqlen in [64, 256, 1024, 4096, 8192] {
+        run(&mut table, "a:seqlen", format!("seqlen={seqlen}"),
+            LlamaConfig { seqlen, ..base_cfg() }, 32);
+    }
+    // (b) batch size — constant
+    for batch in [1, 4, 16, 64] {
+        run(&mut table, "b:batch", format!("batch={batch}"),
+            LlamaConfig { batch, ..base_cfg() }, 32);
+    }
+    // (c) layers — linear
+    for layers in [8, 16, 32, 64, 126] {
+        run(&mut table, "c:layers", format!("layers={layers}"),
+            LlamaConfig { layers, ..base_cfg() }, 32);
+    }
+    // (d) tensor-parallel degree — constant
+    for tp in [2, 4, 8, 16, 32] {
+        run(&mut table, "d:tp", format!("tp={tp}"), base_cfg(), tp);
+    }
+    // (e) heads — constant
+    for heads in [8, 16, 32, 64] {
+        let hidden = heads * 128;
+        run(&mut table, "e:heads", format!("heads={heads}"),
+            LlamaConfig { heads, hidden, ..base_cfg() }, 8);
+    }
+
+    print!("{}", table.render());
+    table.save_csv("fig11_scalability");
+}

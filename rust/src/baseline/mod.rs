@@ -1,0 +1,182 @@
+//! Comparison baselines (paper §7.1's contrast with TrainVerify and the
+//! ad-hoc practice the introduction describes).
+//!
+//! * [`numerical_verify`] — the practice Scalify replaces: run both graphs
+//!   on random inputs and compare activations within a float tolerance.
+//!   Fragile (tolerance-sensitive) and cost grows with tensor sizes, while
+//!   Scalify is size-independent (Figure 11a/b/e).
+//! * [`per_element_verify`] — a TrainVerify-style cost model: equivalence
+//!   is checked **per output element**, re-evaluating each element's full
+//!   dependency cone (the way per-element symbolic encodings scale). It
+//!   returns the same verdicts as the numerical baseline but its runtime
+//!   scales with `elements × graph`, reproducing the orders-of-magnitude
+//!   gap the paper reports (days vs minutes). It is a *cost-model*
+//!   stand-in, not an SMT encoding — see DESIGN.md.
+
+use crate::interp::{run_single, run_spmd, Tensor};
+use crate::modelgen::llama::shard_inputs;
+use crate::util::Prng;
+use crate::verifier::GraphPair;
+use std::time::{Duration, Instant};
+
+/// Result of a baseline check.
+#[derive(Clone, Debug)]
+pub struct BaselineReport {
+    /// Equivalent within tolerance on every trial?
+    pub equivalent: bool,
+    /// Max absolute deviation observed.
+    pub max_dev: f64,
+    /// Wall time.
+    pub duration: Duration,
+    /// Trials run.
+    pub trials: usize,
+}
+
+/// Numerical differential testing: `trials` random-input runs, comparing
+/// every core's outputs against the baseline within `tol`.
+pub fn numerical_verify(pair: &GraphPair, trials: usize, tol: f64, seed: u64) -> BaselineReport {
+    let start = Instant::now();
+    let mut prng = Prng::new(seed);
+    let mut max_dev = 0.0f64;
+    let mut equivalent = true;
+    for _ in 0..trials {
+        let base_inputs: Vec<Tensor> = pair
+            .base
+            .parameters()
+            .iter()
+            .map(|&pid| Tensor::random(pair.base.node(pid).shape.clone(), &mut prng))
+            .collect();
+        let base_out = match run_single(&pair.base, &base_inputs) {
+            Ok(o) => o,
+            Err(_) => {
+                return BaselineReport {
+                    equivalent: false,
+                    max_dev: f64::INFINITY,
+                    duration: start.elapsed(),
+                    trials: 0,
+                }
+            }
+        };
+        let dist_inputs = shard_inputs(pair, &base_inputs);
+        let dist_out = match run_spmd(&pair.dist, &dist_inputs) {
+            Ok(o) => o,
+            Err(_) => {
+                return BaselineReport {
+                    equivalent: false,
+                    max_dev: f64::INFINITY,
+                    duration: start.elapsed(),
+                    trials: 0,
+                }
+            }
+        };
+        for core_out in &dist_out {
+            for (b, d) in base_out.iter().zip(core_out) {
+                if b.shape.dims != d.shape.dims {
+                    equivalent = false;
+                    max_dev = f64::INFINITY;
+                    continue;
+                }
+                let dev = b.max_abs_diff(d);
+                max_dev = max_dev.max(dev);
+                if dev > tol {
+                    equivalent = false;
+                }
+            }
+        }
+    }
+    BaselineReport { equivalent, max_dev, duration: start.elapsed(), trials }
+}
+
+/// TrainVerify-style per-element cost model: evaluates the pair once per
+/// output element (bounded by `max_elements` to keep benches tractable;
+/// the bench extrapolates total cost from the per-element rate).
+pub fn per_element_verify(
+    pair: &GraphPair,
+    tol: f64,
+    seed: u64,
+    max_elements: usize,
+) -> BaselineReport {
+    let start = Instant::now();
+    let mut prng = Prng::new(seed);
+    let base_inputs: Vec<Tensor> = pair
+        .base
+        .parameters()
+        .iter()
+        .map(|&pid| Tensor::random(pair.base.node(pid).shape.clone(), &mut prng))
+        .collect();
+    let total_elements: i64 = pair
+        .base
+        .outputs
+        .iter()
+        .map(|&o| pair.base.node(o).shape.elements())
+        .sum();
+    let checked = (total_elements as usize).min(max_elements.max(1));
+    let mut equivalent = true;
+    let mut max_dev = 0.0f64;
+    for _elem in 0..checked {
+        // per-element reasoning: the whole dependency cone is re-evaluated
+        // for every element (no sharing across elements — the cost shape
+        // of per-element symbolic encodings)
+        let base_out = run_single(&pair.base, &base_inputs).expect("baseline eval");
+        let dist_inputs = shard_inputs(pair, &base_inputs);
+        let dist_out = run_spmd(&pair.dist, &dist_inputs).expect("dist eval");
+        let dev = base_out[0].max_abs_diff(&dist_out[0][0]);
+        max_dev = max_dev.max(dev);
+        if dev > tol {
+            equivalent = false;
+        }
+    }
+    BaselineReport { equivalent, max_dev, duration: start.elapsed(), trials: checked }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::{demo, llama_pair, LlamaConfig, Parallelism};
+
+    #[test]
+    fn numerical_accepts_correct_pair() {
+        let pair = demo::matmul_allreduce_pair(2);
+        let r = numerical_verify(&pair, 3, 1e-4, 7);
+        assert!(r.equivalent, "max_dev={}", r.max_dev);
+        assert_eq!(r.trials, 3);
+    }
+
+    #[test]
+    fn numerical_rejects_buggy_pair() {
+        let pair = demo::bsh_pair(true);
+        let r = numerical_verify(&pair, 2, 1e-4, 7);
+        assert!(!r.equivalent);
+    }
+
+    #[test]
+    fn per_element_is_slower_than_numerical() {
+        let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+        let fast = numerical_verify(&pair, 1, 1e-3, 3);
+        let slow = per_element_verify(&pair, 1e-3, 3, 8);
+        assert!(fast.equivalent && slow.equivalent);
+        // 8 per-element cones vs 1 full evaluation
+        assert!(slow.duration > fast.duration, "{:?} vs {:?}", slow.duration, fast.duration);
+    }
+
+    #[test]
+    fn numerical_misses_tolerance_masked_bugs() {
+        // The fragility the paper criticizes: a tiny-precision fault hides
+        // below a loose tolerance but is caught by semantic verification.
+        let pair = {
+            let base = crate::bugs::reproduced_bugs()
+                .into_iter()
+                .find(|c| c.id == "T4#17")
+                .unwrap();
+            (base.build)()
+        };
+        let loose = numerical_verify(&pair, 2, 0.5, 7);
+        assert!(loose.equivalent, "loose tolerance masks the bf16 fault");
+        let report = crate::verifier::Verifier::new(crate::verifier::VerifyConfig {
+            parallel: false,
+            ..Default::default()
+        })
+        .verify_pair(&pair);
+        assert!(!report.verified(), "Scalify still catches it");
+    }
+}

@@ -1,0 +1,96 @@
+//! In-repo timing harness (criterion is unavailable offline).
+//!
+//! Warmup + N samples, reporting mean / median / p95. Used by every
+//! `rust/benches/*` target.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Benchmark label.
+    pub label: String,
+    /// Samples (sorted).
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    /// Mean sample.
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        self.samples[self.samples.len() / 2]
+    }
+
+    /// 95th-percentile sample.
+    pub fn p95(&self) -> Duration {
+        let idx = ((self.samples.len() as f64) * 0.95) as usize;
+        self.samples[idx.min(self.samples.len() - 1)]
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} mean {:>10} median {:>10} p95 {:>10} (n={})",
+            self.label,
+            crate::util::fmt_duration(self.mean()),
+            crate::util::fmt_duration(self.median()),
+            crate::util::fmt_duration(self.p95()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` with warmup and sampling; returns stats.
+pub fn bench<T>(label: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed());
+    }
+    out.sort_unstable();
+    Stats { label: label.to_string(), samples: out }
+}
+
+/// Time a single run (for minutes-scale model verification where one
+/// sample is the honest budget).
+pub fn time_once<T>(label: &str, f: impl FnOnce() -> T) -> (T, Stats) {
+    let t0 = Instant::now();
+    let v = f();
+    let d = t0.elapsed();
+    (v, Stats { label: label.to_string(), samples: vec![d] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = Stats {
+            label: "t".into(),
+            samples: vec![
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+                Duration::from_millis(3),
+            ],
+        };
+        assert_eq!(s.mean(), Duration::from_millis(2));
+        assert_eq!(s.median(), Duration::from_millis(2));
+        assert!(s.summary().contains("n=3"));
+    }
+
+    #[test]
+    fn bench_runs() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.samples.len(), 5);
+    }
+}

@@ -1,0 +1,548 @@
+//! The bug catalog: Table 4 (19 reproduced) + Table 5 (5 new).
+
+use super::mutate::{
+    bypass_nodes, in_func, is_op, mutate_ops, nth_match, remap_annotations, wrap_first,
+};
+use crate::ir::{Annotation, DType, GraphBuilder, NodeId, Op, ReplicaGroups, Shape};
+use crate::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
+use crate::verifier::GraphPair;
+
+/// Bug category (paper §7.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    /// Wrong communication primitive / missing or redundant collective.
+    IncorrectDistributedOp,
+    /// Wrong device assignment (replica groups).
+    IncorrectDistributedConfig,
+    /// Single-device and distributed pipelines use different precisions.
+    InconsistentPrecision,
+    /// Reshape splits tensors incorrectly.
+    IncorrectAxisSplit,
+    /// Invalid layout-transformation sequence.
+    IncorrectLayoutOptimization,
+    /// Manifests outside graph compilation (Scalify cannot see it).
+    OutsideGraph,
+}
+
+/// The paper's localization rating for the case.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpectedLoc {
+    /// ▸ — pinpoints the faulty instruction.
+    Instruction,
+    /// ★ — pinpoints the faulty function / data structure.
+    Function,
+    /// n/a — undetected (outside the graph-compilation phase).
+    NotApplicable,
+}
+
+/// One bug case.
+pub struct BugCase {
+    /// Paper id, e.g. `T4#3`.
+    pub id: &'static str,
+    /// Short description (paper row).
+    pub description: &'static str,
+    /// Category.
+    pub category: Category,
+    /// Upstream issue/commit reference from the paper.
+    pub issue: &'static str,
+    /// Paper's localization rating.
+    pub expected: ExpectedLoc,
+    /// Ground-truth source site of the fault (`file:line`, function).
+    pub truth_site: &'static str,
+    /// Ground-truth function.
+    pub truth_func: &'static str,
+    /// Build the buggy pair.
+    pub build: fn() -> GraphPair,
+}
+
+/// Llama config used by the bug corpus: one layer, 4 heads so head-level
+/// layout faults are non-trivial.
+fn bug_llama() -> LlamaConfig {
+    LlamaConfig { layers: 1, hidden: 8, heads: 4, ffn: 16, seqlen: 4, batch: 1 }
+}
+
+fn llama_tp() -> GraphPair {
+    llama_pair(&bug_llama(), Parallelism::Tensor { tp: 2 })
+}
+
+fn flash() -> GraphPair {
+    llama_pair(&LlamaConfig::tiny(), Parallelism::FlashDecoding { tp: 2 })
+}
+
+fn mixtral_ep() -> GraphPair {
+    mixtral_pair(&MixtralConfig::tiny(), Parallelism::Expert { ep: 4 })
+}
+
+/// Sequence-parallel attention all-to-all micro-pair (deepspeed-5808-like).
+fn a2a_pair(bug: Option<(usize, usize)>) -> GraphPair {
+    let (s, h, tp) = (8i64, 8i64, 2u32);
+    let mut bb = GraphBuilder::new("base", 1);
+    bb.layer(Some(0)).at("sp_attention.py", 15).in_func("seq_alltoall");
+    let x = bb.parameter("x", Shape::new(DType::F32, vec![s, h]));
+    let y = bb.tanh(x);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", tp);
+    db.layer(Some(0)).at("sp_attention.py", 15).in_func("seq_alltoall");
+    let xd = db.parameter("x", Shape::new(DType::F32, vec![s / tp as i64, h]));
+    let t = db.tanh(xd);
+    db.at("sp_attention.py", 22);
+    let (split_dim, concat_dim) = bug.unwrap_or((1, 0));
+    let a = db.all_to_all(t, split_dim, concat_dim, ReplicaGroups::full(tp));
+    db.at("sp_attention.py", 23);
+    let g = db.all_gather(a, if concat_dim == 0 { 1 } else { 0 }, ReplicaGroups::full(tp));
+    // the reshape "patch" that forces the baseline's output shape — in the
+    // real bugs this is the incorrect reshape Scalify pinpoints
+    db.at("sp_attention.py", 24);
+    let out = db.reshape(g, vec![s, h]);
+    db.output(out);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::shard(x, NodeId(0), 0, tp)];
+    GraphPair::new(base, dist, ann)
+}
+
+fn bypass(mut pair: GraphPair, pred: impl FnMut(&crate::ir::Graph, NodeId) -> bool) -> GraphPair {
+    bypass_nodes(&mut pair.dist, pred);
+    pair
+}
+
+fn wrong_groups(mut pair: GraphPair, func: &str, nth: usize) -> GraphPair {
+    let func = func.to_owned();
+    let target = nth_match(
+        &pair.dist,
+        |g, id| is_op(g, id, "all-reduce") && in_func(g, id, &func),
+        nth,
+    );
+    if let Some(t) = target {
+        let cores = pair.dist.num_cores;
+        mutate_ops(
+            &mut pair.dist,
+            |_, id| id == t,
+            |op, _| {
+                if let Op::AllReduce { groups, .. } = op {
+                    *groups = ReplicaGroups::split(cores, cores);
+                }
+            },
+        );
+    }
+    pair
+}
+
+/// Append a redundant all-reduce after the node matched by (func, op, nth).
+fn redundant_allreduce(pair: GraphPair, func: &'static str, opname: &'static str, nth: usize) -> GraphPair {
+    let cores = pair.dist.num_cores;
+    let (dist, remap) = wrap_first(
+        &pair.dist,
+        {
+            let mut count = 0;
+            move |g, id| {
+                if is_op(g, id, opname) && in_func(g, id, func) {
+                    let hit = count == nth;
+                    count += 1;
+                    hit
+                } else {
+                    false
+                }
+            }
+        },
+        |g, id| {
+            let node = g.node(id);
+            let (shape, meta) = (node.shape.clone(), node.meta);
+            g.push(
+                Op::AllReduce {
+                    kind: crate::ir::ReduceKind::Add,
+                    groups: ReplicaGroups::full(cores),
+                },
+                vec![id],
+                shape,
+                meta,
+            )
+        },
+    );
+    let mut pair = GraphPair { dist, ..pair };
+    remap_annotations(&mut pair, &remap);
+    pair
+}
+
+/// Wrap a node with a bf16 → f32 round-trip (precision fault).
+fn precision_roundtrip(pair: GraphPair, func: &'static str, opname: &'static str, nth: usize) -> GraphPair {
+    let (dist, remap) = wrap_first(
+        &pair.dist,
+        {
+            let mut count = 0;
+            move |g, id| {
+                if is_op(g, id, opname) && in_func(g, id, func) {
+                    let hit = count == nth;
+                    count += 1;
+                    hit
+                } else {
+                    false
+                }
+            }
+        },
+        |g, id| {
+            let node = g.node(id);
+            let (shape, meta) = (node.shape.clone(), node.meta);
+            let lo = g.push(
+                Op::Convert { to: DType::BF16 },
+                vec![id],
+                shape.with_dtype(DType::BF16),
+                meta,
+            );
+            g.push(Op::Convert { to: DType::F32 }, vec![lo], shape, meta)
+        },
+    );
+    let mut pair = GraphPair { dist, ..pair };
+    remap_annotations(&mut pair, &remap);
+    pair
+}
+
+/// The BSH layout fault (Figure 1): replace the (nh,T,hd)→(T,nh,hd)
+/// transpose with the identity, keeping shapes consistent.
+fn bsh_fault(mut pair: GraphPair) -> GraphPair {
+    let target = nth_match(
+        &pair.dist,
+        |g, id| {
+            matches!(g.node(id).op, Op::Transpose { ref perm } if perm == &[1, 0, 2])
+                && in_func(g, id, "attention_output")
+        },
+        0,
+    );
+    if let Some(t) = target {
+        let in_dims = pair.dist.node(pair.dist.node(t).inputs[0]).shape.dims.clone();
+        mutate_ops(
+            &mut pair.dist,
+            |_, id| id == t,
+            |op, shape| {
+                *op = Op::Transpose { perm: vec![0, 1, 2] };
+                shape.dims = in_dims.clone();
+            },
+        );
+        // the downstream reshape keeps its dims (element counts agree), so
+        // the graph stays valid but semantically wrong — Figure 1 exactly
+    }
+    pair
+}
+
+/// Missing-normalization fault: drop the norm-weight multiply.
+fn missing_norm(pair: GraphPair, nth: usize) -> GraphPair {
+    let target = nth_match(
+        &pair.dist,
+        |g, id| is_op(g, id, "multiply") && in_func(g, id, "rms_norm"),
+        // each rmsnorm has 4 muls (x*x, s*1/H, x*r, xn*g); the g-mul is 4th
+        nth * 4 + 3,
+    );
+    match target {
+        Some(t) => bypass(pair, move |_, id| id == t),
+        None => pair,
+    }
+}
+
+/// Wrong-sharding fault: the annotation claims the q-projection is sharded
+/// along dim 0 while the distributed graph actually consumes a dim-1 shard.
+fn wrong_sharding(mut pair: GraphPair) -> GraphPair {
+    for a in pair.annotations.iter_mut() {
+        if let crate::ir::InputRelation::ShardAlong { dim, .. } = &mut a.relation {
+            // flip the first column-sharded weight (q_proj)
+            if *dim == 1 {
+                *dim = 0;
+                break;
+            }
+        }
+    }
+    pair
+}
+
+/// Wrong operation ordering: all-reduce applied after the residual add
+/// instead of before it (reduces the replicated residual too).
+fn reduce_after_residual(pair: GraphPair) -> GraphPair {
+    // remove the attention all-reduce…
+    let t = nth_match(&pair.dist, |g, id| is_op(g, id, "all-reduce"), 0);
+    let pair = match t {
+        Some(t) => bypass(pair, move |_, id| id == t),
+        None => pair,
+    };
+    // …and put it after the residual add instead
+    redundant_allreduce(pair, "decoder_layer", "add", 0)
+}
+
+/// KV-cache slicing / logits-layout bugs manifest outside the compiled
+/// graph (runtime cache update, host-side postprocessing): the compiled
+/// pair itself is correct, so Scalify verifies it — the paper's n/a rows.
+fn outside_graph_flash() -> GraphPair {
+    flash()
+}
+fn outside_graph_llama() -> GraphPair {
+    llama_tp()
+}
+
+/// Table 4: the 19 reproduced bugs.
+pub fn reproduced_bugs() -> Vec<BugCase> {
+    vec![
+        BugCase {
+            id: "T4#1",
+            description: "Incorrect layout optimization (BSH attention output)",
+            category: Category::IncorrectLayoutOptimization,
+            issue: "transformersneuronx-69d039d",
+            expected: ExpectedLoc::Function,
+            truth_site: "attention.py:79",
+            truth_func: "attention_output",
+            build: || bsh_fault(llama_tp()),
+        },
+        BugCase {
+            id: "T4#2",
+            description: "Incorrect all-to-all layout (seq-parallel, bs>1)",
+            category: Category::IncorrectLayoutOptimization,
+            issue: "deepspeed-5808",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "sp_attention.py:24",
+            truth_func: "seq_alltoall",
+            build: || a2a_pair(Some((0, 1))),
+        },
+        BugCase {
+            id: "T4#3",
+            description: "Missing all-reduce (attention output projection)",
+            category: Category::IncorrectDistributedOp,
+            issue: "megatronlm-1699",
+            expected: ExpectedLoc::Function,
+            truth_site: "decoder.py:55",
+            truth_func: "decoder_layer",
+            build: || {
+                let t = nth_match(
+                    &llama_tp().dist,
+                    |g, id| is_op(g, id, "all-reduce") && in_func(g, id, "attention_output"),
+                    0,
+                );
+                bypass(llama_tp(), move |_, id| Some(id) == t)
+            },
+        },
+        BugCase {
+            id: "T4#4",
+            description: "Missing all-reduce (MLP down projection)",
+            category: Category::IncorrectDistributedOp,
+            issue: "megatronlm-599",
+            expected: ExpectedLoc::Function,
+            truth_site: "decoder.py:61",
+            truth_func: "decoder_layer",
+            build: || {
+                let t = nth_match(
+                    &llama_tp().dist,
+                    |g, id| is_op(g, id, "all-reduce") && in_func(g, id, "mlp_fwd"),
+                    0,
+                );
+                bypass(llama_tp(), move |_, id| Some(id) == t)
+            },
+        },
+        BugCase {
+            id: "T4#5",
+            description: "Missing all-reduce (MoE expert sum)",
+            category: Category::IncorrectDistributedOp,
+            issue: "deepspeed-7188",
+            expected: ExpectedLoc::Function,
+            truth_site: "moe.py:90",
+            truth_func: "moe_layer",
+            build: || bypass(mixtral_ep(), |g, id| is_op(g, id, "all-reduce")),
+        },
+        BugCase {
+            id: "T4#6",
+            description: "Missing all-reduce (flash-decoding denominator)",
+            category: Category::IncorrectDistributedOp,
+            issue: "megatronlm-5fffdfc",
+            expected: ExpectedLoc::Function,
+            truth_site: "flash_decoding.py:50",
+            truth_func: "flash_decode",
+            build: || {
+                let t = nth_match(&flash().dist, |g, id| is_op(g, id, "all-reduce"), 2);
+                bypass(flash(), move |_, id| Some(id) == t)
+            },
+        },
+        BugCase {
+            id: "T4#7",
+            description: "Missing normalization (attention input norm weight)",
+            category: Category::IncorrectDistributedOp,
+            issue: "megatronlm-1620",
+            expected: ExpectedLoc::Function,
+            truth_site: "attention.py:40",
+            truth_func: "attention_fwd",
+            build: || missing_norm(llama_tp(), 0),
+        },
+        BugCase {
+            id: "T4#8",
+            description: "Missing normalization (MLP input norm weight)",
+            category: Category::IncorrectDistributedOp,
+            issue: "megatronlm-1611",
+            expected: ExpectedLoc::Function,
+            truth_site: "mlp.py:33",
+            truth_func: "mlp_fwd",
+            build: || missing_norm(llama_tp(), 1),
+        },
+        BugCase {
+            id: "T4#9",
+            description: "Redundant all-reduce (replicated residual)",
+            category: Category::IncorrectDistributedOp,
+            issue: "nemo-9344",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "decoder.py:55",
+            truth_func: "decoder_layer",
+            build: || redundant_allreduce(llama_tp(), "decoder_layer", "add", 0),
+        },
+        BugCase {
+            id: "T4#10",
+            description: "Redundant all-reduce (double reduce after MLP)",
+            category: Category::IncorrectDistributedOp,
+            issue: "transformerengine-3",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "mlp.py:36",
+            truth_func: "mlp_fwd",
+            build: || redundant_allreduce(llama_tp(), "mlp_fwd", "all-reduce", 0),
+        },
+        BugCase {
+            id: "T4#11",
+            description: "Redundant all-reduce (column-sharded gate output)",
+            category: Category::IncorrectDistributedOp,
+            issue: "nemo-8487",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "mlp.py:33",
+            truth_func: "mlp_fwd",
+            build: || redundant_allreduce(llama_tp(), "mlp_fwd", "dot", 0),
+        },
+        BugCase {
+            id: "T4#12",
+            description: "Redundant all-reduce (MoE output reduced twice)",
+            category: Category::IncorrectDistributedOp,
+            issue: "deepspeed-6714",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "moe.py:84",
+            truth_func: "moe_local",
+            build: || redundant_allreduce(mixtral_ep(), "moe_local", "all-reduce", 0),
+        },
+        BugCase {
+            id: "T4#13",
+            description: "Incorrect replica groups (attention all-reduce)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "megatronlm-32bbb76",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "attention.py:79",
+            truth_func: "attention_output",
+            build: || wrong_groups(llama_tp(), "attention_output", 0),
+        },
+        BugCase {
+            id: "T4#14",
+            description: "Incorrect replica groups (MLP all-reduce)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "deepspeed-5618",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "mlp.py:36",
+            truth_func: "mlp_fwd",
+            build: || wrong_groups(llama_tp(), "mlp_fwd", 0),
+        },
+        BugCase {
+            id: "T4#15",
+            description: "Incorrect replica groups (flash-decoding max)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "nemo-5564",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "flash_decoding.py:31",
+            truth_func: "flash_decode",
+            build: || wrong_groups(flash(), "flash_decode", 0),
+        },
+        BugCase {
+            id: "T4#16",
+            description: "Incorrect replica groups (MoE all-reduce)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "transformerengine-335",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "moe.py:84",
+            truth_func: "moe_local",
+            build: || wrong_groups(mixtral_ep(), "moe_local", 0),
+        },
+        BugCase {
+            id: "T4#17",
+            description: "Inconsistent precision (bf16 round-trip on q)",
+            category: Category::InconsistentPrecision,
+            issue: "deepspeed-2071",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "attention.py:40",
+            truth_func: "attention_fwd",
+            build: || precision_roundtrip(llama_tp(), "attention_fwd", "dot", 0),
+        },
+        BugCase {
+            id: "T4#18",
+            description: "Incorrect KV cache slicing (runtime phase)",
+            category: Category::OutsideGraph,
+            issue: "transformersneuronx-e2f5241",
+            expected: ExpectedLoc::NotApplicable,
+            truth_site: "",
+            truth_func: "",
+            build: outside_graph_flash,
+        },
+        BugCase {
+            id: "T4#19",
+            description: "Incorrect logits layout (host postprocessing)",
+            category: Category::OutsideGraph,
+            issue: "transformersneuronx-0c646b0",
+            expected: ExpectedLoc::NotApplicable,
+            truth_site: "",
+            truth_func: "",
+            build: outside_graph_llama,
+        },
+    ]
+}
+
+/// Table 5: the 5 previously-unknown bugs.
+pub fn new_bugs() -> Vec<BugCase> {
+    vec![
+        BugCase {
+            id: "T5#1",
+            description: "Incorrect layout optimization (TNx BSH output)",
+            category: Category::IncorrectLayoutOptimization,
+            issue: "TNx",
+            expected: ExpectedLoc::Function,
+            truth_site: "attention.py:124",
+            truth_func: "attention_bsh",
+            build: || crate::modelgen::demo::bsh_pair(true),
+        },
+        BugCase {
+            id: "T5#2",
+            description: "Wrong all-to-all transformation (TNx)",
+            category: Category::IncorrectLayoutOptimization,
+            issue: "TNx",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "sp_attention.py:24",
+            truth_func: "seq_alltoall",
+            build: || a2a_pair(Some((1, 1))),
+        },
+        BugCase {
+            id: "T5#3",
+            description: "Wrong sharding of tensors (TNx)",
+            category: Category::IncorrectAxisSplit,
+            issue: "TNx",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "attention.py:40",
+            truth_func: "attention_fwd",
+            build: || wrong_sharding(llama_tp()),
+        },
+        BugCase {
+            id: "T5#4",
+            description: "Wrong precision ordering (NxD rotary embedding)",
+            category: Category::InconsistentPrecision,
+            issue: "NxD",
+            expected: ExpectedLoc::Function,
+            truth_site: "rotary.py:44",
+            truth_func: "apply_rotary",
+            build: || precision_roundtrip(llama_tp(), "apply_rotary", "broadcast", 0),
+        },
+        BugCase {
+            id: "T5#5",
+            description: "Wrong operation ordering (NxD reduce after residual)",
+            category: Category::IncorrectDistributedOp,
+            issue: "NxD",
+            expected: ExpectedLoc::Function,
+            truth_site: "decoder.py:55",
+            truth_func: "decoder_layer",
+            build: || reduce_after_residual(llama_tp()),
+        },
+    ]
+}

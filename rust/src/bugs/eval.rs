@@ -1,0 +1,57 @@
+//! Bug-case evaluation: run Scalify, classify detection + localization.
+
+use super::catalog::BugCase;
+use crate::verifier::{Verifier, VerifyConfig};
+
+/// Localization quality achieved on a case.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocResult {
+    /// A reported discrepancy names the exact ground-truth `file:line`.
+    Instruction,
+    /// A reported discrepancy lands in the ground-truth function.
+    Function,
+    /// Detected, but no discrepancy near the ground truth.
+    Elsewhere,
+    /// Not detected.
+    Undetected,
+}
+
+/// Outcome of evaluating one bug case.
+#[derive(Clone, Debug)]
+pub struct BugOutcome {
+    /// Bug verdict: true when Scalify reported non-equivalence.
+    pub detected: bool,
+    /// Localization quality vs the ground truth.
+    pub loc: LocResult,
+    /// All reported sites (for diagnostics).
+    pub sites: Vec<String>,
+    /// Verification wall time.
+    pub duration: std::time::Duration,
+}
+
+/// Run Scalify on the case's buggy pair and classify the outcome.
+pub fn evaluate(case: &BugCase) -> BugOutcome {
+    let pair = (case.build)();
+    let report =
+        Verifier::new(VerifyConfig { parallel: false, ..VerifyConfig::default() }).verify_pair(&pair);
+    let detected = !report.verified();
+    let discrepancies = report.discrepancies();
+    let sites: Vec<String> = discrepancies
+        .iter()
+        .map(|d| format!("{} [{}]", d.render(), d.func))
+        .collect();
+    let loc = if !detected {
+        LocResult::Undetected
+    } else if !case.truth_site.is_empty()
+        && discrepancies.iter().any(|d| d.site == case.truth_site)
+    {
+        LocResult::Instruction
+    } else if !case.truth_func.is_empty()
+        && discrepancies.iter().any(|d| d.func == case.truth_func)
+    {
+        LocResult::Function
+    } else {
+        LocResult::Elsewhere
+    };
+    BugOutcome { detected, loc, sites, duration: report.total }
+}

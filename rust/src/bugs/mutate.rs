@@ -1,0 +1,186 @@
+//! Graph surgery: controlled mutations that inject the bug corpus.
+
+use crate::ir::{Graph, Meta, NodeId, Op};
+use crate::verifier::GraphPair;
+use rustc_hash::FxHashMap;
+
+/// Bypass every node matching `pred`: its consumers read its first input
+/// instead (models a *missing* operation, e.g. a dropped all-reduce).
+pub fn bypass_nodes(g: &mut Graph, mut pred: impl FnMut(&Graph, NodeId) -> bool) -> usize {
+    let targets: Vec<NodeId> =
+        g.nodes.iter().map(|n| n.id).filter(|&id| pred(g, id)).collect();
+    let mut redirect: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+    for t in &targets {
+        let src = g.node(*t).inputs[0];
+        // chase chains of bypassed nodes
+        let src = *redirect.get(&src).unwrap_or(&src);
+        redirect.insert(*t, src);
+    }
+    let mut changed = 0;
+    for n in g.nodes.iter_mut() {
+        for i in n.inputs.iter_mut() {
+            if let Some(&r) = redirect.get(i) {
+                *i = r;
+                changed += 1;
+            }
+        }
+    }
+    for o in g.outputs.iter_mut() {
+        if let Some(&r) = redirect.get(o) {
+            *o = r;
+        }
+    }
+    changed
+}
+
+/// Mutate the op of every node matching `pred` in place (wrong replica
+/// groups, wrong reshape dims, wrong transpose, …). The node's shape may
+/// be updated too via the second closure.
+pub fn mutate_ops(
+    g: &mut Graph,
+    mut pred: impl FnMut(&Graph, NodeId) -> bool,
+    f: impl Fn(&mut Op, &mut crate::ir::Shape),
+) -> usize {
+    let targets: Vec<NodeId> =
+        g.nodes.iter().map(|n| n.id).filter(|&id| pred(g, id)).collect();
+    for &t in &targets {
+        let node = g.node_mut(t);
+        let mut op = node.op.clone();
+        let mut shape = node.shape.clone();
+        f(&mut op, &mut shape);
+        node.op = op;
+        node.shape = shape;
+    }
+    targets.len()
+}
+
+/// Insert extra nodes after the first node matching `pred`: `build`
+/// receives the rebuilt graph and the (remapped) id of the matched node and
+/// returns the replacement id consumers should use. Returns the id remap so
+/// callers can fix annotations.
+pub fn wrap_first(
+    g: &Graph,
+    mut pred: impl FnMut(&Graph, NodeId) -> bool,
+    build: impl FnOnce(&mut Graph, NodeId) -> NodeId,
+) -> (Graph, FxHashMap<NodeId, NodeId>) {
+    let target = g.nodes.iter().map(|n| n.id).find(|&id| pred(g, id));
+    let mut out = Graph::new(g.name.clone(), g.num_cores);
+    let mut remap: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+    let mut build = Some(build);
+    for n in &g.nodes {
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|i| remap[i]).collect();
+        let meta = Meta {
+            file: out.interner.intern(g.interner.resolve(n.meta.file)),
+            line: n.meta.line,
+            expr: out.interner.intern(g.interner.resolve(n.meta.expr)),
+            func: out.interner.intern(g.interner.resolve(n.meta.func)),
+            layer: n.meta.layer,
+        };
+        let new_id = out.push(n.op.clone(), inputs, n.shape.clone(), meta);
+        if Some(n.id) == target {
+            let wrapped = (build.take().unwrap())(&mut out, new_id);
+            remap.insert(n.id, wrapped);
+        } else {
+            remap.insert(n.id, new_id);
+        }
+    }
+    out.outputs = g.outputs.iter().map(|o| remap[o]).collect();
+    (out, remap)
+}
+
+/// Apply a dist-graph rebuild remap to a pair's annotations.
+pub fn remap_annotations(pair: &mut GraphPair, remap: &FxHashMap<NodeId, NodeId>) {
+    for a in pair.annotations.iter_mut() {
+        if let Some(&r) = remap.get(&a.distributed) {
+            a.distributed = r;
+        }
+    }
+}
+
+/// Find the nth node (0-based) matching a predicate.
+pub fn nth_match(
+    g: &Graph,
+    mut pred: impl FnMut(&Graph, NodeId) -> bool,
+    n: usize,
+) -> Option<NodeId> {
+    g.nodes.iter().map(|x| x.id).filter(|&id| pred(g, id)).nth(n)
+}
+
+/// Predicate helper: node is in `func` (framework function name).
+pub fn in_func(g: &Graph, id: NodeId, func: &str) -> bool {
+    g.interner.resolve(g.node(id).meta.func) == func
+}
+
+/// Predicate helper: node op name equals `name`.
+pub fn is_op(g: &Graph, id: NodeId, name: &str) -> bool {
+    g.node(id).op.name() == name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, ReduceKind, ReplicaGroups, Shape};
+
+    fn tp_graph() -> Graph {
+        let mut b = GraphBuilder::new("g", 2);
+        let x = b.parameter("x", Shape::new(DType::F32, vec![4, 4]));
+        let w = b.parameter("w", Shape::new(DType::F32, vec![4, 4]));
+        let h = b.matmul(x, w);
+        let r = b.all_reduce(h, ReduceKind::Add, ReplicaGroups::full(2));
+        let t = b.tanh(r);
+        b.output(t);
+        b.finish()
+    }
+
+    #[test]
+    fn bypass_removes_collective() {
+        let mut g = tp_graph();
+        let n = bypass_nodes(&mut g, |g, id| is_op(g, id, "all-reduce"));
+        assert!(n > 0);
+        g.validate().unwrap();
+        // tanh now reads the matmul directly
+        let tanh = g.nodes.iter().find(|n| n.op.name() == "tanh").unwrap();
+        assert_eq!(g.node(tanh.inputs[0]).op.name(), "dot");
+    }
+
+    #[test]
+    fn mutate_changes_groups() {
+        let mut g = tp_graph();
+        let n = mutate_ops(
+            &mut g,
+            |g, id| is_op(g, id, "all-reduce"),
+            |op, _| {
+                if let Op::AllReduce { groups, .. } = op {
+                    *groups = ReplicaGroups::split(2, 2);
+                }
+            },
+        );
+        assert_eq!(n, 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn wrap_inserts_nodes() {
+        let g = tp_graph();
+        let (g2, remap) = wrap_first(
+            &g,
+            |g, id| is_op(g, id, "dot"),
+            |g, id| {
+                let shape = g.node(id).shape.clone();
+                let lo = g.push(
+                    Op::Convert { to: DType::BF16 },
+                    vec![id],
+                    shape.with_dtype(DType::BF16),
+                    Meta::none(),
+                );
+                g.push(Op::Convert { to: DType::F32 }, vec![lo], shape, Meta::none())
+            },
+        );
+        g2.validate().unwrap();
+        assert_eq!(g2.len(), g.len() + 2);
+        assert!(remap.len() == g.len());
+        // all-reduce consumes the round-tripped value now
+        let ar = g2.nodes.iter().find(|n| n.op.name() == "all-reduce").unwrap();
+        assert_eq!(g2.node(ar.inputs[0]).op.name(), "convert");
+    }
+}

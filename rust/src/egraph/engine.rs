@@ -1,0 +1,394 @@
+//! Core e-graph: union-find, hash-consing, congruence closure.
+
+use crate::ir::{NodeId, Op, Shape};
+use rustc_hash::FxHashMap;
+
+/// E-class id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Id(pub u32);
+
+impl Id {
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// An e-node: operator + child e-classes.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ENode {
+    /// Operator (attributes included — two `transpose`s with different
+    /// permutations are different e-nodes).
+    pub op: Op,
+    /// Child e-class ids.
+    pub children: Vec<Id>,
+}
+
+impl ENode {
+    /// Construct.
+    pub fn new(op: Op, children: Vec<Id>) -> ENode {
+        ENode { op, children }
+    }
+
+    fn canonicalize(&self, eg: &EGraph) -> ENode {
+        ENode {
+            op: self.op.clone(),
+            children: self.children.iter().map(|&c| eg.find(c)).collect(),
+        }
+    }
+}
+
+/// Which graph(s) of the verified pair a class's terms came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Origin {
+    /// Contains a term from the baseline graph.
+    pub baseline: bool,
+    /// Contains a term from the distributed graph.
+    pub distributed: bool,
+}
+
+impl Origin {
+    /// Neither graph (derived terms only).
+    pub fn derived() -> Origin {
+        Origin { baseline: false, distributed: false }
+    }
+}
+
+/// Per-class analysis data (egg's "analysis"): shape, scalar-constant
+/// value for folding, and a representative IR node for localization.
+#[derive(Clone, Debug)]
+pub struct ClassData {
+    /// Output shape of terms in this class (all terms agree; checked on
+    /// merge in debug builds).
+    pub shape: Option<Shape>,
+    /// If the class is a known scalar constant.
+    pub constant: Option<f64>,
+    /// Origin flags.
+    pub origin: Origin,
+    /// Representative source node: (is_distributed, node id) — kept for
+    /// bug localization so every class can be mapped back to program text.
+    pub repr: Option<(bool, NodeId)>,
+}
+
+impl ClassData {
+    fn empty() -> ClassData {
+        ClassData { shape: None, constant: None, origin: Origin::derived(), repr: None }
+    }
+
+    fn merge(&mut self, other: &ClassData) {
+        if self.shape.is_none() {
+            self.shape = other.shape.clone();
+        }
+        if self.constant.is_none() {
+            self.constant = other.constant;
+        }
+        self.origin.baseline |= other.origin.baseline;
+        self.origin.distributed |= other.origin.distributed;
+        if self.repr.is_none() {
+            self.repr = other.repr;
+        }
+    }
+}
+
+/// One equivalence class of terms.
+#[derive(Clone, Debug)]
+pub struct EClass {
+    /// Canonical id (valid right after `rebuild`).
+    pub id: Id,
+    /// Terms in the class.
+    pub nodes: Vec<ENode>,
+    /// (parent e-node, parent class) pairs for congruence propagation.
+    pub parents: Vec<(ENode, Id)>,
+    /// Analysis data.
+    pub data: ClassData,
+}
+
+/// The e-graph.
+pub struct EGraph {
+    uf: Vec<u32>,
+    memo: FxHashMap<ENode, Id>,
+    classes: FxHashMap<Id, EClass>,
+    worklist: Vec<Id>,
+    /// Number of `union` calls that actually merged two classes.
+    pub merges: usize,
+}
+
+impl Default for EGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EGraph {
+    /// Empty e-graph.
+    pub fn new() -> EGraph {
+        EGraph {
+            uf: Vec::new(),
+            memo: FxHashMap::default(),
+            classes: FxHashMap::default(),
+            worklist: Vec::new(),
+            merges: 0,
+        }
+    }
+
+    /// Canonical id of `id` (path-halving find).
+    pub fn find(&self, mut id: Id) -> Id {
+        while self.uf[id.idx()] != id.0 {
+            id = Id(self.uf[id.idx()]);
+        }
+        id
+    }
+
+    fn find_mut(&mut self, mut id: Id) -> Id {
+        while self.uf[id.idx()] != id.0 {
+            let grand = self.uf[self.uf[id.idx()] as usize];
+            self.uf[id.idx()] = grand;
+            id = Id(grand);
+        }
+        id
+    }
+
+    /// Number of canonical classes.
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Total e-nodes across classes.
+    pub fn node_count(&self) -> usize {
+        self.classes.values().map(|c| c.nodes.len()).sum()
+    }
+
+    /// Iterate canonical classes.
+    pub fn classes(&self) -> impl Iterator<Item = &EClass> {
+        self.classes.values()
+    }
+
+    /// Class by (canonical) id.
+    pub fn class(&self, id: Id) -> &EClass {
+        let canon = self.find(id);
+        &self.classes[&canon]
+    }
+
+    /// Mutable class data by id.
+    pub fn data_mut(&mut self, id: Id) -> &mut ClassData {
+        let canon = self.find(id);
+        &mut self.classes.get_mut(&canon).unwrap().data
+    }
+
+    /// Add an e-node, returning its class (hash-consed).
+    pub fn add(&mut self, enode: ENode) -> Id {
+        let enode = enode.canonicalize(self);
+        if let Some(&id) = self.memo.get(&enode) {
+            return self.find(id);
+        }
+        let id = Id(self.uf.len() as u32);
+        self.uf.push(id.0);
+        let mut data = ClassData::empty();
+        if let Op::Constant(c) = &enode.op {
+            if let crate::ir::ConstVal::Scalar(v) = c {
+                data.constant = Some(*v);
+            }
+        }
+        let class = EClass { id, nodes: vec![enode.clone()], parents: Vec::new(), data };
+        for &child in &enode.children {
+            let canon = self.find(child);
+            self.classes.get_mut(&canon).unwrap().parents.push((enode.clone(), id));
+        }
+        self.classes.insert(id, class);
+        self.memo.insert(enode, id);
+        id
+    }
+
+    /// Add with analysis data attached (shape, origin, representative).
+    pub fn add_with_data(
+        &mut self,
+        enode: ENode,
+        shape: Shape,
+        from_distributed: bool,
+        repr: NodeId,
+    ) -> Id {
+        let id = self.add(enode);
+        let data = self.data_mut(id);
+        if data.shape.is_none() {
+            data.shape = Some(shape);
+        }
+        if from_distributed {
+            data.origin.distributed = true;
+        } else {
+            data.origin.baseline = true;
+        }
+        if data.repr.is_none() {
+            data.repr = Some((from_distributed, repr));
+        }
+        id
+    }
+
+    /// Merge two classes. Returns the surviving canonical id.
+    pub fn union(&mut self, a: Id, b: Id) -> Id {
+        let a = self.find_mut(a);
+        let b = self.find_mut(b);
+        if a == b {
+            return a;
+        }
+        self.merges += 1;
+        // keep the class with more parents as root (union by size-ish)
+        let (root, child) = if self.classes[&a].parents.len() >= self.classes[&b].parents.len()
+        {
+            (a, b)
+        } else {
+            (b, a)
+        };
+        self.uf[child.idx()] = root.0;
+        let child_class = self.classes.remove(&child).unwrap();
+        let root_class = self.classes.get_mut(&root).unwrap();
+        root_class.nodes.extend(child_class.nodes);
+        root_class.parents.extend(child_class.parents);
+        root_class.data.merge(&child_class.data);
+        self.worklist.push(root);
+        root
+    }
+
+    /// Restore congruence invariants after unions (egg's `rebuild`).
+    pub fn rebuild(&mut self) {
+        while let Some(id) = self.worklist.pop() {
+            let canon = self.find_mut(id);
+            let parents = std::mem::take(&mut self.classes.get_mut(&canon).unwrap().parents);
+            let mut new_parents: FxHashMap<ENode, Id> = FxHashMap::default();
+            for (pnode, pclass) in parents {
+                let pnode_canon = pnode.canonicalize(self);
+                self.memo.remove(&pnode);
+                let pclass = self.find_mut(pclass);
+                if let Some(&existing) = self.memo.get(&pnode_canon) {
+                    let existing = self.find_mut(existing);
+                    if existing != pclass {
+                        self.union(existing, pclass);
+                    }
+                }
+                let pclass = self.find_mut(pclass);
+                self.memo.insert(pnode_canon.clone(), pclass);
+                new_parents.insert(pnode_canon, pclass);
+            }
+            let canon = self.find_mut(canon);
+            self.classes
+                .get_mut(&canon)
+                .unwrap()
+                .parents
+                .extend(new_parents.into_iter());
+        }
+        // canonicalize stored node lists so pattern scans see canonical ids
+        // (hash-based dedup: the previous format!()-based sort dominated
+        // the rebuild profile — see EXPERIMENTS.md §Perf)
+        let ids: Vec<Id> = self.classes.keys().copied().collect();
+        for id in ids {
+            let mut class = self.classes.remove(&id).unwrap();
+            for n in class.nodes.iter_mut() {
+                *n = n.canonicalize(self);
+            }
+            let mut seen: rustc_hash::FxHashSet<ENode> =
+                rustc_hash::FxHashSet::default();
+            class.nodes.retain(|n| seen.insert(n.clone()));
+            class.id = id;
+            self.classes.insert(id, class);
+        }
+    }
+
+    /// Memo lookup: is there already a class containing exactly this
+    /// (canonicalized) e-node? Used by the relation analysis to find the
+    /// baseline partner of a distributed op.
+    pub fn lookup(&self, enode: &ENode) -> Option<Id> {
+        let canon = enode.canonicalize(self);
+        self.memo.get(&canon).map(|&id| self.find(id))
+    }
+
+    /// True when `a` and `b` are in the same class.
+    pub fn same(&self, a: Id, b: Id) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ConstVal, DType};
+
+    fn leaf(eg: &mut EGraph, name: &str) -> Id {
+        eg.add(ENode::new(Op::Parameter { index: 0, name: name.into() }, vec![]))
+    }
+
+    #[test]
+    fn hashcons_dedups() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let a = eg.add(ENode::new(Op::Exp, vec![x]));
+        let b = eg.add(ENode::new(Op::Exp, vec![x]));
+        assert_eq!(a, b);
+        assert_eq!(eg.class_count(), 2);
+    }
+
+    #[test]
+    fn congruence_closure_merges_parents() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let y = leaf(&mut eg, "y");
+        let fx = eg.add(ENode::new(Op::Exp, vec![x]));
+        let fy = eg.add(ENode::new(Op::Exp, vec![y]));
+        assert!(!eg.same(fx, fy));
+        eg.union(x, y);
+        eg.rebuild();
+        assert!(eg.same(fx, fy), "congruence: x=y implies f(x)=f(y)");
+    }
+
+    #[test]
+    fn deep_congruence_chain() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let y = leaf(&mut eg, "y");
+        let mut cx = x;
+        let mut cy = y;
+        for _ in 0..10 {
+            cx = eg.add(ENode::new(Op::Neg, vec![cx]));
+            cy = eg.add(ENode::new(Op::Neg, vec![cy]));
+        }
+        eg.union(x, y);
+        eg.rebuild();
+        assert!(eg.same(cx, cy));
+    }
+
+    #[test]
+    fn union_is_idempotent() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let y = leaf(&mut eg, "y");
+        eg.union(x, y);
+        let m = eg.merges;
+        eg.union(x, y);
+        assert_eq!(eg.merges, m);
+    }
+
+    #[test]
+    fn constant_data_tracked() {
+        let mut eg = EGraph::new();
+        let c = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(2.5)), vec![]));
+        assert_eq!(eg.class(c).data.constant, Some(2.5));
+    }
+
+    #[test]
+    fn origin_merges() {
+        let mut eg = EGraph::new();
+        let x = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 0, name: "b".into() }, vec![]),
+            Shape::scalar(DType::F32),
+            false,
+            NodeId(0),
+        );
+        let y = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 0, name: "d".into() }, vec![]),
+            Shape::scalar(DType::F32),
+            true,
+            NodeId(0),
+        );
+        eg.union(x, y);
+        eg.rebuild();
+        let o = eg.class(x).data.origin;
+        assert!(o.baseline && o.distributed);
+    }
+}

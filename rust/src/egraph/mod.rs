@@ -1,0 +1,18 @@
+//! E-graph engine: equality saturation over tensor IR terms.
+//!
+//! A from-scratch implementation of the egg/egglog data structure
+//! (union-find + hash-consed e-nodes + congruence closure) specialized to
+//! [`crate::ir::Op`] as the term language. Scalify registers the baseline
+//! and distributed subgraphs of each layer into **one** e-graph, runs the
+//! rewrite rules to saturation, and lets the relational analysis
+//! ([`crate::relations`]) work over canonical e-class ids — two nodes
+//! whose classes merge are semantically equal, and every union is
+//! justified by a rewrite rule (soundness, paper §5.1).
+
+mod engine;
+mod rewrite;
+pub mod runner;
+
+pub use engine::{EClass, EGraph, ENode, Id, Origin};
+pub use rewrite::{default_rules, Rewrite};
+pub use runner::{RunLimits, RunReport, Runner, StopReason};

@@ -1,0 +1,679 @@
+//! Rewrite rules (the paper's reusable rule templates, §4/§6).
+//!
+//! Rules are *programmatic appliers*: each scans the e-graph for its
+//! pattern and emits unions / new e-nodes. This mirrors how the paper's
+//! 25 meta-rules are parameterized templates ("polymorphic over operator
+//! types") rather than fixed syntactic patterns. Every rule is
+//! semantics-preserving, which is what keeps the verifier sound: a union
+//! can only ever merge terms a rule proved equal.
+
+use super::{EGraph, ENode, Id};
+use crate::ir::{ConstVal, Op};
+
+/// A rewrite rule.
+pub trait Rewrite: Send + Sync {
+    /// Rule name (for reports).
+    fn name(&self) -> &'static str;
+    /// Scan the e-graph, apply everywhere, return number of unions/adds.
+    fn apply(&self, eg: &mut EGraph) -> usize;
+}
+
+/// Collect `(class, enode)` pairs matching a predicate, avoiding borrow
+/// issues between scanning and mutation.
+fn collect<F: Fn(&ENode) -> bool>(eg: &EGraph, pred: F) -> Vec<(Id, ENode)> {
+    let mut out = Vec::new();
+    for class in eg.classes() {
+        for node in &class.nodes {
+            if pred(node) {
+                out.push((class.id, node.clone()));
+            }
+        }
+    }
+    out
+}
+
+fn compose_perm(outer: &[usize], inner: &[usize]) -> Vec<usize> {
+    // transpose(transpose(x, inner), outer): result dim i = inner[outer[i]]
+    outer.iter().map(|&o| inner[o]).collect()
+}
+
+fn is_identity(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| i == p)
+}
+
+/// `transpose(x, id) = x` and `transpose(transpose(x, p), q) = transpose(x, p∘q)`.
+struct TransposeFusion;
+impl Rewrite for TransposeFusion {
+    fn name(&self) -> &'static str {
+        "transpose-fusion"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Transpose { .. })) {
+            let Op::Transpose { perm } = &node.op else { unreachable!() };
+            if is_identity(perm) {
+                let child = eg.find(node.children[0]);
+                if !eg.same(cls, child) {
+                    eg.union(cls, child);
+                    n += 1;
+                }
+                continue;
+            }
+            // look one level down for another transpose
+            let inner_nodes: Vec<ENode> = eg.class(node.children[0]).nodes.clone();
+            for inner in inner_nodes {
+                if let Op::Transpose { perm: ip } = &inner.op {
+                    let composed = compose_perm(perm, ip);
+                    let new = if is_identity(&composed) {
+                        eg.find(inner.children[0])
+                    } else {
+                        let shape = eg.class(cls).data.shape.clone();
+                        let id = eg.add(ENode::new(
+                            Op::Transpose { perm: composed },
+                            vec![inner.children[0]],
+                        ));
+                        if let Some(s) = shape {
+                            let d = eg.data_mut(id);
+                            if d.shape.is_none() {
+                                d.shape = Some(s);
+                            }
+                        }
+                        id
+                    };
+                    if !eg.same(cls, new) {
+                        eg.union(cls, new);
+                        n += 1;
+                    }
+                }
+            }
+        }
+        n
+    }
+}
+
+/// `reshape(x) = x` when shapes match; `reshape(reshape(x)) = reshape(x)`.
+struct ReshapeFusion;
+impl Rewrite for ReshapeFusion {
+    fn name(&self) -> &'static str {
+        "reshape-fusion"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Reshape { .. })) {
+            let child = eg.find(node.children[0]);
+            let out_shape = eg.class(cls).data.shape.clone();
+            let in_shape = eg.class(child).data.shape.clone();
+            if let (Some(o), Some(i)) = (&out_shape, &in_shape) {
+                if o.dims == i.dims {
+                    if !eg.same(cls, child) {
+                        eg.union(cls, child);
+                        n += 1;
+                    }
+                    continue;
+                }
+            }
+            // reshape(reshape(x)) -> reshape(x) (same final shape)
+            let Op::Reshape { dims } = &node.op else { unreachable!() };
+            let inner_nodes: Vec<ENode> = eg.class(child).nodes.clone();
+            for inner in inner_nodes {
+                if matches!(inner.op, Op::Reshape { .. }) {
+                    let id = eg.add(ENode::new(
+                        Op::Reshape { dims: dims.clone() },
+                        vec![inner.children[0]],
+                    ));
+                    if let Some(s) = out_shape.clone() {
+                        let d = eg.data_mut(id);
+                        if d.shape.is_none() {
+                            d.shape = Some(s);
+                        }
+                    }
+                    if !eg.same(cls, id) {
+                        eg.union(cls, id);
+                        n += 1;
+                    }
+                }
+            }
+        }
+        n
+    }
+}
+
+/// `convert(x, t) = x` when x already has dtype t; collapse convert chains
+/// that cannot lose precision.
+struct ConvertElim;
+impl Rewrite for ConvertElim {
+    fn name(&self) -> &'static str {
+        "convert-elim"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Convert { .. })) {
+            let Op::Convert { to } = node.op else { unreachable!() };
+            let child = eg.find(node.children[0]);
+            if let Some(s) = &eg.class(child).data.shape {
+                if s.dtype == to {
+                    if !eg.same(cls, child) {
+                        eg.union(cls, child);
+                        n += 1;
+                    }
+                    continue;
+                }
+            }
+            // convert(convert(x, t1), t2): collapse only when the inner
+            // conversion does not truncate (mantissa(t1) >= mantissa(src)),
+            // otherwise the chain is *not* equal to convert(x, t2) — this is
+            // exactly the precision-bug pattern we must not erase.
+            let inner_nodes: Vec<ENode> = eg.class(child).nodes.clone();
+            for inner in inner_nodes {
+                if let Op::Convert { to: t1 } = inner.op {
+                    let src = eg
+                        .class(inner.children[0])
+                        .data
+                        .shape
+                        .as_ref()
+                        .map(|s| s.dtype);
+                    if let Some(src) = src {
+                        if t1.mantissa_bits() >= src.mantissa_bits()
+                            && t1.is_float()
+                            && src.is_float()
+                        {
+                            let id = eg.add(ENode::new(
+                                Op::Convert { to },
+                                vec![inner.children[0]],
+                            ));
+                            if !eg.same(cls, id) {
+                                eg.union(cls, id);
+                                n += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        n
+    }
+}
+
+/// Commutativity of add/mul/max/min.
+struct Commute;
+impl Rewrite for Commute {
+    fn name(&self) -> &'static str {
+        "commute"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in collect(eg, |n| n.op.is_commutative() && n.children.len() == 2) {
+            let flipped = ENode::new(node.op.clone(), vec![node.children[1], node.children[0]]);
+            let id = eg.add(flipped);
+            if !eg.same(cls, id) {
+                eg.union(cls, id);
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// Scalar constant folding for unary/binary arithmetic on scalar constants.
+struct ConstFold;
+impl Rewrite for ConstFold {
+    fn name(&self) -> &'static str {
+        "const-fold"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut pending: Vec<(Id, f64)> = Vec::new();
+        for class in eg.classes() {
+            if class.data.constant.is_some() {
+                continue;
+            }
+            for node in &class.nodes {
+                let cv = |i: usize| eg.class(node.children[i]).data.constant;
+                let v = match node.op {
+                    Op::Add => cv(0).zip(cv(1)).map(|(a, b)| a + b),
+                    Op::Sub => cv(0).zip(cv(1)).map(|(a, b)| a - b),
+                    Op::Mul => cv(0).zip(cv(1)).map(|(a, b)| a * b),
+                    Op::Div => cv(0).zip(cv(1)).map(|(a, b)| a / b),
+                    Op::Max => cv(0).zip(cv(1)).map(|(a, b)| a.max(b)),
+                    Op::Min => cv(0).zip(cv(1)).map(|(a, b)| a.min(b)),
+                    Op::Pow => cv(0).zip(cv(1)).map(|(a, b)| a.powf(b)),
+                    Op::Neg => cv(0).map(|a| -a),
+                    Op::Exp => cv(0).map(f64::exp),
+                    Op::Log => cv(0).map(f64::ln),
+                    Op::Sqrt => cv(0).map(f64::sqrt),
+                    Op::Rsqrt => cv(0).map(|a| 1.0 / a.sqrt()),
+                    Op::Abs => cv(0).map(f64::abs),
+                    _ => None,
+                };
+                if let Some(v) = v {
+                    pending.push((class.id, v));
+                    break;
+                }
+            }
+        }
+        let n = pending.len();
+        for (cls, v) in pending {
+            let c = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(v)), vec![]));
+            eg.union(cls, c);
+            let canon = eg.find(cls);
+            eg.data_mut(canon).constant = Some(v);
+        }
+        n
+    }
+}
+
+/// `div(x, bcast(c)) = mul(x, bcast(1/c))` for scalar constant c — the
+/// softmax-normalization difference between baseline and optimized graphs.
+struct DivToMulRecip;
+impl Rewrite for DivToMulRecip {
+    fn name(&self) -> &'static str {
+        "div-to-mul-recip"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Div)) {
+            // rhs must be broadcast(const c) or const c
+            let rhs_nodes: Vec<ENode> = eg.class(node.children[1]).nodes.clone();
+            for rn in rhs_nodes {
+                let (bc_op, c) = match &rn.op {
+                    Op::Broadcast { mapped, .. } => {
+                        let c = eg.class(rn.children[0]).data.constant;
+                        (Some((mapped.clone(), rn.children[0])), c)
+                    }
+                    Op::Constant(ConstVal::Scalar(v)) => (None, Some(*v)),
+                    _ => (None, None),
+                };
+                let Some(c) = c else { continue };
+                if c == 0.0 {
+                    continue;
+                }
+                let recip = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(1.0 / c)), vec![]));
+                let rhs_shape = eg.class(node.children[1]).data.shape.clone();
+                let recip_full = match (&bc_op, rhs_shape) {
+                    (Some((mapped, _)), Some(shape)) => {
+                        let id = eg.add(ENode::new(
+                            Op::Broadcast { mapped: mapped.clone(), dims: shape.dims.clone() },
+                            vec![recip],
+                        ));
+                        let d = eg.data_mut(id);
+                        if d.shape.is_none() {
+                            d.shape = Some(shape);
+                        }
+                        id
+                    }
+                    _ => recip,
+                };
+                let mul = eg.add(ENode::new(Op::Mul, vec![node.children[0], recip_full]));
+                if !eg.same(cls, mul) {
+                    eg.union(cls, mul);
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// `concat(slice(x, 0..k), slice(x, k..n), d) = x` — full-cover slice
+/// reassembly, the pattern fine-grained slicing analysis relies on.
+struct SliceReassembly;
+impl Rewrite for SliceReassembly {
+    fn name(&self) -> &'static str {
+        "slice-reassembly"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        'outer: for (cls, node) in collect(eg, |n| matches!(n.op, Op::Concat { .. })) {
+            let Op::Concat { dim } = node.op else { unreachable!() };
+            // each child must be slice(x, ...) of the same x along `dim`,
+            // contiguous from 0 to the full size
+            let mut src: Option<Id> = None;
+            let mut cursor = 0i64;
+            for &child in &node.children {
+                let mut matched = false;
+                for cn in eg.class(child).nodes.clone() {
+                    if let Op::Slice { starts, limits, strides } = &cn.op {
+                        if strides.iter().any(|&s| s != 1) {
+                            continue;
+                        }
+                        // full range on all dims except `dim`
+                        let in_shape = match &eg.class(cn.children[0]).data.shape {
+                            Some(s) => s.clone(),
+                            None => continue,
+                        };
+                        let full_elsewhere = starts.iter().zip(limits).enumerate().all(
+                            |(i, (&s, &l))| i == dim || (s == 0 && l == in_shape.dims[i]),
+                        );
+                        if !full_elsewhere || starts[dim] != cursor {
+                            continue;
+                        }
+                        let x = eg.find(cn.children[0]);
+                        if let Some(prev) = src {
+                            if prev != x {
+                                continue;
+                            }
+                        }
+                        src = Some(x);
+                        cursor = limits[dim];
+                        matched = true;
+                        break;
+                    }
+                }
+                if !matched {
+                    continue 'outer;
+                }
+            }
+            if let Some(x) = src {
+                if let Some(xs) = &eg.class(x).data.shape {
+                    if xs.dims[dim] == cursor && !eg.same(cls, x) {
+                        eg.union(cls, x);
+                        n += 1;
+                    }
+                }
+            }
+        }
+        n
+    }
+}
+
+/// `slice(x, full range) = x`.
+struct FullSliceElim;
+impl Rewrite for FullSliceElim {
+    fn name(&self) -> &'static str {
+        "full-slice-elim"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Slice { .. })) {
+            let Op::Slice { starts, limits, strides } = &node.op else { unreachable!() };
+            let child = eg.find(node.children[0]);
+            let Some(in_shape) = eg.class(child).data.shape.clone() else { continue };
+            let full = strides.iter().all(|&s| s == 1)
+                && starts.iter().all(|&s| s == 0)
+                && limits.iter().zip(&in_shape.dims).all(|(&l, &d)| l == d);
+            if full && !eg.same(cls, child) {
+                eg.union(cls, child);
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// `x + bcast(0) = x`, `x * bcast(1) = x`.
+struct IdentityElim;
+impl Rewrite for IdentityElim {
+    fn name(&self) -> &'static str {
+        "identity-elim"
+    }
+    fn apply(&self, eg: &mut EGraph) -> usize {
+        let mut n = 0;
+        for (cls, node) in
+            collect(eg, |n| matches!(n.op, Op::Add | Op::Mul) && n.children.len() == 2)
+        {
+            let ident = match node.op {
+                Op::Add => 0.0,
+                Op::Mul => 1.0,
+                _ => unreachable!(),
+            };
+            for (keep, other) in
+                [(node.children[0], node.children[1]), (node.children[1], node.children[0])]
+            {
+                let other_is_ident = eg.class(other).data.constant == Some(ident)
+                    || eg.class(other).nodes.iter().any(|cn| {
+                        matches!(cn.op, Op::Broadcast { .. })
+                            && eg.class(cn.children[0]).data.constant == Some(ident)
+                    });
+                if other_is_ident && !eg.same(cls, keep) {
+                    eg.union(cls, keep);
+                    n += 1;
+                    break;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// The default rule set registered by the verifier.
+pub fn default_rules() -> Vec<Box<dyn Rewrite>> {
+    vec![
+        Box::new(TransposeFusion),
+        Box::new(ReshapeFusion),
+        Box::new(ConvertElim),
+        Box::new(Commute),
+        Box::new(ConstFold),
+        Box::new(DivToMulRecip),
+        Box::new(SliceReassembly),
+        Box::new(FullSliceElim),
+        Box::new(IdentityElim),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, Shape};
+
+    fn leaf(eg: &mut EGraph, name: &str, dims: &[i64]) -> Id {
+        eg.add_with_data(
+            ENode::new(Op::Parameter { index: 0, name: name.into() }, vec![]),
+            Shape::new(DType::F32, dims.to_vec()),
+            false,
+            crate::ir::NodeId(0),
+        )
+    }
+
+    fn saturate(eg: &mut EGraph) {
+        let rules = default_rules();
+        for _ in 0..10 {
+            let mut changed = 0;
+            for r in &rules {
+                changed += r.apply(eg);
+                eg.rebuild();
+            }
+            if changed == 0 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[2, 3]);
+        let t1 = eg.add_with_data(
+            ENode::new(Op::Transpose { perm: vec![1, 0] }, vec![x]),
+            Shape::new(DType::F32, vec![3, 2]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        let t2 = eg.add_with_data(
+            ENode::new(Op::Transpose { perm: vec![1, 0] }, vec![t1]),
+            Shape::new(DType::F32, vec![2, 3]),
+            false,
+            crate::ir::NodeId(2),
+        );
+        saturate(&mut eg);
+        assert!(eg.same(x, t2));
+        assert!(!eg.same(x, t1));
+    }
+
+    #[test]
+    fn noop_reshape_collapses() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[4, 4]);
+        let r = eg.add_with_data(
+            ENode::new(Op::Reshape { dims: vec![4, 4] }, vec![x]),
+            Shape::new(DType::F32, vec![4, 4]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        saturate(&mut eg);
+        assert!(eg.same(x, r));
+    }
+
+    #[test]
+    fn reshape_chain_collapses() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[4, 4]);
+        let r1 = eg.add_with_data(
+            ENode::new(Op::Reshape { dims: vec![16] }, vec![x]),
+            Shape::new(DType::F32, vec![16]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        let r2 = eg.add_with_data(
+            ENode::new(Op::Reshape { dims: vec![2, 8] }, vec![r1]),
+            Shape::new(DType::F32, vec![2, 8]),
+            false,
+            crate::ir::NodeId(2),
+        );
+        let direct = eg.add_with_data(
+            ENode::new(Op::Reshape { dims: vec![2, 8] }, vec![x]),
+            Shape::new(DType::F32, vec![2, 8]),
+            false,
+            crate::ir::NodeId(3),
+        );
+        saturate(&mut eg);
+        assert!(eg.same(r2, direct));
+    }
+
+    #[test]
+    fn commutativity() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[2]);
+        let y = leaf(&mut eg, "y", &[2]);
+        let xy = eg.add(ENode::new(Op::Add, vec![x, y]));
+        let yx = eg.add(ENode::new(Op::Add, vec![y, x]));
+        saturate(&mut eg);
+        assert!(eg.same(xy, yx));
+        // subtraction must NOT commute
+        let sub_xy = eg.add(ENode::new(Op::Sub, vec![x, y]));
+        let sub_yx = eg.add(ENode::new(Op::Sub, vec![y, x]));
+        saturate(&mut eg);
+        assert!(!eg.same(sub_xy, sub_yx));
+    }
+
+    #[test]
+    fn const_folding() {
+        let mut eg = EGraph::new();
+        let a = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(3.0)), vec![]));
+        let b = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(4.0)), vec![]));
+        let sum = eg.add(ENode::new(Op::Add, vec![a, b]));
+        let direct = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(7.0)), vec![]));
+        saturate(&mut eg);
+        assert!(eg.same(sum, direct));
+        // rsqrt(4) = 0.5
+        let four = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(4.0)), vec![]));
+        let rs = eg.add(ENode::new(Op::Rsqrt, vec![four]));
+        let half = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(0.5)), vec![]));
+        saturate(&mut eg);
+        assert!(eg.same(rs, half));
+    }
+
+    #[test]
+    fn div_equals_mul_reciprocal() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[2, 2]);
+        let two = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(2.0)), vec![]));
+        let btwo = eg.add_with_data(
+            ENode::new(Op::Broadcast { mapped: vec![], dims: vec![2, 2] }, vec![two]),
+            Shape::new(DType::F32, vec![2, 2]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        let div = eg.add(ENode::new(Op::Div, vec![x, btwo]));
+        let half = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(0.5)), vec![]));
+        let bhalf = eg.add_with_data(
+            ENode::new(Op::Broadcast { mapped: vec![], dims: vec![2, 2] }, vec![half]),
+            Shape::new(DType::F32, vec![2, 2]),
+            false,
+            crate::ir::NodeId(2),
+        );
+        let mul = eg.add(ENode::new(Op::Mul, vec![x, bhalf]));
+        saturate(&mut eg);
+        assert!(eg.same(div, mul));
+    }
+
+    #[test]
+    fn slice_reassembly_full_cover() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[4, 6]);
+        let s1 = eg.add_with_data(
+            ENode::new(
+                Op::Slice { starts: vec![0, 0], limits: vec![4, 3], strides: vec![1, 1] },
+                vec![x],
+            ),
+            Shape::new(DType::F32, vec![4, 3]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        let s2 = eg.add_with_data(
+            ENode::new(
+                Op::Slice { starts: vec![0, 3], limits: vec![4, 6], strides: vec![1, 1] },
+                vec![x],
+            ),
+            Shape::new(DType::F32, vec![4, 3]),
+            false,
+            crate::ir::NodeId(2),
+        );
+        let cat = eg.add(ENode::new(Op::Concat { dim: 1 }, vec![s1, s2]));
+        saturate(&mut eg);
+        assert!(eg.same(cat, x));
+        // partial cover must NOT reassemble
+        let cat_partial = eg.add(ENode::new(Op::Concat { dim: 1 }, vec![s1, s1]));
+        saturate(&mut eg);
+        assert!(!eg.same(cat_partial, x));
+    }
+
+    #[test]
+    fn convert_chain_precision_guard() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[2]); // f32
+        // f32 -> bf16 -> f32 must NOT collapse to x
+        let lo = eg.add_with_data(
+            ENode::new(Op::Convert { to: DType::BF16 }, vec![x]),
+            Shape::new(DType::BF16, vec![2]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        let back = eg.add_with_data(
+            ENode::new(Op::Convert { to: DType::F32 }, vec![lo]),
+            Shape::new(DType::F32, vec![2]),
+            false,
+            crate::ir::NodeId(2),
+        );
+        // f32 -> f64 -> f32 CAN collapse (no truncation inward)
+        let up = eg.add_with_data(
+            ENode::new(Op::Convert { to: DType::F64 }, vec![x]),
+            Shape::new(DType::F64, vec![2]),
+            false,
+            crate::ir::NodeId(3),
+        );
+        let down = eg.add_with_data(
+            ENode::new(Op::Convert { to: DType::F32 }, vec![up]),
+            Shape::new(DType::F32, vec![2]),
+            false,
+            crate::ir::NodeId(4),
+        );
+        saturate(&mut eg);
+        assert!(!eg.same(x, back), "bf16 round-trip must stay distinct");
+        assert!(eg.same(x, down), "f64 round-trip collapses");
+    }
+
+    #[test]
+    fn identity_elim() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x", &[2]);
+        let zero = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(0.0)), vec![]));
+        let bz = eg.add_with_data(
+            ENode::new(Op::Broadcast { mapped: vec![], dims: vec![2] }, vec![zero]),
+            Shape::new(DType::F32, vec![2]),
+            false,
+            crate::ir::NodeId(1),
+        );
+        let sum = eg.add(ENode::new(Op::Add, vec![x, bz]));
+        saturate(&mut eg);
+        assert!(eg.same(sum, x));
+    }
+}

@@ -1,0 +1,146 @@
+//! Saturation runner with node/iteration limits.
+//!
+//! Naively constructing e-graphs "easily leads to exponential blow up in
+//! time and memory usage" (paper §4) — the runner enforces the budgets
+//! that graph partitioning makes sufficient: per-layer subgraphs saturate
+//! in a handful of iterations well under the limits.
+
+use super::{EGraph, Rewrite};
+
+/// Saturation budgets.
+#[derive(Clone, Copy, Debug)]
+pub struct RunLimits {
+    /// Maximum rewrite iterations.
+    pub max_iters: usize,
+    /// Abort when the e-graph exceeds this many e-nodes.
+    pub max_nodes: usize,
+}
+
+impl Default for RunLimits {
+    fn default() -> Self {
+        RunLimits { max_iters: 24, max_nodes: 400_000 }
+    }
+}
+
+/// Why the runner stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Fixpoint: no rule changed anything.
+    Saturated,
+    /// Iteration budget exhausted.
+    IterLimit,
+    /// Node budget exhausted (the "insufficient resources" outcome the
+    /// paper reports for unpartitioned full-model rewriting).
+    NodeLimit,
+}
+
+/// Saturation outcome.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Total rule applications (unions performed).
+    pub applications: usize,
+    /// Final e-node count.
+    pub nodes: usize,
+    /// Final class count.
+    pub classes: usize,
+    /// Why we stopped.
+    pub stop: StopReason,
+}
+
+/// Runs a rule set to saturation under limits.
+pub struct Runner<'a> {
+    rules: &'a [Box<dyn Rewrite>],
+    limits: RunLimits,
+}
+
+impl<'a> Runner<'a> {
+    /// New runner over `rules`.
+    pub fn new(rules: &'a [Box<dyn Rewrite>], limits: RunLimits) -> Self {
+        Runner { rules, limits }
+    }
+
+    /// Saturate `eg`.
+    pub fn run(&self, eg: &mut EGraph) -> RunReport {
+        let mut applications = 0;
+        let mut iterations = 0;
+        let stop = loop {
+            if iterations >= self.limits.max_iters {
+                break StopReason::IterLimit;
+            }
+            iterations += 1;
+            let mut changed = 0;
+            for rule in self.rules {
+                changed += rule.apply(eg);
+                eg.rebuild();
+                if eg.node_count() > self.limits.max_nodes {
+                    break;
+                }
+            }
+            applications += changed;
+            if eg.node_count() > self.limits.max_nodes {
+                break StopReason::NodeLimit;
+            }
+            if changed == 0 {
+                break StopReason::Saturated;
+            }
+        };
+        RunReport {
+            iterations,
+            applications,
+            nodes: eg.node_count(),
+            classes: eg.class_count(),
+            stop,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{default_rules, ENode};
+    use crate::ir::{DType, Op, Shape};
+
+    #[test]
+    fn saturates_transpose_tower() {
+        let mut eg = EGraph::new();
+        let x = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 0, name: "x".into() }, vec![]),
+            Shape::new(DType::F32, vec![2, 3, 4]),
+            false,
+            crate::ir::NodeId(0),
+        );
+        let mut cur = x;
+        let mut dims = vec![2i64, 3, 4];
+        // 6 rotations of rank-3 = identity twice
+        for i in 0..6u32 {
+            dims.rotate_left(1);
+            cur = eg.add_with_data(
+                ENode::new(Op::Transpose { perm: vec![1, 2, 0] }, vec![cur]),
+                Shape::new(DType::F32, dims.clone()),
+                false,
+                crate::ir::NodeId(i + 1),
+            );
+        }
+        let rules = default_rules();
+        let report = Runner::new(&rules, RunLimits::default()).run(&mut eg);
+        assert_eq!(report.stop, StopReason::Saturated);
+        assert!(eg.same(x, cur), "rotating rank-3 six times is the identity");
+    }
+
+    #[test]
+    fn node_limit_respected() {
+        let mut eg = EGraph::new();
+        let x = eg.add(ENode::new(Op::Parameter { index: 0, name: "x".into() }, vec![]));
+        let y = eg.add(ENode::new(Op::Parameter { index: 1, name: "y".into() }, vec![]));
+        let mut cur = eg.add(ENode::new(Op::Add, vec![x, y]));
+        for _ in 0..50 {
+            cur = eg.add(ENode::new(Op::Add, vec![cur, y]));
+        }
+        let rules = default_rules();
+        let limits = RunLimits { max_iters: 100, max_nodes: 10 };
+        let report = Runner::new(&rules, limits).run(&mut eg);
+        assert_eq!(report.stop, StopReason::NodeLimit);
+    }
+}

@@ -1,0 +1,23 @@
+//! HLO-text interchange: parse framework-emitted HLO into the IR and print
+//! IR graphs back out as HLO text.
+//!
+//! HLO **text** (never serialized `HloModuleProto`) is the interchange
+//! format of this system: jax ≥ 0.5 emits protos with 64-bit instruction
+//! ids that the runtime's XLA (xla_extension 0.5.1) rejects, while the text
+//! parser reassigns ids and round-trips cleanly. The same text files are
+//! what Scalify verifies — the paper operates on the IR graphs that
+//! production backends (PyTorch-XLA / NeuronX) dump.
+//!
+//! The parser covers the HLO subset that jax 0.8 lowers transformer blocks
+//! to (see `python/compile/aot.py`) plus the SPMD collectives; anything
+//! else is preserved as [`crate::ir::Op::Custom`] so verification can still
+//! traverse (and conservatively refuse to equate) unknown ops.
+
+mod parser;
+mod printer;
+
+pub use parser::{parse_hlo_module, parse_hlo_file};
+pub use printer::print_hlo_module;
+
+#[cfg(test)]
+mod roundtrip_tests;

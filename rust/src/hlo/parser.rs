@@ -1,0 +1,779 @@
+//! HLO-text → [`crate::ir::Graph`] parser.
+
+use crate::ir::{
+    CmpKind, ConstVal, DType, Graph, Meta, NodeId, Op, ReduceKind, ReplicaGroups, Shape,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+/// Parse an HLO module from a file path.
+pub fn parse_hlo_file(path: &std::path::Path, num_cores: u32) -> Result<Graph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_hlo_module(&text, num_cores)
+}
+
+/// Parse HLO text into a graph. `num_cores` declares the SPMD width the
+/// module is meant to run at (1 for baseline graphs; the framework records
+/// this in its run config, not in the HLO itself).
+pub fn parse_hlo_module(text: &str, num_cores: u32) -> Result<Graph> {
+    let mut module_name = String::from("module");
+    // Split into computations: `name {` ... `}` blocks (plus ENTRY marker).
+    let mut computations: Vec<(String, bool, Vec<String>)> = Vec::new(); // (name, is_entry, lines)
+    let mut current: Option<(String, bool, Vec<String>)> = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule") {
+            module_name = rest
+                .trim()
+                .split([',', ' '])
+                .next()
+                .unwrap_or("module")
+                .to_string();
+            continue;
+        }
+        if line.ends_with('{') && current.is_none() {
+            let header = line.trim_end_matches('{').trim();
+            let is_entry = header.starts_with("ENTRY");
+            let name = header.trim_start_matches("ENTRY").trim().to_string();
+            current = Some((name, is_entry, Vec::new()));
+            continue;
+        }
+        if line == "}" {
+            if let Some(c) = current.take() {
+                computations.push(c);
+            }
+            continue;
+        }
+        if let Some((_, _, lines)) = current.as_mut() {
+            lines.push(line.to_string());
+        }
+    }
+
+    // Classify sub-computations (reduction regions) by their root op.
+    let mut region_kind: FxHashMap<String, ReduceKind> = FxHashMap::default();
+    for (name, is_entry, lines) in &computations {
+        if *is_entry {
+            continue;
+        }
+        for l in lines {
+            if let Some(rest) = l.strip_prefix("ROOT ") {
+                let kind = if rest.contains("= ") {
+                    let opcode = opcode_of(rest);
+                    match opcode.as_deref() {
+                        Some("add") => Some(ReduceKind::Add),
+                        Some("maximum") => Some(ReduceKind::Max),
+                        Some("minimum") => Some(ReduceKind::Min),
+                        Some("multiply") => Some(ReduceKind::Mul),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                if let Some(k) = kind {
+                    region_kind.insert(name.clone(), k);
+                }
+            }
+        }
+    }
+
+    let (_, _, entry_lines) = computations
+        .iter()
+        .find(|(_, is_entry, _)| *is_entry)
+        .ok_or_else(|| anyhow!("no ENTRY computation in module"))?;
+
+    // Structural fingerprints of sub-computations, so control-flow ops
+    // (`while`, `call`) get congruence-safe identities: two whiles merge in
+    // the e-graph only when their bodies are structurally identical.
+    let mut region_fp: FxHashMap<String, u64> = FxHashMap::default();
+    for (name, is_entry, lines) in &computations {
+        if *is_entry {
+            continue;
+        }
+        let fp = fingerprint_computation(lines, &region_kind, &region_fp, num_cores);
+        region_fp.insert(name.clone(), fp);
+    }
+
+    let mut g = Graph::new(module_name, num_cores);
+    let mut by_name: FxHashMap<String, NodeId> = FxHashMap::default();
+    let mut root: Option<NodeId> = None;
+
+    for line in entry_lines {
+        let (name, id, is_root) =
+            parse_instruction(&mut g, line, &by_name, &region_kind, &region_fp)
+                .with_context(|| format!("parsing instruction: {line}"))?;
+        by_name.insert(name, id);
+        if is_root {
+            root = Some(id);
+        }
+    }
+
+    let root = root.ok_or_else(|| anyhow!("entry computation has no ROOT"))?;
+    // Strip a trailing tuple: outputs are its operands.
+    match &g.node(root).op {
+        Op::Tuple => {
+            g.outputs = g.node(root).inputs.clone();
+        }
+        _ => g.outputs = vec![root],
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+/// Structural fingerprint of a sub-computation: parse it as a standalone
+/// graph and hash ops/attrs/wiring; falls back to hashing normalized text
+/// when the body uses constructs the parser cannot build a graph for.
+fn fingerprint_computation(
+    lines: &[String],
+    region_kind: &FxHashMap<String, ReduceKind>,
+    region_fp: &FxHashMap<String, u64>,
+    num_cores: u32,
+) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    let mut g = Graph::new("region", num_cores);
+    let mut by_name: FxHashMap<String, NodeId> = FxHashMap::default();
+    let mut ok = true;
+    for line in lines {
+        match parse_instruction(&mut g, line, &by_name, region_kind, region_fp) {
+            Ok((name, id, _)) => {
+                by_name.insert(name, id);
+            }
+            Err(_) => {
+                ok = false;
+                break;
+            }
+        }
+    }
+    if ok {
+        for n in &g.nodes {
+            match &n.op {
+                Op::Parameter { index, .. } => ("param", index).hash(&mut h),
+                op => format!("{op:?}").hash(&mut h),
+            }
+            n.shape.dims.hash(&mut h);
+            (n.shape.dtype as u8).hash(&mut h);
+            for i in &n.inputs {
+                i.0.hash(&mut h);
+            }
+        }
+    } else {
+        // normalized text fallback: strip `.N` numbering so identical
+        // bodies from different modules hash alike
+        for line in lines {
+            let norm: String = strip_id_suffixes(line);
+            norm.hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+fn strip_id_suffixes(line: &str) -> String {
+    let mut out = String::with_capacity(line.len());
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '.' {
+            // skip digit runs following a dot when attached to an identifier
+            let mut digits = String::new();
+            while let Some(&d) = chars.peek() {
+                if d.is_ascii_digit() {
+                    digits.push(d);
+                    chars.next();
+                } else {
+                    break;
+                }
+            }
+            if digits.is_empty() {
+                out.push(c);
+            }
+            // else: drop `.N`
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn opcode_of(line: &str) -> Option<String> {
+    // `name = type opcode(...)` → opcode
+    let rhs = line.split(" = ").nth(1)?;
+    // skip the type: either `(tuple, types)` or `dtype[dims]{layout}`
+    let rest = if rhs.starts_with('(') {
+        let close = matching_paren(rhs, 0)?;
+        rhs[close + 1..].trim_start()
+    } else {
+        let sp = rhs.find(' ')?;
+        rhs[sp + 1..].trim_start()
+    };
+    let end = rest.find('(')?;
+    Some(rest[..end].trim().to_string())
+}
+
+fn matching_paren(s: &str, open: usize) -> Option<usize> {
+    let bytes = s.as_bytes();
+    debug_assert_eq!(bytes[open], b'(');
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse `f32[2,4]{1,0}` → Shape. Layout suffix ignored.
+fn parse_shape(s: &str) -> Result<Shape> {
+    let s = s.trim();
+    let bracket = s.find('[').ok_or_else(|| anyhow!("no '[' in shape '{s}'"))?;
+    let dtype = DType::from_hlo_name(&s[..bracket])
+        .ok_or_else(|| anyhow!("unknown dtype '{}'", &s[..bracket]))?;
+    let close = s.find(']').ok_or_else(|| anyhow!("no ']' in shape '{s}'"))?;
+    let dims_str = &s[bracket + 1..close];
+    let dims: Vec<i64> = if dims_str.trim().is_empty() {
+        vec![]
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<i64>().map_err(|e| anyhow!("bad dim '{d}': {e}")))
+            .collect::<Result<_>>()?
+    };
+    Ok(Shape::new(dtype, dims))
+}
+
+/// Parse `{1,0,2}` (or `{}`) into usizes.
+fn parse_brace_list(s: &str) -> Result<Vec<usize>> {
+    let inner = s.trim().trim_start_matches('{').trim_end_matches('}');
+    if inner.trim().is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|v| v.trim().parse::<usize>().map_err(|e| anyhow!("bad index '{v}': {e}")))
+        .collect()
+}
+
+/// Parse `{{0,1},{2,3}}` replica groups.
+fn parse_replica_groups(s: &str, num_cores: u32) -> Result<ReplicaGroups> {
+    let inner = s.trim();
+    let inner = inner.strip_prefix('{').and_then(|x| x.strip_suffix('}')).unwrap_or(inner);
+    if !inner.contains('{') {
+        // `{}` — all cores in one group
+        return Ok(ReplicaGroups::full(num_cores));
+    }
+    let mut groups = Vec::new();
+    let mut rest = inner;
+    while let Some(open) = rest.find('{') {
+        let close =
+            rest[open..].find('}').ok_or_else(|| anyhow!("unbalanced replica_groups"))? + open;
+        let ids: Vec<u32> = rest[open + 1..close]
+            .split(',')
+            .filter(|v| !v.trim().is_empty())
+            .map(|v| v.trim().parse::<u32>().map_err(|e| anyhow!("bad core id: {e}")))
+            .collect::<Result<_>>()?;
+        groups.push(ids);
+        rest = &rest[close + 1..];
+    }
+    Ok(ReplicaGroups(groups))
+}
+
+/// Extract `key=value` attributes from the trailing attr list. Values may
+/// contain nested braces (replica_groups) — we scan brace-aware.
+fn parse_attrs(s: &str) -> FxHashMap<String, String> {
+    let mut attrs = FxHashMap::default();
+    let mut rest = s.trim_start_matches(',').trim();
+    while !rest.is_empty() {
+        let eq = match rest.find('=') {
+            Some(e) => e,
+            None => break,
+        };
+        let key = rest[..eq].trim().to_string();
+        let value_str = &rest[eq + 1..];
+        let mut depth = 0usize;
+        let mut end = value_str.len();
+        for (i, b) in value_str.bytes().enumerate() {
+            match b {
+                b'{' | b'(' | b'[' => depth += 1,
+                b'}' | b')' | b']' => depth = depth.saturating_sub(1),
+                b',' if depth == 0 => {
+                    end = i;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        attrs.insert(key, value_str[..end].trim().to_string());
+        rest = value_str[end..].trim_start_matches(',').trim();
+    }
+    attrs
+}
+
+/// Parse constant payload text: `2`, `-inf`, `{1, 2, 3}`, `{{1,2},{3,4}}`.
+fn parse_const_payload(s: &str, shape: &Shape) -> Result<ConstVal> {
+    let parse_num = |t: &str| -> Result<f64> {
+        match t.trim() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" | "-nan" => Ok(f64::NAN),
+            "true" => Ok(1.0),
+            "false" => Ok(0.0),
+            other => other.parse::<f64>().map_err(|e| anyhow!("bad constant '{other}': {e}")),
+        }
+    };
+    if shape.rank() == 0 {
+        return Ok(ConstVal::Scalar(parse_num(s)?));
+    }
+    let nums: Vec<f64> = s
+        .split(|c: char| c == '{' || c == '}' || c == ',')
+        .filter(|t| !t.trim().is_empty())
+        .map(parse_num)
+        .collect::<Result<_>>()?;
+    if nums.len() == 1 && shape.elements() > 1 {
+        // splat constant: `constant(0)` with non-scalar shape
+        return Ok(ConstVal::Dense(vec![nums[0]; shape.elements() as usize]));
+    }
+    if nums.len() as i64 != shape.elements() {
+        bail!("constant payload has {} values, shape {} wants {}", nums.len(), shape, shape.elements());
+    }
+    Ok(ConstVal::Dense(nums))
+}
+
+/// Parse metadata attr: `metadata={op_name="..." source_file="x.py" source_line=42}`.
+fn parse_metadata(g: &mut Graph, attr: &str) -> Meta {
+    let mut meta = Meta::none();
+    let grab = |key: &str| -> Option<String> {
+        let pat = format!("{key}=\"");
+        let start = attr.find(&pat)? + pat.len();
+        let end = attr[start..].find('"')? + start;
+        Some(attr[start..end].to_string())
+    };
+    if let Some(f) = grab("source_file") {
+        meta.file = g.interner.intern(&f);
+    }
+    if let Some(o) = grab("op_name") {
+        meta.expr = g.interner.intern(&o);
+    }
+    if let Some(pos) = attr.find("source_line=") {
+        let rest = &attr[pos + "source_line=".len()..];
+        let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+        meta.line = rest[..end].parse().unwrap_or(0);
+    }
+    meta
+}
+
+/// Parse one instruction line. Returns (name, node id, is_root).
+fn parse_instruction(
+    g: &mut Graph,
+    line: &str,
+    by_name: &FxHashMap<String, NodeId>,
+    region_kind: &FxHashMap<String, ReduceKind>,
+    region_fp: &FxHashMap<String, u64>,
+) -> Result<(String, NodeId, bool)> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line.find(" = ").ok_or_else(|| anyhow!("no '=' in instruction"))?;
+    let name = line[..eq].trim().to_string();
+    let rhs = line[eq + 3..].trim();
+
+    // type: tuple `( ... )` or plain shape
+    let (shape, rest, is_tuple_type) = if rhs.starts_with('(') {
+        let close = matching_paren(rhs, 0).ok_or_else(|| anyhow!("unbalanced tuple type"))?;
+        // tuple type: parse first element's shape as representative
+        let first = rhs[1..close].split(',').next().unwrap_or("f32[]").trim();
+        let sh = parse_shape(first).unwrap_or(Shape::scalar(DType::F32));
+        (sh, rhs[close + 1..].trim_start(), true)
+    } else {
+        let sp = rhs.find(' ').ok_or_else(|| anyhow!("no space after type"))?;
+        (parse_shape(&rhs[..sp])?, rhs[sp + 1..].trim_start(), false)
+    };
+    let _ = is_tuple_type;
+
+    let open = rest.find('(').ok_or_else(|| anyhow!("no '(' after opcode"))?;
+    let opcode = rest[..open].trim().to_string();
+    let close = matching_paren(rest, open).ok_or_else(|| anyhow!("unbalanced operand list"))?;
+    let operands_str = &rest[open + 1..close];
+    let attrs = parse_attrs(&rest[close + 1..]);
+
+    let meta = attrs
+        .get("metadata")
+        .map(|m| parse_metadata(g, m))
+        .unwrap_or_else(Meta::none);
+
+    let lookup = |op_name: &str| -> Result<NodeId> {
+        by_name
+            .get(op_name.trim())
+            .copied()
+            .ok_or_else(|| anyhow!("unknown operand '{}'", op_name.trim()))
+    };
+    let operands: Vec<&str> = if operands_str.trim().is_empty() {
+        vec![]
+    } else {
+        operands_str.split(',').map(|s| s.trim()).collect()
+    };
+
+    let num_cores = g.num_cores;
+    let groups = |attrs: &FxHashMap<String, String>| -> Result<ReplicaGroups> {
+        match attrs.get("replica_groups") {
+            Some(v) => parse_replica_groups(v, num_cores),
+            None => Ok(ReplicaGroups::full(num_cores)),
+        }
+    };
+
+    let (op, inputs): (Op, Vec<NodeId>) = match opcode.as_str() {
+        "parameter" => {
+            let index: usize = operands_str.trim().parse()?;
+            (Op::Parameter { index, name: name.clone() }, vec![])
+        }
+        "constant" => (Op::Constant(parse_const_payload(operands_str, &shape)?), vec![]),
+        "iota" => {
+            let dim = attrs
+                .get("iota_dimension")
+                .ok_or_else(|| anyhow!("iota without iota_dimension"))?
+                .parse::<usize>()?;
+            (Op::Iota { dim, dims: shape.dims.clone() }, vec![])
+        }
+        "add" => (Op::Add, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "subtract" => (Op::Sub, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "multiply" => (Op::Mul, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "divide" => (Op::Div, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "maximum" => (Op::Max, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "minimum" => (Op::Min, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "power" => (Op::Pow, vec![lookup(operands[0])?, lookup(operands[1])?]),
+        "negate" => (Op::Neg, vec![lookup(operands[0])?]),
+        "exponential" => (Op::Exp, vec![lookup(operands[0])?]),
+        "log" => (Op::Log, vec![lookup(operands[0])?]),
+        "tanh" => (Op::Tanh, vec![lookup(operands[0])?]),
+        "rsqrt" => (Op::Rsqrt, vec![lookup(operands[0])?]),
+        "sqrt" => (Op::Sqrt, vec![lookup(operands[0])?]),
+        "abs" => (Op::Abs, vec![lookup(operands[0])?]),
+        "logistic" => (Op::Logistic, vec![lookup(operands[0])?]),
+        "sine" => (Op::Sin, vec![lookup(operands[0])?]),
+        "cosine" => (Op::Cos, vec![lookup(operands[0])?]),
+        "convert" => (Op::Convert { to: shape.dtype }, vec![lookup(operands[0])?]),
+        "compare" => {
+            let kind = match attrs.get("direction").map(|s| s.as_str()) {
+                Some("EQ") => CmpKind::Eq,
+                Some("NE") => CmpKind::Ne,
+                Some("LT") => CmpKind::Lt,
+                Some("LE") => CmpKind::Le,
+                Some("GT") => CmpKind::Gt,
+                Some("GE") => CmpKind::Ge,
+                other => bail!("compare with direction {:?}", other),
+            };
+            (Op::Compare(kind), vec![lookup(operands[0])?, lookup(operands[1])?])
+        }
+        "select" => (
+            Op::Select,
+            vec![lookup(operands[0])?, lookup(operands[1])?, lookup(operands[2])?],
+        ),
+        "dot" => {
+            let get_dims = |key: &str| -> Result<Vec<usize>> {
+                attrs.get(key).map(|v| parse_brace_list(v)).unwrap_or(Ok(vec![]))
+            };
+            (
+                Op::Dot {
+                    lhs_contract: get_dims("lhs_contracting_dims")?,
+                    rhs_contract: get_dims("rhs_contracting_dims")?,
+                    lhs_batch: get_dims("lhs_batch_dims")?,
+                    rhs_batch: get_dims("rhs_batch_dims")?,
+                },
+                vec![lookup(operands[0])?, lookup(operands[1])?],
+            )
+        }
+        "reshape" => (Op::Reshape { dims: shape.dims.clone() }, vec![lookup(operands[0])?]),
+        "transpose" => {
+            let perm = parse_brace_list(
+                attrs.get("dimensions").ok_or_else(|| anyhow!("transpose without dims"))?,
+            )?;
+            (Op::Transpose { perm }, vec![lookup(operands[0])?])
+        }
+        "slice" => {
+            let spec = attrs.get("slice").ok_or_else(|| anyhow!("slice without spec"))?;
+            let mut starts = Vec::new();
+            let mut limits = Vec::new();
+            let mut strides = Vec::new();
+            for part in spec.trim_matches(|c| c == '{' || c == '}').split("],") {
+                let p = part.trim().trim_start_matches('[').trim_end_matches(']');
+                let mut it = p.split(':');
+                starts.push(it.next().unwrap().trim().parse::<i64>()?);
+                limits.push(it.next().ok_or_else(|| anyhow!("bad slice"))?.trim().parse()?);
+                strides.push(it.next().map(|v| v.trim().parse()).transpose()?.unwrap_or(1));
+            }
+            (Op::Slice { starts, limits, strides }, vec![lookup(operands[0])?])
+        }
+        "concatenate" => {
+            let dim = parse_brace_list(
+                attrs.get("dimensions").ok_or_else(|| anyhow!("concat without dims"))?,
+            )?[0];
+            let ins = operands.iter().map(|o| lookup(o)).collect::<Result<Vec<_>>>()?;
+            (Op::Concat { dim }, ins)
+        }
+        "broadcast" => {
+            let mapped = parse_brace_list(
+                attrs.get("dimensions").ok_or_else(|| anyhow!("broadcast without dims"))?,
+            )?;
+            (Op::Broadcast { mapped, dims: shape.dims.clone() }, vec![lookup(operands[0])?])
+        }
+        "reduce" => {
+            let dims = parse_brace_list(
+                attrs.get("dimensions").ok_or_else(|| anyhow!("reduce without dims"))?,
+            )?;
+            let region = attrs
+                .get("to_apply")
+                .ok_or_else(|| anyhow!("reduce without to_apply"))?;
+            let kind = region_kind
+                .get(region.trim())
+                .copied()
+                .ok_or_else(|| anyhow!("reduce region '{region}' is not a simple combiner"))?;
+            // operands = (input, init); init is checked to be the identity
+            (Op::Reduce { kind, dims }, vec![lookup(operands[0])?])
+        }
+        "all-reduce" => {
+            let region = attrs
+                .get("to_apply")
+                .ok_or_else(|| anyhow!("all-reduce without to_apply"))?;
+            let kind = region_kind
+                .get(region.trim())
+                .copied()
+                .ok_or_else(|| anyhow!("all-reduce region '{region}' unknown"))?;
+            (Op::AllReduce { kind, groups: groups(&attrs)? }, vec![lookup(operands[0])?])
+        }
+        "all-gather" => {
+            let dim = attrs
+                .get("dimensions")
+                .map(|v| parse_brace_list(v))
+                .transpose()?
+                .and_then(|v| v.first().copied())
+                .or_else(|| {
+                    attrs.get("all_gather_dimension").and_then(|v| v.parse::<usize>().ok())
+                })
+                .ok_or_else(|| anyhow!("all-gather without dimension"))?;
+            (Op::AllGather { dim, groups: groups(&attrs)? }, vec![lookup(operands[0])?])
+        }
+        "reduce-scatter" => {
+            let region = attrs
+                .get("to_apply")
+                .ok_or_else(|| anyhow!("reduce-scatter without to_apply"))?;
+            let kind = region_kind
+                .get(region.trim())
+                .copied()
+                .ok_or_else(|| anyhow!("reduce-scatter region '{region}' unknown"))?;
+            let dim = attrs
+                .get("dimensions")
+                .map(|v| parse_brace_list(v))
+                .transpose()?
+                .and_then(|v| v.first().copied())
+                .ok_or_else(|| anyhow!("reduce-scatter without dimension"))?;
+            (
+                Op::ReduceScatter { kind, dim, groups: groups(&attrs)? },
+                vec![lookup(operands[0])?],
+            )
+        }
+        "all-to-all" => {
+            let dims = parse_brace_list(
+                attrs.get("dimensions").ok_or_else(|| anyhow!("all-to-all without dims"))?,
+            )?;
+            let (split_dim, concat_dim) = match dims.len() {
+                1 => (dims[0], dims[0]),
+                2 => (dims[0], dims[1]),
+                _ => bail!("all-to-all with {} dims", dims.len()),
+            };
+            (
+                Op::AllToAll { split_dim, concat_dim, groups: groups(&attrs)? },
+                vec![lookup(operands[0])?],
+            )
+        }
+        "tuple" => {
+            let ins = operands.iter().map(|o| lookup(o)).collect::<Result<Vec<_>>>()?;
+            (Op::Tuple, ins)
+        }
+        "get-tuple-element" => {
+            let index = attrs
+                .get("index")
+                .ok_or_else(|| anyhow!("gte without index"))?
+                .parse::<usize>()?;
+            (Op::GetTupleElement { index }, vec![lookup(operands[0])?])
+        }
+        other => {
+            let ins = operands
+                .iter()
+                .filter_map(|o| by_name.get(o.trim()).copied())
+                .collect::<Vec<_>>();
+            // control-flow ops embed their sub-computations' structural
+            // fingerprints in the op identity so the e-graph only merges
+            // structurally-identical loops/calls
+            let mut name = other.to_string();
+            for key in ["to_apply", "body", "condition"] {
+                if let Some(region) = attrs.get(key) {
+                    let fp = region_fp.get(region.trim()).copied().unwrap_or(0);
+                    name.push_str(&format!("#{key}={fp:016x}"));
+                }
+            }
+            (Op::Custom { name }, ins)
+        }
+    };
+
+    let id = g.push(op, inputs, shape, meta);
+    Ok((name, id, is_root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.1 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.1 = f32[2,2]{1,0} parameter(1)
+  dot.1 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.1 = f32[] constant(2)
+  broadcast.1 = f32[2,2]{1,0} broadcast(constant.1), dimensions={}
+  add.1 = f32[2,2]{1,0} add(dot.1, broadcast.1)
+  ROOT tuple.1 = (f32[2,2]{1,0}) tuple(add.1)
+}
+"#;
+
+    #[test]
+    fn parses_reference_sample() {
+        let g = parse_hlo_module(SAMPLE, 1).unwrap();
+        assert_eq!(g.len(), 7); // 6 live + stripped root tuple
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(g.node(g.outputs[0]).op, Op::Add);
+        assert_eq!(g.parameters().len(), 2);
+        assert_eq!(g.name, "jit_fn");
+    }
+
+    #[test]
+    fn parses_reduce_with_region() {
+        let text = r#"
+HloModule m
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.2 = f32[] parameter(1)
+  ROOT maximum.1 = f32[] maximum(Arg_0.2, Arg_1.2)
+}
+
+ENTRY main {
+  p = f32[2,4]{1,0} parameter(0)
+  c = f32[] constant(-inf)
+  ROOT r = f32[2]{0} reduce(p, c), dimensions={1}, to_apply=region_0.1
+}
+"#;
+        let g = parse_hlo_module(text, 1).unwrap();
+        let out = g.node(g.outputs[0]);
+        assert_eq!(out.op, Op::Reduce { kind: ReduceKind::Max, dims: vec![1] });
+        assert_eq!(out.shape.dims, vec![2]);
+    }
+
+    #[test]
+    fn parses_collectives() {
+        let text = r#"
+HloModule m
+
+red.1 {
+  a = f32[] parameter(0)
+  b = f32[] parameter(1)
+  ROOT s = f32[] add(a, b)
+}
+
+ENTRY main {
+  p = f32[4,8]{1,0} parameter(0)
+  ar = f32[4,8]{1,0} all-reduce(p), replica_groups={{0,1,2,3}}, to_apply=red.1
+  ag = f32[16,8]{1,0} all-gather(ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT t = (f32[16,8]{1,0}) tuple(ag)
+}
+"#;
+        let g = parse_hlo_module(text, 4).unwrap();
+        match &g.node(NodeId(1)).op {
+            Op::AllReduce { kind, groups } => {
+                assert_eq!(*kind, ReduceKind::Add);
+                assert_eq!(groups.0, vec![vec![0, 1, 2, 3]]);
+            }
+            other => panic!("expected all-reduce, got {other:?}"),
+        }
+        match &g.node(NodeId(2)).op {
+            Op::AllGather { dim, .. } => assert_eq!(*dim, 0),
+            other => panic!("expected all-gather, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_metadata() {
+        let text = r#"
+HloModule m
+
+ENTRY main {
+  p = f32[2]{0} parameter(0)
+  ROOT e = f32[2]{0} exponential(p), metadata={op_name="jit(f)/exp" source_file="attn.py" source_line=42}
+}
+"#;
+        let g = parse_hlo_module(text, 1).unwrap();
+        assert_eq!(g.source_site(g.outputs[0]), "attn.py:42");
+    }
+
+    #[test]
+    fn parses_slice_and_dense_constant() {
+        let text = r#"
+HloModule m
+
+ENTRY main {
+  c = s32[4]{0} constant({7, 8, 9, 10})
+  ROOT s = s32[2]{0} slice(c), slice={[1:3]}
+}
+"#;
+        let g = parse_hlo_module(text, 1).unwrap();
+        match &g.node(NodeId(0)).op {
+            Op::Constant(ConstVal::Dense(v)) => assert_eq!(v, &vec![7.0, 8.0, 9.0, 10.0]),
+            other => panic!("{other:?}"),
+        }
+        match &g.node(g.outputs[0]).op {
+            Op::Slice { starts, limits, strides } => {
+                assert_eq!((starts.as_slice(), limits.as_slice(), strides.as_slice()),
+                           (&[1][..], &[3][..], &[1][..]));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_op_becomes_custom() {
+        let text = r#"
+HloModule m
+
+ENTRY main {
+  p = f32[2]{0} parameter(0)
+  ROOT w = f32[2]{0} weird-op(p), some_attr={1}
+}
+"#;
+        let g = parse_hlo_module(text, 1).unwrap();
+        assert_eq!(g.node(g.outputs[0]).op, Op::Custom { name: "weird-op".into() });
+    }
+
+    #[test]
+    fn real_jax_attention_module_parses() {
+        // mirror of the module jax 0.8 lowers for a softmax-attention block
+        let text = include_str!("testdata/jax_attn.hlo.txt");
+        let g = parse_hlo_module(text, 1).unwrap();
+        assert!(g.len() > 20);
+        g.validate().unwrap();
+        // one bf16 round-trip is present
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::Convert { to: DType::BF16 })));
+    }
+}

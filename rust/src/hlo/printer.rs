@@ -1,0 +1,379 @@
+//! [`crate::ir::Graph`] → HLO-text printer.
+//!
+//! Output parses back through [`super::parse_hlo_module`] (round-trip
+//! tested) and — for collective-free graphs — through XLA 0.5.1's own text
+//! parser, so printed baseline graphs can be compiled and executed by the
+//! PJRT runtime for numerical cross-checks.
+
+use crate::ir::{CmpKind, ConstVal, Graph, Op, ReduceKind};
+use std::fmt::Write;
+
+fn region_name(kind: ReduceKind) -> &'static str {
+    match kind {
+        ReduceKind::Add => "region_add",
+        ReduceKind::Max => "region_max",
+        ReduceKind::Min => "region_min",
+        ReduceKind::Mul => "region_mul",
+    }
+}
+
+fn reduce_init(kind: ReduceKind) -> &'static str {
+    match kind {
+        ReduceKind::Add => "0",
+        ReduceKind::Max => "-inf",
+        ReduceKind::Min => "inf",
+        ReduceKind::Mul => "1",
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == f64::INFINITY {
+        "inf".into()
+    } else if v == f64::NEG_INFINITY {
+        "-inf".into()
+    } else if v.is_nan() {
+        "nan".into()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn usize_list(xs: &[usize]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("{{{}}}", items.join(","))
+}
+
+/// Print a graph as an HLO module.
+pub fn print_hlo_module(g: &Graph) -> String {
+    let mut out = String::new();
+    writeln!(out, "HloModule {}", g.name).unwrap();
+    writeln!(out).unwrap();
+
+    // Which reduction regions do we need?
+    let mut kinds: Vec<ReduceKind> = Vec::new();
+    for n in &g.nodes {
+        let k = match &n.op {
+            Op::Reduce { kind, .. }
+            | Op::AllReduce { kind, .. }
+            | Op::ReduceScatter { kind, .. } => Some(*kind),
+            _ => None,
+        };
+        if let Some(k) = k {
+            if !kinds.contains(&k) {
+                kinds.push(k);
+            }
+        }
+    }
+    for k in &kinds {
+        let dt = "f32"; // combiner dtype: scalars are fine as f32 for our graphs
+        writeln!(out, "{} {{", region_name(*k)).unwrap();
+        writeln!(out, "  lhs = {dt}[] parameter(0)").unwrap();
+        writeln!(out, "  rhs = {dt}[] parameter(1)").unwrap();
+        writeln!(
+            out,
+            "  ROOT combine = {dt}[] {}(lhs, rhs)",
+            match k {
+                ReduceKind::Add => "add",
+                ReduceKind::Max => "maximum",
+                ReduceKind::Min => "minimum",
+                ReduceKind::Mul => "multiply",
+            }
+        )
+        .unwrap();
+        writeln!(out, "}}").unwrap();
+        writeln!(out).unwrap();
+    }
+
+    writeln!(out, "ENTRY main {{").unwrap();
+    let live = g.live_set();
+    let nm = |id: crate::ir::NodeId| format!("v{}", id.0);
+    // reduce inits need aux constants; we hoist them with unique names
+    let mut aux = 0usize;
+
+    let mut body = String::new();
+    for n in &g.nodes {
+        if !live[n.id.idx()] {
+            continue;
+        }
+        let shape = n.shape.hlo_text();
+        let ops: Vec<String> = n.inputs.iter().map(|&i| nm(i)).collect();
+        let meta = {
+            let file = g.interner.resolve(n.meta.file);
+            if file.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    ", metadata={{op_name=\"{}\" source_file=\"{}\" source_line={}}}",
+                    g.interner.resolve(n.meta.expr),
+                    file,
+                    n.meta.line
+                )
+            }
+        };
+        let line = match &n.op {
+            Op::Parameter { index, .. } => {
+                format!("{} = {} parameter({})", nm(n.id), shape, index)
+            }
+            Op::Constant(c) => {
+                let payload = match c {
+                    ConstVal::Scalar(v) => fmt_f64(*v),
+                    ConstVal::Dense(vs) => {
+                        // print flat: our parser (and XLA's, for rank-1)
+                        // accepts the brace-flat form
+                        if n.shape.rank() == 1 {
+                            let items: Vec<String> =
+                                vs.iter().map(|v| fmt_f64(*v)).collect();
+                            format!("{{{}}}", items.join(", "))
+                        } else {
+                            nested_const(&n.shape.dims, vs)
+                        }
+                    }
+                };
+                format!("{} = {} constant({})", nm(n.id), shape, payload)
+            }
+            Op::Iota { dim, .. } => {
+                format!("{} = {} iota(), iota_dimension={}", nm(n.id), shape, dim)
+            }
+            Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Max | Op::Min | Op::Pow => {
+                format!("{} = {} {}({}, {})", nm(n.id), shape, n.op.name(), ops[0], ops[1])
+            }
+            Op::Neg
+            | Op::Exp
+            | Op::Log
+            | Op::Tanh
+            | Op::Rsqrt
+            | Op::Sqrt
+            | Op::Abs
+            | Op::Logistic
+            | Op::Sin
+            | Op::Cos
+            | Op::Convert { .. }
+            | Op::Reshape { .. } => {
+                format!("{} = {} {}({})", nm(n.id), shape, n.op.name(), ops[0])
+            }
+            Op::Compare(kind) => {
+                let dir = match kind {
+                    CmpKind::Eq => "EQ",
+                    CmpKind::Ne => "NE",
+                    CmpKind::Lt => "LT",
+                    CmpKind::Le => "LE",
+                    CmpKind::Gt => "GT",
+                    CmpKind::Ge => "GE",
+                };
+                format!(
+                    "{} = {} compare({}, {}), direction={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    ops[1],
+                    dir
+                )
+            }
+            Op::Select => {
+                format!("{} = {} select({}, {}, {})", nm(n.id), shape, ops[0], ops[1], ops[2])
+            }
+            Op::Dot { lhs_contract, rhs_contract, lhs_batch, rhs_batch } => {
+                let mut attrs = Vec::new();
+                if !lhs_batch.is_empty() {
+                    attrs.push(format!("lhs_batch_dims={}", usize_list(lhs_batch)));
+                }
+                attrs.push(format!("lhs_contracting_dims={}", usize_list(lhs_contract)));
+                if !rhs_batch.is_empty() {
+                    attrs.push(format!("rhs_batch_dims={}", usize_list(rhs_batch)));
+                }
+                attrs.push(format!("rhs_contracting_dims={}", usize_list(rhs_contract)));
+                format!(
+                    "{} = {} dot({}, {}), {}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    ops[1],
+                    attrs.join(", ")
+                )
+            }
+            Op::Transpose { perm } => {
+                format!(
+                    "{} = {} transpose({}), dimensions={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    usize_list(perm)
+                )
+            }
+            Op::Slice { starts, limits, strides } => {
+                let parts: Vec<String> = starts
+                    .iter()
+                    .zip(limits.iter().zip(strides))
+                    .map(|(&s, (&l, &st))| format!("[{s}:{l}:{st}]"))
+                    .collect();
+                format!("{} = {} slice({}), slice={{{}}}", nm(n.id), shape, ops[0], parts.join(","))
+            }
+            Op::Concat { dim } => {
+                format!(
+                    "{} = {} concatenate({}), dimensions={{{}}}",
+                    nm(n.id),
+                    shape,
+                    ops.join(", "),
+                    dim
+                )
+            }
+            Op::Broadcast { mapped, .. } => {
+                format!(
+                    "{} = {} broadcast({}), dimensions={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    usize_list(mapped)
+                )
+            }
+            Op::Reduce { kind, dims } => {
+                aux += 1;
+                let init = format!("init{aux}");
+                let init_dt = n.shape.dtype.hlo_name();
+                writeln!(
+                    body,
+                    "  {} = {}[] constant({})",
+                    init,
+                    init_dt,
+                    reduce_init(*kind)
+                )
+                .unwrap();
+                format!(
+                    "{} = {} reduce({}, {}), dimensions={}, to_apply={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    init,
+                    usize_list(dims),
+                    region_name(*kind)
+                )
+            }
+            Op::AllReduce { kind, groups } => {
+                format!(
+                    "{} = {} all-reduce({}), replica_groups={}, to_apply={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    groups_text(groups),
+                    region_name(*kind)
+                )
+            }
+            Op::AllGather { dim, groups } => {
+                format!(
+                    "{} = {} all-gather({}), replica_groups={}, dimensions={{{}}}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    groups_text(groups),
+                    dim
+                )
+            }
+            Op::ReduceScatter { kind, dim, groups } => {
+                format!(
+                    "{} = {} reduce-scatter({}), replica_groups={}, dimensions={{{}}}, to_apply={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    groups_text(groups),
+                    dim,
+                    region_name(*kind)
+                )
+            }
+            Op::AllToAll { split_dim, concat_dim, groups } => {
+                format!(
+                    "{} = {} all-to-all({}), replica_groups={}, dimensions={{{},{}}}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    groups_text(groups),
+                    split_dim,
+                    concat_dim
+                )
+            }
+            Op::Tuple => {
+                format!("{} = {} tuple({})", nm(n.id), shape, ops.join(", "))
+            }
+            Op::GetTupleElement { index } => {
+                format!(
+                    "{} = {} get-tuple-element({}), index={}",
+                    nm(n.id),
+                    shape,
+                    ops[0],
+                    index
+                )
+            }
+            Op::Custom { name } => {
+                format!("{} = {} {}({})", nm(n.id), shape, name, ops.join(", "))
+            }
+        };
+        writeln!(body, "  {}{}", line, meta).unwrap();
+    }
+
+    // root tuple over the outputs
+    let out_shapes: Vec<String> =
+        g.outputs.iter().map(|&o| g.node(o).shape.hlo_text()).collect();
+    let out_names: Vec<String> = g.outputs.iter().map(|&o| nm(o)).collect();
+    writeln!(
+        body,
+        "  ROOT result = ({}) tuple({})",
+        out_shapes.join(", "),
+        out_names.join(", ")
+    )
+    .unwrap();
+
+    out.push_str(&body);
+    writeln!(out, "}}").unwrap();
+    out
+}
+
+fn nested_const(dims: &[i64], vs: &[f64]) -> String {
+    if dims.is_empty() {
+        return fmt_f64(vs[0]);
+    }
+    let chunk = vs.len() / dims[0] as usize;
+    let items: Vec<String> = (0..dims[0] as usize)
+        .map(|i| nested_const(&dims[1..], &vs[i * chunk..(i + 1) * chunk]))
+        .collect();
+    format!("{{{}}}", items.join(", "))
+}
+
+fn groups_text(groups: &crate::ir::ReplicaGroups) -> String {
+    let gs: Vec<String> = groups
+        .0
+        .iter()
+        .map(|g| {
+            let ids: Vec<String> = g.iter().map(|c| c.to_string()).collect();
+            format!("{{{}}}", ids.join(","))
+        })
+        .collect();
+    format!("{{{}}}", gs.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, ReplicaGroups, Shape};
+
+    #[test]
+    fn prints_and_contains_ops() {
+        let mut b = GraphBuilder::new("m", 2);
+        let x = b.parameter("x", Shape::new(DType::F32, vec![4, 4]));
+        let t = b.transpose(x, vec![1, 0]);
+        let r = b.all_reduce(t, ReduceKind::Add, ReplicaGroups::full(2));
+        b.output(r);
+        let g = b.finish();
+        let text = print_hlo_module(&g);
+        assert!(text.contains("transpose"), "{text}");
+        assert!(text.contains("all-reduce"), "{text}");
+        assert!(text.contains("region_add"), "{text}");
+        assert!(text.contains("ROOT result"), "{text}");
+    }
+
+    #[test]
+    fn nested_const_format() {
+        assert_eq!(nested_const(&[2, 2], &[1.0, 2.0, 3.0, 4.0]), "{{1, 2}, {3, 4}}");
+        assert_eq!(nested_const(&[3], &[1.5, 2.0, 3.0]), "{1.5, 2, 3}");
+    }
+}

@@ -1,0 +1,632 @@
+//! Graph evaluation: single-core and lockstep SPMD with collectives.
+
+use super::Tensor;
+use crate::ir::{CmpKind, ConstVal, Graph, Op, ReduceKind, Shape};
+use thiserror::Error;
+
+/// Evaluation failure.
+#[derive(Debug, Error)]
+pub enum EvalError {
+    /// Wrong number of inputs supplied.
+    #[error("expected {expected} inputs, got {got}")]
+    InputCount {
+        /// Parameters declared by the graph.
+        expected: usize,
+        /// Tensors supplied.
+        got: usize,
+    },
+    /// Input tensor shape mismatch.
+    #[error("input {index} has dims {got:?}, parameter wants {want:?}")]
+    InputShape {
+        /// Parameter index.
+        index: usize,
+        /// Supplied dims.
+        got: Vec<i64>,
+        /// Declared dims.
+        want: Vec<i64>,
+    },
+    /// An op the interpreter does not execute (e.g. `Custom`).
+    #[error("cannot interpret op '{0}'")]
+    Unsupported(String),
+}
+
+fn reduce_apply(kind: ReduceKind, a: f64, b: f64) -> f64 {
+    match kind {
+        ReduceKind::Add => a + b,
+        ReduceKind::Max => a.max(b),
+        ReduceKind::Min => a.min(b),
+        ReduceKind::Mul => a * b,
+    }
+}
+
+fn reduce_identity(kind: ReduceKind) -> f64 {
+    match kind {
+        ReduceKind::Add => 0.0,
+        ReduceKind::Max => f64::NEG_INFINITY,
+        ReduceKind::Min => f64::INFINITY,
+        ReduceKind::Mul => 1.0,
+    }
+}
+
+/// Run a single-core graph (`num_cores` must be 1).
+pub fn run_single(g: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, EvalError> {
+    assert_eq!(g.num_cores, 1, "run_single needs a 1-core graph");
+    let per_core = run_spmd(g, &[inputs.to_vec()])?;
+    Ok(per_core.into_iter().next().unwrap())
+}
+
+/// Run an SPMD graph in lockstep across `g.num_cores` simulated cores.
+///
+/// `inputs[core][param_index]` supplies the per-core parameter values.
+/// Returns `outputs[core][output_index]`.
+pub fn run_spmd(g: &Graph, inputs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>, EvalError> {
+    let cores = g.num_cores as usize;
+    assert_eq!(inputs.len(), cores, "need one input set per core");
+    let params = g.parameters();
+    for per_core in inputs {
+        if per_core.len() != params.len() {
+            return Err(EvalError::InputCount { expected: params.len(), got: per_core.len() });
+        }
+        for (i, (&pid, t)) in params.iter().zip(per_core.iter()).enumerate() {
+            let want = &g.node(pid).shape.dims;
+            if &t.shape.dims != want {
+                return Err(EvalError::InputShape {
+                    index: i,
+                    got: t.shape.dims.clone(),
+                    want: want.clone(),
+                });
+            }
+        }
+    }
+
+    // values[node][core]; dead nodes (e.g. a stripped root tuple left in
+    // the arena by the HLO parser) get placeholder scalars and are skipped.
+    let live = g.live_set();
+    let mut values: Vec<Vec<Tensor>> = Vec::with_capacity(g.len());
+    for node in &g.nodes {
+        if !live[node.id.idx()] {
+            values.push(vec![
+                Tensor::scalar(0.0, node.shape.dtype);
+                cores
+            ]);
+            continue;
+        }
+        let per_core: Vec<Tensor> = match &node.op {
+            // ---- collectives need simultaneous access to all cores ----
+            Op::AllReduce { kind, groups } => {
+                let src: Vec<&Tensor> =
+                    (0..cores).map(|c| &values[node.inputs[0].idx()][c]).collect();
+                (0..cores)
+                    .map(|c| {
+                        let group = groups
+                            .group_of(c as u32)
+                            .map(|s| s.to_vec())
+                            .unwrap_or_else(|| vec![c as u32]);
+                        let mut acc =
+                            vec![reduce_identity(*kind); src[c].data.len()];
+                        for &core in &group {
+                            for (a, v) in acc.iter_mut().zip(&src[core as usize].data) {
+                                *a = reduce_apply(*kind, *a, *v);
+                            }
+                        }
+                        Tensor::new(src[c].shape.clone(), acc).quantize(node.shape.dtype)
+                    })
+                    .collect()
+            }
+            Op::AllGather { dim, groups } => {
+                let src: Vec<&Tensor> =
+                    (0..cores).map(|c| &values[node.inputs[0].idx()][c]).collect();
+                (0..cores)
+                    .map(|c| {
+                        let group = groups
+                            .group_of(c as u32)
+                            .map(|s| s.to_vec())
+                            .unwrap_or_else(|| vec![c as u32]);
+                        let parts: Vec<Tensor> =
+                            group.iter().map(|&g0| src[g0 as usize].clone()).collect();
+                        Tensor::concat(&parts, *dim).quantize(node.shape.dtype)
+                    })
+                    .collect()
+            }
+            Op::ReduceScatter { kind, dim, groups } => {
+                let src: Vec<&Tensor> =
+                    (0..cores).map(|c| &values[node.inputs[0].idx()][c]).collect();
+                (0..cores)
+                    .map(|c| {
+                        let group = groups
+                            .group_of(c as u32)
+                            .map(|s| s.to_vec())
+                            .unwrap_or_else(|| vec![c as u32]);
+                        let mut acc = vec![reduce_identity(*kind); src[c].data.len()];
+                        for &core in &group {
+                            for (a, v) in acc.iter_mut().zip(&src[core as usize].data) {
+                                *a = reduce_apply(*kind, *a, *v);
+                            }
+                        }
+                        let full = Tensor::new(src[c].shape.clone(), acc);
+                        let rank_in_group =
+                            group.iter().position(|&g0| g0 == c as u32).unwrap() as u32;
+                        let parts = full.split(*dim, group.len() as u32);
+                        parts[rank_in_group as usize].clone().quantize(node.shape.dtype)
+                    })
+                    .collect()
+            }
+            Op::AllToAll { split_dim, concat_dim, groups } => {
+                let src: Vec<&Tensor> =
+                    (0..cores).map(|c| &values[node.inputs[0].idx()][c]).collect();
+                (0..cores)
+                    .map(|c| {
+                        let group = groups
+                            .group_of(c as u32)
+                            .map(|s| s.to_vec())
+                            .unwrap_or_else(|| vec![c as u32]);
+                        let my_rank = group.iter().position(|&g0| g0 == c as u32).unwrap();
+                        // chunk `my_rank` of every peer, in group order
+                        let parts: Vec<Tensor> = group
+                            .iter()
+                            .map(|&peer| {
+                                src[peer as usize].split(*split_dim, group.len() as u32)
+                                    [my_rank]
+                                    .clone()
+                            })
+                            .collect();
+                        Tensor::concat(&parts, *concat_dim).quantize(node.shape.dtype)
+                    })
+                    .collect()
+            }
+            // ---- everything else is per-core local ----
+            _ => {
+                let mut per_core = Vec::with_capacity(cores);
+                for c in 0..cores {
+                    let get = |i: usize| -> &Tensor { &values[node.inputs[i].idx()][c] };
+                    let t = eval_local(g, node, c, inputs, &get)?;
+                    per_core.push(t);
+                }
+                per_core
+            }
+        };
+        values.push(per_core);
+    }
+
+    Ok((0..cores)
+        .map(|c| g.outputs.iter().map(|o| values[o.idx()][c].clone()).collect())
+        .collect())
+}
+
+/// Evaluate a non-collective node on one core.
+fn eval_local<'a>(
+    g: &Graph,
+    node: &crate::ir::Node,
+    core: usize,
+    inputs: &[Vec<Tensor>],
+    get: &dyn Fn(usize) -> &'a Tensor,
+) -> Result<Tensor, EvalError> {
+    let out_shape = node.shape.clone();
+    let quant = |t: Tensor| t.quantize(out_shape.dtype);
+    Ok(match &node.op {
+        Op::Parameter { index, .. } => {
+            let params = g.parameters();
+            let pos = params.iter().position(|&p| p == node.id).unwrap();
+            debug_assert_eq!(
+                *index,
+                match &g.node(params[pos]).op {
+                    Op::Parameter { index, .. } => *index,
+                    _ => unreachable!(),
+                }
+            );
+            inputs[core][pos].clone().quantize(out_shape.dtype)
+        }
+        Op::Constant(c) => {
+            let data = match c {
+                ConstVal::Scalar(v) => vec![*v; out_shape.elements() as usize],
+                ConstVal::Dense(vs) => vs.clone(),
+            };
+            quant(Tensor::new(out_shape.clone(), data))
+        }
+        Op::Iota { dim, .. } => {
+            let mut data = Vec::with_capacity(out_shape.elements() as usize);
+            for flat in 0..out_shape.elements() {
+                let coords = out_shape.unflatten_index(flat);
+                data.push(coords[*dim] as f64);
+            }
+            quant(Tensor::new(out_shape.clone(), data))
+        }
+        Op::Add => quant(binary(get(0), get(1), |a, b| a + b)),
+        Op::Sub => quant(binary(get(0), get(1), |a, b| a - b)),
+        Op::Mul => quant(binary(get(0), get(1), |a, b| a * b)),
+        Op::Div => quant(binary(get(0), get(1), |a, b| a / b)),
+        Op::Max => quant(binary(get(0), get(1), f64::max)),
+        Op::Min => quant(binary(get(0), get(1), f64::min)),
+        Op::Pow => quant(binary(get(0), get(1), f64::powf)),
+        Op::Neg => quant(unary(get(0), |a| -a)),
+        Op::Exp => quant(unary(get(0), f64::exp)),
+        Op::Log => quant(unary(get(0), f64::ln)),
+        Op::Tanh => quant(unary(get(0), f64::tanh)),
+        Op::Rsqrt => quant(unary(get(0), |a| 1.0 / a.sqrt())),
+        Op::Sqrt => quant(unary(get(0), f64::sqrt)),
+        Op::Abs => quant(unary(get(0), f64::abs)),
+        Op::Logistic => quant(unary(get(0), |a| 1.0 / (1.0 + (-a).exp()))),
+        Op::Sin => quant(unary(get(0), f64::sin)),
+        Op::Cos => quant(unary(get(0), f64::cos)),
+        Op::Convert { to } => get(0).clone().quantize(*to),
+        Op::Compare(kind) => {
+            let f = |a: f64, b: f64| -> f64 {
+                let r = match kind {
+                    CmpKind::Eq => a == b,
+                    CmpKind::Ne => a != b,
+                    CmpKind::Lt => a < b,
+                    CmpKind::Le => a <= b,
+                    CmpKind::Gt => a > b,
+                    CmpKind::Ge => a >= b,
+                };
+                if r {
+                    1.0
+                } else {
+                    0.0
+                }
+            };
+            quant(binary(get(0), get(1), f))
+        }
+        Op::Select => {
+            let p = get(0);
+            let t = get(1);
+            let f = get(2);
+            let data = p
+                .data
+                .iter()
+                .zip(t.data.iter().zip(&f.data))
+                .map(|(&c, (&x, &y))| if c != 0.0 { x } else { y })
+                .collect();
+            quant(Tensor::new(t.shape.clone(), data))
+        }
+        Op::Dot { lhs_contract, rhs_contract, lhs_batch, rhs_batch } => quant(dot_general(
+            get(0),
+            get(1),
+            lhs_contract,
+            rhs_contract,
+            lhs_batch,
+            rhs_batch,
+            &out_shape,
+        )),
+        Op::Reshape { .. } => quant(Tensor::new(out_shape.clone(), get(0).data.clone())),
+        Op::Transpose { perm } => {
+            let x = get(0);
+            let mut data = Vec::with_capacity(out_shape.elements() as usize);
+            for flat in 0..out_shape.elements() {
+                let out_coords = out_shape.unflatten_index(flat);
+                // output dim i = input dim perm[i]
+                let mut in_coords = vec![0i64; perm.len()];
+                for (i, &p) in perm.iter().enumerate() {
+                    in_coords[p] = out_coords[i];
+                }
+                data.push(x.at(&in_coords));
+            }
+            quant(Tensor::new(out_shape.clone(), data))
+        }
+        Op::Slice { starts, limits: _, strides } => {
+            let x = get(0);
+            let mut data = Vec::with_capacity(out_shape.elements() as usize);
+            for flat in 0..out_shape.elements() {
+                let out_coords = out_shape.unflatten_index(flat);
+                let in_coords: Vec<i64> = out_coords
+                    .iter()
+                    .zip(starts.iter().zip(strides))
+                    .map(|(&c, (&s, &st))| s + c * st)
+                    .collect();
+                data.push(x.at(&in_coords));
+            }
+            quant(Tensor::new(out_shape.clone(), data))
+        }
+        Op::Concat { dim } => {
+            let parts: Vec<Tensor> =
+                (0..node.inputs.len()).map(|i| get(i).clone()).collect();
+            quant(Tensor::concat(&parts, *dim))
+        }
+        Op::Broadcast { mapped, .. } => {
+            let x = get(0);
+            let mut data = Vec::with_capacity(out_shape.elements() as usize);
+            for flat in 0..out_shape.elements() {
+                let out_coords = out_shape.unflatten_index(flat);
+                let in_coords: Vec<i64> = mapped.iter().map(|&m| out_coords[m]).collect();
+                data.push(x.at(&in_coords));
+            }
+            quant(Tensor::new(out_shape.clone(), data))
+        }
+        Op::Reduce { kind, dims } => {
+            let x = get(0);
+            let mut acc =
+                vec![reduce_identity(*kind); out_shape.elements() as usize];
+            for flat in 0..x.shape.elements() {
+                let coords = x.shape.unflatten_index(flat);
+                let out_coords: Vec<i64> = coords
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !dims.contains(i))
+                    .map(|(_, &c)| c)
+                    .collect();
+                let oi = out_shape.flatten_index(&out_coords) as usize;
+                acc[oi] = reduce_apply(*kind, acc[oi], x.data[flat as usize]);
+            }
+            quant(Tensor::new(out_shape.clone(), acc))
+        }
+        Op::Tuple | Op::GetTupleElement { .. } => {
+            // tuples only appear as artifact entry wrappers; the verifier
+            // strips them before interpretation.
+            return Err(EvalError::Unsupported(node.op.name().to_owned()));
+        }
+        Op::Custom { name } => return Err(EvalError::Unsupported(name.clone())),
+        Op::AllReduce { .. }
+        | Op::AllGather { .. }
+        | Op::ReduceScatter { .. }
+        | Op::AllToAll { .. } => unreachable!("collectives handled by caller"),
+    })
+}
+
+fn unary(x: &Tensor, f: impl Fn(f64) -> f64) -> Tensor {
+    Tensor::new(x.shape.clone(), x.data.iter().map(|&v| f(v)).collect())
+}
+
+fn binary(a: &Tensor, b: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+    // scalar broadcast on either side; otherwise shapes must match
+    if a.shape.rank() == 0 && b.shape.rank() != 0 {
+        return Tensor::new(b.shape.clone(), b.data.iter().map(|&v| f(a.data[0], v)).collect());
+    }
+    if b.shape.rank() == 0 && a.shape.rank() != 0 {
+        return Tensor::new(a.shape.clone(), a.data.iter().map(|&v| f(v, b.data[0])).collect());
+    }
+    assert_eq!(a.shape.dims, b.shape.dims);
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect(),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot_general(
+    lhs: &Tensor,
+    rhs: &Tensor,
+    lhs_contract: &[usize],
+    rhs_contract: &[usize],
+    lhs_batch: &[usize],
+    rhs_batch: &[usize],
+    out_shape: &Shape,
+) -> Tensor {
+    let lhs_free: Vec<usize> = (0..lhs.shape.rank())
+        .filter(|i| !lhs_contract.contains(i) && !lhs_batch.contains(i))
+        .collect();
+    let rhs_free: Vec<usize> = (0..rhs.shape.rank())
+        .filter(|i| !rhs_contract.contains(i) && !rhs_batch.contains(i))
+        .collect();
+    let contract_sizes: Vec<i64> = lhs_contract.iter().map(|&d| lhs.shape.dims[d]).collect();
+    let contract_total: i64 = contract_sizes.iter().product();
+    let contract_shape = Shape::new(lhs.shape.dtype, contract_sizes);
+
+    let mut data = Vec::with_capacity(out_shape.elements() as usize);
+    for flat in 0..out_shape.elements() {
+        let out_coords = out_shape.unflatten_index(flat);
+        // out layout: batch dims, lhs free, rhs free
+        let nb = lhs_batch.len();
+        let nlf = lhs_free.len();
+        let mut acc = 0.0f64;
+        for k in 0..contract_total {
+            let k_coords = contract_shape.unflatten_index(k);
+            let mut lc = vec![0i64; lhs.shape.rank()];
+            for (i, &d) in lhs_batch.iter().enumerate() {
+                lc[d] = out_coords[i];
+            }
+            for (i, &d) in lhs_free.iter().enumerate() {
+                lc[d] = out_coords[nb + i];
+            }
+            for (i, &d) in lhs_contract.iter().enumerate() {
+                lc[d] = k_coords[i];
+            }
+            let mut rc = vec![0i64; rhs.shape.rank()];
+            for (i, &d) in rhs_batch.iter().enumerate() {
+                rc[d] = out_coords[i];
+            }
+            for (i, &d) in rhs_free.iter().enumerate() {
+                rc[d] = out_coords[nb + nlf + i];
+            }
+            for (i, &d) in rhs_contract.iter().enumerate() {
+                rc[d] = k_coords[i];
+            }
+            acc += lhs.at(&lc) * rhs.at(&rc);
+        }
+        data.push(acc);
+    }
+    Tensor::new(out_shape.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, ReplicaGroups, Shape};
+    use crate::util::Prng;
+
+    fn f32s(dims: &[i64]) -> Shape {
+        Shape::new(DType::F32, dims.to_vec())
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", f32s(&[2, 2]));
+        let w = b.parameter("w", f32s(&[2, 2]));
+        let y = b.matmul(x, w);
+        b.output(y);
+        let g = b.finish();
+        let xv = Tensor::new(f32s(&[2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let wv = Tensor::new(f32s(&[2, 2]), vec![1.0, 1.0, 1.0, 1.0]);
+        let out = run_single(&g, &[xv, wv]).unwrap();
+        assert_eq!(out[0].data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn sharded_matmul_allreduce_equals_baseline() {
+        // baseline: Y = X[4,8] · W[8,4]
+        let mut bb = GraphBuilder::new("base", 1);
+        let x = bb.parameter("x", f32s(&[4, 8]));
+        let w = bb.parameter("w", f32s(&[8, 4]));
+        let y = bb.matmul(x, w);
+        bb.output(y);
+        let base = bb.finish();
+
+        // distributed (2 cores): X sharded on dim1, W sharded on dim0,
+        // local matmul + all-reduce
+        let mut db = GraphBuilder::new("dist", 2);
+        let xs = db.parameter("x_shard", f32s(&[4, 4]));
+        let ws = db.parameter("w_shard", f32s(&[4, 4]));
+        let part = db.matmul(xs, ws);
+        let red = db.all_reduce(part, crate::ir::ReduceKind::Add, ReplicaGroups::full(2));
+        db.output(red);
+        let dist = db.finish();
+
+        let mut p = Prng::new(5);
+        let xv = Tensor::random(f32s(&[4, 8]), &mut p);
+        let wv = Tensor::random(f32s(&[8, 4]), &mut p);
+        let base_out = run_single(&base, &[xv.clone(), wv.clone()]).unwrap();
+
+        let x_parts = xv.split(1, 2);
+        let w_parts = wv.split(0, 2);
+        let dist_out = run_spmd(
+            &dist,
+            &[
+                vec![x_parts[0].clone(), w_parts[0].clone()],
+                vec![x_parts[1].clone(), w_parts[1].clone()],
+            ],
+        )
+        .unwrap();
+        for core in 0..2 {
+            assert!(
+                base_out[0].max_abs_diff(&dist_out[core][0]) < 1e-5,
+                "core {core} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn all_gather_reassembles() {
+        let mut db = GraphBuilder::new("d", 2);
+        let xs = db.parameter("x", f32s(&[2, 2]));
+        let ag = db.all_gather(xs, 0, ReplicaGroups::full(2));
+        db.output(ag);
+        let g = db.finish();
+        let a = Tensor::new(f32s(&[2, 2]), vec![0.0, 1.0, 2.0, 3.0]);
+        let b = Tensor::new(f32s(&[2, 2]), vec![4.0, 5.0, 6.0, 7.0]);
+        let out = run_spmd(&g, &[vec![a], vec![b]]).unwrap();
+        assert_eq!(out[0][0].data, (0..8).map(|v| v as f64).collect::<Vec<_>>());
+        assert_eq!(out[0][0].data, out[1][0].data);
+    }
+
+    #[test]
+    fn reduce_scatter_shards_the_sum() {
+        let mut db = GraphBuilder::new("d", 2);
+        let xs = db.parameter("x", f32s(&[4]));
+        let rs = db.reduce_scatter(xs, crate::ir::ReduceKind::Add, 0, ReplicaGroups::full(2));
+        db.output(rs);
+        let g = db.finish();
+        let a = Tensor::new(f32s(&[4]), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(f32s(&[4]), vec![10.0, 20.0, 30.0, 40.0]);
+        let out = run_spmd(&g, &[vec![a], vec![b]]).unwrap();
+        assert_eq!(out[0][0].data, vec![11.0, 22.0]);
+        assert_eq!(out[1][0].data, vec![33.0, 44.0]);
+    }
+
+    #[test]
+    fn all_to_all_transposes_mesh() {
+        let mut db = GraphBuilder::new("d", 2);
+        let xs = db.parameter("x", f32s(&[2, 2]));
+        let a2a = db.all_to_all(xs, 0, 1, ReplicaGroups::full(2));
+        db.output(a2a);
+        let g = db.finish();
+        // core0 rows [r00, r01], core1 rows [r10, r11]
+        let a = Tensor::new(f32s(&[2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(f32s(&[2, 2]), vec![5.0, 6.0, 7.0, 8.0]);
+        let out = run_spmd(&g, &[vec![a], vec![b]]).unwrap();
+        // core0 gets row0 of each, concat along dim1: [1,2,5,6]
+        assert_eq!(out[0][0].shape.dims, vec![1, 4]);
+        assert_eq!(out[0][0].data, vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(out[1][0].data, vec![3.0, 4.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn softmax_decomposition_runs() {
+        // softmax(x) via max/exp/sum ops — exercises reduce+broadcast+div
+        let mut b = GraphBuilder::new("sm", 1);
+        let x = b.parameter("x", f32s(&[2, 4]));
+        let m = b.reduce(x, crate::ir::ReduceKind::Max, vec![1]);
+        let mb = b.broadcast(m, vec![2, 4], vec![0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, crate::ir::ReduceKind::Add, vec![1]);
+        let sb = b.broadcast(s, vec![2, 4], vec![0]);
+        let sm = b.div(e, sb);
+        b.output(sm);
+        let g = b.finish();
+        let xv = Tensor::new(f32s(&[2, 4]), vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        let out = run_single(&g, &[xv]).unwrap();
+        let row1: f64 = out[0].data[4..].iter().sum();
+        assert!((row1 - 1.0).abs() < 1e-6);
+        assert!((out[0].data[..4].iter().sum::<f64>() - 1.0).abs() < 1e-6);
+        assert_eq!(out[0].data[4], 0.25);
+    }
+
+    #[test]
+    fn precision_quantization_visible() {
+        // bf16 convert loses bits that f32 path keeps
+        let mut b = GraphBuilder::new("q", 1);
+        let x = b.parameter("x", f32s(&[1]));
+        let lo = b.convert(x, DType::BF16);
+        let back = b.convert(lo, DType::F32);
+        b.output(back);
+        let g = b.finish();
+        let v = 1.0 + 1.0 / 512.0;
+        let out = run_single(&g, &[Tensor::new(f32s(&[1]), vec![v])]).unwrap();
+        assert_ne!(out[0].data[0], v);
+    }
+
+    #[test]
+    fn iota_and_slice() {
+        let mut b = GraphBuilder::new("i", 1);
+        let i = b.iota(Shape::new(DType::S32, vec![4]), 0);
+        let s = b.slice_dim(i, 0, 1, 3);
+        b.output(s);
+        let g = b.finish();
+        let out = run_single(&g, &[]).unwrap();
+        assert_eq!(out[0].data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_dot_general_batched() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", f32s(&[2, 3, 4]));
+        let t = b.transpose(x, vec![0, 2, 1]);
+        let y = b.matmul(x, t); // [2,3,4]·[2,4,3] -> [2,3,3]
+        b.output(y);
+        let g = b.finish();
+        let mut p = Prng::new(7);
+        let xv = Tensor::random(f32s(&[2, 3, 4]), &mut p);
+        let out = run_single(&g, &[xv.clone()]).unwrap();
+        assert_eq!(out[0].shape.dims, vec![2, 3, 3]);
+        // diagonal entries are squared norms => non-negative
+        for b0 in 0..2 {
+            for i in 0..3 {
+                assert!(out[0].at(&[b0, i, i]) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_group_allreduce_only_reduces_group() {
+        let mut db = GraphBuilder::new("d", 4);
+        let xs = db.parameter("x", f32s(&[1]));
+        let ar = db.all_reduce(xs, crate::ir::ReduceKind::Add, ReplicaGroups::split(4, 2));
+        db.output(ar);
+        let g = db.finish();
+        let ins: Vec<Vec<Tensor>> =
+            (0..4).map(|c| vec![Tensor::new(f32s(&[1]), vec![(c + 1) as f64])]).collect();
+        let out = run_spmd(&g, &ins).unwrap();
+        assert_eq!(out[0][0].data, vec![3.0]); // 1+2
+        assert_eq!(out[2][0].data, vec![7.0]); // 3+4
+    }
+}

@@ -1,0 +1,18 @@
+//! Reference interpreter for the tensor IR, including SPMD collectives.
+//!
+//! This is the *numerical* substrate of the reproduction: it executes
+//! baseline graphs on one core and distributed graphs on a simulated core
+//! mesh (lockstep SPMD, collectives exchanging values across cores). The
+//! numerical-differential baseline verifier ([`crate::baseline`]) and the
+//! differential tests of the model zoo are built on it.
+//!
+//! Values are computed in `f64` but **rounded to each node's element type
+//! after every op** ([`Tensor::quantize`]) so precision-mismatch bugs
+//! (paper bug category 3) show up numerically, exactly as they do on real
+//! hardware.
+
+mod tensor;
+mod eval;
+
+pub use eval::{run_single, run_spmd, EvalError};
+pub use tensor::Tensor;

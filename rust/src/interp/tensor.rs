@@ -1,0 +1,243 @@
+//! Host tensor: row-major `f64` storage + shape, with dtype quantization.
+
+use crate::ir::{DType, Shape};
+use crate::util::Prng;
+
+/// A concrete tensor value (row-major, f64 storage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Logical shape (dtype describes the *simulated* storage precision).
+    pub shape: Shape,
+    /// Row-major values.
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    /// Construct, checking element count.
+    pub fn new(shape: Shape, data: Vec<f64>) -> Tensor {
+        assert_eq!(shape.elements() as usize, data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Shape) -> Tensor {
+        let n = shape.elements() as usize;
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f64, dtype: DType) -> Tensor {
+        Tensor { shape: Shape::scalar(dtype), data: vec![v] }
+    }
+
+    /// Random tensor in [-1, 1) from the deterministic PRNG.
+    pub fn random(shape: Shape, prng: &mut Prng) -> Tensor {
+        let n = shape.elements() as usize;
+        let mut data = vec![0.0f64; n];
+        for v in data.iter_mut() {
+            *v = prng.unit_f32() as f64;
+        }
+        let mut t = Tensor { shape, data };
+        t.quantize_in_place();
+        t
+    }
+
+    /// Value at multi-dim coordinates.
+    pub fn at(&self, coords: &[i64]) -> f64 {
+        self.data[self.shape.flatten_index(coords) as usize]
+    }
+
+    /// Round every element to the storage precision of `dtype`.
+    ///
+    /// bf16/f16/f32 rounding is exact bit truncation via the corresponding
+    /// Rust float casts; integers round-to-nearest; pred thresholds at 0.
+    pub fn quantize(mut self, dtype: DType) -> Tensor {
+        self.shape.dtype = dtype;
+        self.quantize_in_place();
+        self
+    }
+
+    fn quantize_in_place(&mut self) {
+        match self.shape.dtype {
+            DType::F64 => {}
+            DType::F32 => {
+                for v in self.data.iter_mut() {
+                    *v = *v as f32 as f64;
+                }
+            }
+            DType::F16 => {
+                for v in self.data.iter_mut() {
+                    *v = f16_round(*v);
+                }
+            }
+            DType::BF16 => {
+                for v in self.data.iter_mut() {
+                    *v = bf16_round(*v);
+                }
+            }
+            DType::S32 | DType::U32 | DType::S8 => {
+                for v in self.data.iter_mut() {
+                    *v = v.round();
+                }
+            }
+            DType::Pred => {
+                for v in self.data.iter_mut() {
+                    *v = if *v != 0.0 { 1.0 } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape.dims, other.shape.dims, "shape mismatch in diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Split into `parts` equal chunks along `dim` (shard simulation).
+    pub fn split(&self, dim: usize, parts: u32) -> Vec<Tensor> {
+        let size = self.shape.dims[dim];
+        assert_eq!(size % parts as i64, 0, "dim {dim} of size {size} not divisible by {parts}");
+        let chunk = size / parts as i64;
+        (0..parts as i64)
+            .map(|p| self.slice_dim(dim, p * chunk, (p + 1) * chunk))
+            .collect()
+    }
+
+    /// Contiguous slice along one dim.
+    pub fn slice_dim(&self, dim: usize, start: i64, limit: i64) -> Tensor {
+        let mut dims = self.shape.dims.clone();
+        dims[dim] = limit - start;
+        let out_shape = self.shape.with_dims(dims);
+        let mut out = Vec::with_capacity(out_shape.elements() as usize);
+        for flat in 0..out_shape.elements() {
+            let mut coords = out_shape.unflatten_index(flat);
+            coords[dim] += start;
+            out.push(self.at(&coords));
+        }
+        Tensor::new(out_shape, out)
+    }
+
+    /// Concatenate tensors along `dim`.
+    pub fn concat(parts: &[Tensor], dim: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut dims = parts[0].shape.dims.clone();
+        dims[dim] = parts.iter().map(|t| t.shape.dims[dim]).sum();
+        let out_shape = parts[0].shape.with_dims(dims);
+        let mut out = Vec::with_capacity(out_shape.elements() as usize);
+        for flat in 0..out_shape.elements() {
+            let mut coords = out_shape.unflatten_index(flat);
+            // find which part this coordinate falls into
+            let mut offset = 0i64;
+            let mut chosen = 0usize;
+            for (i, p) in parts.iter().enumerate() {
+                let sz = p.shape.dims[dim];
+                if coords[dim] < offset + sz {
+                    chosen = i;
+                    break;
+                }
+                offset += sz;
+            }
+            coords[dim] -= offset;
+            out.push(parts[chosen].at(&coords));
+        }
+        Tensor::new(out_shape, out)
+    }
+}
+
+/// Round an f64 to the nearest bf16 value (round-to-nearest-even on the
+/// f32 bit pattern).
+pub fn bf16_round(v: f64) -> f64 {
+    let bits = (v as f32).to_bits();
+    // round-to-nearest-even at bit 16
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+    f32::from_bits(rounded) as f64
+}
+
+/// Round an f64 to the nearest f16 value.
+pub fn f16_round(v: f64) -> f64 {
+    // Minimal f16 emulation: clamp + quantize mantissa to 10 bits.
+    let f = v as f32;
+    if !f.is_finite() {
+        return f as f64;
+    }
+    let max = 65504.0f32;
+    let clamped = f.clamp(-max, max);
+    if clamped == 0.0 {
+        return 0.0;
+    }
+    let bits = clamped.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32 - 127;
+    if exp < -14 {
+        // subnormal-ish: quantize to multiples of 2^-24
+        let q = (clamped / 2f32.powi(-24)).round() * 2f32.powi(-24);
+        return q as f64;
+    }
+    // keep 10 mantissa bits (round-to-nearest-even at bit 13)
+    let rounded = bits.wrapping_add(0xFFF + ((bits >> 13) & 1)) & 0xFFFF_E000;
+    f32::from_bits(rounded) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(dims: &[i64], data: Vec<f64>) -> Tensor {
+        Tensor::new(Shape::new(DType::F64, dims.to_vec()), data)
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let x = t(&[4, 2], (0..8).map(|v| v as f64).collect());
+        let parts = x.split(0, 2);
+        assert_eq!(parts[0].data, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(parts[1].data, vec![4.0, 5.0, 6.0, 7.0]);
+        let back = Tensor::concat(&parts, 0);
+        assert_eq!(back.data, x.data);
+    }
+
+    #[test]
+    fn split_concat_inner_dim() {
+        let x = t(&[2, 4], (0..8).map(|v| v as f64).collect());
+        let parts = x.split(1, 2);
+        assert_eq!(parts[0].data, vec![0.0, 1.0, 4.0, 5.0]);
+        let back = Tensor::concat(&parts, 1);
+        assert_eq!(back.data, x.data);
+    }
+
+    #[test]
+    fn bf16_loses_precision_f32_keeps_more() {
+        let v = 1.0 + 1.0 / 512.0; // needs 9 mantissa bits
+        assert_eq!(v as f32 as f64, v);
+        assert_ne!(bf16_round(v), v); // bf16 has 7 bits
+        let h = f16_round(v);
+        assert_eq!(h, v); // f16 has 10 bits
+    }
+
+    #[test]
+    fn quantize_pred() {
+        let x = t(&[3], vec![0.0, 2.0, -1.0]).quantize(DType::Pred);
+        assert_eq!(x.data, vec![0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = t(&[2], vec![1.0, 2.0]);
+        let b = t(&[2], vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn bf16_round_is_idempotent() {
+        let mut p = crate::util::Prng::new(11);
+        for _ in 0..1000 {
+            let v = p.unit_f32() as f64 * 100.0;
+            let r = bf16_round(v);
+            assert_eq!(bf16_round(r), r);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Cross-graph input annotations (§5.2.1).
+//!
+//! Production frameworks do not record how the distributed graph's inputs
+//! relate to the baseline graph's inputs; Scalify instruments the compiler
+//! to log sharding/replication during IR generation. We model the result
+//! of that instrumentation as [`Annotation`]s carried by a graph *pair*:
+//! each annotation ties a baseline parameter to its distributed
+//! counterpart and states the placement relation.
+
+use super::NodeId;
+
+/// How a distributed input tensor relates to a baseline input tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InputRelation {
+    /// Distributed parameter is shard `r` (its core index) of the baseline
+    /// tensor along `dim`, split evenly across `parts` cores:
+    /// `shard_along(self, tensor, dim)` in the paper's notation.
+    ShardAlong {
+        /// Split dimension.
+        dim: usize,
+        /// Number of shards (= cores in the group).
+        parts: u32,
+    },
+    /// Distributed parameter is a full replica of the baseline tensor on
+    /// every core.
+    Replicated,
+    /// Auxiliary tensor carrying device metadata (e.g.
+    /// `torch.arange(tp_degree)` used for expert routing). Not derived
+    /// automatically — manually specified, as in the paper.
+    DeviceIds,
+}
+
+/// One registered input relation between the graph pair.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Annotation {
+    /// Parameter node in the baseline graph (None for aux-only tensors).
+    pub baseline: Option<NodeId>,
+    /// Parameter node in the distributed graph.
+    pub distributed: NodeId,
+    /// The relation.
+    pub relation: InputRelation,
+}
+
+impl Annotation {
+    /// Shorthand: distributed param `d` is baseline param `b` sharded
+    /// along `dim` across `parts` cores.
+    pub fn shard(b: NodeId, d: NodeId, dim: usize, parts: u32) -> Annotation {
+        Annotation {
+            baseline: Some(b),
+            distributed: d,
+            relation: InputRelation::ShardAlong { dim, parts },
+        }
+    }
+
+    /// Shorthand: distributed param `d` replicates baseline param `b`.
+    pub fn replicated(b: NodeId, d: NodeId) -> Annotation {
+        Annotation { baseline: Some(b), distributed: d, relation: InputRelation::Replicated }
+    }
+
+    /// Shorthand: distributed param `d` carries device ids.
+    pub fn device_ids(d: NodeId) -> Annotation {
+        Annotation { baseline: None, distributed: d, relation: InputRelation::DeviceIds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let a = Annotation::shard(NodeId(0), NodeId(1), 1, 32);
+        assert_eq!(a.relation, InputRelation::ShardAlong { dim: 1, parts: 32 });
+        let r = Annotation::replicated(NodeId(2), NodeId(3));
+        assert_eq!(r.relation, InputRelation::Replicated);
+        let d = Annotation::device_ids(NodeId(4));
+        assert!(d.baseline.is_none());
+    }
+}

@@ -1,0 +1,529 @@
+//! Ergonomic graph construction with shape inference and source metadata.
+//!
+//! The model zoo ([`crate::modelgen`]) builds framework-style graphs
+//! through this API; every helper infers the output shape the same way the
+//! HLO verifier would, so structurally invalid graphs fail at construction
+//! time, not at verification time.
+
+use super::{CmpKind, ConstVal, DType, Graph, Meta, NodeId, Op, ReduceKind, ReplicaGroups, Shape};
+use crate::util::Sym;
+
+/// Shape inference for an op given operand shapes (per-core shapes for SPMD
+/// graphs, hence `num_cores` for the collectives).
+pub fn infer_shape(op: &Op, ins: &[&Shape], num_cores: u32) -> Shape {
+    match op {
+        Op::Parameter { .. } | Op::Constant(_) => {
+            unreachable!("leaf shapes are given, not inferred")
+        }
+        Op::Iota { dims, .. } => Shape::new(super::DType::S32, dims.clone()),
+        Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Max | Op::Min | Op::Pow => {
+            broadcast_binary(ins[0], ins[1])
+        }
+        Op::Neg
+        | Op::Exp
+        | Op::Log
+        | Op::Tanh
+        | Op::Rsqrt
+        | Op::Sqrt
+        | Op::Abs
+        | Op::Logistic
+        | Op::Sin
+        | Op::Cos => ins[0].clone(),
+        Op::Convert { to } => ins[0].with_dtype(*to),
+        Op::Compare(_) => broadcast_binary(ins[0], ins[1]).with_dtype(DType::Pred),
+        Op::Select => ins[1].clone(),
+        Op::Dot { lhs_contract, rhs_contract, lhs_batch, rhs_batch } => {
+            let lhs = ins[0];
+            let rhs = ins[1];
+            let mut dims: Vec<i64> = lhs_batch.iter().map(|&d| lhs.dims[d]).collect();
+            for (i, &d) in lhs.dims.iter().enumerate() {
+                if !lhs_contract.contains(&i) && !lhs_batch.contains(&i) {
+                    dims.push(d);
+                }
+            }
+            for (i, &d) in rhs.dims.iter().enumerate() {
+                if !rhs_contract.contains(&i) && !rhs_batch.contains(&i) {
+                    dims.push(d);
+                }
+            }
+            Shape::new(lhs.dtype, dims)
+        }
+        Op::Reshape { dims } => ins[0].with_dims(dims.clone()),
+        Op::Transpose { perm } => {
+            let dims = perm.iter().map(|&p| ins[0].dims[p]).collect();
+            ins[0].with_dims(dims)
+        }
+        Op::Slice { starts, limits, strides } => {
+            let dims = starts
+                .iter()
+                .zip(limits)
+                .zip(strides)
+                .map(|((&s, &l), &st)| (l - s + st - 1) / st)
+                .collect();
+            ins[0].with_dims(dims)
+        }
+        Op::Concat { dim } => {
+            let mut dims = ins[0].dims.clone();
+            dims[*dim] = ins.iter().map(|s| s.dims[*dim]).sum();
+            ins[0].with_dims(dims)
+        }
+        Op::Broadcast { dims, .. } => ins[0].with_dims(dims.clone()),
+        Op::Reduce { dims, .. } => {
+            let out = ins[0]
+                .dims
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !dims.contains(i))
+                .map(|(_, &d)| d)
+                .collect();
+            ins[0].with_dims(out)
+        }
+        Op::AllReduce { .. } => ins[0].clone(),
+        Op::AllGather { dim, groups } => {
+            let g = groups.0[0].len() as i64;
+            let mut dims = ins[0].dims.clone();
+            dims[*dim] *= g;
+            ins[0].with_dims(dims)
+        }
+        Op::ReduceScatter { dim, groups, .. } => {
+            let g = groups.0[0].len() as i64;
+            let mut dims = ins[0].dims.clone();
+            assert_eq!(dims[*dim] % g, 0, "reduce-scatter dim not divisible");
+            dims[*dim] /= g;
+            ins[0].with_dims(dims)
+        }
+        Op::AllToAll { split_dim, concat_dim, groups } => {
+            let g = groups.0[0].len() as i64;
+            let mut dims = ins[0].dims.clone();
+            assert_eq!(dims[*split_dim] % g, 0, "all-to-all split dim not divisible");
+            dims[*split_dim] /= g;
+            dims[*concat_dim] *= g;
+            let _ = num_cores;
+            ins[0].with_dims(dims)
+        }
+        Op::Tuple => Shape::scalar(ins.first().map(|s| s.dtype).unwrap_or(DType::F32)),
+        Op::GetTupleElement { .. } => unreachable!("tuple element shapes tracked by caller"),
+        Op::Custom { .. } => ins[0].clone(),
+    }
+}
+
+fn broadcast_binary(a: &Shape, b: &Shape) -> Shape {
+    // Scalars broadcast against anything; otherwise shapes must match
+    // (HLO requires explicit broadcasts, which our builders insert).
+    if a.rank() == 0 {
+        return b.clone();
+    }
+    if b.rank() == 0 {
+        return a.clone();
+    }
+    assert_eq!(a.dims, b.dims, "binary op on mismatched shapes {} vs {}", a, b);
+    a.clone()
+}
+
+/// Source-context state carried onto every node the builder creates.
+#[derive(Clone, Copy, Debug)]
+struct SourceCtx {
+    file: Sym,
+    line: u32,
+    func: Sym,
+    layer: Option<u32>,
+}
+
+/// Builder over a [`Graph`] with shape inference and source tracking.
+pub struct GraphBuilder {
+    g: Graph,
+    ctx: SourceCtx,
+    next_param: usize,
+}
+
+impl GraphBuilder {
+    /// Start building a graph named `name` over `num_cores` cores.
+    pub fn new(name: impl Into<String>, num_cores: u32) -> GraphBuilder {
+        GraphBuilder {
+            g: Graph::new(name, num_cores),
+            ctx: SourceCtx { file: Sym::EMPTY, line: 0, func: Sym::EMPTY, layer: None },
+            next_param: 0,
+        }
+    }
+
+    /// Set the source file/line attached to subsequently built nodes.
+    pub fn at(&mut self, file: &str, line: u32) -> &mut Self {
+        self.ctx.file = self.g.interner.intern(file);
+        self.ctx.line = line;
+        self
+    }
+
+    /// Set the enclosing framework function name.
+    pub fn in_func(&mut self, func: &str) -> &mut Self {
+        self.ctx.func = self.g.interner.intern(func);
+        self
+    }
+
+    /// Set the current layer index (None = outside any layer).
+    pub fn layer(&mut self, layer: Option<u32>) -> &mut Self {
+        self.ctx.layer = layer;
+        self
+    }
+
+    fn meta(&mut self, expr: &str) -> Meta {
+        Meta {
+            file: self.ctx.file,
+            line: self.ctx.line,
+            expr: self.g.interner.intern(expr),
+            func: self.ctx.func,
+            layer: self.ctx.layer,
+        }
+    }
+
+    fn push_infer(&mut self, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let shapes: Vec<&Shape> = inputs.iter().map(|&i| &self.g.node(i).shape).collect();
+        let shape = infer_shape(&op, &shapes, self.g.num_cores);
+        let meta = self.meta(op.name());
+        self.g.push(op, inputs, shape, meta)
+    }
+
+    // ---- leaves ----
+
+    /// New parameter with the next parameter index.
+    pub fn parameter(&mut self, name: &str, shape: Shape) -> NodeId {
+        let index = self.next_param;
+        self.next_param += 1;
+        let meta = self.meta(&format!("param {name}"));
+        self.g.push(Op::Parameter { index, name: name.to_owned() }, vec![], shape, meta)
+    }
+
+    /// Scalar constant.
+    pub fn constant(&mut self, v: f64, dtype: DType) -> NodeId {
+        let meta = self.meta(&format!("const {v}"));
+        self.g.push(Op::Constant(ConstVal::Scalar(v)), vec![], Shape::scalar(dtype), meta)
+    }
+
+    /// Dense constant (row-major values matching `shape`).
+    pub fn dense_constant(&mut self, values: Vec<f64>, shape: Shape) -> NodeId {
+        assert_eq!(values.len() as i64, shape.elements());
+        let meta = self.meta("const dense");
+        self.g.push(Op::Constant(ConstVal::Dense(values)), vec![], shape, meta)
+    }
+
+    /// `iota` along `dim` of the given shape (device/position ids).
+    pub fn iota(&mut self, shape: Shape, dim: usize) -> NodeId {
+        let meta = self.meta("iota");
+        let dims = shape.dims.clone();
+        self.g.push(Op::Iota { dim, dims }, vec![], shape, meta)
+    }
+
+    // ---- elementwise ----
+
+    /// x + y
+    pub fn add(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Add, vec![x, y])
+    }
+    /// x - y
+    pub fn sub(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Sub, vec![x, y])
+    }
+    /// x * y
+    pub fn mul(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Mul, vec![x, y])
+    }
+    /// x / y
+    pub fn div(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Div, vec![x, y])
+    }
+    /// max(x, y)
+    pub fn max(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Max, vec![x, y])
+    }
+    /// min(x, y)
+    pub fn min(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Min, vec![x, y])
+    }
+    /// x ** y
+    pub fn pow(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Pow, vec![x, y])
+    }
+    /// -x
+    pub fn neg(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Neg, vec![x])
+    }
+    /// e^x
+    pub fn exp(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Exp, vec![x])
+    }
+    /// ln x
+    pub fn log(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Log, vec![x])
+    }
+    /// tanh x
+    pub fn tanh(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Tanh, vec![x])
+    }
+    /// 1/sqrt(x)
+    pub fn rsqrt(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Rsqrt, vec![x])
+    }
+    /// sqrt x
+    pub fn sqrt(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Sqrt, vec![x])
+    }
+    /// |x|
+    pub fn abs(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Abs, vec![x])
+    }
+    /// sigmoid(x)
+    pub fn logistic(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Logistic, vec![x])
+    }
+    /// sin x
+    pub fn sin(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Sin, vec![x])
+    }
+    /// cos x
+    pub fn cos(&mut self, x: NodeId) -> NodeId {
+        self.push_infer(Op::Cos, vec![x])
+    }
+    /// cast to `to`
+    pub fn convert(&mut self, x: NodeId, to: DType) -> NodeId {
+        self.push_infer(Op::Convert { to }, vec![x])
+    }
+    /// select(pred, t, f)
+    pub fn select(&mut self, pred: NodeId, t: NodeId, f: NodeId) -> NodeId {
+        self.push_infer(Op::Select, vec![pred, t, f])
+    }
+    /// compare(x, y)
+    pub fn compare(&mut self, kind: CmpKind, x: NodeId, y: NodeId) -> NodeId {
+        self.push_infer(Op::Compare(kind), vec![x, y])
+    }
+
+    // ---- algebra ----
+
+    /// Plain 2-D (or batched last-two-dims) matmul: contracts the last dim
+    /// of `x` with the second-to-last of `y`, batching leading dims of both.
+    pub fn matmul(&mut self, x: NodeId, y: NodeId) -> NodeId {
+        let xr = self.g.node(x).shape.rank();
+        let yr = self.g.node(y).shape.rank();
+        assert!(xr >= 2 && yr >= 2, "matmul needs rank >= 2");
+        let batch = xr.min(yr) - 2;
+        let op = Op::Dot {
+            lhs_contract: vec![xr - 1],
+            rhs_contract: vec![yr - 2],
+            lhs_batch: (0..batch).collect(),
+            rhs_batch: (0..batch).collect(),
+        };
+        self.push_infer(op, vec![x, y])
+    }
+
+    /// Fully general dot.
+    pub fn dot_general(
+        &mut self,
+        x: NodeId,
+        y: NodeId,
+        lhs_contract: Vec<usize>,
+        rhs_contract: Vec<usize>,
+        lhs_batch: Vec<usize>,
+        rhs_batch: Vec<usize>,
+    ) -> NodeId {
+        self.push_infer(Op::Dot { lhs_contract, rhs_contract, lhs_batch, rhs_batch }, vec![x, y])
+    }
+
+    // ---- data movement ----
+
+    /// reshape to `dims`
+    pub fn reshape(&mut self, x: NodeId, dims: Vec<i64>) -> NodeId {
+        let in_shape = self.g.node(x).shape.clone();
+        assert_eq!(
+            in_shape.elements(),
+            dims.iter().product::<i64>(),
+            "reshape {} -> {:?} changes element count",
+            in_shape,
+            dims
+        );
+        let meta = self.meta("reshape");
+        self.g
+            .push(Op::Reshape { dims: dims.clone() }, vec![x], in_shape.with_dims(dims), meta)
+    }
+
+    /// transpose by `perm`
+    pub fn transpose(&mut self, x: NodeId, perm: Vec<usize>) -> NodeId {
+        self.push_infer(Op::Transpose { perm }, vec![x])
+    }
+
+    /// slice `[starts, limits)` with stride 1
+    pub fn slice(&mut self, x: NodeId, starts: Vec<i64>, limits: Vec<i64>) -> NodeId {
+        let strides = vec![1i64; starts.len()];
+        self.push_infer(Op::Slice { starts, limits, strides }, vec![x])
+    }
+
+    /// Slice only `dim` to `[start, limit)`, other dims kept whole.
+    pub fn slice_dim(&mut self, x: NodeId, dim: usize, start: i64, limit: i64) -> NodeId {
+        let shape = self.g.node(x).shape.clone();
+        let mut starts = vec![0i64; shape.rank()];
+        let mut limits = shape.dims.clone();
+        starts[dim] = start;
+        limits[dim] = limit;
+        self.slice(x, starts, limits)
+    }
+
+    /// concat along `dim`
+    pub fn concat(&mut self, xs: Vec<NodeId>, dim: usize) -> NodeId {
+        self.push_infer(Op::Concat { dim }, xs)
+    }
+
+    /// broadcast_in_dim to `out_dims`, mapping input dim i to `mapped[i]`
+    pub fn broadcast(&mut self, x: NodeId, out_dims: Vec<i64>, mapped: Vec<usize>) -> NodeId {
+        let in_shape = self.g.node(x).shape.clone();
+        assert_eq!(mapped.len(), in_shape.rank());
+        let meta = self.meta("broadcast");
+        self.g.push(
+            Op::Broadcast { mapped, dims: out_dims.clone() },
+            vec![x],
+            in_shape.with_dims(out_dims),
+            meta,
+        )
+    }
+
+    /// Broadcast a scalar to `dims`.
+    pub fn broadcast_scalar(&mut self, x: NodeId, dims: Vec<i64>) -> NodeId {
+        self.broadcast(x, dims, vec![])
+    }
+
+    /// reduce over `dims`
+    pub fn reduce(&mut self, x: NodeId, kind: ReduceKind, dims: Vec<usize>) -> NodeId {
+        self.push_infer(Op::Reduce { kind, dims }, vec![x])
+    }
+
+    // ---- collectives ----
+
+    /// all-reduce across `groups`
+    pub fn all_reduce(&mut self, x: NodeId, kind: ReduceKind, groups: ReplicaGroups) -> NodeId {
+        self.push_infer(Op::AllReduce { kind, groups }, vec![x])
+    }
+
+    /// all-gather along `dim`
+    pub fn all_gather(&mut self, x: NodeId, dim: usize, groups: ReplicaGroups) -> NodeId {
+        self.push_infer(Op::AllGather { dim, groups }, vec![x])
+    }
+
+    /// reduce-scatter along `dim`
+    pub fn reduce_scatter(
+        &mut self,
+        x: NodeId,
+        kind: ReduceKind,
+        dim: usize,
+        groups: ReplicaGroups,
+    ) -> NodeId {
+        self.push_infer(Op::ReduceScatter { kind, dim, groups }, vec![x])
+    }
+
+    /// all-to-all
+    pub fn all_to_all(
+        &mut self,
+        x: NodeId,
+        split_dim: usize,
+        concat_dim: usize,
+        groups: ReplicaGroups,
+    ) -> NodeId {
+        self.push_infer(Op::AllToAll { split_dim, concat_dim, groups }, vec![x])
+    }
+
+    // ---- structure ----
+
+    /// Mark `x` as a graph output.
+    pub fn output(&mut self, x: NodeId) {
+        self.g.outputs.push(x);
+    }
+
+    /// Shape of an already-built node.
+    pub fn shape_of(&self, x: NodeId) -> &Shape {
+        &self.g.node(x).shape
+    }
+
+    /// Finish and return the graph.
+    pub fn finish(self) -> Graph {
+        self.g
+    }
+
+    /// Peek at the graph under construction.
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32s(dims: &[i64]) -> Shape {
+        Shape::new(DType::F32, dims.to_vec())
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", f32s(&[4, 8]));
+        let w = b.parameter("w", f32s(&[8, 16]));
+        let y = b.matmul(x, w);
+        assert_eq!(b.shape_of(y).dims, vec![4, 16]);
+    }
+
+    #[test]
+    fn batched_matmul_shapes() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", f32s(&[2, 4, 8]));
+        let w = b.parameter("w", f32s(&[2, 8, 16]));
+        let y = b.matmul(x, w);
+        assert_eq!(b.shape_of(y).dims, vec![2, 4, 16]);
+    }
+
+    #[test]
+    fn transpose_reshape_slice_shapes() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", f32s(&[2, 3, 4]));
+        let t = b.transpose(x, vec![2, 0, 1]);
+        assert_eq!(b.shape_of(t).dims, vec![4, 2, 3]);
+        let r = b.reshape(t, vec![8, 3]);
+        assert_eq!(b.shape_of(r).dims, vec![8, 3]);
+        let s = b.slice_dim(r, 0, 2, 6);
+        assert_eq!(b.shape_of(s).dims, vec![4, 3]);
+    }
+
+    #[test]
+    fn collective_shapes() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.parameter("x", f32s(&[8, 16]));
+        let ar = b.all_reduce(x, ReduceKind::Add, ReplicaGroups::full(4));
+        assert_eq!(b.shape_of(ar).dims, vec![8, 16]);
+        let ag = b.all_gather(x, 0, ReplicaGroups::full(4));
+        assert_eq!(b.shape_of(ag).dims, vec![32, 16]);
+        let rs = b.reduce_scatter(x, ReduceKind::Add, 1, ReplicaGroups::full(4));
+        assert_eq!(b.shape_of(rs).dims, vec![8, 4]);
+        let a2a = b.all_to_all(x, 0, 1, ReplicaGroups::full(4));
+        assert_eq!(b.shape_of(a2a).dims, vec![2, 64]);
+    }
+
+    #[test]
+    fn reduce_and_broadcast_shapes() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", f32s(&[4, 8, 16]));
+        let r = b.reduce(x, ReduceKind::Max, vec![2]);
+        assert_eq!(b.shape_of(r).dims, vec![4, 8]);
+        let bc = b.broadcast(r, vec![4, 8, 16], vec![0, 1]);
+        assert_eq!(b.shape_of(bc).dims, vec![4, 8, 16]);
+        let s = b.constant(2.0, DType::F32);
+        let bs = b.broadcast_scalar(s, vec![4, 4]);
+        assert_eq!(b.shape_of(bs).dims, vec![4, 4]);
+    }
+
+    #[test]
+    fn source_context_recorded() {
+        let mut b = GraphBuilder::new("t", 1);
+        b.at("attention.py", 42).in_func("attn_fwd").layer(Some(3));
+        let x = b.parameter("x", f32s(&[2]));
+        let e = b.exp(x);
+        let g = b.finish();
+        assert_eq!(g.source_site(e), "attention.py:42");
+        assert_eq!(g.node(e).meta.layer, Some(3));
+        assert_eq!(g.interner.resolve(g.node(e).meta.func), "attn_fwd");
+        assert_eq!(g.source_site(x), "attention.py:42");
+    }
+}

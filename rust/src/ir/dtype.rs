@@ -1,0 +1,125 @@
+//! Element types. The subset covers what transformer inference graphs use.
+
+use std::fmt;
+
+/// Tensor element type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    /// IEEE binary32.
+    F32,
+    /// IEEE binary16.
+    F16,
+    /// bfloat16 (truncated binary32) — the default transformer compute type.
+    BF16,
+    /// IEEE binary64 (rare; appears in reference paths).
+    F64,
+    /// Signed 32-bit integer (indices, device ids).
+    S32,
+    /// Unsigned 32-bit integer.
+    U32,
+    /// Signed 8-bit integer (quantized paths).
+    S8,
+    /// Boolean / predicate.
+    Pred,
+}
+
+impl DType {
+    /// HLO-text spelling (`f32`, `bf16`, ...).
+    pub fn hlo_name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F64 => "f64",
+            DType::S32 => "s32",
+            DType::U32 => "u32",
+            DType::S8 => "s8",
+            DType::Pred => "pred",
+        }
+    }
+
+    /// Parse the HLO-text spelling.
+    pub fn from_hlo_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "f16" => DType::F16,
+            "bf16" => DType::BF16,
+            "f64" => DType::F64,
+            "s32" | "i32" => DType::S32,
+            "u32" => DType::U32,
+            "s8" | "i8" => DType::S8,
+            "pred" | "i1" => DType::Pred,
+            _ => return None,
+        })
+    }
+
+    /// True for floating-point types.
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F16 | DType::BF16 | DType::F64)
+    }
+
+    /// Bytes per element.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F64 => 8,
+            DType::F32 | DType::S32 | DType::U32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::S8 | DType::Pred => 1,
+        }
+    }
+
+    /// Bit width of the significand, used by the precision-consistency
+    /// analysis (paper bug category 3): a conversion that *loses* mantissa
+    /// bits on only one side of the graph pair breaks equivalence.
+    pub fn mantissa_bits(self) -> u32 {
+        match self {
+            DType::F64 => 52,
+            DType::F32 => 23,
+            DType::F16 => 10,
+            DType::BF16 => 7,
+            DType::S32 | DType::U32 => 31,
+            DType::S8 => 7,
+            DType::Pred => 1,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.hlo_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hlo_name_roundtrip() {
+        for dt in [
+            DType::F32,
+            DType::F16,
+            DType::BF16,
+            DType::F64,
+            DType::S32,
+            DType::U32,
+            DType::S8,
+            DType::Pred,
+        ] {
+            assert_eq!(DType::from_hlo_name(dt.hlo_name()), Some(dt));
+        }
+        assert_eq!(DType::from_hlo_name("f8e4m3"), None);
+    }
+
+    #[test]
+    fn precision_ordering_via_mantissa() {
+        assert!(DType::F32.mantissa_bits() > DType::BF16.mantissa_bits());
+        assert!(DType::F16.mantissa_bits() > DType::BF16.mantissa_bits());
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::F32.size_bytes(), 4);
+    }
+}

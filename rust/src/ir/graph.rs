@@ -1,0 +1,365 @@
+//! Graph arena: nodes in def-before-use order plus source metadata.
+
+use super::{Op, Shape};
+use crate::util::{Interner, Sym};
+use anyhow::{bail, ensure, Result};
+use rustc_hash::FxHashMap;
+
+/// Index of a node within its [`Graph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    /// Usize view for indexing.
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Source metadata attached to each node (§5.3 of the paper): Scalify's
+/// compiler instrumentation records the tensor-program site each IR node
+/// was generated from, and bug localization reports it back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Meta {
+    /// Source file (interned), e.g. `attention.py`.
+    pub file: Sym,
+    /// Source line.
+    pub line: u32,
+    /// Expression text (interned), e.g. `hlo.exp(...)`.
+    pub expr: Sym,
+    /// Enclosing framework function (interned), e.g. `flash_decoding`.
+    pub func: Sym,
+    /// Neural-network layer index this node belongs to (layer-boundary
+    /// partitioning cuts along this).
+    pub layer: Option<u32>,
+}
+
+impl Meta {
+    /// Metadata with everything empty (parser fills what it can).
+    pub fn none() -> Meta {
+        Meta { file: Sym::EMPTY, line: 0, expr: Sym::EMPTY, func: Sym::EMPTY, layer: None }
+    }
+}
+
+/// One IR node: operator, operand edges, output shape, metadata.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Arena id.
+    pub id: NodeId,
+    /// Operator kind + attributes.
+    pub op: Op,
+    /// Operand node ids (all `<` this node's id).
+    pub inputs: Vec<NodeId>,
+    /// Per-core output shape (SPMD graphs store the local shard shape).
+    pub shape: Shape,
+    /// Source site.
+    pub meta: Meta,
+}
+
+/// A computational graph.
+///
+/// Baseline graphs have `num_cores == 1`; distributed graphs are SPMD over
+/// `num_cores` cores — every node describes the *per-core* computation and
+/// collectives communicate across cores.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Human-readable name (module name in HLO text).
+    pub name: String,
+    /// Node arena in def-before-use order.
+    pub nodes: Vec<Node>,
+    /// Output node ids (roots).
+    pub outputs: Vec<NodeId>,
+    /// SPMD width (1 = single device).
+    pub num_cores: u32,
+    /// Interner for `Meta` strings.
+    pub interner: Interner,
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new(name: impl Into<String>, num_cores: u32) -> Graph {
+        Graph {
+            name: name.into(),
+            nodes: Vec::new(),
+            outputs: Vec::new(),
+            num_cores,
+            interner: Interner::new(),
+        }
+    }
+
+    /// Append a node (callers must pass operands that already exist).
+    pub fn push(&mut self, op: Op, inputs: Vec<NodeId>, shape: Shape, meta: Meta) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        for &inp in &inputs {
+            debug_assert!(inp.0 < id.0, "def-before-use violated");
+        }
+        self.nodes.push(Node { id, op, inputs, shape, meta });
+        id
+    }
+
+    /// Node by id.
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.idx()]
+    }
+
+    /// Mutable node by id (used by the bug injector).
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.idx()]
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Parameters in index order.
+    pub fn parameters(&self) -> Vec<NodeId> {
+        let mut params: Vec<(usize, NodeId)> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Parameter { index, .. } => Some((*index, n.id)),
+                _ => None,
+            })
+            .collect();
+        params.sort_unstable();
+        params.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// use-lists: for each node, the ids of nodes consuming it.
+    pub fn uses(&self) -> Vec<Vec<NodeId>> {
+        let mut uses = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &inp in &n.inputs {
+                uses[inp.idx()].push(n.id);
+            }
+        }
+        uses
+    }
+
+    /// Source site of a node as `file:line` (empty if unknown).
+    pub fn source_site(&self, id: NodeId) -> String {
+        let m = &self.node(id).meta;
+        let file = self.interner.resolve(m.file);
+        if file.is_empty() {
+            String::new()
+        } else {
+            format!("{}:{}", file, m.line)
+        }
+    }
+
+    /// Count of nodes per layer (None-layer nodes under `u32::MAX`).
+    pub fn layer_histogram(&self) -> FxHashMap<u32, usize> {
+        let mut h = FxHashMap::default();
+        for n in &self.nodes {
+            *h.entry(n.meta.layer.unwrap_or(u32::MAX)).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Structural validation: def-before-use, arity, in-range attributes,
+    /// collective groups consistent with `num_cores`, outputs exist.
+    pub fn validate(&self) -> Result<()> {
+        for n in &self.nodes {
+            for &inp in &n.inputs {
+                ensure!(
+                    inp.0 < n.id.0,
+                    "node {} ({}) uses forward reference {}",
+                    n.id.0,
+                    n.op.name(),
+                    inp.0
+                );
+            }
+            let arity_ok = match &n.op {
+                Op::Parameter { .. } | Op::Constant(_) | Op::Iota { .. } => n.inputs.is_empty(),
+                Op::Add
+                | Op::Sub
+                | Op::Mul
+                | Op::Div
+                | Op::Max
+                | Op::Min
+                | Op::Pow
+                | Op::Dot { .. }
+                | Op::Compare(_) => n.inputs.len() == 2,
+                Op::Select => n.inputs.len() == 3,
+                Op::Neg
+                | Op::Exp
+                | Op::Log
+                | Op::Tanh
+                | Op::Rsqrt
+                | Op::Sqrt
+                | Op::Abs
+                | Op::Logistic
+                | Op::Sin
+                | Op::Cos
+                | Op::Convert { .. }
+                | Op::Reshape { .. }
+                | Op::Transpose { .. }
+                | Op::Slice { .. }
+                | Op::Broadcast { .. }
+                | Op::Reduce { .. }
+                | Op::AllReduce { .. }
+                | Op::AllGather { .. }
+                | Op::ReduceScatter { .. }
+                | Op::AllToAll { .. }
+                | Op::GetTupleElement { .. } => n.inputs.len() == 1,
+                Op::Concat { .. } | Op::Tuple => !n.inputs.is_empty(),
+                Op::Custom { .. } => true,
+            };
+            ensure!(arity_ok, "node {} ({}) has arity {}", n.id.0, n.op.name(), n.inputs.len());
+
+            match &n.op {
+                Op::Transpose { perm } => {
+                    let rank = self.node(n.inputs[0]).shape.rank();
+                    ensure!(perm.len() == rank, "transpose perm rank mismatch at {}", n.id.0);
+                    let mut seen = vec![false; rank];
+                    for &p in perm {
+                        ensure!(p < rank && !seen[p], "bad transpose perm at {}", n.id.0);
+                        seen[p] = true;
+                    }
+                }
+                Op::Reshape { dims } => {
+                    let in_el = self.node(n.inputs[0]).shape.elements();
+                    ensure!(
+                        dims == &n.shape.dims,
+                        "reshape dims attr disagrees with node shape at {}",
+                        n.id.0
+                    );
+                    ensure!(
+                        in_el == n.shape.elements(),
+                        "reshape changes element count at {} ({} -> {})",
+                        n.id.0,
+                        in_el,
+                        n.shape.elements()
+                    );
+                }
+                Op::Concat { dim } => {
+                    ensure!(*dim < n.shape.rank(), "concat dim out of range at {}", n.id.0);
+                }
+                Op::AllReduce { groups, .. }
+                | Op::AllGather { groups, .. }
+                | Op::ReduceScatter { groups, .. }
+                | Op::AllToAll { groups, .. } => {
+                    for g in &groups.0 {
+                        for &core in g {
+                            ensure!(
+                                core < self.num_cores,
+                                "collective at {} names core {} but graph has {} cores",
+                                n.id.0,
+                                core,
+                                self.num_cores
+                            );
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &out in &self.outputs {
+            if out.idx() >= self.nodes.len() {
+                bail!("output {} out of range", out.0);
+            }
+        }
+        ensure!(!self.outputs.is_empty(), "graph has no outputs");
+        Ok(())
+    }
+
+    /// Nodes reachable (backwards) from the outputs.
+    pub fn live_set(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if live[id.idx()] {
+                continue;
+            }
+            live[id.idx()] = true;
+            stack.extend(self.node(id).inputs.iter().copied());
+        }
+        live
+    }
+
+    /// Short multi-line summary for debugging.
+    pub fn summary(&self) -> String {
+        format!(
+            "graph '{}': {} nodes, {} outputs, {} cores, {} params",
+            self.name,
+            self.nodes.len(),
+            self.outputs.len(),
+            self.num_cores,
+            self.parameters().len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder};
+
+    #[test]
+    fn build_and_validate_tiny_graph() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", Shape::new(DType::F32, vec![2, 3]));
+        let y = b.parameter("y", Shape::new(DType::F32, vec![2, 3]));
+        let z = b.add(x, y);
+        b.output(z);
+        let g = b.finish();
+        g.validate().unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.parameters().len(), 2);
+        assert_eq!(g.uses()[x.idx()], vec![z]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_reshape() {
+        let mut g = Graph::new("bad", 1);
+        let x = g.push(
+            Op::Parameter { index: 0, name: "x".into() },
+            vec![],
+            Shape::new(DType::F32, vec![4]),
+            Meta::none(),
+        );
+        let r = g.push(Op::Reshape { dims: vec![5] }, vec![x], Shape::new(DType::F32, vec![5]), Meta::none());
+        g.outputs.push(r);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_core_out_of_range() {
+        use crate::ir::{ReduceKind, ReplicaGroups};
+        let mut g = Graph::new("bad", 2);
+        let x = g.push(
+            Op::Parameter { index: 0, name: "x".into() },
+            vec![],
+            Shape::new(DType::F32, vec![4]),
+            Meta::none(),
+        );
+        let ar = g.push(
+            Op::AllReduce { kind: ReduceKind::Add, groups: ReplicaGroups::full(4) },
+            vec![x],
+            Shape::new(DType::F32, vec![4]),
+            Meta::none(),
+        );
+        g.outputs.push(ar);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn live_set_skips_dead_nodes() {
+        let mut b = GraphBuilder::new("t", 1);
+        let x = b.parameter("x", Shape::new(DType::F32, vec![2]));
+        let _dead = b.exp(x);
+        let out = b.neg(x);
+        b.output(out);
+        let g = b.finish();
+        let live = g.live_set();
+        assert!(live[x.idx()]);
+        assert!(live[out.idx()]);
+        assert_eq!(live.iter().filter(|&&l| l).count(), 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! Tensor IR: the computational-graph representation Scalify verifies.
+//!
+//! The IR mirrors the HLO subset that production frameworks (XLA backends,
+//! Transformers-NeuronX-style compilers, JAX lowering) emit for transformer
+//! inference graphs: dense algebra (`dot`, elementwise), data movement
+//! (`reshape`, `transpose`, `slice`, `concatenate`, `broadcast`),
+//! reductions, and the SPMD collectives (`all-reduce`, `all-gather`,
+//! `reduce-scatter`, `all-to-all`).
+//!
+//! A [`Graph`] is an arena of [`Node`]s in def-before-use order. Distributed
+//! graphs are SPMD: one graph executed on `c` cores, with collectives
+//! operating across a replica mesh. Cross-graph facts (which parameter of
+//! the distributed graph is a shard of which baseline tensor) live in
+//! [`Annotation`]s, mirroring the sharding annotations Scalify's compiler
+//! instrumentation records during IR generation (§5.2.1).
+
+mod dtype;
+mod shape;
+mod op;
+mod graph;
+mod builder;
+mod annotate;
+
+pub use annotate::{Annotation, InputRelation};
+pub use builder::GraphBuilder;
+pub use dtype::DType;
+pub use graph::{Graph, Meta, Node, NodeId};
+pub use op::{CmpKind, ConstVal, Op, ReduceKind, ReplicaGroups};
+pub use shape::Shape;

@@ -1,0 +1,458 @@
+//! Operators: the HLO subset emitted by production transformer pipelines.
+
+use std::fmt;
+
+/// Reduction combiner used by `reduce`, `all-reduce`, `reduce-scatter`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    /// Sum.
+    Add,
+    /// Maximum.
+    Max,
+    /// Minimum.
+    Min,
+    /// Product.
+    Mul,
+}
+
+impl ReduceKind {
+    /// HLO computation name (`add`, `maximum`, ...).
+    pub fn hlo_name(self) -> &'static str {
+        match self {
+            ReduceKind::Add => "add",
+            ReduceKind::Max => "maximum",
+            ReduceKind::Min => "minimum",
+            ReduceKind::Mul => "multiply",
+        }
+    }
+}
+
+/// Comparison direction for `compare`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CmpKind {
+    /// Equal.
+    Eq,
+    /// Not equal.
+    Ne,
+    /// Less than.
+    Lt,
+    /// Less-or-equal.
+    Le,
+    /// Greater than.
+    Gt,
+    /// Greater-or-equal.
+    Ge,
+}
+
+/// Replica groups of a collective: which cores participate together.
+///
+/// `groups[g]` lists the core ids of group `g`. A collective reduces /
+/// gathers only *within* each group — wrong groups are the paper's bug
+/// category 2 ("reducing on only part of the cores").
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ReplicaGroups(pub Vec<Vec<u32>>);
+
+impl ReplicaGroups {
+    /// All `n` cores in one group — the common full-mesh collective.
+    pub fn full(n: u32) -> Self {
+        ReplicaGroups(vec![(0..n).collect()])
+    }
+
+    /// `n` cores split into `k` contiguous groups.
+    pub fn split(n: u32, k: u32) -> Self {
+        assert!(k > 0 && n % k == 0);
+        let per = n / k;
+        ReplicaGroups(
+            (0..k).map(|g| (g * per..(g + 1) * per).collect()).collect(),
+        )
+    }
+
+    /// Total number of participating cores.
+    pub fn core_count(&self) -> usize {
+        self.0.iter().map(|g| g.len()).sum()
+    }
+
+    /// Group containing `core`, if any.
+    pub fn group_of(&self, core: u32) -> Option<&[u32]> {
+        self.0.iter().find(|g| g.contains(&core)).map(|g| g.as_slice())
+    }
+
+    /// True when every group has the same size.
+    pub fn uniform(&self) -> bool {
+        self.0.windows(2).all(|w| w[0].len() == w[1].len())
+    }
+}
+
+/// Small constant payload. Large tensors never appear as literals in the
+/// graphs we verify (weights are parameters), so an f64 vector suffices.
+#[derive(Clone, Debug)]
+pub enum ConstVal {
+    /// Scalar constant.
+    Scalar(f64),
+    /// Dense little tensor (row-major, matches the node's shape).
+    Dense(Vec<f64>),
+}
+
+impl ConstVal {
+    /// All values in the payload.
+    pub fn values(&self) -> &[f64] {
+        match self {
+            ConstVal::Scalar(v) => std::slice::from_ref(v),
+            ConstVal::Dense(v) => v,
+        }
+    }
+}
+
+// Constants participate in hashing/equality for the e-graph's hash-consing;
+// both equality and hashing use bit patterns, so -0.0 != 0.0 and
+// NaN == NaN (by bits) — the right notion for structural equivalence of
+// graphs, and the two MUST agree or hash-consing silently fails (a NaN
+// constant that never dedups breaks cross-graph structural merging).
+impl PartialEq for ConstVal {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (ConstVal::Scalar(a), ConstVal::Scalar(b)) => a.to_bits() == b.to_bits(),
+            (ConstVal::Dense(a), ConstVal::Dense(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            _ => false,
+        }
+    }
+}
+impl Eq for ConstVal {}
+impl std::hash::Hash for ConstVal {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        match self {
+            ConstVal::Scalar(v) => {
+                0u8.hash(state);
+                v.to_bits().hash(state);
+            }
+            ConstVal::Dense(vs) => {
+                1u8.hash(state);
+                vs.len().hash(state);
+                for v in vs {
+                    v.to_bits().hash(state);
+                }
+            }
+        }
+    }
+}
+
+/// Operator kind of an IR node. Operand tensors are edges of the graph;
+/// only non-tensor attributes live inside the enum.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Graph input (weights, activations, device-id tables).
+    Parameter {
+        /// Position in the entry computation's parameter list.
+        index: usize,
+        /// Human-readable name (e.g. `q_proj.weight`).
+        name: String,
+    },
+    /// Compile-time constant.
+    Constant(ConstVal),
+    /// `iota` along `dim` (device-id/position tables).
+    Iota {
+        /// Dimension the counter runs along.
+        dim: usize,
+        /// Output dims (part of the op identity: the e-graph hash-conses
+        /// by op + children, so shape-determining attributes must be here).
+        dims: Vec<i64>,
+    },
+
+    // ---- elementwise binary ----
+    /// Elementwise addition.
+    Add,
+    /// Elementwise subtraction.
+    Sub,
+    /// Elementwise multiplication.
+    Mul,
+    /// Elementwise division.
+    Div,
+    /// Elementwise maximum.
+    Max,
+    /// Elementwise minimum.
+    Min,
+    /// Elementwise power.
+    Pow,
+
+    // ---- elementwise unary ----
+    /// Negation.
+    Neg,
+    /// Exponential.
+    Exp,
+    /// Natural log.
+    Log,
+    /// Hyperbolic tangent.
+    Tanh,
+    /// Reciprocal square root (RMSNorm).
+    Rsqrt,
+    /// Square root.
+    Sqrt,
+    /// Absolute value.
+    Abs,
+    /// Logistic sigmoid (SiLU = x * sigmoid(x)).
+    Logistic,
+    /// Sine (rotary embeddings).
+    Sin,
+    /// Cosine (rotary embeddings).
+    Cos,
+    /// dtype cast.
+    Convert {
+        /// Target element type.
+        to: super::DType,
+    },
+
+    // ---- tensor algebra ----
+    /// General dot: batch dims then contraction dims on each side.
+    Dot {
+        /// Contracted dimensions of the LHS.
+        lhs_contract: Vec<usize>,
+        /// Contracted dimensions of the RHS.
+        rhs_contract: Vec<usize>,
+        /// Batch dimensions of the LHS.
+        lhs_batch: Vec<usize>,
+        /// Batch dimensions of the RHS.
+        rhs_batch: Vec<usize>,
+    },
+
+    // ---- data movement ----
+    /// Reshape to `dims` (element order preserved). Target dims are part
+    /// of the op identity — see `Iota` note.
+    Reshape {
+        /// Target dims.
+        dims: Vec<i64>,
+    },
+    /// Dimension permutation: output dim `i` = input dim `perm[i]`.
+    Transpose {
+        /// Permutation, HLO convention.
+        perm: Vec<usize>,
+    },
+    /// Static slice.
+    Slice {
+        /// Inclusive start per dimension.
+        starts: Vec<i64>,
+        /// Exclusive limit per dimension.
+        limits: Vec<i64>,
+        /// Stride per dimension (1 everywhere in our graphs).
+        strides: Vec<i64>,
+    },
+    /// Concatenate along `dim`.
+    Concat {
+        /// Concatenation dimension.
+        dim: usize,
+    },
+    /// `broadcast_in_dim`: `mapped[i]` is the output dim input dim `i` maps to.
+    Broadcast {
+        /// Output dimension for each input dimension.
+        mapped: Vec<usize>,
+        /// Output dims (part of the op identity — see `Iota` note).
+        dims: Vec<i64>,
+    },
+    /// Reduce over `dims` with `kind`.
+    Reduce {
+        /// Combiner.
+        kind: ReduceKind,
+        /// Reduced (removed) dimensions.
+        dims: Vec<usize>,
+    },
+    /// Elementwise select(pred, on_true, on_false).
+    Select,
+    /// Elementwise comparison producing `pred`.
+    Compare(CmpKind),
+
+    // ---- collectives (SPMD across the core mesh) ----
+    /// Cross-core reduction; every core gets the reduced value.
+    AllReduce {
+        /// Combiner.
+        kind: ReduceKind,
+        /// Participating core groups.
+        groups: ReplicaGroups,
+    },
+    /// Gather shards from cores along `dim`.
+    AllGather {
+        /// Concatenation dimension.
+        dim: usize,
+        /// Participating core groups.
+        groups: ReplicaGroups,
+    },
+    /// Reduce across cores then scatter shards along `dim`.
+    ReduceScatter {
+        /// Combiner.
+        kind: ReduceKind,
+        /// Scatter dimension.
+        dim: usize,
+        /// Participating core groups.
+        groups: ReplicaGroups,
+    },
+    /// Split along `split_dim`, exchange, concat along `concat_dim`.
+    AllToAll {
+        /// Dimension split across cores.
+        split_dim: usize,
+        /// Dimension the received chunks are concatenated along.
+        concat_dim: usize,
+        /// Participating core groups.
+        groups: ReplicaGroups,
+    },
+
+    // ---- structure ----
+    /// Tuple of operands (entry-computation outputs).
+    Tuple,
+    /// Project tuple element `index`.
+    GetTupleElement {
+        /// Element index.
+        index: usize,
+    },
+    /// Opaque op the parser kept but analyses treat as uninterpreted.
+    Custom {
+        /// Op name as it appeared in HLO text.
+        name: String,
+    },
+}
+
+impl Op {
+    /// Mnemonic used in HLO text and debug printing.
+    pub fn name(&self) -> &str {
+        match self {
+            Op::Parameter { .. } => "parameter",
+            Op::Constant(_) => "constant",
+            Op::Iota { .. } => "iota",
+            Op::Add => "add",
+            Op::Sub => "subtract",
+            Op::Mul => "multiply",
+            Op::Div => "divide",
+            Op::Max => "maximum",
+            Op::Min => "minimum",
+            Op::Pow => "power",
+            Op::Neg => "negate",
+            Op::Exp => "exponential",
+            Op::Log => "log",
+            Op::Tanh => "tanh",
+            Op::Rsqrt => "rsqrt",
+            Op::Sqrt => "sqrt",
+            Op::Abs => "abs",
+            Op::Logistic => "logistic",
+            Op::Sin => "sine",
+            Op::Cos => "cosine",
+            Op::Convert { .. } => "convert",
+            Op::Dot { .. } => "dot",
+            Op::Reshape { .. } => "reshape",
+            Op::Transpose { .. } => "transpose",
+            Op::Slice { .. } => "slice",
+            Op::Concat { .. } => "concatenate",
+            Op::Broadcast { .. } => "broadcast",
+            Op::Reduce { .. } => "reduce",
+            Op::Select => "select",
+            Op::Compare(_) => "compare",
+            Op::AllReduce { .. } => "all-reduce",
+            Op::AllGather { .. } => "all-gather",
+            Op::ReduceScatter { .. } => "reduce-scatter",
+            Op::AllToAll { .. } => "all-to-all",
+            Op::Tuple => "tuple",
+            Op::GetTupleElement { .. } => "get-tuple-element",
+            Op::Custom { name } => name,
+        }
+    }
+
+    /// True for elementwise ops (unary or binary or select/compare) — the
+    /// class the relation analysis propagates shard/duplicate facts through
+    /// unchanged.
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            Op::Add
+                | Op::Sub
+                | Op::Mul
+                | Op::Div
+                | Op::Max
+                | Op::Min
+                | Op::Pow
+                | Op::Neg
+                | Op::Exp
+                | Op::Log
+                | Op::Tanh
+                | Op::Rsqrt
+                | Op::Sqrt
+                | Op::Abs
+                | Op::Logistic
+                | Op::Sin
+                | Op::Cos
+                | Op::Select
+                | Op::Compare(_)
+        )
+    }
+
+    /// True for the SPMD collectives.
+    pub fn is_collective(&self) -> bool {
+        matches!(
+            self,
+            Op::AllReduce { .. }
+                | Op::AllGather { .. }
+                | Op::ReduceScatter { .. }
+                | Op::AllToAll { .. }
+        )
+    }
+
+    /// True for pure data-movement (layout) ops.
+    pub fn is_layout(&self) -> bool {
+        matches!(self, Op::Reshape { .. } | Op::Transpose { .. })
+    }
+
+    /// Commutative binary elementwise ops (feeds e-graph rewrite rules).
+    pub fn is_commutative(&self) -> bool {
+        matches!(self, Op::Add | Op::Mul | Op::Max | Op::Min)
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_groups_full_and_split() {
+        let g = ReplicaGroups::full(4);
+        assert_eq!(g.0, vec![vec![0, 1, 2, 3]]);
+        assert_eq!(g.core_count(), 4);
+        let s = ReplicaGroups::split(8, 2);
+        assert_eq!(s.0.len(), 2);
+        assert_eq!(s.group_of(5), Some(&[4u32, 5, 6, 7][..]));
+        assert!(s.uniform());
+    }
+
+    #[test]
+    fn op_classification() {
+        assert!(Op::Add.is_elementwise());
+        assert!(Op::Add.is_commutative());
+        assert!(!Op::Sub.is_commutative());
+        assert!(Op::Reshape { dims: vec![4] }.is_layout());
+        assert!(Op::AllReduce { kind: ReduceKind::Add, groups: ReplicaGroups::full(2) }
+            .is_collective());
+        assert!(!Op::Dot {
+            lhs_contract: vec![1],
+            rhs_contract: vec![0],
+            lhs_batch: vec![],
+            rhs_batch: vec![]
+        }
+        .is_elementwise());
+    }
+
+    #[test]
+    fn constval_hash_eq_by_bits() {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let h = |c: &ConstVal| {
+            let mut s = DefaultHasher::new();
+            c.hash(&mut s);
+            s.finish()
+        };
+        assert_eq!(h(&ConstVal::Scalar(1.5)), h(&ConstVal::Scalar(1.5)));
+        assert_ne!(h(&ConstVal::Scalar(0.0)), h(&ConstVal::Scalar(-0.0)));
+    }
+}

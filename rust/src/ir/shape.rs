@@ -1,0 +1,133 @@
+//! Tensor shapes: dtype + dimension vector, HLO-text formatting.
+
+use super::DType;
+use std::fmt;
+
+/// A tensor shape: element type plus dimensions.
+///
+/// Scalars are rank-0 (`dims` empty). Dimensions are `i64` to match HLO;
+/// all shapes in this system are static (dynamic shapes are out of the
+/// paper's scope — NeuronX inference graphs are fully static).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    /// Element type.
+    pub dtype: DType,
+    /// Dimension sizes, outermost first.
+    pub dims: Vec<i64>,
+}
+
+impl Shape {
+    /// Construct a shape.
+    pub fn new(dtype: DType, dims: Vec<i64>) -> Self {
+        Shape { dtype, dims }
+    }
+
+    /// Rank-0 scalar of `dtype`.
+    pub fn scalar(dtype: DType) -> Self {
+        Shape { dtype, dims: vec![] }
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> i64 {
+        self.dims.iter().product()
+    }
+
+    /// Total byte size.
+    pub fn bytes(&self) -> usize {
+        self.elements() as usize * self.dtype.size_bytes()
+    }
+
+    /// Same dims, different dtype.
+    pub fn with_dtype(&self, dtype: DType) -> Shape {
+        Shape { dtype, dims: self.dims.clone() }
+    }
+
+    /// Same dtype, different dims.
+    pub fn with_dims(&self, dims: Vec<i64>) -> Shape {
+        Shape { dtype: self.dtype, dims }
+    }
+
+    /// HLO-text spelling, e.g. `f32[4,64,4096]` / `bf16[]`.
+    pub fn hlo_text(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!("{}[{}]", self.dtype.hlo_name(), dims.join(","))
+    }
+
+    /// Row-major strides (in elements) of this shape.
+    pub fn strides(&self) -> Vec<i64> {
+        let mut strides = vec![1i64; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.dims[i + 1];
+        }
+        strides
+    }
+
+    /// Convert a flat row-major index into per-dimension coordinates.
+    pub fn unflatten_index(&self, mut flat: i64) -> Vec<i64> {
+        let strides = self.strides();
+        let mut coords = vec![0i64; self.dims.len()];
+        for (i, s) in strides.iter().enumerate() {
+            coords[i] = flat / s;
+            flat %= s;
+        }
+        coords
+    }
+
+    /// Convert coordinates back to a flat row-major index.
+    pub fn flatten_index(&self, coords: &[i64]) -> i64 {
+        debug_assert_eq!(coords.len(), self.dims.len());
+        self.strides().iter().zip(coords).map(|(s, c)| s * c).sum()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hlo_text())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(dims: &[i64]) -> Shape {
+        Shape::new(DType::F32, dims.to_vec())
+    }
+
+    #[test]
+    fn display_matches_hlo() {
+        assert_eq!(s(&[4, 64, 4096]).to_string(), "f32[4,64,4096]");
+        assert_eq!(Shape::scalar(DType::BF16).to_string(), "bf16[]");
+    }
+
+    #[test]
+    fn elements_and_bytes() {
+        assert_eq!(s(&[4, 8]).elements(), 32);
+        assert_eq!(s(&[4, 8]).bytes(), 128);
+        assert_eq!(Shape::scalar(DType::F32).elements(), 1);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(s(&[2, 3, 4]).strides(), vec![12, 4, 1]);
+        assert_eq!(s(&[5]).strides(), vec![1]);
+        assert!(Shape::scalar(DType::F32).strides().is_empty());
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let sh = s(&[3, 4, 5]);
+        for flat in 0..sh.elements() {
+            let coords = sh.unflatten_index(flat);
+            assert_eq!(sh.flatten_index(&coords), flat);
+            for (c, d) in coords.iter().zip(&sh.dims) {
+                assert!(c < d);
+            }
+        }
+    }
+}

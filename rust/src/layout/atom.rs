@@ -1,0 +1,209 @@
+//! Primitive symbolic axes with hash-consed refinement.
+
+use rustc_hash::FxHashMap;
+
+/// Symbolic axis atom (the paper's `i, j, k, i₁, i₂ …`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AtomId(pub u32);
+
+/// Store of atoms: sizes plus (optional) refinements into sub-atoms.
+///
+/// Refinements are **hash-consed by geometry**: splitting atom `i` (size
+/// 12) into `[4, 3]` always yields the same two sub-atoms, whichever path
+/// requests the split. That is what makes structural comparison of two
+/// independently rewritten layout expressions sound: equal geometry ⇒
+/// equal atoms.
+#[derive(Debug, Default, Clone)]
+pub struct AtomStore {
+    sizes: Vec<i64>,
+    /// finest known refinement (direct children, in row-major order)
+    children: Vec<Option<Vec<AtomId>>>,
+    /// hash-cons of splits: (parent, prefix-product, size) -> child
+    split_memo: FxHashMap<(AtomId, i64, i64), AtomId>,
+}
+
+impl AtomStore {
+    /// Empty store.
+    pub fn new() -> AtomStore {
+        AtomStore::default()
+    }
+
+    /// Fresh primitive atom of `size`.
+    pub fn fresh(&mut self, size: i64) -> AtomId {
+        assert!(size >= 1, "atom size must be >= 1, got {size}");
+        let id = AtomId(self.sizes.len() as u32);
+        self.sizes.push(size);
+        self.children.push(None);
+        id
+    }
+
+    /// Size of an atom.
+    pub fn size(&self, a: AtomId) -> i64 {
+        self.sizes[a.0 as usize]
+    }
+
+    /// Current finest expansion of an atom (leaves of its split tree).
+    pub fn expand(&self, a: AtomId) -> Vec<AtomId> {
+        match &self.children[a.0 as usize] {
+            None => vec![a],
+            Some(kids) => kids.iter().flat_map(|&k| self.expand(k)).collect(),
+        }
+    }
+
+    /// Total size of a leaf sequence.
+    pub fn product(&self, atoms: &[AtomId]) -> i64 {
+        atoms.iter().map(|&a| self.size(a)).product()
+    }
+
+    fn get_or_make_child(&mut self, parent: AtomId, prefix: i64, size: i64) -> AtomId {
+        if let Some(&c) = self.split_memo.get(&(parent, prefix, size)) {
+            return c;
+        }
+        let c = self.fresh(size);
+        self.split_memo.insert((parent, prefix, size), c);
+        c
+    }
+
+    /// Split a **leaf** atom into row-major `factors` (product must equal
+    /// its size). Hash-consed: same geometry returns the same children.
+    /// Returns `None` if the atom is not a leaf or factors don't multiply
+    /// to its size.
+    pub fn split_leaf(&mut self, a: AtomId, factors: &[i64]) -> Option<Vec<AtomId>> {
+        if self.children[a.0 as usize].is_some() {
+            return None;
+        }
+        if factors.iter().product::<i64>() != self.size(a) {
+            return None;
+        }
+        if factors.len() == 1 {
+            return Some(vec![a]);
+        }
+        let mut kids = Vec::with_capacity(factors.len());
+        let mut prefix = 1i64;
+        for &f in factors {
+            kids.push(self.get_or_make_child(a, prefix, f));
+            prefix *= f;
+        }
+        self.children[a.0 as usize] = Some(kids.clone());
+        Some(kids)
+    }
+
+    /// Take `want` elements (by product) from the front of a leaf queue,
+    /// splitting the boundary leaf when needed. Returns the consumed
+    /// leaves or `None` when `want` does not align with any split (the
+    /// "not a grouping reshape" case → Algorithm 2's ⊥).
+    pub fn take_product(
+        &mut self,
+        queue: &mut std::collections::VecDeque<AtomId>,
+        want: i64,
+    ) -> Option<Vec<AtomId>> {
+        let mut got = 1i64;
+        let mut out = Vec::new();
+        while got < want {
+            let head = queue.pop_front()?;
+            // fully expand the head first so we always work on leaves
+            let leaves = self.expand(head);
+            if leaves.len() > 1 {
+                for l in leaves.into_iter().rev() {
+                    queue.push_front(l);
+                }
+                continue;
+            }
+            let sz = self.size(head);
+            if got * sz <= want {
+                if want % (got * sz) != 0 && got * sz != want {
+                    // misaligned: would need a non-divisor split later —
+                    // keep going only if it still divides the target
+                }
+                got *= sz;
+                out.push(head);
+            } else {
+                // need to split `head` into [want/got, rest]
+                let need = want / got;
+                if need <= 1 || sz % need != 0 {
+                    return None;
+                }
+                let kids = self.split_leaf(head, &[need, sz / need])?;
+                got *= need;
+                out.push(kids[0]);
+                queue.push_front(kids[1]);
+            }
+        }
+        if got == want {
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn split_is_hash_consed() {
+        let mut st = AtomStore::new();
+        let a = st.fresh(12);
+        let k1 = st.split_leaf(a, &[4, 3]).unwrap();
+        // once split, same split again isn't a leaf op — but the memo
+        // makes independent geometry requests agree:
+        let c = st.split_memo[&(a, 1, 4)];
+        assert_eq!(k1[0], c);
+        assert_eq!(st.size(k1[0]), 4);
+        assert_eq!(st.size(k1[1]), 3);
+        assert_eq!(st.product(&st.expand(a)), 12);
+    }
+
+    #[test]
+    fn expand_recursive() {
+        let mut st = AtomStore::new();
+        let a = st.fresh(12);
+        let kids = st.split_leaf(a, &[4, 3]).unwrap();
+        let _gk = st.split_leaf(kids[0], &[2, 2]).unwrap();
+        let leaves = st.expand(a);
+        assert_eq!(leaves.len(), 3);
+        assert_eq!(
+            leaves.iter().map(|&l| st.size(l)).collect::<Vec<_>>(),
+            vec![2, 2, 3]
+        );
+    }
+
+    #[test]
+    fn take_product_aligned() {
+        let mut st = AtomStore::new();
+        let a = st.fresh(4);
+        let b = st.fresh(6);
+        let mut q: VecDeque<AtomId> = [a, b].into_iter().collect();
+        let first = st.take_product(&mut q, 8).unwrap(); // 4 * (2 of 6)
+        assert_eq!(st.product(&first), 8);
+        let second = st.take_product(&mut q, 3).unwrap();
+        assert_eq!(st.product(&second), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn take_product_misaligned_fails() {
+        let mut st = AtomStore::new();
+        let a = st.fresh(4);
+        let b = st.fresh(5);
+        let mut q: VecDeque<AtomId> = [a, b].into_iter().collect();
+        // 10 needs to split the 4 into 2*2 then cross into 5 — 10/4 not integral,
+        // so after taking 4 we need 10/4 → not divisible: fails... but walk:
+        // got=4 then need 10/4 non-integral on the 5 → None
+        assert!(st.take_product(&mut q, 10).is_none());
+    }
+
+    #[test]
+    fn identical_geometry_two_paths_share_atoms() {
+        let mut st = AtomStore::new();
+        let a = st.fresh(64);
+        // path 1 splits [4, 16]; record, then expand
+        let k1 = st.split_leaf(a, &[4, 16]).unwrap();
+        // path 2 wants the same prefix split via take_product
+        let mut q: VecDeque<AtomId> = [a].into_iter().collect();
+        let taken = st.take_product(&mut q, 4).unwrap();
+        assert_eq!(taken, vec![k1[0]]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Algorithm 2: inferring the reshape–transpose–reshape bijection that
+//! maps a distributed tensor's layout onto the baseline tensor's layout.
+
+use super::{AtomStore, AxisExpr};
+
+/// One concrete layout operation of an inferred bijection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayoutOp {
+    /// Reshape to dims.
+    Reshape(Vec<i64>),
+    /// Transpose by permutation.
+    Transpose(Vec<usize>),
+}
+
+/// An inferred bijection: the operation sequence that converts the
+/// distributed layout into the baseline layout (paper: the
+/// `(s₁, π, s₂)` reshape–transpose–reshape triple).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bijection {
+    /// Concrete op sequence (empty = layouts already identical).
+    pub ops: Vec<LayoutOp>,
+}
+
+impl Bijection {
+    /// True when the two layouts are already elementwise identical.
+    pub fn is_identity(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Render like the paper: `[reshape(64,4,4096), transpose(1,0,2), reshape(256,4096)]`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .ops
+            .iter()
+            .map(|op| match op {
+                LayoutOp::Reshape(dims) => format!(
+                    "reshape({})",
+                    dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                ),
+                LayoutOp::Transpose(perm) => format!(
+                    "transpose({})",
+                    perm.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(",")
+                ),
+            })
+            .collect();
+        format!("[{}]", parts.join(", "))
+    }
+}
+
+/// Infer the bijection mapping `dist` onto `base` (Algorithm 2).
+///
+/// Both expressions must be built over the same [`AtomStore`] with shared
+/// atoms (the axis map `M` of the paper is realized by constructing the
+/// distributed expression from the baseline expression's atoms).
+///
+/// Returns `None` (the paper's ⊥) when the two layouts do not contain the
+/// same primitive axes exactly once each — i.e. no reshape–transpose
+/// sequence can relate them.
+pub fn infer_bijection(
+    store: &AtomStore,
+    base: &AxisExpr,
+    dist: &AxisExpr,
+) -> Option<Bijection> {
+    // Step 1-2: symbolic expressions are given; normalize to primitive
+    // leaves (rank normalization: the finest common refinement).
+    let flat_b = base.flat_leaves(store);
+    let flat_d = dist.flat_leaves(store);
+
+    // Bijection exists iff the primitive axes match as sets, each used once.
+    if flat_b.len() != flat_d.len() {
+        return None;
+    }
+    {
+        let mut sb = flat_b.clone();
+        let mut sd = flat_d.clone();
+        sb.sort_unstable();
+        sd.sort_unstable();
+        if sb != sd {
+            return None;
+        }
+        sb.dedup();
+        if sb.len() != flat_b.len() {
+            return None; // repeated atom: not a bijection
+        }
+    }
+
+    // Fast path: structurally identical already.
+    if base.structurally_equal(dist, store) {
+        return Some(Bijection { ops: vec![] });
+    }
+
+    // Step 3: permutation p with p[i] = position in flat_d of flat_b[i].
+    let perm: Vec<usize> = flat_b
+        .iter()
+        .map(|a| flat_d.iter().position(|b| b == a).expect("checked above"))
+        .collect();
+
+    // Step 4: construct the op sequence d -> b.
+    let mut ops = Vec::new();
+    let split_dims_d: Vec<i64> = flat_d.iter().map(|&a| store.size(a)).collect();
+    let dist_dims = dist.dims(store);
+    if dist_dims != split_dims_d {
+        ops.push(LayoutOp::Reshape(split_dims_d));
+    }
+    if !perm.iter().enumerate().all(|(i, &p)| i == p) {
+        ops.push(LayoutOp::Transpose(perm));
+    }
+    let base_dims = base.dims(store);
+    let after_transpose: Vec<i64> = flat_b.iter().map(|&a| store.size(a)).collect();
+    if after_transpose != base_dims {
+        ops.push(LayoutOp::Reshape(base_dims));
+    }
+
+    let bij = Bijection { ops };
+    debug_assert!(check_bijection(store, base, dist, &bij), "inferred bijection must validate");
+    Some(bij)
+}
+
+/// Validate a bijection: applying `ops` to `dist` must produce an
+/// expression structurally equal to `base` (the final check of Alg. 2).
+pub fn check_bijection(
+    store: &AtomStore,
+    base: &AxisExpr,
+    dist: &AxisExpr,
+    bij: &Bijection,
+) -> bool {
+    let mut store = store.clone(); // splits during replay stay local
+    let mut cur = dist.clone();
+    for op in &bij.ops {
+        cur = match op {
+            LayoutOp::Reshape(dims) => match cur.reshape(&mut store, dims) {
+                Ok(e) => e,
+                Err(_) => return false,
+            },
+            LayoutOp::Transpose(perm) => match cur.transpose(perm) {
+                Ok(e) => e,
+                Err(_) => return false,
+            },
+        };
+    }
+    cur.structurally_equal(base, &store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::AxisExpr;
+
+    /// The paper's Figure 9 example: baseline (4,64,4096) reshaped to
+    /// (256,4096); distributed path transposes to (64,4,4096) first.
+    #[test]
+    fn figure9_example() {
+        let mut st = AtomStore::new();
+        let x = AxisExpr::from_shape(&mut st, &[4, 64, 4096]); // (i, j, k)
+        // baseline path: reshape (4*64, 4096)
+        let e_b = x.reshape(&mut st, &[256, 4096]).unwrap(); // (i⊗j, k)
+        // distributed path: transpose (j, i, k)
+        let e_d = x.transpose(&[1, 0, 2]).unwrap();
+
+        let bij = infer_bijection(&st, &e_b, &e_d).unwrap();
+        assert_eq!(
+            bij.ops,
+            vec![
+                LayoutOp::Transpose(vec![1, 0, 2]),
+                LayoutOp::Reshape(vec![256, 4096]),
+            ]
+        );
+        assert!(check_bijection(&st, &e_b, &e_d, &bij));
+        assert_eq!(bij.describe(), "[transpose(1,0,2), reshape(256,4096)]");
+    }
+
+    #[test]
+    fn identity_when_paths_agree() {
+        let mut st = AtomStore::new();
+        let x = AxisExpr::from_shape(&mut st, &[8, 16]);
+        let a = x.reshape(&mut st, &[128]).unwrap();
+        let b = x.reshape(&mut st, &[128]).unwrap();
+        let bij = infer_bijection(&st, &a, &b).unwrap();
+        assert!(bij.is_identity());
+    }
+
+    /// The BSH bug (paper Figure 1): reshaping (s*b, h) directly to
+    /// (b, s, h) is NOT the same as reshape to (s, b, h) + transpose.
+    #[test]
+    fn bsh_bug_detected_as_non_identity() {
+        let mut st = AtomStore::new();
+        // result tensor (s*b, h) where s and b are distinct atoms
+        let s_atom = st.fresh(64); // sequence
+        let b_atom = st.fresh(4); // batch
+        let h_atom = st.fresh(4096);
+        let result = AxisExpr::from_axes(vec![vec![s_atom, b_atom], vec![h_atom]]);
+
+        // correct: reshape (s, b, h) then transpose(1,0,2) -> (b, s, h)
+        let correct = result
+            .reshape(&mut st, &[64, 4, 4096])
+            .unwrap()
+            .transpose(&[1, 0, 2])
+            .unwrap();
+        // buggy: reshape directly to (b, s, h) = (4, 64, 4096)
+        let buggy = result.reshape(&mut st, &[4, 64, 4096]).unwrap();
+
+        // the buggy layout is NOT structurally equal to the correct one
+        assert!(!correct.structurally_equal(&buggy, &st));
+        // and the bijection between them is a genuine transpose, not identity
+        let bij = infer_bijection(&st, &correct, &buggy).unwrap();
+        assert!(!bij.is_identity());
+    }
+
+    #[test]
+    fn no_bijection_across_different_atoms() {
+        let mut st = AtomStore::new();
+        let a = AxisExpr::from_shape(&mut st, &[4, 8]);
+        let b = AxisExpr::from_shape(&mut st, &[4, 8]); // different atoms!
+        assert!(infer_bijection(&st, &a, &b).is_none());
+    }
+
+    #[test]
+    fn no_bijection_when_atom_repeated() {
+        let mut st = AtomStore::new();
+        let i = st.fresh(4);
+        let j = st.fresh(8);
+        let a = AxisExpr::from_axes(vec![vec![i], vec![j]]);
+        let dup = AxisExpr::from_axes(vec![vec![i], vec![i]]);
+        assert!(infer_bijection(&st, &a, &dup).is_none());
+    }
+
+    #[test]
+    fn split_refinement_bijection() {
+        // baseline merges differently than distributed splits: (2,6) vs (4,3)
+        let mut st = AtomStore::new();
+        let x = AxisExpr::from_shape(&mut st, &[12]);
+        let a = x.reshape(&mut st, &[2, 6]).unwrap();
+        let b = x.reshape(&mut st, &[4, 3]).unwrap();
+        let bij = infer_bijection(&st, &a, &b).unwrap();
+        // same element order — refinement alone aligns them (reshape only)
+        assert!(bij.ops.iter().all(|op| matches!(op, LayoutOp::Reshape(_))));
+        assert!(check_bijection(&st, &a, &b, &bij));
+    }
+
+    #[test]
+    fn three_way_permutation() {
+        let mut st = AtomStore::new();
+        let x = AxisExpr::from_shape(&mut st, &[2, 3, 4]);
+        let b = x.transpose(&[2, 1, 0]).unwrap(); // (k, j, i)
+        let d = x.transpose(&[1, 2, 0]).unwrap(); // (j, k, i)
+        let bij = infer_bijection(&st, &b, &d).unwrap();
+        assert_eq!(bij.ops, vec![LayoutOp::Transpose(vec![1, 0, 2])]);
+        assert!(check_bijection(&st, &b, &d, &bij));
+    }
+
+    #[test]
+    fn merge_of_transposed_axes_needs_full_sequence() {
+        let mut st = AtomStore::new();
+        let x = AxisExpr::from_shape(&mut st, &[4, 64, 4096]);
+        // baseline: transpose (j,i,k) then reshape (j*i, k)
+        let b = x.transpose(&[1, 0, 2]).unwrap().reshape(&mut st, &[256, 4096]).unwrap();
+        // distributed: reshape (i*j, k) directly
+        let d = x.reshape(&mut st, &[256, 4096]).unwrap();
+        let bij = infer_bijection(&st, &b, &d).unwrap();
+        assert_eq!(
+            bij.ops,
+            vec![
+                LayoutOp::Reshape(vec![4, 64, 4096]),
+                LayoutOp::Transpose(vec![1, 0, 2]),
+                LayoutOp::Reshape(vec![256, 4096]),
+            ]
+        );
+        assert!(check_bijection(&st, &b, &d, &bij));
+    }
+}

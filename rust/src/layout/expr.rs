@@ -1,0 +1,215 @@
+//! Symbolic axis expressions: each tensor axis as an ordered factor list.
+
+use super::{AtomId, AtomStore};
+use std::collections::VecDeque;
+use thiserror::Error;
+
+/// Layout-analysis failure.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum LayoutError {
+    /// A reshape crossed factor boundaries in a non-divisible way — outside
+    /// the paper's grouping-reshape scope assumption.
+    #[error("reshape is not a grouping (merge/split) reshape: {0}")]
+    NotGrouping(String),
+    /// Transpose permutation doesn't match the expression rank.
+    #[error("permutation rank {perm} != expression rank {rank}")]
+    RankMismatch {
+        /// permutation length
+        perm: usize,
+        /// expression rank
+        rank: usize,
+    },
+}
+
+/// Symbolic shape: `axes[i]` is the ordered factor list of axis `i`.
+///
+/// `GenExp` of Algorithm 2: a shape `(4, 64, 4096)` becomes atoms
+/// `(i, j, k)`; `reshape(256, 4096)` turns it into `(i⊗j, k)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AxisExpr {
+    /// Factors per axis.
+    pub axes: Vec<Vec<AtomId>>,
+}
+
+impl AxisExpr {
+    /// Fresh expression for a concrete shape: one new atom per axis.
+    pub fn from_shape(store: &mut AtomStore, dims: &[i64]) -> AxisExpr {
+        AxisExpr { axes: dims.iter().map(|&d| vec![store.fresh(d)]).collect() }
+    }
+
+    /// Expression from explicit per-axis factor lists.
+    pub fn from_axes(axes: Vec<Vec<AtomId>>) -> AxisExpr {
+        AxisExpr { axes }
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.axes.len()
+    }
+
+    /// Concrete dims under `store`.
+    pub fn dims(&self, store: &AtomStore) -> Vec<i64> {
+        self.axes.iter().map(|a| store.product(a)).collect()
+    }
+
+    /// Total element count.
+    pub fn elements(&self, store: &AtomStore) -> i64 {
+        self.dims(store).iter().product()
+    }
+
+    /// Apply a grouping reshape to `new_dims` (the paper's scope: merges
+    /// and splits of contiguous axes).
+    pub fn reshape(&self, store: &mut AtomStore, new_dims: &[i64]) -> Result<AxisExpr, LayoutError> {
+        let total: i64 = new_dims.iter().product();
+        if total != self.elements(store) {
+            return Err(LayoutError::NotGrouping(format!(
+                "element count {} -> {}",
+                self.elements(store),
+                total
+            )));
+        }
+        // flatten factors row-major, then regroup
+        let mut queue: VecDeque<AtomId> =
+            self.axes.iter().flat_map(|a| a.iter().copied()).collect();
+        let mut axes = Vec::with_capacity(new_dims.len());
+        for &d in new_dims {
+            if d == 1 {
+                // size-1 axes carry no atoms
+                axes.push(vec![]);
+                continue;
+            }
+            let taken = store.take_product(&mut queue, d).ok_or_else(|| {
+                LayoutError::NotGrouping(format!("target dim {d} misaligned with factors"))
+            })?;
+            axes.push(taken);
+        }
+        // drained exactly (all leftover atoms must be size-1)
+        while let Some(a) = queue.pop_front() {
+            if store.size(a) != 1 {
+                return Err(LayoutError::NotGrouping("leftover factors".into()));
+            }
+        }
+        Ok(AxisExpr { axes })
+    }
+
+    /// Apply a transpose (HLO convention: output axis `i` = input `perm[i]`).
+    pub fn transpose(&self, perm: &[usize]) -> Result<AxisExpr, LayoutError> {
+        if perm.len() != self.rank() {
+            return Err(LayoutError::RankMismatch { perm: perm.len(), rank: self.rank() });
+        }
+        Ok(AxisExpr { axes: perm.iter().map(|&p| self.axes[p].clone()).collect() })
+    }
+
+    /// Fully expand every factor to primitive leaves.
+    pub fn expanded(&self, store: &AtomStore) -> AxisExpr {
+        AxisExpr {
+            axes: self
+                .axes
+                .iter()
+                .map(|a| a.iter().flat_map(|&f| store.expand(f)).collect())
+                .collect(),
+        }
+    }
+
+    /// Flat leaf sequence (row-major), size-1 leaves dropped.
+    pub fn flat_leaves(&self, store: &AtomStore) -> Vec<AtomId> {
+        self.expanded(store)
+            .axes
+            .into_iter()
+            .flatten()
+            .filter(|&a| store.size(a) != 1)
+            .collect()
+    }
+
+    /// Structural equality under `store` (same leaves, same axis grouping).
+    pub fn structurally_equal(&self, other: &AxisExpr, store: &AtomStore) -> bool {
+        if self.rank() != other.rank() {
+            return false;
+        }
+        self.expanded(store)
+            .axes
+            .iter()
+            .zip(&other.expanded(store).axes)
+            .all(|(a, b)| {
+                let fa: Vec<AtomId> =
+                    a.iter().copied().filter(|&x| store.size(x) != 1).collect();
+                let fb: Vec<AtomId> =
+                    b.iter().copied().filter(|&x| store.size(x) != 1).collect();
+                fa == fb
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_merge_then_split_roundtrip() {
+        let mut st = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut st, &[4, 64, 4096]);
+        let merged = e.reshape(&mut st, &[256, 4096]).unwrap();
+        assert_eq!(merged.dims(&st), vec![256, 4096]);
+        assert_eq!(merged.axes[0].len(), 2); // i⊗j
+        let back = merged.reshape(&mut st, &[4, 64, 4096]).unwrap();
+        assert!(back.structurally_equal(&e, &st));
+    }
+
+    #[test]
+    fn reshape_split_creates_subatoms() {
+        let mut st = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut st, &[12]);
+        let s = e.reshape(&mut st, &[4, 3]).unwrap();
+        assert_eq!(s.dims(&st), vec![4, 3]);
+        // splitting again along compatible lines reuses sub-atoms
+        let s2 = e.reshape(&mut st, &[4, 3]).unwrap();
+        assert!(s.structurally_equal(&s2, &st));
+    }
+
+    #[test]
+    fn incompatible_split_is_refined() {
+        let mut st = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut st, &[12]);
+        let a = e.reshape(&mut st, &[4, 3]).unwrap();
+        let b = e.reshape(&mut st, &[2, 6]).unwrap();
+        // flat leaves of both refine to [2,2,3]
+        let fa = a.flat_leaves(&st);
+        let fb = b.flat_leaves(&st);
+        assert_eq!(fa, fb);
+        assert_eq!(fa.iter().map(|&x| st.size(x)).collect::<Vec<_>>(), vec![2, 2, 3]);
+    }
+
+    #[test]
+    fn non_divisible_reshape_rejected() {
+        let mut st = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut st, &[4, 5]);
+        // 10 = 4 * 2.5 → crosses the atom boundary non-divisibly
+        assert!(matches!(
+            e.reshape(&mut st, &[10, 2]),
+            Err(LayoutError::NotGrouping(_))
+        ));
+    }
+
+    #[test]
+    fn transpose_permutes_axes() {
+        let mut st = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut st, &[2, 3, 4]);
+        let t = e.transpose(&[2, 0, 1]).unwrap();
+        assert_eq!(t.dims(&st), vec![4, 2, 3]);
+        assert_eq!(t.axes[1], e.axes[0]);
+        assert!(t.transpose(&[1, 2, 0]).unwrap().structurally_equal(&e, &st));
+    }
+
+    #[test]
+    fn size_one_axes_ignored() {
+        let mut st = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut st, &[4, 1, 8]);
+        let squeezed = e.reshape(&mut st, &[4, 8]).unwrap();
+        let unsqueezed = squeezed.reshape(&mut st, &[1, 4, 8, 1]).unwrap();
+        assert_eq!(unsqueezed.dims(&st), vec![1, 4, 8, 1]);
+        assert_eq!(
+            squeezed.flat_leaves(&st),
+            unsqueezed.flat_leaves(&st)
+        );
+    }
+}

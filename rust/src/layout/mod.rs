@@ -1,0 +1,20 @@
+//! Symbolic layout analysis and bijection inference (paper §5.2.3, Alg. 2).
+//!
+//! Tensor axes are **symbolic atoms** (the paper's `i, j, k`). A reshape
+//! that merges axes produces a factor list (`i⊗j`), a split refines an
+//! atom into sub-atoms, and a transpose permutes axes. Two
+//! reshape–transpose paths are compared by reducing both to sequences of
+//! *primitive* atoms (the finest common refinement — splits are
+//! hash-consed in a shared [`AtomStore`], so identical split geometry on
+//! both paths yields identical sub-atoms) and then inferring the
+//! reshape–transpose–reshape **bijection** that maps the distributed
+//! layout onto the baseline layout. If no such bijection exists the
+//! layouts are semantically different — the BSH bug of Figure 1.
+
+mod atom;
+mod expr;
+mod bijection;
+
+pub use atom::{AtomId, AtomStore};
+pub use bijection::{check_bijection as bijection_check, infer_bijection, Bijection, LayoutOp};
+pub use expr::{AxisExpr, LayoutError};

@@ -1,0 +1,61 @@
+//! # Scalify — verifying computational graphs of distributed ML frameworks
+//!
+//! Reproduction of *"Verifying Computational Graphs in Production-Grade
+//! Distributed Machine Learning Frameworks"* (Scalify, 2025).
+//!
+//! Scalify checks **semantic equivalence** between a baseline
+//! (single-device) computational graph and a transformed (distributed /
+//! optimized) graph, exposing silent errors before they degrade trained
+//! models. It combines:
+//!
+//! * an **e-graph** engine ([`egraph`]) performing equality saturation over
+//!   tensor IR terms,
+//! * a **Datalog-style relational analysis** ([`relations`]) propagating
+//!   `sharded` / `layout` / `partial` / `slice` / `loop_red` facts between
+//!   the two graphs (Table 1 of the paper),
+//! * **symbolic bijection inference** ([`layout`]) aligning heterogeneous
+//!   reshape–transpose sequences (Algorithm 2),
+//! * **graph partitioning, parallel rewriting and layer memoization**
+//!   ([`partition`]) for production-scale graphs (Algorithm 1), and
+//! * **discrepancy-based bug localization** ([`localize`]) mapping failures
+//!   back to source sites.
+//!
+//! The crate also ships the substrates a full reproduction needs: a tensor
+//! IR ([`ir`]), an HLO-text parser/printer ([`hlo`]) interoperating with
+//! JAX-lowered artifacts, a reference interpreter with simulated
+//! collectives ([`interp`]), a model zoo emitting Llama/Mixtral-style
+//! baseline+distributed graph pairs ([`modelgen`]), a corpus of injected
+//! production bugs ([`bugs`]), numerical/per-element baseline verifiers
+//! ([`baseline`]), and a PJRT runtime ([`runtime`]) executing AOT-compiled
+//! JAX artifacts from Rust.
+pub mod util;
+pub mod ir;
+pub mod hlo;
+pub mod interp;
+pub mod egraph;
+pub mod layout;
+pub mod relations;
+pub mod partition;
+pub mod verifier;
+pub mod localize;
+pub mod modelgen;
+pub mod bugs;
+pub mod baseline;
+pub mod runtime;
+pub mod report;
+pub mod bench;
+pub mod proptest;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::ir::{
+        Annotation, DType, Graph, GraphBuilder, Node, NodeId, Op, ReduceKind, ReplicaGroups,
+        Shape,
+    };
+    pub use crate::localize::Discrepancy;
+    pub use crate::modelgen::{GraphPair, LlamaConfig, MixtralConfig, Parallelism};
+    pub use crate::verifier::{Verdict, Verifier, VerifyConfig, VerifyReport};
+}
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

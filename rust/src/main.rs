@@ -1,0 +1,227 @@
+//! `scalify` CLI — the leader entrypoint.
+//!
+//! ```text
+//! scalify verify --base <hlo> --dist <hlo> [--cores N]   verify two HLO files
+//! scalify model --model llama-8b --par tp32 [--layers N] verify a zoo model
+//! scalify bugs [--reproduced|--new]                      run the bug corpus
+//! scalify exec --artifact <hlo>                          run via PJRT
+//! scalify info                                           version/build info
+//! ```
+
+use scalify::bugs::{evaluate, new_bugs, reproduced_bugs, ExpectedLoc, LocResult};
+use scalify::hlo::parse_hlo_file;
+use scalify::ir::Annotation;
+use scalify::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
+use scalify::report::Table;
+use scalify::verifier::{GraphPair, Verifier, VerifyConfig};
+use std::collections::HashMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "true".into());
+            if val != "true" {
+                i += 1;
+            }
+            flags.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn parallelism(spec: &str) -> Parallelism {
+    let (kind, deg) = spec.split_at(2);
+    let deg: u32 = deg.parse().unwrap_or(32);
+    match kind {
+        "tp" => Parallelism::Tensor { tp: deg },
+        "sp" => Parallelism::Sequence { tp: deg },
+        "fd" => Parallelism::FlashDecoding { tp: deg },
+        "ep" => Parallelism::Expert { ep: deg },
+        other => panic!("unknown parallelism '{other}' (tp/sp/fd/ep + degree)"),
+    }
+}
+
+fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> GraphPair {
+    let mk = |mut cfg: LlamaConfig| {
+        if let Some(l) = layers {
+            cfg.layers = l;
+        }
+        llama_pair(&cfg, par)
+    };
+    match model {
+        "llama-8b" => mk(LlamaConfig::llama3_8b()),
+        "llama-70b" => mk(LlamaConfig::llama3_70b()),
+        "llama-405b" => mk(LlamaConfig::llama3_405b()),
+        "llama-tiny" => mk(LlamaConfig::tiny()),
+        "mixtral-8x7b" => {
+            let mut cfg = MixtralConfig::mixtral_8x7b();
+            if let Some(l) = layers {
+                cfg.layers = l;
+            }
+            mixtral_pair(&cfg, par)
+        }
+        "mixtral-8x22b" => {
+            let mut cfg = MixtralConfig::mixtral_8x22b();
+            if let Some(l) = layers {
+                cfg.layers = l;
+            }
+            mixtral_pair(&cfg, par)
+        }
+        other => panic!("unknown model '{other}'"),
+    }
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> ExitCode {
+    let base = flags.get("base").expect("--base <hlo file>");
+    let dist = flags.get("dist").expect("--dist <hlo file>");
+    let cores: u32 = flags.get("cores").map(|c| c.parse().unwrap()).unwrap_or(1);
+    let bg = parse_hlo_file(Path::new(base), 1).expect("parse --base");
+    let dg = parse_hlo_file(Path::new(dist), cores).expect("parse --dist");
+    // positional replicated annotations (HLO files carry no sharding info)
+    let ann: Vec<Annotation> = bg
+        .parameters()
+        .into_iter()
+        .zip(dg.parameters())
+        .map(|(b, d)| Annotation::replicated(b, d))
+        .collect();
+    let pair = GraphPair::new(bg, dg, ann);
+    let report = Verifier::new(VerifyConfig::default()).verify_pair(&pair);
+    println!("{}", report.summary());
+    for d in report.discrepancies() {
+        println!("  {}", d.render());
+    }
+    if report.verified() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn cmd_model(flags: &HashMap<String, String>) -> ExitCode {
+    let model = flags.get("model").map(|s| s.as_str()).unwrap_or("llama-8b");
+    let par = parallelism(flags.get("par").map(|s| s.as_str()).unwrap_or("tp32"));
+    let layers = flags.get("layers").map(|l| l.parse().unwrap());
+    eprintln!("generating {model} ({}) graphs…", par.label());
+    let pair = model_pair(model, par, layers);
+    eprintln!(
+        "verifying {} baseline + {} distributed nodes…",
+        pair.base.len(),
+        pair.dist.len()
+    );
+    let report = Verifier::new(VerifyConfig::default()).verify_pair(&pair);
+    println!("{}", report.summary());
+    for d in report.discrepancies().iter().take(10) {
+        println!("  {}", d.render());
+    }
+    if report.verified() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn run_bug_table(title: &str, cases: Vec<scalify::bugs::BugCase>) -> bool {
+    let mut table =
+        Table::new(title, &["Bug ID", "Description", "Issue", "Expected", "Result", "Time"]);
+    let mut ok = true;
+    for case in cases {
+        let outcome = evaluate(&case);
+        let expected = match case.expected {
+            ExpectedLoc::Instruction => "instr",
+            ExpectedLoc::Function => "func",
+            ExpectedLoc::NotApplicable => "n/a",
+        };
+        let result = match (outcome.detected, outcome.loc) {
+            (false, _) if case.expected == ExpectedLoc::NotApplicable => "n/a (as paper)",
+            (false, _) => {
+                ok = false;
+                "MISSED"
+            }
+            (true, LocResult::Instruction) => "detected @instr",
+            (true, LocResult::Function) => "detected @func",
+            (true, _) => "detected (elsewhere)",
+        };
+        table.row(&[
+            case.id.to_string(),
+            case.description.to_string(),
+            case.issue.to_string(),
+            expected.to_string(),
+            result.to_string(),
+            scalify::util::fmt_duration(outcome.duration),
+        ]);
+    }
+    print!("{}", table.render());
+    table.save_csv(&title.replace([' ', '—'], "_"));
+    ok
+}
+
+fn cmd_bugs(flags: &HashMap<String, String>) -> ExitCode {
+    let only_new = flags.contains_key("new");
+    let only_reproduced = flags.contains_key("reproduced");
+    let mut all_ok = true;
+    if !only_new {
+        all_ok &= run_bug_table("Table 4 - reproduced bugs", reproduced_bugs());
+    }
+    if !only_reproduced {
+        all_ok &= run_bug_table("Table 5 - new bugs", new_bugs());
+    }
+    if all_ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn cmd_exec(flags: &HashMap<String, String>) -> ExitCode {
+    let path = flags.get("artifact").expect("--artifact <hlo file>");
+    let exe = scalify::runtime::Executable::load(Path::new(path)).expect("load artifact");
+    let g = parse_hlo_file(Path::new(path), 1).expect("parse artifact");
+    let mut prng = scalify::util::Prng::new(42);
+    let inputs: Vec<scalify::interp::Tensor> = g
+        .parameters()
+        .iter()
+        .map(|&pid| scalify::interp::Tensor::random(g.node(pid).shape.clone(), &mut prng))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = exe.run(&inputs).expect("execute");
+    println!(
+        "executed {} in {:?}: {} outputs, first shape {}",
+        path,
+        t0.elapsed(),
+        out.len(),
+        out[0].shape
+    );
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "verify" => cmd_verify(&flags),
+        "model" => cmd_model(&flags),
+        "bugs" => cmd_bugs(&flags),
+        "exec" => cmd_exec(&flags),
+        "info" => {
+            println!("scalify {} — computational-graph equivalence verifier", scalify::VERSION);
+            ExitCode::SUCCESS
+        }
+        _ => {
+            println!(
+                "scalify {} — usage:\n  scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N]\n  scalify model --model llama-8b|llama-70b|llama-405b|mixtral-8x7b|mixtral-8x22b --par tp32|sp32|fd32|ep8 [--layers N]\n  scalify bugs [--reproduced|--new]\n  scalify exec --artifact artifacts/model_single.hlo.txt\n  scalify info",
+                scalify::VERSION
+            );
+            ExitCode::SUCCESS
+        }
+    }
+}

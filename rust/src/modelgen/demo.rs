@@ -1,0 +1,66 @@
+//! Tiny demonstration pairs for docs, quickstart and smoke tests.
+
+use super::GraphPair;
+use crate::ir::{Annotation, DType, GraphBuilder, NodeId, ReduceKind, ReplicaGroups, Shape};
+
+fn f32s(dims: &[i64]) -> Shape {
+    Shape::new(DType::F32, dims.to_vec())
+}
+
+/// Figure 3 of the paper: `Y = X·W` baseline vs contracted-dim-sharded
+/// tensor parallelism discharged by an all-reduce.
+pub fn matmul_allreduce_pair(tp: u32) -> GraphPair {
+    let mut bb = GraphBuilder::new("base", 1);
+    bb.at("mlp.py", 10).in_func("mlp_fwd");
+    let x = bb.parameter("x", f32s(&[4, 8 * tp as i64]));
+    let w = bb.parameter("w", f32s(&[8 * tp as i64, 16]));
+    let y = bb.matmul(x, w);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", tp);
+    db.at("mlp.py", 10).in_func("mlp_fwd");
+    let xs = db.parameter("x", f32s(&[4, 8]));
+    let ws = db.parameter("w", f32s(&[8, 16]));
+    db.at("mlp.py", 11);
+    let part = db.matmul(xs, ws);
+    db.at("mlp.py", 12);
+    let red = db.all_reduce(part, ReduceKind::Add, ReplicaGroups::full(tp));
+    db.output(red);
+    let dist = db.finish();
+
+    let ann = vec![
+        Annotation::shard(x, NodeId(0), 1, tp),
+        Annotation::shard(w, NodeId(1), 0, tp),
+    ];
+    GraphPair::new(base, dist, ann)
+}
+
+/// The Figure-1 BSH pair: `buggy = true` reproduces the incorrect layout
+/// transformation (direct reshape instead of reshape+transpose).
+pub fn bsh_pair(buggy: bool) -> GraphPair {
+    let (s, b, h) = (6i64, 2i64, 16i64);
+    let mut bb = GraphBuilder::new("base", 1);
+    bb.at("attention.py", 120).in_func("attention_bsh");
+    let x = bb.parameter("attn_out", f32s(&[s * b, h]));
+    let r = bb.reshape(x, vec![s, b, h]);
+    let t = bb.transpose(r, vec![1, 0, 2]);
+    bb.output(t);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    db.at("attention.py", 120).in_func("attention_bsh");
+    let xd = db.parameter("attn_out", f32s(&[s * b, h]));
+    let out = if buggy {
+        db.at("attention.py", 124);
+        db.reshape(xd, vec![b, s, h])
+    } else {
+        let r = db.reshape(xd, vec![s, b, h]);
+        db.transpose(r, vec![1, 0, 2])
+    };
+    db.output(out);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::replicated(x, NodeId(0))];
+    GraphPair::new(base, dist, ann)
+}

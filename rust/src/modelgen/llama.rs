@@ -1,0 +1,454 @@
+//! Llama-style dense transformer graph pairs.
+//!
+//! Emits the same structural patterns Transformers NeuronX produces for
+//! Llama-3 inference: RMSNorm, rotary embeddings (rotate-half), multi-head
+//! attention with the BSH output reshape–transpose, SwiGLU MLP; and the
+//! distributed variants: Megatron-style tensor parallelism (column/row
+//! sharded projections + all-reduce), sequence parallelism (all-gather /
+//! reduce-scatter around the sharded residual stream), and flash decoding
+//! (sequence-sharded KV with a distributed two-pass softmax).
+
+use super::{GraphPair, Parallelism};
+use crate::ir::{Annotation, DType, GraphBuilder, NodeId, ReduceKind, ReplicaGroups, Shape};
+
+/// Llama model configuration (graph-shape parameters only).
+#[derive(Clone, Copy, Debug)]
+pub struct LlamaConfig {
+    /// Decoder layers.
+    pub layers: u32,
+    /// Hidden size H.
+    pub hidden: i64,
+    /// Attention heads.
+    pub heads: i64,
+    /// FFN intermediate size.
+    pub ffn: i64,
+    /// Sequence length.
+    pub seqlen: i64,
+    /// Batch size.
+    pub batch: i64,
+}
+
+impl LlamaConfig {
+    /// Llama-3.1-8B-shaped graph (32 layers).
+    pub fn llama3_8b() -> Self {
+        LlamaConfig { layers: 32, hidden: 4096, heads: 32, ffn: 14336, seqlen: 64, batch: 4 }
+    }
+    /// Llama-3.1-70B-shaped graph (80 layers).
+    pub fn llama3_70b() -> Self {
+        LlamaConfig { layers: 80, hidden: 8192, heads: 64, ffn: 28672, seqlen: 64, batch: 4 }
+    }
+    /// Llama-3.1-405B-shaped graph (126 layers).
+    pub fn llama3_405b() -> Self {
+        LlamaConfig { layers: 126, hidden: 16384, heads: 128, ffn: 53248, seqlen: 64, batch: 4 }
+    }
+    /// Tiny config for interpreter-level differential tests.
+    pub fn tiny() -> Self {
+        LlamaConfig { layers: 2, hidden: 8, heads: 2, ffn: 16, seqlen: 4, batch: 1 }
+    }
+    /// Head dim.
+    pub fn head_dim(&self) -> i64 {
+        self.hidden / self.heads
+    }
+    /// Token count T = batch * seqlen.
+    pub fn tokens(&self) -> i64 {
+        self.batch * self.seqlen
+    }
+}
+
+fn f32s(dims: &[i64]) -> Shape {
+    Shape::new(DType::F32, dims.to_vec())
+}
+
+/// Weight handles of one layer (baseline or distributed).
+struct LayerWeights {
+    g_attn: NodeId,
+    wq: NodeId,
+    wk: NodeId,
+    wv: NodeId,
+    wo: NodeId,
+    g_mlp: NodeId,
+    wg: NodeId,
+    wu: NodeId,
+    wd: NodeId,
+}
+
+/// RMSNorm: x * rsqrt(mean(x²) + eps) * g.
+fn rmsnorm(b: &mut GraphBuilder, x: NodeId, g: NodeId, t: i64, h: i64) -> NodeId {
+    b.at("rmsnorm.py", 12).in_func("rms_norm");
+    let xx = b.mul(x, x);
+    let s = b.reduce(xx, ReduceKind::Add, vec![1]); // (T)
+    let inv_h = b.constant(1.0 / h as f64, DType::F32);
+    let inv_h_b = b.broadcast_scalar(inv_h, vec![t]);
+    let mean = b.mul(s, inv_h_b);
+    let eps = b.constant(1e-5, DType::F32);
+    let eps_b = b.broadcast_scalar(eps, vec![t]);
+    let var = b.add(mean, eps_b);
+    let r = b.rsqrt(var);
+    let rb = b.broadcast(r, vec![t, h], vec![0]);
+    let xn = b.mul(x, rb);
+    let gb = b.broadcast(g, vec![t, h], vec![1]);
+    b.mul(xn, gb)
+}
+
+/// rotate_half: concat(-x[.., d/2:], x[.., :d/2]) on the last dim.
+fn rotate_half(b: &mut GraphBuilder, x: NodeId, nh: i64, t: i64, hd: i64) -> NodeId {
+    b.at("rotary.py", 31).in_func("rotate_half");
+    let lo = b.slice(x, vec![0, 0, 0], vec![nh, t, hd / 2]);
+    let hi = b.slice(x, vec![0, 0, hd / 2], vec![nh, t, hd]);
+    let neg_hi = b.neg(hi);
+    b.concat(vec![neg_hi, lo], 2)
+}
+
+/// Apply rotary embedding: x*cos + rotate_half(x)*sin.
+fn rotary(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    cos: NodeId,
+    sin: NodeId,
+    nh: i64,
+    t: i64,
+    hd: i64,
+) -> NodeId {
+    b.at("rotary.py", 44).in_func("apply_rotary");
+    let cos_b = b.broadcast(cos, vec![nh, t, hd], vec![1, 2]);
+    let sin_b = b.broadcast(sin, vec![nh, t, hd], vec![1, 2]);
+    let xc = b.mul(x, cos_b);
+    let xr = rotate_half(b, x, nh, t, hd);
+    let xs = b.mul(xr, sin_b);
+    b.add(xc, xs)
+}
+
+/// Softmax over the last dim of a rank-3 tensor.
+fn softmax3(b: &mut GraphBuilder, x: NodeId, d0: i64, d1: i64, d2: i64) -> NodeId {
+    b.at("attention.py", 88).in_func("softmax");
+    let m = b.reduce(x, ReduceKind::Max, vec![2]);
+    let mb = b.broadcast(m, vec![d0, d1, d2], vec![0, 1]);
+    let sh = b.sub(x, mb);
+    let e = b.exp(sh);
+    let s = b.reduce(e, ReduceKind::Add, vec![2]);
+    let sb = b.broadcast(s, vec![d0, d1, d2], vec![0, 1]);
+    b.div(e, sb)
+}
+
+/// SiLU: x * sigmoid(x).
+fn silu(b: &mut GraphBuilder, x: NodeId) -> NodeId {
+    b.at("mlp.py", 21).in_func("silu");
+    let s = b.logistic(x);
+    b.mul(x, s)
+}
+
+/// One decoder layer. `nh_local` is the per-core head count (== heads for
+/// the baseline); `shard` describes the parallelism of this graph.
+#[allow(clippy::too_many_arguments)]
+fn decoder_layer(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    w: &LayerWeights,
+    cos: NodeId,
+    sin: NodeId,
+    cfg: &LlamaConfig,
+    nh_local: i64,
+    tp: u32,
+    seq_parallel: bool,
+) -> NodeId {
+    let t = if seq_parallel { cfg.tokens() / tp as i64 } else { cfg.tokens() };
+    let t_full = cfg.tokens();
+    let h = cfg.hidden;
+    let hd = cfg.head_dim();
+    let h_local = nh_local * hd;
+    let groups = || ReplicaGroups::full(tp);
+
+    // ---- attention ----
+    let xn = rmsnorm(b, x, w.g_attn, t, h);
+    // sequence parallelism: gather the full sequence before attention
+    let xn = if seq_parallel { b.all_gather(xn, 0, groups()) } else { xn };
+
+    b.at("attention.py", 40).in_func("attention_fwd");
+    let q = b.matmul(xn, w.wq); // (T, h_local)
+    let k = b.matmul(xn, w.wk);
+    let v = b.matmul(xn, w.wv);
+    let q3 = b.reshape(q, vec![t_full, nh_local, hd]);
+    let k3 = b.reshape(k, vec![t_full, nh_local, hd]);
+    let v3 = b.reshape(v, vec![t_full, nh_local, hd]);
+    let qh = b.transpose(q3, vec![1, 0, 2]); // (nh, T, hd)
+    let kh = b.transpose(k3, vec![1, 0, 2]);
+    let vh = b.transpose(v3, vec![1, 0, 2]);
+    let qr = rotary(b, qh, cos, sin, nh_local, t_full, hd);
+    let kr = rotary(b, kh, cos, sin, nh_local, t_full, hd);
+
+    b.at("attention.py", 61).in_func("attention_fwd");
+    let scores = b.dot_general(qr, kr, vec![2], vec![2], vec![0], vec![0]); // (nh,T,T)
+    let scale = b.constant((hd as f64).sqrt(), DType::F32);
+    let scale_b = b.broadcast_scalar(scale, vec![nh_local, t_full, t_full]);
+    let scaled = b.div(scores, scale_b);
+    let sm = softmax3(b, scaled, nh_local, t_full, t_full);
+    let ctx = b.dot_general(sm, vh, vec![2], vec![1], vec![0], vec![0]); // (nh,T,hd)
+
+    // BSH output path (the Figure-1 site): (nh,T,hd) -> (T,nh,hd) -> (T,H)
+    b.at("attention.py", 79).in_func("attention_output");
+    let ctx_t = b.transpose(ctx, vec![1, 0, 2]);
+    let ctx2 = b.reshape(ctx_t, vec![t_full, h_local]);
+    let attn = b.matmul(ctx2, w.wo); // (T, H), partial under TP
+
+    // TP: discharge the partial; SP: reduce-scatter back to shards
+    let attn = if tp > 1 {
+        if seq_parallel {
+            b.reduce_scatter(attn, ReduceKind::Add, 0, groups())
+        } else {
+            b.all_reduce(attn, ReduceKind::Add, groups())
+        }
+    } else {
+        attn
+    };
+    b.at("decoder.py", 55).in_func("decoder_layer");
+    let resid1 = b.add(x, attn);
+
+    // ---- MLP ----
+    let xn2 = rmsnorm(b, resid1, w.g_mlp, t, h);
+    let xn2 = if seq_parallel { b.all_gather(xn2, 0, groups()) } else { xn2 };
+    b.at("mlp.py", 33).in_func("mlp_fwd");
+    let gate = b.matmul(xn2, w.wg);
+    let up = b.matmul(xn2, w.wu);
+    let act = silu(b, gate);
+    b.at("mlp.py", 36).in_func("mlp_fwd");
+    let fused = b.mul(act, up);
+    let down = b.matmul(fused, w.wd); // (T, H), partial under TP
+    let down = if tp > 1 {
+        if seq_parallel {
+            b.reduce_scatter(down, ReduceKind::Add, 0, groups())
+        } else {
+            b.all_reduce(down, ReduceKind::Add, groups())
+        }
+    } else {
+        down
+    };
+    b.at("decoder.py", 61).in_func("decoder_layer");
+    b.add(resid1, down)
+}
+
+/// Declare one layer's weights. Shapes differ between baseline and the
+/// TP-sharded variant.
+#[allow(clippy::too_many_arguments)]
+fn layer_weights(b: &mut GraphBuilder, l: u32, h: i64, _ffn: i64, h_local: i64, ffn_local: i64) -> LayerWeights {
+    b.at("decoder.py", 20).in_func("decoder_layer");
+    LayerWeights {
+        g_attn: b.parameter(&format!("l{l}.attn_norm.g"), f32s(&[h])),
+        wq: b.parameter(&format!("l{l}.q_proj"), f32s(&[h, h_local])),
+        wk: b.parameter(&format!("l{l}.k_proj"), f32s(&[h, h_local])),
+        wv: b.parameter(&format!("l{l}.v_proj"), f32s(&[h, h_local])),
+        wo: b.parameter(&format!("l{l}.o_proj"), f32s(&[h_local, h])),
+        g_mlp: b.parameter(&format!("l{l}.mlp_norm.g"), f32s(&[h])),
+        wg: b.parameter(&format!("l{l}.gate_proj"), f32s(&[h, ffn_local])),
+        wu: b.parameter(&format!("l{l}.up_proj"), f32s(&[h, ffn_local])),
+        wd: b.parameter(&format!("l{l}.down_proj"), f32s(&[ffn_local, h])),
+    }
+}
+
+fn annotate_layer(
+    ann: &mut Vec<Annotation>,
+    bw: &LayerWeights,
+    dw: &LayerWeights,
+    tp: u32,
+) {
+    ann.push(Annotation::replicated(bw.g_attn, dw.g_attn));
+    ann.push(Annotation::shard(bw.wq, dw.wq, 1, tp));
+    ann.push(Annotation::shard(bw.wk, dw.wk, 1, tp));
+    ann.push(Annotation::shard(bw.wv, dw.wv, 1, tp));
+    ann.push(Annotation::shard(bw.wo, dw.wo, 0, tp));
+    ann.push(Annotation::replicated(bw.g_mlp, dw.g_mlp));
+    ann.push(Annotation::shard(bw.wg, dw.wg, 1, tp));
+    ann.push(Annotation::shard(bw.wu, dw.wu, 1, tp));
+    ann.push(Annotation::shard(bw.wd, dw.wd, 0, tp));
+}
+
+/// Build a baseline + distributed Llama graph pair.
+pub fn llama_pair(cfg: &LlamaConfig, par: Parallelism) -> GraphPair {
+    match par {
+        Parallelism::Tensor { tp } => llama_dense_pair(cfg, tp, false),
+        Parallelism::Sequence { tp } => llama_dense_pair(cfg, tp, true),
+        Parallelism::FlashDecoding { tp } => flash_decoding_pair(cfg, tp),
+        Parallelism::Expert { .. } => panic!("expert parallelism is a Mixtral configuration"),
+    }
+}
+
+fn llama_dense_pair(cfg: &LlamaConfig, tp: u32, seq_parallel: bool) -> GraphPair {
+    assert_eq!(cfg.heads % tp as i64, 0, "heads must divide tp");
+    assert_eq!(cfg.ffn % tp as i64, 0, "ffn must divide tp");
+    if seq_parallel {
+        assert_eq!(cfg.tokens() % tp as i64, 0, "tokens must divide tp for SP");
+    }
+    let t = cfg.tokens();
+    let h = cfg.hidden;
+    let hd = cfg.head_dim();
+
+    // ---- baseline ----
+    let mut bb = GraphBuilder::new("llama_base", 1);
+    bb.layer(None).at("model.py", 10).in_func("model_fwd");
+    let bx = bb.parameter("hidden_states", f32s(&[t, h]));
+    let bcos = bb.parameter("rotary.cos", f32s(&[t, hd]));
+    let bsin = bb.parameter("rotary.sin", f32s(&[t, hd]));
+    let mut cur = bx;
+    let mut bweights = Vec::new();
+    for l in 0..cfg.layers {
+        bb.layer(Some(l));
+        let w = layer_weights(&mut bb, l, h, cfg.ffn, h, cfg.ffn);
+        cur = decoder_layer(&mut bb, cur, &w, bcos, bsin, cfg, cfg.heads, 1, false);
+        bweights.push(w);
+    }
+    bb.layer(None);
+    bb.output(cur);
+    let base = bb.finish();
+
+    // ---- distributed ----
+    let mut db = GraphBuilder::new("llama_dist", tp);
+    db.layer(None).at("model.py", 10).in_func("model_fwd");
+    let t_in = if seq_parallel { t / tp as i64 } else { t };
+    let dx = db.parameter("hidden_states", f32s(&[t_in, h]));
+    let dcos = db.parameter("rotary.cos", f32s(&[t, hd]));
+    let dsin = db.parameter("rotary.sin", f32s(&[t, hd]));
+    let nh_local = cfg.heads / tp as i64;
+    let mut cur = dx;
+    let mut dweights = Vec::new();
+    for l in 0..cfg.layers {
+        db.layer(Some(l));
+        let w = layer_weights(
+            &mut db,
+            l,
+            h,
+            cfg.ffn,
+            nh_local * hd,
+            cfg.ffn / tp as i64,
+        );
+        cur = decoder_layer(&mut db, cur, &w, dcos, dsin, cfg, nh_local, tp, seq_parallel);
+        dweights.push(w);
+    }
+    // sequence parallelism keeps the residual sharded; gather at the end
+    // (tagged into the last layer so it is verified after the layer chain)
+    let out = if seq_parallel {
+        db.layer(Some(cfg.layers - 1));
+        db.all_gather(cur, 0, ReplicaGroups::full(tp))
+    } else {
+        cur
+    };
+    db.layer(None);
+    db.output(out);
+    let dist = db.finish();
+
+    let mut ann = if seq_parallel {
+        vec![Annotation::shard(bx, dx, 0, tp)]
+    } else {
+        vec![Annotation::replicated(bx, dx)]
+    };
+    ann.push(Annotation::replicated(bcos, dcos));
+    ann.push(Annotation::replicated(bsin, dsin));
+    for (bw, dw) in bweights.iter().zip(&dweights) {
+        annotate_layer(&mut ann, bw, dw, tp);
+    }
+    GraphPair::new(base, dist, ann)
+}
+
+/// Flash decoding: one query token, KV cache sharded along the sequence
+/// dim, two-pass distributed softmax (all-reduce max, then all-reduce sum).
+/// The baseline is the single-device flash-style oracle (same order of
+/// operations, no collectives).
+fn flash_decoding_pair(cfg: &LlamaConfig, tp: u32) -> GraphPair {
+    let nh = cfg.heads;
+    let hd = cfg.head_dim();
+    let s = cfg.seqlen;
+    assert_eq!(s % tp as i64, 0, "seqlen must divide tp");
+    let s_local = s / tp as i64;
+
+    let build = |cores: u32, s_kv: i64| -> (crate::ir::Graph, Vec<NodeId>) {
+        let mut b = GraphBuilder::new(if cores == 1 { "flash_base" } else { "flash_dist" }, cores);
+        b.layer(Some(0)).at("flash_decoding.py", 18).in_func("flash_decode");
+        let q = b.parameter("q", f32s(&[nh, 1, hd]));
+        let kc = b.parameter("k_cache", f32s(&[nh, s_kv, hd]));
+        let vc = b.parameter("v_cache", f32s(&[nh, s_kv, hd]));
+        b.at("flash_decoding.py", 25);
+        let scores = b.dot_general(q, kc, vec![2], vec![2], vec![0], vec![0]); // (nh,1,s_kv)
+        let scale = b.constant((hd as f64).sqrt(), DType::F32);
+        let scale_b = b.broadcast_scalar(scale, vec![nh, 1, s_kv]);
+        let scaled = b.div(scores, scale_b);
+        // pass 1: global max
+        b.at("flash_decoding.py", 31);
+        let m_loc = b.reduce(scaled, ReduceKind::Max, vec![2]); // (nh,1)
+        let m = if cores > 1 {
+            b.all_reduce(m_loc, ReduceKind::Max, ReplicaGroups::full(cores))
+        } else {
+            m_loc
+        };
+        let mb = b.broadcast(m, vec![nh, 1, s_kv], vec![0, 1]);
+        let sh = b.sub(scaled, mb);
+        let e = b.exp(sh);
+        // pass 2: numerator + denominator
+        b.at("flash_decoding.py", 42);
+        let num = b.dot_general(e, vc, vec![2], vec![1], vec![0], vec![0]); // (nh,1,hd)
+        let den = b.reduce(e, ReduceKind::Add, vec![2]); // (nh,1)
+        let (num, den) = if cores > 1 {
+            (
+                b.all_reduce(num, ReduceKind::Add, ReplicaGroups::full(cores)),
+                b.all_reduce(den, ReduceKind::Add, ReplicaGroups::full(cores)),
+            )
+        } else {
+            (num, den)
+        };
+        b.at("flash_decoding.py", 50);
+        let den_b = b.broadcast(den, vec![nh, 1, hd], vec![0, 1]);
+        let out = b.div(num, den_b);
+        b.output(out);
+        (b.finish(), vec![q, kc, vc])
+    };
+
+    let (base, bp) = build(1, s);
+    let (dist, dp) = build(tp, s_local);
+    let ann = vec![
+        Annotation::replicated(bp[0], dp[0]),
+        Annotation::shard(bp[1], dp[1], 1, tp),
+        Annotation::shard(bp[2], dp[2], 1, tp),
+    ];
+    GraphPair::new(base, dist, ann)
+}
+
+/// Split baseline inputs into per-core distributed inputs according to the
+/// pair's annotations (used by the interpreter differential tests and the
+/// numerical baseline verifier).
+pub fn shard_inputs(
+    pair: &GraphPair,
+    base_inputs: &[crate::interp::Tensor],
+) -> Vec<Vec<crate::interp::Tensor>> {
+    let cores = pair.dist.num_cores as usize;
+    let bparams = pair.base.parameters();
+    let dparams = pair.dist.parameters();
+    let mut per_core: Vec<Vec<crate::interp::Tensor>> = vec![Vec::new(); cores];
+    for &dp in &dparams {
+        let ann = pair
+            .annotations
+            .iter()
+            .find(|a| a.distributed == dp)
+            .unwrap_or_else(|| panic!("no annotation for dist param {dp:?}"));
+        let bpos = bparams
+            .iter()
+            .position(|&b| Some(b) == ann.baseline)
+            .expect("annotation names unknown baseline param");
+        let bval = &base_inputs[bpos];
+        match &ann.relation {
+            crate::ir::InputRelation::Replicated => {
+                for c in per_core.iter_mut() {
+                    c.push(bval.clone());
+                }
+            }
+            crate::ir::InputRelation::ShardAlong { dim, parts } => {
+                let shards = bval.split(*dim, *parts);
+                for (c, sh) in per_core.iter_mut().zip(shards) {
+                    c.push(sh);
+                }
+            }
+            crate::ir::InputRelation::DeviceIds => {
+                for (r, c) in per_core.iter_mut().enumerate() {
+                    c.push(crate::interp::Tensor::scalar(r as f64, DType::S32));
+                }
+            }
+        }
+    }
+    per_core
+}

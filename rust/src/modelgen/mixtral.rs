@@ -1,0 +1,178 @@
+//! Mixtral-style MoE graph pairs: expert parallelism with the baseline's
+//! unrolled expert-sum loop (paper §7.1 "expert parallelism implemented
+//! with recursive loops", Figure 8's slicing/unroll patterns).
+
+use super::{GraphPair, Parallelism};
+use crate::ir::{Annotation, DType, GraphBuilder, NodeId, ReduceKind, ReplicaGroups, Shape};
+
+/// Mixtral model configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MixtralConfig {
+    /// Decoder layers.
+    pub layers: u32,
+    /// Hidden size.
+    pub hidden: i64,
+    /// Experts per layer.
+    pub experts: i64,
+    /// Expert FFN size.
+    pub ffn: i64,
+    /// Sequence length.
+    pub seqlen: i64,
+    /// Batch size.
+    pub batch: i64,
+}
+
+impl MixtralConfig {
+    /// Mixtral-8x7B-shaped graph (32 layers, 8 experts).
+    pub fn mixtral_8x7b() -> Self {
+        MixtralConfig { layers: 32, hidden: 4096, experts: 8, ffn: 14336, seqlen: 64, batch: 4 }
+    }
+    /// Mixtral-8x22B-shaped graph (56 layers, 8 experts).
+    pub fn mixtral_8x22b() -> Self {
+        MixtralConfig { layers: 56, hidden: 6144, experts: 8, ffn: 16384, seqlen: 64, batch: 4 }
+    }
+    /// Tiny config for interpreter tests.
+    pub fn tiny() -> Self {
+        MixtralConfig { layers: 2, hidden: 8, experts: 4, ffn: 8, seqlen: 2, batch: 1 }
+    }
+    /// Token count.
+    pub fn tokens(&self) -> i64 {
+        self.batch * self.seqlen
+    }
+}
+
+fn f32s(dims: &[i64]) -> Shape {
+    Shape::new(DType::F32, dims.to_vec())
+}
+
+struct MoeWeights {
+    /// stacked expert weights: up (E, H, F) / down (E, F, H) — sharded
+    /// along E across the EP mesh.
+    w_up: NodeId,
+    w_down: NodeId,
+}
+
+/// One expert's FFN given its (H,F)/(F,H) weights.
+fn expert_ffn(b: &mut GraphBuilder, x: NodeId, wu: NodeId, wd: NodeId) -> NodeId {
+    b.at("moe.py", 58).in_func("expert_mlp");
+    let up = b.matmul(x, wu);
+    let s = b.logistic(up);
+    let act = b.mul(up, s);
+    b.matmul(act, wd)
+}
+
+/// Baseline MoE block: unrolled loop summing every expert's contribution
+/// (z = e₀(x) + e₁(x) + …) via slices of the stacked weights.
+fn moe_block_base(b: &mut GraphBuilder, x: NodeId, w: &MoeWeights, cfg: &MixtralConfig) -> NodeId {
+    let (h, f) = (cfg.hidden, cfg.ffn);
+    let mut acc: Option<NodeId> = None;
+    for e in 0..cfg.experts {
+        b.at("moe.py", 70).in_func("moe_unrolled");
+        let wu3 = b.slice(w.w_up, vec![e, 0, 0], vec![e + 1, h, f]);
+        let wu = b.reshape(wu3, vec![h, f]);
+        let wd3 = b.slice(w.w_down, vec![e, 0, 0], vec![e + 1, f, h]);
+        let wd = b.reshape(wd3, vec![f, h]);
+        let y = expert_ffn(b, x, wu, wd);
+        b.at("moe.py", 76).in_func("moe_unrolled");
+        acc = Some(match acc {
+            None => y,
+            Some(a) => b.add(a, y),
+        });
+    }
+    acc.unwrap()
+}
+
+/// Distributed MoE block: each core holds `experts/ep` experts locally,
+/// computes their sum, and all-reduces across the mesh.
+fn moe_block_dist(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    w: &MoeWeights,
+    cfg: &MixtralConfig,
+    ep: u32,
+) -> NodeId {
+    let (h, f) = (cfg.hidden, cfg.ffn);
+    let local = cfg.experts / ep as i64;
+    let mut acc: Option<NodeId> = None;
+    for e in 0..local {
+        b.at("moe.py", 70).in_func("moe_local");
+        // single local expert: the framework emits a plain reshape of the
+        // local stacked-weight shard (no slice), matching the baseline's
+        // reshape(slice(W, e)) node shapes exactly
+        let (wu, wd) = if local == 1 {
+            (b.reshape(w.w_up, vec![h, f]), b.reshape(w.w_down, vec![f, h]))
+        } else {
+            let wu3 = b.slice(w.w_up, vec![e, 0, 0], vec![e + 1, h, f]);
+            let wu = b.reshape(wu3, vec![h, f]);
+            let wd3 = b.slice(w.w_down, vec![e, 0, 0], vec![e + 1, f, h]);
+            (wu, b.reshape(wd3, vec![f, h]))
+        };
+        let y = expert_ffn(b, x, wu, wd);
+        acc = Some(match acc {
+            None => y,
+            Some(a) => b.add(a, y),
+        });
+    }
+    b.at("moe.py", 84).in_func("moe_local");
+    b.all_reduce(acc.unwrap(), ReduceKind::Add, ReplicaGroups::full(ep))
+}
+
+/// Build the Mixtral pair under expert parallelism.
+pub fn mixtral_pair(cfg: &MixtralConfig, par: Parallelism) -> GraphPair {
+    let Parallelism::Expert { ep } = par else {
+        panic!("mixtral_pair expects expert parallelism");
+    };
+    assert_eq!(cfg.experts % ep as i64, 0, "experts must divide ep");
+    let t = cfg.tokens();
+    let (h, f) = (cfg.hidden, cfg.ffn);
+    let e_local = cfg.experts / ep as i64;
+
+    let mut bb = GraphBuilder::new("mixtral_base", 1);
+    bb.layer(None).at("model.py", 10).in_func("model_fwd");
+    let bx = bb.parameter("hidden_states", f32s(&[t, h]));
+    let mut cur = bx;
+    let mut bws = Vec::new();
+    for l in 0..cfg.layers {
+        bb.layer(Some(l));
+        bb.at("moe.py", 30).in_func("moe_layer");
+        let w = MoeWeights {
+            w_up: bb.parameter(&format!("l{l}.experts.up"), f32s(&[cfg.experts, h, f])),
+            w_down: bb.parameter(&format!("l{l}.experts.down"), f32s(&[cfg.experts, f, h])),
+        };
+        let moe = moe_block_base(&mut bb, cur, &w, cfg);
+        bb.at("moe.py", 90).in_func("moe_layer");
+        cur = bb.add(cur, moe);
+        bws.push(w);
+    }
+    bb.layer(None);
+    bb.output(cur);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("mixtral_dist", ep);
+    db.layer(None).at("model.py", 10).in_func("model_fwd");
+    let dx = db.parameter("hidden_states", f32s(&[t, h]));
+    let mut cur = dx;
+    let mut dws = Vec::new();
+    for l in 0..cfg.layers {
+        db.layer(Some(l));
+        db.at("moe.py", 30).in_func("moe_layer");
+        let w = MoeWeights {
+            w_up: db.parameter(&format!("l{l}.experts.up"), f32s(&[e_local, h, f])),
+            w_down: db.parameter(&format!("l{l}.experts.down"), f32s(&[e_local, f, h])),
+        };
+        let moe = moe_block_dist(&mut db, cur, &w, cfg, ep);
+        db.at("moe.py", 90).in_func("moe_layer");
+        cur = db.add(cur, moe);
+        dws.push(w);
+    }
+    db.layer(None);
+    db.output(cur);
+    let dist = db.finish();
+
+    let mut ann = vec![Annotation::replicated(bx, dx)];
+    for (bw, dw) in bws.iter().zip(&dws) {
+        ann.push(Annotation::shard(bw.w_up, dw.w_up, 0, ep));
+        ann.push(Annotation::shard(bw.w_down, dw.w_down, 0, ep));
+    }
+    GraphPair::new(base, dist, ann)
+}

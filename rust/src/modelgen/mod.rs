@@ -1,0 +1,73 @@
+//! Model zoo: the "framework backend" of the reproduction.
+//!
+//! The paper generates its graphs from Transformers NeuronX / NeuronX
+//! Distributed on Trainium. That stack is unavailable here, so this module
+//! plays the instrumented framework: it emits baseline (single-device) and
+//! distributed (SPMD) IR graphs for Llama-style dense and Mixtral-style
+//! MoE transformers under the paper's four parallelization techniques —
+//! tensor parallelism, sequence parallelism, expert parallelism and flash
+//! decoding — with per-node source metadata and sharding annotations, the
+//! same structural patterns the NeuronX compiler emits (column/row-sharded
+//! projections, partial products discharged by collectives, BSH
+//! reshape–transpose output layout, unrolled expert loops).
+
+pub mod llama;
+mod mixtral;
+pub mod demo;
+
+pub use crate::verifier::GraphPair;
+pub use llama::{llama_pair, LlamaConfig};
+pub use mixtral::{mixtral_pair, MixtralConfig};
+
+/// Parallelization technique of the distributed graph (§7.1: the four
+/// techniques the paper evaluates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Megatron-style tensor parallelism: attention heads + MLP sharded.
+    Tensor {
+        /// TP degree (number of cores).
+        tp: u32,
+    },
+    /// Tensor parallelism + sequence-parallel norm/residual sections.
+    Sequence {
+        /// TP degree.
+        tp: u32,
+    },
+    /// Flash decoding: KV cache sharded along the sequence dimension,
+    /// distributed two-pass softmax (max + sum all-reduces).
+    FlashDecoding {
+        /// KV-shard degree.
+        tp: u32,
+    },
+    /// Expert parallelism (Mixtral): one expert group per core, baseline
+    /// computes the unrolled expert sum.
+    Expert {
+        /// EP degree (== experts in our builder).
+        ep: u32,
+    },
+}
+
+impl Parallelism {
+    /// Core count of the distributed graph.
+    pub fn cores(&self) -> u32 {
+        match self {
+            Parallelism::Tensor { tp }
+            | Parallelism::Sequence { tp }
+            | Parallelism::FlashDecoding { tp } => *tp,
+            Parallelism::Expert { ep } => *ep,
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Parallelism::Tensor { tp } => format!("tp{tp}"),
+            Parallelism::Sequence { tp } => format!("sp{tp}"),
+            Parallelism::FlashDecoding { tp } => format!("fd{tp}"),
+            Parallelism::Expert { ep } => format!("ep{ep}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

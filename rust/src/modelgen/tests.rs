@@ -1,0 +1,137 @@
+//! Model-zoo tests: every generated pair must (a) numerically agree under
+//! the SPMD interpreter and (b) verify with Scalify. This is the strongest
+//! evidence the reproduction's graphs mean what they claim.
+
+use super::*;
+use crate::interp::{run_single, run_spmd, Tensor};
+use crate::modelgen::llama::shard_inputs;
+use crate::util::Prng;
+use crate::verifier::{Verifier, VerifyConfig};
+
+fn cfg_seq() -> VerifyConfig {
+    VerifyConfig { parallel: false, ..VerifyConfig::default() }
+}
+
+/// Interpreter differential: baseline vs every core of the SPMD run.
+fn assert_numerically_equivalent(pair: &GraphPair, tol: f64, seed: u64) {
+    let mut p = Prng::new(seed);
+    let base_inputs: Vec<Tensor> = pair
+        .base
+        .parameters()
+        .iter()
+        .map(|&pid| Tensor::random(pair.base.node(pid).shape.clone(), &mut p))
+        .collect();
+    let base_out = run_single(&pair.base, &base_inputs).unwrap();
+    let dist_inputs = shard_inputs(pair, &base_inputs);
+    let dist_out = run_spmd(&pair.dist, &dist_inputs).unwrap();
+    for core in 0..pair.dist.num_cores as usize {
+        let diff = base_out[0].max_abs_diff(&dist_out[core][0]);
+        assert!(diff < tol, "core {core} diverged by {diff}");
+    }
+}
+
+#[test]
+fn llama_tp_tiny_numerics_match() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+    assert_numerically_equivalent(&pair, 1e-4, 11);
+}
+
+#[test]
+fn llama_tp_tiny_verifies() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(report.verified(), "{}", render_failure(&report));
+}
+
+#[test]
+fn llama_sp_tiny_numerics_match() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Sequence { tp: 2 });
+    assert_numerically_equivalent(&pair, 1e-4, 13);
+}
+
+#[test]
+fn llama_sp_tiny_verifies() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Sequence { tp: 2 });
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(report.verified(), "{}", render_failure(&report));
+}
+
+#[test]
+fn flash_decoding_tiny_numerics_match() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::FlashDecoding { tp: 2 });
+    assert_numerically_equivalent(&pair, 1e-4, 17);
+}
+
+#[test]
+fn flash_decoding_tiny_verifies() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::FlashDecoding { tp: 2 });
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(report.verified(), "{}", render_failure(&report));
+}
+
+#[test]
+fn mixtral_ep_tiny_numerics_match() {
+    let pair = mixtral_pair(&MixtralConfig::tiny(), Parallelism::Expert { ep: 4 });
+    assert_numerically_equivalent(&pair, 1e-4, 19);
+}
+
+#[test]
+fn mixtral_ep_tiny_verifies() {
+    let pair = mixtral_pair(&MixtralConfig::tiny(), Parallelism::Expert { ep: 4 });
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(report.verified(), "{}", render_failure(&report));
+}
+
+#[test]
+fn demo_pairs_behave() {
+    let good = demo::matmul_allreduce_pair(4);
+    assert_numerically_equivalent(&good, 1e-4, 23);
+    assert!(Verifier::new(cfg_seq()).verify_pair(&good).verified());
+
+    let bsh_ok = demo::bsh_pair(false);
+    assert!(Verifier::new(cfg_seq()).verify_pair(&bsh_ok).verified());
+    let bsh_bug = demo::bsh_pair(true);
+    assert!(!Verifier::new(cfg_seq()).verify_pair(&bsh_bug).verified());
+}
+
+#[test]
+fn graphs_validate_and_have_metadata() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+    pair.base.validate().unwrap();
+    pair.dist.validate().unwrap();
+    // every live node inside a layer carries a source site
+    let live = pair.dist.live_set();
+    let tagged = pair
+        .dist
+        .nodes
+        .iter()
+        .filter(|n| live[n.id.idx()] && n.meta.layer.is_some())
+        .filter(|n| !pair.dist.source_site(n.id).is_empty())
+        .count();
+    let total = pair
+        .dist
+        .nodes
+        .iter()
+        .filter(|n| live[n.id.idx()] && n.meta.layer.is_some())
+        .count();
+    assert_eq!(tagged, total, "all layer nodes must carry source sites");
+}
+
+#[test]
+fn multi_layer_memoizes() {
+    let cfg = LlamaConfig { layers: 4, ..LlamaConfig::tiny() };
+    let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 2 });
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(report.verified(), "{}", render_failure(&report));
+    let memoized = report.layers.iter().filter(|l| l.memoized).count();
+    assert!(memoized >= 3, "identical decoder layers should memoize, got {memoized}");
+}
+
+fn render_failure(report: &crate::verifier::VerifyReport) -> String {
+    let mut s = report.summary();
+    for d in report.discrepancies() {
+        s.push('\n');
+        s.push_str(&d.render());
+    }
+    s
+}

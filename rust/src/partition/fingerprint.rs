@@ -1,0 +1,154 @@
+//! Layer fingerprinting + memo table (paper §5.1 "Layer memoization").
+
+use super::LayerSlice;
+use crate::verifier::boundary::RelSummary;
+use rustc_hash::FxHashMap;
+use std::hash::{Hash, Hasher};
+
+/// Structural fingerprint of a (baseline, distributed) layer pair plus its
+/// input relations. Two pairs with equal fingerprints verify identically,
+/// so the memo replays the first pair's result.
+pub fn fingerprint_pair(
+    base: &LayerSlice,
+    dist: &LayerSlice,
+    input_rels: &[(usize, usize, RelSummary)],
+    cores: u32,
+) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    cores.hash(&mut h);
+    hash_slice(base, &mut h);
+    hash_slice(dist, &mut h);
+    for (bpos, dpos, r) in input_rels {
+        bpos.hash(&mut h);
+        dpos.hash(&mut h);
+        format!("{r:?}").hash(&mut h);
+    }
+    h.finish()
+}
+
+fn hash_slice<H: Hasher>(slice: &LayerSlice, h: &mut H) {
+    slice.graph.nodes.len().hash(h);
+    for n in &slice.graph.nodes {
+        // op identity incl. attributes; Debug formatting is stable within
+        // one build and fingerprints never cross process boundaries.
+        // Parameters hash by position only — weight *names* differ across
+        // otherwise-identical layers (`w0` vs `w1`) and must not defeat
+        // memoization.
+        match &n.op {
+            crate::ir::Op::Parameter { index, .. } => ("param", index).hash(h),
+            op => format!("{op:?}").hash(h),
+        }
+        n.shape.dims.hash(h);
+        (n.shape.dtype as u8).hash(h);
+        for i in &n.inputs {
+            i.0.hash(h);
+        }
+    }
+    for o in &slice.graph.outputs {
+        o.0.hash(h);
+    }
+}
+
+/// Memoized verification result of a layer pair.
+#[derive(Clone, Debug)]
+pub struct MemoEntry {
+    /// Whether the layer pair verified.
+    pub verified: bool,
+    /// Relation summary of each boundary output pair (propagated to the
+    /// next layer per Algorithm 1).
+    pub out_rels: Vec<RelSummary>,
+    /// How many e-graph nodes the original verification used (stats).
+    pub egraph_nodes: usize,
+}
+
+/// Fingerprint → result table.
+#[derive(Default, Debug)]
+pub struct LayerMemo {
+    table: FxHashMap<u64, MemoEntry>,
+    /// Cache hits served.
+    pub hits: usize,
+    /// Entries inserted.
+    pub misses: usize,
+}
+
+impl LayerMemo {
+    /// Empty memo.
+    pub fn new() -> LayerMemo {
+        LayerMemo::default()
+    }
+
+    /// Lookup (counts a hit when present).
+    pub fn get(&mut self, fp: u64) -> Option<MemoEntry> {
+        let entry = self.table.get(&fp).cloned();
+        if entry.is_some() {
+            self.hits += 1;
+        }
+        entry
+    }
+
+    /// Insert a computed result.
+    pub fn put(&mut self, fp: u64, entry: MemoEntry) {
+        self.misses += 1;
+        self.table.insert(fp, entry);
+    }
+
+    /// Distinct fingerprints stored.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, Shape};
+    use crate::partition::extract_layers;
+
+    fn two_identical_layers() -> Vec<LayerSlice> {
+        let mut b = GraphBuilder::new("m", 1);
+        b.layer(None);
+        let x = b.parameter("x", Shape::new(DType::F32, vec![4, 8]));
+        let mut cur = x;
+        for l in 0..2 {
+            b.layer(Some(l));
+            let w = b.parameter(&format!("w{l}"), Shape::new(DType::F32, vec![8, 8]));
+            let h = b.matmul(cur, w);
+            cur = b.tanh(h);
+        }
+        b.output(cur);
+        let g = b.finish();
+        extract_layers(&g)
+    }
+
+    #[test]
+    fn identical_layers_same_fingerprint() {
+        let layers = two_identical_layers();
+        let l0 = layers.iter().find(|l| l.layer == 0).unwrap();
+        let l1 = layers.iter().find(|l| l.layer == 1).unwrap();
+        let fp0 = fingerprint_pair(l0, l0, &[], 2);
+        let fp1 = fingerprint_pair(l1, l1, &[], 2);
+        assert_eq!(fp0, fp1);
+        // different input relations change the fingerprint
+        let fp2 = fingerprint_pair(l0, l0, &[(0, 0, RelSummary::Duplicate)], 2);
+        assert_ne!(fp0, fp2);
+        // different core count changes the fingerprint
+        let fp3 = fingerprint_pair(l0, l0, &[], 4);
+        assert_ne!(fp0, fp3);
+    }
+
+    #[test]
+    fn memo_hit_miss_counters() {
+        let mut memo = LayerMemo::new();
+        assert!(memo.get(42).is_none());
+        memo.put(42, MemoEntry { verified: true, out_rels: vec![], egraph_nodes: 10 });
+        assert!(memo.get(42).is_some());
+        assert_eq!(memo.hits, 1);
+        assert_eq!(memo.misses, 1);
+        assert_eq!(memo.len(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph partitioning, layer slicing and fingerprint memoization
+//! (paper §5.1, Algorithm 1).
+//!
+//! Large graphs make whole-graph equality saturation blow up; Scalify cuts
+//! the pair along **layer boundaries** (recorded by the framework
+//! instrumentation in each node's [`crate::ir::Meta::layer`]), verifies
+//! each layer pair in its own bounded e-graph, and **memoizes** layer
+//! results by a structural fingerprint so the 126 identical decoder layers
+//! of a Llama-405B-style graph are verified once.
+
+mod slice;
+pub mod fingerprint;
+
+pub use fingerprint::{fingerprint_pair, LayerMemo, MemoEntry};
+pub use slice::{extract_layers, LayerSlice};

@@ -1,0 +1,196 @@
+//! Property-testing micro-framework (proptest is unavailable offline).
+//!
+//! Seeded generators + failure shrinking by re-running with recorded seeds.
+//! Each property runs `cases` times with derived seeds; on failure the
+//! minimal failing seed is reported so the case reproduces exactly.
+
+use crate::util::Prng;
+
+/// Run `prop` for `cases` generated inputs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Prng) -> Result<(), String>>(
+    name: &str,
+    base_seed: u64,
+    cases: u64,
+    mut prop: F,
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(i);
+        let mut prng = Prng::new(seed);
+        if let Err(msg) = prop(&mut prng) {
+            panic!("property '{name}' failed (seed {seed}, case {i}): {msg}");
+        }
+    }
+}
+
+/// Generate a random small shape (rank 1..=3, dims 1..=6).
+pub fn small_dims(p: &mut Prng) -> Vec<i64> {
+    let rank = p.range(1, 4);
+    (0..rank).map(|_| p.range(1, 7) as i64).collect()
+}
+
+/// Generate a random permutation of 0..n.
+pub fn permutation(p: &mut Prng, n: usize) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    p.shuffle(&mut perm);
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{infer_bijection, AtomStore, AxisExpr};
+
+    #[test]
+    fn prop_bijection_roundtrip_random_layout_chains() {
+        // any chain of grouping reshapes + transposes on both paths admits
+        // a valid bijection (same atoms, each once) and check passes
+        check("bijection-roundtrip", 0xB17, 200, |p| {
+            let mut st = AtomStore::new();
+            let dims = small_dims(p);
+            let x = AxisExpr::from_shape(&mut st, &dims);
+            let chain = |st: &mut AtomStore, mut e: AxisExpr, p: &mut Prng| {
+                for _ in 0..p.range(0, 4) {
+                    if p.chance(0.5) {
+                        let perm = permutation(p, e.rank());
+                        e = e.transpose(&perm).unwrap();
+                    } else {
+                        // merge all axes then split into a random grouping
+                        let total = e.dims(st).iter().product::<i64>();
+                        let mut parts = Vec::new();
+                        let mut rem = total;
+                        while rem > 1 && parts.len() < 3 {
+                            let mut d = 1;
+                            for cand in [2, 3, 4, 5] {
+                                if rem % cand == 0 && p.chance(0.4) {
+                                    d = cand;
+                                    break;
+                                }
+                            }
+                            parts.push(d);
+                            rem /= d;
+                        }
+                        parts.push(rem);
+                        if let Ok(r) = e.reshape(st, &parts) {
+                            e = r;
+                        }
+                    }
+                }
+                e
+            };
+            let a = chain(&mut st, x.clone(), p);
+            let b = chain(&mut st, x, p);
+            match infer_bijection(&st, &a, &b) {
+                Some(bij) => {
+                    if !crate::layout::bijection_check(&st, &a, &b, &bij) {
+                        return Err(format!("bijection failed check: {}", bij.describe()));
+                    }
+                    Ok(())
+                }
+                None => Err("no bijection for same-atom layouts".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_printed_hlo_roundtrips_numerically() {
+        use crate::hlo::{parse_hlo_module, print_hlo_module};
+        use crate::interp::{run_single, Tensor};
+        use crate::ir::{DType, GraphBuilder, ReduceKind, Shape};
+        check("hlo-roundtrip-numerics", 0x4110, 60, |p| {
+            let dims = vec![p.range(1, 5) as i64, p.range(1, 5) as i64];
+            let mut b = GraphBuilder::new("rt", 1);
+            let x = b.parameter("x", Shape::new(DType::F32, dims.clone()));
+            let mut cur = x;
+            for _ in 0..p.range(1, 5) {
+                cur = match p.range(0, 5) {
+                    0 => b.exp(cur),
+                    1 => b.tanh(cur),
+                    2 => b.neg(cur),
+                    3 => {
+                        let t = b.transpose(cur, vec![1, 0]);
+                        b.transpose(t, vec![1, 0])
+                    }
+                    _ => b.abs(cur),
+                };
+            }
+            let red = b.reduce(cur, ReduceKind::Add, vec![0, 1]);
+            b.output(red);
+            let g = b.finish();
+            let xv = Tensor::random(Shape::new(DType::F32, dims), p);
+            let before = run_single(&g, &[xv.clone()]).map_err(|e| e.to_string())?;
+            let g2 = parse_hlo_module(&print_hlo_module(&g), 1).map_err(|e| e.to_string())?;
+            let after = run_single(&g2, &[xv]).map_err(|e| e.to_string())?;
+            let d = before[0].max_abs_diff(&after[0]);
+            if d > 1e-9 {
+                return Err(format!("roundtrip drift {d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_union_find_congruence_random_merges() {
+        use crate::egraph::{EGraph, ENode};
+        use crate::ir::Op;
+        check("egraph-congruence", 0xE6, 100, |p| {
+            let mut eg = EGraph::new();
+            let leaves: Vec<_> = (0..4)
+                .map(|i| {
+                    eg.add(ENode::new(
+                        Op::Parameter { index: i, name: format!("p{i}") },
+                        vec![],
+                    ))
+                })
+                .collect();
+            // unary towers over each leaf
+            let towers: Vec<Vec<_>> = leaves
+                .iter()
+                .map(|&l| {
+                    let mut t = vec![l];
+                    for _ in 0..3 {
+                        let top = *t.last().unwrap();
+                        t.push(eg.add(ENode::new(Op::Neg, vec![top])));
+                    }
+                    t
+                })
+                .collect();
+            // random leaf unions
+            let a = p.range(0, 4);
+            let b = p.range(0, 4);
+            eg.union(leaves[a], leaves[b]);
+            eg.rebuild();
+            // congruence must lift to every tower level
+            for lvl in 0..4 {
+                if !eg.same(towers[a][lvl], towers[b][lvl]) {
+                    return Err(format!("level {lvl} not congruent"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_verified_pairs_are_numerically_equivalent() {
+        // soundness spot-check: whenever Scalify verifies a random demo
+        // pair, the interpreter agrees
+        use crate::baseline::numerical_verify;
+        use crate::modelgen::demo::matmul_allreduce_pair;
+        check("verify-implies-numerics", 0x5EED, 8, |p| {
+            let tp = [2u32, 4][p.range(0, 2)];
+            let pair = matmul_allreduce_pair(tp);
+            let report = crate::verifier::Verifier::new(crate::verifier::VerifyConfig {
+                parallel: false,
+                ..Default::default()
+            })
+            .verify_pair(&pair);
+            if !report.verified() {
+                return Err("demo pair must verify".into());
+            }
+            let num = numerical_verify(&pair, 2, 1e-4, p.next_u64());
+            if !num.equivalent {
+                return Err(format!("verified pair diverged numerically by {}", num.max_dev));
+            }
+            Ok(())
+        });
+    }
+}

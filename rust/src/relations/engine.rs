@@ -1,0 +1,1499 @@
+//! Relation propagation engine: the Table-1 rule templates.
+//!
+//! Rules are dispatched by the distributed node's operator ("polymorphic
+//! over operator types", paper §6) over the facts of its operands. All
+//! lookups go through the e-graph, so structurally-normalized terms match
+//! even when the two graphs spell them differently.
+
+use super::facts::{Fact, FactKey, PerCoreFact};
+use crate::egraph::{EGraph, ENode, Id};
+use crate::ir::{Graph, Node, NodeId, Op, ReduceKind, ReplicaGroups};
+use crate::layout::{AtomStore, AxisExpr};
+use rustc_hash::{FxHashMap, FxHashSet};
+
+
+/// Lookup an e-node, requiring the found class to contain a *baseline*
+/// term. Without this check, a distributed node that the e-graph merged
+/// with prior facts could be found as its own "baseline partner", which
+/// would let a divergent chain silently verify against itself.
+fn lookup_base(eg: &EGraph, enode: &ENode) -> Option<Id> {
+    eg.lookup(enode).filter(|&id| eg.class(id).data.origin.baseline)
+}
+
+/// Shard stride profile of a flattened index: total extent plus the
+/// (stride, size) of every core-distributed digit. Two operands whose
+/// profiles match embed their local indices into the global index the same
+/// way, so their per-core values pair correctly.
+fn shard_profile(
+    st: &AtomStore,
+    leaves: &[crate::layout::AtomId],
+    missing: &[crate::layout::AtomId],
+) -> (i64, Vec<(i64, i64)>) {
+    let total: i64 = leaves.iter().map(|&a| st.size(a)).product();
+    let mut out = Vec::new();
+    let mut stride = total;
+    for &a in leaves {
+        stride /= st.size(a);
+        if missing.contains(&a) {
+            out.push((stride, st.size(a)));
+        }
+    }
+    out.sort_unstable();
+    (total, out)
+}
+
+/// Graph-pair context handed to the engine by the verifier.
+pub struct GraphCtx<'a> {
+    /// Baseline graph.
+    pub base: &'a Graph,
+    /// Distributed graph.
+    pub dist: &'a Graph,
+    /// Baseline node → e-class.
+    pub b2c: &'a [Id],
+    /// Distributed node → e-class.
+    pub d2c: &'a [Id],
+    /// Baseline use-lists.
+    pub base_uses: &'a [Vec<NodeId>],
+    /// Lazy class → baseline-node index (valid for one propagation round —
+    /// unions between rounds invalidate it, so the verifier rebuilds the
+    /// context each round).
+    pub class_index: std::cell::RefCell<Option<FxHashMap<Id, Vec<NodeId>>>>,
+}
+
+impl<'a> GraphCtx<'a> {
+    /// Baseline nodes whose class canonicalizes to `class` — served from a
+    /// lazily-built index (the previous full-graph scan per dot-fact was
+    /// the top L3 hotspot, see EXPERIMENTS.md §Perf).
+    fn base_nodes_of(&self, eg: &EGraph, class: Id) -> Vec<NodeId> {
+        let canon = eg.find(class);
+        let mut cache = self.class_index.borrow_mut();
+        if cache.is_none() {
+            let mut idx: FxHashMap<Id, Vec<NodeId>> = FxHashMap::default();
+            for n in &self.base.nodes {
+                idx.entry(eg.find(self.b2c[n.id.idx()])).or_default().push(n.id);
+            }
+            *cache = Some(idx);
+        }
+        cache.as_ref().unwrap().get(&canon).cloned().unwrap_or_default()
+    }
+}
+
+/// Outcome of processing one distributed node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// At least one new fact derived.
+    Derived,
+    /// Facts existed already; nothing new.
+    Known,
+    /// Inputs carry facts but no rule fired — a discrepancy frontier
+    /// candidate (§5.3).
+    NoRule,
+    /// Inputs don't have facts yet.
+    NotReady,
+}
+
+/// The relation store + rule engine.
+pub struct RelEngine {
+    /// Shared symbolic-axis store.
+    pub store: AtomStore,
+    facts: FxHashMap<Id, Vec<Fact>>,
+    keys: FxHashSet<FactKey>,
+    percore: FxHashMap<Id, Vec<PerCoreFact>>,
+    /// SPMD width.
+    pub cores: u32,
+    /// Facts added since construction (monotone counter for fixpoints).
+    pub fact_count: usize,
+}
+
+impl RelEngine {
+    /// New engine for a `cores`-wide mesh.
+    pub fn new(cores: u32) -> RelEngine {
+        RelEngine {
+            store: AtomStore::new(),
+            facts: FxHashMap::default(),
+            keys: FxHashSet::default(),
+            percore: FxHashMap::default(),
+            cores,
+            fact_count: 0,
+        }
+    }
+
+    /// Add a fact (deduped). Returns true when new.
+    pub fn add_fact(&mut self, eg: &EGraph, mut fact: Fact) -> bool {
+        fact.base = eg.find(fact.base);
+        fact.dist = eg.find(fact.dist);
+        let key = fact.key(&self.store);
+        if !self.keys.insert(key) {
+            return false;
+        }
+        self.facts.entry(fact.dist).or_default().push(fact);
+        self.fact_count += 1;
+        true
+    }
+
+    /// Add a per-core fact (deduped).
+    pub fn add_percore(&mut self, eg: &EGraph, mut fact: PerCoreFact) -> bool {
+        fact.dist = eg.find(fact.dist);
+        for b in fact.bases.iter_mut() {
+            *b = eg.find(*b);
+        }
+        let list = self.percore.entry(fact.dist).or_default();
+        if list.contains(&fact) {
+            return false;
+        }
+        list.push(fact);
+        self.fact_count += 1;
+        true
+    }
+
+    /// Facts of a distributed class.
+    pub fn facts_for(&self, eg: &EGraph, dist: Id) -> Vec<Fact> {
+        self.facts.get(&eg.find(dist)).cloned().unwrap_or_default()
+    }
+
+    /// Per-core facts of a distributed class.
+    pub fn percore_for(&self, eg: &EGraph, dist: Id) -> Vec<PerCoreFact> {
+        self.percore.get(&eg.find(dist)).cloned().unwrap_or_default()
+    }
+
+    /// True when class `dist` has any relation at all.
+    pub fn has_any(&self, eg: &EGraph, dist: Id) -> bool {
+        let c = eg.find(dist);
+        self.facts.get(&c).map(|v| !v.is_empty()).unwrap_or(false)
+            || self.percore.get(&c).map(|v| !v.is_empty()).unwrap_or(false)
+    }
+
+    /// Re-key the stores after e-graph unions moved canonical ids.
+    pub fn rekey(&mut self, eg: &EGraph) {
+        let facts = std::mem::take(&mut self.facts);
+        for (_, list) in facts {
+            for mut f in list {
+                f.base = eg.find(f.base);
+                f.dist = eg.find(f.dist);
+                let key = f.key(&self.store);
+                if self.keys.insert(key) {
+                    self.fact_count += 1;
+                }
+                self.facts.entry(f.dist).or_default().push(f);
+            }
+        }
+        let percore = std::mem::take(&mut self.percore);
+        for (_, list) in percore {
+            for mut f in list {
+                f.dist = eg.find(f.dist);
+                for b in f.bases.iter_mut() {
+                    *b = eg.find(*b);
+                }
+                let entry = self.percore.entry(f.dist).or_default();
+                if !entry.contains(&f) {
+                    entry.push(f);
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Input registration (§5.2.1)
+    // ---------------------------------------------------------------
+
+    /// Register `dist` param as `base` param sharded along `dim`.
+    pub fn register_shard(
+        &mut self,
+        eg: &EGraph,
+        base: Id,
+        dist: Id,
+        base_dims: &[i64],
+        dim: usize,
+        parts: u32,
+    ) {
+        let base_expr = AxisExpr::from_shape(&mut self.store, base_dims);
+        let axis_atom = base_expr.axes[dim][0];
+        let kids = self
+            .store
+            .split_leaf(axis_atom, &[parts as i64, base_dims[dim] / parts as i64])
+            .expect("shard split");
+        let mut dist_axes = base_expr.axes.clone();
+        dist_axes[dim] = vec![kids[1]];
+        let fact = Fact {
+            base,
+            dist,
+            base_expr,
+            dist_expr: AxisExpr::from_axes(dist_axes),
+            shard_atoms: vec![kids[0]],
+            partial: None,
+        };
+        self.add_fact(eg, fact);
+    }
+
+    /// Register `dist` param as a full replica of `base`.
+    pub fn register_replicated(&mut self, eg: &EGraph, base: Id, dist: Id, dims: &[i64]) {
+        let expr = AxisExpr::from_shape(&mut self.store, dims);
+        self.add_fact(eg, Fact::duplicate(base, dist, expr));
+    }
+
+    /// Register `dist` param as a per-core partial of `base` (layer
+    /// boundaries can carry undischarged partials forward).
+    pub fn register_partial(
+        &mut self,
+        eg: &EGraph,
+        base: Id,
+        dist: Id,
+        dims: &[i64],
+        kind: ReduceKind,
+    ) {
+        let expr = AxisExpr::from_shape(&mut self.store, dims);
+        let fact = Fact {
+            base,
+            dist,
+            base_expr: expr.clone(),
+            dist_expr: expr,
+            shard_atoms: vec![],
+            partial: Some(kind),
+        };
+        self.add_fact(eg, fact);
+    }
+
+    // ---------------------------------------------------------------
+    // Rule dispatch
+    // ---------------------------------------------------------------
+
+    /// Process one distributed node; derive facts for its class.
+    pub fn process_dist_node(&mut self, eg: &mut EGraph, ctx: &GraphCtx, node: &Node) -> StepOutcome {
+        let dclass = eg.find(ctx.d2c[node.id.idx()]);
+        let mut derived = false;
+
+        // Template 0 (structural sharing): the e-graph merged this term
+        // with a baseline term — it is its own duplicate.
+        let origin = eg.class(dclass).data.origin;
+        if origin.baseline && origin.distributed {
+            let expr = AxisExpr::from_shape(&mut self.store, &node.shape.dims);
+            derived |= self.add_fact(eg, Fact::duplicate(dclass, dclass, expr));
+        }
+
+        let in_classes: Vec<Id> =
+            node.inputs.iter().map(|&i| eg.find(ctx.d2c[i.idx()])).collect();
+        let inputs_have_facts =
+            !in_classes.is_empty() && in_classes.iter().all(|&c| self.has_any(eg, c));
+
+        derived |= match &node.op {
+            Op::Parameter { .. } | Op::Constant(_) | Op::Iota { .. } => false,
+            op if op.is_elementwise() && node.inputs.len() == 1 => {
+                self.rule_unary(eg, node, dclass, in_classes[0])
+            }
+            Op::Convert { .. } => self.rule_unary(eg, node, dclass, in_classes[0]),
+            op if op.is_elementwise() && node.inputs.len() >= 2 => {
+                self.rule_nary_elementwise(eg, node, dclass, &in_classes)
+            }
+            Op::Reshape { .. } | Op::Transpose { .. } => {
+                self.rule_dist_layout(eg, node, dclass, in_classes[0])
+            }
+            Op::Dot { .. } => self.rule_dot(eg, ctx, node, dclass, &in_classes),
+            Op::Slice { .. } => self.rule_slice(eg, node, dclass, in_classes[0]),
+            Op::Concat { .. } => self.rule_concat(eg, node, dclass, &in_classes),
+            Op::Broadcast { .. } => self.rule_broadcast(eg, node, dclass, in_classes[0]),
+            Op::Reduce { .. } => self.rule_reduce(eg, node, dclass, in_classes[0]),
+            Op::AllReduce { kind, groups } => {
+                self.rule_all_reduce(eg, node, dclass, in_classes[0], *kind, groups)
+            }
+            Op::AllGather { dim, groups } => {
+                self.rule_all_gather(eg, node, dclass, in_classes[0], *dim, groups)
+            }
+            Op::ReduceScatter { kind, dim, groups } => {
+                self.rule_reduce_scatter(eg, node, dclass, in_classes[0], *kind, *dim, groups)
+            }
+            Op::AllToAll { split_dim, concat_dim, groups } => {
+                self.rule_all_to_all(eg, node, dclass, in_classes[0], *split_dim, *concat_dim, groups)
+            }
+            Op::Custom { .. } | Op::Tuple | Op::GetTupleElement { .. } => {
+                self.rule_uninterpreted(eg, node, dclass, &in_classes)
+            }
+            _ => false,
+        };
+
+        // Fine-grained slicing: a freshly-sharded input may also relate
+        // per-core to explicit baseline slice nodes (Figure 8).
+        derived |= self.try_derive_percore(eg, dclass);
+
+        if derived {
+            StepOutcome::Derived
+        } else if self.has_any(eg, dclass) {
+            StepOutcome::Known
+        } else if inputs_have_facts {
+            StepOutcome::NoRule
+        } else {
+            StepOutcome::NotReady
+        }
+    }
+
+    /// Baseline-side layout composition: `layout(x,x',ℓ) ∧ z = transpose(x)
+    /// ⟹ layout(z, x', ℓ∘transposeᵀ)` — walk baseline layout consumers of
+    /// every fact base and extend the relation (Table 1 Layout rules).
+    pub fn propagate_base_layouts(&mut self, eg: &mut EGraph, ctx: &GraphCtx) -> usize {
+        let mut new = 0;
+        let all: Vec<Fact> = self.facts.values().flatten().cloned().collect();
+        for fact in all {
+            for bnode_id in ctx.base_nodes_of(eg, fact.base) {
+                for &use_id in &ctx.base_uses[bnode_id.idx()] {
+                    let unode = ctx.base.node(use_id);
+                    let new_base_expr = match &unode.op {
+                        Op::Transpose { perm } => match fact.base_expr.transpose(perm) {
+                            Ok(e) => e,
+                            Err(_) => continue,
+                        },
+                        Op::Reshape { .. } => {
+                            match fact.base_expr.reshape(&mut self.store, &unode.shape.dims) {
+                                Ok(e) => e,
+                                Err(_) => continue,
+                            }
+                        }
+                        _ => continue,
+                    };
+                    let f = Fact {
+                        base: ctx.b2c[use_id.idx()],
+                        dist: fact.dist,
+                        base_expr: new_base_expr,
+                        dist_expr: fact.dist_expr.clone(),
+                        shard_atoms: fact.shard_atoms.clone(),
+                        partial: fact.partial,
+                    };
+                    if self.add_fact(eg, f) {
+                        new += 1;
+                    }
+                }
+            }
+        }
+        new
+    }
+
+    // ---------------------------------------------------------------
+    // Individual rule templates
+    // ---------------------------------------------------------------
+
+    fn rule_unary(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, xc: Id) -> bool {
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            // partial propagation: only linearity-preserving ops
+            if f.partial.is_some()
+                && !matches!(node.op, Op::Neg | Op::Convert { .. })
+            {
+                continue;
+            }
+            let Some(partner) = lookup_base(eg, &ENode::new(node.op.clone(), vec![f.base])) else {
+                continue;
+            };
+            let nf = Fact { base: partner, dist: dclass, ..f.clone() };
+            derived |= self.add_fact(eg, nf);
+        }
+        // per-core propagation
+        for pc in self.percore_for(eg, xc) {
+            let partners: Option<Vec<Id>> = pc
+                .bases
+                .iter()
+                .map(|&b| lookup_base(eg, &ENode::new(node.op.clone(), vec![b])))
+                .collect();
+            if let Some(bases) = partners {
+                derived |= self.add_percore(eg, PerCoreFact { dist: dclass, bases });
+            }
+        }
+        derived
+    }
+
+    fn rule_nary_elementwise(
+        &mut self,
+        eg: &mut EGraph,
+        node: &Node,
+        dclass: Id,
+        ins: &[Id],
+    ) -> bool {
+        let mut derived = false;
+        let fact_lists: Vec<Vec<Fact>> =
+            ins.iter().map(|&c| self.facts_for(eg, c)).collect();
+        // cartesian product is tiny in practice (1-2 facts per class)
+        let mut idx = vec![0usize; ins.len()];
+        'combos: loop {
+            let combo: Vec<&Fact> = idx
+                .iter()
+                .enumerate()
+                .filter_map(|(i, &j)| fact_lists[i].get(j))
+                .collect();
+            if combo.len() == ins.len() {
+                if let Some(f) = self.try_elementwise_combo(eg, node, dclass, &combo) {
+                    derived |= self.add_fact(eg, f);
+                }
+            }
+            // advance multi-index
+            for i in 0..ins.len() {
+                idx[i] += 1;
+                if idx[i] < fact_lists[i].len().max(1) {
+                    continue 'combos;
+                }
+                idx[i] = 0;
+            }
+            break;
+        }
+        // per-core: exactly one PerCore operand, the rest identity dups
+        derived |= self.percore_elementwise(eg, node, dclass, ins);
+        derived
+    }
+
+    fn try_elementwise_combo(
+        &mut self,
+        eg: &EGraph,
+        node: &Node,
+        dclass: Id,
+        combo: &[&Fact],
+    ) -> Option<Fact> {
+        // signatures must agree across non-scalar operands
+        let sigs: Vec<_> = combo.iter().map(|f| f.signature(&self.store)).collect();
+        let non_scalar: Vec<usize> =
+            (0..combo.len()).filter(|&i| !sigs[i].axes.is_empty()).collect();
+        let lead = *non_scalar.first()?;
+        for &i in &non_scalar {
+            if sigs[i].axes != sigs[lead].axes || sigs[i].shard_pos != sigs[lead].shard_pos {
+                return None;
+            }
+        }
+        // partial combination table
+        let partials: Vec<Option<ReduceKind>> = combo.iter().map(|f| f.partial).collect();
+        let partial = match &node.op {
+            Op::Add | Op::Sub => {
+                if partials.iter().all(|p| *p == Some(ReduceKind::Add)) {
+                    Some(ReduceKind::Add)
+                } else if partials.iter().all(|p| p.is_none()) {
+                    None
+                } else {
+                    return None; // partial + non-partial: the missing-allreduce bug
+                }
+            }
+            Op::Mul | Op::Div => {
+                let n_partial = partials.iter().filter(|p| p.is_some()).count();
+                match n_partial {
+                    0 => None,
+                    1 if partials[0] == Some(ReduceKind::Add) && matches!(node.op, Op::Mul | Op::Div) => {
+                        // (Σ xᵣ) ⊙ y = Σ (xᵣ ⊙ y) when y is duplicate
+                        Some(ReduceKind::Add)
+                    }
+                    1 if partials.last() == Some(&Some(ReduceKind::Add))
+                        && matches!(node.op, Op::Mul) =>
+                    {
+                        Some(ReduceKind::Add)
+                    }
+                    _ => return None,
+                }
+            }
+            Op::Max | Op::Min => {
+                let want = if matches!(node.op, Op::Max) { ReduceKind::Max } else { ReduceKind::Min };
+                if partials.iter().all(|p| p.is_none()) {
+                    None
+                } else if partials.iter().all(|p| *p == Some(want)) {
+                    Some(want)
+                } else {
+                    return None;
+                }
+            }
+            _ => {
+                if partials.iter().any(|p| p.is_some()) {
+                    return None;
+                }
+                None
+            }
+        };
+        // baseline partner
+        let bases: Vec<Id> = combo.iter().map(|f| f.base).collect();
+        let partner = lookup_base(eg, &ENode::new(node.op.clone(), bases))?;
+        Some(Fact {
+            base: partner,
+            dist: dclass,
+            base_expr: combo[lead].base_expr.clone(),
+            dist_expr: combo[lead].dist_expr.clone(),
+            shard_atoms: combo[lead].shard_atoms.clone(),
+            partial,
+        })
+    }
+
+    fn percore_elementwise(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, ins: &[Id]) -> bool {
+        // each operand is either per-core (vector of baseline partners) or
+        // a duplicate (same partner on every core); at least one per-core
+        enum Arg {
+            Per(Vec<Id>),
+            Dup(Id),
+        }
+        let mut args = Vec::with_capacity(ins.len());
+        let mut any_percore = false;
+        for &c in ins {
+            if let Some(pc) = self.percore_for(eg, c).into_iter().next() {
+                any_percore = true;
+                args.push(Arg::Per(pc.bases));
+            } else if let Some(f) =
+                self.facts_for(eg, c).into_iter().find(|f| f.is_duplicate(&self.store))
+            {
+                args.push(Arg::Dup(f.base));
+            } else {
+                return false;
+            }
+        }
+        if !any_percore {
+            return false;
+        }
+        let cores = self.cores as usize;
+        let partners: Option<Vec<Id>> = (0..cores)
+            .map(|r| {
+                let children: Vec<Id> = args
+                    .iter()
+                    .map(|a| match a {
+                        Arg::Per(v) => v[r],
+                        Arg::Dup(b) => *b,
+                    })
+                    .collect();
+                lookup_base(eg, &ENode::new(node.op.clone(), children))
+            })
+            .collect();
+        match partners {
+            Some(bases) => self.add_percore(eg, PerCoreFact { dist: dclass, bases }),
+            None => false,
+        }
+    }
+
+    /// Uninterpreted ops (`while`/`call` with fingerprinted bodies, tuples):
+    /// congruence only — equal op applied to equal (duplicate) arguments
+    /// yields equal results.
+    fn rule_uninterpreted(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, ins: &[Id]) -> bool {
+        let bases: Option<Vec<Id>> = ins
+            .iter()
+            .map(|&c| {
+                self.facts_for(eg, c)
+                    .into_iter()
+                    .find(|f| f.is_duplicate(&self.store))
+                    .map(|f| f.base)
+            })
+            .collect();
+        let Some(bases) = bases else { return false };
+        let Some(partner) = lookup_base(eg, &ENode::new(node.op.clone(), bases)) else {
+            return false;
+        };
+        let expr = AxisExpr::from_shape(&mut self.store, &node.shape.dims);
+        self.add_fact(eg, Fact::duplicate(partner, dclass, expr))
+    }
+
+    fn rule_dist_layout(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, xc: Id) -> bool {
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            let new_dist = match &node.op {
+                Op::Transpose { perm } => match f.dist_expr.transpose(perm) {
+                    Ok(e) => e,
+                    Err(_) => continue,
+                },
+                Op::Reshape { .. } => match f.dist_expr.reshape(&mut self.store, &node.shape.dims) {
+                    Ok(e) => e,
+                    Err(_) => continue,
+                },
+                _ => unreachable!(),
+            };
+            let nf = Fact { dist: dclass, dist_expr: new_dist, ..f.clone() };
+            derived |= self.add_fact(eg, nf);
+        }
+        // per-core layout: identical op must exist over each baseline partner
+        for pc in self.percore_for(eg, xc) {
+            let partners: Option<Vec<Id>> = pc
+                .bases
+                .iter()
+                .map(|&b| lookup_base(eg, &ENode::new(node.op.clone(), vec![b])))
+                .collect();
+            if let Some(bases) = partners {
+                derived |= self.add_percore(eg, PerCoreFact { dist: dclass, bases });
+            }
+        }
+        derived
+    }
+
+    fn rule_dot(&mut self, eg: &mut EGraph, ctx: &GraphCtx, node: &Node, dclass: Id, ins: &[Id]) -> bool {
+        let Op::Dot { lhs_contract, rhs_contract, lhs_batch, rhs_batch } = &node.op else {
+            unreachable!()
+        };
+        let mut derived = false;
+        let fx_list = self.facts_for(eg, ins[0]);
+        let fy_list = self.facts_for(eg, ins[1]);
+        for fx in &fx_list {
+            for fy in &fy_list {
+                // partial handling: at most one Add-partial operand
+                let partial_in = match (fx.partial, fy.partial) {
+                    (None, None) => None,
+                    (Some(ReduceKind::Add), None) | (None, Some(ReduceKind::Add)) => {
+                        Some(ReduceKind::Add)
+                    }
+                    _ => continue,
+                };
+                // find baseline dot candidates over (fx.base, fy.base)
+                for bx_node in ctx.base_nodes_of(eg, fx.base) {
+                    for &use_id in &ctx.base_uses[bx_node.idx()] {
+                        let u = ctx.base.node(use_id);
+                        let Op::Dot {
+                            lhs_contract: blc,
+                            rhs_contract: brc,
+                            lhs_batch: blb,
+                            rhs_batch: brb,
+                        } = &u.op
+                        else {
+                            continue;
+                        };
+                        if eg.find(ctx.b2c[u.inputs[0].idx()]) != eg.find(fx.base)
+                            || eg.find(ctx.b2c[u.inputs[1].idx()]) != eg.find(fy.base)
+                        {
+                            continue;
+                        }
+                        if let Some(f) = self.try_dot_match(
+                            eg,
+                            dclass,
+                            ctx.b2c[use_id.idx()],
+                            fx,
+                            fy,
+                            (lhs_contract, rhs_contract, lhs_batch, rhs_batch),
+                            (blc, brc, blb, brb),
+                            partial_in,
+                        ) {
+                            derived |= self.add_fact(eg, f);
+                        }
+                    }
+                }
+            }
+        }
+        // per-core dot: any mix of PerCore and duplicate operands
+        derived |= self.percore_elementwise(eg, node, dclass, ins);
+        derived
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn try_dot_match(
+        &mut self,
+        _eg: &EGraph,
+        dclass: Id,
+        partner: Id,
+        fx: &Fact,
+        fy: &Fact,
+        d_dims: (&[usize], &[usize], &[usize], &[usize]),
+        b_dims: (&[usize], &[usize], &[usize], &[usize]),
+        partial_in: Option<ReduceKind>,
+    ) -> Option<Fact> {
+        let (dlc, drc, dlb, drb) = d_dims;
+        let (blc, brc, blb, brb) = b_dims;
+        let st = &self.store;
+        let leaves = |e: &AxisExpr, dims: &[usize]| -> Vec<crate::layout::AtomId> {
+            dims.iter()
+                .flat_map(|&d| e.expanded(st).axes[d].clone())
+                .filter(|&a| st.size(a) != 1)
+                .collect()
+        };
+        // contracted atoms: dist side vs baseline side
+        let d_con_l = leaves(&fx.dist_expr, dlc);
+        let d_con_r = leaves(&fy.dist_expr, drc);
+        let b_con_l = leaves(&fx.base_expr, blc);
+        let b_con_r = leaves(&fy.base_expr, brc);
+        // distributed contraction must contract corresponding atoms:
+        // baseline contracted atoms = dist contracted atoms + shard atoms
+        // missing on the dist side (those become a partial result).
+        let missing_l: Vec<_> =
+            b_con_l.iter().filter(|a| !d_con_l.contains(a)).copied().collect();
+        let missing_r: Vec<_> =
+            b_con_r.iter().filter(|a| !d_con_r.contains(a)).copied().collect();
+        // dist contracted atoms must be the baseline's, in order, minus the
+        // missing shard atoms
+        let filt_l: Vec<_> =
+            b_con_l.iter().filter(|a| !missing_l.contains(a)).copied().collect();
+        let filt_r: Vec<_> =
+            b_con_r.iter().filter(|a| !missing_r.contains(a)).copied().collect();
+        if filt_l != d_con_l || filt_r != d_con_r {
+            return None;
+        }
+        // missing atoms must be exactly the operands' shard atoms
+        if !missing_l.iter().all(|a| fx.shard_atoms.contains(a))
+            || !missing_r.iter().all(|a| fy.shard_atoms.contains(a))
+        {
+            return None;
+        }
+        // shard-alignment: both operands' shard *stride profiles* over the
+        // flattened contraction index must match — each side's shard atoms
+        // are *different* atoms (different tensors) but must cover the same
+        // contiguous chunk of the contraction index, otherwise the per-core
+        // products pair the wrong slices. The profile is {total, multiset
+        // of (stride, size) of the distributed digits}: the embedding of a
+        // local index into the global index depends only on those.
+        if shard_profile(st, &b_con_l, &missing_l) != shard_profile(st, &b_con_r, &missing_r)
+        {
+            return None;
+        }
+        // batch dims pair elementwise across the operands: same rules as
+        // contraction — missing atoms must be shard atoms with matching
+        // stride profiles on both sides (head-sharded attention batches).
+        let d_bat_l = leaves(&fx.dist_expr, dlb);
+        let b_bat_l = leaves(&fx.base_expr, blb);
+        let d_bat_r = leaves(&fy.dist_expr, drb);
+        let b_bat_r = leaves(&fy.base_expr, brb);
+        let missing_bat_l: Vec<_> =
+            b_bat_l.iter().filter(|a| !d_bat_l.contains(a)).copied().collect();
+        let missing_bat_r: Vec<_> =
+            b_bat_r.iter().filter(|a| !d_bat_r.contains(a)).copied().collect();
+        let filt_bat_l: Vec<_> =
+            b_bat_l.iter().filter(|a| !missing_bat_l.contains(a)).copied().collect();
+        let filt_bat_r: Vec<_> =
+            b_bat_r.iter().filter(|a| !missing_bat_r.contains(a)).copied().collect();
+        if filt_bat_l != d_bat_l || filt_bat_r != d_bat_r {
+            return None;
+        }
+        if !missing_bat_l.iter().all(|a| fx.shard_atoms.contains(a))
+            || !missing_bat_r.iter().all(|a| fy.shard_atoms.contains(a))
+        {
+            return None;
+        }
+        if shard_profile(st, &b_bat_l, &missing_bat_l)
+            != shard_profile(st, &b_bat_r, &missing_bat_r)
+        {
+            return None;
+        }
+
+        // output exprs: batch ++ lhs-free ++ rhs-free on each side
+        let free_axes = |e: &AxisExpr, con: &[usize], bat: &[usize]| -> Vec<Vec<crate::layout::AtomId>> {
+            e.axes
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !con.contains(i) && !bat.contains(i))
+                .map(|(_, a)| a.clone())
+                .collect()
+        };
+        let mut base_axes: Vec<Vec<crate::layout::AtomId>> =
+            blb.iter().map(|&d| fx.base_expr.axes[d].clone()).collect();
+        base_axes.extend(free_axes(&fx.base_expr, blc, blb));
+        base_axes.extend(free_axes(&fy.base_expr, brc, brb));
+        let mut dist_axes: Vec<Vec<crate::layout::AtomId>> =
+            dlb.iter().map(|&d| fx.dist_expr.axes[d].clone()).collect();
+        dist_axes.extend(free_axes(&fx.dist_expr, dlc, dlb));
+        dist_axes.extend(free_axes(&fy.dist_expr, drc, drb));
+
+        // remaining shard atoms: free/batch shards carry over
+        let mut shard_atoms: Vec<_> = fx
+            .shard_atoms
+            .iter()
+            .chain(&fy.shard_atoms)
+            .copied()
+            .filter(|a| !missing_l.contains(a) && !missing_r.contains(a))
+            .collect();
+        shard_atoms.sort_unstable();
+        shard_atoms.dedup();
+        // contracted shard atoms induce a pending add-reduction
+        let partial = if !missing_l.is_empty() {
+            match partial_in {
+                None | Some(ReduceKind::Add) => Some(ReduceKind::Add),
+                _ => return None,
+            }
+        } else {
+            partial_in
+        };
+        // Canonicalize with FRESH atoms per output axis. Without this, the
+        // two operands' atoms mix in one expression, and q·kᵀ-style dots
+        // (both operands tracing to the same tensor) repeat an atom —
+        // which breaks positional signatures and bijection inference. Each
+        // output axis keeps only its shard *pattern*: fresh parent split
+        // into alternating present/distributed segments.
+        let (base_expr, dist_expr, shard_atoms) =
+            self.canonicalize_axes(&base_axes, &dist_axes, &shard_atoms)?;
+
+        Some(Fact { base: partner, dist: dclass, base_expr, dist_expr, shard_atoms, partial })
+    }
+
+    /// Rebuild `(base, dist)` axis lists over fresh atoms, preserving the
+    /// per-axis shard segmentation. Requires the dist axis to be the base
+    /// axis minus shard atoms, in order (identity-modulo-shard per axis).
+    fn canonicalize_axes(
+        &mut self,
+        base_axes: &[Vec<crate::layout::AtomId>],
+        dist_axes: &[Vec<crate::layout::AtomId>],
+        shard_atoms: &[crate::layout::AtomId],
+    ) -> Option<(AxisExpr, AxisExpr, Vec<crate::layout::AtomId>)> {
+        if base_axes.len() != dist_axes.len() {
+            return None;
+        }
+        let mut new_base = Vec::with_capacity(base_axes.len());
+        let mut new_dist = Vec::with_capacity(dist_axes.len());
+        let mut new_shards = Vec::new();
+        for (baxis, daxis) in base_axes.iter().zip(dist_axes) {
+            let bleaves: Vec<_> = baxis
+                .iter()
+                .flat_map(|&a| self.store.expand(a))
+                .filter(|&a| self.store.size(a) != 1)
+                .collect();
+            let dleaves: Vec<_> = daxis
+                .iter()
+                .flat_map(|&a| self.store.expand(a))
+                .filter(|&a| self.store.size(a) != 1)
+                .collect();
+            let present: Vec<_> =
+                bleaves.iter().copied().filter(|a| !shard_atoms.contains(a)).collect();
+            if present != dleaves {
+                return None; // per-axis reordering: keep original exprs? bail
+            }
+            // segment sizes, alternating (is_shard, size)
+            let mut segments: Vec<(bool, i64)> = Vec::new();
+            for &a in &bleaves {
+                let is_shard = shard_atoms.contains(&a);
+                let size = self.store.size(a);
+                match segments.last_mut() {
+                    Some((s, sz)) if *s == is_shard => *sz *= size,
+                    _ => segments.push((is_shard, size)),
+                }
+            }
+            let total: i64 = segments.iter().map(|(_, s)| *s).product::<i64>().max(1);
+            let fresh = self.store.fresh(total);
+            if segments.len() <= 1 {
+                // wholly present or wholly distributed
+                if segments.first().map(|(s, _)| *s).unwrap_or(false) {
+                    new_base.push(vec![fresh]);
+                    new_dist.push(vec![]);
+                    new_shards.push(fresh);
+                } else {
+                    new_base.push(vec![fresh]);
+                    new_dist.push(vec![fresh]);
+                }
+                continue;
+            }
+            let sizes: Vec<i64> = segments.iter().map(|(_, s)| *s).collect();
+            let kids = self.store.split_leaf(fresh, &sizes)?;
+            let mut daxis_new = Vec::new();
+            for ((is_shard, _), kid) in segments.iter().zip(kids) {
+                if *is_shard {
+                    new_shards.push(kid);
+                } else {
+                    daxis_new.push(kid);
+                }
+            }
+            new_base.push(vec![fresh]);
+            new_dist.push(daxis_new);
+        }
+        Some((AxisExpr::from_axes(new_base), AxisExpr::from_axes(new_dist), new_shards))
+    }
+
+    fn rule_slice(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, xc: Id) -> bool {
+        let Op::Slice { starts, limits, strides } = &node.op else { unreachable!() };
+        if strides.iter().any(|&s| s != 1) {
+            return false;
+        }
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            if f.partial.is_some() {
+                continue;
+            }
+            let sig = f.signature(&self.store);
+            // only identity-modulo-shards layouts (axes in base order)
+            let identity_mod_shard = {
+                let mut ok = true;
+                let mut prev = -1i64;
+                for axis in &sig.axes {
+                    for &(p, _) in axis {
+                        if (p as i64) <= prev {
+                            ok = false;
+                        }
+                        prev = p as i64;
+                    }
+                }
+                ok
+            };
+            if !identity_mod_shard {
+                continue;
+            }
+            // build the baseline slice attrs: same starts/limits except on
+            // shard axes, where a full local range maps to full global range
+            let base_dims = f.base_expr.dims(&self.store);
+            let dist_dims = f.dist_expr.dims(&self.store);
+            if f.base_expr.rank() != f.dist_expr.rank() {
+                continue;
+            }
+            let mut bstarts = Vec::with_capacity(starts.len());
+            let mut blimits = Vec::with_capacity(limits.len());
+            let mut ok = true;
+            let mut touched_shard = false;
+            for i in 0..starts.len() {
+                let local_full = starts[i] == 0 && limits[i] == dist_dims[i];
+                if base_dims[i] != dist_dims[i] {
+                    // shard axis: only full-range pass-through supported
+                    if !local_full {
+                        ok = false;
+                        break;
+                    }
+                    touched_shard = true;
+                    bstarts.push(0);
+                    blimits.push(base_dims[i]);
+                } else {
+                    bstarts.push(starts[i]);
+                    blimits.push(limits[i]);
+                }
+            }
+            let _ = touched_shard;
+            if !ok {
+                continue;
+            }
+            let bop = Op::Slice {
+                starts: bstarts,
+                limits: blimits.clone(),
+                strides: vec![1; blimits.len()],
+            };
+            let Some(partner) = lookup_base(eg, &ENode::new(bop, vec![f.base])) else { continue };
+            // output exprs: untouched axes keep atoms; sliced axes get a
+            // fresh shared atom
+            let mut base_axes = Vec::new();
+            let mut dist_axes = Vec::new();
+            for i in 0..starts.len() {
+                let full_local = starts[i] == 0 && limits[i] == dist_dims[i];
+                if full_local {
+                    base_axes.push(f.base_expr.axes[i].clone());
+                    dist_axes.push(f.dist_expr.axes[i].clone());
+                } else {
+                    let fresh = self.store.fresh(limits[i] - starts[i]);
+                    base_axes.push(vec![fresh]);
+                    dist_axes.push(vec![fresh]);
+                }
+            }
+            let nf = Fact {
+                base: partner,
+                dist: dclass,
+                base_expr: AxisExpr::from_axes(base_axes),
+                dist_expr: AxisExpr::from_axes(dist_axes),
+                shard_atoms: f.shard_atoms.clone(),
+                partial: None,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        // per-core slices
+        for pc in self.percore_for(eg, xc) {
+            let partners: Option<Vec<Id>> = pc
+                .bases
+                .iter()
+                .map(|&b| lookup_base(eg, &ENode::new(node.op.clone(), vec![b])))
+                .collect();
+            if let Some(bases) = partners {
+                derived |= self.add_percore(eg, PerCoreFact { dist: dclass, bases });
+            }
+        }
+        derived
+    }
+
+    fn rule_concat(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, ins: &[Id]) -> bool {
+        let Op::Concat { dim } = node.op else { unreachable!() };
+        let mut derived = false;
+        // Case 1: all operands identity duplicates → duplicate concat.
+        let dups: Option<Vec<Fact>> = ins
+            .iter()
+            .map(|&c| {
+                self.facts_for(eg, c).into_iter().find(|f| f.is_duplicate(&self.store))
+            })
+            .collect();
+        if let Some(facts) = dups {
+            let children: Vec<Id> = facts.iter().map(|f| f.base).collect();
+            if let Some(partner) = lookup_base(eg, &ENode::new(Op::Concat { dim }, children)) {
+                let expr = AxisExpr::from_shape(&mut self.store, &node.shape.dims);
+                derived |= self.add_fact(eg, Fact::duplicate(partner, dclass, expr));
+            }
+        }
+        // Case 2: operands share all non-concat axes *atoms* (e.g. two
+        // slices of the same head-sharded tensor, the rotate-half pattern)
+        // — shard/partial structure carries through, concat axis gets a
+        // fresh shared atom.
+        'outer: {
+            let facts: Option<Vec<Fact>> = ins
+                .iter()
+                .map(|&c| self.facts_for(eg, c).into_iter().next())
+                .collect();
+            let Some(facts) = facts else { break 'outer };
+            let lead = &facts[0];
+            if facts.iter().any(|f| {
+                f.partial != lead.partial
+                    || f.shard_atoms != lead.shard_atoms
+                    || f.base_expr.rank() != lead.base_expr.rank()
+                    || f.dist_expr.rank() != lead.dist_expr.rank()
+            }) {
+                break 'outer;
+            }
+            for f in &facts {
+                for ax in 0..f.base_expr.rank() {
+                    if ax == dim {
+                        continue;
+                    }
+                    if f.base_expr.axes[ax] != lead.base_expr.axes[ax]
+                        || f.dist_expr.axes[ax] != lead.dist_expr.axes[ax]
+                    {
+                        break 'outer;
+                    }
+                }
+            }
+            let children: Vec<Id> = facts.iter().map(|f| f.base).collect();
+            let Some(partner) = lookup_base(eg, &ENode::new(Op::Concat { dim }, children))
+            else {
+                break 'outer;
+            };
+            let fresh = self.store.fresh(node.shape.dims[dim]);
+            let mut base_axes = lead.base_expr.axes.clone();
+            let mut dist_axes = lead.dist_expr.axes.clone();
+            base_axes[dim] = vec![fresh];
+            dist_axes[dim] = vec![fresh];
+            let nf = Fact {
+                base: partner,
+                dist: dclass,
+                base_expr: AxisExpr::from_axes(base_axes),
+                dist_expr: AxisExpr::from_axes(dist_axes),
+                shard_atoms: lead.shard_atoms.clone(),
+                partial: lead.partial,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    fn rule_broadcast(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, xc: Id) -> bool {
+        let Op::Broadcast { mapped, .. } = &node.op else { unreachable!() };
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            // allow duplicate / sharded inputs with aligned layout
+            if f.partial.is_some() && f.partial != Some(ReduceKind::Add) {
+                continue;
+            }
+            if f.base_expr.rank() != f.dist_expr.rank() {
+                continue;
+            }
+            // The baseline broadcast targets the *baseline* extents: mapped
+            // axes take the input fact's base dims (larger than the local
+            // dims when the input is sharded there); unmapped axes are the
+            // local extent or — for a shard-born axis — ×cores.
+            let in_base_dims = f.base_expr.dims(&self.store);
+            let mut proto = node.shape.dims.clone();
+            for (i, &m) in mapped.iter().enumerate() {
+                if i < in_base_dims.len() {
+                    proto[m] = in_base_dims[i];
+                }
+            }
+            let mut candidates = vec![proto.clone()];
+            for i in 0..node.shape.rank() {
+                if !mapped.contains(&i) {
+                    let mut d = proto.clone();
+                    d[i] *= self.cores as i64;
+                    candidates.push(d);
+                }
+            }
+            let partner = candidates.into_iter().find_map(|cand_dims| {
+                lookup_base(
+                    eg,
+                    &ENode::new(
+                        Op::Broadcast { mapped: mapped.clone(), dims: cand_dims },
+                        vec![f.base],
+                    ),
+                )
+            });
+            let Some(partner) = partner else {
+                continue;
+            };
+            // construct output exprs: mapped axes carry input factor lists,
+            // new axes get fresh shared atoms (same size both sides only
+            // when the axis is not sharded — broadcast result dims match
+            // per-core, so fresh shared atoms are correct for new axes)
+            let rank = node.shape.rank();
+            let bnode_shape = eg.class(partner).data.shape.clone();
+            let mut base_axes: Vec<Vec<crate::layout::AtomId>> = vec![Vec::new(); rank];
+            let mut dist_axes: Vec<Vec<crate::layout::AtomId>> = vec![Vec::new(); rank];
+            let mut filled = vec![false; rank];
+            for (i, &m) in mapped.iter().enumerate() {
+                base_axes[m] = f.base_expr.axes[i].clone();
+                dist_axes[m] = f.dist_expr.axes[i].clone();
+                filled[m] = true;
+            }
+            let mut shard_atoms = f.shard_atoms.clone();
+            let mut ok = true;
+            for i in 0..rank {
+                if !filled[i] {
+                    let dist_size = node.shape.dims[i];
+                    let base_size = bnode_shape
+                        .as_ref()
+                        .map(|s| s.dims[i])
+                        .unwrap_or(dist_size);
+                    if base_size == dist_size {
+                        let fresh = self.store.fresh(dist_size);
+                        base_axes[i] = vec![fresh];
+                        dist_axes[i] = vec![fresh];
+                    } else if base_size == dist_size * self.cores as i64 {
+                        // the baseline broadcasts to the full extent while
+                        // the distributed side broadcasts to the local
+                        // shard: the new axis is born sharded (e.g. a
+                        // row-max broadcast against seq-sharded scores)
+                        let fresh = self.store.fresh(base_size);
+                        let kids = self
+                            .store
+                            .split_leaf(fresh, &[self.cores as i64, dist_size])
+                            .expect("fresh atom split");
+                        base_axes[i] = vec![fresh];
+                        dist_axes[i] = vec![kids[1]];
+                        shard_atoms.push(kids[0]);
+                    } else {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let nf = Fact {
+                base: partner,
+                dist: dclass,
+                base_expr: AxisExpr::from_axes(base_axes),
+                dist_expr: AxisExpr::from_axes(dist_axes),
+                shard_atoms,
+                partial: f.partial,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    fn rule_reduce(&mut self, eg: &mut EGraph, node: &Node, dclass: Id, xc: Id) -> bool {
+        let Op::Reduce { kind, dims } = &node.op else { unreachable!() };
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            // partial-through-reduce: Σ then Σ fine; max then max fine
+            let partial_ok = match f.partial {
+                None => true,
+                Some(k) => k == *kind && matches!(k, ReduceKind::Add | ReduceKind::Max | ReduceKind::Min),
+            };
+            if !partial_ok || f.base_expr.rank() != f.dist_expr.rank() {
+                continue;
+            }
+            // require axis-aligned layout (identity modulo shards): every
+            // distributed leaf must live in the corresponding base axis
+            let base_exp = f.base_expr.expanded(&self.store);
+            let dist_exp = f.dist_expr.expanded(&self.store);
+            let aligned = base_exp
+                .axes
+                .iter()
+                .zip(&dist_exp.axes)
+                .all(|(b, d)| d.iter().all(|a| b.contains(a)));
+            if !aligned {
+                continue;
+            }
+            let Some(partner) = lookup_base(eg, &ENode::new(
+                Op::Reduce { kind: *kind, dims: dims.clone() },
+                vec![f.base],
+            )) else {
+                continue;
+            };
+            // reduced shard atoms become a pending cross-core reduction
+            let reduced_shards: Vec<_> = dims
+                .iter()
+                .flat_map(|&d| base_exp.axes[d].clone())
+                .filter(|a| f.shard_atoms.contains(a))
+                .collect();
+            let partial = if reduced_shards.is_empty() {
+                f.partial
+            } else {
+                match f.partial {
+                    None => Some(*kind),
+                    Some(k) if k == *kind => Some(k),
+                    _ => continue,
+                }
+            };
+            let keep =
+                |e: &AxisExpr| -> Vec<Vec<crate::layout::AtomId>> {
+                    e.axes
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| !dims.contains(i))
+                        .map(|(_, a)| a.clone())
+                        .collect()
+                };
+            let shard_atoms: Vec<_> = f
+                .shard_atoms
+                .iter()
+                .copied()
+                .filter(|a| !reduced_shards.contains(a))
+                .collect();
+            let nf = Fact {
+                base: partner,
+                dist: dclass,
+                base_expr: AxisExpr::from_axes(keep(&f.base_expr)),
+                dist_expr: AxisExpr::from_axes(keep(&f.dist_expr)),
+                shard_atoms,
+                partial,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    fn rule_all_reduce(
+        &mut self,
+        eg: &mut EGraph,
+        node: &Node,
+        dclass: Id,
+        xc: Id,
+        kind: ReduceKind,
+        groups: &ReplicaGroups,
+    ) -> bool {
+        let full_mesh = groups.0.len() == 1 && groups.0[0].len() == self.cores as usize;
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            match f.partial {
+                Some(k) if k == kind && full_mesh => {
+                    // collective discharge (Table 1): partial → resolved
+                    let nf = Fact { dist: dclass, partial: None, ..f.clone() };
+                    derived |= self.add_fact(eg, nf);
+                }
+                None if matches!(kind, ReduceKind::Max | ReduceKind::Min)
+                    && f.shard_atoms.is_empty() =>
+                {
+                    // max/min over identical replicas is a no-op
+                    let nf = Fact { dist: dclass, ..f.clone() };
+                    derived |= self.add_fact(eg, nf);
+                }
+                _ => {
+                    // add-all-reduce over duplicates (redundant all-reduce
+                    // bug) or wrong groups: no rule fires
+                }
+            }
+        }
+        // unroll discharge (loop_red rules): per-core facts sum to the
+        // baseline's unrolled reduction tree
+        if kind == ReduceKind::Add && full_mesh {
+            for pc in self.percore_for(eg, xc) {
+                if let Some(total) = self.fold_baseline_sum(eg, &pc.bases) {
+                    let expr = AxisExpr::from_shape(&mut self.store, &node.shape.dims);
+                    derived |= self.add_fact(eg, Fact::duplicate(total, dclass, expr));
+                }
+            }
+        }
+        derived
+    }
+
+    /// Find the baseline class equal to `bases[0] + bases[1] + …` by
+    /// folding lookups through the e-graph (commutativity is already in
+    /// the e-graph, so either operand order matches).
+    fn fold_baseline_sum(&self, eg: &EGraph, bases: &[Id]) -> Option<Id> {
+        let mut acc = *bases.first()?;
+        for &b in &bases[1..] {
+            acc = lookup_base(eg, &ENode::new(Op::Add, vec![acc, b]))?;
+        }
+        Some(acc)
+    }
+
+    fn rule_all_gather(
+        &mut self,
+        eg: &mut EGraph,
+        _node: &Node,
+        dclass: Id,
+        xc: Id,
+        dim: usize,
+        groups: &ReplicaGroups,
+    ) -> bool {
+        if !(groups.0.len() == 1 && groups.0[0].len() == self.cores as usize) {
+            return false;
+        }
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            if f.shard_atoms.len() != 1 {
+                continue;
+            }
+            let s = f.shard_atoms[0];
+            // gathered axis becomes [s ∥ old factors]
+            let mut dist_axes = f.dist_expr.axes.clone();
+            let mut new_axis = vec![s];
+            new_axis.extend(dist_axes[dim].iter().copied());
+            dist_axes[dim] = new_axis;
+            let nf = Fact {
+                base: f.base,
+                dist: dclass,
+                base_expr: f.base_expr.clone(),
+                dist_expr: AxisExpr::from_axes(dist_axes),
+                shard_atoms: vec![],
+                partial: f.partial,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rule_reduce_scatter(
+        &mut self,
+        eg: &mut EGraph,
+        _node: &Node,
+        dclass: Id,
+        xc: Id,
+        kind: ReduceKind,
+        dim: usize,
+        groups: &ReplicaGroups,
+    ) -> bool {
+        if !(groups.0.len() == 1 && groups.0[0].len() == self.cores as usize) {
+            return false;
+        }
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            if f.partial != Some(kind) {
+                continue;
+            }
+            // scatter dim: split its leading factor into [cores, rest]
+            let axis = f.dist_expr.axes[dim].clone();
+            let Some(&lead) = axis.first() else { continue };
+            let c = self.cores as i64;
+            let lead_size = self.store.size(lead);
+            if lead_size % c != 0 {
+                continue;
+            }
+            // expand lead to leaves and split the first leaf
+            let leaves = self.store.expand(lead);
+            let first = leaves[0];
+            if self.store.size(first) % c != 0 {
+                continue;
+            }
+            let kids = match self.store.split_leaf(first, &[c, self.store.size(first) / c]) {
+                Some(k) => k,
+                None => {
+                    // already split compatibly: re-derive via take_product
+                    let mut q: std::collections::VecDeque<_> =
+                        leaves.iter().copied().collect();
+                    match self.store.take_product(&mut q, c) {
+                        Some(taken) if taken.len() == 1 => {
+                            let shard = taken[0];
+                            let mut rest: Vec<_> = q.into_iter().collect();
+                            rest.extend(axis.iter().skip(leaves.len()).copied());
+                            let mut dist_axes = f.dist_expr.axes.clone();
+                            dist_axes[dim] = rest;
+                            let mut shard_atoms = f.shard_atoms.clone();
+                            shard_atoms.push(shard);
+                            let nf = Fact {
+                                base: f.base,
+                                dist: dclass,
+                                base_expr: f.base_expr.clone(),
+                                dist_expr: AxisExpr::from_axes(dist_axes),
+                                shard_atoms,
+                                partial: None,
+                            };
+                            derived |= self.add_fact(eg, nf);
+                        }
+                        _ => {}
+                    }
+                    continue;
+                }
+            };
+            let mut new_axis = vec![kids[1]];
+            new_axis.extend(leaves[1..].iter().copied());
+            new_axis.extend(axis.iter().skip(1).copied());
+            let mut dist_axes = f.dist_expr.axes.clone();
+            dist_axes[dim] = new_axis;
+            let mut shard_atoms = f.shard_atoms.clone();
+            shard_atoms.push(kids[0]);
+            let nf = Fact {
+                base: f.base,
+                dist: dclass,
+                base_expr: f.base_expr.clone(),
+                dist_expr: AxisExpr::from_axes(dist_axes),
+                shard_atoms,
+                partial: None,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rule_all_to_all(
+        &mut self,
+        eg: &mut EGraph,
+        _node: &Node,
+        dclass: Id,
+        xc: Id,
+        split_dim: usize,
+        concat_dim: usize,
+        groups: &ReplicaGroups,
+    ) -> bool {
+        if !(groups.0.len() == 1 && groups.0[0].len() == self.cores as usize) {
+            return false;
+        }
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            if f.shard_atoms.len() != 1 || f.partial.is_some() {
+                continue;
+            }
+            let s = f.shard_atoms[0];
+            let c = self.cores as i64;
+            // split the leading factor of split_dim
+            let axis = f.dist_expr.axes[split_dim].clone();
+            let leaves: Vec<_> = axis.iter().flat_map(|&a| self.store.expand(a)).collect();
+            let Some(&first) = leaves.first() else { continue };
+            if self.store.size(first) % c != 0 {
+                continue;
+            }
+            let kids = match self.store.split_leaf(first, &[c, self.store.size(first) / c]) {
+                Some(k) => k,
+                None => continue,
+            };
+            let mut split_axis = vec![kids[1]];
+            split_axis.extend(leaves[1..].iter().copied());
+            let mut dist_axes = f.dist_expr.axes.clone();
+            dist_axes[split_dim] = split_axis;
+            // shard atom s returns as leading factor of concat_dim
+            let mut cat_axis = vec![s];
+            cat_axis.extend(dist_axes[concat_dim].iter().copied());
+            dist_axes[concat_dim] = cat_axis;
+            let nf = Fact {
+                base: f.base,
+                dist: dclass,
+                base_expr: f.base_expr.clone(),
+                dist_expr: AxisExpr::from_axes(dist_axes),
+                shard_atoms: vec![kids[0]],
+                partial: None,
+            };
+            derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    /// Derive per-core slice relations from a sharded fact when the
+    /// baseline graph contains the explicit per-core slice nodes
+    /// (fine-grained slicing, Figure 8).
+    fn try_derive_percore(&mut self, eg: &mut EGraph, dclass: Id) -> bool {
+        let mut derived = false;
+        for f in self.facts_for(eg, dclass) {
+            if f.shard_atoms.len() != 1 || f.partial.is_some() {
+                continue;
+            }
+            let s = f.shard_atoms[0];
+            // identity layout apart from the shard
+            if f.base_expr.rank() != f.dist_expr.rank() {
+                continue;
+            }
+            // shard axis: the base axis whose expansion starts with s
+            let mut shard_axis = None;
+            for (i, axis) in f.base_expr.expanded(&self.store).axes.iter().enumerate() {
+                if axis.first() == Some(&s) {
+                    shard_axis = Some(i);
+                }
+            }
+            let Some(dim) = shard_axis else { continue };
+            let base_dims = f.base_expr.dims(&self.store);
+            let local = base_dims[dim] / self.cores as i64;
+            let rank = base_dims.len();
+            let mut bases = Vec::with_capacity(self.cores as usize);
+            let mut ok = true;
+            for r in 0..self.cores as i64 {
+                let mut starts = vec![0i64; rank];
+                let mut limits = base_dims.clone();
+                starts[dim] = r * local;
+                limits[dim] = (r + 1) * local;
+                let op = Op::Slice { starts, limits, strides: vec![1; rank] };
+                match lookup_base(eg, &ENode::new(op, vec![f.base])) {
+                    Some(id) => bases.push(id),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                derived |= self.add_percore(eg, PerCoreFact { dist: dclass, bases });
+            }
+        }
+        derived
+    }
+}

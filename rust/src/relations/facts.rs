@@ -1,0 +1,247 @@
+//! Relation facts between baseline and distributed e-classes.
+
+use crate::egraph::Id;
+use crate::ir::ReduceKind;
+use crate::layout::{AtomId, AtomStore, AxisExpr};
+
+/// A relation between baseline class `base` and distributed class `dist`.
+///
+/// Semantics (per core `r` of `c` cores):
+///
+/// ```text
+/// restore(d_r) := inverse-layout of d_r placed into the baseline frame,
+///                 with the shard atoms filled at index r
+/// partial == None  =>  for all r:  restore(d_r) == slice_r(base)
+/// partial == Some(op) => op-reduce over r of restore(d_r) == base
+/// ```
+///
+/// * `shard_atoms.is_empty() && partial.is_none() && identity layout`
+///   ⇒ the paper's `duplicate(x, x', c)`.
+/// * `shard_atoms == [s]` ⇒ `sharded(x, x', dim-of-s, c)`.
+/// * `partial == Some(Add)` ⇒ `partial(x, x', c, add)`.
+/// * non-identity layout ⇒ `layout(x, x', ℓ, c)` (combined with the above).
+#[derive(Clone, Debug)]
+pub struct Fact {
+    /// Baseline e-class.
+    pub base: Id,
+    /// Distributed e-class.
+    pub dist: Id,
+    /// Baseline tensor's symbolic axes.
+    pub base_expr: AxisExpr,
+    /// Distributed (per-core local) tensor's symbolic axes, over the same
+    /// atoms — minus the shard atoms.
+    pub dist_expr: AxisExpr,
+    /// Atoms of `base_expr` that are distributed across the core mesh
+    /// (absent from `dist_expr`).
+    pub shard_atoms: Vec<AtomId>,
+    /// Pending cross-core reduction.
+    pub partial: Option<ReduceKind>,
+}
+
+impl Fact {
+    /// `duplicate` fact with identity layout.
+    pub fn duplicate(base: Id, dist: Id, expr: AxisExpr) -> Fact {
+        Fact {
+            base,
+            dist,
+            base_expr: expr.clone(),
+            dist_expr: expr,
+            shard_atoms: vec![],
+            partial: None,
+        }
+    }
+
+    /// True when this fact proves element-for-element equality: no shard
+    /// atoms, no pending reduction, and the layout is the identity.
+    pub fn is_duplicate(&self, store: &AtomStore) -> bool {
+        self.shard_atoms.is_empty()
+            && self.partial.is_none()
+            && self.base_expr.structurally_equal(&self.dist_expr, store)
+    }
+
+    /// True when it proves equality *up to a bijective layout*.
+    pub fn is_layout_duplicate(&self, store: &AtomStore) -> bool {
+        self.shard_atoms.is_empty()
+            && self.partial.is_none()
+            && crate::layout::infer_bijection(store, &self.base_expr, &self.dist_expr).is_some()
+    }
+
+    /// Positional signature of the distributed layout relative to the
+    /// baseline layout. Two facts over *different* atom sets are
+    /// layout-compatible for an elementwise op iff their signatures match.
+    pub fn signature(&self, store: &AtomStore) -> Signature {
+        let base_flat = self.base_expr.flat_leaves(store);
+        let pos = |a: AtomId| -> Option<(u32, i64)> {
+            base_flat
+                .iter()
+                .position(|&b| b == a)
+                .map(|p| (p as u32, store.size(a)))
+        };
+        let dist_expanded = self.dist_expr.expanded(store);
+        let axes: Vec<Vec<(u32, i64)>> = dist_expanded
+            .axes
+            .iter()
+            .map(|axis| {
+                axis.iter()
+                    .filter(|&&a| store.size(a) != 1)
+                    .map(|&a| pos(a).unwrap_or((u32::MAX, store.size(a))))
+                    .collect()
+            })
+            .collect();
+        let shard_pos: Vec<(u32, i64)> = self
+            .shard_atoms
+            .iter()
+            .map(|&a| pos(a).unwrap_or((u32::MAX, store.size(a))))
+            .collect();
+        Signature { axes, shard_pos, partial: self.partial }
+    }
+
+    /// Dedup key (canonical class ids + signature).
+    pub fn key(&self, store: &AtomStore) -> FactKey {
+        FactKey { base: self.base, dist: self.dist, sig: self.signature(store) }
+    }
+}
+
+/// Layout signature: positional encoding of the distributed axes relative
+/// to the baseline's flat leaf order.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Signature {
+    /// Per distributed axis: (position in base flat, size) of each factor.
+    pub axes: Vec<Vec<(u32, i64)>>,
+    /// Positions of the shard atoms.
+    pub shard_pos: Vec<(u32, i64)>,
+    /// Pending reduction.
+    pub partial: Option<ReduceKind>,
+}
+
+impl Signature {
+    /// Identity signature check: axes enumerate base positions in order
+    /// with no shards or partials.
+    pub fn is_identity(&self) -> bool {
+        if !self.shard_pos.is_empty() || self.partial.is_some() {
+            return false;
+        }
+        let mut expect = 0u32;
+        for axis in &self.axes {
+            for &(p, _) in axis {
+                if p != expect {
+                    return false;
+                }
+                expect += 1;
+            }
+        }
+        true
+    }
+}
+
+/// Dedup key for facts.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct FactKey {
+    /// Baseline class.
+    pub base: Id,
+    /// Distributed class.
+    pub dist: Id,
+    /// Layout signature.
+    pub sig: Signature,
+}
+
+/// Fine-grained per-core relation (paper's slicing/unroll analyses):
+/// the distributed class's value **on core r** equals baseline class
+/// `bases[r]` (identity layout). One distributed tensor, `c` different
+/// baseline partners.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PerCoreFact {
+    /// Distributed e-class.
+    pub dist: Id,
+    /// Baseline e-class per core.
+    pub bases: Vec<Id>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::AtomStore;
+
+    #[test]
+    fn duplicate_fact_properties() {
+        let mut store = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut store, &[4, 8]);
+        let f = Fact::duplicate(Id(0), Id(1), e);
+        assert!(f.is_duplicate(&store));
+        assert!(f.signature(&store).is_identity());
+    }
+
+    #[test]
+    fn sharded_fact_signature() {
+        let mut store = AtomStore::new();
+        let base = AxisExpr::from_shape(&mut store, &[8, 16]);
+        // shard dim 1 across 4 cores: split atom -> [shard, local]
+        let atom1 = base.axes[1][0];
+        let kids = store.split_leaf(atom1, &[4, 4]).unwrap();
+        let dist = AxisExpr::from_axes(vec![base.axes[0].clone(), vec![kids[1]]]);
+        let f = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: base,
+            dist_expr: dist,
+            shard_atoms: vec![kids[0]],
+            partial: None,
+        };
+        assert!(!f.is_duplicate(&store));
+        let sig = f.signature(&store);
+        assert!(!sig.is_identity());
+        assert_eq!(sig.shard_pos, vec![(1, 4)]);
+    }
+
+    #[test]
+    fn transposed_fact_is_layout_duplicate_not_duplicate() {
+        let mut store = AtomStore::new();
+        let base = AxisExpr::from_shape(&mut store, &[4, 8]);
+        let dist = base.transpose(&[1, 0]).unwrap();
+        let f = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: base,
+            dist_expr: dist,
+            shard_atoms: vec![],
+            partial: None,
+        };
+        assert!(!f.is_duplicate(&store));
+        assert!(f.is_layout_duplicate(&store));
+    }
+
+    #[test]
+    fn signatures_compare_across_atom_sets() {
+        // two different tensors, both transposed the same way → equal sigs
+        let mut store = AtomStore::new();
+        let bx = AxisExpr::from_shape(&mut store, &[4, 8]);
+        let by = AxisExpr::from_shape(&mut store, &[4, 8]);
+        let fx = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: bx.clone(),
+            dist_expr: bx.transpose(&[1, 0]).unwrap(),
+            shard_atoms: vec![],
+            partial: None,
+        };
+        let fy = Fact {
+            base: Id(2),
+            dist: Id(3),
+            base_expr: by.clone(),
+            dist_expr: by.transpose(&[1, 0]).unwrap(),
+            shard_atoms: vec![],
+            partial: None,
+        };
+        assert_eq!(fx.signature(&store), fy.signature(&store));
+        // and a differently-transposed one differs
+        let fz = Fact {
+            base: Id(4),
+            dist: Id(5),
+            base_expr: by.clone(),
+            dist_expr: by,
+            shard_atoms: vec![],
+            partial: None,
+        };
+        assert_ne!(fx.signature(&store), fz.signature(&store));
+    }
+}

@@ -1,0 +1,29 @@
+//! Datalog-style relational analysis (paper §5.2, Table 1).
+//!
+//! The e-graph alone proves equality of *structurally rewritable* terms.
+//! Distribution needs more: a distributed tensor is not equal to its
+//! baseline counterpart — it is a **shard** of it, a **partial** result
+//! whose cross-core reduction equals it, or a **relayouted bijection** of
+//! it. This module maintains those relations as facts over e-class pairs
+//! and propagates them through operators with the paper's rule families:
+//!
+//! * **Partition** — `sharded` / `duplicate` propagation through
+//!   elementwise ops, dot, broadcast, reduce and the collectives;
+//! * **Layout** — symbolic [`crate::layout::AxisExpr`] pairs tracked
+//!   through reshape/transpose on either graph, aligned via bijection
+//!   inference when the two paths diverge structurally;
+//! * **Slicing** — fine-grained per-core slice relations
+//!   ([`PerCoreFact`]) relating one distributed tensor to *different*
+//!   baseline nodes on different cores;
+//! * **Unroll** — discharge of per-core relations against the baseline's
+//!   unrolled reduction tree (`loop_red_B`/`loop_red_D` of the paper).
+//!
+//! Facts are only ever derived by sound rules, so a final
+//! `duplicate`-with-identity-layout fact on the output pair is a proof of
+//! semantic equivalence (§5.1 soundness).
+
+mod facts;
+mod engine;
+
+pub use engine::{GraphCtx, RelEngine, StepOutcome};
+pub use facts::{Fact, FactKey, PerCoreFact, Signature};

@@ -1,0 +1,88 @@
+//! Table/figure emitters: aligned text tables + CSV for every experiment.
+
+use std::fmt::Write;
+
+/// A simple aligned text table with optional CSV dump.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render aligned text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        writeln!(out, "== {} ==", self.title).unwrap();
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        writeln!(out, "{}", fmt_row(&self.headers)).unwrap();
+        writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len())).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", fmt_row(row)).unwrap();
+        }
+        out
+    }
+
+    /// Render CSV.
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.headers.join(",")).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", row.join(",")).unwrap();
+        }
+        out
+    }
+
+    /// Write CSV next to the bench outputs.
+    pub fn save_csv(&self, name: &str) {
+        let dir = std::path::Path::new("target/reports");
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), self.csv());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "long-header", "c"]);
+        t.row(&["1".into(), "2".into(), "3".into()]);
+        t.row(&["xxx".into(), "y".into(), "zzzz".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-header"));
+        let csv = t.csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("a,long-header,c"));
+    }
+}

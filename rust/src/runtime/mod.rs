@@ -1,0 +1,132 @@
+//! PJRT runtime: load AOT-compiled JAX artifacts and execute them from
+//! Rust (the `xla` crate over xla_extension 0.5.1, CPU client).
+//!
+//! Interchange is HLO **text** — `HloModuleProto::from_text_file` — never
+//! serialized protos (jax ≥ 0.5 emits 64-bit instruction ids this XLA
+//! rejects). Python runs only at build time; after `make artifacts` the
+//! Rust binary is self-contained.
+
+use crate::interp::Tensor;
+use crate::ir::{DType, Shape};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled executable plus its client.
+pub struct Executable {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load HLO text from `path`, compile on the CPU PJRT client.
+    pub fn load(path: &Path) -> Result<Executable> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(Executable { client, exe })
+    }
+
+    /// Compile HLO text given as a string.
+    pub fn from_text(text: &str) -> Result<Executable> {
+        let tmp = std::env::temp_dir().join(format!("scalify_hlo_{}.txt", std::process::id()));
+        std::fs::write(&tmp, text)?;
+        let out = Self::load(&tmp);
+        let _ = std::fs::remove_file(&tmp);
+        out
+    }
+
+    /// Execute with f32 host tensors; returns the tuple elements as host
+    /// tensors. Inputs are converted to f32 literals (the artifacts this
+    /// repo builds are all-f32 at the interface).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let data: Vec<f32> = t.data.iter().map(|&v| v as f32).collect();
+                xla::Literal::vec1(&data)
+                    .reshape(&t.shape.dims)
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // jax lowers with return_tuple=True → outputs are a tuple
+        let elements = result.decompose_tuple()?;
+        elements
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data: Vec<f32> = lit.to_vec::<f32>()?;
+                Ok(Tensor::new(
+                    Shape::new(DType::F32, dims),
+                    data.into_iter().map(|v| v as f64).collect(),
+                ))
+            })
+            .collect()
+    }
+
+    /// Device count of the underlying client.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(name: &str) -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name)
+    }
+
+    #[test]
+    fn executes_jax_artifacts_and_variants_agree() {
+        let single = artifact("model_single.hlo.txt");
+        let opt = artifact("model_opt.hlo.txt");
+        if !single.exists() || !opt.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let exe_a = Executable::load(&single).unwrap();
+        let exe_b = Executable::load(&opt).unwrap();
+        // shapes from our own parser
+        let g = crate::hlo::parse_hlo_file(&single, 1).unwrap();
+        let mut p = crate::util::Prng::new(31);
+        let inputs: Vec<Tensor> = g
+            .parameters()
+            .iter()
+            .map(|&pid| Tensor::random(g.node(pid).shape.clone(), &mut p))
+            .collect();
+        let out_a = exe_a.run(&inputs).unwrap();
+        let out_b = exe_b.run(&inputs).unwrap();
+        assert_eq!(out_a[0].shape.dims, out_b[0].shape.dims);
+        let diff = out_a[0].max_abs_diff(&out_b[0]);
+        assert!(diff < 1e-4, "variants diverged by {diff}");
+    }
+
+    #[test]
+    fn buggy_artifact_diverges_numerically() {
+        let single = artifact("model_single.hlo.txt");
+        let buggy = artifact("model_opt_buggy.hlo.txt");
+        if !single.exists() || !buggy.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let exe_a = Executable::load(&single).unwrap();
+        let exe_b = Executable::load(&buggy).unwrap();
+        let g = crate::hlo::parse_hlo_file(&single, 1).unwrap();
+        let mut p = crate::util::Prng::new(33);
+        let inputs: Vec<Tensor> = g
+            .parameters()
+            .iter()
+            .map(|&pid| Tensor::random(g.node(pid).shape.clone(), &mut p))
+            .collect();
+        let out_a = exe_a.run(&inputs).unwrap();
+        let out_b = exe_b.run(&inputs).unwrap();
+        assert!(out_a[0].max_abs_diff(&out_b[0]) > 1e-3, "BSH bug must change numerics");
+    }
+}

@@ -1,0 +1,93 @@
+//! String interning for source-location metadata.
+//!
+//! Every IR node carries a source site (`file.py:42`, expression text).
+//! Graphs for 126-layer models have hundreds of thousands of nodes whose
+//! metadata strings repeat per layer, so we intern them once and store a
+//! 4-byte [`Sym`] per node.
+
+use rustc_hash::FxHashMap;
+
+/// Interned string handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Sym(pub u32);
+
+impl Sym {
+    /// The empty string, pre-interned in every [`Interner`].
+    pub const EMPTY: Sym = Sym(0);
+}
+
+/// Append-only string interner.
+#[derive(Debug, Default, Clone)]
+pub struct Interner {
+    map: FxHashMap<String, Sym>,
+    strings: Vec<String>,
+}
+
+impl Interner {
+    /// Create an interner with `""` pre-interned as [`Sym::EMPTY`].
+    pub fn new() -> Self {
+        let mut i = Interner { map: FxHashMap::default(), strings: Vec::new() };
+        let empty = i.intern("");
+        debug_assert_eq!(empty, Sym::EMPTY);
+        i
+    }
+
+    /// Intern a string, returning its stable handle.
+    pub fn intern(&mut self, s: &str) -> Sym {
+        if let Some(&sym) = self.map.get(s) {
+            return sym;
+        }
+        let sym = Sym(self.strings.len() as u32);
+        self.strings.push(s.to_owned());
+        self.map.insert(s.to_owned(), sym);
+        sym
+    }
+
+    /// Resolve a handle back to its string.
+    pub fn resolve(&self, sym: Sym) -> &str {
+        &self.strings[sym.0 as usize]
+    }
+
+    /// Number of distinct interned strings.
+    pub fn len(&self) -> usize {
+        self.strings.len()
+    }
+
+    /// True if only the empty string is interned.
+    pub fn is_empty(&self) -> bool {
+        self.strings.len() <= 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_roundtrip() {
+        let mut i = Interner::new();
+        let a = i.intern("attention.py:10");
+        let b = i.intern("mlp.py:99");
+        let a2 = i.intern("attention.py:10");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(i.resolve(a), "attention.py:10");
+        assert_eq!(i.resolve(b), "mlp.py:99");
+    }
+
+    #[test]
+    fn empty_is_sym_zero() {
+        let mut i = Interner::new();
+        assert_eq!(i.intern(""), Sym::EMPTY);
+        assert_eq!(i.resolve(Sym::EMPTY), "");
+    }
+
+    #[test]
+    fn dedup_counts() {
+        let mut i = Interner::new();
+        for _ in 0..100 {
+            i.intern("same");
+        }
+        assert_eq!(i.len(), 2); // "" + "same"
+    }
+}

@@ -1,0 +1,59 @@
+//! Small shared utilities: deterministic PRNG, string interning, timing.
+//!
+//! The build environment is fully offline, so instead of pulling `rand` /
+//! `string-interner` we carry the ~100 lines ourselves.
+
+pub mod prng;
+pub mod intern;
+pub mod timer;
+
+pub use intern::{Interner, Sym};
+pub use prng::Prng;
+pub use timer::Stopwatch;
+
+/// Human-readable duration, matching the paper's "1m 40s" style.
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    if d.as_micros() < 1_000 {
+        return format!("{}us", d.as_micros());
+    }
+    let total_ms = d.as_millis();
+    if total_ms < 1_000 {
+        return format!("{:.1}ms", d.as_secs_f64() * 1e3);
+    }
+    let secs = d.as_secs_f64();
+    if secs < 60.0 {
+        return format!("{:.1}s", secs);
+    }
+    let mins = (secs / 60.0).floor() as u64;
+    let rem = secs - (mins as f64) * 60.0;
+    format!("{}m {:.0}s", mins, rem)
+}
+
+/// Integer ceil-div used all over shard-size computations.
+pub fn ceil_div(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fmt_duration_bands() {
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.0ms");
+        assert_eq!(fmt_duration(Duration::from_micros(250)), "250us");
+        assert_eq!(fmt_duration(Duration::from_millis(4_200)), "4.2s");
+        assert_eq!(fmt_duration(Duration::from_secs(100)), "1m 40s");
+        assert_eq!(fmt_duration(Duration::from_secs(181)), "3m 1s");
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 32), 1);
+        assert_eq!(ceil_div(0, 4), 0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Lightweight phase timing used by the verifier and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch with named phases.
+///
+/// The verifier records per-phase wall time (partitioning, rewriting,
+/// bijection inference, localization) so benches and `--verbose` output can
+/// break down where time is spent — the paper's Figure 12 needs exactly
+/// this split.
+#[derive(Debug, Clone, Default)]
+pub struct Stopwatch {
+    phases: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    /// Fresh stopwatch with no recorded phases.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.record(name, start.elapsed());
+        out
+    }
+
+    /// Record an externally measured duration (accumulates across calls).
+    pub fn record(&mut self, name: &str, d: Duration) {
+        if let Some(entry) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            entry.1 += d;
+        } else {
+            self.phases.push((name.to_owned(), d));
+        }
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Duration of one phase (zero if never recorded).
+    pub fn phase(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    /// Iterate recorded `(phase, duration)` pairs in insertion order.
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.phases.iter().map(|(n, d)| (n.as_str(), *d))
+    }
+
+    /// Merge another stopwatch's phases into this one (used when parallel
+    /// workers each keep a local stopwatch).
+    pub fn merge(&mut self, other: &Stopwatch) {
+        for (name, d) in other.phases() {
+            self.record(name, d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_same_phase() {
+        let mut sw = Stopwatch::new();
+        sw.record("rewrite", Duration::from_millis(5));
+        sw.record("rewrite", Duration::from_millis(7));
+        sw.record("parse", Duration::from_millis(1));
+        assert_eq!(sw.phase("rewrite"), Duration::from_millis(12));
+        assert_eq!(sw.total(), Duration::from_millis(13));
+    }
+
+    #[test]
+    fn time_records_result() {
+        let mut sw = Stopwatch::new();
+        let v = sw.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(sw.phase("work") >= Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Stopwatch::new();
+        a.record("x", Duration::from_millis(2));
+        let mut b = Stopwatch::new();
+        b.record("x", Duration::from_millis(3));
+        b.record("y", Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.phase("x"), Duration::from_millis(5));
+        assert_eq!(a.phase("y"), Duration::from_millis(4));
+    }
+}

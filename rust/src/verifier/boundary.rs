@@ -1,0 +1,147 @@
+//! Boundary relation summaries propagated between layers (Algorithm 1's
+//! `PropagateOutputToNextLayer`).
+
+use crate::egraph::EGraph;
+use crate::ir::ReduceKind;
+use crate::layout::AtomStore;
+use crate::relations::Fact;
+
+/// The relation of a boundary tensor pair, reduced to what the next
+/// layer's input registration needs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RelSummary {
+    /// Distributed value replicates the baseline value.
+    Duplicate,
+    /// Distributed value is the per-core shard along `dim`.
+    Sharded {
+        /// Baseline dimension that is split.
+        dim: usize,
+        /// Shard count.
+        parts: u32,
+    },
+    /// Distributed value is a per-core partial; cross-core `kind`-reduction
+    /// yields the baseline value.
+    Partial {
+        /// Pending reduction.
+        kind: ReduceKind,
+    },
+}
+
+/// Summarize a fact into a boundary relation, if it has one of the three
+/// propagatable forms. Non-identity layouts and multi-axis shardings are
+/// not propagated (the layer fails its check instead — a soundness-
+/// preserving incompleteness, §5.1).
+pub fn summarize(fact: &Fact, store: &AtomStore, _eg: &EGraph) -> Option<RelSummary> {
+    if fact.is_duplicate(store) {
+        return Some(RelSummary::Duplicate);
+    }
+    // identity-layout partial
+    if fact.shard_atoms.is_empty() {
+        if let Some(kind) = fact.partial {
+            if fact.base_expr.structurally_equal(&fact.dist_expr, store) {
+                return Some(RelSummary::Partial { kind });
+            }
+        }
+        return None;
+    }
+    // single-shard, axis-aligned
+    if fact.shard_atoms.len() == 1 && fact.partial.is_none() {
+        let s = fact.shard_atoms[0];
+        let base_exp = fact.base_expr.expanded(store);
+        // shard axis = base axis whose leading factor is s; all other axes
+        // must match the dist side exactly
+        let dist_exp = fact.dist_expr.expanded(store);
+        if base_exp.axes.len() != dist_exp.axes.len() {
+            return None;
+        }
+        let mut dim = None;
+        for (i, (b, d)) in base_exp.axes.iter().zip(&dist_exp.axes).enumerate() {
+            let bf: Vec<_> = b.iter().copied().filter(|&a| store.size(a) != 1).collect();
+            let df: Vec<_> = d.iter().copied().filter(|&a| store.size(a) != 1).collect();
+            if bf.first() == Some(&s) && bf[1..] == df[..] {
+                if dim.is_some() {
+                    return None;
+                }
+                dim = Some(i);
+            } else if bf != df {
+                return None;
+            }
+        }
+        return dim.map(|d| RelSummary::Sharded { dim: d, parts: store.size(s) as u32 });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Id;
+    use crate::layout::AxisExpr;
+
+    #[test]
+    fn summarize_duplicate() {
+        let mut store = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut store, &[4, 8]);
+        let f = Fact::duplicate(Id(0), Id(1), e);
+        let eg = EGraph::new();
+        assert_eq!(summarize(&f, &store, &eg), Some(RelSummary::Duplicate));
+    }
+
+    #[test]
+    fn summarize_sharded() {
+        let mut store = AtomStore::new();
+        let base = AxisExpr::from_shape(&mut store, &[8, 16]);
+        let atom1 = base.axes[1][0];
+        let kids = store.split_leaf(atom1, &[4, 4]).unwrap();
+        let dist = AxisExpr::from_axes(vec![base.axes[0].clone(), vec![kids[1]]]);
+        let f = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: base,
+            dist_expr: dist,
+            shard_atoms: vec![kids[0]],
+            partial: None,
+        };
+        let eg = EGraph::new();
+        assert_eq!(
+            summarize(&f, &store, &eg),
+            Some(RelSummary::Sharded { dim: 1, parts: 4 })
+        );
+    }
+
+    #[test]
+    fn summarize_partial() {
+        let mut store = AtomStore::new();
+        let e = AxisExpr::from_shape(&mut store, &[4]);
+        let f = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: e.clone(),
+            dist_expr: e,
+            shard_atoms: vec![],
+            partial: Some(ReduceKind::Add),
+        };
+        let eg = EGraph::new();
+        assert_eq!(
+            summarize(&f, &store, &eg),
+            Some(RelSummary::Partial { kind: ReduceKind::Add })
+        );
+    }
+
+    #[test]
+    fn transposed_layout_not_summarizable() {
+        let mut store = AtomStore::new();
+        let base = AxisExpr::from_shape(&mut store, &[4, 8]);
+        let dist = base.transpose(&[1, 0]).unwrap();
+        let f = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: base,
+            dist_expr: dist,
+            shard_atoms: vec![],
+            partial: None,
+        };
+        let eg = EGraph::new();
+        assert_eq!(summarize(&f, &store, &eg), None);
+    }
+}

@@ -1,0 +1,283 @@
+//! Single-layer verification: register both subgraphs into one e-graph,
+//! saturate, propagate relations to fixpoint, check boundary outputs.
+
+use super::boundary::{summarize, RelSummary};
+use crate::egraph::{EGraph, ENode, Id, RunLimits, Runner};
+use crate::ir::{NodeId, Op};
+use crate::localize::{frontier, Discrepancy};
+use crate::partition::LayerSlice;
+use crate::relations::{GraphCtx, RelEngine, StepOutcome};
+use rustc_hash::FxHashMap;
+
+/// Result of verifying one layer pair.
+#[derive(Clone, Debug)]
+pub struct LayerOutcome {
+    /// All boundary outputs related.
+    pub verified: bool,
+    /// Relation summary per boundary output pair.
+    pub out_rels: Vec<RelSummary>,
+    /// Localized divergence frontier (empty when verified).
+    pub discrepancies: Vec<Discrepancy>,
+    /// E-graph size at the end.
+    pub egraph_nodes: usize,
+    /// Facts derived.
+    pub facts: usize,
+    /// Hit the saturation resource limit.
+    pub exhausted: bool,
+}
+
+/// Resolve each dist-slice input to its baseline partner + relation using
+/// the boundary map (annotations + previous layers' outputs). Returns
+/// `(base_param_pos, dist_param_pos, rel)` triples.
+pub fn collect_input_rels(
+    bslice: &LayerSlice,
+    dslice: &LayerSlice,
+    boundary: &FxHashMap<NodeId, (NodeId, RelSummary)>,
+) -> Vec<(usize, usize, RelSummary)> {
+    let mut rels = Vec::new();
+    for (dpos, dorig) in dslice.ext_inputs.iter().enumerate() {
+        if let Some((borig, rel)) = boundary.get(dorig) {
+            if let Some(bpos) = bslice.ext_inputs.iter().position(|b| b == borig) {
+                rels.push((bpos, dpos, rel.clone()));
+            }
+        }
+    }
+    rels
+}
+
+/// Speculative variant: unknown boundaries are assumed `Duplicate`
+/// positionally (used by the parallel pre-pass; the sequential pass
+/// re-checks with exact relations, so speculation can only waste work,
+/// never unsoundly verify).
+pub fn collect_input_rels_speculative(
+    bslice: &LayerSlice,
+    dslice: &LayerSlice,
+    boundary: &FxHashMap<NodeId, (NodeId, RelSummary)>,
+) -> Vec<(usize, usize, RelSummary)> {
+    let mut rels = collect_input_rels(bslice, dslice, boundary);
+    let known: Vec<usize> = rels.iter().map(|(_, d, _)| *d).collect();
+    for (dpos, _) in dslice.ext_inputs.iter().enumerate() {
+        if known.contains(&dpos) {
+            continue;
+        }
+        // positional pairing with matching shapes
+        if dpos < bslice.ext_inputs.len() {
+            rels.push((dpos, dpos, RelSummary::Duplicate));
+        }
+    }
+    rels.sort_by_key(|(_, d, _)| *d);
+    rels
+}
+
+/// Register a slice's nodes into the e-graph. Parameters are namespaced
+/// per side so baseline and distributed inputs never hash-cons together.
+fn register_slice(eg: &mut EGraph, slice: &LayerSlice, side: &str, distributed: bool) -> Vec<Id> {
+    let g = &slice.graph;
+    let mut map = Vec::with_capacity(g.len());
+    for n in &g.nodes {
+        let op = match &n.op {
+            Op::Parameter { index, name } => Op::Parameter {
+                index: *index,
+                name: format!("{side}::{name}"),
+            },
+            other => other.clone(),
+        };
+        let children: Vec<Id> = n.inputs.iter().map(|i| map[i.idx()]).collect();
+        let id = eg.add_with_data(ENode::new(op, children), n.shape.clone(), distributed, n.id);
+        map.push(id);
+    }
+    map
+}
+
+/// Verify one layer pair.
+pub fn verify_layer(
+    bslice: &LayerSlice,
+    dslice: &LayerSlice,
+    input_rels: &[(usize, usize, RelSummary)],
+    cores: u32,
+    limits: RunLimits,
+    max_rounds: usize,
+) -> LayerOutcome {
+    let mut eg = EGraph::new();
+    let b2c = register_slice(&mut eg, bslice, "B", false);
+    let d2c = register_slice(&mut eg, dslice, "D", true);
+    let base_uses = bslice.graph.uses();
+
+    let mut rel = RelEngine::new(cores);
+
+    // ---- register input relations ----
+    let bparams = bslice.graph.parameters();
+    let dparams = dslice.graph.parameters();
+    for (bpos, dpos, summary) in input_rels {
+        let (Some(&bp), Some(&dp)) = (bparams.get(*bpos), dparams.get(*dpos)) else {
+            continue;
+        };
+        let bclass = b2c[bp.idx()];
+        let dclass = d2c[dp.idx()];
+        let bdims = &bslice.graph.node(bp).shape.dims;
+        match summary {
+            RelSummary::Duplicate => rel.register_replicated(&eg, bclass, dclass, bdims),
+            RelSummary::Sharded { dim, parts } => {
+                rel.register_shard(&eg, bclass, dclass, bdims, *dim, *parts)
+            }
+            RelSummary::Partial { kind } => {
+                rel.register_partial(&eg, bclass, dclass, bdims, *kind)
+            }
+        }
+    }
+
+    // ---- saturate + propagate to fixpoint ----
+    let rules = crate::egraph::default_rules();
+    let runner = Runner::new(&rules, limits);
+    let mut exhausted = false;
+    let mut outcomes: Vec<StepOutcome> = vec![StepOutcome::NotReady; dslice.graph.len()];
+    for _round in 0..max_rounds {
+        let report = runner.run(&mut eg);
+        if report.stop == crate::egraph::runner::StopReason::NodeLimit {
+            exhausted = true;
+            break;
+        }
+        rel.rekey(&eg);
+        let facts_before = rel.fact_count;
+
+        let ctx = GraphCtx {
+            base: &bslice.graph,
+            dist: &dslice.graph,
+            b2c: &b2c,
+            d2c: &d2c,
+            base_uses: &base_uses,
+            class_index: std::cell::RefCell::new(None),
+        };
+        rel.propagate_base_layouts(&mut eg, &ctx);
+        for n in &dslice.graph.nodes {
+            outcomes[n.id.idx()] = rel.process_dist_node(&mut eg, &ctx, n);
+        }
+
+        // union duplicate facts so structural matching sees through them
+        let mut unions = 0;
+        for n in &dslice.graph.nodes {
+            for f in rel.facts_for(&eg, d2c[n.id.idx()]) {
+                if f.is_duplicate(&rel.store) && !eg.same(f.base, f.dist) {
+                    eg.union(f.base, f.dist);
+                    unions += 1;
+                }
+            }
+        }
+        if unions > 0 {
+            eg.rebuild();
+            rel.rekey(&eg);
+        }
+
+        if rel.fact_count == facts_before && unions == 0 {
+            break;
+        }
+    }
+
+    // ---- boundary output check ----
+    let mut out_rels = Vec::new();
+    let mut failed_outputs: Vec<(NodeId, String)> = Vec::new();
+    let mut verified = true;
+    let n_outs = bslice.graph.outputs.len().max(dslice.graph.outputs.len());
+    for k in 0..n_outs {
+        let (Some(&bo), Some(&do_)) =
+            (bslice.graph.outputs.get(k), dslice.graph.outputs.get(k))
+        else {
+            verified = false;
+            continue;
+        };
+        let bclass = eg.find(b2c[bo.idx()]);
+        let dclass = eg.find(d2c[do_.idx()]);
+        let mut summary = None;
+        for f in rel.facts_for(&eg, dclass) {
+            if eg.find(f.base) != bclass {
+                continue;
+            }
+            if let Some(s) = summarize(&f, &rel.store, &eg) {
+                // prefer Duplicate over weaker summaries
+                let better = matches!(s, RelSummary::Duplicate) || summary.is_none();
+                if better {
+                    summary = Some(s);
+                }
+            }
+        }
+        if summary.is_none() && bclass == dclass {
+            summary = Some(RelSummary::Duplicate);
+        }
+        // final graph outputs must be exact duplicates: a shard/partial
+        // left at the very end is a divergence (e.g. missing all-reduce)
+        let is_final = dslice.final_outputs.get(k).copied().unwrap_or(false);
+        if is_final && !matches!(summary, Some(RelSummary::Duplicate)) {
+            let residual = match &summary {
+                Some(RelSummary::Partial { kind }) => format!(
+                    "output is still a per-core partial ({kind:?}) — missing collective reduction?"
+                ),
+                Some(RelSummary::Sharded { dim, .. }) => format!(
+                    "output is still sharded along dim {dim} — missing all-gather?"
+                ),
+                _ => "output never related to the baseline output".to_string(),
+            };
+            failed_outputs.push((do_, residual));
+            summary = None;
+        } else if summary.is_none() {
+            failed_outputs.push((do_, "output never related to the baseline output".into()));
+        }
+        match summary {
+            Some(s) => out_rels.push(s),
+            None => {
+                verified = false;
+                out_rels.push(RelSummary::Duplicate); // placeholder, unused on failure
+            }
+        }
+    }
+    if exhausted {
+        verified = false;
+    }
+
+    // ---- localization on failure ----
+    let discrepancies = if verified {
+        vec![]
+    } else {
+        let related: Vec<bool> = dslice
+            .graph
+            .nodes
+            .iter()
+            .map(|n| {
+                rel.has_any(&eg, d2c[n.id.idx()])
+                    || rel.percore_for(&eg, d2c[n.id.idx()]).first().is_some()
+                    || n.inputs.is_empty()
+            })
+            .collect();
+        let mut ds: Vec<Discrepancy> = frontier(&dslice.graph, &related)
+            .into_iter()
+            .map(|id| {
+                let reason = match outcomes[id.idx()] {
+                    StepOutcome::NoRule => {
+                        "inputs are verified but no relation rule applies here"
+                    }
+                    _ => "no relation derived for this operation",
+                }
+                .to_string();
+                Discrepancy::from_node(&dslice.graph, id, reason)
+            })
+            .collect();
+        // failed outputs whose relation never resolved (e.g. a leftover
+        // partial at the graph output = missing all-reduce)
+        for (orig, reason) in failed_outputs {
+            if let Some(&sub_id) = dslice.node_map.get(&orig) {
+                if !ds.iter().any(|d| d.dist_node == sub_id) {
+                    ds.push(Discrepancy::from_node(&dslice.graph, sub_id, reason));
+                }
+            }
+        }
+        ds
+    };
+
+    LayerOutcome {
+        verified,
+        out_rels,
+        discrepancies,
+        egraph_nodes: eg.node_count(),
+        facts: rel.fact_count,
+        exhausted,
+    }
+}

@@ -1,0 +1,395 @@
+//! The Scalify verifier: Algorithm 1 end to end.
+//!
+//! ```text
+//! (L_s, L_m) ← PartitionGraphsToLayers(G_s, G_m)
+//! for each layer pair:
+//!     register + saturate + propagate relations   (bounded e-graph)
+//!     check boundary outputs, memoize by fingerprint
+//!     propagate output relations to the next layer
+//! on failure: localize the discrepancy frontier   (§5.3)
+//! ```
+
+pub mod boundary;
+pub mod layer;
+mod pair;
+
+use crate::egraph::RunLimits;
+use crate::localize::Discrepancy;
+use crate::partition::{extract_layers, fingerprint_pair, LayerMemo};
+use crate::partition::{LayerSlice};
+use crate::util::{fmt_duration, Stopwatch};
+use boundary::RelSummary;
+pub use pair::GraphPair;
+use rustc_hash::FxHashMap;
+use std::time::Instant;
+
+/// Verifier configuration (the Figure-12 ablation toggles live here).
+#[derive(Clone, Debug)]
+pub struct VerifyConfig {
+    /// Partition along layer boundaries (off = whole-graph e-graph; expect
+    /// resource exhaustion on real models, as the paper reports).
+    pub partition: bool,
+    /// Verify independent layer pairs on worker threads.
+    pub parallel: bool,
+    /// Memoize layer results by structural fingerprint.
+    pub memoize: bool,
+    /// Worker threads for parallel rewriting.
+    pub threads: usize,
+    /// E-graph saturation budgets per layer.
+    pub limits: RunLimits,
+    /// Relation-propagation fixpoint rounds per layer.
+    pub max_rounds: usize,
+}
+
+impl Default for VerifyConfig {
+    fn default() -> Self {
+        VerifyConfig {
+            partition: true,
+            parallel: true,
+            memoize: true,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            limits: RunLimits::default(),
+            max_rounds: 8,
+        }
+    }
+}
+
+/// Verification verdict.
+#[derive(Clone, Debug)]
+pub enum Verdict {
+    /// Semantically equivalent: every boundary and final output proved.
+    Verified,
+    /// Divergence found; discrepancies are the localized frontier.
+    Unverified {
+        /// Localized divergence sites.
+        discrepancies: Vec<Discrepancy>,
+    },
+    /// Rewriting blew the resource budget (the unpartitioned-full-model
+    /// outcome in Figure 12).
+    ResourceExhausted {
+        /// Which layer (or whole graph) hit the limit.
+        at: String,
+    },
+}
+
+/// Per-layer statistics.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    /// Layer tag.
+    pub layer: u32,
+    /// Verified?
+    pub verified: bool,
+    /// Served from the memo table?
+    pub memoized: bool,
+    /// E-graph nodes at the end of saturation.
+    pub egraph_nodes: usize,
+    /// Facts derived.
+    pub facts: usize,
+    /// Wall time.
+    pub duration: std::time::Duration,
+}
+
+/// Full verification report.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    /// Verdict.
+    pub verdict: Verdict,
+    /// Per-layer details.
+    pub layers: Vec<LayerReport>,
+    /// Phase timings.
+    pub stopwatch: Stopwatch,
+    /// Total wall time.
+    pub total: std::time::Duration,
+}
+
+impl VerifyReport {
+    /// True when the verdict is [`Verdict::Verified`].
+    pub fn verified(&self) -> bool {
+        matches!(self.verdict, Verdict::Verified)
+    }
+
+    /// Discrepancies (empty when verified).
+    pub fn discrepancies(&self) -> &[Discrepancy] {
+        match &self.verdict {
+            Verdict::Unverified { discrepancies } => discrepancies,
+            _ => &[],
+        }
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        let memoized = self.layers.iter().filter(|l| l.memoized).count();
+        let status = match &self.verdict {
+            Verdict::Verified => "VERIFIED".to_string(),
+            Verdict::Unverified { discrepancies } => {
+                format!("UNVERIFIED ({} discrepancies)", discrepancies.len())
+            }
+            Verdict::ResourceExhausted { at } => format!("RESOURCE-EXHAUSTED at {at}"),
+        };
+        format!(
+            "{status} — {} layers ({} memoized) in {}",
+            self.layers.len(),
+            memoized,
+            fmt_duration(self.total)
+        )
+    }
+}
+
+/// The verifier.
+pub struct Verifier {
+    cfg: VerifyConfig,
+}
+
+impl Verifier {
+    /// New verifier with `cfg`.
+    pub fn new(cfg: VerifyConfig) -> Verifier {
+        Verifier { cfg }
+    }
+
+    /// Verify a baseline/distributed graph pair.
+    pub fn verify_pair(&self, pair: &GraphPair) -> VerifyReport {
+        let start = Instant::now();
+        let mut sw = Stopwatch::new();
+
+        // ---- partitioning ----
+        let (base_layers, dist_layers) = sw.time("partition", || {
+            if self.cfg.partition {
+                (extract_layers(&pair.base), extract_layers(&pair.dist))
+            } else {
+                (whole_graph_slice(&pair.base), whole_graph_slice(&pair.dist))
+            }
+        });
+
+        // annotation map: dist param orig id -> (base orig id, summary)
+        let mut boundary: FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)> =
+            FxHashMap::default();
+        for a in &pair.annotations {
+            let rel = match &a.relation {
+                crate::ir::InputRelation::ShardAlong { dim, parts } => {
+                    RelSummary::Sharded { dim: *dim, parts: *parts }
+                }
+                crate::ir::InputRelation::Replicated => RelSummary::Duplicate,
+                crate::ir::InputRelation::DeviceIds => continue,
+            };
+            if let Some(b) = a.baseline {
+                boundary.insert(a.distributed, (b, rel));
+            }
+        }
+
+        // pair layers by tag, in dist order
+        let base_by_tag: FxHashMap<u32, &LayerSlice> =
+            base_layers.iter().map(|l| (l.layer, l)).collect();
+
+        let mut reports = Vec::new();
+        let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
+        let mut memo = LayerMemo::new();
+        let mut exhausted: Option<String> = None;
+
+        // ---- optional speculative parallel pass ----
+        // Boundary relations between transformer layers are almost always
+        // the same as the layer's own input relation (the residual stream
+        // keeps its placement). Speculatively verify all layer pairs in
+        // parallel assuming `Duplicate` for unknown boundaries; the
+        // sequential pass reuses a speculation hit whenever the exact
+        // boundary relations match what was speculated.
+        let mut speculated: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+            FxHashMap::default();
+        if self.cfg.parallel && self.cfg.partition && dist_layers.len() > 1 {
+            sw.time("parallel-rewrite", || {
+                speculated = self.speculative_pass(&dist_layers, &base_by_tag, &boundary);
+            });
+        }
+
+        // ---- sequential pass with exact boundary propagation ----
+        sw.time("verify-layers", || {
+            for dslice in &dist_layers {
+                let Some(bslice) = base_by_tag.get(&dslice.layer) else {
+                    all_discrepancies.push(Discrepancy {
+                        dist_node: crate::ir::NodeId(0),
+                        site: String::new(),
+                        func: String::new(),
+                        expr: format!("layer {}", dslice.layer),
+                        reason: "layer missing from baseline graph".into(),
+                        layer: Some(dslice.layer),
+                    });
+                    continue;
+                };
+                let t0 = Instant::now();
+                let input_rels = layer::collect_input_rels(bslice, dslice, &boundary);
+                let fp = fingerprint_pair(bslice, dslice, &input_rels, pair.dist.num_cores);
+                let spec_hit = speculated
+                    .get(&dslice.layer)
+                    .filter(|(rels, o)| rels == &input_rels && o.verified)
+                    .map(|(_, o)| o.clone());
+                let (outcome, memoized) = match (spec_hit, self.cfg.memoize, memo.get(fp)) {
+                    (Some(o), _, _) => (o, true),
+                    (None, true, Some(entry)) if entry.verified => (
+                        layer::LayerOutcome {
+                            verified: true,
+                            out_rels: entry.out_rels.clone(),
+                            discrepancies: vec![],
+                            egraph_nodes: entry.egraph_nodes,
+                            facts: 0,
+                            exhausted: false,
+                        },
+                        true,
+                    ),
+                    _ => {
+                        let o = layer::verify_layer(
+                            bslice,
+                            dslice,
+                            &input_rels,
+                            pair.dist.num_cores,
+                            self.cfg.limits,
+                            self.cfg.max_rounds,
+                        );
+                        if self.cfg.memoize && o.verified {
+                            memo.put(
+                                fp,
+                                crate::partition::fingerprint::MemoEntry {
+                                    verified: o.verified,
+                                    out_rels: o.out_rels.clone(),
+                                    egraph_nodes: o.egraph_nodes,
+                                },
+                            );
+                        }
+                        (o, false)
+                    }
+                };
+                if outcome.exhausted {
+                    exhausted = Some(format!("layer {}", dslice.layer));
+                }
+                // propagate boundary output relations
+                for (k, rel) in outcome.out_rels.iter().enumerate() {
+                    if let (Some(&b), Some(&d)) =
+                        (bslice.boundary_outputs.get(k), dslice.boundary_outputs.get(k))
+                    {
+                        boundary.insert(d, (b, rel.clone()));
+                    }
+                }
+                all_discrepancies.extend(outcome.discrepancies.iter().cloned());
+                reports.push(LayerReport {
+                    layer: dslice.layer,
+                    verified: outcome.verified,
+                    memoized,
+                    egraph_nodes: outcome.egraph_nodes,
+                    facts: outcome.facts,
+                    duration: t0.elapsed(),
+                });
+            }
+        });
+
+        let verdict = if let Some(at) = exhausted {
+            Verdict::ResourceExhausted { at }
+        } else if reports.iter().all(|r| r.verified) && all_discrepancies.is_empty() {
+            Verdict::Verified
+        } else {
+            Verdict::Unverified { discrepancies: all_discrepancies }
+        };
+        VerifyReport { verdict, layers: reports, stopwatch: sw, total: start.elapsed() }
+    }
+
+    /// Speculative parallel layer verification. When memoization is on,
+    /// distinct layer structures are verified once (fingerprint dedup);
+    /// when off, every layer pair is verified, but in parallel.
+    fn speculative_pass(
+        &self,
+        dist_layers: &[LayerSlice],
+        base_by_tag: &FxHashMap<u32, &LayerSlice>,
+        boundary: &FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)>,
+    ) -> FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> {
+        let cfg = &self.cfg;
+        let mut jobs: Vec<(u32, &LayerSlice, &LayerSlice, Vec<(usize, usize, RelSummary)>)> =
+            Vec::new();
+        let mut seen = rustc_hash::FxHashMap::default(); // fp -> first tag
+        let mut alias: Vec<(u32, u64)> = Vec::new();
+        for d in dist_layers {
+            let Some(b) = base_by_tag.get(&d.layer) else { continue };
+            let rels = layer::collect_input_rels_speculative(b, d, boundary);
+            if cfg.memoize {
+                let fp = fingerprint_pair(b, d, &rels, d.graph.num_cores);
+                if let Some(&_first) = seen.get(&fp) {
+                    alias.push((d.layer, fp));
+                    continue;
+                }
+                seen.insert(fp, d.layer);
+                alias.push((d.layer, fp));
+            }
+            jobs.push((d.layer, b, d, rels));
+        }
+        let cores = jobs.first().map(|(_, _, d, _)| d.graph.num_cores).unwrap_or(1);
+        let results: Vec<(u32, Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+            if cfg.threads <= 1 || jobs.len() <= 1 {
+                jobs.into_iter()
+                    .map(|(tag, b, d, rels)| {
+                        let o = layer::verify_layer(b, d, &rels, cores, cfg.limits, cfg.max_rounds);
+                        (tag, rels, o)
+                    })
+                    .collect()
+            } else {
+                let chunk =
+                    crate::util::ceil_div(jobs.len() as i64, cfg.threads as i64).max(1) as usize;
+                let mut out = Vec::new();
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for batch in jobs.chunks(chunk) {
+                        let batch: Vec<_> = batch.to_vec();
+                        handles.push(scope.spawn(move || {
+                            batch
+                                .into_iter()
+                                .map(|(tag, b, d, rels)| {
+                                    let o = layer::verify_layer(
+                                        b,
+                                        d,
+                                        &rels,
+                                        cores,
+                                        cfg.limits,
+                                        cfg.max_rounds,
+                                    );
+                                    (tag, rels, o)
+                                })
+                                .collect::<Vec<_>>()
+                        }));
+                    }
+                    for h in handles {
+                        out.extend(h.join().expect("worker panicked"));
+                    }
+                });
+                out
+            };
+        let mut by_tag: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+            results.into_iter().map(|(t, r, o)| (t, (r, o))).collect();
+        // fingerprint aliases: replay the representative result on every
+        // identical layer (memoization across the speculative pool)
+        if cfg.memoize {
+            let mut fp_result: FxHashMap<u64, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+                FxHashMap::default();
+            for (tag, fp) in &alias {
+                if let Some(v) = by_tag.get(tag) {
+                    fp_result.insert(*fp, v.clone());
+                }
+            }
+            for (tag, fp) in &alias {
+                if !by_tag.contains_key(tag) {
+                    if let Some(v) = fp_result.get(fp) {
+                        by_tag.insert(*tag, v.clone());
+                    }
+                }
+            }
+        }
+        by_tag
+    }
+}
+
+
+/// Whole graph as a single pseudo-layer (partitioning disabled).
+fn whole_graph_slice(g: &crate::ir::Graph) -> Vec<LayerSlice> {
+    let mut g2 = g.clone();
+    for n in g2.nodes.iter_mut() {
+        n.meta.layer = None;
+    }
+    extract_layers(&g2)
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,31 @@
+//! The unit of verification: a baseline/distributed graph pair plus the
+//! registered input relations (§5.2.1).
+
+use crate::ir::{Annotation, Graph};
+
+/// A baseline graph, its distributed counterpart, and the input-tensor
+/// annotations recorded by the (instrumented) framework during IR
+/// generation.
+#[derive(Clone, Debug)]
+pub struct GraphPair {
+    /// Single-device baseline graph (`num_cores == 1`).
+    pub base: Graph,
+    /// Distributed SPMD graph (`num_cores == tp degree`).
+    pub dist: Graph,
+    /// Input relations between the two graphs' parameters.
+    pub annotations: Vec<Annotation>,
+}
+
+impl GraphPair {
+    /// Construct, validating both graphs.
+    pub fn new(base: Graph, dist: Graph, annotations: Vec<Annotation>) -> GraphPair {
+        debug_assert!(base.validate().is_ok(), "baseline graph invalid");
+        debug_assert!(dist.validate().is_ok(), "distributed graph invalid");
+        GraphPair { base, dist, annotations }
+    }
+
+    /// Total node count across both graphs.
+    pub fn total_nodes(&self) -> usize {
+        self.base.len() + self.dist.len()
+    }
+}

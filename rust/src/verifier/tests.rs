@@ -1,0 +1,454 @@
+//! Verifier integration tests: hand-built graph pairs exercising the full
+//! pipeline (Figure 3's matmul example, collectives, bug patterns).
+
+use super::*;
+use crate::ir::{Annotation, DType, GraphBuilder, ReduceKind, ReplicaGroups, Shape};
+
+fn f32s(dims: &[i64]) -> Shape {
+    Shape::new(DType::F32, dims.to_vec())
+}
+
+fn cfg_seq() -> VerifyConfig {
+    VerifyConfig { parallel: false, ..VerifyConfig::default() }
+}
+
+/// Figure 3: Y = X·W baseline vs contracted-dim-sharded TP + all-reduce.
+fn matmul_tp_pair(missing_allreduce: bool) -> GraphPair {
+    let mut bb = GraphBuilder::new("base", 1);
+    bb.at("mlp.py", 10).in_func("mlp_fwd");
+    let x = bb.parameter("x", f32s(&[4, 8]));
+    let w = bb.parameter("w", f32s(&[8, 16]));
+    let y = bb.matmul(x, w);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    db.at("mlp.py", 10).in_func("mlp_fwd");
+    let xs = db.parameter("x", f32s(&[4, 4]));
+    let ws = db.parameter("w", f32s(&[4, 16]));
+    db.at("mlp.py", 11);
+    let part = db.matmul(xs, ws);
+    db.at("mlp.py", 12);
+    let out = if missing_allreduce {
+        part
+    } else {
+        db.all_reduce(part, ReduceKind::Add, ReplicaGroups::full(2))
+    };
+    db.output(out);
+    let dist = db.finish();
+
+    let ann = vec![
+        Annotation::shard(x, crate::ir::NodeId(0), 1, 2),
+        Annotation::shard(w, crate::ir::NodeId(1), 0, 2),
+    ];
+    GraphPair::new(base, dist, ann)
+}
+
+#[test]
+fn tp_matmul_verifies() {
+    let pair = matmul_tp_pair(false);
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn missing_allreduce_unverified_and_localized() {
+    let pair = matmul_tp_pair(true);
+    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    assert!(!report.verified());
+    // the partial matmul output is the frontier (its inputs are verified)
+    // — localization should not be empty and should carry a source site
+    let ds = report.discrepancies();
+    assert!(!ds.is_empty());
+    assert!(ds.iter().all(|d| d.site.starts_with("mlp.py")), "{ds:?}");
+}
+
+#[test]
+fn redundant_allreduce_detected() {
+    // baseline Y = X + X; distributed adds an all-reduce over replicated
+    // data → result is c*(X+X), NOT equivalent
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[4]));
+    let y = bb.add(x, x);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    db.at("mlp.py", 5).in_func("residual");
+    let xd = db.parameter("x", f32s(&[4]));
+    let yd = db.add(xd, xd);
+    let red = db.all_reduce(yd, ReduceKind::Add, ReplicaGroups::full(2));
+    db.output(red);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::replicated(x, crate::ir::NodeId(0))];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(!report.verified());
+}
+
+#[test]
+fn allgather_restores_duplicate() {
+    // baseline: Y = tanh(X); distributed: tanh of row-shard then all-gather
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[8, 4]));
+    let y = bb.tanh(x);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 4);
+    let xs = db.parameter("x", f32s(&[2, 4]));
+    let t = db.tanh(xs);
+    let g = db.all_gather(t, 0, ReplicaGroups::full(4));
+    db.output(g);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::shard(x, crate::ir::NodeId(0), 0, 4)];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn wrong_gather_dim_unverified() {
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[8, 4]));
+    let y = bb.tanh(x);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 4);
+    db.at("gather.py", 3).in_func("collect");
+    let xs = db.parameter("x", f32s(&[2, 4]));
+    let t = db.tanh(xs);
+    // BUG: gather along dim 1 instead of 0 → shape [2,16] ≠ [8,4]
+    let g = db.all_gather(t, 1, ReplicaGroups::full(4));
+    let r = db.reshape(g, vec![8, 4]);
+    db.output(r);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::shard(x, crate::ir::NodeId(0), 0, 4)];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(!report.verified());
+}
+
+#[test]
+fn reduce_scatter_pipeline_verifies() {
+    // baseline: Y = X·W ; distributed: partial matmul → reduce-scatter
+    // (shards rows of Y) → all-gather restores
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[8, 8]));
+    let w = bb.parameter("w", f32s(&[8, 8]));
+    let y = bb.matmul(x, w);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    let xs = db.parameter("x", f32s(&[8, 4]));
+    let ws = db.parameter("w", f32s(&[4, 8]));
+    let part = db.matmul(xs, ws);
+    let rs = db.reduce_scatter(part, ReduceKind::Add, 0, ReplicaGroups::full(2));
+    let ag = db.all_gather(rs, 0, ReplicaGroups::full(2));
+    db.output(ag);
+    let dist = db.finish();
+
+    let ann = vec![
+        Annotation::shard(x, crate::ir::NodeId(0), 1, 2),
+        Annotation::shard(w, crate::ir::NodeId(1), 0, 2),
+    ];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn elementwise_on_shards_verifies() {
+    // column-parallel linear: W sharded on output dim, no collective needed
+    // as long as the consumer keeps working on shards; final all-gather
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[4, 8]));
+    let w = bb.parameter("w", f32s(&[8, 16]));
+    let h = bb.matmul(x, w);
+    let a = bb.tanh(h);
+    bb.output(a);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 4);
+    let xd = db.parameter("x", f32s(&[4, 8]));
+    let wd = db.parameter("w", f32s(&[8, 4]));
+    let h = db.matmul(xd, wd);
+    let a = db.tanh(h);
+    let g = db.all_gather(a, 1, ReplicaGroups::full(4));
+    db.output(g);
+    let dist = db.finish();
+
+    let ann = vec![
+        Annotation::replicated(x, crate::ir::NodeId(0)),
+        Annotation::shard(w, crate::ir::NodeId(1), 1, 4),
+    ];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn bsh_layout_bug_detected() {
+    // Figure 1: output (s*b, h) reshaped directly to (b, s, h) instead of
+    // reshape (s, b, h) + transpose. Baseline does it right.
+    let mut bb = GraphBuilder::new("base", 1);
+    bb.in_func("attention_bsh");
+    let x = bb.parameter("attn_out", f32s(&[12, 16])); // (s*b=6*2, h)
+    let r = bb.reshape(x, vec![6, 2, 16]);
+    let t = bb.transpose(r, vec![1, 0, 2]); // (b, s, h)
+    bb.output(t);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    db.at("bsh.py", 42).in_func("attention_bsh");
+    let xd = db.parameter("attn_out", f32s(&[12, 16]));
+    // BUG: reshape straight to (b, s, h)
+    let r = db.reshape(xd, vec![2, 6, 16]);
+    db.output(r);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::replicated(crate::ir::NodeId(0), crate::ir::NodeId(0))];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(!report.verified(), "BSH bug must not verify");
+}
+
+#[test]
+fn bsh_correct_version_verifies() {
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("attn_out", f32s(&[12, 16]));
+    let r = bb.reshape(x, vec![6, 2, 16]);
+    let t = bb.transpose(r, vec![1, 0, 2]);
+    bb.output(t);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    let xd = db.parameter("attn_out", f32s(&[12, 16]));
+    let r = db.reshape(xd, vec![6, 2, 16]);
+    let t = db.transpose(r, vec![1, 0, 2]);
+    db.output(t);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::replicated(crate::ir::NodeId(0), crate::ir::NodeId(0))];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn precision_mismatch_detected() {
+    // distributed inserts a bf16 round-trip the baseline doesn't have
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[4]));
+    let e = bb.exp(x);
+    bb.output(e);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 2);
+    db.at("rope.py", 77).in_func("rotary");
+    let xd = db.parameter("x", f32s(&[4]));
+    let lo = db.convert(xd, DType::BF16);
+    let hi = db.convert(lo, DType::F32);
+    let e = db.exp(hi);
+    db.output(e);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::replicated(crate::ir::NodeId(0), crate::ir::NodeId(0))];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(!report.verified(), "precision mismatch must not verify");
+    let ds = report.discrepancies();
+    assert!(!ds.is_empty());
+}
+
+#[test]
+fn expert_parallel_unrolled_loop_verifies() {
+    // Figure 8 / Mixtral pattern: baseline sums per-expert contributions
+    // (slices of the stacked expert weights); distributed computes its
+    // local expert and all-reduces.
+    let cores = 4u32;
+    let e_dim = 4i64; // experts == cores
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[4, 8]));
+    let w = bb.parameter("experts", f32s(&[e_dim, 8, 8])); // stacked experts
+    let mut acc = None;
+    for e in 0..e_dim {
+        let we3 = bb.slice_dim(w, 0, e, e + 1); // [1,8,8]
+        let we = bb.reshape(we3, vec![8, 8]);
+        let y = bb.matmul(x, we);
+        acc = Some(match acc {
+            None => y,
+            Some(a) => bb.add(a, y),
+        });
+    }
+    bb.output(acc.unwrap());
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", cores);
+    let xd = db.parameter("x", f32s(&[4, 8]));
+    let wd = db.parameter("experts", f32s(&[1, 8, 8])); // local expert
+    let wl = db.reshape(wd, vec![8, 8]);
+    let y = db.matmul(xd, wl);
+    let red = db.all_reduce(y, ReduceKind::Add, ReplicaGroups::full(cores));
+    db.output(red);
+    let dist = db.finish();
+
+    let ann = vec![
+        Annotation::replicated(x, crate::ir::NodeId(0)),
+        Annotation::shard(w, crate::ir::NodeId(1), 0, cores),
+    ];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn memoization_hits_identical_layers() {
+    // two identical TP layers: second should be memoized
+    fn pair_with_layers(n: u32) -> GraphPair {
+        let mut bb = GraphBuilder::new("base", 1);
+        bb.layer(None);
+        let x0 = bb.parameter("x", f32s(&[4, 8]));
+        let mut cur = x0;
+        let mut ws = Vec::new();
+        for l in 0..n {
+            bb.layer(Some(l));
+            let w = bb.parameter(&format!("w{l}"), f32s(&[8, 8]));
+            ws.push(w);
+            let h = bb.matmul(cur, w);
+            cur = bb.tanh(h);
+        }
+        bb.layer(None);
+        bb.output(cur);
+        let base = bb.finish();
+
+        let mut db = GraphBuilder::new("dist", 2);
+        db.layer(None);
+        let xd = db.parameter("x", f32s(&[4, 8]));
+        let mut cur = xd;
+        let mut wds = Vec::new();
+        for l in 0..n {
+            db.layer(Some(l));
+            let w = db.parameter(&format!("w{l}"), f32s(&[4, 8]));
+            wds.push(w);
+            let h = db.matmul(cur, w); // x repl · w row-shard: needs x shard!
+            let red = db.all_reduce(h, ReduceKind::Add, ReplicaGroups::full(2));
+            cur = db.tanh(red);
+        }
+        db.layer(None);
+        db.output(cur);
+        let dist = db.finish();
+
+        // x replicated won't match w row-sharded matmul; instead shard x
+        // columns to match: redo annotations — x sharded dim1? But x is
+        // the residual stream... use megatron style: w col-shard then
+        // row-shard needs two matmuls. For this memo test we shard x too.
+        let mut ann = vec![Annotation::shard(x0, xd, 1, 2)];
+        for (wb, wd) in ws.iter().zip(&wds) {
+            ann.push(Annotation::shard(*wb, *wd, 0, 2));
+        }
+        GraphPair::new(base, dist, ann)
+    }
+    // NOTE: sharding x along dim1 only works for the first layer; the tanh
+    // output is duplicate after all-reduce, so layer 2+ see a duplicate
+    // input against a row-sharded weight — no rule fires and the layer
+    // fails. That asymmetry is intentional here? No — this test wants
+    // verified layers. Rework: make each layer's matmul take the previous
+    // duplicate output against a REPLICATED weight (trivial TP), which
+    // verifies and memoizes.
+    let _ = pair_with_layers;
+
+    fn trivial_pair(n: u32) -> GraphPair {
+        let mut bb = GraphBuilder::new("base", 1);
+        bb.layer(None);
+        let x0 = bb.parameter("x", f32s(&[4, 8]));
+        let mut cur = x0;
+        let mut ws = Vec::new();
+        for l in 0..n {
+            bb.layer(Some(l));
+            let w = bb.parameter(&format!("w{l}"), f32s(&[8, 8]));
+            ws.push(w);
+            let h = bb.matmul(cur, w);
+            cur = bb.tanh(h);
+        }
+        bb.layer(None);
+        bb.output(cur);
+        let base = bb.finish();
+
+        let mut db = GraphBuilder::new("dist", 2);
+        db.layer(None);
+        let xd = db.parameter("x", f32s(&[4, 8]));
+        let mut cur = xd;
+        let mut wds = Vec::new();
+        for l in 0..n {
+            db.layer(Some(l));
+            let w = db.parameter(&format!("w{l}"), f32s(&[8, 8]));
+            wds.push(w);
+            let h = db.matmul(cur, w);
+            cur = db.tanh(h);
+        }
+        db.layer(None);
+        db.output(cur);
+        let dist = db.finish();
+
+        let mut ann = vec![Annotation::replicated(x0, xd)];
+        for (wb, wd) in ws.iter().zip(&wds) {
+            ann.push(Annotation::replicated(*wb, *wd));
+        }
+        GraphPair::new(base, dist, ann)
+    }
+
+    let pair = trivial_pair(6);
+    let cfg = VerifyConfig { parallel: false, memoize: true, ..VerifyConfig::default() };
+    let report = Verifier::new(cfg).verify_pair(&pair);
+    assert!(report.verified(), "{:?}", report.verdict);
+    let memoized = report.layers.iter().filter(|l| l.memoized).count();
+    assert!(memoized >= 5, "expected ≥5 memo hits, got {memoized}");
+
+    // memoization off → no layer memoized
+    let cfg = VerifyConfig { parallel: false, memoize: false, ..VerifyConfig::default() };
+    let report2 = Verifier::new(cfg).verify_pair(&pair);
+    assert!(report2.verified());
+    assert_eq!(report2.layers.iter().filter(|l| l.memoized).count(), 0);
+}
+
+#[test]
+fn parallel_mode_agrees_with_sequential() {
+    let pair = matmul_tp_pair(false);
+    let seq = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let par = Verifier::new(VerifyConfig { parallel: true, ..VerifyConfig::default() })
+        .verify_pair(&pair);
+    assert_eq!(seq.verified(), par.verified());
+}
+
+#[test]
+fn resource_exhaustion_reported() {
+    let pair = matmul_tp_pair(false);
+    let cfg = VerifyConfig {
+        parallel: false,
+        limits: crate::egraph::RunLimits { max_iters: 50, max_nodes: 2 },
+        ..VerifyConfig::default()
+    };
+    let report = Verifier::new(cfg).verify_pair(&pair);
+    assert!(matches!(report.verdict, Verdict::ResourceExhausted { .. }));
+}
+
+#[test]
+fn sequence_parallel_rms_norm_style_verifies() {
+    // sequence parallelism: activations sharded along the sequence dim,
+    // elementwise chain stays shard-local, all-gather at the end
+    let mut bb = GraphBuilder::new("base", 1);
+    let x = bb.parameter("x", f32s(&[16, 8]));
+    let sq = bb.mul(x, x);
+    let act = bb.tanh(sq);
+    bb.output(act);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 4);
+    let xd = db.parameter("x", f32s(&[4, 8]));
+    let sq = db.mul(xd, xd);
+    let act = db.tanh(sq);
+    let g = db.all_gather(act, 0, ReplicaGroups::full(4));
+    db.output(g);
+    let dist = db.finish();
+
+    let ann = vec![Annotation::shard(x, crate::ir::NodeId(0), 0, 4)];
+    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    assert!(report.verified(), "{:?}", report.verdict);
+}

@@ -1,0 +1,119 @@
+//! Integration tests over the public crate API — what a downstream user
+//! of the library actually touches.
+
+use scalify::prelude::*;
+use scalify::bugs;
+use scalify::modelgen::{llama_pair, mixtral_pair, demo};
+
+fn verifier() -> Verifier {
+    Verifier::new(VerifyConfig::default())
+}
+
+#[test]
+fn model_matrix_verifies() {
+    // every (model, parallelism, degree) combination the CLI exposes, at
+    // test scale
+    let llama = LlamaConfig { layers: 2, hidden: 16, heads: 4, ffn: 32, seqlen: 8, batch: 2 };
+    for par in [
+        Parallelism::Tensor { tp: 2 },
+        Parallelism::Tensor { tp: 4 },
+        Parallelism::Sequence { tp: 2 },
+        Parallelism::Sequence { tp: 4 },
+        Parallelism::FlashDecoding { tp: 2 },
+        Parallelism::FlashDecoding { tp: 4 },
+    ] {
+        let pair = llama_pair(&llama, par);
+        let report = verifier().verify_pair(&pair);
+        assert!(report.verified(), "{}: {:?}", par.label(), report.verdict);
+    }
+    for ep in [2u32, 4, 8] {
+        let mixtral =
+            MixtralConfig { layers: 2, hidden: 8, experts: ep as i64, ffn: 8, seqlen: 2, batch: 1 };
+        let pair = mixtral_pair(&mixtral, Parallelism::Expert { ep });
+        let report = verifier().verify_pair(&pair);
+        assert!(report.verified(), "ep{ep}: {:?}", report.verdict);
+    }
+}
+
+#[test]
+fn verdicts_are_stable_across_runs() {
+    // determinism: repeated verification gives identical verdicts and
+    // discrepancy sites
+    let case = bugs::reproduced_bugs().into_iter().find(|c| c.id == "T4#13").unwrap();
+    let sites = |pair: &GraphPair| -> Vec<String> {
+        let r = verifier().verify_pair(pair);
+        r.discrepancies().iter().map(|d| d.site.clone()).collect()
+    };
+    let a = sites(&(case.build)());
+    let b = sites(&(case.build)());
+    assert!(!a.is_empty());
+    assert_eq!(a, b);
+}
+
+#[test]
+fn layer_reports_expose_memoization() {
+    let cfg = LlamaConfig { layers: 6, hidden: 8, heads: 2, ffn: 16, seqlen: 4, batch: 1 };
+    let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 2 });
+    let report = verifier().verify_pair(&pair);
+    assert!(report.verified());
+    assert!(report.layers.len() >= 6);
+    assert!(report.layers.iter().filter(|l| l.memoized).count() >= 5);
+    // phase timings recorded
+    assert!(report.stopwatch.phases().count() >= 2);
+}
+
+#[test]
+fn graph_pair_survives_hlo_roundtrip_and_verifies() {
+    // print both graphs of a pair to HLO text, re-parse, re-verify
+    use scalify::hlo::{parse_hlo_module, print_hlo_module};
+    let pair = demo::matmul_allreduce_pair(2);
+    let base2 = parse_hlo_module(&print_hlo_module(&pair.base), 1).unwrap();
+    let dist2 = parse_hlo_module(&print_hlo_module(&pair.dist), 2).unwrap();
+    // re-pair by parameter order (names/positions preserved by the printer)
+    let ann: Vec<Annotation> = base2
+        .parameters()
+        .into_iter()
+        .zip(dist2.parameters())
+        .zip(pair.annotations.iter())
+        .map(|((b, d), orig)| Annotation { baseline: Some(b), distributed: d, relation: orig.relation.clone() })
+        .collect();
+    let pair2 = GraphPair::new(base2, dist2, ann);
+    let report = verifier().verify_pair(&pair2);
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn discrepancy_rendering_is_actionable() {
+    let report = verifier().verify_pair(&demo::bsh_pair(true));
+    let ds = report.discrepancies();
+    assert!(!ds.is_empty());
+    for d in ds {
+        let line = d.render();
+        assert!(line.contains(".py:"), "must carry a source site: {line}");
+        assert!(!d.reason.is_empty());
+    }
+}
+
+#[test]
+fn bug_corpus_is_fully_described() {
+    for case in bugs::reproduced_bugs().into_iter().chain(bugs::new_bugs()) {
+        assert!(!case.description.is_empty());
+        assert!(!case.issue.is_empty());
+        // buildable and structurally valid
+        let pair = (case.build)();
+        pair.base.validate().unwrap();
+        pair.dist.validate().unwrap();
+    }
+}
+
+#[test]
+fn resource_budget_is_honored() {
+    let cfg = VerifyConfig {
+        parallel: false,
+        limits: scalify::egraph::RunLimits { max_iters: 50, max_nodes: 4 },
+        ..Default::default()
+    };
+    let pair = demo::matmul_allreduce_pair(2);
+    let report = Verifier::new(cfg).verify_pair(&pair);
+    assert!(matches!(report.verdict, Verdict::ResourceExhausted { .. }));
+}
