@@ -7,7 +7,7 @@
 //! 2. This driver (L3, Rust) parses the artifacts with Scalify's HLO
 //!    parser, **verifies** baseline ≡ optimized (and catches the bug in
 //!    the buggy variant), then
-//! 3. loads the artifacts into the **PJRT runtime**, executes them with
+//! 3. loads the artifacts into the **execution runtime**, executes them with
 //!    identical inputs, and numerically cross-checks the verdicts.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_jax_pipeline`
@@ -17,7 +17,7 @@ use scalify::interp::Tensor;
 use scalify::ir::Annotation;
 use scalify::runtime::Executable;
 use scalify::util::Prng;
-use scalify::verifier::{GraphPair, Verifier, VerifyConfig};
+use scalify::verifier::{GraphPair, Session, VerifyConfig};
 use std::path::Path;
 
 fn pair_of(base: &Path, dist: &Path) -> GraphPair {
@@ -42,18 +42,18 @@ fn main() {
         std::process::exit(2);
     }
 
-    let verifier = Verifier::new(VerifyConfig::default());
+    let verifier = Session::new(VerifyConfig::default());
 
     // ---- stage 1: semantic verification of the JAX-lowered graphs ----
-    let good = verifier.verify_pair(&pair_of(&single, &opt));
+    let good = verifier.verify(&pair_of(&single, &opt)).unwrap();
     println!("verify baseline ≡ optimized:   {}", good.summary());
     assert!(good.verified(), "optimized artifact must verify");
 
-    let bad = verifier.verify_pair(&pair_of(&single, &buggy));
+    let bad = verifier.verify(&pair_of(&single, &buggy)).unwrap();
     println!("verify baseline ≡ buggy:       {}", bad.summary());
     assert!(!bad.verified(), "BSH-buggy artifact must NOT verify");
 
-    // ---- stage 2: execute via PJRT and cross-check the verdicts ----
+    // ---- stage 2: execute via the runtime and cross-check the verdicts ----
     let exe_single = Executable::load(&single).expect("compile baseline");
     let exe_opt = Executable::load(&opt).expect("compile optimized");
     let exe_buggy = Executable::load(&buggy).expect("compile buggy");
@@ -74,11 +74,11 @@ fn main() {
 
     let dev_opt = out_single[0].max_abs_diff(&out_opt[0]);
     let dev_buggy = out_single[0].max_abs_diff(&out_buggy[0]);
-    println!("PJRT execution ({} params, {exec_time:?}/run):", inputs.len());
+    println!("runtime execution ({} params, {exec_time:?}/run):", inputs.len());
     println!("  |baseline - optimized|∞ = {dev_opt:.3e}   (verified ⇒ tiny)");
     println!("  |baseline - buggy|∞     = {dev_buggy:.3e}   (unverified ⇒ large)");
     assert!(dev_opt < 1e-4, "verified pair must agree numerically");
     assert!(dev_buggy > 1e-3, "unverified pair must diverge numerically");
 
-    println!("\nend-to-end OK: Pallas kernel → JAX artifact → parse → verify → PJRT execute");
+    println!("\nend-to-end OK: Pallas kernel → JAX artifact → parse → verify → execute");
 }

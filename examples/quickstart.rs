@@ -1,29 +1,52 @@
-//! Quickstart: verify the paper's Figure-3 example (tensor-parallel
-//! matmul) and the Figure-1 BSH layout bug.
+//! Quickstart: the session-oriented API on the paper's Figure-3 example
+//! (tensor-parallel matmul) and the Figure-1 BSH layout bug.
+//!
+//! One `Session` serves every call: rewrite templates compile once, layer
+//! results memoize across runs, and malformed input is a typed error —
+//! the shape you want when verification runs continuously beside a
+//! training pipeline.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use scalify::modelgen::demo;
-use scalify::verifier::{Verifier, VerifyConfig};
+use scalify::prelude::*;
 
-fn main() {
-    let verifier = Verifier::new(VerifyConfig::default());
+fn main() -> Result<()> {
+    // validated configuration: nonsense (threads = 0, zero budgets…)
+    // is a ScalifyError::Config, not a panic deep in the engine
+    let cfg = VerifyConfig::builder().partition(true).memoize(true).build()?;
+    let session = Session::new(cfg);
 
     // Figure 3: Y = X·W vs contracted-dim-sharded TP + all-reduce
-    let pair = demo::matmul_allreduce_pair(4);
-    let report = verifier.verify_pair(&pair);
+    let report = session.verify(&demo::matmul_allreduce_pair(4))?;
     println!("tensor-parallel matmul:   {}", report.summary());
     assert!(report.verified());
 
+    // same structure again — served from the session's cross-run memo
+    let warm = session.verify(&demo::matmul_allreduce_pair(4))?;
+    assert!(warm.layers.iter().all(|l| l.memoized));
+    println!("second run (warm memo):   {}", warm.summary());
+
     // Figure 1: the BSH layout transformation, correct and buggy
-    let ok = verifier.verify_pair(&demo::bsh_pair(false));
+    let ok = session.verify(&demo::bsh_pair(false))?;
     println!("BSH output (correct):     {}", ok.summary());
     assert!(ok.verified());
 
-    let buggy = verifier.verify_pair(&demo::bsh_pair(true));
+    let buggy = session.verify(&demo::bsh_pair(true))?;
     println!("BSH output (buggy):       {}", buggy.summary());
     assert!(!buggy.verified());
     for d in buggy.discrepancies() {
         println!("  localized: {}", d.render());
     }
+
+    // machine-readable report: serialize, parse back, same verdict
+    let round = VerifyReport::from_json_str(&buggy.to_json_string())?;
+    assert_eq!(round.verdict.status(), buggy.verdict.status());
+
+    let stats = session.stats();
+    println!(
+        "session: {} runs, {} memo entries, {} memo hits",
+        stats.runs, stats.memo_entries, stats.memo_hits
+    );
+    Ok(())
 }

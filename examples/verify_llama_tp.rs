@@ -5,10 +5,13 @@
 
 use scalify::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
 use scalify::util::fmt_duration;
-use scalify::verifier::{Verifier, VerifyConfig};
+use scalify::verifier::{Session, VerifyConfig};
 
 fn main() {
-    let verifier = Verifier::new(VerifyConfig::default());
+    // one session across all model/parallelism variants: the compiled
+    // rewrite templates and the layer memo are shared, so later pairs
+    // start warm wherever their layer structure overlaps earlier ones
+    let verifier = Session::new(VerifyConfig::default());
 
     // Llama-3.1-8B-shaped graph at TP=32, the paper's headline workload
     let cfg = LlamaConfig::llama3_8b();
@@ -22,7 +25,7 @@ fn main() {
         pair.base.len(),
         pair.dist.len()
     );
-    let report = verifier.verify_pair(&pair);
+    let report = verifier.verify(&pair).unwrap();
     println!("  {}", report.summary());
     assert!(report.verified());
 
@@ -32,7 +35,7 @@ fn main() {
         ("flash decoding (kv-shard=32)", Parallelism::FlashDecoding { tp: 32 }),
     ] {
         let pair = llama_pair(&cfg, par);
-        let report = verifier.verify_pair(&pair);
+        let report = verifier.verify(&pair).unwrap();
         println!("{label}: {}", report.summary());
         assert!(report.verified());
     }
@@ -42,7 +45,7 @@ fn main() {
     let pair = mixtral_pair(&mcfg, Parallelism::Expert { ep: 8 });
     let (report, dur) = {
         let t0 = std::time::Instant::now();
-        let r = verifier.verify_pair(&pair);
+        let r = verifier.verify(&pair).unwrap();
         (r, t0.elapsed())
     };
     println!("Mixtral-8x7B expert parallel: {} ({})", report.summary(), fmt_duration(dur));

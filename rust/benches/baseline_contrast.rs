@@ -10,7 +10,7 @@ use scalify::bench::time_once;
 use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
 use scalify::report::Table;
 use scalify::util::fmt_duration;
-use scalify::verifier::{Verifier, VerifyConfig};
+use scalify::verifier::{Session, VerifyConfig};
 
 fn main() {
     let cfg = LlamaConfig { layers: 2, hidden: 16, heads: 4, ffn: 32, seqlen: 4, batch: 1 };
@@ -20,8 +20,8 @@ fn main() {
         &["Method", "Verdict", "Time", "Scales with"],
     );
 
-    let verifier = Verifier::new(VerifyConfig::default());
-    let (report, s) = time_once("scalify", || verifier.verify_pair(&pair));
+    let verifier = Session::new(VerifyConfig::default());
+    let (report, s) = time_once("scalify", || verifier.verify(&pair).unwrap());
     table.row(&[
         "Scalify (this work)".into(),
         if report.verified() { "verified".into() } else { "unverified".into() },

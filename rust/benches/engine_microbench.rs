@@ -8,7 +8,7 @@ use scalify::layout::{infer_bijection, AtomStore, AxisExpr};
 use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
 use scalify::report::Table;
 use scalify::util::fmt_duration;
-use scalify::verifier::{Verifier, VerifyConfig};
+use scalify::verifier::{Session, VerifyConfig};
 
 fn main() {
     let mut table = Table::new("Engine microbenchmarks", &["Path", "Median", "Mean"]);
@@ -53,9 +53,9 @@ fn main() {
     );
 
     // one full layer-pair verification (the per-layer unit of Algorithm 1)
-    let verifier = Verifier::new(VerifyConfig { parallel: false, memoize: false, ..Default::default() });
+    let verifier = Session::new(VerifyConfig { parallel: false, memoize: false, ..Default::default() });
     add("verify one decoder layer pair", bench("layer", 2, 10, || {
-        verifier.verify_pair(&pair)
+        verifier.verify(&pair).unwrap()
     }));
 
     print!("{}", table.render());

@@ -8,7 +8,7 @@ use scalify::bench::bench;
 use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
 use scalify::report::Table;
 use scalify::util::fmt_duration;
-use scalify::verifier::{Verifier, VerifyConfig};
+use scalify::verifier::{Session, VerifyConfig};
 
 fn base_cfg() -> LlamaConfig {
     // Table 3 base: seqlen 64, bs 4, layers 32, tp 32, heads 32 — with
@@ -17,10 +17,10 @@ fn base_cfg() -> LlamaConfig {
 }
 
 fn run(table: &mut Table, group: &str, label: String, cfg: LlamaConfig, tp: u32) {
-    let verifier = Verifier::new(VerifyConfig::default());
+    let verifier = Session::new(VerifyConfig::default());
     let pair = llama_pair(&cfg, Parallelism::Tensor { tp });
     let stats = bench(&label, 1, 3, || {
-        let r = verifier.verify_pair(&pair);
+        let r = verifier.verify(&pair).unwrap();
         assert!(r.verified());
         r
     });

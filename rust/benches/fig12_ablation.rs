@@ -8,7 +8,7 @@ use scalify::egraph::RunLimits;
 use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
 use scalify::report::Table;
 use scalify::util::fmt_duration;
-use scalify::verifier::{Verdict, Verifier, VerifyConfig};
+use scalify::verifier::{Session, Verdict, VerifyConfig};
 
 fn main() {
     let cfg = LlamaConfig::llama3_8b();
@@ -22,7 +22,7 @@ fn main() {
     // budget — the paper reports resource exhaustion; we bound the node
     // budget to a laptop-scale equivalent and report the same outcome
     {
-        let verifier = Verifier::new(VerifyConfig {
+        let verifier = Session::new(VerifyConfig {
             partition: false,
             parallel: false,
             memoize: false,
@@ -30,7 +30,7 @@ fn main() {
             ..VerifyConfig::default()
         });
         let t0 = std::time::Instant::now();
-        let report = verifier.verify_pair(&pair);
+        let report = verifier.verify(&pair).unwrap();
         let outcome = match report.verdict {
             Verdict::ResourceExhausted { .. } => "resource-exhausted (as paper)",
             Verdict::Verified => "verified",
@@ -40,9 +40,9 @@ fn main() {
     }
 
     let mut run = |label: &str, cfgv: VerifyConfig| {
-        let verifier = Verifier::new(cfgv);
+        let verifier = Session::new(cfgv);
         let stats = bench(label, 1, 3, || {
-            let r = verifier.verify_pair(&pair);
+            let r = verifier.verify(&pair).unwrap();
             assert!(r.verified(), "{label}: {:?}", r.verdict);
             r
         });

@@ -1,0 +1,81 @@
+//! Session reuse: the amortization the `Session` API exists for.
+//!
+//! One persistent session verifies (1) a Llama-8B tp32 pair cold, (2) the
+//! same pair again — every layer served from the cross-run memo, (3) a
+//! structurally-overlapping second config (same shapes, fewer layers) —
+//! warm from the first run's layers, and (4) the same pair on a *fresh*
+//! session as the contrast: the speedup lives in the session state, not
+//! in the OS cache.
+//!
+//! Run: `cargo bench --bench session_reuse` (or `cargo run --release ...`)
+
+use scalify::bench::time_once;
+use scalify::modelgen::{llama_pair, LlamaConfig, Parallelism};
+use scalify::report::Table;
+use scalify::util::fmt_duration;
+use scalify::verifier::{Session, VerifyConfig};
+
+fn main() {
+    let cfg = LlamaConfig::llama3_8b();
+    let par = Parallelism::Tensor { tp: 32 };
+    let session = Session::new(VerifyConfig::default());
+    let mut table = Table::new(
+        "Session reuse — one engine, many verify calls (Llama-8B tp32)",
+        &["Run", "Layers", "Memoized", "Time"],
+    );
+    let mut row = |label: &str, report: &scalify::verifier::VerifyReport, t| {
+        assert!(report.verified(), "{label}: {:?}", report.verdict);
+        table.row(&[
+            label.into(),
+            report.layers.len().to_string(),
+            report.layers.iter().filter(|l| l.memoized).count().to_string(),
+            fmt_duration(t),
+        ]);
+    };
+
+    // (1) cold: templates are already compiled (Session::new), but every
+    // distinct layer structure is verified for the first time
+    let pair = llama_pair(&cfg, par);
+    let (cold, s1) = time_once("cold", || session.verify(&pair).unwrap());
+    row("cold (first verify)", &cold, s1.median());
+
+    // (2) the same pair, rebuilt: every layer hits the cross-run memo
+    let pair_again = llama_pair(&cfg, par);
+    let (warm, s2) = time_once("warm", || session.verify(&pair_again).unwrap());
+    row("warm (same pair rebuilt)", &warm, s2.median());
+
+    // (3) structurally-overlapping second config: fewer layers, same
+    // shapes — its decoder layers replay the first run's results
+    let small = LlamaConfig { layers: 8, ..cfg };
+    let overlap_pair = llama_pair(&small, par);
+    let (overlap, s3) = time_once("overlap", || session.verify(&overlap_pair).unwrap());
+    row("overlapping config (8 layers)", &overlap, s3.median());
+
+    // (4) contrast: a fresh session pays the cold cost again
+    let fresh = Session::new(VerifyConfig::default());
+    let (fresh_report, s4) = time_once("fresh", || fresh.verify(&pair).unwrap());
+    row("fresh session (cold again)", &fresh_report, s4.median());
+
+    print!("{}", table.render());
+    table.save_csv("session_reuse");
+
+    let stats = session.stats();
+    println!(
+        "session stats: {} runs, {} memo entries, {} hits, {} misses, {} templates",
+        stats.runs, stats.memo_entries, stats.memo_hits, stats.memo_misses, stats.templates
+    );
+
+    // the acceptance claim: a warm second verify is measurably faster
+    assert!(
+        warm.layers.iter().all(|l| l.memoized),
+        "warm run must serve every layer from the session memo"
+    );
+    assert!(
+        s2.median() < s1.median(),
+        "warm verify ({}) must beat the cold verify ({})",
+        fmt_duration(s2.median()),
+        fmt_duration(s1.median())
+    );
+    let speedup = s1.median().as_secs_f64() / s2.median().as_secs_f64().max(1e-9);
+    println!("cross-run speedup (cold/warm): {speedup:.1}x");
+}

@@ -10,10 +10,10 @@ use scalify::bench::time_once;
 use scalify::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
 use scalify::report::Table;
 use scalify::util::fmt_duration;
-use scalify::verifier::{Verifier, VerifyConfig};
+use scalify::verifier::{Session, VerifyConfig};
 
 fn main() {
-    let verifier = Verifier::new(VerifyConfig::default());
+    let verifier = Session::new(VerifyConfig::default());
     let mut table = Table::new(
         "Table 2 — verifying real-world model shapes (tp/ep as paper)",
         &["Exp", "Model", "Layers", "Nodes", "Verified", "Time", "Paper"],
@@ -22,7 +22,7 @@ fn main() {
     let llama = |name: &str, cfg: LlamaConfig, paper: &str, exp: &str, table: &mut Table| {
         let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 32 });
         let nodes = pair.total_nodes();
-        let (report, stats) = time_once(name, || verifier.verify_pair(&pair));
+        let (report, stats) = time_once(name, || verifier.verify(&pair).unwrap());
         table.row(&[
             exp.into(),
             name.into(),
@@ -41,7 +41,7 @@ fn main() {
     let mixtral = |name: &str, cfg: MixtralConfig, paper: &str, exp: &str, table: &mut Table| {
         let pair = mixtral_pair(&cfg, Parallelism::Expert { ep: 8 });
         let nodes = pair.total_nodes();
-        let (report, stats) = time_once(name, || verifier.verify_pair(&pair));
+        let (report, stats) = time_once(name, || verifier.verify(&pair).unwrap());
         table.row(&[
             exp.into(),
             name.into(),

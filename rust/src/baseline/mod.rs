@@ -172,11 +172,12 @@ mod tests {
         };
         let loose = numerical_verify(&pair, 2, 0.5, 7);
         assert!(loose.equivalent, "loose tolerance masks the bf16 fault");
-        let report = crate::verifier::Verifier::new(crate::verifier::VerifyConfig {
+        let report = crate::verifier::Session::new(crate::verifier::VerifyConfig {
             parallel: false,
             ..Default::default()
         })
-        .verify_pair(&pair);
+        .verify(&pair)
+        .unwrap();
         assert!(!report.verified(), "Scalify still catches it");
     }
 }

@@ -1,7 +1,7 @@
 //! Bug-case evaluation: run Scalify, classify detection + localization.
 
 use super::catalog::BugCase;
-use crate::verifier::{Verifier, VerifyConfig};
+use crate::verifier::{Session, VerifyConfig};
 
 /// Localization quality achieved on a case.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,8 +32,9 @@ pub struct BugOutcome {
 /// Run Scalify on the case's buggy pair and classify the outcome.
 pub fn evaluate(case: &BugCase) -> BugOutcome {
     let pair = (case.build)();
-    let report =
-        Verifier::new(VerifyConfig { parallel: false, ..VerifyConfig::default() }).verify_pair(&pair);
+    let report = Session::new(VerifyConfig { parallel: false, ..VerifyConfig::default() })
+        .verify(&pair)
+        .expect("bug-corpus pairs are well-formed");
     let detected = !report.verified();
     let discrepancies = report.discrepancies();
     let sites: Vec<String> = discrepancies

@@ -1,0 +1,338 @@
+//! CLI argument parsing and command plumbing for the `scalify` binary.
+//!
+//! Lives in the library (rather than `main.rs`) so the parsing rules are
+//! unit-testable: every malformed input is a typed
+//! [`ScalifyError::Config`] with a usage hint, never a panic.
+
+use crate::error::{Result, ScalifyError};
+use crate::modelgen::{
+    try_llama_pair, try_mixtral_pair, GraphPair, LlamaConfig, MixtralConfig, Parallelism,
+};
+use crate::verifier::VerifyConfig;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Flags that never take a value, across all subcommands.
+pub const BOOLEAN_FLAGS: &[&str] = &[
+    "json",
+    "new",
+    "reproduced",
+    "no-partition",
+    "no-parallel",
+    "no-memoize",
+];
+
+/// Parse `--flag value` / `--switch` argument lists.
+///
+/// A value-taking flag whose value is missing — or swallowed by the next
+/// `--flag` — is a [`ScalifyError::Config`] with a usage hint, instead of
+/// the silent mis-parse the one-shot CLI used to do.
+pub fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let Some(key) = args[i].strip_prefix("--") else {
+            return Err(ScalifyError::config(format!(
+                "unexpected positional argument '{}' (flags are --key value; run `scalify` \
+                 for usage)",
+                args[i]
+            )));
+        };
+        if key.is_empty() {
+            return Err(ScalifyError::config("bare '--' is not a flag"));
+        }
+        if BOOLEAN_FLAGS.contains(&key) {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            }
+            _ => {
+                return Err(ScalifyError::config(format!(
+                    "flag --{key} requires a value (e.g. `--{key} <value>`); run `scalify` \
+                     for usage"
+                )));
+            }
+        }
+    }
+    Ok(flags)
+}
+
+/// Parse a parallelism spec like `tp32` / `sp8` / `fd4` / `ep8`.
+pub fn parallelism(spec: &str) -> Result<Parallelism> {
+    let usage = "expected a technique + degree, e.g. tp32, sp32, fd32 or ep8";
+    let (kind, deg): (&str, &str) = ["tp", "sp", "fd", "ep"]
+        .iter()
+        .find_map(|k| spec.strip_prefix(k).map(|rest| (*k, rest)))
+        .ok_or_else(|| {
+            ScalifyError::config(format!("unknown parallelism '{spec}' ({usage})"))
+        })?;
+    let deg: u32 = deg.parse().map_err(|_| {
+        ScalifyError::config(format!("bad parallelism degree in '{spec}' ({usage})"))
+    })?;
+    if deg == 0 {
+        return Err(ScalifyError::config(format!(
+            "parallelism degree must be >= 1 in '{spec}' ({usage})"
+        )));
+    }
+    Ok(match kind {
+        "tp" => Parallelism::Tensor { tp: deg },
+        "sp" => Parallelism::Sequence { tp: deg },
+        "fd" => Parallelism::FlashDecoding { tp: deg },
+        _ => Parallelism::Expert { ep: deg },
+    })
+}
+
+/// Known zoo models for `scalify model --model <name>`.
+pub const KNOWN_MODELS: &[&str] = &[
+    "llama-8b",
+    "llama-70b",
+    "llama-405b",
+    "llama-tiny",
+    "mixtral-8x7b",
+    "mixtral-8x22b",
+];
+
+/// Build the zoo pair named by the CLI, with typed validation errors.
+pub fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> Result<GraphPair> {
+    let mk = |mut cfg: LlamaConfig| {
+        if let Some(l) = layers {
+            cfg.layers = l;
+        }
+        try_llama_pair(&cfg, par)
+    };
+    let mk_mix = |mut cfg: MixtralConfig| {
+        if let Some(l) = layers {
+            cfg.layers = l;
+        }
+        try_mixtral_pair(&cfg, par)
+    };
+    match model {
+        "llama-8b" => mk(LlamaConfig::llama3_8b()),
+        "llama-70b" => mk(LlamaConfig::llama3_70b()),
+        "llama-405b" => mk(LlamaConfig::llama3_405b()),
+        "llama-tiny" => mk(LlamaConfig::tiny()),
+        "mixtral-8x7b" => mk_mix(MixtralConfig::mixtral_8x7b()),
+        "mixtral-8x22b" => mk_mix(MixtralConfig::mixtral_8x22b()),
+        other => Err(ScalifyError::model_spec(format!(
+            "unknown model '{other}' (known: {})",
+            KNOWN_MODELS.join(", ")
+        ))),
+    }
+}
+
+/// Build a validated [`VerifyConfig`] from common CLI flags
+/// (`--threads N`, `--no-partition`, `--no-parallel`, `--no-memoize`).
+pub fn config_from_flags(flags: &HashMap<String, String>) -> Result<VerifyConfig> {
+    let mut b = VerifyConfig::builder();
+    if let Some(t) = flags.get("threads") {
+        let t: usize = t.parse().map_err(|_| {
+            ScalifyError::config(format!("--threads wants a positive integer, got '{t}'"))
+        })?;
+        b = b.threads(t);
+    }
+    if flags.contains_key("no-partition") {
+        // whole-graph mode has a single task; parallel would be a no-op
+        b = b.partition(false).parallel(false);
+    }
+    if flags.contains_key("no-parallel") {
+        b = b.parallel(false);
+    }
+    if flags.contains_key("no-memoize") {
+        b = b.memoize(false);
+    }
+    b.build()
+}
+
+/// One `base dist [cores]` line of a batch manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Baseline HLO file.
+    pub base: PathBuf,
+    /// Distributed/optimized HLO file.
+    pub dist: PathBuf,
+    /// SPMD width of the distributed module.
+    pub cores: u32,
+}
+
+/// Parse a batch manifest: one `base.hlo dist.hlo [cores]` per line,
+/// `#`-comments and blank lines ignored.
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let (base, dist, cores) = match fields.as_slice() {
+            [b, d] => (*b, *d, 1),
+            [b, d, c] => {
+                let cores: u32 = c.parse().map_err(|_| {
+                    ScalifyError::parse(format!(
+                        "manifest line {}: bad core count '{c}'",
+                        lineno + 1
+                    ))
+                })?;
+                if cores == 0 {
+                    return Err(ScalifyError::parse(format!(
+                        "manifest line {}: core count must be >= 1",
+                        lineno + 1
+                    )));
+                }
+                (*b, *d, cores)
+            }
+            _ => {
+                return Err(ScalifyError::parse(format!(
+                    "manifest line {}: expected `base.hlo dist.hlo [cores]`, got '{line}'",
+                    lineno + 1
+                )))
+            }
+        };
+        entries.push(ManifestEntry {
+            base: PathBuf::from(base),
+            dist: PathBuf::from(dist),
+            cores,
+        });
+    }
+    if entries.is_empty() {
+        return Err(ScalifyError::parse(
+            "manifest names no pairs (expected `base.hlo dist.hlo [cores]` lines)",
+        ));
+    }
+    Ok(entries)
+}
+
+/// Process exit code for an error: usage/input problems exit 2, execution
+/// failures exit 3 (verification *failure* exits 1, handled by commands).
+pub fn exit_code_for(err: &ScalifyError) -> u8 {
+    match err {
+        ScalifyError::Runtime(_) => 3,
+        _ => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_values_and_switches() {
+        let f = parse_flags(&args(&["--model", "llama-8b", "--json", "--par", "tp8"])).unwrap();
+        assert_eq!(f.get("model").map(String::as_str), Some("llama-8b"));
+        assert_eq!(f.get("json").map(String::as_str), Some("true"));
+        assert_eq!(f.get("par").map(String::as_str), Some("tp8"));
+    }
+
+    #[test]
+    fn parse_flags_missing_value_is_config_error() {
+        // `--base --dist b.hlo` used to silently treat --base as a switch
+        let err = parse_flags(&args(&["--base", "--dist", "b.hlo"])).unwrap_err();
+        assert!(matches!(err, ScalifyError::Config(_)), "{err}");
+        assert!(err.message().contains("--base"), "{err}");
+
+        let err = parse_flags(&args(&["--cores"])).unwrap_err();
+        assert!(matches!(err, ScalifyError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn parse_flags_rejects_positional_junk() {
+        let err = parse_flags(&args(&["llama-8b"])).unwrap_err();
+        assert!(matches!(err, ScalifyError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn parallelism_specs_parse() {
+        assert_eq!(parallelism("tp32").unwrap(), Parallelism::Tensor { tp: 32 });
+        assert_eq!(parallelism("sp8").unwrap(), Parallelism::Sequence { tp: 8 });
+        assert_eq!(parallelism("fd4").unwrap(), Parallelism::FlashDecoding { tp: 4 });
+        assert_eq!(parallelism("ep8").unwrap(), Parallelism::Expert { ep: 8 });
+    }
+
+    #[test]
+    fn parallelism_rejects_malformed_specs() {
+        // `tp` (no degree) and `x` (shorter than the prefix) both used to
+        // panic via split_at(2)
+        for bad in ["tp", "x", "", "zz8", "tp-3", "tp0", "ep1.5"] {
+            let err = parallelism(bad).unwrap_err();
+            assert!(matches!(err, ScalifyError::Config(_)), "{bad}: {err}");
+            assert!(err.message().contains("e.g. tp32"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn model_pair_unknown_model_is_typed() {
+        let err = model_pair("gpt-5", Parallelism::Tensor { tp: 2 }, None).unwrap_err();
+        assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+        assert!(err.message().contains("llama-8b"));
+    }
+
+    #[test]
+    fn model_pair_invalid_combination_is_typed() {
+        // llama under expert parallelism used to panic in modelgen
+        let err = model_pair("llama-tiny", Parallelism::Expert { ep: 4 }, None).unwrap_err();
+        assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+        // mixtral under tensor parallelism likewise
+        let err = model_pair("mixtral-8x7b", Parallelism::Tensor { tp: 8 }, None).unwrap_err();
+        assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+    }
+
+    #[test]
+    fn model_pair_layers_override_applies() {
+        let one = model_pair("llama-tiny", Parallelism::Tensor { tp: 2 }, Some(1)).unwrap();
+        let two = model_pair("llama-tiny", Parallelism::Tensor { tp: 2 }, Some(2)).unwrap();
+        assert!(two.total_nodes() > one.total_nodes());
+    }
+
+    #[test]
+    fn config_from_flags_builds_and_validates() {
+        let f = parse_flags(&args(&["--threads", "2", "--no-memoize"])).unwrap();
+        let cfg = config_from_flags(&f).unwrap();
+        assert_eq!(cfg.threads, 2);
+        assert!(!cfg.memoize);
+
+        let f = parse_flags(&args(&["--threads", "0"])).unwrap();
+        assert!(matches!(config_from_flags(&f), Err(ScalifyError::Config(_))));
+
+        let f = parse_flags(&args(&["--threads", "many"])).unwrap();
+        assert!(matches!(config_from_flags(&f), Err(ScalifyError::Config(_))));
+
+        // --no-partition implies sequential (parallel+no-partition is
+        // rejected by the builder)
+        let f = parse_flags(&args(&["--no-partition"])).unwrap();
+        let cfg = config_from_flags(&f).unwrap();
+        assert!(!cfg.partition && !cfg.parallel);
+    }
+
+    #[test]
+    fn manifest_parses_and_reports_line_numbers() {
+        let text = "# pairs\nbase.hlo dist.hlo 8\n\nsingle.hlo opt.hlo\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].cores, 8);
+        assert_eq!(entries[1].cores, 1);
+        assert_eq!(entries[1].base, PathBuf::from("single.hlo"));
+
+        let err = parse_manifest("a.hlo\n").unwrap_err();
+        assert!(err.message().contains("line 1"), "{err}");
+        let err = parse_manifest("a.hlo b.hlo zero\n").unwrap_err();
+        assert!(err.message().contains("bad core count"), "{err}");
+        assert!(parse_manifest("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn exit_codes_by_domain() {
+        assert_eq!(exit_code_for(&ScalifyError::config("x")), 2);
+        assert_eq!(exit_code_for(&ScalifyError::parse("x")), 2);
+        assert_eq!(exit_code_for(&ScalifyError::model_spec("x")), 2);
+        assert_eq!(exit_code_for(&ScalifyError::runtime("x")), 3);
+    }
+}

@@ -14,5 +14,5 @@ mod rewrite;
 pub mod runner;
 
 pub use engine::{EClass, EGraph, ENode, Id, Origin};
-pub use rewrite::{default_rules, Rewrite};
+pub use rewrite::{default_rules, Rewrite, RuleSet};
 pub use runner::{RunLimits, RunReport, Runner, StopReason};

@@ -449,6 +449,47 @@ pub fn default_rules() -> Vec<Box<dyn Rewrite>> {
     ]
 }
 
+/// A compiled rewrite-template set, built once and shared (via `Arc`)
+/// across every layer verification a [`crate::verifier::Session`] runs —
+/// the paper's "reusable rule templates" made literal: template
+/// construction is paid once per session, not once per `verify` call.
+pub struct RuleSet {
+    rules: Vec<Box<dyn Rewrite>>,
+}
+
+impl RuleSet {
+    /// Compile the default template set.
+    pub fn compile() -> RuleSet {
+        RuleSet { rules: default_rules() }
+    }
+
+    /// Compile a custom template set.
+    pub fn from_rules(rules: Vec<Box<dyn Rewrite>>) -> RuleSet {
+        RuleSet { rules }
+    }
+
+    /// The compiled templates, in application order.
+    pub fn rules(&self) -> &[Box<dyn Rewrite>] {
+        &self.rules
+    }
+
+    /// Number of templates.
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// True when no templates are registered.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+impl Default for RuleSet {
+    fn default() -> RuleSet {
+        RuleSet::compile()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

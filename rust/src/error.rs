@@ -1,0 +1,178 @@
+//! Crate-wide typed errors.
+//!
+//! Every fallible operation on the user path — HLO parsing, configuration,
+//! model-zoo generation, execution — returns [`ScalifyError`] instead of
+//! panicking, so a long-lived [`crate::verifier::Session`] embedded in a
+//! training pipeline can report malformed input and keep serving.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, ScalifyError>;
+
+/// What went wrong, by domain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScalifyError {
+    /// Malformed HLO text / manifest input.
+    Parse(String),
+    /// Invalid verifier or CLI configuration.
+    Config(String),
+    /// Invalid or inconsistent model specification (graph structure,
+    /// annotations, zoo parameters).
+    ModelSpec(String),
+    /// Execution failure in the runtime / interpreter.
+    Runtime(String),
+    /// Underlying I/O failure.
+    Io(String),
+}
+
+impl ScalifyError {
+    /// Parse-domain error.
+    pub fn parse(msg: impl Into<String>) -> ScalifyError {
+        ScalifyError::Parse(msg.into())
+    }
+
+    /// Configuration error.
+    pub fn config(msg: impl Into<String>) -> ScalifyError {
+        ScalifyError::Config(msg.into())
+    }
+
+    /// Model-specification error.
+    pub fn model_spec(msg: impl Into<String>) -> ScalifyError {
+        ScalifyError::ModelSpec(msg.into())
+    }
+
+    /// Runtime error.
+    pub fn runtime(msg: impl Into<String>) -> ScalifyError {
+        ScalifyError::Runtime(msg.into())
+    }
+
+    /// Error-domain label (stable, used in JSON output and exit codes).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScalifyError::Parse(_) => "parse",
+            ScalifyError::Config(_) => "config",
+            ScalifyError::ModelSpec(_) => "model-spec",
+            ScalifyError::Runtime(_) => "runtime",
+            ScalifyError::Io(_) => "io",
+        }
+    }
+
+    /// The bare message, without the domain prefix.
+    pub fn message(&self) -> &str {
+        match self {
+            ScalifyError::Parse(m)
+            | ScalifyError::Config(m)
+            | ScalifyError::ModelSpec(m)
+            | ScalifyError::Runtime(m)
+            | ScalifyError::Io(m) => m,
+        }
+    }
+
+    /// Prefix the message with `context` (keeps the variant).
+    pub fn context(self, context: impl AsRef<str>) -> ScalifyError {
+        let wrap = |m: String| format!("{}: {}", context.as_ref(), m);
+        match self {
+            ScalifyError::Parse(m) => ScalifyError::Parse(wrap(m)),
+            ScalifyError::Config(m) => ScalifyError::Config(wrap(m)),
+            ScalifyError::ModelSpec(m) => ScalifyError::ModelSpec(wrap(m)),
+            ScalifyError::Runtime(m) => ScalifyError::Runtime(wrap(m)),
+            ScalifyError::Io(m) => ScalifyError::Io(wrap(m)),
+        }
+    }
+}
+
+impl fmt::Display for ScalifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} error: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for ScalifyError {}
+
+impl From<std::io::Error> for ScalifyError {
+    fn from(e: std::io::Error) -> ScalifyError {
+        ScalifyError::Io(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for ScalifyError {
+    fn from(e: std::num::ParseIntError) -> ScalifyError {
+        ScalifyError::Parse(format!("invalid integer: {e}"))
+    }
+}
+
+impl From<std::num::ParseFloatError> for ScalifyError {
+    fn from(e: std::num::ParseFloatError) -> ScalifyError {
+        ScalifyError::Parse(format!("invalid number: {e}"))
+    }
+}
+
+impl From<crate::interp::EvalError> for ScalifyError {
+    fn from(e: crate::interp::EvalError) -> ScalifyError {
+        ScalifyError::Runtime(e.to_string())
+    }
+}
+
+/// `anyhow::Context`-style helpers for any error convertible into
+/// [`ScalifyError`].
+pub trait ResultExt<T> {
+    /// Add fixed context to the error.
+    fn ctx(self, context: &str) -> Result<T>;
+    /// Add lazily computed context to the error.
+    fn with_ctx<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<ScalifyError>> ResultExt<T> for std::result::Result<T, E> {
+    fn ctx(self, context: &str) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_ctx<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_kind_and_message() {
+        let e = ScalifyError::config("threads must be >= 1");
+        assert_eq!(e.to_string(), "config error: threads must be >= 1");
+        assert_eq!(e.kind(), "config");
+        assert_eq!(e.message(), "threads must be >= 1");
+    }
+
+    #[test]
+    fn context_prefixes_and_keeps_variant() {
+        let e = ScalifyError::parse("no ENTRY computation").context("reading a.hlo");
+        assert!(matches!(e, ScalifyError::Parse(_)));
+        assert_eq!(e.message(), "reading a.hlo: no ENTRY computation");
+    }
+
+    #[test]
+    fn from_io_error() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing.hlo");
+        let e: ScalifyError = io.into();
+        assert!(matches!(e, ScalifyError::Io(_)));
+        assert!(e.to_string().contains("missing.hlo"));
+    }
+
+    #[test]
+    fn from_eval_error() {
+        let e: ScalifyError = crate::interp::EvalError::Unsupported("custom-call".into()).into();
+        assert!(matches!(e, ScalifyError::Runtime(_)));
+        assert!(e.message().contains("custom-call"));
+    }
+
+    #[test]
+    fn result_ext_converts_and_wraps() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"));
+        let e = r.with_ctx(|| "loading manifest".to_string()).unwrap_err();
+        assert!(matches!(e, ScalifyError::Io(_)));
+        assert!(e.message().starts_with("loading manifest: "));
+    }
+}

@@ -3,13 +3,22 @@
 use crate::ir::{
     CmpKind, ConstVal, DType, Graph, Meta, NodeId, Op, ReduceKind, ReplicaGroups, Shape,
 };
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Result, ResultExt, ScalifyError};
 use rustc_hash::FxHashMap;
+
+/// A [`ScalifyError::Parse`] built from a format string.
+macro_rules! parse_err {
+    ($($arg:tt)*) => { ScalifyError::parse(format!($($arg)*)) };
+}
+
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err(parse_err!($($arg)*)) };
+}
 
 /// Parse an HLO module from a file path.
 pub fn parse_hlo_file(path: &std::path::Path, num_cores: u32) -> Result<Graph> {
     let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
+        .with_ctx(|| format!("reading {}", path.display()))?;
     parse_hlo_module(&text, num_cores)
 }
 
@@ -83,7 +92,7 @@ pub fn parse_hlo_module(text: &str, num_cores: u32) -> Result<Graph> {
     let (_, _, entry_lines) = computations
         .iter()
         .find(|(_, is_entry, _)| *is_entry)
-        .ok_or_else(|| anyhow!("no ENTRY computation in module"))?;
+        .ok_or_else(|| parse_err!("no ENTRY computation in module"))?;
 
     // Structural fingerprints of sub-computations, so control-flow ops
     // (`while`, `call`) get congruence-safe identities: two whiles merge in
@@ -104,14 +113,14 @@ pub fn parse_hlo_module(text: &str, num_cores: u32) -> Result<Graph> {
     for line in entry_lines {
         let (name, id, is_root) =
             parse_instruction(&mut g, line, &by_name, &region_kind, &region_fp)
-                .with_context(|| format!("parsing instruction: {line}"))?;
+                .with_ctx(|| format!("parsing instruction: {line}"))?;
         by_name.insert(name, id);
         if is_root {
             root = Some(id);
         }
     }
 
-    let root = root.ok_or_else(|| anyhow!("entry computation has no ROOT"))?;
+    let root = root.ok_or_else(|| parse_err!("entry computation has no ROOT"))?;
     // Strip a trailing tuple: outputs are its operands.
     match &g.node(root).op {
         Op::Tuple => {
@@ -234,17 +243,17 @@ fn matching_paren(s: &str, open: usize) -> Option<usize> {
 /// Parse `f32[2,4]{1,0}` → Shape. Layout suffix ignored.
 fn parse_shape(s: &str) -> Result<Shape> {
     let s = s.trim();
-    let bracket = s.find('[').ok_or_else(|| anyhow!("no '[' in shape '{s}'"))?;
+    let bracket = s.find('[').ok_or_else(|| parse_err!("no '[' in shape '{s}'"))?;
     let dtype = DType::from_hlo_name(&s[..bracket])
-        .ok_or_else(|| anyhow!("unknown dtype '{}'", &s[..bracket]))?;
-    let close = s.find(']').ok_or_else(|| anyhow!("no ']' in shape '{s}'"))?;
+        .ok_or_else(|| parse_err!("unknown dtype '{}'", &s[..bracket]))?;
+    let close = s.find(']').ok_or_else(|| parse_err!("no ']' in shape '{s}'"))?;
     let dims_str = &s[bracket + 1..close];
     let dims: Vec<i64> = if dims_str.trim().is_empty() {
         vec![]
     } else {
         dims_str
             .split(',')
-            .map(|d| d.trim().parse::<i64>().map_err(|e| anyhow!("bad dim '{d}': {e}")))
+            .map(|d| d.trim().parse::<i64>().map_err(|e| parse_err!("bad dim '{d}': {e}")))
             .collect::<Result<_>>()?
     };
     Ok(Shape::new(dtype, dims))
@@ -258,7 +267,7 @@ fn parse_brace_list(s: &str) -> Result<Vec<usize>> {
     }
     inner
         .split(',')
-        .map(|v| v.trim().parse::<usize>().map_err(|e| anyhow!("bad index '{v}': {e}")))
+        .map(|v| v.trim().parse::<usize>().map_err(|e| parse_err!("bad index '{v}': {e}")))
         .collect()
 }
 
@@ -274,11 +283,11 @@ fn parse_replica_groups(s: &str, num_cores: u32) -> Result<ReplicaGroups> {
     let mut rest = inner;
     while let Some(open) = rest.find('{') {
         let close =
-            rest[open..].find('}').ok_or_else(|| anyhow!("unbalanced replica_groups"))? + open;
+            rest[open..].find('}').ok_or_else(|| parse_err!("unbalanced replica_groups"))? + open;
         let ids: Vec<u32> = rest[open + 1..close]
             .split(',')
             .filter(|v| !v.trim().is_empty())
-            .map(|v| v.trim().parse::<u32>().map_err(|e| anyhow!("bad core id: {e}")))
+            .map(|v| v.trim().parse::<u32>().map_err(|e| parse_err!("bad core id: {e}")))
             .collect::<Result<_>>()?;
         groups.push(ids);
         rest = &rest[close + 1..];
@@ -326,7 +335,7 @@ fn parse_const_payload(s: &str, shape: &Shape) -> Result<ConstVal> {
             "nan" | "-nan" => Ok(f64::NAN),
             "true" => Ok(1.0),
             "false" => Ok(0.0),
-            other => other.parse::<f64>().map_err(|e| anyhow!("bad constant '{other}': {e}")),
+            other => other.parse::<f64>().map_err(|e| parse_err!("bad constant '{other}': {e}")),
         }
     };
     if shape.rank() == 0 {
@@ -382,26 +391,26 @@ fn parse_instruction(
         Some(rest) => (true, rest),
         None => (false, line),
     };
-    let eq = line.find(" = ").ok_or_else(|| anyhow!("no '=' in instruction"))?;
+    let eq = line.find(" = ").ok_or_else(|| parse_err!("no '=' in instruction"))?;
     let name = line[..eq].trim().to_string();
     let rhs = line[eq + 3..].trim();
 
     // type: tuple `( ... )` or plain shape
     let (shape, rest, is_tuple_type) = if rhs.starts_with('(') {
-        let close = matching_paren(rhs, 0).ok_or_else(|| anyhow!("unbalanced tuple type"))?;
+        let close = matching_paren(rhs, 0).ok_or_else(|| parse_err!("unbalanced tuple type"))?;
         // tuple type: parse first element's shape as representative
         let first = rhs[1..close].split(',').next().unwrap_or("f32[]").trim();
         let sh = parse_shape(first).unwrap_or(Shape::scalar(DType::F32));
         (sh, rhs[close + 1..].trim_start(), true)
     } else {
-        let sp = rhs.find(' ').ok_or_else(|| anyhow!("no space after type"))?;
+        let sp = rhs.find(' ').ok_or_else(|| parse_err!("no space after type"))?;
         (parse_shape(&rhs[..sp])?, rhs[sp + 1..].trim_start(), false)
     };
     let _ = is_tuple_type;
 
-    let open = rest.find('(').ok_or_else(|| anyhow!("no '(' after opcode"))?;
+    let open = rest.find('(').ok_or_else(|| parse_err!("no '(' after opcode"))?;
     let opcode = rest[..open].trim().to_string();
-    let close = matching_paren(rest, open).ok_or_else(|| anyhow!("unbalanced operand list"))?;
+    let close = matching_paren(rest, open).ok_or_else(|| parse_err!("unbalanced operand list"))?;
     let operands_str = &rest[open + 1..close];
     let attrs = parse_attrs(&rest[close + 1..]);
 
@@ -414,7 +423,7 @@ fn parse_instruction(
         by_name
             .get(op_name.trim())
             .copied()
-            .ok_or_else(|| anyhow!("unknown operand '{}'", op_name.trim()))
+            .ok_or_else(|| parse_err!("unknown operand '{}'", op_name.trim()))
     };
     let operands: Vec<&str> = if operands_str.trim().is_empty() {
         vec![]
@@ -439,7 +448,7 @@ fn parse_instruction(
         "iota" => {
             let dim = attrs
                 .get("iota_dimension")
-                .ok_or_else(|| anyhow!("iota without iota_dimension"))?
+                .ok_or_else(|| parse_err!("iota without iota_dimension"))?
                 .parse::<usize>()?;
             (Op::Iota { dim, dims: shape.dims.clone() }, vec![])
         }
@@ -494,12 +503,12 @@ fn parse_instruction(
         "reshape" => (Op::Reshape { dims: shape.dims.clone() }, vec![lookup(operands[0])?]),
         "transpose" => {
             let perm = parse_brace_list(
-                attrs.get("dimensions").ok_or_else(|| anyhow!("transpose without dims"))?,
+                attrs.get("dimensions").ok_or_else(|| parse_err!("transpose without dims"))?,
             )?;
             (Op::Transpose { perm }, vec![lookup(operands[0])?])
         }
         "slice" => {
-            let spec = attrs.get("slice").ok_or_else(|| anyhow!("slice without spec"))?;
+            let spec = attrs.get("slice").ok_or_else(|| parse_err!("slice without spec"))?;
             let mut starts = Vec::new();
             let mut limits = Vec::new();
             let mut strides = Vec::new();
@@ -507,46 +516,46 @@ fn parse_instruction(
                 let p = part.trim().trim_start_matches('[').trim_end_matches(']');
                 let mut it = p.split(':');
                 starts.push(it.next().unwrap().trim().parse::<i64>()?);
-                limits.push(it.next().ok_or_else(|| anyhow!("bad slice"))?.trim().parse()?);
+                limits.push(it.next().ok_or_else(|| parse_err!("bad slice"))?.trim().parse()?);
                 strides.push(it.next().map(|v| v.trim().parse()).transpose()?.unwrap_or(1));
             }
             (Op::Slice { starts, limits, strides }, vec![lookup(operands[0])?])
         }
         "concatenate" => {
             let dim = parse_brace_list(
-                attrs.get("dimensions").ok_or_else(|| anyhow!("concat without dims"))?,
+                attrs.get("dimensions").ok_or_else(|| parse_err!("concat without dims"))?,
             )?[0];
             let ins = operands.iter().map(|o| lookup(o)).collect::<Result<Vec<_>>>()?;
             (Op::Concat { dim }, ins)
         }
         "broadcast" => {
             let mapped = parse_brace_list(
-                attrs.get("dimensions").ok_or_else(|| anyhow!("broadcast without dims"))?,
+                attrs.get("dimensions").ok_or_else(|| parse_err!("broadcast without dims"))?,
             )?;
             (Op::Broadcast { mapped, dims: shape.dims.clone() }, vec![lookup(operands[0])?])
         }
         "reduce" => {
             let dims = parse_brace_list(
-                attrs.get("dimensions").ok_or_else(|| anyhow!("reduce without dims"))?,
+                attrs.get("dimensions").ok_or_else(|| parse_err!("reduce without dims"))?,
             )?;
             let region = attrs
                 .get("to_apply")
-                .ok_or_else(|| anyhow!("reduce without to_apply"))?;
+                .ok_or_else(|| parse_err!("reduce without to_apply"))?;
             let kind = region_kind
                 .get(region.trim())
                 .copied()
-                .ok_or_else(|| anyhow!("reduce region '{region}' is not a simple combiner"))?;
+                .ok_or_else(|| parse_err!("reduce region '{region}' is not a simple combiner"))?;
             // operands = (input, init); init is checked to be the identity
             (Op::Reduce { kind, dims }, vec![lookup(operands[0])?])
         }
         "all-reduce" => {
             let region = attrs
                 .get("to_apply")
-                .ok_or_else(|| anyhow!("all-reduce without to_apply"))?;
+                .ok_or_else(|| parse_err!("all-reduce without to_apply"))?;
             let kind = region_kind
                 .get(region.trim())
                 .copied()
-                .ok_or_else(|| anyhow!("all-reduce region '{region}' unknown"))?;
+                .ok_or_else(|| parse_err!("all-reduce region '{region}' unknown"))?;
             (Op::AllReduce { kind, groups: groups(&attrs)? }, vec![lookup(operands[0])?])
         }
         "all-gather" => {
@@ -558,23 +567,23 @@ fn parse_instruction(
                 .or_else(|| {
                     attrs.get("all_gather_dimension").and_then(|v| v.parse::<usize>().ok())
                 })
-                .ok_or_else(|| anyhow!("all-gather without dimension"))?;
+                .ok_or_else(|| parse_err!("all-gather without dimension"))?;
             (Op::AllGather { dim, groups: groups(&attrs)? }, vec![lookup(operands[0])?])
         }
         "reduce-scatter" => {
             let region = attrs
                 .get("to_apply")
-                .ok_or_else(|| anyhow!("reduce-scatter without to_apply"))?;
+                .ok_or_else(|| parse_err!("reduce-scatter without to_apply"))?;
             let kind = region_kind
                 .get(region.trim())
                 .copied()
-                .ok_or_else(|| anyhow!("reduce-scatter region '{region}' unknown"))?;
+                .ok_or_else(|| parse_err!("reduce-scatter region '{region}' unknown"))?;
             let dim = attrs
                 .get("dimensions")
                 .map(|v| parse_brace_list(v))
                 .transpose()?
                 .and_then(|v| v.first().copied())
-                .ok_or_else(|| anyhow!("reduce-scatter without dimension"))?;
+                .ok_or_else(|| parse_err!("reduce-scatter without dimension"))?;
             (
                 Op::ReduceScatter { kind, dim, groups: groups(&attrs)? },
                 vec![lookup(operands[0])?],
@@ -582,7 +591,7 @@ fn parse_instruction(
         }
         "all-to-all" => {
             let dims = parse_brace_list(
-                attrs.get("dimensions").ok_or_else(|| anyhow!("all-to-all without dims"))?,
+                attrs.get("dimensions").ok_or_else(|| parse_err!("all-to-all without dims"))?,
             )?;
             let (split_dim, concat_dim) = match dims.len() {
                 1 => (dims[0], dims[0]),
@@ -601,7 +610,7 @@ fn parse_instruction(
         "get-tuple-element" => {
             let index = attrs
                 .get("index")
-                .ok_or_else(|| anyhow!("gte without index"))?
+                .ok_or_else(|| parse_err!("gte without index"))?
                 .parse::<usize>()?;
             (Op::GetTupleElement { index }, vec![lookup(operands[0])?])
         }

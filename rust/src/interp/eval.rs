@@ -2,13 +2,11 @@
 
 use super::Tensor;
 use crate::ir::{CmpKind, ConstVal, Graph, Op, ReduceKind, Shape};
-use thiserror::Error;
 
 /// Evaluation failure.
-#[derive(Debug, Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EvalError {
     /// Wrong number of inputs supplied.
-    #[error("expected {expected} inputs, got {got}")]
     InputCount {
         /// Parameters declared by the graph.
         expected: usize,
@@ -16,7 +14,6 @@ pub enum EvalError {
         got: usize,
     },
     /// Input tensor shape mismatch.
-    #[error("input {index} has dims {got:?}, parameter wants {want:?}")]
     InputShape {
         /// Parameter index.
         index: usize,
@@ -26,9 +23,24 @@ pub enum EvalError {
         want: Vec<i64>,
     },
     /// An op the interpreter does not execute (e.g. `Custom`).
-    #[error("cannot interpret op '{0}'")]
     Unsupported(String),
 }
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::InputCount { expected, got } => {
+                write!(f, "expected {expected} inputs, got {got}")
+            }
+            EvalError::InputShape { index, got, want } => {
+                write!(f, "input {index} has dims {got:?}, parameter wants {want:?}")
+            }
+            EvalError::Unsupported(op) => write!(f, "cannot interpret op '{op}'"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 fn reduce_apply(kind: ReduceKind, a: f64, b: f64) -> f64 {
     match kind {

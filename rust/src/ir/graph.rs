@@ -2,8 +2,23 @@
 
 use super::{Op, Shape};
 use crate::util::{Interner, Sym};
-use anyhow::{bail, ensure, Result};
+use crate::error::Result;
 use rustc_hash::FxHashMap;
+
+/// Structural-validation failure (a [`crate::error::ScalifyError::ModelSpec`]).
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(crate::error::ScalifyError::model_spec(format!($($arg)*)));
+        }
+    };
+}
+
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(crate::error::ScalifyError::model_spec(format!($($arg)*)))
+    };
+}
 
 /// Index of a node within its [`Graph`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

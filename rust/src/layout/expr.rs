@@ -2,17 +2,14 @@
 
 use super::{AtomId, AtomStore};
 use std::collections::VecDeque;
-use thiserror::Error;
 
 /// Layout-analysis failure.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum LayoutError {
     /// A reshape crossed factor boundaries in a non-divisible way — outside
     /// the paper's grouping-reshape scope assumption.
-    #[error("reshape is not a grouping (merge/split) reshape: {0}")]
     NotGrouping(String),
     /// Transpose permutation doesn't match the expression rank.
-    #[error("permutation rank {perm} != expression rank {rank}")]
     RankMismatch {
         /// permutation length
         perm: usize,
@@ -20,6 +17,21 @@ pub enum LayoutError {
         rank: usize,
     },
 }
+
+impl std::fmt::Display for LayoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LayoutError::NotGrouping(s) => {
+                write!(f, "reshape is not a grouping (merge/split) reshape: {s}")
+            }
+            LayoutError::RankMismatch { perm, rank } => {
+                write!(f, "permutation rank {perm} != expression rank {rank}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LayoutError {}
 
 /// Symbolic shape: `axes[i]` is the ordered factor list of axis `i`.
 ///

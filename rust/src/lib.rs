@@ -6,7 +6,40 @@
 //! Scalify checks **semantic equivalence** between a baseline
 //! (single-device) computational graph and a transformed (distributed /
 //! optimized) graph, exposing silent errors before they degrade trained
-//! models. It combines:
+//! models.
+//!
+//! ## The `Session` API
+//!
+//! The entrypoint is a persistent [`verifier::Session`]: it owns the
+//! compiled rewrite-template set, a cross-run layer memo keyed by
+//! structural fingerprint, and a reusable worker pool — so verifying a
+//! second model config or a second parallelism variant reuses everything
+//! the first call built. Malformed input is a typed [`error::ScalifyError`],
+//! never a panic:
+//!
+//! ```
+//! use scalify::prelude::*;
+//! use scalify::modelgen::demo;
+//!
+//! let cfg = VerifyConfig::builder().threads(2).build()?;
+//! let session = Session::new(cfg);
+//!
+//! // first call verifies every layer and fills the session memo…
+//! let report = session.verify(&demo::matmul_allreduce_pair(2))?;
+//! assert!(report.verified());
+//!
+//! // …so a structurally-overlapping second call replays it
+//! let again = session.verify(&demo::matmul_allreduce_pair(2))?;
+//! assert!(again.layers.iter().all(|l| l.memoized));
+//! # Ok::<(), scalify::error::ScalifyError>(())
+//! ```
+//!
+//! Reports serialize to JSON ([`verifier::VerifyReport::to_json_string`])
+//! and parse back ([`verifier::VerifyReport::from_json_str`]) for
+//! machine consumers; the CLI exposes the same via `--json` and verifies
+//! whole manifests through one shared session (`scalify batch`).
+//!
+//! ## Engine internals
 //!
 //! * an **e-graph** engine ([`egraph`]) performing equality saturation over
 //!   tensor IR terms,
@@ -26,8 +59,9 @@
 //! collectives ([`interp`]), a model zoo emitting Llama/Mixtral-style
 //! baseline+distributed graph pairs ([`modelgen`]), a corpus of injected
 //! production bugs ([`bugs`]), numerical/per-element baseline verifiers
-//! ([`baseline`]), and a PJRT runtime ([`runtime`]) executing AOT-compiled
-//! JAX artifacts from Rust.
+//! ([`baseline`]), and an execution runtime ([`runtime`]) for AOT-compiled
+//! JAX artifacts.
+pub mod error;
 pub mod util;
 pub mod ir;
 pub mod hlo;
@@ -44,17 +78,23 @@ pub mod baseline;
 pub mod runtime;
 pub mod report;
 pub mod bench;
+pub mod cli;
 pub mod proptest;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::error::{Result, ScalifyError};
     pub use crate::ir::{
         Annotation, DType, Graph, GraphBuilder, Node, NodeId, Op, ReduceKind, ReplicaGroups,
         Shape,
     };
     pub use crate::localize::Discrepancy;
     pub use crate::modelgen::{GraphPair, LlamaConfig, MixtralConfig, Parallelism};
-    pub use crate::verifier::{Verdict, Verifier, VerifyConfig, VerifyReport};
+    pub use crate::verifier::{
+        Session, SessionStats, Verdict, VerifyConfig, VerifyConfigBuilder, VerifyReport,
+    };
+    #[allow(deprecated)]
+    pub use crate::verifier::Verifier;
 }
 
 /// Crate version string used by the CLI.

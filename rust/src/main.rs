@@ -1,132 +1,191 @@
 //! `scalify` CLI — the leader entrypoint.
 //!
 //! ```text
-//! scalify verify --base <hlo> --dist <hlo> [--cores N]   verify two HLO files
-//! scalify model --model llama-8b --par tp32 [--layers N] verify a zoo model
-//! scalify bugs [--reproduced|--new]                      run the bug corpus
-//! scalify exec --artifact <hlo>                          run via PJRT
-//! scalify info                                           version/build info
+//! scalify verify --base <hlo> --dist <hlo> [--cores N] [--json]   verify two HLO files
+//! scalify model --model llama-8b --par tp32 [--layers N] [--json] verify a zoo model
+//! scalify batch --manifest pairs.txt [--json]                     verify a manifest through one session
+//! scalify bugs [--reproduced|--new]                               run the bug corpus
+//! scalify exec --artifact <hlo>                                   run via the runtime
+//! scalify info                                                    version/build info
 //! ```
+//!
+//! Exit codes: 0 verified/ok · 1 unverified (a divergence was found) ·
+//! 2 usage or input error · 3 runtime execution error. With `--json`,
+//! stdout carries exactly one machine-readable document.
 
 use scalify::bugs::{evaluate, new_bugs, reproduced_bugs, ExpectedLoc, LocResult};
+use scalify::cli;
+use scalify::error::{Result, ResultExt, ScalifyError};
 use scalify::hlo::parse_hlo_file;
 use scalify::ir::Annotation;
-use scalify::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
+use scalify::report::json::Json;
 use scalify::report::Table;
-use scalify::verifier::{GraphPair, Verifier, VerifyConfig};
+use scalify::verifier::{GraphPair, Session, VerifyReport};
 use std::collections::HashMap;
 use std::path::Path;
 use std::process::ExitCode;
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut flags = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = args
-                .get(i + 1)
-                .filter(|v| !v.starts_with("--"))
-                .cloned()
-                .unwrap_or_else(|| "true".into());
-            if val != "true" {
-                i += 1;
-            }
-            flags.insert(key.to_string(), val);
-        }
-        i += 1;
-    }
+type Flags = HashMap<String, String>;
+
+fn require<'f>(flags: &'f Flags, key: &str, usage: &str) -> Result<&'f String> {
     flags
+        .get(key)
+        .ok_or_else(|| ScalifyError::config(format!("missing --{key} ({usage})")))
 }
 
-fn parallelism(spec: &str) -> Parallelism {
-    let (kind, deg) = spec.split_at(2);
-    let deg: u32 = deg.parse().unwrap_or(32);
-    match kind {
-        "tp" => Parallelism::Tensor { tp: deg },
-        "sp" => Parallelism::Sequence { tp: deg },
-        "fd" => Parallelism::FlashDecoding { tp: deg },
-        "ep" => Parallelism::Expert { ep: deg },
-        other => panic!("unknown parallelism '{other}' (tp/sp/fd/ep + degree)"),
-    }
-}
-
-fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> GraphPair {
-    let mk = |mut cfg: LlamaConfig| {
-        if let Some(l) = layers {
-            cfg.layers = l;
-        }
-        llama_pair(&cfg, par)
-    };
-    match model {
-        "llama-8b" => mk(LlamaConfig::llama3_8b()),
-        "llama-70b" => mk(LlamaConfig::llama3_70b()),
-        "llama-405b" => mk(LlamaConfig::llama3_405b()),
-        "llama-tiny" => mk(LlamaConfig::tiny()),
-        "mixtral-8x7b" => {
-            let mut cfg = MixtralConfig::mixtral_8x7b();
-            if let Some(l) = layers {
-                cfg.layers = l;
-            }
-            mixtral_pair(&cfg, par)
-        }
-        "mixtral-8x22b" => {
-            let mut cfg = MixtralConfig::mixtral_8x22b();
-            if let Some(l) = layers {
-                cfg.layers = l;
-            }
-            mixtral_pair(&cfg, par)
-        }
-        other => panic!("unknown model '{other}'"),
-    }
-}
-
-fn cmd_verify(flags: &HashMap<String, String>) -> ExitCode {
-    let base = flags.get("base").expect("--base <hlo file>");
-    let dist = flags.get("dist").expect("--dist <hlo file>");
-    let cores: u32 = flags.get("cores").map(|c| c.parse().unwrap()).unwrap_or(1);
-    let bg = parse_hlo_file(Path::new(base), 1).expect("parse --base");
-    let dg = parse_hlo_file(Path::new(dist), cores).expect("parse --dist");
-    // positional replicated annotations (HLO files carry no sharding info)
+/// Load a `(base, dist)` HLO file pair with positional replicated
+/// annotations (HLO files carry no sharding info).
+fn load_pair(base: &Path, dist: &Path, cores: u32) -> Result<GraphPair> {
+    let bg = parse_hlo_file(base, 1).with_ctx(|| format!("--base {}", base.display()))?;
+    let dg = parse_hlo_file(dist, cores).with_ctx(|| format!("--dist {}", dist.display()))?;
     let ann: Vec<Annotation> = bg
         .parameters()
         .into_iter()
         .zip(dg.parameters())
         .map(|(b, d)| Annotation::replicated(b, d))
         .collect();
-    let pair = GraphPair::new(bg, dg, ann);
-    let report = Verifier::new(VerifyConfig::default()).verify_pair(&pair);
-    println!("{}", report.summary());
-    for d in report.discrepancies() {
-        println!("  {}", d.render());
+    GraphPair::try_new(bg, dg, ann)
+}
+
+fn emit_report(report: &VerifyReport, json: bool, max_discrepancies: usize) {
+    if json {
+        print!("{}", report.to_json_string());
+        return;
     }
-    if report.verified() {
-        ExitCode::SUCCESS
-    } else {
-        ExitCode::from(1)
+    println!("{}", report.summary());
+    for d in report.discrepancies().iter().take(max_discrepancies) {
+        println!("  {}", d.render());
     }
 }
 
-fn cmd_model(flags: &HashMap<String, String>) -> ExitCode {
+fn cmd_verify(flags: &Flags) -> Result<ExitCode> {
+    let base = require(flags, "base", "baseline HLO file")?;
+    let dist = require(flags, "dist", "distributed HLO file")?;
+    let cores: u32 = match flags.get("cores") {
+        Some(c) => c
+            .parse()
+            .map_err(|_| ScalifyError::config(format!("--cores wants an integer, got '{c}'")))?,
+        None => 1,
+    };
+    let pair = load_pair(Path::new(base), Path::new(dist), cores)?;
+    let session = Session::new(cli::config_from_flags(flags)?);
+    let report = session.verify(&pair)?;
+    emit_report(&report, flags.contains_key("json"), usize::MAX);
+    Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+}
+
+fn cmd_model(flags: &Flags) -> Result<ExitCode> {
     let model = flags.get("model").map(|s| s.as_str()).unwrap_or("llama-8b");
-    let par = parallelism(flags.get("par").map(|s| s.as_str()).unwrap_or("tp32"));
-    let layers = flags.get("layers").map(|l| l.parse().unwrap());
-    eprintln!("generating {model} ({}) graphs…", par.label());
-    let pair = model_pair(model, par, layers);
-    eprintln!(
-        "verifying {} baseline + {} distributed nodes…",
-        pair.base.len(),
-        pair.dist.len()
-    );
-    let report = Verifier::new(VerifyConfig::default()).verify_pair(&pair);
-    println!("{}", report.summary());
-    for d in report.discrepancies().iter().take(10) {
-        println!("  {}", d.render());
+    let par = cli::parallelism(flags.get("par").map(|s| s.as_str()).unwrap_or("tp32"))?;
+    let layers = match flags.get("layers") {
+        Some(l) => Some(l.parse().map_err(|_| {
+            ScalifyError::config(format!("--layers wants an integer, got '{l}'"))
+        })?),
+        None => None,
+    };
+    let json = flags.contains_key("json");
+    if !json {
+        eprintln!("generating {model} ({}) graphs…", par.label());
     }
-    if report.verified() {
+    let pair = cli::model_pair(model, par, layers)?;
+    if !json {
+        eprintln!(
+            "verifying {} baseline + {} distributed nodes…",
+            pair.base.len(),
+            pair.dist.len()
+        );
+    }
+    let session = Session::new(cli::config_from_flags(flags)?);
+    let report = session.verify(&pair)?;
+    emit_report(&report, json, 10);
+    Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+}
+
+fn cmd_batch(flags: &Flags) -> Result<ExitCode> {
+    let manifest = require(flags, "manifest", "text file of `base.hlo dist.hlo [cores]` lines")?;
+    let text = std::fs::read_to_string(manifest)
+        .with_ctx(|| format!("reading manifest {manifest}"))?;
+    let entries = cli::parse_manifest(&text).with_ctx(|| format!("manifest {manifest}"))?;
+    let json = flags.contains_key("json");
+
+    // one session for the whole batch: templates compile once, and layers
+    // shared between pairs (same model, different variants) hit the memo
+    let session = Session::new(cli::config_from_flags(flags)?);
+    let mut all_verified = true;
+    let mut had_errors = false;
+    let mut docs: Vec<Json> = Vec::new();
+    for entry in &entries {
+        // one broken pair must not discard the rest of the batch
+        let outcome = load_pair(&entry.base, &entry.dist, entry.cores)
+            .and_then(|pair| session.verify(&pair));
+        let mut fields = vec![
+            ("base".into(), Json::Str(entry.base.display().to_string())),
+            ("dist".into(), Json::Str(entry.dist.display().to_string())),
+            ("cores".into(), Json::Num(entry.cores as f64)),
+        ];
+        match outcome {
+            Ok(report) => {
+                all_verified &= report.verified();
+                if json {
+                    fields.push(("report".into(), report.to_json()));
+                } else {
+                    println!(
+                        "{} ⊢ {}: {}",
+                        entry.base.display(),
+                        entry.dist.display(),
+                        report.summary()
+                    );
+                    for d in report.discrepancies().iter().take(5) {
+                        println!("  {}", d.render());
+                    }
+                }
+            }
+            Err(e) => {
+                had_errors = true;
+                all_verified = false;
+                if json {
+                    fields.push(("error".into(), Json::Str(e.to_string())));
+                } else {
+                    println!(
+                        "{} ⊢ {}: ERROR — {e}",
+                        entry.base.display(),
+                        entry.dist.display()
+                    );
+                }
+            }
+        }
+        if json {
+            docs.push(Json::Obj(fields));
+        }
+    }
+    let stats = session.stats();
+    if json {
+        print!(
+            "{}",
+            Json::Obj(vec![
+                ("pairs".into(), Json::Arr(docs)),
+                ("all_verified".into(), Json::Bool(all_verified)),
+                ("had_errors".into(), Json::Bool(had_errors)),
+                ("session_runs".into(), Json::Num(stats.runs as f64)),
+                ("memo_hits".into(), Json::Num(stats.memo_hits as f64)),
+                ("memo_entries".into(), Json::Num(stats.memo_entries as f64)),
+            ])
+            .render_pretty()
+        );
+    } else {
+        eprintln!(
+            "batch: {} pairs, {} memoized layer hits across the shared session",
+            entries.len(),
+            stats.memo_hits
+        );
+    }
+    Ok(if had_errors {
+        ExitCode::from(2)
+    } else if all_verified {
         ExitCode::SUCCESS
     } else {
         ExitCode::from(1)
-    }
+    })
 }
 
 fn run_bug_table(title: &str, cases: Vec<scalify::bugs::BugCase>) -> bool {
@@ -164,7 +223,7 @@ fn run_bug_table(title: &str, cases: Vec<scalify::bugs::BugCase>) -> bool {
     ok
 }
 
-fn cmd_bugs(flags: &HashMap<String, String>) -> ExitCode {
+fn cmd_bugs(flags: &Flags) -> Result<ExitCode> {
     let only_new = flags.contains_key("new");
     let only_reproduced = flags.contains_key("reproduced");
     let mut all_ok = true;
@@ -174,17 +233,13 @@ fn cmd_bugs(flags: &HashMap<String, String>) -> ExitCode {
     if !only_reproduced {
         all_ok &= run_bug_table("Table 5 - new bugs", new_bugs());
     }
-    if all_ok {
-        ExitCode::SUCCESS
-    } else {
-        ExitCode::from(1)
-    }
+    Ok(if all_ok { ExitCode::SUCCESS } else { ExitCode::from(1) })
 }
 
-fn cmd_exec(flags: &HashMap<String, String>) -> ExitCode {
-    let path = flags.get("artifact").expect("--artifact <hlo file>");
-    let exe = scalify::runtime::Executable::load(Path::new(path)).expect("load artifact");
-    let g = parse_hlo_file(Path::new(path), 1).expect("parse artifact");
+fn cmd_exec(flags: &Flags) -> Result<ExitCode> {
+    let path = require(flags, "artifact", "HLO-text artifact to execute")?;
+    let exe = scalify::runtime::Executable::load(Path::new(path))?;
+    let g = exe.graph();
     let mut prng = scalify::util::Prng::new(42);
     let inputs: Vec<scalify::interp::Tensor> = g
         .parameters()
@@ -192,36 +247,70 @@ fn cmd_exec(flags: &HashMap<String, String>) -> ExitCode {
         .map(|&pid| scalify::interp::Tensor::random(g.node(pid).shape.clone(), &mut prng))
         .collect();
     let t0 = std::time::Instant::now();
-    let out = exe.run(&inputs).expect("execute");
-    println!(
-        "executed {} in {:?}: {} outputs, first shape {}",
-        path,
-        t0.elapsed(),
-        out.len(),
-        out[0].shape
-    );
-    ExitCode::SUCCESS
+    let out = exe.run(&inputs)?;
+    // artifacts with zero outputs are legal (e.g. effect-only modules) —
+    // don't index out[0] unconditionally
+    match out.first() {
+        Some(first) => println!(
+            "executed {} in {:?}: {} outputs, first shape {}",
+            path,
+            t0.elapsed(),
+            out.len(),
+            first.shape
+        ),
+        None => println!("executed {} in {:?}: 0 outputs", path, t0.elapsed()),
+    }
+    Ok(ExitCode::SUCCESS)
 }
 
-fn main() -> ExitCode {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+fn usage() -> String {
+    format!(
+        "scalify {} — computational-graph equivalence verifier\n\
+         usage:\n  \
+         scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N] [--json]\n  \
+         scalify model --model llama-8b|llama-70b|llama-405b|llama-tiny|mixtral-8x7b|mixtral-8x22b \
+         --par tp32|sp32|fd32|ep8 [--layers N] [--json]\n  \
+         scalify batch --manifest pairs.txt [--json]\n  \
+         scalify bugs [--reproduced|--new]\n  \
+         scalify exec --artifact artifacts/model_single.hlo.txt\n  \
+         scalify info\n\
+         common flags: --threads N --no-partition --no-parallel --no-memoize\n\
+         exit codes: 0 verified · 1 unverified · 2 usage/input error · 3 runtime error",
+        scalify::VERSION
+    )
+}
+
+fn run(args: &[String]) -> Result<ExitCode> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
-    let flags = parse_flags(&args[1.min(args.len())..]);
+    let flags = cli::parse_flags(&args[1.min(args.len())..])?;
     match cmd {
         "verify" => cmd_verify(&flags),
         "model" => cmd_model(&flags),
+        "batch" => cmd_batch(&flags),
         "bugs" => cmd_bugs(&flags),
         "exec" => cmd_exec(&flags),
         "info" => {
             println!("scalify {} — computational-graph equivalence verifier", scalify::VERSION);
-            ExitCode::SUCCESS
+            Ok(ExitCode::SUCCESS)
         }
-        _ => {
-            println!(
-                "scalify {} — usage:\n  scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N]\n  scalify model --model llama-8b|llama-70b|llama-405b|mixtral-8x7b|mixtral-8x22b --par tp32|sp32|fd32|ep8 [--layers N]\n  scalify bugs [--reproduced|--new]\n  scalify exec --artifact artifacts/model_single.hlo.txt\n  scalify info",
-                scalify::VERSION
-            );
-            ExitCode::SUCCESS
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(ExitCode::SUCCESS)
+        }
+        other => Err(ScalifyError::config(format!(
+            "unknown command '{other}'\n{}",
+            usage()
+        ))),
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("scalify: {e}");
+            ExitCode::from(cli::exit_code_for(&e))
         }
     }
 }

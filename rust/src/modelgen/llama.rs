@@ -261,7 +261,70 @@ fn annotate_layer(
     ann.push(Annotation::shard(bw.wd, dw.wd, 0, tp));
 }
 
+/// Build a baseline + distributed Llama graph pair, validating the
+/// config/parallelism combination instead of panicking.
+pub fn try_llama_pair(
+    cfg: &LlamaConfig,
+    par: Parallelism,
+) -> crate::error::Result<GraphPair> {
+    use crate::error::ScalifyError;
+    let spec = |m: String| Err(ScalifyError::ModelSpec(m));
+    if cfg.layers == 0
+        || cfg.hidden <= 0
+        || cfg.heads <= 0
+        || cfg.ffn <= 0
+        || cfg.seqlen <= 0
+        || cfg.batch <= 0
+    {
+        return spec(format!("llama config has a non-positive dimension: {cfg:?}"));
+    }
+    if cfg.hidden % cfg.heads != 0 {
+        return spec(format!(
+            "hidden ({}) must be divisible by heads ({})",
+            cfg.hidden, cfg.heads
+        ));
+    }
+    let degree = par.cores();
+    if degree == 0 {
+        return spec("parallelism degree must be >= 1".into());
+    }
+    match par {
+        Parallelism::Tensor { tp } | Parallelism::Sequence { tp } => {
+            if cfg.heads % tp as i64 != 0 {
+                return spec(format!("heads ({}) must be divisible by tp ({tp})", cfg.heads));
+            }
+            if cfg.ffn % tp as i64 != 0 {
+                return spec(format!("ffn ({}) must be divisible by tp ({tp})", cfg.ffn));
+            }
+            if matches!(par, Parallelism::Sequence { .. }) && cfg.tokens() % tp as i64 != 0 {
+                return spec(format!(
+                    "tokens ({}) must be divisible by tp ({tp}) for sequence parallelism",
+                    cfg.tokens()
+                ));
+            }
+        }
+        Parallelism::FlashDecoding { tp } => {
+            if cfg.seqlen % tp as i64 != 0 {
+                return spec(format!(
+                    "seqlen ({}) must be divisible by the KV-shard degree ({tp})",
+                    cfg.seqlen
+                ));
+            }
+        }
+        Parallelism::Expert { .. } => {
+            return spec(
+                "expert parallelism is a Mixtral configuration (use mixtral_pair)".into(),
+            );
+        }
+    }
+    Ok(llama_pair(cfg, par))
+}
+
 /// Build a baseline + distributed Llama graph pair.
+///
+/// # Panics
+/// Panics on invalid config/parallelism combinations; use
+/// [`try_llama_pair`] on untrusted input.
 pub fn llama_pair(cfg: &LlamaConfig, par: Parallelism) -> GraphPair {
     match par {
         Parallelism::Tensor { tp } => llama_dense_pair(cfg, tp, false),

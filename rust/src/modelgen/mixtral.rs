@@ -117,7 +117,46 @@ fn moe_block_dist(
     b.all_reduce(acc.unwrap(), ReduceKind::Add, ReplicaGroups::full(ep))
 }
 
+/// Build the Mixtral pair under expert parallelism, validating the
+/// config/parallelism combination instead of panicking.
+pub fn try_mixtral_pair(
+    cfg: &MixtralConfig,
+    par: Parallelism,
+) -> crate::error::Result<GraphPair> {
+    use crate::error::ScalifyError;
+    let spec = |m: String| Err(ScalifyError::ModelSpec(m));
+    if cfg.layers == 0
+        || cfg.hidden <= 0
+        || cfg.experts <= 0
+        || cfg.ffn <= 0
+        || cfg.seqlen <= 0
+        || cfg.batch <= 0
+    {
+        return spec(format!("mixtral config has a non-positive dimension: {cfg:?}"));
+    }
+    let Parallelism::Expert { ep } = par else {
+        return spec(format!(
+            "mixtral supports expert parallelism only (got {})",
+            par.label()
+        ));
+    };
+    if ep == 0 {
+        return spec("expert-parallel degree must be >= 1".into());
+    }
+    if cfg.experts % ep as i64 != 0 {
+        return spec(format!(
+            "experts ({}) must be divisible by ep ({ep})",
+            cfg.experts
+        ));
+    }
+    Ok(mixtral_pair(cfg, par))
+}
+
 /// Build the Mixtral pair under expert parallelism.
+///
+/// # Panics
+/// Panics on invalid config/parallelism combinations; use
+/// [`try_mixtral_pair`] on untrusted input.
 pub fn mixtral_pair(cfg: &MixtralConfig, par: Parallelism) -> GraphPair {
     let Parallelism::Expert { ep } = par else {
         panic!("mixtral_pair expects expert parallelism");

@@ -16,8 +16,8 @@ mod mixtral;
 pub mod demo;
 
 pub use crate::verifier::GraphPair;
-pub use llama::{llama_pair, LlamaConfig};
-pub use mixtral::{mixtral_pair, MixtralConfig};
+pub use llama::{llama_pair, try_llama_pair, LlamaConfig};
+pub use mixtral::{mixtral_pair, try_mixtral_pair, MixtralConfig};
 
 /// Parallelization technique of the distributed graph (§7.1: the four
 /// techniques the paper evaluates).

@@ -6,7 +6,7 @@ use super::*;
 use crate::interp::{run_single, run_spmd, Tensor};
 use crate::modelgen::llama::shard_inputs;
 use crate::util::Prng;
-use crate::verifier::{Verifier, VerifyConfig};
+use crate::verifier::{Session, VerifyConfig};
 
 fn cfg_seq() -> VerifyConfig {
     VerifyConfig { parallel: false, ..VerifyConfig::default() }
@@ -39,7 +39,7 @@ fn llama_tp_tiny_numerics_match() {
 #[test]
 fn llama_tp_tiny_verifies() {
     let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(report.verified(), "{}", render_failure(&report));
 }
 
@@ -52,7 +52,7 @@ fn llama_sp_tiny_numerics_match() {
 #[test]
 fn llama_sp_tiny_verifies() {
     let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Sequence { tp: 2 });
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(report.verified(), "{}", render_failure(&report));
 }
 
@@ -65,7 +65,7 @@ fn flash_decoding_tiny_numerics_match() {
 #[test]
 fn flash_decoding_tiny_verifies() {
     let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::FlashDecoding { tp: 2 });
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(report.verified(), "{}", render_failure(&report));
 }
 
@@ -78,7 +78,7 @@ fn mixtral_ep_tiny_numerics_match() {
 #[test]
 fn mixtral_ep_tiny_verifies() {
     let pair = mixtral_pair(&MixtralConfig::tiny(), Parallelism::Expert { ep: 4 });
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(report.verified(), "{}", render_failure(&report));
 }
 
@@ -86,12 +86,12 @@ fn mixtral_ep_tiny_verifies() {
 fn demo_pairs_behave() {
     let good = demo::matmul_allreduce_pair(4);
     assert_numerically_equivalent(&good, 1e-4, 23);
-    assert!(Verifier::new(cfg_seq()).verify_pair(&good).verified());
+    assert!(Session::new(cfg_seq()).verify(&good).unwrap().verified());
 
     let bsh_ok = demo::bsh_pair(false);
-    assert!(Verifier::new(cfg_seq()).verify_pair(&bsh_ok).verified());
+    assert!(Session::new(cfg_seq()).verify(&bsh_ok).unwrap().verified());
     let bsh_bug = demo::bsh_pair(true);
-    assert!(!Verifier::new(cfg_seq()).verify_pair(&bsh_bug).verified());
+    assert!(!Session::new(cfg_seq()).verify(&bsh_bug).unwrap().verified());
 }
 
 #[test]
@@ -121,7 +121,7 @@ fn graphs_validate_and_have_metadata() {
 fn multi_layer_memoizes() {
     let cfg = LlamaConfig { layers: 4, ..LlamaConfig::tiny() };
     let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 2 });
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(report.verified(), "{}", render_failure(&report));
     let memoized = report.layers.iter().filter(|l| l.memoized).count();
     assert!(memoized >= 3, "identical decoder layers should memoize, got {memoized}");

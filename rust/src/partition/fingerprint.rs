@@ -47,6 +47,11 @@ fn hash_slice<H: Hasher>(slice: &LayerSlice, h: &mut H) {
     for o in &slice.graph.outputs {
         o.0.hash(h);
     }
+    // final graph outputs are checked more strictly than interior boundary
+    // outputs (exact duplicate vs any propagatable relation), so a final
+    // layer must never replay an interior layer's memo entry — this
+    // matters doubly now that the memo lives across `Session` runs.
+    slice.final_outputs.hash(h);
 }
 
 /// Memoized verification result of a layer pair.
@@ -92,6 +97,17 @@ impl LayerMemo {
         self.table.insert(fp, entry);
     }
 
+    /// Peek without counting a hit (used to skip speculative work for
+    /// layers the memo can already serve).
+    pub fn contains_verified(&self, fp: u64) -> bool {
+        self.table.get(&fp).map(|e| e.verified).unwrap_or(false)
+    }
+
+    /// Drop all entries (hit/miss counters are kept).
+    pub fn clear(&mut self) {
+        self.table.clear();
+    }
+
     /// Distinct fingerprints stored.
     pub fn len(&self) -> usize {
         self.table.len()
@@ -109,12 +125,12 @@ mod tests {
     use crate::ir::{DType, GraphBuilder, Shape};
     use crate::partition::extract_layers;
 
-    fn two_identical_layers() -> Vec<LayerSlice> {
+    fn identical_layers(n: u32) -> Vec<LayerSlice> {
         let mut b = GraphBuilder::new("m", 1);
         b.layer(None);
         let x = b.parameter("x", Shape::new(DType::F32, vec![4, 8]));
         let mut cur = x;
-        for l in 0..2 {
+        for l in 0..n {
             b.layer(Some(l));
             let w = b.parameter(&format!("w{l}"), Shape::new(DType::F32, vec![8, 8]));
             let h = b.matmul(cur, w);
@@ -127,7 +143,7 @@ mod tests {
 
     #[test]
     fn identical_layers_same_fingerprint() {
-        let layers = two_identical_layers();
+        let layers = identical_layers(3);
         let l0 = layers.iter().find(|l| l.layer == 0).unwrap();
         let l1 = layers.iter().find(|l| l.layer == 1).unwrap();
         let fp0 = fingerprint_pair(l0, l0, &[], 2);
@@ -139,6 +155,26 @@ mod tests {
         // different core count changes the fingerprint
         let fp3 = fingerprint_pair(l0, l0, &[], 4);
         assert_ne!(fp0, fp3);
+    }
+
+    #[test]
+    fn final_layer_never_aliases_interior_layers() {
+        // the last layer feeds the graph output, and final outputs are
+        // checked more strictly (exact duplicate); its fingerprint must
+        // differ from a structurally-identical interior layer so a memo
+        // replay can't skip that check
+        let layers = identical_layers(3);
+        let interior = layers.iter().find(|l| l.layer == 1).unwrap();
+        let last = layers.iter().find(|l| l.layer == 2).unwrap();
+        assert!(last.final_outputs.iter().any(|&f| f));
+        assert_ne!(
+            fingerprint_pair(interior, interior, &[], 2),
+            fingerprint_pair(last, last, &[], 2)
+        );
+        // but the same final layer re-sliced fingerprints identically
+        let again = identical_layers(3);
+        let last2 = again.iter().find(|l| l.layer == 2).unwrap();
+        assert_eq!(fingerprint_pair(last, last, &[], 2), fingerprint_pair(last2, last2, &[], 2));
     }
 
     #[test]

@@ -178,11 +178,12 @@ mod tests {
         check("verify-implies-numerics", 0x5EED, 8, |p| {
             let tp = [2u32, 4][p.range(0, 2)];
             let pair = matmul_allreduce_pair(tp);
-            let report = crate::verifier::Verifier::new(crate::verifier::VerifyConfig {
+            let report = crate::verifier::Session::new(crate::verifier::VerifyConfig {
                 parallel: false,
                 ..Default::default()
             })
-            .verify_pair(&pair);
+            .verify(&pair)
+            .unwrap();
             if !report.verified() {
                 return Err("demo pair must verify".into());
             }

@@ -1,6 +1,201 @@
-//! Table/figure emitters: aligned text tables + CSV for every experiment.
+//! Report emitters: aligned text tables + CSV for every experiment, and
+//! the machine-readable JSON encoding of [`VerifyReport`] the CLI's
+//! `--json` flag and embedding services consume.
 
+pub mod json;
+
+use crate::error::{Result, ScalifyError};
+use crate::localize::Discrepancy;
+use crate::verifier::{LayerReport, Verdict, VerifyReport};
+use json::Json;
 use std::fmt::Write;
+use std::time::Duration;
+
+fn secs(d: Duration) -> Json {
+    Json::Num(d.as_secs_f64())
+}
+
+fn field<'j>(doc: &'j Json, key: &str) -> Result<&'j Json> {
+    doc.get(key)
+        .ok_or_else(|| ScalifyError::parse(format!("report JSON missing field '{key}'")))
+}
+
+fn str_field(doc: &Json, key: &str) -> Result<String> {
+    field(doc, key)?
+        .as_str()
+        .map(str::to_owned)
+        .ok_or_else(|| ScalifyError::parse(format!("report field '{key}' is not a string")))
+}
+
+fn num_field(doc: &Json, key: &str) -> Result<f64> {
+    field(doc, key)?
+        .as_f64()
+        .ok_or_else(|| ScalifyError::parse(format!("report field '{key}' is not a number")))
+}
+
+fn bool_field(doc: &Json, key: &str) -> Result<bool> {
+    field(doc, key)?
+        .as_bool()
+        .ok_or_else(|| ScalifyError::parse(format!("report field '{key}' is not a bool")))
+}
+
+impl Discrepancy {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("dist_node".into(), Json::Num(self.dist_node.0 as f64)),
+            ("site".into(), Json::Str(self.site.clone())),
+            ("func".into(), Json::Str(self.func.clone())),
+            ("expr".into(), Json::Str(self.expr.clone())),
+            ("reason".into(), Json::Str(self.reason.clone())),
+            (
+                "layer".into(),
+                self.layer.map(|l| Json::Num(l as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Decode from [`Discrepancy::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<Discrepancy> {
+        Ok(Discrepancy {
+            dist_node: crate::ir::NodeId(num_field(doc, "dist_node")? as u32),
+            site: str_field(doc, "site")?,
+            func: str_field(doc, "func")?,
+            expr: str_field(doc, "expr")?,
+            reason: str_field(doc, "reason")?,
+            layer: match field(doc, "layer")? {
+                Json::Null => None,
+                v => Some(v.as_f64().ok_or_else(|| {
+                    ScalifyError::parse("report field 'layer' is not a number or null")
+                })? as u32),
+            },
+        })
+    }
+}
+
+impl LayerReport {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("layer".into(), Json::Num(self.layer as f64)),
+            ("verified".into(), Json::Bool(self.verified)),
+            ("memoized".into(), Json::Bool(self.memoized)),
+            ("egraph_nodes".into(), Json::Num(self.egraph_nodes as f64)),
+            ("facts".into(), Json::Num(self.facts as f64)),
+            ("duration_secs".into(), secs(self.duration)),
+        ])
+    }
+
+    /// Decode from [`LayerReport::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<LayerReport> {
+        Ok(LayerReport {
+            layer: num_field(doc, "layer")? as u32,
+            verified: bool_field(doc, "verified")?,
+            memoized: bool_field(doc, "memoized")?,
+            egraph_nodes: num_field(doc, "egraph_nodes")? as usize,
+            facts: num_field(doc, "facts")? as usize,
+            duration: Duration::from_secs_f64(num_field(doc, "duration_secs")?.max(0.0)),
+        })
+    }
+}
+
+impl Verdict {
+    /// Stable status label (`verified` / `unverified` / `resource-exhausted`).
+    pub fn status(&self) -> &'static str {
+        match self {
+            Verdict::Verified => "verified",
+            Verdict::Unverified { .. } => "unverified",
+            Verdict::ResourceExhausted { .. } => "resource-exhausted",
+        }
+    }
+}
+
+impl VerifyReport {
+    /// JSON encoding of the full report (verdict, discrepancies, per-layer
+    /// stats, phase timings).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("status".into(), Json::Str(self.verdict.status().into())),
+            ("verified".into(), Json::Bool(self.verified())),
+        ];
+        if let Verdict::ResourceExhausted { at } = &self.verdict {
+            fields.push(("exhausted_at".into(), Json::Str(at.clone())));
+        }
+        fields.push((
+            "discrepancies".into(),
+            Json::Arr(self.discrepancies().iter().map(Discrepancy::to_json).collect()),
+        ));
+        fields.push((
+            "layers".into(),
+            Json::Arr(self.layers.iter().map(LayerReport::to_json).collect()),
+        ));
+        fields.push((
+            "phases".into(),
+            Json::Obj(
+                self.stopwatch
+                    .phases()
+                    .map(|(name, d)| (name.to_owned(), secs(d)))
+                    .collect(),
+            ),
+        ));
+        fields.push(("total_secs".into(), secs(self.total)));
+        Json::Obj(fields)
+    }
+
+    /// Serialize to a pretty-printed JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().render_pretty()
+    }
+
+    /// Decode a report from [`VerifyReport::to_json`] output (e.g. a
+    /// `scalify --json` capture); verdict, discrepancies, layer stats and
+    /// timings all survive the round trip.
+    pub fn from_json(doc: &Json) -> Result<VerifyReport> {
+        let status = str_field(doc, "status")?;
+        let discrepancies = field(doc, "discrepancies")?
+            .as_arr()
+            .ok_or_else(|| ScalifyError::parse("report field 'discrepancies' is not an array"))?
+            .iter()
+            .map(Discrepancy::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let verdict = match status.as_str() {
+            "verified" => Verdict::Verified,
+            "unverified" => Verdict::Unverified { discrepancies },
+            "resource-exhausted" => {
+                Verdict::ResourceExhausted { at: str_field(doc, "exhausted_at")? }
+            }
+            other => {
+                return Err(ScalifyError::parse(format!("unknown report status '{other}'")))
+            }
+        };
+        let layers = field(doc, "layers")?
+            .as_arr()
+            .ok_or_else(|| ScalifyError::parse("report field 'layers' is not an array"))?
+            .iter()
+            .map(LayerReport::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut stopwatch = crate::util::Stopwatch::new();
+        if let Json::Obj(phases) = field(doc, "phases")? {
+            for (name, v) in phases {
+                let d = v.as_f64().ok_or_else(|| {
+                    ScalifyError::parse(format!("phase '{name}' duration is not a number"))
+                })?;
+                stopwatch.record(name, Duration::from_secs_f64(d.max(0.0)));
+            }
+        }
+        Ok(VerifyReport {
+            verdict,
+            layers,
+            stopwatch,
+            total: Duration::from_secs_f64(num_field(doc, "total_secs")?.max(0.0)),
+        })
+    }
+
+    /// Parse a JSON string produced by [`VerifyReport::to_json_string`].
+    pub fn from_json_str(text: &str) -> Result<VerifyReport> {
+        VerifyReport::from_json(&Json::parse(text)?)
+    }
+}
 
 /// A simple aligned text table with optional CSV dump.
 pub struct Table {
@@ -72,6 +267,48 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn verify_report_json_round_trips() {
+        let report = VerifyReport {
+            verdict: Verdict::Unverified {
+                discrepancies: vec![Discrepancy {
+                    dist_node: crate::ir::NodeId(17),
+                    site: "attention.py:42".into(),
+                    func: "flash_decoding".into(),
+                    expr: "all_reduce(x)".into(),
+                    reason: "no relation derived".into(),
+                    layer: Some(3),
+                }],
+            },
+            layers: vec![LayerReport {
+                layer: 3,
+                verified: false,
+                memoized: false,
+                egraph_nodes: 120,
+                facts: 44,
+                duration: Duration::from_millis(7),
+            }],
+            stopwatch: {
+                let mut sw = crate::util::Stopwatch::new();
+                sw.record("partition", Duration::from_millis(1));
+                sw.record("verify-layers", Duration::from_millis(6));
+                sw
+            },
+            total: Duration::from_millis(8),
+        };
+        let text = report.to_json_string();
+        let back = VerifyReport::from_json_str(&text).unwrap();
+        assert_eq!(back.verdict.status(), report.verdict.status());
+        assert_eq!(back.verified(), report.verified());
+        assert_eq!(back.discrepancies().len(), 1);
+        assert_eq!(back.discrepancies()[0].site, "attention.py:42");
+        assert_eq!(back.discrepancies()[0].layer, Some(3));
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].egraph_nodes, 120);
+        assert_eq!(back.total, report.total);
+        assert_eq!(back.stopwatch.phases().count(), 2);
+    }
 
     #[test]
     fn renders_aligned() {

@@ -5,9 +5,11 @@
 
 pub mod prng;
 pub mod intern;
+pub mod pool;
 pub mod timer;
 
 pub use intern::{Interner, Sym};
+pub use pool::WorkerPool;
 pub use prng::Prng;
 pub use timer::Stopwatch;
 

@@ -1,0 +1,136 @@
+//! A small reusable worker pool.
+//!
+//! The verifier's speculative parallel pass used to spawn fresh scoped
+//! threads on every `verify` call; a [`crate::verifier::Session`] instead
+//! owns one `WorkerPool` for its whole lifetime, so repeated calls reuse
+//! warm threads. Jobs are `'static` closures (slices travel behind `Arc`),
+//! and [`WorkerPool::run_all`] preserves submission order in its results.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of long-lived worker threads.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx: Arc<Mutex<Receiver<Job>>> = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("scalify-worker-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only while receiving, not while running
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break,
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run every job on the pool and return their results in submission
+    /// order. Blocks until all jobs finish; a panicking job is re-raised
+    /// here (on the caller), not in the worker.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (res_tx, res_rx) = channel::<(usize, std::thread::Result<T>)>();
+        let pool_tx = self.tx.as_ref().expect("pool already shut down");
+        for (i, job) in jobs.into_iter().enumerate() {
+            let res_tx = res_tx.clone();
+            pool_tx
+                .send(Box::new(move || {
+                    let out = catch_unwind(AssertUnwindSafe(job));
+                    // receiver only disappears if the caller itself died
+                    let _ = res_tx.send((i, out));
+                }))
+                .expect("worker pool hung up");
+        }
+        drop(res_tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = res_rx.recv().expect("worker pool hung up");
+            match out {
+                Ok(v) => results[i] = Some(v),
+                Err(panic) => resume_unwind(panic),
+            }
+        }
+        results.into_iter().map(|r| r.expect("missing job result")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // closing the channel wakes every worker with RecvError
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_jobs_in_submission_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..32).map(|i| move || i * 2).collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let pool = WorkerPool::new(2);
+        for round in 0..3 {
+            let jobs: Vec<_> = (0..8).map(|i| move || i + round).collect();
+            assert_eq!(pool.run_all(jobs).len(), 8);
+        }
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.run_all(vec![|| 41 + 1]), vec![42]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn job_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            vec![Box::new(|| 1), Box::new(|| panic!("boom"))];
+        pool.run_all(jobs);
+    }
+}

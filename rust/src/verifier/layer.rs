@@ -2,7 +2,7 @@
 //! saturate, propagate relations to fixpoint, check boundary outputs.
 
 use super::boundary::{summarize, RelSummary};
-use crate::egraph::{EGraph, ENode, Id, RunLimits, Runner};
+use crate::egraph::{EGraph, ENode, Id, RuleSet, RunLimits, Runner};
 use crate::ir::{NodeId, Op};
 use crate::localize::{frontier, Discrepancy};
 use crate::partition::LayerSlice;
@@ -89,12 +89,13 @@ fn register_slice(eg: &mut EGraph, slice: &LayerSlice, side: &str, distributed: 
     map
 }
 
-/// Verify one layer pair.
+/// Verify one layer pair using a pre-compiled rewrite-template set.
 pub fn verify_layer(
     bslice: &LayerSlice,
     dslice: &LayerSlice,
     input_rels: &[(usize, usize, RelSummary)],
     cores: u32,
+    rules: &RuleSet,
     limits: RunLimits,
     max_rounds: usize,
 ) -> LayerOutcome {
@@ -127,8 +128,7 @@ pub fn verify_layer(
     }
 
     // ---- saturate + propagate to fixpoint ----
-    let rules = crate::egraph::default_rules();
-    let runner = Runner::new(&rules, limits);
+    let runner = Runner::new(rules.rules(), limits);
     let mut exhausted = false;
     let mut outcomes: Vec<StepOutcome> = vec![StepOutcome::NotReady; dslice.graph.len()];
     for _round in 0..max_rounds {

@@ -8,22 +8,28 @@
 //!     propagate output relations to the next layer
 //! on failure: localize the discrepancy frontier   (§5.3)
 //! ```
+//!
+//! The public entrypoint is [`Session`]: a persistent engine that keeps
+//! the compiled rewrite templates, the cross-run layer memo and a worker
+//! pool alive across `verify` calls. The one-shot [`Verifier`] remains as
+//! a deprecated shim for one release.
 
 pub mod boundary;
 pub mod layer;
 mod pair;
+mod session;
 
 use crate::egraph::RunLimits;
+use crate::error::{Result, ScalifyError};
 use crate::localize::Discrepancy;
-use crate::partition::{extract_layers, fingerprint_pair, LayerMemo};
-use crate::partition::{LayerSlice};
 use crate::util::{fmt_duration, Stopwatch};
-use boundary::RelSummary;
 pub use pair::GraphPair;
-use rustc_hash::FxHashMap;
-use std::time::Instant;
+pub use session::{Session, SessionStats};
 
 /// Verifier configuration (the Figure-12 ablation toggles live here).
+///
+/// Construct via [`VerifyConfig::builder`] for validated configs, or use
+/// the struct literal / [`Default`] for trusted in-process callers.
 #[derive(Clone, Debug)]
 pub struct VerifyConfig {
     /// Partition along layer boundaries (off = whole-graph e-graph; expect
@@ -51,6 +57,100 @@ impl Default for VerifyConfig {
             limits: RunLimits::default(),
             max_rounds: 8,
         }
+    }
+}
+
+impl VerifyConfig {
+    /// Start a validated configuration builder.
+    pub fn builder() -> VerifyConfigBuilder {
+        VerifyConfigBuilder { cfg: VerifyConfig::default() }
+    }
+}
+
+/// Builder for [`VerifyConfig`]; `build` validates the combination and
+/// returns a typed [`ScalifyError::Config`] on nonsense inputs.
+#[derive(Clone, Debug)]
+pub struct VerifyConfigBuilder {
+    cfg: VerifyConfig,
+}
+
+impl VerifyConfigBuilder {
+    /// Partition along layer boundaries.
+    pub fn partition(mut self, on: bool) -> Self {
+        self.cfg.partition = on;
+        self
+    }
+
+    /// Verify independent layer pairs on worker threads.
+    pub fn parallel(mut self, on: bool) -> Self {
+        self.cfg.parallel = on;
+        self
+    }
+
+    /// Memoize layer results by structural fingerprint.
+    pub fn memoize(mut self, on: bool) -> Self {
+        self.cfg.memoize = on;
+        self
+    }
+
+    /// Worker-thread count (must be 1..=1024).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// E-graph saturation budgets per layer.
+    pub fn limits(mut self, limits: RunLimits) -> Self {
+        self.cfg.limits = limits;
+        self
+    }
+
+    /// Maximum rewrite iterations per saturation run.
+    pub fn max_iters(mut self, iters: usize) -> Self {
+        self.cfg.limits.max_iters = iters;
+        self
+    }
+
+    /// E-node budget per layer e-graph.
+    pub fn max_nodes(mut self, nodes: usize) -> Self {
+        self.cfg.limits.max_nodes = nodes;
+        self
+    }
+
+    /// Relation-propagation fixpoint rounds per layer.
+    pub fn max_rounds(mut self, rounds: usize) -> Self {
+        self.cfg.max_rounds = rounds;
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(self) -> Result<VerifyConfig> {
+        let c = &self.cfg;
+        if c.threads == 0 {
+            return Err(ScalifyError::config("threads must be >= 1"));
+        }
+        if c.threads > 1024 {
+            return Err(ScalifyError::config(format!(
+                "threads = {} is not a sane worker count (max 1024)",
+                c.threads
+            )));
+        }
+        if c.limits.max_iters == 0 {
+            return Err(ScalifyError::config("limits.max_iters must be >= 1"));
+        }
+        if c.limits.max_nodes == 0 {
+            return Err(ScalifyError::config("limits.max_nodes must be >= 1"));
+        }
+        if c.max_rounds == 0 {
+            return Err(ScalifyError::config("max_rounds must be >= 1"));
+        }
+        if c.parallel && !c.partition {
+            return Err(ScalifyError::config(
+                "parallel layer verification requires partitioning (there is only one \
+                 whole-graph task without it)",
+            ));
+        }
+        Ok(self.cfg)
     }
 }
 
@@ -135,260 +235,34 @@ impl VerifyReport {
     }
 }
 
-/// The verifier.
+/// One-shot verifier over an owned [`Session`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Session`, which reuses compiled rewrite templates, the layer memo and the \
+            worker pool across `verify` calls and reports typed errors instead of panicking"
+)]
 pub struct Verifier {
-    cfg: VerifyConfig,
+    session: Session,
 }
 
+#[allow(deprecated)]
 impl Verifier {
     /// New verifier with `cfg`.
     pub fn new(cfg: VerifyConfig) -> Verifier {
-        Verifier { cfg }
+        Verifier { session: Session::new(cfg) }
     }
 
     /// Verify a baseline/distributed graph pair.
+    ///
+    /// # Panics
+    /// Panics on malformed pairs (the historical behavior);
+    /// [`Session::verify`] returns a typed error instead.
     pub fn verify_pair(&self, pair: &GraphPair) -> VerifyReport {
-        let start = Instant::now();
-        let mut sw = Stopwatch::new();
-
-        // ---- partitioning ----
-        let (base_layers, dist_layers) = sw.time("partition", || {
-            if self.cfg.partition {
-                (extract_layers(&pair.base), extract_layers(&pair.dist))
-            } else {
-                (whole_graph_slice(&pair.base), whole_graph_slice(&pair.dist))
-            }
-        });
-
-        // annotation map: dist param orig id -> (base orig id, summary)
-        let mut boundary: FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)> =
-            FxHashMap::default();
-        for a in &pair.annotations {
-            let rel = match &a.relation {
-                crate::ir::InputRelation::ShardAlong { dim, parts } => {
-                    RelSummary::Sharded { dim: *dim, parts: *parts }
-                }
-                crate::ir::InputRelation::Replicated => RelSummary::Duplicate,
-                crate::ir::InputRelation::DeviceIds => continue,
-            };
-            if let Some(b) = a.baseline {
-                boundary.insert(a.distributed, (b, rel));
-            }
+        match self.session.verify(pair) {
+            Ok(report) => report,
+            Err(e) => panic!("verify_pair on malformed input: {e}"),
         }
-
-        // pair layers by tag, in dist order
-        let base_by_tag: FxHashMap<u32, &LayerSlice> =
-            base_layers.iter().map(|l| (l.layer, l)).collect();
-
-        let mut reports = Vec::new();
-        let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
-        let mut memo = LayerMemo::new();
-        let mut exhausted: Option<String> = None;
-
-        // ---- optional speculative parallel pass ----
-        // Boundary relations between transformer layers are almost always
-        // the same as the layer's own input relation (the residual stream
-        // keeps its placement). Speculatively verify all layer pairs in
-        // parallel assuming `Duplicate` for unknown boundaries; the
-        // sequential pass reuses a speculation hit whenever the exact
-        // boundary relations match what was speculated.
-        let mut speculated: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
-            FxHashMap::default();
-        if self.cfg.parallel && self.cfg.partition && dist_layers.len() > 1 {
-            sw.time("parallel-rewrite", || {
-                speculated = self.speculative_pass(&dist_layers, &base_by_tag, &boundary);
-            });
-        }
-
-        // ---- sequential pass with exact boundary propagation ----
-        sw.time("verify-layers", || {
-            for dslice in &dist_layers {
-                let Some(bslice) = base_by_tag.get(&dslice.layer) else {
-                    all_discrepancies.push(Discrepancy {
-                        dist_node: crate::ir::NodeId(0),
-                        site: String::new(),
-                        func: String::new(),
-                        expr: format!("layer {}", dslice.layer),
-                        reason: "layer missing from baseline graph".into(),
-                        layer: Some(dslice.layer),
-                    });
-                    continue;
-                };
-                let t0 = Instant::now();
-                let input_rels = layer::collect_input_rels(bslice, dslice, &boundary);
-                let fp = fingerprint_pair(bslice, dslice, &input_rels, pair.dist.num_cores);
-                let spec_hit = speculated
-                    .get(&dslice.layer)
-                    .filter(|(rels, o)| rels == &input_rels && o.verified)
-                    .map(|(_, o)| o.clone());
-                let (outcome, memoized) = match (spec_hit, self.cfg.memoize, memo.get(fp)) {
-                    (Some(o), _, _) => (o, true),
-                    (None, true, Some(entry)) if entry.verified => (
-                        layer::LayerOutcome {
-                            verified: true,
-                            out_rels: entry.out_rels.clone(),
-                            discrepancies: vec![],
-                            egraph_nodes: entry.egraph_nodes,
-                            facts: 0,
-                            exhausted: false,
-                        },
-                        true,
-                    ),
-                    _ => {
-                        let o = layer::verify_layer(
-                            bslice,
-                            dslice,
-                            &input_rels,
-                            pair.dist.num_cores,
-                            self.cfg.limits,
-                            self.cfg.max_rounds,
-                        );
-                        if self.cfg.memoize && o.verified {
-                            memo.put(
-                                fp,
-                                crate::partition::fingerprint::MemoEntry {
-                                    verified: o.verified,
-                                    out_rels: o.out_rels.clone(),
-                                    egraph_nodes: o.egraph_nodes,
-                                },
-                            );
-                        }
-                        (o, false)
-                    }
-                };
-                if outcome.exhausted {
-                    exhausted = Some(format!("layer {}", dslice.layer));
-                }
-                // propagate boundary output relations
-                for (k, rel) in outcome.out_rels.iter().enumerate() {
-                    if let (Some(&b), Some(&d)) =
-                        (bslice.boundary_outputs.get(k), dslice.boundary_outputs.get(k))
-                    {
-                        boundary.insert(d, (b, rel.clone()));
-                    }
-                }
-                all_discrepancies.extend(outcome.discrepancies.iter().cloned());
-                reports.push(LayerReport {
-                    layer: dslice.layer,
-                    verified: outcome.verified,
-                    memoized,
-                    egraph_nodes: outcome.egraph_nodes,
-                    facts: outcome.facts,
-                    duration: t0.elapsed(),
-                });
-            }
-        });
-
-        let verdict = if let Some(at) = exhausted {
-            Verdict::ResourceExhausted { at }
-        } else if reports.iter().all(|r| r.verified) && all_discrepancies.is_empty() {
-            Verdict::Verified
-        } else {
-            Verdict::Unverified { discrepancies: all_discrepancies }
-        };
-        VerifyReport { verdict, layers: reports, stopwatch: sw, total: start.elapsed() }
     }
-
-    /// Speculative parallel layer verification. When memoization is on,
-    /// distinct layer structures are verified once (fingerprint dedup);
-    /// when off, every layer pair is verified, but in parallel.
-    fn speculative_pass(
-        &self,
-        dist_layers: &[LayerSlice],
-        base_by_tag: &FxHashMap<u32, &LayerSlice>,
-        boundary: &FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)>,
-    ) -> FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> {
-        let cfg = &self.cfg;
-        let mut jobs: Vec<(u32, &LayerSlice, &LayerSlice, Vec<(usize, usize, RelSummary)>)> =
-            Vec::new();
-        let mut seen = rustc_hash::FxHashMap::default(); // fp -> first tag
-        let mut alias: Vec<(u32, u64)> = Vec::new();
-        for d in dist_layers {
-            let Some(b) = base_by_tag.get(&d.layer) else { continue };
-            let rels = layer::collect_input_rels_speculative(b, d, boundary);
-            if cfg.memoize {
-                let fp = fingerprint_pair(b, d, &rels, d.graph.num_cores);
-                if let Some(&_first) = seen.get(&fp) {
-                    alias.push((d.layer, fp));
-                    continue;
-                }
-                seen.insert(fp, d.layer);
-                alias.push((d.layer, fp));
-            }
-            jobs.push((d.layer, b, d, rels));
-        }
-        let cores = jobs.first().map(|(_, _, d, _)| d.graph.num_cores).unwrap_or(1);
-        let results: Vec<(u32, Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
-            if cfg.threads <= 1 || jobs.len() <= 1 {
-                jobs.into_iter()
-                    .map(|(tag, b, d, rels)| {
-                        let o = layer::verify_layer(b, d, &rels, cores, cfg.limits, cfg.max_rounds);
-                        (tag, rels, o)
-                    })
-                    .collect()
-            } else {
-                let chunk =
-                    crate::util::ceil_div(jobs.len() as i64, cfg.threads as i64).max(1) as usize;
-                let mut out = Vec::new();
-                std::thread::scope(|scope| {
-                    let mut handles = Vec::new();
-                    for batch in jobs.chunks(chunk) {
-                        let batch: Vec<_> = batch.to_vec();
-                        handles.push(scope.spawn(move || {
-                            batch
-                                .into_iter()
-                                .map(|(tag, b, d, rels)| {
-                                    let o = layer::verify_layer(
-                                        b,
-                                        d,
-                                        &rels,
-                                        cores,
-                                        cfg.limits,
-                                        cfg.max_rounds,
-                                    );
-                                    (tag, rels, o)
-                                })
-                                .collect::<Vec<_>>()
-                        }));
-                    }
-                    for h in handles {
-                        out.extend(h.join().expect("worker panicked"));
-                    }
-                });
-                out
-            };
-        let mut by_tag: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
-            results.into_iter().map(|(t, r, o)| (t, (r, o))).collect();
-        // fingerprint aliases: replay the representative result on every
-        // identical layer (memoization across the speculative pool)
-        if cfg.memoize {
-            let mut fp_result: FxHashMap<u64, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
-                FxHashMap::default();
-            for (tag, fp) in &alias {
-                if let Some(v) = by_tag.get(tag) {
-                    fp_result.insert(*fp, v.clone());
-                }
-            }
-            for (tag, fp) in &alias {
-                if !by_tag.contains_key(tag) {
-                    if let Some(v) = fp_result.get(fp) {
-                        by_tag.insert(*tag, v.clone());
-                    }
-                }
-            }
-        }
-        by_tag
-    }
-}
-
-
-/// Whole graph as a single pseudo-layer (partitioning disabled).
-fn whole_graph_slice(g: &crate::ir::Graph) -> Vec<LayerSlice> {
-    let mut g2 = g.clone();
-    for n in g2.nodes.iter_mut() {
-        n.meta.layer = None;
-    }
-    extract_layers(&g2)
 }
 
 #[cfg(test)]

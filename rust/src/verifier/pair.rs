@@ -24,6 +24,19 @@ impl GraphPair {
         GraphPair { base, dist, annotations }
     }
 
+    /// Construct from untrusted input: structural validation failures are
+    /// typed [`crate::error::ScalifyError::ModelSpec`] errors instead of
+    /// (debug-only) panics.
+    pub fn try_new(
+        base: Graph,
+        dist: Graph,
+        annotations: Vec<Annotation>,
+    ) -> crate::error::Result<GraphPair> {
+        base.validate().map_err(|e| e.context("baseline graph"))?;
+        dist.validate().map_err(|e| e.context("distributed graph"))?;
+        Ok(GraphPair { base, dist, annotations })
+    }
+
     /// Total node count across both graphs.
     pub fn total_nodes(&self) -> usize {
         self.base.len() + self.dist.len()

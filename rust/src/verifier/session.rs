@@ -1,0 +1,453 @@
+//! The persistent verification engine.
+//!
+//! A [`Session`] is the service-shaped entrypoint of Scalify: it owns
+//! state that is expensive to build and profitable to reuse across many
+//! `verify` calls —
+//!
+//! * the **compiled rewrite-template set** ([`crate::egraph::RuleSet`]),
+//!   built once and shared via `Arc` with every worker,
+//! * a **cross-run layer memo** ([`LayerMemo`]): layers are keyed by
+//!   structural fingerprint, so a second Llama config or a second
+//!   parallelism variant replays every structurally-identical layer
+//!   instead of re-verifying it, and
+//! * a **reusable worker pool** ([`WorkerPool`]) for the speculative
+//!   parallel pass, so threads are spawned once per session rather than
+//!   once per call.
+//!
+//! Continuous verification alongside a training pipeline is the intended
+//! shape (TTrace-style); `verify` takes `&self` and is safe to call from
+//! multiple threads.
+
+use super::boundary::RelSummary;
+use super::{layer, LayerReport, Verdict, VerifyConfig, VerifyReport};
+use crate::egraph::RuleSet;
+use crate::error::{Result, ScalifyError};
+use crate::localize::Discrepancy;
+use crate::partition::{extract_layers, fingerprint_pair, LayerMemo, LayerSlice, MemoEntry};
+use crate::util::{Stopwatch, WorkerPool};
+use crate::verifier::GraphPair;
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Aggregate statistics of a session's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct SessionStats {
+    /// `verify` calls served.
+    pub runs: usize,
+    /// Distinct layer fingerprints memoized.
+    pub memo_entries: usize,
+    /// Layer verifications served from the memo.
+    pub memo_hits: usize,
+    /// Layer verifications computed and inserted.
+    pub memo_misses: usize,
+    /// Compiled rewrite templates.
+    pub templates: usize,
+    /// Worker threads owned by the pool (0 when the session is sequential).
+    pub threads: usize,
+}
+
+/// Persistent verification engine; see the module docs.
+pub struct Session {
+    cfg: VerifyConfig,
+    rules: Arc<RuleSet>,
+    memo: Mutex<LayerMemo>,
+    pool: Option<WorkerPool>,
+    runs: AtomicUsize,
+}
+
+impl Session {
+    /// New session owning compiled templates, an empty memo and (when the
+    /// config enables parallelism) a worker pool.
+    pub fn new(cfg: VerifyConfig) -> Session {
+        let pool = if cfg.parallel && cfg.threads > 1 {
+            Some(WorkerPool::new(cfg.threads))
+        } else {
+            None
+        };
+        Session {
+            rules: Arc::new(RuleSet::compile()),
+            memo: Mutex::new(LayerMemo::new()),
+            pool,
+            runs: AtomicUsize::new(0),
+            cfg,
+        }
+    }
+
+    /// Session with the default configuration.
+    pub fn with_default_config() -> Session {
+        Session::new(VerifyConfig::default())
+    }
+
+    /// The session configuration.
+    pub fn config(&self) -> &VerifyConfig {
+        &self.cfg
+    }
+
+    /// The shared compiled rewrite-template set.
+    pub fn rules(&self) -> &Arc<RuleSet> {
+        &self.rules
+    }
+
+    /// Lifetime statistics (runs, memo reuse, pool size).
+    pub fn stats(&self) -> SessionStats {
+        let memo = self.memo.lock().expect("memo lock");
+        SessionStats {
+            runs: self.runs.load(Ordering::Relaxed),
+            memo_entries: memo.len(),
+            memo_hits: memo.hits,
+            memo_misses: memo.misses,
+            templates: self.rules.len(),
+            threads: self.pool.as_ref().map(|p| p.threads()).unwrap_or(0),
+        }
+    }
+
+    /// Drop every memoized layer result (e.g. after a rule-set change in a
+    /// long-lived service).
+    pub fn clear_memo(&self) {
+        self.memo.lock().expect("memo lock").clear();
+    }
+
+    /// Verify a baseline/distributed graph pair.
+    ///
+    /// Unlike the deprecated `Verifier::verify_pair`, malformed input is a
+    /// typed [`ScalifyError`] instead of a panic, and repeated calls reuse
+    /// the session's templates, memo and workers.
+    pub fn verify(&self, pair: &GraphPair) -> Result<VerifyReport> {
+        self.validate_pair(pair)?;
+        self.runs.fetch_add(1, Ordering::Relaxed);
+
+        let start = Instant::now();
+        let mut sw = Stopwatch::new();
+
+        // ---- partitioning ----
+        let (base_layers, dist_layers) = sw.time("partition", || {
+            if self.cfg.partition {
+                (extract_layers(&pair.base), extract_layers(&pair.dist))
+            } else {
+                (whole_graph_slice(&pair.base), whole_graph_slice(&pair.dist))
+            }
+        });
+        let base_layers = Arc::new(base_layers);
+        let dist_layers = Arc::new(dist_layers);
+
+        // annotation map: dist param orig id -> (base orig id, summary)
+        let mut boundary: FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)> =
+            FxHashMap::default();
+        for a in &pair.annotations {
+            let rel = match &a.relation {
+                crate::ir::InputRelation::ShardAlong { dim, parts } => {
+                    RelSummary::Sharded { dim: *dim, parts: *parts }
+                }
+                crate::ir::InputRelation::Replicated => RelSummary::Duplicate,
+                crate::ir::InputRelation::DeviceIds => continue,
+            };
+            if let Some(b) = a.baseline {
+                boundary.insert(a.distributed, (b, rel));
+            }
+        }
+
+        // pair layers by tag, in dist order
+        let base_idx_by_tag: FxHashMap<u32, usize> =
+            base_layers.iter().enumerate().map(|(i, l)| (l.layer, i)).collect();
+
+        // ---- optional speculative parallel pass ----
+        // Boundary relations between transformer layers are almost always
+        // the same as the layer's own input relation (the residual stream
+        // keeps its placement). Speculatively verify all layer pairs in
+        // parallel assuming `Duplicate` for unknown boundaries; the
+        // sequential pass reuses a speculation hit whenever the exact
+        // boundary relations match what was speculated.
+        let mut speculated: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+            FxHashMap::default();
+        if self.cfg.parallel && self.cfg.partition && dist_layers.len() > 1 {
+            sw.time("parallel-rewrite", || {
+                speculated = self.speculative_pass(
+                    &base_layers,
+                    &dist_layers,
+                    &base_idx_by_tag,
+                    &boundary,
+                );
+            });
+        }
+
+        // ---- sequential pass with exact boundary propagation ----
+        let mut reports = Vec::new();
+        let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
+        let mut exhausted: Option<String> = None;
+        sw.time("verify-layers", || {
+            for dslice in dist_layers.iter() {
+                let Some(bslice) =
+                    base_idx_by_tag.get(&dslice.layer).map(|&i| &base_layers[i])
+                else {
+                    all_discrepancies.push(Discrepancy {
+                        dist_node: crate::ir::NodeId(0),
+                        site: String::new(),
+                        func: String::new(),
+                        expr: format!("layer {}", dslice.layer),
+                        reason: "layer missing from baseline graph".into(),
+                        layer: Some(dslice.layer),
+                    });
+                    continue;
+                };
+                let t0 = Instant::now();
+                let input_rels = layer::collect_input_rels(bslice, dslice, &boundary);
+                let fp = fingerprint_pair(bslice, dslice, &input_rels, pair.dist.num_cores);
+                let spec_hit = speculated
+                    .get(&dslice.layer)
+                    .filter(|(rels, o)| rels == &input_rels && o.verified)
+                    .map(|(_, o)| o.clone());
+                // the memo lock is taken per lookup/insert, never across a
+                // verify_layer call, so concurrent `verify` callers on the
+                // same session interleave instead of serializing
+                let memo_entry = if self.cfg.memoize && spec_hit.is_none() {
+                    self.memo.lock().expect("memo lock").get(fp)
+                } else {
+                    None
+                };
+                let (outcome, memoized) = match (spec_hit, self.cfg.memoize, memo_entry) {
+                    (Some(o), memoize, _) => {
+                        // a speculative result must land in the cross-run
+                        // memo too, or a parallel first run leaves the
+                        // session cold for every later run
+                        if memoize && o.verified {
+                            let mut memo = self.memo.lock().expect("memo lock");
+                            if !memo.contains_verified(fp) {
+                                memo.put(
+                                    fp,
+                                    MemoEntry {
+                                        verified: o.verified,
+                                        out_rels: o.out_rels.clone(),
+                                        egraph_nodes: o.egraph_nodes,
+                                    },
+                                );
+                            }
+                        }
+                        (o, true)
+                    }
+                    (None, true, Some(entry)) if entry.verified => (
+                        layer::LayerOutcome {
+                            verified: true,
+                            out_rels: entry.out_rels.clone(),
+                            discrepancies: vec![],
+                            egraph_nodes: entry.egraph_nodes,
+                            facts: 0,
+                            exhausted: false,
+                        },
+                        true,
+                    ),
+                    _ => {
+                        let o = layer::verify_layer(
+                            bslice,
+                            dslice,
+                            &input_rels,
+                            pair.dist.num_cores,
+                            &self.rules,
+                            self.cfg.limits,
+                            self.cfg.max_rounds,
+                        );
+                        if self.cfg.memoize && o.verified {
+                            self.memo.lock().expect("memo lock").put(
+                                fp,
+                                MemoEntry {
+                                    verified: o.verified,
+                                    out_rels: o.out_rels.clone(),
+                                    egraph_nodes: o.egraph_nodes,
+                                },
+                            );
+                        }
+                        (o, false)
+                    }
+                };
+                if outcome.exhausted {
+                    exhausted = Some(format!("layer {}", dslice.layer));
+                }
+                // propagate boundary output relations
+                for (k, rel) in outcome.out_rels.iter().enumerate() {
+                    if let (Some(&b), Some(&d)) =
+                        (bslice.boundary_outputs.get(k), dslice.boundary_outputs.get(k))
+                    {
+                        boundary.insert(d, (b, rel.clone()));
+                    }
+                }
+                all_discrepancies.extend(outcome.discrepancies.iter().cloned());
+                reports.push(LayerReport {
+                    layer: dslice.layer,
+                    verified: outcome.verified,
+                    memoized,
+                    egraph_nodes: outcome.egraph_nodes,
+                    facts: outcome.facts,
+                    duration: t0.elapsed(),
+                });
+            }
+        });
+
+        let verdict = if let Some(at) = exhausted {
+            Verdict::ResourceExhausted { at }
+        } else if reports.iter().all(|r| r.verified) && all_discrepancies.is_empty() {
+            Verdict::Verified
+        } else {
+            Verdict::Unverified { discrepancies: all_discrepancies }
+        };
+        Ok(VerifyReport { verdict, layers: reports, stopwatch: sw, total: start.elapsed() })
+    }
+
+    /// Typed validation of a pair before any work is done (the one-shot
+    /// API's `debug_assert!`s, promoted to real errors).
+    fn validate_pair(&self, pair: &GraphPair) -> Result<()> {
+        pair.base.validate().map_err(|e| e.context("baseline graph"))?;
+        pair.dist.validate().map_err(|e| e.context("distributed graph"))?;
+        if pair.dist.num_cores == 0 {
+            return Err(ScalifyError::model_spec("distributed graph declares 0 cores"));
+        }
+        for a in &pair.annotations {
+            if a.distributed.idx() >= pair.dist.len() {
+                return Err(ScalifyError::model_spec(format!(
+                    "annotation names distributed node {} but the graph has {} nodes",
+                    a.distributed.0,
+                    pair.dist.len()
+                )));
+            }
+            if let Some(b) = a.baseline {
+                if b.idx() >= pair.base.len() {
+                    return Err(ScalifyError::model_spec(format!(
+                        "annotation names baseline node {} but the graph has {} nodes",
+                        b.0,
+                        pair.base.len()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Speculative parallel layer verification on the session pool. When
+    /// memoization is on, distinct layer structures are verified once
+    /// (fingerprint dedup) and layers the cross-run memo can already serve
+    /// are skipped entirely; when off, every layer pair is verified.
+    fn speculative_pass(
+        &self,
+        base_layers: &Arc<Vec<LayerSlice>>,
+        dist_layers: &Arc<Vec<LayerSlice>>,
+        base_idx_by_tag: &FxHashMap<u32, usize>,
+        boundary: &FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)>,
+    ) -> FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> {
+        type SpecJob = (u32, usize, usize, Vec<(usize, usize, RelSummary)>);
+        let cfg = &self.cfg;
+        let mut jobs: Vec<SpecJob> = Vec::new();
+        let mut seen: FxHashMap<u64, u32> = FxHashMap::default(); // fp -> first tag
+        let mut alias: Vec<(u32, u64)> = Vec::new();
+        {
+            // one lock for the whole (cheap) job-collection scan, released
+            // before any verification work starts
+            let memo = self.memo.lock().expect("memo lock");
+            for (di, d) in dist_layers.iter().enumerate() {
+                let Some(&bi) = base_idx_by_tag.get(&d.layer) else { continue };
+                let b = &base_layers[bi];
+                let rels = layer::collect_input_rels_speculative(b, d, boundary);
+                if cfg.memoize {
+                    let fp = fingerprint_pair(b, d, &rels, d.graph.num_cores);
+                    // cross-run warm start: the sequential pass will serve
+                    // this layer straight from the memo — no speculative
+                    // work needed
+                    if memo.contains_verified(fp) {
+                        continue;
+                    }
+                    if seen.contains_key(&fp) {
+                        alias.push((d.layer, fp));
+                        continue;
+                    }
+                    seen.insert(fp, d.layer);
+                    alias.push((d.layer, fp));
+                }
+                jobs.push((d.layer, bi, di, rels));
+            }
+        }
+
+        let run_job = |base: &[LayerSlice],
+                       dist: &[LayerSlice],
+                       rules: &RuleSet,
+                       (tag, bi, di, rels): SpecJob|
+         -> (u32, Vec<(usize, usize, RelSummary)>, layer::LayerOutcome) {
+            let d = &dist[di];
+            let o = layer::verify_layer(
+                &base[bi],
+                d,
+                &rels,
+                d.graph.num_cores,
+                rules,
+                cfg.limits,
+                cfg.max_rounds,
+            );
+            (tag, rels, o)
+        };
+
+        let results: Vec<(u32, Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+            match (&self.pool, jobs.len()) {
+                (Some(pool), n) if n > 1 => {
+                    let limits = cfg.limits;
+                    let max_rounds = cfg.max_rounds;
+                    let closures: Vec<_> = jobs
+                        .into_iter()
+                        .map(|(tag, bi, di, rels)| {
+                            let base = Arc::clone(base_layers);
+                            let dist = Arc::clone(dist_layers);
+                            let rules = Arc::clone(&self.rules);
+                            move || {
+                                let d = &dist[di];
+                                let o = layer::verify_layer(
+                                    &base[bi],
+                                    d,
+                                    &rels,
+                                    d.graph.num_cores,
+                                    &rules,
+                                    limits,
+                                    max_rounds,
+                                );
+                                (tag, rels, o)
+                            }
+                        })
+                        .collect();
+                    pool.run_all(closures)
+                }
+                _ => jobs
+                    .into_iter()
+                    .map(|job| run_job(base_layers, dist_layers, &self.rules, job))
+                    .collect(),
+            };
+
+        let mut by_tag: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
+            results.into_iter().map(|(t, r, o)| (t, (r, o))).collect();
+        // fingerprint aliases: replay the representative result on every
+        // identical layer (memoization across the speculative pool)
+        if cfg.memoize {
+            let mut fp_result: FxHashMap<
+                u64,
+                (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome),
+            > = FxHashMap::default();
+            for (tag, fp) in &alias {
+                if let Some(v) = by_tag.get(tag) {
+                    fp_result.insert(*fp, v.clone());
+                }
+            }
+            for (tag, fp) in &alias {
+                if !by_tag.contains_key(tag) {
+                    if let Some(v) = fp_result.get(fp) {
+                        by_tag.insert(*tag, v.clone());
+                    }
+                }
+            }
+        }
+        by_tag
+    }
+}
+
+/// Whole graph as a single pseudo-layer (partitioning disabled).
+fn whole_graph_slice(g: &crate::ir::Graph) -> Vec<LayerSlice> {
+    let mut g2 = g.clone();
+    for n in g2.nodes.iter_mut() {
+        n.meta.layer = None;
+    }
+    extract_layers(&g2)
+}

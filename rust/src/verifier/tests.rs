@@ -47,14 +47,14 @@ fn matmul_tp_pair(missing_allreduce: bool) -> GraphPair {
 #[test]
 fn tp_matmul_verifies() {
     let pair = matmul_tp_pair(false);
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
 #[test]
 fn missing_allreduce_unverified_and_localized() {
     let pair = matmul_tp_pair(true);
-    let report = Verifier::new(cfg_seq()).verify_pair(&pair);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
     assert!(!report.verified());
     // the partial matmul output is the frontier (its inputs are verified)
     // — localization should not be empty and should carry a source site
@@ -82,7 +82,7 @@ fn redundant_allreduce_detected() {
     let dist = db.finish();
 
     let ann = vec![Annotation::replicated(x, crate::ir::NodeId(0))];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(!report.verified());
 }
 
@@ -103,7 +103,7 @@ fn allgather_restores_duplicate() {
     let dist = db.finish();
 
     let ann = vec![Annotation::shard(x, crate::ir::NodeId(0), 0, 4)];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
@@ -126,7 +126,7 @@ fn wrong_gather_dim_unverified() {
     let dist = db.finish();
 
     let ann = vec![Annotation::shard(x, crate::ir::NodeId(0), 0, 4)];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(!report.verified());
 }
 
@@ -154,7 +154,7 @@ fn reduce_scatter_pipeline_verifies() {
         Annotation::shard(x, crate::ir::NodeId(0), 1, 2),
         Annotation::shard(w, crate::ir::NodeId(1), 0, 2),
     ];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
@@ -183,7 +183,7 @@ fn elementwise_on_shards_verifies() {
         Annotation::replicated(x, crate::ir::NodeId(0)),
         Annotation::shard(w, crate::ir::NodeId(1), 1, 4),
     ];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
@@ -208,7 +208,7 @@ fn bsh_layout_bug_detected() {
     let dist = db.finish();
 
     let ann = vec![Annotation::replicated(crate::ir::NodeId(0), crate::ir::NodeId(0))];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(!report.verified(), "BSH bug must not verify");
 }
 
@@ -229,7 +229,7 @@ fn bsh_correct_version_verifies() {
     let dist = db.finish();
 
     let ann = vec![Annotation::replicated(crate::ir::NodeId(0), crate::ir::NodeId(0))];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
@@ -252,7 +252,7 @@ fn precision_mismatch_detected() {
     let dist = db.finish();
 
     let ann = vec![Annotation::replicated(crate::ir::NodeId(0), crate::ir::NodeId(0))];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(!report.verified(), "precision mismatch must not verify");
     let ds = report.discrepancies();
     assert!(!ds.is_empty());
@@ -294,7 +294,7 @@ fn expert_parallel_unrolled_loop_verifies() {
         Annotation::replicated(x, crate::ir::NodeId(0)),
         Annotation::shard(w, crate::ir::NodeId(1), 0, cores),
     ];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
@@ -396,14 +396,14 @@ fn memoization_hits_identical_layers() {
 
     let pair = trivial_pair(6);
     let cfg = VerifyConfig { parallel: false, memoize: true, ..VerifyConfig::default() };
-    let report = Verifier::new(cfg).verify_pair(&pair);
+    let report = Session::new(cfg).verify(&pair).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
     let memoized = report.layers.iter().filter(|l| l.memoized).count();
     assert!(memoized >= 5, "expected ≥5 memo hits, got {memoized}");
 
     // memoization off → no layer memoized
     let cfg = VerifyConfig { parallel: false, memoize: false, ..VerifyConfig::default() };
-    let report2 = Verifier::new(cfg).verify_pair(&pair);
+    let report2 = Session::new(cfg).verify(&pair).unwrap();
     assert!(report2.verified());
     assert_eq!(report2.layers.iter().filter(|l| l.memoized).count(), 0);
 }
@@ -411,9 +411,10 @@ fn memoization_hits_identical_layers() {
 #[test]
 fn parallel_mode_agrees_with_sequential() {
     let pair = matmul_tp_pair(false);
-    let seq = Verifier::new(cfg_seq()).verify_pair(&pair);
-    let par = Verifier::new(VerifyConfig { parallel: true, ..VerifyConfig::default() })
-        .verify_pair(&pair);
+    let seq = Session::new(cfg_seq()).verify(&pair).unwrap();
+    let par = Session::new(VerifyConfig { parallel: true, ..VerifyConfig::default() })
+        .verify(&pair)
+        .unwrap();
     assert_eq!(seq.verified(), par.verified());
 }
 
@@ -425,7 +426,7 @@ fn resource_exhaustion_reported() {
         limits: crate::egraph::RunLimits { max_iters: 50, max_nodes: 2 },
         ..VerifyConfig::default()
     };
-    let report = Verifier::new(cfg).verify_pair(&pair);
+    let report = Session::new(cfg).verify(&pair).unwrap();
     assert!(matches!(report.verdict, Verdict::ResourceExhausted { .. }));
 }
 
@@ -449,6 +450,6 @@ fn sequence_parallel_rms_norm_style_verifies() {
     let dist = db.finish();
 
     let ann = vec![Annotation::shard(x, crate::ir::NodeId(0), 0, 4)];
-    let report = Verifier::new(cfg_seq()).verify_pair(&GraphPair::new(base, dist, ann));
+    let report = Session::new(cfg_seq()).verify(&GraphPair::new(base, dist, ann)).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }

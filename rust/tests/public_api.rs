@@ -5,8 +5,8 @@ use scalify::prelude::*;
 use scalify::bugs;
 use scalify::modelgen::{llama_pair, mixtral_pair, demo};
 
-fn verifier() -> Verifier {
-    Verifier::new(VerifyConfig::default())
+fn verifier() -> Session {
+    Session::new(VerifyConfig::default())
 }
 
 #[test]
@@ -23,14 +23,14 @@ fn model_matrix_verifies() {
         Parallelism::FlashDecoding { tp: 4 },
     ] {
         let pair = llama_pair(&llama, par);
-        let report = verifier().verify_pair(&pair);
+        let report = verifier().verify(&pair).unwrap();
         assert!(report.verified(), "{}: {:?}", par.label(), report.verdict);
     }
     for ep in [2u32, 4, 8] {
         let mixtral =
             MixtralConfig { layers: 2, hidden: 8, experts: ep as i64, ffn: 8, seqlen: 2, batch: 1 };
         let pair = mixtral_pair(&mixtral, Parallelism::Expert { ep });
-        let report = verifier().verify_pair(&pair);
+        let report = verifier().verify(&pair).unwrap();
         assert!(report.verified(), "ep{ep}: {:?}", report.verdict);
     }
 }
@@ -41,7 +41,7 @@ fn verdicts_are_stable_across_runs() {
     // discrepancy sites
     let case = bugs::reproduced_bugs().into_iter().find(|c| c.id == "T4#13").unwrap();
     let sites = |pair: &GraphPair| -> Vec<String> {
-        let r = verifier().verify_pair(pair);
+        let r = verifier().verify(pair).unwrap();
         r.discrepancies().iter().map(|d| d.site.clone()).collect()
     };
     let a = sites(&(case.build)());
@@ -54,7 +54,7 @@ fn verdicts_are_stable_across_runs() {
 fn layer_reports_expose_memoization() {
     let cfg = LlamaConfig { layers: 6, hidden: 8, heads: 2, ffn: 16, seqlen: 4, batch: 1 };
     let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 2 });
-    let report = verifier().verify_pair(&pair);
+    let report = verifier().verify(&pair).unwrap();
     assert!(report.verified());
     assert!(report.layers.len() >= 6);
     assert!(report.layers.iter().filter(|l| l.memoized).count() >= 5);
@@ -78,13 +78,13 @@ fn graph_pair_survives_hlo_roundtrip_and_verifies() {
         .map(|((b, d), orig)| Annotation { baseline: Some(b), distributed: d, relation: orig.relation.clone() })
         .collect();
     let pair2 = GraphPair::new(base2, dist2, ann);
-    let report = verifier().verify_pair(&pair2);
+    let report = verifier().verify(&pair2).unwrap();
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
 #[test]
 fn discrepancy_rendering_is_actionable() {
-    let report = verifier().verify_pair(&demo::bsh_pair(true));
+    let report = verifier().verify(&demo::bsh_pair(true)).unwrap();
     let ds = report.discrepancies();
     assert!(!ds.is_empty());
     for d in ds {
@@ -114,6 +114,6 @@ fn resource_budget_is_honored() {
         ..Default::default()
     };
     let pair = demo::matmul_allreduce_pair(2);
-    let report = Verifier::new(cfg).verify_pair(&pair);
+    let report = Session::new(cfg).verify(&pair).unwrap();
     assert!(matches!(report.verdict, Verdict::ResourceExhausted { .. }));
 }

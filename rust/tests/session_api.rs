@@ -1,0 +1,193 @@
+//! Integration tests for the session-oriented API: config builder
+//! validation, typed errors, machine-readable reports and cross-run
+//! memo/template reuse.
+
+use scalify::modelgen::{demo, llama_pair, try_llama_pair, try_mixtral_pair, MixtralConfig};
+use scalify::prelude::*;
+use scalify::report::json::Json;
+
+fn tiny_llama() -> LlamaConfig {
+    LlamaConfig { layers: 4, hidden: 16, heads: 4, ffn: 32, seqlen: 8, batch: 2 }
+}
+
+#[test]
+fn builder_accepts_sane_configs() {
+    let cfg = VerifyConfig::builder()
+        .partition(true)
+        .parallel(true)
+        .memoize(true)
+        .threads(8)
+        .max_rounds(4)
+        .max_iters(16)
+        .max_nodes(100_000)
+        .build()
+        .unwrap();
+    assert_eq!(cfg.threads, 8);
+    assert_eq!(cfg.max_rounds, 4);
+    assert_eq!(cfg.limits.max_iters, 16);
+    assert_eq!(cfg.limits.max_nodes, 100_000);
+}
+
+#[test]
+fn builder_rejects_nonsense_with_config_errors() {
+    let cases: Vec<(&str, scalify::error::Result<VerifyConfig>)> = vec![
+        ("threads=0", VerifyConfig::builder().threads(0).build()),
+        ("threads huge", VerifyConfig::builder().threads(1_000_000).build()),
+        ("max_iters=0", VerifyConfig::builder().max_iters(0).build()),
+        ("max_nodes=0", VerifyConfig::builder().max_nodes(0).build()),
+        ("max_rounds=0", VerifyConfig::builder().max_rounds(0).build()),
+        (
+            "parallel without partition",
+            VerifyConfig::builder().partition(false).parallel(true).build(),
+        ),
+    ];
+    for (label, result) in cases {
+        let err = result.expect_err(label);
+        assert!(matches!(err, ScalifyError::Config(_)), "{label}: {err}");
+        assert!(!err.message().is_empty(), "{label}");
+    }
+}
+
+#[test]
+fn error_kinds_display_and_convert() {
+    let e = ScalifyError::parse("bad hlo");
+    assert_eq!(e.to_string(), "parse error: bad hlo");
+    let e = ScalifyError::model_spec("heads must divide tp").context("llama-8b");
+    assert_eq!(e.to_string(), "model-spec error: llama-8b: heads must divide tp");
+    let io: ScalifyError =
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such manifest").into();
+    assert_eq!(io.kind(), "io");
+    // std::error::Error object safety (boxing works for ? in user code)
+    let boxed: Box<dyn std::error::Error> = Box::new(ScalifyError::runtime("pool died"));
+    assert!(boxed.to_string().contains("pool died"));
+}
+
+#[test]
+fn modelgen_validation_is_typed_not_panicking() {
+    let err = try_llama_pair(&tiny_llama(), Parallelism::Tensor { tp: 3 }).unwrap_err();
+    assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+    let err = try_llama_pair(&tiny_llama(), Parallelism::Expert { ep: 2 }).unwrap_err();
+    assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+    let err = try_mixtral_pair(&MixtralConfig::tiny(), Parallelism::Tensor { tp: 2 })
+        .unwrap_err();
+    assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+    // the valid combination still builds
+    let pair = try_llama_pair(&tiny_llama(), Parallelism::Tensor { tp: 2 }).unwrap();
+    assert!(pair.total_nodes() > 0);
+}
+
+#[test]
+fn session_verify_reports_typed_errors_on_bad_annotations() {
+    let mut pair = demo::matmul_allreduce_pair(2);
+    pair.annotations.push(Annotation::replicated(NodeId(0), NodeId(10_000)));
+    let err = Session::new(VerifyConfig::default()).verify(&pair).unwrap_err();
+    assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+}
+
+#[test]
+fn json_report_round_trips_with_same_verdict() {
+    let session = Session::new(VerifyConfig::default());
+
+    // verified report
+    let ok = session.verify(&demo::matmul_allreduce_pair(2)).unwrap();
+    let back = VerifyReport::from_json_str(&ok.to_json_string()).unwrap();
+    assert!(back.verified());
+    assert_eq!(back.verdict.status(), "verified");
+    assert_eq!(back.layers.len(), ok.layers.len());
+
+    // unverified report keeps its discrepancies and localization payload
+    let buggy = session.verify(&demo::bsh_pair(true)).unwrap();
+    assert!(!buggy.verified());
+    let text = buggy.to_json_string();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("unverified"));
+    let back = VerifyReport::from_json(&doc).unwrap();
+    assert_eq!(back.verdict.status(), buggy.verdict.status());
+    assert_eq!(back.discrepancies().len(), buggy.discrepancies().len());
+    assert_eq!(back.discrepancies()[0].site, buggy.discrepancies()[0].site);
+    assert_eq!(back.discrepancies()[0].reason, buggy.discrepancies()[0].reason);
+}
+
+#[test]
+fn session_memo_survives_across_runs() {
+    let session = Session::new(
+        VerifyConfig::builder().parallel(false).threads(1).build().unwrap(),
+    );
+    let pair = llama_pair(&tiny_llama(), Parallelism::Tensor { tp: 2 });
+
+    let first = session.verify(&pair).unwrap();
+    assert!(first.verified(), "{:?}", first.verdict);
+    // sequential first run: identical decoder layers dedup via the memo,
+    // but at least the first layer is computed fresh
+    assert!(first.layers.iter().any(|l| !l.memoized));
+    let stats_after_first = session.stats();
+    assert_eq!(stats_after_first.runs, 1);
+    assert!(stats_after_first.memo_entries > 0);
+
+    // a rebuilt, structurally-identical pair is fully served by the memo
+    let again = llama_pair(&tiny_llama(), Parallelism::Tensor { tp: 2 });
+    let second = session.verify(&again).unwrap();
+    assert!(second.verified());
+    assert!(
+        second.layers.iter().all(|l| l.memoized),
+        "second run must be fully memoized: {:?}",
+        second.layers
+    );
+    let stats = session.stats();
+    assert_eq!(stats.runs, 2);
+    assert!(stats.memo_hits > stats_after_first.memo_hits);
+
+    // a structurally-overlapping config (fewer layers) stays warm too
+    let small = LlamaConfig { layers: 2, ..tiny_llama() };
+    let overlap = session.verify(&llama_pair(&small, Parallelism::Tensor { tp: 2 })).unwrap();
+    assert!(overlap.verified());
+    let decoder_layers_memoized = overlap
+        .layers
+        .iter()
+        .filter(|l| l.layer != u32::MAX && l.memoized)
+        .count();
+    assert!(decoder_layers_memoized >= 2, "{:?}", overlap.layers);
+
+    // clearing the memo makes the next run cold again
+    session.clear_memo();
+    assert_eq!(session.stats().memo_entries, 0);
+    let cold = session.verify(&pair).unwrap();
+    assert!(cold.verified());
+    assert!(cold.layers.iter().any(|l| !l.memoized));
+}
+
+#[test]
+fn parallel_session_reuses_pool_and_memo() {
+    let session = Session::new(
+        VerifyConfig::builder().parallel(true).threads(2).build().unwrap(),
+    );
+    assert_eq!(session.stats().threads, 2);
+    let pair = llama_pair(&tiny_llama(), Parallelism::Tensor { tp: 2 });
+    for round in 0..3 {
+        let report = session.verify(&pair).unwrap();
+        assert!(report.verified(), "round {round}: {:?}", report.verdict);
+    }
+    let stats = session.stats();
+    assert_eq!(stats.runs, 3);
+    assert!(stats.memo_hits > 0);
+    assert!(stats.templates > 0);
+}
+
+#[test]
+fn sessions_are_isolated() {
+    let pair = llama_pair(&tiny_llama(), Parallelism::Tensor { tp: 2 });
+    let a = Session::new(VerifyConfig::default());
+    a.verify(&pair).unwrap();
+    // a fresh session has no memo state from `a`
+    let b = Session::new(VerifyConfig::default());
+    assert_eq!(b.stats().memo_entries, 0);
+    assert_eq!(b.stats().runs, 0);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_verifier_shim_still_works() {
+    let report = Verifier::new(VerifyConfig::default())
+        .verify_pair(&demo::matmul_allreduce_pair(2));
+    assert!(report.verified());
+}
