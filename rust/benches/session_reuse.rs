@@ -59,6 +59,35 @@ fn main() {
     print!("{}", table.render());
     table.save_csv("session_reuse");
 
+    // (5) pipeline case: per-stage/per-layer partitions keep each verify
+    // call's e-graph small — contrast the max layer e-graph against the
+    // single whole-graph e-graph of an unpartitioned run
+    let pipe_cfg = LlamaConfig { layers: 8, ..LlamaConfig::tiny() };
+    let pipe = llama_pair(&pipe_cfg, Parallelism::Pipeline { pp: 4 });
+    let (pipe_report, s5) = time_once("pipeline", || session.verify(&pipe).unwrap());
+    row("pipeline pp4 (8 tiny layers)", &pipe_report, s5.median());
+    let whole_session = Session::new(
+        scalify::verifier::VerifyConfig::builder()
+            .partition(false)
+            .parallel(false)
+            .build()
+            .expect("valid config"),
+    );
+    let (whole_report, s6) = time_once("pipeline-whole", || whole_session.verify(&pipe).unwrap());
+    row("pipeline pp4, no partition", &whole_report, s6.median());
+    let max_layer_egraph =
+        pipe_report.layers.iter().map(|l| l.egraph_nodes).max().unwrap_or(0);
+    let whole_egraph =
+        whole_report.layers.iter().map(|l| l.egraph_nodes).max().unwrap_or(0);
+    println!(
+        "pipeline e-graph size: {max_layer_egraph} max per layer (partitioned) vs \
+         {whole_egraph} whole-graph"
+    );
+    assert!(
+        max_layer_egraph < whole_egraph,
+        "per-stage partitions must shrink the per-call e-graph"
+    );
+
     let stats = session.stats();
     println!(
         "session stats: {} runs, {} memo entries, {} hits, {} misses, {} templates",

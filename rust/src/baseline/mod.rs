@@ -57,8 +57,10 @@ pub fn numerical_verify(pair: &GraphPair, trials: usize, tol: f64, seed: u64) ->
                 }
             }
         };
-        let dist_inputs = shard_inputs(pair, &base_inputs);
-        let dist_out = match run_spmd(&pair.dist, &dist_inputs) {
+        let dist_out = match shard_inputs(pair, &base_inputs)
+            .map_err(|e| e.to_string())
+            .and_then(|ins| run_spmd(&pair.dist, &ins).map_err(|e| e.to_string()))
+        {
             Ok(o) => o,
             Err(_) => {
                 return BaselineReport {
@@ -118,7 +120,7 @@ pub fn per_element_verify(
         // for every element (no sharing across elements — the cost shape
         // of per-element symbolic encodings)
         let base_out = run_single(&pair.base, &base_inputs).expect("baseline eval");
-        let dist_inputs = shard_inputs(pair, &base_inputs);
+        let dist_inputs = shard_inputs(pair, &base_inputs).expect("pair annotations");
         let dist_out = run_spmd(&pair.dist, &dist_inputs).expect("dist eval");
         let dev = base_out[0].max_abs_diff(&dist_out[0][0]);
         max_dev = max_dev.max(dev);

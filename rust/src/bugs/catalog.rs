@@ -4,7 +4,10 @@ use super::mutate::{
     bypass_nodes, in_func, is_op, mutate_ops, nth_match, remap_annotations, wrap_first,
 };
 use crate::ir::{Annotation, DType, GraphBuilder, NodeId, Op, ReplicaGroups, Shape};
-use crate::modelgen::{llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism};
+use crate::modelgen::{
+    dpstep_pair, llama_pair, mixtral_pair, LlamaConfig, MixtralConfig, Parallelism,
+    TrainStepConfig,
+};
 use crate::verifier::GraphPair;
 
 /// Bug category (paper §7.3).
@@ -487,6 +490,121 @@ pub fn reproduced_bugs() -> Vec<BugCase> {
             truth_site: "",
             truth_func: "",
             build: outside_graph_llama,
+        },
+    ]
+}
+
+// ---- pipeline / data-parallel fault builders ----
+
+fn pipeline_pair() -> GraphPair {
+    llama_pair(&LlamaConfig::tiny(), Parallelism::Pipeline { pp: 2 })
+}
+
+fn dp_pair(zero_stage: u8) -> GraphPair {
+    dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Data { dp: 2, zero_stage })
+}
+
+/// Stage-boundary off-by-one: the send at the pipeline boundary reads one
+/// node upstream of the true boundary value (the residual *before* the
+/// MLP add), so the next stage starts from a stale activation.
+fn stage_boundary_off_by_one() -> GraphPair {
+    let mut pair = pipeline_pair();
+    if let Some(s) = nth_match(&pair.dist, |g, id| is_op(g, id, "send"), 0) {
+        let src = pair.dist.node(s).inputs[0];
+        if let Some(&earlier) = pair.dist.node(src).inputs.first() {
+            pair.dist.node_mut(s).inputs[0] = earlier;
+        }
+    }
+    pair
+}
+
+/// Missing gradient all-reduce (ZeRO-0): the data-parallel replicas apply
+/// their local partial gradients without reducing across the mesh.
+fn missing_grad_allreduce() -> GraphPair {
+    let mut pair = dp_pair(0);
+    let t = nth_match(&pair.dist, |g, id| is_op(g, id, "all-reduce"), 0);
+    if let Some(t) = t {
+        bypass_nodes(&mut pair.dist, move |_, id| id == t);
+    }
+    pair
+}
+
+/// Stale ZeRO shard: the gradient reduce-scatter is dropped, so each rank
+/// updates its optimizer-state shard with the unreduced local partial.
+fn stale_zero_shard() -> GraphPair {
+    let mut pair = dp_pair(1);
+    let t = nth_match(&pair.dist, |g, id| is_op(g, id, "reduce-scatter"), 0);
+    if let Some(t) = t {
+        bypass_nodes(&mut pair.dist, move |_, id| id == t);
+    }
+    pair
+}
+
+/// Missing ZeRO-2 parameter gather: the forward matmul consumes the local
+/// weight shard instead of the gathered full weight.
+fn missing_weight_gather() -> GraphPair {
+    let mut pair = dp_pair(2);
+    let t = nth_match(&pair.dist, |g, id| is_op(g, id, "all-gather"), 0);
+    if let Some(t) = t {
+        bypass_nodes(&mut pair.dist, move |_, id| id == t);
+    }
+    pair
+}
+
+/// New catalog cases targeting the pipeline / data-parallel scenario
+/// space the transform engine opened (the dominant bug classes in the
+/// distributed-training bug studies; see PAPERS.md).
+pub fn parallel_transform_bugs() -> Vec<BugCase> {
+    vec![
+        BugCase {
+            id: "PT#1",
+            description: "Pipeline stage boundary off-by-one (stale activation sent)",
+            category: Category::IncorrectDistributedOp,
+            issue: "study:pipeline-boundary",
+            expected: ExpectedLoc::Function,
+            truth_site: "decoder.py:61",
+            truth_func: "decoder_layer",
+            build: stage_boundary_off_by_one,
+        },
+        BugCase {
+            id: "PT#2",
+            description: "Missing gradient all-reduce (ZeRO-0 data parallelism)",
+            category: Category::IncorrectDistributedOp,
+            issue: "study:missing-grad-allreduce",
+            expected: ExpectedLoc::Function,
+            truth_site: "optim.py:12",
+            truth_func: "optimizer_step",
+            build: missing_grad_allreduce,
+        },
+        BugCase {
+            id: "PT#3",
+            description: "Stale ZeRO shard (gradient reduce-scatter dropped)",
+            category: Category::IncorrectDistributedOp,
+            issue: "study:stale-zero-shard",
+            expected: ExpectedLoc::Function,
+            truth_site: "optim.py:12",
+            truth_func: "optimizer_step",
+            build: stale_zero_shard,
+        },
+        BugCase {
+            id: "PT#4",
+            description: "Wrong microbatch split (off-by-one pipeline slice)",
+            category: Category::IncorrectAxisSplit,
+            issue: "study:microbatch-split",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "pipeline.py:40",
+            truth_func: "microbatch_split",
+            build: || crate::modelgen::demo::microbatch_pair(true),
+        },
+        BugCase {
+            id: "PT#5",
+            description: "Missing ZeRO-2 parameter all-gather (forward on a weight shard)",
+            category: Category::IncorrectDistributedOp,
+            issue: "study:missing-param-gather",
+            expected: ExpectedLoc::Function,
+            truth_site: "layers.py:14",
+            truth_func: "forward",
+            build: missing_weight_gather,
         },
     ]
 }

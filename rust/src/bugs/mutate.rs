@@ -69,13 +69,7 @@ pub fn wrap_first(
     let mut build = Some(build);
     for n in &g.nodes {
         let inputs: Vec<NodeId> = n.inputs.iter().map(|i| remap[i]).collect();
-        let meta = Meta {
-            file: out.interner.intern(g.interner.resolve(n.meta.file)),
-            line: n.meta.line,
-            expr: out.interner.intern(g.interner.resolve(n.meta.expr)),
-            func: out.interner.intern(g.interner.resolve(n.meta.func)),
-            layer: n.meta.layer,
-        };
+        let meta = out.import_meta(g, &n.meta);
         let new_id = out.push(n.op.clone(), inputs, n.shape.clone(), meta);
         if Some(n.id) == target {
             let wrapped = (build.take().unwrap())(&mut out, new_id);

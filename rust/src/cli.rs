@@ -17,6 +17,7 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "json",
     "new",
     "reproduced",
+    "transform",
     "no-partition",
     "no-parallel",
     "no-memoize",
@@ -62,27 +63,58 @@ pub fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     Ok(flags)
 }
 
-/// Parse a parallelism spec like `tp32` / `sp8` / `fd4` / `ep8`.
+/// Parse a parallelism spec: `tp32` / `sp8` / `fd4` / `ep8`, the pipeline
+/// and data specs `pp4`, `dp4` / `dp4z2` (ZeRO stage suffix), and the
+/// combined `pp2tp4`.
 pub fn parallelism(spec: &str) -> Result<Parallelism> {
-    let usage = "expected a technique + degree, e.g. tp32, sp32, fd32 or ep8";
-    let (kind, deg): (&str, &str) = ["tp", "sp", "fd", "ep"]
+    let usage = "expected a technique + degree, e.g. tp32, sp32, fd32, ep8, pp4, \
+                 dp4z1 or pp2tp4";
+    let bad = |what: &str| {
+        ScalifyError::config(format!("{what} in '{spec}' ({usage})"))
+    };
+    let parse_deg = |s: &str| -> Result<u32> {
+        let deg: u32 = s.parse().map_err(|_| bad("bad parallelism degree"))?;
+        if deg == 0 {
+            return Err(bad("parallelism degree must be >= 1"));
+        }
+        Ok(deg)
+    };
+    // combined pipeline × tensor: pp<A>tp<B>
+    if let Some(rest) = spec.strip_prefix("pp") {
+        if let Some(tp_at) = rest.find("tp") {
+            let pp = parse_deg(&rest[..tp_at])?;
+            let tp = parse_deg(&rest[tp_at + 2..])?;
+            return Ok(Parallelism::Combined { pp, tp });
+        }
+    }
+    // data parallelism with optional ZeRO stage: dp<N>[z<S>]
+    if let Some(rest) = spec.strip_prefix("dp") {
+        let (deg, zero) = match rest.find('z') {
+            Some(at) => {
+                let stage: u8 = rest[at + 1..]
+                    .parse()
+                    .map_err(|_| bad("bad ZeRO stage"))?;
+                (&rest[..at], stage)
+            }
+            None => (rest, 0u8),
+        };
+        if zero > 2 {
+            return Err(bad("ZeRO stage must be 0, 1 or 2"));
+        }
+        return Ok(Parallelism::Data { dp: parse_deg(deg)?, zero_stage: zero });
+    }
+    let (kind, deg): (&str, &str) = ["tp", "sp", "fd", "ep", "pp"]
         .iter()
         .find_map(|k| spec.strip_prefix(k).map(|rest| (*k, rest)))
         .ok_or_else(|| {
             ScalifyError::config(format!("unknown parallelism '{spec}' ({usage})"))
         })?;
-    let deg: u32 = deg.parse().map_err(|_| {
-        ScalifyError::config(format!("bad parallelism degree in '{spec}' ({usage})"))
-    })?;
-    if deg == 0 {
-        return Err(ScalifyError::config(format!(
-            "parallelism degree must be >= 1 in '{spec}' ({usage})"
-        )));
-    }
+    let deg = parse_deg(deg)?;
     Ok(match kind {
         "tp" => Parallelism::Tensor { tp: deg },
         "sp" => Parallelism::Sequence { tp: deg },
         "fd" => Parallelism::FlashDecoding { tp: deg },
+        "pp" => Parallelism::Pipeline { pp: deg },
         _ => Parallelism::Expert { ep: deg },
     })
 }
@@ -95,6 +127,8 @@ pub const KNOWN_MODELS: &[&str] = &[
     "llama-tiny",
     "mixtral-8x7b",
     "mixtral-8x22b",
+    "dpstep-tiny",
+    "dpstep-small",
 ];
 
 /// Build the zoo pair named by the CLI, with typed validation errors.
@@ -111,6 +145,12 @@ pub fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> Result<
         }
         try_mixtral_pair(&cfg, par)
     };
+    let mk_dp = |mut cfg: crate::modelgen::TrainStepConfig| {
+        if let Some(l) = layers {
+            cfg.layers = l;
+        }
+        crate::modelgen::try_dpstep_pair(&cfg, par)
+    };
     match model {
         "llama-8b" => mk(LlamaConfig::llama3_8b()),
         "llama-70b" => mk(LlamaConfig::llama3_70b()),
@@ -118,6 +158,8 @@ pub fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> Result<
         "llama-tiny" => mk(LlamaConfig::tiny()),
         "mixtral-8x7b" => mk_mix(MixtralConfig::mixtral_8x7b()),
         "mixtral-8x22b" => mk_mix(MixtralConfig::mixtral_8x22b()),
+        "dpstep-tiny" => mk_dp(crate::modelgen::TrainStepConfig::tiny()),
+        "dpstep-small" => mk_dp(crate::modelgen::TrainStepConfig::small()),
         other => Err(ScalifyError::model_spec(format!(
             "unknown model '{other}' (known: {})",
             KNOWN_MODELS.join(", ")
@@ -255,17 +297,37 @@ mod tests {
         assert_eq!(parallelism("sp8").unwrap(), Parallelism::Sequence { tp: 8 });
         assert_eq!(parallelism("fd4").unwrap(), Parallelism::FlashDecoding { tp: 4 });
         assert_eq!(parallelism("ep8").unwrap(), Parallelism::Expert { ep: 8 });
+        assert_eq!(parallelism("pp4").unwrap(), Parallelism::Pipeline { pp: 4 });
+        assert_eq!(parallelism("dp4").unwrap(), Parallelism::Data { dp: 4, zero_stage: 0 });
+        assert_eq!(parallelism("dp8z2").unwrap(), Parallelism::Data { dp: 8, zero_stage: 2 });
+        assert_eq!(parallelism("pp2tp4").unwrap(), Parallelism::Combined { pp: 2, tp: 4 });
     }
 
     #[test]
     fn parallelism_rejects_malformed_specs() {
         // `tp` (no degree) and `x` (shorter than the prefix) both used to
         // panic via split_at(2)
-        for bad in ["tp", "x", "", "zz8", "tp-3", "tp0", "ep1.5"] {
+        for bad in
+            ["tp", "x", "", "zz8", "tp-3", "tp0", "ep1.5", "pp0", "dp4z9", "pptp2", "pp2tp"]
+        {
             let err = parallelism(bad).unwrap_err();
             assert!(matches!(err, ScalifyError::Config(_)), "{bad}: {err}");
             assert!(err.message().contains("e.g. tp32"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn dpstep_models_build_and_validate() {
+        let pair =
+            model_pair("dpstep-tiny", Parallelism::Data { dp: 2, zero_stage: 1 }, None).unwrap();
+        assert_eq!(pair.dist.num_cores, 2);
+        // the training-step zoo is data-parallel only
+        let err = model_pair("dpstep-tiny", Parallelism::Tensor { tp: 2 }, None).unwrap_err();
+        assert!(matches!(err, ScalifyError::ModelSpec(_)), "{err}");
+        // and llama rejects data parallelism with a pointer at dpstep
+        let err =
+            model_pair("llama-tiny", Parallelism::Data { dp: 2, zero_stage: 0 }, None).unwrap_err();
+        assert!(err.message().contains("dpstep"), "{err}");
     }
 
     #[test]

@@ -376,6 +376,11 @@ fn parse_metadata(g: &mut Graph, attr: &str) -> Meta {
         let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
         meta.line = rest[..end].parse().unwrap_or(0);
     }
+    if let Some(pos) = attr.find("stage=") {
+        let rest = &attr[pos + "stage=".len()..];
+        let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+        meta.stage = rest[..end].parse().ok();
+    }
     meta
 }
 
@@ -547,6 +552,19 @@ fn parse_instruction(
                 .ok_or_else(|| parse_err!("reduce region '{region}' is not a simple combiner"))?;
             // operands = (input, init); init is checked to be the identity
             (Op::Reduce { kind, dims }, vec![lookup(operands[0])?])
+        }
+        "send" | "recv" => {
+            let channel: u32 = attrs
+                .get("channel_id")
+                .map(|v| v.trim().parse())
+                .transpose()?
+                .unwrap_or(0);
+            let op = if opcode == "send" {
+                Op::Send { channel }
+            } else {
+                Op::Recv { channel }
+            };
+            (op, vec![lookup(operands[0])?])
         }
         "all-reduce" => {
             let region = attrs

@@ -104,11 +104,19 @@ pub fn print_hlo_module(g: &Graph) -> String {
             if file.is_empty() {
                 String::new()
             } else {
+                // `stage=` is a Scalify extension (pipeline ownership);
+                // omitted for non-pipeline graphs so baseline output stays
+                // XLA-parseable
+                let stage = match n.meta.stage {
+                    Some(s) => format!(" stage={s}"),
+                    None => String::new(),
+                };
                 format!(
-                    ", metadata={{op_name=\"{}\" source_file=\"{}\" source_line={}}}",
+                    ", metadata={{op_name=\"{}\" source_file=\"{}\" source_line={}{}}}",
                     g.interner.resolve(n.meta.expr),
                     file,
-                    n.meta.line
+                    n.meta.line,
+                    stage
                 )
             }
         };
@@ -291,6 +299,12 @@ pub fn print_hlo_module(g: &Graph) -> String {
                     split_dim,
                     concat_dim
                 )
+            }
+            Op::Send { channel } => {
+                format!("{} = {} send({}), channel_id={}", nm(n.id), shape, ops[0], channel)
+            }
+            Op::Recv { channel } => {
+                format!("{} = {} recv({}), channel_id={}", nm(n.id), shape, ops[0], channel)
             }
             Op::Tuple => {
                 format!("{} = {} tuple({})", nm(n.id), shape, ops.join(", "))

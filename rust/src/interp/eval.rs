@@ -261,6 +261,9 @@ fn eval_local<'a>(
         Op::Sin => quant(unary(get(0), f64::sin)),
         Op::Cos => quant(unary(get(0), f64::cos)),
         Op::Convert { to } => get(0).clone().quantize(*to),
+        // send/recv relocate a tensor between pipeline stages; in the
+        // lockstep simulation the value simply passes through
+        Op::Send { .. } | Op::Recv { .. } => quant(get(0).clone()),
         Op::Compare(kind) => {
             let f = |a: f64, b: f64| -> f64 {
                 let r = match kind {

@@ -78,7 +78,7 @@ pub fn infer_shape(op: &Op, ins: &[&Shape], num_cores: u32) -> Shape {
                 .collect();
             ins[0].with_dims(out)
         }
-        Op::AllReduce { .. } => ins[0].clone(),
+        Op::AllReduce { .. } | Op::Send { .. } | Op::Recv { .. } => ins[0].clone(),
         Op::AllGather { dim, groups } => {
             let g = groups.0[0].len() as i64;
             let mut dims = ins[0].dims.clone();
@@ -127,6 +127,7 @@ struct SourceCtx {
     line: u32,
     func: Sym,
     layer: Option<u32>,
+    stage: Option<u32>,
 }
 
 /// Builder over a [`Graph`] with shape inference and source tracking.
@@ -141,7 +142,13 @@ impl GraphBuilder {
     pub fn new(name: impl Into<String>, num_cores: u32) -> GraphBuilder {
         GraphBuilder {
             g: Graph::new(name, num_cores),
-            ctx: SourceCtx { file: Sym::EMPTY, line: 0, func: Sym::EMPTY, layer: None },
+            ctx: SourceCtx {
+                file: Sym::EMPTY,
+                line: 0,
+                func: Sym::EMPTY,
+                layer: None,
+                stage: None,
+            },
             next_param: 0,
         }
     }
@@ -165,6 +172,12 @@ impl GraphBuilder {
         self
     }
 
+    /// Set the current pipeline stage (None = not pipeline-owned).
+    pub fn stage(&mut self, stage: Option<u32>) -> &mut Self {
+        self.ctx.stage = stage;
+        self
+    }
+
     fn meta(&mut self, expr: &str) -> Meta {
         Meta {
             file: self.ctx.file,
@@ -172,6 +185,7 @@ impl GraphBuilder {
             expr: self.g.interner.intern(expr),
             func: self.ctx.func,
             layer: self.ctx.layer,
+            stage: self.ctx.stage,
         }
     }
 
@@ -424,6 +438,18 @@ impl GraphBuilder {
         groups: ReplicaGroups,
     ) -> NodeId {
         self.push_infer(Op::AllToAll { split_dim, concat_dim, groups }, vec![x])
+    }
+
+    // ---- point-to-point ----
+
+    /// send to the next pipeline stage over `channel`
+    pub fn send(&mut self, x: NodeId, channel: u32) -> NodeId {
+        self.push_infer(Op::Send { channel }, vec![x])
+    }
+
+    /// recv the matching send's value
+    pub fn recv(&mut self, x: NodeId, channel: u32) -> NodeId {
+        self.push_infer(Op::Recv { channel }, vec![x])
     }
 
     // ---- structure ----

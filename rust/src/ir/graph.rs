@@ -47,12 +47,24 @@ pub struct Meta {
     /// Neural-network layer index this node belongs to (layer-boundary
     /// partitioning cuts along this).
     pub layer: Option<u32>,
+    /// Pipeline stage that owns this node (None outside pipeline
+    /// parallelism or for tensors replicated across stages). Recorded by
+    /// the transform engine's stage splitter; surfaced per layer in
+    /// [`crate::verifier::LayerReport::stage`].
+    pub stage: Option<u32>,
 }
 
 impl Meta {
     /// Metadata with everything empty (parser fills what it can).
     pub fn none() -> Meta {
-        Meta { file: Sym::EMPTY, line: 0, expr: Sym::EMPTY, func: Sym::EMPTY, layer: None }
+        Meta {
+            file: Sym::EMPTY,
+            line: 0,
+            expr: Sym::EMPTY,
+            func: Sym::EMPTY,
+            layer: None,
+            stage: None,
+        }
     }
 }
 
@@ -157,6 +169,21 @@ impl Graph {
         uses
     }
 
+    /// Re-intern `meta` (owned by `src`'s interner) into this graph.
+    /// The single place graph-rebuilding passes (layer slicing, the
+    /// transform engine, bug-injection surgery) copy metadata through, so
+    /// a new [`Meta`] field is threaded in one spot.
+    pub fn import_meta(&mut self, src: &Graph, meta: &Meta) -> Meta {
+        Meta {
+            file: self.interner.intern(src.interner.resolve(meta.file)),
+            line: meta.line,
+            expr: self.interner.intern(src.interner.resolve(meta.expr)),
+            func: self.interner.intern(src.interner.resolve(meta.func)),
+            layer: meta.layer,
+            stage: meta.stage,
+        }
+    }
+
     /// Source site of a node as `file:line` (empty if unknown).
     pub fn source_site(&self, id: NodeId) -> String {
         let m = &self.node(id).meta;
@@ -222,6 +249,8 @@ impl Graph {
                 | Op::AllGather { .. }
                 | Op::ReduceScatter { .. }
                 | Op::AllToAll { .. }
+                | Op::Send { .. }
+                | Op::Recv { .. }
                 | Op::GetTupleElement { .. } => n.inputs.len() == 1,
                 Op::Concat { .. } | Op::Tuple => !n.inputs.is_empty(),
                 Op::Custom { .. } => true,
@@ -255,6 +284,15 @@ impl Graph {
                 }
                 Op::Concat { dim } => {
                     ensure!(*dim < n.shape.rank(), "concat dim out of range at {}", n.id.0);
+                }
+                Op::Recv { channel } => {
+                    let src = self.node(n.inputs[0]);
+                    ensure!(
+                        matches!(&src.op, Op::Send { channel: c } if c == channel),
+                        "recv at {} (channel {}) does not read a matching send",
+                        n.id.0,
+                        channel
+                    );
                 }
                 Op::AllReduce { groups, .. }
                 | Op::AllGather { groups, .. }

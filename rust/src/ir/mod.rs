@@ -22,7 +22,7 @@ mod builder;
 mod annotate;
 
 pub use annotate::{Annotation, InputRelation};
-pub use builder::GraphBuilder;
+pub use builder::{infer_shape, GraphBuilder};
 pub use dtype::DType;
 pub use graph::{Graph, Meta, Node, NodeId};
 pub use op::{CmpKind, ConstVal, Op, ReduceKind, ReplicaGroups};

@@ -296,6 +296,25 @@ pub enum Op {
         groups: ReplicaGroups,
     },
 
+    // ---- point-to-point (pipeline stage boundaries) ----
+    /// Send the operand to the next pipeline stage over `channel`.
+    ///
+    /// Scalify's IR keeps the dataflow explicit: the matching [`Op::Recv`]
+    /// consumes the send's value directly, so a send/recv pair has exact
+    /// identity semantics (the tensor is relocated, not transformed). Real
+    /// HLO threads tokens through send/recv; the simplified form is what
+    /// the verifier's relation rules need — facts propagate through the
+    /// boundary unchanged.
+    Send {
+        /// Channel id tying the send to its recv.
+        channel: u32,
+    },
+    /// Receive the matching [`Op::Send`]'s value on the next stage.
+    Recv {
+        /// Channel id tying the recv to its send.
+        channel: u32,
+    },
+
     // ---- structure ----
     /// Tuple of operands (entry-computation outputs).
     Tuple,
@@ -349,6 +368,8 @@ impl Op {
             Op::AllGather { .. } => "all-gather",
             Op::ReduceScatter { .. } => "reduce-scatter",
             Op::AllToAll { .. } => "all-to-all",
+            Op::Send { .. } => "send",
+            Op::Recv { .. } => "recv",
             Op::Tuple => "tuple",
             Op::GetTupleElement { .. } => "get-tuple-element",
             Op::Custom { name } => name,
@@ -397,6 +418,12 @@ impl Op {
     /// True for pure data-movement (layout) ops.
     pub fn is_layout(&self) -> bool {
         matches!(self, Op::Reshape { .. } | Op::Transpose { .. })
+    }
+
+    /// True for the pipeline boundary ops (`send` / `recv`), which have
+    /// identity value semantics.
+    pub fn is_boundary(&self) -> bool {
+        matches!(self, Op::Send { .. } | Op::Recv { .. })
     }
 
     /// Commutative binary elementwise ops (feeds e-graph rewrite rules).

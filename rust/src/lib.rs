@@ -73,6 +73,7 @@ pub mod partition;
 pub mod verifier;
 pub mod localize;
 pub mod modelgen;
+pub mod transform;
 pub mod bugs;
 pub mod baseline;
 pub mod runtime;
@@ -89,7 +90,10 @@ pub mod prelude {
         Shape,
     };
     pub use crate::localize::Discrepancy;
-    pub use crate::modelgen::{GraphPair, LlamaConfig, MixtralConfig, Parallelism};
+    pub use crate::modelgen::{
+        GraphPair, LlamaConfig, MixtralConfig, Parallelism, TrainStepConfig,
+    };
+    pub use crate::transform::{ParallelPlan, ShardRule};
     pub use crate::verifier::{
         Session, SessionStats, Verdict, VerifyConfig, VerifyConfigBuilder, VerifyReport,
     };

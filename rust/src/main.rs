@@ -13,7 +13,9 @@
 //! 2 usage or input error · 3 runtime execution error. With `--json`,
 //! stdout carries exactly one machine-readable document.
 
-use scalify::bugs::{evaluate, new_bugs, reproduced_bugs, ExpectedLoc, LocResult};
+use scalify::bugs::{
+    evaluate, new_bugs, parallel_transform_bugs, reproduced_bugs, ExpectedLoc, LocResult,
+};
 use scalify::cli;
 use scalify::error::{Result, ResultExt, ScalifyError};
 use scalify::hlo::parse_hlo_file;
@@ -76,7 +78,13 @@ fn cmd_verify(flags: &Flags) -> Result<ExitCode> {
 
 fn cmd_model(flags: &Flags) -> Result<ExitCode> {
     let model = flags.get("model").map(|s| s.as_str()).unwrap_or("llama-8b");
-    let par = cli::parallelism(flags.get("par").map(|s| s.as_str()).unwrap_or("tp32"))?;
+    // --parallelism is the spelled-out alias of --par
+    let par_spec = flags
+        .get("par")
+        .or_else(|| flags.get("parallelism"))
+        .map(|s| s.as_str())
+        .unwrap_or("tp32");
+    let par = cli::parallelism(par_spec)?;
     let layers = match flags.get("layers") {
         Some(l) => Some(l.parse().map_err(|_| {
             ScalifyError::config(format!("--layers wants an integer, got '{l}'"))
@@ -226,12 +234,19 @@ fn run_bug_table(title: &str, cases: Vec<scalify::bugs::BugCase>) -> bool {
 fn cmd_bugs(flags: &Flags) -> Result<ExitCode> {
     let only_new = flags.contains_key("new");
     let only_reproduced = flags.contains_key("reproduced");
+    let only_transform = flags.contains_key("transform");
     let mut all_ok = true;
-    if !only_new {
+    if !only_new && !only_transform {
         all_ok &= run_bug_table("Table 4 - reproduced bugs", reproduced_bugs());
     }
-    if !only_reproduced {
+    if !only_reproduced && !only_transform {
         all_ok &= run_bug_table("Table 5 - new bugs", new_bugs());
+    }
+    if !only_new && !only_reproduced {
+        all_ok &= run_bug_table(
+            "Pipeline and data-parallel bugs",
+            parallel_transform_bugs(),
+        );
     }
     Ok(if all_ok { ExitCode::SUCCESS } else { ExitCode::from(1) })
 }
@@ -268,10 +283,11 @@ fn usage() -> String {
         "scalify {} — computational-graph equivalence verifier\n\
          usage:\n  \
          scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N] [--json]\n  \
-         scalify model --model llama-8b|llama-70b|llama-405b|llama-tiny|mixtral-8x7b|mixtral-8x22b \
-         --par tp32|sp32|fd32|ep8 [--layers N] [--json]\n  \
+         scalify model --model llama-8b|llama-70b|llama-405b|llama-tiny|mixtral-8x7b|mixtral-8x22b\
+         |dpstep-tiny|dpstep-small \
+         --par tp32|sp32|fd32|ep8|pp4|dp4z1|pp2tp4 [--layers N] [--json]\n  \
          scalify batch --manifest pairs.txt [--json]\n  \
-         scalify bugs [--reproduced|--new]\n  \
+         scalify bugs [--reproduced|--new|--transform]\n  \
          scalify exec --artifact artifacts/model_single.hlo.txt\n  \
          scalify info\n\
          common flags: --threads N --no-partition --no-parallel --no-memoize\n\

@@ -36,6 +36,59 @@ pub fn matmul_allreduce_pair(tp: u32) -> GraphPair {
     GraphPair::new(base, dist, ann)
 }
 
+/// Pipeline microbatching demo: the baseline splits the batch into two
+/// microbatches, pushes each through a two-stage MLP and concatenates the
+/// results — the unrolled GPipe schedule. The distributed graph mirrors it
+/// with per-node stage annotations; `buggy = true` skews the second
+/// microbatch's slice by one row (the wrong-microbatch-split fault: rows
+/// 3..7 instead of 4..8, duplicating row 3 and dropping row 7).
+pub fn microbatch_pair(buggy: bool) -> GraphPair {
+    let (bsz, h) = (8i64, 4i64);
+    let build = |dist: bool, buggy: bool| -> (crate::ir::Graph, Vec<NodeId>) {
+        let cores = if dist { 2 } else { 1 };
+        let mut b = GraphBuilder::new(if dist { "mb_dist" } else { "mb_base" }, cores);
+        b.layer(Some(0)).at("pipeline.py", 30).in_func("microbatch_split");
+        let x = b.parameter("x", f32s(&[bsz, h]));
+        let w1 = b.parameter("w1", f32s(&[h, h]));
+        let w2 = b.parameter("w2", f32s(&[h, h]));
+        let mut outs = Vec::new();
+        for mb in 0..2i64 {
+            b.layer(Some(0)).at("pipeline.py", 40).in_func("microbatch_split");
+            let (start, limit) = if buggy && mb == 1 {
+                (3, 7) // off-by-one microbatch boundary
+            } else {
+                (mb * 4, mb * 4 + 4)
+            };
+            let xs = b.slice_dim(x, 0, start, limit);
+            if dist {
+                b.stage(Some(0));
+            }
+            b.layer(Some(0)).at("pipeline.py", 44).in_func("stage_a");
+            let h1 = b.matmul(xs, w1);
+            let a = b.tanh(h1);
+            if dist {
+                b.stage(Some(1));
+            }
+            b.layer(Some(1)).at("pipeline.py", 48).in_func("stage_b");
+            let y = b.matmul(a, w2);
+            outs.push(y);
+        }
+        b.layer(Some(1)).at("pipeline.py", 52).in_func("microbatch_concat");
+        let out = b.concat(outs, 0);
+        b.stage(None);
+        b.output(out);
+        (b.finish(), vec![x, w1, w2])
+    };
+    let (base, bp) = build(false, false);
+    let (dist, dp) = build(true, buggy);
+    let ann = bp
+        .into_iter()
+        .zip(dp)
+        .map(|(b, d)| Annotation::replicated(b, d))
+        .collect();
+    GraphPair::new(base, dist, ann)
+}
+
 /// The Figure-1 BSH pair: `buggy = true` reproduces the incorrect layout
 /// transformation (direct reshape instead of reshape+transpose).
 pub fn bsh_pair(buggy: bool) -> GraphPair {

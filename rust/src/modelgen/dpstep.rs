@@ -1,0 +1,201 @@
+//! Data-parallel training-step graphs (the ZeRO scenario family).
+//!
+//! The inference zoo flattens batch×sequence into one token axis, so
+//! batch sharding cannot pass through attention there. Data parallelism
+//! is instead exercised on what it actually parallelizes in production: a
+//! **training step**. The baseline is one SGD-with-momentum step of a
+//! tanh-MLP tower — forward, backward (explicit transpose-free
+//! `dot_general` gradients), momentum update, weight update — with the
+//! updated weights as graph outputs.
+//!
+//! The transform engine derives the distributed step from a
+//! [`crate::transform::ParallelPlan`] that batch-shards the data tensors
+//! and, per ZeRO stage, shards the optimizer state / parameters:
+//!
+//! * **stage 0** — states replicated; the batch-contracted gradient dots
+//!   become per-core partials discharged by `all-reduce` at the momentum
+//!   update (the classic gradient all-reduce).
+//! * **stage 1** — momentum sharded along dim 0; the gradient partial is
+//!   discharged by `reduce-scatter`, the update vector is `all-gather`ed
+//!   before it touches the replicated weights.
+//! * **stage 2** — weights sharded too; the forward pass `all-gather`s
+//!   each weight on use, the update happens on the shard, and the updated
+//!   shard is gathered at the output (ZeRO-2/3-style partitioning).
+//!
+//! Every collective above is *derived*, not hand-placed: the plan only
+//! names which parameters shard.
+
+use super::{GraphPair, Parallelism};
+use crate::error::{Result, ScalifyError};
+use crate::ir::{DType, Graph, GraphBuilder, NodeId, Shape};
+use crate::transform::ParallelPlan;
+
+/// Training-step configuration (graph-shape parameters only).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStepConfig {
+    /// MLP layers.
+    pub layers: u32,
+    /// Global batch size B.
+    pub batch: i64,
+    /// Hidden size H (square weights).
+    pub hidden: i64,
+}
+
+impl TrainStepConfig {
+    /// Tiny config for interpreter-level differential tests (batch and
+    /// hidden chosen so dp ∈ {2, 4} keeps local shard extents ≥ 2).
+    pub fn tiny() -> Self {
+        TrainStepConfig { layers: 2, batch: 8, hidden: 8 }
+    }
+
+    /// A few more layers for memoization / bench scenarios.
+    pub fn small() -> Self {
+        TrainStepConfig { layers: 4, batch: 8, hidden: 16 }
+    }
+}
+
+fn f32s(dims: &[i64]) -> Shape {
+    Shape::new(DType::F32, dims.to_vec())
+}
+
+/// Baseline single-device training step.
+///
+/// Partition-group tags: forward of layer `l` is group `l`; backward +
+/// optimizer of layer `l` is group `2L-1-l` — groups appear in
+/// topological order, so Algorithm 1's forward boundary propagation walks
+/// the step in execution order.
+pub(crate) fn train_step_baseline(cfg: &TrainStepConfig) -> Graph {
+    let (bsz, h, layers) = (cfg.batch, cfg.hidden, cfg.layers);
+    let mut b = GraphBuilder::new("dpstep_base", 1);
+    b.layer(None).at("train.py", 8).in_func("train_step");
+    let x = b.parameter("batch.x", f32s(&[bsz, h]));
+    let y = b.parameter("batch.y", f32s(&[bsz, h]));
+
+    // ---- forward ----
+    let mut weights: Vec<NodeId> = Vec::new();
+    let mut acts: Vec<NodeId> = vec![x];
+    for l in 0..layers {
+        b.layer(Some(l)).at("layers.py", 14).in_func("forward");
+        let w = b.parameter(&format!("l{l}.weight"), f32s(&[h, h]));
+        let z = b.matmul(acts[l as usize], w);
+        let a = b.tanh(z);
+        weights.push(w);
+        acts.push(a);
+    }
+
+    // ---- backward + optimizer, deepest layer first ----
+    let mut delta: Option<NodeId> = None;
+    let mut updates: Vec<(u32, NodeId)> = Vec::new();
+    for (k, l) in (0..layers).rev().enumerate() {
+        b.layer(Some(layers + k as u32));
+        b.at("backward.py", 9).in_func("backward");
+        let d_next = match delta {
+            // δ_L = a_L − y (squared-error gradient seed)
+            None => b.sub(acts[layers as usize], y),
+            Some(d) => d,
+        };
+        // t = δ_{l+1} ⊙ (1 − a_{l+1}²)  (tanh backward)
+        b.at("backward.py", 12);
+        let aa = b.mul(acts[(l + 1) as usize], acts[(l + 1) as usize]);
+        let one = b.constant(1.0, DType::F32);
+        let one_b = b.broadcast_scalar(one, vec![bsz, h]);
+        let deriv = b.sub(one_b, aa);
+        let t = b.mul(d_next, deriv);
+        // gW_l = a_lᵀ · t  — contracts the batch dim on both sides; under
+        // data parallelism this is exactly the per-core partial gradient
+        b.at("backward.py", 16);
+        let g = b.dot_general(acts[l as usize], t, vec![0], vec![0], vec![], vec![]);
+        // δ_l = t · W_lᵀ
+        b.at("backward.py", 18);
+        let d_prev = b.dot_general(t, weights[l as usize], vec![1], vec![1], vec![], vec![]);
+        delta = Some(d_prev);
+
+        b.at("optim.py", 9).in_func("optimizer_step");
+        let m = b.parameter(&format!("l{l}.momentum"), f32s(&[h, h]));
+        let mu = b.constant(0.9, DType::F32);
+        let mu_b = b.broadcast_scalar(mu, vec![h, h]);
+        let m_scaled = b.mul(mu_b, m);
+        // the gradient-reduction site: m' = μ·m + gW
+        b.at("optim.py", 12);
+        let m_new = b.add(m_scaled, g);
+        b.at("optim.py", 14);
+        let lr = b.constant(0.01, DType::F32);
+        let lr_b = b.broadcast_scalar(lr, vec![h, h]);
+        let update = b.mul(lr_b, m_new);
+        b.at("optim.py", 16);
+        let w_new = b.sub(weights[l as usize], update);
+        updates.push((l, w_new));
+    }
+    b.layer(None);
+    updates.sort_by_key(|(l, _)| *l);
+    for (_, w_new) in updates {
+        b.output(w_new);
+    }
+    b.finish()
+}
+
+/// The plan for one ZeRO stage: data tensors batch-shard; stage ≥ 1
+/// shards the momentum, stage ≥ 2 the weights too.
+pub(crate) fn zero_plan(dp: u32, zero_stage: u8) -> ParallelPlan {
+    let mut plan = ParallelPlan::new(Parallelism::Data { dp, zero_stage })
+        .shard("batch.x", 0)
+        .shard("batch.y", 0);
+    if zero_stage >= 1 {
+        plan = plan.shard("momentum", 0);
+    }
+    if zero_stage >= 2 {
+        plan = plan.shard("weight", 0);
+    }
+    plan
+}
+
+/// Build a baseline + data-parallel training-step pair, validating the
+/// configuration instead of panicking.
+pub fn try_dpstep_pair(cfg: &TrainStepConfig, par: Parallelism) -> Result<GraphPair> {
+    let Parallelism::Data { dp, zero_stage } = par else {
+        return Err(ScalifyError::model_spec(format!(
+            "the training-step zoo is data-parallel only (got {})",
+            par.label()
+        )));
+    };
+    if cfg.layers == 0 || cfg.batch <= 0 || cfg.hidden <= 0 {
+        return Err(ScalifyError::model_spec(format!(
+            "training-step config has a non-positive dimension: {cfg:?}"
+        )));
+    }
+    if dp == 0 {
+        return Err(ScalifyError::model_spec("data-parallel degree must be >= 1"));
+    }
+    if zero_stage > 2 {
+        return Err(ScalifyError::model_spec(format!(
+            "ZeRO stage {zero_stage} is not modeled (stages 0-2)"
+        )));
+    }
+    if cfg.batch % dp as i64 != 0 {
+        return Err(ScalifyError::model_spec(format!(
+            "batch ({}) must be divisible by dp ({dp})",
+            cfg.batch
+        )));
+    }
+    if zero_stage >= 1 && cfg.hidden % dp as i64 != 0 {
+        return Err(ScalifyError::model_spec(format!(
+            "hidden ({}) must be divisible by dp ({dp}) to shard optimizer state",
+            cfg.hidden
+        )));
+    }
+    Ok(dpstep_pair(cfg, par))
+}
+
+/// Build a baseline + data-parallel training-step pair.
+///
+/// # Panics
+/// Panics on invalid configurations; use [`try_dpstep_pair`] on untrusted
+/// input.
+pub fn dpstep_pair(cfg: &TrainStepConfig, par: Parallelism) -> GraphPair {
+    let Parallelism::Data { dp, zero_stage } = par else {
+        panic!("the training-step zoo is data-parallel only");
+    };
+    let base = train_step_baseline(cfg);
+    crate::transform::apply(&base, &zero_plan(dp, zero_stage))
+        .expect("ZeRO plan applies to its own baseline")
+}

@@ -288,14 +288,24 @@ pub fn try_llama_pair(
     if degree == 0 {
         return spec("parallelism degree must be >= 1".into());
     }
+    let check_tp = |tp: u32| -> crate::error::Result<()> {
+        if cfg.heads % tp as i64 != 0 {
+            return Err(ScalifyError::model_spec(format!(
+                "heads ({}) must be divisible by tp ({tp})",
+                cfg.heads
+            )));
+        }
+        if cfg.ffn % tp as i64 != 0 {
+            return Err(ScalifyError::model_spec(format!(
+                "ffn ({}) must be divisible by tp ({tp})",
+                cfg.ffn
+            )));
+        }
+        Ok(())
+    };
     match par {
         Parallelism::Tensor { tp } | Parallelism::Sequence { tp } => {
-            if cfg.heads % tp as i64 != 0 {
-                return spec(format!("heads ({}) must be divisible by tp ({tp})", cfg.heads));
-            }
-            if cfg.ffn % tp as i64 != 0 {
-                return spec(format!("ffn ({}) must be divisible by tp ({tp})", cfg.ffn));
-            }
+            check_tp(tp)?;
             if matches!(par, Parallelism::Sequence { .. }) && cfg.tokens() % tp as i64 != 0 {
                 return spec(format!(
                     "tokens ({}) must be divisible by tp ({tp}) for sequence parallelism",
@@ -316,22 +326,126 @@ pub fn try_llama_pair(
                 "expert parallelism is a Mixtral configuration (use mixtral_pair)".into(),
             );
         }
+        Parallelism::Pipeline { pp } => {
+            if pp > cfg.layers {
+                return spec(format!(
+                    "pipeline degree ({pp}) exceeds the layer count ({})",
+                    cfg.layers
+                ));
+            }
+        }
+        Parallelism::Data { .. } => {
+            return spec(
+                "data parallelism applies to the training-step zoo (use dpstep_pair): \
+                 the flattened-token inference graphs cannot batch-shard through \
+                 attention"
+                    .into(),
+            );
+        }
+        Parallelism::Combined { pp, tp } => {
+            check_tp(tp)?;
+            if pp > cfg.layers {
+                return spec(format!(
+                    "pipeline degree ({pp}) exceeds the layer count ({})",
+                    cfg.layers
+                ));
+            }
+        }
     }
     Ok(llama_pair(cfg, par))
 }
 
 /// Build a baseline + distributed Llama graph pair.
 ///
+/// Tensor, sequence, pipeline and combined variants are **derived** by the
+/// transform engine ([`crate::transform::apply`]) from the baseline graph
+/// and a [`ParallelPlan`]; flash decoding restructures the softmax and
+/// keeps its hand-built builder. The pre-engine hand-built dense builder
+/// survives as [`golden_llama_pair`] for differential testing.
+///
 /// # Panics
 /// Panics on invalid config/parallelism combinations; use
 /// [`try_llama_pair`] on untrusted input.
 pub fn llama_pair(cfg: &LlamaConfig, par: Parallelism) -> GraphPair {
     match par {
+        Parallelism::Tensor { .. }
+        | Parallelism::Sequence { .. }
+        | Parallelism::Pipeline { .. }
+        | Parallelism::Combined { .. } => {
+            let base = dense_baseline(cfg);
+            crate::transform::apply(&base, &dense_plan(par))
+                .expect("llama parallel plan applies to its own baseline")
+        }
+        Parallelism::FlashDecoding { tp } => flash_decoding_pair(cfg, tp),
+        Parallelism::Expert { .. } => panic!("expert parallelism is a Mixtral configuration"),
+        Parallelism::Data { .. } => {
+            panic!("data parallelism applies to the training-step zoo (dpstep_pair)")
+        }
+    }
+}
+
+/// The hand-built dense builder, kept verbatim as the golden reference the
+/// differential harness checks the engine against (tensor / sequence
+/// variants only; other techniques never had hand-built forms).
+///
+/// # Panics
+/// Panics on invalid combinations, like the historical `llama_pair`.
+pub fn golden_llama_pair(cfg: &LlamaConfig, par: Parallelism) -> GraphPair {
+    match par {
         Parallelism::Tensor { tp } => llama_dense_pair(cfg, tp, false),
         Parallelism::Sequence { tp } => llama_dense_pair(cfg, tp, true),
         Parallelism::FlashDecoding { tp } => flash_decoding_pair(cfg, tp),
-        Parallelism::Expert { .. } => panic!("expert parallelism is a Mixtral configuration"),
+        other => panic!("no hand-built golden builder for {}", other.label()),
     }
+}
+
+/// Baseline single-device Llama graph (shared by the engine and golden
+/// paths).
+pub(crate) fn dense_baseline(cfg: &LlamaConfig) -> crate::ir::Graph {
+    let t = cfg.tokens();
+    let h = cfg.hidden;
+    let hd = cfg.head_dim();
+    let mut bb = GraphBuilder::new("llama_base", 1);
+    bb.layer(None).at("model.py", 10).in_func("model_fwd");
+    let bx = bb.parameter("hidden_states", f32s(&[t, h]));
+    let bcos = bb.parameter("rotary.cos", f32s(&[t, hd]));
+    let bsin = bb.parameter("rotary.sin", f32s(&[t, hd]));
+    let mut cur = bx;
+    for l in 0..cfg.layers {
+        bb.layer(Some(l));
+        let w = layer_weights(&mut bb, l, h, cfg.ffn, h, cfg.ffn);
+        cur = decoder_layer(&mut bb, cur, &w, bcos, bsin, cfg, cfg.heads, 1, false);
+    }
+    bb.layer(None);
+    bb.output(cur);
+    bb.finish()
+}
+
+/// The plan that shards a dense Llama baseline: Megatron column/row
+/// placement of the projections, token-sharded residual stream under
+/// sequence parallelism, nothing sharded for pure pipeline plans.
+fn dense_plan(par: Parallelism) -> crate::transform::ParallelPlan {
+    use crate::transform::ParallelPlan;
+    let plan = ParallelPlan::new(par);
+    let shardy = matches!(
+        par,
+        Parallelism::Tensor { .. } | Parallelism::Sequence { .. } | Parallelism::Combined { .. }
+    );
+    let mut plan = if shardy {
+        plan.shard("q_proj", 1)
+            .shard("k_proj", 1)
+            .shard("v_proj", 1)
+            .shard("o_proj", 0)
+            .shard("gate_proj", 1)
+            .shard("up_proj", 1)
+            .shard("down_proj", 0)
+    } else {
+        plan
+    };
+    if matches!(par, Parallelism::Sequence { .. }) {
+        plan = plan.shard("hidden_states", 0);
+    }
+    plan
 }
 
 fn llama_dense_pair(cfg: &LlamaConfig, tp: u32, seq_parallel: bool) -> GraphPair {
@@ -475,24 +589,59 @@ fn flash_decoding_pair(cfg: &LlamaConfig, tp: u32) -> GraphPair {
 /// Split baseline inputs into per-core distributed inputs according to the
 /// pair's annotations (used by the interpreter differential tests and the
 /// numerical baseline verifier).
+///
+/// A distributed parameter without an annotation — or an annotation naming
+/// a baseline parameter the pair does not have — is a typed
+/// [`crate::error::ScalifyError::ModelSpec`] (this used to panic via
+/// `unwrap_or_else(panic!)`, which took down embedding services on any
+/// malformed pair).
 pub fn shard_inputs(
     pair: &GraphPair,
     base_inputs: &[crate::interp::Tensor],
-) -> Vec<Vec<crate::interp::Tensor>> {
+) -> crate::error::Result<Vec<Vec<crate::interp::Tensor>>> {
+    use crate::error::ScalifyError;
     let cores = pair.dist.num_cores as usize;
     let bparams = pair.base.parameters();
     let dparams = pair.dist.parameters();
+    if base_inputs.len() != bparams.len() {
+        return Err(ScalifyError::model_spec(format!(
+            "shard_inputs got {} baseline inputs for {} baseline parameters",
+            base_inputs.len(),
+            bparams.len()
+        )));
+    }
     let mut per_core: Vec<Vec<crate::interp::Tensor>> = vec![Vec::new(); cores];
     for &dp in &dparams {
         let ann = pair
             .annotations
             .iter()
             .find(|a| a.distributed == dp)
-            .unwrap_or_else(|| panic!("no annotation for dist param {dp:?}"));
+            .ok_or_else(|| {
+                ScalifyError::model_spec(format!(
+                    "no annotation for distributed parameter {} ('{}')",
+                    dp.0,
+                    match &pair.dist.node(dp).op {
+                        crate::ir::Op::Parameter { name, .. } => name.as_str(),
+                        _ => "?",
+                    }
+                ))
+            })?;
+        if let crate::ir::InputRelation::DeviceIds = &ann.relation {
+            for (r, c) in per_core.iter_mut().enumerate() {
+                c.push(crate::interp::Tensor::scalar(r as f64, DType::S32));
+            }
+            continue;
+        }
         let bpos = bparams
             .iter()
             .position(|&b| Some(b) == ann.baseline)
-            .expect("annotation names unknown baseline param");
+            .ok_or_else(|| {
+                ScalifyError::model_spec(format!(
+                    "annotation for distributed parameter {} names a baseline node \
+                     that is not a parameter of the baseline graph",
+                    dp.0
+                ))
+            })?;
         let bval = &base_inputs[bpos];
         match &ann.relation {
             crate::ir::InputRelation::Replicated => {
@@ -501,17 +650,23 @@ pub fn shard_inputs(
                 }
             }
             crate::ir::InputRelation::ShardAlong { dim, parts } => {
+                if *dim >= bval.shape.rank()
+                    || *parts as usize != cores
+                    || bval.shape.dims[*dim] % *parts as i64 != 0
+                {
+                    return Err(ScalifyError::model_spec(format!(
+                        "annotation shards baseline parameter {} along dim {dim} into \
+                         {parts} parts, which does not fit shape {} on {cores} cores",
+                        bpos, bval.shape
+                    )));
+                }
                 let shards = bval.split(*dim, *parts);
                 for (c, sh) in per_core.iter_mut().zip(shards) {
                     c.push(sh);
                 }
             }
-            crate::ir::InputRelation::DeviceIds => {
-                for (r, c) in per_core.iter_mut().enumerate() {
-                    c.push(crate::interp::Tensor::scalar(r as f64, DType::S32));
-                }
-            }
+            crate::ir::InputRelation::DeviceIds => unreachable!("handled above"),
         }
     }
-    per_core
+    Ok(per_core)
 }

@@ -154,10 +154,60 @@ pub fn try_mixtral_pair(
 
 /// Build the Mixtral pair under expert parallelism.
 ///
+/// The distributed half is **derived**: the transform engine shards the
+/// stacked expert weights along the expert dim and the baseline's
+/// unrolled expert-sum loop collapses to the core-local experts plus one
+/// all-reduce (the loop-redistribution pattern). The pre-engine builder
+/// survives as [`golden_mixtral_pair`] for differential testing.
+///
 /// # Panics
 /// Panics on invalid config/parallelism combinations; use
 /// [`try_mixtral_pair`] on untrusted input.
 pub fn mixtral_pair(cfg: &MixtralConfig, par: Parallelism) -> GraphPair {
+    let Parallelism::Expert { ep } = par else {
+        panic!("mixtral_pair expects expert parallelism");
+    };
+    assert_eq!(cfg.experts % ep as i64, 0, "experts must divide ep");
+    let base = moe_baseline(cfg);
+    let plan = crate::transform::ParallelPlan::new(par)
+        .shard("experts.up", 0)
+        .shard("experts.down", 0)
+        .collectives_at("moe.py", 84, "moe_local");
+    crate::transform::apply(&base, &plan)
+        .expect("mixtral expert plan applies to its own baseline")
+}
+
+/// Baseline single-device Mixtral graph (shared by the engine and golden
+/// paths).
+pub(crate) fn moe_baseline(cfg: &MixtralConfig) -> crate::ir::Graph {
+    let t = cfg.tokens();
+    let (h, f) = (cfg.hidden, cfg.ffn);
+    let mut bb = GraphBuilder::new("mixtral_base", 1);
+    bb.layer(None).at("model.py", 10).in_func("model_fwd");
+    let bx = bb.parameter("hidden_states", f32s(&[t, h]));
+    let mut cur = bx;
+    for l in 0..cfg.layers {
+        bb.layer(Some(l));
+        bb.at("moe.py", 30).in_func("moe_layer");
+        let w = MoeWeights {
+            w_up: bb.parameter(&format!("l{l}.experts.up"), f32s(&[cfg.experts, h, f])),
+            w_down: bb.parameter(&format!("l{l}.experts.down"), f32s(&[cfg.experts, f, h])),
+        };
+        let moe = moe_block_base(&mut bb, cur, &w, cfg);
+        bb.at("moe.py", 90).in_func("moe_layer");
+        cur = bb.add(cur, moe);
+    }
+    bb.layer(None);
+    bb.output(cur);
+    bb.finish()
+}
+
+/// The hand-built expert-parallel builder, kept verbatim as the golden
+/// reference for the differential harness.
+///
+/// # Panics
+/// Panics on invalid combinations, like the historical `mixtral_pair`.
+pub fn golden_mixtral_pair(cfg: &MixtralConfig, par: Parallelism) -> GraphPair {
     let Parallelism::Expert { ep } = par else {
         panic!("mixtral_pair expects expert parallelism");
     };

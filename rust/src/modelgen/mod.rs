@@ -4,23 +4,34 @@
 //! Distributed on Trainium. That stack is unavailable here, so this module
 //! plays the instrumented framework: it emits baseline (single-device) and
 //! distributed (SPMD) IR graphs for Llama-style dense and Mixtral-style
-//! MoE transformers under the paper's four parallelization techniques —
-//! tensor parallelism, sequence parallelism, expert parallelism and flash
-//! decoding — with per-node source metadata and sharding annotations, the
-//! same structural patterns the NeuronX compiler emits (column/row-sharded
-//! projections, partial products discharged by collectives, BSH
-//! reshape–transpose output layout, unrolled expert loops).
+//! MoE transformers — plus a data-parallel training-step family — with
+//! per-node source metadata and sharding annotations.
+//!
+//! Since the transform-engine refactor the distributed halves are
+//! **derived**, not hand-written: the zoo builds the baseline graph and a
+//! [`crate::transform::ParallelPlan`], and [`crate::transform::apply`]
+//! mechanically produces the distributed graph (column/row sharding with
+//! collective discharge, sequence-parallel gather/scatter sections,
+//! pipeline stage splitting with send/recv boundaries, expert-loop
+//! redistribution, data-parallel/ZeRO gradient and optimizer-state
+//! collectives). The original hand-built builders remain as *golden
+//! references* (`golden_llama_pair`, `golden_mixtral_pair`) for the
+//! differential test harness; flash decoding restructures the softmax and
+//! stays hand-built.
 
+pub mod dpstep;
 pub mod llama;
-mod mixtral;
+pub mod mixtral;
 pub mod demo;
 
 pub use crate::verifier::GraphPair;
-pub use llama::{llama_pair, try_llama_pair, LlamaConfig};
-pub use mixtral::{mixtral_pair, try_mixtral_pair, MixtralConfig};
+pub use dpstep::{dpstep_pair, try_dpstep_pair, TrainStepConfig};
+pub use llama::{golden_llama_pair, llama_pair, try_llama_pair, LlamaConfig};
+pub use mixtral::{golden_mixtral_pair, mixtral_pair, try_mixtral_pair, MixtralConfig};
 
-/// Parallelization technique of the distributed graph (§7.1: the four
-/// techniques the paper evaluates).
+/// Parallelization technique of the distributed graph: the paper's four
+/// SPMD techniques (§7.1) plus the pipeline / data-parallel scenarios the
+/// transform engine derives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Parallelism {
     /// Megatron-style tensor parallelism: attention heads + MLP sharded.
@@ -45,16 +56,55 @@ pub enum Parallelism {
         /// EP degree (== experts in our builder).
         ep: u32,
     },
+    /// Pipeline parallelism: contiguous layer ranges per stage, boundary
+    /// activations carried by send/recv pairs, stage ownership recorded in
+    /// [`crate::ir::Meta::stage`].
+    Pipeline {
+        /// Stage count.
+        pp: u32,
+    },
+    /// Data parallelism over the batch dimension with ZeRO-style
+    /// optimizer-state partitioning of the training step.
+    Data {
+        /// Replica count.
+        dp: u32,
+        /// ZeRO stage: 0 = replicated states + gradient all-reduce,
+        /// 1 = sharded optimizer states + gradient reduce-scatter,
+        /// 2 = additionally sharded parameters (gathered on use).
+        zero_stage: u8,
+    },
+    /// Pipeline × tensor parallelism: the tensor transform inside each
+    /// stage, stage splitting on top. The SPMD width of the emitted graph
+    /// is the per-stage tensor degree; stages ride as metadata.
+    Combined {
+        /// Stage count.
+        pp: u32,
+        /// Per-stage tensor degree.
+        tp: u32,
+    },
 }
 
 impl Parallelism {
-    /// Core count of the distributed graph.
+    /// SPMD width of the distributed graph (the per-stage width for
+    /// combined pipeline×tensor plans; see [`Parallelism::total_devices`]
+    /// for the full mesh size).
     pub fn cores(&self) -> u32 {
         match self {
             Parallelism::Tensor { tp }
             | Parallelism::Sequence { tp }
-            | Parallelism::FlashDecoding { tp } => *tp,
+            | Parallelism::FlashDecoding { tp }
+            | Parallelism::Combined { tp, .. } => *tp,
             Parallelism::Expert { ep } => *ep,
+            Parallelism::Pipeline { pp } => *pp,
+            Parallelism::Data { dp, .. } => *dp,
+        }
+    }
+
+    /// Total devices the plan occupies (stages × per-stage width).
+    pub fn total_devices(&self) -> u32 {
+        match self {
+            Parallelism::Combined { pp, tp } => pp * tp,
+            other => other.cores(),
         }
     }
 
@@ -65,6 +115,9 @@ impl Parallelism {
             Parallelism::Sequence { tp } => format!("sp{tp}"),
             Parallelism::FlashDecoding { tp } => format!("fd{tp}"),
             Parallelism::Expert { ep } => format!("ep{ep}"),
+            Parallelism::Pipeline { pp } => format!("pp{pp}"),
+            Parallelism::Data { dp, zero_stage } => format!("dp{dp}z{zero_stage}"),
+            Parallelism::Combined { pp, tp } => format!("pp{pp}tp{tp}"),
         }
     }
 }

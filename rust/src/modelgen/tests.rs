@@ -22,11 +22,14 @@ fn assert_numerically_equivalent(pair: &GraphPair, tol: f64, seed: u64) {
         .map(|&pid| Tensor::random(pair.base.node(pid).shape.clone(), &mut p))
         .collect();
     let base_out = run_single(&pair.base, &base_inputs).unwrap();
-    let dist_inputs = shard_inputs(pair, &base_inputs);
+    let dist_inputs = shard_inputs(pair, &base_inputs).unwrap();
     let dist_out = run_spmd(&pair.dist, &dist_inputs).unwrap();
     for core in 0..pair.dist.num_cores as usize {
-        let diff = base_out[0].max_abs_diff(&dist_out[core][0]);
-        assert!(diff < tol, "core {core} diverged by {diff}");
+        assert_eq!(base_out.len(), dist_out[core].len(), "output arity mismatch");
+        for (k, (b, d)) in base_out.iter().zip(&dist_out[core]).enumerate() {
+            let diff = b.max_abs_diff(d);
+            assert!(diff < tol, "core {core} output {k} diverged by {diff}");
+        }
     }
 }
 
@@ -92,6 +95,12 @@ fn demo_pairs_behave() {
     assert!(Session::new(cfg_seq()).verify(&bsh_ok).unwrap().verified());
     let bsh_bug = demo::bsh_pair(true);
     assert!(!Session::new(cfg_seq()).verify(&bsh_bug).unwrap().verified());
+
+    let mb_ok = demo::microbatch_pair(false);
+    assert_numerically_equivalent(&mb_ok, 1e-4, 59);
+    assert!(Session::new(cfg_seq()).verify(&mb_ok).unwrap().verified());
+    let mb_bug = demo::microbatch_pair(true);
+    assert!(!Session::new(cfg_seq()).verify(&mb_bug).unwrap().verified());
 }
 
 #[test]
@@ -134,4 +143,138 @@ fn render_failure(report: &crate::verifier::VerifyReport) -> String {
         s.push_str(&d.render());
     }
     s
+}
+
+// ---- transform-engine scenarios (pipeline, data/ZeRO, combined) ----
+
+#[test]
+fn llama_pipeline_tiny_verifies_and_matches_numerically() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Pipeline { pp: 2 });
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "send"));
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "recv"));
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{}", render_failure(&report));
+    // stage ownership surfaces in the per-layer report
+    assert!(report.layers.iter().any(|l| l.stage == Some(0)));
+    assert!(report.layers.iter().any(|l| l.stage == Some(1)));
+    assert_numerically_equivalent(&pair, 1e-4, 29);
+}
+
+#[test]
+fn llama_combined_pipeline_tensor_verifies() {
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Combined { pp: 2, tp: 2 });
+    assert_eq!(pair.dist.num_cores, 2, "SPMD width is the per-stage tp degree");
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "send"));
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "all-reduce"));
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{}", render_failure(&report));
+    assert_numerically_equivalent(&pair, 1e-4, 31);
+}
+
+#[test]
+fn dpstep_zero_stages_verify_and_match_numerically() {
+    for (dp, zero) in [(2u32, 0u8), (2, 1), (2, 2), (4, 1)] {
+        let pair = dpstep_pair(
+            &TrainStepConfig::tiny(),
+            Parallelism::Data { dp, zero_stage: zero },
+        );
+        let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+        assert!(report.verified(), "dp{dp}z{zero}: {}", render_failure(&report));
+        assert_numerically_equivalent(&pair, 1e-3, 37 + dp as u64 + zero as u64);
+    }
+}
+
+#[test]
+fn dpstep_collectives_match_zero_stage() {
+    let count = |pair: &GraphPair, op: &str| {
+        pair.dist.nodes.iter().filter(|n| n.op.name() == op).count()
+    };
+    let z0 = dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Data { dp: 2, zero_stage: 0 });
+    assert!(count(&z0, "all-reduce") > 0, "ZeRO-0 all-reduces gradients");
+    assert_eq!(count(&z0, "reduce-scatter"), 0);
+    let z1 = dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Data { dp: 2, zero_stage: 1 });
+    assert!(count(&z1, "reduce-scatter") > 0, "ZeRO-1 reduce-scatters gradients");
+    assert!(count(&z1, "all-gather") > 0, "ZeRO-1 gathers the update vector");
+    let z2 = dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Data { dp: 2, zero_stage: 2 });
+    assert!(
+        count(&z2, "all-gather") > count(&z1, "all-gather"),
+        "ZeRO-2 additionally gathers the sharded weights on use"
+    );
+}
+
+// ---- engine vs hand-built golden builders (differential) ----
+
+/// Both the engine-derived and the golden hand-built pair must verify and
+/// agree numerically on identical inputs.
+fn assert_engine_matches_golden(cfg: &LlamaConfig, par: Parallelism, seed: u64) {
+    let engine = llama_pair(cfg, par);
+    let golden = golden_llama_pair(cfg, par);
+    let session = Session::new(cfg_seq());
+    let er = session.verify(&engine).unwrap();
+    assert!(er.verified(), "engine {}: {}", par.label(), render_failure(&er));
+    let gr = session.verify(&golden).unwrap();
+    assert!(gr.verified(), "golden {}: {}", par.label(), render_failure(&gr));
+
+    // numerically: run both distributed graphs on shards of the same
+    // baseline inputs and compare against the shared baseline
+    let mut p = Prng::new(seed);
+    let base_inputs: Vec<Tensor> = engine
+        .base
+        .parameters()
+        .iter()
+        .map(|&pid| Tensor::random(engine.base.node(pid).shape.clone(), &mut p))
+        .collect();
+    let base_out = run_single(&engine.base, &base_inputs).unwrap();
+    for (label, pair) in [("engine", &engine), ("golden", &golden)] {
+        let ins = shard_inputs(pair, &base_inputs).unwrap();
+        let out = run_spmd(&pair.dist, &ins).unwrap();
+        for core in 0..pair.dist.num_cores as usize {
+            let diff = base_out[0].max_abs_diff(&out[core][0]);
+            assert!(diff < 1e-4, "{label} {} core {core} diverged by {diff}", par.label());
+        }
+    }
+}
+
+#[test]
+fn engine_tensor_parallel_matches_golden() {
+    assert_engine_matches_golden(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 }, 41);
+}
+
+#[test]
+fn engine_sequence_parallel_matches_golden() {
+    assert_engine_matches_golden(&LlamaConfig::tiny(), Parallelism::Sequence { tp: 2 }, 43);
+}
+
+#[test]
+fn engine_expert_parallel_matches_golden() {
+    let cfg = MixtralConfig::tiny();
+    let par = Parallelism::Expert { ep: 4 };
+    let engine = mixtral_pair(&cfg, par);
+    let golden = golden_mixtral_pair(&cfg, par);
+    let session = Session::new(cfg_seq());
+    assert!(session.verify(&engine).unwrap().verified(), "engine ep4");
+    assert!(session.verify(&golden).unwrap().verified(), "golden ep4");
+    assert_numerically_equivalent(&engine, 1e-4, 47);
+    assert_numerically_equivalent(&golden, 1e-4, 47);
+}
+
+#[test]
+fn shard_inputs_missing_annotation_is_typed_error() {
+    // Regression for the `unwrap_or_else(panic!)` bug: a distributed
+    // parameter without an annotation must be a ModelSpec error.
+    let mut pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+    pair.annotations.remove(3); // drop one weight annotation
+    let mut p = Prng::new(53);
+    let base_inputs: Vec<Tensor> = pair
+        .base
+        .parameters()
+        .iter()
+        .map(|&pid| Tensor::random(pair.base.node(pid).shape.clone(), &mut p))
+        .collect();
+    let err = shard_inputs(&pair, &base_inputs).unwrap_err();
+    assert!(
+        matches!(err, crate::error::ScalifyError::ModelSpec(_)),
+        "expected ModelSpec, got {err}"
+    );
+    assert!(err.message().contains("no annotation"), "{err}");
 }

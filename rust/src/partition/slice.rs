@@ -25,6 +25,14 @@ pub struct LayerSlice {
     pub node_map: FxHashMap<NodeId, NodeId>,
 }
 
+impl LayerSlice {
+    /// Pipeline stage owning this layer, if the graph carries stage
+    /// annotations (first tagged node wins; stages never split a layer).
+    pub fn stage(&self) -> Option<u32> {
+        self.graph.nodes.iter().find_map(|n| n.meta.stage)
+    }
+}
+
 /// Cut `g` into layer slices in layer order.
 ///
 /// Nodes without a layer tag attach to the layer of their (first) consumer
@@ -128,13 +136,7 @@ fn build_slice(g: &Graph, tag: u32, members: &[NodeId], uses: &[Vec<NodeId>]) ->
 }
 
 fn remap_meta(src: &Graph, dst: &mut Graph, meta: &Meta) -> Meta {
-    Meta {
-        file: dst.interner.intern(src.interner.resolve(meta.file)),
-        line: meta.line,
-        expr: dst.interner.intern(src.interner.resolve(meta.expr)),
-        func: dst.interner.intern(src.interner.resolve(meta.func)),
-        layer: meta.layer,
-    }
+    dst.import_meta(src, meta)
 }
 
 #[cfg(test)]

@@ -304,6 +304,9 @@ impl RelEngine {
             Op::AllToAll { split_dim, concat_dim, groups } => {
                 self.rule_all_to_all(eg, node, dclass, in_classes[0], *split_dim, *concat_dim, groups)
             }
+            Op::Send { .. } | Op::Recv { .. } => {
+                self.rule_boundary_hop(eg, dclass, in_classes[0])
+            }
             Op::Custom { .. } | Op::Tuple | Op::GetTupleElement { .. } => {
                 self.rule_uninterpreted(eg, node, dclass, &in_classes)
             }
@@ -1445,6 +1448,22 @@ impl RelEngine {
                 partial: None,
             };
             derived |= self.add_fact(eg, nf);
+        }
+        derived
+    }
+
+    /// Pipeline boundary hop (`send` / `recv`): the value is relocated to
+    /// another stage, not transformed, so every relation of the operand
+    /// carries through unchanged (identity semantics — the soundness
+    /// argument is that a send/recv pair denotes the identity function on
+    /// its tensor).
+    fn rule_boundary_hop(&mut self, eg: &mut EGraph, dclass: Id, xc: Id) -> bool {
+        let mut derived = false;
+        for f in self.facts_for(eg, xc) {
+            derived |= self.add_fact(eg, Fact { dist: dclass, ..f });
+        }
+        for pc in self.percore_for(eg, xc) {
+            derived |= self.add_percore(eg, PerCoreFact { dist: dclass, bases: pc.bases });
         }
         derived
     }

@@ -78,6 +78,10 @@ impl LayerReport {
     pub fn to_json(&self) -> Json {
         Json::Obj(vec![
             ("layer".into(), Json::Num(self.layer as f64)),
+            (
+                "stage".into(),
+                self.stage.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+            ),
             ("verified".into(), Json::Bool(self.verified)),
             ("memoized".into(), Json::Bool(self.memoized)),
             ("egraph_nodes".into(), Json::Num(self.egraph_nodes as f64)),
@@ -90,6 +94,8 @@ impl LayerReport {
     pub fn from_json(doc: &Json) -> Result<LayerReport> {
         Ok(LayerReport {
             layer: num_field(doc, "layer")? as u32,
+            // optional for compatibility with pre-pipeline captures
+            stage: doc.get("stage").and_then(Json::as_f64).map(|s| s as u32),
             verified: bool_field(doc, "verified")?,
             memoized: bool_field(doc, "memoized")?,
             egraph_nodes: num_field(doc, "egraph_nodes")? as usize,
@@ -283,6 +289,7 @@ mod tests {
             },
             layers: vec![LayerReport {
                 layer: 3,
+                stage: Some(1),
                 verified: false,
                 memoized: false,
                 egraph_nodes: 120,
@@ -306,6 +313,7 @@ mod tests {
         assert_eq!(back.discrepancies()[0].layer, Some(3));
         assert_eq!(back.layers.len(), 1);
         assert_eq!(back.layers[0].egraph_nodes, 120);
+        assert_eq!(back.layers[0].stage, Some(1));
         assert_eq!(back.total, report.total);
         assert_eq!(back.stopwatch.phases().count(), 2);
     }

@@ -1,0 +1,234 @@
+//! Plan-driven parallelism transform engine.
+//!
+//! The model zoo used to hand-write every distributed graph next to its
+//! baseline — four SPMD variants, each a near-duplicate of the baseline
+//! builder with collectives spliced in. This module replaces that
+//! duplication with a mechanical derivation: [`apply`] takes a baseline
+//! (single-device) [`Graph`] plus a [`ParallelPlan`] and derives the
+//! distributed graph, its per-core shapes, its collectives and its input
+//! [`Annotation`]s.
+//!
+//! The engine covers the zoo's production parallelization techniques:
+//!
+//! * **Tensor parallelism** — column/row-sharded projections; partial
+//!   products discharged by `all-reduce` at the first consumer that needs
+//!   a replicated value (Megatron-style).
+//! * **Sequence parallelism** — the same plan with a token-sharded
+//!   residual stream; the engine derives the `all-gather` entering each
+//!   attention/MLP section and the `reduce-scatter` discharge for free
+//!   from the generic placement rules.
+//! * **Expert parallelism** — stacked expert weights sharded along the
+//!   expert dim; the baseline's unrolled expert-sum loop collapses to the
+//!   core-local terms plus one `all-reduce` (the loop-redistribution
+//!   pattern of the paper's Figure 8).
+//! * **Pipeline parallelism** — contiguous layer ranges assigned to
+//!   stages, boundary values carried by [`Op::Send`]/[`Op::Recv`] pairs,
+//!   per-node stage annotations in [`crate::ir::Meta::stage`].
+//! * **Data parallelism / ZeRO** — batch-sharded activations; gradient
+//!   contractions become per-core partials discharged by `all-reduce`
+//!   (ZeRO-0) or `reduce-scatter` against sharded optimizer states
+//!   (ZeRO-1/2), with parameter shards gathered on use (stage 2).
+//! * **Combined** pipeline × tensor parallelism: the tensor transform per
+//!   stage, then stage splitting — the SPMD width stays the per-stage
+//!   tensor degree, stages are carried as metadata.
+//!
+//! The derivation is a single forward pass that assigns every baseline
+//! node a *placement* (replicated / sharded / per-core partial / per-core
+//! distinct) and emits the distributed node under local shapes, inserting
+//! a collective whenever a consumer demands a placement its operand does
+//! not have. The hand-built builders remain in the zoo as golden
+//! references; the differential tests in [`crate::proptest`] check the
+//! engine's output verifies against the baseline *and* agrees numerically
+//! with the golden builders.
+
+mod pipeline;
+mod shard;
+
+#[cfg(test)]
+mod tests;
+
+use crate::error::{Result, ScalifyError};
+use crate::ir::{Annotation, Graph};
+use crate::modelgen::Parallelism;
+use crate::verifier::GraphPair;
+
+pub use pipeline::stage_split;
+
+/// How the plan places one (named) baseline parameter on the mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardRule {
+    /// Full replica on every core (the default).
+    Replicated,
+    /// Split evenly along `dim` across the mesh.
+    Shard {
+        /// Baseline dimension that is split.
+        dim: usize,
+    },
+}
+
+/// Source site stamped onto engine-inserted collectives (mirrors the
+/// framework function that would emit the collective in a real stack,
+/// e.g. `moe.py:84 moe_local`). When absent, inserted collectives inherit
+/// the metadata of the value they discharge.
+#[derive(Clone, Debug)]
+pub struct SiteSpec {
+    /// Source file.
+    pub file: String,
+    /// Source line.
+    pub line: u32,
+    /// Enclosing framework function.
+    pub func: String,
+}
+
+/// A parallelization plan: the technique plus the parameter placements.
+///
+/// Parameter rules match by **name suffix** (first match wins) so one rule
+/// covers every layer's instance of a weight (`"q_proj"` matches
+/// `l0.q_proj`, `l1.q_proj`, …). Unmatched parameters are replicated.
+#[derive(Clone, Debug)]
+pub struct ParallelPlan {
+    /// Parallelization technique (degree and flavor).
+    pub kind: Parallelism,
+    /// `(name-suffix, rule)` placement table.
+    pub params: Vec<(String, ShardRule)>,
+    /// Optional site stamped onto inserted collectives.
+    pub collective_site: Option<SiteSpec>,
+}
+
+impl ParallelPlan {
+    /// Plan with no sharded parameters (everything replicated).
+    pub fn new(kind: Parallelism) -> ParallelPlan {
+        ParallelPlan { kind, params: Vec::new(), collective_site: None }
+    }
+
+    /// Add a shard rule: parameters whose name ends with `suffix` split
+    /// along `dim`.
+    pub fn shard(mut self, suffix: &str, dim: usize) -> ParallelPlan {
+        self.params.push((suffix.to_owned(), ShardRule::Shard { dim }));
+        self
+    }
+
+    /// Pin parameters whose name ends with `suffix` to full replication
+    /// (overrides later rules; useful to exempt one tensor from a broad
+    /// suffix).
+    pub fn replicate(mut self, suffix: &str) -> ParallelPlan {
+        self.params.push((suffix.to_owned(), ShardRule::Replicated));
+        self
+    }
+
+    /// Stamp inserted collectives with a fixed source site.
+    pub fn collectives_at(mut self, file: &str, line: u32, func: &str) -> ParallelPlan {
+        self.collective_site =
+            Some(SiteSpec { file: file.to_owned(), line, func: func.to_owned() });
+        self
+    }
+
+    /// Placement rule for a parameter name (first matching suffix wins).
+    pub fn rule_for(&self, name: &str) -> ShardRule {
+        self.params
+            .iter()
+            .find(|(suffix, _)| name.ends_with(suffix.as_str()))
+            .map(|(_, r)| *r)
+            .unwrap_or(ShardRule::Replicated)
+    }
+
+    /// Shard degree of the SPMD mesh this plan populates (1 for pure
+    /// pipeline plans, which replicate rather than shard).
+    pub fn shard_degree(&self) -> u32 {
+        match self.kind {
+            Parallelism::Tensor { tp }
+            | Parallelism::Sequence { tp }
+            | Parallelism::FlashDecoding { tp } => tp,
+            Parallelism::Expert { ep } => ep,
+            Parallelism::Data { dp, .. } => dp,
+            Parallelism::Pipeline { .. } => 1,
+            Parallelism::Combined { tp, .. } => tp,
+        }
+    }
+}
+
+/// Derive the distributed graph for `base` under `plan` and pair them.
+///
+/// The baseline must be a validated single-device graph. Errors are typed
+/// [`ScalifyError::ModelSpec`]: indivisible shard dims, placements the
+/// engine cannot reconcile, pipeline plans without layer tags, and every
+/// other way a plan can fail to apply.
+pub fn apply(base: &Graph, plan: &ParallelPlan) -> Result<GraphPair> {
+    base.validate().map_err(|e| e.context("transform baseline"))?;
+    if base.num_cores != 1 {
+        return Err(ScalifyError::model_spec(format!(
+            "transform baseline must be single-device, got {} cores",
+            base.num_cores
+        )));
+    }
+    if base.nodes.iter().any(|n| n.op.is_collective() || n.op.is_boundary()) {
+        return Err(ScalifyError::model_spec(
+            "transform baseline already contains collectives or send/recv",
+        ));
+    }
+    match plan.kind {
+        Parallelism::FlashDecoding { .. } => Err(ScalifyError::model_spec(
+            "flash decoding restructures the softmax and is not plan-derivable; \
+             use the hand-built builder (modelgen::llama)",
+        )),
+        Parallelism::Pipeline { pp } => {
+            let dist = stage_split(base, pp, pp)?;
+            let annotations = replicated_annotations(base, &dist);
+            GraphPair::try_new(base.clone(), dist, annotations)
+        }
+        Parallelism::Combined { pp, tp } => {
+            if tp == 0 || pp == 0 {
+                return Err(ScalifyError::model_spec("combined degrees must be >= 1"));
+            }
+            let (sharded, ann) = shard::shard_transform(base, plan, tp)?;
+            // the SPMD width stays the per-stage tensor degree; pipeline
+            // stages are metadata + send/recv boundaries on top
+            let dist = stage_split(&sharded, pp, tp)?;
+            // splitting re-numbers nodes (send/recv interleave); re-target
+            // the annotations through the preserved parameter order
+            let old_params = sharded.parameters();
+            let new_params = dist.parameters();
+            let ann = ann
+                .into_iter()
+                .map(|mut a| {
+                    if let Some(pos) =
+                        old_params.iter().position(|&p| p == a.distributed)
+                    {
+                        a.distributed = new_params[pos];
+                    }
+                    a
+                })
+                .collect();
+            GraphPair::try_new(base.clone(), dist, ann)
+        }
+        _ => {
+            let degree = plan.shard_degree();
+            if degree == 0 {
+                return Err(ScalifyError::model_spec("parallelism degree must be >= 1"));
+            }
+            let (dist, annotations) = shard::shard_transform(base, plan, degree)?;
+            GraphPair::try_new(base.clone(), dist, annotations)
+        }
+    }
+}
+
+/// Positional replicated annotations for a pipeline pair (every parameter
+/// of the stage-split graph is the baseline parameter, relocated).
+fn replicated_annotations(base: &Graph, dist: &Graph) -> Vec<Annotation> {
+    base.parameters()
+        .into_iter()
+        .zip(dist.parameters())
+        .map(|(b, d)| Annotation::replicated(b, d))
+        .collect()
+}
+
+/// Re-intern a node's metadata into a new graph (thin alias over
+/// [`Graph::import_meta`] for the transform builders' call shape).
+pub(crate) fn remap_meta(
+    src: &Graph,
+    dst: &mut Graph,
+    meta: &crate::ir::Meta,
+) -> crate::ir::Meta {
+    dst.import_meta(src, meta)
+}
+

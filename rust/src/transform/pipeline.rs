@@ -1,0 +1,102 @@
+//! Pipeline stage splitting: assign contiguous layer ranges to stages,
+//! annotate node ownership ([`crate::ir::Meta::stage`]) and carry every
+//! cross-stage value through an explicit [`Op::Send`]/[`Op::Recv`] pair.
+//!
+//! The result stays one graph (the verifier's unit of work): stages are
+//! placement metadata, boundary transfers are identity-semantics ops the
+//! relation engine sees through, and the per-layer partition keeps
+//! verifying each stage's layers in their own bounded e-graphs.
+
+use super::remap_meta;
+use crate::error::{Result, ScalifyError};
+use crate::ir::{Graph, NodeId, Op};
+use rustc_hash::FxHashMap;
+
+/// Split `g` into `pp` pipeline stages over contiguous layer ranges.
+///
+/// * Every node tagged with layer `l` is owned by stage
+///   `rank(l) * pp / L` (balanced contiguous chunks over the `L` distinct
+///   layer tags, in order).
+/// * Nodes without a layer tag (entry activations, rotary tables, final
+///   epilogue) are stage-less: they are considered resident on every
+///   stage and never generate transfers — the framework replicates such
+///   tensors to all pipeline ranks.
+/// * Each def-use edge crossing stages gets a `send` on the producer's
+///   stage and a matching `recv` on the consumer's, one channel per
+///   transferred value and destination.
+///
+/// `num_cores` sets the SPMD width of the result: `pp` for a pure
+/// pipeline, or the per-stage tensor degree for combined pipeline×tensor
+/// plans.
+pub fn stage_split(g: &Graph, pp: u32, num_cores: u32) -> Result<Graph> {
+    if pp == 0 {
+        return Err(ScalifyError::model_spec("pipeline degree must be >= 1"));
+    }
+    let mut layers: Vec<u32> = Vec::new();
+    for n in &g.nodes {
+        if let Some(l) = n.meta.layer {
+            if !layers.contains(&l) {
+                layers.push(l);
+            }
+        }
+    }
+    layers.sort_unstable();
+    if (layers.len() as u32) < pp {
+        return Err(ScalifyError::model_spec(format!(
+            "pipeline degree {pp} exceeds the {} tagged layers",
+            layers.len()
+        )));
+    }
+    let stage_of_layer: FxHashMap<u32, u32> = layers
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (l, (i as u32 * pp) / layers.len() as u32))
+        .collect();
+    let stage_of = |g: &Graph, id: NodeId| -> Option<u32> {
+        g.node(id).meta.layer.and_then(|l| stage_of_layer.get(&l).copied())
+    };
+
+    let mut out = Graph::new(g.name.clone(), num_cores);
+    let mut remap: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+    // (producer, destination stage) → recv node carrying the value there
+    let mut transfers: FxHashMap<(NodeId, u32), NodeId> = FxHashMap::default();
+    let mut next_channel = 0u32;
+
+    for n in &g.nodes {
+        let my_stage = stage_of(g, n.id);
+        let mut inputs = Vec::with_capacity(n.inputs.len());
+        for &src in &n.inputs {
+            let src_stage = stage_of(g, src);
+            let crossing = match (src_stage, my_stage) {
+                (Some(a), Some(b)) => a != b,
+                _ => false, // stage-less tensors are resident everywhere
+            };
+            if !crossing {
+                inputs.push(remap[&src]);
+                continue;
+            }
+            let dest = my_stage.expect("crossing implies a destination stage");
+            let recv = *transfers.entry((src, dest)).or_insert_with(|| {
+                let channel = next_channel;
+                next_channel += 1;
+                let from = remap[&src];
+                let shape = out.node(from).shape.clone();
+                // boundary ops inherit the producer's source site and layer
+                // (they belong to its slice); ownership differs per side
+                let mut send_meta = remap_meta(g, &mut out, &g.node(src).meta);
+                send_meta.stage = src_stage;
+                let send = out.push(Op::Send { channel }, vec![from], shape.clone(), send_meta);
+                let mut recv_meta = send_meta;
+                recv_meta.stage = Some(dest);
+                out.push(Op::Recv { channel }, vec![send], shape, recv_meta)
+            });
+            inputs.push(recv);
+        }
+        let mut meta = remap_meta(g, &mut out, &n.meta);
+        meta.stage = my_stage;
+        let id = out.push(n.op.clone(), inputs, n.shape.clone(), meta);
+        remap.insert(n.id, id);
+    }
+    out.outputs = g.outputs.iter().map(|o| remap[o]).collect();
+    Ok(out)
+}

@@ -1,0 +1,1124 @@
+//! The sharding transform: placement propagation + local-shape emission.
+//!
+//! One forward pass over the baseline assigns every node a [`Placement`]
+//! and emits its distributed counterpart under per-core shapes. Collective
+//! insertion is demand-driven: when an op combines operands whose
+//! placements disagree, the engine *coerces* an operand — `all-reduce` to
+//! discharge a partial into a replica, `reduce-scatter` to discharge it
+//! into a shard (sequence parallelism, ZeRO), `all-gather` to restore a
+//! shard, or a shrunk re-broadcast when the replicated side is free to be
+//! born sharded. Coerced variants are memoized per (node, target), so the
+//! sequence-parallel `all-gather` feeding q/k/v is emitted once.
+//!
+//! The expert-parallel unrolled-sum pattern is handled by two extra
+//! placements: a slice of a sharded tensor that stays inside the local
+//! shard is [`Placement::PerCore`] (per-core *distinct* values), a slice
+//! that falls outside is [`Placement::Remote`] and is not emitted at all —
+//! an `add` folding a remote term collapses to its local operand and the
+//! accumulated local sum becomes a per-core partial, discharged by one
+//! `all-reduce` exactly like the hand-built builder.
+
+use super::{remap_meta, ParallelPlan, ShardRule};
+use crate::error::{Result, ScalifyError};
+use crate::ir::{
+    infer_shape, Annotation, Graph, Meta, Node, NodeId, Op, ReduceKind, ReplicaGroups, Shape,
+};
+use crate::util::Sym;
+use rustc_hash::FxHashMap;
+
+macro_rules! spec {
+    ($($arg:tt)*) => {
+        ScalifyError::model_spec(format!($($arg)*))
+    };
+}
+
+/// Where a baseline node's value lives on the mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Placement {
+    /// Identical full value on every core.
+    Rep,
+    /// Core `r` holds shard `r` along `dim`.
+    Shard {
+        /// Sharded baseline dimension.
+        dim: usize,
+    },
+    /// Every core holds a full-shape contribution; cross-core `kind`
+    /// reduction yields the baseline value.
+    Partial {
+        /// Pending reduction.
+        kind: ReduceKind,
+    },
+    /// Per-core distinct values (e.g. each core's local expert slice).
+    PerCore,
+    /// Owned by other cores' iterations of the same program; not emitted.
+    Remote,
+}
+
+/// Coercion targets (memo key for emitted variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum Want {
+    /// Full replica.
+    Rep,
+    /// Shard along `dim`.
+    Shard(usize),
+}
+
+struct Builder<'a> {
+    base: &'a Graph,
+    plan: &'a ParallelPlan,
+    parts: u32,
+    out: Graph,
+    /// Baseline node → emitted distributed node (None = remote).
+    emit: Vec<Option<NodeId>>,
+    place: Vec<Placement>,
+    /// Coerced variants, memoized per (baseline node, target, consumer
+    /// layer). The layer is part of the key so a collective always lives
+    /// in the partition group of its consumer — sharing one gather across
+    /// layers would desynchronize the baseline/distributed boundary-output
+    /// lists the per-layer verification pairs positionally.
+    variants: FxHashMap<(NodeId, Want, Option<u32>), NodeId>,
+    /// (baseline param, dist param, rule) for the annotation list.
+    params: Vec<(NodeId, NodeId, ShardRule)>,
+}
+
+/// Apply the sharding plan to `base` over a `parts`-wide mesh.
+pub(crate) fn shard_transform(
+    base: &Graph,
+    plan: &ParallelPlan,
+    parts: u32,
+) -> Result<(Graph, Vec<Annotation>)> {
+    if parts == 1 {
+        // degenerate mesh: the distributed graph is the baseline
+        let dist = base.clone();
+        let ann = base
+            .parameters()
+            .into_iter()
+            .zip(dist.parameters())
+            .map(|(b, d)| Annotation::replicated(b, d))
+            .collect();
+        return Ok((dist, ann));
+    }
+    let mut b = Builder {
+        base,
+        plan,
+        parts,
+        out: Graph::new(format!("{}_dist", base.name.trim_end_matches("_base")), parts),
+        emit: vec![None; base.len()],
+        place: vec![Placement::Rep; base.len()],
+        variants: FxHashMap::default(),
+        params: Vec::new(),
+    };
+    for n in &base.nodes {
+        b.visit(n)?;
+    }
+    for &o in &base.outputs {
+        let id = match b.place[o.idx()] {
+            Placement::Rep => b.primary(o)?,
+            Placement::Shard { .. } | Placement::Partial { .. } => b.coerce(o, Want::Rep, None)?,
+            p => {
+                return Err(spec!(
+                    "graph output {} has non-collectable placement {p:?}",
+                    o.0
+                ))
+            }
+        };
+        b.out.outputs.push(id);
+    }
+    let (swept, remap) = sweep(&b.out);
+    let annotations = b
+        .params
+        .iter()
+        .map(|&(bid, did, rule)| {
+            let did = remap[&did];
+            match rule {
+                ShardRule::Replicated => Annotation::replicated(bid, did),
+                ShardRule::Shard { dim } => Annotation::shard(bid, did, dim, parts),
+            }
+        })
+        .collect();
+    Ok((swept, annotations))
+}
+
+impl<'a> Builder<'a> {
+    /// Emitted id of a baseline node (error when remote).
+    fn primary(&self, id: NodeId) -> Result<NodeId> {
+        self.emit[id.idx()]
+            .ok_or_else(|| spec!("node {} is remote but a local value is required", id.0))
+    }
+
+    fn push_node(&mut self, bn: &Node, op: Op, inputs: Vec<NodeId>) -> NodeId {
+        let shape = {
+            let shapes: Vec<&Shape> =
+                inputs.iter().map(|&i| &self.out.node(i).shape).collect();
+            infer_shape(&op, &shapes, self.parts)
+        };
+        let meta = remap_meta(self.base, &mut self.out, &bn.meta);
+        self.out.push(op, inputs, shape, meta)
+    }
+
+    /// Record emission + placement for a baseline node.
+    fn record(&mut self, bn: &Node, id: NodeId, place: Placement) {
+        self.emit[bn.id.idx()] = Some(id);
+        self.place[bn.id.idx()] = place;
+    }
+
+    /// Metadata for an engine-inserted collective discharging `src` on
+    /// behalf of a consumer in `layer`.
+    fn collective_meta(&mut self, src: NodeId, layer: Option<u32>) -> Meta {
+        let m = self.base.node(src).meta;
+        let layer = layer.or(m.layer);
+        match &self.plan.collective_site {
+            Some(site) => Meta {
+                file: self.out.interner.intern(&site.file),
+                line: site.line,
+                expr: Sym::EMPTY,
+                func: self.out.interner.intern(&site.func),
+                layer,
+                stage: m.stage,
+            },
+            None => {
+                let mut meta = remap_meta(self.base, &mut self.out, &m);
+                meta.layer = layer;
+                meta
+            }
+        }
+    }
+
+    /// True when a replicated variant of `id` was already emitted for any
+    /// consumer (used to pick the cheaper side to gather in a dot).
+    fn has_rep_variant(&self, id: NodeId) -> bool {
+        self.variants.keys().any(|&(n, w, _)| n == id && w == Want::Rep)
+    }
+
+    /// Produce (emitting at most one node, memoized per consumer layer)
+    /// the `want` variant of baseline node `id`. `layer` is the consuming
+    /// node's partition group; inserted collectives join it so the
+    /// baseline and distributed layer slices keep positionally-aligned
+    /// boundary outputs.
+    fn coerce(&mut self, id: NodeId, want: Want, layer: Option<u32>) -> Result<NodeId> {
+        let have = self.place[id.idx()];
+        match (have, want) {
+            (Placement::Rep, Want::Rep) => return self.primary(id),
+            (Placement::Shard { dim }, Want::Shard(d)) if dim == d => return self.primary(id),
+            _ => {}
+        }
+        let layer = layer.or_else(|| self.base.node(id).meta.layer);
+        if let Some(&v) = self.variants.get(&(id, want, layer)) {
+            return Ok(v);
+        }
+        let full = ReplicaGroups::full(self.parts);
+        let src = self.primary(id)?;
+        let src_shape = self.out.node(src).shape.clone();
+        let built = match (have, want) {
+            (Placement::Partial { kind }, Want::Rep) => {
+                let meta = self.collective_meta(id, layer);
+                self.out.push(
+                    Op::AllReduce { kind, groups: full },
+                    vec![src],
+                    src_shape,
+                    meta,
+                )
+            }
+            (Placement::Partial { kind: ReduceKind::Add }, Want::Shard(dim)) => {
+                if dim >= src_shape.rank() || src_shape.dims[dim] % self.parts as i64 != 0 {
+                    return Err(spec!(
+                        "cannot reduce-scatter node {} along dim {dim} across {} cores",
+                        id.0,
+                        self.parts
+                    ));
+                }
+                let mut dims = src_shape.dims.clone();
+                dims[dim] /= self.parts as i64;
+                let meta = self.collective_meta(id, layer);
+                self.out.push(
+                    Op::ReduceScatter { kind: ReduceKind::Add, dim, groups: full },
+                    vec![src],
+                    src_shape.with_dims(dims),
+                    meta,
+                )
+            }
+            (Placement::Shard { dim }, Want::Rep) => {
+                let mut dims = src_shape.dims.clone();
+                dims[dim] *= self.parts as i64;
+                let meta = self.collective_meta(id, layer);
+                self.out.push(
+                    Op::AllGather { dim, groups: full },
+                    vec![src],
+                    src_shape.with_dims(dims),
+                    meta,
+                )
+            }
+            (Placement::Rep, Want::Shard(dim)) => {
+                // a replicated broadcast whose target dim is broadcast-born
+                // can be re-emitted sharded at zero communication cost
+                let bn = self.base.node(id);
+                let Op::Broadcast { mapped, dims } = &bn.op else {
+                    return Err(spec!(
+                        "cannot shard replicated node {} ({}) along dim {dim}",
+                        id.0,
+                        bn.op.name()
+                    ));
+                };
+                if mapped.contains(&dim) || dims[dim] % self.parts as i64 != 0 {
+                    return Err(spec!(
+                        "broadcast {} cannot be born sharded along dim {dim}",
+                        id.0
+                    ));
+                }
+                let input = self.primary(bn.inputs[0])?;
+                if self.place[bn.inputs[0].idx()] != Placement::Rep {
+                    return Err(spec!("broadcast {} input is not replicated", id.0));
+                }
+                let mut local = dims.clone();
+                local[dim] /= self.parts as i64;
+                let op = Op::Broadcast { mapped: mapped.clone(), dims: local };
+                self.push_node(bn, op, vec![input])
+            }
+            _ => {
+                return Err(spec!(
+                    "no coercion from {have:?} to {want:?} for node {}",
+                    id.0
+                ))
+            }
+        };
+        self.variants.insert((id, want, layer), built);
+        Ok(built)
+    }
+
+    fn visit(&mut self, bn: &Node) -> Result<()> {
+        match &bn.op {
+            Op::Parameter { index, name } => {
+                let rule = self.plan.rule_for(name);
+                let shape = match rule {
+                    ShardRule::Replicated => bn.shape.clone(),
+                    ShardRule::Shard { dim } => {
+                        if dim >= bn.shape.rank()
+                            || bn.shape.dims[dim] % self.parts as i64 != 0
+                        {
+                            return Err(spec!(
+                                "parameter '{name}' dim {dim} ({:?}) is not divisible by \
+                                 {} shards",
+                                bn.shape.dims,
+                                self.parts
+                            ));
+                        }
+                        let mut dims = bn.shape.dims.clone();
+                        dims[dim] /= self.parts as i64;
+                        bn.shape.with_dims(dims)
+                    }
+                };
+                let meta = remap_meta(self.base, &mut self.out, &bn.meta);
+                let id = self.out.push(
+                    Op::Parameter { index: *index, name: name.clone() },
+                    vec![],
+                    shape,
+                    meta,
+                );
+                let place = match rule {
+                    ShardRule::Replicated => Placement::Rep,
+                    ShardRule::Shard { dim } => Placement::Shard { dim },
+                };
+                self.record(bn, id, place);
+                self.params.push((bn.id, id, rule));
+                Ok(())
+            }
+            Op::Constant(_) | Op::Iota { .. } => {
+                let meta = remap_meta(self.base, &mut self.out, &bn.meta);
+                let id = self.out.push(bn.op.clone(), vec![], bn.shape.clone(), meta);
+                self.record(bn, id, Placement::Rep);
+                Ok(())
+            }
+            op if (op.is_elementwise() && bn.inputs.len() == 1)
+                || matches!(op, Op::Convert { .. }) =>
+            {
+                self.visit_unary(bn)
+            }
+            op if op.is_elementwise() => self.visit_elementwise(bn),
+            Op::Dot { .. } => self.visit_dot(bn),
+            Op::Reshape { .. } => self.visit_reshape(bn),
+            Op::Transpose { .. } => self.visit_transpose(bn),
+            Op::Slice { .. } => self.visit_slice(bn),
+            Op::Concat { .. } => self.visit_concat(bn),
+            Op::Broadcast { .. } => self.visit_broadcast(bn),
+            Op::Reduce { .. } => self.visit_reduce(bn),
+            Op::Tuple | Op::GetTupleElement { .. } | Op::Custom { .. } => {
+                self.visit_opaque(bn)
+            }
+            _ => Err(spec!(
+                "baseline graph contains op '{}' the transform cannot place",
+                bn.op.name()
+            )),
+        }
+    }
+
+    fn visit_unary(&mut self, bn: &Node) -> Result<()> {
+        let x = bn.inputs[0];
+        match self.place[x.idx()] {
+            Placement::Remote => {
+                self.place[bn.id.idx()] = Placement::Remote;
+                Ok(())
+            }
+            Placement::Partial { kind }
+                if !(matches!(bn.op, Op::Convert { .. })
+                    || (bn.op == Op::Neg && kind == ReduceKind::Add)) =>
+            {
+                // discharge first: only linear ops commute with a pending
+                // sum (neg over a Max partial would turn it into a Min),
+                // while monotone converts commute with any reduction
+                let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, Placement::Rep);
+                Ok(())
+            }
+            p => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, p);
+                Ok(())
+            }
+        }
+    }
+
+    fn visit_elementwise(&mut self, bn: &Node) -> Result<()> {
+        let lyr = bn.meta.layer;
+        let places: Vec<Placement> =
+            bn.inputs.iter().map(|i| self.place[i.idx()]).collect();
+        // scalar operands broadcast implicitly and never constrain placement
+        let neutral: Vec<bool> = bn
+            .inputs
+            .iter()
+            .map(|i| self.base.node(*i).shape.rank() == 0)
+            .collect();
+
+        if places.contains(&Placement::Remote) {
+            // unrolled-sum collapse: an add folding a remote term takes its
+            // local operand's value; the accumulated local sum is a
+            // per-core partial of the baseline's full sum
+            if bn.op == Op::Add && bn.inputs.len() == 2 {
+                let keep = if places[0] == Placement::Remote { 1usize } else { 0 };
+                let keep_place = places[keep];
+                let other_remote = places[1 - keep] == Placement::Remote;
+                let collapsible = matches!(
+                    keep_place,
+                    Placement::PerCore | Placement::Partial { kind: ReduceKind::Add }
+                );
+                if other_remote && collapsible {
+                    self.emit[bn.id.idx()] = self.emit[bn.inputs[keep].idx()];
+                    self.place[bn.id.idx()] =
+                        Placement::Partial { kind: ReduceKind::Add };
+                    return Ok(());
+                }
+            }
+            // remote operand infects the whole expression (another core's
+            // iteration computes it)
+            self.place[bn.id.idx()] = Placement::Remote;
+            return Ok(());
+        }
+
+        if places.iter().any(|p| *p == Placement::PerCore) {
+            if !places.iter().all(|p| matches!(p, Placement::PerCore | Placement::Rep)) {
+                return Err(spec!(
+                    "node {} mixes per-core and sharded operands",
+                    bn.id.0
+                ));
+            }
+            let ins = bn
+                .inputs
+                .iter()
+                .map(|&i| self.primary(i))
+                .collect::<Result<Vec<_>>>()?;
+            self.check_elementwise_dims(bn, &ins, &neutral)?;
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record(bn, id, Placement::PerCore);
+            return Ok(());
+        }
+
+        // a single shard dim may appear among the operands; everything else
+        // is coerced toward it (or, failing that, toward replication)
+        let mut shard_dim: Option<usize> = None;
+        for (k, p) in places.iter().enumerate() {
+            if neutral[k] {
+                continue;
+            }
+            if let Placement::Shard { dim } = p {
+                match shard_dim {
+                    None => shard_dim = Some(*dim),
+                    Some(d) if d == *dim => {}
+                    Some(d) => {
+                        return Err(spec!(
+                            "node {} combines shards along dims {d} and {dim}",
+                            bn.id.0
+                        ))
+                    }
+                }
+            }
+        }
+        if let Some(d) = shard_dim {
+            if let Some(ins) = self.try_gather_operands(bn, &neutral, Want::Shard(d)) {
+                self.check_elementwise_dims(bn, &ins, &neutral)?;
+                let id = self.push_node(bn, bn.op.clone(), ins);
+                self.record(bn, id, Placement::Shard { dim: d });
+                return Ok(());
+            }
+            // some operand could not be sharded: fall back to replication
+            let ins = bn
+                .inputs
+                .iter()
+                .map(|&i| self.coerce(i, Want::Rep, lyr))
+                .collect::<Result<Vec<_>>>()?;
+            self.check_elementwise_dims(bn, &ins, &neutral)?;
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record(bn, id, Placement::Rep);
+            return Ok(());
+        }
+
+        let partials: Vec<Option<ReduceKind>> = places
+            .iter()
+            .map(|p| match p {
+                Placement::Partial { kind } => Some(*kind),
+                _ => None,
+            })
+            .collect();
+        if partials.iter().any(|p| p.is_some()) {
+            // every operand — including implicit-broadcast scalars — must
+            // itself be an Add-partial: (Σa) ± (Σb) = Σ(a ± b), but a
+            // non-partial term folded into a partial would be summed once
+            // per core by the eventual discharge
+            let all_add = partials.iter().all(|p| *p == Some(ReduceKind::Add));
+            if matches!(bn.op, Op::Add | Op::Sub) && all_add {
+                // sums of per-core partials stay partial
+                let ins = bn
+                    .inputs
+                    .iter()
+                    .map(|&i| self.primary(i))
+                    .collect::<Result<Vec<_>>>()?;
+                self.check_elementwise_dims(bn, &ins, &neutral)?;
+                let id = self.push_node(bn, bn.op.clone(), ins);
+                self.record(bn, id, Placement::Partial { kind: ReduceKind::Add });
+                return Ok(());
+            }
+            let ins = bn
+                .inputs
+                .iter()
+                .map(|&i| self.coerce(i, Want::Rep, lyr))
+                .collect::<Result<Vec<_>>>()?;
+            self.check_elementwise_dims(bn, &ins, &neutral)?;
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record(bn, id, Placement::Rep);
+            return Ok(());
+        }
+
+        let ins = bn
+            .inputs
+            .iter()
+            .map(|&i| self.primary(i))
+            .collect::<Result<Vec<_>>>()?;
+        self.check_elementwise_dims(bn, &ins, &neutral)?;
+        let id = self.push_node(bn, bn.op.clone(), ins);
+        self.record(bn, id, Placement::Rep);
+        Ok(())
+    }
+
+    /// Coerce every non-neutral operand to `want`; None when any operand
+    /// cannot be coerced (no nodes from failed attempts survive the dead
+    /// sweep).
+    fn try_gather_operands(
+        &mut self,
+        bn: &Node,
+        neutral: &[bool],
+        want: Want,
+    ) -> Option<Vec<NodeId>> {
+        let mut ins = Vec::with_capacity(bn.inputs.len());
+        for (k, &i) in bn.inputs.iter().enumerate() {
+            if neutral[k] {
+                ins.push(self.primary(i).ok()?);
+                continue;
+            }
+            ins.push(self.coerce(i, want, bn.meta.layer).ok()?);
+        }
+        Some(ins)
+    }
+
+    /// Non-scalar operands of an elementwise op must agree on (local) dims.
+    fn check_elementwise_dims(
+        &self,
+        bn: &Node,
+        ins: &[NodeId],
+        neutral: &[bool],
+    ) -> Result<()> {
+        let mut dims: Option<&[i64]> = None;
+        for (k, &i) in ins.iter().enumerate() {
+            if neutral[k] {
+                continue;
+            }
+            let d = &self.out.node(i).shape.dims;
+            match dims {
+                None => dims = Some(d),
+                Some(prev) if prev == d.as_slice() => {}
+                Some(prev) => {
+                    return Err(spec!(
+                        "node {} operands disagree on local shape ({prev:?} vs {d:?})",
+                        bn.id.0
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn visit_dot(&mut self, bn: &Node) -> Result<()> {
+        let Op::Dot { lhs_contract, rhs_contract, lhs_batch, rhs_batch } = &bn.op else {
+            unreachable!()
+        };
+        let (li, ri) = (bn.inputs[0], bn.inputs[1]);
+        let (mut lp, mut rp) = (self.place[li.idx()], self.place[ri.idx()]);
+        if lp == Placement::Remote || rp == Placement::Remote {
+            self.place[bn.id.idx()] = Placement::Remote;
+            return Ok(());
+        }
+        if lp == Placement::PerCore || rp == Placement::PerCore {
+            if !matches!(lp, Placement::PerCore | Placement::Rep)
+                || !matches!(rp, Placement::PerCore | Placement::Rep)
+            {
+                return Err(spec!("dot {} mixes per-core and sharded operands", bn.id.0));
+            }
+            let ins = vec![self.primary(li)?, self.primary(ri)?];
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record(bn, id, Placement::PerCore);
+            return Ok(());
+        }
+
+        // resolve partials: a dot is bilinear, so one Add-partial operand
+        // against a replicated one keeps the partial; anything else is
+        // discharged up front
+        let mut out_partial: Option<ReduceKind> = None;
+        let (mut lid, mut rid) = (self.primary(li)?, self.primary(ri)?);
+        match (lp, rp) {
+            (Placement::Partial { kind: ReduceKind::Add }, Placement::Rep) => {
+                out_partial = Some(ReduceKind::Add);
+                lp = Placement::Rep;
+            }
+            (Placement::Rep, Placement::Partial { kind: ReduceKind::Add }) => {
+                out_partial = Some(ReduceKind::Add);
+                rp = Placement::Rep;
+            }
+            _ => {
+                if matches!(lp, Placement::Partial { .. }) {
+                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
+                    lp = Placement::Rep;
+                }
+                if matches!(rp, Placement::Partial { .. }) {
+                    rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
+                    rp = Placement::Rep;
+                }
+            }
+        }
+
+        // shard resolution: gather operands until the remaining shards form
+        // a supported pattern (matching contraction, matching batch, or a
+        // single free dim)
+        let result_place = loop {
+            let ls = match lp {
+                Placement::Shard { dim } => Some(dim),
+                _ => None,
+            };
+            let rs = match rp {
+                Placement::Shard { dim } => Some(dim),
+                _ => None,
+            };
+            match (ls, rs) {
+                (None, None) => {
+                    break match out_partial {
+                        Some(kind) => Placement::Partial { kind },
+                        None => Placement::Rep,
+                    }
+                }
+                (Some(dl), _) if lhs_contract.contains(&dl) => {
+                    let pos = lhs_contract.iter().position(|&x| x == dl).unwrap();
+                    let matching =
+                        rs.is_some_and(|dr| rhs_contract.get(pos) == Some(&dr));
+                    if matching {
+                        // contracted shard on both sides: per-core partial
+                        // products pending a cross-core sum
+                        if !matches!(out_partial, None | Some(ReduceKind::Add)) {
+                            return Err(spec!("dot {} mixes partial kinds", bn.id.0));
+                        }
+                        break Placement::Partial { kind: ReduceKind::Add };
+                    }
+                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
+                    lp = Placement::Rep;
+                }
+                (_, Some(dr)) if rhs_contract.contains(&dr) => {
+                    // contract-sharded rhs without a matching lhs shard:
+                    // gather it (the ZeRO-2 forward weight gather)
+                    rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
+                    rp = Placement::Rep;
+                }
+                (Some(dl), Some(dr))
+                    if lhs_batch.contains(&dl) && rhs_batch.contains(&dr) =>
+                {
+                    let bl = lhs_batch.iter().position(|&x| x == dl);
+                    let br = rhs_batch.iter().position(|&x| x == dr);
+                    if bl == br {
+                        if out_partial.is_some() {
+                            return Err(spec!(
+                                "dot {} combines a partial with sharded batches",
+                                bn.id.0
+                            ));
+                        }
+                        // batch dims lead the output dims
+                        break Placement::Shard { dim: bl.unwrap() };
+                    }
+                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
+                    lp = Placement::Rep;
+                }
+                (Some(dl), None) if lhs_batch.contains(&dl) => {
+                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
+                    lp = Placement::Rep;
+                }
+                (None, Some(dr)) if rhs_batch.contains(&dr) => {
+                    rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
+                    rp = Placement::Rep;
+                }
+                (Some(_), Some(_)) => {
+                    // free shards on both sides: gather one operand. Prefer
+                    // the side whose replicated variant already exists (the
+                    // ZeRO weight gathered by the forward pass); otherwise
+                    // gather the lhs — the sequence-parallel all-gather of
+                    // the activations
+                    if self.has_rep_variant(ri) && !self.has_rep_variant(li) {
+                        rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
+                        rp = Placement::Rep;
+                    } else {
+                        lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
+                        lp = Placement::Rep;
+                    }
+                }
+                (Some(dl), None) => {
+                    if out_partial.is_some() {
+                        return Err(spec!(
+                            "dot {} combines a partial with a sharded operand",
+                            bn.id.0
+                        ));
+                    }
+                    break Placement::Shard {
+                        dim: free_out_dim(
+                            self.base.node(li).shape.rank(),
+                            lhs_contract,
+                            lhs_batch,
+                            dl,
+                            lhs_batch.len(),
+                            0,
+                        )?,
+                    };
+                }
+                (None, Some(dr)) => {
+                    if out_partial.is_some() {
+                        return Err(spec!(
+                            "dot {} combines a partial with a sharded operand",
+                            bn.id.0
+                        ));
+                    }
+                    let lhs_rank = self.base.node(li).shape.rank();
+                    let n_lhs_free = lhs_rank - lhs_contract.len() - lhs_batch.len();
+                    break Placement::Shard {
+                        dim: free_out_dim(
+                            self.base.node(ri).shape.rank(),
+                            rhs_contract,
+                            rhs_batch,
+                            dr,
+                            lhs_batch.len(),
+                            n_lhs_free,
+                        )?,
+                    };
+                }
+            }
+        };
+        let id = self.push_node(bn, bn.op.clone(), vec![lid, rid]);
+        self.record(bn, id, result_place);
+        Ok(())
+    }
+
+    fn visit_reshape(&mut self, bn: &Node) -> Result<()> {
+        let Op::Reshape { dims } = &bn.op else { unreachable!() };
+        let x = bn.inputs[0];
+        match self.place[x.idx()] {
+            Placement::Remote => {
+                self.place[bn.id.idx()] = Placement::Remote;
+                Ok(())
+            }
+            Placement::Shard { dim } => {
+                let old = &self.base.node(x).shape.dims;
+                let new_dim = map_shard_dim(old, dims, dim, self.parts as i64)
+                    .map_err(|m| spec!("reshape {}: {m}", bn.id.0))?;
+                let mut local = dims.clone();
+                local[new_dim] /= self.parts as i64;
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, Op::Reshape { dims: local }, vec![xv]);
+                self.record(bn, id, Placement::Shard { dim: new_dim });
+                Ok(())
+            }
+            p => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, p);
+                Ok(())
+            }
+        }
+    }
+
+    fn visit_transpose(&mut self, bn: &Node) -> Result<()> {
+        let Op::Transpose { perm } = &bn.op else { unreachable!() };
+        let x = bn.inputs[0];
+        match self.place[x.idx()] {
+            Placement::Remote => {
+                self.place[bn.id.idx()] = Placement::Remote;
+                Ok(())
+            }
+            Placement::Shard { dim } => {
+                let new_dim = perm
+                    .iter()
+                    .position(|&p| p == dim)
+                    .ok_or_else(|| spec!("transpose {} drops the shard dim", bn.id.0))?;
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, Placement::Shard { dim: new_dim });
+                Ok(())
+            }
+            p => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, p);
+                Ok(())
+            }
+        }
+    }
+
+    fn visit_slice(&mut self, bn: &Node) -> Result<()> {
+        let Op::Slice { starts, limits, strides } = &bn.op else { unreachable!() };
+        let x = bn.inputs[0];
+        match self.place[x.idx()] {
+            Placement::Remote => {
+                self.place[bn.id.idx()] = Placement::Remote;
+                Ok(())
+            }
+            Placement::Partial { .. } => {
+                // the verifier's slice rule does not see through partials;
+                // discharge first
+                let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, Placement::Rep);
+                Ok(())
+            }
+            Placement::Shard { dim } => {
+                if strides.iter().any(|&s| s != 1) {
+                    return Err(spec!("strided slice {} on a sharded tensor", bn.id.0));
+                }
+                let base_dims = &self.base.node(x).shape.dims;
+                let local = base_dims[dim] / self.parts as i64;
+                if starts[dim] == 0 && limits[dim] == base_dims[dim] {
+                    // full range on the shard dim: pass through locally
+                    let mut l = limits.clone();
+                    l[dim] = local;
+                    self.emit_local_slice(bn, x, starts.clone(), l, Placement::Shard { dim })
+                } else if limits[dim] <= local {
+                    // stays inside the local shard: each core reads its own
+                    // expert/chunk — a per-core distinct value
+                    self.emit_local_slice(
+                        bn,
+                        x,
+                        starts.clone(),
+                        limits.clone(),
+                        Placement::PerCore,
+                    )
+                } else if starts[dim] >= local {
+                    // other cores' iterations cover this range
+                    self.place[bn.id.idx()] = Placement::Remote;
+                    Ok(())
+                } else {
+                    Err(spec!(
+                        "slice {} straddles the shard boundary (dim {dim}, [{}, {}) \
+                         with local extent {local})",
+                        bn.id.0,
+                        starts[dim],
+                        limits[dim]
+                    ))
+                }
+            }
+            p => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, p);
+                Ok(())
+            }
+        }
+    }
+
+    /// Emit a localized slice — or alias the input when the local slice is
+    /// the identity (keeps the verifier's per-core derivation chain short,
+    /// and matches the framework idiom of reshaping the whole local shard).
+    fn emit_local_slice(
+        &mut self,
+        bn: &Node,
+        x: NodeId,
+        starts: Vec<i64>,
+        limits: Vec<i64>,
+        place: Placement,
+    ) -> Result<()> {
+        let xv = self.primary(x)?;
+        let local_dims = &self.out.node(xv).shape.dims;
+        let identity = starts.iter().all(|&s| s == 0)
+            && limits.iter().zip(local_dims).all(|(&l, &d)| l == d);
+        if identity {
+            self.emit[bn.id.idx()] = Some(xv);
+            self.place[bn.id.idx()] = place;
+            return Ok(());
+        }
+        let strides = vec![1i64; starts.len()];
+        let id = self.push_node(bn, Op::Slice { starts, limits, strides }, vec![xv]);
+        self.record(bn, id, place);
+        Ok(())
+    }
+
+    fn visit_concat(&mut self, bn: &Node) -> Result<()> {
+        let Op::Concat { dim } = bn.op else { unreachable!() };
+        let lyr = bn.meta.layer;
+        let places: Vec<Placement> =
+            bn.inputs.iter().map(|i| self.place[i.idx()]).collect();
+        if places.contains(&Placement::Remote) {
+            self.place[bn.id.idx()] = Placement::Remote;
+            return Ok(());
+        }
+        let lead = places[0];
+        let uniform = places.iter().all(|p| *p == lead);
+        let place = if uniform {
+            if let Placement::Shard { dim: d } = lead {
+                if d == dim {
+                    return Err(spec!("concat {} along its shard dim", bn.id.0));
+                }
+            }
+            lead
+        } else {
+            Placement::Rep
+        };
+        let ins = if uniform {
+            bn.inputs
+                .iter()
+                .map(|&i| self.primary(i))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            bn.inputs
+                .iter()
+                .map(|&i| self.coerce(i, Want::Rep, lyr))
+                .collect::<Result<Vec<_>>>()?
+        };
+        let id = self.push_node(bn, bn.op.clone(), ins);
+        self.record(bn, id, place);
+        Ok(())
+    }
+
+    fn visit_broadcast(&mut self, bn: &Node) -> Result<()> {
+        let Op::Broadcast { mapped, dims } = &bn.op else { unreachable!() };
+        let x = bn.inputs[0];
+        match self.place[x.idx()] {
+            Placement::Remote => {
+                self.place[bn.id.idx()] = Placement::Remote;
+                Ok(())
+            }
+            Placement::Shard { dim } => {
+                let out_dim = mapped[dim];
+                let mut local = dims.clone();
+                local[out_dim] /= self.parts as i64;
+                let xv = self.primary(x)?;
+                let op = Op::Broadcast { mapped: mapped.clone(), dims: local };
+                let id = self.push_node(bn, op, vec![xv]);
+                self.record(bn, id, Placement::Shard { dim: out_dim });
+                Ok(())
+            }
+            Placement::Partial { kind: ReduceKind::Add } => {
+                // broadcast commutes with the pending sum
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, Placement::Partial { kind: ReduceKind::Add });
+                Ok(())
+            }
+            Placement::Partial { .. } => {
+                let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, Placement::Rep);
+                Ok(())
+            }
+            p => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, p);
+                Ok(())
+            }
+        }
+    }
+
+    fn visit_reduce(&mut self, bn: &Node) -> Result<()> {
+        let Op::Reduce { kind, dims } = &bn.op else { unreachable!() };
+        let x = bn.inputs[0];
+        match self.place[x.idx()] {
+            Placement::Remote => {
+                self.place[bn.id.idx()] = Placement::Remote;
+                Ok(())
+            }
+            Placement::Partial { kind: pk } => {
+                if pk == *kind
+                    && matches!(pk, ReduceKind::Add | ReduceKind::Max | ReduceKind::Min)
+                {
+                    let xv = self.primary(x)?;
+                    let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                    self.record(bn, id, Placement::Partial { kind: pk });
+                } else {
+                    let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
+                    let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                    self.record(bn, id, Placement::Rep);
+                }
+                Ok(())
+            }
+            Placement::Shard { dim } => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                if dims.contains(&dim) {
+                    // the local reduce covers only this core's shard
+                    self.record(bn, id, Placement::Partial { kind: *kind });
+                } else {
+                    let new_dim = dim - dims.iter().filter(|&&d| d < dim).count();
+                    self.record(bn, id, Placement::Shard { dim: new_dim });
+                }
+                Ok(())
+            }
+            p => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, p);
+                Ok(())
+            }
+        }
+    }
+
+    fn visit_opaque(&mut self, bn: &Node) -> Result<()> {
+        let ok = bn
+            .inputs
+            .iter()
+            .all(|i| self.place[i.idx()] == Placement::Rep);
+        if !ok {
+            return Err(spec!(
+                "opaque op '{}' at {} requires replicated operands",
+                bn.op.name(),
+                bn.id.0
+            ));
+        }
+        let ins = bn
+            .inputs
+            .iter()
+            .map(|&i| self.primary(i))
+            .collect::<Result<Vec<_>>>()?;
+        let meta = remap_meta(self.base, &mut self.out, &bn.meta);
+        let id = self.out.push(bn.op.clone(), ins, bn.shape.clone(), meta);
+        self.record(bn, id, Placement::Rep);
+        Ok(())
+    }
+}
+
+/// Output dim a free operand dim lands on (batch dims, then lhs free, then
+/// rhs free).
+fn free_out_dim(
+    rank: usize,
+    contract: &[usize],
+    batch: &[usize],
+    d: usize,
+    n_batch: usize,
+    free_offset: usize,
+) -> Result<usize> {
+    let frees: Vec<usize> = (0..rank)
+        .filter(|i| !contract.contains(i) && !batch.contains(i))
+        .collect();
+    let p = frees
+        .iter()
+        .position(|&f| f == d)
+        .ok_or_else(|| spec!("shard dim {d} is not a free dot dim"))?;
+    Ok(n_batch + free_offset + p)
+}
+
+/// Map a sharded dim through a reshape by aligning factor groups. The
+/// shard must be the leading factor of its group and divide the group's
+/// leading output dim.
+pub(super) fn map_shard_dim(
+    old: &[i64],
+    new: &[i64],
+    d: usize,
+    parts: i64,
+) -> std::result::Result<usize, String> {
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < old.len() && j < new.len() {
+        let (gi0, gj0) = (i, j);
+        let mut a = old[i];
+        i += 1;
+        let mut b = new[j];
+        j += 1;
+        while a != b {
+            if a < b {
+                if i >= old.len() {
+                    return Err("reshape groups do not align".into());
+                }
+                a *= old[i];
+                i += 1;
+            } else {
+                if j >= new.len() {
+                    return Err("reshape groups do not align".into());
+                }
+                b *= new[j];
+                j += 1;
+            }
+        }
+        if (gi0..i).contains(&d) {
+            if d != gi0 {
+                return Err(format!(
+                    "shard dim {d} is not the leading factor of its reshape group"
+                ));
+            }
+            if new[gj0] % parts != 0 {
+                return Err(format!(
+                    "shard of {parts} parts does not divide target dim {} ({})",
+                    gj0, new[gj0]
+                ));
+            }
+            return Ok(gj0);
+        }
+    }
+    Err(format!("shard dim {d} not covered by the reshape"))
+}
+
+/// Drop nodes unreachable from the outputs (coercion fallbacks leave dead
+/// variants behind). Parameters are always kept so the distributed
+/// parameter list mirrors the baseline's. Returns the swept graph and the
+/// old→new id map for annotation fixup.
+fn sweep(g: &Graph) -> (Graph, FxHashMap<NodeId, NodeId>) {
+    let mut live = vec![false; g.len()];
+    let mut stack: Vec<NodeId> = g.outputs.clone();
+    stack.extend(g.parameters());
+    while let Some(id) = stack.pop() {
+        if live[id.idx()] {
+            continue;
+        }
+        live[id.idx()] = true;
+        stack.extend(g.node(id).inputs.iter().copied());
+    }
+    let mut out = Graph::new(g.name.clone(), g.num_cores);
+    let mut remap: FxHashMap<NodeId, NodeId> = FxHashMap::default();
+    for n in &g.nodes {
+        if !live[n.id.idx()] {
+            continue;
+        }
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|i| remap[i]).collect();
+        let meta = remap_meta(g, &mut out, &n.meta);
+        let id = out.push(n.op.clone(), inputs, n.shape.clone(), meta);
+        remap.insert(n.id, id);
+    }
+    out.outputs = g.outputs.iter().map(|o| remap[o]).collect();
+    (out, remap)
+}

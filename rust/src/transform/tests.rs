@@ -1,0 +1,151 @@
+//! Engine unit tests on hand-rolled micro baselines. The model-zoo-scale
+//! differential tests live in `modelgen::tests`, `proptest` and
+//! `tests/transform_engine.rs`.
+
+use super::shard::shard_transform;
+use super::*;
+use crate::baseline::numerical_verify;
+use crate::ir::{DType, Graph, GraphBuilder, Shape};
+use crate::modelgen::Parallelism;
+use crate::verifier::{Session, VerifyConfig};
+
+fn f32s(dims: &[i64]) -> Shape {
+    Shape::new(DType::F32, dims.to_vec())
+}
+
+fn session() -> Session {
+    Session::new(VerifyConfig { parallel: false, ..VerifyConfig::default() })
+}
+
+/// Y = X·W baseline for the matmul micro-tests.
+fn matmul_base() -> Graph {
+    let mut b = GraphBuilder::new("mm_base", 1);
+    b.at("mlp.py", 10).in_func("mlp_fwd").layer(Some(0));
+    let x = b.parameter("x", f32s(&[4, 16]));
+    let w = b.parameter("w", f32s(&[16, 8]));
+    let y = b.matmul(x, w);
+    b.output(y);
+    b.finish()
+}
+
+#[test]
+fn contracted_shard_discharges_with_allreduce() {
+    // Figure 3: X sharded dim1, W sharded dim0 → local dot is a partial,
+    // the engine discharges it at the graph output
+    let base = matmul_base();
+    let plan = ParallelPlan::new(Parallelism::Tensor { tp: 4 })
+        .shard("x", 1)
+        .shard("w", 0);
+    let pair = apply(&base, &plan).unwrap();
+    assert_eq!(pair.dist.num_cores, 4);
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "all-reduce"));
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(numerical_verify(&pair, 2, 1e-4, 7).equivalent);
+}
+
+#[test]
+fn column_shard_gathers_at_output() {
+    let base = matmul_base();
+    let plan = ParallelPlan::new(Parallelism::Tensor { tp: 2 }).shard("w", 1);
+    let pair = apply(&base, &plan).unwrap();
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "all-gather"));
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(numerical_verify(&pair, 2, 1e-4, 11).equivalent);
+}
+
+#[test]
+fn degree_one_is_identity() {
+    let base = matmul_base();
+    let plan = ParallelPlan::new(Parallelism::Tensor { tp: 1 }).shard("w", 1);
+    let (dist, ann) = shard_transform(&base, &plan, 1).unwrap();
+    assert_eq!(dist.len(), base.len());
+    assert_eq!(ann.len(), 2);
+}
+
+#[test]
+fn indivisible_shard_is_model_spec_error() {
+    let base = matmul_base();
+    let plan = ParallelPlan::new(Parallelism::Tensor { tp: 3 }).shard("w", 1);
+    let err = apply(&base, &plan).unwrap_err();
+    assert!(matches!(err, crate::error::ScalifyError::ModelSpec(_)), "{err}");
+}
+
+#[test]
+fn flash_decoding_plans_are_rejected() {
+    let base = matmul_base();
+    let plan = ParallelPlan::new(Parallelism::FlashDecoding { tp: 2 });
+    assert!(apply(&base, &plan).is_err());
+}
+
+/// Two tagged layers for the pipeline tests.
+fn layered_base() -> Graph {
+    let mut b = GraphBuilder::new("pipe_base", 1);
+    b.at("model.py", 5).in_func("model_fwd").layer(None);
+    let x = b.parameter("x", f32s(&[4, 8]));
+    b.layer(Some(0)).at("decoder.py", 20).in_func("decoder_layer");
+    let w0 = b.parameter("w0", f32s(&[8, 8]));
+    let h0 = b.matmul(x, w0);
+    let a0 = b.tanh(h0);
+    b.layer(Some(1)).at("decoder.py", 20).in_func("decoder_layer");
+    let w1 = b.parameter("w1", f32s(&[8, 8]));
+    let h1 = b.matmul(a0, w1);
+    let a1 = b.tanh(h1);
+    b.layer(None);
+    b.output(a1);
+    b.finish()
+}
+
+#[test]
+fn pipeline_split_inserts_boundary_pair_and_verifies() {
+    let base = layered_base();
+    let pair = apply(&base, &ParallelPlan::new(Parallelism::Pipeline { pp: 2 })).unwrap();
+    pair.dist.validate().unwrap();
+    assert_eq!(pair.dist.num_cores, 2);
+    let sends = pair.dist.nodes.iter().filter(|n| n.op.name() == "send").count();
+    let recvs = pair.dist.nodes.iter().filter(|n| n.op.name() == "recv").count();
+    assert_eq!((sends, recvs), (1, 1), "one boundary between two stages");
+    // stage ownership recorded
+    let stages: Vec<Option<u32>> = pair.dist.nodes.iter().map(|n| n.meta.stage).collect();
+    assert!(stages.contains(&Some(0)) && stages.contains(&Some(1)));
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(report.layers.iter().any(|l| l.stage == Some(1)));
+    assert!(numerical_verify(&pair, 2, 1e-4, 13).equivalent);
+}
+
+#[test]
+fn pipeline_degree_must_fit_layers() {
+    let base = layered_base();
+    let err = apply(&base, &ParallelPlan::new(Parallelism::Pipeline { pp: 3 })).unwrap_err();
+    assert!(err.message().contains("exceeds"), "{err}");
+}
+
+#[test]
+fn combined_pipeline_tensor_keeps_spmd_width() {
+    let base = layered_base();
+    let plan = ParallelPlan::new(Parallelism::Combined { pp: 2, tp: 2 })
+        .shard("w0", 1)
+        .shard("w1", 1);
+    let pair = apply(&base, &plan).unwrap();
+    // SPMD width is the per-stage tensor degree; stages ride as metadata
+    assert_eq!(pair.dist.num_cores, 2);
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "send"));
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "all-gather"));
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn map_shard_dim_split_and_merge() {
+    use super::shard::map_shard_dim;
+    // split H → (nh, hd)
+    assert_eq!(map_shard_dim(&[6, 8], &[6, 4, 2], 1, 2), Ok(1));
+    // merge (nh, hd) → H
+    assert_eq!(map_shard_dim(&[6, 4, 2], &[6, 8], 1, 2), Ok(1));
+    // 1:1
+    assert_eq!(map_shard_dim(&[6, 8], &[6, 8], 0, 2), Ok(0));
+    // shard not leading in its group
+    assert!(map_shard_dim(&[6, 4, 2], &[6, 8], 2, 2).is_err());
+}

@@ -177,6 +177,9 @@ pub enum Verdict {
 pub struct LayerReport {
     /// Layer tag.
     pub layer: u32,
+    /// Pipeline stage owning the layer (None outside pipeline
+    /// parallelism).
+    pub stage: Option<u32>,
     /// Verified?
     pub verified: bool,
     /// Served from the memo table?

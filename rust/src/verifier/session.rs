@@ -274,6 +274,7 @@ impl Session {
                 all_discrepancies.extend(outcome.discrepancies.iter().cloned());
                 reports.push(LayerReport {
                     layer: dslice.layer,
+                    stage: dslice.stage(),
                     verified: outcome.verified,
                     memoized,
                     egraph_nodes: outcome.egraph_nodes,

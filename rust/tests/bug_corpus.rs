@@ -1,0 +1,109 @@
+//! Bug-corpus integration suite (`cargo test --test bug_corpus`).
+//!
+//! Promoted from inline unit checks to a first-class suite: every
+//! catalog case — Table 4 (19 reproduced production bugs), Table 5 (5 new
+//! bugs) and the pipeline/data-parallel cases the transform engine opened
+//! — is asserted for **both** detection and localization precision
+//! against its paper-reported (or design-time) outcome. CI runs this
+//! suite as its own gate so a regression in any single case fails the
+//! build with the case id in the assertion message.
+
+use scalify::bugs::{
+    evaluate, new_bugs, parallel_transform_bugs, reproduced_bugs, BugCase, ExpectedLoc,
+    LocResult,
+};
+
+/// Assert one case keeps its catalogued detection + localization outcome.
+fn assert_case(case: &BugCase) {
+    let outcome = evaluate(case);
+    match case.expected {
+        ExpectedLoc::NotApplicable => {
+            // manifests outside graph compilation: Scalify must (correctly)
+            // report the compiled pair as equivalent
+            assert!(
+                !outcome.detected,
+                "{}: should be missed (outside the compiled graph), got {:?}",
+                case.id, outcome.sites
+            );
+        }
+        ExpectedLoc::Instruction => {
+            assert!(outcome.detected, "{}: not detected", case.id);
+            assert_eq!(
+                outcome.loc,
+                LocResult::Instruction,
+                "{}: expected instruction-precise localization at {}, got {:?} ({:?})",
+                case.id,
+                case.truth_site,
+                outcome.loc,
+                outcome.sites
+            );
+        }
+        ExpectedLoc::Function => {
+            assert!(outcome.detected, "{}: not detected", case.id);
+            assert!(
+                matches!(outcome.loc, LocResult::Instruction | LocResult::Function),
+                "{}: expected >= function-precise localization in {}(), got {:?} ({:?})",
+                case.id,
+                case.truth_func,
+                outcome.loc,
+                outcome.sites
+            );
+        }
+    }
+}
+
+#[test]
+fn corpus_sizes_match_paper() {
+    assert_eq!(reproduced_bugs().len(), 19, "Table 4 rows");
+    assert_eq!(new_bugs().len(), 5, "Table 5 rows");
+    assert!(
+        parallel_transform_bugs().len() >= 4,
+        "pipeline/data-parallel catalog cases"
+    );
+}
+
+#[test]
+fn reproduced_bugs_keep_their_outcomes() {
+    for case in reproduced_bugs() {
+        assert_case(&case);
+    }
+}
+
+#[test]
+fn new_bugs_keep_their_outcomes() {
+    for case in new_bugs() {
+        assert_case(&case);
+    }
+}
+
+#[test]
+fn parallel_transform_bugs_keep_their_outcomes() {
+    for case in parallel_transform_bugs() {
+        assert_case(&case);
+    }
+}
+
+#[test]
+fn every_case_has_usable_ground_truth() {
+    for case in reproduced_bugs()
+        .iter()
+        .chain(new_bugs().iter())
+        .chain(parallel_transform_bugs().iter())
+    {
+        match case.expected {
+            ExpectedLoc::NotApplicable => {}
+            _ => {
+                assert!(
+                    !case.truth_site.is_empty() && !case.truth_func.is_empty(),
+                    "{}: detectable case without a ground-truth site",
+                    case.id
+                );
+                assert!(
+                    case.truth_site.contains(':'),
+                    "{}: truth site must be file:line",
+                    case.id
+                );
+            }
+        }
+    }
+}
