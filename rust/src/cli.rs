@@ -127,6 +127,7 @@ pub const KNOWN_MODELS: &[&str] = &[
     "llama-tiny",
     "mixtral-8x7b",
     "mixtral-8x22b",
+    "mixtral-tiny",
     "dpstep-tiny",
     "dpstep-small",
 ];
@@ -158,6 +159,7 @@ pub fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> Result<
         "llama-tiny" => mk(LlamaConfig::tiny()),
         "mixtral-8x7b" => mk_mix(MixtralConfig::mixtral_8x7b()),
         "mixtral-8x22b" => mk_mix(MixtralConfig::mixtral_8x22b()),
+        "mixtral-tiny" => mk_mix(MixtralConfig::tiny()),
         "dpstep-tiny" => mk_dp(crate::modelgen::TrainStepConfig::tiny()),
         "dpstep-small" => mk_dp(crate::modelgen::TrainStepConfig::small()),
         other => Err(ScalifyError::model_spec(format!(
@@ -168,14 +170,15 @@ pub fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> Result<
 }
 
 /// Build a validated [`VerifyConfig`] from common CLI flags
-/// (`--threads N`, `--no-partition`, `--no-parallel`, `--no-memoize`).
+/// (`--threads N`, `--memo-capacity N`, `--no-partition`, `--no-parallel`,
+/// `--no-memoize`).
 pub fn config_from_flags(flags: &HashMap<String, String>) -> Result<VerifyConfig> {
     let mut b = VerifyConfig::builder();
-    if let Some(t) = flags.get("threads") {
-        let t: usize = t.parse().map_err(|_| {
-            ScalifyError::config(format!("--threads wants a positive integer, got '{t}'"))
-        })?;
-        b = b.threads(t);
+    if flags.contains_key("threads") {
+        b = b.threads(usize_flag(flags, "threads", 1)?);
+    }
+    if flags.contains_key("memo-capacity") {
+        b = b.memo_capacity(usize_flag(flags, "memo-capacity", 1)?);
     }
     if flags.contains_key("no-partition") {
         // whole-graph mode has a single task; parallel would be a no-op
@@ -188,6 +191,48 @@ pub fn config_from_flags(flags: &HashMap<String, String>) -> Result<VerifyConfig
         b = b.memoize(false);
     }
     b.build()
+}
+
+/// Parse an optional positive-integer flag, with a default.
+pub fn usize_flag(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: usize,
+) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(ScalifyError::config(format!(
+                "--{key} wants a positive integer, got '{v}'"
+            ))),
+        },
+    }
+}
+
+/// Build a validated [`crate::service::ServeConfig`] from `scalify serve`
+/// flags (`--addr`, `--cache-dir`, `--queue`, `--workers`, plus the
+/// common verifier flags).
+pub fn serve_config_from_flags(
+    flags: &HashMap<String, String>,
+) -> Result<crate::service::ServeConfig> {
+    let mut cfg = crate::service::ServeConfig {
+        verify: config_from_flags(flags)?,
+        // the CLI default is a fixed well-known port (the library default
+        // of port 0 is for tests); `--addr 127.0.0.1:0` still works for
+        // scripting against an ephemeral port
+        addr: "127.0.0.1:7878".into(),
+        ..Default::default()
+    };
+    if let Some(addr) = flags.get("addr") {
+        cfg.addr = addr.clone();
+    }
+    if let Some(dir) = flags.get("cache-dir") {
+        cfg.cache_dir = Some(PathBuf::from(dir));
+    }
+    cfg.queue_capacity = usize_flag(flags, "queue", cfg.queue_capacity)?;
+    cfg.workers = usize_flag(flags, "workers", cfg.workers)?;
+    Ok(cfg)
 }
 
 /// One `base dist [cores]` line of a batch manifest.
@@ -372,6 +417,57 @@ mod tests {
         let f = parse_flags(&args(&["--no-partition"])).unwrap();
         let cfg = config_from_flags(&f).unwrap();
         assert!(!cfg.partition && !cfg.parallel);
+    }
+
+    #[test]
+    fn serve_config_from_flags_builds_and_validates() {
+        let f = parse_flags(&args(&[
+            "--addr",
+            "127.0.0.1:7878",
+            "--cache-dir",
+            "/tmp/scalify-cache",
+            "--queue",
+            "16",
+            "--workers",
+            "3",
+        ]))
+        .unwrap();
+        let cfg = serve_config_from_flags(&f).unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.cache_dir, Some(PathBuf::from("/tmp/scalify-cache")));
+        assert_eq!(cfg.queue_capacity, 16);
+        assert_eq!(cfg.workers, 3);
+
+        // defaults apply when flags are absent (the CLI pins the
+        // well-known port; the library default stays ephemeral for tests)
+        let cfg = serve_config_from_flags(&parse_flags(&args(&[])).unwrap()).unwrap();
+        assert_eq!(cfg.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.cache_dir, None);
+        assert_eq!(crate::service::ServeConfig::default().addr, "127.0.0.1:0");
+
+        // zero / junk are config errors
+        for bad in [["--queue", "0"], ["--workers", "many"]] {
+            let f = parse_flags(&args(&bad)).unwrap();
+            assert!(matches!(
+                serve_config_from_flags(&f),
+                Err(ScalifyError::Config(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn memo_capacity_flag_threads_through() {
+        let f = parse_flags(&args(&["--memo-capacity", "128"])).unwrap();
+        assert_eq!(config_from_flags(&f).unwrap().memo_capacity, 128);
+        let f = parse_flags(&args(&["--memo-capacity", "0"])).unwrap();
+        assert!(matches!(config_from_flags(&f), Err(ScalifyError::Config(_))));
+    }
+
+    #[test]
+    fn mixtral_tiny_is_a_known_model() {
+        let pair =
+            model_pair("mixtral-tiny", Parallelism::Expert { ep: 4 }, None).unwrap();
+        assert_eq!(pair.dist.num_cores, 4);
     }
 
     #[test]

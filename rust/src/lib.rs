@@ -39,6 +39,12 @@
 //! machine consumers; the CLI exposes the same via `--json` and verifies
 //! whole manifests through one shared session (`scalify batch`).
 //!
+//! For fleets, the [`service`] module runs the session as a long-lived
+//! daemon (`scalify serve`): concurrent clients share one compiled
+//! template set and one layer memo through a bounded scheduler, and
+//! `--cache-dir` persists memo entries (keyed by stable structural
+//! fingerprint) across process restarts.
+//!
 //! ## Engine internals
 //!
 //! * an **e-graph** engine ([`egraph`]) performing equality saturation over
@@ -80,6 +86,7 @@ pub mod runtime;
 pub mod report;
 pub mod bench;
 pub mod cli;
+pub mod service;
 pub mod proptest;
 
 /// Convenience re-exports for downstream users and the examples.
@@ -93,6 +100,7 @@ pub mod prelude {
     pub use crate::modelgen::{
         GraphPair, LlamaConfig, MixtralConfig, Parallelism, TrainStepConfig,
     };
+    pub use crate::service::{Client, ServeConfig, Server, VerifySource};
     pub use crate::transform::{ParallelPlan, ShardRule};
     pub use crate::verifier::{
         Session, SessionStats, Verdict, VerifyConfig, VerifyConfigBuilder, VerifyReport,

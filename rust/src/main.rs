@@ -4,6 +4,9 @@
 //! scalify verify --base <hlo> --dist <hlo> [--cores N] [--json]   verify two HLO files
 //! scalify model --model llama-8b --par tp32 [--layers N] [--json] verify a zoo model
 //! scalify batch --manifest pairs.txt [--json]                     verify a manifest through one session
+//! scalify serve --addr 127.0.0.1:7878 [--cache-dir DIR]           run the verification daemon
+//! scalify client verify|stats|shutdown --addr HOST:PORT           drive a running daemon
+//! scalify bench [--json]                                          cold/warm service latency → BENCH_service.json
 //! scalify bugs [--reproduced|--new]                               run the bug corpus
 //! scalify exec --artifact <hlo>                                   run via the runtime
 //! scalify info                                                    version/build info
@@ -19,13 +22,17 @@ use scalify::bugs::{
 use scalify::cli;
 use scalify::error::{Result, ResultExt, ScalifyError};
 use scalify::hlo::parse_hlo_file;
-use scalify::ir::Annotation;
+use scalify::ir::Graph;
 use scalify::report::json::Json;
 use scalify::report::Table;
-use scalify::verifier::{GraphPair, Session, VerifyReport};
+use scalify::service::{Client, Scheduler, Server, VerifySource};
+use scalify::verifier::{GraphPair, Session, VerifyConfig, VerifyReport};
 use std::collections::HashMap;
-use std::path::Path;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 type Flags = HashMap<String, String>;
 
@@ -40,13 +47,7 @@ fn require<'f>(flags: &'f Flags, key: &str, usage: &str) -> Result<&'f String> {
 fn load_pair(base: &Path, dist: &Path, cores: u32) -> Result<GraphPair> {
     let bg = parse_hlo_file(base, 1).with_ctx(|| format!("--base {}", base.display()))?;
     let dg = parse_hlo_file(dist, cores).with_ctx(|| format!("--dist {}", dist.display()))?;
-    let ann: Vec<Annotation> = bg
-        .parameters()
-        .into_iter()
-        .zip(dg.parameters())
-        .map(|(b, d)| Annotation::replicated(b, d))
-        .collect();
-    GraphPair::try_new(bg, dg, ann)
+    GraphPair::replicated(bg, dg)
 }
 
 fn emit_report(report: &VerifyReport, json: bool, max_discrepancies: usize) {
@@ -109,6 +110,22 @@ fn cmd_model(flags: &Flags) -> Result<ExitCode> {
     Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
 }
 
+/// Parse an HLO file through the batch arena: each distinct
+/// `(path, cores)` parses once, however often the manifest repeats it.
+fn arena_parse(
+    arena: &mut HashMap<(PathBuf, u32), Graph>,
+    path: &Path,
+    cores: u32,
+) -> Result<Graph> {
+    let key = (path.to_path_buf(), cores);
+    if let Some(g) = arena.get(&key) {
+        return Ok(g.clone());
+    }
+    let g = parse_hlo_file(path, cores).with_ctx(|| path.display().to_string())?;
+    arena.insert(key, g.clone());
+    Ok(g)
+}
+
 fn cmd_batch(flags: &Flags) -> Result<ExitCode> {
     let manifest = require(flags, "manifest", "text file of `base.hlo dist.hlo [cores]` lines")?;
     let text = std::fs::read_to_string(manifest)
@@ -116,32 +133,68 @@ fn cmd_batch(flags: &Flags) -> Result<ExitCode> {
     let entries = cli::parse_manifest(&text).with_ctx(|| format!("manifest {manifest}"))?;
     let json = flags.contains_key("json");
 
+    // one arena of parsed graphs for the whole batch: manifests that pit
+    // one baseline against many variants parse the baseline once
+    let mut arena: HashMap<(PathBuf, u32), Graph> = HashMap::new();
+    let prepared: Vec<Result<GraphPair>> = entries
+        .iter()
+        .map(|entry| {
+            let bg = arena_parse(&mut arena, &entry.base, 1)?;
+            let dg = arena_parse(&mut arena, &entry.dist, entry.cores)?;
+            GraphPair::replicated(bg, dg)
+        })
+        .collect();
+    drop(arena);
+
     // one session for the whole batch: templates compile once, and layers
-    // shared between pairs (same model, different variants) hit the memo
-    let session = Session::new(cli::config_from_flags(flags)?);
+    // shared between pairs (same model, different variants) hit the memo.
+    // Entries run in parallel through the same bounded scheduler the
+    // service uses, so batch and serve latencies are comparable.
+    let session = Arc::new(Session::new(cli::config_from_flags(flags)?));
+    let workers = cli::usize_flag(flags, "workers", 4)?.min(entries.len().max(1));
+    let scheduler = Scheduler::new(workers, cli::usize_flag(flags, "queue", 64)?);
+    // every manifest entry "arrives" now, so per-entry wall time is
+    // measured from here — queue wait included, like the service's
+    // per-request latency
+    let submitted = Instant::now();
+    let jobs: Vec<_> = prepared
+        .into_iter()
+        .map(|prep| {
+            let session = Arc::clone(&session);
+            move || {
+                // one broken pair must not discard the rest of the batch
+                prep.and_then(|pair| {
+                    session.verify(&pair).map(|report| (report, submitted.elapsed()))
+                })
+            }
+        })
+        .collect();
+    let outcomes = scheduler.run_all(jobs);
+
     let mut all_verified = true;
     let mut had_errors = false;
     let mut docs: Vec<Json> = Vec::new();
-    for entry in &entries {
-        // one broken pair must not discard the rest of the batch
-        let outcome = load_pair(&entry.base, &entry.dist, entry.cores)
-            .and_then(|pair| session.verify(&pair));
+    for (entry, outcome) in entries.iter().zip(outcomes) {
         let mut fields = vec![
             ("base".into(), Json::Str(entry.base.display().to_string())),
             ("dist".into(), Json::Str(entry.dist.display().to_string())),
             ("cores".into(), Json::Num(entry.cores as f64)),
         ];
         match outcome {
-            Ok(report) => {
+            Ok((report, wall)) => {
                 all_verified &= report.verified();
                 if json {
                     fields.push(("report".into(), report.to_json()));
+                    // per-entry wall time (queue wait + verify), so
+                    // service and batch latency are comparable
+                    fields.push(("wall_secs".into(), Json::Num(wall.as_secs_f64())));
                 } else {
                     println!(
-                        "{} ⊢ {}: {}",
+                        "{} ⊢ {}: {} [wall {}]",
                         entry.base.display(),
                         entry.dist.display(),
-                        report.summary()
+                        report.summary(),
+                        scalify::util::fmt_duration(wall)
                     );
                     for d in report.discrepancies().iter().take(5) {
                         println!("  {}", d.render());
@@ -174,16 +227,19 @@ fn cmd_batch(flags: &Flags) -> Result<ExitCode> {
                 ("pairs".into(), Json::Arr(docs)),
                 ("all_verified".into(), Json::Bool(all_verified)),
                 ("had_errors".into(), Json::Bool(had_errors)),
+                ("workers".into(), Json::Num(workers as f64)),
                 ("session_runs".into(), Json::Num(stats.runs as f64)),
                 ("memo_hits".into(), Json::Num(stats.memo_hits as f64)),
                 ("memo_entries".into(), Json::Num(stats.memo_entries as f64)),
+                ("memo_evictions".into(), Json::Num(stats.memo_evictions as f64)),
             ])
             .render_pretty()
         );
     } else {
         eprintln!(
-            "batch: {} pairs, {} memoized layer hits across the shared session",
+            "batch: {} pairs on {} workers, {} memoized layer hits across the shared session",
             entries.len(),
+            workers,
             stats.memo_hits
         );
     }
@@ -194,6 +250,229 @@ fn cmd_batch(flags: &Flags) -> Result<ExitCode> {
     } else {
         ExitCode::from(1)
     })
+}
+
+fn cmd_serve(flags: &Flags) -> Result<ExitCode> {
+    let cfg = cli::serve_config_from_flags(flags)?;
+    let cache_note = cfg
+        .cache_dir
+        .as_ref()
+        .map(|d| format!(", cache-dir {}", d.display()))
+        .unwrap_or_default();
+    let server = Server::start(cfg)?;
+    // the bound address goes to stdout (and is flushed) so scripts and
+    // tests can read the ephemeral port; progress chatter stays on stderr
+    println!("scalify: serving on {}", server.local_addr());
+    let _ = std::io::stdout().flush();
+    eprintln!(
+        "scalify: verification service ready{cache_note}; stop it with \
+         `scalify client shutdown --addr {}`",
+        server.local_addr()
+    );
+    server.wait();
+    eprintln!("scalify: service stopped");
+    Ok(ExitCode::SUCCESS)
+}
+
+/// Build the `scalify client verify` source from flags: `--bug ID`,
+/// `--base/--dist [--cores N]` file pair, or `--model/--par [--layers N]`.
+fn client_source(flags: &Flags) -> Result<VerifySource> {
+    if let Some(id) = flags.get("bug") {
+        return Ok(VerifySource::Bug { id: id.clone() });
+    }
+    match (flags.get("base"), flags.get("dist")) {
+        (Some(base), Some(dist)) => {
+            let cores: u32 = match flags.get("cores") {
+                Some(c) => c.parse().map_err(|_| {
+                    ScalifyError::config(format!("--cores wants an integer, got '{c}'"))
+                })?,
+                None => 1,
+            };
+            return Ok(VerifySource::Hlo {
+                base: std::fs::read_to_string(base)
+                    .with_ctx(|| format!("--base {base}"))?,
+                dist: std::fs::read_to_string(dist)
+                    .with_ctx(|| format!("--dist {dist}"))?,
+                cores,
+            });
+        }
+        // half an HLO pair must not silently fall back to a zoo model
+        (Some(_), None) | (None, Some(_)) => {
+            return Err(ScalifyError::config(
+                "inline HLO verify needs both --base and --dist",
+            ));
+        }
+        (None, None) => {}
+    }
+    let model = flags.get("model").cloned().unwrap_or_else(|| "llama-tiny".into());
+    let par = flags
+        .get("par")
+        .or_else(|| flags.get("parallelism"))
+        .cloned()
+        .unwrap_or_else(|| "tp2".into());
+    let layers = match flags.get("layers") {
+        Some(l) => Some(l.parse().map_err(|_| {
+            ScalifyError::config(format!("--layers wants an integer, got '{l}'"))
+        })?),
+        None => None,
+    };
+    Ok(VerifySource::Model { model, par, layers })
+}
+
+fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
+    let addr = require(flags, "addr", "daemon address host:port")?;
+    let mut client = Client::connect(addr)?;
+    let json = flags.contains_key("json");
+    match op {
+        "verify" => {
+            let (report, latency_secs, stats) = client.verify(client_source(flags)?)?;
+            if json {
+                print!(
+                    "{}",
+                    Json::Obj(vec![
+                        ("report".into(), report.to_json()),
+                        ("latency_secs".into(), Json::Num(latency_secs)),
+                        ("stats".into(), stats.to_json()),
+                    ])
+                    .render_pretty()
+                );
+            } else {
+                println!("{}", report.summary());
+                for d in report.discrepancies().iter().take(10) {
+                    println!("  {}", d.render());
+                }
+                eprintln!(
+                    "daemon: {} jobs, {} memo hits ({} entries), {:.1} ms request latency",
+                    stats.jobs,
+                    stats.memo_hits,
+                    stats.memo_entries,
+                    latency_secs * 1e3
+                );
+            }
+            Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+        }
+        "stats" => {
+            print!("{}", client.stats()?.to_json().render_pretty());
+            Ok(ExitCode::SUCCESS)
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            eprintln!("scalify: daemon acknowledged shutdown");
+            Ok(ExitCode::SUCCESS)
+        }
+        other => Err(ScalifyError::config(format!(
+            "unknown client operation '{other}' (expected verify, stats or shutdown; \
+             e.g. `scalify client stats --addr 127.0.0.1:7878`)"
+        ))),
+    }
+}
+
+/// `scalify bench`: cold vs warm vs restart-warm service latency for the
+/// llama pair under tp4 and pp2tp4, written to `BENCH_service.json`.
+fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
+    use scalify::partition::MemoEntry;
+
+    let model = flags.get("model").map(String::as_str).unwrap_or("bench-llama");
+    let out_path = flags.get("out").map(String::as_str).unwrap_or("BENCH_service.json");
+    let pair_for = |par_spec: &str| -> Result<GraphPair> {
+        let par = cli::parallelism(par_spec)?;
+        if model == "bench-llama" {
+            // bench-sized llama: heads divisible by tp4, layers by pp2
+            let cfg = scalify::modelgen::LlamaConfig {
+                layers: 4,
+                hidden: 32,
+                heads: 8,
+                ffn: 64,
+                seqlen: 8,
+                batch: 1,
+            };
+            scalify::modelgen::try_llama_pair(&cfg, par)
+        } else {
+            cli::model_pair(model, par, None)
+        }
+    };
+
+    let t_start = Instant::now();
+    let mut scenarios: Vec<Json> = Vec::new();
+    for par_spec in ["tp4", "pp2tp4"] {
+        let pair = pair_for(par_spec)?;
+
+        // fresh session per scenario so "cold" is honest; the memo-write
+        // hook collects entries the way the service cache would
+        let mut session = Session::new(VerifyConfig::default());
+        let collected: Arc<Mutex<Vec<(u64, MemoEntry)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&collected);
+        session.set_memo_write_hook(Arc::new(move |fp, entry| {
+            sink.lock().expect("bench hook lock").push((fp, entry.clone()));
+        }));
+
+        let t0 = Instant::now();
+        let cold_report = session.verify(&pair)?;
+        let cold = t0.elapsed();
+        let t0 = Instant::now();
+        let warm_report = session.verify(&pair)?;
+        let warm = t0.elapsed();
+
+        // restart simulation: a brand-new session preloaded from the
+        // collected entries — the daemon's `--cache-dir` warm start
+        let restarted = Session::new(VerifyConfig::default());
+        let entries = collected.lock().expect("bench hook lock").clone();
+        restarted.preload_memo(entries);
+        let t0 = Instant::now();
+        let restart_report = restarted.verify(&pair)?;
+        let restart = t0.elapsed();
+
+        for (label, report) in [
+            ("cold", &cold_report),
+            ("warm", &warm_report),
+            ("restart-warm", &restart_report),
+        ] {
+            if !report.verified() {
+                return Err(ScalifyError::runtime(format!(
+                    "bench pair under {par_spec} must verify, but the {label} run was {}",
+                    report.summary()
+                )));
+            }
+        }
+        let stats = session.stats();
+        let restart_stats = restarted.stats();
+        scenarios.push(Json::Obj(vec![
+            ("par".into(), Json::Str(par_spec.into())),
+            ("layers".into(), Json::Num(cold_report.layers.len() as f64)),
+            ("cold_secs".into(), Json::Num(cold.as_secs_f64())),
+            ("warm_secs".into(), Json::Num(warm.as_secs_f64())),
+            ("restart_warm_secs".into(), Json::Num(restart.as_secs_f64())),
+            (
+                "warm_speedup".into(),
+                Json::Num(cold.as_secs_f64() / warm.as_secs_f64().max(1e-9)),
+            ),
+            ("memo_entries".into(), Json::Num(stats.memo_entries as f64)),
+            ("memo_hits".into(), Json::Num(stats.memo_hits as f64)),
+            (
+                "restart_memo_hits".into(),
+                Json::Num(restart_stats.memo_hits as f64),
+            ),
+        ]));
+        eprintln!(
+            "bench {par_spec}: cold {}, warm {}, restart-warm {}",
+            scalify::util::fmt_duration(cold),
+            scalify::util::fmt_duration(warm),
+            scalify::util::fmt_duration(restart)
+        );
+    }
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("service".into())),
+        ("model".into(), Json::Str(model.into())),
+        ("scenarios".into(), Json::Arr(scenarios)),
+        ("total_secs".into(), Json::Num(t_start.elapsed().as_secs_f64())),
+    ]);
+    std::fs::write(out_path, doc.render_pretty()).with_ctx(|| format!("writing {out_path}"))?;
+    eprintln!("scalify: wrote {out_path}");
+    if flags.contains_key("json") {
+        print!("{}", doc.render_pretty());
+    }
+    Ok(ExitCode::SUCCESS)
 }
 
 fn run_bug_table(title: &str, cases: Vec<scalify::bugs::BugCase>) -> bool {
@@ -284,25 +563,41 @@ fn usage() -> String {
          usage:\n  \
          scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N] [--json]\n  \
          scalify model --model llama-8b|llama-70b|llama-405b|llama-tiny|mixtral-8x7b|mixtral-8x22b\
-         |dpstep-tiny|dpstep-small \
+         |mixtral-tiny|dpstep-tiny|dpstep-small \
          --par tp32|sp32|fd32|ep8|pp4|dp4z1|pp2tp4 [--layers N] [--json]\n  \
-         scalify batch --manifest pairs.txt [--json]\n  \
+         scalify batch --manifest pairs.txt [--workers N] [--json]\n  \
+         scalify serve [--addr 127.0.0.1:7878] [--cache-dir DIR] [--queue N] [--workers N]\n  \
+         scalify client verify|stats|shutdown --addr HOST:PORT [--model M --par P | --bug ID \
+         | --base a.hlo --dist b.hlo] [--json]\n  \
+         scalify bench [--model M] [--out FILE] [--json]\n  \
          scalify bugs [--reproduced|--new|--transform]\n  \
          scalify exec --artifact artifacts/model_single.hlo.txt\n  \
          scalify info\n\
-         common flags: --threads N --no-partition --no-parallel --no-memoize\n\
-         exit codes: 0 verified · 1 unverified · 2 usage/input error · 3 runtime error",
+         common flags: --threads N --memo-capacity N --no-partition --no-parallel --no-memoize\n\
+         exit codes: 0 verified/ok · 1 unverified · 2 usage/input error · 3 runtime error",
         scalify::VERSION
     )
 }
 
 fn run(args: &[String]) -> Result<ExitCode> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    // `client` takes its operation as a positional word (`scalify client
+    // stats --addr ...`), everything else is pure `--flag value`
+    if cmd == "client" {
+        let (op, rest) = match args.get(1) {
+            Some(op) if !op.starts_with("--") => (op.as_str(), &args[2..]),
+            _ => ("", &args[1..]),
+        };
+        let flags = cli::parse_flags(rest)?;
+        return cmd_client(op, &flags);
+    }
     let flags = cli::parse_flags(&args[1.min(args.len())..])?;
     match cmd {
         "verify" => cmd_verify(&flags),
         "model" => cmd_model(&flags),
         "batch" => cmd_batch(&flags),
+        "serve" => cmd_serve(&flags),
+        "bench" => cmd_bench(&flags),
         "bugs" => cmd_bugs(&flags),
         "exec" => cmd_exec(&flags),
         "info" => {

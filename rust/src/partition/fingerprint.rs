@@ -1,9 +1,110 @@
 //! Layer fingerprinting + memo table (paper §5.1 "Layer memoization").
+//!
+//! Fingerprints are **stable across processes**: they are produced by an
+//! explicitly-specified FNV-1a hash ([`StableHasher`]) with fixed-width
+//! little-endian integer encoding, never by the std `DefaultHasher`
+//! (whose keys the std docs reserve the right to randomize). That is what
+//! lets the service layer persist memo entries to disk keyed by
+//! fingerprint and share them across daemon restarts and CI runs. The
+//! encoding of an op still goes through its `Debug` string, which is
+//! deterministic for a given source tree — [`FINGERPRINT_VERSION`] must
+//! be bumped whenever the hashed structure (op set, attribute layout,
+//! field order below) changes, so stale on-disk caches degrade to a cold
+//! start instead of replaying entries computed under a different scheme.
 
 use super::LayerSlice;
 use crate::verifier::boundary::RelSummary;
 use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
+
+/// Version of the fingerprint scheme. Recorded in persistent caches;
+/// loading a cache written under a different version is a cold start.
+pub const FINGERPRINT_VERSION: u32 = 1;
+
+/// Default [`LayerMemo`] capacity: generous enough that batch runs and
+/// week-long daemons over the model zoo never evict in practice, small
+/// enough to bound a hostile or pathological workload.
+pub const DEFAULT_MEMO_CAPACITY: usize = 65_536;
+
+/// Deterministic 64-bit FNV-1a hasher.
+///
+/// Unlike `DefaultHasher`, the result is a pure function of the written
+/// bytes: no per-process keys, and every integer write is normalized to
+/// fixed-width little-endian (the std defaults use native endianness and
+/// platform-width `usize`), so the same logical input fingerprints
+/// identically on every run, platform and process.
+#[derive(Clone, Debug)]
+pub struct StableHasher {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl StableHasher {
+    /// Hasher at the FNV-1a offset basis.
+    pub fn new() -> StableHasher {
+        StableHasher { state: FNV_OFFSET }
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        StableHasher::new()
+    }
+}
+
+impl Hasher for StableHasher {
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= u64::from(b);
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn write_u8(&mut self, n: u8) {
+        self.write(&[n]);
+    }
+    fn write_u16(&mut self, n: u16) {
+        self.write(&n.to_le_bytes());
+    }
+    fn write_u32(&mut self, n: u32) {
+        self.write(&n.to_le_bytes());
+    }
+    fn write_u64(&mut self, n: u64) {
+        self.write(&n.to_le_bytes());
+    }
+    fn write_u128(&mut self, n: u128) {
+        self.write(&n.to_le_bytes());
+    }
+    fn write_usize(&mut self, n: usize) {
+        // fixed width regardless of platform pointer size
+        self.write(&(n as u64).to_le_bytes());
+    }
+    fn write_i8(&mut self, n: i8) {
+        self.write_u8(n as u8);
+    }
+    fn write_i16(&mut self, n: i16) {
+        self.write_u16(n as u16);
+    }
+    fn write_i32(&mut self, n: i32) {
+        self.write_u32(n as u32);
+    }
+    fn write_i64(&mut self, n: i64) {
+        self.write_u64(n as u64);
+    }
+    fn write_i128(&mut self, n: i128) {
+        self.write_u128(n as u128);
+    }
+    fn write_isize(&mut self, n: isize) {
+        self.write_usize(n as usize);
+    }
+}
 
 /// Structural fingerprint of a (baseline, distributed) layer pair plus its
 /// input relations. Two pairs with equal fingerprints verify identically,
@@ -14,7 +115,7 @@ pub fn fingerprint_pair(
     input_rels: &[(usize, usize, RelSummary)],
     cores: u32,
 ) -> u64 {
-    let mut h = std::collections::hash_map::DefaultHasher::new();
+    let mut h = StableHasher::new();
     cores.hash(&mut h);
     hash_slice(base, &mut h);
     hash_slice(dist, &mut h);
@@ -29,8 +130,9 @@ pub fn fingerprint_pair(
 fn hash_slice<H: Hasher>(slice: &LayerSlice, h: &mut H) {
     slice.graph.nodes.len().hash(h);
     for n in &slice.graph.nodes {
-        // op identity incl. attributes; Debug formatting is stable within
-        // one build and fingerprints never cross process boundaries.
+        // op identity incl. attributes; the Debug string is a pure
+        // function of the source tree, and FINGERPRINT_VERSION is bumped
+        // whenever it (or anything else hashed here) changes shape.
         // Parameters hash by position only — weight *names* differ across
         // otherwise-identical layers (`w0` vs `w1`) and must not defeat
         // memoization.
@@ -50,12 +152,13 @@ fn hash_slice<H: Hasher>(slice: &LayerSlice, h: &mut H) {
     // final graph outputs are checked more strictly than interior boundary
     // outputs (exact duplicate vs any propagatable relation), so a final
     // layer must never replay an interior layer's memo entry — this
-    // matters doubly now that the memo lives across `Session` runs.
+    // matters doubly now that the memo lives across `Session` runs and,
+    // via the service cache, across processes.
     slice.final_outputs.hash(h);
 }
 
 /// Memoized verification result of a layer pair.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MemoEntry {
     /// Whether the layer pair verified.
     pub verified: bool,
@@ -66,46 +169,142 @@ pub struct MemoEntry {
     pub egraph_nodes: usize,
 }
 
-/// Fingerprint → result table.
-#[derive(Default, Debug)]
+#[derive(Debug)]
+struct Slot {
+    entry: MemoEntry,
+    /// Recency tick of the last touch; pairs with the lazy markers in
+    /// `LayerMemo::recency`.
+    tick: u64,
+}
+
+/// Fingerprint → result table with bounded capacity and LRU eviction.
+///
+/// Recency is tracked with lazy-deletion markers: every touch pushes a
+/// `(fp, tick)` marker, and eviction pops markers until one matches the
+/// slot's current tick (stale markers are skipped). Markers are compacted
+/// whenever they outnumber live entries 2:1, so bookkeeping stays linear
+/// in the table size.
+#[derive(Debug)]
 pub struct LayerMemo {
-    table: FxHashMap<u64, MemoEntry>,
+    table: FxHashMap<u64, Slot>,
+    recency: VecDeque<(u64, u64)>,
+    tick: u64,
+    capacity: usize,
     /// Cache hits served.
     pub hits: usize,
-    /// Entries inserted.
+    /// Entries inserted after a computed verification.
     pub misses: usize,
+    /// Entries evicted to stay within capacity.
+    pub evictions: usize,
+}
+
+impl Default for LayerMemo {
+    fn default() -> Self {
+        LayerMemo::with_capacity(DEFAULT_MEMO_CAPACITY)
+    }
 }
 
 impl LayerMemo {
-    /// Empty memo.
+    /// Empty memo with the [`DEFAULT_MEMO_CAPACITY`].
     pub fn new() -> LayerMemo {
         LayerMemo::default()
     }
 
-    /// Lookup (counts a hit when present).
+    /// Empty memo bounded to `capacity` entries (clamped to at least 1).
+    pub fn with_capacity(capacity: usize) -> LayerMemo {
+        LayerMemo {
+            table: FxHashMap::default(),
+            recency: VecDeque::new(),
+            tick: 0,
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Maximum entry count before LRU eviction kicks in.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lookup (counts a hit and refreshes recency when present).
     pub fn get(&mut self, fp: u64) -> Option<MemoEntry> {
-        let entry = self.table.get(&fp).cloned();
+        let entry = self.table.get(&fp).map(|s| s.entry.clone());
         if entry.is_some() {
             self.hits += 1;
+            self.touch(fp);
         }
         entry
     }
 
-    /// Insert a computed result.
+    /// Insert a computed result (counts a miss).
     pub fn put(&mut self, fp: u64, entry: MemoEntry) {
         self.misses += 1;
-        self.table.insert(fp, entry);
+        self.insert(fp, entry);
+    }
+
+    /// Insert without counting a miss: warm-start preload from a
+    /// persistent store, where the work was done by an earlier process.
+    pub fn preload(&mut self, fp: u64, entry: MemoEntry) {
+        self.insert(fp, entry);
+    }
+
+    fn insert(&mut self, fp: u64, entry: MemoEntry) {
+        if !self.table.contains_key(&fp) && self.table.len() >= self.capacity {
+            self.evict_lru();
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.table.insert(fp, Slot { entry, tick });
+        self.note(fp, tick);
+    }
+
+    fn touch(&mut self, fp: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(slot) = self.table.get_mut(&fp) {
+            slot.tick = tick;
+        }
+        self.note(fp, tick);
+    }
+
+    fn note(&mut self, fp: u64, tick: u64) {
+        self.recency.push_back((fp, tick));
+        if self.recency.len() > 2 * self.table.len() + 64 {
+            let table = &self.table;
+            self.recency
+                .retain(|(f, t)| table.get(f).map(|s| s.tick == *t).unwrap_or(false));
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        while let Some((fp, tick)) = self.recency.pop_front() {
+            let live = self.table.get(&fp).map(|s| s.tick == tick).unwrap_or(false);
+            if live {
+                self.table.remove(&fp);
+                self.evictions += 1;
+                return;
+            }
+        }
+        // recency markers exhausted (only possible after clear()):
+        // fall back to evicting an arbitrary entry
+        if let Some(&fp) = self.table.keys().next() {
+            self.table.remove(&fp);
+            self.evictions += 1;
+        }
     }
 
     /// Peek without counting a hit (used to skip speculative work for
     /// layers the memo can already serve).
     pub fn contains_verified(&self, fp: u64) -> bool {
-        self.table.get(&fp).map(|e| e.verified).unwrap_or(false)
+        self.table.get(&fp).map(|s| s.entry.verified).unwrap_or(false)
     }
 
-    /// Drop all entries (hit/miss counters are kept).
+    /// Drop all entries (hit/miss/eviction counters are kept).
     pub fn clear(&mut self) {
         self.table.clear();
+        self.recency.clear();
     }
 
     /// Distinct fingerprints stored.
@@ -141,6 +340,34 @@ mod tests {
         extract_layers(&g)
     }
 
+    fn entry(nodes: usize) -> MemoEntry {
+        MemoEntry { verified: true, out_rels: vec![], egraph_nodes: nodes }
+    }
+
+    #[test]
+    fn stable_hasher_matches_fnv1a_test_vectors() {
+        // classic FNV-1a reference values
+        let h = StableHasher::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = StableHasher::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = StableHasher::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn stable_hasher_integer_writes_are_width_normalized() {
+        // usize hashes identically to the same value written as u64, so
+        // fingerprints agree across pointer widths
+        let mut a = StableHasher::new();
+        a.write_usize(0x0123_4567);
+        let mut b = StableHasher::new();
+        b.write_u64(0x0123_4567);
+        assert_eq!(a.finish(), b.finish());
+    }
+
     #[test]
     fn identical_layers_same_fingerprint() {
         let layers = identical_layers(3);
@@ -155,6 +382,18 @@ mod tests {
         // different core count changes the fingerprint
         let fp3 = fingerprint_pair(l0, l0, &[], 4);
         assert_ne!(fp0, fp3);
+    }
+
+    #[test]
+    fn fingerprints_are_reproducible_within_a_process() {
+        // same logical input, freshly rebuilt → same fingerprint (the
+        // cross-process guarantee is the same computation; this pins the
+        // no-randomness part)
+        let a = identical_layers(2);
+        let b = identical_layers(2);
+        let la = a.iter().find(|l| l.layer == 0).unwrap();
+        let lb = b.iter().find(|l| l.layer == 0).unwrap();
+        assert_eq!(fingerprint_pair(la, la, &[], 4), fingerprint_pair(lb, lb, &[], 4));
     }
 
     #[test]
@@ -181,10 +420,66 @@ mod tests {
     fn memo_hit_miss_counters() {
         let mut memo = LayerMemo::new();
         assert!(memo.get(42).is_none());
-        memo.put(42, MemoEntry { verified: true, out_rels: vec![], egraph_nodes: 10 });
+        memo.put(42, entry(10));
         assert!(memo.get(42).is_some());
         assert_eq!(memo.hits, 1);
         assert_eq!(memo.misses, 1);
         assert_eq!(memo.len(), 1);
+        assert_eq!(memo.evictions, 0);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_least_recently_used() {
+        let mut memo = LayerMemo::with_capacity(3);
+        memo.put(1, entry(1));
+        memo.put(2, entry(2));
+        memo.put(3, entry(3));
+        // touch 1 so 2 becomes the LRU
+        assert!(memo.get(1).is_some());
+        memo.put(4, entry(4));
+        assert_eq!(memo.len(), 3);
+        assert_eq!(memo.evictions, 1);
+        assert!(memo.get(2).is_none(), "LRU entry 2 should have been evicted");
+        assert!(memo.get(1).is_some());
+        assert!(memo.get(3).is_some());
+        assert!(memo.get(4).is_some());
+    }
+
+    #[test]
+    fn eviction_churn_stays_bounded() {
+        let mut memo = LayerMemo::with_capacity(8);
+        for i in 0..1000u64 {
+            memo.put(i, entry(i as usize));
+            // heavy re-touching exercises the lazy-marker compaction
+            if i >= 4 {
+                let _ = memo.get(i - 4);
+            }
+        }
+        assert_eq!(memo.len(), 8);
+        assert_eq!(memo.evictions, 1000 - 8);
+        // lazy markers must not grow without bound
+        assert!(memo.recency.len() <= 2 * memo.len() + 65, "{}", memo.recency.len());
+    }
+
+    #[test]
+    fn preload_counts_no_miss() {
+        let mut memo = LayerMemo::new();
+        memo.preload(7, entry(5));
+        assert_eq!(memo.misses, 0);
+        assert!(memo.contains_verified(7));
+        assert!(memo.get(7).is_some());
+        assert_eq!(memo.hits, 1);
+    }
+
+    #[test]
+    fn reinsert_at_capacity_does_not_evict() {
+        let mut memo = LayerMemo::with_capacity(2);
+        memo.put(1, entry(1));
+        memo.put(2, entry(2));
+        // overwrite an existing key: no eviction
+        memo.put(1, entry(10));
+        assert_eq!(memo.len(), 2);
+        assert_eq!(memo.evictions, 0);
+        assert_eq!(memo.get(1).unwrap().egraph_nodes, 10);
     }
 }

@@ -11,5 +11,8 @@
 mod slice;
 pub mod fingerprint;
 
-pub use fingerprint::{fingerprint_pair, LayerMemo, MemoEntry};
+pub use fingerprint::{
+    fingerprint_pair, LayerMemo, MemoEntry, StableHasher, DEFAULT_MEMO_CAPACITY,
+    FINGERPRINT_VERSION,
+};
 pub use slice::{extract_layers, LayerSlice};

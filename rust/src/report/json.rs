@@ -77,6 +77,27 @@ impl Json {
         }
     }
 
+    /// String field of an object (`get` + `as_str`). The wire protocol
+    /// reads fields this way throughout.
+    pub fn str_at(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+
+    /// Numeric field of an object as `u64`.
+    pub fn u64_at(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(Json::as_u64)
+    }
+
+    /// Numeric field of an object.
+    pub fn f64_at(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
+    /// Bool field of an object.
+    pub fn bool_at(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Json::as_bool)
+    }
+
     /// Serialize compactly (no insignificant whitespace).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -448,5 +469,19 @@ mod tests {
         assert_eq!(arr[1].as_bool(), Some(true));
         assert_eq!(arr[2].as_str(), Some("x"));
         assert_eq!(doc.get("missing"), None);
+    }
+
+    #[test]
+    fn keyed_accessors() {
+        let doc =
+            Json::parse("{\"s\": \"hi\", \"n\": 3, \"f\": 0.5, \"b\": false}").unwrap();
+        assert_eq!(doc.str_at("s"), Some("hi"));
+        assert_eq!(doc.u64_at("n"), Some(3));
+        assert_eq!(doc.f64_at("f"), Some(0.5));
+        assert_eq!(doc.bool_at("b"), Some(false));
+        assert_eq!(doc.str_at("n"), None);
+        assert_eq!(doc.u64_at("missing"), None);
+        // non-objects yield None, not panics
+        assert_eq!(Json::Num(1.0).str_at("s"), None);
     }
 }

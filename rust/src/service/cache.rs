@@ -1,0 +1,488 @@
+//! Persistent on-disk layer-memo store (`scalify serve --cache-dir`).
+//!
+//! Verified [`MemoEntry`]s are JSON-serialized keyed by their **stable**
+//! structural fingerprint (see [`crate::partition::fingerprint`]), loaded
+//! at daemon startup and flushed on every write, so a restarted daemon —
+//! or a different CI job pointed at the same directory — starts warm:
+//! its first request replays every layer an earlier process already
+//! proved.
+//!
+//! The file records both a cache format version and the fingerprint
+//! scheme version; any mismatch, parse failure or torn write **degrades
+//! to a cold start with a warning** — a corrupted cache can cost time,
+//! never correctness. Writes go through a temp file + rename so a crash
+//! mid-flush leaves the previous generation intact. Fingerprints are
+//! written as fixed-width hex strings (JSON numbers are doubles and
+//! cannot carry 64 bits).
+
+use crate::error::Result;
+use crate::ir::ReduceKind;
+use crate::partition::{MemoEntry, FINGERPRINT_VERSION};
+use crate::report::json::Json;
+use crate::verifier::boundary::RelSummary;
+use rustc_hash::FxHashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// On-disk format version (independent of the fingerprint scheme).
+pub const CACHE_FORMAT_VERSION: u32 = 1;
+
+/// File name inside `--cache-dir`.
+pub const CACHE_FILE: &str = "layer-memo.json";
+
+/// Outcome of opening a cache directory.
+#[derive(Clone, Debug, Default)]
+pub struct CacheLoad {
+    /// Entries successfully loaded.
+    pub loaded: usize,
+    /// Present when the store degraded to a cold start (corrupt file,
+    /// version skew, unreadable directory).
+    pub warning: Option<String>,
+}
+
+/// Handle on a cache directory: an in-memory mirror plus flush-on-write
+/// persistence. Shared behind `Arc` between the session's memo-write hook
+/// and the service's stats plumbing.
+///
+/// The mirror is **bounded** (same spirit as `VerifyConfig::memo_capacity`
+/// — a long-lived daemon must not grow without limit): once `capacity`
+/// entries are held, further fingerprints are dropped from persistence,
+/// first-come-first-kept (the session's own memo still serves them for
+/// its lifetime; an LRU mirror would force a full-file rewrite per
+/// eviction for a workload that has already outgrown warm-start anyway).
+/// The bound also caps the flush cost, since every write rewrites the
+/// whole file.
+pub struct MemoCache {
+    path: PathBuf,
+    capacity: usize,
+    mirror: Mutex<FxHashMap<u64, MemoEntry>>,
+    /// Serializes flushes against each other without holding `mirror`
+    /// during disk I/O, so stats/preload readers and other memo-write
+    /// hooks are never blocked behind a file write. Holds the number of
+    /// entries already persisted: recorders that queued behind a flush
+    /// which already covered their entry skip their own write, so a
+    /// burst of fresh layers costs ~one file rewrite, not one each.
+    flush_lock: Mutex<usize>,
+}
+
+impl MemoCache {
+    /// Open with the default capacity
+    /// ([`crate::partition::DEFAULT_MEMO_CAPACITY`]).
+    pub fn open(dir: &Path) -> Result<(MemoCache, CacheLoad)> {
+        MemoCache::open_with_capacity(dir, crate::partition::DEFAULT_MEMO_CAPACITY)
+    }
+
+    /// Open (creating the directory if needed) and load whatever previous
+    /// processes persisted. Never fails on a bad cache *file* — that is a
+    /// cold start plus [`CacheLoad::warning`]; only an unusable directory
+    /// is an error.
+    pub fn open_with_capacity(
+        dir: &Path,
+        capacity: usize,
+    ) -> Result<(MemoCache, CacheLoad)> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(CACHE_FILE);
+        let (map, load) = match std::fs::read_to_string(&path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                (FxHashMap::default(), CacheLoad::default())
+            }
+            Err(e) => (
+                FxHashMap::default(),
+                CacheLoad {
+                    loaded: 0,
+                    warning: Some(format!(
+                        "cache file {} is unreadable ({e}); starting cold",
+                        path.display()
+                    )),
+                },
+            ),
+            Ok(text) => match parse_cache(&text) {
+                Ok(map) => {
+                    let loaded = map.len();
+                    (map, CacheLoad { loaded, warning: None })
+                }
+                Err(why) => (
+                    FxHashMap::default(),
+                    CacheLoad {
+                        loaded: 0,
+                        warning: Some(format!(
+                            "ignoring cache file {} ({why}); starting cold",
+                            path.display()
+                        )),
+                    },
+                ),
+            },
+        };
+        let persisted = map.len();
+        Ok((
+            MemoCache {
+                path,
+                capacity: capacity.max(1),
+                mirror: Mutex::new(map),
+                flush_lock: Mutex::new(persisted),
+            },
+            load,
+        ))
+    }
+
+    /// Maximum entries persisted.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Entries currently mirrored (== persisted, modulo write failures).
+    pub fn len(&self) -> usize {
+        self.mirror.lock().expect("cache lock").len()
+    }
+
+    /// True when the mirror is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every entry, for preloading a fresh session's memo.
+    pub fn entries(&self) -> Vec<(u64, MemoEntry)> {
+        self.mirror
+            .lock()
+            .expect("cache lock")
+            .iter()
+            .map(|(fp, e)| (*fp, e.clone()))
+            .collect()
+    }
+
+    /// Record one entry and flush the store (the session's memo-write
+    /// hook). Entries are immutable once verified, so a known fingerprint
+    /// is a no-op — repeat hits never touch the disk — and a full mirror
+    /// drops new fingerprints instead of growing. Write failures are
+    /// reported on stderr, not propagated: persistence is an optimization
+    /// and must never fail a verify request.
+    pub fn record(&self, fp: u64, entry: &MemoEntry) {
+        {
+            let mut mirror = self.mirror.lock().expect("cache lock");
+            if mirror.contains_key(&fp) || mirror.len() >= self.capacity {
+                return;
+            }
+            mirror.insert(fp, entry.clone());
+        }
+        // flushes serialize on their own lock; snapshotting *inside* it
+        // makes later flushes see supersets, so the last write on disk
+        // always carries every recorded entry. A recorder whose entry a
+        // queued-ahead flush already covered skips its own write.
+        let mut persisted = self.flush_lock.lock().expect("flush lock");
+        let snapshot = self.entries();
+        if snapshot.len() <= *persisted {
+            return;
+        }
+        let count = snapshot.len();
+        match self.flush(snapshot) {
+            Ok(()) => *persisted = count,
+            Err(e) => eprintln!(
+                "scalify: warning: cache flush to {} failed: {e}",
+                self.path.display()
+            ),
+        }
+    }
+
+    fn flush(&self, mut entries: Vec<(u64, MemoEntry)>) -> std::io::Result<()> {
+        // stable file ordering: deterministic bytes for identical content
+        entries.sort_by_key(|(fp, _)| *fp);
+        let arr =
+            Json::Arr(entries.iter().map(|(fp, e)| entry_to_json(*fp, e)).collect());
+        let checksum = entries_checksum(&arr);
+        let doc = Json::Obj(vec![
+            ("format".into(), Json::Num(CACHE_FORMAT_VERSION as f64)),
+            (
+                "fingerprint_version".into(),
+                Json::Num(FINGERPRINT_VERSION as f64),
+            ),
+            ("checksum".into(), Json::Str(checksum)),
+            ("entries".into(), arr),
+        ]);
+        // per-process temp name: concurrent daemons sharing one cache dir
+        // must not interleave writes into the same temp file (the atomic
+        // rename then keeps whichever finished last, both valid)
+        let tmp = self.path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, doc.render_pretty())?;
+        std::fs::rename(&tmp, &self.path)
+    }
+}
+
+/// Content checksum over the compact rendering of the entries array.
+/// Parsing + re-rendering is canonical (insertion-ordered objects,
+/// integer numbers), so the loader can recompute and compare: a flipped
+/// digit in a fingerprint or verdict fails the check and degrades to a
+/// cold start instead of replaying a proof for the wrong layer.
+fn entries_checksum(arr: &Json) -> String {
+    use std::hash::Hasher as _;
+    let mut h = crate::partition::StableHasher::new();
+    h.write(arr.render().as_bytes());
+    format!("{:016x}", h.finish())
+}
+
+fn parse_cache(text: &str) -> std::result::Result<FxHashMap<u64, MemoEntry>, String> {
+    let doc = Json::parse(text).map_err(|e| format!("corrupted JSON: {e}"))?;
+    let format = doc.u64_at("format").ok_or("missing 'format' version")?;
+    if format != CACHE_FORMAT_VERSION as u64 {
+        return Err(format!(
+            "cache format v{format} (this build reads v{CACHE_FORMAT_VERSION})"
+        ));
+    }
+    let fpv = doc
+        .u64_at("fingerprint_version")
+        .ok_or("missing 'fingerprint_version'")?;
+    if fpv != FINGERPRINT_VERSION as u64 {
+        return Err(format!(
+            "fingerprints were computed under scheme v{fpv} (this build uses \
+             v{FINGERPRINT_VERSION})"
+        ));
+    }
+    let items = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'entries' array")?;
+    let expected = doc.str_at("checksum").ok_or("missing 'checksum'")?;
+    let actual = entries_checksum(&Json::Arr(items.to_vec()));
+    if actual != expected {
+        return Err(format!(
+            "checksum mismatch (file says {expected}, contents hash to {actual})"
+        ));
+    }
+    let mut map = FxHashMap::default();
+    for item in items {
+        let (fp, entry) = entry_from_json(item)?;
+        map.insert(fp, entry);
+    }
+    Ok(map)
+}
+
+fn entry_to_json(fp: u64, e: &MemoEntry) -> Json {
+    Json::Obj(vec![
+        ("fp".into(), Json::Str(format!("{fp:016x}"))),
+        ("verified".into(), Json::Bool(e.verified)),
+        ("egraph_nodes".into(), Json::Num(e.egraph_nodes as f64)),
+        (
+            "out_rels".into(),
+            Json::Arr(e.out_rels.iter().map(rel_to_json).collect()),
+        ),
+    ])
+}
+
+fn entry_from_json(doc: &Json) -> std::result::Result<(u64, MemoEntry), String> {
+    let fp_hex = doc.str_at("fp").ok_or("entry is missing 'fp'")?;
+    let fp = u64::from_str_radix(fp_hex, 16)
+        .map_err(|_| format!("bad fingerprint '{fp_hex}'"))?;
+    let verified = doc.bool_at("verified").ok_or("entry is missing 'verified'")?;
+    let egraph_nodes =
+        doc.u64_at("egraph_nodes").ok_or("entry is missing 'egraph_nodes'")? as usize;
+    let rels = doc
+        .get("out_rels")
+        .and_then(Json::as_arr)
+        .ok_or("entry is missing 'out_rels'")?;
+    let out_rels = rels
+        .iter()
+        .map(rel_from_json)
+        .collect::<std::result::Result<Vec<_>, String>>()?;
+    Ok((fp, MemoEntry { verified, out_rels, egraph_nodes }))
+}
+
+fn rel_to_json(rel: &RelSummary) -> Json {
+    match rel {
+        RelSummary::Duplicate => {
+            Json::Obj(vec![("rel".into(), Json::Str("duplicate".into()))])
+        }
+        RelSummary::Sharded { dim, parts } => Json::Obj(vec![
+            ("rel".into(), Json::Str("sharded".into())),
+            ("dim".into(), Json::Num(*dim as f64)),
+            ("parts".into(), Json::Num(*parts as f64)),
+        ]),
+        RelSummary::Partial { kind } => Json::Obj(vec![
+            ("rel".into(), Json::Str("partial".into())),
+            ("reduce".into(), Json::Str(reduce_label(*kind).into())),
+        ]),
+    }
+}
+
+fn rel_from_json(doc: &Json) -> std::result::Result<RelSummary, String> {
+    match doc.str_at("rel").ok_or("relation is missing 'rel'")? {
+        "duplicate" => Ok(RelSummary::Duplicate),
+        "sharded" => Ok(RelSummary::Sharded {
+            dim: doc.u64_at("dim").ok_or("sharded relation is missing 'dim'")? as usize,
+            parts: doc.u64_at("parts").ok_or("sharded relation is missing 'parts'")?
+                as u32,
+        }),
+        "partial" => Ok(RelSummary::Partial {
+            kind: parse_reduce(
+                doc.str_at("reduce").ok_or("partial relation is missing 'reduce'")?,
+            )?,
+        }),
+        other => Err(format!("unknown relation kind '{other}'")),
+    }
+}
+
+fn reduce_label(kind: ReduceKind) -> &'static str {
+    match kind {
+        ReduceKind::Add => "add",
+        ReduceKind::Max => "max",
+        ReduceKind::Min => "min",
+        ReduceKind::Mul => "mul",
+    }
+}
+
+fn parse_reduce(label: &str) -> std::result::Result<ReduceKind, String> {
+    match label {
+        "add" => Ok(ReduceKind::Add),
+        "max" => Ok(ReduceKind::Max),
+        "min" => Ok(ReduceKind::Min),
+        "mul" => Ok(ReduceKind::Mul),
+        other => Err(format!("unknown reduce kind '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "scalify-cache-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_entry() -> MemoEntry {
+        MemoEntry {
+            verified: true,
+            out_rels: vec![
+                RelSummary::Duplicate,
+                RelSummary::Sharded { dim: 1, parts: 4 },
+                RelSummary::Partial { kind: ReduceKind::Add },
+            ],
+            egraph_nodes: 321,
+        }
+    }
+
+    #[test]
+    fn record_then_reopen_round_trips() {
+        let dir = tmpdir("roundtrip");
+        {
+            let (cache, load) = MemoCache::open(&dir).unwrap();
+            assert_eq!(load.loaded, 0);
+            assert!(load.warning.is_none());
+            cache.record(0xdead_beef_0000_0042, &sample_entry());
+            cache.record(7, &sample_entry());
+            // duplicate fingerprints are no-ops
+            cache.record(7, &sample_entry());
+            assert_eq!(cache.len(), 2);
+        }
+        let (cache, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 2, "{:?}", load.warning);
+        assert!(load.warning.is_none());
+        let entries = cache.entries();
+        let (_, e) = entries
+            .iter()
+            .find(|(fp, _)| *fp == 0xdead_beef_0000_0042)
+            .expect("high-bit fingerprint survives the hex encoding");
+        assert_eq!(e, &sample_entry());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_file_degrades_to_cold_start_with_warning() {
+        let dir = tmpdir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(CACHE_FILE), "{ this is not json").unwrap();
+        let (cache, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0);
+        let warning = load.warning.expect("corruption must warn");
+        assert!(warning.contains("starting cold"), "{warning}");
+        // the cache still works: a write replaces the corrupt file
+        cache.record(1, &sample_entry());
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 1);
+        assert!(load.warning.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_skew_degrades_to_cold_start() {
+        let dir = tmpdir("skew");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(CACHE_FILE),
+            format!(
+                "{{\"format\":{CACHE_FORMAT_VERSION},\"fingerprint_version\":9999,\
+                 \"entries\":[]}}"
+            ),
+        )
+        .unwrap();
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0);
+        assert!(load.warning.unwrap().contains("scheme v9999"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bitrot_in_a_parseable_file_fails_the_checksum_and_starts_cold() {
+        let dir = tmpdir("bitrot");
+        {
+            let (cache, _) = MemoCache::open(&dir).unwrap();
+            cache.record(0x1111_2222_3333_4444, &sample_entry());
+        }
+        // flip one hex digit of the stored fingerprint: still valid JSON,
+        // still valid hex — but now it names a different layer structure
+        let path = dir.join(CACHE_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replace("1111222233334444", "1111222233334445");
+        assert_ne!(text, tampered, "fixture must actually change");
+        std::fs::write(&path, tampered).unwrap();
+
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0, "tampered entries must not be replayed");
+        assert!(load.warning.unwrap().contains("checksum mismatch"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_records_never_rewrite_the_file() {
+        let dir = tmpdir("coalesce");
+        let (cache, _) = MemoCache::open(&dir).unwrap();
+        cache.record(1, &sample_entry());
+        let first = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().modified().ok();
+        // same fingerprint again: no mirror change, no rewrite
+        cache.record(1, &sample_entry());
+        let second = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().modified().ok();
+        assert_eq!(first, second);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mirror_is_bounded_by_capacity() {
+        let dir = tmpdir("bounded");
+        let (cache, _) = MemoCache::open_with_capacity(&dir, 2).unwrap();
+        cache.record(1, &sample_entry());
+        cache.record(2, &sample_entry());
+        cache.record(3, &sample_entry()); // dropped: mirror is full
+        assert_eq!(cache.len(), 2);
+        let (reopened, load) = MemoCache::open_with_capacity(&dir, 2).unwrap();
+        assert_eq!(load.loaded, 2);
+        assert!(reopened.entries().iter().all(|(fp, _)| *fp != 3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_directory_is_created() {
+        let dir = tmpdir("mkdir").join("nested/deeper");
+        let (cache, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0);
+        cache.record(3, &sample_entry());
+        assert!(dir.join(CACHE_FILE).exists());
+        let _ = std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap());
+    }
+}

@@ -1,0 +1,89 @@
+//! Blocking client for the `scalify serve` wire protocol.
+//!
+//! One TCP connection, one request line out, one response line back —
+//! the `scalify client` subcommand and the integration tests both drive
+//! the daemon through this type.
+
+use super::protocol::{Request, Response, StatsSnapshot, VerifySource};
+use crate::error::{Result, ResultExt, ScalifyError};
+use crate::verifier::VerifyReport;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// A connected protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon at `host:port`.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_ctx(|| format!("connecting to {addr}"))?;
+        let writer = stream.try_clone().ctx("cloning connection")?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request, read one response.
+    pub fn request(&mut self, request: &Request) -> Result<Response> {
+        self.request_line(&request.to_line())
+    }
+
+    /// Send one raw wire line (exposed for protocol tests), read one
+    /// response.
+    pub fn request_line(&mut self, line: &str) -> Result<Response> {
+        let mut out = line.to_string();
+        out.push('\n');
+        self.writer.write_all(out.as_bytes()).ctx("sending request")?;
+        self.writer.flush().ctx("sending request")?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).ctx("reading response")?;
+        if n == 0 {
+            return Err(ScalifyError::runtime(
+                "server closed the connection before responding",
+            ));
+        }
+        Response::from_line(buf.trim())
+    }
+
+    /// Verify a pair; unwraps the response into (report, daemon-side
+    /// latency, post-request stats). A daemon-side failure (unknown
+    /// model, parse error) comes back as `Err`.
+    pub fn verify(
+        &mut self,
+        source: VerifySource,
+    ) -> Result<(VerifyReport, f64, StatsSnapshot)> {
+        match self.request(&Request::Verify(source))? {
+            Response::VerifyDone { report, latency_secs, stats } => {
+                Ok((report, latency_secs, stats))
+            }
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to verify: {other:?}"
+            ))),
+        }
+    }
+
+    /// Fetch the daemon counters.
+    pub fn stats(&mut self) -> Result<StatsSnapshot> {
+        match self.request(&Request::Stats)? {
+            Response::Stats(stats) => Ok(stats),
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to stats: {other:?}"
+            ))),
+        }
+    }
+
+    /// Ask the daemon to exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to shutdown: {other:?}"
+            ))),
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The verification service: `scalify serve` / `scalify client`.
+//!
+//! Everything before this module is library- or process-shaped: a
+//! [`crate::verifier::Session`] amortizes compiled templates and the
+//! layer memo across calls, but dies with its process, so a fleet of CI
+//! jobs or training controllers each pay the cold start. This module
+//! turns the session into a shared long-running daemon:
+//!
+//! * [`protocol`] — the newline-delimited JSON wire format (`verify`,
+//!   `stats`, `shutdown`), reusing the crate's hand-rolled
+//!   [`crate::report::json`] machinery,
+//! * [`scheduler`] — a bounded admission queue with blocking
+//!   backpressure layered on the reusable [`crate::util::WorkerPool`],
+//! * [`cache`] — the persistent on-disk layer-memo store
+//!   (`--cache-dir`): stable-fingerprint-keyed entries loaded at startup
+//!   and flushed on write, so warm state survives restarts and is shared
+//!   across processes,
+//! * [`server`] — the accept loop and connection handling around ONE
+//!   shared session, and
+//! * [`client`] — the blocking client the `scalify client` subcommand
+//!   and the tests drive the daemon with.
+
+pub mod cache;
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use cache::{CacheLoad, MemoCache, CACHE_FILE, CACHE_FORMAT_VERSION};
+pub use client::Client;
+pub use protocol::{Request, Response, StatsSnapshot, VerifySource, PROTOCOL_VERSION};
+pub use scheduler::Scheduler;
+pub use server::{ServeConfig, Server};

@@ -1,0 +1,496 @@
+//! The newline-delimited JSON wire protocol of `scalify serve`.
+//!
+//! One request per line, one response per line, both single JSON
+//! documents rendered compactly (no embedded newlines). Three request
+//! kinds:
+//!
+//! ```text
+//! {"cmd":"verify","model":"llama-tiny","par":"tp4","layers":2}
+//! {"cmd":"verify","bug":"T4#3"}
+//! {"cmd":"verify","base_hlo":"HloModule ...","dist_hlo":"HloModule ...","cores":4}
+//! {"cmd":"stats"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! Responses carry `"ok"` plus a `"kind"` discriminator; verify responses
+//! embed the full [`VerifyReport`] JSON (the same document `--json`
+//! prints) and a [`StatsSnapshot`] taken after the request, so a client
+//! can watch memo hits grow without a second round trip. Every error —
+//! malformed request, unknown model, failed parse — is `{"ok":false,
+//! "error":...}`; the connection stays usable afterwards.
+
+use crate::error::{Result, ScalifyError};
+use crate::report::json::Json;
+use crate::verifier::VerifyReport;
+
+/// Wire protocol version, included in stats responses so mixed-version
+/// fleets can detect skew.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// What a `verify` request asks the daemon to check.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VerifySource {
+    /// A model-zoo pair by name + parallelism spec (`llama-tiny` / `tp4`).
+    Model {
+        /// Zoo model name (see `scalify model`).
+        model: String,
+        /// Parallelism spec (`tp4`, `pp2tp4`, `dp4z1`, ...).
+        par: String,
+        /// Optional layer-count override.
+        layers: Option<u32>,
+    },
+    /// A bug-corpus case by id (`T4#3`, `PT#1`, ...) — always expected to
+    /// come back unverified; used for smoke checks and tests.
+    Bug {
+        /// Catalog id.
+        id: String,
+    },
+    /// An inline HLO-text pair (positional replicated annotations, like
+    /// `scalify verify` on files).
+    Hlo {
+        /// Baseline module text.
+        base: String,
+        /// Distributed module text.
+        dist: String,
+        /// SPMD width of the distributed module.
+        cores: u32,
+    },
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Verify a pair.
+    Verify(VerifySource),
+    /// Report service counters.
+    Stats,
+    /// Stop accepting connections and exit.
+    Shutdown,
+}
+
+impl Request {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Verify(VerifySource::Model { model, par, layers }) => {
+                let mut fields = vec![
+                    ("cmd".into(), Json::Str("verify".into())),
+                    ("model".into(), Json::Str(model.clone())),
+                    ("par".into(), Json::Str(par.clone())),
+                ];
+                if let Some(l) = layers {
+                    fields.push(("layers".into(), Json::Num(*l as f64)));
+                }
+                Json::Obj(fields)
+            }
+            Request::Verify(VerifySource::Bug { id }) => Json::Obj(vec![
+                ("cmd".into(), Json::Str("verify".into())),
+                ("bug".into(), Json::Str(id.clone())),
+            ]),
+            Request::Verify(VerifySource::Hlo { base, dist, cores }) => Json::Obj(vec![
+                ("cmd".into(), Json::Str("verify".into())),
+                ("base_hlo".into(), Json::Str(base.clone())),
+                ("dist_hlo".into(), Json::Str(dist.clone())),
+                ("cores".into(), Json::Num(*cores as f64)),
+            ]),
+            Request::Stats => Json::Obj(vec![("cmd".into(), Json::Str("stats".into()))]),
+            Request::Shutdown => {
+                Json::Obj(vec![("cmd".into(), Json::Str("shutdown".into()))])
+            }
+        }
+    }
+
+    /// One compact wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Decode a request document.
+    pub fn from_json(doc: &Json) -> Result<Request> {
+        let cmd = doc
+            .str_at("cmd")
+            .ok_or_else(|| ScalifyError::parse("request is missing string field 'cmd'"))?;
+        match cmd {
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "verify" => Ok(Request::Verify(decode_source(doc)?)),
+            other => Err(ScalifyError::parse(format!(
+                "unknown request cmd '{other}' (expected verify, stats or shutdown)"
+            ))),
+        }
+    }
+
+    /// Decode one wire line.
+    pub fn from_line(line: &str) -> Result<Request> {
+        Request::from_json(&Json::parse(line)?)
+    }
+}
+
+fn decode_source(doc: &Json) -> Result<VerifySource> {
+    if let Some(id) = doc.str_at("bug") {
+        return Ok(VerifySource::Bug { id: id.to_string() });
+    }
+    if let Some(model) = doc.str_at("model") {
+        let par = doc
+            .str_at("par")
+            .ok_or_else(|| ScalifyError::parse("verify-by-model needs a 'par' spec"))?;
+        let layers = match doc.get("layers") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let n = v.as_u64().ok_or_else(|| {
+                    ScalifyError::parse("'layers' must be a non-negative integer")
+                })?;
+                if n > u32::MAX as u64 {
+                    return Err(ScalifyError::parse("'layers' must fit in u32"));
+                }
+                Some(n as u32)
+            }
+        };
+        return Ok(VerifySource::Model {
+            model: model.to_string(),
+            par: par.to_string(),
+            layers,
+        });
+    }
+    if let Some(base) = doc.str_at("base_hlo") {
+        let dist = doc.str_at("dist_hlo").ok_or_else(|| {
+            ScalifyError::parse("inline verify needs both 'base_hlo' and 'dist_hlo'")
+        })?;
+        let cores = doc.u64_at("cores").unwrap_or(1);
+        if cores == 0 || cores > u32::MAX as u64 {
+            return Err(ScalifyError::parse("'cores' must be in 1..=u32::MAX"));
+        }
+        return Ok(VerifySource::Hlo {
+            base: base.to_string(),
+            dist: dist.to_string(),
+            cores: cores as u32,
+        });
+    }
+    Err(ScalifyError::parse(
+        "verify request names no source (expected 'model'+'par', 'bug', or \
+         'base_hlo'+'dist_hlo')",
+    ))
+}
+
+/// Point-in-time service counters (the `stats` response payload, also
+/// embedded in every verify response).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// Verify jobs completed by the daemon (successful reports).
+    pub jobs: u64,
+    /// `Session::verify` calls (includes jobs that errored mid-verify).
+    pub runs: u64,
+    /// Distinct memo fingerprints currently held.
+    pub memo_entries: u64,
+    /// Layer verifications served from the memo.
+    pub memo_hits: u64,
+    /// Layer verifications computed and inserted.
+    pub memo_misses: u64,
+    /// Memo entries evicted under the capacity bound.
+    pub memo_evictions: u64,
+    /// Compiled rewrite templates in the shared rule set.
+    pub templates: u64,
+    /// Session worker threads (speculative pass).
+    pub threads: u64,
+    /// Scheduler queue capacity (backpressure threshold).
+    pub queue_capacity: u64,
+    /// Scheduler worker threads.
+    pub scheduler_workers: u64,
+    /// Total e-graph nodes across all completed verify jobs.
+    pub egraph_nodes_total: u64,
+    /// Entries preloaded from the persistent cache at startup.
+    pub cache_entries_loaded: u64,
+    /// Cache directory, when persistence is on.
+    pub cache_dir: Option<String>,
+    /// Seconds since the daemon started.
+    pub uptime_secs: f64,
+    /// Median per-request verify latency (seconds; 0 when no jobs yet).
+    pub latency_p50_secs: f64,
+    /// 95th-percentile verify latency.
+    pub latency_p95_secs: f64,
+    /// Worst verify latency.
+    pub latency_max_secs: f64,
+}
+
+impl StatsSnapshot {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("protocol".into(), Json::Num(PROTOCOL_VERSION as f64)),
+            ("jobs".into(), Json::Num(self.jobs as f64)),
+            ("runs".into(), Json::Num(self.runs as f64)),
+            ("memo_entries".into(), Json::Num(self.memo_entries as f64)),
+            ("memo_hits".into(), Json::Num(self.memo_hits as f64)),
+            ("memo_misses".into(), Json::Num(self.memo_misses as f64)),
+            ("memo_evictions".into(), Json::Num(self.memo_evictions as f64)),
+            ("templates".into(), Json::Num(self.templates as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("queue_capacity".into(), Json::Num(self.queue_capacity as f64)),
+            ("scheduler_workers".into(), Json::Num(self.scheduler_workers as f64)),
+            ("egraph_nodes_total".into(), Json::Num(self.egraph_nodes_total as f64)),
+            (
+                "cache_entries_loaded".into(),
+                Json::Num(self.cache_entries_loaded as f64),
+            ),
+            ("uptime_secs".into(), Json::Num(self.uptime_secs)),
+            ("latency_p50_secs".into(), Json::Num(self.latency_p50_secs)),
+            ("latency_p95_secs".into(), Json::Num(self.latency_p95_secs)),
+            ("latency_max_secs".into(), Json::Num(self.latency_max_secs)),
+        ];
+        if let Some(dir) = &self.cache_dir {
+            fields.push(("cache_dir".into(), Json::Str(dir.clone())));
+        }
+        Json::Obj(fields)
+    }
+
+    /// Decode from [`StatsSnapshot::to_json`] output. Counter fields are
+    /// required; latency/uptime default to 0 when absent.
+    pub fn from_json(doc: &Json) -> Result<StatsSnapshot> {
+        let need = |key: &str| {
+            doc.u64_at(key).ok_or_else(|| {
+                ScalifyError::parse(format!("stats is missing counter '{key}'"))
+            })
+        };
+        Ok(StatsSnapshot {
+            jobs: need("jobs")?,
+            runs: need("runs")?,
+            memo_entries: need("memo_entries")?,
+            memo_hits: need("memo_hits")?,
+            memo_misses: need("memo_misses")?,
+            memo_evictions: need("memo_evictions")?,
+            templates: need("templates")?,
+            threads: need("threads")?,
+            queue_capacity: need("queue_capacity")?,
+            scheduler_workers: need("scheduler_workers")?,
+            egraph_nodes_total: need("egraph_nodes_total")?,
+            cache_entries_loaded: need("cache_entries_loaded")?,
+            cache_dir: doc.str_at("cache_dir").map(str::to_owned),
+            uptime_secs: doc.f64_at("uptime_secs").unwrap_or(0.0),
+            latency_p50_secs: doc.f64_at("latency_p50_secs").unwrap_or(0.0),
+            latency_p95_secs: doc.f64_at("latency_p95_secs").unwrap_or(0.0),
+            latency_max_secs: doc.f64_at("latency_max_secs").unwrap_or(0.0),
+        })
+    }
+}
+
+/// A daemon response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// A verify job finished (the report itself may be UNVERIFIED — that
+    /// is a successful response, not an error).
+    VerifyDone {
+        /// The full verification report.
+        report: VerifyReport,
+        /// Wall time of this request inside the daemon (queue + verify).
+        latency_secs: f64,
+        /// Counters sampled right after the job.
+        stats: StatsSnapshot,
+    },
+    /// Stats request served.
+    Stats(StatsSnapshot),
+    /// Shutdown acknowledged; the daemon exits after this line.
+    ShuttingDown,
+    /// The request failed (malformed input, unknown model, parse error).
+    Error {
+        /// Human-readable cause.
+        message: String,
+    },
+}
+
+impl Response {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::VerifyDone { report, latency_secs, stats } => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("verify".into())),
+                ("report".into(), report.to_json()),
+                ("latency_secs".into(), Json::Num(*latency_secs)),
+                ("stats".into(), stats.to_json()),
+            ]),
+            Response::Stats(stats) => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("stats".into())),
+                ("stats".into(), stats.to_json()),
+            ]),
+            Response::ShuttingDown => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("shutdown".into())),
+            ]),
+            Response::Error { message } => Json::Obj(vec![
+                ("ok".into(), Json::Bool(false)),
+                ("error".into(), Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    /// One compact wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Decode a response document.
+    pub fn from_json(doc: &Json) -> Result<Response> {
+        let ok = doc
+            .bool_at("ok")
+            .ok_or_else(|| ScalifyError::parse("response is missing bool field 'ok'"))?;
+        if !ok {
+            let message = doc
+                .str_at("error")
+                .ok_or_else(|| ScalifyError::parse("error response carries no 'error'"))?
+                .to_string();
+            return Ok(Response::Error { message });
+        }
+        match doc.str_at("kind") {
+            Some("verify") => {
+                let report = doc.get("report").ok_or_else(|| {
+                    ScalifyError::parse("verify response is missing 'report'")
+                })?;
+                let stats = doc.get("stats").ok_or_else(|| {
+                    ScalifyError::parse("verify response is missing 'stats'")
+                })?;
+                Ok(Response::VerifyDone {
+                    report: VerifyReport::from_json(report)?,
+                    latency_secs: doc.f64_at("latency_secs").unwrap_or(0.0),
+                    stats: StatsSnapshot::from_json(stats)?,
+                })
+            }
+            Some("stats") => {
+                let stats = doc.get("stats").ok_or_else(|| {
+                    ScalifyError::parse("stats response is missing 'stats'")
+                })?;
+                Ok(Response::Stats(StatsSnapshot::from_json(stats)?))
+            }
+            Some("shutdown") => Ok(Response::ShuttingDown),
+            other => Err(ScalifyError::parse(format!(
+                "unknown response kind {other:?}"
+            ))),
+        }
+    }
+
+    /// Decode one wire line.
+    pub fn from_line(line: &str) -> Result<Response> {
+        Response::from_json(&Json::parse(line)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: Request) {
+        let line = req.to_line();
+        assert!(!line.contains('\n'), "wire lines must be single-line: {line}");
+        let back = Request::from_line(&line).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        round_trip_request(Request::Stats);
+        round_trip_request(Request::Shutdown);
+        round_trip_request(Request::Verify(VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp4".into(),
+            layers: Some(2),
+        }));
+        round_trip_request(Request::Verify(VerifySource::Model {
+            model: "mixtral-tiny".into(),
+            par: "ep4".into(),
+            layers: None,
+        }));
+        round_trip_request(Request::Verify(VerifySource::Bug { id: "T4#3".into() }));
+        round_trip_request(Request::Verify(VerifySource::Hlo {
+            base: "HloModule a\nENTRY e { ... }".into(),
+            dist: "HloModule b".into(),
+            cores: 8,
+        }));
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            "{\"cmd\":\"nope\"}",
+            "{\"cmd\":\"verify\"}",
+            "{\"cmd\":\"verify\",\"model\":\"llama-tiny\"}",
+            "{\"cmd\":\"verify\",\"base_hlo\":\"x\"}",
+            "{\"cmd\":\"verify\",\"base_hlo\":\"x\",\"dist_hlo\":\"y\",\"cores\":0}",
+            "{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\",\"layers\":-1}",
+            "{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\",\"layers\":4294967297}",
+        ] {
+            assert!(Request::from_line(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn stats_snapshot_round_trips() {
+        let snap = StatsSnapshot {
+            jobs: 12,
+            runs: 13,
+            memo_entries: 40,
+            memo_hits: 100,
+            memo_misses: 41,
+            memo_evictions: 1,
+            templates: 25,
+            threads: 4,
+            queue_capacity: 64,
+            scheduler_workers: 4,
+            egraph_nodes_total: 123_456,
+            cache_entries_loaded: 40,
+            cache_dir: Some("/tmp/scalify-cache".into()),
+            uptime_secs: 12.5,
+            latency_p50_secs: 0.01,
+            latency_p95_secs: 0.05,
+            latency_max_secs: 0.2,
+        };
+        let back = StatsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        // cache_dir is optional
+        let bare = StatsSnapshot::default();
+        let back = StatsSnapshot::from_json(&bare.to_json()).unwrap();
+        assert_eq!(back, bare);
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let line = Response::ShuttingDown.to_line();
+        assert!(matches!(Response::from_line(&line).unwrap(), Response::ShuttingDown));
+
+        let line = Response::Error { message: "unknown model 'gpt-5'".into() }.to_line();
+        match Response::from_line(&line).unwrap() {
+            Response::Error { message } => assert!(message.contains("gpt-5")),
+            other => panic!("expected error, got {other:?}"),
+        }
+
+        let line = Response::Stats(StatsSnapshot::default()).to_line();
+        assert!(matches!(Response::from_line(&line).unwrap(), Response::Stats(_)));
+    }
+
+    #[test]
+    fn verify_response_embeds_report_and_stats() {
+        let report = VerifyReport {
+            verdict: crate::verifier::Verdict::Verified,
+            layers: vec![],
+            stopwatch: crate::util::Stopwatch::new(),
+            total: std::time::Duration::from_millis(3),
+        };
+        let resp = Response::VerifyDone {
+            report,
+            latency_secs: 0.004,
+            stats: StatsSnapshot { jobs: 1, ..Default::default() },
+        };
+        let line = resp.to_line();
+        assert!(!line.contains('\n'));
+        match Response::from_line(&line).unwrap() {
+            Response::VerifyDone { report, latency_secs, stats } => {
+                assert!(report.verified());
+                assert!((latency_secs - 0.004).abs() < 1e-12);
+                assert_eq!(stats.jobs, 1);
+            }
+            other => panic!("expected verify response, got {other:?}"),
+        }
+    }
+}

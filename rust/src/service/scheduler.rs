@@ -1,0 +1,225 @@
+//! Bounded job scheduling for the verification service.
+//!
+//! A [`Scheduler`] layers a **bounded in-flight window with blocking
+//! backpressure** on the reusable [`WorkerPool`]: `execute` admits a job
+//! only when a slot is free (callers — service connections, batch
+//! submitters — block at the admission gate otherwise), runs it on a pool
+//! worker, and hands the result back to the submitting thread. Many
+//! concurrent clients therefore share one pool and one
+//! [`crate::verifier::Session`] without unbounded queue growth: when the
+//! daemon is saturated, new requests wait at the gate instead of piling
+//! up memory.
+//!
+//! The session's own speculative-pass pool is a *different* pool —
+//! scheduler workers block on it while verifying, which is fine; the two
+//! pools must stay separate or a saturated scheduler could deadlock
+//! waiting for sub-jobs that need its own workers.
+
+use crate::util::WorkerPool;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Bounded scheduler over a private worker pool; see the module docs.
+pub struct Scheduler {
+    pool: WorkerPool,
+    /// (in-flight count, wakeup for slot release).
+    slots: Arc<(Mutex<usize>, Condvar)>,
+    capacity: usize,
+    submitted: AtomicUsize,
+    completed: Arc<AtomicUsize>,
+}
+
+impl Scheduler {
+    /// Scheduler with `workers` pool threads and an admission window of
+    /// `capacity` in-flight jobs (both clamped to at least 1).
+    pub fn new(workers: usize, capacity: usize) -> Scheduler {
+        Scheduler {
+            pool: WorkerPool::new(workers),
+            slots: Arc::new((Mutex::new(0), Condvar::new())),
+            capacity: capacity.max(1),
+            submitted: AtomicUsize::new(0),
+            completed: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Admission window size.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Pool worker threads.
+    pub fn workers(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Jobs admitted so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Jobs finished so far.
+    pub fn completed(&self) -> usize {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs currently admitted but not finished.
+    pub fn inflight(&self) -> usize {
+        *self.slots.0.lock().expect("scheduler slot lock")
+    }
+
+    /// Block until an admission slot is free, then take it.
+    fn acquire(&self) {
+        let (lock, cv) = &*self.slots;
+        let mut inflight = lock.lock().expect("scheduler slot lock");
+        while *inflight >= self.capacity {
+            inflight = cv.wait(inflight).expect("scheduler slot lock");
+        }
+        *inflight += 1;
+    }
+
+    fn release(slots: &(Mutex<usize>, Condvar)) {
+        let (lock, cv) = slots;
+        let mut inflight = lock.lock().expect("scheduler slot lock");
+        *inflight = inflight.saturating_sub(1);
+        cv.notify_all();
+    }
+
+    /// Run one job through the bounded queue and block for its result.
+    /// This is the backpressure point: with `capacity` jobs in flight the
+    /// caller waits here. A panicking job is re-raised on the caller.
+    pub fn execute<T, F>(&self, job: F) -> T
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel::<std::thread::Result<T>>();
+        self.acquire();
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let slots = Arc::clone(&self.slots);
+        let completed = Arc::clone(&self.completed);
+        self.pool.submit(move || {
+            let out = catch_unwind(AssertUnwindSafe(job));
+            completed.fetch_add(1, Ordering::Relaxed);
+            Scheduler::release(&slots);
+            // receiver only disappears if the caller itself died
+            let _ = tx.send(out);
+        });
+        match rx.recv() {
+            Ok(Ok(v)) => v,
+            Ok(Err(panic)) => resume_unwind(panic),
+            Err(_) => panic!("scheduler worker dropped a job result"),
+        }
+    }
+
+    /// Run every job through the bounded queue; results come back in
+    /// submission order. Unlike [`WorkerPool::run_all`], admission obeys
+    /// the capacity bound: at most `capacity` jobs *execute* concurrently
+    /// (the submitted closures themselves are materialized by the caller;
+    /// the bound is on in-flight work, not on the job list).
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            self.acquire();
+            self.submitted.fetch_add(1, Ordering::Relaxed);
+            let slots = Arc::clone(&self.slots);
+            let completed = Arc::clone(&self.completed);
+            let tx = tx.clone();
+            self.pool.submit(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                completed.fetch_add(1, Ordering::Relaxed);
+                Scheduler::release(&slots);
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = rx.recv().expect("scheduler workers hung up");
+            match out {
+                Ok(v) => results[i] = Some(v),
+                Err(panic) => resume_unwind(panic),
+            }
+        }
+        results.into_iter().map(|r| r.expect("missing job result")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn execute_returns_results() {
+        let s = Scheduler::new(2, 4);
+        assert_eq!(s.execute(|| 40 + 2), 42);
+        assert_eq!(s.submitted(), 1);
+        assert_eq!(s.completed(), 1);
+        assert_eq!(s.inflight(), 0);
+    }
+
+    #[test]
+    fn run_all_preserves_order_under_bounded_admission() {
+        let s = Scheduler::new(4, 2);
+        let jobs: Vec<_> = (0..32).map(|i| move || i * 3).collect();
+        assert_eq!(s.run_all(jobs), (0..32).map(|i| i * 3).collect::<Vec<_>>());
+        assert_eq!(s.completed(), 32);
+    }
+
+    #[test]
+    fn inflight_never_exceeds_capacity() {
+        let s = Arc::new(Scheduler::new(4, 2));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s2 = Arc::clone(&s);
+            let peak2 = Arc::clone(&peak);
+            let live2 = Arc::clone(&live);
+            handles.push(std::thread::spawn(move || {
+                s2.execute(move || {
+                    let now = live2.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak2.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(10));
+                    live2.fetch_sub(1, Ordering::SeqCst);
+                })
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "backpressure must cap concurrent jobs at capacity: peak {}",
+            peak.load(Ordering::SeqCst)
+        );
+        assert_eq!(s.completed(), 8);
+        assert_eq!(s.inflight(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "job went boom")]
+    fn job_panic_reraises_on_the_submitter() {
+        let s = Scheduler::new(1, 1);
+        s.execute(|| panic!("job went boom"));
+    }
+
+    #[test]
+    fn slot_frees_even_after_a_panic() {
+        let s = Scheduler::new(1, 1);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            s.execute(|| panic!("first"));
+        }));
+        assert!(caught.is_err());
+        // the slot released; the scheduler still works
+        assert_eq!(s.execute(|| 7), 7);
+    }
+}

@@ -1,0 +1,515 @@
+//! The `scalify serve` daemon: one warm [`Session`] serving many clients.
+//!
+//! Architecture:
+//!
+//! ```text
+//! accept loop ──► connection thread (1 per client)
+//!                    │  parse request line
+//!                    ▼
+//!                [`Scheduler`] — bounded admission, backpressure
+//!                    │
+//!                    ▼
+//!                shared [`Session`] — ONE compiled rule set,
+//!                ONE layer memo (optionally disk-backed), ONE
+//!                speculative worker pool
+//! ```
+//!
+//! Every connection thread blocks at the scheduler's admission gate when
+//! the daemon is saturated, so a burst of CI jobs queues at the socket
+//! instead of exhausting memory. With `--cache-dir`, the memo preloads
+//! from disk at startup and every fresh entry is flushed on write, so a
+//! restarted daemon answers its first request warm.
+
+use super::cache::MemoCache;
+use super::protocol::{Request, Response, StatsSnapshot, VerifySource};
+use super::scheduler::Scheduler;
+use crate::cli;
+use crate::error::{Result, ResultExt, ScalifyError};
+use crate::hlo::parse_hlo_module;
+use crate::verifier::{GraphPair, Session, VerifyConfig};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Daemon configuration (`scalify serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (printed at startup,
+    /// used by the tests).
+    pub addr: String,
+    /// Directory for the persistent layer-memo store; `None` keeps the
+    /// memo in-process only.
+    pub cache_dir: Option<PathBuf>,
+    /// Scheduler admission window (in-flight verify jobs before
+    /// backpressure).
+    pub queue_capacity: usize,
+    /// Scheduler worker threads (concurrent verify jobs).
+    pub workers: usize,
+    /// Verifier configuration for the shared session.
+    pub verify: VerifyConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            cache_dir: None,
+            queue_capacity: 64,
+            workers: 4,
+            verify: VerifyConfig::default(),
+        }
+    }
+}
+
+/// Shared state behind every connection thread.
+struct ServiceState {
+    session: Session,
+    scheduler: Scheduler,
+    cache: Option<Arc<MemoCache>>,
+    cache_loaded: usize,
+    /// Verify jobs that produced a report.
+    jobs: AtomicU64,
+    /// Total e-graph nodes across completed jobs.
+    egraph_nodes_total: AtomicU64,
+    /// Per-request wall latencies (seconds), most recent last; bounded.
+    latencies: Mutex<VecDeque<f64>>,
+    started: Instant,
+    shutdown: AtomicBool,
+    local_addr: SocketAddr,
+}
+
+/// Most recent latencies retained for the percentile counters.
+const LATENCY_WINDOW: usize = 4096;
+
+impl ServiceState {
+    fn record_latency(&self, secs: f64) {
+        let mut window = self.latencies.lock().expect("latency lock");
+        while window.len() >= LATENCY_WINDOW {
+            window.pop_front();
+        }
+        window.push_back(secs);
+    }
+
+    fn snapshot(&self) -> StatsSnapshot {
+        let (p50, p95, max) = {
+            let window = self.latencies.lock().expect("latency lock");
+            if window.is_empty() {
+                (0.0, 0.0, 0.0)
+            } else {
+                let mut sorted: Vec<f64> = window.iter().copied().collect();
+                sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+                let at = |q: f64| {
+                    let idx = ((sorted.len() as f64) * q) as usize;
+                    sorted[idx.min(sorted.len() - 1)]
+                };
+                (at(0.50), at(0.95), sorted[sorted.len() - 1])
+            }
+        };
+        let session = self.session.stats();
+        StatsSnapshot {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            runs: session.runs as u64,
+            memo_entries: session.memo_entries as u64,
+            memo_hits: session.memo_hits as u64,
+            memo_misses: session.memo_misses as u64,
+            memo_evictions: session.memo_evictions as u64,
+            templates: session.templates as u64,
+            threads: session.threads as u64,
+            queue_capacity: self.scheduler.capacity() as u64,
+            scheduler_workers: self.scheduler.workers() as u64,
+            egraph_nodes_total: self.egraph_nodes_total.load(Ordering::Relaxed),
+            cache_entries_loaded: self.cache_loaded as u64,
+            cache_dir: self
+                .cache
+                .as_ref()
+                .and_then(|c| c.path().parent().map(|p| p.display().to_string())),
+            uptime_secs: self.started.elapsed().as_secs_f64(),
+            latency_p50_secs: p50,
+            latency_p95_secs: p95,
+            latency_max_secs: max,
+        }
+    }
+
+    /// Accept loops block in `accept`; poke them awake after setting the
+    /// shutdown flag.
+    fn wake_accept(&self) {
+        let _ = TcpStream::connect(self.local_addr);
+    }
+}
+
+/// A running daemon. Dropping the handle does **not** stop the daemon;
+/// call [`Server::shutdown`] or send a `shutdown` request, then
+/// [`Server::wait`].
+pub struct Server {
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    state: Arc<ServiceState>,
+}
+
+impl Server {
+    /// Bind, preload the cache (if configured) and start accepting.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_ctx(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+
+        let mut session = Session::new(cfg.verify.clone());
+        let (cache, cache_loaded) = match &cfg.cache_dir {
+            None => (None, 0),
+            Some(dir) => {
+                // the persistent mirror obeys the same bound as the memo
+                let (cache, load) =
+                    MemoCache::open_with_capacity(dir, cfg.verify.memo_capacity)
+                        .with_ctx(|| format!("opening cache dir {}", dir.display()))?;
+                if let Some(warning) = &load.warning {
+                    eprintln!("scalify: warning: {warning}");
+                }
+                let cache = Arc::new(cache);
+                let preloaded = session.preload_memo(cache.entries());
+                let hook_cache = Arc::clone(&cache);
+                session.set_memo_write_hook(Arc::new(move |fp, entry| {
+                    hook_cache.record(fp, entry);
+                }));
+                debug_assert_eq!(preloaded, load.loaded);
+                (Some(cache), load.loaded)
+            }
+        };
+
+        let state = Arc::new(ServiceState {
+            session,
+            scheduler: Scheduler::new(cfg.workers, cfg.queue_capacity),
+            cache,
+            cache_loaded,
+            jobs: AtomicU64::new(0),
+            egraph_nodes_total: AtomicU64::new(0),
+            latencies: Mutex::new(VecDeque::new()),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            local_addr,
+        });
+
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::Builder::new()
+            .name("scalify-accept".into())
+            .spawn(move || accept_loop(listener, accept_state))
+            .map_err(|e| ScalifyError::runtime(format!("spawning accept thread: {e}")))?;
+
+        Ok(Server { local_addr, accept: Some(accept), state })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Current counters (the same snapshot a `stats` request returns).
+    pub fn stats(&self) -> StatsSnapshot {
+        self.state.snapshot()
+    }
+
+    /// Ask the daemon to stop, as if a `shutdown` request arrived.
+    pub fn shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.wake_accept();
+    }
+
+    /// Block until the daemon has stopped (accept loop exited and every
+    /// connection thread drained).
+    pub fn wait(mut self) {
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServiceState>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // persistent accept errors (e.g. EMFILE under fd
+                // exhaustion) return immediately — back off instead of
+                // spinning a full core
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let conn_state = Arc::clone(&state);
+        match std::thread::Builder::new()
+            .name("scalify-conn".into())
+            .spawn(move || handle_conn(stream, conn_state))
+        {
+            Ok(handle) => conns.push(handle),
+            Err(_) => continue,
+        }
+        // reap finished connection threads so a long-lived daemon does
+        // not accumulate handles
+        conns.retain(|h| !h.is_finished());
+    }
+    for handle in conns {
+        let _ = handle.join();
+    }
+}
+
+/// Hard cap on one request line — generous for inline HLO text, small
+/// enough that a client streaming garbage without a newline cannot OOM
+/// the shared daemon (everything else in the service is bounded too).
+const MAX_REQUEST_BYTES: usize = 64 << 20;
+
+/// Serve one complete request line; returns `false` when the connection
+/// should close (write failure or shutdown).
+fn serve_line(line: &[u8], state: &Arc<ServiceState>, writer: &mut TcpStream) -> bool {
+    let text = String::from_utf8_lossy(line);
+    let trimmed = text.trim();
+    if trimmed.is_empty() {
+        return true;
+    }
+    let response = handle_request(trimmed, state);
+    let closing = matches!(response, Response::ShuttingDown);
+    let mut out = response.to_line();
+    out.push('\n');
+    if writer.write_all(out.as_bytes()).is_err() {
+        return false;
+    }
+    let _ = writer.flush();
+    if closing {
+        state.wake_accept();
+        return false;
+    }
+    true
+}
+
+fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    // short read timeout: idle connections poll the shutdown flag instead
+    // of pinning the daemon open forever
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut reader = BufReader::new(stream);
+    // bytes, not String: `read_line` would discard consumed bytes when a
+    // timeout lands mid-UTF-8-sequence (its guard truncates on invalid
+    // UTF-8), whereas `read_until` keeps every byte across retries
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if line.len() >= MAX_REQUEST_BYTES {
+            let mut out = Response::Error {
+                message: format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
+            }
+            .to_line();
+            out.push('\n');
+            let _ = writer.write_all(out.as_bytes());
+            break;
+        }
+        // the per-read cap makes a newline-less flood surface at the
+        // length check above instead of growing `line` unboundedly
+        let budget = (MAX_REQUEST_BYTES - line.len()) as u64;
+        let mut limited = std::io::Read::take(&mut reader, budget);
+        match limited.read_until(b'\n', &mut line) {
+            Ok(0) => {
+                // peer closed; serve a final unterminated line, if any
+                if !line.is_empty() {
+                    let _ = serve_line(&line, &state, &mut writer);
+                }
+                break;
+            }
+            Ok(_) => {
+                if line.last() != Some(&b'\n') {
+                    // cut short by the cap (caught next turn) or by EOF
+                    // (next read returns Ok(0)); keep accumulating
+                    continue;
+                }
+                if !serve_line(&line, &state, &mut writer) {
+                    break;
+                }
+                line.clear();
+            }
+            // timeout with a partial line: the consumed bytes stay in
+            // `line`, so looping without clearing resumes mid-line
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_request(line: &str, state: &Arc<ServiceState>) -> Response {
+    let request = match Request::from_line(line) {
+        Ok(r) => r,
+        Err(e) => return Response::Error { message: e.to_string() },
+    };
+    match request {
+        Request::Stats => Response::Stats(state.snapshot()),
+        Request::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Response::ShuttingDown
+        }
+        Request::Verify(source) => {
+            let t0 = Instant::now();
+            let job_state = Arc::clone(state);
+            // the whole job — pair construction included — runs under the
+            // scheduler's admission bound; this call blocks (backpressure)
+            // when the daemon is saturated
+            let outcome = state
+                .scheduler
+                .execute(move || build_pair(&source).and_then(|p| job_state.session.verify(&p)));
+            let latency_secs = t0.elapsed().as_secs_f64();
+            match outcome {
+                Ok(report) => {
+                    state.jobs.fetch_add(1, Ordering::Relaxed);
+                    let nodes: u64 =
+                        report.layers.iter().map(|l| l.egraph_nodes as u64).sum();
+                    state.egraph_nodes_total.fetch_add(nodes, Ordering::Relaxed);
+                    state.record_latency(latency_secs);
+                    Response::VerifyDone { report, latency_secs, stats: state.snapshot() }
+                }
+                Err(e) => Response::Error { message: e.to_string() },
+            }
+        }
+    }
+}
+
+/// Materialize the graph pair a verify request names.
+fn build_pair(source: &VerifySource) -> Result<GraphPair> {
+    match source {
+        VerifySource::Model { model, par, layers } => {
+            cli::model_pair(model, cli::parallelism(par)?, *layers)
+        }
+        VerifySource::Bug { id } => {
+            let case = crate::bugs::reproduced_bugs()
+                .into_iter()
+                .chain(crate::bugs::new_bugs())
+                .chain(crate::bugs::parallel_transform_bugs())
+                .find(|c| c.id == id.as_str())
+                .ok_or_else(|| {
+                    ScalifyError::model_spec(format!("unknown bug-corpus id '{id}'"))
+                })?;
+            Ok((case.build)())
+        }
+        VerifySource::Hlo { base, dist, cores } => {
+            let bg = parse_hlo_module(base, 1).ctx("inline base_hlo")?;
+            let dg = parse_hlo_module(dist, *cores).ctx("inline dist_hlo")?;
+            GraphPair::replicated(bg, dg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::client::Client;
+
+    fn tiny_serve_config() -> ServeConfig {
+        ServeConfig {
+            queue_capacity: 4,
+            workers: 2,
+            verify: VerifyConfig { threads: 2, ..VerifyConfig::default() },
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn serve_verify_stats_shutdown_round_trip() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut client = Client::connect(&addr).unwrap();
+        let (report, _latency, stats) = client
+            .verify(VerifySource::Model {
+                model: "llama-tiny".into(),
+                par: "tp2".into(),
+                layers: None,
+            })
+            .unwrap();
+        assert!(report.verified(), "{:?}", report.verdict);
+        assert_eq!(stats.jobs, 1);
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.jobs, 1);
+        assert!(stats.memo_entries > 0);
+        assert_eq!(stats.cache_entries_loaded, 0);
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn second_request_hits_the_shared_memo() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let source = VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp2".into(),
+            layers: None,
+        };
+
+        let mut client = Client::connect(&addr).unwrap();
+        let (_, _, first) = client.verify(source.clone()).unwrap();
+        let (report, _, second) = client.verify(source).unwrap();
+        assert!(report.verified());
+        assert!(
+            second.memo_hits > first.memo_hits,
+            "second identical request must replay the memo: {first:?} -> {second:?}"
+        );
+        assert!(report.layers.iter().all(|l| l.memoized));
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn malformed_and_unknown_requests_keep_the_connection_alive() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+
+        let resp = client.request_line("this is not json").unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
+        let resp = client
+            .request(&Request::Verify(VerifySource::Model {
+                model: "gpt-5".into(),
+                par: "tp2".into(),
+                layers: None,
+            }))
+            .unwrap();
+        match resp {
+            Response::Error { message } => assert!(message.contains("gpt-5"), "{message}"),
+            other => panic!("expected error, got {other:?}"),
+        }
+
+        // the connection still serves real work afterwards
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.jobs, 0);
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn bug_corpus_requests_come_back_unverified() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let (report, _, _) =
+            client.verify(VerifySource::Bug { id: "T4#1".into() }).unwrap();
+        assert!(!report.verified(), "bug-corpus pairs must not verify");
+        client.shutdown().unwrap();
+        server.wait();
+    }
+}

@@ -5,6 +5,8 @@
 //! owns one `WorkerPool` for its whole lifetime, so repeated calls reuse
 //! warm threads. Jobs are `'static` closures (slices travel behind `Arc`),
 //! and [`WorkerPool::run_all`] preserves submission order in its results.
+//! [`WorkerPool::submit`] is the fire-and-forget form the service
+//! scheduler builds its bounded queue on.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -14,8 +16,13 @@ use std::thread::JoinHandle;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Fixed-size pool of long-lived worker threads.
+///
+/// The submit side lives behind a `Mutex` so the pool is `Sync` on every
+/// supported toolchain (`mpsc::Sender` itself only became `Sync` in
+/// Rust 1.72) — a pool can be shared by reference across the service's
+/// connection threads.
 pub struct WorkerPool {
-    tx: Option<Sender<Job>>,
+    tx: Mutex<Option<Sender<Job>>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -44,12 +51,25 @@ impl WorkerPool {
                     .expect("spawning worker thread")
             })
             .collect();
-        WorkerPool { tx: Some(tx), workers }
+        WorkerPool { tx: Mutex::new(Some(tx)), workers }
     }
 
     /// Worker count.
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Enqueue one job without waiting for it (fire-and-forget). The
+    /// caller is responsible for any completion signalling; see
+    /// [`crate::service::Scheduler`] for the bounded, result-returning
+    /// layer on top of this.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let guard = self.tx.lock().expect("pool sender lock");
+        guard
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("worker pool hung up");
     }
 
     /// Run every job on the pool and return their results in submission
@@ -62,16 +82,13 @@ impl WorkerPool {
     {
         let n = jobs.len();
         let (res_tx, res_rx) = channel::<(usize, std::thread::Result<T>)>();
-        let pool_tx = self.tx.as_ref().expect("pool already shut down");
         for (i, job) in jobs.into_iter().enumerate() {
             let res_tx = res_tx.clone();
-            pool_tx
-                .send(Box::new(move || {
-                    let out = catch_unwind(AssertUnwindSafe(job));
-                    // receiver only disappears if the caller itself died
-                    let _ = res_tx.send((i, out));
-                }))
-                .expect("worker pool hung up");
+            self.submit(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
+                // receiver only disappears if the caller itself died
+                let _ = res_tx.send((i, out));
+            });
         }
         drop(res_tx);
         let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -88,8 +105,16 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // closing the channel wakes every worker with RecvError
-        self.tx.take();
+        // closing the channel wakes every worker with RecvError (a
+        // poisoned lock still holds the sender that must be dropped)
+        match self.tx.lock() {
+            Ok(mut guard) => {
+                guard.take();
+            }
+            Err(poisoned) => {
+                poisoned.into_inner().take();
+            }
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -123,6 +148,22 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
         assert_eq!(pool.run_all(vec![|| 41 + 1]), vec![42]);
+    }
+
+    #[test]
+    fn submit_is_fire_and_forget() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..8 {
+            let tx = tx.clone();
+            pool.submit(move || {
+                let _ = tx.send(i);
+            });
+        }
+        drop(tx);
+        let mut got: Vec<i32> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::error::{Result, ScalifyError};
 use crate::localize::Discrepancy;
 use crate::util::{fmt_duration, Stopwatch};
 pub use pair::GraphPair;
-pub use session::{Session, SessionStats};
+pub use session::{MemoWriteHook, Session, SessionStats};
 
 /// Verifier configuration (the Figure-12 ablation toggles live here).
 ///
@@ -39,6 +39,10 @@ pub struct VerifyConfig {
     pub parallel: bool,
     /// Memoize layer results by structural fingerprint.
     pub memoize: bool,
+    /// Maximum entries the layer memo holds before LRU eviction — bounds
+    /// the memory of a long-lived daemon session. Defaults to
+    /// [`crate::partition::fingerprint::DEFAULT_MEMO_CAPACITY`].
+    pub memo_capacity: usize,
     /// Worker threads for parallel rewriting.
     pub threads: usize,
     /// E-graph saturation budgets per layer.
@@ -53,6 +57,7 @@ impl Default for VerifyConfig {
             partition: true,
             parallel: true,
             memoize: true,
+            memo_capacity: crate::partition::fingerprint::DEFAULT_MEMO_CAPACITY,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             limits: RunLimits::default(),
             max_rounds: 8,
@@ -90,6 +95,12 @@ impl VerifyConfigBuilder {
     /// Memoize layer results by structural fingerprint.
     pub fn memoize(mut self, on: bool) -> Self {
         self.cfg.memoize = on;
+        self
+    }
+
+    /// Layer-memo capacity before LRU eviction (must be >= 1).
+    pub fn memo_capacity(mut self, capacity: usize) -> Self {
+        self.cfg.memo_capacity = capacity;
         self
     }
 
@@ -143,6 +154,11 @@ impl VerifyConfigBuilder {
         }
         if c.max_rounds == 0 {
             return Err(ScalifyError::config("max_rounds must be >= 1"));
+        }
+        if c.memo_capacity == 0 {
+            return Err(ScalifyError::config(
+                "memo_capacity must be >= 1 (use memoize(false) to disable memoization)",
+            ));
         }
         if c.parallel && !c.partition {
             return Err(ScalifyError::config(

@@ -37,6 +37,20 @@ impl GraphPair {
         Ok(GraphPair { base, dist, annotations })
     }
 
+    /// Pair two parsed graphs positionally with replicated annotations —
+    /// the construction every HLO-text path (CLI `verify`, `batch`
+    /// manifests, the service's inline pairs) uses, since HLO text
+    /// carries no sharding info.
+    pub fn replicated(base: Graph, dist: Graph) -> crate::error::Result<GraphPair> {
+        let annotations: Vec<Annotation> = base
+            .parameters()
+            .into_iter()
+            .zip(dist.parameters())
+            .map(|(b, d)| Annotation::replicated(b, d))
+            .collect();
+        GraphPair::try_new(base, dist, annotations)
+    }
+
     /// Total node count across both graphs.
     pub fn total_nodes(&self) -> usize {
         self.base.len() + self.dist.len()

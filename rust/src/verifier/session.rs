@@ -42,11 +42,18 @@ pub struct SessionStats {
     pub memo_hits: usize,
     /// Layer verifications computed and inserted.
     pub memo_misses: usize,
+    /// Memo entries evicted to stay within `VerifyConfig::memo_capacity`.
+    pub memo_evictions: usize,
     /// Compiled rewrite templates.
     pub templates: usize,
     /// Worker threads owned by the pool (0 when the session is sequential).
     pub threads: usize,
 }
+
+/// Observer invoked (outside the memo lock) each time the session inserts
+/// a freshly-computed entry into its layer memo. The service layer hooks
+/// its persistent on-disk cache here so warm state survives restarts.
+pub type MemoWriteHook = Arc<dyn Fn(u64, &MemoEntry) + Send + Sync>;
 
 /// Persistent verification engine; see the module docs.
 pub struct Session {
@@ -55,6 +62,7 @@ pub struct Session {
     memo: Mutex<LayerMemo>,
     pool: Option<WorkerPool>,
     runs: AtomicUsize,
+    memo_hook: Option<MemoWriteHook>,
 }
 
 impl Session {
@@ -68,11 +76,37 @@ impl Session {
         };
         Session {
             rules: Arc::new(RuleSet::compile()),
-            memo: Mutex::new(LayerMemo::new()),
+            memo: Mutex::new(LayerMemo::with_capacity(cfg.memo_capacity)),
             pool,
             runs: AtomicUsize::new(0),
+            memo_hook: None,
             cfg,
         }
+    }
+
+    /// Register the memo-write observer. Must be called before the session
+    /// is shared (`&mut self`); the hook fires after every fresh insert,
+    /// outside the memo lock, so it may do I/O without serializing
+    /// concurrent `verify` callers.
+    pub fn set_memo_write_hook(&mut self, hook: MemoWriteHook) {
+        self.memo_hook = Some(hook);
+    }
+
+    /// Warm-start the memo from previously-persisted entries (no misses
+    /// are counted; the work was done by an earlier process). Returns how
+    /// many entries were loaded. Entries beyond `memo_capacity` evict LRU
+    /// as usual.
+    pub fn preload_memo<I>(&self, entries: I) -> usize
+    where
+        I: IntoIterator<Item = (u64, MemoEntry)>,
+    {
+        let mut memo = self.memo.lock().expect("memo lock");
+        let mut n = 0;
+        for (fp, entry) in entries {
+            memo.preload(fp, entry);
+            n += 1;
+        }
+        n
     }
 
     /// Session with the default configuration.
@@ -98,6 +132,7 @@ impl Session {
             memo_entries: memo.len(),
             memo_hits: memo.hits,
             memo_misses: memo.misses,
+            memo_evictions: memo.evictions,
             templates: self.rules.len(),
             threads: self.pool.as_ref().map(|p| p.threads()).unwrap_or(0),
         }
@@ -212,16 +247,24 @@ impl Session {
                         // memo too, or a parallel first run leaves the
                         // session cold for every later run
                         if memoize && o.verified {
-                            let mut memo = self.memo.lock().expect("memo lock");
-                            if !memo.contains_verified(fp) {
-                                memo.put(
-                                    fp,
-                                    MemoEntry {
-                                        verified: o.verified,
-                                        out_rels: o.out_rels.clone(),
-                                        egraph_nodes: o.egraph_nodes,
-                                    },
-                                );
+                            let entry = MemoEntry {
+                                verified: o.verified,
+                                out_rels: o.out_rels.clone(),
+                                egraph_nodes: o.egraph_nodes,
+                            };
+                            let inserted = {
+                                let mut memo = self.memo.lock().expect("memo lock");
+                                if memo.contains_verified(fp) {
+                                    false
+                                } else {
+                                    memo.put(fp, entry.clone());
+                                    true
+                                }
+                            };
+                            if inserted {
+                                if let Some(hook) = &self.memo_hook {
+                                    hook(fp, &entry);
+                                }
                             }
                         }
                         (o, true)
@@ -248,14 +291,15 @@ impl Session {
                             self.cfg.max_rounds,
                         );
                         if self.cfg.memoize && o.verified {
-                            self.memo.lock().expect("memo lock").put(
-                                fp,
-                                MemoEntry {
-                                    verified: o.verified,
-                                    out_rels: o.out_rels.clone(),
-                                    egraph_nodes: o.egraph_nodes,
-                                },
-                            );
+                            let entry = MemoEntry {
+                                verified: o.verified,
+                                out_rels: o.out_rels.clone(),
+                                egraph_nodes: o.egraph_nodes,
+                            };
+                            self.memo.lock().expect("memo lock").put(fp, entry.clone());
+                            if let Some(hook) = &self.memo_hook {
+                                hook(fp, &entry);
+                            }
                         }
                         (o, false)
                     }

@@ -409,6 +409,54 @@ fn memoization_hits_identical_layers() {
 }
 
 #[test]
+fn memo_write_hook_and_preload_warm_a_fresh_session() {
+    use crate::partition::MemoEntry;
+    use std::sync::{Arc, Mutex};
+
+    // the first session persists entries through its write hook (the way
+    // the service cache does)...
+    let pair = matmul_tp_pair(false);
+    let mut warm = Session::new(cfg_seq());
+    let collected: Arc<Mutex<Vec<(u64, MemoEntry)>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&collected);
+    warm.set_memo_write_hook(Arc::new(move |fp, entry| {
+        sink.lock().expect("hook lock").push((fp, entry.clone()));
+    }));
+    assert!(warm.verify(&pair).unwrap().verified());
+    let entries = collected.lock().expect("hook lock").clone();
+    assert!(!entries.is_empty(), "verified layers must reach the hook");
+
+    // ...and a brand-new session preloaded with them answers its first
+    // verify entirely from the memo
+    let fresh = Session::new(cfg_seq());
+    assert_eq!(fresh.preload_memo(entries.clone()), entries.len());
+    let report = fresh.verify(&pair).unwrap();
+    assert!(report.verified());
+    let stats = fresh.stats();
+    assert!(stats.memo_hits > 0, "preloaded entries must serve the first verify");
+    assert_eq!(stats.memo_misses, 0, "nothing should be recomputed: {stats:?}");
+    assert!(report.layers.iter().all(|l| l.memoized));
+}
+
+#[test]
+fn memo_capacity_evictions_surface_in_stats() {
+    // capacity 1: each new distinct layer fingerprint evicts the previous
+    let cfg = VerifyConfig {
+        parallel: false,
+        memo_capacity: 1,
+        ..VerifyConfig::default()
+    };
+    let session = Session::new(cfg);
+    assert!(session.verify(&matmul_tp_pair(false)).unwrap().verified());
+    // a structurally different pair brings a different fingerprint
+    let other = crate::modelgen::demo::matmul_allreduce_pair(2);
+    assert!(session.verify(&other).unwrap().verified());
+    let stats = session.stats();
+    assert!(stats.memo_entries <= 1, "{stats:?}");
+    assert!(stats.memo_evictions >= 1, "{stats:?}");
+}
+
+#[test]
 fn parallel_mode_agrees_with_sequential() {
     let pair = matmul_tp_pair(false);
     let seq = Session::new(cfg_seq()).verify(&pair).unwrap();

@@ -1,0 +1,308 @@
+//! Integration tests for the verification service: concurrent clients
+//! sharing one warm session, and persistent cross-process memo caching.
+//!
+//! The concurrency tests drive an in-process [`Server`] over real TCP;
+//! the restart test spawns the actual `scalify` binary
+//! (`CARGO_BIN_EXE_scalify`) twice against one `--cache-dir`, so the
+//! "second process starts warm" claim is tested process-for-process.
+
+use scalify::service::{
+    CacheLoad, Client, MemoCache, ServeConfig, Server, VerifySource, CACHE_FILE,
+};
+use scalify::verifier::VerifyConfig;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+fn tiny_server() -> Server {
+    Server::start(ServeConfig {
+        queue_capacity: 8,
+        workers: 4,
+        verify: VerifyConfig { threads: 2, ..VerifyConfig::default() },
+        ..ServeConfig::default()
+    })
+    .expect("server starts on an ephemeral port")
+}
+
+/// The request mix: three clean zoo pairs across model families plus a
+/// bug-injected pair that must come back unverified.
+fn request_mix() -> Vec<(&'static str, VerifySource, bool)> {
+    vec![
+        (
+            "llama-tp2",
+            VerifySource::Model { model: "llama-tiny".into(), par: "tp2".into(), layers: None },
+            true,
+        ),
+        (
+            "mixtral-ep4",
+            VerifySource::Model {
+                model: "mixtral-tiny".into(),
+                par: "ep4".into(),
+                layers: None,
+            },
+            true,
+        ),
+        (
+            "dpstep-dp2z1",
+            VerifySource::Model {
+                model: "dpstep-tiny".into(),
+                par: "dp2z1".into(),
+                layers: None,
+            },
+            true,
+        ),
+        ("bug-T4#1", VerifySource::Bug { id: "T4#1".into() }, false),
+    ]
+}
+
+#[test]
+fn eight_concurrent_clients_get_deterministic_verdicts_and_a_warming_memo() {
+    let server = tiny_server();
+    let addr = server.local_addr().to_string();
+
+    let run_wave = || -> Vec<BTreeMap<String, bool>> {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut verdicts = BTreeMap::new();
+                    for (label, source, _) in request_mix() {
+                        let (report, _, _) =
+                            client.verify(source).unwrap_or_else(|e| panic!("{label}: {e}"));
+                        verdicts.insert(label.to_string(), report.verified());
+                    }
+                    verdicts
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    };
+
+    let wave1 = run_wave();
+    let expected: BTreeMap<String, bool> = request_mix()
+        .into_iter()
+        .map(|(label, _, verified)| (label.to_string(), verified))
+        .collect();
+    for verdicts in &wave1 {
+        assert_eq!(verdicts, &expected, "every client must see the same verdicts");
+    }
+
+    let mut probe = Client::connect(&addr).expect("connect");
+    let after_wave1 = probe.stats().expect("stats");
+    assert_eq!(after_wave1.jobs, 32, "8 clients x 4 requests");
+
+    // a second identical wave replays the now-warm memo
+    let wave2 = run_wave();
+    for verdicts in &wave2 {
+        assert_eq!(verdicts, &expected, "verdicts must be stable across waves");
+    }
+    let after_wave2 = probe.stats().expect("stats");
+    assert_eq!(after_wave2.jobs, 64);
+    assert!(
+        after_wave2.memo_hits > after_wave1.memo_hits,
+        "second wave must strictly increase memo hits ({} -> {})",
+        after_wave1.memo_hits,
+        after_wave2.memo_hits
+    );
+    // the shared memo holds one entry set, not one per client
+    assert_eq!(after_wave2.memo_entries, after_wave1.memo_entries);
+
+    probe.shutdown().expect("shutdown");
+    server.wait();
+}
+
+/// Child daemon that is killed even when an assertion fails mid-test.
+struct DaemonGuard {
+    child: Child,
+    addr: String,
+}
+
+impl DaemonGuard {
+    fn spawn(cache_dir: &std::path::Path) -> DaemonGuard {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_scalify"))
+            .args([
+                "serve",
+                "--addr",
+                "127.0.0.1:0",
+                "--cache-dir",
+                cache_dir.to_str().expect("utf-8 tmpdir"),
+                "--threads",
+                "2",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning the scalify binary");
+        // the daemon prints `scalify: serving on 127.0.0.1:PORT` first
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("daemon banner");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .expect("banner carries the address")
+            .to_string();
+        assert!(addr.contains(':'), "unexpected banner: {line:?}");
+        DaemonGuard { child, addr }
+    }
+}
+
+impl Drop for DaemonGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn service_tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("scalify-service-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn a_restarted_daemon_answers_its_first_request_from_the_disk_cache() {
+    let cache_dir = service_tmpdir("restart");
+    let source = VerifySource::Model {
+        model: "llama-tiny".into(),
+        par: "tp2".into(),
+        layers: None,
+    };
+
+    // first process: cold start, verify, shut down cleanly
+    {
+        let mut daemon = DaemonGuard::spawn(&cache_dir);
+        let addr = daemon.addr.clone();
+        let mut client = Client::connect(&addr).expect("connect");
+        let (report, _, stats) = client.verify(source.clone()).expect("first verify");
+        assert!(report.verified());
+        assert!(stats.memo_misses > 0, "a cold daemon must compute layers");
+        assert_eq!(stats.cache_entries_loaded, 0);
+        client.shutdown().expect("shutdown");
+        // wait for a clean exit so every cache flush has landed
+        let _ = daemon.child.wait();
+    }
+    assert!(
+        cache_dir.join(CACHE_FILE).exists(),
+        "the daemon must have flushed its memo to {}",
+        cache_dir.display()
+    );
+
+    // second process, same cache dir: the very first request replays the
+    // previous process's layer proofs
+    {
+        let daemon = DaemonGuard::spawn(&cache_dir);
+        let mut client = Client::connect(&daemon.addr).expect("connect");
+        let (report, _, stats) = client.verify(source).expect("warm verify");
+        assert!(report.verified());
+        assert!(
+            stats.cache_entries_loaded > 0,
+            "the restarted daemon must preload the persisted entries"
+        );
+        assert!(
+            stats.memo_hits > 0,
+            "first request after restart must hit the preloaded memo"
+        );
+        assert_eq!(
+            stats.memo_misses, 0,
+            "no layer should be recomputed after a clean warm start"
+        );
+        assert!(report.layers.iter().all(|l| l.memoized));
+        client.shutdown().expect("shutdown");
+    }
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}
+
+#[test]
+fn a_corrupted_cache_file_degrades_to_a_cold_start_not_an_error() {
+    let cache_dir = service_tmpdir("corrupt");
+    std::fs::create_dir_all(&cache_dir).expect("mkdir");
+    std::fs::write(cache_dir.join(CACHE_FILE), "{ definitely not valid json")
+        .expect("plant corruption");
+
+    // opening the store directly reports the degradation...
+    let (_, load): (MemoCache, CacheLoad) =
+        MemoCache::open(&cache_dir).expect("corruption is not an open error");
+    assert_eq!(load.loaded, 0);
+    assert!(load.warning.expect("must warn").contains("starting cold"));
+
+    // ...and a server over the same directory starts, serves, and heals
+    // the file on its next write
+    let server = Server::start(ServeConfig {
+        cache_dir: Some(cache_dir.clone()),
+        queue_capacity: 4,
+        workers: 2,
+        verify: VerifyConfig { threads: 2, ..VerifyConfig::default() },
+        ..ServeConfig::default()
+    })
+    .expect("server must start despite the corrupt cache");
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+    let (report, _, stats) = client
+        .verify(VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp2".into(),
+            layers: None,
+        })
+        .expect("verify");
+    assert!(report.verified());
+    assert_eq!(stats.cache_entries_loaded, 0, "cold start after corruption");
+    client.shutdown().expect("shutdown");
+    server.wait();
+
+    let (_, load) = MemoCache::open(&cache_dir).expect("reopen");
+    assert!(load.warning.is_none(), "the flush must have replaced the corrupt file");
+    assert!(load.loaded > 0);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}
+
+#[test]
+fn inline_hlo_pairs_verify_over_the_wire() {
+    // round-trip a pair through the HLO printer and the wire protocol;
+    // the inline path annotates parameters positionally as replicated, so
+    // it needs a pair whose inputs really are replicated
+    use scalify::hlo::print_hlo_module;
+    use scalify::modelgen::demo;
+
+    let pair = demo::microbatch_pair(false);
+    let base_text = print_hlo_module(&pair.base);
+    let dist_text = print_hlo_module(&pair.dist);
+
+    let server = tiny_server();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+    let (report, _, _) = client
+        .verify(VerifySource::Hlo { base: base_text, dist: dist_text, cores: 2 })
+        .expect("inline verify");
+    assert!(report.verified(), "{:?}", report.verdict);
+    client.shutdown().expect("shutdown");
+    server.wait();
+}
+
+#[test]
+fn raw_protocol_lines_work_without_the_typed_client() {
+    // a plain netcat-style exchange: write a line, read a line
+    let server = tiny_server();
+    let addr = server.local_addr();
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer.write_all(b"{\"cmd\":\"stats\"}\n").expect("send");
+    writer.flush().expect("flush");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("recv");
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(line.contains("\"memo_entries\""), "{line}");
+
+    writer.write_all(b"{\"cmd\":\"shutdown\"}\n").expect("send");
+    writer.flush().expect("flush");
+    line.clear();
+    reader.read_line(&mut line).expect("recv");
+    assert!(line.contains("\"shutdown\""), "{line}");
+    server.wait();
+}
