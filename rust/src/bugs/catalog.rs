@@ -609,6 +609,144 @@ pub fn parallel_transform_bugs() -> Vec<BugCase> {
     ]
 }
 
+// ---- replica-group (mesh subgroup) fault builders ----
+
+/// The dp2×tp2 mesh training step: one SPMD graph whose gradient
+/// all-reduces run over the strided dp subgroups and whose hidden-dim
+/// discharges run over the contiguous tp subgroups.
+fn mesh_step() -> GraphPair {
+    dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 })
+}
+
+/// Swap the `nth` all-reduce running over `from_axis`'s subgroups onto
+/// `to_axis`'s subgroups — the classic wrong-replica-group mixup between
+/// mesh axes (still well-formed groups, so only semantics catch it).
+fn swap_axis_groups(
+    mut pair: GraphPair,
+    from_axis: usize,
+    to_axis: usize,
+    nth: usize,
+) -> GraphPair {
+    let mesh = pair.dist.mesh_view();
+    let from = mesh.groups_for(1 << from_axis);
+    let to = mesh.groups_for(1 << to_axis);
+    let target = nth_match(
+        &pair.dist,
+        |g, id| matches!(&g.node(id).op, Op::AllReduce { groups, .. } if *groups == from),
+        nth,
+    );
+    if let Some(t) = target {
+        mutate_ops(
+            &mut pair.dist,
+            |_, id| id == t,
+            |op, _| {
+                if let Op::AllReduce { groups, .. } = op {
+                    *groups = to.clone();
+                }
+            },
+        );
+    }
+    pair
+}
+
+/// Permute subgroup membership across mesh axes: `{{0,1},{2,3}}` becomes
+/// `{{0,3},{1,2}}` — every group still a valid partition, but its members
+/// mix different dp ranks' batch shards.
+fn permute_axis_groups(mut pair: GraphPair, axis: usize, nth: usize) -> GraphPair {
+    let mesh = pair.dist.mesh_view();
+    let from = mesh.groups_for(1 << axis);
+    let target = nth_match(
+        &pair.dist,
+        |g, id| matches!(&g.node(id).op, Op::AllReduce { groups, .. } if *groups == from),
+        nth,
+    );
+    if let Some(t) = target {
+        mutate_ops(
+            &mut pair.dist,
+            |_, id| id == t,
+            |op, _| {
+                if let Op::AllReduce { groups, .. } = op {
+                    // rotate the tail members one group forward
+                    let mut gs = groups.0.clone();
+                    if gs.len() >= 2 && gs.iter().all(|g| g.len() >= 2) {
+                        let n = gs.len();
+                        let tails: Vec<u32> =
+                            (0..n).map(|i| *gs[i].last().unwrap()).collect();
+                        for (i, g) in gs.iter_mut().enumerate() {
+                            *g.last_mut().unwrap() = tails[(i + 1) % n];
+                        }
+                        *groups = ReplicaGroups(gs);
+                    }
+                }
+            },
+        );
+    }
+    pair
+}
+
+/// Overlapping replica groups: core 1 reduced into two groups. Not even a
+/// valid partition — graph validation rejects the module with a typed
+/// error naming the collective's source site.
+fn overlapping_groups(mut pair: GraphPair, func: &str, nth: usize) -> GraphPair {
+    let func = func.to_owned();
+    let target = nth_match(
+        &pair.dist,
+        |g, id| is_op(g, id, "all-reduce") && in_func(g, id, &func),
+        nth,
+    );
+    if let Some(t) = target {
+        mutate_ops(
+            &mut pair.dist,
+            |_, id| id == t,
+            |op, _| {
+                if let Op::AllReduce { groups, .. } = op {
+                    *groups = ReplicaGroups(vec![vec![0, 1], vec![1]]);
+                }
+            },
+        );
+    }
+    pair
+}
+
+/// The wrong-replica-group corpus over subgroup collectives (`RG#1..3`):
+/// the silent-error class the mesh scenarios make expressible — groups
+/// that are well-formed partitions but reduce over the wrong mesh axis,
+/// permute members across axes, or are not a partition at all.
+pub fn replica_group_bugs() -> Vec<BugCase> {
+    vec![
+        BugCase {
+            id: "RG#1",
+            description: "Gradient all-reduce over the tp groups instead of dp (mesh step)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "study:wrong-axis-grad-reduce",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "backward.py:16",
+            truth_func: "backward",
+            build: || swap_axis_groups(mesh_step(), 0, 1, 0),
+        },
+        BugCase {
+            id: "RG#2",
+            description: "Overlapping replica groups (core reduced into two groups)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "study:overlapping-groups",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "attention.py:79",
+            truth_func: "attention_output",
+            build: || overlapping_groups(llama_tp(), "attention_output", 0),
+        },
+        BugCase {
+            id: "RG#3",
+            description: "Subgroup permutation across mesh axes (tp groups mix dp ranks)",
+            category: Category::IncorrectDistributedConfig,
+            issue: "study:permuted-subgroups",
+            expected: ExpectedLoc::Instruction,
+            truth_site: "layers.py:14",
+            truth_func: "forward",
+            build: || permute_axis_groups(mesh_step(), 1, 0),
+        },
+    ]
+}
+
 /// Table 5: the 5 previously-unknown bugs.
 pub fn new_bugs() -> Vec<BugCase> {
     vec![

@@ -31,10 +31,36 @@ pub struct BugOutcome {
 
 /// Run Scalify on the case's buggy pair and classify the outcome.
 pub fn evaluate(case: &BugCase) -> BugOutcome {
+    let t0 = std::time::Instant::now();
     let pair = (case.build)();
-    let report = Session::new(VerifyConfig { parallel: false, ..VerifyConfig::default() })
-        .verify(&pair)
-        .expect("bug-corpus pairs are well-formed");
+    let result =
+        Session::new(VerifyConfig { parallel: false, ..VerifyConfig::default() })
+            .verify(&pair);
+    let report = match result {
+        Ok(report) => report,
+        // ONLY a typed structural rejection (malformed replica groups and
+        // friends caught by graph validation) counts as a detection: the
+        // bug never reaches the device, and the error carries the
+        // offending node's source site. Any other verify error is harness
+        // breakage and must stay loud.
+        Err(e @ crate::error::ScalifyError::ModelSpec(_)) => {
+            let msg = e.to_string();
+            let loc = if !case.truth_site.is_empty() && msg.contains(case.truth_site) {
+                LocResult::Instruction
+            } else if !case.truth_func.is_empty() && msg.contains(case.truth_func) {
+                LocResult::Function
+            } else {
+                LocResult::Elsewhere
+            };
+            return BugOutcome {
+                detected: true,
+                loc,
+                sites: vec![msg],
+                duration: t0.elapsed(),
+            };
+        }
+        Err(e) => panic!("bug-corpus pair failed to verify for a non-structural reason: {e}"),
+    };
     let detected = !report.verified();
     let discrepancies = report.discrepancies();
     let sites: Vec<String> = discrepancies

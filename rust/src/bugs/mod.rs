@@ -13,7 +13,8 @@ mod catalog;
 mod eval;
 
 pub use catalog::{
-    new_bugs, parallel_transform_bugs, reproduced_bugs, BugCase, Category, ExpectedLoc,
+    new_bugs, parallel_transform_bugs, replica_group_bugs, reproduced_bugs, BugCase,
+    Category, ExpectedLoc,
 };
 pub use eval::{evaluate, BugOutcome, LocResult};
 pub use mutate::{bypass_nodes, in_func, is_op, mutate_ops, remap_annotations, wrap_first};

@@ -65,6 +65,7 @@ pub fn wrap_first(
 ) -> (Graph, FxHashMap<NodeId, NodeId>) {
     let target = g.nodes.iter().map(|n| n.id).find(|&id| pred(g, id));
     let mut out = Graph::new(g.name.clone(), g.num_cores);
+    out.mesh = g.mesh.clone(); // keep declared mesh axes through the rebuild
     let mut remap: FxHashMap<NodeId, NodeId> = FxHashMap::default();
     let mut build = Some(build);
     for n in &g.nodes {

@@ -64,11 +64,12 @@ pub fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
 }
 
 /// Parse a parallelism spec: `tp32` / `sp8` / `fd4` / `ep8`, the pipeline
-/// and data specs `pp4`, `dp4` / `dp4z2` (ZeRO stage suffix), and the
-/// combined `pp2tp4`.
+/// and data specs `pp4`, `dp4` / `dp4z2` (ZeRO stage suffix), the
+/// combined `pp2tp4`, and the 3D-mesh specs `pp2dp2tp2` / `dp2tp2` /
+/// `pp2dp4` (axes in pp-dp-tp order; omitted axes default to 1).
 pub fn parallelism(spec: &str) -> Result<Parallelism> {
     let usage = "expected a technique + degree, e.g. tp32, sp32, fd32, ep8, pp4, \
-                 dp4z1 or pp2tp4";
+                 dp4z1, pp2tp4 or pp2dp2tp2";
     let bad = |what: &str| {
         ScalifyError::config(format!("{what} in '{spec}' ({usage})"))
     };
@@ -79,6 +80,26 @@ pub fn parallelism(spec: &str) -> Result<Parallelism> {
         }
         Ok(deg)
     };
+    // 3D mesh: any spec combining a dp component with pp and/or tp
+    // (pp<A>dp<B>tp<C> with axes in that order; `dp4z1`-style ZeRO specs
+    // have no pp/tp component and stay plain data parallelism)
+    if let Some(dp_at) = spec.find("dp") {
+        let has_pp = spec.starts_with("pp");
+        let tp_at = spec[dp_at..].find("tp").map(|i| i + dp_at);
+        if has_pp || tp_at.is_some() {
+            let pp = if has_pp { parse_deg(&spec[2..dp_at])? } else { 1 };
+            let dp_end = tp_at.unwrap_or(spec.len());
+            let dp = parse_deg(&spec[dp_at + 2..dp_end])?;
+            let tp = match tp_at {
+                Some(at) => parse_deg(&spec[at + 2..])?,
+                None => 1,
+            };
+            if !has_pp && dp_at != 0 {
+                return Err(bad("unknown parallelism"));
+            }
+            return Ok(Parallelism::Mesh3D { pp, dp, tp });
+        }
+    }
     // combined pipeline × tensor: pp<A>tp<B>
     if let Some(rest) = spec.strip_prefix("pp") {
         if let Some(tp_at) = rest.find("tp") {
@@ -346,6 +367,36 @@ mod tests {
         assert_eq!(parallelism("dp4").unwrap(), Parallelism::Data { dp: 4, zero_stage: 0 });
         assert_eq!(parallelism("dp8z2").unwrap(), Parallelism::Data { dp: 8, zero_stage: 2 });
         assert_eq!(parallelism("pp2tp4").unwrap(), Parallelism::Combined { pp: 2, tp: 4 });
+    }
+
+    #[test]
+    fn mesh_parallelism_specs_parse() {
+        assert_eq!(
+            parallelism("pp2dp2tp2").unwrap(),
+            Parallelism::Mesh3D { pp: 2, dp: 2, tp: 2 }
+        );
+        assert_eq!(
+            parallelism("dp2tp2").unwrap(),
+            Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 }
+        );
+        assert_eq!(
+            parallelism("pp2dp4").unwrap(),
+            Parallelism::Mesh3D { pp: 2, dp: 4, tp: 1 }
+        );
+        // ZeRO data specs are NOT mesh specs
+        assert_eq!(parallelism("dp4z1").unwrap(), Parallelism::Data { dp: 4, zero_stage: 1 });
+        // labels round-trip through the parser
+        assert_eq!(
+            parallelism(&Parallelism::Mesh3D { pp: 2, dp: 2, tp: 2 }.label()).unwrap(),
+            Parallelism::Mesh3D { pp: 2, dp: 2, tp: 2 }
+        );
+        assert_eq!(
+            parallelism(&Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 }.label()).unwrap(),
+            Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 }
+        );
+        for bad in ["dp2tp", "ppdp2tp2", "pp2dp0tp2", "xxdp2tp2"] {
+            assert!(parallelism(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

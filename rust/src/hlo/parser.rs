@@ -27,6 +27,7 @@ pub fn parse_hlo_file(path: &std::path::Path, num_cores: u32) -> Result<Graph> {
 /// this in its run config, not in the HLO itself).
 pub fn parse_hlo_module(text: &str, num_cores: u32) -> Result<Graph> {
     let mut module_name = String::from("module");
+    let mut mesh_axes: Vec<u32> = Vec::new();
     // Split into computations: `name {` ... `}` blocks (plus ENTRY marker).
     let mut computations: Vec<(String, bool, Vec<String>)> = Vec::new(); // (name, is_entry, lines)
     let mut current: Option<(String, bool, Vec<String>)> = None;
@@ -42,6 +43,24 @@ pub fn parse_hlo_module(text: &str, num_cores: u32) -> Result<Graph> {
                 .next()
                 .unwrap_or("module")
                 .to_string();
+            // optional mesh attribute: `HloModule name, mesh={2,4}`
+            if let Some(at) = rest.find("mesh={") {
+                let tail = &rest[at + "mesh={".len()..];
+                let close =
+                    tail.find('}').ok_or_else(|| parse_err!("unbalanced mesh attribute"))?;
+                let mut axes = Vec::new();
+                for part in tail[..close].split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    axes.push(
+                        part.parse::<u32>()
+                            .map_err(|_| parse_err!("bad mesh axis '{part}'"))?,
+                    );
+                }
+                mesh_axes = axes;
+            }
             continue;
         }
         if line.ends_with('{') && current.is_none() {
@@ -107,6 +126,16 @@ pub fn parse_hlo_module(text: &str, num_cores: u32) -> Result<Graph> {
     }
 
     let mut g = Graph::new(module_name, num_cores);
+    if !mesh_axes.is_empty() {
+        let total: u32 = mesh_axes.iter().product();
+        if total != num_cores {
+            bail!(
+                "module declares mesh {mesh_axes:?} ({total} cores) but was opened \
+                 at {num_cores} cores"
+            );
+        }
+        g.mesh = mesh_axes;
+    }
     let mut by_name: FxHashMap<String, NodeId> = FxHashMap::default();
     let mut root: Option<NodeId> = None;
 

@@ -48,7 +48,15 @@ fn usize_list(xs: &[usize]) -> String {
 /// Print a graph as an HLO module.
 pub fn print_hlo_module(g: &Graph) -> String {
     let mut out = String::new();
-    writeln!(out, "HloModule {}", g.name).unwrap();
+    if g.mesh.is_empty() {
+        writeln!(out, "HloModule {}", g.name).unwrap();
+    } else {
+        // mesh axes ride as a module attribute (our dialect, like the
+        // `stage=` metadata) so subgroup replica_groups stay
+        // interpretable after a round trip
+        let axes: Vec<String> = g.mesh.iter().map(|a| a.to_string()).collect();
+        writeln!(out, "HloModule {}, mesh={{{}}}", g.name, axes.join(",")).unwrap();
+    }
     writeln!(out).unwrap();
 
     // Which reduction regions do we need?

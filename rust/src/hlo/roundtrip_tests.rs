@@ -94,6 +94,61 @@ fn zero_fixture_roundtrips_with_sharded_state_collectives() {
 }
 
 #[test]
+fn mesh_fixture_roundtrips_with_subgroup_collectives() {
+    // subgroup `replica_groups={{0,1},{2,3}}` syntax + the `mesh={2,2}`
+    // module attribute: printer → parser → printer golden fixpoint
+    let text = include_str!("testdata/mesh_dp2tp2.hlo.txt");
+    assert_fixture_roundtrips(text, 4, &["all-reduce", "reduce-scatter", "all-gather"]);
+    let g = parse_hlo_module(text, 4).unwrap();
+    assert_eq!(g.mesh, vec![2, 2], "mesh attribute must survive parsing");
+    let tp_groups: Vec<Vec<u32>> = vec![vec![0, 1], vec![2, 3]];
+    let dp_groups: Vec<Vec<u32>> = vec![vec![0, 2], vec![1, 3]];
+    assert!(g.nodes.iter().any(|n| matches!(
+        &n.op,
+        crate::ir::Op::AllReduce { groups, .. } if groups.0 == tp_groups
+    )));
+    assert!(g.nodes.iter().any(|n| matches!(
+        &n.op,
+        crate::ir::Op::ReduceScatter { groups, .. } if groups.0 == dp_groups
+    )));
+    let reprinted = print_hlo_module(&g);
+    assert!(reprinted.contains("mesh={2,2}"), "{reprinted}");
+    assert!(reprinted.contains("replica_groups={{0,1},{2,3}}"), "{reprinted}");
+    assert!(reprinted.contains("replica_groups={{0,2},{1,3}}"), "{reprinted}");
+}
+
+#[test]
+fn engine_mesh_graph_roundtrips_through_hlo_text() {
+    use crate::modelgen::{dpstep_pair, Parallelism, TrainStepConfig};
+    let pair = dpstep_pair(
+        &TrainStepConfig::tiny(),
+        Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 },
+    );
+    let text = print_hlo_module(&pair.dist);
+    assert!(text.contains("mesh={2,2}"), "{text}");
+    let back = parse_hlo_module(&text, 4).unwrap();
+    back.validate().unwrap();
+    assert_eq!(back.mesh, vec![2, 2]);
+    // subgroup collectives survive byte-exactly
+    let collect = |g: &crate::ir::Graph| -> Vec<String> {
+        g.nodes
+            .iter()
+            .filter(|n| n.op.is_collective())
+            .map(|n| format!("{:?}", n.op))
+            .collect()
+    };
+    assert_eq!(collect(&pair.dist), collect(&back));
+}
+
+#[test]
+fn mesh_mismatch_is_a_parse_error() {
+    let text = "HloModule m, mesh={2,2}\n\nENTRY main {\n  v0 = f32[2]{0} parameter(0)\n  ROOT r = (f32[2]) tuple(v0)\n}\n";
+    // opened at 2 cores but the mesh covers 4
+    assert!(parse_hlo_module(text, 2).is_err());
+    assert!(parse_hlo_module(text, 4).is_ok());
+}
+
+#[test]
 fn engine_pipeline_graph_roundtrips_through_hlo_text() {
     use crate::modelgen::{llama_pair, LlamaConfig, Parallelism};
     let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Pipeline { pp: 2 });

@@ -631,6 +631,122 @@ mod tests {
         }
     }
 
+    /// Naive per-group references for the collectives, computed directly
+    /// from the group lists with no shared code path — the oracle the
+    /// lockstep interpreter is cross-checked against on subgroup shapes.
+    mod naive {
+        use crate::interp::Tensor;
+        use crate::ir::ReplicaGroups;
+
+        pub fn all_reduce(src: &[Tensor], groups: &ReplicaGroups) -> Vec<Tensor> {
+            src.iter()
+                .enumerate()
+                .map(|(c, t)| {
+                    let group = groups.group_of(c as u32).expect("covering groups");
+                    let mut out = vec![0.0; t.data.len()];
+                    for (i, slot) in out.iter_mut().enumerate() {
+                        *slot = group.iter().map(|&g| src[g as usize].data[i]).sum();
+                    }
+                    Tensor::new(t.shape.clone(), out)
+                })
+                .collect()
+        }
+
+        pub fn all_gather(src: &[Tensor], dim: usize, groups: &ReplicaGroups) -> Vec<Tensor> {
+            (0..src.len())
+                .map(|c| {
+                    let group = groups.group_of(c as u32).expect("covering groups");
+                    let parts: Vec<Tensor> =
+                        group.iter().map(|&g| src[g as usize].clone()).collect();
+                    Tensor::concat(&parts, dim)
+                })
+                .collect()
+        }
+
+        pub fn reduce_scatter(
+            src: &[Tensor],
+            dim: usize,
+            groups: &ReplicaGroups,
+        ) -> Vec<Tensor> {
+            let summed = all_reduce(src, groups);
+            (0..src.len())
+                .map(|c| {
+                    let group = groups.group_of(c as u32).expect("covering groups");
+                    let rank = group.iter().position(|&g| g == c as u32).unwrap();
+                    summed[c].split(dim, group.len() as u32)[rank].clone()
+                })
+                .collect()
+        }
+    }
+
+    /// Cross-check the lockstep interpreter's subgroup collectives against
+    /// the naive per-group references, over both axis shapes of a [2,2]
+    /// mesh (contiguous tp groups, strided dp groups) and a lopsided
+    /// grouping.
+    #[test]
+    fn subgroup_collectives_match_naive_reference() {
+        use crate::ir::GraphBuilder;
+        use crate::util::Prng;
+        let group_shapes: Vec<Vec<Vec<u32>>> = vec![
+            vec![vec![0, 1], vec![2, 3]], // tp axis of [2,2]
+            vec![vec![0, 2], vec![1, 3]], // dp axis of [2,2]
+            vec![vec![0, 1, 2, 3]],       // full mesh
+            vec![vec![0, 3], vec![1, 2]], // permuted (still a partition)
+        ];
+        let mut p = Prng::new(0x5AB);
+        for groups in group_shapes {
+            let rg = ReplicaGroups(groups);
+            let src: Vec<Tensor> =
+                (0..4).map(|_| Tensor::random(f32s(&[4, 4]), &mut p)).collect();
+
+            // all-reduce
+            let mut b = GraphBuilder::new("ar", 4);
+            let x = b.parameter("x", f32s(&[4, 4]));
+            let r = b.all_reduce(x, crate::ir::ReduceKind::Add, rg.clone());
+            b.output(r);
+            let g = b.finish();
+            let ins: Vec<Vec<Tensor>> = src.iter().map(|t| vec![t.clone()]).collect();
+            let got = run_spmd(&g, &ins).unwrap();
+            let want = naive::all_reduce(&src, &rg);
+            for c in 0..4 {
+                assert!(
+                    got[c][0].max_abs_diff(&want[c]) < 1e-9,
+                    "all-reduce {rg:?} core {c}"
+                );
+            }
+
+            // all-gather along dim 0
+            let mut b = GraphBuilder::new("ag", 4);
+            let x = b.parameter("x", f32s(&[4, 4]));
+            let r = b.all_gather(x, 0, rg.clone());
+            b.output(r);
+            let g = b.finish();
+            let got = run_spmd(&g, &ins).unwrap();
+            let want = naive::all_gather(&src, 0, &rg);
+            for c in 0..4 {
+                assert!(
+                    got[c][0].max_abs_diff(&want[c]) < 1e-9,
+                    "all-gather {rg:?} core {c}"
+                );
+            }
+
+            // reduce-scatter along dim 0
+            let mut b = GraphBuilder::new("rs", 4);
+            let x = b.parameter("x", f32s(&[4, 4]));
+            let r = b.reduce_scatter(x, crate::ir::ReduceKind::Add, 0, rg.clone());
+            b.output(r);
+            let g = b.finish();
+            let got = run_spmd(&g, &ins).unwrap();
+            let want = naive::reduce_scatter(&src, 0, &rg);
+            for c in 0..4 {
+                assert!(
+                    got[c][0].max_abs_diff(&want[c]) < 1e-9,
+                    "reduce-scatter {rg:?} core {c}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn partial_group_allreduce_only_reduces_group() {
         let mut db = GraphBuilder::new("d", 4);

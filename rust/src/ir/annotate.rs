@@ -20,6 +20,10 @@ pub enum InputRelation {
         dim: usize,
         /// Number of shards (= cores in the group).
         parts: u32,
+        /// Mesh axis the shard spans (0 for flat 1-axis meshes). A tensor
+        /// sharded along the `tp` axis of a `[dp, tp]` mesh has shard
+        /// index `digit_tp(core)`, not the raw core id.
+        axis: usize,
     },
     /// Distributed parameter is a full replica of the baseline tensor on
     /// every core.
@@ -43,12 +47,18 @@ pub struct Annotation {
 
 impl Annotation {
     /// Shorthand: distributed param `d` is baseline param `b` sharded
-    /// along `dim` across `parts` cores.
+    /// along `dim` across `parts` cores (flat mesh / axis 0).
     pub fn shard(b: NodeId, d: NodeId, dim: usize, parts: u32) -> Annotation {
+        Annotation::shard_on(b, d, dim, parts, 0)
+    }
+
+    /// Like [`Annotation::shard`], but naming the mesh axis the shard
+    /// spans (`parts` must equal that axis's size).
+    pub fn shard_on(b: NodeId, d: NodeId, dim: usize, parts: u32, axis: usize) -> Annotation {
         Annotation {
             baseline: Some(b),
             distributed: d,
-            relation: InputRelation::ShardAlong { dim, parts },
+            relation: InputRelation::ShardAlong { dim, parts, axis },
         }
     }
 
@@ -70,7 +80,9 @@ mod tests {
     #[test]
     fn constructors() {
         let a = Annotation::shard(NodeId(0), NodeId(1), 1, 32);
-        assert_eq!(a.relation, InputRelation::ShardAlong { dim: 1, parts: 32 });
+        assert_eq!(a.relation, InputRelation::ShardAlong { dim: 1, parts: 32, axis: 0 });
+        let m = Annotation::shard_on(NodeId(0), NodeId(1), 0, 2, 1);
+        assert_eq!(m.relation, InputRelation::ShardAlong { dim: 0, parts: 2, axis: 1 });
         let r = Annotation::replicated(NodeId(2), NodeId(3));
         assert_eq!(r.relation, InputRelation::Replicated);
         let d = Annotation::device_ids(NodeId(4));

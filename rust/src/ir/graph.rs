@@ -98,6 +98,12 @@ pub struct Graph {
     pub outputs: Vec<NodeId>,
     /// SPMD width (1 = single device).
     pub num_cores: u32,
+    /// Logical mesh axis sizes over the cores (slowest first; product must
+    /// equal `num_cores`). Empty = the classic flat 1-axis view. Set by
+    /// the transform engine for mesh plans and round-tripped through HLO
+    /// text (`mesh={dp,tp}` module attribute) so the verifier can map
+    /// subgroup `replica_groups` back onto axes.
+    pub mesh: Vec<u32>,
     /// Interner for `Meta` strings.
     pub interner: Interner,
 }
@@ -110,7 +116,18 @@ impl Graph {
             nodes: Vec::new(),
             outputs: Vec::new(),
             num_cores,
+            mesh: Vec::new(),
             interner: Interner::new(),
+        }
+    }
+
+    /// The logical mesh view of this graph's cores: the declared axes, or
+    /// the flat 1-axis mesh when none were declared.
+    pub fn mesh_view(&self) -> super::Mesh {
+        if self.mesh.is_empty() {
+            super::Mesh::flat(self.num_cores)
+        } else {
+            super::Mesh::new(self.mesh.clone())
         }
     }
 
@@ -298,16 +315,18 @@ impl Graph {
                 | Op::AllGather { groups, .. }
                 | Op::ReduceScatter { groups, .. }
                 | Op::AllToAll { groups, .. } => {
-                    for g in &groups.0 {
-                        for &core in g {
-                            ensure!(
-                                core < self.num_cores,
-                                "collective at {} names core {} but graph has {} cores",
-                                n.id.0,
-                                core,
-                                self.num_cores
-                            );
-                        }
+                    // full well-formedness, not just in-bounds: overlapping
+                    // or non-covering groups would *silently* mis-evaluate
+                    // in the lockstep interpreter and mis-verify in the
+                    // relation rules, so they are rejected up front
+                    if let Err(why) = groups.check_partition(self.num_cores) {
+                        let site = self.source_site(n.id);
+                        let at = if site.is_empty() {
+                            format!("node {}", n.id.0)
+                        } else {
+                            format!("node {} ({site})", n.id.0)
+                        };
+                        bail!("{} at {at}: {why}", n.op.name());
                     }
                 }
                 _ => {}
@@ -319,6 +338,28 @@ impl Graph {
             }
         }
         ensure!(!self.outputs.is_empty(), "graph has no outputs");
+        if !self.mesh.is_empty() {
+            // AxesMask is a u8 bitmask: more than 8 axes would silently
+            // truncate masks instead of erroring, so cap the rank here
+            ensure!(
+                self.mesh.len() <= 8,
+                "mesh declares {} axes (at most 8 supported)",
+                self.mesh.len()
+            );
+            ensure!(
+                self.mesh.iter().all(|&a| a >= 1),
+                "mesh axes must all be >= 1 (got {:?})",
+                self.mesh
+            );
+            let total: u32 = self.mesh.iter().product();
+            ensure!(
+                total == self.num_cores,
+                "mesh {:?} covers {} cores but the graph declares {}",
+                self.mesh,
+                total,
+                self.num_cores
+            );
+        }
         Ok(())
     }
 
@@ -400,6 +441,54 @@ mod tests {
         );
         g.outputs.push(ar);
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_replica_groups() {
+        use crate::ir::{ReduceKind, ReplicaGroups};
+        let build = |groups: ReplicaGroups| {
+            let mut g = Graph::new("bad", 4);
+            let x = g.push(
+                Op::Parameter { index: 0, name: "x".into() },
+                vec![],
+                Shape::new(DType::F32, vec![4]),
+                Meta::none(),
+            );
+            let ar = g.push(
+                Op::AllReduce { kind: ReduceKind::Add, groups },
+                vec![x],
+                Shape::new(DType::F32, vec![4]),
+                Meta::none(),
+            );
+            g.outputs.push(ar);
+            g
+        };
+        // overlapping groups
+        let err = build(ReplicaGroups(vec![vec![0, 1], vec![1, 2, 3]]))
+            .validate()
+            .unwrap_err();
+        assert!(err.message().contains("more than one replica group"), "{err}");
+        // non-covering groups
+        let err = build(ReplicaGroups(vec![vec![0, 1], vec![2]])).validate().unwrap_err();
+        assert!(err.message().contains("not covered"), "{err}");
+        // well-formed subgroups pass
+        build(ReplicaGroups(vec![vec![0, 2], vec![1, 3]])).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_checks_mesh_consistency() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.parameter("x", Shape::new(DType::F32, vec![2]));
+        let y = b.neg(x);
+        b.output(y);
+        let mut g = b.finish();
+        g.mesh = vec![2, 2];
+        g.validate().unwrap();
+        assert_eq!(g.mesh_view().axes, vec![2, 2]);
+        g.mesh = vec![3, 2];
+        assert!(g.validate().is_err());
+        g.mesh = Vec::new();
+        assert_eq!(g.mesh_view().axes, vec![4]);
     }
 
     #[test]

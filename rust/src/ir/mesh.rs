@@ -1,0 +1,195 @@
+//! Device-mesh geometry: named axes over the SPMD core space.
+//!
+//! A distributed graph's cores form a logical mesh `[a0, a1, …]` (row
+//! major: the **last** axis varies fastest). Core `r`'s coordinate along
+//! axis `k` is the mixed-radix digit `(r / stride_k) % size_k`. Subgroup
+//! collectives operate over the groups of cores that differ *only* in a
+//! chosen subset of axes — [`Mesh::groups_for`] materializes those groups
+//! as concrete [`ReplicaGroups`], which is how an "all-reduce over the tp
+//! axis" of a `dp×tp` mesh becomes `replica_groups={{0,1},{2,3}}`.
+//!
+//! Axis subsets are passed as bitmasks (`1 << axis`), small enough for
+//! any realistic mesh and cheap to store inside relation facts.
+
+use super::ReplicaGroups;
+
+/// Bitmask over mesh axes (`1 << axis`).
+pub type AxesMask = u8;
+
+/// Logical device mesh: ordered axis sizes, last axis fastest.
+///
+/// A 1-axis mesh `[n]` is the classic flat SPMD view every pre-mesh
+/// scenario uses; `[dp, tp]` is the SPMD slice of a `pp×dp×tp` plan (the
+/// pipeline axis stays metadata — stages, not SPMD width).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Mesh {
+    /// Axis sizes, slowest first.
+    pub axes: Vec<u32>,
+}
+
+impl Mesh {
+    /// Flat 1-axis mesh over `n` cores.
+    pub fn flat(n: u32) -> Mesh {
+        Mesh { axes: vec![n.max(1)] }
+    }
+
+    /// Mesh from explicit axis sizes (empty ⇒ flat over 1 core).
+    pub fn new(axes: Vec<u32>) -> Mesh {
+        if axes.is_empty() {
+            Mesh::flat(1)
+        } else {
+            Mesh { axes }
+        }
+    }
+
+    /// Number of axes.
+    pub fn rank(&self) -> usize {
+        self.axes.len()
+    }
+
+    /// Total core count (product of axis sizes).
+    pub fn total(&self) -> u32 {
+        self.axes.iter().product()
+    }
+
+    /// Size of axis `k`.
+    pub fn size(&self, k: usize) -> u32 {
+        self.axes[k]
+    }
+
+    /// Stride of axis `k` in the flat core index (product of faster axes).
+    pub fn stride(&self, k: usize) -> u32 {
+        self.axes[k + 1..].iter().product()
+    }
+
+    /// Core `r`'s digit along axis `k`.
+    pub fn digit(&self, r: u32, k: usize) -> u32 {
+        (r / self.stride(k)) % self.axes[k]
+    }
+
+    /// Mask covering every axis.
+    pub fn full_mask(&self) -> AxesMask {
+        ((1u16 << self.rank()) - 1) as AxesMask
+    }
+
+    /// Drop degenerate (size-1) axes from a mask: reducing over a size-1
+    /// axis is a no-op, so masks differing only there are equivalent.
+    pub fn normalize_mask(&self, mask: AxesMask) -> AxesMask {
+        let mut out = 0;
+        for k in 0..self.rank() {
+            if mask & (1 << k) != 0 && self.axes[k] > 1 {
+                out |= 1 << k;
+            }
+        }
+        out
+    }
+
+    /// Cores per group for an axis subset (product of the masked sizes).
+    pub fn group_size(&self, mask: AxesMask) -> u32 {
+        (0..self.rank())
+            .filter(|&k| mask & (1 << k) != 0)
+            .map(|k| self.axes[k])
+            .product()
+    }
+
+    /// The replica groups of a collective over the masked axes: cores that
+    /// agree on every *unmasked* digit form one group. Members are listed
+    /// in ascending core id (= row-major order of the masked digits), and
+    /// groups in ascending order of their first member — the canonical
+    /// form every engine-emitted collective uses.
+    pub fn groups_for(&self, mask: AxesMask) -> ReplicaGroups {
+        let total = self.total();
+        let mut rep: Vec<Option<usize>> = vec![None; total as usize];
+        let mut groups: Vec<Vec<u32>> = Vec::new();
+        for r in 0..total {
+            // key = core with masked digits zeroed
+            let mut key = r;
+            for k in 0..self.rank() {
+                if mask & (1 << k) != 0 {
+                    key -= self.digit(r, k) * self.stride(k);
+                }
+            }
+            match rep[key as usize] {
+                Some(g) => groups[g].push(r),
+                None => {
+                    rep[key as usize] = Some(groups.len());
+                    groups.push(vec![r]);
+                }
+            }
+        }
+        ReplicaGroups(groups)
+    }
+
+    /// The axis subset whose [`Mesh::groups_for`] equals `groups`
+    /// (order-insensitively), if any. This is how group-aware relation
+    /// rules map a concrete collective back onto mesh axes; a collective
+    /// whose groups match no axis subset gets no rule — the wrong-group
+    /// bug family surfaces as an unverified frontier there.
+    pub fn axes_of_groups(&self, groups: &ReplicaGroups) -> Option<AxesMask> {
+        let want = groups.normalized();
+        for mask in 0..=self.full_mask() {
+            if self.groups_for(mask).normalized() == want {
+                return Some(mask);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_mesh_is_one_full_group() {
+        let m = Mesh::flat(4);
+        assert_eq!(m.total(), 4);
+        assert_eq!(m.groups_for(1).0, vec![vec![0, 1, 2, 3]]);
+        assert_eq!(m.groups_for(0).0.len(), 4); // empty mask = singletons
+    }
+
+    #[test]
+    fn dp_tp_mesh_groups() {
+        // mesh [dp=2, tp=2]: core = d*2 + t
+        let m = Mesh::new(vec![2, 2]);
+        assert_eq!(m.stride(0), 2);
+        assert_eq!(m.stride(1), 1);
+        assert_eq!(m.digit(3, 0), 1);
+        assert_eq!(m.digit(3, 1), 1);
+        // tp axis (bit 1): contiguous pairs
+        assert_eq!(m.groups_for(1 << 1).0, vec![vec![0, 1], vec![2, 3]]);
+        // dp axis (bit 0): strided pairs
+        assert_eq!(m.groups_for(1 << 0).0, vec![vec![0, 2], vec![1, 3]]);
+        // both axes: the full mesh
+        assert_eq!(m.groups_for(m.full_mask()).0, vec![vec![0, 1, 2, 3]]);
+    }
+
+    #[test]
+    fn axes_of_groups_inverts_groups_for() {
+        let m = Mesh::new(vec![2, 4]);
+        for mask in 0..=m.full_mask() {
+            assert_eq!(m.axes_of_groups(&m.groups_for(mask)), Some(mask));
+        }
+        // a permuted listing still maps back (normalized comparison)
+        let mut g = m.groups_for(1 << 1);
+        g.0.reverse();
+        assert_eq!(m.axes_of_groups(&g), Some(1 << 1));
+        // groups that are no axis subset map to nothing
+        let bogus = ReplicaGroups(vec![vec![0, 3], vec![1, 2], vec![4, 7], vec![5, 6]]);
+        assert_eq!(m.axes_of_groups(&bogus), None);
+    }
+
+    #[test]
+    fn three_axis_strides() {
+        let m = Mesh::new(vec![2, 3, 4]);
+        assert_eq!(m.total(), 24);
+        assert_eq!(m.stride(0), 12);
+        assert_eq!(m.stride(1), 4);
+        assert_eq!(m.stride(2), 1);
+        assert_eq!(m.group_size(0b101), 8);
+        let g = m.groups_for(1 << 2);
+        assert_eq!(g.0.len(), 6);
+        assert_eq!(g.0[0], vec![0, 1, 2, 3]);
+        assert_eq!(g.0[1], vec![4, 5, 6, 7]);
+    }
+}

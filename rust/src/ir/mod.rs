@@ -20,10 +20,12 @@ mod op;
 mod graph;
 mod builder;
 mod annotate;
+mod mesh;
 
 pub use annotate::{Annotation, InputRelation};
 pub use builder::{infer_shape, GraphBuilder};
 pub use dtype::DType;
 pub use graph::{Graph, Meta, Node, NodeId};
+pub use mesh::{AxesMask, Mesh};
 pub use op::{CmpKind, ConstVal, Op, ReduceKind, ReplicaGroups};
 pub use shape::Shape;

@@ -81,6 +81,65 @@ impl ReplicaGroups {
     pub fn uniform(&self) -> bool {
         self.0.windows(2).all(|w| w[0].len() == w[1].len())
     }
+
+    /// Order-insensitive canonical form: members ascending within each
+    /// group, groups ordered by first member. Collective *reductions* are
+    /// insensitive to listing order, so rules compare normalized forms;
+    /// order-sensitive collectives (`all-gather` concat order) compare the
+    /// raw listing.
+    pub fn normalized(&self) -> ReplicaGroups {
+        let mut groups: Vec<Vec<u32>> = self
+            .0
+            .iter()
+            .map(|g| {
+                let mut g = g.clone();
+                g.sort_unstable();
+                g
+            })
+            .collect();
+        groups.sort_by_key(|g| g.first().copied().unwrap_or(u32::MAX));
+        ReplicaGroups(groups)
+    }
+
+    /// Check that the groups form a partition of the `n`-core mesh:
+    /// every group non-empty, every core id in `0..n`, no core in two
+    /// groups (or twice in one), and every core covered. Returns a
+    /// human-readable reason on the first violation — wrong-replica-group
+    /// bugs that break these invariants would otherwise *silently*
+    /// mis-evaluate (the interpreter treats an uncovered core as its own
+    /// group, and an overlapping core reduces into several groups).
+    pub fn check_partition(&self, n: u32) -> std::result::Result<(), String> {
+        if self.0.is_empty() {
+            return Err("collective has no replica groups".into());
+        }
+        let mut seen = vec![false; n as usize];
+        for (gi, g) in self.0.iter().enumerate() {
+            if g.is_empty() {
+                return Err(format!("replica group {gi} is empty"));
+            }
+            for &core in g {
+                if core >= n {
+                    return Err(format!(
+                        "replica group {gi} names core {core} but the mesh has {n} cores"
+                    ));
+                }
+                if seen[core as usize] {
+                    return Err(format!(
+                        "core {core} appears in more than one replica group (groups must \
+                         be disjoint)"
+                    ));
+                }
+                seen[core as usize] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(format!(
+                "core {missing} is not covered by any replica group (groups must \
+                 partition the mesh)"
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Small constant payload. Large tensors never appear as literals in the
@@ -451,6 +510,25 @@ mod tests {
         assert_eq!(s.0.len(), 2);
         assert_eq!(s.group_of(5), Some(&[4u32, 5, 6, 7][..]));
         assert!(s.uniform());
+    }
+
+    #[test]
+    fn replica_groups_normalize_and_partition_check() {
+        let g = ReplicaGroups(vec![vec![3, 1], vec![2, 0]]);
+        assert_eq!(g.normalized().0, vec![vec![0, 2], vec![1, 3]]);
+        assert!(g.check_partition(4).is_ok());
+        // overlap
+        let o = ReplicaGroups(vec![vec![0, 1], vec![1, 2, 3]]);
+        assert!(o.check_partition(4).unwrap_err().contains("more than one"));
+        // gap
+        let gap = ReplicaGroups(vec![vec![0, 1], vec![2]]);
+        assert!(gap.check_partition(4).unwrap_err().contains("not covered"));
+        // out of bounds
+        let oob = ReplicaGroups(vec![vec![0, 1, 2, 4]]);
+        assert!(oob.check_partition(4).unwrap_err().contains("4 cores"));
+        // empty group
+        let empty = ReplicaGroups(vec![vec![0, 1, 2, 3], vec![]]);
+        assert!(empty.check_partition(4).unwrap_err().contains("empty"));
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct AtomStore {
     children: Vec<Option<Vec<AtomId>>>,
     /// hash-cons of splits: (parent, prefix-product, size) -> child
     split_memo: FxHashMap<(AtomId, i64, i64), AtomId>,
+    /// mesh axis a *shard* atom spans (absent ⇒ axis 0, the flat-mesh
+    /// default). Only atoms that are distributed across cores carry a
+    /// meaningful tag; geometry hash-consing is unaffected.
+    mesh_axis: FxHashMap<AtomId, u8>,
 }
 
 impl AtomStore {
@@ -40,6 +44,28 @@ impl AtomStore {
     /// Size of an atom.
     pub fn size(&self, a: AtomId) -> i64 {
         self.sizes[a.0 as usize]
+    }
+
+    /// Tag `a` as spanning mesh axis `axis`. First write wins: atoms are
+    /// hash-consed by geometry, so a shared split child could be reached
+    /// from contexts claiming different axes — retagging would corrupt
+    /// facts already derived under the first tag. Returns `false` when `a`
+    /// already carries a *different* tag (callers must then skip the
+    /// derivation instead of proceeding with a wrong axis).
+    pub fn set_mesh_axis(&mut self, a: AtomId, axis: u8) -> bool {
+        match self.mesh_axis.get(&a) {
+            Some(&t) => t == axis,
+            None => {
+                self.mesh_axis.insert(a, axis);
+                true
+            }
+        }
+    }
+
+    /// Mesh axis a shard atom spans (0 for untagged atoms — the flat-mesh
+    /// default, which keeps every 1-axis scenario unchanged).
+    pub fn mesh_axis(&self, a: AtomId) -> u8 {
+        self.mesh_axis.get(&a).copied().unwrap_or(0)
     }
 
     /// Current finest expansion of an atom (leaves of its split tree).

@@ -93,8 +93,8 @@ pub mod proptest;
 pub mod prelude {
     pub use crate::error::{Result, ScalifyError};
     pub use crate::ir::{
-        Annotation, DType, Graph, GraphBuilder, Node, NodeId, Op, ReduceKind, ReplicaGroups,
-        Shape,
+        Annotation, AxesMask, DType, Graph, GraphBuilder, Mesh, Node, NodeId, Op,
+        ReduceKind, ReplicaGroups, Shape,
     };
     pub use crate::localize::Discrepancy;
     pub use crate::modelgen::{

@@ -17,7 +17,8 @@
 //! stdout carries exactly one machine-readable document.
 
 use scalify::bugs::{
-    evaluate, new_bugs, parallel_transform_bugs, reproduced_bugs, ExpectedLoc, LocResult,
+    evaluate, new_bugs, parallel_transform_bugs, replica_group_bugs, reproduced_bugs,
+    ExpectedLoc, LocResult,
 };
 use scalify::cli;
 use scalify::error::{Result, ResultExt, ScalifyError};
@@ -367,13 +368,78 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
     }
 }
 
+/// Warm-path regression gate: compare a fresh `BENCH_service.json`
+/// against a committed baseline and fail on a >1.5× warm-latency
+/// regression (with a small absolute slack so sub-millisecond noise on
+/// shared CI runners cannot trip the gate).
+fn bench_check(baseline_path: &str, fresh_path: &str) -> Result<ExitCode> {
+    const RATIO: f64 = 1.5;
+    const SLACK_SECS: f64 = 0.05;
+    let load = |path: &str| -> Result<Json> {
+        let text =
+            std::fs::read_to_string(path).with_ctx(|| format!("reading bench file {path}"))?;
+        Json::parse(&text).with_ctx(|| format!("parsing bench file {path}"))
+    };
+    let baseline = load(baseline_path)?;
+    let fresh = load(fresh_path)?;
+    let scenarios = |doc: &Json| -> Result<HashMap<String, f64>> {
+        let arr = doc
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ScalifyError::parse("bench file has no 'scenarios' array"))?;
+        let mut map = HashMap::new();
+        for s in arr {
+            let par = s
+                .str_at("par")
+                .ok_or_else(|| ScalifyError::parse("scenario missing 'par'"))?;
+            let warm = s
+                .f64_at("warm_secs")
+                .ok_or_else(|| ScalifyError::parse("scenario missing 'warm_secs'"))?;
+            map.insert(par.to_string(), warm);
+        }
+        Ok(map)
+    };
+    let base = scenarios(&baseline)?;
+    let new = scenarios(&fresh)?;
+    let mut regressed = false;
+    for (par, base_warm) in &base {
+        let Some(new_warm) = new.get(par) else {
+            eprintln!("bench-check: scenario '{par}' missing from {fresh_path}");
+            regressed = true;
+            continue;
+        };
+        let limit = base_warm * RATIO + SLACK_SECS;
+        let verdict = if *new_warm > limit { "REGRESSED" } else { "ok" };
+        eprintln!(
+            "bench-check {par}: warm {:.4}s vs baseline {:.4}s (limit {:.4}s) — {verdict}",
+            new_warm, base_warm, limit
+        );
+        regressed |= *new_warm > limit;
+    }
+    if regressed {
+        eprintln!(
+            "bench-check: warm-path latency regressed more than {RATIO}× over \
+             {baseline_path} (re-baseline deliberately if the slowdown is intended)"
+        );
+        Ok(ExitCode::from(1))
+    } else {
+        eprintln!("bench-check: warm path within {RATIO}× of {baseline_path}");
+        Ok(ExitCode::SUCCESS)
+    }
+}
+
 /// `scalify bench`: cold vs warm vs restart-warm service latency for the
 /// llama pair under tp4 and pp2tp4, written to `BENCH_service.json`.
+/// `--check BASELINE.json` compares an existing fresh report against the
+/// committed baseline instead (the CI bench-regression gate).
 fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
     use scalify::partition::MemoEntry;
 
     let model = flags.get("model").map(String::as_str).unwrap_or("bench-llama");
     let out_path = flags.get("out").map(String::as_str).unwrap_or("BENCH_service.json");
+    if let Some(baseline_path) = flags.get("check") {
+        return bench_check(baseline_path, out_path);
+    }
     let pair_for = |par_spec: &str| -> Result<GraphPair> {
         let par = cli::parallelism(par_spec)?;
         if model == "bench-llama" {
@@ -394,7 +460,7 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
 
     let t_start = Instant::now();
     let mut scenarios: Vec<Json> = Vec::new();
-    for par_spec in ["tp4", "pp2tp4"] {
+    for par_spec in ["tp4", "pp2tp4", "dp2tp2"] {
         let pair = pair_for(par_spec)?;
 
         // fresh session per scenario so "cold" is honest; the memo-write
@@ -526,6 +592,7 @@ fn cmd_bugs(flags: &Flags) -> Result<ExitCode> {
             "Pipeline and data-parallel bugs",
             parallel_transform_bugs(),
         );
+        all_ok &= run_bug_table("Replica-group (mesh subgroup) bugs", replica_group_bugs());
     }
     Ok(if all_ok { ExitCode::SUCCESS } else { ExitCode::from(1) })
 }
@@ -564,12 +631,12 @@ fn usage() -> String {
          scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N] [--json]\n  \
          scalify model --model llama-8b|llama-70b|llama-405b|llama-tiny|mixtral-8x7b|mixtral-8x22b\
          |mixtral-tiny|dpstep-tiny|dpstep-small \
-         --par tp32|sp32|fd32|ep8|pp4|dp4z1|pp2tp4 [--layers N] [--json]\n  \
+         --par tp32|sp32|fd32|ep8|pp4|dp4z1|pp2tp4|dp2tp2|pp2dp2tp2 [--layers N] [--json]\n  \
          scalify batch --manifest pairs.txt [--workers N] [--json]\n  \
          scalify serve [--addr 127.0.0.1:7878] [--cache-dir DIR] [--queue N] [--workers N]\n  \
          scalify client verify|stats|shutdown --addr HOST:PORT [--model M --par P | --bug ID \
          | --base a.hlo --dist b.hlo] [--json]\n  \
-         scalify bench [--model M] [--out FILE] [--json]\n  \
+         scalify bench [--model M] [--out FILE] [--check BASELINE.json] [--json]\n  \
          scalify bugs [--reproduced|--new|--transform]\n  \
          scalify exec --artifact artifacts/model_single.hlo.txt\n  \
          scalify info\n\

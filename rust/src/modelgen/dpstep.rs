@@ -149,39 +149,90 @@ pub(crate) fn zero_plan(dp: u32, zero_stage: u8) -> ParallelPlan {
     plan
 }
 
+/// The plan for a 3D `pp×dp×tp` mesh step: data tensors batch-shard over
+/// the dp axis (axis 0), weights Megatron-shard over the tp axis (axis 1)
+/// — column-sharded on even layers, row-sharded on odd, so hidden-dim
+/// contractions leave **tp-subgroup** partials — and each momentum shards
+/// with its weight. Gradient batch contractions leave **dp-subgroup**
+/// partials discharged by strided-group all-reduces at the optimizer
+/// update: both subgroup collective families in one SPMD graph.
+pub(crate) fn mesh_plan(cfg: &TrainStepConfig, pp: u32, dp: u32, tp: u32) -> ParallelPlan {
+    let mut plan = ParallelPlan::new(Parallelism::Mesh3D { pp, dp, tp })
+        .shard_on("batch.x", 0, 0)
+        .shard_on("batch.y", 0, 0);
+    for l in 0..cfg.layers {
+        let dim = if l % 2 == 0 { 1 } else { 0 };
+        plan = plan
+            .shard_on(&format!("l{l}.weight"), dim, 1)
+            .shard_on(&format!("l{l}.momentum"), dim, 1);
+    }
+    plan
+}
+
 /// Build a baseline + data-parallel training-step pair, validating the
 /// configuration instead of panicking.
 pub fn try_dpstep_pair(cfg: &TrainStepConfig, par: Parallelism) -> Result<GraphPair> {
-    let Parallelism::Data { dp, zero_stage } = par else {
-        return Err(ScalifyError::model_spec(format!(
-            "the training-step zoo is data-parallel only (got {})",
-            par.label()
-        )));
-    };
     if cfg.layers == 0 || cfg.batch <= 0 || cfg.hidden <= 0 {
         return Err(ScalifyError::model_spec(format!(
             "training-step config has a non-positive dimension: {cfg:?}"
         )));
     }
-    if dp == 0 {
-        return Err(ScalifyError::model_spec("data-parallel degree must be >= 1"));
-    }
-    if zero_stage > 2 {
-        return Err(ScalifyError::model_spec(format!(
-            "ZeRO stage {zero_stage} is not modeled (stages 0-2)"
-        )));
-    }
-    if cfg.batch % dp as i64 != 0 {
-        return Err(ScalifyError::model_spec(format!(
-            "batch ({}) must be divisible by dp ({dp})",
-            cfg.batch
-        )));
-    }
-    if zero_stage >= 1 && cfg.hidden % dp as i64 != 0 {
-        return Err(ScalifyError::model_spec(format!(
-            "hidden ({}) must be divisible by dp ({dp}) to shard optimizer state",
-            cfg.hidden
-        )));
+    match par {
+        Parallelism::Data { dp, zero_stage } => {
+            if dp == 0 {
+                return Err(ScalifyError::model_spec(
+                    "data-parallel degree must be >= 1",
+                ));
+            }
+            if zero_stage > 2 {
+                return Err(ScalifyError::model_spec(format!(
+                    "ZeRO stage {zero_stage} is not modeled (stages 0-2)"
+                )));
+            }
+            if cfg.batch % dp as i64 != 0 {
+                return Err(ScalifyError::model_spec(format!(
+                    "batch ({}) must be divisible by dp ({dp})",
+                    cfg.batch
+                )));
+            }
+            if zero_stage >= 1 && cfg.hidden % dp as i64 != 0 {
+                return Err(ScalifyError::model_spec(format!(
+                    "hidden ({}) must be divisible by dp ({dp}) to shard optimizer state",
+                    cfg.hidden
+                )));
+            }
+        }
+        Parallelism::Mesh3D { pp, dp, tp } => {
+            if pp == 0 || dp == 0 || tp == 0 {
+                return Err(ScalifyError::model_spec("mesh degrees must be >= 1"));
+            }
+            if cfg.batch % dp as i64 != 0 {
+                return Err(ScalifyError::model_spec(format!(
+                    "batch ({}) must be divisible by dp ({dp})",
+                    cfg.batch
+                )));
+            }
+            if cfg.hidden % tp as i64 != 0 {
+                return Err(ScalifyError::model_spec(format!(
+                    "hidden ({}) must be divisible by tp ({tp}) to shard the weights",
+                    cfg.hidden
+                )));
+            }
+            // stage splitting cuts along the 2·layers forward/backward
+            // partition groups
+            if pp > 2 * cfg.layers {
+                return Err(ScalifyError::model_spec(format!(
+                    "pipeline degree ({pp}) exceeds the {} forward/backward groups",
+                    2 * cfg.layers
+                )));
+            }
+        }
+        other => {
+            return Err(ScalifyError::model_spec(format!(
+                "the training-step zoo is data-parallel only (got {})",
+                other.label()
+            )));
+        }
     }
     Ok(dpstep_pair(cfg, par))
 }
@@ -192,10 +243,12 @@ pub fn try_dpstep_pair(cfg: &TrainStepConfig, par: Parallelism) -> Result<GraphP
 /// Panics on invalid configurations; use [`try_dpstep_pair`] on untrusted
 /// input.
 pub fn dpstep_pair(cfg: &TrainStepConfig, par: Parallelism) -> GraphPair {
-    let Parallelism::Data { dp, zero_stage } = par else {
-        panic!("the training-step zoo is data-parallel only");
-    };
     let base = train_step_baseline(cfg);
-    crate::transform::apply(&base, &zero_plan(dp, zero_stage))
-        .expect("ZeRO plan applies to its own baseline")
+    let plan = match par {
+        Parallelism::Data { dp, zero_stage } => zero_plan(dp, zero_stage),
+        Parallelism::Mesh3D { pp, dp, tp } => mesh_plan(cfg, pp, dp, tp),
+        _ => panic!("the training-step zoo is data-parallel only"),
+    };
+    crate::transform::apply(&base, &plan)
+        .expect("training-step parallel plan applies to its own baseline")
 }

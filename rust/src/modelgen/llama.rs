@@ -351,6 +351,20 @@ pub fn try_llama_pair(
                 ));
             }
         }
+        Parallelism::Mesh3D { pp, dp, tp } => {
+            // inference serves the dp axis by replication (each dp group
+            // answers its own requests), so dp adds no shape constraints —
+            // it widens the mesh and turns every tp collective into a
+            // subgroup collective
+            check_tp(tp)?;
+            let _ = dp;
+            if pp > cfg.layers {
+                return spec(format!(
+                    "pipeline degree ({pp}) exceeds the layer count ({})",
+                    cfg.layers
+                ));
+            }
+        }
     }
     Ok(llama_pair(cfg, par))
 }
@@ -371,7 +385,8 @@ pub fn llama_pair(cfg: &LlamaConfig, par: Parallelism) -> GraphPair {
         Parallelism::Tensor { .. }
         | Parallelism::Sequence { .. }
         | Parallelism::Pipeline { .. }
-        | Parallelism::Combined { .. } => {
+        | Parallelism::Combined { .. }
+        | Parallelism::Mesh3D { .. } => {
             let base = dense_baseline(cfg);
             crate::transform::apply(&base, &dense_plan(par))
                 .expect("llama parallel plan applies to its own baseline")
@@ -427,18 +442,29 @@ pub(crate) fn dense_baseline(cfg: &LlamaConfig) -> crate::ir::Graph {
 fn dense_plan(par: Parallelism) -> crate::transform::ParallelPlan {
     use crate::transform::ParallelPlan;
     let plan = ParallelPlan::new(par);
+    // the mesh axis Megatron sharding spans: the whole (flat) mesh for
+    // classic plans, the tp axis (axis 1 of [dp, tp]) for 3D-mesh plans —
+    // which is what turns the inserted all-reduces into tp-subgroup
+    // collectives over `replica_groups={{0..tp-1},{tp..2tp-1},…}`
+    let tp_axis = match par {
+        Parallelism::Mesh3D { .. } => 1,
+        _ => 0,
+    };
     let shardy = matches!(
         par,
-        Parallelism::Tensor { .. } | Parallelism::Sequence { .. } | Parallelism::Combined { .. }
+        Parallelism::Tensor { .. }
+            | Parallelism::Sequence { .. }
+            | Parallelism::Combined { .. }
+            | Parallelism::Mesh3D { .. }
     );
     let mut plan = if shardy {
-        plan.shard("q_proj", 1)
-            .shard("k_proj", 1)
-            .shard("v_proj", 1)
-            .shard("o_proj", 0)
-            .shard("gate_proj", 1)
-            .shard("up_proj", 1)
-            .shard("down_proj", 0)
+        plan.shard_on("q_proj", 1, tp_axis)
+            .shard_on("k_proj", 1, tp_axis)
+            .shard_on("v_proj", 1, tp_axis)
+            .shard_on("o_proj", 0, tp_axis)
+            .shard_on("gate_proj", 1, tp_axis)
+            .shard_on("up_proj", 1, tp_axis)
+            .shard_on("down_proj", 0, tp_axis)
     } else {
         plan
     };
@@ -649,20 +675,28 @@ pub fn shard_inputs(
                     c.push(bval.clone());
                 }
             }
-            crate::ir::InputRelation::ShardAlong { dim, parts } => {
+            crate::ir::InputRelation::ShardAlong { dim, parts, axis } => {
+                // core r holds shard digit(r, axis): the raw core id on
+                // flat meshes, the axis digit on multi-axis meshes (cores
+                // in the same subgroup position share a shard)
+                let mesh = pair.dist.mesh_view();
+                let axis_ok =
+                    *axis < mesh.rank() && mesh.size(*axis) == *parts;
                 if *dim >= bval.shape.rank()
-                    || *parts as usize != cores
+                    || !axis_ok
                     || bval.shape.dims[*dim] % *parts as i64 != 0
                 {
                     return Err(ScalifyError::model_spec(format!(
                         "annotation shards baseline parameter {} along dim {dim} into \
-                         {parts} parts, which does not fit shape {} on {cores} cores",
+                         {parts} parts (mesh axis {axis}), which does not fit shape {} \
+                         on {cores} cores",
                         bpos, bval.shape
                     )));
                 }
                 let shards = bval.split(*dim, *parts);
-                for (c, sh) in per_core.iter_mut().zip(shards) {
-                    c.push(sh);
+                for (r, c) in per_core.iter_mut().enumerate() {
+                    let d = mesh.digit(r as u32, *axis) as usize;
+                    c.push(shards[d].clone());
                 }
             }
             crate::ir::InputRelation::DeviceIds => unreachable!("handled above"),

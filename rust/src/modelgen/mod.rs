@@ -82,6 +82,23 @@ pub enum Parallelism {
         /// Per-stage tensor degree.
         tp: u32,
     },
+    /// Full 3D mesh: pipeline stages × a `[dp, tp]` SPMD mesh in ONE
+    /// graph. The emitted graph is `dp·tp` cores wide with **subgroup**
+    /// collectives — tp all-reduces over the contiguous tp groups, dp
+    /// gradient all-reduces over the strided dp groups — and pipeline
+    /// stages carried as metadata + send/recv boundaries, exactly the
+    /// production pp×dp×tp shape the paper's Llama-405B runs use. For
+    /// inference zoo models the dp axis replicates (pure data-parallel
+    /// serving); for the training-step zoo it batch-shards with dp-group
+    /// gradient reduction.
+    Mesh3D {
+        /// Stage count (1 = no pipeline splitting).
+        pp: u32,
+        /// Data-parallel axis size (mesh axis 0, slow).
+        dp: u32,
+        /// Tensor-parallel axis size (mesh axis 1, fast).
+        tp: u32,
+    },
 }
 
 impl Parallelism {
@@ -97,6 +114,7 @@ impl Parallelism {
             Parallelism::Expert { ep } => *ep,
             Parallelism::Pipeline { pp } => *pp,
             Parallelism::Data { dp, .. } => *dp,
+            Parallelism::Mesh3D { dp, tp, .. } => dp * tp,
         }
     }
 
@@ -104,6 +122,7 @@ impl Parallelism {
     pub fn total_devices(&self) -> u32 {
         match self {
             Parallelism::Combined { pp, tp } => pp * tp,
+            Parallelism::Mesh3D { pp, dp, tp } => pp * dp * tp,
             other => other.cores(),
         }
     }
@@ -118,6 +137,24 @@ impl Parallelism {
             Parallelism::Pipeline { pp } => format!("pp{pp}"),
             Parallelism::Data { dp, zero_stage } => format!("dp{dp}z{zero_stage}"),
             Parallelism::Combined { pp, tp } => format!("pp{pp}tp{tp}"),
+            Parallelism::Mesh3D { pp, dp, tp } => {
+                // canonical spec form: pp omitted when 1 (`dp2tp2`)
+                if *pp == 1 {
+                    format!("dp{dp}tp{tp}")
+                } else {
+                    format!("pp{pp}dp{dp}tp{tp}")
+                }
+            }
+        }
+    }
+
+    /// SPMD mesh axes of the emitted distributed graph (empty = flat).
+    /// Only mesh plans declare axes; the pipeline factor is not an SPMD
+    /// axis (stages are metadata).
+    pub fn mesh_axes(&self) -> Vec<u32> {
+        match self {
+            Parallelism::Mesh3D { dp, tp, .. } => vec![*dp, *tp],
+            _ => Vec::new(),
         }
     }
 }

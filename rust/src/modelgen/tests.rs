@@ -185,6 +185,64 @@ fn dpstep_zero_stages_verify_and_match_numerically() {
 }
 
 #[test]
+fn llama_mesh3d_verifies_and_matches_numerically() {
+    use crate::ir::Mesh;
+    // pp2 × dp2 × tp2 over llama-tiny: one SPMD graph, 4 cores wide
+    // ([dp, tp] mesh), tp-SUBGROUP all-reduces, pp stages as metadata
+    let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Mesh3D { pp: 2, dp: 2, tp: 2 });
+    assert_eq!(pair.dist.num_cores, 4);
+    assert_eq!(pair.dist.mesh, vec![2, 2]);
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "send"));
+    let tp_groups = Mesh::new(vec![2, 2]).groups_for(1 << 1);
+    assert!(
+        pair.dist.nodes.iter().any(|n| matches!(
+            &n.op,
+            crate::ir::Op::AllReduce { groups, .. } if *groups == tp_groups
+        )),
+        "mesh llama must reduce over tp subgroups {{0,1}},{{2,3}}"
+    );
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{}", render_failure(&report));
+    assert_numerically_equivalent(&pair, 1e-4, 53);
+}
+
+#[test]
+fn dpstep_mesh3d_verifies_and_matches_numerically() {
+    use crate::ir::Mesh;
+    // the dp2×tp2 training step: dp-subgroup gradient all-reduces
+    // (strided groups) + tp-subgroup discharges in one graph
+    let pair =
+        dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 });
+    assert_eq!(pair.dist.num_cores, 4);
+    let mesh = Mesh::new(vec![2, 2]);
+    let dp_groups = mesh.groups_for(1 << 0);
+    let tp_groups = mesh.groups_for(1 << 1);
+    let has = |g: &crate::ir::ReplicaGroups| {
+        pair.dist
+            .nodes
+            .iter()
+            .any(|n| matches!(&n.op, crate::ir::Op::AllReduce { groups, .. } if groups == g))
+    };
+    assert!(has(&dp_groups), "gradient reduction over strided dp groups {{0,2}},{{1,3}}");
+    assert!(has(&tp_groups), "hidden-dim discharge over contiguous tp groups");
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{}", render_failure(&report));
+    assert_numerically_equivalent(&pair, 1e-3, 59);
+}
+
+#[test]
+fn dpstep_mesh3d_with_pipeline_verifies() {
+    let pair =
+        dpstep_pair(&TrainStepConfig::tiny(), Parallelism::Mesh3D { pp: 2, dp: 2, tp: 2 });
+    assert_eq!(pair.dist.num_cores, 4);
+    assert_eq!(pair.dist.mesh, vec![2, 2]);
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "send"));
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{}", render_failure(&report));
+    assert_numerically_equivalent(&pair, 1e-3, 61);
+}
+
+#[test]
 fn dpstep_collectives_match_zero_stage() {
     let count = |pair: &GraphPair, op: &str| {
         pair.dist.nodes.iter().filter(|n| n.op.name() == op).count()

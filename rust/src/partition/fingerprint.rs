@@ -20,7 +20,11 @@ use std::hash::{Hash, Hasher};
 
 /// Version of the fingerprint scheme. Recorded in persistent caches;
 /// loading a cache written under a different version is a cold start.
-pub const FINGERPRINT_VERSION: u32 = 1;
+///
+/// v2: mesh axes entered the slice hash and `RelSummary` gained mesh-axis
+/// fields (subgroup collectives) — v1 entries describe relations under a
+/// different encoding and must not replay.
+pub const FINGERPRINT_VERSION: u32 = 2;
 
 /// Default [`LayerMemo`] capacity: generous enough that batch runs and
 /// week-long daemons over the model zoo never evict in practice, small
@@ -128,6 +132,9 @@ pub fn fingerprint_pair(
 }
 
 fn hash_slice<H: Hasher>(slice: &LayerSlice, h: &mut H) {
+    // the declared mesh changes how subgroup collectives verify, so a
+    // layer verified under mesh [4] must never replay one under [2,2]
+    slice.graph.mesh.hash(h);
     slice.graph.nodes.len().hash(h);
     for n in &slice.graph.nodes {
         // op identity incl. attributes; the Debug string is a pure

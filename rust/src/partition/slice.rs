@@ -63,6 +63,7 @@ pub fn extract_layers(g: &Graph) -> Vec<LayerSlice> {
 fn build_slice(g: &Graph, tag: u32, members: &[NodeId], uses: &[Vec<NodeId>]) -> LayerSlice {
     let member_set: rustc_hash::FxHashSet<NodeId> = members.iter().copied().collect();
     let mut sub = Graph::new(format!("{}::layer{}", g.name, tag), g.num_cores);
+    sub.mesh = g.mesh.clone();
     let mut node_map: FxHashMap<NodeId, NodeId> = FxHashMap::default();
     let mut ext_inputs: Vec<NodeId> = Vec::new();
     let mut next_param = 0usize;

@@ -33,6 +33,17 @@ pub fn base_seed(default: u64) -> u64 {
         .unwrap_or(default)
 }
 
+/// Case count for a property: the `SCALIFY_PROPTEST_CASES` environment
+/// variable when set (the nightly CI run raises it for deeper grids),
+/// else `default`. PR runs keep the small defaults so the suite stays
+/// fast; a failure reproduces locally from the reported seed regardless.
+pub fn case_count(default: u64) -> u64 {
+    std::env::var("SCALIFY_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Greedy input shrinking: starting from a failing `input`, repeatedly try
 /// the candidates `shrink` proposes (smallest-first) and keep any that
 /// still fails, until no candidate fails. Returns the minimal failing
@@ -266,7 +277,7 @@ mod tests {
     /// Failures are shrunk to a minimal config before reporting.
     #[test]
     fn prop_engine_derived_llama_variants_verify() {
-        check("transform-llama-grid", base_seed(0x7A11), 6, |p| {
+        check("transform-llama-grid", base_seed(0x7A11), case_count(6), |p| {
             let hd = [2i64, 4][p.range(0, 2)];
             let heads = [2i64, 4][p.range(0, 2)];
             let layers = 1 + p.range(0, 3) as u32;
@@ -318,7 +329,7 @@ mod tests {
     /// verifies and agrees with the interpreter.
     #[test]
     fn prop_engine_derived_zero_variants_verify() {
-        check("transform-zero-grid", base_seed(0x2E50), 6, |p| {
+        check("transform-zero-grid", base_seed(0x2E50), case_count(6), |p| {
             let dp = [2u32, 4][p.range(0, 2)];
             let cfg = TrainStepConfig {
                 layers: 1 + p.range(0, 3) as u32,
@@ -347,13 +358,73 @@ mod tests {
         });
     }
 
+    /// Random pp×dp×tp mesh grid: every derived 3D-mesh pair (llama
+    /// inference and training step) verifies with subgroup collectives
+    /// and agrees with the lockstep interpreter.
+    #[test]
+    fn prop_engine_derived_mesh_variants_verify() {
+        check("transform-mesh-grid", base_seed(0x3D3D), case_count(6), |p| {
+            let dp = [1u32, 2][p.range(0, 2)];
+            let tp = [2u32, 2, 4][p.range(0, 3)];
+            let pp = [1u32, 2][p.range(0, 2)];
+            if dp * tp < 2 {
+                return Ok(());
+            }
+            let par = Parallelism::Mesh3D { pp, dp, tp };
+            if p.chance(0.5) {
+                let heads = tp.max(2) as i64;
+                let cfg = LlamaConfig {
+                    layers: pp.max(1) + p.range(0, 2) as u32,
+                    hidden: heads * 2,
+                    heads,
+                    ffn: (tp as i64) * 2,
+                    seqlen: [2i64, 4][p.range(0, 2)],
+                    batch: 1,
+                };
+                if crate::modelgen::try_llama_pair(&cfg, par).is_err() {
+                    return Ok(());
+                }
+                if let Some(msg) = llama_engine_failure(&cfg, par) {
+                    return Err(format!("{} on {cfg:?}: {msg}", par.label()));
+                }
+            } else {
+                let cfg = TrainStepConfig {
+                    layers: 1 + p.range(0, 2) as u32,
+                    batch: dp as i64 * 2,
+                    hidden: (tp as i64) * 4,
+                };
+                let pair = match crate::modelgen::try_dpstep_pair(&cfg, par) {
+                    Ok(pair) => pair,
+                    Err(_) => return Ok(()),
+                };
+                let report = quiet_session().verify(&pair).map_err(|e| e.to_string())?;
+                if !report.verified() {
+                    return Err(format!(
+                        "{} {cfg:?}: {}",
+                        par.label(),
+                        report.summary()
+                    ));
+                }
+                let num = crate::baseline::numerical_verify(&pair, 1, 1e-3, p.next_u64());
+                if !num.equivalent {
+                    return Err(format!(
+                        "{} {cfg:?}: numerics diverged by {}",
+                        par.label(),
+                        num.max_dev
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Differential: on random configs the engine-derived tensor/sequence
     /// graphs agree with the hand-built golden builders core-for-core.
     #[test]
     fn prop_engine_agrees_with_golden_builders() {
         use crate::interp::{run_spmd, Tensor};
         use crate::modelgen::llama::shard_inputs;
-        check("transform-vs-golden", base_seed(0x601D), 4, |p| {
+        check("transform-vs-golden", base_seed(0x601D), case_count(4), |p| {
             let heads = [2i64, 4][p.range(0, 2)];
             let cfg = LlamaConfig {
                 layers: 1 + p.range(0, 2) as u32,

@@ -7,7 +7,7 @@
 
 use super::facts::{Fact, FactKey, PerCoreFact};
 use crate::egraph::{EGraph, ENode, Id};
-use crate::ir::{Graph, Node, NodeId, Op, ReduceKind, ReplicaGroups};
+use crate::ir::{AxesMask, Graph, Mesh, Node, NodeId, Op, ReduceKind, ReplicaGroups};
 use crate::layout::{AtomStore, AxisExpr};
 use rustc_hash::{FxHashMap, FxHashSet};
 
@@ -21,25 +21,33 @@ fn lookup_base(eg: &EGraph, enode: &ENode) -> Option<Id> {
 }
 
 /// Shard stride profile of a flattened index: total extent plus the
-/// (stride, size) of every core-distributed digit. Two operands whose
-/// profiles match embed their local indices into the global index the same
-/// way, so their per-core values pair correctly.
+/// (stride, size, mesh axis) of every core-distributed digit. Two operands
+/// whose profiles match embed their local indices into the global index
+/// the same way **and follow the same mesh digits**, so their per-core
+/// values pair correctly — a dp-sharded and a tp-sharded contraction digit
+/// of equal geometry must not pair (they select different slices on a
+/// given core).
 fn shard_profile(
     st: &AtomStore,
     leaves: &[crate::layout::AtomId],
     missing: &[crate::layout::AtomId],
-) -> (i64, Vec<(i64, i64)>) {
+) -> (i64, Vec<(i64, i64, u8)>) {
     let total: i64 = leaves.iter().map(|&a| st.size(a)).product();
     let mut out = Vec::new();
     let mut stride = total;
     for &a in leaves {
         stride /= st.size(a);
         if missing.contains(&a) {
-            out.push((stride, st.size(a)));
+            out.push((stride, st.size(a), st.mesh_axis(a)));
         }
     }
     out.sort_unstable();
     (total, out)
+}
+
+/// Union of the mesh-axis bits of a set of shard atoms.
+fn axes_of(st: &AtomStore, atoms: &[crate::layout::AtomId]) -> AxesMask {
+    atoms.iter().fold(0, |m, &a| m | (1 << st.mesh_axis(a)))
 }
 
 /// Graph-pair context handed to the engine by the verifier.
@@ -99,23 +107,44 @@ pub struct RelEngine {
     facts: FxHashMap<Id, Vec<Fact>>,
     keys: FxHashSet<FactKey>,
     percore: FxHashMap<Id, Vec<PerCoreFact>>,
-    /// SPMD width.
+    /// SPMD width (total cores — the mesh's axis-size product).
     pub cores: u32,
+    /// Logical mesh over the cores: subgroup collectives are interpreted
+    /// against its axes ([`Mesh::groups_for`]).
+    pub mesh: Mesh,
     /// Facts added since construction (monotone counter for fixpoints).
     pub fact_count: usize,
 }
 
 impl RelEngine {
-    /// New engine for a `cores`-wide mesh.
+    /// New engine for a flat `cores`-wide mesh.
     pub fn new(cores: u32) -> RelEngine {
+        RelEngine::with_mesh(Mesh::flat(cores))
+    }
+
+    /// New engine over an explicit mesh geometry.
+    pub fn with_mesh(mesh: Mesh) -> RelEngine {
         RelEngine {
             store: AtomStore::new(),
             facts: FxHashMap::default(),
             keys: FxHashSet::default(),
             percore: FxHashMap::default(),
-            cores,
+            cores: mesh.total(),
+            mesh,
             fact_count: 0,
         }
+    }
+
+    /// The mesh-axis subset a collective's replica groups span, if they
+    /// match one (memo-free: meshes are tiny). Normalized: size-1 axes
+    /// never appear in the returned mask.
+    fn groups_axes(&self, groups: &ReplicaGroups) -> Option<AxesMask> {
+        self.mesh.axes_of_groups(groups).map(|m| self.mesh.normalize_mask(m))
+    }
+
+    /// Mask comparison modulo degenerate axes.
+    fn same_axes(&self, a: AxesMask, b: AxesMask) -> bool {
+        self.mesh.normalize_mask(a) == self.mesh.normalize_mask(b)
     }
 
     /// Add a fact (deduped). Returns true when new.
@@ -196,7 +225,8 @@ impl RelEngine {
     // Input registration (§5.2.1)
     // ---------------------------------------------------------------
 
-    /// Register `dist` param as `base` param sharded along `dim`.
+    /// Register `dist` param as `base` param sharded along `dim` over mesh
+    /// axis `axis` (`parts` must equal that axis's size).
     pub fn register_shard(
         &mut self,
         eg: &EGraph,
@@ -205,6 +235,7 @@ impl RelEngine {
         base_dims: &[i64],
         dim: usize,
         parts: u32,
+        axis: usize,
     ) {
         let base_expr = AxisExpr::from_shape(&mut self.store, base_dims);
         let axis_atom = base_expr.axes[dim][0];
@@ -212,6 +243,7 @@ impl RelEngine {
             .store
             .split_leaf(axis_atom, &[parts as i64, base_dims[dim] / parts as i64])
             .expect("shard split");
+        let _ = self.store.set_mesh_axis(kids[0], axis as u8); // fresh atom: always tags
         let mut dist_axes = base_expr.axes.clone();
         dist_axes[dim] = vec![kids[1]];
         let fact = Fact {
@@ -221,6 +253,43 @@ impl RelEngine {
             dist_expr: AxisExpr::from_axes(dist_axes),
             shard_atoms: vec![kids[0]],
             partial: None,
+            partial_axes: 0,
+        };
+        self.add_fact(eg, fact);
+    }
+
+    /// Register `dist` param as `base` sharded along several dims at once
+    /// — `(dim, parts, axis)` entries over distinct dims and axes (the
+    /// dp×tp boundary form).
+    pub fn register_mesh_shard(
+        &mut self,
+        eg: &EGraph,
+        base: Id,
+        dist: Id,
+        base_dims: &[i64],
+        entries: &[(usize, u32, usize)],
+    ) {
+        let base_expr = AxisExpr::from_shape(&mut self.store, base_dims);
+        let mut dist_axes = base_expr.axes.clone();
+        let mut shard_atoms = Vec::with_capacity(entries.len());
+        for &(dim, parts, axis) in entries {
+            let axis_atom = base_expr.axes[dim][0];
+            let kids = self
+                .store
+                .split_leaf(axis_atom, &[parts as i64, base_dims[dim] / parts as i64])
+                .expect("mesh shard split");
+            let _ = self.store.set_mesh_axis(kids[0], axis as u8); // fresh atom
+            dist_axes[dim] = vec![kids[1]];
+            shard_atoms.push(kids[0]);
+        }
+        let fact = Fact {
+            base,
+            dist,
+            base_expr,
+            dist_expr: AxisExpr::from_axes(dist_axes),
+            shard_atoms,
+            partial: None,
+            partial_axes: 0,
         };
         self.add_fact(eg, fact);
     }
@@ -231,8 +300,9 @@ impl RelEngine {
         self.add_fact(eg, Fact::duplicate(base, dist, expr));
     }
 
-    /// Register `dist` param as a per-core partial of `base` (layer
-    /// boundaries can carry undischarged partials forward).
+    /// Register `dist` param as a per-core partial of `base` over the
+    /// masked mesh axes (layer boundaries can carry undischarged partials
+    /// forward).
     pub fn register_partial(
         &mut self,
         eg: &EGraph,
@@ -240,6 +310,7 @@ impl RelEngine {
         dist: Id,
         dims: &[i64],
         kind: ReduceKind,
+        axes: AxesMask,
     ) {
         let expr = AxisExpr::from_shape(&mut self.store, dims);
         let fact = Fact {
@@ -249,6 +320,7 @@ impl RelEngine {
             dist_expr: expr,
             shard_atoms: vec![],
             partial: Some(kind),
+            partial_axes: if axes == 0 { 1 } else { axes },
         };
         self.add_fact(eg, fact);
     }
@@ -358,6 +430,7 @@ impl RelEngine {
                         dist_expr: fact.dist_expr.clone(),
                         shard_atoms: fact.shard_atoms.clone(),
                         partial: fact.partial,
+                        partial_axes: fact.partial_axes,
                     };
                     if self.add_fact(eg, f) {
                         new += 1;
@@ -456,14 +529,21 @@ impl RelEngine {
                 return None;
             }
         }
-        // partial combination table
+        // partial combination table; a pending reduction only combines
+        // with another pending reduction over the SAME mesh axes — summing
+        // a dp-partial into a tp-partial has no linear-algebra identity
         let partials: Vec<Option<ReduceKind>> = combo.iter().map(|f| f.partial).collect();
-        let partial = match &node.op {
+        let masks: Vec<AxesMask> = combo.iter().map(|f| f.partial_axes).collect();
+        let same_mask = |want: AxesMask| masks.iter().all(|&m| m == want);
+        let (partial, partial_axes) = match &node.op {
             Op::Add | Op::Sub => {
                 if partials.iter().all(|p| *p == Some(ReduceKind::Add)) {
-                    Some(ReduceKind::Add)
+                    if !same_mask(masks[0]) {
+                        return None;
+                    }
+                    (Some(ReduceKind::Add), masks[0])
                 } else if partials.iter().all(|p| p.is_none()) {
-                    None
+                    (None, 0)
                 } else {
                     return None; // partial + non-partial: the missing-allreduce bug
                 }
@@ -471,15 +551,15 @@ impl RelEngine {
             Op::Mul | Op::Div => {
                 let n_partial = partials.iter().filter(|p| p.is_some()).count();
                 match n_partial {
-                    0 => None,
+                    0 => (None, 0),
                     1 if partials[0] == Some(ReduceKind::Add) && matches!(node.op, Op::Mul | Op::Div) => {
                         // (Σ xᵣ) ⊙ y = Σ (xᵣ ⊙ y) when y is duplicate
-                        Some(ReduceKind::Add)
+                        (Some(ReduceKind::Add), masks[0])
                     }
                     1 if partials.last() == Some(&Some(ReduceKind::Add))
                         && matches!(node.op, Op::Mul) =>
                     {
-                        Some(ReduceKind::Add)
+                        (Some(ReduceKind::Add), *masks.last().unwrap_or(&0))
                     }
                     _ => return None,
                 }
@@ -487,9 +567,12 @@ impl RelEngine {
             Op::Max | Op::Min => {
                 let want = if matches!(node.op, Op::Max) { ReduceKind::Max } else { ReduceKind::Min };
                 if partials.iter().all(|p| p.is_none()) {
-                    None
+                    (None, 0)
                 } else if partials.iter().all(|p| *p == Some(want)) {
-                    Some(want)
+                    if !same_mask(masks[0]) {
+                        return None;
+                    }
+                    (Some(want), masks[0])
                 } else {
                     return None;
                 }
@@ -498,7 +581,7 @@ impl RelEngine {
                 if partials.iter().any(|p| p.is_some()) {
                     return None;
                 }
-                None
+                (None, 0)
             }
         };
         // baseline partner
@@ -511,6 +594,7 @@ impl RelEngine {
             dist_expr: combo[lead].dist_expr.clone(),
             shard_atoms: combo[lead].shard_atoms.clone(),
             partial,
+            partial_axes,
         })
     }
 
@@ -618,12 +702,13 @@ impl RelEngine {
         let fy_list = self.facts_for(eg, ins[1]);
         for fx in &fx_list {
             for fy in &fy_list {
-                // partial handling: at most one Add-partial operand
+                // partial handling: at most one Add-partial operand; its
+                // axes mask rides along so the eventual discharge targets
+                // the right subgroup
                 let partial_in = match (fx.partial, fy.partial) {
                     (None, None) => None,
-                    (Some(ReduceKind::Add), None) | (None, Some(ReduceKind::Add)) => {
-                        Some(ReduceKind::Add)
-                    }
+                    (Some(ReduceKind::Add), None) => Some((ReduceKind::Add, fx.partial_axes)),
+                    (None, Some(ReduceKind::Add)) => Some((ReduceKind::Add, fy.partial_axes)),
                     _ => continue,
                 };
                 // find baseline dot candidates over (fx.base, fy.base)
@@ -675,7 +760,7 @@ impl RelEngine {
         fy: &Fact,
         d_dims: (&[usize], &[usize], &[usize], &[usize]),
         b_dims: (&[usize], &[usize], &[usize], &[usize]),
-        partial_in: Option<ReduceKind>,
+        partial_in: Option<(ReduceKind, AxesMask)>,
     ) -> Option<Fact> {
         let (dlc, drc, dlb, drb) = d_dims;
         let (blc, brc, blb, brb) = b_dims;
@@ -781,14 +866,25 @@ impl RelEngine {
             .collect();
         shard_atoms.sort_unstable();
         shard_atoms.dedup();
-        // contracted shard atoms induce a pending add-reduction
-        let partial = if !missing_l.is_empty() {
+        // contracted shard atoms induce a pending add-reduction over their
+        // mesh axes, folded into any incoming partial's axes; a contracted
+        // axis that is ALSO carried in as a pending sum has no sound
+        // combination (it would double-count that axis) — bail
+        let (partial, partial_axes) = if !missing_l.is_empty() {
+            let contracted =
+                axes_of(&self.store, &missing_l) | axes_of(&self.store, &missing_r);
             match partial_in {
-                None | Some(ReduceKind::Add) => Some(ReduceKind::Add),
-                _ => return None,
+                None => (Some(ReduceKind::Add), contracted),
+                Some((ReduceKind::Add, in_axes)) if contracted & in_axes == 0 => {
+                    (Some(ReduceKind::Add), contracted | in_axes)
+                }
+                Some(_) => return None,
             }
         } else {
-            partial_in
+            match partial_in {
+                None => (None, 0),
+                Some((k, m)) => (Some(k), m),
+            }
         };
         // Canonicalize with FRESH atoms per output axis. Without this, the
         // two operands' atoms mix in one expression, and q·kᵀ-style dots
@@ -799,7 +895,15 @@ impl RelEngine {
         let (base_expr, dist_expr, shard_atoms) =
             self.canonicalize_axes(&base_axes, &dist_axes, &shard_atoms)?;
 
-        Some(Fact { base: partner, dist: dclass, base_expr, dist_expr, shard_atoms, partial })
+        Some(Fact {
+            base: partner,
+            dist: dclass,
+            base_expr,
+            dist_expr,
+            shard_atoms,
+            partial,
+            partial_axes,
+        })
     }
 
     /// Rebuild `(base, dist)` axis lists over fresh atoms, preserving the
@@ -833,21 +937,29 @@ impl RelEngine {
             if present != dleaves {
                 return None; // per-axis reordering: keep original exprs? bail
             }
-            // segment sizes, alternating (is_shard, size)
-            let mut segments: Vec<(bool, i64)> = Vec::new();
+            // segment sizes, alternating (shard mesh-axis or None, size);
+            // adjacent shard leaves merge only when they span the SAME
+            // mesh axis — a dp·tp-mixed segment has no single digit to
+            // re-derive, so multi-axis segments stay separate
+            let mut segments: Vec<(Option<u8>, i64)> = Vec::new();
             for &a in &bleaves {
-                let is_shard = shard_atoms.contains(&a);
+                let tag = if shard_atoms.contains(&a) {
+                    Some(self.store.mesh_axis(a))
+                } else {
+                    None
+                };
                 let size = self.store.size(a);
                 match segments.last_mut() {
-                    Some((s, sz)) if *s == is_shard => *sz *= size,
-                    _ => segments.push((is_shard, size)),
+                    Some((s, sz)) if *s == tag => *sz *= size,
+                    _ => segments.push((tag, size)),
                 }
             }
             let total: i64 = segments.iter().map(|(_, s)| *s).product::<i64>().max(1);
             let fresh = self.store.fresh(total);
             if segments.len() <= 1 {
                 // wholly present or wholly distributed
-                if segments.first().map(|(s, _)| *s).unwrap_or(false) {
+                if let Some(Some(ax)) = segments.first().map(|(s, _)| *s) {
+                    let _ = self.store.set_mesh_axis(fresh, ax); // fresh atom: always tags
                     new_base.push(vec![fresh]);
                     new_dist.push(vec![]);
                     new_shards.push(fresh);
@@ -860,8 +972,9 @@ impl RelEngine {
             let sizes: Vec<i64> = segments.iter().map(|(_, s)| *s).collect();
             let kids = self.store.split_leaf(fresh, &sizes)?;
             let mut daxis_new = Vec::new();
-            for ((is_shard, _), kid) in segments.iter().zip(kids) {
-                if *is_shard {
+            for ((tag, _), kid) in segments.iter().zip(kids) {
+                if let Some(ax) = tag {
+                    let _ = self.store.set_mesh_axis(kid, *ax); // fresh parent: kids are fresh
                     new_shards.push(kid);
                 } else {
                     daxis_new.push(kid);
@@ -960,6 +1073,7 @@ impl RelEngine {
                 dist_expr: AxisExpr::from_axes(dist_axes),
                 shard_atoms: f.shard_atoms.clone(),
                 partial: None,
+                partial_axes: 0,
             };
             derived |= self.add_fact(eg, nf);
         }
@@ -1007,6 +1121,7 @@ impl RelEngine {
             let lead = &facts[0];
             if facts.iter().any(|f| {
                 f.partial != lead.partial
+                    || f.partial_axes != lead.partial_axes
                     || f.shard_atoms != lead.shard_atoms
                     || f.base_expr.rank() != lead.base_expr.rank()
                     || f.dist_expr.rank() != lead.dist_expr.rank()
@@ -1042,6 +1157,7 @@ impl RelEngine {
                 dist_expr: AxisExpr::from_axes(dist_axes),
                 shard_atoms: lead.shard_atoms.clone(),
                 partial: lead.partial,
+                partial_axes: lead.partial_axes,
             };
             derived |= self.add_fact(eg, nf);
         }
@@ -1071,11 +1187,19 @@ impl RelEngine {
                 }
             }
             let mut candidates = vec![proto.clone()];
+            let mut axis_sizes: Vec<i64> =
+                self.mesh.axes.iter().map(|&a| a as i64).filter(|&a| a > 1).collect();
+            axis_sizes.sort_unstable();
+            axis_sizes.dedup();
             for i in 0..node.shape.rank() {
                 if !mapped.contains(&i) {
-                    let mut d = proto.clone();
-                    d[i] *= self.cores as i64;
-                    candidates.push(d);
+                    // a new axis may be born sharded over any single mesh
+                    // axis (the whole mesh on flat graphs)
+                    for &s in &axis_sizes {
+                        let mut d = proto.clone();
+                        d[i] *= s;
+                        candidates.push(d);
+                    }
                 }
             }
             let partner = candidates.into_iter().find_map(|cand_dims| {
@@ -1104,50 +1228,104 @@ impl RelEngine {
                 dist_axes[m] = f.dist_expr.axes[i].clone();
                 filled[m] = true;
             }
-            let mut shard_atoms = f.shard_atoms.clone();
+            // Born-sharded dims may span ANY mesh axis of the right size —
+            // a broadcast-born axis is constant along itself, so every
+            // choice is sound. Emit one fact per axis assignment: when two
+            // mesh axes share a size (dp2·tp2) the consumer's signature
+            // match picks the fact whose tag lines up.
+            let mut choices: Vec<(usize, Vec<u8>)> = Vec::new(); // (dim, axis options; empty = fresh shared)
             let mut ok = true;
             for i in 0..rank {
-                if !filled[i] {
-                    let dist_size = node.shape.dims[i];
-                    let base_size = bnode_shape
-                        .as_ref()
-                        .map(|s| s.dims[i])
-                        .unwrap_or(dist_size);
-                    if base_size == dist_size {
-                        let fresh = self.store.fresh(dist_size);
-                        base_axes[i] = vec![fresh];
-                        dist_axes[i] = vec![fresh];
-                    } else if base_size == dist_size * self.cores as i64 {
-                        // the baseline broadcasts to the full extent while
-                        // the distributed side broadcasts to the local
-                        // shard: the new axis is born sharded (e.g. a
-                        // row-max broadcast against seq-sharded scores)
-                        let fresh = self.store.fresh(base_size);
-                        let kids = self
-                            .store
-                            .split_leaf(fresh, &[self.cores as i64, dist_size])
-                            .expect("fresh atom split");
-                        base_axes[i] = vec![fresh];
-                        dist_axes[i] = vec![kids[1]];
-                        shard_atoms.push(kids[0]);
-                    } else {
+                if filled[i] {
+                    continue;
+                }
+                let dist_size = node.shape.dims[i];
+                let base_size =
+                    bnode_shape.as_ref().map(|s| s.dims[i]).unwrap_or(dist_size);
+                if base_size == dist_size {
+                    choices.push((i, Vec::new()));
+                } else if dist_size > 0 && base_size % dist_size == 0 {
+                    let ratio = base_size / dist_size;
+                    let options: Vec<u8> = self
+                        .mesh
+                        .axes
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &a)| a as i64 == ratio)
+                        .map(|(k, _)| k as u8)
+                        .collect();
+                    if options.is_empty() {
                         ok = false;
                         break;
                     }
+                    choices.push((i, options));
+                } else {
+                    ok = false;
+                    break;
                 }
             }
             if !ok {
                 continue;
             }
-            let nf = Fact {
-                base: partner,
-                dist: dclass,
-                base_expr: AxisExpr::from_axes(base_axes),
-                dist_expr: AxisExpr::from_axes(dist_axes),
-                shard_atoms,
-                partial: f.partial,
-            };
-            derived |= self.add_fact(eg, nf);
+            // cartesian product over the (tiny) per-dim axis options
+            let mut assignments: Vec<Vec<(usize, Option<u8>)>> = vec![Vec::new()];
+            for (i, options) in &choices {
+                let mut next = Vec::new();
+                for asg in &assignments {
+                    if options.is_empty() {
+                        let mut a = asg.clone();
+                        a.push((*i, None));
+                        next.push(a);
+                    } else {
+                        for &k in options {
+                            let mut a = asg.clone();
+                            a.push((*i, Some(k)));
+                            next.push(a);
+                        }
+                    }
+                }
+                assignments = next;
+                if assignments.len() > 16 {
+                    assignments.truncate(16); // combinatorial backstop
+                }
+            }
+            for asg in assignments {
+                let mut base_axes = base_axes.clone();
+                let mut dist_axes = dist_axes.clone();
+                let mut shard_atoms = f.shard_atoms.clone();
+                for &(i, axis) in &asg {
+                    let dist_size = node.shape.dims[i];
+                    match axis {
+                        None => {
+                            let fresh = self.store.fresh(dist_size);
+                            base_axes[i] = vec![fresh];
+                            dist_axes[i] = vec![fresh];
+                        }
+                        Some(k) => {
+                            let ratio = self.mesh.axes[k as usize] as i64;
+                            let fresh = self.store.fresh(ratio * dist_size);
+                            let kids = self
+                                .store
+                                .split_leaf(fresh, &[ratio, dist_size])
+                                .expect("fresh atom split");
+                            let _ = self.store.set_mesh_axis(kids[0], k); // fresh atom
+                            base_axes[i] = vec![fresh];
+                            dist_axes[i] = vec![kids[1]];
+                            shard_atoms.push(kids[0]);
+                        }
+                    }
+                }
+                let nf = Fact {
+                    base: partner,
+                    dist: dclass,
+                    base_expr: AxisExpr::from_axes(base_axes),
+                    dist_expr: AxisExpr::from_axes(dist_axes),
+                    shard_atoms,
+                    partial: f.partial,
+                    partial_axes: f.partial_axes,
+                };
+                derived |= self.add_fact(eg, nf);
+            }
         }
         derived
     }
@@ -1183,17 +1361,19 @@ impl RelEngine {
                 continue;
             };
             // reduced shard atoms become a pending cross-core reduction
+            // over their mesh axes (joined with any incoming pending axes)
             let reduced_shards: Vec<_> = dims
                 .iter()
                 .flat_map(|&d| base_exp.axes[d].clone())
                 .filter(|a| f.shard_atoms.contains(a))
                 .collect();
-            let partial = if reduced_shards.is_empty() {
-                f.partial
+            let (partial, partial_axes) = if reduced_shards.is_empty() {
+                (f.partial, f.partial_axes)
             } else {
+                let reduced_axes = axes_of(&self.store, &reduced_shards);
                 match f.partial {
-                    None => Some(*kind),
-                    Some(k) if k == *kind => Some(k),
+                    None => (Some(*kind), reduced_axes),
+                    Some(k) if k == *kind => (Some(k), f.partial_axes | reduced_axes),
                     _ => continue,
                 }
             };
@@ -1219,6 +1399,7 @@ impl RelEngine {
                 dist_expr: AxisExpr::from_axes(keep(&f.dist_expr)),
                 shard_atoms,
                 partial,
+                partial_axes,
             };
             derived |= self.add_fact(eg, nf);
         }
@@ -1235,18 +1416,34 @@ impl RelEngine {
         groups: &ReplicaGroups,
     ) -> bool {
         let full_mesh = groups.0.len() == 1 && groups.0[0].len() == self.cores as usize;
+        // which mesh-axis subset do these groups reduce over? (None for
+        // groups matching no subset — the wrong-replica-group bug family)
+        let group_axes = self.groups_axes(groups);
         let mut derived = false;
         for f in self.facts_for(eg, xc) {
             match f.partial {
-                Some(k) if k == kind && full_mesh => {
-                    // collective discharge (Table 1): partial → resolved
-                    let nf = Fact { dist: dclass, partial: None, ..f.clone() };
+                Some(k)
+                    if k == kind
+                        && group_axes
+                            .is_some_and(|ga| self.same_axes(ga, f.partial_axes)) =>
+                {
+                    // collective discharge (Table 1): a pending reduction
+                    // over axes S resolves iff the groups are exactly the
+                    // cores varying on S — a subgroup all-reduce over the
+                    // tp axis discharges a tp-partial and nothing else.
+                    // Within each group the reduce spans every pending
+                    // digit once, and cores in different groups hold the
+                    // same discharged value afterwards.
+                    let nf =
+                        Fact { dist: dclass, partial: None, partial_axes: 0, ..f.clone() };
                     derived |= self.add_fact(eg, nf);
                 }
                 None if matches!(kind, ReduceKind::Max | ReduceKind::Min)
-                    && f.shard_atoms.is_empty() =>
+                    && f.shard_atoms.is_empty()
+                    && group_axes.is_some() =>
                 {
-                    // max/min over identical replicas is a no-op
+                    // max/min over identical replicas is a no-op (any
+                    // axis-shaped groups: replicas agree everywhere)
                     let nf = Fact { dist: dclass, ..f.clone() };
                     derived |= self.add_fact(eg, nf);
                 }
@@ -1289,15 +1486,38 @@ impl RelEngine {
         dim: usize,
         groups: &ReplicaGroups,
     ) -> bool {
-        if !(groups.0.len() == 1 && groups.0[0].len() == self.cores as usize) {
+        // all-gather concatenates in group-member order, so the raw
+        // listing must be the canonical ascending form of some axis subset
+        // (ascending member order = ascending digit order along the axis)
+        let Some(group_axes) = self.groups_axes(groups) else { return false };
+        if *groups != self.mesh.groups_for(group_axes) {
             return false;
         }
         let mut derived = false;
         for f in self.facts_for(eg, xc) {
-            if f.shard_atoms.len() != 1 {
+            // a pending reduction over the gathered axes would interleave
+            // un-summed contributions into the concat — no sound fact
+            if f.partial.is_some()
+                && self.mesh.normalize_mask(f.partial_axes) & group_axes != 0
+            {
                 continue;
             }
-            let s = f.shard_atoms[0];
+            // exactly one shard atom on the gathered axes; shards on other
+            // mesh axes ride through untouched (a dp-sharded activation
+            // keeps its dp shard while its tp shard is gathered)
+            let (on_axis, off_axis): (Vec<_>, Vec<_>) = f
+                .shard_atoms
+                .iter()
+                .copied()
+                .partition(|&a| {
+                    self.mesh
+                        .normalize_mask(1 << self.store.mesh_axis(a))
+                        == group_axes
+                });
+            if on_axis.len() != 1 {
+                continue;
+            }
+            let s = on_axis[0];
             // gathered axis becomes [s ∥ old factors]
             let mut dist_axes = f.dist_expr.axes.clone();
             let mut new_axis = vec![s];
@@ -1308,8 +1528,9 @@ impl RelEngine {
                 dist: dclass,
                 base_expr: f.base_expr.clone(),
                 dist_expr: AxisExpr::from_axes(dist_axes),
-                shard_atoms: vec![],
+                shard_atoms: off_axis,
                 partial: f.partial,
+                partial_axes: f.partial_axes,
             };
             derived |= self.add_fact(eg, nf);
         }
@@ -1327,18 +1548,35 @@ impl RelEngine {
         dim: usize,
         groups: &ReplicaGroups,
     ) -> bool {
-        if !(groups.0.len() == 1 && groups.0[0].len() == self.cores as usize) {
+        // scatter order is group-member order: require the canonical
+        // listing of a single mesh axis (the common subgroup shape; a
+        // multi-axis scatter has no single digit to index the shards by)
+        let Some(group_axes) = self.groups_axes(groups) else { return false };
+        if *groups != self.mesh.groups_for(group_axes) {
             return false;
         }
+        let scatter_axis = match (0..self.mesh.rank())
+            .filter(|&k| group_axes & (1 << k) != 0)
+            .collect::<Vec<_>>()
+            .as_slice()
+        {
+            [k] => *k,
+            _ => return false,
+        };
+        let c = self.mesh.size(scatter_axis) as i64;
         let mut derived = false;
         for f in self.facts_for(eg, xc) {
-            if f.partial != Some(kind) {
+            // discharges a pending `kind`-reduction spanning exactly the
+            // group axis (reduce within the group, then each member keeps
+            // its digit's slice)
+            if f.partial != Some(kind)
+                || !self.same_axes(f.partial_axes, group_axes)
+            {
                 continue;
             }
-            // scatter dim: split its leading factor into [cores, rest]
+            // scatter dim: split its leading factor into [axis size, rest]
             let axis = f.dist_expr.axes[dim].clone();
             let Some(&lead) = axis.first() else { continue };
-            let c = self.cores as i64;
             let lead_size = self.store.size(lead);
             if lead_size % c != 0 {
                 continue;
@@ -1358,6 +1596,11 @@ impl RelEngine {
                     match self.store.take_product(&mut q, c) {
                         Some(taken) if taken.len() == 1 => {
                             let shard = taken[0];
+                            if !self.store.set_mesh_axis(shard, scatter_axis as u8) {
+                                // hash-consed atom already spans another
+                                // axis: no sound derivation here
+                                continue;
+                            }
                             let mut rest: Vec<_> = q.into_iter().collect();
                             rest.extend(axis.iter().skip(leaves.len()).copied());
                             let mut dist_axes = f.dist_expr.axes.clone();
@@ -1371,6 +1614,7 @@ impl RelEngine {
                                 dist_expr: AxisExpr::from_axes(dist_axes),
                                 shard_atoms,
                                 partial: None,
+                                partial_axes: 0,
                             };
                             derived |= self.add_fact(eg, nf);
                         }
@@ -1379,6 +1623,9 @@ impl RelEngine {
                     continue;
                 }
             };
+            if !self.store.set_mesh_axis(kids[0], scatter_axis as u8) {
+                continue; // shared split child already spans another axis
+            }
             let mut new_axis = vec![kids[1]];
             new_axis.extend(leaves[1..].iter().copied());
             new_axis.extend(axis.iter().skip(1).copied());
@@ -1393,6 +1640,7 @@ impl RelEngine {
                 dist_expr: AxisExpr::from_axes(dist_axes),
                 shard_atoms,
                 partial: None,
+                partial_axes: 0,
             };
             derived |= self.add_fact(eg, nf);
         }
@@ -1410,16 +1658,35 @@ impl RelEngine {
         concat_dim: usize,
         groups: &ReplicaGroups,
     ) -> bool {
-        if !(groups.0.len() == 1 && groups.0[0].len() == self.cores as usize) {
+        // order-sensitive (peer rank = chunk index): canonical listing of
+        // a single mesh axis required
+        let Some(group_axes) = self.groups_axes(groups) else { return false };
+        if *groups != self.mesh.groups_for(group_axes) {
             return false;
         }
+        let a2a_axis = match (0..self.mesh.rank())
+            .filter(|&k| group_axes & (1 << k) != 0)
+            .collect::<Vec<_>>()
+            .as_slice()
+        {
+            [k] => *k,
+            _ => return false,
+        };
+        let c = self.mesh.size(a2a_axis) as i64;
         let mut derived = false;
         for f in self.facts_for(eg, xc) {
             if f.shard_atoms.len() != 1 || f.partial.is_some() {
                 continue;
             }
             let s = f.shard_atoms[0];
-            let c = self.cores as i64;
+            // the exchanged shard must live on the group axis
+            if !self
+                .mesh
+                .normalize_mask(1 << self.store.mesh_axis(s))
+                .eq(&group_axes)
+            {
+                continue;
+            }
             // split the leading factor of split_dim
             let axis = f.dist_expr.axes[split_dim].clone();
             let leaves: Vec<_> = axis.iter().flat_map(|&a| self.store.expand(a)).collect();
@@ -1431,6 +1698,9 @@ impl RelEngine {
                 Some(k) => k,
                 None => continue,
             };
+            if !self.store.set_mesh_axis(kids[0], a2a_axis as u8) {
+                continue; // shared split child already spans another axis
+            }
             let mut split_axis = vec![kids[1]];
             split_axis.extend(leaves[1..].iter().copied());
             let mut dist_axes = f.dist_expr.axes.clone();
@@ -1446,6 +1716,7 @@ impl RelEngine {
                 dist_expr: AxisExpr::from_axes(dist_axes),
                 shard_atoms: vec![kids[0]],
                 partial: None,
+                partial_axes: 0,
             };
             derived |= self.add_fact(eg, nf);
         }
@@ -1491,15 +1762,24 @@ impl RelEngine {
             }
             let Some(dim) = shard_axis else { continue };
             let base_dims = f.base_expr.dims(&self.store);
-            let local = base_dims[dim] / self.cores as i64;
+            // slice index on core r = r's digit along the shard atom's
+            // mesh axis (the raw core id on flat meshes)
+            let mesh_axis = self.store.mesh_axis(s) as usize;
+            if mesh_axis >= self.mesh.rank()
+                || self.mesh.size(mesh_axis) as i64 != self.store.size(s)
+            {
+                continue;
+            }
+            let local = base_dims[dim] / self.store.size(s);
             let rank = base_dims.len();
             let mut bases = Vec::with_capacity(self.cores as usize);
             let mut ok = true;
-            for r in 0..self.cores as i64 {
+            for r in 0..self.cores {
+                let d = self.mesh.digit(r, mesh_axis) as i64;
                 let mut starts = vec![0i64; rank];
                 let mut limits = base_dims.clone();
-                starts[dim] = r * local;
-                limits[dim] = (r + 1) * local;
+                starts[dim] = d * local;
+                limits[dim] = (d + 1) * local;
                 let op = Op::Slice { starts, limits, strides: vec![1; rank] };
                 match lookup_base(eg, &ENode::new(op, vec![f.base])) {
                     Some(id) => bases.push(id),

@@ -1,18 +1,22 @@
 //! Relation facts between baseline and distributed e-classes.
 
 use crate::egraph::Id;
-use crate::ir::ReduceKind;
+use crate::ir::{AxesMask, ReduceKind};
 use crate::layout::{AtomId, AtomStore, AxisExpr};
 
 /// A relation between baseline class `base` and distributed class `dist`.
 ///
-/// Semantics (per core `r` of `c` cores):
+/// Semantics (per core `r` of the mesh):
 ///
 /// ```text
 /// restore(d_r) := inverse-layout of d_r placed into the baseline frame,
-///                 with the shard atoms filled at index r
+///                 with each shard atom filled at r's digit along the
+///                 atom's mesh axis
 /// partial == None  =>  for all r:  restore(d_r) == slice_r(base)
-/// partial == Some(op) => op-reduce over r of restore(d_r) == base
+/// partial == Some(op) => op-reducing restore(d_r) over each group of
+///                        cores that agree on every axis OUTSIDE
+///                        partial_axes yields base — i.e. the pending
+///                        reduction spans exactly the masked axes
 /// ```
 ///
 /// * `shard_atoms.is_empty() && partial.is_none() && identity layout`
@@ -20,6 +24,9 @@ use crate::layout::{AtomId, AtomStore, AxisExpr};
 /// * `shard_atoms == [s]` ⇒ `sharded(x, x', dim-of-s, c)`.
 /// * `partial == Some(Add)` ⇒ `partial(x, x', c, add)`.
 /// * non-identity layout ⇒ `layout(x, x', ℓ, c)` (combined with the above).
+///
+/// On a flat 1-axis mesh `partial_axes` is always `1` and every shard
+/// atom's axis is `0` — the pre-mesh semantics exactly.
 #[derive(Clone, Debug)]
 pub struct Fact {
     /// Baseline e-class.
@@ -32,10 +39,14 @@ pub struct Fact {
     /// atoms — minus the shard atoms.
     pub dist_expr: AxisExpr,
     /// Atoms of `base_expr` that are distributed across the core mesh
-    /// (absent from `dist_expr`).
+    /// (absent from `dist_expr`). Each atom's mesh axis lives in the
+    /// [`AtomStore`] (`mesh_axis`).
     pub shard_atoms: Vec<AtomId>,
     /// Pending cross-core reduction.
     pub partial: Option<ReduceKind>,
+    /// Mesh axes the pending reduction spans (meaningful only when
+    /// `partial.is_some()`; `0` otherwise).
+    pub partial_axes: AxesMask,
 }
 
 impl Fact {
@@ -48,6 +59,7 @@ impl Fact {
             dist_expr: expr,
             shard_atoms: vec![],
             partial: None,
+            partial_axes: 0,
         }
     }
 
@@ -88,12 +100,18 @@ impl Fact {
                     .collect()
             })
             .collect();
-        let shard_pos: Vec<(u32, i64)> = self
+        // the mesh axis is part of the positional encoding: a dp-shard and
+        // a tp-shard of equal size at the same position are NOT compatible
+        // (their per-core slice indices follow different mesh digits)
+        let shard_pos: Vec<(u32, i64, u8)> = self
             .shard_atoms
             .iter()
-            .map(|&a| pos(a).unwrap_or((u32::MAX, store.size(a))))
+            .map(|&a| {
+                let (p, s) = pos(a).unwrap_or((u32::MAX, store.size(a)));
+                (p, s, store.mesh_axis(a))
+            })
             .collect();
-        Signature { axes, shard_pos, partial: self.partial }
+        Signature { axes, shard_pos, partial: self.partial, partial_axes: self.partial_axes }
     }
 
     /// Dedup key (canonical class ids + signature).
@@ -108,10 +126,13 @@ impl Fact {
 pub struct Signature {
     /// Per distributed axis: (position in base flat, size) of each factor.
     pub axes: Vec<Vec<(u32, i64)>>,
-    /// Positions of the shard atoms.
-    pub shard_pos: Vec<(u32, i64)>,
+    /// Positions of the shard atoms: (position in base flat, size, mesh
+    /// axis).
+    pub shard_pos: Vec<(u32, i64, u8)>,
     /// Pending reduction.
     pub partial: Option<ReduceKind>,
+    /// Mesh axes the pending reduction spans.
+    pub partial_axes: AxesMask,
 }
 
 impl Signature {
@@ -186,11 +207,12 @@ mod tests {
             dist_expr: dist,
             shard_atoms: vec![kids[0]],
             partial: None,
+            partial_axes: 0,
         };
         assert!(!f.is_duplicate(&store));
         let sig = f.signature(&store);
         assert!(!sig.is_identity());
-        assert_eq!(sig.shard_pos, vec![(1, 4)]);
+        assert_eq!(sig.shard_pos, vec![(1, 4, 0)]);
     }
 
     #[test]
@@ -205,6 +227,7 @@ mod tests {
             dist_expr: dist,
             shard_atoms: vec![],
             partial: None,
+            partial_axes: 0,
         };
         assert!(!f.is_duplicate(&store));
         assert!(f.is_layout_duplicate(&store));
@@ -223,6 +246,7 @@ mod tests {
             dist_expr: bx.transpose(&[1, 0]).unwrap(),
             shard_atoms: vec![],
             partial: None,
+            partial_axes: 0,
         };
         let fy = Fact {
             base: Id(2),
@@ -231,6 +255,7 @@ mod tests {
             dist_expr: by.transpose(&[1, 0]).unwrap(),
             shard_atoms: vec![],
             partial: None,
+            partial_axes: 0,
         };
         assert_eq!(fx.signature(&store), fy.signature(&store));
         // and a differently-transposed one differs
@@ -241,6 +266,7 @@ mod tests {
             dist_expr: by,
             shard_atoms: vec![],
             partial: None,
+            partial_axes: 0,
         };
         assert_ne!(fx.signature(&store), fz.signature(&store));
     }

@@ -295,14 +295,34 @@ fn rel_to_json(rel: &RelSummary) -> Json {
         RelSummary::Duplicate => {
             Json::Obj(vec![("rel".into(), Json::Str("duplicate".into()))])
         }
-        RelSummary::Sharded { dim, parts } => Json::Obj(vec![
+        RelSummary::Sharded { dim, parts, axis } => Json::Obj(vec![
             ("rel".into(), Json::Str("sharded".into())),
             ("dim".into(), Json::Num(*dim as f64)),
             ("parts".into(), Json::Num(*parts as f64)),
+            ("axis".into(), Json::Num(*axis as f64)),
         ]),
-        RelSummary::Partial { kind } => Json::Obj(vec![
+        RelSummary::MeshSharded { entries } => Json::Obj(vec![
+            ("rel".into(), Json::Str("mesh-sharded".into())),
+            (
+                "entries".into(),
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|&(d, p, a)| {
+                            Json::Arr(vec![
+                                Json::Num(d as f64),
+                                Json::Num(p as f64),
+                                Json::Num(a as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        RelSummary::Partial { kind, axes } => Json::Obj(vec![
             ("rel".into(), Json::Str("partial".into())),
             ("reduce".into(), Json::Str(reduce_label(*kind).into())),
+            ("axes".into(), Json::Num(*axes as f64)),
         ]),
     }
 }
@@ -314,11 +334,40 @@ fn rel_from_json(doc: &Json) -> std::result::Result<RelSummary, String> {
             dim: doc.u64_at("dim").ok_or("sharded relation is missing 'dim'")? as usize,
             parts: doc.u64_at("parts").ok_or("sharded relation is missing 'parts'")?
                 as u32,
+            // absent in pre-mesh caches; those are rejected by the
+            // fingerprint-version gate before this parser ever runs
+            axis: doc.u64_at("axis").unwrap_or(0) as usize,
         }),
+        "mesh-sharded" => {
+            let entries = doc
+                .get("entries")
+                .and_then(Json::as_arr)
+                .ok_or("mesh-sharded relation is missing 'entries'")?
+                .iter()
+                .map(|e| {
+                    let triple = e.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                        "mesh-sharded entry is not a [dim, parts, axis] triple".to_string()
+                    })?;
+                    let num = |j: &Json| -> std::result::Result<u64, String> {
+                        match j {
+                            Json::Num(n) if *n >= 0.0 => Ok(*n as u64),
+                            _ => Err("mesh-sharded entry is not numeric".into()),
+                        }
+                    };
+                    Ok((
+                        num(&triple[0])? as usize,
+                        num(&triple[1])? as u32,
+                        num(&triple[2])? as usize,
+                    ))
+                })
+                .collect::<std::result::Result<Vec<_>, String>>()?;
+            Ok(RelSummary::MeshSharded { entries })
+        }
         "partial" => Ok(RelSummary::Partial {
             kind: parse_reduce(
                 doc.str_at("reduce").ok_or("partial relation is missing 'reduce'")?,
             )?,
+            axes: doc.u64_at("axes").unwrap_or(1) as crate::ir::AxesMask,
         }),
         other => Err(format!("unknown relation kind '{other}'")),
     }
@@ -361,8 +410,9 @@ mod tests {
             verified: true,
             out_rels: vec![
                 RelSummary::Duplicate,
-                RelSummary::Sharded { dim: 1, parts: 4 },
-                RelSummary::Partial { kind: ReduceKind::Add },
+                RelSummary::Sharded { dim: 1, parts: 4, axis: 1 },
+                RelSummary::MeshSharded { entries: vec![(0, 2, 0), (1, 2, 1)] },
+                RelSummary::Partial { kind: ReduceKind::Add, axes: 0b10 },
             ],
             egraph_nodes: 321,
         }

@@ -397,6 +397,7 @@ fn build_pair(source: &VerifySource) -> Result<GraphPair> {
                 .into_iter()
                 .chain(crate::bugs::new_bugs())
                 .chain(crate::bugs::parallel_transform_bugs())
+                .chain(crate::bugs::replica_group_bugs())
                 .find(|c| c.id == id.as_str())
                 .ok_or_else(|| {
                     ScalifyError::model_spec(format!("unknown bug-corpus id '{id}'"))

@@ -59,10 +59,13 @@ pub use pipeline::stage_split;
 pub enum ShardRule {
     /// Full replica on every core (the default).
     Replicated,
-    /// Split evenly along `dim` across the mesh.
+    /// Split evenly along `dim` across mesh axis `axis` (axis 0 — the
+    /// whole mesh — for flat plans).
     Shard {
         /// Baseline dimension that is split.
         dim: usize,
+        /// Mesh axis the shard spans.
+        axis: usize,
     },
 }
 
@@ -102,9 +105,16 @@ impl ParallelPlan {
     }
 
     /// Add a shard rule: parameters whose name ends with `suffix` split
-    /// along `dim`.
+    /// along `dim` (over the whole mesh — axis 0).
     pub fn shard(mut self, suffix: &str, dim: usize) -> ParallelPlan {
-        self.params.push((suffix.to_owned(), ShardRule::Shard { dim }));
+        self.shard_on(suffix, dim, 0)
+    }
+
+    /// Add an axis-scoped shard rule: parameters whose name ends with
+    /// `suffix` split along `dim` across mesh axis `axis` only (e.g. the
+    /// tp axis of a `[dp, tp]` mesh).
+    pub fn shard_on(mut self, suffix: &str, dim: usize, axis: usize) -> ParallelPlan {
+        self.params.push((suffix.to_owned(), ShardRule::Shard { dim, axis }));
         self
     }
 
@@ -143,6 +153,17 @@ impl ParallelPlan {
             Parallelism::Data { dp, .. } => dp,
             Parallelism::Pipeline { .. } => 1,
             Parallelism::Combined { tp, .. } => tp,
+            Parallelism::Mesh3D { dp, tp, .. } => dp * tp,
+        }
+    }
+
+    /// SPMD mesh axes of the plan (flat single axis for every pre-mesh
+    /// technique; `[dp, tp]` for 3D plans — the pipeline factor is stage
+    /// metadata, not an SPMD axis).
+    pub fn mesh(&self) -> Vec<u32> {
+        match self.kind {
+            Parallelism::Mesh3D { dp, tp, .. } => vec![dp, tp],
+            _ => vec![self.shard_degree()],
         }
     }
 }
@@ -180,36 +201,58 @@ pub fn apply(base: &Graph, plan: &ParallelPlan) -> Result<GraphPair> {
             if tp == 0 || pp == 0 {
                 return Err(ScalifyError::model_spec("combined degrees must be >= 1"));
             }
-            let (sharded, ann) = shard::shard_transform(base, plan, tp)?;
+            let (sharded, ann) = shard::shard_transform(base, plan, &[tp])?;
             // the SPMD width stays the per-stage tensor degree; pipeline
             // stages are metadata + send/recv boundaries on top
             let dist = stage_split(&sharded, pp, tp)?;
-            // splitting re-numbers nodes (send/recv interleave); re-target
-            // the annotations through the preserved parameter order
-            let old_params = sharded.parameters();
-            let new_params = dist.parameters();
-            let ann = ann
-                .into_iter()
-                .map(|mut a| {
-                    if let Some(pos) =
-                        old_params.iter().position(|&p| p == a.distributed)
-                    {
-                        a.distributed = new_params[pos];
-                    }
-                    a
-                })
-                .collect();
+            let ann = retarget_annotations(&sharded, &dist, ann);
             GraphPair::try_new(base.clone(), dist, ann)
+        }
+        Parallelism::Mesh3D { pp, dp, tp } => {
+            if pp == 0 || dp == 0 || tp == 0 {
+                return Err(ScalifyError::model_spec("mesh degrees must be >= 1"));
+            }
+            // one SPMD graph over the [dp, tp] mesh with subgroup
+            // collectives, then pipeline stage splitting as metadata +
+            // send/recv on top — the full pp×dp×tp production shape
+            let mesh = [dp, tp];
+            let (sharded, ann) = shard::shard_transform(base, plan, &mesh)?;
+            if pp == 1 {
+                GraphPair::try_new(base.clone(), sharded, ann)
+            } else {
+                let dist = stage_split(&sharded, pp, dp * tp)?;
+                let ann = retarget_annotations(&sharded, &dist, ann);
+                GraphPair::try_new(base.clone(), dist, ann)
+            }
         }
         _ => {
             let degree = plan.shard_degree();
             if degree == 0 {
                 return Err(ScalifyError::model_spec("parallelism degree must be >= 1"));
             }
-            let (dist, annotations) = shard::shard_transform(base, plan, degree)?;
+            let (dist, annotations) = shard::shard_transform(base, plan, &[degree])?;
             GraphPair::try_new(base.clone(), dist, annotations)
         }
     }
+}
+
+/// Stage splitting re-numbers nodes (send/recv interleave); re-target
+/// annotations through the preserved parameter order.
+fn retarget_annotations(
+    old: &Graph,
+    new: &Graph,
+    ann: Vec<Annotation>,
+) -> Vec<Annotation> {
+    let old_params = old.parameters();
+    let new_params = new.parameters();
+    ann.into_iter()
+        .map(|mut a| {
+            if let Some(pos) = old_params.iter().position(|&p| p == a.distributed) {
+                a.distributed = new_params[pos];
+            }
+            a
+        })
+        .collect()
 }
 
 /// Positional replicated annotations for a pipeline pair (every parameter

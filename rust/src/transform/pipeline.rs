@@ -57,6 +57,7 @@ pub fn stage_split(g: &Graph, pp: u32, num_cores: u32) -> Result<Graph> {
     };
 
     let mut out = Graph::new(g.name.clone(), num_cores);
+    out.mesh = g.mesh.clone(); // stage splitting keeps the SPMD mesh
     let mut remap: FxHashMap<NodeId, NodeId> = FxHashMap::default();
     // (producer, destination stage) → recv node carrying the value there
     let mut transfers: FxHashMap<(NodeId, u32), NodeId> = FxHashMap::default();

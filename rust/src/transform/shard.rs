@@ -10,6 +10,17 @@
 //! born sharded. Coerced variants are memoized per (node, target), so the
 //! sequence-parallel `all-gather` feeding q/k/v is emitted once.
 //!
+//! Since the mesh generalization, placements are **multi-axis**: a value
+//! can be sharded along several tensor dims at once, each spanning a
+//! different mesh axis, and simultaneously carry a pending reduction over
+//! a subset of axes ([`Spmd`]). The dp×tp training step is the canonical
+//! case: an activation batch-sharded over dp and hidden-sharded over tp,
+//! whose gradient contraction leaves a dp-partial that a **subgroup**
+//! all-reduce (strided dp groups) discharges while the tp shard rides
+//! along. Every engine-inserted collective names its concrete
+//! [`ReplicaGroups`] via [`Mesh::groups_for`] — full-mesh groups on flat
+//! plans, true subgroups on mesh plans.
+//!
 //! The expert-parallel unrolled-sum pattern is handled by two extra
 //! placements: a slice of a sharded tensor that stays inside the local
 //! shard is [`Placement::PerCore`] (per-core *distinct* values), a slice
@@ -21,7 +32,8 @@
 use super::{remap_meta, ParallelPlan, ShardRule};
 use crate::error::{Result, ScalifyError};
 use crate::ir::{
-    infer_shape, Annotation, Graph, Meta, Node, NodeId, Op, ReduceKind, ReplicaGroups, Shape,
+    infer_shape, Annotation, AxesMask, Graph, Mesh, Meta, Node, NodeId, Op, ReduceKind,
+    ReplicaGroups, Shape,
 };
 use crate::util::Sym;
 use rustc_hash::FxHashMap;
@@ -32,41 +44,69 @@ macro_rules! spec {
     };
 }
 
+/// Axis-resolved SPMD placement: shard entries `(baseline dim, mesh axis)`
+/// — sorted by dim, axes pairwise distinct — plus an optional pending
+/// reduction over `partial_axes` (disjoint from the shard axes).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+struct Spmd {
+    /// `(sharded baseline dim, mesh axis)` entries.
+    shards: Vec<(usize, u8)>,
+    /// Pending cross-core reduction.
+    partial: Option<ReduceKind>,
+    /// Mesh axes the pending reduction spans.
+    partial_axes: AxesMask,
+}
+
+impl Spmd {
+    fn rep() -> Spmd {
+        Spmd::default()
+    }
+
+    fn sharded(dim: usize, axis: u8) -> Spmd {
+        Spmd { shards: vec![(dim, axis)], partial: None, partial_axes: 0 }
+    }
+
+    fn partial(kind: ReduceKind, axes: AxesMask) -> Spmd {
+        Spmd { shards: Vec::new(), partial: Some(kind), partial_axes: axes }
+    }
+
+    fn is_rep(&self) -> bool {
+        self.shards.is_empty() && self.partial.is_none()
+    }
+
+    fn normalize(mut self) -> Spmd {
+        self.shards.sort_unstable();
+        self
+    }
+}
+
 /// Where a baseline node's value lives on the mesh.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 enum Placement {
-    /// Identical full value on every core.
-    Rep,
-    /// Core `r` holds shard `r` along `dim`.
-    Shard {
-        /// Sharded baseline dimension.
-        dim: usize,
-    },
-    /// Every core holds a full-shape contribution; cross-core `kind`
-    /// reduction yields the baseline value.
-    Partial {
-        /// Pending reduction.
-        kind: ReduceKind,
-    },
+    /// Axis-resolved SPMD value (replicated / sharded / partial combos).
+    Spmd(Spmd),
     /// Per-core distinct values (e.g. each core's local expert slice).
     PerCore,
     /// Owned by other cores' iterations of the same program; not emitted.
     Remote,
 }
 
-/// Coercion targets (memo key for emitted variants).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-enum Want {
-    /// Full replica.
-    Rep,
-    /// Shard along `dim`.
-    Shard(usize),
+impl Placement {
+    fn rep() -> Placement {
+        Placement::Spmd(Spmd::rep())
+    }
 }
+
+/// Coercion target (memo key for emitted variants): the desired shard
+/// entry set, and whether a pending partial is allowed to survive (`true`
+/// only for dot-operand gathers, where the dot itself carries the partial
+/// through bilinearity).
+type Want = (Vec<(usize, u8)>, bool);
 
 struct Builder<'a> {
     base: &'a Graph,
     plan: &'a ParallelPlan,
-    parts: u32,
+    mesh: Mesh,
     out: Graph,
     /// Baseline node → emitted distributed node (None = remote).
     emit: Vec<Option<NodeId>>,
@@ -81,12 +121,15 @@ struct Builder<'a> {
     params: Vec<(NodeId, NodeId, ShardRule)>,
 }
 
-/// Apply the sharding plan to `base` over a `parts`-wide mesh.
+/// Apply the sharding plan to `base` over the given mesh axes (a 1-element
+/// mesh is the classic flat transform).
 pub(crate) fn shard_transform(
     base: &Graph,
     plan: &ParallelPlan,
-    parts: u32,
+    mesh_axes: &[u32],
 ) -> Result<(Graph, Vec<Annotation>)> {
+    let mesh = Mesh::new(mesh_axes.to_vec());
+    let parts = mesh.total();
     if parts == 1 {
         // degenerate mesh: the distributed graph is the baseline
         let dist = base.clone();
@@ -98,13 +141,28 @@ pub(crate) fn shard_transform(
             .collect();
         return Ok((dist, ann));
     }
+    for (suffix, rule) in &plan.params {
+        if let ShardRule::Shard { axis, .. } = rule {
+            if *axis >= mesh.rank() {
+                return Err(spec!(
+                    "shard rule '{suffix}' names mesh axis {axis} but the mesh has \
+                     {} axes",
+                    mesh.rank()
+                ));
+            }
+        }
+    }
+    let mut out = Graph::new(format!("{}_dist", base.name.trim_end_matches("_base")), parts);
+    if mesh.rank() > 1 {
+        out.mesh = mesh.axes.clone();
+    }
     let mut b = Builder {
         base,
         plan,
-        parts,
-        out: Graph::new(format!("{}_dist", base.name.trim_end_matches("_base")), parts),
+        mesh,
+        out,
         emit: vec![None; base.len()],
-        place: vec![Placement::Rep; base.len()],
+        place: vec![Placement::rep(); base.len()],
         variants: FxHashMap::default(),
         params: Vec::new(),
     };
@@ -112,9 +170,9 @@ pub(crate) fn shard_transform(
         b.visit(n)?;
     }
     for &o in &base.outputs {
-        let id = match b.place[o.idx()] {
-            Placement::Rep => b.primary(o)?,
-            Placement::Shard { .. } | Placement::Partial { .. } => b.coerce(o, Want::Rep, None)?,
+        let id = match b.place[o.idx()].clone() {
+            Placement::Spmd(s) if s.is_rep() => b.primary(o)?,
+            Placement::Spmd(_) => b.coerce(o, &[], false, None)?,
             p => {
                 return Err(spec!(
                     "graph output {} has non-collectable placement {p:?}",
@@ -124,6 +182,7 @@ pub(crate) fn shard_transform(
         };
         b.out.outputs.push(id);
     }
+    let mesh = b.mesh.clone();
     let (swept, remap) = sweep(&b.out);
     let annotations = b
         .params
@@ -132,7 +191,9 @@ pub(crate) fn shard_transform(
             let did = remap[&did];
             match rule {
                 ShardRule::Replicated => Annotation::replicated(bid, did),
-                ShardRule::Shard { dim } => Annotation::shard(bid, did, dim, parts),
+                ShardRule::Shard { dim, axis } => {
+                    Annotation::shard_on(bid, did, dim, mesh.size(axis), axis)
+                }
             }
         })
         .collect();
@@ -140,17 +201,34 @@ pub(crate) fn shard_transform(
 }
 
 impl<'a> Builder<'a> {
+    /// Replica groups of the masked mesh axes.
+    fn groups(&self, axes: AxesMask) -> ReplicaGroups {
+        self.mesh.groups_for(axes)
+    }
+
+    fn axis_size(&self, axis: u8) -> i64 {
+        self.mesh.size(axis as usize) as i64
+    }
+
     /// Emitted id of a baseline node (error when remote).
     fn primary(&self, id: NodeId) -> Result<NodeId> {
         self.emit[id.idx()]
             .ok_or_else(|| spec!("node {} is remote but a local value is required", id.0))
     }
 
+    /// The node's placement as an [`Spmd`] (error for PerCore/Remote).
+    fn spmd(&self, id: NodeId) -> Result<Spmd> {
+        match &self.place[id.idx()] {
+            Placement::Spmd(s) => Ok(s.clone()),
+            p => Err(spec!("node {} has non-SPMD placement {p:?}", id.0)),
+        }
+    }
+
     fn push_node(&mut self, bn: &Node, op: Op, inputs: Vec<NodeId>) -> NodeId {
         let shape = {
             let shapes: Vec<&Shape> =
                 inputs.iter().map(|&i| &self.out.node(i).shape).collect();
-            infer_shape(&op, &shapes, self.parts)
+            infer_shape(&op, &shapes, self.out.num_cores)
         };
         let meta = remap_meta(self.base, &mut self.out, &bn.meta);
         self.out.push(op, inputs, shape, meta)
@@ -160,6 +238,10 @@ impl<'a> Builder<'a> {
     fn record(&mut self, bn: &Node, id: NodeId, place: Placement) {
         self.emit[bn.id.idx()] = Some(id);
         self.place[bn.id.idx()] = place;
+    }
+
+    fn record_spmd(&mut self, bn: &Node, id: NodeId, s: Spmd) {
+        self.record(bn, id, Placement::Spmd(s.normalize()));
     }
 
     /// Metadata for an engine-inserted collective discharging `src` on
@@ -187,123 +269,209 @@ impl<'a> Builder<'a> {
     /// True when a replicated variant of `id` was already emitted for any
     /// consumer (used to pick the cheaper side to gather in a dot).
     fn has_rep_variant(&self, id: NodeId) -> bool {
-        self.variants.keys().any(|&(n, w, _)| n == id && w == Want::Rep)
+        self.variants
+            .keys()
+            .any(|(n, (t, _), _)| *n == id && t.is_empty())
     }
 
-    /// Produce (emitting at most one node, memoized per consumer layer)
-    /// the `want` variant of baseline node `id`. `layer` is the consuming
-    /// node's partition group; inserted collectives join it so the
-    /// baseline and distributed layer slices keep positionally-aligned
+    /// Produce (memoized per consumer layer) the variant of baseline node
+    /// `id` whose shard entries are exactly `want` and whose pending
+    /// partial is discharged (unless `keep_partial`). `layer` is the
+    /// consuming node's partition group; inserted collectives join it so
+    /// the baseline and distributed layer slices keep positionally-aligned
     /// boundary outputs.
-    fn coerce(&mut self, id: NodeId, want: Want, layer: Option<u32>) -> Result<NodeId> {
-        let have = self.place[id.idx()];
-        match (have, want) {
-            (Placement::Rep, Want::Rep) => return self.primary(id),
-            (Placement::Shard { dim }, Want::Shard(d)) if dim == d => return self.primary(id),
-            _ => {}
+    ///
+    /// The coercion plan, in order:
+    /// 1. `all-gather` every stale shard entry (in `have`, not in `want`)
+    ///    over its axis's subgroups;
+    /// 2. discharge a pending Add whose axes equal a single wanted-missing
+    ///    entry's axis by `reduce-scatter` (the ZeRO / sequence-parallel
+    ///    discharge), else by `all-reduce` over the pending axes' groups;
+    /// 3. entries still missing are only creatable communication-free by
+    ///    re-emitting a broadcast born sharded.
+    fn coerce(
+        &mut self,
+        id: NodeId,
+        want: &[(usize, u8)],
+        keep_partial: bool,
+        layer: Option<u32>,
+    ) -> Result<NodeId> {
+        let have = self.spmd(id)?;
+        let mut want: Vec<(usize, u8)> = want.to_vec();
+        want.sort_unstable();
+        if have.shards == want && (have.partial.is_none() || keep_partial) {
+            return self.primary(id);
         }
         let layer = layer.or_else(|| self.base.node(id).meta.layer);
-        if let Some(&v) = self.variants.get(&(id, want, layer)) {
+        let key = (id, (want.clone(), keep_partial), layer);
+        if let Some(&v) = self.variants.get(&key) {
             return Ok(v);
         }
-        let full = ReplicaGroups::full(self.parts);
-        let src = self.primary(id)?;
-        let src_shape = self.out.node(src).shape.clone();
-        let built = match (have, want) {
-            (Placement::Partial { kind }, Want::Rep) => {
-                let meta = self.collective_meta(id, layer);
-                self.out.push(
-                    Op::AllReduce { kind, groups: full },
-                    vec![src],
-                    src_shape,
-                    meta,
-                )
-            }
-            (Placement::Partial { kind: ReduceKind::Add }, Want::Shard(dim)) => {
-                if dim >= src_shape.rank() || src_shape.dims[dim] % self.parts as i64 != 0 {
-                    return Err(spec!(
-                        "cannot reduce-scatter node {} along dim {dim} across {} cores",
-                        id.0,
-                        self.parts
-                    ));
-                }
+
+        // communication-free re-emission: a replicated broadcast whose
+        // target dims are broadcast-born can be emitted sharded directly
+        let built = if have.is_rep() && !want.is_empty() {
+            self.born_sharded_broadcast(id, &want)?
+        } else {
+            let mut cur = self.primary(id)?;
+            let mut cur_shards = have.shards.clone();
+            let mut partial = have.partial;
+            let mut partial_axes = have.partial_axes;
+
+            // 1. gather stale entries (a gather commutes with a pending
+            // reduction on disjoint axes, which shard/partial axes are by
+            // construction)
+            let stale: Vec<(usize, u8)> = cur_shards
+                .iter()
+                .copied()
+                .filter(|e| !want.contains(e))
+                .collect();
+            for (dim, axis) in stale {
+                let src_shape = self.out.node(cur).shape.clone();
                 let mut dims = src_shape.dims.clone();
-                dims[dim] /= self.parts as i64;
+                dims[dim] *= self.axis_size(axis);
+                let groups = self.groups(1 << axis);
                 let meta = self.collective_meta(id, layer);
-                self.out.push(
-                    Op::ReduceScatter { kind: ReduceKind::Add, dim, groups: full },
-                    vec![src],
+                cur = self.out.push(
+                    Op::AllGather { dim, groups },
+                    vec![cur],
                     src_shape.with_dims(dims),
                     meta,
-                )
+                );
+                cur_shards.retain(|&e| e != (dim, axis));
             }
-            (Placement::Shard { dim }, Want::Rep) => {
-                let mut dims = src_shape.dims.clone();
-                dims[dim] *= self.parts as i64;
-                let meta = self.collective_meta(id, layer);
-                self.out.push(
-                    Op::AllGather { dim, groups: full },
-                    vec![src],
-                    src_shape.with_dims(dims),
-                    meta,
-                )
-            }
-            (Placement::Rep, Want::Shard(dim)) => {
-                // a replicated broadcast whose target dim is broadcast-born
-                // can be re-emitted sharded at zero communication cost
-                let bn = self.base.node(id);
-                let Op::Broadcast { mapped, dims } = &bn.op else {
-                    return Err(spec!(
-                        "cannot shard replicated node {} ({}) along dim {dim}",
-                        id.0,
-                        bn.op.name()
-                    ));
-                };
-                if mapped.contains(&dim) || dims[dim] % self.parts as i64 != 0 {
-                    return Err(spec!(
-                        "broadcast {} cannot be born sharded along dim {dim}",
-                        id.0
-                    ));
+
+            // 2. discharge the pending reduction
+            let missing: Vec<(usize, u8)> = want
+                .iter()
+                .copied()
+                .filter(|e| !cur_shards.contains(e))
+                .collect();
+            if let Some(kind) = partial {
+                if keep_partial {
+                    // carried through by the consumer (dot bilinearity)
+                } else if kind == ReduceKind::Add
+                    && missing.len() == 1
+                    && partial_axes == (1 << missing[0].1)
+                {
+                    // reduce-scatter: discharge + shard in one collective
+                    let (dim, axis) = missing[0];
+                    let src_shape = self.out.node(cur).shape.clone();
+                    if dim >= src_shape.rank()
+                        || src_shape.dims[dim] % self.axis_size(axis) != 0
+                    {
+                        return Err(spec!(
+                            "cannot reduce-scatter node {} along dim {dim} across \
+                             mesh axis {axis}",
+                            id.0
+                        ));
+                    }
+                    let mut dims = src_shape.dims.clone();
+                    dims[dim] /= self.axis_size(axis);
+                    let groups = self.groups(1 << axis);
+                    let meta = self.collective_meta(id, layer);
+                    cur = self.out.push(
+                        Op::ReduceScatter { kind: ReduceKind::Add, dim, groups },
+                        vec![cur],
+                        src_shape.with_dims(dims),
+                        meta,
+                    );
+                    cur_shards.push((dim, axis));
+                    partial = None;
+                    partial_axes = 0;
+                } else {
+                    let src_shape = self.out.node(cur).shape.clone();
+                    let groups = self.groups(partial_axes);
+                    let meta = self.collective_meta(id, layer);
+                    cur = self.out.push(
+                        Op::AllReduce { kind, groups },
+                        vec![cur],
+                        src_shape,
+                        meta,
+                    );
+                    partial = None;
+                    partial_axes = 0;
                 }
-                let input = self.primary(bn.inputs[0])?;
-                if self.place[bn.inputs[0].idx()] != Placement::Rep {
-                    return Err(spec!("broadcast {} input is not replicated", id.0));
-                }
-                let mut local = dims.clone();
-                local[dim] /= self.parts as i64;
-                let op = Op::Broadcast { mapped: mapped.clone(), dims: local };
-                self.push_node(bn, op, vec![input])
             }
-            _ => {
+            let _ = (partial, partial_axes);
+
+            // 3. anything still missing has no communication that creates
+            // it (we never slice by core id)
+            let missing: Vec<(usize, u8)> = want
+                .iter()
+                .copied()
+                .filter(|e| !cur_shards.contains(e))
+                .collect();
+            if !missing.is_empty() {
                 return Err(spec!(
-                    "no coercion from {have:?} to {want:?} for node {}",
+                    "no coercion gives node {} shard entries {missing:?}",
                     id.0
-                ))
+                ));
             }
+            cur
         };
-        self.variants.insert((id, want, layer), built);
+        self.variants.insert(key, built);
         Ok(built)
+    }
+
+    /// Re-emit a replicated broadcast with every `want` dim born sharded
+    /// (zero communication). Errors when the node is not a broadcast or a
+    /// wanted dim is broadcast-mapped / indivisible.
+    fn born_sharded_broadcast(
+        &mut self,
+        id: NodeId,
+        want: &[(usize, u8)],
+    ) -> Result<NodeId> {
+        let bn = self.base.node(id);
+        let Op::Broadcast { mapped, dims } = &bn.op else {
+            return Err(spec!(
+                "cannot shard replicated node {} ({}) to {want:?}",
+                id.0,
+                bn.op.name()
+            ));
+        };
+        let input = bn.inputs[0];
+        if !matches!(&self.place[input.idx()], Placement::Spmd(s) if s.is_rep()) {
+            return Err(spec!("broadcast {} input is not replicated", id.0));
+        }
+        let mut local = dims.clone();
+        for &(dim, axis) in want {
+            if mapped.contains(&dim) || local[dim] % self.axis_size(axis) != 0 {
+                return Err(spec!(
+                    "broadcast {} cannot be born sharded along dim {dim}",
+                    id.0
+                ));
+            }
+            local[dim] /= self.axis_size(axis);
+        }
+        let op = Op::Broadcast { mapped: mapped.clone(), dims: local };
+        let input = self.primary(input)?;
+        Ok(self.push_node(bn, op, vec![input]))
     }
 
     fn visit(&mut self, bn: &Node) -> Result<()> {
         match &bn.op {
             Op::Parameter { index, name } => {
-                let rule = self.plan.rule_for(name);
+                let rule = match self.plan.rule_for(name) {
+                    // a size-1 axis shards nothing: treat as replication
+                    ShardRule::Shard { axis, .. } if self.axis_size(axis as u8) == 1 => {
+                        ShardRule::Replicated
+                    }
+                    r => r,
+                };
                 let shape = match rule {
                     ShardRule::Replicated => bn.shape.clone(),
-                    ShardRule::Shard { dim } => {
-                        if dim >= bn.shape.rank()
-                            || bn.shape.dims[dim] % self.parts as i64 != 0
-                        {
+                    ShardRule::Shard { dim, axis } => {
+                        let parts = self.axis_size(axis as u8);
+                        if dim >= bn.shape.rank() || bn.shape.dims[dim] % parts != 0 {
                             return Err(spec!(
                                 "parameter '{name}' dim {dim} ({:?}) is not divisible by \
-                                 {} shards",
-                                bn.shape.dims,
-                                self.parts
+                                 {parts} shards (mesh axis {axis})",
+                                bn.shape.dims
                             ));
                         }
                         let mut dims = bn.shape.dims.clone();
-                        dims[dim] /= self.parts as i64;
+                        dims[dim] /= parts;
                         bn.shape.with_dims(dims)
                     }
                 };
@@ -315,17 +483,17 @@ impl<'a> Builder<'a> {
                     meta,
                 );
                 let place = match rule {
-                    ShardRule::Replicated => Placement::Rep,
-                    ShardRule::Shard { dim } => Placement::Shard { dim },
+                    ShardRule::Replicated => Spmd::rep(),
+                    ShardRule::Shard { dim, axis } => Spmd::sharded(dim, axis as u8),
                 };
-                self.record(bn, id, place);
+                self.record_spmd(bn, id, place);
                 self.params.push((bn.id, id, rule));
                 Ok(())
             }
             Op::Constant(_) | Op::Iota { .. } => {
                 let meta = remap_meta(self.base, &mut self.out, &bn.meta);
                 let id = self.out.push(bn.op.clone(), vec![], bn.shape.clone(), meta);
-                self.record(bn, id, Placement::Rep);
+                self.record_spmd(bn, id, Spmd::rep());
                 Ok(())
             }
             op if (op.is_elementwise() && bn.inputs.len() == 1)
@@ -353,27 +521,39 @@ impl<'a> Builder<'a> {
 
     fn visit_unary(&mut self, bn: &Node) -> Result<()> {
         let x = bn.inputs[0];
-        match self.place[x.idx()] {
+        match &self.place[x.idx()] {
             Placement::Remote => {
                 self.place[bn.id.idx()] = Placement::Remote;
                 Ok(())
             }
-            Placement::Partial { kind }
-                if !(matches!(bn.op, Op::Convert { .. })
-                    || (bn.op == Op::Neg && kind == ReduceKind::Add)) =>
-            {
-                // discharge first: only linear ops commute with a pending
-                // sum (neg over a Max partial would turn it into a Min),
-                // while monotone converts commute with any reduction
-                let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
-                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                self.record(bn, id, Placement::Rep);
-                Ok(())
-            }
-            p => {
+            Placement::PerCore => {
                 let xv = self.primary(x)?;
                 let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                self.record(bn, id, p);
+                self.record(bn, id, Placement::PerCore);
+                Ok(())
+            }
+            Placement::Spmd(s) => {
+                let s = s.clone();
+                let linear = matches!(bn.op, Op::Convert { .. })
+                    || (bn.op == Op::Neg && s.partial == Some(ReduceKind::Add));
+                if s.partial.is_some() && !linear {
+                    // discharge first, keeping the shard entries: only
+                    // linear ops commute with a pending sum (neg over a
+                    // Max partial would turn it into a Min), while
+                    // monotone converts commute with any reduction
+                    let shards = s.shards.clone();
+                    let xv = self.coerce(x, &shards, false, bn.meta.layer)?;
+                    let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                    self.record_spmd(
+                        bn,
+                        id,
+                        Spmd { shards, partial: None, partial_axes: 0 },
+                    );
+                } else {
+                    let xv = self.primary(x)?;
+                    let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                    self.record_spmd(bn, id, s);
+                }
                 Ok(())
             }
         }
@@ -382,7 +562,7 @@ impl<'a> Builder<'a> {
     fn visit_elementwise(&mut self, bn: &Node) -> Result<()> {
         let lyr = bn.meta.layer;
         let places: Vec<Placement> =
-            bn.inputs.iter().map(|i| self.place[i.idx()]).collect();
+            bn.inputs.iter().map(|i| self.place[i.idx()].clone()).collect();
         // scalar operands broadcast implicitly and never constrain placement
         let neutral: Vec<bool> = bn
             .inputs
@@ -396,16 +576,20 @@ impl<'a> Builder<'a> {
             // per-core partial of the baseline's full sum
             if bn.op == Op::Add && bn.inputs.len() == 2 {
                 let keep = if places[0] == Placement::Remote { 1usize } else { 0 };
-                let keep_place = places[keep];
                 let other_remote = places[1 - keep] == Placement::Remote;
-                let collapsible = matches!(
-                    keep_place,
-                    Placement::PerCore | Placement::Partial { kind: ReduceKind::Add }
-                );
+                let collapsible = match &places[keep] {
+                    Placement::PerCore => true,
+                    Placement::Spmd(s) => {
+                        s.shards.is_empty() && s.partial == Some(ReduceKind::Add)
+                    }
+                    _ => false,
+                };
                 if other_remote && collapsible {
                     self.emit[bn.id.idx()] = self.emit[bn.inputs[keep].idx()];
-                    self.place[bn.id.idx()] =
-                        Placement::Partial { kind: ReduceKind::Add };
+                    self.place[bn.id.idx()] = Placement::Spmd(Spmd::partial(
+                        ReduceKind::Add,
+                        self.mesh.full_mask(),
+                    ));
                     return Ok(());
                 }
             }
@@ -416,7 +600,12 @@ impl<'a> Builder<'a> {
         }
 
         if places.iter().any(|p| *p == Placement::PerCore) {
-            if !places.iter().all(|p| matches!(p, Placement::PerCore | Placement::Rep)) {
+            let ok = places.iter().all(|p| match p {
+                Placement::PerCore => true,
+                Placement::Spmd(s) => s.is_rep(),
+                _ => false,
+            });
+            if !ok {
                 return Err(spec!(
                     "node {} mixes per-core and sharded operands",
                     bn.id.0
@@ -433,110 +622,89 @@ impl<'a> Builder<'a> {
             return Ok(());
         }
 
-        // a single shard dim may appear among the operands; everything else
-        // is coerced toward it (or, failing that, toward replication)
-        let mut shard_dim: Option<usize> = None;
-        for (k, p) in places.iter().enumerate() {
+        let spmds: Vec<Spmd> = bn
+            .inputs
+            .iter()
+            .map(|&i| self.spmd(i))
+            .collect::<Result<Vec<_>>>()?;
+
+        // sums of aligned partials stay partial: (Σa) ± (Σb) = Σ(a ± b)
+        // — every operand (including implicit-broadcast scalars) must be
+        // an Add-partial over the SAME axes with the same shard entries,
+        // else a non-partial term would be multiply-counted by the
+        // eventual discharge
+        let all_add = spmds.iter().all(|s| s.partial == Some(ReduceKind::Add));
+        if matches!(bn.op, Op::Add | Op::Sub)
+            && all_add
+            && spmds.iter().all(|s| {
+                s.partial_axes == spmds[0].partial_axes && s.shards == spmds[0].shards
+            })
+        {
+            let ins = bn
+                .inputs
+                .iter()
+                .map(|&i| self.primary(i))
+                .collect::<Result<Vec<_>>>()?;
+            self.check_elementwise_dims(bn, &ins, &neutral)?;
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record_spmd(bn, id, spmds[0].clone());
+            return Ok(());
+        }
+
+        // target shard set: union of the non-neutral operands' entries —
+        // unless entries conflict (same axis on different dims, or same
+        // dim on different axes), which falls back to full replication
+        let mut target: Vec<(usize, u8)> = Vec::new();
+        let mut conflict = false;
+        for (k, s) in spmds.iter().enumerate() {
             if neutral[k] {
                 continue;
             }
-            if let Placement::Shard { dim } = p {
-                match shard_dim {
-                    None => shard_dim = Some(*dim),
-                    Some(d) if d == *dim => {}
-                    Some(d) => {
-                        return Err(spec!(
-                            "node {} combines shards along dims {d} and {dim}",
-                            bn.id.0
-                        ))
-                    }
+            for &(dim, axis) in &s.shards {
+                match target.iter().find(|&&(d, a)| d == dim || a == axis) {
+                    Some(&(d, a)) if d == dim && a == axis => {}
+                    Some(_) => conflict = true,
+                    None => target.push((dim, axis)),
                 }
             }
         }
-        if let Some(d) = shard_dim {
-            if let Some(ins) = self.try_gather_operands(bn, &neutral, Want::Shard(d)) {
-                self.check_elementwise_dims(bn, &ins, &neutral)?;
-                let id = self.push_node(bn, bn.op.clone(), ins);
-                self.record(bn, id, Placement::Shard { dim: d });
-                return Ok(());
-            }
-            // some operand could not be sharded: fall back to replication
-            let ins = bn
-                .inputs
-                .iter()
-                .map(|&i| self.coerce(i, Want::Rep, lyr))
-                .collect::<Result<Vec<_>>>()?;
-            self.check_elementwise_dims(bn, &ins, &neutral)?;
-            let id = self.push_node(bn, bn.op.clone(), ins);
-            self.record(bn, id, Placement::Rep);
-            return Ok(());
+        if conflict {
+            target.clear();
         }
+        target.sort_unstable();
 
-        let partials: Vec<Option<ReduceKind>> = places
-            .iter()
-            .map(|p| match p {
-                Placement::Partial { kind } => Some(*kind),
-                _ => None,
-            })
-            .collect();
-        if partials.iter().any(|p| p.is_some()) {
-            // every operand — including implicit-broadcast scalars — must
-            // itself be an Add-partial: (Σa) ± (Σb) = Σ(a ± b), but a
-            // non-partial term folded into a partial would be summed once
-            // per core by the eventual discharge
-            let all_add = partials.iter().all(|p| *p == Some(ReduceKind::Add));
-            if matches!(bn.op, Op::Add | Op::Sub) && all_add {
-                // sums of per-core partials stay partial
-                let ins = bn
-                    .inputs
-                    .iter()
-                    .map(|&i| self.primary(i))
-                    .collect::<Result<Vec<_>>>()?;
-                self.check_elementwise_dims(bn, &ins, &neutral)?;
-                let id = self.push_node(bn, bn.op.clone(), ins);
-                self.record(bn, id, Placement::Partial { kind: ReduceKind::Add });
-                return Ok(());
-            }
-            let ins = bn
-                .inputs
+        // coerce every operand to the target (discharging partials); on
+        // failure fall back to full replication. Scalar (neutral) operands
+        // never constrain the shard target but STILL need any pending
+        // reduction discharged — consuming a raw scalar partial here would
+        // silently fold one core's contribution instead of the sum.
+        let gather = |b: &mut Self, tgt: &[(usize, u8)]| -> Result<Vec<NodeId>> {
+            bn.inputs
                 .iter()
-                .map(|&i| self.coerce(i, Want::Rep, lyr))
-                .collect::<Result<Vec<_>>>()?;
-            self.check_elementwise_dims(bn, &ins, &neutral)?;
-            let id = self.push_node(bn, bn.op.clone(), ins);
-            self.record(bn, id, Placement::Rep);
-            return Ok(());
-        }
-
-        let ins = bn
-            .inputs
-            .iter()
-            .map(|&i| self.primary(i))
-            .collect::<Result<Vec<_>>>()?;
+                .enumerate()
+                .map(|(k, &i)| {
+                    if neutral[k] {
+                        match &b.place[i.idx()] {
+                            Placement::Spmd(s) if s.partial.is_some() => {
+                                b.coerce(i, &[], false, lyr)
+                            }
+                            _ => b.primary(i),
+                        }
+                    } else {
+                        b.coerce(i, tgt, false, lyr)
+                    }
+                })
+                .collect()
+        };
+        let (ins, got) = match gather(self, &target) {
+            Ok(ins) => (ins, target),
+            Err(_) if !target.is_empty() => (gather(self, &[])?, Vec::new()),
+            Err(e) => return Err(e),
+        };
         self.check_elementwise_dims(bn, &ins, &neutral)?;
         let id = self.push_node(bn, bn.op.clone(), ins);
-        self.record(bn, id, Placement::Rep);
+        self.record_spmd(bn, id, Spmd { shards: got, partial: None, partial_axes: 0 });
         Ok(())
-    }
-
-    /// Coerce every non-neutral operand to `want`; None when any operand
-    /// cannot be coerced (no nodes from failed attempts survive the dead
-    /// sweep).
-    fn try_gather_operands(
-        &mut self,
-        bn: &Node,
-        neutral: &[bool],
-        want: Want,
-    ) -> Option<Vec<NodeId>> {
-        let mut ins = Vec::with_capacity(bn.inputs.len());
-        for (k, &i) in bn.inputs.iter().enumerate() {
-            if neutral[k] {
-                ins.push(self.primary(i).ok()?);
-                continue;
-            }
-            ins.push(self.coerce(i, want, bn.meta.layer).ok()?);
-        }
-        Some(ins)
     }
 
     /// Non-scalar operands of an elementwise op must agree on (local) dims.
@@ -571,15 +739,18 @@ impl<'a> Builder<'a> {
             unreachable!()
         };
         let (li, ri) = (bn.inputs[0], bn.inputs[1]);
-        let (mut lp, mut rp) = (self.place[li.idx()], self.place[ri.idx()]);
+        let (lp, rp) = (self.place[li.idx()].clone(), self.place[ri.idx()].clone());
         if lp == Placement::Remote || rp == Placement::Remote {
             self.place[bn.id.idx()] = Placement::Remote;
             return Ok(());
         }
         if lp == Placement::PerCore || rp == Placement::PerCore {
-            if !matches!(lp, Placement::PerCore | Placement::Rep)
-                || !matches!(rp, Placement::PerCore | Placement::Rep)
-            {
+            let rep_or_percore = |p: &Placement| match p {
+                Placement::PerCore => true,
+                Placement::Spmd(s) => s.is_rep(),
+                _ => false,
+            };
+            if !rep_or_percore(&lp) || !rep_or_percore(&rp) {
                 return Err(spec!("dot {} mixes per-core and sharded operands", bn.id.0));
             }
             let ins = vec![self.primary(li)?, self.primary(ri)?];
@@ -587,175 +758,246 @@ impl<'a> Builder<'a> {
             self.record(bn, id, Placement::PerCore);
             return Ok(());
         }
+        let mut l = self.spmd(li)?;
+        let mut r = self.spmd(ri)?;
+        let lyr = bn.meta.layer;
 
         // resolve partials: a dot is bilinear, so one Add-partial operand
-        // against a replicated one keeps the partial; anything else is
-        // discharged up front
-        let mut out_partial: Option<ReduceKind> = None;
-        let (mut lid, mut rid) = (self.primary(li)?, self.primary(ri)?);
-        match (lp, rp) {
-            (Placement::Partial { kind: ReduceKind::Add }, Placement::Rep) => {
-                out_partial = Some(ReduceKind::Add);
-                lp = Placement::Rep;
+        // against a non-partial one carries the pending sum through;
+        // anything else is discharged up front (keeping shard entries)
+        let mut carry: AxesMask = 0;
+        match (l.partial, r.partial) {
+            (None, None) => {}
+            (Some(ReduceKind::Add), None) => {
+                carry = l.partial_axes;
             }
-            (Placement::Rep, Placement::Partial { kind: ReduceKind::Add }) => {
-                out_partial = Some(ReduceKind::Add);
-                rp = Placement::Rep;
+            (None, Some(ReduceKind::Add)) => {
+                carry = r.partial_axes;
             }
             _ => {
-                if matches!(lp, Placement::Partial { .. }) {
-                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
-                    lp = Placement::Rep;
-                }
-                if matches!(rp, Placement::Partial { .. }) {
-                    rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
-                    rp = Placement::Rep;
-                }
+                let ls = l.shards.clone();
+                self.coerce(li, &ls, false, lyr)?;
+                l.partial = None;
+                l.partial_axes = 0;
+                let rs = r.shards.clone();
+                self.coerce(ri, &rs, false, lyr)?;
+                r.partial = None;
+                r.partial_axes = 0;
             }
         }
+        let keep_l = l.partial.is_some();
+        let keep_r = r.partial.is_some();
 
-        // shard resolution: gather operands until the remaining shards form
-        // a supported pattern (matching contraction, matching batch, or a
-        // single free dim)
-        let result_place = loop {
-            let ls = match lp {
-                Placement::Shard { dim } => Some(dim),
-                _ => None,
-            };
-            let rs = match rp {
-                Placement::Shard { dim } => Some(dim),
-                _ => None,
-            };
-            match (ls, rs) {
-                (None, None) => {
-                    break match out_partial {
-                        Some(kind) => Placement::Partial { kind },
-                        None => Placement::Rep,
-                    }
-                }
-                (Some(dl), _) if lhs_contract.contains(&dl) => {
-                    let pos = lhs_contract.iter().position(|&x| x == dl).unwrap();
-                    let matching =
-                        rs.is_some_and(|dr| rhs_contract.get(pos) == Some(&dr));
-                    if matching {
-                        // contracted shard on both sides: per-core partial
-                        // products pending a cross-core sum
-                        if !matches!(out_partial, None | Some(ReduceKind::Add)) {
-                            return Err(spec!("dot {} mixes partial kinds", bn.id.0));
+        // iterative shard resolution: match contracted pairs into pending
+        // reductions, pair batch entries, map free entries to output dims;
+        // any conflict gathers one entry and retries (each retry removes
+        // an entry, so the loop terminates)
+        let (out_shards, pend_mask, lid, rid) = 'resolve: loop {
+            let mut pend: AxesMask = 0;
+            let mut l_work = l.shards.clone();
+            let mut r_work = r.shards.clone();
+            let mut out_entries: Vec<(usize, u8)> = Vec::new();
+
+            // 1. contracted entries
+            let mut k = 0;
+            while k < l_work.len() {
+                let (dl, ax) = l_work[k];
+                if let Some(pos) = lhs_contract.iter().position(|&x| x == dl) {
+                    let matched = rhs_contract.get(pos).and_then(|&dr| {
+                        r_work.iter().position(|&(d2, a2)| d2 == dr && a2 == ax)
+                    });
+                    match matched {
+                        Some(rk) if (pend | carry) & (1 << ax) == 0 => {
+                            // contracted shard on both sides: per-core
+                            // partial products pending a subgroup sum
+                            pend |= 1 << ax;
+                            l_work.remove(k);
+                            r_work.remove(rk);
+                            continue;
                         }
-                        break Placement::Partial { kind: ReduceKind::Add };
+                        _ => {
+                            // contracted without a same-axis partner (or a
+                            // double-count): gather the lhs entry (the
+                            // post-loop coerce emits the collective)
+                            l.shards.retain(|&e| e != (dl, ax));
+                            continue 'resolve;
+                        }
                     }
-                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
-                    lp = Placement::Rep;
                 }
-                (_, Some(dr)) if rhs_contract.contains(&dr) => {
+                k += 1;
+            }
+            let mut k = 0;
+            while k < r_work.len() {
+                let (dr, ax) = r_work[k];
+                if rhs_contract.contains(&dr) {
                     // contract-sharded rhs without a matching lhs shard:
                     // gather it (the ZeRO-2 forward weight gather)
-                    rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
-                    rp = Placement::Rep;
+                    r.shards.retain(|&e| e != (dr, ax));
+                    continue 'resolve;
                 }
-                (Some(dl), Some(dr))
-                    if lhs_batch.contains(&dl) && rhs_batch.contains(&dr) =>
-                {
-                    let bl = lhs_batch.iter().position(|&x| x == dl);
-                    let br = rhs_batch.iter().position(|&x| x == dr);
-                    if bl == br {
-                        if out_partial.is_some() {
-                            return Err(spec!(
-                                "dot {} combines a partial with sharded batches",
-                                bn.id.0
-                            ));
-                        }
-                        // batch dims lead the output dims
-                        break Placement::Shard { dim: bl.unwrap() };
-                    }
-                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
-                    lp = Placement::Rep;
-                }
-                (Some(dl), None) if lhs_batch.contains(&dl) => {
-                    lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
-                    lp = Placement::Rep;
-                }
-                (None, Some(dr)) if rhs_batch.contains(&dr) => {
-                    rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
-                    rp = Placement::Rep;
-                }
-                (Some(_), Some(_)) => {
-                    // free shards on both sides: gather one operand. Prefer
-                    // the side whose replicated variant already exists (the
-                    // ZeRO weight gathered by the forward pass); otherwise
-                    // gather the lhs — the sequence-parallel all-gather of
-                    // the activations
-                    if self.has_rep_variant(ri) && !self.has_rep_variant(li) {
-                        rid = self.coerce(ri, Want::Rep, bn.meta.layer)?;
-                        rp = Placement::Rep;
-                    } else {
-                        lid = self.coerce(li, Want::Rep, bn.meta.layer)?;
-                        lp = Placement::Rep;
-                    }
-                }
-                (Some(dl), None) => {
-                    if out_partial.is_some() {
-                        return Err(spec!(
-                            "dot {} combines a partial with a sharded operand",
-                            bn.id.0
-                        ));
-                    }
-                    break Placement::Shard {
-                        dim: free_out_dim(
-                            self.base.node(li).shape.rank(),
-                            lhs_contract,
-                            lhs_batch,
-                            dl,
-                            lhs_batch.len(),
-                            0,
-                        )?,
-                    };
-                }
-                (None, Some(dr)) => {
-                    if out_partial.is_some() {
-                        return Err(spec!(
-                            "dot {} combines a partial with a sharded operand",
-                            bn.id.0
-                        ));
-                    }
-                    let lhs_rank = self.base.node(li).shape.rank();
-                    let n_lhs_free = lhs_rank - lhs_contract.len() - lhs_batch.len();
-                    break Placement::Shard {
-                        dim: free_out_dim(
-                            self.base.node(ri).shape.rank(),
-                            rhs_contract,
-                            rhs_batch,
-                            dr,
-                            lhs_batch.len(),
-                            n_lhs_free,
-                        )?,
-                    };
-                }
+                k += 1;
             }
+
+            // 2. batch entries pair elementwise at the same batch position
+            // on the same axis; the output keeps the shard at that batch
+            // dim (batch dims lead the output dims)
+            let mut k = 0;
+            while k < l_work.len() {
+                let (dl, ax) = l_work[k];
+                if let Some(pos) = lhs_batch.iter().position(|&x| x == dl) {
+                    let matched = rhs_batch.get(pos).and_then(|&dr| {
+                        r_work.iter().position(|&(d2, a2)| d2 == dr && a2 == ax)
+                    });
+                    match matched {
+                        Some(rk) => {
+                            out_entries.push((pos, ax));
+                            l_work.remove(k);
+                            r_work.remove(rk);
+                            continue;
+                        }
+                        None => {
+                            l.shards.retain(|&e| e != (dl, ax));
+                            continue 'resolve;
+                        }
+                    }
+                }
+                k += 1;
+            }
+            let mut k = 0;
+            while k < r_work.len() {
+                let (dr, ax) = r_work[k];
+                if rhs_batch.contains(&dr) {
+                    r.shards.retain(|&e| e != (dr, ax));
+                    continue 'resolve;
+                }
+                k += 1;
+            }
+
+            // 3. free entries land on their output dims
+            let lhs_rank = self.base.node(li).shape.rank();
+            let n_lhs_free = lhs_rank - lhs_contract.len() - lhs_batch.len();
+            let mut free_entries: Vec<((usize, u8), bool)> = Vec::new(); // (entry, is_lhs)
+            for &(dl, ax) in &l_work {
+                let d = free_out_dim(lhs_rank, lhs_contract, lhs_batch, dl, lhs_batch.len(), 0)?;
+                free_entries.push(((d, ax), true));
+            }
+            for &(dr, ax) in &r_work {
+                let d = free_out_dim(
+                    self.base.node(ri).shape.rank(),
+                    rhs_contract,
+                    rhs_batch,
+                    dr,
+                    lhs_batch.len(),
+                    n_lhs_free,
+                )?;
+                free_entries.push(((d, ax), false));
+            }
+
+            // 4. conflicts: an output axis may appear once, and never
+            // inside the pending mask — otherwise gather one entry. Free
+            // shards on both sides of the same axis prefer gathering the
+            // side whose replicated variant already exists (the ZeRO
+            // weight gathered by the forward pass); otherwise the lhs —
+            // the sequence-parallel all-gather of the activations.
+            let mut used: AxesMask = pend | carry;
+            for ei in 0..free_entries.len() {
+                let ((_, ax), is_lhs) = free_entries[ei];
+                if used & (1 << ax) != 0 {
+                    // decide which side to gather
+                    let earlier =
+                        free_entries[..ei].iter().find(|&&((_, a2), _)| a2 == ax);
+                    let gather_lhs = if let Some(&((_, _), other_is_lhs)) = earlier {
+                        // axis clash between two free entries
+                        if is_lhs != other_is_lhs {
+                            // free shards on both sides of one axis:
+                            // gather the side without a replicated
+                            // variant already in flight
+                            !(self.has_rep_variant(ri) && !self.has_rep_variant(li))
+                        } else {
+                            is_lhs
+                        }
+                    } else {
+                        // clash with the pending/carried mask
+                        is_lhs
+                    };
+                    if gather_lhs {
+                        // drop one lhs entry on this axis
+                        if let Some(&e) =
+                            l.shards.iter().find(|&&(_, a)| a == ax)
+                        {
+                            l.shards.retain(|&x| x != e);
+                            continue 'resolve;
+                        }
+                    }
+                    if let Some(&e) = r.shards.iter().find(|&&(_, a)| a == ax) {
+                        r.shards.retain(|&x| x != e);
+                        continue 'resolve;
+                    }
+                    // entry came from the same side twice with no removable
+                    // counterpart — gather this very entry's side
+                    let side = if is_lhs { &mut l } else { &mut r };
+                    if let Some(&e) = side.shards.iter().find(|&&(_, a)| a == ax) {
+                        side.shards.retain(|&x| x != e);
+                        continue 'resolve;
+                    }
+                    return Err(spec!("dot {} has an unresolvable shard clash", bn.id.0));
+                }
+                used |= 1 << ax;
+                out_entries.push(free_entries[ei].0);
+            }
+
+            // resolved: materialize the operands at their (possibly
+            // reduced) shard sets
+            let ls = l.shards.clone();
+            let rs = r.shards.clone();
+            let lid = self.coerce(li, &ls, keep_l, lyr)?;
+            let rid = self.coerce(ri, &rs, keep_r, lyr)?;
+            break 'resolve (out_entries, pend, lid, rid);
         };
+
         let id = self.push_node(bn, bn.op.clone(), vec![lid, rid]);
-        self.record(bn, id, result_place);
+        let mask = pend_mask | carry;
+        let place = Spmd {
+            shards: out_shards,
+            partial: if mask != 0 { Some(ReduceKind::Add) } else { None },
+            partial_axes: mask,
+        };
+        self.record_spmd(bn, id, place);
         Ok(())
     }
 
     fn visit_reshape(&mut self, bn: &Node) -> Result<()> {
         let Op::Reshape { dims } = &bn.op else { unreachable!() };
         let x = bn.inputs[0];
-        match self.place[x.idx()] {
+        match self.place[x.idx()].clone() {
             Placement::Remote => {
                 self.place[bn.id.idx()] = Placement::Remote;
                 Ok(())
             }
-            Placement::Shard { dim } => {
+            Placement::Spmd(s) if !s.shards.is_empty() => {
                 let old = &self.base.node(x).shape.dims;
-                let new_dim = map_shard_dim(old, dims, dim, self.parts as i64)
-                    .map_err(|m| spec!("reshape {}: {m}", bn.id.0))?;
                 let mut local = dims.clone();
-                local[new_dim] /= self.parts as i64;
+                let mut new_shards = Vec::with_capacity(s.shards.len());
+                for &(dim, axis) in &s.shards {
+                    let new_dim =
+                        map_shard_dim(old, dims, dim, self.axis_size(axis))
+                            .map_err(|m| spec!("reshape {}: {m}", bn.id.0))?;
+                    if new_shards.iter().any(|&(d, _)| d == new_dim) {
+                        return Err(spec!(
+                            "reshape {} folds two shard dims into one group",
+                            bn.id.0
+                        ));
+                    }
+                    local[new_dim] /= self.axis_size(axis);
+                    new_shards.push((new_dim, axis));
+                }
                 let xv = self.primary(x)?;
                 let id = self.push_node(bn, Op::Reshape { dims: local }, vec![xv]);
-                self.record(bn, id, Placement::Shard { dim: new_dim });
+                self.record_spmd(
+                    bn,
+                    id,
+                    Spmd { shards: new_shards, partial: s.partial, partial_axes: s.partial_axes },
+                );
                 Ok(())
             }
             p => {
@@ -770,19 +1012,27 @@ impl<'a> Builder<'a> {
     fn visit_transpose(&mut self, bn: &Node) -> Result<()> {
         let Op::Transpose { perm } = &bn.op else { unreachable!() };
         let x = bn.inputs[0];
-        match self.place[x.idx()] {
+        match self.place[x.idx()].clone() {
             Placement::Remote => {
                 self.place[bn.id.idx()] = Placement::Remote;
                 Ok(())
             }
-            Placement::Shard { dim } => {
-                let new_dim = perm
-                    .iter()
-                    .position(|&p| p == dim)
-                    .ok_or_else(|| spec!("transpose {} drops the shard dim", bn.id.0))?;
+            Placement::Spmd(s) if !s.shards.is_empty() => {
+                let mut new_shards = Vec::with_capacity(s.shards.len());
+                for &(dim, axis) in &s.shards {
+                    let new_dim = perm
+                        .iter()
+                        .position(|&p| p == dim)
+                        .ok_or_else(|| spec!("transpose {} drops the shard dim", bn.id.0))?;
+                    new_shards.push((new_dim, axis));
+                }
                 let xv = self.primary(x)?;
                 let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                self.record(bn, id, Placement::Shard { dim: new_dim });
+                self.record_spmd(
+                    bn,
+                    id,
+                    Spmd { shards: new_shards, partial: s.partial, partial_axes: s.partial_axes },
+                );
                 Ok(())
             }
             p => {
@@ -797,61 +1047,111 @@ impl<'a> Builder<'a> {
     fn visit_slice(&mut self, bn: &Node) -> Result<()> {
         let Op::Slice { starts, limits, strides } = &bn.op else { unreachable!() };
         let x = bn.inputs[0];
-        match self.place[x.idx()] {
+        match self.place[x.idx()].clone() {
             Placement::Remote => {
                 self.place[bn.id.idx()] = Placement::Remote;
                 Ok(())
             }
-            Placement::Partial { .. } => {
+            Placement::Spmd(s) if s.partial.is_some() => {
                 // the verifier's slice rule does not see through partials;
-                // discharge first
-                let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
-                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                self.record(bn, id, Placement::Rep);
-                Ok(())
+                // discharge first (keeping the shard entries), then slice
+                // the discharged variant
+                let shards = s.shards.clone();
+                let xv = self.coerce(x, &shards, false, bn.meta.layer)?;
+                self.slice_sharded(bn, x, xv, &shards, starts, limits, strides)
             }
-            Placement::Shard { dim } => {
-                if strides.iter().any(|&s| s != 1) {
+            Placement::Spmd(s) if !s.shards.is_empty() => {
+                if strides.iter().any(|&st| st != 1) {
                     return Err(spec!("strided slice {} on a sharded tensor", bn.id.0));
                 }
-                let base_dims = &self.base.node(x).shape.dims;
-                let local = base_dims[dim] / self.parts as i64;
-                if starts[dim] == 0 && limits[dim] == base_dims[dim] {
-                    // full range on the shard dim: pass through locally
-                    let mut l = limits.clone();
-                    l[dim] = local;
-                    self.emit_local_slice(bn, x, starts.clone(), l, Placement::Shard { dim })
-                } else if limits[dim] <= local {
-                    // stays inside the local shard: each core reads its own
-                    // expert/chunk — a per-core distinct value
-                    self.emit_local_slice(
-                        bn,
-                        x,
-                        starts.clone(),
-                        limits.clone(),
-                        Placement::PerCore,
-                    )
-                } else if starts[dim] >= local {
-                    // other cores' iterations cover this range
-                    self.place[bn.id.idx()] = Placement::Remote;
-                    Ok(())
-                } else {
-                    Err(spec!(
-                        "slice {} straddles the shard boundary (dim {dim}, [{}, {}) \
-                         with local extent {local})",
-                        bn.id.0,
-                        starts[dim],
-                        limits[dim]
-                    ))
-                }
+                let xv = self.primary(x)?;
+                self.slice_sharded(bn, x, xv, &s.shards, starts, limits, strides)?;
+                Ok(())
             }
-            p => {
+            p @ Placement::Spmd(_) => {
                 let xv = self.primary(x)?;
                 let id = self.push_node(bn, bn.op.clone(), vec![xv]);
                 self.record(bn, id, p);
                 Ok(())
             }
+            Placement::PerCore => {
+                let xv = self.primary(x)?;
+                let id = self.push_node(bn, bn.op.clone(), vec![xv]);
+                self.record(bn, id, Placement::PerCore);
+                Ok(())
+            }
         }
+    }
+
+    /// Slice a sharded value: full range on every shard dim passes through
+    /// locally; a restricted range on the (single, flat-mesh) shard dim is
+    /// the expert-parallel unroll pattern (PerCore / Remote).
+    #[allow(clippy::too_many_arguments)]
+    fn slice_sharded(
+        &mut self,
+        bn: &Node,
+        x: NodeId,
+        xv: NodeId,
+        shards: &[(usize, u8)],
+        starts: &[i64],
+        limits: &[i64],
+        strides: &[i64],
+    ) -> Result<()> {
+        if strides.iter().any(|&st| st != 1) {
+            return Err(spec!("strided slice {} on a sharded tensor", bn.id.0));
+        }
+        let base_dims = &self.base.node(x).shape.dims;
+        // which shard dims does the slice restrict?
+        let restricted: Vec<(usize, u8)> = shards
+            .iter()
+            .copied()
+            .filter(|&(d, _)| !(starts[d] == 0 && limits[d] == base_dims[d]))
+            .collect();
+        if restricted.is_empty() {
+            // full range on every shard dim: pass through locally
+            let mut l = limits.to_vec();
+            for &(d, ax) in shards {
+                l[d] = base_dims[d] / self.axis_size(ax);
+            }
+            let place = Spmd {
+                shards: shards.to_vec(),
+                partial: None,
+                partial_axes: 0,
+            };
+            return self.emit_local_slice(bn, xv, starts.to_vec(), l, Placement::Spmd(place));
+        }
+        // the expert-unroll pattern: exactly one shard entry spanning the
+        // whole (flat) mesh, restricted to one core's range
+        if restricted.len() == 1 && shards.len() == 1 && self.mesh.rank() == 1 {
+            let (dim, ax) = restricted[0];
+            let local = base_dims[dim] / self.axis_size(ax);
+            if limits[dim] <= local {
+                // stays inside the local shard: each core reads its own
+                // expert/chunk — a per-core distinct value
+                return self.emit_local_slice(
+                    bn,
+                    xv,
+                    starts.to_vec(),
+                    limits.to_vec(),
+                    Placement::PerCore,
+                );
+            } else if starts[dim] >= local {
+                // other cores' iterations cover this range
+                self.place[bn.id.idx()] = Placement::Remote;
+                return Ok(());
+            }
+            return Err(spec!(
+                "slice {} straddles the shard boundary (dim {dim}, [{}, {}) \
+                 with local extent {local})",
+                bn.id.0,
+                starts[dim],
+                limits[dim]
+            ));
+        }
+        Err(spec!(
+            "slice {} restricts shard dims {restricted:?} (unsupported on this mesh)",
+            bn.id.0
+        ))
     }
 
     /// Emit a localized slice — or alias the input when the local slice is
@@ -860,12 +1160,11 @@ impl<'a> Builder<'a> {
     fn emit_local_slice(
         &mut self,
         bn: &Node,
-        x: NodeId,
+        xv: NodeId,
         starts: Vec<i64>,
         limits: Vec<i64>,
         place: Placement,
     ) -> Result<()> {
-        let xv = self.primary(x)?;
         let local_dims = &self.out.node(xv).shape.dims;
         let identity = starts.iter().all(|&s| s == 0)
             && limits.iter().zip(local_dims).all(|(&l, &d)| l == d);
@@ -884,68 +1183,79 @@ impl<'a> Builder<'a> {
         let Op::Concat { dim } = bn.op else { unreachable!() };
         let lyr = bn.meta.layer;
         let places: Vec<Placement> =
-            bn.inputs.iter().map(|i| self.place[i.idx()]).collect();
+            bn.inputs.iter().map(|i| self.place[i.idx()].clone()).collect();
         if places.contains(&Placement::Remote) {
             self.place[bn.id.idx()] = Placement::Remote;
             return Ok(());
         }
-        let lead = places[0];
+        let lead = places[0].clone();
         let uniform = places.iter().all(|p| *p == lead);
-        let place = if uniform {
-            if let Placement::Shard { dim: d } = lead {
-                if d == dim {
+        if uniform {
+            if let Placement::Spmd(s) = &lead {
+                if s.shards.iter().any(|&(d, _)| d == dim) {
                     return Err(spec!("concat {} along its shard dim", bn.id.0));
                 }
             }
-            lead
-        } else {
-            Placement::Rep
-        };
-        let ins = if uniform {
-            bn.inputs
+            let ins = bn
+                .inputs
                 .iter()
                 .map(|&i| self.primary(i))
-                .collect::<Result<Vec<_>>>()?
+                .collect::<Result<Vec<_>>>()?;
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record(bn, id, lead);
         } else {
-            bn.inputs
+            let ins = bn
+                .inputs
                 .iter()
-                .map(|&i| self.coerce(i, Want::Rep, lyr))
-                .collect::<Result<Vec<_>>>()?
-        };
-        let id = self.push_node(bn, bn.op.clone(), ins);
-        self.record(bn, id, place);
+                .map(|&i| self.coerce(i, &[], false, lyr))
+                .collect::<Result<Vec<_>>>()?;
+            let id = self.push_node(bn, bn.op.clone(), ins);
+            self.record(bn, id, Placement::rep());
+        }
         Ok(())
     }
 
     fn visit_broadcast(&mut self, bn: &Node) -> Result<()> {
         let Op::Broadcast { mapped, dims } = &bn.op else { unreachable!() };
         let x = bn.inputs[0];
-        match self.place[x.idx()] {
+        match self.place[x.idx()].clone() {
             Placement::Remote => {
                 self.place[bn.id.idx()] = Placement::Remote;
                 Ok(())
             }
-            Placement::Shard { dim } => {
-                let out_dim = mapped[dim];
+            Placement::Spmd(s) if !s.shards.is_empty() => {
                 let mut local = dims.clone();
-                local[out_dim] /= self.parts as i64;
-                let xv = self.primary(x)?;
+                let mut new_shards = Vec::with_capacity(s.shards.len());
+                for &(dim, axis) in &s.shards {
+                    let out_dim = mapped[dim];
+                    local[out_dim] /= self.axis_size(axis);
+                    new_shards.push((out_dim, axis));
+                }
+                // a pending Add commutes with broadcast; other kinds don't
+                let (xv, partial, partial_axes) = if s.partial.is_some()
+                    && s.partial != Some(ReduceKind::Add)
+                {
+                    let shards = s.shards.clone();
+                    (self.coerce(x, &shards, false, bn.meta.layer)?, None, 0)
+                } else {
+                    (self.primary(x)?, s.partial, s.partial_axes)
+                };
                 let op = Op::Broadcast { mapped: mapped.clone(), dims: local };
                 let id = self.push_node(bn, op, vec![xv]);
-                self.record(bn, id, Placement::Shard { dim: out_dim });
+                self.record_spmd(bn, id, Spmd { shards: new_shards, partial, partial_axes });
                 Ok(())
             }
-            Placement::Partial { kind: ReduceKind::Add } => {
+            Placement::Spmd(s) if s.partial == Some(ReduceKind::Add) => {
                 // broadcast commutes with the pending sum
                 let xv = self.primary(x)?;
                 let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                self.record(bn, id, Placement::Partial { kind: ReduceKind::Add });
+                self.record_spmd(bn, id, s);
                 Ok(())
             }
-            Placement::Partial { .. } => {
-                let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
+            Placement::Spmd(s) if s.partial.is_some() => {
+                let xv = self.coerce(x, &[], false, bn.meta.layer)?;
                 let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                self.record(bn, id, Placement::Rep);
+                self.record(bn, id, Placement::rep());
                 Ok(())
             }
             p => {
@@ -960,35 +1270,52 @@ impl<'a> Builder<'a> {
     fn visit_reduce(&mut self, bn: &Node) -> Result<()> {
         let Op::Reduce { kind, dims } = &bn.op else { unreachable!() };
         let x = bn.inputs[0];
-        match self.place[x.idx()] {
+        match self.place[x.idx()].clone() {
             Placement::Remote => {
                 self.place[bn.id.idx()] = Placement::Remote;
                 Ok(())
             }
-            Placement::Partial { kind: pk } => {
-                if pk == *kind
-                    && matches!(pk, ReduceKind::Add | ReduceKind::Max | ReduceKind::Min)
-                {
-                    let xv = self.primary(x)?;
-                    let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                    self.record(bn, id, Placement::Partial { kind: pk });
-                } else {
-                    let xv = self.coerce(x, Want::Rep, bn.meta.layer)?;
-                    let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                    self.record(bn, id, Placement::Rep);
+            Placement::Spmd(s) => {
+                let mut s = s;
+                // an incoming partial must match the reduce kind (and be
+                // one of the kinds whose local/cross-core order commutes);
+                // otherwise discharge first, keeping the shard entries
+                let xv;
+                match s.partial {
+                    Some(pk)
+                        if !(pk == *kind
+                            && matches!(
+                                pk,
+                                ReduceKind::Add | ReduceKind::Max | ReduceKind::Min
+                            )) =>
+                    {
+                        let shards = s.shards.clone();
+                        xv = self.coerce(x, &shards, false, bn.meta.layer)?;
+                        s.partial = None;
+                        s.partial_axes = 0;
+                    }
+                    _ => xv = self.primary(x)?,
                 }
-                Ok(())
-            }
-            Placement::Shard { dim } => {
-                let xv = self.primary(x)?;
+                // shard entries on reduced dims become pending reductions
+                // over their axes; surviving entries renumber
+                let mut pend_axes: AxesMask = 0;
+                let mut new_shards: Vec<(usize, u8)> = Vec::new();
+                for &(dim, axis) in &s.shards {
+                    if dims.contains(&dim) {
+                        pend_axes |= 1 << axis;
+                    } else {
+                        let new_dim = dim - dims.iter().filter(|&&d| d < dim).count();
+                        new_shards.push((new_dim, axis));
+                    }
+                }
                 let id = self.push_node(bn, bn.op.clone(), vec![xv]);
-                if dims.contains(&dim) {
-                    // the local reduce covers only this core's shard
-                    self.record(bn, id, Placement::Partial { kind: *kind });
-                } else {
-                    let new_dim = dim - dims.iter().filter(|&&d| d < dim).count();
-                    self.record(bn, id, Placement::Shard { dim: new_dim });
-                }
+                let partial_axes = s.partial_axes | pend_axes;
+                let place = Spmd {
+                    shards: new_shards,
+                    partial: if partial_axes != 0 { Some(*kind) } else { None },
+                    partial_axes,
+                };
+                self.record_spmd(bn, id, place);
                 Ok(())
             }
             p => {
@@ -1004,7 +1331,7 @@ impl<'a> Builder<'a> {
         let ok = bn
             .inputs
             .iter()
-            .all(|i| self.place[i.idx()] == Placement::Rep);
+            .all(|i| matches!(&self.place[i.idx()], Placement::Spmd(s) if s.is_rep()));
         if !ok {
             return Err(spec!(
                 "opaque op '{}' at {} requires replicated operands",
@@ -1019,7 +1346,7 @@ impl<'a> Builder<'a> {
             .collect::<Result<Vec<_>>>()?;
         let meta = remap_meta(self.base, &mut self.out, &bn.meta);
         let id = self.out.push(bn.op.clone(), ins, bn.shape.clone(), meta);
-        self.record(bn, id, Placement::Rep);
+        self.record(bn, id, Placement::rep());
         Ok(())
     }
 }
@@ -1109,6 +1436,7 @@ fn sweep(g: &Graph) -> (Graph, FxHashMap<NodeId, NodeId>) {
         stack.extend(g.node(id).inputs.iter().copied());
     }
     let mut out = Graph::new(g.name.clone(), g.num_cores);
+    out.mesh = g.mesh.clone();
     let mut remap: FxHashMap<NodeId, NodeId> = FxHashMap::default();
     for n in &g.nodes {
         if !live[n.id.idx()] {

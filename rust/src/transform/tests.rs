@@ -59,9 +59,128 @@ fn column_shard_gathers_at_output() {
 fn degree_one_is_identity() {
     let base = matmul_base();
     let plan = ParallelPlan::new(Parallelism::Tensor { tp: 1 }).shard("w", 1);
-    let (dist, ann) = shard_transform(&base, &plan, 1).unwrap();
+    let (dist, ann) = shard_transform(&base, &plan, &[1]).unwrap();
     assert_eq!(dist.len(), base.len());
     assert_eq!(ann.len(), 2);
+}
+
+/// One tanh-MLP training-ish micro baseline for the mesh tests: X·W then
+/// a second contraction back to the hidden size.
+fn two_matmul_base() -> Graph {
+    let mut b = GraphBuilder::new("mm2_base", 1);
+    b.at("mlp.py", 10).in_func("mlp_fwd").layer(Some(0));
+    let x = b.parameter("x", f32s(&[4, 8]));
+    let w0 = b.parameter("w0", f32s(&[8, 8]));
+    let h = b.matmul(x, w0);
+    let a = b.tanh(h);
+    b.layer(Some(1)).at("mlp.py", 14);
+    let w1 = b.parameter("w1", f32s(&[8, 8]));
+    let y = b.matmul(a, w1);
+    b.output(y);
+    b.finish()
+}
+
+#[test]
+fn mesh_plan_emits_subgroup_collectives() {
+    use crate::ir::Mesh;
+    // dp batch-shard on axis 0, tp column/row weight shard on axis 1:
+    // the row-contraction partial discharges with a tp-subgroup
+    // all-reduce ({{0,1},{2,3}}), not the full mesh
+    let base = two_matmul_base();
+    let plan = ParallelPlan::new(Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 })
+        .shard_on("x", 0, 0)
+        .shard_on("w0", 1, 1)
+        .shard_on("w1", 0, 1);
+    let pair = apply(&base, &plan).unwrap();
+    assert_eq!(pair.dist.num_cores, 4);
+    assert_eq!(pair.dist.mesh, vec![2, 2]);
+    let mesh = Mesh::new(vec![2, 2]);
+    let tp_groups = mesh.groups_for(1 << 1);
+    let found = pair.dist.nodes.iter().any(|n| match &n.op {
+        crate::ir::Op::AllReduce { groups, .. } => *groups == tp_groups,
+        _ => false,
+    });
+    assert!(found, "expected a tp-subgroup all-reduce over {{0,1}},{{2,3}}");
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(numerical_verify(&pair, 2, 1e-4, 17).equivalent);
+}
+
+#[test]
+fn mesh_gradient_style_contraction_uses_dp_groups() {
+    use crate::ir::Mesh;
+    // gW = Xᵀ·T with both operands batch-sharded over dp: the contraction
+    // leaves a dp partial, discharged (at the replicated output) by an
+    // all-reduce over the STRIDED dp groups {{0,2},{1,3}}
+    let mut b = GraphBuilder::new("grad_base", 1);
+    b.at("backward.py", 16).in_func("backward").layer(Some(0));
+    let x = b.parameter("x", f32s(&[8, 4]));
+    let t = b.parameter("t", f32s(&[8, 4]));
+    let g = b.dot_general(x, t, vec![0], vec![0], vec![], vec![]);
+    b.output(g);
+    let base = b.finish();
+    let plan = ParallelPlan::new(Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 })
+        .shard_on("x", 0, 0)
+        .shard_on("t", 0, 0);
+    let pair = apply(&base, &plan).unwrap();
+    let mesh = Mesh::new(vec![2, 2]);
+    let dp_groups = mesh.groups_for(1 << 0);
+    assert_eq!(dp_groups.0, vec![vec![0, 2], vec![1, 3]]);
+    let found = pair.dist.nodes.iter().any(|n| match &n.op {
+        crate::ir::Op::AllReduce { groups, .. } => *groups == dp_groups,
+        _ => false,
+    });
+    assert!(found, "expected a dp-subgroup all-reduce over {{0,2}},{{1,3}}");
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(numerical_verify(&pair, 2, 1e-4, 19).equivalent);
+}
+
+#[test]
+fn mesh_with_pipeline_keeps_width_and_mesh() {
+    let base = layered_base();
+    let plan = ParallelPlan::new(Parallelism::Mesh3D { pp: 2, dp: 2, tp: 2 })
+        .shard_on("w0", 1, 1)
+        .shard_on("w1", 0, 1);
+    let pair = apply(&base, &plan).unwrap();
+    pair.dist.validate().unwrap();
+    assert_eq!(pair.dist.num_cores, 4);
+    assert_eq!(pair.dist.mesh, vec![2, 2]);
+    assert!(pair.dist.nodes.iter().any(|n| n.op.name() == "send"));
+    let report = session().verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(numerical_verify(&pair, 2, 1e-4, 23).equivalent);
+}
+
+#[test]
+fn wrong_subgroup_allreduce_fails_to_verify() {
+    use crate::ir::{Mesh, Op};
+    // mutate the tp-subgroup all-reduce to dp groups: numerics break and
+    // the verifier localizes the collective
+    let base = two_matmul_base();
+    let plan = ParallelPlan::new(Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 })
+        .shard_on("x", 0, 0)
+        .shard_on("w0", 1, 1)
+        .shard_on("w1", 0, 1);
+    let mut pair = apply(&base, &plan).unwrap();
+    let mesh = Mesh::new(vec![2, 2]);
+    let dp_groups = mesh.groups_for(1 << 0);
+    let tp_groups = mesh.groups_for(1 << 1);
+    let mut mutated = false;
+    for n in pair.dist.nodes.iter_mut() {
+        if let Op::AllReduce { groups, .. } = &mut n.op {
+            if *groups == tp_groups {
+                *groups = dp_groups.clone();
+                mutated = true;
+                break;
+            }
+        }
+    }
+    assert!(mutated, "no tp-subgroup all-reduce found to mutate");
+    pair.dist.validate().unwrap(); // still well-formed groups
+    let report = session().verify(&pair).unwrap();
+    assert!(!report.verified(), "wrong-group collective must not verify");
+    assert!(!numerical_verify(&pair, 2, 1e-4, 29).equivalent);
 }
 
 #[test]

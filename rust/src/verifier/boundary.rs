@@ -2,7 +2,7 @@
 //! `PropagateOutputToNextLayer`).
 
 use crate::egraph::EGraph;
-use crate::ir::ReduceKind;
+use crate::ir::{AxesMask, ReduceKind};
 use crate::layout::AtomStore;
 use crate::relations::Fact;
 
@@ -18,12 +18,25 @@ pub enum RelSummary {
         dim: usize,
         /// Shard count.
         parts: u32,
+        /// Mesh axis the shard spans (0 on flat meshes).
+        axis: usize,
     },
-    /// Distributed value is a per-core partial; cross-core `kind`-reduction
-    /// yields the baseline value.
+    /// Distributed value is sharded along several dims at once, each over
+    /// its own mesh axis — `(dim, parts, axis)` entries, sorted by dim.
+    /// The dp×tp residual stream of a mesh training step crosses layer
+    /// boundaries in this form.
+    MeshSharded {
+        /// `(baseline dim, shard count, mesh axis)` entries.
+        entries: Vec<(usize, u32, usize)>,
+    },
+    /// Distributed value is a per-core partial; `kind`-reducing over each
+    /// group of cores varying on the masked `axes` yields the baseline
+    /// value.
     Partial {
         /// Pending reduction.
         kind: ReduceKind,
+        /// Mesh axes the pending reduction spans (`1` on flat meshes).
+        axes: AxesMask,
     },
 }
 
@@ -39,35 +52,44 @@ pub fn summarize(fact: &Fact, store: &AtomStore, _eg: &EGraph) -> Option<RelSumm
     if fact.shard_atoms.is_empty() {
         if let Some(kind) = fact.partial {
             if fact.base_expr.structurally_equal(&fact.dist_expr, store) {
-                return Some(RelSummary::Partial { kind });
+                return Some(RelSummary::Partial { kind, axes: fact.partial_axes.max(1) });
             }
         }
         return None;
     }
-    // single-shard, axis-aligned
-    if fact.shard_atoms.len() == 1 && fact.partial.is_none() {
-        let s = fact.shard_atoms[0];
+    // axis-aligned sharding: every shard atom must lead its own base axis
+    // with the remainder matching the dist side, all other axes equal
+    if !fact.shard_atoms.is_empty() && fact.partial.is_none() {
         let base_exp = fact.base_expr.expanded(store);
-        // shard axis = base axis whose leading factor is s; all other axes
-        // must match the dist side exactly
         let dist_exp = fact.dist_expr.expanded(store);
         if base_exp.axes.len() != dist_exp.axes.len() {
             return None;
         }
-        let mut dim = None;
+        let mut entries: Vec<(usize, u32, usize)> = Vec::new();
         for (i, (b, d)) in base_exp.axes.iter().zip(&dist_exp.axes).enumerate() {
             let bf: Vec<_> = b.iter().copied().filter(|&a| store.size(a) != 1).collect();
             let df: Vec<_> = d.iter().copied().filter(|&a| store.size(a) != 1).collect();
-            if bf.first() == Some(&s) && bf[1..] == df[..] {
-                if dim.is_some() {
+            let lead_shard =
+                bf.first().copied().filter(|a| fact.shard_atoms.contains(a));
+            if let Some(s) = lead_shard {
+                if bf[1..] != df[..] {
                     return None;
                 }
-                dim = Some(i);
+                entries.push((i, store.size(s) as u32, store.mesh_axis(s) as usize));
             } else if bf != df {
                 return None;
             }
         }
-        return dim.map(|d| RelSummary::Sharded { dim: d, parts: store.size(s) as u32 });
+        // every shard atom must be accounted for by exactly one axis
+        if entries.len() != fact.shard_atoms.len() {
+            return None;
+        }
+        return Some(match entries.as_slice() {
+            [(dim, parts, axis)] => {
+                RelSummary::Sharded { dim: *dim, parts: *parts, axis: *axis }
+            }
+            _ => RelSummary::MeshSharded { entries },
+        });
     }
     None
 }
@@ -101,11 +123,36 @@ mod tests {
             dist_expr: dist,
             shard_atoms: vec![kids[0]],
             partial: None,
+            partial_axes: 0,
         };
         let eg = EGraph::new();
         assert_eq!(
             summarize(&f, &store, &eg),
-            Some(RelSummary::Sharded { dim: 1, parts: 4 })
+            Some(RelSummary::Sharded { dim: 1, parts: 4, axis: 0 })
+        );
+    }
+
+    #[test]
+    fn summarize_sharded_carries_mesh_axis() {
+        let mut store = AtomStore::new();
+        let base = AxisExpr::from_shape(&mut store, &[8, 16]);
+        let atom0 = base.axes[0][0];
+        let kids = store.split_leaf(atom0, &[2, 4]).unwrap();
+        assert!(store.set_mesh_axis(kids[0], 1));
+        let dist = AxisExpr::from_axes(vec![vec![kids[1]], base.axes[1].clone()]);
+        let f = Fact {
+            base: Id(0),
+            dist: Id(1),
+            base_expr: base,
+            dist_expr: dist,
+            shard_atoms: vec![kids[0]],
+            partial: None,
+            partial_axes: 0,
+        };
+        let eg = EGraph::new();
+        assert_eq!(
+            summarize(&f, &store, &eg),
+            Some(RelSummary::Sharded { dim: 0, parts: 2, axis: 1 })
         );
     }
 
@@ -120,11 +167,12 @@ mod tests {
             dist_expr: e,
             shard_atoms: vec![],
             partial: Some(ReduceKind::Add),
+            partial_axes: 0b10,
         };
         let eg = EGraph::new();
         assert_eq!(
             summarize(&f, &store, &eg),
-            Some(RelSummary::Partial { kind: ReduceKind::Add })
+            Some(RelSummary::Partial { kind: ReduceKind::Add, axes: 0b10 })
         );
     }
 
@@ -140,6 +188,7 @@ mod tests {
             dist_expr: dist,
             shard_atoms: vec![],
             partial: None,
+            partial_axes: 0,
         };
         let eg = EGraph::new();
         assert_eq!(summarize(&f, &store, &eg), None);

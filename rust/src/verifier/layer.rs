@@ -104,7 +104,15 @@ pub fn verify_layer(
     let d2c = register_slice(&mut eg, dslice, "D", true);
     let base_uses = bslice.graph.uses();
 
-    let mut rel = RelEngine::new(cores);
+    // the slice inherits the full graph's declared mesh, so subgroup
+    // collectives resolve against the same axes everywhere; `cores` is the
+    // flat fallback for callers without mesh info
+    let mesh = if dslice.graph.mesh.is_empty() {
+        crate::ir::Mesh::flat(cores)
+    } else {
+        dslice.graph.mesh_view()
+    };
+    let mut rel = RelEngine::with_mesh(mesh);
 
     // ---- register input relations ----
     let bparams = bslice.graph.parameters();
@@ -118,11 +126,14 @@ pub fn verify_layer(
         let bdims = &bslice.graph.node(bp).shape.dims;
         match summary {
             RelSummary::Duplicate => rel.register_replicated(&eg, bclass, dclass, bdims),
-            RelSummary::Sharded { dim, parts } => {
-                rel.register_shard(&eg, bclass, dclass, bdims, *dim, *parts)
+            RelSummary::Sharded { dim, parts, axis } => {
+                rel.register_shard(&eg, bclass, dclass, bdims, *dim, *parts, *axis)
             }
-            RelSummary::Partial { kind } => {
-                rel.register_partial(&eg, bclass, dclass, bdims, *kind)
+            RelSummary::MeshSharded { entries } => {
+                rel.register_mesh_shard(&eg, bclass, dclass, bdims, entries)
+            }
+            RelSummary::Partial { kind, axes } => {
+                rel.register_partial(&eg, bclass, dclass, bdims, *kind, *axes)
             }
         }
     }
@@ -208,11 +219,14 @@ pub fn verify_layer(
         let is_final = dslice.final_outputs.get(k).copied().unwrap_or(false);
         if is_final && !matches!(summary, Some(RelSummary::Duplicate)) {
             let residual = match &summary {
-                Some(RelSummary::Partial { kind }) => format!(
+                Some(RelSummary::Partial { kind, .. }) => format!(
                     "output is still a per-core partial ({kind:?}) — missing collective reduction?"
                 ),
                 Some(RelSummary::Sharded { dim, .. }) => format!(
                     "output is still sharded along dim {dim} — missing all-gather?"
+                ),
+                Some(RelSummary::MeshSharded { entries }) => format!(
+                    "output is still mesh-sharded ({entries:?}) — missing all-gathers?"
                 ),
                 _ => "output never related to the baseline output".to_string(),
             };
@@ -250,7 +264,15 @@ pub fn verify_layer(
         let mut ds: Vec<Discrepancy> = frontier(&dslice.graph, &related)
             .into_iter()
             .map(|id| {
+                let node = dslice.graph.node(id);
                 let reason = match outcomes[id.idx()] {
+                    StepOutcome::NoRule if node.op.is_collective() => {
+                        // the wrong-replica-group family: the operand has a
+                        // relation but this collective's groups discharge
+                        // nothing it pends
+                        "collective replica_groups do not match any pending \
+                         relation of the operand (wrong subgroup?)"
+                    }
                     StepOutcome::NoRule => {
                         "inputs are verified but no relation rule applies here"
                     }

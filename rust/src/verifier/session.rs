@@ -172,8 +172,8 @@ impl Session {
             FxHashMap::default();
         for a in &pair.annotations {
             let rel = match &a.relation {
-                crate::ir::InputRelation::ShardAlong { dim, parts } => {
-                    RelSummary::Sharded { dim: *dim, parts: *parts }
+                crate::ir::InputRelation::ShardAlong { dim, parts, axis } => {
+                    RelSummary::Sharded { dim: *dim, parts: *parts, axis: *axis }
                 }
                 crate::ir::InputRelation::Replicated => RelSummary::Duplicate,
                 crate::ir::InputRelation::DeviceIds => continue,
@@ -229,6 +229,7 @@ impl Session {
                 let t0 = Instant::now();
                 let input_rels = layer::collect_input_rels(bslice, dslice, &boundary);
                 let fp = fingerprint_pair(bslice, dslice, &input_rels, pair.dist.num_cores);
+                // (the slice hashes its own mesh axes — see hash_slice)
                 let spec_hit = speculated
                     .get(&dslice.layer)
                     .filter(|(rels, o)| rels == &input_rels && o.verified)

@@ -51,6 +51,79 @@ fn tp_matmul_verifies() {
     assert!(report.verified(), "{:?}", report.verdict);
 }
 
+/// Hand-built subgroup pair on a declared [dp, tp] mesh: x·w contracted
+/// over the tp-sharded dim leaves a tp-axis partial. Only the tp-subgroup
+/// all-reduce (`{{0,1},{2,3}}`) completes it; dp-axis or full-mesh groups
+/// double-count contributions (each dp replica holds the same partials),
+/// so those variants are genuine numerical bugs the rules must refuse.
+fn mesh_matmul_pair(groups: ReplicaGroups) -> GraphPair {
+    let mut bb = GraphBuilder::new("base", 1);
+    bb.at("mlp.py", 10).in_func("mlp_fwd");
+    let x = bb.parameter("x", f32s(&[4, 8]));
+    let w = bb.parameter("w", f32s(&[8, 16]));
+    let y = bb.matmul(x, w);
+    bb.output(y);
+    let base = bb.finish();
+
+    let mut db = GraphBuilder::new("dist", 4);
+    db.at("mlp.py", 10).in_func("mlp_fwd");
+    let xs = db.parameter("x", f32s(&[4, 4]));
+    let ws = db.parameter("w", f32s(&[4, 16]));
+    db.at("mlp.py", 11);
+    let part = db.matmul(xs, ws);
+    db.at("mlp.py", 12);
+    let out = db.all_reduce(part, ReduceKind::Add, groups);
+    db.output(out);
+    let mut dist = db.finish();
+    dist.mesh = vec![2, 2]; // [dp, tp]
+
+    // x and w sharded on the tp axis (axis 1): cores in the same tp group
+    // hold complementary halves, dp groups replicate
+    let ann = vec![
+        Annotation::shard_on(x, crate::ir::NodeId(0), 1, 2, 1),
+        Annotation::shard_on(w, crate::ir::NodeId(1), 0, 2, 1),
+    ];
+    GraphPair::new(base, dist, ann)
+}
+
+#[test]
+fn subgroup_allreduce_discharges_on_matching_axis() {
+    let tp_groups = ReplicaGroups(vec![vec![0, 1], vec![2, 3]]);
+    let pair = mesh_matmul_pair(tp_groups);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{:?}", report.verdict);
+}
+
+#[test]
+fn subgroup_allreduce_over_wrong_axis_fails() {
+    // dp-axis groups {{0,2},{1,3}} cannot discharge a tp-axis partial:
+    // each group sums two copies of the SAME local partial (cores agree on
+    // the tp digit), doubling the value instead of completing the sum
+    let dp_groups = ReplicaGroups(vec![vec![0, 2], vec![1, 3]]);
+    let pair = mesh_matmul_pair(dp_groups);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(!report.verified(), "wrong-axis subgroup reduce must not verify");
+    assert!(
+        report
+            .discrepancies()
+            .iter()
+            .any(|d| d.site == "mlp.py:12" || d.site == "mlp.py:11"),
+        "localization should land on the collective or its operand: {:?}",
+        report.discrepancies()
+    );
+}
+
+#[test]
+fn full_mesh_allreduce_cannot_discharge_subgroup_partial() {
+    // the pre-mesh behavior would happily discharge ANY add-partial with a
+    // full-mesh all-reduce; on a [2,2] mesh with a tp-axis partial that
+    // sums 4 contributions where 2 complete the value — unverifiable
+    let full = ReplicaGroups::full(4);
+    let pair = mesh_matmul_pair(full);
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(!report.verified(), "full-mesh reduce of a tp partial must not verify");
+}
+
 #[test]
 fn missing_allreduce_unverified_and_localized() {
     let pair = matmul_tp_pair(true);

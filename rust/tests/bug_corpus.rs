@@ -9,8 +9,8 @@
 //! build with the case id in the assertion message.
 
 use scalify::bugs::{
-    evaluate, new_bugs, parallel_transform_bugs, reproduced_bugs, BugCase, ExpectedLoc,
-    LocResult,
+    evaluate, new_bugs, parallel_transform_bugs, replica_group_bugs, reproduced_bugs,
+    BugCase, ExpectedLoc, LocResult,
 };
 
 /// Assert one case keeps its catalogued detection + localization outcome.
@@ -84,11 +84,20 @@ fn parallel_transform_bugs_keep_their_outcomes() {
 }
 
 #[test]
+fn replica_group_bugs_keep_their_outcomes() {
+    assert_eq!(replica_group_bugs().len(), 3, "RG#1..3");
+    for case in replica_group_bugs() {
+        assert_case(&case);
+    }
+}
+
+#[test]
 fn every_case_has_usable_ground_truth() {
     for case in reproduced_bugs()
         .iter()
         .chain(new_bugs().iter())
         .chain(parallel_transform_bugs().iter())
+        .chain(replica_group_bugs().iter())
     {
         match case.expected {
             ExpectedLoc::NotApplicable => {}
