@@ -13,7 +13,8 @@ use scalify::util::fmt_duration;
 use scalify::verifier::{Session, VerifyConfig};
 
 fn main() {
-    let cfg = LlamaConfig { layers: 2, hidden: 16, heads: 4, ffn: 32, seqlen: 4, batch: 1 };
+    let cfg =
+        LlamaConfig { layers: 2, hidden: 16, heads: 4, kv_heads: 4, ffn: 32, seqlen: 4, batch: 1 };
     let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 2 });
     let mut table = Table::new(
         "Baseline contrast — same pair, three verifiers",

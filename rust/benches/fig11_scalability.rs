@@ -13,7 +13,15 @@ use scalify::verifier::{Session, VerifyConfig};
 fn base_cfg() -> LlamaConfig {
     // Table 3 base: seqlen 64, bs 4, layers 32, tp 32, heads 32 — with
     // bench-scale layer count kept at the paper's 32
-    LlamaConfig { layers: 32, hidden: 4096, heads: 32, ffn: 14336, seqlen: 64, batch: 4 }
+    LlamaConfig {
+        layers: 32,
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 32,
+        ffn: 14336,
+        seqlen: 64,
+        batch: 4,
+    }
 }
 
 fn run(table: &mut Table, group: &str, label: String, cfg: LlamaConfig, tp: u32) {
@@ -61,7 +69,7 @@ fn main() {
     for heads in [8, 16, 32, 64] {
         let hidden = heads * 128;
         run(&mut table, "e:heads", format!("heads={heads}"),
-            LlamaConfig { heads, hidden, ..base_cfg() }, 8);
+            LlamaConfig { heads, kv_heads: heads, hidden, ..base_cfg() }, 8);
     }
 
     print!("{}", table.render());

@@ -26,7 +26,7 @@ fn main() {
             partition: false,
             parallel: false,
             memoize: false,
-            limits: RunLimits { max_iters: 24, max_nodes: 4_000 },
+            limits: RunLimits { max_iters: 24, max_nodes: 4_000, ..RunLimits::default() },
             ..VerifyConfig::default()
         });
         let t0 = std::time::Instant::now();

@@ -61,7 +61,7 @@ pub struct BugCase {
 /// Llama config used by the bug corpus: one layer, 4 heads so head-level
 /// layout faults are non-trivial.
 fn bug_llama() -> LlamaConfig {
-    LlamaConfig { layers: 1, hidden: 8, heads: 4, ffn: 16, seqlen: 4, batch: 1 }
+    LlamaConfig { layers: 1, hidden: 8, heads: 4, kv_heads: 4, ffn: 16, seqlen: 4, batch: 1 }
 }
 
 fn llama_tp() -> GraphPair {

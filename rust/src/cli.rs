@@ -18,6 +18,7 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "new",
     "reproduced",
     "transform",
+    "scale",
     "no-partition",
     "no-parallel",
     "no-memoize",
@@ -145,7 +146,9 @@ pub const KNOWN_MODELS: &[&str] = &[
     "llama-8b",
     "llama-70b",
     "llama-405b",
+    "llama-405b-like",
     "llama-tiny",
+    "llama-tiny-gqa",
     "mixtral-8x7b",
     "mixtral-8x22b",
     "mixtral-tiny",
@@ -177,7 +180,9 @@ pub fn model_pair(model: &str, par: Parallelism, layers: Option<u32>) -> Result<
         "llama-8b" => mk(LlamaConfig::llama3_8b()),
         "llama-70b" => mk(LlamaConfig::llama3_70b()),
         "llama-405b" => mk(LlamaConfig::llama3_405b()),
+        "llama-405b-like" => mk(LlamaConfig::llama3_405b_like()),
         "llama-tiny" => mk(LlamaConfig::tiny()),
+        "llama-tiny-gqa" => mk(LlamaConfig::tiny_gqa()),
         "mixtral-8x7b" => mk_mix(MixtralConfig::mixtral_8x7b()),
         "mixtral-8x22b" => mk_mix(MixtralConfig::mixtral_8x22b()),
         "mixtral-tiny" => mk_mix(MixtralConfig::tiny()),
@@ -512,6 +517,20 @@ mod tests {
         assert_eq!(config_from_flags(&f).unwrap().memo_capacity, 128);
         let f = parse_flags(&args(&["--memo-capacity", "0"])).unwrap();
         assert!(matches!(config_from_flags(&f), Err(ScalifyError::Config(_))));
+    }
+
+    #[test]
+    fn gqa_zoo_models_build() {
+        // the 405B-class entry, clipped to 2 layers so the test stays fast
+        let pair =
+            model_pair("llama-405b-like", Parallelism::Tensor { tp: 8 }, Some(2)).unwrap();
+        assert_eq!(pair.dist.num_cores, 8);
+        let tiny = model_pair("llama-tiny-gqa", Parallelism::Tensor { tp: 2 }, None).unwrap();
+        assert_eq!(tiny.dist.num_cores, 2);
+        // tp must divide the KV heads, not just the query heads
+        let err =
+            model_pair("llama-tiny-gqa", Parallelism::Tensor { tp: 4 }, None).unwrap_err();
+        assert!(err.message().contains("kv_heads"), "{err}");
     }
 
     #[test]

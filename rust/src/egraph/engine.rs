@@ -1,7 +1,20 @@
-//! Core e-graph: union-find, hash-consing, congruence closure.
+//! Core e-graph: union-find, interned hash-consing, congruence closure.
+//!
+//! Operators are **interned**: each distinct [`Op`] (attributes included)
+//! is stored once in an op table and e-nodes carry a 4-byte [`OpId`] plus
+//! an inline small-vector of child class ids ([`CNode`]). Canonicalizing
+//! an e-node for a hash-cons lookup therefore copies a handful of `u32`s
+//! — never an `Op` payload with heap `String`s, which used to dominate
+//! the saturation profile.
+//!
+//! The graph also maintains the **match index** the incremental e-matcher
+//! consumes: per-[`OpKind`] append-only logs of classes that were created
+//! or changed (merged, re-canonicalized, analysis updated). A rewrite
+//! rule holding a [`MatchCursor`] only re-examines classes logged since
+//! it last ran — see [`EGraph::candidates`].
 
 use crate::ir::{NodeId, Op, Shape};
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 /// E-class id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -13,7 +26,235 @@ impl Id {
     }
 }
 
-/// An e-node: operator + child e-classes.
+/// Interned operator handle (index into the e-graph's op table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+/// Root-operator buckets of the match index. Every [`Op`] variant maps to
+/// exactly one kind; rules declare the kinds their pattern can match at
+/// the root so the matcher never feeds them classes of other shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpKind {
+    /// `parameter`
+    Parameter = 0,
+    /// `constant`
+    Constant,
+    /// `iota`
+    Iota,
+    /// `add`
+    Add,
+    /// `subtract`
+    Sub,
+    /// `multiply`
+    Mul,
+    /// `divide`
+    Div,
+    /// `maximum`
+    Max,
+    /// `minimum`
+    Min,
+    /// `power`
+    Pow,
+    /// `negate`
+    Neg,
+    /// `exponential`
+    Exp,
+    /// `log`
+    Log,
+    /// `tanh`
+    Tanh,
+    /// `rsqrt`
+    Rsqrt,
+    /// `sqrt`
+    Sqrt,
+    /// `abs`
+    Abs,
+    /// `logistic`
+    Logistic,
+    /// `sine`
+    Sin,
+    /// `cosine`
+    Cos,
+    /// `convert`
+    Convert,
+    /// `dot`
+    Dot,
+    /// `reshape`
+    Reshape,
+    /// `transpose`
+    Transpose,
+    /// `slice`
+    Slice,
+    /// `concatenate`
+    Concat,
+    /// `broadcast`
+    Broadcast,
+    /// `reduce`
+    Reduce,
+    /// `select`
+    Select,
+    /// `compare`
+    Compare,
+    /// `all-reduce`
+    AllReduce,
+    /// `all-gather`
+    AllGather,
+    /// `reduce-scatter`
+    ReduceScatter,
+    /// `all-to-all`
+    AllToAll,
+    /// `send`
+    Send,
+    /// `recv`
+    Recv,
+    /// `tuple`
+    Tuple,
+    /// `get-tuple-element`
+    GetTupleElement,
+    /// uninterpreted custom call
+    Custom,
+}
+
+/// Number of [`OpKind`] buckets (fits a `u64` bitmask).
+pub const N_KINDS: usize = 39;
+
+/// The kind bucket of an operator.
+pub fn op_kind(op: &Op) -> OpKind {
+    match op {
+        Op::Parameter { .. } => OpKind::Parameter,
+        Op::Constant(_) => OpKind::Constant,
+        Op::Iota { .. } => OpKind::Iota,
+        Op::Add => OpKind::Add,
+        Op::Sub => OpKind::Sub,
+        Op::Mul => OpKind::Mul,
+        Op::Div => OpKind::Div,
+        Op::Max => OpKind::Max,
+        Op::Min => OpKind::Min,
+        Op::Pow => OpKind::Pow,
+        Op::Neg => OpKind::Neg,
+        Op::Exp => OpKind::Exp,
+        Op::Log => OpKind::Log,
+        Op::Tanh => OpKind::Tanh,
+        Op::Rsqrt => OpKind::Rsqrt,
+        Op::Sqrt => OpKind::Sqrt,
+        Op::Abs => OpKind::Abs,
+        Op::Logistic => OpKind::Logistic,
+        Op::Sin => OpKind::Sin,
+        Op::Cos => OpKind::Cos,
+        Op::Convert { .. } => OpKind::Convert,
+        Op::Dot { .. } => OpKind::Dot,
+        Op::Reshape { .. } => OpKind::Reshape,
+        Op::Transpose { .. } => OpKind::Transpose,
+        Op::Slice { .. } => OpKind::Slice,
+        Op::Concat { .. } => OpKind::Concat,
+        Op::Broadcast { .. } => OpKind::Broadcast,
+        Op::Reduce { .. } => OpKind::Reduce,
+        Op::Select => OpKind::Select,
+        Op::Compare(_) => OpKind::Compare,
+        Op::AllReduce { .. } => OpKind::AllReduce,
+        Op::AllGather { .. } => OpKind::AllGather,
+        Op::ReduceScatter { .. } => OpKind::ReduceScatter,
+        Op::AllToAll { .. } => OpKind::AllToAll,
+        Op::Send { .. } => OpKind::Send,
+        Op::Recv { .. } => OpKind::Recv,
+        Op::Tuple => OpKind::Tuple,
+        Op::GetTupleElement { .. } => OpKind::GetTupleElement,
+        Op::Custom { .. } => OpKind::Custom,
+    }
+}
+
+/// Bit of one kind in a roots mask.
+pub fn kind_bit(k: OpKind) -> u64 {
+    1u64 << (k as u8)
+}
+
+/// Roots mask of several kinds (what [`super::Rewrite::roots`] returns).
+pub fn kind_bits(kinds: &[OpKind]) -> u64 {
+    kinds.iter().fold(0u64, |m, &k| m | kind_bit(k))
+}
+
+/// How many child ids a [`CNode`] stores inline before spilling.
+const INLINE_CHILDREN: usize = 3;
+const SPILLED: u8 = u8::MAX;
+
+/// Child-id list with inline storage for the common arities (<= 3).
+#[derive(Clone, Debug)]
+pub struct Children {
+    len: u8,
+    inline: [Id; INLINE_CHILDREN],
+    spill: Vec<Id>,
+}
+
+impl Children {
+    fn from_slice(ids: &[Id]) -> Children {
+        if ids.len() <= INLINE_CHILDREN {
+            let mut inline = [Id(0); INLINE_CHILDREN];
+            inline[..ids.len()].copy_from_slice(ids);
+            Children { len: ids.len() as u8, inline, spill: Vec::new() }
+        } else {
+            Children { len: SPILLED, inline: [Id(0); INLINE_CHILDREN], spill: ids.to_vec() }
+        }
+    }
+
+    fn as_slice(&self) -> &[Id] {
+        if self.len == SPILLED {
+            &self.spill
+        } else {
+            &self.inline[..self.len as usize]
+        }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [Id] {
+        if self.len == SPILLED {
+            &mut self.spill
+        } else {
+            &mut self.inline[..self.len as usize]
+        }
+    }
+}
+
+impl PartialEq for Children {
+    fn eq(&self, other: &Children) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for Children {}
+impl std::hash::Hash for Children {
+    fn hash<H: std::hash::Hasher>(&self, h: &mut H) {
+        self.as_slice().hash(h)
+    }
+}
+
+/// Compact interned e-node: operator handle + child classes. This is what
+/// the hash-cons memo and the class node lists store; canonicalizing one
+/// copies 4-byte ids, never operator payloads. Resolve the operator with
+/// [`EGraph::op`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CNode {
+    /// Interned operator.
+    pub op: OpId,
+    children: Children,
+}
+
+impl CNode {
+    /// Child e-class ids.
+    pub fn children(&self) -> &[Id] {
+        self.children.as_slice()
+    }
+
+    fn canonical(&self, eg: &EGraph) -> CNode {
+        let mut c = self.clone();
+        for id in c.children.as_mut_slice() {
+            *id = eg.find(*id);
+        }
+        c
+    }
+}
+
+/// An e-node in construction form: operator + child e-classes. This is
+/// the API type [`EGraph::add`]/[`EGraph::lookup`] accept; internally the
+/// operator is interned and the node stored as a [`CNode`].
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ENode {
     /// Operator (attributes included — two `transpose`s with different
@@ -27,13 +268,6 @@ impl ENode {
     /// Construct.
     pub fn new(op: Op, children: Vec<Id>) -> ENode {
         ENode { op, children }
-    }
-
-    fn canonicalize(&self, eg: &EGraph) -> ENode {
-        ENode {
-            op: self.op.clone(),
-            children: self.children.iter().map(|&c| eg.find(c)).collect(),
-        }
     }
 }
 
@@ -57,8 +291,9 @@ impl Origin {
 /// value for folding, and a representative IR node for localization.
 #[derive(Clone, Debug)]
 pub struct ClassData {
-    /// Output shape of terms in this class (all terms agree; checked on
-    /// merge in debug builds).
+    /// Output shape of terms in this class. All terms must agree; a
+    /// disagreement on merge is recorded as a [`ShapeConflict`] the
+    /// verifier surfaces as a typed discrepancy.
     pub shape: Option<Shape>,
     /// If the class is a known scalar constant.
     pub constant: Option<f64>,
@@ -89,25 +324,81 @@ impl ClassData {
     }
 }
 
+/// A union merged two classes whose analyses disagree on shape. Rules
+/// only union terms they proved equal, and equal terms have equal shapes
+/// — so a conflict means the merge was *not* semantics-preserving and the
+/// layer verdict must not silently keep the first shape (it becomes a
+/// typed "merged classes disagree on shape" discrepancy).
+#[derive(Clone, Debug)]
+pub struct ShapeConflict {
+    /// Surviving canonical class.
+    pub class: Id,
+    /// Shape kept by the merge.
+    pub kept: Shape,
+    /// Shape the merged-away class carried.
+    pub dropped: Shape,
+    /// Representative source node of either side, for localization.
+    pub repr: Option<(bool, NodeId)>,
+}
+
 /// One equivalence class of terms.
 #[derive(Clone, Debug)]
 pub struct EClass {
     /// Canonical id (valid right after `rebuild`).
     pub id: Id,
-    /// Terms in the class.
-    pub nodes: Vec<ENode>,
+    /// Terms in the class (compact interned form).
+    pub nodes: Vec<CNode>,
     /// (parent e-node, parent class) pairs for congruence propagation.
-    pub parents: Vec<(ENode, Id)>,
+    pub parents: Vec<(CNode, Id)>,
     /// Analysis data.
     pub data: ClassData,
+    /// Bitmask of the [`OpKind`]s present among `nodes` (may be a
+    /// superset after dedup; never an undercount).
+    kinds: u64,
+}
+
+impl EClass {
+    /// Kind bitmask of the class's nodes.
+    pub fn kinds(&self) -> u64 {
+        self.kinds
+    }
+}
+
+/// Cursor into the per-kind match logs; one per (rule, e-graph) pairing.
+/// A fresh cursor replays the whole history, which is exactly the "first
+/// iteration scans everything" behavior incremental matching needs.
+#[derive(Clone, Debug)]
+pub struct MatchCursor {
+    pos: Vec<usize>,
+}
+
+impl MatchCursor {
+    /// Cursor at the beginning of every log.
+    pub fn new() -> MatchCursor {
+        MatchCursor { pos: vec![0; N_KINDS] }
+    }
+}
+
+impl Default for MatchCursor {
+    fn default() -> Self {
+        MatchCursor::new()
+    }
 }
 
 /// The e-graph.
 pub struct EGraph {
     uf: Vec<u32>,
-    memo: FxHashMap<ENode, Id>,
+    ops: Vec<Op>,
+    op_kinds: Vec<OpKind>,
+    op_ids: FxHashMap<Op, u32>,
+    memo: FxHashMap<CNode, Id>,
     classes: FxHashMap<Id, EClass>,
     worklist: Vec<Id>,
+    /// Per-kind append-only logs of classes to (re)examine. Entries may
+    /// be stale (merged away); consumers canonicalize via `find`.
+    kind_log: Vec<Vec<Id>>,
+    node_total: usize,
+    shape_conflicts: Vec<ShapeConflict>,
     /// Number of `union` calls that actually merged two classes.
     pub merges: usize,
 }
@@ -123,14 +414,20 @@ impl EGraph {
     pub fn new() -> EGraph {
         EGraph {
             uf: Vec::new(),
+            ops: Vec::new(),
+            op_kinds: Vec::new(),
+            op_ids: FxHashMap::default(),
             memo: FxHashMap::default(),
             classes: FxHashMap::default(),
             worklist: Vec::new(),
+            kind_log: vec![Vec::new(); N_KINDS],
+            node_total: 0,
+            shape_conflicts: Vec::new(),
             merges: 0,
         }
     }
 
-    /// Canonical id of `id` (path-halving find).
+    /// Canonical id of `id` (no path compression; usable with `&self`).
     pub fn find(&self, mut id: Id) -> Id {
         while self.uf[id.idx()] != id.0 {
             id = Id(self.uf[id.idx()]);
@@ -147,14 +444,40 @@ impl EGraph {
         id
     }
 
+    /// Resolve an interned operator handle.
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id.0 as usize]
+    }
+
+    /// Kind bucket of an interned operator.
+    pub fn op_kind_of(&self, id: OpId) -> OpKind {
+        self.op_kinds[id.0 as usize]
+    }
+
+    /// Distinct operators interned so far.
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    fn intern_op(&mut self, op: &Op) -> OpId {
+        if let Some(&i) = self.op_ids.get(op) {
+            return OpId(i);
+        }
+        let i = self.ops.len() as u32;
+        self.ops.push(op.clone());
+        self.op_kinds.push(op_kind(op));
+        self.op_ids.insert(op.clone(), i);
+        OpId(i)
+    }
+
     /// Number of canonical classes.
     pub fn class_count(&self) -> usize {
         self.classes.len()
     }
 
-    /// Total e-nodes across classes.
+    /// Total e-nodes across classes (maintained incrementally; O(1)).
     pub fn node_count(&self) -> usize {
-        self.classes.values().map(|c| c.nodes.len()).sum()
+        self.node_total
     }
 
     /// Iterate canonical classes.
@@ -168,33 +491,85 @@ impl EGraph {
         &self.classes[&canon]
     }
 
-    /// Mutable class data by id.
+    fn mark_kinds(&mut self, id: Id, mask: u64) {
+        let mut m = mask;
+        while m != 0 {
+            let k = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.kind_log[k].push(id);
+        }
+    }
+
+    /// Collect `(class, root-kind)` re-log marks for the parents of
+    /// `canon`, i.e. the classes whose nodes consume it.
+    fn parent_marks(&self, canon: Id) -> Vec<(Id, OpKind)> {
+        match self.classes.get(&canon) {
+            Some(class) => class
+                .parents
+                .iter()
+                .map(|(pnode, pclass)| (*pclass, self.op_kinds[pnode.op.0 as usize]))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Mutable class data by id. Analysis writes can enable new matches
+    /// at the class, at its parents, and — because rule patterns read at
+    /// most *grandchild* analysis data (e.g. div-to-mul-recip reading the
+    /// constant under a broadcast) — at its grandparents, so all three
+    /// levels are re-logged for the incremental matcher. Rules with
+    /// deeper patterns must not be added without extending this (the
+    /// matcher-differential property guards the invariant).
     pub fn data_mut(&mut self, id: Id) -> &mut ClassData {
         let canon = self.find(id);
+        let mask = self.classes[&canon].kinds;
+        let parents = self.parent_marks(canon);
+        let mut marks = parents.clone();
+        for (p, _) in &parents {
+            let p = self.find(*p);
+            marks.extend(self.parent_marks(p));
+        }
+        self.mark_kinds(canon, mask);
+        for (c, k) in marks {
+            let c = self.find(c);
+            self.kind_log[k as usize].push(c);
+        }
         &mut self.classes.get_mut(&canon).unwrap().data
     }
 
     /// Add an e-node, returning its class (hash-consed).
     pub fn add(&mut self, enode: ENode) -> Id {
-        let enode = enode.canonicalize(self);
-        if let Some(&id) = self.memo.get(&enode) {
+        let op = self.intern_op(&enode.op);
+        let children: Vec<Id> = enode.children.iter().map(|&c| self.find(c)).collect();
+        self.add_interned(op, &children)
+    }
+
+    fn add_interned(&mut self, op: OpId, children: &[Id]) -> Id {
+        let cnode = CNode { op, children: Children::from_slice(children) };
+        if let Some(&id) = self.memo.get(&cnode) {
             return self.find(id);
         }
         let id = Id(self.uf.len() as u32);
         self.uf.push(id.0);
         let mut data = ClassData::empty();
-        if let Op::Constant(c) = &enode.op {
-            if let crate::ir::ConstVal::Scalar(v) = c {
-                data.constant = Some(*v);
-            }
+        if let Op::Constant(crate::ir::ConstVal::Scalar(v)) = &self.ops[op.0 as usize] {
+            data.constant = Some(*v);
         }
-        let class = EClass { id, nodes: vec![enode.clone()], parents: Vec::new(), data };
-        for &child in &enode.children {
-            let canon = self.find(child);
-            self.classes.get_mut(&canon).unwrap().parents.push((enode.clone(), id));
+        let kind = self.op_kinds[op.0 as usize];
+        let class = EClass {
+            id,
+            nodes: vec![cnode.clone()],
+            parents: Vec::new(),
+            data,
+            kinds: kind_bit(kind),
+        };
+        for &child in children {
+            self.classes.get_mut(&child).unwrap().parents.push((cnode.clone(), id));
         }
         self.classes.insert(id, class);
-        self.memo.insert(enode, id);
+        self.memo.insert(cnode, id);
+        self.kind_log[kind as usize].push(id);
+        self.node_total += 1;
         id
     }
 
@@ -239,22 +614,54 @@ impl EGraph {
         };
         self.uf[child.idx()] = root.0;
         let child_class = self.classes.remove(&child).unwrap();
-        let root_class = self.classes.get_mut(&root).unwrap();
-        root_class.nodes.extend(child_class.nodes);
-        root_class.parents.extend(child_class.parents);
-        root_class.data.merge(&child_class.data);
+        let kinds_all;
+        let conflict;
+        {
+            let root_class = self.classes.get_mut(&root).unwrap();
+            conflict = match (&root_class.data.shape, &child_class.data.shape) {
+                (Some(kept), Some(dropped)) if kept != dropped => Some(ShapeConflict {
+                    class: root,
+                    kept: kept.clone(),
+                    dropped: dropped.clone(),
+                    repr: root_class.data.repr.or(child_class.data.repr),
+                }),
+                _ => None,
+            };
+            root_class.data.merge(&child_class.data);
+            kinds_all = root_class.kinds | child_class.kinds;
+            root_class.kinds = kinds_all;
+            root_class.nodes.extend(child_class.nodes);
+            root_class.parents.extend(child_class.parents);
+        }
+        if let Some(c) = conflict {
+            self.shape_conflicts.push(c);
+        }
         self.worklist.push(root);
+        // the survivor gained terms and/or analysis data: every rule whose
+        // root kind it now contains must re-examine it
+        self.mark_kinds(root, kinds_all);
         root
     }
 
-    /// Restore congruence invariants after unions (egg's `rebuild`).
+    /// Shape disagreements recorded by merges (empty in a sound run).
+    pub fn shape_conflicts(&self) -> &[ShapeConflict] {
+        &self.shape_conflicts
+    }
+
+    /// Restore congruence invariants after unions (egg's `rebuild`),
+    /// deferred to once per runner iteration. Only classes actually
+    /// touched by merges have their node lists re-canonicalized, and
+    /// every touched parent is re-logged for the incremental matcher.
     pub fn rebuild(&mut self) {
+        let mut touched: FxHashSet<Id> = FxHashSet::default();
+        let mut reparented: Vec<Id> = Vec::new();
         while let Some(id) = self.worklist.pop() {
             let canon = self.find_mut(id);
+            touched.insert(canon);
             let parents = std::mem::take(&mut self.classes.get_mut(&canon).unwrap().parents);
-            let mut new_parents: FxHashMap<ENode, Id> = FxHashMap::default();
+            let mut new_parents: FxHashMap<CNode, Id> = FxHashMap::default();
             for (pnode, pclass) in parents {
-                let pnode_canon = pnode.canonicalize(self);
+                let pnode_canon = pnode.canonical(self);
                 self.memo.remove(&pnode);
                 let pclass = self.find_mut(pclass);
                 if let Some(&existing) = self.memo.get(&pnode_canon) {
@@ -265,6 +672,12 @@ impl EGraph {
                 }
                 let pclass = self.find_mut(pclass);
                 self.memo.insert(pnode_canon.clone(), pclass);
+                // this parent's node points at a merged child: rules
+                // rooted at its operator must re-examine the parent class
+                let k = self.op_kinds[pnode_canon.op.0 as usize];
+                self.kind_log[k as usize].push(pclass);
+                touched.insert(pclass);
+                reparented.push(pclass);
                 new_parents.insert(pnode_canon, pclass);
             }
             let canon = self.find_mut(canon);
@@ -274,20 +687,36 @@ impl EGraph {
                 .parents
                 .extend(new_parents.into_iter());
         }
-        // canonicalize stored node lists so pattern scans see canonical ids
-        // (hash-based dedup: the previous format!()-based sort dominated
-        // the rebuild profile — see EXPERIMENTS.md §Perf)
-        let ids: Vec<Id> = self.classes.keys().copied().collect();
-        for id in ids {
-            let mut class = self.classes.remove(&id).unwrap();
+        // canonicalize the node lists of touched classes so pattern scans
+        // see canonical ids (hash-based dedup; the untouched majority of
+        // classes skips this pass entirely)
+        for raw in touched {
+            let canon = self.find(raw);
+            let Some(mut class) = self.classes.remove(&canon) else { continue };
             for n in class.nodes.iter_mut() {
-                *n = n.canonicalize(self);
+                for c in n.children.as_mut_slice() {
+                    *c = self.find(*c);
+                }
             }
-            let mut seen: rustc_hash::FxHashSet<ENode> =
-                rustc_hash::FxHashSet::default();
+            let before = class.nodes.len();
+            let mut seen: FxHashSet<CNode> = FxHashSet::default();
             class.nodes.retain(|n| seen.insert(n.clone()));
-            class.id = id;
-            self.classes.insert(id, class);
+            self.node_total -= before - class.nodes.len();
+            class.id = canon;
+            self.classes.insert(canon, class);
+        }
+        // dirtiness propagates one more hop: a merge changed every
+        // reparented class's view of its children, and rule patterns read
+        // up to grandchild analysis data — so the reparented classes'
+        // *own* parents must also be re-offered (see `data_mut`)
+        let mut grand: Vec<(Id, OpKind)> = Vec::new();
+        for p in reparented {
+            let p = self.find(p);
+            grand.extend(self.parent_marks(p));
+        }
+        for (c, k) in grand {
+            let c = self.find(c);
+            self.kind_log[k as usize].push(c);
         }
     }
 
@@ -295,13 +724,67 @@ impl EGraph {
     /// (canonicalized) e-node? Used by the relation analysis to find the
     /// baseline partner of a distributed op.
     pub fn lookup(&self, enode: &ENode) -> Option<Id> {
-        let canon = enode.canonicalize(self);
-        self.memo.get(&canon).map(|&id| self.find(id))
+        let &opi = self.op_ids.get(&enode.op)?;
+        let children: Vec<Id> = enode.children.iter().map(|&c| self.find(c)).collect();
+        let cnode = CNode { op: OpId(opi), children: Children::from_slice(&children) };
+        self.memo.get(&cnode).map(|&id| self.find(id))
     }
 
     /// True when `a` and `b` are in the same class.
     pub fn same(&self, a: Id, b: Id) -> bool {
         self.find(a) == self.find(b)
+    }
+
+    /// Collect `(class, node)` candidates whose operator kind is in the
+    /// `roots` mask, drawn from the per-kind logs past `cursor` (which
+    /// advances). `tried` counts every node examined — the e-match work
+    /// metric the scale bench reports.
+    pub fn candidates(
+        &self,
+        roots: u64,
+        cursor: &mut MatchCursor,
+        tried: &mut usize,
+    ) -> Vec<(Id, CNode)> {
+        let mut seen: FxHashSet<Id> = FxHashSet::default();
+        let mut out = Vec::new();
+        let mut m = roots;
+        while m != 0 {
+            let k = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let log = &self.kind_log[k];
+            let start = cursor.pos[k];
+            cursor.pos[k] = log.len();
+            for &raw in &log[start..] {
+                let id = self.find(raw);
+                let Some(class) = self.classes.get(&id) else { continue };
+                if !seen.insert(id) {
+                    continue;
+                }
+                *tried += class.nodes.len();
+                for n in &class.nodes {
+                    if roots & kind_bit(self.op_kinds[n.op.0 as usize]) != 0 {
+                        out.push((id, n.clone()));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The naive full rescan: every class, every node, every call — the
+    /// pre-index behavior, kept for differential testing and the bench
+    /// comparison. Same output shape as [`EGraph::candidates`].
+    pub fn candidates_naive(&self, roots: u64, tried: &mut usize) -> Vec<(Id, CNode)> {
+        let mut out = Vec::new();
+        for class in self.classes.values() {
+            *tried += class.nodes.len();
+            for n in &class.nodes {
+                if roots & kind_bit(self.op_kinds[n.op.0 as usize]) != 0 {
+                    out.push((class.id, n.clone()));
+                }
+            }
+        }
+        out
     }
 }
 
@@ -322,6 +805,18 @@ mod tests {
         let b = eg.add(ENode::new(Op::Exp, vec![x]));
         assert_eq!(a, b);
         assert_eq!(eg.class_count(), 2);
+        assert_eq!(eg.node_count(), 2);
+    }
+
+    #[test]
+    fn ops_are_interned_once() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let y = leaf(&mut eg, "y");
+        eg.add(ENode::new(Op::Exp, vec![x]));
+        eg.add(ENode::new(Op::Exp, vec![y]));
+        // two distinct parameters + one shared Exp operator
+        assert_eq!(eg.op_count(), 3);
     }
 
     #[test]
@@ -390,5 +885,96 @@ mod tests {
         eg.rebuild();
         let o = eg.class(x).data.origin;
         assert!(o.baseline && o.distributed);
+    }
+
+    #[test]
+    fn shape_conflicts_are_recorded() {
+        let mut eg = EGraph::new();
+        let x = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 0, name: "x".into() }, vec![]),
+            Shape::new(DType::F32, vec![2, 3]),
+            false,
+            NodeId(0),
+        );
+        let y = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 1, name: "y".into() }, vec![]),
+            Shape::new(DType::F32, vec![4]),
+            true,
+            NodeId(1),
+        );
+        assert!(eg.shape_conflicts().is_empty());
+        eg.union(x, y);
+        eg.rebuild();
+        let conflicts = eg.shape_conflicts();
+        assert_eq!(conflicts.len(), 1);
+        assert_ne!(conflicts[0].kept, conflicts[0].dropped);
+        // agreeing merges record nothing
+        let mut eg = EGraph::new();
+        let a = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 0, name: "a".into() }, vec![]),
+            Shape::new(DType::F32, vec![2]),
+            false,
+            NodeId(0),
+        );
+        let b = eg.add_with_data(
+            ENode::new(Op::Parameter { index: 1, name: "b".into() }, vec![]),
+            Shape::new(DType::F32, vec![2]),
+            true,
+            NodeId(1),
+        );
+        eg.union(a, b);
+        eg.rebuild();
+        assert!(eg.shape_conflicts().is_empty());
+    }
+
+    #[test]
+    fn candidates_are_incremental() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let t = eg.add(ENode::new(Op::Transpose { perm: vec![1, 0] }, vec![x]));
+        let roots = kind_bits(&[OpKind::Transpose]);
+        let mut cursor = MatchCursor::new();
+        let mut tried = 0;
+        let first = eg.candidates(roots, &mut cursor, &mut tried);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].0, t);
+        assert!(tried >= 1);
+        // nothing changed: the cursor has consumed the log
+        let again = eg.candidates(roots, &mut cursor, &mut tried);
+        assert!(again.is_empty());
+        // a new transpose shows up incrementally
+        let y = leaf(&mut eg, "y");
+        let t2 = eg.add(ENode::new(Op::Transpose { perm: vec![1, 0] }, vec![y]));
+        let fresh = eg.candidates(roots, &mut cursor, &mut tried);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].0, t2);
+        // the naive matcher rescans both every time
+        let mut naive_tried = 0;
+        let naive = eg.candidates_naive(roots, &mut naive_tried);
+        assert_eq!(naive.len(), 2);
+        assert_eq!(naive_tried, eg.node_count());
+    }
+
+    #[test]
+    fn merged_classes_reenter_the_match_log() {
+        let mut eg = EGraph::new();
+        let x = leaf(&mut eg, "x");
+        let y = leaf(&mut eg, "y");
+        let fx = eg.add(ENode::new(Op::Exp, vec![x]));
+        let _fy = eg.add(ENode::new(Op::Exp, vec![y]));
+        let roots = kind_bits(&[OpKind::Exp]);
+        let mut cursor = MatchCursor::new();
+        let mut tried = 0;
+        let first = eg.candidates(roots, &mut cursor, &mut tried);
+        assert_eq!(first.len(), 2);
+        assert!(eg.candidates(roots, &mut cursor, &mut tried).is_empty());
+        // merging the children re-logs the parents (congruence changed them)
+        eg.union(x, y);
+        eg.rebuild();
+        let after = eg.candidates(roots, &mut cursor, &mut tried);
+        assert!(
+            after.iter().any(|(c, _)| eg.same(*c, fx)),
+            "merged parent class must be re-offered to exp-root rules"
+        );
     }
 }

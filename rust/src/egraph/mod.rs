@@ -8,11 +8,23 @@
 //! ([`crate::relations`]) work over canonical e-class ids — two nodes
 //! whose classes merge are semantically equal, and every union is
 //! justified by a rewrite rule (soundness, paper §5.1).
+//!
+//! The hot path is engineered for scale (the paper's "405B in minutes"
+//! claim): operators are interned ([`OpId`]) so hash-consing never clones
+//! attribute payloads, rules e-match through a classes-by-root-op index
+//! with per-rule dirty cursors ([`MatchCursor`]), congruence restoration
+//! happens once per iteration, and a backoff scheduler throttles
+//! match-heavy rules ([`RunLimits::match_limit`]).
 
 mod engine;
 mod rewrite;
 pub mod runner;
 
-pub use engine::{EClass, EGraph, ENode, Id, Origin};
+pub use engine::{
+    kind_bit, kind_bits, op_kind, CNode, EClass, EGraph, ENode, Id, MatchCursor, OpId, OpKind,
+    Origin, ShapeConflict, N_KINDS,
+};
 pub use rewrite::{default_rules, Rewrite, RuleSet};
-pub use runner::{RunLimits, RunReport, Runner, StopReason};
+pub use runner::{
+    merge_rule_stats, MatchMode, RuleStat, RunLimits, RunReport, Runner, StopReason,
+};

@@ -1,35 +1,30 @@
 //! Rewrite rules (the paper's reusable rule templates, §4/§6).
 //!
-//! Rules are *programmatic appliers*: each scans the e-graph for its
-//! pattern and emits unions / new e-nodes. This mirrors how the paper's
-//! 25 meta-rules are parameterized templates ("polymorphic over operator
-//! types") rather than fixed syntactic patterns. Every rule is
+//! Rules are *programmatic appliers*: each declares the operator kinds it
+//! can match at the root of its pattern ([`Rewrite::roots`]) and is fed
+//! `(class, node)` candidates by the runner's matcher — incrementally
+//! (only classes created or changed since the rule last ran) or naively
+//! (full rescan, kept for differential testing). This mirrors how the
+//! paper's 25 meta-rules are parameterized templates ("polymorphic over
+//! operator types") rather than fixed syntactic patterns. Every rule is
 //! semantics-preserving, which is what keeps the verifier sound: a union
 //! can only ever merge terms a rule proved equal.
 
-use super::{EGraph, ENode, Id};
+use super::engine::{kind_bits, CNode, EGraph, ENode, Id, OpKind};
 use crate::ir::{ConstVal, Op};
+use rustc_hash::FxHashSet;
 
 /// A rewrite rule.
 pub trait Rewrite: Send + Sync {
     /// Rule name (for reports).
     fn name(&self) -> &'static str;
-    /// Scan the e-graph, apply everywhere, return number of unions/adds.
-    fn apply(&self, eg: &mut EGraph) -> usize;
-}
-
-/// Collect `(class, enode)` pairs matching a predicate, avoiding borrow
-/// issues between scanning and mutation.
-fn collect<F: Fn(&ENode) -> bool>(eg: &EGraph, pred: F) -> Vec<(Id, ENode)> {
-    let mut out = Vec::new();
-    for class in eg.classes() {
-        for node in &class.nodes {
-            if pred(node) {
-                out.push((class.id, node.clone()));
-            }
-        }
-    }
-    out
+    /// Bitmask of [`OpKind`]s the rule matches at the root of its pattern
+    /// (build with [`kind_bits`]). The matcher only feeds it candidates
+    /// of these kinds.
+    fn roots(&self) -> u64;
+    /// Apply over the supplied candidates, emitting unions / new e-nodes;
+    /// return the number of unions performed.
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize;
 }
 
 fn compose_perm(outer: &[usize], inner: &[usize]) -> Vec<usize> {
@@ -47,12 +42,20 @@ impl Rewrite for TransposeFusion {
     fn name(&self) -> &'static str {
         "transpose-fusion"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Transpose])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Transpose { .. })) {
-            let Op::Transpose { perm } = &node.op else { unreachable!() };
-            if is_identity(perm) {
-                let child = eg.find(node.children[0]);
+        for (cls, node) in cands {
+            let cls = *cls;
+            let perm = match eg.op(node.op) {
+                Op::Transpose { perm } => perm.clone(),
+                _ => continue,
+            };
+            let child0 = node.children()[0];
+            if is_identity(&perm) {
+                let child = eg.find(child0);
                 if !eg.same(cls, child) {
                     eg.union(cls, child);
                     n += 1;
@@ -60,30 +63,33 @@ impl Rewrite for TransposeFusion {
                 continue;
             }
             // look one level down for another transpose
-            let inner_nodes: Vec<ENode> = eg.class(node.children[0]).nodes.clone();
+            let inner_nodes: Vec<CNode> = eg.class(child0).nodes.clone();
             for inner in inner_nodes {
-                if let Op::Transpose { perm: ip } = &inner.op {
-                    let composed = compose_perm(perm, ip);
-                    let new = if is_identity(&composed) {
-                        eg.find(inner.children[0])
-                    } else {
-                        let shape = eg.class(cls).data.shape.clone();
-                        let id = eg.add(ENode::new(
-                            Op::Transpose { perm: composed },
-                            vec![inner.children[0]],
-                        ));
-                        if let Some(s) = shape {
-                            let d = eg.data_mut(id);
-                            if d.shape.is_none() {
-                                d.shape = Some(s);
-                            }
+                let composed = match eg.op(inner.op) {
+                    Op::Transpose { perm: ip } => compose_perm(&perm, ip),
+                    _ => continue,
+                };
+                let inner_child = inner.children()[0];
+                let new = if is_identity(&composed) {
+                    eg.find(inner_child)
+                } else {
+                    let shape = eg.class(cls).data.shape.clone();
+                    let id = eg.add(ENode::new(
+                        Op::Transpose { perm: composed },
+                        vec![inner_child],
+                    ));
+                    // only touch data_mut (which dirty-marks the class)
+                    // when there is actually something to write
+                    if let Some(s) = shape {
+                        if eg.class(id).data.shape.is_none() {
+                            eg.data_mut(id).shape = Some(s);
                         }
-                        id
-                    };
-                    if !eg.same(cls, new) {
-                        eg.union(cls, new);
-                        n += 1;
                     }
+                    id
+                };
+                if !eg.same(cls, new) {
+                    eg.union(cls, new);
+                    n += 1;
                 }
             }
         }
@@ -97,10 +103,14 @@ impl Rewrite for ReshapeFusion {
     fn name(&self) -> &'static str {
         "reshape-fusion"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Reshape])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Reshape { .. })) {
-            let child = eg.find(node.children[0]);
+        for (cls, node) in cands {
+            let cls = *cls;
+            let child = eg.find(node.children()[0]);
             let out_shape = eg.class(cls).data.shape.clone();
             let in_shape = eg.class(child).data.shape.clone();
             if let (Some(o), Some(i)) = (&out_shape, &in_shape) {
@@ -113,18 +123,20 @@ impl Rewrite for ReshapeFusion {
                 }
             }
             // reshape(reshape(x)) -> reshape(x) (same final shape)
-            let Op::Reshape { dims } = &node.op else { unreachable!() };
-            let inner_nodes: Vec<ENode> = eg.class(child).nodes.clone();
+            let dims = match eg.op(node.op) {
+                Op::Reshape { dims } => dims.clone(),
+                _ => continue,
+            };
+            let inner_nodes: Vec<CNode> = eg.class(child).nodes.clone();
             for inner in inner_nodes {
-                if matches!(inner.op, Op::Reshape { .. }) {
+                if matches!(eg.op(inner.op), Op::Reshape { .. }) {
                     let id = eg.add(ENode::new(
                         Op::Reshape { dims: dims.clone() },
-                        vec![inner.children[0]],
+                        vec![inner.children()[0]],
                     ));
                     if let Some(s) = out_shape.clone() {
-                        let d = eg.data_mut(id);
-                        if d.shape.is_none() {
-                            d.shape = Some(s);
+                        if eg.class(id).data.shape.is_none() {
+                            eg.data_mut(id).shape = Some(s);
                         }
                     }
                     if !eg.same(cls, id) {
@@ -145,46 +157,47 @@ impl Rewrite for ConvertElim {
     fn name(&self) -> &'static str {
         "convert-elim"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Convert])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Convert { .. })) {
-            let Op::Convert { to } = node.op else { unreachable!() };
-            let child = eg.find(node.children[0]);
-            if let Some(s) = &eg.class(child).data.shape {
-                if s.dtype == to {
-                    if !eg.same(cls, child) {
-                        eg.union(cls, child);
-                        n += 1;
-                    }
-                    continue;
+        for (cls, node) in cands {
+            let cls = *cls;
+            let to = match eg.op(node.op) {
+                Op::Convert { to } => *to,
+                _ => continue,
+            };
+            let child = eg.find(node.children()[0]);
+            let child_dtype = eg.class(child).data.shape.as_ref().map(|s| s.dtype);
+            if child_dtype == Some(to) {
+                if !eg.same(cls, child) {
+                    eg.union(cls, child);
+                    n += 1;
                 }
+                continue;
             }
             // convert(convert(x, t1), t2): collapse only when the inner
             // conversion does not truncate (mantissa(t1) >= mantissa(src)),
             // otherwise the chain is *not* equal to convert(x, t2) — this is
             // exactly the precision-bug pattern we must not erase.
-            let inner_nodes: Vec<ENode> = eg.class(child).nodes.clone();
+            let inner_nodes: Vec<CNode> = eg.class(child).nodes.clone();
             for inner in inner_nodes {
-                if let Op::Convert { to: t1 } = inner.op {
-                    let src = eg
-                        .class(inner.children[0])
-                        .data
-                        .shape
-                        .as_ref()
-                        .map(|s| s.dtype);
-                    if let Some(src) = src {
-                        if t1.mantissa_bits() >= src.mantissa_bits()
-                            && t1.is_float()
-                            && src.is_float()
-                        {
-                            let id = eg.add(ENode::new(
-                                Op::Convert { to },
-                                vec![inner.children[0]],
-                            ));
-                            if !eg.same(cls, id) {
-                                eg.union(cls, id);
-                                n += 1;
-                            }
+                let t1 = match eg.op(inner.op) {
+                    Op::Convert { to: t1 } => *t1,
+                    _ => continue,
+                };
+                let inner_child = inner.children()[0];
+                let src = eg.class(inner_child).data.shape.as_ref().map(|s| s.dtype);
+                if let Some(src) = src {
+                    if t1.mantissa_bits() >= src.mantissa_bits()
+                        && t1.is_float()
+                        && src.is_float()
+                    {
+                        let id = eg.add(ENode::new(Op::Convert { to }, vec![inner_child]));
+                        if !eg.same(cls, id) {
+                            eg.union(cls, id);
+                            n += 1;
                         }
                     }
                 }
@@ -200,10 +213,21 @@ impl Rewrite for Commute {
     fn name(&self) -> &'static str {
         "commute"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Add, OpKind::Mul, OpKind::Max, OpKind::Min])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in collect(eg, |n| n.op.is_commutative() && n.children.len() == 2) {
-            let flipped = ENode::new(node.op.clone(), vec![node.children[1], node.children[0]]);
+        for (cls, node) in cands {
+            let cls = *cls;
+            if node.children().len() != 2 {
+                continue;
+            }
+            let op = eg.op(node.op).clone();
+            if !op.is_commutative() {
+                continue;
+            }
+            let flipped = ENode::new(op, vec![node.children()[1], node.children()[0]]);
             let id = eg.add(flipped);
             if !eg.same(cls, id) {
                 eg.union(cls, id);
@@ -220,34 +244,51 @@ impl Rewrite for ConstFold {
     fn name(&self) -> &'static str {
         "const-fold"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[
+            OpKind::Add,
+            OpKind::Sub,
+            OpKind::Mul,
+            OpKind::Div,
+            OpKind::Max,
+            OpKind::Min,
+            OpKind::Pow,
+            OpKind::Neg,
+            OpKind::Exp,
+            OpKind::Log,
+            OpKind::Sqrt,
+            OpKind::Rsqrt,
+            OpKind::Abs,
+        ])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut pending: Vec<(Id, f64)> = Vec::new();
-        for class in eg.classes() {
-            if class.data.constant.is_some() {
+        let mut done: FxHashSet<Id> = FxHashSet::default();
+        for (cls, node) in cands {
+            let cls = eg.find(*cls);
+            if done.contains(&cls) || eg.class(cls).data.constant.is_some() {
                 continue;
             }
-            for node in &class.nodes {
-                let cv = |i: usize| eg.class(node.children[i]).data.constant;
-                let v = match node.op {
-                    Op::Add => cv(0).zip(cv(1)).map(|(a, b)| a + b),
-                    Op::Sub => cv(0).zip(cv(1)).map(|(a, b)| a - b),
-                    Op::Mul => cv(0).zip(cv(1)).map(|(a, b)| a * b),
-                    Op::Div => cv(0).zip(cv(1)).map(|(a, b)| a / b),
-                    Op::Max => cv(0).zip(cv(1)).map(|(a, b)| a.max(b)),
-                    Op::Min => cv(0).zip(cv(1)).map(|(a, b)| a.min(b)),
-                    Op::Pow => cv(0).zip(cv(1)).map(|(a, b)| a.powf(b)),
-                    Op::Neg => cv(0).map(|a| -a),
-                    Op::Exp => cv(0).map(f64::exp),
-                    Op::Log => cv(0).map(f64::ln),
-                    Op::Sqrt => cv(0).map(f64::sqrt),
-                    Op::Rsqrt => cv(0).map(|a| 1.0 / a.sqrt()),
-                    Op::Abs => cv(0).map(f64::abs),
-                    _ => None,
-                };
-                if let Some(v) = v {
-                    pending.push((class.id, v));
-                    break;
-                }
+            let cv = |i: usize| eg.class(node.children()[i]).data.constant;
+            let v = match eg.op(node.op) {
+                Op::Add => cv(0).zip(cv(1)).map(|(a, b)| a + b),
+                Op::Sub => cv(0).zip(cv(1)).map(|(a, b)| a - b),
+                Op::Mul => cv(0).zip(cv(1)).map(|(a, b)| a * b),
+                Op::Div => cv(0).zip(cv(1)).map(|(a, b)| a / b),
+                Op::Max => cv(0).zip(cv(1)).map(|(a, b)| a.max(b)),
+                Op::Min => cv(0).zip(cv(1)).map(|(a, b)| a.min(b)),
+                Op::Pow => cv(0).zip(cv(1)).map(|(a, b)| a.powf(b)),
+                Op::Neg => cv(0).map(|a| -a),
+                Op::Exp => cv(0).map(f64::exp),
+                Op::Log => cv(0).map(f64::ln),
+                Op::Sqrt => cv(0).map(f64::sqrt),
+                Op::Rsqrt => cv(0).map(|a| 1.0 / a.sqrt()),
+                Op::Abs => cv(0).map(f64::abs),
+                _ => None,
+            };
+            if let Some(v) = v {
+                pending.push((cls, v));
+                done.insert(cls);
             }
         }
         let n = pending.len();
@@ -268,16 +309,23 @@ impl Rewrite for DivToMulRecip {
     fn name(&self) -> &'static str {
         "div-to-mul-recip"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Div])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Div)) {
+        for (cls, node) in cands {
+            let cls = *cls;
+            let lhs = node.children()[0];
+            let rhs = node.children()[1];
             // rhs must be broadcast(const c) or const c
-            let rhs_nodes: Vec<ENode> = eg.class(node.children[1]).nodes.clone();
+            let rhs_nodes: Vec<CNode> = eg.class(rhs).nodes.clone();
             for rn in rhs_nodes {
-                let (bc_op, c) = match &rn.op {
+                let (bc_mapped, c) = match eg.op(rn.op) {
                     Op::Broadcast { mapped, .. } => {
-                        let c = eg.class(rn.children[0]).data.constant;
-                        (Some((mapped.clone(), rn.children[0])), c)
+                        let m = mapped.clone();
+                        let c = eg.class(rn.children()[0]).data.constant;
+                        (Some(m), c)
                     }
                     Op::Constant(ConstVal::Scalar(v)) => (None, Some(*v)),
                     _ => (None, None),
@@ -286,23 +334,23 @@ impl Rewrite for DivToMulRecip {
                 if c == 0.0 {
                     continue;
                 }
-                let recip = eg.add(ENode::new(Op::Constant(ConstVal::Scalar(1.0 / c)), vec![]));
-                let rhs_shape = eg.class(node.children[1]).data.shape.clone();
-                let recip_full = match (&bc_op, rhs_shape) {
-                    (Some((mapped, _)), Some(shape)) => {
+                let recip =
+                    eg.add(ENode::new(Op::Constant(ConstVal::Scalar(1.0 / c)), vec![]));
+                let rhs_shape = eg.class(rhs).data.shape.clone();
+                let recip_full = match (&bc_mapped, rhs_shape) {
+                    (Some(mapped), Some(shape)) => {
                         let id = eg.add(ENode::new(
                             Op::Broadcast { mapped: mapped.clone(), dims: shape.dims.clone() },
                             vec![recip],
                         ));
-                        let d = eg.data_mut(id);
-                        if d.shape.is_none() {
-                            d.shape = Some(shape);
+                        if eg.class(id).data.shape.is_none() {
+                            eg.data_mut(id).shape = Some(shape);
                         }
                         id
                     }
                     _ => recip,
                 };
-                let mul = eg.add(ENode::new(Op::Mul, vec![node.children[0], recip_full]));
+                let mul = eg.add(ENode::new(Op::Mul, vec![lhs, recip_full]));
                 if !eg.same(cls, mul) {
                     eg.union(cls, mul);
                     n += 1;
@@ -320,54 +368,65 @@ impl Rewrite for SliceReassembly {
     fn name(&self) -> &'static str {
         "slice-reassembly"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Concat])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        'outer: for (cls, node) in collect(eg, |n| matches!(n.op, Op::Concat { .. })) {
-            let Op::Concat { dim } = node.op else { unreachable!() };
+        'outer: for (cls, node) in cands {
+            let cls = *cls;
+            let dim = match eg.op(node.op) {
+                Op::Concat { dim } => *dim,
+                _ => continue,
+            };
             // each child must be slice(x, ...) of the same x along `dim`,
             // contiguous from 0 to the full size
             let mut src: Option<Id> = None;
             let mut cursor = 0i64;
-            for &child in &node.children {
+            for &child in node.children() {
                 let mut matched = false;
                 for cn in eg.class(child).nodes.clone() {
-                    if let Op::Slice { starts, limits, strides } = &cn.op {
-                        if strides.iter().any(|&s| s != 1) {
-                            continue;
+                    let slice = match eg.op(cn.op) {
+                        Op::Slice { starts, limits, strides } => {
+                            Some((starts.clone(), limits.clone(), strides.clone()))
                         }
-                        // full range on all dims except `dim`
-                        let in_shape = match &eg.class(cn.children[0]).data.shape {
-                            Some(s) => s.clone(),
-                            None => continue,
-                        };
-                        let full_elsewhere = starts.iter().zip(limits).enumerate().all(
-                            |(i, (&s, &l))| i == dim || (s == 0 && l == in_shape.dims[i]),
-                        );
-                        if !full_elsewhere || starts[dim] != cursor {
-                            continue;
-                        }
-                        let x = eg.find(cn.children[0]);
-                        if let Some(prev) = src {
-                            if prev != x {
-                                continue;
-                            }
-                        }
-                        src = Some(x);
-                        cursor = limits[dim];
-                        matched = true;
-                        break;
+                        _ => None,
+                    };
+                    let Some((starts, limits, strides)) = slice else { continue };
+                    if strides.iter().any(|&s| s != 1) {
+                        continue;
                     }
+                    // full range on all dims except `dim`
+                    let in_shape = match &eg.class(cn.children()[0]).data.shape {
+                        Some(s) => s.clone(),
+                        None => continue,
+                    };
+                    let full_elsewhere = starts.iter().zip(&limits).enumerate().all(
+                        |(i, (&s, &l))| i == dim || (s == 0 && l == in_shape.dims[i]),
+                    );
+                    if !full_elsewhere || starts[dim] != cursor {
+                        continue;
+                    }
+                    let x = eg.find(cn.children()[0]);
+                    if let Some(prev) = src {
+                        if prev != x {
+                            continue;
+                        }
+                    }
+                    src = Some(x);
+                    cursor = limits[dim];
+                    matched = true;
+                    break;
                 }
                 if !matched {
                     continue 'outer;
                 }
             }
             if let Some(x) = src {
-                if let Some(xs) = &eg.class(x).data.shape {
-                    if xs.dims[dim] == cursor && !eg.same(cls, x) {
-                        eg.union(cls, x);
-                        n += 1;
-                    }
+                let full = eg.class(x).data.shape.as_ref().map(|s| s.dims[dim]);
+                if full == Some(cursor) && !eg.same(cls, x) {
+                    eg.union(cls, x);
+                    n += 1;
                 }
             }
         }
@@ -381,15 +440,24 @@ impl Rewrite for FullSliceElim {
     fn name(&self) -> &'static str {
         "full-slice-elim"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Slice])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in collect(eg, |n| matches!(n.op, Op::Slice { .. })) {
-            let Op::Slice { starts, limits, strides } = &node.op else { unreachable!() };
-            let child = eg.find(node.children[0]);
-            let Some(in_shape) = eg.class(child).data.shape.clone() else { continue };
-            let full = strides.iter().all(|&s| s == 1)
-                && starts.iter().all(|&s| s == 0)
-                && limits.iter().zip(&in_shape.dims).all(|(&l, &d)| l == d);
+        for (cls, node) in cands {
+            let cls = *cls;
+            let full = {
+                let Op::Slice { starts, limits, strides } = eg.op(node.op) else {
+                    continue;
+                };
+                let child = eg.find(node.children()[0]);
+                let Some(in_shape) = &eg.class(child).data.shape else { continue };
+                strides.iter().all(|&s| s == 1)
+                    && starts.iter().all(|&s| s == 0)
+                    && limits.iter().zip(&in_shape.dims).all(|(&l, &d)| l == d)
+            };
+            let child = eg.find(node.children()[0]);
             if full && !eg.same(cls, child) {
                 eg.union(cls, child);
                 n += 1;
@@ -405,23 +473,28 @@ impl Rewrite for IdentityElim {
     fn name(&self) -> &'static str {
         "identity-elim"
     }
-    fn apply(&self, eg: &mut EGraph) -> usize {
+    fn roots(&self) -> u64 {
+        kind_bits(&[OpKind::Add, OpKind::Mul])
+    }
+    fn apply(&self, eg: &mut EGraph, cands: &[(Id, CNode)]) -> usize {
         let mut n = 0;
-        for (cls, node) in
-            collect(eg, |n| matches!(n.op, Op::Add | Op::Mul) && n.children.len() == 2)
-        {
-            let ident = match node.op {
+        for (cls, node) in cands {
+            let cls = *cls;
+            if node.children().len() != 2 {
+                continue;
+            }
+            let ident = match eg.op(node.op) {
                 Op::Add => 0.0,
                 Op::Mul => 1.0,
-                _ => unreachable!(),
+                _ => continue,
             };
             for (keep, other) in
-                [(node.children[0], node.children[1]), (node.children[1], node.children[0])]
+                [(node.children()[0], node.children()[1]), (node.children()[1], node.children()[0])]
             {
                 let other_is_ident = eg.class(other).data.constant == Some(ident)
                     || eg.class(other).nodes.iter().any(|cn| {
-                        matches!(cn.op, Op::Broadcast { .. })
-                            && eg.class(cn.children[0]).data.constant == Some(ident)
+                        matches!(eg.op(cn.op), Op::Broadcast { .. })
+                            && eg.class(cn.children()[0]).data.constant == Some(ident)
                     });
                 if other_is_ident && !eg.same(cls, keep) {
                     eg.union(cls, keep);
@@ -493,6 +566,7 @@ impl Default for RuleSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::egraph::{RunLimits, Runner};
     use crate::ir::{DType, Shape};
 
     fn leaf(eg: &mut EGraph, name: &str, dims: &[i64]) -> Id {
@@ -506,16 +580,8 @@ mod tests {
 
     fn saturate(eg: &mut EGraph) {
         let rules = default_rules();
-        for _ in 0..10 {
-            let mut changed = 0;
-            for r in &rules {
-                changed += r.apply(eg);
-                eg.rebuild();
-            }
-            if changed == 0 {
-                break;
-            }
-        }
+        let mut runner = Runner::new(&rules, RunLimits::default());
+        runner.run(eg);
     }
 
     #[test]

@@ -1,24 +1,76 @@
-//! Saturation runner with node/iteration limits.
+//! Saturation runner: indexed incremental e-matching, a backoff rule
+//! scheduler, one rebuild per iteration, and node/iteration limits.
 //!
 //! Naively constructing e-graphs "easily leads to exponential blow up in
 //! time and memory usage" (paper §4) — the runner enforces the budgets
-//! that graph partitioning makes sufficient: per-layer subgraphs saturate
-//! in a handful of iterations well under the limits.
+//! that graph partitioning makes sufficient, and keeps the per-iteration
+//! cost proportional to what actually changed:
+//!
+//! * **Indexed incremental matching** — each rule holds a
+//!   [`MatchCursor`] into the e-graph's per-kind match logs, so an
+//!   iteration only offers it classes created or changed since the rule
+//!   last ran (the naive full rescan survives as [`MatchMode::Naive`] for
+//!   differential testing and the bench comparison).
+//! * **One rebuild per iteration** — congruence restoration is deferred
+//!   to a single [`EGraph::rebuild`] after the rule pass instead of one
+//!   rebuild per rule (egg's deferred-rebuild design).
+//! * **Backoff scheduling** — a rule whose candidate set exceeds
+//!   [`RunLimits::match_limit`] in one iteration is banned for a doubling
+//!   number of iterations, throttling match-heavy, low-yield rules.
 
+use super::engine::MatchCursor;
 use super::{EGraph, Rewrite};
+use std::time::{Duration, Instant};
 
-/// Saturation budgets.
+/// E-matching strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchMode {
+    /// Index + per-rule dirty cursors (the default).
+    Indexed,
+    /// Full rescan of every class by every rule every iteration — the
+    /// pre-index behavior, kept behind the `SCALIFY_NAIVE_MATCH=1`
+    /// environment toggle for differential tests and benchmarks.
+    Naive,
+}
+
+impl MatchMode {
+    /// [`MatchMode::Naive`] when `SCALIFY_NAIVE_MATCH` is `1`/`true`,
+    /// else [`MatchMode::Indexed`].
+    pub fn from_env() -> MatchMode {
+        match std::env::var("SCALIFY_NAIVE_MATCH") {
+            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => MatchMode::Naive,
+            _ => MatchMode::Indexed,
+        }
+    }
+}
+
+/// Saturation budgets and matching strategy.
 #[derive(Clone, Copy, Debug)]
 pub struct RunLimits {
     /// Maximum rewrite iterations.
     pub max_iters: usize,
-    /// Abort when the e-graph exceeds this many e-nodes.
+    /// Abort when the e-graph exceeds this many e-nodes (enforced once
+    /// per iteration, at the rebuild point).
     pub max_nodes: usize,
+    /// Matching strategy (see [`MatchMode`]).
+    pub match_mode: MatchMode,
+    /// Backoff threshold: a rule offered more than this many candidates
+    /// in one iteration is banned for a doubling number of iterations.
+    /// `usize::MAX` disables the scheduler.
+    pub match_limit: usize,
+    /// Initial ban length for the backoff scheduler.
+    pub ban_length: usize,
 }
 
 impl Default for RunLimits {
     fn default() -> Self {
-        RunLimits { max_iters: 24, max_nodes: 400_000 }
+        RunLimits {
+            max_iters: 24,
+            max_nodes: 400_000,
+            match_mode: MatchMode::from_env(),
+            match_limit: 4096,
+            ban_length: 2,
+        }
     }
 }
 
@@ -34,6 +86,46 @@ pub enum StopReason {
     NodeLimit,
 }
 
+/// Per-rule saturation counters (threaded into `LayerReport` and the
+/// scale bench).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RuleStat {
+    /// Rule name.
+    pub name: String,
+    /// E-nodes examined while collecting this rule's candidates — the
+    /// "e-match work" metric the indexed matcher minimizes.
+    pub matches_tried: usize,
+    /// Candidate `(class, node)` pairs offered to the rule.
+    pub matches: usize,
+    /// Unions the rule performed.
+    pub applications: usize,
+    /// Wall time spent matching + applying.
+    pub time: Duration,
+    /// Iterations the backoff scheduler skipped this rule.
+    pub banned_iters: usize,
+}
+
+impl RuleStat {
+    fn merge(&mut self, other: &RuleStat) {
+        self.matches_tried += other.matches_tried;
+        self.matches += other.matches;
+        self.applications += other.applications;
+        self.time += other.time;
+        self.banned_iters += other.banned_iters;
+    }
+}
+
+/// Sum per-rule stats across runs (entries are matched by rule name; used
+/// by the layer verifier to aggregate its fixpoint rounds).
+pub fn merge_rule_stats(into: &mut Vec<RuleStat>, from: &[RuleStat]) {
+    for f in from {
+        match into.iter_mut().find(|s| s.name == f.name) {
+            Some(s) => s.merge(f),
+            None => into.push(f.clone()),
+        }
+    }
+}
+
 /// Saturation outcome.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -47,43 +139,126 @@ pub struct RunReport {
     pub classes: usize,
     /// Why we stopped.
     pub stop: StopReason,
+    /// Total e-nodes examined during candidate collection.
+    pub matches_tried: usize,
+    /// How far past `max_nodes` the final iteration landed (0 unless the
+    /// stop reason is [`StopReason::NodeLimit`]).
+    pub node_overshoot: usize,
+    /// Per-rule counters, in rule order.
+    pub rules: Vec<RuleStat>,
 }
 
-/// Runs a rule set to saturation under limits.
+/// Runs a rule set to saturation under limits. The runner is stateful:
+/// per-rule match cursors and backoff bans persist across [`Runner::run`]
+/// calls, so a layer verifier's relation-fixpoint rounds only re-match
+/// what the relation pass changed in between.
 pub struct Runner<'a> {
     rules: &'a [Box<dyn Rewrite>],
     limits: RunLimits,
+    cursors: Vec<MatchCursor>,
+    banned_until: Vec<usize>,
+    times_banned: Vec<u32>,
+    clock: usize,
 }
 
 impl<'a> Runner<'a> {
     /// New runner over `rules`.
     pub fn new(rules: &'a [Box<dyn Rewrite>], limits: RunLimits) -> Self {
-        Runner { rules, limits }
+        Runner {
+            rules,
+            limits,
+            cursors: rules.iter().map(|_| MatchCursor::new()).collect(),
+            banned_until: vec![0; rules.len()],
+            times_banned: vec![0; rules.len()],
+            clock: 0,
+        }
     }
 
     /// Saturate `eg`.
-    pub fn run(&self, eg: &mut EGraph) -> RunReport {
+    pub fn run(&mut self, eg: &mut EGraph) -> RunReport {
+        let indexed = self.limits.match_mode == MatchMode::Indexed;
+        let mut stats: Vec<RuleStat> = self
+            .rules
+            .iter()
+            .map(|r| RuleStat { name: r.name().to_string(), ..RuleStat::default() })
+            .collect();
         let mut applications = 0;
         let mut iterations = 0;
+        let mut matches_tried = 0;
+        let mut node_overshoot = 0;
         let stop = loop {
             if iterations >= self.limits.max_iters {
                 break StopReason::IterLimit;
             }
             iterations += 1;
+            self.clock += 1;
             let mut changed = 0;
-            for rule in self.rules {
-                changed += rule.apply(eg);
-                eg.rebuild();
+            let mut any_banned = false;
+            let mut exceeded = false;
+            for ri in 0..self.rules.len() {
+                if indexed && self.banned_until[ri] > self.clock {
+                    any_banned = true;
+                    stats[ri].banned_iters += 1;
+                    continue;
+                }
+                let t0 = Instant::now();
+                let mut tried = 0usize;
+                let roots = self.rules[ri].roots();
+                let cands = if indexed {
+                    eg.candidates(roots, &mut self.cursors[ri], &mut tried)
+                } else {
+                    eg.candidates_naive(roots, &mut tried)
+                };
+                let n = self.rules[ri].apply(eg, &cands);
+                changed += n;
+                matches_tried += tried;
+                stats[ri].matches_tried += tried;
+                stats[ri].matches += cands.len();
+                stats[ri].applications += n;
+                stats[ri].time += t0.elapsed();
+                if indexed && cands.len() > self.limits.match_limit {
+                    let len = self.limits.ban_length.max(1) << self.times_banned[ri].min(16);
+                    self.banned_until[ri] = self.clock + len;
+                    self.times_banned[ri] += 1;
+                }
                 if eg.node_count() > self.limits.max_nodes {
+                    exceeded = true;
                     break;
                 }
             }
             applications += changed;
+            eg.rebuild();
+            // the node budget is enforced here, at the (single) rebuild
+            // point, and the overshoot is reported instead of hidden
             if eg.node_count() > self.limits.max_nodes {
+                node_overshoot = eg.node_count() - self.limits.max_nodes;
                 break StopReason::NodeLimit;
             }
+            if exceeded {
+                // the mid-pass budget scare resolved at rebuild (duplicate
+                // e-nodes folded back under the limit); the rules we
+                // skipped run next iteration — this is NOT saturation
+                continue;
+            }
             if changed == 0 {
-                break StopReason::Saturated;
+                if !any_banned {
+                    break StopReason::Saturated;
+                }
+                // only banned rules have pending work: fast-forward the
+                // scheduler clock to the next ban expiry instead of
+                // idling away the iteration budget
+                let mut next: Option<usize> = None;
+                for ri in 0..self.rules.len() {
+                    if self.banned_until[ri] > self.clock {
+                        next = Some(match next {
+                            Some(m) => m.min(self.banned_until[ri]),
+                            None => self.banned_until[ri],
+                        });
+                    }
+                }
+                if let Some(next) = next {
+                    self.clock = next;
+                }
             }
         };
         RunReport {
@@ -92,6 +267,9 @@ impl<'a> Runner<'a> {
             nodes: eg.node_count(),
             classes: eg.class_count(),
             stop,
+            matches_tried,
+            node_overshoot,
+            rules: stats,
         }
     }
 }
@@ -102,9 +280,11 @@ mod tests {
     use crate::egraph::{default_rules, ENode};
     use crate::ir::{DType, Op, Shape};
 
-    #[test]
-    fn saturates_transpose_tower() {
-        let mut eg = EGraph::new();
+    fn limits(mode: MatchMode) -> RunLimits {
+        RunLimits { match_mode: mode, ..RunLimits::default() }
+    }
+
+    fn transpose_tower(eg: &mut EGraph) -> (crate::egraph::Id, crate::egraph::Id) {
         let x = eg.add_with_data(
             ENode::new(Op::Parameter { index: 0, name: "x".into() }, vec![]),
             Shape::new(DType::F32, vec![2, 3, 4]),
@@ -123,14 +303,23 @@ mod tests {
                 crate::ir::NodeId(i + 1),
             );
         }
-        let rules = default_rules();
-        let report = Runner::new(&rules, RunLimits::default()).run(&mut eg);
-        assert_eq!(report.stop, StopReason::Saturated);
-        assert!(eg.same(x, cur), "rotating rank-3 six times is the identity");
+        (x, cur)
     }
 
     #[test]
-    fn node_limit_respected() {
+    fn saturates_transpose_tower() {
+        let mut eg = EGraph::new();
+        let (x, cur) = transpose_tower(&mut eg);
+        let rules = default_rules();
+        let report = Runner::new(&rules, limits(MatchMode::Indexed)).run(&mut eg);
+        assert_eq!(report.stop, StopReason::Saturated);
+        assert!(eg.same(x, cur), "rotating rank-3 six times is the identity");
+        assert!(report.matches_tried > 0);
+        assert_eq!(report.rules.len(), rules.len());
+    }
+
+    #[test]
+    fn node_limit_respected_with_overshoot() {
         let mut eg = EGraph::new();
         let x = eg.add(ENode::new(Op::Parameter { index: 0, name: "x".into() }, vec![]));
         let y = eg.add(ENode::new(Op::Parameter { index: 1, name: "y".into() }, vec![]));
@@ -139,8 +328,81 @@ mod tests {
             cur = eg.add(ENode::new(Op::Add, vec![cur, y]));
         }
         let rules = default_rules();
-        let limits = RunLimits { max_iters: 100, max_nodes: 10 };
-        let report = Runner::new(&rules, limits).run(&mut eg);
+        let lim = RunLimits { max_iters: 100, max_nodes: 10, ..RunLimits::default() };
+        let report = Runner::new(&rules, lim).run(&mut eg);
         assert_eq!(report.stop, StopReason::NodeLimit);
+        assert_eq!(report.node_overshoot, report.nodes - 10);
+        assert!(report.node_overshoot > 0);
+    }
+
+    #[test]
+    fn indexed_and_naive_agree_and_indexed_tries_less() {
+        let mut eg_i = EGraph::new();
+        let (xi, ci) = transpose_tower(&mut eg_i);
+        let mut eg_n = EGraph::new();
+        let (xn, cn) = transpose_tower(&mut eg_n);
+        let rules = default_rules();
+        let ri = Runner::new(&rules, limits(MatchMode::Indexed)).run(&mut eg_i);
+        let rn = Runner::new(&rules, limits(MatchMode::Naive)).run(&mut eg_n);
+        assert_eq!(ri.stop, rn.stop);
+        assert_eq!(eg_i.same(xi, ci), eg_n.same(xn, cn));
+        assert_eq!(eg_i.class_count(), eg_n.class_count());
+        assert_eq!(eg_i.node_count(), eg_n.node_count());
+        assert!(
+            ri.matches_tried * 3 <= rn.matches_tried,
+            "indexed matching should do >=3x less e-match work: {} vs {}",
+            ri.matches_tried,
+            rn.matches_tried
+        );
+    }
+
+    #[test]
+    fn backoff_bans_match_heavy_rules() {
+        let mut eg = EGraph::new();
+        let (x, cur) = transpose_tower(&mut eg);
+        // match_limit 0: every rule that sees any candidate gets banned
+        let lim = RunLimits {
+            match_limit: 0,
+            ban_length: 1,
+            max_iters: 500,
+            ..limits(MatchMode::Indexed)
+        };
+        let rules = default_rules();
+        let report = Runner::new(&rules, lim).run(&mut eg);
+        // throttled rules still converge (bans expire), just later
+        assert_eq!(report.stop, StopReason::Saturated);
+        assert!(eg.same(x, cur));
+        assert!(
+            report.rules.iter().any(|r| r.banned_iters > 0),
+            "at least one rule should have been throttled"
+        );
+    }
+
+    #[test]
+    fn cursors_persist_across_runs() {
+        let mut eg = EGraph::new();
+        let (_, _) = transpose_tower(&mut eg);
+        let rules = default_rules();
+        let mut runner = Runner::new(&rules, limits(MatchMode::Indexed));
+        let first = runner.run(&mut eg);
+        // nothing changed since: a second run re-matches (almost) nothing
+        let second = runner.run(&mut eg);
+        assert_eq!(second.stop, StopReason::Saturated);
+        assert!(
+            second.matches_tried <= first.matches_tried / 2,
+            "stateful runner must not rescan a saturated e-graph: {} vs {}",
+            second.matches_tried,
+            first.matches_tried
+        );
+    }
+
+    #[test]
+    fn merge_rule_stats_sums_by_name() {
+        let a = vec![RuleStat { name: "r".into(), matches: 2, ..RuleStat::default() }];
+        let mut into = Vec::new();
+        merge_rule_stats(&mut into, &a);
+        merge_rule_stats(&mut into, &a);
+        assert_eq!(into.len(), 1);
+        assert_eq!(into[0].matches, 4);
     }
 }

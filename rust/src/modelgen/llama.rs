@@ -18,8 +18,12 @@ pub struct LlamaConfig {
     pub layers: u32,
     /// Hidden size H.
     pub hidden: i64,
-    /// Attention heads.
+    /// Attention (query) heads.
     pub heads: i64,
+    /// Key/value heads (== `heads` for classic multi-head attention;
+    /// fewer for grouped-query attention, where each KV head serves
+    /// `heads / kv_heads` query heads via a broadcast expansion).
+    pub kv_heads: i64,
     /// FFN intermediate size.
     pub ffn: i64,
     /// Sequence length.
@@ -31,23 +35,70 @@ pub struct LlamaConfig {
 impl LlamaConfig {
     /// Llama-3.1-8B-shaped graph (32 layers).
     pub fn llama3_8b() -> Self {
-        LlamaConfig { layers: 32, hidden: 4096, heads: 32, ffn: 14336, seqlen: 64, batch: 4 }
+        LlamaConfig {
+            layers: 32,
+            hidden: 4096,
+            heads: 32,
+            kv_heads: 32,
+            ffn: 14336,
+            seqlen: 64,
+            batch: 4,
+        }
     }
     /// Llama-3.1-70B-shaped graph (80 layers).
     pub fn llama3_70b() -> Self {
-        LlamaConfig { layers: 80, hidden: 8192, heads: 64, ffn: 28672, seqlen: 64, batch: 4 }
+        LlamaConfig {
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            kv_heads: 64,
+            ffn: 28672,
+            seqlen: 64,
+            batch: 4,
+        }
     }
     /// Llama-3.1-405B-shaped graph (126 layers).
     pub fn llama3_405b() -> Self {
-        LlamaConfig { layers: 126, hidden: 16384, heads: 128, ffn: 53248, seqlen: 64, batch: 4 }
+        LlamaConfig {
+            layers: 126,
+            hidden: 16384,
+            heads: 128,
+            kv_heads: 128,
+            ffn: 53248,
+            seqlen: 64,
+            batch: 4,
+        }
+    }
+    /// 405B-class scale-bench geometry: the real Llama-3.1-405B layer
+    /// count and GQA head layout (128 query heads over 8 KV heads). This
+    /// is the `llama-405b-like` zoo entry `scalify bench --scale` runs.
+    pub fn llama3_405b_like() -> Self {
+        LlamaConfig {
+            layers: 126,
+            hidden: 16384,
+            heads: 128,
+            kv_heads: 8,
+            ffn: 53248,
+            seqlen: 64,
+            batch: 4,
+        }
     }
     /// Tiny config for interpreter-level differential tests.
     pub fn tiny() -> Self {
-        LlamaConfig { layers: 2, hidden: 8, heads: 2, ffn: 16, seqlen: 4, batch: 1 }
+        LlamaConfig { layers: 2, hidden: 8, heads: 2, kv_heads: 2, ffn: 16, seqlen: 4, batch: 1 }
+    }
+    /// Tiny grouped-query config (4 query heads over 2 KV heads) for
+    /// interpreter-level differential tests of the GQA expansion.
+    pub fn tiny_gqa() -> Self {
+        LlamaConfig { layers: 2, hidden: 8, heads: 4, kv_heads: 2, ffn: 16, seqlen: 4, batch: 1 }
     }
     /// Head dim.
     pub fn head_dim(&self) -> i64 {
         self.hidden / self.heads
+    }
+    /// Query heads per KV head (1 for MHA).
+    pub fn kv_group(&self) -> i64 {
+        self.heads / self.kv_heads
     }
     /// Token count T = batch * seqlen.
     pub fn tokens(&self) -> i64 {
@@ -137,8 +188,17 @@ fn silu(b: &mut GraphBuilder, x: NodeId) -> NodeId {
     b.mul(x, s)
 }
 
-/// One decoder layer. `nh_local` is the per-core head count (== heads for
-/// the baseline); `shard` describes the parallelism of this graph.
+/// GQA expansion: repeat each KV head for its query-head group —
+/// `(nkv, T, hd) -> broadcast (nkv, g, T, hd) -> reshape (nkv*g, T, hd)`.
+fn expand_kv(b: &mut GraphBuilder, x: NodeId, nkv: i64, group: i64, t: i64, hd: i64) -> NodeId {
+    b.at("attention.py", 52).in_func("repeat_kv");
+    let e = b.broadcast(x, vec![nkv, group, t, hd], vec![0, 2, 3]);
+    b.reshape(e, vec![nkv * group, t, hd])
+}
+
+/// One decoder layer. `nh_local` is the per-core query-head count
+/// (== heads for the baseline); KV heads follow at `nh_local / kv_group`
+/// and are broadcast-expanded to the query heads under GQA.
 #[allow(clippy::too_many_arguments)]
 fn decoder_layer(
     b: &mut GraphBuilder,
@@ -156,6 +216,8 @@ fn decoder_layer(
     let h = cfg.hidden;
     let hd = cfg.head_dim();
     let h_local = nh_local * hd;
+    let group = cfg.kv_group();
+    let nkv_local = nh_local / group;
     let groups = || ReplicaGroups::full(tp);
 
     // ---- attention ----
@@ -165,16 +227,25 @@ fn decoder_layer(
 
     b.at("attention.py", 40).in_func("attention_fwd");
     let q = b.matmul(xn, w.wq); // (T, h_local)
-    let k = b.matmul(xn, w.wk);
+    let k = b.matmul(xn, w.wk); // (T, nkv_local * hd)
     let v = b.matmul(xn, w.wv);
     let q3 = b.reshape(q, vec![t_full, nh_local, hd]);
-    let k3 = b.reshape(k, vec![t_full, nh_local, hd]);
-    let v3 = b.reshape(v, vec![t_full, nh_local, hd]);
+    let k3 = b.reshape(k, vec![t_full, nkv_local, hd]);
+    let v3 = b.reshape(v, vec![t_full, nkv_local, hd]);
     let qh = b.transpose(q3, vec![1, 0, 2]); // (nh, T, hd)
-    let kh = b.transpose(k3, vec![1, 0, 2]);
+    let kh = b.transpose(k3, vec![1, 0, 2]); // (nkv, T, hd)
     let vh = b.transpose(v3, vec![1, 0, 2]);
     let qr = rotary(b, qh, cos, sin, nh_local, t_full, hd);
-    let kr = rotary(b, kh, cos, sin, nh_local, t_full, hd);
+    let kr = rotary(b, kh, cos, sin, nkv_local, t_full, hd);
+    // GQA: expand the KV heads to the query heads after rotary
+    let (kr, vh) = if group > 1 {
+        (
+            expand_kv(b, kr, nkv_local, group, t_full, hd),
+            expand_kv(b, vh, nkv_local, group, t_full, hd),
+        )
+    } else {
+        (kr, vh)
+    };
 
     b.at("attention.py", 61).in_func("attention_fwd");
     let scores = b.dot_general(qr, kr, vec![2], vec![2], vec![0], vec![0]); // (nh,T,T)
@@ -227,15 +298,24 @@ fn decoder_layer(
 }
 
 /// Declare one layer's weights. Shapes differ between baseline and the
-/// TP-sharded variant.
+/// TP-sharded variant; `kv_local` is the K/V projection output width
+/// (`kv_heads_local * head_dim`, == `h_local` for MHA).
 #[allow(clippy::too_many_arguments)]
-fn layer_weights(b: &mut GraphBuilder, l: u32, h: i64, _ffn: i64, h_local: i64, ffn_local: i64) -> LayerWeights {
+fn layer_weights(
+    b: &mut GraphBuilder,
+    l: u32,
+    h: i64,
+    _ffn: i64,
+    h_local: i64,
+    kv_local: i64,
+    ffn_local: i64,
+) -> LayerWeights {
     b.at("decoder.py", 20).in_func("decoder_layer");
     LayerWeights {
         g_attn: b.parameter(&format!("l{l}.attn_norm.g"), f32s(&[h])),
         wq: b.parameter(&format!("l{l}.q_proj"), f32s(&[h, h_local])),
-        wk: b.parameter(&format!("l{l}.k_proj"), f32s(&[h, h_local])),
-        wv: b.parameter(&format!("l{l}.v_proj"), f32s(&[h, h_local])),
+        wk: b.parameter(&format!("l{l}.k_proj"), f32s(&[h, kv_local])),
+        wv: b.parameter(&format!("l{l}.v_proj"), f32s(&[h, kv_local])),
         wo: b.parameter(&format!("l{l}.o_proj"), f32s(&[h_local, h])),
         g_mlp: b.parameter(&format!("l{l}.mlp_norm.g"), f32s(&[h])),
         wg: b.parameter(&format!("l{l}.gate_proj"), f32s(&[h, ffn_local])),
@@ -272,6 +352,7 @@ pub fn try_llama_pair(
     if cfg.layers == 0
         || cfg.hidden <= 0
         || cfg.heads <= 0
+        || cfg.kv_heads <= 0
         || cfg.ffn <= 0
         || cfg.seqlen <= 0
         || cfg.batch <= 0
@@ -284,6 +365,12 @@ pub fn try_llama_pair(
             cfg.hidden, cfg.heads
         ));
     }
+    if cfg.heads % cfg.kv_heads != 0 {
+        return spec(format!(
+            "heads ({}) must be divisible by kv_heads ({}) for grouped-query attention",
+            cfg.heads, cfg.kv_heads
+        ));
+    }
     let degree = par.cores();
     if degree == 0 {
         return spec("parallelism degree must be >= 1".into());
@@ -293,6 +380,12 @@ pub fn try_llama_pair(
             return Err(ScalifyError::model_spec(format!(
                 "heads ({}) must be divisible by tp ({tp})",
                 cfg.heads
+            )));
+        }
+        if cfg.kv_heads % tp as i64 != 0 {
+            return Err(ScalifyError::model_spec(format!(
+                "kv_heads ({}) must be divisible by tp ({tp})",
+                cfg.kv_heads
             )));
         }
         if cfg.ffn % tp as i64 != 0 {
@@ -314,6 +407,13 @@ pub fn try_llama_pair(
             }
         }
         Parallelism::FlashDecoding { tp } => {
+            if cfg.kv_heads != cfg.heads {
+                return spec(format!(
+                    "flash decoding is built for multi-head attention (kv_heads {} != \
+                     heads {})",
+                    cfg.kv_heads, cfg.heads
+                ));
+            }
             if cfg.seqlen % tp as i64 != 0 {
                 return spec(format!(
                     "seqlen ({}) must be divisible by the KV-shard degree ({tp})",
@@ -428,7 +528,7 @@ pub(crate) fn dense_baseline(cfg: &LlamaConfig) -> crate::ir::Graph {
     let mut cur = bx;
     for l in 0..cfg.layers {
         bb.layer(Some(l));
-        let w = layer_weights(&mut bb, l, h, cfg.ffn, h, cfg.ffn);
+        let w = layer_weights(&mut bb, l, h, cfg.ffn, h, cfg.kv_heads * hd, cfg.ffn);
         cur = decoder_layer(&mut bb, cur, &w, bcos, bsin, cfg, cfg.heads, 1, false);
     }
     bb.layer(None);
@@ -475,6 +575,11 @@ fn dense_plan(par: Parallelism) -> crate::transform::ParallelPlan {
 }
 
 fn llama_dense_pair(cfg: &LlamaConfig, tp: u32, seq_parallel: bool) -> GraphPair {
+    assert_eq!(
+        cfg.kv_heads, cfg.heads,
+        "the hand-built golden dense builder is MHA-only (GQA pairs go through the \
+         transform engine)"
+    );
     assert_eq!(cfg.heads % tp as i64, 0, "heads must divide tp");
     assert_eq!(cfg.ffn % tp as i64, 0, "ffn must divide tp");
     if seq_parallel {
@@ -494,7 +599,7 @@ fn llama_dense_pair(cfg: &LlamaConfig, tp: u32, seq_parallel: bool) -> GraphPair
     let mut bweights = Vec::new();
     for l in 0..cfg.layers {
         bb.layer(Some(l));
-        let w = layer_weights(&mut bb, l, h, cfg.ffn, h, cfg.ffn);
+        let w = layer_weights(&mut bb, l, h, cfg.ffn, h, h, cfg.ffn);
         cur = decoder_layer(&mut bb, cur, &w, bcos, bsin, cfg, cfg.heads, 1, false);
         bweights.push(w);
     }
@@ -519,6 +624,7 @@ fn llama_dense_pair(cfg: &LlamaConfig, tp: u32, seq_parallel: bool) -> GraphPair
             l,
             h,
             cfg.ffn,
+            nh_local * hd,
             nh_local * hd,
             cfg.ffn / tp as i64,
         );

@@ -60,6 +60,39 @@ fn llama_sp_tiny_verifies() {
 }
 
 #[test]
+fn llama_gqa_baseline_numerics_match() {
+    // GQA expansion sanity: single-device pair (tp1 = identity transform)
+    let pair = llama_pair(&LlamaConfig::tiny_gqa(), Parallelism::Tensor { tp: 1 });
+    assert_numerically_equivalent(&pair, 1e-4, 29);
+}
+
+#[test]
+fn llama_gqa_tp_tiny_numerics_match() {
+    // tp2 over 2 KV heads: one KV head per core, 2 query heads per core
+    let pair = llama_pair(&LlamaConfig::tiny_gqa(), Parallelism::Tensor { tp: 2 });
+    assert_numerically_equivalent(&pair, 1e-4, 31);
+}
+
+#[test]
+fn llama_gqa_tp_tiny_verifies() {
+    let pair = llama_pair(&LlamaConfig::tiny_gqa(), Parallelism::Tensor { tp: 2 });
+    let report = Session::new(cfg_seq()).verify(&pair).unwrap();
+    assert!(report.verified(), "{}", render_failure(&report));
+}
+
+#[test]
+fn llama_gqa_validation_rejects_bad_combos() {
+    // kv_heads must divide heads
+    let bad = LlamaConfig { kv_heads: 3, ..LlamaConfig::tiny_gqa() };
+    assert!(try_llama_pair(&bad, Parallelism::Tensor { tp: 2 }).is_err());
+    // tp must divide kv_heads (4 query heads would split, 2 KV heads not)
+    assert!(try_llama_pair(&LlamaConfig::tiny_gqa(), Parallelism::Tensor { tp: 4 }).is_err());
+    // flash decoding stays MHA-only
+    assert!(try_llama_pair(&LlamaConfig::tiny_gqa(), Parallelism::FlashDecoding { tp: 2 })
+        .is_err());
+}
+
+#[test]
 fn flash_decoding_tiny_numerics_match() {
     let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::FlashDecoding { tp: 2 });
     assert_numerically_equivalent(&pair, 1e-4, 17);

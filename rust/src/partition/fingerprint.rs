@@ -174,6 +174,9 @@ pub struct MemoEntry {
     pub out_rels: Vec<RelSummary>,
     /// How many e-graph nodes the original verification used (stats).
     pub egraph_nodes: usize,
+    /// How many e-graph classes the original verification ended with
+    /// (stats; 0 in entries persisted before the field existed).
+    pub egraph_classes: usize,
 }
 
 #[derive(Debug)]
@@ -348,7 +351,7 @@ mod tests {
     }
 
     fn entry(nodes: usize) -> MemoEntry {
-        MemoEntry { verified: true, out_rels: vec![], egraph_nodes: nodes }
+        MemoEntry { verified: true, out_rels: vec![], egraph_nodes: nodes, egraph_classes: 0 }
     }
 
     #[test]

@@ -259,6 +259,7 @@ mod tests {
         if cfg.heads > 2 && cfg.heads % 2 == 0 {
             out.push(LlamaConfig {
                 heads: cfg.heads / 2,
+                kv_heads: cfg.kv_heads.min(cfg.heads / 2),
                 hidden: cfg.hidden / 2,
                 ..*cfg
             });
@@ -281,15 +282,23 @@ mod tests {
             let hd = [2i64, 4][p.range(0, 2)];
             let heads = [2i64, 4][p.range(0, 2)];
             let layers = 1 + p.range(0, 3) as u32;
+            let tp = if heads == 4 { [2u32, 4][p.range(0, 2)] } else { 2 };
+            // sometimes grouped-query attention: half the KV heads, when
+            // the reduced count still divides the tensor-parallel degree
+            let kv_heads = if p.chance(0.5) && (heads / 2) % tp as i64 == 0 {
+                heads / 2
+            } else {
+                heads
+            };
             let cfg = LlamaConfig {
                 layers,
                 hidden: heads * hd,
                 heads,
+                kv_heads,
                 ffn: [4i64, 8][p.range(0, 2)],
                 seqlen: [2i64, 4][p.range(0, 2)],
                 batch: 1,
             };
-            let tp = if heads == 4 { [2u32, 4][p.range(0, 2)] } else { 2 };
             let par = match p.range(0, 4) {
                 0 => Parallelism::Tensor { tp },
                 1 => Parallelism::Sequence { tp },
@@ -358,6 +367,113 @@ mod tests {
         });
     }
 
+    /// The indexed incremental e-matcher must be a pure optimization:
+    /// across a random transform grid, verdicts, per-layer stop behavior
+    /// and e-graph sizes are identical to the naive full-rescan matcher,
+    /// and the indexed matcher never does *more* e-match work.
+    #[test]
+    fn prop_indexed_matcher_is_equivalent_to_naive() {
+        use crate::egraph::{MatchMode, RunLimits};
+        let cfg_for = |mode: MatchMode| VerifyConfig {
+            parallel: false,
+            memoize: false,
+            limits: RunLimits { match_mode: mode, ..RunLimits::default() },
+            ..VerifyConfig::default()
+        };
+        check("matcher-differential", base_seed(0x10D3), case_count(8), |p| {
+            // half llama inference variants, half dp/ZeRO training steps
+            let pair = if p.chance(0.5) {
+                let heads = [2i64, 4][p.range(0, 2)];
+                let tp = 2u32;
+                let kv_heads =
+                    if p.chance(0.5) && (heads / 2) % tp as i64 == 0 { heads / 2 } else { heads };
+                let cfg = LlamaConfig {
+                    layers: 1 + p.range(0, 3) as u32,
+                    hidden: heads * [2i64, 4][p.range(0, 2)],
+                    heads,
+                    kv_heads,
+                    ffn: [4i64, 8][p.range(0, 2)],
+                    seqlen: [2i64, 4][p.range(0, 2)],
+                    batch: 1,
+                };
+                let layers = cfg.layers;
+                let par = match p.range(0, 4) {
+                    0 => Parallelism::Tensor { tp },
+                    1 => Parallelism::Sequence { tp },
+                    2 => Parallelism::Pipeline { pp: layers.min(2) },
+                    _ => Parallelism::Combined { pp: layers.min(2), tp },
+                };
+                match crate::modelgen::try_llama_pair(&cfg, par) {
+                    Ok(pair) => pair,
+                    Err(_) => return Ok(()), // invalid combo — not this property's job
+                }
+            } else {
+                let dp = [2u32, 4][p.range(0, 2)];
+                let cfg = TrainStepConfig {
+                    layers: 1 + p.range(0, 3) as u32,
+                    batch: dp as i64 * 2,
+                    hidden: [8i64, 16][p.range(0, 2)],
+                };
+                let zero_stage = p.range(0, 3) as u8;
+                if zero_stage >= 1 && (cfg.hidden % dp as i64 != 0 || cfg.hidden / dp as i64 < 2)
+                {
+                    return Ok(());
+                }
+                dpstep_pair(&cfg, Parallelism::Data { dp, zero_stage })
+            };
+            let indexed = Session::new(cfg_for(MatchMode::Indexed)).verify(&pair);
+            let naive = Session::new(cfg_for(MatchMode::Naive)).verify(&pair);
+            let (indexed, naive) = match (indexed, naive) {
+                (Ok(a), Ok(b)) => (a, b),
+                (Err(a), Err(b)) => {
+                    if a.to_string() == b.to_string() {
+                        return Ok(());
+                    }
+                    return Err(format!("error divergence: '{a}' vs '{b}'"));
+                }
+                (a, b) => {
+                    return Err(format!(
+                        "one matcher errored: indexed ok={} naive ok={}",
+                        a.is_ok(),
+                        b.is_ok()
+                    ))
+                }
+            };
+            if indexed.verdict.status() != naive.verdict.status() {
+                return Err(format!(
+                    "verdict divergence: indexed {} vs naive {}",
+                    indexed.summary(),
+                    naive.summary()
+                ));
+            }
+            if indexed.layers.len() != naive.layers.len() {
+                return Err("layer count divergence".into());
+            }
+            let mut tried_indexed = 0usize;
+            let mut tried_naive = 0usize;
+            for (a, b) in indexed.layers.iter().zip(&naive.layers) {
+                if a.verified != b.verified {
+                    return Err(format!("layer {} verdict divergence", a.layer));
+                }
+                if a.egraph_nodes != b.egraph_nodes || a.egraph_classes != b.egraph_classes {
+                    return Err(format!(
+                        "layer {} e-graph divergence: {}n/{}c vs {}n/{}c",
+                        a.layer, a.egraph_nodes, a.egraph_classes, b.egraph_nodes,
+                        b.egraph_classes
+                    ));
+                }
+                tried_indexed += a.matches_tried;
+                tried_naive += b.matches_tried;
+            }
+            if tried_indexed > tried_naive {
+                return Err(format!(
+                    "indexed matcher did MORE e-match work: {tried_indexed} vs {tried_naive}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
     /// Random pp×dp×tp mesh grid: every derived 3D-mesh pair (llama
     /// inference and training step) verifies with subgroup collectives
     /// and agrees with the lockstep interpreter.
@@ -377,6 +493,7 @@ mod tests {
                     layers: pp.max(1) + p.range(0, 2) as u32,
                     hidden: heads * 2,
                     heads,
+                    kv_heads: heads,
                     ffn: (tp as i64) * 2,
                     seqlen: [2i64, 4][p.range(0, 2)],
                     batch: 1,
@@ -430,6 +547,7 @@ mod tests {
                 layers: 1 + p.range(0, 2) as u32,
                 hidden: heads * 2,
                 heads,
+                kv_heads: heads,
                 ffn: 4,
                 seqlen: [2i64, 4][p.range(0, 2)],
                 batch: 1,

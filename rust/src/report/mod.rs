@@ -4,6 +4,7 @@
 
 pub mod json;
 
+use crate::egraph::RuleStat;
 use crate::error::{Result, ScalifyError};
 use crate::localize::Discrepancy;
 use crate::verifier::{LayerReport, Verdict, VerifyReport};
@@ -73,6 +74,30 @@ impl Discrepancy {
     }
 }
 
+/// JSON encoding of one per-rule counter row.
+pub fn rule_stat_to_json(r: &RuleStat) -> Json {
+    Json::Obj(vec![
+        ("name".into(), Json::Str(r.name.clone())),
+        ("matches_tried".into(), Json::Num(r.matches_tried as f64)),
+        ("matches".into(), Json::Num(r.matches as f64)),
+        ("applications".into(), Json::Num(r.applications as f64)),
+        ("time_secs".into(), secs(r.time)),
+        ("banned_iters".into(), Json::Num(r.banned_iters as f64)),
+    ])
+}
+
+/// Decode one per-rule counter row.
+pub fn rule_stat_from_json(doc: &Json) -> Result<RuleStat> {
+    Ok(RuleStat {
+        name: str_field(doc, "name")?,
+        matches_tried: num_field(doc, "matches_tried")? as usize,
+        matches: num_field(doc, "matches")? as usize,
+        applications: num_field(doc, "applications")? as usize,
+        time: Duration::from_secs_f64(num_field(doc, "time_secs")?.max(0.0)),
+        banned_iters: num_field(doc, "banned_iters")? as usize,
+    })
+}
+
 impl LayerReport {
     /// JSON encoding.
     pub fn to_json(&self) -> Json {
@@ -85,7 +110,13 @@ impl LayerReport {
             ("verified".into(), Json::Bool(self.verified)),
             ("memoized".into(), Json::Bool(self.memoized)),
             ("egraph_nodes".into(), Json::Num(self.egraph_nodes as f64)),
+            ("egraph_classes".into(), Json::Num(self.egraph_classes as f64)),
             ("facts".into(), Json::Num(self.facts as f64)),
+            ("matches_tried".into(), Json::Num(self.matches_tried as f64)),
+            (
+                "rules".into(),
+                Json::Arr(self.rules.iter().map(rule_stat_to_json).collect()),
+            ),
             ("duration_secs".into(), secs(self.duration)),
         ])
     }
@@ -99,7 +130,20 @@ impl LayerReport {
             verified: bool_field(doc, "verified")?,
             memoized: bool_field(doc, "memoized")?,
             egraph_nodes: num_field(doc, "egraph_nodes")? as usize,
+            // counter fields below are optional for compatibility with
+            // captures written before the indexed-matcher widening
+            egraph_classes: doc.get("egraph_classes").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize,
             facts: num_field(doc, "facts")? as usize,
+            matches_tried: doc.get("matches_tried").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize,
+            rules: match doc.get("rules").and_then(Json::as_arr) {
+                Some(arr) => arr
+                    .iter()
+                    .map(rule_stat_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => vec![],
+            },
             duration: Duration::from_secs_f64(num_field(doc, "duration_secs")?.max(0.0)),
         })
     }
@@ -293,7 +337,17 @@ mod tests {
                 verified: false,
                 memoized: false,
                 egraph_nodes: 120,
+                egraph_classes: 61,
                 facts: 44,
+                matches_tried: 512,
+                rules: vec![RuleStat {
+                    name: "transpose-fusion".into(),
+                    matches_tried: 256,
+                    matches: 12,
+                    applications: 3,
+                    time: Duration::from_micros(150),
+                    banned_iters: 1,
+                }],
                 duration: Duration::from_millis(7),
             }],
             stopwatch: {
@@ -313,6 +367,9 @@ mod tests {
         assert_eq!(back.discrepancies()[0].layer, Some(3));
         assert_eq!(back.layers.len(), 1);
         assert_eq!(back.layers[0].egraph_nodes, 120);
+        assert_eq!(back.layers[0].egraph_classes, 61);
+        assert_eq!(back.layers[0].matches_tried, 512);
+        assert_eq!(back.layers[0].rules, report.layers[0].rules);
         assert_eq!(back.layers[0].stage, Some(1));
         assert_eq!(back.total, report.total);
         assert_eq!(back.stopwatch.phases().count(), 2);

@@ -265,6 +265,7 @@ fn entry_to_json(fp: u64, e: &MemoEntry) -> Json {
         ("fp".into(), Json::Str(format!("{fp:016x}"))),
         ("verified".into(), Json::Bool(e.verified)),
         ("egraph_nodes".into(), Json::Num(e.egraph_nodes as f64)),
+        ("egraph_classes".into(), Json::Num(e.egraph_classes as f64)),
         (
             "out_rels".into(),
             Json::Arr(e.out_rels.iter().map(rel_to_json).collect()),
@@ -279,6 +280,9 @@ fn entry_from_json(doc: &Json) -> std::result::Result<(u64, MemoEntry), String> 
     let verified = doc.bool_at("verified").ok_or("entry is missing 'verified'")?;
     let egraph_nodes =
         doc.u64_at("egraph_nodes").ok_or("entry is missing 'egraph_nodes'")? as usize;
+    // absent in caches written before the field existed: stats-only, so
+    // default to 0 instead of invalidating the warm start
+    let egraph_classes = doc.u64_at("egraph_classes").unwrap_or(0) as usize;
     let rels = doc
         .get("out_rels")
         .and_then(Json::as_arr)
@@ -287,7 +291,7 @@ fn entry_from_json(doc: &Json) -> std::result::Result<(u64, MemoEntry), String> 
         .iter()
         .map(rel_from_json)
         .collect::<std::result::Result<Vec<_>, String>>()?;
-    Ok((fp, MemoEntry { verified, out_rels, egraph_nodes }))
+    Ok((fp, MemoEntry { verified, out_rels, egraph_nodes, egraph_classes }))
 }
 
 fn rel_to_json(rel: &RelSummary) -> Json {
@@ -415,6 +419,7 @@ mod tests {
                 RelSummary::Partial { kind: ReduceKind::Add, axes: 0b10 },
             ],
             egraph_nodes: 321,
+            egraph_classes: 123,
         }
     }
 

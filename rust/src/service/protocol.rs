@@ -198,6 +198,12 @@ pub struct StatsSnapshot {
     pub scheduler_workers: u64,
     /// Total e-graph nodes across all completed verify jobs.
     pub egraph_nodes_total: u64,
+    /// Total e-nodes examined by the e-matcher across all completed
+    /// verify jobs (memo-served layers contribute 0 — that is the point).
+    pub ematch_tried_total: u64,
+    /// Total rewrite-rule applications (unions) across all completed
+    /// verify jobs.
+    pub rule_applications_total: u64,
     /// Entries preloaded from the persistent cache at startup.
     pub cache_entries_loaded: u64,
     /// Cache directory, when persistence is on.
@@ -228,6 +234,11 @@ impl StatsSnapshot {
             ("queue_capacity".into(), Json::Num(self.queue_capacity as f64)),
             ("scheduler_workers".into(), Json::Num(self.scheduler_workers as f64)),
             ("egraph_nodes_total".into(), Json::Num(self.egraph_nodes_total as f64)),
+            ("ematch_tried_total".into(), Json::Num(self.ematch_tried_total as f64)),
+            (
+                "rule_applications_total".into(),
+                Json::Num(self.rule_applications_total as f64),
+            ),
             (
                 "cache_entries_loaded".into(),
                 Json::Num(self.cache_entries_loaded as f64),
@@ -263,6 +274,9 @@ impl StatsSnapshot {
             queue_capacity: need("queue_capacity")?,
             scheduler_workers: need("scheduler_workers")?,
             egraph_nodes_total: need("egraph_nodes_total")?,
+            // optional: absent in snapshots from pre-indexed-matcher daemons
+            ematch_tried_total: doc.u64_at("ematch_tried_total").unwrap_or(0),
+            rule_applications_total: doc.u64_at("rule_applications_total").unwrap_or(0),
             cache_entries_loaded: need("cache_entries_loaded")?,
             cache_dir: doc.str_at("cache_dir").map(str::to_owned),
             uptime_secs: doc.f64_at("uptime_secs").unwrap_or(0.0),
@@ -439,6 +453,8 @@ mod tests {
             queue_capacity: 64,
             scheduler_workers: 4,
             egraph_nodes_total: 123_456,
+            ematch_tried_total: 9_876,
+            rule_applications_total: 321,
             cache_entries_loaded: 40,
             cache_dir: Some("/tmp/scalify-cache".into()),
             uptime_secs: 12.5,

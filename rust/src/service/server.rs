@@ -76,6 +76,10 @@ struct ServiceState {
     jobs: AtomicU64,
     /// Total e-graph nodes across completed jobs.
     egraph_nodes_total: AtomicU64,
+    /// Total e-nodes examined by the e-matcher across completed jobs.
+    ematch_tried_total: AtomicU64,
+    /// Total rewrite-rule applications across completed jobs.
+    rule_applications_total: AtomicU64,
     /// Per-request wall latencies (seconds), most recent last; bounded.
     latencies: Mutex<VecDeque<f64>>,
     started: Instant,
@@ -123,6 +127,8 @@ impl ServiceState {
             queue_capacity: self.scheduler.capacity() as u64,
             scheduler_workers: self.scheduler.workers() as u64,
             egraph_nodes_total: self.egraph_nodes_total.load(Ordering::Relaxed),
+            ematch_tried_total: self.ematch_tried_total.load(Ordering::Relaxed),
+            rule_applications_total: self.rule_applications_total.load(Ordering::Relaxed),
             cache_entries_loaded: self.cache_loaded as u64,
             cache_dir: self
                 .cache
@@ -187,6 +193,8 @@ impl Server {
             cache_loaded,
             jobs: AtomicU64::new(0),
             egraph_nodes_total: AtomicU64::new(0),
+            ematch_tried_total: AtomicU64::new(0),
+            rule_applications_total: AtomicU64::new(0),
             latencies: Mutex::new(VecDeque::new()),
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
@@ -377,6 +385,16 @@ fn handle_request(line: &str, state: &Arc<ServiceState>) -> Response {
                     let nodes: u64 =
                         report.layers.iter().map(|l| l.egraph_nodes as u64).sum();
                     state.egraph_nodes_total.fetch_add(nodes, Ordering::Relaxed);
+                    let tried: u64 =
+                        report.layers.iter().map(|l| l.matches_tried as u64).sum();
+                    state.ematch_tried_total.fetch_add(tried, Ordering::Relaxed);
+                    let applied: u64 = report
+                        .layers
+                        .iter()
+                        .flat_map(|l| l.rules.iter())
+                        .map(|r| r.applications as u64)
+                        .sum();
+                    state.rule_applications_total.fetch_add(applied, Ordering::Relaxed);
                     state.record_latency(latency_secs);
                     Response::VerifyDone { report, latency_secs, stats: state.snapshot() }
                 }

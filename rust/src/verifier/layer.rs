@@ -2,7 +2,9 @@
 //! saturate, propagate relations to fixpoint, check boundary outputs.
 
 use super::boundary::{summarize, RelSummary};
-use crate::egraph::{EGraph, ENode, Id, RuleSet, RunLimits, Runner};
+use crate::egraph::{
+    merge_rule_stats, EGraph, ENode, Id, RuleSet, RuleStat, RunLimits, Runner, StopReason,
+};
 use crate::ir::{NodeId, Op};
 use crate::localize::{frontier, Discrepancy};
 use crate::partition::LayerSlice;
@@ -20,10 +22,20 @@ pub struct LayerOutcome {
     pub discrepancies: Vec<Discrepancy>,
     /// E-graph size at the end.
     pub egraph_nodes: usize,
+    /// E-graph class count at the end.
+    pub egraph_classes: usize,
     /// Facts derived.
     pub facts: usize,
     /// Hit the saturation resource limit.
     pub exhausted: bool,
+    /// E-nodes examined by the matcher across all saturation rounds.
+    pub matches_tried: usize,
+    /// How far past the node budget the run landed (0 unless exhausted).
+    pub node_overshoot: usize,
+    /// Per-rule match/apply/time counters, summed across rounds.
+    pub rule_stats: Vec<RuleStat>,
+    /// Stop reason of the last saturation round.
+    pub stop: StopReason,
 }
 
 /// Resolve each dist-slice input to its baseline partner + relation using
@@ -139,12 +151,23 @@ pub fn verify_layer(
     }
 
     // ---- saturate + propagate to fixpoint ----
-    let runner = Runner::new(rules.rules(), limits);
+    // the runner is stateful: per-rule match cursors persist across the
+    // relation-fixpoint rounds, so a round only re-matches what the
+    // previous relation pass changed
+    let mut runner = Runner::new(rules.rules(), limits);
     let mut exhausted = false;
+    let mut matches_tried = 0usize;
+    let mut node_overshoot = 0usize;
+    let mut rule_stats: Vec<RuleStat> = Vec::new();
+    let mut last_stop = StopReason::Saturated;
     let mut outcomes: Vec<StepOutcome> = vec![StepOutcome::NotReady; dslice.graph.len()];
     for _round in 0..max_rounds {
         let report = runner.run(&mut eg);
-        if report.stop == crate::egraph::runner::StopReason::NodeLimit {
+        matches_tried += report.matches_tried;
+        node_overshoot = node_overshoot.max(report.node_overshoot);
+        merge_rule_stats(&mut rule_stats, &report.rules);
+        last_stop = report.stop;
+        if report.stop == StopReason::NodeLimit {
             exhausted = true;
             break;
         }
@@ -247,6 +270,40 @@ pub fn verify_layer(
         verified = false;
     }
 
+    // ---- analysis soundness check ----
+    // a rule only unions terms it proved equal, and equal terms have
+    // equal shapes; a merge that had to drop a disagreeing shape is a
+    // typed discrepancy, never a silent first-shape-wins
+    let mut shape_conflict_discrepancies: Vec<Discrepancy> = Vec::new();
+    for conflict in eg.shape_conflicts() {
+        verified = false;
+        let reason = format!(
+            "merged classes disagree on shape ({} vs {})",
+            conflict.kept, conflict.dropped
+        );
+        match conflict.repr {
+            Some((true, node)) if node.idx() < dslice.graph.len() => {
+                shape_conflict_discrepancies
+                    .push(Discrepancy::from_node(&dslice.graph, node, reason));
+            }
+            Some((false, node)) if node.idx() < bslice.graph.len() => {
+                // baseline-side representative: report it against the
+                // baseline node's metadata but keep the dist-node slot 0
+                let mut d = Discrepancy::from_node(&bslice.graph, node, reason);
+                d.dist_node = NodeId(0);
+                shape_conflict_discrepancies.push(d);
+            }
+            _ => shape_conflict_discrepancies.push(Discrepancy {
+                dist_node: NodeId(0),
+                site: String::new(),
+                func: String::new(),
+                expr: format!("e-class {}", conflict.class.0),
+                reason,
+                layer: Some(dslice.layer),
+            }),
+        }
+    }
+
     // ---- localization on failure ----
     let discrepancies = if verified {
         vec![]
@@ -291,6 +348,7 @@ pub fn verify_layer(
                 }
             }
         }
+        ds.extend(shape_conflict_discrepancies);
         ds
     };
 
@@ -299,7 +357,12 @@ pub fn verify_layer(
         out_rels,
         discrepancies,
         egraph_nodes: eg.node_count(),
+        egraph_classes: eg.class_count(),
         facts: rel.fact_count,
         exhausted,
+        matches_tried,
+        node_overshoot,
+        rule_stats,
+        stop: last_stop,
     }
 }

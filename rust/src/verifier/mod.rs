@@ -202,8 +202,16 @@ pub struct LayerReport {
     pub memoized: bool,
     /// E-graph nodes at the end of saturation.
     pub egraph_nodes: usize,
+    /// E-graph classes at the end of saturation (0 when the layer was
+    /// served from a pre-widening memo entry).
+    pub egraph_classes: usize,
     /// Facts derived.
     pub facts: usize,
+    /// E-nodes examined by the e-matcher (0 for memo-served layers — the
+    /// work was done by the original verification).
+    pub matches_tried: usize,
+    /// Per-rule match/apply/time counters (empty for memo-served layers).
+    pub rules: Vec<crate::egraph::RuleStat>,
     /// Wall time.
     pub duration: std::time::Duration,
 }

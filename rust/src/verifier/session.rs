@@ -252,6 +252,7 @@ impl Session {
                                 verified: o.verified,
                                 out_rels: o.out_rels.clone(),
                                 egraph_nodes: o.egraph_nodes,
+                                egraph_classes: o.egraph_classes,
                             };
                             let inserted = {
                                 let mut memo = self.memo.lock().expect("memo lock");
@@ -276,8 +277,13 @@ impl Session {
                             out_rels: entry.out_rels.clone(),
                             discrepancies: vec![],
                             egraph_nodes: entry.egraph_nodes,
+                            egraph_classes: entry.egraph_classes,
                             facts: 0,
                             exhausted: false,
+                            matches_tried: 0,
+                            node_overshoot: 0,
+                            rule_stats: vec![],
+                            stop: crate::egraph::StopReason::Saturated,
                         },
                         true,
                     ),
@@ -296,6 +302,7 @@ impl Session {
                                 verified: o.verified,
                                 out_rels: o.out_rels.clone(),
                                 egraph_nodes: o.egraph_nodes,
+                                egraph_classes: o.egraph_classes,
                             };
                             self.memo.lock().expect("memo lock").put(fp, entry.clone());
                             if let Some(hook) = &self.memo_hook {
@@ -323,7 +330,10 @@ impl Session {
                     verified: outcome.verified,
                     memoized,
                     egraph_nodes: outcome.egraph_nodes,
+                    egraph_classes: outcome.egraph_classes,
                     facts: outcome.facts,
+                    matches_tried: outcome.matches_tried,
+                    rules: outcome.rule_stats.clone(),
                     duration: t0.elapsed(),
                 });
             }

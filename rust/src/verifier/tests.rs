@@ -544,7 +544,11 @@ fn resource_exhaustion_reported() {
     let pair = matmul_tp_pair(false);
     let cfg = VerifyConfig {
         parallel: false,
-        limits: crate::egraph::RunLimits { max_iters: 50, max_nodes: 2 },
+        limits: crate::egraph::RunLimits {
+            max_iters: 50,
+            max_nodes: 2,
+            ..crate::egraph::RunLimits::default()
+        },
         ..VerifyConfig::default()
     };
     let report = Session::new(cfg).verify(&pair).unwrap();

@@ -116,3 +116,89 @@ fn every_case_has_usable_ground_truth() {
         }
     }
 }
+
+/// The indexed incremental e-matcher must agree with the naive
+/// full-rescan matcher on every corpus case: same verdict, same
+/// localization sites, same per-layer e-graph sizes — and never more
+/// e-match work. (The transform-grid half of this differential lives in
+/// `proptest::prop_indexed_matcher_is_equivalent_to_naive`.)
+#[test]
+fn indexed_matcher_agrees_with_naive_on_the_whole_corpus() {
+    use scalify::egraph::{MatchMode, RunLimits};
+    use scalify::verifier::{Session, VerifyConfig, VerifyReport};
+
+    fn mode_cfg(mode: MatchMode) -> VerifyConfig {
+        VerifyConfig {
+            parallel: false,
+            memoize: false,
+            limits: RunLimits { match_mode: mode, ..RunLimits::default() },
+            ..VerifyConfig::default()
+        }
+    }
+    fn tried(r: &VerifyReport) -> usize {
+        r.layers.iter().map(|l| l.matches_tried).sum()
+    }
+    fn sites(r: &VerifyReport) -> Vec<String> {
+        let mut v: Vec<String> =
+            r.discrepancies().iter().map(|d| d.site.clone()).collect();
+        v.sort();
+        v
+    }
+
+    let mut all: Vec<BugCase> = reproduced_bugs();
+    all.extend(new_bugs());
+    all.extend(parallel_transform_bugs());
+    all.extend(replica_group_bugs());
+    for case in &all {
+        let pair = (case.build)();
+        let indexed = Session::new(mode_cfg(MatchMode::Indexed)).verify(&pair);
+        let naive = Session::new(mode_cfg(MatchMode::Naive)).verify(&pair);
+        match (indexed, naive) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(
+                    a.verdict.status(),
+                    b.verdict.status(),
+                    "{}: verdict diverged between matchers",
+                    case.id
+                );
+                assert_eq!(a.layers.len(), b.layers.len(), "{}: layer count", case.id);
+                for (la, lb) in a.layers.iter().zip(&b.layers) {
+                    assert_eq!(
+                        la.verified, lb.verified,
+                        "{}: layer {} verdict diverged",
+                        case.id, la.layer
+                    );
+                    assert_eq!(
+                        la.egraph_nodes, lb.egraph_nodes,
+                        "{}: layer {} e-node count diverged",
+                        case.id, la.layer
+                    );
+                    assert_eq!(
+                        la.egraph_classes, lb.egraph_classes,
+                        "{}: layer {} e-class count diverged",
+                        case.id, la.layer
+                    );
+                }
+                assert!(
+                    tried(&a) <= tried(&b),
+                    "{}: indexed matcher did MORE e-match work ({} vs {})",
+                    case.id,
+                    tried(&a),
+                    tried(&b)
+                );
+                assert_eq!(sites(&a), sites(&b), "{}: localization diverged", case.id);
+            }
+            // typed structural rejections (e.g. malformed replica groups)
+            // must reject identically — they never reach the matcher
+            (Err(a), Err(b)) => {
+                assert_eq!(a.to_string(), b.to_string(), "{}: errors diverged", case.id)
+            }
+            (a, b) => panic!(
+                "{}: one matcher errored (indexed ok={}, naive ok={})",
+                case.id,
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+    }
+}

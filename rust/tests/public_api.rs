@@ -13,7 +13,8 @@ fn verifier() -> Session {
 fn model_matrix_verifies() {
     // every (model, parallelism, degree) combination the CLI exposes, at
     // test scale
-    let llama = LlamaConfig { layers: 2, hidden: 16, heads: 4, ffn: 32, seqlen: 8, batch: 2 };
+    let llama =
+        LlamaConfig { layers: 2, hidden: 16, heads: 4, kv_heads: 4, ffn: 32, seqlen: 8, batch: 2 };
     for par in [
         Parallelism::Tensor { tp: 2 },
         Parallelism::Tensor { tp: 4 },
@@ -52,7 +53,8 @@ fn verdicts_are_stable_across_runs() {
 
 #[test]
 fn layer_reports_expose_memoization() {
-    let cfg = LlamaConfig { layers: 6, hidden: 8, heads: 2, ffn: 16, seqlen: 4, batch: 1 };
+    let cfg =
+        LlamaConfig { layers: 6, hidden: 8, heads: 2, kv_heads: 2, ffn: 16, seqlen: 4, batch: 1 };
     let pair = llama_pair(&cfg, Parallelism::Tensor { tp: 2 });
     let report = verifier().verify(&pair).unwrap();
     assert!(report.verified());
@@ -110,7 +112,11 @@ fn bug_corpus_is_fully_described() {
 fn resource_budget_is_honored() {
     let cfg = VerifyConfig {
         parallel: false,
-        limits: scalify::egraph::RunLimits { max_iters: 50, max_nodes: 4 },
+        limits: scalify::egraph::RunLimits {
+            max_iters: 50,
+            max_nodes: 4,
+            ..scalify::egraph::RunLimits::default()
+        },
         ..Default::default()
     };
     let pair = demo::matmul_allreduce_pair(2);

@@ -7,7 +7,7 @@ use scalify::prelude::*;
 use scalify::report::json::Json;
 
 fn tiny_llama() -> LlamaConfig {
-    LlamaConfig { layers: 4, hidden: 16, heads: 4, ffn: 32, seqlen: 8, batch: 2 }
+    LlamaConfig { layers: 4, hidden: 16, heads: 4, kv_heads: 4, ffn: 32, seqlen: 8, batch: 2 }
 }
 
 #[test]
@@ -190,4 +190,49 @@ fn deprecated_verifier_shim_still_works() {
     let report = Verifier::new(VerifyConfig::default())
         .verify_pair(&demo::matmul_allreduce_pair(2));
     assert!(report.verified());
+}
+
+#[test]
+fn indexed_matcher_cuts_ematch_work_at_least_3x() {
+    use scalify::egraph::{MatchMode, RunLimits};
+
+    let cfg_for = |mode: MatchMode| VerifyConfig {
+        parallel: false,
+        memoize: false,
+        limits: RunLimits { match_mode: mode, ..RunLimits::default() },
+        ..VerifyConfig::default()
+    };
+    let tried = |r: &VerifyReport| -> usize { r.layers.iter().map(|l| l.matches_tried).sum() };
+
+    for par in [
+        Parallelism::Tensor { tp: 2 },
+        Parallelism::Combined { pp: 2, tp: 2 },
+        Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 },
+    ] {
+        let pair = llama_pair(&tiny_llama(), par);
+        let indexed = Session::new(cfg_for(MatchMode::Indexed)).verify(&pair).unwrap();
+        let naive = Session::new(cfg_for(MatchMode::Naive)).verify(&pair).unwrap();
+        assert_eq!(
+            indexed.verified(),
+            naive.verified(),
+            "{}: matchers must agree on the verdict",
+            par.label()
+        );
+        assert!(indexed.verified(), "{}: {}", par.label(), indexed.summary());
+        let (ti, tn) = (tried(&indexed), tried(&naive));
+        assert!(ti > 0, "{}: indexed run must report its e-match work", par.label());
+        assert!(
+            ti * 3 <= tn,
+            "{}: indexed matcher should do >=3x less e-match work ({ti} vs {tn})",
+            par.label()
+        );
+        // the per-rule counters decompose the total
+        let per_rule: usize = indexed
+            .layers
+            .iter()
+            .flat_map(|l| l.rules.iter())
+            .map(|r| r.matches_tried)
+            .sum();
+        assert_eq!(per_rule, ti, "{}: per-rule counters must sum to the total", par.label());
+    }
 }
