@@ -19,6 +19,7 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "reproduced",
     "transform",
     "scale",
+    "diff",
     "no-partition",
     "no-parallel",
     "no-memoize",

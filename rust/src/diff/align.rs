@@ -1,0 +1,277 @@
+//! Graph alignment + changed-subgraph extraction.
+//!
+//! [`align`] matches nodes of two graph versions by stable identity
+//! ([`super::identity`]): an exact multiset pass over name-anchored
+//! stable ids first, then a greedy propagation pass over structural
+//! (name-blind) ids that recovers *renamed* regions — a renamed weight
+//! matches when its surroundings agree, and each recovered match lets
+//! its consumers match on the next sweep.
+//!
+//! [`GraphDiff`] turns a matching into the minimal dirty region at layer
+//! granularity: the layers that own unmatched (changed/added/removed)
+//! nodes, plus layers whose partition-level fingerprint
+//! ([`crate::partition::fingerprint_slice`]) differs anyway. Everything
+//! outside `dirty_layers` is re-derivable from a previous run's persisted
+//! [`crate::diff::VerifyState`].
+
+use super::identity::{stable_ids, structural_ids};
+use crate::ir::{Graph, NodeId};
+use crate::partition::{extract_layers, fingerprint_slice};
+use rustc_hash::FxHashMap;
+use std::collections::VecDeque;
+
+/// A (partial) node matching between an old and a new graph version.
+#[derive(Clone, Debug)]
+pub struct NodeMatching {
+    /// For each old node, the matched new node (None = removed/changed).
+    pub old_to_new: Vec<Option<NodeId>>,
+    /// For each new node, the matched old node (None = added/changed).
+    pub new_to_old: Vec<Option<NodeId>>,
+    /// Matches recovered by the rename-propagation pass (these differ in
+    /// name-anchored identity but agree structurally and contextually).
+    pub renamed: usize,
+}
+
+impl NodeMatching {
+    /// Count of matched node pairs.
+    pub fn matched(&self) -> usize {
+        self.new_to_old.iter().filter(|m| m.is_some()).count()
+    }
+}
+
+/// Align two graph versions node-for-node; see the module docs.
+pub fn align(old: &Graph, new: &Graph) -> NodeMatching {
+    let mut m = NodeMatching {
+        old_to_new: vec![None; old.nodes.len()],
+        new_to_old: vec![None; new.nodes.len()],
+        renamed: 0,
+    };
+
+    // ---- pass 1: exact stable-id multiset matching ----
+    // Duplicate ids (e.g. the same constant twice) match in emission
+    // order, which is the order the builder re-emits them.
+    let old_stable = stable_ids(old);
+    let mut by_id: FxHashMap<u64, VecDeque<NodeId>> = FxHashMap::default();
+    for (i, &id) in old_stable.iter().enumerate() {
+        by_id.entry(id).or_default().push_back(NodeId(i as u32));
+    }
+    let new_stable = stable_ids(new);
+    for (i, &id) in new_stable.iter().enumerate() {
+        if let Some(q) = by_id.get_mut(&id) {
+            if let Some(o) = q.pop_front() {
+                m.old_to_new[o.idx()] = Some(NodeId(i as u32));
+                m.new_to_old[i] = Some(o);
+            }
+        }
+    }
+
+    // ---- pass 2: greedy rename propagation over structural ids ----
+    // Unmatched new nodes try unmatched old candidates with the same
+    // name-blind structural id; a candidate is accepted when no already-
+    // matched operand disagrees, preferring the one whose operands agree
+    // the most. Each sweep can unlock further matches downstream, so
+    // sweep until a fixpoint.
+    let old_struct = structural_ids(old);
+    let new_struct = structural_ids(new);
+    let mut candidates: FxHashMap<u64, Vec<NodeId>> = FxHashMap::default();
+    for (i, &id) in old_struct.iter().enumerate() {
+        if m.old_to_new[i].is_none() {
+            candidates.entry(id).or_default().push(NodeId(i as u32));
+        }
+    }
+    loop {
+        let mut advanced = false;
+        for i in 0..new.nodes.len() {
+            if m.new_to_old[i].is_some() {
+                continue;
+            }
+            let Some(pool) = candidates.get(&new_struct[i]) else { continue };
+            let n_node = &new.nodes[i];
+            let mut best: Option<(usize, NodeId)> = None;
+            for &o in pool {
+                if m.old_to_new[o.idx()].is_some() {
+                    continue;
+                }
+                let o_node = &old.nodes[o.idx()];
+                if o_node.inputs.len() != n_node.inputs.len() {
+                    continue;
+                }
+                let mut agree = 0usize;
+                let mut disagree = false;
+                for (oi, ni) in o_node.inputs.iter().zip(&n_node.inputs) {
+                    match m.new_to_old[ni.idx()] {
+                        Some(mapped) if mapped == *oi => agree += 1,
+                        Some(_) => {
+                            disagree = true;
+                            break;
+                        }
+                        None => {}
+                    }
+                }
+                if !disagree && best.map(|(a, _)| agree > a).unwrap_or(true) {
+                    best = Some((agree, o));
+                }
+            }
+            if let Some((_, o)) = best {
+                m.old_to_new[o.idx()] = Some(NodeId(i as u32));
+                m.new_to_old[i] = Some(o);
+                m.renamed += 1;
+                advanced = true;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    m
+}
+
+/// The layer-granular dirty region between two graph versions.
+#[derive(Clone, Debug)]
+pub struct GraphDiff {
+    /// The underlying node matching.
+    pub matching: NodeMatching,
+    /// New-side nodes with no old counterpart.
+    pub added: Vec<NodeId>,
+    /// Old-side nodes with no new counterpart.
+    pub removed: Vec<NodeId>,
+    /// Layer tags that must re-verify, sorted ascending (untagged nodes
+    /// live in the `u32::MAX` pseudo-layer, same as the partitioner).
+    pub dirty_layers: Vec<u32>,
+    /// Unmatched-node count per dirty layer (both sides combined) — the
+    /// `delta_nodes` a diff-aware layer report carries.
+    pub delta_by_layer: FxHashMap<u32, usize>,
+}
+
+impl GraphDiff {
+    /// Diff two versions of a graph; see the module docs.
+    pub fn compute(old: &Graph, new: &Graph) -> GraphDiff {
+        let matching = align(old, new);
+        let mut added = Vec::new();
+        let mut removed = Vec::new();
+        let mut delta_by_layer: FxHashMap<u32, usize> = FxHashMap::default();
+        let mut dirty: Vec<u32> = Vec::new();
+        let mut mark = |tag: u32, delta: &mut FxHashMap<u32, usize>| {
+            *delta.entry(tag).or_insert(0) += 1;
+        };
+        for (i, mapped) in matching.new_to_old.iter().enumerate() {
+            if mapped.is_none() {
+                added.push(NodeId(i as u32));
+                mark(new.nodes[i].meta.layer.unwrap_or(u32::MAX), &mut delta_by_layer);
+            }
+        }
+        for (i, mapped) in matching.old_to_new.iter().enumerate() {
+            if mapped.is_none() {
+                removed.push(NodeId(i as u32));
+                mark(old.nodes[i].meta.layer.unwrap_or(u32::MAX), &mut delta_by_layer);
+            }
+        }
+        dirty.extend(delta_by_layer.keys().copied());
+
+        // A layer can be dirty without unmatched nodes (reordered outputs,
+        // boundary changes): cross-check partition fingerprints, which are
+        // exactly what decides replay at verify time. Layers on one side
+        // only are dirty by definition.
+        let old_slices = extract_layers(old);
+        let new_slices = extract_layers(new);
+        let old_fp: FxHashMap<u32, u64> =
+            old_slices.iter().map(|s| (s.layer, fingerprint_slice(s))).collect();
+        let new_fp: FxHashMap<u32, u64> =
+            new_slices.iter().map(|s| (s.layer, fingerprint_slice(s))).collect();
+        for (tag, fp) in &new_fp {
+            if old_fp.get(tag) != Some(fp) {
+                dirty.push(*tag);
+            }
+        }
+        for tag in old_fp.keys() {
+            if !new_fp.contains_key(tag) {
+                dirty.push(*tag);
+            }
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        GraphDiff { matching, added, removed, dirty_layers: dirty, delta_by_layer }
+    }
+
+    /// Total unmatched nodes across both sides.
+    pub fn delta_nodes(&self) -> usize {
+        self.added.len() + self.removed.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, Shape};
+
+    fn model(scale: f64, wname: &str) -> Graph {
+        let mut b = GraphBuilder::new("m", 1);
+        b.layer(Some(0));
+        let x = b.parameter("x", Shape::new(DType::F32, vec![4, 4]));
+        let w = b.parameter(wname, Shape::new(DType::F32, vec![4, 4]));
+        let h = b.matmul(x, w);
+        b.layer(Some(1));
+        let c = b.constant(scale, DType::F32);
+        let cb = b.broadcast_scalar(c, vec![4, 4]);
+        let y = b.mul(h, cb);
+        b.layer(Some(2));
+        let z = b.tanh(y);
+        b.output(z);
+        b.finish()
+    }
+
+    #[test]
+    fn identical_graphs_align_fully_with_no_dirty_layers() {
+        let g1 = model(2.0, "w");
+        let g2 = model(2.0, "w");
+        let d = GraphDiff::compute(&g1, &g2);
+        assert_eq!(d.matching.matched(), g1.nodes.len());
+        assert!(d.added.is_empty() && d.removed.is_empty());
+        assert!(d.dirty_layers.is_empty(), "dirty: {:?}", d.dirty_layers);
+    }
+
+    #[test]
+    fn one_constant_edit_dirties_exactly_its_layer() {
+        let g1 = model(2.0, "w");
+        let g2 = model(3.0, "w");
+        let d = GraphDiff::compute(&g1, &g2);
+        assert_eq!(d.dirty_layers, vec![1]);
+        assert!(d.delta_nodes() > 0);
+        assert!(d.delta_by_layer.keys().all(|&t| t == 1));
+    }
+
+    #[test]
+    fn renamed_weight_is_recovered_by_propagation() {
+        let g1 = model(2.0, "w_v1");
+        let g2 = model(2.0, "w_v2");
+        let d = GraphDiff::compute(&g1, &g2);
+        assert_eq!(d.matching.matched(), g1.nodes.len(), "rename must align");
+        assert!(d.matching.renamed >= 1);
+        assert!(d.added.is_empty() && d.removed.is_empty());
+        // fingerprints ignore parameter names, so nothing is dirty either
+        assert!(d.dirty_layers.is_empty(), "dirty: {:?}", d.dirty_layers);
+    }
+
+    #[test]
+    fn added_op_shows_up_as_added_nodes_in_its_layer() {
+        let g1 = model(2.0, "w");
+        let mut b = GraphBuilder::new("m", 1);
+        b.layer(Some(0));
+        let x = b.parameter("x", Shape::new(DType::F32, vec![4, 4]));
+        let w = b.parameter("w", Shape::new(DType::F32, vec![4, 4]));
+        let h = b.matmul(x, w);
+        b.layer(Some(1));
+        let c = b.constant(2.0, DType::F32);
+        let cb = b.broadcast_scalar(c, vec![4, 4]);
+        let y = b.mul(h, cb);
+        let y = b.abs(y); // the extra op
+        b.layer(Some(2));
+        let z = b.tanh(y);
+        b.output(z);
+        let g2 = b.finish();
+        let d = GraphDiff::compute(&g1, &g2);
+        assert_eq!(d.dirty_layers, vec![1]);
+        assert_eq!(d.added.len(), 1);
+        assert!(d.removed.is_empty());
+    }
+}

@@ -1,0 +1,92 @@
+//! Scripted one-op edits for the incremental bench/CI path.
+//!
+//! `scalify model --edit-layer N` and `scalify bench --diff` need a
+//! deterministic "v2" of a zoo model: [`one_op_edit`] nudges every
+//! scalar constant tagged with layer `N` (the attention scale, in the
+//! Llama zoo) by `+1.0`. Applied to **both** sides of a pair the
+//! edit preserves equivalence — the incremental re-verify must localize
+//! the work to layer `N` and still say VERIFIED; applied to the
+//! distributed side only it injects a divergence that must localize to
+//! the same site incrementally as cold.
+
+use crate::error::{Result, ScalifyError};
+use crate::ir::{ConstVal, Graph, Op};
+use crate::verifier::GraphPair;
+
+/// Bump every scalar constant in layer `layer` by `+1.0`. Returns how
+/// many constants changed.
+fn bump_constants(g: &mut Graph, layer: u32) -> usize {
+    let mut changed = 0;
+    for n in g.nodes.iter_mut() {
+        if n.meta.layer != Some(layer) {
+            continue;
+        }
+        if let Op::Constant(ConstVal::Scalar(v)) = &n.op {
+            n.op = Op::Constant(ConstVal::Scalar(v + 1.0));
+            changed += 1;
+        }
+    }
+    changed
+}
+
+/// The equivalence-preserving v1→v2 edit: bump layer `layer`'s scalar
+/// constants on *both* sides. Errors when the layer has no scalar
+/// constant to edit (the edit would be a no-op and the bench dishonest).
+pub fn one_op_edit(pair: &GraphPair, layer: u32) -> Result<GraphPair> {
+    let mut edited = pair.clone();
+    let nb = bump_constants(&mut edited.base, layer);
+    let nd = bump_constants(&mut edited.dist, layer);
+    if nb == 0 || nd == 0 {
+        return Err(ScalifyError::model_spec(format!(
+            "layer {layer} has no scalar constant to edit \
+             (base changed {nb}, dist changed {nd})"
+        )));
+    }
+    Ok(edited)
+}
+
+/// The divergence-injecting edit: bump only the *distributed* side, so
+/// v2 is genuinely wrong in layer `layer` and both the cold and the
+/// incremental path must flag that layer.
+pub fn one_sided_edit(pair: &GraphPair, layer: u32) -> Result<GraphPair> {
+    let mut edited = pair.clone();
+    let nd = bump_constants(&mut edited.dist, layer);
+    if nd == 0 {
+        return Err(ScalifyError::model_spec(format!(
+            "layer {layer} has no scalar constant to edit on the distributed side"
+        )));
+    }
+    Ok(edited)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::{llama_pair, LlamaConfig, Parallelism};
+
+    #[test]
+    fn both_sided_edit_changes_exactly_one_layers_fingerprint() {
+        use crate::partition::{extract_layers, fingerprint_slice};
+        let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+        let edited = one_op_edit(&pair, 1).unwrap();
+        let before: Vec<_> =
+            extract_layers(&pair.dist).iter().map(fingerprint_slice).collect();
+        let after: Vec<_> =
+            extract_layers(&edited.dist).iter().map(fingerprint_slice).collect();
+        assert_eq!(before.len(), after.len());
+        let diffs: Vec<usize> = before
+            .iter()
+            .zip(&after)
+            .enumerate()
+            .filter(|(_, (a, b))| a != b)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(diffs.len(), 1, "exactly one slice changes: {diffs:?}");
+    }
+
+    #[test]
+    fn editing_a_missing_layer_is_an_error() {
+        let pair = llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 });
+        assert!(one_op_edit(&pair, 999).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Version-stable node identities (the diff front end's anchor).
+//!
+//! Two emissions of "the same" model — a config tweak apart, a framework
+//! upgrade apart — must align node-for-node before a diff can be small.
+//! Serial node ids are useless for that (inserting one op renumbers
+//! everything downstream), so each node gets a **stable id**: a
+//! deterministic [`StableHasher`] digest of its op kind and attributes,
+//! its shape, and the stable ids of its same-layer operands.
+//!
+//! Cross-layer operands are hashed as opaque *boundary markers* (shape +
+//! dtype only), mirroring how [`crate::partition::extract_layers`] imports
+//! cross-layer values as fresh parameters. That cut is what keeps the
+//! dirty region of an edit confined to the edited layer: a changed
+//! attention scale perturbs the stable ids of its own layer's downstream
+//! cone and nothing else, exactly matching the layer granularity at which
+//! [`crate::partition::fingerprint_pair`] decides reuse.
+//!
+//! Two flavors:
+//! * [`stable_ids`] anchors parameters on their *names* when available
+//!   (`l3.q_proj` survives reordering of the parameter list), and
+//! * [`structural_ids`] anchors parameters on their positional index only
+//!   — the fallback identity used by the greedy rename-propagation pass
+//!   in [`crate::diff::align`], where name anchors have already failed.
+
+use crate::ir::{Graph, Op};
+use crate::partition::StableHasher;
+use std::hash::{Hash, Hasher};
+
+/// Name-anchored stable id per node, indexed by node position.
+///
+/// Deterministic across processes and graph re-emissions: a pure function
+/// of op structure, shapes, layer tags and (for named parameters) names.
+pub fn stable_ids(g: &Graph) -> Vec<u64> {
+    ids_inner(g, true, true)
+}
+
+/// Position-anchored structural id per node (parameter names ignored).
+///
+/// Renaming every weight leaves these unchanged, so they are the
+/// candidate pool for rename propagation.
+pub fn structural_ids(g: &Graph) -> Vec<u64> {
+    ids_inner(g, true, false)
+}
+
+/// Stable ids with all nodes treated as one region (no layer cut) — used
+/// when the verifier runs unpartitioned, so identity granularity matches
+/// the whole-graph pseudo-layer.
+pub fn stable_ids_unpartitioned(g: &Graph) -> Vec<u64> {
+    ids_inner(g, false, true)
+}
+
+fn ids_inner(g: &Graph, use_layer_tags: bool, name_anchored: bool) -> Vec<u64> {
+    let mut ids: Vec<u64> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let tag = if use_layer_tags { n.meta.layer } else { None };
+        let mut h = StableHasher::new();
+        match &n.op {
+            Op::Parameter { name, .. } if name_anchored && !name.is_empty() => {
+                ("param", name).hash(&mut h)
+            }
+            Op::Parameter { index, .. } => ("param", index).hash(&mut h),
+            op => format!("{op:?}").hash(&mut h),
+        }
+        n.shape.dims.hash(&mut h);
+        (n.shape.dtype as u8).hash(&mut h);
+        for i in &n.inputs {
+            let inp = &g.nodes[i.idx()];
+            let inp_tag = if use_layer_tags { inp.meta.layer } else { None };
+            if inp_tag == tag {
+                // operands are defined before use, so this id exists
+                ids[i.idx()].hash(&mut h);
+            } else {
+                // cross-layer value: opaque boundary marker, so edits in
+                // the producing layer don't cascade into this one
+                "boundary".hash(&mut h);
+                inp.shape.dims.hash(&mut h);
+                (inp.shape.dtype as u8).hash(&mut h);
+            }
+        }
+        ids.push(h.finish());
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, Shape};
+
+    fn two_layer_graph(scale: f64) -> Graph {
+        let mut b = GraphBuilder::new("g", 1);
+        b.layer(Some(0));
+        let x = b.parameter("x", Shape::new(DType::F32, vec![4, 8]));
+        let c = b.constant(scale, DType::F32);
+        let cb = b.broadcast_scalar(c, vec![4, 8]);
+        let s = b.mul(x, cb);
+        b.layer(Some(1));
+        let e = b.exp(s);
+        b.output(e);
+        b.finish()
+    }
+
+    #[test]
+    fn ids_are_deterministic_and_value_sensitive() {
+        let g1 = two_layer_graph(2.0);
+        let g2 = two_layer_graph(2.0);
+        assert_eq!(stable_ids(&g1), stable_ids(&g2));
+        let g3 = two_layer_graph(3.0);
+        let a = stable_ids(&g1);
+        let b = stable_ids(&g3);
+        assert_ne!(a, b, "constant edit must change ids");
+    }
+
+    #[test]
+    fn layer_cut_confines_an_edit_to_its_own_layer() {
+        let a = stable_ids(&two_layer_graph(2.0));
+        let b = stable_ids(&two_layer_graph(3.0));
+        // layer 0: constant + downstream broadcast/mul change; the
+        // parameter upstream of the edit does not
+        assert_eq!(a[0], b[0], "parameter is upstream of the edit");
+        assert_ne!(a[1], b[1], "edited constant");
+        assert_ne!(a[2], b[2], "downstream broadcast inside the layer");
+        assert_ne!(a[3], b[3], "downstream mul inside the layer");
+        // layer 1 consumes the changed value across the boundary — its
+        // ids must NOT change (boundary marker is shape-only)
+        assert_eq!(a[4], b[4], "cross-layer consumer is cut off");
+    }
+
+    #[test]
+    fn structural_ids_ignore_parameter_names() {
+        let named = |name: &str| {
+            let mut b = GraphBuilder::new("g", 1);
+            let x = b.parameter(name, Shape::new(DType::F32, vec![4]));
+            let y = b.neg(x);
+            b.output(y);
+            b.finish()
+        };
+        let g1 = named("w_old");
+        let g2 = named("w_new");
+        assert_ne!(stable_ids(&g1)[0], stable_ids(&g2)[0]);
+        assert_eq!(structural_ids(&g1), structural_ids(&g2));
+    }
+}

@@ -1,0 +1,41 @@
+//! Incremental verify-on-diff: the graph-diff front end.
+//!
+//! Production frameworks re-emit *almost-identical* graphs constantly —
+//! a config tweak, a framework upgrade, one fused op changed — and the
+//! question a user wants answered is "is v2 still equivalent, and if
+//! not, which of MY edits broke it", in milliseconds rather than a full
+//! re-verification. This module makes re-verification incremental end
+//! to end:
+//!
+//! * [`identity`] — version-stable node ids (op kind + shape +
+//!   same-layer operand fingerprints + names where available), cut at
+//!   layer boundaries so an edit's dirty cone stays inside its layer;
+//! * [`align`] — node matching between two graph versions (exact
+//!   stable-id pass + greedy rename propagation) and [`GraphDiff`], the
+//!   layer-granular changed-subgraph extraction;
+//! * [`state`] — the persisted [`VerifyState`] artifact: per-layer pair
+//!   fingerprints, boundary out-relations and stable node ids from a
+//!   previous run. `Session::verify_against` replays unchanged layers
+//!   from it and re-derives only downstream of the diff (semi-naive:
+//!   a changed layer's new out-relations change the next layer's
+//!   fingerprint, which re-verifies in turn — the re-derivation frontier
+//!   follows the facts, not the whole graph);
+//! * [`edit`] — deterministic one-op edits driving `bench --diff` and
+//!   the CI incremental job.
+//!
+//! Surfaces: `scalify verify/model --against/--emit-state`, the
+//! `verify_diff` service request, diff-aware [`crate::verifier::LayerReport`]
+//! fields (`reused` / `reverified` / `delta_nodes`) and the
+//! `scalify bench --diff` tier.
+
+pub mod align;
+pub mod edit;
+pub mod identity;
+pub mod state;
+
+pub use align::{align, GraphDiff, NodeMatching};
+pub use edit::{one_op_edit, one_sided_edit};
+pub use identity::{stable_ids, structural_ids};
+pub use state::{
+    id_multiset_delta, layer_node_ids, LayerState, VerifyState, STATE_FORMAT_VERSION,
+};

@@ -1,0 +1,363 @@
+//! The persisted verification-state artifact (`verify --emit-state` /
+//! `verify --against`).
+//!
+//! A [`VerifyState`] is what a verify run knows that a re-verify can
+//! reuse: per layer, the pair fingerprint it verified under, its boundary
+//! output relations, and the stable node identities of its members.
+//! `verify --against` replays every layer whose fingerprint still matches
+//! (out-relations seed the next layer exactly as a live verification
+//! would — the semi-naive idiom: only facts downstream of the diff are
+//! re-derived) and re-verifies the rest, reporting `delta_nodes` from the
+//! stable-id multiset difference.
+//!
+//! The file is versioned and checksummed like the service's memo cache
+//! (same [`crate::partition::FINGERPRINT_VERSION`] gate, same
+//! degrade-to-cold contract): any skew, tamper or parse failure costs a
+//! cold verify, never a wrong replay. Fingerprints and node ids are
+//! written as fixed-width hex (JSON numbers are doubles and cannot carry
+//! 64 bits).
+
+use crate::error::{Result, ScalifyError};
+use crate::ir::Graph;
+use crate::partition::check_fingerprint_version;
+use crate::report::json::Json;
+use crate::report::{json_checksum, rel_summary_from_json, rel_summary_to_json};
+use crate::verifier::boundary::RelSummary;
+use rustc_hash::FxHashMap;
+
+/// On-disk format version of the state artifact (independent of the
+/// fingerprint scheme).
+pub const STATE_FORMAT_VERSION: u32 = 1;
+
+/// What one verified (or failed) layer left behind.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerState {
+    /// Layer tag (`u32::MAX` = the untagged pseudo-layer).
+    pub layer: u32,
+    /// Pipeline stage, when one owns the layer.
+    pub stage: Option<u32>,
+    /// The pair fingerprint this layer verified under — replay requires
+    /// an exact match, which is what makes a stale state *safe*: a state
+    /// from the wrong model simply reuses nothing.
+    pub fingerprint: u64,
+    /// Whether the layer verified (failed layers never replay).
+    pub verified: bool,
+    /// Boundary output relations, seeding the next layer on replay.
+    pub out_rels: Vec<RelSummary>,
+    /// E-graph size of the original verification (stats).
+    pub egraph_nodes: usize,
+    /// E-graph class count of the original verification (stats).
+    pub egraph_classes: usize,
+    /// Stable ids of the layer's distributed-side nodes
+    /// ([`crate::diff::stable_ids`]); `delta_nodes` is the multiset
+    /// difference against the new version's ids.
+    pub node_ids: Vec<u64>,
+}
+
+/// A whole run's persisted verification state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerifyState {
+    /// Distributed-graph name (informational; mismatches warn upstream).
+    pub model: String,
+    /// SPMD width the state was computed under.
+    pub num_cores: u32,
+    /// Device mesh the state was computed under.
+    pub mesh: Vec<u32>,
+    /// Verdict status of the producing run (`verified` / `unverified` /
+    /// `resource-exhausted`).
+    pub status: String,
+    /// Per-layer state, in verification order.
+    pub layers: Vec<LayerState>,
+}
+
+impl VerifyState {
+    /// Look up a layer by tag.
+    pub fn layer(&self, tag: u32) -> Option<&LayerState> {
+        self.layers.iter().find(|l| l.layer == tag)
+    }
+
+    /// True when `pair_dist` matches the graph this state was computed
+    /// from (width + mesh); callers warn and verify cold otherwise.
+    pub fn matches_graph(&self, dist: &Graph) -> bool {
+        self.num_cores == dist.num_cores && self.mesh == dist.mesh
+    }
+
+    /// JSON encoding (versioned + checksummed envelope).
+    pub fn to_json(&self) -> Json {
+        let layers = Json::Arr(self.layers.iter().map(layer_state_to_json).collect());
+        let checksum = json_checksum(&layers);
+        Json::Obj(vec![
+            ("format".into(), Json::Num(STATE_FORMAT_VERSION as f64)),
+            (
+                "fingerprint_version".into(),
+                Json::Num(crate::partition::FINGERPRINT_VERSION as f64),
+            ),
+            ("checksum".into(), Json::Str(checksum)),
+            (
+                "graph".into(),
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(self.model.clone())),
+                    ("num_cores".into(), Json::Num(self.num_cores as f64)),
+                    (
+                        "mesh".into(),
+                        Json::Arr(
+                            self.mesh.iter().map(|&a| Json::Num(a as f64)).collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("status".into(), Json::Str(self.status.clone())),
+            ("layers".into(), layers),
+        ])
+    }
+
+    /// Pretty-printed JSON document.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().render_pretty()
+    }
+
+    /// Decode a state document. Errors describe why the state is unusable;
+    /// every caller treats that as a cold start plus a warning, mirroring
+    /// the service cache (same fingerprint-version gate, same contract).
+    pub fn from_json(doc: &Json) -> std::result::Result<VerifyState, String> {
+        let format = doc.u64_at("format").ok_or("missing 'format' version")?;
+        if format != STATE_FORMAT_VERSION as u64 {
+            return Err(format!(
+                "state format v{format} (this build reads v{STATE_FORMAT_VERSION})"
+            ));
+        }
+        check_fingerprint_version(doc)?;
+        let layers_doc = doc
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or("missing 'layers' array")?;
+        let expected = doc.str_at("checksum").ok_or("missing 'checksum'")?;
+        let actual = json_checksum(&Json::Arr(layers_doc.to_vec()));
+        if actual != expected {
+            return Err(format!(
+                "checksum mismatch (file says {expected}, contents hash to {actual})"
+            ));
+        }
+        let graph = doc.get("graph").ok_or("missing 'graph' descriptor")?;
+        let model = graph.str_at("name").unwrap_or("").to_string();
+        let num_cores =
+            graph.u64_at("num_cores").ok_or("graph descriptor is missing 'num_cores'")?
+                as u32;
+        let mesh = graph
+            .get("mesh")
+            .and_then(Json::as_arr)
+            .map(|arr| arr.iter().filter_map(Json::as_u64).map(|a| a as u32).collect())
+            .unwrap_or_default();
+        let status = doc.str_at("status").unwrap_or("unknown").to_string();
+        let layers = layers_doc
+            .iter()
+            .map(layer_state_from_json)
+            .collect::<std::result::Result<Vec<_>, String>>()?;
+        Ok(VerifyState { model, num_cores, mesh, status, layers })
+    }
+
+    /// Parse a state document from text.
+    pub fn parse(text: &str) -> std::result::Result<VerifyState, String> {
+        let doc = Json::parse(text).map_err(|e| format!("corrupted JSON: {e}"))?;
+        VerifyState::from_json(&doc)
+    }
+
+    /// Load from a file; the error string is caller-facing ("why am I
+    /// verifying cold").
+    pub fn load(path: &std::path::Path) -> std::result::Result<VerifyState, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("state file {} is unreadable ({e})", path.display()))?;
+        VerifyState::parse(&text)
+            .map_err(|why| format!("ignoring state file {} ({why})", path.display()))
+    }
+
+    /// Save to a file (temp + rename, like the service cache).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json_string()).map_err(|e| {
+            ScalifyError::runtime(format!("writing state {}: {e}", tmp.display()))
+        })?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            ScalifyError::runtime(format!("renaming state into {}: {e}", path.display()))
+        })
+    }
+}
+
+fn layer_state_to_json(l: &LayerState) -> Json {
+    let mut fields = vec![
+        ("layer".into(), Json::Num(l.layer as f64)),
+        (
+            "stage".into(),
+            l.stage.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+        ),
+        ("fp".into(), Json::Str(format!("{:016x}", l.fingerprint))),
+        ("verified".into(), Json::Bool(l.verified)),
+        (
+            "out_rels".into(),
+            Json::Arr(l.out_rels.iter().map(rel_summary_to_json).collect()),
+        ),
+        ("egraph_nodes".into(), Json::Num(l.egraph_nodes as f64)),
+        ("egraph_classes".into(), Json::Num(l.egraph_classes as f64)),
+    ];
+    fields.push((
+        "node_ids".into(),
+        Json::Arr(
+            l.node_ids.iter().map(|id| Json::Str(format!("{id:016x}"))).collect(),
+        ),
+    ));
+    Json::Obj(fields)
+}
+
+fn layer_state_from_json(doc: &Json) -> std::result::Result<LayerState, String> {
+    let hex64 = |s: &str| {
+        u64::from_str_radix(s, 16).map_err(|_| format!("bad hex id '{s}'"))
+    };
+    let fingerprint = hex64(doc.str_at("fp").ok_or("layer state is missing 'fp'")?)?;
+    let out_rels = doc
+        .get("out_rels")
+        .and_then(Json::as_arr)
+        .ok_or("layer state is missing 'out_rels'")?
+        .iter()
+        .map(rel_summary_from_json)
+        .collect::<std::result::Result<Vec<_>, String>>()?;
+    let node_ids = doc
+        .get("node_ids")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|j| j.as_str().ok_or("node id is not a string".to_string()).and_then(hex64))
+                .collect::<std::result::Result<Vec<_>, String>>()
+        })
+        .transpose()?
+        .unwrap_or_default();
+    Ok(LayerState {
+        layer: doc.u64_at("layer").ok_or("layer state is missing 'layer'")? as u32,
+        stage: doc.get("stage").and_then(Json::as_u64).map(|s| s as u32),
+        fingerprint,
+        verified: doc.bool_at("verified").ok_or("layer state is missing 'verified'")?,
+        out_rels,
+        egraph_nodes: doc.u64_at("egraph_nodes").unwrap_or(0) as usize,
+        egraph_classes: doc.u64_at("egraph_classes").unwrap_or(0) as usize,
+        node_ids,
+    })
+}
+
+/// Group a graph's stable node ids by layer tag (the granularity
+/// [`LayerState::node_ids`] stores). With `partitioned == false` every
+/// node lands in the `u32::MAX` pseudo-layer with no-cut identities, to
+/// match the whole-graph pseudo-layer the verifier uses.
+pub fn layer_node_ids(g: &Graph, partitioned: bool) -> FxHashMap<u32, Vec<u64>> {
+    let mut by_layer: FxHashMap<u32, Vec<u64>> = FxHashMap::default();
+    if partitioned {
+        let ids = super::identity::stable_ids(g);
+        for (n, id) in g.nodes.iter().zip(ids) {
+            by_layer.entry(n.meta.layer.unwrap_or(u32::MAX)).or_default().push(id);
+        }
+    } else {
+        by_layer.insert(u32::MAX, super::identity::stable_ids_unpartitioned(g));
+    }
+    by_layer
+}
+
+/// Size of the symmetric multiset difference between two id sets — the
+/// `delta_nodes` of a re-verified layer.
+pub fn id_multiset_delta(old: &[u64], new: &[u64]) -> usize {
+    let mut counts: FxHashMap<u64, i64> = FxHashMap::default();
+    for &id in old {
+        *counts.entry(id).or_insert(0) += 1;
+    }
+    for &id in new {
+        *counts.entry(id).or_insert(0) -= 1;
+    }
+    counts.values().map(|c| c.unsigned_abs() as usize).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ReduceKind;
+
+    fn sample_state() -> VerifyState {
+        VerifyState {
+            model: "llama-tiny@tp2".into(),
+            num_cores: 2,
+            mesh: vec![2],
+            status: "verified".into(),
+            layers: vec![
+                LayerState {
+                    layer: 0,
+                    stage: None,
+                    fingerprint: 0xdead_beef_1234_5678,
+                    verified: true,
+                    out_rels: vec![
+                        RelSummary::Duplicate,
+                        RelSummary::Sharded { dim: 1, parts: 2, axis: 0 },
+                        RelSummary::MeshSharded { entries: vec![(0, 2, 0), (1, 2, 1)] },
+                        RelSummary::Partial { kind: ReduceKind::Add, axes: 1 },
+                    ],
+                    egraph_nodes: 77,
+                    egraph_classes: 33,
+                    node_ids: vec![1, 0xffff_ffff_ffff_fffe, 42],
+                },
+                LayerState {
+                    layer: u32::MAX,
+                    stage: Some(1),
+                    fingerprint: 7,
+                    verified: false,
+                    out_rels: vec![],
+                    egraph_nodes: 0,
+                    egraph_classes: 0,
+                    node_ids: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn state_round_trips_through_json() {
+        let s = sample_state();
+        let back = VerifyState::parse(&s.to_json_string()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn state_round_trips_through_a_file() {
+        let path = std::env::temp_dir()
+            .join(format!("scalify-state-test-{}.json", std::process::id()));
+        let s = sample_state();
+        s.save(&path).unwrap();
+        let back = VerifyState::load(&path).unwrap();
+        assert_eq!(back, s);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_version_skew_is_rejected_like_the_cache() {
+        let mut doc = sample_state().to_json();
+        if let Json::Obj(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "fingerprint_version" {
+                    *v = Json::Num(9999.0);
+                }
+            }
+        }
+        let err = VerifyState::from_json(&doc).unwrap_err();
+        assert!(err.contains("scheme v9999"), "{err}");
+    }
+
+    #[test]
+    fn tampered_layers_fail_the_checksum() {
+        let text = sample_state().to_json_string();
+        let tampered = text.replace("deadbeef12345678", "deadbeef12345679");
+        assert_ne!(text, tampered);
+        let err = VerifyState::parse(&tampered).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn multiset_delta_counts_both_sides() {
+        assert_eq!(id_multiset_delta(&[1, 2, 2, 3], &[1, 2, 4]), 3); // -2,-3,+4
+        assert_eq!(id_multiset_delta(&[], &[]), 0);
+        assert_eq!(id_multiset_delta(&[5], &[5]), 0);
+    }
+}

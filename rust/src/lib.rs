@@ -76,6 +76,7 @@ pub mod egraph;
 pub mod layout;
 pub mod relations;
 pub mod partition;
+pub mod diff;
 pub mod verifier;
 pub mod localize;
 pub mod modelgen;
@@ -96,6 +97,7 @@ pub mod prelude {
         Annotation, AxesMask, DType, Graph, GraphBuilder, Mesh, Node, NodeId, Op,
         ReduceKind, ReplicaGroups, Shape,
     };
+    pub use crate::diff::{GraphDiff, VerifyState};
     pub use crate::localize::Discrepancy;
     pub use crate::modelgen::{
         GraphPair, LlamaConfig, MixtralConfig, Parallelism, TrainStepConfig,

@@ -131,6 +131,34 @@ pub fn fingerprint_pair(
     h.finish()
 }
 
+/// Structural fingerprint of a single layer slice (one side of a pair).
+/// The diff front end compares these across graph *versions* to find
+/// layers that changed even when no node failed to align.
+pub fn fingerprint_slice(slice: &LayerSlice) -> u64 {
+    let mut h = StableHasher::new();
+    hash_slice(slice, &mut h);
+    h.finish()
+}
+
+/// Validate the `fingerprint_version` field of a persisted document (the
+/// service memo cache, the diff `VerifyState`). Every store carrying
+/// fingerprints shares this one gate, so version skew degrades to a cold
+/// start with the same wording everywhere.
+pub fn check_fingerprint_version(
+    doc: &crate::report::json::Json,
+) -> std::result::Result<(), String> {
+    let fpv = doc
+        .u64_at("fingerprint_version")
+        .ok_or("missing 'fingerprint_version'")?;
+    if fpv != FINGERPRINT_VERSION as u64 {
+        return Err(format!(
+            "fingerprints were computed under scheme v{fpv} (this build uses \
+             v{FINGERPRINT_VERSION})"
+        ));
+    }
+    Ok(())
+}
+
 fn hash_slice<H: Hasher>(slice: &LayerSlice, h: &mut H) {
     // the declared mesh changes how subgroup collectives verify, so a
     // layer verified under mesh [4] must never replay one under [2,2]

@@ -12,7 +12,7 @@ mod slice;
 pub mod fingerprint;
 
 pub use fingerprint::{
-    fingerprint_pair, LayerMemo, MemoEntry, StableHasher, DEFAULT_MEMO_CAPACITY,
-    FINGERPRINT_VERSION,
+    check_fingerprint_version, fingerprint_pair, fingerprint_slice, LayerMemo,
+    MemoEntry, StableHasher, DEFAULT_MEMO_CAPACITY, FINGERPRINT_VERSION,
 };
 pub use slice::{extract_layers, LayerSlice};

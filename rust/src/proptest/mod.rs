@@ -582,6 +582,65 @@ mod tests {
         });
     }
 
+    /// Incremental re-verification is semantics-free on unchanged
+    /// graphs: across a random transform grid, `verify_against` a
+    /// just-captured state replays 100% of the layers and reproduces the
+    /// cold verdict exactly (SCALIFY_PROPTEST_CASES widens the grid in
+    /// the nightly run).
+    #[test]
+    fn prop_unchanged_reverify_reuses_every_layer() {
+        check("incremental-full-reuse", base_seed(0xD1FF), case_count(6), |p| {
+            let heads = [2i64, 4][p.range(0, 2)];
+            let tp = 2u32;
+            let kv_heads =
+                if p.chance(0.5) && (heads / 2) % tp as i64 == 0 { heads / 2 } else { heads };
+            let cfg = LlamaConfig {
+                layers: 1 + p.range(0, 3) as u32,
+                hidden: heads * [2i64, 4][p.range(0, 2)],
+                heads,
+                kv_heads,
+                ffn: [4i64, 8][p.range(0, 2)],
+                seqlen: [2i64, 4][p.range(0, 2)],
+                batch: 1,
+            };
+            let layers = cfg.layers;
+            let par = match p.range(0, 4) {
+                0 => Parallelism::Tensor { tp },
+                1 => Parallelism::Sequence { tp },
+                2 => Parallelism::Pipeline { pp: layers.min(2) },
+                _ => Parallelism::Combined { pp: layers.min(2), tp },
+            };
+            let pair = match crate::modelgen::try_llama_pair(&cfg, par) {
+                Ok(pair) => pair,
+                Err(_) => return Ok(()), // invalid combo — not this property's job
+            };
+            let (cold, state) =
+                quiet_session().verify_capture(&pair).map_err(|e| e.to_string())?;
+            let (warm, _) = quiet_session()
+                .verify_against(&pair, &state)
+                .map_err(|e| e.to_string())?;
+            if cold.verified() != warm.verified() {
+                return Err(format!(
+                    "{} {cfg:?}: cold {} vs incremental {}",
+                    par.label(),
+                    cold.summary(),
+                    warm.summary()
+                ));
+            }
+            if cold.verified() {
+                let reused = warm.layers.iter().filter(|l| l.reused).count();
+                if reused != warm.layers.len() {
+                    return Err(format!(
+                        "{} {cfg:?}: unchanged graph reused {reused}/{} layers",
+                        par.label(),
+                        warm.layers.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn minimize_finds_a_local_minimum() {
         // property: fails iff n >= 10; shrinking from 64 by halving must

@@ -6,11 +6,17 @@ pub mod json;
 
 use crate::egraph::RuleStat;
 use crate::error::{Result, ScalifyError};
+use crate::ir::ReduceKind;
 use crate::localize::Discrepancy;
+use crate::verifier::boundary::RelSummary;
 use crate::verifier::{LayerReport, Verdict, VerifyReport};
 use json::Json;
 use std::fmt::Write;
 use std::time::Duration;
+
+// The persisted verification-state artifact lives next to the report
+// codecs: `verify --emit-state` writes one, `verify --against` reads one.
+pub use crate::diff::state::{LayerState, VerifyState};
 
 fn secs(d: Duration) -> Json {
     Json::Num(d.as_secs_f64())
@@ -74,6 +80,125 @@ impl Discrepancy {
     }
 }
 
+/// Content checksum over the compact rendering of a JSON document.
+/// Parsing + re-rendering is canonical (insertion-ordered objects,
+/// integer numbers), so loaders recompute and compare: a flipped digit
+/// in a persisted fingerprint fails the check and degrades to a cold
+/// start instead of replaying a proof for the wrong layer. Shared by the
+/// service memo cache and the diff [`VerifyState`].
+pub fn json_checksum(doc: &Json) -> String {
+    use std::hash::Hasher as _;
+    let mut h = crate::partition::StableHasher::new();
+    h.write(doc.render().as_bytes());
+    format!("{:016x}", h.finish())
+}
+
+/// Wire encoding of a boundary relation summary (shared by the service
+/// memo cache and the diff [`VerifyState`] — same format on disk).
+pub fn rel_summary_to_json(rel: &RelSummary) -> Json {
+    match rel {
+        RelSummary::Duplicate => {
+            Json::Obj(vec![("rel".into(), Json::Str("duplicate".into()))])
+        }
+        RelSummary::Sharded { dim, parts, axis } => Json::Obj(vec![
+            ("rel".into(), Json::Str("sharded".into())),
+            ("dim".into(), Json::Num(*dim as f64)),
+            ("parts".into(), Json::Num(*parts as f64)),
+            ("axis".into(), Json::Num(*axis as f64)),
+        ]),
+        RelSummary::MeshSharded { entries } => Json::Obj(vec![
+            ("rel".into(), Json::Str("mesh-sharded".into())),
+            (
+                "entries".into(),
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|&(d, p, a)| {
+                            Json::Arr(vec![
+                                Json::Num(d as f64),
+                                Json::Num(p as f64),
+                                Json::Num(a as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        RelSummary::Partial { kind, axes } => Json::Obj(vec![
+            ("rel".into(), Json::Str("partial".into())),
+            ("reduce".into(), Json::Str(reduce_label(*kind).into())),
+            ("axes".into(), Json::Num(*axes as f64)),
+        ]),
+    }
+}
+
+/// Decode a boundary relation summary; error strings are caller-facing
+/// ("why did this store degrade to a cold start").
+pub fn rel_summary_from_json(doc: &Json) -> std::result::Result<RelSummary, String> {
+    match doc.str_at("rel").ok_or("relation is missing 'rel'")? {
+        "duplicate" => Ok(RelSummary::Duplicate),
+        "sharded" => Ok(RelSummary::Sharded {
+            dim: doc.u64_at("dim").ok_or("sharded relation is missing 'dim'")? as usize,
+            parts: doc.u64_at("parts").ok_or("sharded relation is missing 'parts'")?
+                as u32,
+            // absent in pre-mesh captures; those are rejected by the
+            // fingerprint-version gate before this parser ever runs
+            axis: doc.u64_at("axis").unwrap_or(0) as usize,
+        }),
+        "mesh-sharded" => {
+            let entries = doc
+                .get("entries")
+                .and_then(Json::as_arr)
+                .ok_or("mesh-sharded relation is missing 'entries'")?
+                .iter()
+                .map(|e| {
+                    let triple = e.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+                        "mesh-sharded entry is not a [dim, parts, axis] triple".to_string()
+                    })?;
+                    let num = |j: &Json| -> std::result::Result<u64, String> {
+                        match j {
+                            Json::Num(n) if *n >= 0.0 => Ok(*n as u64),
+                            _ => Err("mesh-sharded entry is not numeric".into()),
+                        }
+                    };
+                    Ok((
+                        num(&triple[0])? as usize,
+                        num(&triple[1])? as u32,
+                        num(&triple[2])? as usize,
+                    ))
+                })
+                .collect::<std::result::Result<Vec<_>, String>>()?;
+            Ok(RelSummary::MeshSharded { entries })
+        }
+        "partial" => Ok(RelSummary::Partial {
+            kind: parse_reduce(
+                doc.str_at("reduce").ok_or("partial relation is missing 'reduce'")?,
+            )?,
+            axes: doc.u64_at("axes").unwrap_or(1) as crate::ir::AxesMask,
+        }),
+        other => Err(format!("unknown relation kind '{other}'")),
+    }
+}
+
+fn reduce_label(kind: ReduceKind) -> &'static str {
+    match kind {
+        ReduceKind::Add => "add",
+        ReduceKind::Max => "max",
+        ReduceKind::Min => "min",
+        ReduceKind::Mul => "mul",
+    }
+}
+
+fn parse_reduce(label: &str) -> std::result::Result<ReduceKind, String> {
+    match label {
+        "add" => Ok(ReduceKind::Add),
+        "max" => Ok(ReduceKind::Max),
+        "min" => Ok(ReduceKind::Min),
+        "mul" => Ok(ReduceKind::Mul),
+        other => Err(format!("unknown reduce kind '{other}'")),
+    }
+}
+
 /// JSON encoding of one per-rule counter row.
 pub fn rule_stat_to_json(r: &RuleStat) -> Json {
     Json::Obj(vec![
@@ -109,6 +234,9 @@ impl LayerReport {
             ),
             ("verified".into(), Json::Bool(self.verified)),
             ("memoized".into(), Json::Bool(self.memoized)),
+            ("reused".into(), Json::Bool(self.reused)),
+            ("reverified".into(), Json::Bool(self.reverified)),
+            ("delta_nodes".into(), Json::Num(self.delta_nodes as f64)),
             ("egraph_nodes".into(), Json::Num(self.egraph_nodes as f64)),
             ("egraph_classes".into(), Json::Num(self.egraph_classes as f64)),
             ("facts".into(), Json::Num(self.facts as f64)),
@@ -122,19 +250,32 @@ impl LayerReport {
     }
 
     /// Decode from [`LayerReport::to_json`] output.
+    ///
+    /// Only `layer` and `verified` are hard requirements: every counter
+    /// added since the first schema decodes with a zero default, so a
+    /// capture from any prior release loads (and captures from *newer*
+    /// releases load here because unknown keys are simply never looked
+    /// at). The explicit fixtures in the test module pin this contract
+    /// per schema generation.
     pub fn from_json(doc: &Json) -> Result<LayerReport> {
         Ok(LayerReport {
             layer: num_field(doc, "layer")? as u32,
             // optional for compatibility with pre-pipeline captures
             stage: doc.get("stage").and_then(Json::as_f64).map(|s| s as u32),
             verified: bool_field(doc, "verified")?,
-            memoized: bool_field(doc, "memoized")?,
-            egraph_nodes: num_field(doc, "egraph_nodes")? as usize,
+            memoized: doc.get("memoized").and_then(Json::as_bool).unwrap_or(false),
+            // diff-aware fields: absent in pre-incremental captures
+            reused: doc.get("reused").and_then(Json::as_bool).unwrap_or(false),
+            reverified: doc.get("reverified").and_then(Json::as_bool).unwrap_or(false),
+            delta_nodes: doc.get("delta_nodes").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize,
+            egraph_nodes: doc.get("egraph_nodes").and_then(Json::as_f64).unwrap_or(0.0)
+                as usize,
             // counter fields below are optional for compatibility with
             // captures written before the indexed-matcher widening
             egraph_classes: doc.get("egraph_classes").and_then(Json::as_f64).unwrap_or(0.0)
                 as usize,
-            facts: num_field(doc, "facts")? as usize,
+            facts: doc.get("facts").and_then(Json::as_f64).unwrap_or(0.0) as usize,
             matches_tried: doc.get("matches_tried").and_then(Json::as_f64).unwrap_or(0.0)
                 as usize,
             rules: match doc.get("rules").and_then(Json::as_arr) {
@@ -144,7 +285,9 @@ impl LayerReport {
                     .collect::<Result<Vec<_>>>()?,
                 None => vec![],
             },
-            duration: Duration::from_secs_f64(num_field(doc, "duration_secs")?.max(0.0)),
+            duration: Duration::from_secs_f64(
+                doc.get("duration_secs").and_then(Json::as_f64).unwrap_or(0.0).max(0.0),
+            ),
         })
     }
 }
@@ -336,6 +479,9 @@ mod tests {
                 stage: Some(1),
                 verified: false,
                 memoized: false,
+                reused: true,
+                reverified: false,
+                delta_nodes: 9,
                 egraph_nodes: 120,
                 egraph_classes: 61,
                 facts: 44,
@@ -371,8 +517,85 @@ mod tests {
         assert_eq!(back.layers[0].matches_tried, 512);
         assert_eq!(back.layers[0].rules, report.layers[0].rules);
         assert_eq!(back.layers[0].stage, Some(1));
+        assert_eq!(back.layers[0].reused, true);
+        assert_eq!(back.layers[0].reverified, false);
+        assert_eq!(back.layers[0].delta_nodes, 9);
         assert_eq!(back.total, report.total);
         assert_eq!(back.stopwatch.phases().count(), 2);
+    }
+
+    /// One literal layer fixture per schema generation. Every prior
+    /// schema must keep loading (back compat), and documents carrying
+    /// keys this reader has never heard of must load too (forward
+    /// compat — an old reader pointed at a new report ignores the new
+    /// `VerifyState`-era fields the same way).
+    #[test]
+    fn layer_report_loads_every_prior_schema_generation() {
+        // v1 (pre-pipeline): layer/verified/memoized/egraph_nodes/facts/duration
+        let v1 = r#"{"layer":3,"verified":true,"memoized":false,
+                     "egraph_nodes":10,"facts":4,"duration_secs":0.5}"#;
+        // v2 (+stage, nullable)
+        let v2 = r#"{"layer":3,"stage":1,"verified":true,"memoized":true,
+                     "egraph_nodes":10,"facts":4,"duration_secs":0.5}"#;
+        // v3 (+indexed-matcher counters: egraph_classes/matches_tried/rules)
+        let v3 = r#"{"layer":3,"stage":null,"verified":true,"memoized":false,
+                     "egraph_nodes":10,"egraph_classes":5,"facts":4,
+                     "matches_tried":77,"rules":[],"duration_secs":0.5}"#;
+        // v4 (+diff-aware fields: reused/reverified/delta_nodes)
+        let v4 = r#"{"layer":3,"stage":null,"verified":true,"memoized":false,
+                     "reused":true,"reverified":false,"delta_nodes":2,
+                     "egraph_nodes":10,"egraph_classes":5,"facts":4,
+                     "matches_tried":77,"rules":[],"duration_secs":0.5}"#;
+        for (gen, text) in [(1, v1), (2, v2), (3, v3), (4, v4)] {
+            let doc = Json::parse(text).unwrap();
+            let layer = LayerReport::from_json(&doc)
+                .unwrap_or_else(|e| panic!("schema generation {gen} must load: {e}"));
+            assert_eq!(layer.layer, 3);
+            assert!(layer.verified);
+        }
+        // pre-diff generations default the diff fields
+        let doc = Json::parse(v3).unwrap();
+        let layer = LayerReport::from_json(&doc).unwrap();
+        assert!(!layer.reused && !layer.reverified);
+        assert_eq!(layer.delta_nodes, 0);
+        // forward compat: unknown fields from some future schema are
+        // ignored, not an error
+        let future = r#"{"layer":3,"verified":true,"from_the_future":{"x":[1,2]},
+                         "another_unknown":"ok"}"#;
+        let layer = LayerReport::from_json(&Json::parse(future).unwrap()).unwrap();
+        assert_eq!(layer.layer, 3);
+        assert_eq!(layer.facts, 0, "missing counters default to zero");
+    }
+
+    #[test]
+    fn full_report_from_a_pre_incremental_capture_loads() {
+        // a minimal whole-report document as an old release wrote it:
+        // no reused/reverified/delta_nodes anywhere
+        let text = r#"{
+            "status": "verified", "verified": true, "discrepancies": [],
+            "layers": [{"layer":0,"verified":true,"memoized":false,
+                        "egraph_nodes":12,"facts":3,"duration_secs":0.01}],
+            "phases": {"partition": 0.001, "verify-layers": 0.009},
+            "total_secs": 0.011
+        }"#;
+        let report = VerifyReport::from_json_str(text).unwrap();
+        assert!(report.verified());
+        assert_eq!(report.layers.len(), 1);
+        assert!(!report.layers[0].reused);
+    }
+
+    #[test]
+    fn rel_summary_wire_codec_round_trips() {
+        let rels = vec![
+            RelSummary::Duplicate,
+            RelSummary::Sharded { dim: 1, parts: 4, axis: 1 },
+            RelSummary::MeshSharded { entries: vec![(0, 2, 0), (1, 4, 1)] },
+            RelSummary::Partial { kind: ReduceKind::Max, axes: 0b11 },
+        ];
+        for rel in &rels {
+            let back = rel_summary_from_json(&rel_summary_to_json(rel)).unwrap();
+            assert_eq!(&back, rel);
+        }
     }
 
     #[test]

@@ -16,10 +16,9 @@
 //! cannot carry 64 bits).
 
 use crate::error::Result;
-use crate::ir::ReduceKind;
-use crate::partition::{MemoEntry, FINGERPRINT_VERSION};
+use crate::partition::{check_fingerprint_version, MemoEntry, FINGERPRINT_VERSION};
 use crate::report::json::Json;
-use crate::verifier::boundary::RelSummary;
+use crate::report::{json_checksum, rel_summary_from_json, rel_summary_to_json};
 use rustc_hash::FxHashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -193,7 +192,7 @@ impl MemoCache {
         entries.sort_by_key(|(fp, _)| *fp);
         let arr =
             Json::Arr(entries.iter().map(|(fp, e)| entry_to_json(*fp, e)).collect());
-        let checksum = entries_checksum(&arr);
+        let checksum = json_checksum(&arr);
         let doc = Json::Obj(vec![
             ("format".into(), Json::Num(CACHE_FORMAT_VERSION as f64)),
             (
@@ -212,18 +211,6 @@ impl MemoCache {
     }
 }
 
-/// Content checksum over the compact rendering of the entries array.
-/// Parsing + re-rendering is canonical (insertion-ordered objects,
-/// integer numbers), so the loader can recompute and compare: a flipped
-/// digit in a fingerprint or verdict fails the check and degrades to a
-/// cold start instead of replaying a proof for the wrong layer.
-fn entries_checksum(arr: &Json) -> String {
-    use std::hash::Hasher as _;
-    let mut h = crate::partition::StableHasher::new();
-    h.write(arr.render().as_bytes());
-    format!("{:016x}", h.finish())
-}
-
 fn parse_cache(text: &str) -> std::result::Result<FxHashMap<u64, MemoEntry>, String> {
     let doc = Json::parse(text).map_err(|e| format!("corrupted JSON: {e}"))?;
     let format = doc.u64_at("format").ok_or("missing 'format' version")?;
@@ -232,21 +219,15 @@ fn parse_cache(text: &str) -> std::result::Result<FxHashMap<u64, MemoEntry>, Str
             "cache format v{format} (this build reads v{CACHE_FORMAT_VERSION})"
         ));
     }
-    let fpv = doc
-        .u64_at("fingerprint_version")
-        .ok_or("missing 'fingerprint_version'")?;
-    if fpv != FINGERPRINT_VERSION as u64 {
-        return Err(format!(
-            "fingerprints were computed under scheme v{fpv} (this build uses \
-             v{FINGERPRINT_VERSION})"
-        ));
-    }
+    // one shared gate with the diff VerifyState: skew degrades to a cold
+    // start with identical wording everywhere fingerprints are persisted
+    check_fingerprint_version(&doc)?;
     let items = doc
         .get("entries")
         .and_then(Json::as_arr)
         .ok_or("missing 'entries' array")?;
     let expected = doc.str_at("checksum").ok_or("missing 'checksum'")?;
-    let actual = entries_checksum(&Json::Arr(items.to_vec()));
+    let actual = json_checksum(&Json::Arr(items.to_vec()));
     if actual != expected {
         return Err(format!(
             "checksum mismatch (file says {expected}, contents hash to {actual})"
@@ -268,7 +249,7 @@ fn entry_to_json(fp: u64, e: &MemoEntry) -> Json {
         ("egraph_classes".into(), Json::Num(e.egraph_classes as f64)),
         (
             "out_rels".into(),
-            Json::Arr(e.out_rels.iter().map(rel_to_json).collect()),
+            Json::Arr(e.out_rels.iter().map(rel_summary_to_json).collect()),
         ),
     ])
 }
@@ -289,116 +270,16 @@ fn entry_from_json(doc: &Json) -> std::result::Result<(u64, MemoEntry), String> 
         .ok_or("entry is missing 'out_rels'")?;
     let out_rels = rels
         .iter()
-        .map(rel_from_json)
+        .map(rel_summary_from_json)
         .collect::<std::result::Result<Vec<_>, String>>()?;
     Ok((fp, MemoEntry { verified, out_rels, egraph_nodes, egraph_classes }))
-}
-
-fn rel_to_json(rel: &RelSummary) -> Json {
-    match rel {
-        RelSummary::Duplicate => {
-            Json::Obj(vec![("rel".into(), Json::Str("duplicate".into()))])
-        }
-        RelSummary::Sharded { dim, parts, axis } => Json::Obj(vec![
-            ("rel".into(), Json::Str("sharded".into())),
-            ("dim".into(), Json::Num(*dim as f64)),
-            ("parts".into(), Json::Num(*parts as f64)),
-            ("axis".into(), Json::Num(*axis as f64)),
-        ]),
-        RelSummary::MeshSharded { entries } => Json::Obj(vec![
-            ("rel".into(), Json::Str("mesh-sharded".into())),
-            (
-                "entries".into(),
-                Json::Arr(
-                    entries
-                        .iter()
-                        .map(|&(d, p, a)| {
-                            Json::Arr(vec![
-                                Json::Num(d as f64),
-                                Json::Num(p as f64),
-                                Json::Num(a as f64),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]),
-        RelSummary::Partial { kind, axes } => Json::Obj(vec![
-            ("rel".into(), Json::Str("partial".into())),
-            ("reduce".into(), Json::Str(reduce_label(*kind).into())),
-            ("axes".into(), Json::Num(*axes as f64)),
-        ]),
-    }
-}
-
-fn rel_from_json(doc: &Json) -> std::result::Result<RelSummary, String> {
-    match doc.str_at("rel").ok_or("relation is missing 'rel'")? {
-        "duplicate" => Ok(RelSummary::Duplicate),
-        "sharded" => Ok(RelSummary::Sharded {
-            dim: doc.u64_at("dim").ok_or("sharded relation is missing 'dim'")? as usize,
-            parts: doc.u64_at("parts").ok_or("sharded relation is missing 'parts'")?
-                as u32,
-            // absent in pre-mesh caches; those are rejected by the
-            // fingerprint-version gate before this parser ever runs
-            axis: doc.u64_at("axis").unwrap_or(0) as usize,
-        }),
-        "mesh-sharded" => {
-            let entries = doc
-                .get("entries")
-                .and_then(Json::as_arr)
-                .ok_or("mesh-sharded relation is missing 'entries'")?
-                .iter()
-                .map(|e| {
-                    let triple = e.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
-                        "mesh-sharded entry is not a [dim, parts, axis] triple".to_string()
-                    })?;
-                    let num = |j: &Json| -> std::result::Result<u64, String> {
-                        match j {
-                            Json::Num(n) if *n >= 0.0 => Ok(*n as u64),
-                            _ => Err("mesh-sharded entry is not numeric".into()),
-                        }
-                    };
-                    Ok((
-                        num(&triple[0])? as usize,
-                        num(&triple[1])? as u32,
-                        num(&triple[2])? as usize,
-                    ))
-                })
-                .collect::<std::result::Result<Vec<_>, String>>()?;
-            Ok(RelSummary::MeshSharded { entries })
-        }
-        "partial" => Ok(RelSummary::Partial {
-            kind: parse_reduce(
-                doc.str_at("reduce").ok_or("partial relation is missing 'reduce'")?,
-            )?,
-            axes: doc.u64_at("axes").unwrap_or(1) as crate::ir::AxesMask,
-        }),
-        other => Err(format!("unknown relation kind '{other}'")),
-    }
-}
-
-fn reduce_label(kind: ReduceKind) -> &'static str {
-    match kind {
-        ReduceKind::Add => "add",
-        ReduceKind::Max => "max",
-        ReduceKind::Min => "min",
-        ReduceKind::Mul => "mul",
-    }
-}
-
-fn parse_reduce(label: &str) -> std::result::Result<ReduceKind, String> {
-    match label {
-        "add" => Ok(ReduceKind::Add),
-        "max" => Ok(ReduceKind::Max),
-        "min" => Ok(ReduceKind::Min),
-        "mul" => Ok(ReduceKind::Mul),
-        other => Err(format!("unknown reduce kind '{other}'")),
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::ReduceKind;
+    use crate::verifier::boundary::RelSummary;
 
     fn tmpdir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!(

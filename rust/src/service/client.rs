@@ -6,6 +6,7 @@
 
 use super::protocol::{Request, Response, StatsSnapshot, VerifySource};
 use crate::error::{Result, ResultExt, ScalifyError};
+use crate::report::json::Json;
 use crate::verifier::VerifyReport;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -55,12 +56,32 @@ impl Client {
         source: VerifySource,
     ) -> Result<(VerifyReport, f64, StatsSnapshot)> {
         match self.request(&Request::Verify(source))? {
-            Response::VerifyDone { report, latency_secs, stats } => {
+            Response::VerifyDone { report, latency_secs, stats, .. } => {
                 Ok((report, latency_secs, stats))
             }
             Response::Error { message } => Err(ScalifyError::runtime(message)),
             other => Err(ScalifyError::runtime(format!(
                 "unexpected response to verify: {other:?}"
+            ))),
+        }
+    }
+
+    /// Verify a pair incrementally against a previously captured
+    /// [`crate::diff::VerifyState`] document. The fourth tuple slot
+    /// carries the daemon's degradation warning when the state was
+    /// unusable and the run fell back to a cold verify.
+    pub fn verify_diff(
+        &mut self,
+        source: VerifySource,
+        state: Json,
+    ) -> Result<(VerifyReport, f64, StatsSnapshot, Option<String>)> {
+        match self.request(&Request::VerifyDiff { source, state })? {
+            Response::VerifyDone { report, latency_secs, stats, warning } => {
+                Ok((report, latency_secs, stats, warning))
+            }
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to verify_diff: {other:?}"
             ))),
         }
     }

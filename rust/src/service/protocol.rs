@@ -8,6 +8,7 @@
 //! {"cmd":"verify","model":"llama-tiny","par":"tp4","layers":2}
 //! {"cmd":"verify","bug":"T4#3"}
 //! {"cmd":"verify","base_hlo":"HloModule ...","dist_hlo":"HloModule ...","cores":4}
+//! {"cmd":"verify_diff","model":"llama-tiny","par":"tp2","state":{...}}
 //! {"cmd":"stats"}
 //! {"cmd":"shutdown"}
 //! ```
@@ -38,6 +39,11 @@ pub enum VerifySource {
         par: String,
         /// Optional layer-count override.
         layers: Option<u32>,
+        /// Optional scripted one-op edit: bump every constant in this
+        /// layer on both sides before verifying (the CI vehicle for
+        /// exercising `verify_diff` — HLO text loses layer tags, so the
+        /// zoo-model path carries the edit).
+        edit_layer: Option<u32>,
     },
     /// A bug-corpus case by id (`T4#3`, `PT#1`, ...) — always expected to
     /// come back unverified; used for smoke checks and tests.
@@ -62,6 +68,16 @@ pub enum VerifySource {
 pub enum Request {
     /// Verify a pair.
     Verify(VerifySource),
+    /// Verify a pair incrementally against a previous run's persisted
+    /// [`crate::diff::VerifyState`] (embedded as a JSON object). A state
+    /// that fails to decode or names a different graph degrades to a
+    /// cold verify with a warning in the response — never an error.
+    VerifyDiff {
+        /// What to verify.
+        source: VerifySource,
+        /// The `VerifyState` document from a previous `--emit-state` run.
+        state: Json,
+    },
     /// Report service counters.
     Stats,
     /// Stop accepting connections and exit.
@@ -72,27 +88,17 @@ impl Request {
     /// JSON encoding.
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Verify(VerifySource::Model { model, par, layers }) => {
-                let mut fields = vec![
-                    ("cmd".into(), Json::Str("verify".into())),
-                    ("model".into(), Json::Str(model.clone())),
-                    ("par".into(), Json::Str(par.clone())),
-                ];
-                if let Some(l) = layers {
-                    fields.push(("layers".into(), Json::Num(*l as f64)));
-                }
+            Request::Verify(source) => {
+                let mut fields = vec![("cmd".into(), Json::Str("verify".into()))];
+                fields.extend(source_fields(source));
                 Json::Obj(fields)
             }
-            Request::Verify(VerifySource::Bug { id }) => Json::Obj(vec![
-                ("cmd".into(), Json::Str("verify".into())),
-                ("bug".into(), Json::Str(id.clone())),
-            ]),
-            Request::Verify(VerifySource::Hlo { base, dist, cores }) => Json::Obj(vec![
-                ("cmd".into(), Json::Str("verify".into())),
-                ("base_hlo".into(), Json::Str(base.clone())),
-                ("dist_hlo".into(), Json::Str(dist.clone())),
-                ("cores".into(), Json::Num(*cores as f64)),
-            ]),
+            Request::VerifyDiff { source, state } => {
+                let mut fields = vec![("cmd".into(), Json::Str("verify_diff".into()))];
+                fields.extend(source_fields(source));
+                fields.push(("state".into(), state.clone()));
+                Json::Obj(fields)
+            }
             Request::Stats => Json::Obj(vec![("cmd".into(), Json::Str("stats".into()))]),
             Request::Shutdown => {
                 Json::Obj(vec![("cmd".into(), Json::Str("shutdown".into()))])
@@ -114,8 +120,20 @@ impl Request {
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
             "verify" => Ok(Request::Verify(decode_source(doc)?)),
+            "verify_diff" => {
+                let state = doc
+                    .get("state")
+                    .ok_or_else(|| {
+                        ScalifyError::parse(
+                            "verify_diff request is missing the 'state' object",
+                        )
+                    })?
+                    .clone();
+                Ok(Request::VerifyDiff { source: decode_source(doc)?, state })
+            }
             other => Err(ScalifyError::parse(format!(
-                "unknown request cmd '{other}' (expected verify, stats or shutdown)"
+                "unknown request cmd '{other}' (expected verify, verify_diff, stats \
+                 or shutdown)"
             ))),
         }
     }
@@ -123,6 +141,32 @@ impl Request {
     /// Decode one wire line.
     pub fn from_line(line: &str) -> Result<Request> {
         Request::from_json(&Json::parse(line)?)
+    }
+}
+
+/// The source-describing fields of a verify/verify_diff request (shared
+/// by both encodings; `cmd` and `state` are the caller's).
+fn source_fields(source: &VerifySource) -> Vec<(String, Json)> {
+    match source {
+        VerifySource::Model { model, par, layers, edit_layer } => {
+            let mut fields = vec![
+                ("model".into(), Json::Str(model.clone())),
+                ("par".into(), Json::Str(par.clone())),
+            ];
+            if let Some(l) = layers {
+                fields.push(("layers".into(), Json::Num(*l as f64)));
+            }
+            if let Some(l) = edit_layer {
+                fields.push(("edit_layer".into(), Json::Num(*l as f64)));
+            }
+            fields
+        }
+        VerifySource::Bug { id } => vec![("bug".into(), Json::Str(id.clone()))],
+        VerifySource::Hlo { base, dist, cores } => vec![
+            ("base_hlo".into(), Json::Str(base.clone())),
+            ("dist_hlo".into(), Json::Str(dist.clone())),
+            ("cores".into(), Json::Num(*cores as f64)),
+        ],
     }
 }
 
@@ -134,22 +178,29 @@ fn decode_source(doc: &Json) -> Result<VerifySource> {
         let par = doc
             .str_at("par")
             .ok_or_else(|| ScalifyError::parse("verify-by-model needs a 'par' spec"))?;
-        let layers = match doc.get("layers") {
-            None | Some(Json::Null) => None,
-            Some(v) => {
-                let n = v.as_u64().ok_or_else(|| {
-                    ScalifyError::parse("'layers' must be a non-negative integer")
-                })?;
-                if n > u32::MAX as u64 {
-                    return Err(ScalifyError::parse("'layers' must fit in u32"));
+        let opt_u32 = |key: &str| -> Result<Option<u32>> {
+            match doc.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => {
+                    let n = v.as_u64().ok_or_else(|| {
+                        ScalifyError::parse(format!(
+                            "'{key}' must be a non-negative integer"
+                        ))
+                    })?;
+                    if n > u32::MAX as u64 {
+                        return Err(ScalifyError::parse(format!(
+                            "'{key}' must fit in u32"
+                        )));
+                    }
+                    Ok(Some(n as u32))
                 }
-                Some(n as u32)
             }
         };
         return Ok(VerifySource::Model {
             model: model.to_string(),
             par: par.to_string(),
-            layers,
+            layers: opt_u32("layers")?,
+            edit_layer: opt_u32("edit_layer")?,
         });
     }
     if let Some(base) = doc.str_at("base_hlo") {
@@ -299,6 +350,9 @@ pub enum Response {
         latency_secs: f64,
         /// Counters sampled right after the job.
         stats: StatsSnapshot,
+        /// Non-fatal degradation notice (a `verify_diff` whose state was
+        /// unusable ran cold; absent on clean runs).
+        warning: Option<String>,
     },
     /// Stats request served.
     Stats(StatsSnapshot),
@@ -315,13 +369,19 @@ impl Response {
     /// JSON encoding.
     pub fn to_json(&self) -> Json {
         match self {
-            Response::VerifyDone { report, latency_secs, stats } => Json::Obj(vec![
-                ("ok".into(), Json::Bool(true)),
-                ("kind".into(), Json::Str("verify".into())),
-                ("report".into(), report.to_json()),
-                ("latency_secs".into(), Json::Num(*latency_secs)),
-                ("stats".into(), stats.to_json()),
-            ]),
+            Response::VerifyDone { report, latency_secs, stats, warning } => {
+                let mut fields = vec![
+                    ("ok".into(), Json::Bool(true)),
+                    ("kind".into(), Json::Str("verify".into())),
+                    ("report".into(), report.to_json()),
+                    ("latency_secs".into(), Json::Num(*latency_secs)),
+                    ("stats".into(), stats.to_json()),
+                ];
+                if let Some(w) = warning {
+                    fields.push(("warning".into(), Json::Str(w.clone())));
+                }
+                Json::Obj(fields)
+            }
             Response::Stats(stats) => Json::Obj(vec![
                 ("ok".into(), Json::Bool(true)),
                 ("kind".into(), Json::Str("stats".into())),
@@ -367,6 +427,7 @@ impl Response {
                     report: VerifyReport::from_json(report)?,
                     latency_secs: doc.f64_at("latency_secs").unwrap_or(0.0),
                     stats: StatsSnapshot::from_json(stats)?,
+                    warning: doc.str_at("warning").map(str::to_owned),
                 })
             }
             Some("stats") => {
@@ -407,11 +468,13 @@ mod tests {
             model: "llama-tiny".into(),
             par: "tp4".into(),
             layers: Some(2),
+            edit_layer: None,
         }));
         round_trip_request(Request::Verify(VerifySource::Model {
             model: "mixtral-tiny".into(),
             par: "ep4".into(),
             layers: None,
+            edit_layer: None,
         }));
         round_trip_request(Request::Verify(VerifySource::Bug { id: "T4#3".into() }));
         round_trip_request(Request::Verify(VerifySource::Hlo {
@@ -419,6 +482,41 @@ mod tests {
             dist: "HloModule b".into(),
             cores: 8,
         }));
+    }
+
+    #[test]
+    fn verify_diff_requests_round_trip() {
+        round_trip_request(Request::VerifyDiff {
+            source: VerifySource::Model {
+                model: "llama-tiny".into(),
+                par: "tp2".into(),
+                layers: Some(4),
+                edit_layer: Some(1),
+            },
+            state: Json::Obj(vec![
+                ("format".into(), Json::Num(1.0)),
+                ("layers".into(), Json::Arr(vec![])),
+            ]),
+        });
+        round_trip_request(Request::VerifyDiff {
+            source: VerifySource::Bug { id: "PT#2".into() },
+            state: Json::Obj(vec![]),
+        });
+        // a verify_diff without a state is malformed
+        assert!(Request::from_line(
+            "{\"cmd\":\"verify_diff\",\"model\":\"llama-tiny\",\"par\":\"tp2\"}"
+        )
+        .is_err());
+        // pre-diff clients that never send edit_layer still decode to None
+        match Request::from_line("{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\"}")
+            .unwrap()
+        {
+            Request::Verify(VerifySource::Model { edit_layer, layers, .. }) => {
+                assert_eq!(edit_layer, None);
+                assert_eq!(layers, None);
+            }
+            other => panic!("expected model verify, got {other:?}"),
+        }
     }
 
     #[test]
@@ -434,6 +532,8 @@ mod tests {
             "{\"cmd\":\"verify\",\"base_hlo\":\"x\",\"dist_hlo\":\"y\",\"cores\":0}",
             "{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\",\"layers\":-1}",
             "{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\",\"layers\":4294967297}",
+            "{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\",\"edit_layer\":-2}",
+            "{\"cmd\":\"verify_diff\",\"model\":\"m\",\"par\":\"tp2\"}",
         ] {
             assert!(Request::from_line(bad).is_err(), "should reject {bad:?}");
         }
@@ -497,14 +597,37 @@ mod tests {
             report,
             latency_secs: 0.004,
             stats: StatsSnapshot { jobs: 1, ..Default::default() },
+            warning: None,
         };
         let line = resp.to_line();
         assert!(!line.contains('\n'));
         match Response::from_line(&line).unwrap() {
-            Response::VerifyDone { report, latency_secs, stats } => {
+            Response::VerifyDone { report, latency_secs, stats, warning } => {
                 assert!(report.verified());
                 assert!((latency_secs - 0.004).abs() < 1e-12);
                 assert_eq!(stats.jobs, 1);
+                assert_eq!(warning, None);
+            }
+            other => panic!("expected verify response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degraded_verify_responses_carry_their_warning() {
+        let resp = Response::VerifyDone {
+            report: VerifyReport {
+                verdict: crate::verifier::Verdict::Verified,
+                layers: vec![],
+                stopwatch: crate::util::Stopwatch::new(),
+                total: std::time::Duration::from_millis(1),
+            },
+            latency_secs: 0.001,
+            stats: StatsSnapshot::default(),
+            warning: Some("state names model 'other'; ran cold".into()),
+        };
+        match Response::from_line(&resp.to_line()).unwrap() {
+            Response::VerifyDone { warning, .. } => {
+                assert!(warning.unwrap().contains("ran cold"));
             }
             other => panic!("expected verify response, got {other:?}"),
         }

@@ -24,8 +24,10 @@ use super::cache::MemoCache;
 use super::protocol::{Request, Response, StatsSnapshot, VerifySource};
 use super::scheduler::Scheduler;
 use crate::cli;
+use crate::diff::VerifyState;
 use crate::error::{Result, ResultExt, ScalifyError};
 use crate::hlo::parse_hlo_module;
+use crate::report::json::Json;
 use crate::verifier::{GraphPair, Session, VerifyConfig};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
@@ -369,46 +371,91 @@ fn handle_request(line: &str, state: &Arc<ServiceState>) -> Response {
             state.shutdown.store(true, Ordering::SeqCst);
             Response::ShuttingDown
         }
-        Request::Verify(source) => {
-            let t0 = Instant::now();
-            let job_state = Arc::clone(state);
-            // the whole job — pair construction included — runs under the
-            // scheduler's admission bound; this call blocks (backpressure)
-            // when the daemon is saturated
-            let outcome = state
-                .scheduler
-                .execute(move || build_pair(&source).and_then(|p| job_state.session.verify(&p)));
-            let latency_secs = t0.elapsed().as_secs_f64();
-            match outcome {
-                Ok(report) => {
-                    state.jobs.fetch_add(1, Ordering::Relaxed);
-                    let nodes: u64 =
-                        report.layers.iter().map(|l| l.egraph_nodes as u64).sum();
-                    state.egraph_nodes_total.fetch_add(nodes, Ordering::Relaxed);
-                    let tried: u64 =
-                        report.layers.iter().map(|l| l.matches_tried as u64).sum();
-                    state.ematch_tried_total.fetch_add(tried, Ordering::Relaxed);
-                    let applied: u64 = report
-                        .layers
-                        .iter()
-                        .flat_map(|l| l.rules.iter())
-                        .map(|r| r.applications as u64)
-                        .sum();
-                    state.rule_applications_total.fetch_add(applied, Ordering::Relaxed);
-                    state.record_latency(latency_secs);
-                    Response::VerifyDone { report, latency_secs, stats: state.snapshot() }
+        Request::Verify(source) => run_verify_job(state, source, None),
+        Request::VerifyDiff { source, state: prev } => {
+            run_verify_job(state, source, Some(prev))
+        }
+    }
+}
+
+/// Run one verify job under the scheduler's admission bound, cold or —
+/// when `prev` carries a usable [`VerifyState`] — incrementally. An
+/// unusable state (parse failure, version skew, different graph) costs a
+/// cold run plus a warning in the response, never an error: the same
+/// degrade-only contract as the on-disk memo cache.
+fn run_verify_job(
+    state: &Arc<ServiceState>,
+    source: VerifySource,
+    prev: Option<Json>,
+) -> Response {
+    let t0 = Instant::now();
+    let job_state = Arc::clone(state);
+    // the whole job — pair construction included — runs under the
+    // scheduler's admission bound; this call blocks (backpressure)
+    // when the daemon is saturated
+    let outcome = state.scheduler.execute(move || {
+        let pair = build_pair(&source)?;
+        match prev {
+            None => job_state.session.verify(&pair).map(|r| (r, None)),
+            Some(doc) => match VerifyState::from_json(&doc) {
+                Ok(prev_state) if prev_state.matches_graph(&pair.dist) => job_state
+                    .session
+                    .verify_against(&pair, &prev_state)
+                    .map(|(r, _)| (r, None)),
+                Ok(prev_state) => {
+                    let warning = format!(
+                        "verify state is for '{}' on {} cores, request built '{}' on \
+                         {} cores; ran cold",
+                        prev_state.model,
+                        prev_state.num_cores,
+                        pair.dist.name,
+                        pair.dist.num_cores
+                    );
+                    job_state.session.verify(&pair).map(|r| (r, Some(warning)))
                 }
-                Err(e) => Response::Error { message: e.to_string() },
+                Err(why) => {
+                    let warning = format!("ignoring verify state ({why}); ran cold");
+                    job_state.session.verify(&pair).map(|r| (r, Some(warning)))
+                }
+            },
+        }
+    });
+    let latency_secs = t0.elapsed().as_secs_f64();
+    match outcome {
+        Ok((report, warning)) => {
+            state.jobs.fetch_add(1, Ordering::Relaxed);
+            let nodes: u64 = report.layers.iter().map(|l| l.egraph_nodes as u64).sum();
+            state.egraph_nodes_total.fetch_add(nodes, Ordering::Relaxed);
+            let tried: u64 = report.layers.iter().map(|l| l.matches_tried as u64).sum();
+            state.ematch_tried_total.fetch_add(tried, Ordering::Relaxed);
+            let applied: u64 = report
+                .layers
+                .iter()
+                .flat_map(|l| l.rules.iter())
+                .map(|r| r.applications as u64)
+                .sum();
+            state.rule_applications_total.fetch_add(applied, Ordering::Relaxed);
+            state.record_latency(latency_secs);
+            Response::VerifyDone {
+                report,
+                latency_secs,
+                stats: state.snapshot(),
+                warning,
             }
         }
+        Err(e) => Response::Error { message: e.to_string() },
     }
 }
 
 /// Materialize the graph pair a verify request names.
 fn build_pair(source: &VerifySource) -> Result<GraphPair> {
     match source {
-        VerifySource::Model { model, par, layers } => {
-            cli::model_pair(model, cli::parallelism(par)?, *layers)
+        VerifySource::Model { model, par, layers, edit_layer } => {
+            let pair = cli::model_pair(model, cli::parallelism(par)?, *layers)?;
+            match edit_layer {
+                None => Ok(pair),
+                Some(layer) => crate::diff::one_op_edit(&pair, *layer),
+            }
         }
         VerifySource::Bug { id } => {
             let case = crate::bugs::reproduced_bugs()
@@ -455,6 +502,7 @@ mod tests {
                 model: "llama-tiny".into(),
                 par: "tp2".into(),
                 layers: None,
+                edit_layer: None,
             })
             .unwrap();
         assert!(report.verified(), "{:?}", report.verdict);
@@ -477,6 +525,7 @@ mod tests {
             model: "llama-tiny".into(),
             par: "tp2".into(),
             layers: None,
+            edit_layer: None,
         };
 
         let mut client = Client::connect(&addr).unwrap();
@@ -506,6 +555,7 @@ mod tests {
                 model: "gpt-5".into(),
                 par: "tp2".into(),
                 layers: None,
+                edit_layer: None,
             }))
             .unwrap();
         match resp {
@@ -516,6 +566,70 @@ mod tests {
         // the connection still serves real work afterwards
         let stats = client.stats().unwrap();
         assert_eq!(stats.jobs, 0);
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn verify_diff_replays_unchanged_layers_and_degrades_on_bad_state() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let source = VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp2".into(),
+            layers: Some(4),
+            edit_layer: None,
+        };
+
+        // capture the state the client would persist: verify locally with
+        // the same pair the daemon builds, then hand the document over
+        let pair = build_pair(&source).unwrap();
+        let session = Session::new(VerifyConfig {
+            threads: 2,
+            parallel: false,
+            ..VerifyConfig::default()
+        });
+        let (_, captured) = session.verify_capture(&pair).unwrap();
+
+        let mut client = Client::connect(&addr).unwrap();
+        let (report, _, _, warning) =
+            client.verify_diff(source.clone(), captured.to_json()).unwrap();
+        assert!(warning.is_none(), "clean state must not warn: {warning:?}");
+        assert!(report.verified());
+        assert!(
+            report.layers.iter().all(|l| l.reused),
+            "unchanged graph must replay every layer: {report:?}"
+        );
+
+        // a one-op edit re-verifies exactly the touched layer
+        let edited = VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp2".into(),
+            layers: Some(4),
+            edit_layer: Some(1),
+        };
+        let (report, _, _, warning) =
+            client.verify_diff(edited, captured.to_json()).unwrap();
+        assert!(warning.is_none());
+        assert!(report.verified());
+        assert_eq!(report.layers.iter().filter(|l| l.reverified).count(), 1);
+        assert!(report.layers.iter().any(|l| l.reverified && l.delta_nodes > 0));
+
+        // garbage state degrades to a cold verify with a warning
+        let (report, _, _, warning) = client
+            .verify_diff(
+                source,
+                crate::report::json::Json::Obj(vec![(
+                    "format".into(),
+                    crate::report::json::Json::Num(9999.0),
+                )]),
+            )
+            .unwrap();
+        assert!(report.verified());
+        let warning = warning.expect("bad state must warn");
+        assert!(warning.contains("ran cold"), "{warning}");
+        assert!(report.layers.iter().all(|l| !l.reused));
+
         client.shutdown().unwrap();
         server.wait();
     }

@@ -200,6 +200,15 @@ pub struct LayerReport {
     pub verified: bool,
     /// Served from the memo table?
     pub memoized: bool,
+    /// Replayed from a previous run's persisted [`crate::diff::VerifyState`]
+    /// (`verify --against`): the fingerprint still matched, no e-graph ran.
+    pub reused: bool,
+    /// Re-verified because the diff touched this layer (only set on
+    /// `verify --against` runs; cold verifications leave both flags off).
+    pub reverified: bool,
+    /// Stable-node-id multiset delta against the previous run's state
+    /// for this layer (0 for reused layers and cold runs).
+    pub delta_nodes: usize,
     /// E-graph nodes at the end of saturation.
     pub egraph_nodes: usize,
     /// E-graph classes at the end of saturation (0 when the layer was
@@ -246,6 +255,7 @@ impl VerifyReport {
     /// Human-readable summary.
     pub fn summary(&self) -> String {
         let memoized = self.layers.iter().filter(|l| l.memoized).count();
+        let reused = self.layers.iter().filter(|l| l.reused).count();
         let status = match &self.verdict {
             Verdict::Verified => "VERIFIED".to_string(),
             Verdict::Unverified { discrepancies } => {
@@ -253,8 +263,13 @@ impl VerifyReport {
             }
             Verdict::ResourceExhausted { at } => format!("RESOURCE-EXHAUSTED at {at}"),
         };
+        let reuse = if reused > 0 {
+            format!(", {reused} reused from state")
+        } else {
+            String::new()
+        };
         format!(
-            "{status} — {} layers ({} memoized) in {}",
+            "{status} — {} layers ({} memoized{reuse}) in {}",
             self.layers.len(),
             memoized,
             fmt_duration(self.total)

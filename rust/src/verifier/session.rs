@@ -20,6 +20,7 @@
 
 use super::boundary::RelSummary;
 use super::{layer, LayerReport, Verdict, VerifyConfig, VerifyReport};
+use crate::diff::{id_multiset_delta, layer_node_ids, LayerState, VerifyState};
 use crate::egraph::RuleSet;
 use crate::error::{Result, ScalifyError};
 use crate::localize::Discrepancy;
@@ -150,6 +151,41 @@ impl Session {
     /// typed [`ScalifyError`] instead of a panic, and repeated calls reuse
     /// the session's templates, memo and workers.
     pub fn verify(&self, pair: &GraphPair) -> Result<VerifyReport> {
+        Ok(self.verify_full(pair, None, false)?.0)
+    }
+
+    /// Verify and additionally capture a persistable [`VerifyState`]
+    /// (per-layer fingerprints, boundary out-relations and stable node
+    /// ids) that a later `verify_against` can replay.
+    pub fn verify_capture(&self, pair: &GraphPair) -> Result<(VerifyReport, VerifyState)> {
+        let (report, state) = self.verify_full(pair, None, true)?;
+        Ok((report, state.expect("capture always builds a state")))
+    }
+
+    /// Incremental re-verification against a previous run's persisted
+    /// state: layers whose pair fingerprint still matches a *verified*
+    /// entry in `prev` replay their boundary out-relations without any
+    /// e-graph work (`LayerReport::reused`); everything downstream of the
+    /// diff re-derives as usual (`LayerReport::reverified`, with
+    /// `delta_nodes` from the stable-id multiset difference). Replay is
+    /// fingerprint-gated, so a stale or wrong state can cost time but
+    /// never produce a wrong verdict. Returns the fresh state for the
+    /// next round.
+    pub fn verify_against(
+        &self,
+        pair: &GraphPair,
+        prev: &VerifyState,
+    ) -> Result<(VerifyReport, VerifyState)> {
+        let (report, state) = self.verify_full(pair, Some(prev), true)?;
+        Ok((report, state.expect("capture always builds a state")))
+    }
+
+    fn verify_full(
+        &self,
+        pair: &GraphPair,
+        against: Option<&VerifyState>,
+        capture: bool,
+    ) -> Result<(VerifyReport, Option<VerifyState>)> {
         self.validate_pair(pair)?;
         self.runs.fetch_add(1, Ordering::Relaxed);
 
@@ -194,9 +230,12 @@ impl Session {
         // parallel assuming `Duplicate` for unknown boundaries; the
         // sequential pass reuses a speculation hit whenever the exact
         // boundary relations match what was speculated.
+        // (skipped on `verify_against` runs: speculation would re-verify
+        // layers the persisted state is about to replay for free)
         let mut speculated: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
             FxHashMap::default();
-        if self.cfg.parallel && self.cfg.partition && dist_layers.len() > 1 {
+        if self.cfg.parallel && self.cfg.partition && dist_layers.len() > 1 && against.is_none()
+        {
             sw.time("parallel-rewrite", || {
                 speculated = self.speculative_pass(
                     &base_layers,
@@ -207,8 +246,17 @@ impl Session {
             });
         }
 
+        // stable node identities, grouped the way the state stores them —
+        // only computed when a state is being captured or compared
+        let node_ids_by_layer = if capture || against.is_some() {
+            Some(layer_node_ids(&pair.dist, self.cfg.partition))
+        } else {
+            None
+        };
+
         // ---- sequential pass with exact boundary propagation ----
         let mut reports = Vec::new();
+        let mut state_layers: Option<Vec<LayerState>> = capture.then(Vec::new);
         let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
         let mut exhausted: Option<String> = None;
         sw.time("verify-layers", || {
@@ -230,6 +278,70 @@ impl Session {
                 let input_rels = layer::collect_input_rels(bslice, dslice, &boundary);
                 let fp = fingerprint_pair(bslice, dslice, &input_rels, pair.dist.num_cores);
                 // (the slice hashes its own mesh axes — see hash_slice)
+                let new_ids = node_ids_by_layer
+                    .as_ref()
+                    .and_then(|m| m.get(&dslice.layer))
+                    .map(|v| v.as_slice())
+                    .unwrap_or(&[]);
+                let prev_layer = against.and_then(|s| s.layer(dslice.layer));
+                // semi-naive replay: an unchanged layer (same fingerprint,
+                // previously verified) re-emits its persisted boundary
+                // out-relations — the facts downstream layers seed from —
+                // without running an e-graph. A changed layer falls through
+                // to full verification, and because its *out-relations*
+                // feed the next layer's fingerprint, any layer its change
+                // actually affects re-verifies in turn.
+                let state_replay =
+                    prev_layer.filter(|ls| ls.verified && ls.fingerprint == fp);
+                if let Some(ls) = state_replay {
+                    let entry = MemoEntry {
+                        verified: true,
+                        out_rels: ls.out_rels.clone(),
+                        egraph_nodes: ls.egraph_nodes,
+                        egraph_classes: ls.egraph_classes,
+                    };
+                    if self.cfg.memoize {
+                        // warm the session memo too (no miss counted: the
+                        // work was done by the producing run)
+                        self.memo.lock().expect("memo lock").preload(fp, entry.clone());
+                    }
+                    for (k, rel) in ls.out_rels.iter().enumerate() {
+                        if let (Some(&b), Some(&d)) = (
+                            bslice.boundary_outputs.get(k),
+                            dslice.boundary_outputs.get(k),
+                        ) {
+                            boundary.insert(d, (b, rel.clone()));
+                        }
+                    }
+                    reports.push(LayerReport {
+                        layer: dslice.layer,
+                        stage: dslice.stage(),
+                        verified: true,
+                        memoized: false,
+                        reused: true,
+                        reverified: false,
+                        delta_nodes: 0,
+                        egraph_nodes: ls.egraph_nodes,
+                        egraph_classes: ls.egraph_classes,
+                        facts: 0,
+                        matches_tried: 0,
+                        rules: vec![],
+                        duration: t0.elapsed(),
+                    });
+                    if let Some(layers) = &mut state_layers {
+                        layers.push(LayerState {
+                            layer: dslice.layer,
+                            stage: dslice.stage(),
+                            fingerprint: fp,
+                            verified: true,
+                            out_rels: ls.out_rels.clone(),
+                            egraph_nodes: ls.egraph_nodes,
+                            egraph_classes: ls.egraph_classes,
+                            node_ids: new_ids.to_vec(),
+                        });
+                    }
+                    continue;
+                }
                 let spec_hit = speculated
                     .get(&dslice.layer)
                     .filter(|(rels, o)| rels == &input_rels && o.verified)
@@ -324,11 +436,23 @@ impl Session {
                     }
                 }
                 all_discrepancies.extend(outcome.discrepancies.iter().cloned());
+                let reverified = against.is_some();
+                let delta_nodes = if reverified {
+                    id_multiset_delta(
+                        prev_layer.map(|l| l.node_ids.as_slice()).unwrap_or(&[]),
+                        new_ids,
+                    )
+                } else {
+                    0
+                };
                 reports.push(LayerReport {
                     layer: dslice.layer,
                     stage: dslice.stage(),
                     verified: outcome.verified,
                     memoized,
+                    reused: false,
+                    reverified,
+                    delta_nodes,
                     egraph_nodes: outcome.egraph_nodes,
                     egraph_classes: outcome.egraph_classes,
                     facts: outcome.facts,
@@ -336,6 +460,18 @@ impl Session {
                     rules: outcome.rule_stats.clone(),
                     duration: t0.elapsed(),
                 });
+                if let Some(layers) = &mut state_layers {
+                    layers.push(LayerState {
+                        layer: dslice.layer,
+                        stage: dslice.stage(),
+                        fingerprint: fp,
+                        verified: outcome.verified,
+                        out_rels: outcome.out_rels.clone(),
+                        egraph_nodes: outcome.egraph_nodes,
+                        egraph_classes: outcome.egraph_classes,
+                        node_ids: new_ids.to_vec(),
+                    });
+                }
             }
         });
 
@@ -346,7 +482,16 @@ impl Session {
         } else {
             Verdict::Unverified { discrepancies: all_discrepancies }
         };
-        Ok(VerifyReport { verdict, layers: reports, stopwatch: sw, total: start.elapsed() })
+        let state = state_layers.map(|layers| VerifyState {
+            model: pair.dist.name.clone(),
+            num_cores: pair.dist.num_cores,
+            mesh: pair.dist.mesh.clone(),
+            status: verdict.status().into(),
+            layers,
+        });
+        let report =
+            VerifyReport { verdict, layers: reports, stopwatch: sw, total: start.elapsed() };
+        Ok((report, state))
     }
 
     /// Typed validation of a pair before any work is done (the one-shot

@@ -1,0 +1,146 @@
+//! Integration tests for incremental verify-on-diff (`verify --against`):
+//! the 100%-reuse contract on unchanged graphs, one-op-edit localization,
+//! cold-vs-incremental differential over the bug corpus, and the on-disk
+//! state round trip.
+
+use scalify::bugs::{new_bugs, reproduced_bugs};
+use scalify::diff::{one_op_edit, one_sided_edit};
+use scalify::modelgen::llama_pair;
+use scalify::prelude::*;
+
+fn tiny_pair() -> GraphPair {
+    llama_pair(&LlamaConfig::tiny(), Parallelism::Tensor { tp: 2 })
+}
+
+/// Sorted localization keys of a report — the (site, func, layer)
+/// triples two runs must agree on.
+fn sites(report: &VerifyReport) -> Vec<(String, String, Option<u32>)> {
+    let mut keys: Vec<_> = report
+        .discrepancies()
+        .iter()
+        .map(|d| (d.site.clone(), d.func.clone(), d.layer))
+        .collect();
+    keys.sort();
+    keys
+}
+
+#[test]
+fn unchanged_reverify_reuses_every_layer() {
+    let pair = tiny_pair();
+    let (cold, state) =
+        Session::new(VerifyConfig::default()).verify_capture(&pair).unwrap();
+    assert!(cold.verified(), "{}", cold.summary());
+
+    // a fresh session, as a separate CLI invocation would be
+    let (warm, _) =
+        Session::new(VerifyConfig::default()).verify_against(&pair, &state).unwrap();
+    assert!(warm.verified(), "{}", warm.summary());
+    assert_eq!(warm.layers.len(), cold.layers.len());
+    assert!(
+        warm.layers.iter().all(|l| l.reused),
+        "every layer must replay on an unchanged graph: {}",
+        warm.summary()
+    );
+    assert!(warm.layers.iter().all(|l| !l.reverified && l.delta_nodes == 0));
+}
+
+#[test]
+fn one_op_edit_reverifies_exactly_the_edited_layer() {
+    let pair = tiny_pair();
+    let (_, state) =
+        Session::new(VerifyConfig::default()).verify_capture(&pair).unwrap();
+
+    let edited = one_op_edit(&pair, 1).unwrap();
+    // the diff front end localizes the edit before any verification
+    let diff = GraphDiff::compute(&pair.dist, &edited.dist);
+    assert_eq!(diff.dirty_layers, vec![1]);
+
+    let (report, _) =
+        Session::new(VerifyConfig::default()).verify_against(&edited, &state).unwrap();
+    assert!(report.verified(), "equivalence-preserving edit: {}", report.summary());
+    let reverified: Vec<_> = report.layers.iter().filter(|l| l.reverified).collect();
+    assert_eq!(reverified.len(), 1, "{}", report.summary());
+    assert!(reverified[0].delta_nodes > 0, "the edited layer's node delta is visible");
+    let reused = report.layers.iter().filter(|l| l.reused).count();
+    assert_eq!(reused, report.layers.len() - 1);
+}
+
+#[test]
+fn one_sided_edit_localizes_identically_cold_and_incremental() {
+    let pair = tiny_pair();
+    let (_, state) =
+        Session::new(VerifyConfig::default()).verify_capture(&pair).unwrap();
+
+    // dist-only bump: v2 is genuinely wrong in layer 1
+    let broken = one_sided_edit(&pair, 1).unwrap();
+    let cold = Session::new(VerifyConfig::default()).verify(&broken).unwrap();
+    let (inc, _) =
+        Session::new(VerifyConfig::default()).verify_against(&broken, &state).unwrap();
+
+    assert!(!cold.verified(), "{}", cold.summary());
+    assert!(!inc.verified(), "{}", inc.summary());
+    assert_eq!(
+        sites(&cold),
+        sites(&inc),
+        "incremental re-verification must localize exactly like cold"
+    );
+    assert!(inc.layers.iter().any(|l| l.reused), "unaffected layers still replay");
+}
+
+#[test]
+fn state_survives_the_disk_round_trip() {
+    let pair = tiny_pair();
+    let (_, state) =
+        Session::new(VerifyConfig::default()).verify_capture(&pair).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("scalify-incr-test-{}.json", std::process::id()));
+    state.save(&path).unwrap();
+    let loaded = VerifyState::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded, state);
+    assert!(loaded.matches_graph(&pair.dist));
+
+    let (report, _) =
+        Session::new(VerifyConfig::default()).verify_against(&pair, &loaded).unwrap();
+    assert!(report.verified() && report.layers.iter().all(|l| l.reused));
+}
+
+/// Differential over the whole bug corpus: verifying a buggy pair
+/// against its *own* captured state must reproduce the cold verdict and
+/// the cold localization exactly. Failed layers never replay (their
+/// state entry is marked unverified), so each bug is re-found, not
+/// remembered.
+#[test]
+fn bug_corpus_verdicts_match_cold_and_incremental() {
+    for case in reproduced_bugs().into_iter().chain(new_bugs()) {
+        let pair = (case.build)();
+        let (cold, state) = match Session::new(VerifyConfig::default()).verify_capture(&pair)
+        {
+            Ok(out) => out,
+            // a corpus case the verifier cannot process at all is outside
+            // this differential (evaluate() covers those)
+            Err(_) => continue,
+        };
+        let (inc, _) = Session::new(VerifyConfig::default())
+            .verify_against(&pair, &state)
+            .unwrap_or_else(|e| panic!("{}: incremental run errored: {e}", case.id));
+        assert_eq!(
+            cold.verified(),
+            inc.verified(),
+            "{}: cold {} vs incremental {}",
+            case.id,
+            cold.summary(),
+            inc.summary()
+        );
+        assert_eq!(sites(&cold), sites(&inc), "{}: localization differs", case.id);
+        for (c, i) in cold.layers.iter().zip(&inc.layers) {
+            if !c.verified {
+                assert!(
+                    !i.reused,
+                    "{}: a failed layer must re-verify, never replay",
+                    case.id
+                );
+            }
+        }
+    }
+}

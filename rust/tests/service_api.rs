@@ -31,7 +31,12 @@ fn request_mix() -> Vec<(&'static str, VerifySource, bool)> {
     vec![
         (
             "llama-tp2",
-            VerifySource::Model { model: "llama-tiny".into(), par: "tp2".into(), layers: None },
+            VerifySource::Model {
+                model: "llama-tiny".into(),
+                par: "tp2".into(),
+                layers: None,
+                edit_layer: None,
+            },
             true,
         ),
         (
@@ -40,6 +45,7 @@ fn request_mix() -> Vec<(&'static str, VerifySource, bool)> {
                 model: "mixtral-tiny".into(),
                 par: "ep4".into(),
                 layers: None,
+                edit_layer: None,
             },
             true,
         ),
@@ -49,6 +55,7 @@ fn request_mix() -> Vec<(&'static str, VerifySource, bool)> {
                 model: "dpstep-tiny".into(),
                 par: "dp2z1".into(),
                 layers: None,
+                edit_layer: None,
             },
             true,
         ),
@@ -171,6 +178,7 @@ fn a_restarted_daemon_answers_its_first_request_from_the_disk_cache() {
         model: "llama-tiny".into(),
         par: "tp2".into(),
         layers: None,
+        edit_layer: None,
     };
 
     // first process: cold start, verify, shut down cleanly
@@ -247,6 +255,7 @@ fn a_corrupted_cache_file_degrades_to_a_cold_start_not_an_error() {
             model: "llama-tiny".into(),
             par: "tp2".into(),
             layers: None,
+            edit_layer: None,
         })
         .expect("verify");
     assert!(report.verified());
