@@ -274,6 +274,24 @@ impl<'a> Runner<'a> {
     }
 }
 
+// The parallel cold pass ships whole per-layer verifications to pool
+// workers: each job builds its own e-graph (arena-style — every e-node,
+// class and match log lives in the job's `EGraph` and is dropped
+// wholesale with it, so nothing is shared or freed piecemeal across
+// threads), runs a `Runner` over the session's shared rule set, and
+// sends the `RunReport`-derived outcome back. These assertions pin the
+// Send/Sync story at compile time so a future `Rc`/`RefCell` inside the
+// engine fails here, not in a distant `pool.run_all` bound.
+#[allow(dead_code)]
+fn assert_engine_crosses_threads() {
+    fn assert_send<T: Send>() {}
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send::<EGraph>();
+    assert_send::<RunReport>();
+    assert_send::<Runner<'static>>();
+    assert_send_sync::<super::RuleSet>();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -464,6 +464,18 @@ fn parse_instruction(
     } else {
         operands_str.split(',').map(|s| s.trim()).collect()
     };
+    // arity-checked operand access: a malformed line like `slice()` is a
+    // typed parse error naming the opcode, never an index panic
+    let operand = |i: usize| -> Result<NodeId> {
+        let o = operands.get(i).ok_or_else(|| {
+            parse_err!(
+                "{opcode} needs operand #{} but '({operands_str})' names {}",
+                i + 1,
+                operands.len()
+            )
+        })?;
+        lookup(o)
+    };
 
     let num_cores = g.num_cores;
     let groups = |attrs: &FxHashMap<String, String>| -> Result<ReplicaGroups> {
@@ -486,24 +498,24 @@ fn parse_instruction(
                 .parse::<usize>()?;
             (Op::Iota { dim, dims: shape.dims.clone() }, vec![])
         }
-        "add" => (Op::Add, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "subtract" => (Op::Sub, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "multiply" => (Op::Mul, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "divide" => (Op::Div, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "maximum" => (Op::Max, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "minimum" => (Op::Min, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "power" => (Op::Pow, vec![lookup(operands[0])?, lookup(operands[1])?]),
-        "negate" => (Op::Neg, vec![lookup(operands[0])?]),
-        "exponential" => (Op::Exp, vec![lookup(operands[0])?]),
-        "log" => (Op::Log, vec![lookup(operands[0])?]),
-        "tanh" => (Op::Tanh, vec![lookup(operands[0])?]),
-        "rsqrt" => (Op::Rsqrt, vec![lookup(operands[0])?]),
-        "sqrt" => (Op::Sqrt, vec![lookup(operands[0])?]),
-        "abs" => (Op::Abs, vec![lookup(operands[0])?]),
-        "logistic" => (Op::Logistic, vec![lookup(operands[0])?]),
-        "sine" => (Op::Sin, vec![lookup(operands[0])?]),
-        "cosine" => (Op::Cos, vec![lookup(operands[0])?]),
-        "convert" => (Op::Convert { to: shape.dtype }, vec![lookup(operands[0])?]),
+        "add" => (Op::Add, vec![operand(0)?, operand(1)?]),
+        "subtract" => (Op::Sub, vec![operand(0)?, operand(1)?]),
+        "multiply" => (Op::Mul, vec![operand(0)?, operand(1)?]),
+        "divide" => (Op::Div, vec![operand(0)?, operand(1)?]),
+        "maximum" => (Op::Max, vec![operand(0)?, operand(1)?]),
+        "minimum" => (Op::Min, vec![operand(0)?, operand(1)?]),
+        "power" => (Op::Pow, vec![operand(0)?, operand(1)?]),
+        "negate" => (Op::Neg, vec![operand(0)?]),
+        "exponential" => (Op::Exp, vec![operand(0)?]),
+        "log" => (Op::Log, vec![operand(0)?]),
+        "tanh" => (Op::Tanh, vec![operand(0)?]),
+        "rsqrt" => (Op::Rsqrt, vec![operand(0)?]),
+        "sqrt" => (Op::Sqrt, vec![operand(0)?]),
+        "abs" => (Op::Abs, vec![operand(0)?]),
+        "logistic" => (Op::Logistic, vec![operand(0)?]),
+        "sine" => (Op::Sin, vec![operand(0)?]),
+        "cosine" => (Op::Cos, vec![operand(0)?]),
+        "convert" => (Op::Convert { to: shape.dtype }, vec![operand(0)?]),
         "compare" => {
             let kind = match attrs.get("direction").map(|s| s.as_str()) {
                 Some("EQ") => CmpKind::Eq,
@@ -514,11 +526,11 @@ fn parse_instruction(
                 Some("GE") => CmpKind::Ge,
                 other => bail!("compare with direction {:?}", other),
             };
-            (Op::Compare(kind), vec![lookup(operands[0])?, lookup(operands[1])?])
+            (Op::Compare(kind), vec![operand(0)?, operand(1)?])
         }
         "select" => (
             Op::Select,
-            vec![lookup(operands[0])?, lookup(operands[1])?, lookup(operands[2])?],
+            vec![operand(0)?, operand(1)?, operand(2)?],
         ),
         "dot" => {
             let get_dims = |key: &str| -> Result<Vec<usize>> {
@@ -531,34 +543,61 @@ fn parse_instruction(
                     lhs_batch: get_dims("lhs_batch_dims")?,
                     rhs_batch: get_dims("rhs_batch_dims")?,
                 },
-                vec![lookup(operands[0])?, lookup(operands[1])?],
+                vec![operand(0)?, operand(1)?],
             )
         }
-        "reshape" => (Op::Reshape { dims: shape.dims.clone() }, vec![lookup(operands[0])?]),
+        "reshape" => (Op::Reshape { dims: shape.dims.clone() }, vec![operand(0)?]),
         "transpose" => {
             let perm = parse_brace_list(
                 attrs.get("dimensions").ok_or_else(|| parse_err!("transpose without dims"))?,
             )?;
-            (Op::Transpose { perm }, vec![lookup(operands[0])?])
+            (Op::Transpose { perm }, vec![operand(0)?])
         }
         "slice" => {
             let spec = attrs.get("slice").ok_or_else(|| parse_err!("slice without spec"))?;
+            let body = spec.trim().trim_matches(|c| c == '{' || c == '}').trim();
+            if body.is_empty() {
+                bail!("slice spec '{spec}' names no dimensions");
+            }
             let mut starts = Vec::new();
             let mut limits = Vec::new();
             let mut strides = Vec::new();
-            for part in spec.trim_matches(|c| c == '{' || c == '}').split("],") {
+            for part in body.split("],") {
                 let p = part.trim().trim_start_matches('[').trim_end_matches(']');
+                // every error names the full spec and the bad segment, so
+                // a truncated `[0:` or bogus `[a:b]` points at its source
+                let field = |v: Option<&str>, what: &str| -> Result<i64> {
+                    let v = v
+                        .map(str::trim)
+                        .filter(|v| !v.is_empty())
+                        .ok_or_else(|| {
+                            parse_err!("slice spec '{spec}' segment '[{p}]' is missing a {what}")
+                        })?;
+                    v.parse::<i64>().map_err(|_| {
+                        parse_err!(
+                            "slice spec '{spec}' segment '[{p}]' has a malformed {what} '{v}'"
+                        )
+                    })
+                };
                 let mut it = p.split(':');
-                starts.push(it.next().unwrap().trim().parse::<i64>()?);
-                limits.push(it.next().ok_or_else(|| parse_err!("bad slice"))?.trim().parse()?);
-                strides.push(it.next().map(|v| v.trim().parse()).transpose()?.unwrap_or(1));
+                starts.push(field(it.next(), "start")?);
+                limits.push(field(it.next(), "limit")?);
+                strides.push(match it.next() {
+                    None => 1,
+                    stride => field(stride, "stride")?,
+                });
+                if it.next().is_some() {
+                    bail!("slice spec '{spec}' segment '[{p}]' has more than start:limit:stride");
+                }
             }
-            (Op::Slice { starts, limits, strides }, vec![lookup(operands[0])?])
+            (Op::Slice { starts, limits, strides }, vec![operand(0)?])
         }
         "concatenate" => {
-            let dim = parse_brace_list(
-                attrs.get("dimensions").ok_or_else(|| parse_err!("concat without dims"))?,
-            )?[0];
+            let dims =
+                attrs.get("dimensions").ok_or_else(|| parse_err!("concat without dims"))?;
+            let dim = parse_brace_list(dims)?.first().copied().ok_or_else(|| {
+                parse_err!("concatenate dimensions '{dims}' name no dimension")
+            })?;
             let ins = operands.iter().map(|o| lookup(o)).collect::<Result<Vec<_>>>()?;
             (Op::Concat { dim }, ins)
         }
@@ -566,7 +605,7 @@ fn parse_instruction(
             let mapped = parse_brace_list(
                 attrs.get("dimensions").ok_or_else(|| parse_err!("broadcast without dims"))?,
             )?;
-            (Op::Broadcast { mapped, dims: shape.dims.clone() }, vec![lookup(operands[0])?])
+            (Op::Broadcast { mapped, dims: shape.dims.clone() }, vec![operand(0)?])
         }
         "reduce" => {
             let dims = parse_brace_list(
@@ -580,7 +619,7 @@ fn parse_instruction(
                 .copied()
                 .ok_or_else(|| parse_err!("reduce region '{region}' is not a simple combiner"))?;
             // operands = (input, init); init is checked to be the identity
-            (Op::Reduce { kind, dims }, vec![lookup(operands[0])?])
+            (Op::Reduce { kind, dims }, vec![operand(0)?])
         }
         "send" | "recv" => {
             let channel: u32 = attrs
@@ -593,7 +632,7 @@ fn parse_instruction(
             } else {
                 Op::Recv { channel }
             };
-            (op, vec![lookup(operands[0])?])
+            (op, vec![operand(0)?])
         }
         "all-reduce" => {
             let region = attrs
@@ -603,7 +642,7 @@ fn parse_instruction(
                 .get(region.trim())
                 .copied()
                 .ok_or_else(|| parse_err!("all-reduce region '{region}' unknown"))?;
-            (Op::AllReduce { kind, groups: groups(&attrs)? }, vec![lookup(operands[0])?])
+            (Op::AllReduce { kind, groups: groups(&attrs)? }, vec![operand(0)?])
         }
         "all-gather" => {
             let dim = attrs
@@ -615,7 +654,7 @@ fn parse_instruction(
                     attrs.get("all_gather_dimension").and_then(|v| v.parse::<usize>().ok())
                 })
                 .ok_or_else(|| parse_err!("all-gather without dimension"))?;
-            (Op::AllGather { dim, groups: groups(&attrs)? }, vec![lookup(operands[0])?])
+            (Op::AllGather { dim, groups: groups(&attrs)? }, vec![operand(0)?])
         }
         "reduce-scatter" => {
             let region = attrs
@@ -633,7 +672,7 @@ fn parse_instruction(
                 .ok_or_else(|| parse_err!("reduce-scatter without dimension"))?;
             (
                 Op::ReduceScatter { kind, dim, groups: groups(&attrs)? },
-                vec![lookup(operands[0])?],
+                vec![operand(0)?],
             )
         }
         "all-to-all" => {
@@ -647,7 +686,7 @@ fn parse_instruction(
             };
             (
                 Op::AllToAll { split_dim, concat_dim, groups: groups(&attrs)? },
-                vec![lookup(operands[0])?],
+                vec![operand(0)?],
             )
         }
         "tuple" => {
@@ -659,7 +698,7 @@ fn parse_instruction(
                 .get("index")
                 .ok_or_else(|| parse_err!("gte without index"))?
                 .parse::<usize>()?;
-            (Op::GetTupleElement { index }, vec![lookup(operands[0])?])
+            (Op::GetTupleElement { index }, vec![operand(0)?])
         }
         other => {
             let ins = operands
@@ -831,5 +870,76 @@ ENTRY main {
             .nodes
             .iter()
             .any(|n| matches!(n.op, Op::Convert { to: DType::BF16 })));
+    }
+
+    /// A minimal one-op module around `line`, for negative-input tests.
+    fn module_with(line: &str) -> String {
+        format!(
+            "HloModule m\n\nENTRY main {{\n  p = f32[4,4]{{1,0}} parameter(0)\n  {line}\n}}\n"
+        )
+    }
+
+    fn parse_error_of(line: &str) -> ScalifyError {
+        parse_hlo_module(&module_with(line), 1)
+            .expect_err("malformed instruction must not parse")
+    }
+
+    #[test]
+    fn truncated_slice_spec_is_a_typed_parse_error() {
+        let err = parse_error_of("ROOT s = f32[2,4]{1,0} slice(p), slice={[0:2], [0:}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("missing a limit"), "{err}");
+        assert!(err.message().contains("[0:"), "error must name the bad segment: {err}");
+    }
+
+    #[test]
+    fn bogus_slice_bound_names_the_spec() {
+        let err = parse_error_of("ROOT s = f32[2,4]{1,0} slice(p), slice={[zero:2], [0:4]}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("malformed start 'zero'"), "{err}");
+        assert!(err.message().contains("{[zero:2], [0:4]}"), "{err}");
+    }
+
+    #[test]
+    fn empty_slice_spec_is_a_typed_parse_error() {
+        let err = parse_error_of("ROOT s = f32[2,4]{1,0} slice(p), slice={}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("names no dimensions"), "{err}");
+    }
+
+    #[test]
+    fn overlong_slice_segment_is_rejected() {
+        let err = parse_error_of("ROOT s = f32[2,4]{1,0} slice(p), slice={[0:2:1:9]}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("more than start:limit:stride"), "{err}");
+    }
+
+    #[test]
+    fn transpose_without_dims_is_a_typed_parse_error() {
+        let err = parse_error_of("ROOT t = f32[4,4]{1,0} transpose(p)");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("transpose without dims"), "{err}");
+    }
+
+    #[test]
+    fn bogus_transpose_dim_is_a_typed_parse_error() {
+        let err = parse_error_of("ROOT t = f32[4,4]{1,0} transpose(p), dimensions={1,zero}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("bad index 'zero'"), "{err}");
+    }
+
+    #[test]
+    fn empty_concat_dims_is_a_typed_parse_error() {
+        let err =
+            parse_error_of("ROOT c = f32[8,4]{1,0} concatenate(p, p), dimensions={}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("name no dimension"), "{err}");
+    }
+
+    #[test]
+    fn missing_operand_is_a_typed_parse_error_not_a_panic() {
+        let err = parse_error_of("ROOT s = f32[2,4]{1,0} slice(), slice={[0:2], [0:4]}");
+        assert_eq!(err.kind(), "parse", "{err:?}");
+        assert!(err.message().contains("slice needs operand #1"), "{err}");
     }
 }

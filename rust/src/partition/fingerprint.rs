@@ -339,6 +339,15 @@ impl LayerMemo {
         self.table.get(&fp).map(|s| s.entry.verified).unwrap_or(false)
     }
 
+    /// Clone a verified entry without counting a hit or refreshing
+    /// recency. The parallel scheduling pass uses this to propagate
+    /// boundary out-relations for memo-served layers; the sequential
+    /// assembly pass performs the counted [`LayerMemo::get`] later, so
+    /// hit statistics stay identical to a sequential run.
+    pub fn peek_verified(&self, fp: u64) -> Option<MemoEntry> {
+        self.table.get(&fp).filter(|s| s.entry.verified).map(|s| s.entry.clone())
+    }
+
     /// Drop all entries (hit/miss/eviction counters are kept).
     pub fn clear(&mut self) {
         self.table.clear();

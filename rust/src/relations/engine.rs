@@ -75,14 +75,14 @@ impl<'a> GraphCtx<'a> {
     fn base_nodes_of(&self, eg: &EGraph, class: Id) -> Vec<NodeId> {
         let canon = eg.find(class);
         let mut cache = self.class_index.borrow_mut();
-        if cache.is_none() {
+        let idx = cache.get_or_insert_with(|| {
             let mut idx: FxHashMap<Id, Vec<NodeId>> = FxHashMap::default();
             for n in &self.base.nodes {
                 idx.entry(eg.find(self.b2c[n.id.idx()])).or_default().push(n.id);
             }
-            *cache = Some(idx);
-        }
-        cache.as_ref().unwrap().get(&canon).cloned().unwrap_or_default()
+            idx
+        });
+        idx.get(&canon).cloned().unwrap_or_default()
     }
 }
 
@@ -1794,5 +1794,93 @@ impl RelEngine {
             }
         }
         derived
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, GraphBuilder, Shape};
+
+    /// Two tiny structurally-identical graphs registered into one e-graph,
+    /// the way `verify_layer` does it, plus the node→class maps.
+    fn tiny_ctx_parts() -> (Graph, Graph, EGraph, Vec<Id>, Vec<Id>) {
+        let build = |side: &str| {
+            let mut b = GraphBuilder::new(format!("{side}-g"), 1);
+            let x = b.parameter(&format!("{side}::x"), Shape::new(DType::F32, vec![4]));
+            let y = b.parameter(&format!("{side}::y"), Shape::new(DType::F32, vec![4]));
+            let z = b.add(x, y);
+            b.output(z);
+            b.finish()
+        };
+        let base = build("B");
+        let dist = build("D");
+        let mut eg = EGraph::new();
+        let mut reg = |g: &Graph| -> Vec<Id> {
+            let mut map: Vec<Id> = Vec::with_capacity(g.len());
+            for n in &g.nodes {
+                let children: Vec<Id> = n.inputs.iter().map(|i| map[i.idx()]).collect();
+                map.push(eg.add(ENode::new(n.op.clone(), children)));
+            }
+            map
+        };
+        let b2c = reg(&base);
+        let d2c = reg(&dist);
+        (base, dist, eg, b2c, d2c)
+    }
+
+    /// Regression: the lazily-built class→baseline-node index must be
+    /// correct on the very first (cold) query, whichever class that query
+    /// asks for — including a class with no baseline members at all. The
+    /// original implementation initialized the cache and then re-read it
+    /// through `as_ref().unwrap()`; a refactor that returned before the
+    /// write (or a poisoned first query) would panic or answer from an
+    /// empty index.
+    #[test]
+    fn class_index_is_correct_on_a_cold_first_query() {
+        let (base, dist, eg, b2c, d2c) = tiny_ctx_parts();
+        let base_uses = base.uses();
+        let ctx = GraphCtx {
+            base: &base,
+            dist: &dist,
+            b2c: &b2c,
+            d2c: &d2c,
+            base_uses: &base_uses,
+            class_index: std::cell::RefCell::new(None),
+        };
+        // cold first query: a distributed-only class — no baseline nodes
+        // canonicalize there, so the answer is empty (and must not panic)
+        assert!(ctx.base_nodes_of(&eg, d2c[0]).is_empty());
+        // the same cache now serves the populated classes
+        for n in &base.nodes {
+            let hits = ctx.base_nodes_of(&eg, b2c[n.id.idx()]);
+            assert!(hits.contains(&n.id), "node {:?} missing from its own class", n.id);
+        }
+    }
+
+    /// The cold query order must not change answers: querying a populated
+    /// class first and an empty one second gives the same results as the
+    /// reverse order on a fresh context.
+    #[test]
+    fn class_index_answers_are_query_order_independent() {
+        let (base, dist, eg, b2c, d2c) = tiny_ctx_parts();
+        let base_uses = base.uses();
+        let fresh = || GraphCtx {
+            base: &base,
+            dist: &dist,
+            b2c: &b2c,
+            d2c: &d2c,
+            base_uses: &base_uses,
+            class_index: std::cell::RefCell::new(None),
+        };
+        let a = fresh();
+        let first_then_empty =
+            (a.base_nodes_of(&eg, b2c[2]), a.base_nodes_of(&eg, d2c[2]));
+        let b = fresh();
+        let empty_then_first =
+            (b.base_nodes_of(&eg, d2c[2]), b.base_nodes_of(&eg, b2c[2]));
+        assert_eq!(first_then_empty.0, empty_then_first.1);
+        assert_eq!(first_then_empty.1, empty_then_first.0);
+        assert!(first_then_empty.0.contains(&base.nodes[2].id));
     }
 }

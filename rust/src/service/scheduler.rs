@@ -10,13 +10,19 @@
 //! daemon is saturated, new requests wait at the gate instead of piling
 //! up memory.
 //!
-//! The session's own speculative-pass pool is a *different* pool —
+//! A panicking job surfaces as a typed [`ScalifyError::Runtime`] on the
+//! submitter (its admission slot is released as usual) — the daemon
+//! answers the offending request with an error response and keeps
+//! serving; see the panic-isolation tests in `service::server`.
+//!
+//! The session's own parallel-pass pool is a *different* pool —
 //! scheduler workers block on it while verifying, which is fine; the two
 //! pools must stay separate or a saturated scheduler could deadlock
 //! waiting for sub-jobs that need its own workers.
 
-use crate::util::WorkerPool;
-use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use crate::error::{Result, ScalifyError};
+use crate::util::{panic_message, WorkerPool};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Condvar, Mutex};
@@ -66,30 +72,31 @@ impl Scheduler {
 
     /// Jobs currently admitted but not finished.
     pub fn inflight(&self) -> usize {
-        *self.slots.0.lock().expect("scheduler slot lock")
+        *self.slots.0.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Block until an admission slot is free, then take it.
     fn acquire(&self) {
         let (lock, cv) = &*self.slots;
-        let mut inflight = lock.lock().expect("scheduler slot lock");
+        let mut inflight = lock.lock().unwrap_or_else(|p| p.into_inner());
         while *inflight >= self.capacity {
-            inflight = cv.wait(inflight).expect("scheduler slot lock");
+            inflight = cv.wait(inflight).unwrap_or_else(|p| p.into_inner());
         }
         *inflight += 1;
     }
 
     fn release(slots: &(Mutex<usize>, Condvar)) {
         let (lock, cv) = slots;
-        let mut inflight = lock.lock().expect("scheduler slot lock");
+        let mut inflight = lock.lock().unwrap_or_else(|p| p.into_inner());
         *inflight = inflight.saturating_sub(1);
         cv.notify_all();
     }
 
     /// Run one job through the bounded queue and block for its result.
     /// This is the backpressure point: with `capacity` jobs in flight the
-    /// caller waits here. A panicking job is re-raised on the caller.
-    pub fn execute<T, F>(&self, job: F) -> T
+    /// caller waits here. A panicking job comes back as a typed
+    /// [`ScalifyError::Runtime`], never as a re-raised panic.
+    pub fn execute<T, F>(&self, job: F) -> Result<T>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
@@ -99,55 +106,80 @@ impl Scheduler {
         self.submitted.fetch_add(1, Ordering::Relaxed);
         let slots = Arc::clone(&self.slots);
         let completed = Arc::clone(&self.completed);
-        self.pool.submit(move || {
+        if let Err(e) = self.pool.submit(move || {
             let out = catch_unwind(AssertUnwindSafe(job));
             completed.fetch_add(1, Ordering::Relaxed);
             Scheduler::release(&slots);
             // receiver only disappears if the caller itself died
             let _ = tx.send(out);
-        });
+        }) {
+            // the closure never ran, so its slot must be released here
+            Scheduler::release(&self.slots);
+            return Err(e);
+        }
         match rx.recv() {
-            Ok(Ok(v)) => v,
-            Ok(Err(panic)) => resume_unwind(panic),
-            Err(_) => panic!("scheduler worker dropped a job result"),
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(panic)) => Err(ScalifyError::runtime(format!(
+                "verify job panicked: {}",
+                panic_message(panic.as_ref())
+            ))),
+            Err(_) => Err(ScalifyError::runtime("scheduler worker dropped a job result")),
         }
     }
 
     /// Run every job through the bounded queue; results come back in
-    /// submission order. Unlike [`WorkerPool::run_all`], admission obeys
-    /// the capacity bound: at most `capacity` jobs *execute* concurrently
-    /// (the submitted closures themselves are materialized by the caller;
-    /// the bound is on in-flight work, not on the job list).
-    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    /// submission order, each a typed `Result` (a panicking or dropped
+    /// job errors its own slot only). Unlike [`WorkerPool::run_all`],
+    /// admission obeys the capacity bound: at most `capacity` jobs
+    /// *execute* concurrently (the submitted closures themselves are
+    /// materialized by the caller; the bound is on in-flight work, not on
+    /// the job list).
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<Result<T>>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let n = jobs.len();
         let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        let mut slots_out: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+        let mut pending = 0usize;
         for (i, job) in jobs.into_iter().enumerate() {
             self.acquire();
             self.submitted.fetch_add(1, Ordering::Relaxed);
             let slots = Arc::clone(&self.slots);
             let completed = Arc::clone(&self.completed);
             let tx = tx.clone();
-            self.pool.submit(move || {
+            match self.pool.submit(move || {
                 let out = catch_unwind(AssertUnwindSafe(job));
                 completed.fetch_add(1, Ordering::Relaxed);
                 Scheduler::release(&slots);
                 let _ = tx.send((i, out));
-            });
-        }
-        drop(tx);
-        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, out) = rx.recv().expect("scheduler workers hung up");
-            match out {
-                Ok(v) => results[i] = Some(v),
-                Err(panic) => resume_unwind(panic),
+            }) {
+                Ok(()) => pending += 1,
+                Err(e) => {
+                    Scheduler::release(&self.slots);
+                    slots_out[i] = Some(Err(e));
+                }
             }
         }
-        results.into_iter().map(|r| r.expect("missing job result")).collect()
+        drop(tx);
+        for _ in 0..pending {
+            let Ok((i, out)) = rx.recv() else { break };
+            slots_out[i] = Some(out.map_err(|panic| {
+                ScalifyError::runtime(format!(
+                    "verify job panicked: {}",
+                    panic_message(panic.as_ref())
+                ))
+            }));
+        }
+        slots_out
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| {
+                    Err(ScalifyError::runtime("scheduler worker dropped a job result"))
+                })
+            })
+            .collect()
     }
 }
 
@@ -160,7 +192,7 @@ mod tests {
     #[test]
     fn execute_returns_results() {
         let s = Scheduler::new(2, 4);
-        assert_eq!(s.execute(|| 40 + 2), 42);
+        assert_eq!(s.execute(|| 40 + 2).unwrap(), 42);
         assert_eq!(s.submitted(), 1);
         assert_eq!(s.completed(), 1);
         assert_eq!(s.inflight(), 0);
@@ -170,7 +202,8 @@ mod tests {
     fn run_all_preserves_order_under_bounded_admission() {
         let s = Scheduler::new(4, 2);
         let jobs: Vec<_> = (0..32).map(|i| move || i * 3).collect();
-        assert_eq!(s.run_all(jobs), (0..32).map(|i| i * 3).collect::<Vec<_>>());
+        let out: Vec<i32> = s.run_all(jobs).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(out, (0..32).map(|i| i * 3).collect::<Vec<_>>());
         assert_eq!(s.completed(), 32);
     }
 
@@ -191,6 +224,7 @@ mod tests {
                     std::thread::sleep(Duration::from_millis(10));
                     live2.fetch_sub(1, Ordering::SeqCst);
                 })
+                .unwrap()
             }));
         }
         for h in handles {
@@ -206,20 +240,31 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "job went boom")]
-    fn job_panic_reraises_on_the_submitter() {
+    fn job_panic_is_a_typed_error_on_the_submitter() {
         let s = Scheduler::new(1, 1);
-        s.execute(|| panic!("job went boom"));
+        let err = s.execute::<(), _>(|| panic!("job went boom")).unwrap_err();
+        assert!(matches!(err, ScalifyError::Runtime(_)), "{err:?}");
+        assert!(err.message().contains("job went boom"), "{err}");
     }
 
     #[test]
     fn slot_frees_even_after_a_panic() {
         let s = Scheduler::new(1, 1);
-        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            s.execute(|| panic!("first"));
-        }));
-        assert!(caught.is_err());
+        assert!(s.execute::<(), _>(|| panic!("first")).is_err());
         // the slot released; the scheduler still works
-        assert_eq!(s.execute(|| 7), 7);
+        assert_eq!(s.execute(|| 7).unwrap(), 7);
+        assert_eq!(s.inflight(), 0);
+    }
+
+    #[test]
+    fn run_all_isolates_a_panicking_job_to_its_slot() {
+        let s = Scheduler::new(2, 2);
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            vec![Box::new(|| 10), Box::new(|| panic!("mid-batch")), Box::new(|| 30)];
+        let out = s.run_all(jobs);
+        assert_eq!(*out[0].as_ref().unwrap(), 10);
+        assert!(out[1].as_ref().unwrap_err().message().contains("mid-batch"));
+        assert_eq!(*out[2].as_ref().unwrap(), 30);
+        assert_eq!(s.inflight(), 0);
     }
 }

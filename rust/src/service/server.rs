@@ -393,33 +393,39 @@ fn run_verify_job(
     // the whole job — pair construction included — runs under the
     // scheduler's admission bound; this call blocks (backpressure)
     // when the daemon is saturated
-    let outcome = state.scheduler.execute(move || {
-        let pair = build_pair(&source)?;
-        match prev {
-            None => job_state.session.verify(&pair).map(|r| (r, None)),
-            Some(doc) => match VerifyState::from_json(&doc) {
-                Ok(prev_state) if prev_state.matches_graph(&pair.dist) => job_state
-                    .session
-                    .verify_against(&pair, &prev_state)
-                    .map(|(r, _)| (r, None)),
-                Ok(prev_state) => {
-                    let warning = format!(
-                        "verify state is for '{}' on {} cores, request built '{}' on \
-                         {} cores; ran cold",
-                        prev_state.model,
-                        prev_state.num_cores,
-                        pair.dist.name,
-                        pair.dist.num_cores
-                    );
-                    job_state.session.verify(&pair).map(|r| (r, Some(warning)))
-                }
-                Err(why) => {
-                    let warning = format!("ignoring verify state ({why}); ran cold");
-                    job_state.session.verify(&pair).map(|r| (r, Some(warning)))
-                }
-            },
-        }
-    });
+    let outcome = state
+        .scheduler
+        .execute(move || {
+            let pair = build_pair(&source)?;
+            match prev {
+                None => job_state.session.verify(&pair).map(|r| (r, None)),
+                Some(doc) => match VerifyState::from_json(&doc) {
+                    Ok(prev_state) if prev_state.matches_graph(&pair.dist) => job_state
+                        .session
+                        .verify_against(&pair, &prev_state)
+                        .map(|(r, _)| (r, None)),
+                    Ok(prev_state) => {
+                        let warning = format!(
+                            "verify state is for '{}' on {} cores, request built '{}' on \
+                             {} cores; ran cold",
+                            prev_state.model,
+                            prev_state.num_cores,
+                            pair.dist.name,
+                            pair.dist.num_cores
+                        );
+                        job_state.session.verify(&pair).map(|r| (r, Some(warning)))
+                    }
+                    Err(why) => {
+                        let warning = format!("ignoring verify state ({why}); ran cold");
+                        job_state.session.verify(&pair).map(|r| (r, Some(warning)))
+                    }
+                },
+            }
+        })
+        // a panicked job is a typed scheduler error: collapse it into the
+        // same error channel as a failed verify, so the response below is
+        // `Error { .. }` and the daemon keeps serving
+        .and_then(|r| r);
     let latency_secs = t0.elapsed().as_secs_f64();
     match outcome {
         Ok((report, warning)) => {
@@ -449,6 +455,12 @@ fn run_verify_job(
 
 /// Materialize the graph pair a verify request names.
 fn build_pair(source: &VerifySource) -> Result<GraphPair> {
+    // test-only trapdoor: a deliberately panicking job, to prove the
+    // scheduler isolates panics to one response (compiled out of release)
+    #[cfg(test)]
+    if matches!(source, VerifySource::Model { model, .. } if model == "__panic__") {
+        panic!("deliberate test panic in a verify job");
+    }
     match source {
         VerifySource::Model { model, par, layers, edit_layer } => {
             let pair = cli::model_pair(model, cli::parallelism(par)?, *layers)?;
@@ -635,6 +647,46 @@ mod tests {
     }
 
     #[test]
+    fn panicking_verify_job_yields_an_error_and_the_daemon_keeps_serving() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+
+        // the deliberately-panicking job must answer with a typed error…
+        let resp = client
+            .request(&Request::Verify(VerifySource::Model {
+                model: "__panic__".into(),
+                par: "tp2".into(),
+                layers: None,
+                edit_layer: None,
+            }))
+            .unwrap();
+        match resp {
+            Response::Error { message } => {
+                assert!(message.contains("panicked"), "{message}");
+                assert!(message.contains("deliberate test panic"), "{message}");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+
+        // …and the very next request on the same daemon still verifies
+        // (the admission slot released; the pool lock did not poison)
+        let (report, _, stats) = client
+            .verify(VerifySource::Model {
+                model: "llama-tiny".into(),
+                par: "tp2".into(),
+                layers: None,
+                edit_layer: None,
+            })
+            .unwrap();
+        assert!(report.verified(), "{:?}", report.verdict);
+        assert_eq!(stats.jobs, 1);
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
     fn bug_corpus_requests_come_back_unverified() {
         let server = Server::start(tiny_serve_config()).unwrap();
         let addr = server.local_addr().to_string();
@@ -642,6 +694,62 @@ mod tests {
         let (report, _, _) =
             client.verify(VerifySource::Bug { id: "T4#1".into() }).unwrap();
         assert!(!report.verified(), "bug-corpus pairs must not verify");
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn malformed_inline_hlo_is_a_typed_error_naming_the_spec() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+
+        let base = "HloModule b\n\nENTRY main {\n  p = f32[4,4]{1,0} parameter(0)\n  \
+                    ROOT s = f32[2,4]{1,0} slice(p), slice={[0:2], [0:4]}\n}\n";
+        let dist_with = |root: &str| {
+            format!(
+                "HloModule d\n\nENTRY main {{\n  p = f32[4,4]{{1,0}} parameter(0)\n  {root}\n}}\n"
+            )
+        };
+        // (malformed ROOT line, fragment its error must carry)
+        let cases = [
+            ("ROOT s = f32[2,4]{1,0} slice(p), slice={[0:2], [0:}", "missing a limit"),
+            ("ROOT s = f32[2,4]{1,0} slice(p), slice={}", "names no dimensions"),
+            ("ROOT t = f32[4,4]{1,0} transpose(p)", "transpose without dims"),
+            (
+                "ROOT c = f32[8,4]{1,0} concatenate(p, p), dimensions={}",
+                "name no dimension",
+            ),
+        ];
+        for (root, needle) in cases {
+            let resp = client
+                .request(&Request::Verify(VerifySource::Hlo {
+                    base: base.into(),
+                    dist: dist_with(root),
+                    cores: 2,
+                }))
+                .unwrap();
+            match resp {
+                Response::Error { message } => {
+                    assert!(message.contains("parse error"), "{root}: {message}");
+                    assert!(message.contains(needle), "{root}: {message}");
+                    // localization: the failing instruction is named
+                    assert!(message.contains("parsing instruction"), "{root}: {message}");
+                }
+                other => panic!("expected a parse error for {root}, got {other:?}"),
+            }
+        }
+
+        // the daemon keeps serving well-formed work on the same connection
+        let (report, _, _) = client
+            .verify(VerifySource::Hlo {
+                base: base.into(),
+                dist: base.replace("HloModule b", "HloModule d"),
+                cores: 2,
+            })
+            .unwrap();
+        assert!(report.verified(), "{:?}", report.verdict);
+
         client.shutdown().unwrap();
         server.wait();
     }

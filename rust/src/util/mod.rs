@@ -9,7 +9,7 @@ pub mod pool;
 pub mod timer;
 
 pub use intern::{Interner, Sym};
-pub use pool::WorkerPool;
+pub use pool::{panic_message, WorkerPool};
 pub use prng::Prng;
 pub use timer::Stopwatch;
 

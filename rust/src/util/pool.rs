@@ -1,19 +1,37 @@
 //! A small reusable worker pool.
 //!
-//! The verifier's speculative parallel pass used to spawn fresh scoped
-//! threads on every `verify` call; a [`crate::verifier::Session`] instead
-//! owns one `WorkerPool` for its whole lifetime, so repeated calls reuse
-//! warm threads. Jobs are `'static` closures (slices travel behind `Arc`),
+//! The verifier's parallel layer pass used to spawn fresh scoped threads
+//! on every `verify` call; a [`crate::verifier::Session`] instead owns
+//! one `WorkerPool` for its whole lifetime, so repeated calls reuse warm
+//! threads. Jobs are `'static` closures (slices travel behind `Arc`),
 //! and [`WorkerPool::run_all`] preserves submission order in its results.
 //! [`WorkerPool::submit`] is the fire-and-forget form the service
 //! scheduler builds its bounded queue on.
+//!
+//! Panic isolation: a panicking job is caught on the worker and surfaces
+//! as a typed [`ScalifyError::Runtime`] in that job's result slot — never
+//! as a `resume_unwind` on the caller, and never as a dead worker thread.
+//! The sender lock recovers from poisoning, so one bad job cannot wedge
+//! every later `submit` (the daemon-wide "pool sender lock" hang).
 
-use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use crate::error::{Result, ScalifyError};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Render a `catch_unwind` payload into the message `panic!` carried.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Fixed-size pool of long-lived worker threads.
 ///
@@ -38,13 +56,20 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("scalify-worker-{i}"))
                     .spawn(move || loop {
-                        // hold the lock only while receiving, not while running
-                        let job = match rx.lock() {
-                            Ok(guard) => guard.recv(),
-                            Err(_) => break,
+                        // hold the lock only while receiving, not while
+                        // running; recover a poisoned receiver lock — the
+                        // queue itself is still sound after a panic
+                        let job = {
+                            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+                            guard.recv()
                         };
                         match job {
-                            Ok(job) => job(),
+                            // a panicking job must not kill the worker:
+                            // result-returning callers observe the panic
+                            // through their own catch_unwind wrapper
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // sender dropped: shut down
                         }
                     })
@@ -62,44 +87,61 @@ impl WorkerPool {
     /// Enqueue one job without waiting for it (fire-and-forget). The
     /// caller is responsible for any completion signalling; see
     /// [`crate::service::Scheduler`] for the bounded, result-returning
-    /// layer on top of this.
-    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        let guard = self.tx.lock().expect("pool sender lock");
-        guard
+    /// layer on top of this. Errors (typed, never a panic) only when the
+    /// pool has shut down.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        // a caller that panicked mid-section may have poisoned the lock;
+        // the sender is still sound, so recover instead of propagating
+        let guard = self.tx.lock().unwrap_or_else(|p| p.into_inner());
+        let tx = guard
             .as_ref()
-            .expect("pool already shut down")
-            .send(Box::new(job))
-            .expect("worker pool hung up");
+            .ok_or_else(|| ScalifyError::runtime("worker pool already shut down"))?;
+        tx.send(Box::new(job))
+            .map_err(|_| ScalifyError::runtime("worker pool hung up"))
     }
 
     /// Run every job on the pool and return their results in submission
-    /// order. Blocks until all jobs finish; a panicking job is re-raised
-    /// here (on the caller), not in the worker.
-    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    /// order. Blocks until all jobs finish. A panicking job yields a
+    /// typed `Err(ScalifyError::Runtime)` in its slot — the other jobs'
+    /// results are unaffected and the pool stays usable.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<Result<T>>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         let n = jobs.len();
         let (res_tx, res_rx) = channel::<(usize, std::thread::Result<T>)>();
+        let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+        let mut pending = 0usize;
         for (i, job) in jobs.into_iter().enumerate() {
             let res_tx = res_tx.clone();
-            self.submit(move || {
+            match self.submit(move || {
                 let out = catch_unwind(AssertUnwindSafe(job));
                 // receiver only disappears if the caller itself died
                 let _ = res_tx.send((i, out));
-            });
-        }
-        drop(res_tx);
-        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, out) = res_rx.recv().expect("worker pool hung up");
-            match out {
-                Ok(v) => results[i] = Some(v),
-                Err(panic) => resume_unwind(panic),
+            }) {
+                Ok(()) => pending += 1,
+                Err(e) => slots[i] = Some(Err(e)),
             }
         }
-        results.into_iter().map(|r| r.expect("missing job result")).collect()
+        drop(res_tx);
+        for _ in 0..pending {
+            let Ok((i, out)) = res_rx.recv() else { break };
+            slots[i] = Some(out.map_err(|panic| {
+                ScalifyError::runtime(format!(
+                    "worker job panicked: {}",
+                    panic_message(panic.as_ref())
+                ))
+            }));
+        }
+        slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| {
+                    Err(ScalifyError::runtime("worker pool dropped a job result"))
+                })
+            })
+            .collect()
     }
 }
 
@@ -125,11 +167,15 @@ impl Drop for WorkerPool {
 mod tests {
     use super::*;
 
+    fn unwrap_all<T>(results: Vec<Result<T>>) -> Vec<T> {
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+
     #[test]
     fn runs_jobs_in_submission_order() {
         let pool = WorkerPool::new(4);
         let jobs: Vec<_> = (0..32).map(|i| move || i * 2).collect();
-        let out = pool.run_all(jobs);
+        let out = unwrap_all(pool.run_all(jobs));
         assert_eq!(out, (0..32).map(|i| i * 2).collect::<Vec<_>>());
     }
 
@@ -138,7 +184,7 @@ mod tests {
         let pool = WorkerPool::new(2);
         for round in 0..3 {
             let jobs: Vec<_> = (0..8).map(|i| move || i + round).collect();
-            assert_eq!(pool.run_all(jobs).len(), 8);
+            assert_eq!(unwrap_all(pool.run_all(jobs)).len(), 8);
         }
         assert_eq!(pool.threads(), 2);
     }
@@ -147,7 +193,7 @@ mod tests {
     fn zero_threads_clamps_to_one() {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
-        assert_eq!(pool.run_all(vec![|| 41 + 1]), vec![42]);
+        assert_eq!(unwrap_all(pool.run_all(vec![|| 41 + 1])), vec![42]);
     }
 
     #[test]
@@ -158,7 +204,8 @@ mod tests {
             let tx = tx.clone();
             pool.submit(move || {
                 let _ = tx.send(i);
-            });
+            })
+            .unwrap();
         }
         drop(tx);
         let mut got: Vec<i32> = rx.iter().collect();
@@ -167,11 +214,25 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "boom")]
-    fn job_panic_propagates_to_caller() {
+    fn job_panic_is_a_typed_error_and_the_pool_survives() {
         let pool = WorkerPool::new(2);
         let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
-            vec![Box::new(|| 1), Box::new(|| panic!("boom"))];
-        pool.run_all(jobs);
+            vec![Box::new(|| 1), Box::new(|| panic!("boom")), Box::new(|| 3)];
+        let out = pool.run_all(jobs);
+        assert_eq!(*out[0].as_ref().unwrap(), 1);
+        let err = out[1].as_ref().unwrap_err();
+        assert!(matches!(err, ScalifyError::Runtime(_)), "{err:?}");
+        assert!(err.message().contains("boom"), "{err}");
+        assert_eq!(*out[2].as_ref().unwrap(), 3);
+        // both workers are still alive and serving
+        assert_eq!(unwrap_all(pool.run_all(vec![|| 7, || 8])), vec![7, 8]);
+    }
+
+    #[test]
+    fn panicking_fire_and_forget_job_does_not_kill_the_worker() {
+        let pool = WorkerPool::new(1);
+        pool.submit(|| panic!("dropped on the floor")).unwrap();
+        // the single worker must survive to run this
+        assert_eq!(unwrap_all(pool.run_all(vec![|| 5])), vec![5]);
     }
 }

@@ -102,6 +102,14 @@ fn register_slice(eg: &mut EGraph, slice: &LayerSlice, side: &str, distributed: 
 }
 
 /// Verify one layer pair using a pre-compiled rewrite-template set.
+///
+/// This function is the unit of work the parallel cold pass ships to pool
+/// threads: it takes only shared-immutable inputs (`&LayerSlice`, the
+/// session's `&RuleSet`) and builds everything mutable — the `EGraph`, the
+/// relation engine, the match log — locally, arena-style. The whole arena
+/// is dropped with the job, so concurrent layer verifications never share
+/// or free state across threads; `LayerOutcome` is plain owned data and
+/// crosses back over the channel by value.
 pub fn verify_layer(
     bslice: &LayerSlice,
     dslice: &LayerSlice,

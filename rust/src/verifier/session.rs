@@ -10,9 +10,20 @@
 //!   structural fingerprint, so a second Llama config or a second
 //!   parallelism variant replays every structurally-identical layer
 //!   instead of re-verifying it, and
-//! * a **reusable worker pool** ([`WorkerPool`]) for the speculative
-//!   parallel pass, so threads are spawned once per session rather than
-//!   once per call.
+//! * a **reusable worker pool** ([`WorkerPool`]) for the parallel cold
+//!   pass, so threads are spawned once per session rather than once per
+//!   call.
+//!
+//! The cold path schedules the whole verify as a **dependency DAG** on
+//! the pool (see [`Session::parallel_pass`]): per-layer e-graph
+//! saturation + relation fixpoints are independent jobs that only
+//! synchronize on boundary out-relations, so a 126-layer model saturates
+//! every core instead of verifying one layer at a time. Setting
+//! `SCALIFY_SEQUENTIAL=1` disables the parallel pass entirely — the
+//! differential-testing escape hatch, mirroring `SCALIFY_NAIVE_MATCH`
+//! for the e-matcher. Both paths produce byte-identical verdicts,
+//! localization sites and per-layer e-graph counts; the ordered
+//! assembly pass below is the single source of truth for reports.
 //!
 //! Continuous verification alongside a training pipeline is the intended
 //! shape (TTrace-style); `verify` takes `&self` and is safe to call from
@@ -223,21 +234,29 @@ impl Session {
         let base_idx_by_tag: FxHashMap<u32, usize> =
             base_layers.iter().enumerate().map(|(i, l)| (l.layer, i)).collect();
 
-        // ---- optional speculative parallel pass ----
-        // Boundary relations between transformer layers are almost always
-        // the same as the layer's own input relation (the residual stream
-        // keeps its placement). Speculatively verify all layer pairs in
-        // parallel assuming `Duplicate` for unknown boundaries; the
-        // sequential pass reuses a speculation hit whenever the exact
-        // boundary relations match what was speculated.
-        // (skipped on `verify_against` runs: speculation would re-verify
-        // layers the persisted state is about to replay for free)
+        // ---- optional parallel DAG pass ----
+        // The cold verify is a dependency DAG: layer k's exact input
+        // relations come from the boundary out-relations of the earlier
+        // layers that produce its inputs. `parallel_pass` schedules that
+        // DAG on the worker pool — dependency-satisfied layers run with
+        // exact relations, the rest run speculatively (boundary relations
+        // between transformer layers are almost always `Duplicate`: the
+        // residual stream keeps its placement) and are promoted when the
+        // exact relations turn out to match. The ordered assembly pass
+        // below reuses any result whose relations equal the exact ones.
+        // (skipped on `verify_against` runs: the persisted state is about
+        // to replay unchanged layers for free; skipped entirely under
+        // SCALIFY_SEQUENTIAL=1, the differential-testing escape hatch)
         let mut speculated: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
             FxHashMap::default();
-        if self.cfg.parallel && self.cfg.partition && dist_layers.len() > 1 && against.is_none()
+        if self.cfg.parallel
+            && !sequential_override()
+            && self.cfg.partition
+            && dist_layers.len() > 1
+            && against.is_none()
         {
             sw.time("parallel-rewrite", || {
-                speculated = self.speculative_pass(
+                speculated = self.parallel_pass(
                     &base_layers,
                     &dist_layers,
                     &base_idx_by_tag,
@@ -342,9 +361,14 @@ impl Session {
                     }
                     continue;
                 }
+                // `verify_layer` is a pure function of (slices, input
+                // relations, cores, rules, limits), so a parallel-pass
+                // result computed with the *same* relations is the exact
+                // result — verified or not; failed outcomes carry their
+                // discrepancies and replay identically
                 let spec_hit = speculated
                     .get(&dslice.layer)
-                    .filter(|(rels, o)| rels == &input_rels && o.verified)
+                    .filter(|(rels, _)| rels == &input_rels)
                     .map(|(_, o)| o.clone());
                 // the memo lock is taken per lookup/insert, never across a
                 // verify_layer call, so concurrent `verify` callers on the
@@ -523,125 +547,265 @@ impl Session {
         Ok(())
     }
 
-    /// Speculative parallel layer verification on the session pool. When
-    /// memoization is on, distinct layer structures are verified once
-    /// (fingerprint dedup) and layers the cross-run memo can already serve
-    /// are skipped entirely; when off, every layer pair is verified.
-    fn speculative_pass(
+    /// Parallel cold verification scheduled as a dependency DAG on the
+    /// session pool.
+    ///
+    /// Layer `k`'s exact input relations are determined by the boundary
+    /// out-relations of the earlier layers producing its inputs, so the
+    /// layers form a DAG (in practice: a chain through the residual
+    /// stream, plus dep-free weight inputs). The pass runs in rounds:
+    ///
+    /// 1. **Cascade** — every layer whose producers are finalized derives
+    ///    its exact input relations for free: a finished job with the same
+    ///    relations is *promoted* to the exact result (`verify_layer` is
+    ///    deterministic in its inputs), and a verified cross-run memo
+    ///    entry replays its out-relations without any job.
+    /// 2. **Schedule** — dependency-satisfied layers run with exact
+    ///    relations; the rest run **speculatively** (unknown boundaries
+    ///    assumed `Duplicate` — the residual stream keeps its placement),
+    ///    so all 126 layers of a 405B-class model are in flight at once
+    ///    instead of waiting on the chain. With memoization on,
+    ///    fingerprint-identical jobs run once and alias.
+    ///
+    /// Mis-speculated results are dropped and re-run with exact relations
+    /// in a later round; a panicking job errors only its own slot (typed,
+    /// via [`WorkerPool::run_all`]) and its layer falls back to the
+    /// assembly pass. The returned map is keyed by layer tag; the
+    /// assembly pass re-checks relation equality before reusing any
+    /// entry, so this pass can only waste work, never change a verdict.
+    fn parallel_pass(
         &self,
         base_layers: &Arc<Vec<LayerSlice>>,
         dist_layers: &Arc<Vec<LayerSlice>>,
         base_idx_by_tag: &FxHashMap<u32, usize>,
         boundary: &FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)>,
     ) -> FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> {
-        type SpecJob = (u32, usize, usize, Vec<(usize, usize, RelSummary)>);
+        type Rels = Vec<(usize, usize, RelSummary)>;
+        let Some(pool) = &self.pool else {
+            // sequential session: the assembly pass does all the work
+            return FxHashMap::default();
+        };
         let cfg = &self.cfg;
-        let mut jobs: Vec<SpecJob> = Vec::new();
-        let mut seen: FxHashMap<u64, u32> = FxHashMap::default(); // fp -> first tag
-        let mut alias: Vec<(u32, u64)> = Vec::new();
-        {
-            // one lock for the whole (cheap) job-collection scan, released
-            // before any verification work starts
-            let memo = self.memo.lock().expect("memo lock");
-            for (di, d) in dist_layers.iter().enumerate() {
-                let Some(&bi) = base_idx_by_tag.get(&d.layer) else { continue };
-                let b = &base_layers[bi];
-                let rels = layer::collect_input_rels_speculative(b, d, boundary);
-                if cfg.memoize {
-                    let fp = fingerprint_pair(b, d, &rels, d.graph.num_cores);
-                    // cross-run warm start: the sequential pass will serve
-                    // this layer straight from the memo — no speculative
-                    // work needed
-                    if memo.contains_verified(fp) {
-                        continue;
-                    }
-                    if seen.contains_key(&fp) {
-                        alias.push((d.layer, fp));
-                        continue;
-                    }
-                    seen.insert(fp, d.layer);
-                    alias.push((d.layer, fp));
-                }
-                jobs.push((d.layer, bi, di, rels));
+        let n = dist_layers.len();
+
+        // ---- dependency DAG over dist-order layer indices ----
+        // producer[orig node] = slice producing it as a boundary output
+        let mut producer: FxHashMap<crate::ir::NodeId, usize> = FxHashMap::default();
+        for (di, d) in dist_layers.iter().enumerate() {
+            for &o in &d.boundary_outputs {
+                producer.insert(o, di);
             }
         }
+        // deps = earlier slices producing one of this slice's inputs.
+        // Only earlier ones: the assembly pass walks layers in dist order,
+        // so a later producer's out-relations are never visible to this
+        // layer there either (the untagged prologue/epilogue slice can
+        // consume the last layer's output — that back-edge is not a dep).
+        let deps: Vec<Vec<usize>> = dist_layers
+            .iter()
+            .enumerate()
+            .map(|(di, d)| {
+                let mut ds: Vec<usize> = d
+                    .ext_inputs
+                    .iter()
+                    .filter_map(|e| producer.get(e).copied())
+                    .filter(|&p| p < di)
+                    .collect();
+                ds.sort_unstable();
+                ds.dedup();
+                ds
+            })
+            .collect();
 
-        let run_job = |base: &[LayerSlice],
-                       dist: &[LayerSlice],
-                       rules: &RuleSet,
-                       (tag, bi, di, rels): SpecJob|
-         -> (u32, Vec<(usize, usize, RelSummary)>, layer::LayerOutcome) {
-            let d = &dist[di];
-            let o = layer::verify_layer(
-                &base[bi],
-                d,
-                &rels,
-                d.graph.num_cores,
-                rules,
-                cfg.limits,
-                cfg.max_rounds,
-            );
-            (tag, rels, o)
+        // finalized = exact out-relations known (or nothing to propagate);
+        // exact_outs = those out-relations, for downstream boundary views
+        let mut finalized = vec![false; n];
+        let mut exact_outs: Vec<Option<Vec<RelSummary>>> = vec![None; n];
+        // finished jobs (exact or speculative) awaiting promotion, with
+        // the input relations they actually used
+        let mut pending: Vec<Option<(Rels, layer::LayerOutcome)>> = (0..n).map(|_| None).collect();
+        let mut spec_submitted = vec![false; n];
+        let mut out: FxHashMap<u32, (Rels, layer::LayerOutcome)> = FxHashMap::default();
+
+        // the boundary exactly as the assembly pass will see it when it
+        // reaches slice `di`: annotations + finalized earlier out-relations
+        let view_for = |di: usize,
+                        exact_outs: &[Option<Vec<RelSummary>>]|
+         -> FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)> {
+            let mut view = boundary.clone();
+            for (j, outs) in exact_outs.iter().enumerate().take(di) {
+                let Some(rels) = outs else { continue };
+                let dj = &dist_layers[j];
+                let Some(&bi) = base_idx_by_tag.get(&dj.layer) else { continue };
+                let bj = &base_layers[bi];
+                for (k, rel) in rels.iter().enumerate() {
+                    if let (Some(&b), Some(&d)) =
+                        (bj.boundary_outputs.get(k), dj.boundary_outputs.get(k))
+                    {
+                        view.insert(d, (b, rel.clone()));
+                    }
+                }
+            }
+            view
         };
 
-        let results: Vec<(u32, Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
-            match (&self.pool, jobs.len()) {
-                (Some(pool), n) if n > 1 => {
-                    let limits = cfg.limits;
-                    let max_rounds = cfg.max_rounds;
-                    let closures: Vec<_> = jobs
-                        .into_iter()
-                        .map(|(tag, bi, di, rels)| {
-                            let base = Arc::clone(base_layers);
-                            let dist = Arc::clone(dist_layers);
-                            let rules = Arc::clone(&self.rules);
-                            move || {
-                                let d = &dist[di];
-                                let o = layer::verify_layer(
-                                    &base[bi],
-                                    d,
-                                    &rels,
-                                    d.graph.num_cores,
-                                    &rules,
-                                    limits,
-                                    max_rounds,
-                                );
-                                (tag, rels, o)
-                            }
-                        })
-                        .collect();
-                    pool.run_all(closures)
-                }
-                _ => jobs
-                    .into_iter()
-                    .map(|job| run_job(base_layers, dist_layers, &self.rules, job))
-                    .collect(),
-            };
-
-        let mut by_tag: FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> =
-            results.into_iter().map(|(t, r, o)| (t, (r, o))).collect();
-        // fingerprint aliases: replay the representative result on every
-        // identical layer (memoization across the speculative pool)
-        if cfg.memoize {
-            let mut fp_result: FxHashMap<
-                u64,
-                (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome),
-            > = FxHashMap::default();
-            for (tag, fp) in &alias {
-                if let Some(v) = by_tag.get(tag) {
-                    fp_result.insert(*fp, v.clone());
+        loop {
+            // ---- cascade: finalize everything derivable without new work ----
+            let mut progressed = true;
+            while progressed {
+                progressed = false;
+                for di in 0..n {
+                    if finalized[di] || !deps[di].iter().all(|&j| finalized[j]) {
+                        continue;
+                    }
+                    let d = &dist_layers[di];
+                    let Some(&bi) = base_idx_by_tag.get(&d.layer) else {
+                        // no baseline partner: the assembly pass reports
+                        // the discrepancy; nothing to propagate
+                        finalized[di] = true;
+                        progressed = true;
+                        continue;
+                    };
+                    let b = &base_layers[bi];
+                    let rels = layer::collect_input_rels(b, d, &view_for(di, &exact_outs));
+                    if let Some((jrels, o)) = pending[di].take() {
+                        if jrels == rels {
+                            // promotion: same relations ⇒ same outcome
+                            exact_outs[di] = Some(o.out_rels.clone());
+                            out.insert(d.layer, (jrels, o));
+                            finalized[di] = true;
+                            progressed = true;
+                            continue;
+                        }
+                        // mis-speculation: drop the result; an exact job
+                        // runs in the next round
+                    }
+                    if cfg.memoize {
+                        let fp = fingerprint_pair(b, d, &rels, d.graph.num_cores);
+                        let peeked =
+                            self.memo.lock().expect("memo lock").peek_verified(fp);
+                        if let Some(entry) = peeked {
+                            // memo replay: out-relations propagate with no
+                            // job; the assembly pass serves the layer from
+                            // the memo (counting the hit there)
+                            exact_outs[di] = Some(entry.out_rels.clone());
+                            finalized[di] = true;
+                            progressed = true;
+                        }
+                    }
                 }
             }
-            for (tag, fp) in &alias {
-                if !by_tag.contains_key(tag) {
-                    if let Some(v) = fp_result.get(fp) {
-                        by_tag.insert(*tag, v.clone());
+
+            // ---- schedule one round of jobs ----
+            // exact jobs for every dependency-satisfied layer, speculative
+            // jobs (once) for the rest so the whole DAG is in flight, not
+            // just the frontier
+            let mut jobs: Vec<(usize, Rels)> = Vec::new();
+            // per job-slot: (layer index, exact?, fingerprint-when-memoizing)
+            let mut job_meta: Vec<(usize, bool, Option<u64>)> = Vec::new();
+            let mut alias: FxHashMap<u64, Vec<usize>> = FxHashMap::default();
+            let mut seen: FxHashMap<u64, usize> = FxHashMap::default();
+            for di in 0..n {
+                if finalized[di] || pending[di].is_some() {
+                    continue;
+                }
+                let d = &dist_layers[di];
+                let Some(&bi) = base_idx_by_tag.get(&d.layer) else { continue };
+                let b = &base_layers[bi];
+                let ready = deps[di].iter().all(|&j| finalized[j]);
+                let rels = if ready {
+                    layer::collect_input_rels(b, d, &view_for(di, &exact_outs))
+                } else if !spec_submitted[di] {
+                    layer::collect_input_rels_speculative(b, d, &view_for(di, &exact_outs))
+                } else {
+                    // speculation already missed once; wait for exactness
+                    continue;
+                };
+                if !ready {
+                    spec_submitted[di] = true;
+                }
+                // fingerprint dedup: structurally identical layers with
+                // identical relations run once and alias the result
+                let fp = cfg
+                    .memoize
+                    .then(|| fingerprint_pair(b, d, &rels, d.graph.num_cores));
+                if let Some(fp) = fp {
+                    if seen.contains_key(&fp) {
+                        alias.entry(fp).or_default().push(di);
+                        continue;
+                    }
+                    seen.insert(fp, di);
+                }
+                jobs.push((di, rels));
+                job_meta.push((di, ready, fp));
+            }
+            if jobs.is_empty() {
+                break;
+            }
+
+            let limits = cfg.limits;
+            let max_rounds = cfg.max_rounds;
+            let closures: Vec<_> = jobs
+                .into_iter()
+                .map(|(di, rels)| {
+                    let base = Arc::clone(base_layers);
+                    let dist = Arc::clone(dist_layers);
+                    let rules = Arc::clone(&self.rules);
+                    let bi = base_idx_by_tag[&dist_layers[di].layer];
+                    move || {
+                        let d = &dist[di];
+                        let o = layer::verify_layer(
+                            &base[bi],
+                            d,
+                            &rels,
+                            d.graph.num_cores,
+                            &rules,
+                            limits,
+                            max_rounds,
+                        );
+                        (di, rels, o)
+                    }
+                })
+                .collect();
+            for (slot, result) in pool.run_all(closures).into_iter().enumerate() {
+                let (jdi, exact, fp) = job_meta[slot];
+                match result {
+                    Ok((di, rels, o)) => {
+                        if let Some(aliases) = fp.and_then(|fp| alias.get(&fp)) {
+                            for &adi in aliases {
+                                pending[adi] = Some((rels.clone(), o.clone()));
+                            }
+                        }
+                        pending[di] = Some((rels, o));
+                    }
+                    Err(_) => {
+                        // a panicked job errors only its own slot: no
+                        // result is recorded, so the assembly pass
+                        // recomputes this layer on the caller thread,
+                        // where the panic surfaces in the caller's own
+                        // context (as a typed error under the service
+                        // scheduler). An exact job that failed must still
+                        // finalize its layer — the panic is deterministic
+                        // and rescheduling would spin forever; downstream
+                        // layers just see no out-relations from it.
+                        if exact {
+                            finalized[jdi] = true;
+                        }
                     }
                 }
             }
         }
-        by_tag
+        out
     }
+}
+
+/// `SCALIFY_SEQUENTIAL=1` forces the fully sequential cold path — the
+/// differential-testing escape hatch for the parallel DAG scheduler,
+/// mirroring `SCALIFY_NAIVE_MATCH` for the indexed e-matcher. Both paths
+/// must produce byte-identical verdicts, localization sites and
+/// per-layer e-graph counts (asserted by the determinism suite).
+fn sequential_override() -> bool {
+    std::env::var("SCALIFY_SEQUENTIAL").map(|v| v == "1").unwrap_or(false)
 }
 
 /// Whole graph as a single pseudo-layer (partitioning disabled).

@@ -1,0 +1,94 @@
+//! CLI error-path integration tests (`cargo test --test cli_errors`):
+//! spawn the real binary and pin the exit-code contract — 0 verified,
+//! 1 unverified, 2 bad input (parse/config/model-spec), 3 runtime
+//! failure — and that failures are typed `scalify:` diagnostics on
+//! stderr, never panics.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn scalify(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_scalify"))
+        .args(args)
+        .output()
+        .expect("spawn scalify binary")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// A path whose parent directory does not exist (and is re-removed in
+/// case a previous failed run created it).
+fn unwritable_state_path() -> PathBuf {
+    let dir = std::env::temp_dir().join("scalify-cli-errors-no-such-dir");
+    let _ = std::fs::remove_dir_all(&dir);
+    dir.join("deeper").join("state.json")
+}
+
+#[test]
+fn unwritable_emit_state_path_is_a_runtime_error_not_a_panic() {
+    let path = unwritable_state_path();
+    let out = scalify(&[
+        "model",
+        "--model",
+        "llama-tiny",
+        "--par",
+        "tp2",
+        "--layers",
+        "1",
+        "--emit-state",
+        path.to_str().expect("utf-8 temp path"),
+    ]);
+    let stderr = stderr_of(&out);
+    assert_eq!(out.status.code(), Some(3), "runtime failures exit 3; stderr:\n{stderr}");
+    assert!(
+        stderr.contains("scalify: runtime error") && stderr.contains("writing --emit-state"),
+        "expected a typed --emit-state diagnostic, got:\n{stderr}"
+    );
+    assert!(!stderr.contains("panicked"), "CLI must not panic:\n{stderr}");
+}
+
+#[test]
+fn writable_emit_state_path_round_trips() {
+    // the same invocation with a writable path succeeds and leaves the
+    // state file behind for a later --against run
+    let dir = std::env::temp_dir().join("scalify-cli-errors-emit-state");
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = dir.join("state.json");
+    let out = scalify(&[
+        "model",
+        "--model",
+        "llama-tiny",
+        "--par",
+        "tp2",
+        "--layers",
+        "1",
+        "--emit-state",
+        path.to_str().expect("utf-8 temp path"),
+    ]);
+    let stderr = stderr_of(&out);
+    assert_eq!(out.status.code(), Some(0), "verified pair exits 0; stderr:\n{stderr}");
+    assert!(stderr.contains("wrote verification state"), "missing confirmation:\n{stderr}");
+    assert!(path.is_file(), "state file was not written");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_parallelism_spec_is_a_config_error() {
+    let out = scalify(&["model", "--model", "llama-tiny", "--par", "bogus"]);
+    let stderr = stderr_of(&out);
+    assert_eq!(out.status.code(), Some(2), "bad input exits 2; stderr:\n{stderr}");
+    assert!(stderr.contains("scalify: config error"), "expected typed config error:\n{stderr}");
+}
+
+#[test]
+fn unknown_model_is_a_model_spec_error() {
+    let out = scalify(&["model", "--model", "gpt-5", "--par", "tp2"]);
+    let stderr = stderr_of(&out);
+    assert_eq!(out.status.code(), Some(2), "bad input exits 2; stderr:\n{stderr}");
+    assert!(
+        stderr.contains("scalify: model-spec error") && stderr.contains("unknown model"),
+        "expected typed model-spec error:\n{stderr}"
+    );
+}

@@ -1,0 +1,158 @@
+//! Parallel-vs-sequential determinism suite (`cargo test --test
+//! parallel_determinism`).
+//!
+//! The parallel cold pass schedules per-layer verification jobs on the
+//! worker pool as a dependency DAG and promotes speculative results only
+//! when their input relations match the exact ones — so it must be
+//! *observationally identical* to the sequential pass: same verdict, same
+//! discrepancy sites, and (because `verify_layer` is a pure function of
+//! its inputs) the same per-layer e-graph statistics. This suite pins
+//! that equivalence across the zoo and across parallelism shapes.
+//!
+//! What is deliberately NOT compared: `memoized` flags (a parallel
+//! pre-pass hit is reported as a memo hit even when the sequential run
+//! computes the layer inline) and wall-clock durations.
+
+use scalify::bugs::reproduced_bugs;
+use scalify::cli::model_pair;
+use scalify::prelude::*;
+
+/// Sequential configuration: one thread, no parallel pre-pass.
+fn seq_cfg() -> VerifyConfig {
+    VerifyConfig { parallel: false, threads: 1, memoize: false, ..VerifyConfig::default() }
+}
+
+/// Parallel configuration: DAG pre-pass on `threads` workers. Memoization
+/// is off in both configs so every layer's statistics come from a real
+/// saturation run (memo-served layers legitimately report zero facts).
+fn par_cfg(threads: usize) -> VerifyConfig {
+    VerifyConfig { parallel: true, threads, memoize: false, ..VerifyConfig::default() }
+}
+
+/// Stable projection of a verdict (ignores durations).
+fn verdict_key(r: &VerifyReport) -> String {
+    match &r.verdict {
+        Verdict::Verified => "verified".to_string(),
+        Verdict::Unverified { discrepancies } => {
+            format!("unverified ({} discrepancies)", discrepancies.len())
+        }
+        Verdict::ResourceExhausted { at } => format!("resource-exhausted at {at}"),
+    }
+}
+
+/// Localization sites, in report order (the assembly pass emits them in
+/// layer order in both modes, so exact order must match too).
+fn sites(r: &VerifyReport) -> Vec<(Option<u32>, String, String, String)> {
+    r.discrepancies()
+        .iter()
+        .map(|d| (d.layer, d.site.clone(), d.func.clone(), d.reason.clone()))
+        .collect()
+}
+
+/// Per-layer statistics that must be bit-identical when memoization is
+/// off: a speculative result is only reused when its input relations
+/// equal the exact ones, and `verify_layer` is pure, so e-graph sizes,
+/// fact counts and matcher effort all replay exactly.
+fn layer_keys(r: &VerifyReport) -> Vec<(u32, Option<u32>, bool, usize, usize, usize, usize)> {
+    let mut keys: Vec<_> = r
+        .layers
+        .iter()
+        .map(|l| {
+            (l.layer, l.stage, l.verified, l.egraph_nodes, l.egraph_classes, l.facts,
+             l.matches_tried)
+        })
+        .collect();
+    keys.sort();
+    keys
+}
+
+fn assert_equivalent(label: &str, pair: &GraphPair, threads: usize) {
+    let seq = Session::new(seq_cfg()).verify(pair).unwrap_or_else(|e| {
+        panic!("{label}: sequential verify failed: {e}");
+    });
+    let par = Session::new(par_cfg(threads)).verify(pair).unwrap_or_else(|e| {
+        panic!("{label}: parallel verify failed: {e}");
+    });
+    assert_eq!(verdict_key(&seq), verdict_key(&par), "{label}: verdict diverged");
+    assert_eq!(sites(&seq), sites(&par), "{label}: localization diverged");
+    assert_eq!(layer_keys(&seq), layer_keys(&par), "{label}: per-layer e-graph stats diverged");
+}
+
+#[test]
+fn zoo_verdicts_match_sequential_across_parallelism_shapes() {
+    // every (model, parallelism) cell verifies identically with 1 thread
+    // (sequential) and 4 workers (DAG pre-pass + assembly)
+    let grid: Vec<(&str, Parallelism)> = vec![
+        ("llama-tiny", Parallelism::Tensor { tp: 2 }),
+        ("llama-tiny", Parallelism::Combined { pp: 2, tp: 2 }),
+        ("llama-tiny", Parallelism::Mesh3D { pp: 1, dp: 2, tp: 2 }),
+        ("llama-tiny-gqa", Parallelism::Tensor { tp: 2 }),
+        ("llama-tiny-gqa", Parallelism::Combined { pp: 2, tp: 2 }),
+        ("mixtral-tiny", Parallelism::Expert { ep: 4 }),
+        ("dpstep-tiny", Parallelism::Data { dp: 2, zero_stage: 1 }),
+    ];
+    for (model, par) in grid {
+        let label = format!("{model}/{}", par.label());
+        let pair = model_pair(model, par, None)
+            .unwrap_or_else(|e| panic!("{label}: pair build failed: {e}"));
+        assert_equivalent(&label, &pair, 4);
+    }
+}
+
+#[test]
+fn buggy_pairs_localize_identically_in_parallel() {
+    // failed layer outcomes carry their discrepancies through the
+    // speculative path, so localization precision must not depend on the
+    // thread count — take the first few corpus bugs the verifier detects
+    // through graph comparison (skipping structurally-rejected cases)
+    let mut checked = 0;
+    for case in reproduced_bugs() {
+        if checked == 3 {
+            break;
+        }
+        let pair = (case.build)();
+        match Session::new(seq_cfg()).verify(&pair) {
+            Ok(report) if !report.verified() => {
+                assert_equivalent(case.id, &pair, 4);
+                checked += 1;
+            }
+            // verified (bug outside the compiled graph) or typed
+            // structural rejection: nothing for the parallel pass to do
+            _ => continue,
+        }
+    }
+    assert_eq!(checked, 3, "corpus no longer has three graph-detectable bugs");
+}
+
+#[test]
+fn memoized_parallel_runs_agree_on_verdicts() {
+    // with memoization on, per-layer stats legitimately differ (memo
+    // hits report the producing run's numbers and zero facts) but the
+    // verdict and localization must still match
+    let pair = model_pair("llama-tiny", Parallelism::Combined { pp: 2, tp: 2 }, None).unwrap();
+    let seq = Session::new(VerifyConfig {
+        parallel: false,
+        threads: 1,
+        ..VerifyConfig::default()
+    })
+    .verify(&pair)
+    .unwrap();
+    let par = Session::new(VerifyConfig::default()).verify(&pair).unwrap();
+    assert_eq!(verdict_key(&seq), verdict_key(&par));
+    assert_eq!(sites(&seq), sites(&par));
+}
+
+#[test]
+fn sequential_escape_hatch_is_behavior_preserving() {
+    // SCALIFY_SEQUENTIAL=1 forces the cold pass off the pool even with
+    // `parallel: true` — the differential-testing escape hatch mirrors
+    // SCALIFY_NAIVE_MATCH and must not change any observable output
+    let pair = model_pair("llama-tiny", Parallelism::Tensor { tp: 2 }, None).unwrap();
+    std::env::set_var("SCALIFY_SEQUENTIAL", "1");
+    let hatched = Session::new(par_cfg(4)).verify(&pair).unwrap();
+    std::env::remove_var("SCALIFY_SEQUENTIAL");
+    let parallel = Session::new(par_cfg(4)).verify(&pair).unwrap();
+    assert_eq!(verdict_key(&hatched), verdict_key(&parallel));
+    assert_eq!(sites(&hatched), sites(&parallel));
+    assert_eq!(layer_keys(&hatched), layer_keys(&parallel));
+}
