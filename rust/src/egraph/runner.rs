@@ -202,6 +202,9 @@ impl<'a> Runner<'a> {
                     continue;
                 }
                 let t0 = Instant::now();
+                // per-rule e-match/apply span; inert (one atomic load)
+                // unless a `--trace` run is recording
+                let mut rspan = crate::obs::span("rule", self.rules[ri].name());
                 let mut tried = 0usize;
                 let roots = self.rules[ri].roots();
                 let cands = if indexed {
@@ -216,6 +219,9 @@ impl<'a> Runner<'a> {
                 stats[ri].matches += cands.len();
                 stats[ri].applications += n;
                 stats[ri].time += t0.elapsed();
+                rspan.attr("matches_tried", tried as u64);
+                rspan.attr("matches", cands.len() as u64);
+                rspan.attr("applications", n as u64);
                 if indexed && cands.len() > self.limits.match_limit {
                     let len = self.limits.ban_length.max(1) << self.times_banned[ri].min(16);
                     self.banned_until[ri] = self.clock + len;

@@ -68,6 +68,7 @@
 //! ([`baseline`]), and an execution runtime ([`runtime`]) for AOT-compiled
 //! JAX artifacts.
 pub mod error;
+pub mod obs;
 pub mod util;
 pub mod ir;
 pub mod hlo;

@@ -5,7 +5,7 @@
 //! scalify model --model llama-8b --par tp32 [--layers N] [--json] verify a zoo model
 //! scalify batch --manifest pairs.txt [--json]                     verify a manifest through one session
 //! scalify serve --addr 127.0.0.1:7878 [--cache-dir DIR]           run the verification daemon
-//! scalify client verify|stats|shutdown --addr HOST:PORT           drive a running daemon
+//! scalify client verify|stats|metrics|shutdown --addr HOST:PORT   drive a running daemon
 //! scalify bench [--json]                                          cold/warm service latency → BENCH_service.json
 //! scalify bench --scale [--json]                                  405B-class scale tier → BENCH_scale.json
 //! scalify bench --diff [--json]                                   incremental verify-on-diff tier → BENCH_diff.json
@@ -17,6 +17,12 @@
 //! Exit codes: 0 verified/ok · 1 unverified (a divergence was found) ·
 //! 2 usage or input error · 3 runtime execution error. With `--json`,
 //! stdout carries exactly one machine-readable document.
+//!
+//! Observability: `--trace FILE` on verify/model/batch (and on
+//! `bench --scale`) writes a Chrome trace-event / Perfetto JSON span
+//! trace of the run; `SCALIFY_LOG=warn|info|debug` sets stderr log
+//! verbosity; `scalify client metrics` scrapes a daemon's counters as
+//! Prometheus text.
 
 use scalify::bugs::{
     evaluate, new_bugs, parallel_transform_bugs, replica_group_bugs, reproduced_bugs,
@@ -27,6 +33,7 @@ use scalify::diff::VerifyState;
 use scalify::error::{Result, ResultExt, ScalifyError};
 use scalify::hlo::parse_hlo_file;
 use scalify::ir::Graph;
+use scalify::obs;
 use scalify::report::json::Json;
 use scalify::report::Table;
 use scalify::service::{Client, Scheduler, Server, VerifySource};
@@ -36,7 +43,6 @@ use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 type Flags = HashMap<String, String>;
 
@@ -82,18 +88,22 @@ fn verify_incremental(
         Some(path) => match VerifyState::load(Path::new(path)) {
             Ok(state) if state.matches_graph(&pair.dist) => Some(state),
             Ok(state) => {
-                eprintln!(
-                    "scalify: warning: --against {path} captured '{}' on {} cores, this \
+                scalify::log_warn!(
+                    "--against {path} captured '{}' on {} cores, this \
                      run verifies '{}' on {} cores; running cold",
                     state.model,
                     state.num_cores,
                     pair.dist.name,
                     pair.dist.num_cores
                 );
+                scalify::log_debug!(
+                    "state file {path} parsed fine; only the graph identity check \
+                     failed, so re-capture with --emit-state to use it again"
+                );
                 None
             }
             Err(why) => {
-                eprintln!("scalify: warning: {why}; running cold");
+                scalify::log_warn!("{why}; running cold");
                 None
             }
         },
@@ -125,6 +135,23 @@ fn verify_incremental(
         eprintln!("scalify: wrote verification state to {path}");
     }
     Ok(report)
+}
+
+/// Wrap a command body in `--trace FILE` handling: tracing switches on
+/// before the work runs and the collected spans are exported as one
+/// Chrome trace-event / Perfetto JSON document afterwards — on failed
+/// and unverified runs too, since those traces are the interesting
+/// ones. Without `--trace` the body runs untouched and every span site
+/// stays on its disabled (one atomic load) path.
+fn trace_scope<T>(flags: &Flags, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    let Some(path) = flags.get("trace") else { return f() };
+    obs::start_tracing();
+    let out = f();
+    match obs::export_chrome_trace(Path::new(path)) {
+        Ok(n) => eprintln!("scalify: wrote {n} trace spans to {path}"),
+        Err(e) => scalify::log_warn!("writing --trace {path} failed: {e}"),
+    }
+    out
 }
 
 fn cmd_verify(flags: &Flags) -> Result<ExitCode> {
@@ -233,8 +260,9 @@ fn cmd_batch(flags: &Flags) -> Result<ExitCode> {
     let scheduler = Scheduler::new(workers, cli::usize_flag(flags, "queue", 64)?);
     // every manifest entry "arrives" now, so per-entry wall time is
     // measured from here — queue wait included, like the service's
-    // per-request latency
-    let submitted = Instant::now();
+    // per-request latency. Read off the shared metrics clock so batch
+    // wall_secs and trace timestamps agree.
+    let submitted = obs::stamp();
     let jobs: Vec<_> = prepared
         .into_iter()
         .map(|prep| {
@@ -429,7 +457,7 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
                 }
             };
             if let Some(w) = &warning {
-                eprintln!("scalify: warning: {w}");
+                scalify::log_warn!("{w}");
             }
             if json {
                 let mut fields = vec![
@@ -460,14 +488,20 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
             print!("{}", client.stats()?.to_json().render_pretty());
             Ok(ExitCode::SUCCESS)
         }
+        "metrics" => {
+            // Prometheus text exposition, already newline-terminated —
+            // pipe it straight to stdout for scrapers and curl users
+            print!("{}", client.metrics()?);
+            Ok(ExitCode::SUCCESS)
+        }
         "shutdown" => {
             client.shutdown()?;
             eprintln!("scalify: daemon acknowledged shutdown");
             Ok(ExitCode::SUCCESS)
         }
         other => Err(ScalifyError::config(format!(
-            "unknown client operation '{other}' (expected verify, stats or shutdown; \
-             e.g. `scalify client stats --addr 127.0.0.1:7878`)"
+            "unknown client operation '{other}' (expected verify, stats, metrics or \
+             shutdown; e.g. `scalify client stats --addr 127.0.0.1:7878`)"
         ))),
     }
 }
@@ -628,7 +662,7 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
         }
     };
 
-    let t_start = Instant::now();
+    let t_start = obs::stamp();
     let mut scenarios: Vec<Json> = Vec::new();
     for par_spec in ["tp4", "pp2tp4", "dp2tp2"] {
         let pair = pair_for(par_spec)?;
@@ -642,10 +676,10 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
             sink.lock().expect("bench hook lock").push((fp, entry.clone()));
         }));
 
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let cold_report = session.verify(&pair)?;
         let cold = t0.elapsed();
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let warm_report = session.verify(&pair)?;
         let warm = t0.elapsed();
 
@@ -654,7 +688,7 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
         let restarted = Session::new(VerifyConfig::default());
         let entries = collected.lock().expect("bench hook lock").clone();
         restarted.preload_memo(entries);
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let restart_report = restarted.verify(&pair)?;
         let restart = t0.elapsed();
 
@@ -765,7 +799,7 @@ fn cmd_bench_scale(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCod
     };
     let cores_here =
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let t_start = Instant::now();
+    let t_start = obs::stamp();
     let mut scenarios: Vec<Json> = Vec::new();
     for par_spec in ["tp8", "pp2tp4", "dp2tp2"] {
         let par = cli::parallelism(par_spec)?;
@@ -777,10 +811,10 @@ fn cmd_bench_scale(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCod
             pair.dist.len()
         );
         let session = Session::new(VerifyConfig::default());
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let cold_report = session.verify(&pair)?;
         let cold = t0.elapsed();
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let warm_report = session.verify(&pair)?;
         let warm = t0.elapsed();
         for (label, report) in [("cold", &cold_report), ("warm", &warm_report)] {
@@ -793,14 +827,14 @@ fn cmd_bench_scale(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCod
         }
 
         // ---- parallel vs sequential honest cold (memoize off) ----
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let par_report = Session::new(VerifyConfig {
             memoize: false,
             ..VerifyConfig::default()
         })
         .verify(&pair)?;
         let nomemo_par = t0.elapsed();
-        let t0 = Instant::now();
+        let t0 = obs::stamp();
         let seq_report = Session::new(VerifyConfig {
             memoize: false,
             parallel: false,
@@ -841,6 +875,63 @@ fn cmd_bench_scale(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCod
             )));
         }
 
+        // ---- tracing-overhead contrast (first scenario only) ----
+        // One more cold verify with the tracer live, routed through a
+        // bounded scheduler so the trace carries scheduler-queue spans
+        // alongside the per-layer and per-rule ones. The enabled tracer
+        // must stay within 5% of the untraced cold run, plus an absolute
+        // slack so sub-second runs on noisy CI runners cannot trip the
+        // gate. With `--trace FILE` the spans are exported as Perfetto
+        // JSON; without it they are measured and discarded.
+        let mut trace_fields: Vec<(String, Json)> = Vec::new();
+        if par_spec == "tp8" {
+            obs::start_tracing();
+            let traced_session = Session::new(VerifyConfig::default());
+            let traced_pair = pair.clone();
+            let sched = Scheduler::new(1, 1);
+            let t0 = obs::stamp();
+            let traced_report =
+                sched.execute(move || traced_session.verify(&traced_pair))??;
+            let traced = t0.elapsed();
+            let spans = match flags.get("trace") {
+                Some(path) => {
+                    let n = obs::export_chrome_trace(Path::new(path))
+                        .with_ctx(|| format!("writing --trace {path}"))?;
+                    eprintln!("scalify: wrote {n} trace spans to {path}");
+                    n
+                }
+                None => obs::stop_tracing().len(),
+            };
+            if !traced_report.verified() {
+                return Err(ScalifyError::runtime(format!(
+                    "scale pair under {par_spec} must verify, but the traced run \
+                     was {}",
+                    traced_report.summary()
+                )));
+            }
+            let overhead = traced.as_secs_f64() / cold.as_secs_f64().max(1e-9);
+            let limit = cold.as_secs_f64() * 1.05 + 0.5;
+            if traced.as_secs_f64() > limit {
+                return Err(ScalifyError::runtime(format!(
+                    "traced cold verify took {:.3}s vs {:.3}s untraced \
+                     (limit {limit:.3}s) — span recording must stay within 5%",
+                    traced.as_secs_f64(),
+                    cold.as_secs_f64()
+                )));
+            }
+            trace_fields.push((
+                "traced_cold_secs".into(),
+                Json::Num(traced.as_secs_f64()),
+            ));
+            trace_fields.push(("trace_overhead_ratio".into(), Json::Num(overhead)));
+            trace_fields.push(("trace_events".into(), Json::Num(spans as f64)));
+            eprintln!(
+                "bench --scale {par_spec}: traced cold {} ({spans} spans, \
+                 {overhead:.2}× untraced cold)",
+                scalify::util::fmt_duration(traced),
+            );
+        }
+
         let phases = Json::Obj(
             cold_report
                 .stopwatch
@@ -853,7 +944,7 @@ fn cmd_bench_scale(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCod
             scalify::egraph::merge_rule_stats(&mut rules, &l.rules);
         }
         let stats = session.stats();
-        scenarios.push(Json::Obj(vec![
+        let mut fields = vec![
             ("par".into(), Json::Str(par_spec.into())),
             ("layers".into(), Json::Num(cold_report.layers.len() as f64)),
             ("cold_secs".into(), Json::Num(cold.as_secs_f64())),
@@ -869,7 +960,9 @@ fn cmd_bench_scale(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCod
             ),
             ("memo_entries".into(), Json::Num(stats.memo_entries as f64)),
             ("memo_hits".into(), Json::Num(stats.memo_hits as f64)),
-        ]));
+        ];
+        fields.extend(trace_fields);
+        scenarios.push(Json::Obj(fields));
         eprintln!(
             "bench --scale {par_spec}: cold {} ({} layers), warm {}, no-memo cold \
              {} parallel vs {} sequential ({speedup:.2}× on {cores_here} cores)",
@@ -924,7 +1017,7 @@ fn cmd_bench_diff(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCode
     };
     let par_spec = flags.get("par").map(String::as_str).unwrap_or("tp8");
     let par = cli::parallelism(par_spec)?;
-    let t_start = Instant::now();
+    let t_start = obs::stamp();
     eprintln!("bench --diff: generating {model} under {par_spec}…");
     let pair = cli::model_pair(model, par, layers)?;
     eprintln!(
@@ -936,18 +1029,18 @@ fn cmd_bench_diff(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCode
     // honest from-scratch cold: memoization off, so identical decoder
     // layers cannot dedup in-session
     let nomemo = VerifyConfig { memoize: false, ..VerifyConfig::default() };
-    let t0 = Instant::now();
+    let t0 = obs::stamp();
     let cold_report = Session::new(nomemo).verify(&pair)?;
     let cold = t0.elapsed();
 
     // default-config cold + state capture (what `--emit-state` persists)
-    let t0 = Instant::now();
+    let t0 = obs::stamp();
     let (memo_report, state) =
         Session::new(VerifyConfig::default()).verify_capture(&pair)?;
     let cold_memo = t0.elapsed();
 
     // unchanged re-verify in a fresh session: every layer must replay
-    let t0 = Instant::now();
+    let t0 = obs::stamp();
     let (unchanged_report, _) =
         Session::new(VerifyConfig::default()).verify_against(&pair, &state)?;
     let unchanged = t0.elapsed();
@@ -978,7 +1071,7 @@ fn cmd_bench_diff(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCode
         )));
     }
 
-    let t0 = Instant::now();
+    let t0 = obs::stamp();
     let (inc_report, _) =
         Session::new(VerifyConfig::default()).verify_against(&edited, &state)?;
     let incremental = t0.elapsed();
@@ -1136,21 +1229,24 @@ fn usage() -> String {
         "scalify {} — computational-graph equivalence verifier\n\
          usage:\n  \
          scalify verify --base a.hlo.txt --dist b.hlo.txt [--cores N] \
-         [--against STATE.json] [--emit-state STATE.json] [--json]\n  \
+         [--against STATE.json] [--emit-state STATE.json] [--trace TRACE.json] [--json]\n  \
          scalify model --model llama-8b|llama-70b|llama-405b|llama-405b-like|llama-tiny\
          |llama-tiny-gqa|mixtral-8x7b|mixtral-8x22b|mixtral-tiny|dpstep-tiny|dpstep-small \
          --par tp32|sp32|fd32|ep8|pp4|dp4z1|pp2tp4|dp2tp2|pp2dp2tp2 [--layers N] \
-         [--against STATE.json] [--emit-state STATE.json] [--edit-layer N] [--json]\n  \
-         scalify batch --manifest pairs.txt [--workers N] [--json]\n  \
+         [--against STATE.json] [--emit-state STATE.json] [--edit-layer N] \
+         [--trace TRACE.json] [--json]\n  \
+         scalify batch --manifest pairs.txt [--workers N] [--trace TRACE.json] [--json]\n  \
          scalify serve [--addr 127.0.0.1:7878] [--cache-dir DIR] [--queue N] [--workers N]\n  \
-         scalify client verify|stats|shutdown --addr HOST:PORT [--model M --par P | --bug ID \
-         | --base a.hlo --dist b.hlo] [--against STATE.json] [--edit-layer N] [--json]\n  \
-         scalify bench [--scale|--diff] [--model M] [--out FILE] [--check BASELINE.json] \
+         scalify client verify|stats|metrics|shutdown --addr HOST:PORT [--model M --par P \
+         | --bug ID | --base a.hlo --dist b.hlo] [--against STATE.json] [--edit-layer N] \
          [--json]\n  \
+         scalify bench [--scale|--diff] [--model M] [--out FILE] [--check BASELINE.json] \
+         [--trace TRACE.json] [--json]\n  \
          scalify bugs [--reproduced|--new|--transform]\n  \
          scalify exec --artifact artifacts/model_single.hlo.txt\n  \
          scalify info\n\
          common flags: --threads N --memo-capacity N --no-partition --no-parallel --no-memoize\n\
+         env: SCALIFY_LOG=warn|info|debug (stderr log level, default warn)\n\
          exit codes: 0 verified/ok · 1 unverified · 2 usage/input error · 3 runtime error",
         scalify::VERSION
     )
@@ -1170,9 +1266,9 @@ fn run(args: &[String]) -> Result<ExitCode> {
     }
     let flags = cli::parse_flags(&args[1.min(args.len())..])?;
     match cmd {
-        "verify" => cmd_verify(&flags),
-        "model" => cmd_model(&flags),
-        "batch" => cmd_batch(&flags),
+        "verify" => trace_scope(&flags, || cmd_verify(&flags)),
+        "model" => trace_scope(&flags, || cmd_model(&flags)),
+        "batch" => trace_scope(&flags, || cmd_batch(&flags)),
         "serve" => cmd_serve(&flags),
         "bench" => cmd_bench(&flags),
         "bugs" => cmd_bugs(&flags),

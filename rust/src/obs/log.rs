@@ -1,0 +1,105 @@
+//! Leveled stderr logging, controlled by `SCALIFY_LOG=warn|info|debug`.
+//!
+//! The default level is `warn`, and warn-level lines print as
+//! `scalify: warning: …` — byte-identical to the `eprintln!` warnings
+//! this logger replaced, so default output is unchanged. `debug` is
+//! where the degrade-to-cold paths explain *why* a warm start went cold
+//! (cache parse failures, state version skew, fingerprint mismatches).
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Log severity; larger is chattier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Degrades and recoverable problems; always printed.
+    Warn = 0,
+    /// Lifecycle notes (cache preloads, state writes).
+    Info = 1,
+    /// Why-did-that-happen detail for warm-start forensics.
+    Debug = 2,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Warn => "warning",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Parse a `SCALIFY_LOG` value; unknown strings fall back to `warn`.
+pub fn parse_level(value: &str) -> Level {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "debug" => Level::Debug,
+        "info" => Level::Info,
+        _ => Level::Warn,
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The active level (reads `SCALIFY_LOG` once).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| {
+        std::env::var("SCALIFY_LOG").map(|v| parse_level(&v)).unwrap_or(Level::Warn)
+    })
+}
+
+/// Would a line at `l` print?
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Print one line at level `l` (callers use the `log_warn!` /
+/// `log_info!` / `log_debug!` macros).
+pub fn log(l: Level, args: fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("scalify: {}: {args}", l.tag());
+    }
+}
+
+/// Log at warn level: `log_warn!("cache flush failed: {e}")` prints
+/// `scalify: warning: cache flush failed: …` (always).
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+/// Log at info level (printed under `SCALIFY_LOG=info|debug`).
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Log at debug level (printed under `SCALIFY_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_lenient_and_defaults_to_warn() {
+        assert_eq!(parse_level("debug"), Level::Debug);
+        assert_eq!(parse_level(" INFO "), Level::Info);
+        assert_eq!(parse_level("warn"), Level::Warn);
+        assert_eq!(parse_level("nonsense"), Level::Warn);
+    }
+
+    #[test]
+    fn warn_is_never_filtered() {
+        assert!(Level::Warn <= level());
+    }
+}

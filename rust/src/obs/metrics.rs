@@ -1,0 +1,300 @@
+//! Process-wide metrics registry: monotonic counters, gauges and
+//! fixed-bucket histograms, rendered in Prometheus text exposition
+//! format.
+//!
+//! The registry is global and append-only: a name, once used, keeps its
+//! instrument for the process lifetime. Instruments are plain atomics —
+//! recording never blocks on more than the name-lookup mutex, and
+//! callers on hot paths hold an `Arc` to skip even that.
+//!
+//! Histograms are the bounded replacement for the service's old
+//! unbounded per-request latency `Vec`: a fixed set of buckets plus an
+//! exact max, so p50/p95/max survive (as bucket-interpolated estimates
+//! and an exact max) under "org hammers the verifier" load with O(1)
+//! memory.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Latency bucket upper bounds in seconds (a final `+Inf` bucket is
+/// implicit). Spans four decades: sub-millisecond memo replays to
+/// minutes-scale 405B cold verifies.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+    60.0,
+];
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge: a settable instantaneous value (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, value: f64) {
+        self.0.store(value.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram with an exact running max.
+///
+/// `buckets[i]` counts observations `<= bounds[i]`; the final slot is
+/// the `+Inf` bucket. Quantiles interpolate linearly inside the
+/// containing bucket and clamp to the exact max, so `p50 <= p95 <= max`
+/// always holds.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum in microseconds (kept integral for lock-free accumulation).
+    sum_us: AtomicU64,
+    /// Exact max as `f64` bits (valid `fetch_max`: non-negative IEEE-754
+    /// floats order like their bit patterns).
+    max_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// New histogram over `bounds` (ascending upper bounds; `+Inf`
+    /// implicit).
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (seconds; negative values clamp to 0).
+    pub fn observe(&self, value: f64) {
+        let value = value.max(0.0);
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| value <= *b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((value * 1e6) as u64, Ordering::Relaxed);
+        self.max_bits.fetch_max(value.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations, seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Exact maximum observed (0 when empty).
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Quantile estimate: linear interpolation inside the containing
+    /// bucket, clamped to the exact max. 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q * total as f64).ceil().clamp(1.0, total as f64) as u64;
+        let mut seen = 0u64;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            let here = bucket.load(Ordering::Relaxed);
+            if here == 0 {
+                continue;
+            }
+            if seen + here >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { self.max() };
+                let frac = (rank - seen) as f64 / here as f64;
+                return (lo + (hi - lo) * frac).min(self.max());
+            }
+            seen += here;
+        }
+        self.max()
+    }
+
+    /// Per-bucket cumulative counts paired with their upper bounds
+    /// (`f64::INFINITY` last), the shape Prometheus `_bucket` lines want.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.buckets.len());
+        let mut acc = 0u64;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            acc += bucket.load(Ordering::Relaxed);
+            let bound =
+                if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+/// Append one histogram in Prometheus text exposition format.
+pub fn render_histogram(out: &mut String, name: &str, hist: &Histogram) {
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (bound, cum) in hist.cumulative_buckets() {
+        if bound.is_infinite() {
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_sum {}", hist.sum_secs());
+    let _ = writeln!(out, "{name}_count {}", hist.count());
+}
+
+/// The process-wide instrument registry.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().expect("metrics counter lock");
+        Arc::clone(map.entry(name.to_owned()).or_default())
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().expect("metrics gauge lock");
+        Arc::clone(map.entry(name.to_owned()).or_default())
+    }
+
+    /// Get or create the histogram `name` over `bounds` (bounds are
+    /// fixed by the first caller).
+    pub fn histogram(&self, name: &str, bounds: &'static [f64]) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().expect("metrics histogram lock");
+        Arc::clone(
+            map.entry(name.to_owned()).or_insert_with(|| Arc::new(Histogram::new(bounds))),
+        )
+    }
+
+    /// Render every instrument in Prometheus text exposition format,
+    /// sorted by name.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().expect("metrics counter lock").iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in self.gauges.lock().expect("metrics gauge lock").iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        for (name, h) in self.histograms.lock().expect("metrics histogram lock").iter() {
+            render_histogram(&mut out, name, h);
+        }
+        out
+    }
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::default)
+}
+
+/// Bump a registry counter by `n` — the coarse-grained convenience the
+/// pipeline instrumentation uses (one name lookup per call; hot paths
+/// hold the `Arc` instead).
+pub fn count(name: &str, n: u64) {
+    registry().counter(name).add(n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered_and_capped_by_exact_max() {
+        let h = Histogram::new(LATENCY_BUCKETS);
+        for i in 1..=100 {
+            h.observe(i as f64 / 1000.0); // 1ms … 100ms
+        }
+        assert_eq!(h.count(), 100);
+        let (p50, p95, max) = (h.quantile(0.5), h.quantile(0.95), h.max());
+        assert!(p50 <= p95 && p95 <= max, "{p50} <= {p95} <= {max}");
+        assert!((max - 0.1).abs() < 1e-9, "exact max: {max}");
+        // p50 lands in the right decade (true value 0.050)
+        assert!((0.025..=0.1).contains(&p50), "{p50}");
+        assert!(h.sum_secs() > 5.0 * 0.99 && h.sum_secs() < 5.1);
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded() {
+        let h = Histogram::new(LATENCY_BUCKETS);
+        for _ in 0..100_000 {
+            h.observe(0.002);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert_eq!(h.buckets.len(), LATENCY_BUCKETS.len() + 1);
+        let (p50, max) = (h.quantile(0.5), h.max());
+        assert!(p50 <= 0.0025 + 1e-9 && max == 0.002, "{p50} {max}");
+    }
+
+    #[test]
+    fn prometheus_render_has_bucket_sum_count_series() {
+        let h = Histogram::new(LATENCY_BUCKETS);
+        h.observe(0.004);
+        h.observe(40.0);
+        let mut text = String::new();
+        render_histogram(&mut text, "test_latency_seconds", &h);
+        assert!(text.contains("# TYPE test_latency_seconds histogram"));
+        assert!(text.contains("test_latency_seconds_bucket{le=\"0.005\"} 1"));
+        assert!(text.contains("test_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("test_latency_seconds_count 2"));
+        assert!(text.contains("test_latency_seconds_sum "));
+    }
+
+    #[test]
+    fn registry_instruments_are_shared_by_name() {
+        let r = Registry::default();
+        r.counter("x_total").add(2);
+        r.counter("x_total").inc();
+        assert_eq!(r.counter("x_total").get(), 3);
+        r.gauge("g").set(1.5);
+        assert_eq!(r.gauge("g").get(), 1.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE x_total counter\nx_total 3"));
+        assert!(text.contains("# TYPE g gauge\ng 1.5"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Observability: span tracing, a process-wide metrics registry, and a
+//! leveled stderr logger — the measurement substrate the perf work
+//! ratchets against.
+//!
+//! Three surfaces, all std-only and all near-zero-cost when off:
+//!
+//! * [`trace`] — a thread-safe span tracer. [`span`]/[`span_fmt`] return an
+//!   RAII guard; when tracing is disabled the guard is inert and the call
+//!   costs one relaxed atomic load. Finished traces export as Chrome
+//!   trace-event JSON, loadable in Perfetto (`scalify … --trace out.json`).
+//! * [`metrics`] — monotonic [`Counter`]s, [`Gauge`]s and fixed-bucket
+//!   [`Histogram`]s with a Prometheus text renderer (`scalify client
+//!   metrics`). Histograms replace the old unbounded latency `Vec`s.
+//! * [`log`] — `SCALIFY_LOG=warn|info|debug` leveled logging. `warn` is
+//!   the default, so routed warnings print exactly what the old scattered
+//!   `eprintln!` calls printed.
+//!
+//! The module also owns the **shared clock**: one process-wide monotonic
+//! epoch ([`epoch`]) that trace timestamps, bench timings and batch
+//! `wall_secs` all read from, so traces and bench JSON agree on the same
+//! numbers.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use log::Level;
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry, LATENCY_BUCKETS};
+pub use trace::{
+    export_chrome_trace, span, span_fmt, start_tracing, stop_tracing, trace_enabled,
+    SpanGuard, SpanRecord,
+};
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide monotonic epoch. First caller pins it; every trace
+/// timestamp and [`Stamp`] is relative to this instant.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Time since the shared epoch.
+pub fn now() -> Duration {
+    epoch().elapsed()
+}
+
+/// A point on the shared clock; the unit benches and `batch --json` use
+/// for wall timings so they agree with trace timestamps.
+#[derive(Clone, Copy, Debug)]
+pub struct Stamp(Duration);
+
+/// Read the shared clock.
+pub fn stamp() -> Stamp {
+    Stamp(now())
+}
+
+impl Stamp {
+    /// Wall time elapsed since this stamp was taken.
+    pub fn elapsed(&self) -> Duration {
+        now().saturating_sub(self.0)
+    }
+
+    /// `elapsed` in seconds, the shape bench JSON wants.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Microseconds since the epoch (trace-event `ts` unit).
+    pub fn micros(&self) -> u64 {
+        self.0.as_micros() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamps_are_monotonic_on_the_shared_epoch() {
+        let a = stamp();
+        let b = stamp();
+        assert!(b.micros() >= a.micros());
+        assert!(a.elapsed_secs() >= 0.0);
+    }
+}

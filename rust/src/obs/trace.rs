@@ -1,0 +1,290 @@
+//! Thread-safe span tracer with Chrome trace-event export.
+//!
+//! Spans are RAII: [`span`] returns a guard that records a
+//! [`SpanRecord`] when dropped. Guards nest naturally per thread —
+//! inner guards drop first — so the emitted intervals are properly
+//! nested and never partially overlap within one thread, which is
+//! exactly what Perfetto's track view assumes.
+//!
+//! Disabled path: one relaxed atomic load, no allocation, no lock. The
+//! verify pipeline leaves its instrumentation in place permanently;
+//! only `--trace` (or a test) flips the flag.
+
+use crate::report::json::Json;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static BUFFER: Mutex<Vec<SpanRecord>> = Mutex::new(Vec::new());
+static THREADS: Mutex<Vec<(u64, String)>> = Mutex::new(Vec::new());
+
+/// Tracer-local thread ids: small dense integers assigned on first use,
+/// stable for the thread's lifetime (std's `ThreadId` has no stable
+/// numeric accessor). Worker threads keep their id across verify runs.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static NAMED: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Register the current thread's name once, for the trace's
+/// `thread_name` metadata events.
+fn register_thread() {
+    NAMED.with(|named| {
+        if named.get() {
+            return;
+        }
+        named.set(true);
+        let name = std::thread::current()
+            .name()
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| format!("thread-{}", tid()));
+        THREADS.lock().expect("trace thread lock").push((tid(), name));
+    });
+}
+
+/// Is span recording on? One relaxed load — callers may use this to skip
+/// building expensive attributes.
+#[inline]
+pub fn trace_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clear the buffer and start recording spans.
+pub fn start_tracing() {
+    BUFFER.lock().expect("trace buffer lock").clear();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording and drain the captured spans.
+pub fn stop_tracing() -> Vec<SpanRecord> {
+    ENABLED.store(false, Ordering::SeqCst);
+    std::mem::take(&mut *BUFFER.lock().expect("trace buffer lock"))
+}
+
+/// One finished span: a named interval on one thread, with counted
+/// attributes (`layer`, `rule`, `matches_tried`, `reused`, …).
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Display name (e.g. `layer 3`, a rule name, `queue-wait`).
+    pub name: String,
+    /// Category: `phase`, `layer`, `job`, `round`, `rule`, `scheduler`.
+    pub cat: &'static str,
+    /// Tracer-local thread id (dense, stable per thread).
+    pub tid: u64,
+    /// Start, microseconds since the shared [`super::epoch`].
+    pub start_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Counted attributes, insertion order.
+    pub args: Vec<(&'static str, u64)>,
+}
+
+struct OpenSpan {
+    name: String,
+    cat: &'static str,
+    start: Duration,
+    args: Vec<(&'static str, u64)>,
+}
+
+/// RAII span guard; records on drop. Inert (and free) when tracing is
+/// off.
+pub struct SpanGuard {
+    open: Option<OpenSpan>,
+}
+
+impl SpanGuard {
+    /// Attach a counted attribute; no-op on an inert guard.
+    pub fn attr(&mut self, key: &'static str, value: u64) {
+        if let Some(open) = &mut self.open {
+            open.args.push((key, value));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(open) = self.open.take() else { return };
+        let end = super::now();
+        register_thread();
+        let record = SpanRecord {
+            name: open.name,
+            cat: open.cat,
+            tid: tid(),
+            start_us: open.start.as_micros() as u64,
+            dur_us: end.saturating_sub(open.start).as_micros() as u64,
+            args: open.args,
+        };
+        BUFFER.lock().expect("trace buffer lock").push(record);
+    }
+}
+
+/// Open a span. The name is only copied when tracing is on.
+pub fn span(cat: &'static str, name: &str) -> SpanGuard {
+    if !trace_enabled() {
+        return SpanGuard { open: None };
+    }
+    SpanGuard {
+        open: Some(OpenSpan {
+            name: name.to_owned(),
+            cat,
+            start: super::now(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+/// Open a span with a lazily formatted name: `span_fmt("layer",
+/// format_args!("layer {tag}"))` formats nothing when tracing is off.
+pub fn span_fmt(cat: &'static str, name: std::fmt::Arguments<'_>) -> SpanGuard {
+    if !trace_enabled() {
+        return SpanGuard { open: None };
+    }
+    SpanGuard {
+        open: Some(OpenSpan {
+            name: name.to_string(),
+            cat,
+            start: super::now(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+/// Render spans as a Chrome trace-event document (Perfetto-loadable):
+/// one `"X"` complete event per span plus `thread_name` metadata.
+pub fn render_chrome_trace(records: &[SpanRecord]) -> Json {
+    let mut events = Vec::with_capacity(records.len() + 8);
+    {
+        let threads = THREADS.lock().expect("trace thread lock");
+        for (tid, name) in threads.iter() {
+            events.push(Json::Obj(vec![
+                ("name".into(), Json::Str("thread_name".into())),
+                ("ph".into(), Json::Str("M".into())),
+                ("pid".into(), Json::Num(1.0)),
+                ("tid".into(), Json::Num(*tid as f64)),
+                (
+                    "args".into(),
+                    Json::Obj(vec![("name".into(), Json::Str(name.clone()))]),
+                ),
+            ]));
+        }
+    }
+    for r in records {
+        let mut event = vec![
+            ("name".into(), Json::Str(r.name.clone())),
+            ("cat".into(), Json::Str(r.cat.into())),
+            ("ph".into(), Json::Str("X".into())),
+            ("pid".into(), Json::Num(1.0)),
+            ("tid".into(), Json::Num(r.tid as f64)),
+            ("ts".into(), Json::Num(r.start_us as f64)),
+            ("dur".into(), Json::Num(r.dur_us as f64)),
+        ];
+        if !r.args.is_empty() {
+            let args = r
+                .args
+                .iter()
+                .map(|(k, v)| ((*k).to_string(), Json::Num(*v as f64)))
+                .collect();
+            event.push(("args".into(), Json::Obj(args)));
+        }
+        events.push(Json::Obj(event));
+    }
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ])
+}
+
+/// Stop tracing and write the captured spans to `path` as Chrome
+/// trace-event JSON. Returns the number of spans written.
+pub fn export_chrome_trace(path: &Path) -> io::Result<usize> {
+    let records = stop_tracing();
+    let doc = render_chrome_trace(&records);
+    std::fs::write(path, doc.render())?;
+    Ok(records.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tracing state is process-global; tests that flip it serialize here
+    static TRACE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    // other lib tests may run verify pipelines concurrently and record
+    // spans while the flag is up; assertions filter to this thread's tid
+    // and this test's span names to stay deterministic
+    fn mine(records: Vec<SpanRecord>, prefix: &str) -> Vec<SpanRecord> {
+        let me = tid();
+        records
+            .into_iter()
+            .filter(|r| r.tid == me && r.name.starts_with(prefix))
+            .collect()
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = TRACE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!trace_enabled());
+        let before = BUFFER.lock().unwrap().len();
+        {
+            let mut sp = span("phase", "obs-test-noop");
+            sp.attr("layer", 1);
+        }
+        assert_eq!(BUFFER.lock().unwrap().len(), before);
+    }
+
+    #[test]
+    fn spans_nest_and_carry_attrs() {
+        let _guard = TRACE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        start_tracing();
+        {
+            let _outer = span("phase", "obs-test-outer");
+            let mut inner = span_fmt("layer", format_args!("obs-test-layer {}", 7));
+            inner.attr("layer", 7);
+            inner.attr("reused", 1);
+        }
+        let records = mine(stop_tracing(), "obs-test-");
+        assert_eq!(records.len(), 2);
+        // inner drops first
+        assert_eq!(records[0].name, "obs-test-layer 7");
+        assert_eq!(records[0].args, vec![("layer", 7), ("reused", 1)]);
+        assert_eq!(records[1].name, "obs-test-outer");
+        assert_eq!(records[0].tid, records[1].tid);
+        // containment: inner inside outer
+        assert!(records[0].start_us >= records[1].start_us);
+        assert!(
+            records[0].start_us + records[0].dur_us
+                <= records[1].start_us + records[1].dur_us
+        );
+    }
+
+    #[test]
+    fn chrome_export_round_trips_as_json() {
+        let _guard = TRACE_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        start_tracing();
+        {
+            let mut sp = span("rule", "obs-test-mul-comm");
+            sp.attr("matches_tried", 42);
+        }
+        let records = mine(stop_tracing(), "obs-test-");
+        let doc = render_chrome_trace(&records);
+        let parsed = Json::parse(&doc.render()).expect("trace must be valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let rule = events
+            .iter()
+            .find(|e| e.str_at("cat") == Some("rule"))
+            .expect("rule span present");
+        assert_eq!(rule.str_at("name"), Some("obs-test-mul-comm"));
+        assert_eq!(rule.str_at("ph"), Some("X"));
+        assert_eq!(rule.get("args").and_then(|a| a.u64_at("matches_tried")), Some(42));
+    }
+}

@@ -180,8 +180,8 @@ impl MemoCache {
         let count = snapshot.len();
         match self.flush(snapshot) {
             Ok(()) => *persisted = count,
-            Err(e) => eprintln!(
-                "scalify: warning: cache flush to {} failed: {e}",
+            Err(e) => crate::log_warn!(
+                "cache flush to {} failed: {e}",
                 self.path.display()
             ),
         }

@@ -97,6 +97,18 @@ impl Client {
         }
     }
 
+    /// Fetch the daemon's metrics registry as Prometheus text
+    /// exposition format.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.request(&Request::Metrics)? {
+            Response::Metrics { prometheus } => Ok(prometheus),
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to metrics: {other:?}"
+            ))),
+        }
+    }
+
     /// Ask the daemon to exit.
     pub fn shutdown(&mut self) -> Result<()> {
         match self.request(&Request::Shutdown)? {

@@ -80,6 +80,9 @@ pub enum Request {
     },
     /// Report service counters.
     Stats,
+    /// Report the full metrics registry in Prometheus text exposition
+    /// format (counters, gauges, and the request-latency histogram).
+    Metrics,
     /// Stop accepting connections and exit.
     Shutdown,
 }
@@ -100,6 +103,9 @@ impl Request {
                 Json::Obj(fields)
             }
             Request::Stats => Json::Obj(vec![("cmd".into(), Json::Str("stats".into()))]),
+            Request::Metrics => {
+                Json::Obj(vec![("cmd".into(), Json::Str("metrics".into()))])
+            }
             Request::Shutdown => {
                 Json::Obj(vec![("cmd".into(), Json::Str("shutdown".into()))])
             }
@@ -118,6 +124,7 @@ impl Request {
             .ok_or_else(|| ScalifyError::parse("request is missing string field 'cmd'"))?;
         match cmd {
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             "verify" => Ok(Request::Verify(decode_source(doc)?)),
             "verify_diff" => {
@@ -132,8 +139,8 @@ impl Request {
                 Ok(Request::VerifyDiff { source: decode_source(doc)?, state })
             }
             other => Err(ScalifyError::parse(format!(
-                "unknown request cmd '{other}' (expected verify, verify_diff, stats \
-                 or shutdown)"
+                "unknown request cmd '{other}' (expected verify, verify_diff, stats, \
+                 metrics or shutdown)"
             ))),
         }
     }
@@ -356,6 +363,12 @@ pub enum Response {
     },
     /// Stats request served.
     Stats(StatsSnapshot),
+    /// Metrics request served: the registry rendered as Prometheus text
+    /// exposition format (transported as one JSON string).
+    Metrics {
+        /// The exposition document (`# TYPE …` lines and samples).
+        prometheus: String,
+    },
     /// Shutdown acknowledged; the daemon exits after this line.
     ShuttingDown,
     /// The request failed (malformed input, unknown model, parse error).
@@ -386,6 +399,11 @@ impl Response {
                 ("ok".into(), Json::Bool(true)),
                 ("kind".into(), Json::Str("stats".into())),
                 ("stats".into(), stats.to_json()),
+            ]),
+            Response::Metrics { prometheus } => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("metrics".into())),
+                ("prometheus".into(), Json::Str(prometheus.clone())),
             ]),
             Response::ShuttingDown => Json::Obj(vec![
                 ("ok".into(), Json::Bool(true)),
@@ -436,6 +454,15 @@ impl Response {
                 })?;
                 Ok(Response::Stats(StatsSnapshot::from_json(stats)?))
             }
+            Some("metrics") => {
+                let prometheus = doc
+                    .str_at("prometheus")
+                    .ok_or_else(|| {
+                        ScalifyError::parse("metrics response is missing 'prometheus'")
+                    })?
+                    .to_string();
+                Ok(Response::Metrics { prometheus })
+            }
             Some("shutdown") => Ok(Response::ShuttingDown),
             other => Err(ScalifyError::parse(format!(
                 "unknown response kind {other:?}"
@@ -463,6 +490,7 @@ mod tests {
     #[test]
     fn requests_round_trip() {
         round_trip_request(Request::Stats);
+        round_trip_request(Request::Metrics);
         round_trip_request(Request::Shutdown);
         round_trip_request(Request::Verify(VerifySource::Model {
             model: "llama-tiny".into(),
@@ -583,6 +611,16 @@ mod tests {
 
         let line = Response::Stats(StatsSnapshot::default()).to_line();
         assert!(matches!(Response::from_line(&line).unwrap(), Response::Stats(_)));
+
+        // Prometheus text crosses the wire as one JSON string, newlines
+        // escaped — the wire line itself must stay single-line
+        let text = "# TYPE scalify_jobs_total counter\nscalify_jobs_total 3\n";
+        let line = Response::Metrics { prometheus: text.into() }.to_line();
+        assert!(!line.contains('\n'), "{line}");
+        match Response::from_line(&line).unwrap() {
+            Response::Metrics { prometheus } => assert_eq!(prometheus, text),
+            other => panic!("expected metrics response, got {other:?}"),
+        }
     }
 
     #[test]

@@ -77,12 +77,20 @@ impl Scheduler {
 
     /// Block until an admission slot is free, then take it.
     fn acquire(&self) {
+        // the admission gate is the service's queueing point: the span
+        // length is exactly how long this job waited for a slot
+        let mut qsp = crate::obs::span("scheduler", "queue-wait");
         let (lock, cv) = &*self.slots;
         let mut inflight = lock.lock().unwrap_or_else(|p| p.into_inner());
+        if *inflight >= self.capacity {
+            crate::obs::metrics::count("scalify_scheduler_queue_waits_total", 1);
+        }
         while *inflight >= self.capacity {
             inflight = cv.wait(inflight).unwrap_or_else(|p| p.into_inner());
         }
         *inflight += 1;
+        qsp.attr("inflight", *inflight as u64);
+        crate::obs::metrics::count("scalify_scheduler_admissions_total", 1);
     }
 
     fn release(slots: &(Mutex<usize>, Condvar)) {

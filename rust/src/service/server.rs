@@ -27,14 +27,14 @@ use crate::cli;
 use crate::diff::VerifyState;
 use crate::error::{Result, ResultExt, ScalifyError};
 use crate::hlo::parse_hlo_module;
+use crate::obs::{self, Histogram};
 use crate::report::json::Json;
 use crate::verifier::{GraphPair, Session, VerifyConfig};
-use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -82,40 +82,28 @@ struct ServiceState {
     ematch_tried_total: AtomicU64,
     /// Total rewrite-rule applications across completed jobs.
     rule_applications_total: AtomicU64,
-    /// Per-request wall latencies (seconds), most recent last; bounded.
-    latencies: Mutex<VecDeque<f64>>,
+    /// Per-request wall latencies: a fixed-bucket histogram, so memory
+    /// stays O(buckets) no matter how hard an org hammers the verifier
+    /// (this replaced a bounded-but-large `VecDeque` window; the
+    /// p50/p95 fields below became bucket-interpolated estimates, the
+    /// max stays exact).
+    latency_hist: Histogram,
     started: Instant,
     shutdown: AtomicBool,
     local_addr: SocketAddr,
 }
 
-/// Most recent latencies retained for the percentile counters.
-const LATENCY_WINDOW: usize = 4096;
-
 impl ServiceState {
     fn record_latency(&self, secs: f64) {
-        let mut window = self.latencies.lock().expect("latency lock");
-        while window.len() >= LATENCY_WINDOW {
-            window.pop_front();
-        }
-        window.push_back(secs);
+        self.latency_hist.observe(secs);
     }
 
     fn snapshot(&self) -> StatsSnapshot {
-        let (p50, p95, max) = {
-            let window = self.latencies.lock().expect("latency lock");
-            if window.is_empty() {
-                (0.0, 0.0, 0.0)
-            } else {
-                let mut sorted: Vec<f64> = window.iter().copied().collect();
-                sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-                let at = |q: f64| {
-                    let idx = ((sorted.len() as f64) * q) as usize;
-                    sorted[idx.min(sorted.len() - 1)]
-                };
-                (at(0.50), at(0.95), sorted[sorted.len() - 1])
-            }
-        };
+        let (p50, p95, max) = (
+            self.latency_hist.quantile(0.50),
+            self.latency_hist.quantile(0.95),
+            self.latency_hist.max(),
+        );
         let session = self.session.stats();
         StatsSnapshot {
             jobs: self.jobs.load(Ordering::Relaxed),
@@ -175,7 +163,12 @@ impl Server {
                     MemoCache::open_with_capacity(dir, cfg.verify.memo_capacity)
                         .with_ctx(|| format!("opening cache dir {}", dir.display()))?;
                 if let Some(warning) = &load.warning {
-                    eprintln!("scalify: warning: {warning}");
+                    crate::log_warn!("{warning}");
+                    crate::log_debug!(
+                        "cache dir {}: the memo starts cold for the skipped \
+                         entries; they re-verify and re-flush on first use",
+                        dir.display()
+                    );
                 }
                 let cache = Arc::new(cache);
                 let preloaded = session.preload_memo(cache.entries());
@@ -197,7 +190,7 @@ impl Server {
             egraph_nodes_total: AtomicU64::new(0),
             ematch_tried_total: AtomicU64::new(0),
             rule_applications_total: AtomicU64::new(0),
-            latencies: Mutex::new(VecDeque::new()),
+            latency_hist: Histogram::new(obs::LATENCY_BUCKETS),
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
             local_addr,
@@ -367,6 +360,7 @@ fn handle_request(line: &str, state: &Arc<ServiceState>) -> Response {
     };
     match request {
         Request::Stats => Response::Stats(state.snapshot()),
+        Request::Metrics => Response::Metrics { prometheus: render_metrics(state) },
         Request::Shutdown => {
             state.shutdown.store(true, Ordering::SeqCst);
             Response::ShuttingDown
@@ -376,6 +370,52 @@ fn handle_request(line: &str, state: &Arc<ServiceState>) -> Response {
             run_verify_job(state, source, Some(prev))
         }
     }
+}
+
+/// Render the daemon's full metrics surface in Prometheus text
+/// exposition format: the stats-snapshot counters and gauges, the
+/// bounded request-latency histogram, and every process-wide pipeline
+/// instrument in the [`obs`] registry (layer outcomes, speculation,
+/// scheduler queueing, relation facts).
+fn render_metrics(state: &Arc<ServiceState>) -> String {
+    use std::fmt::Write as _;
+    let snap = state.snapshot();
+    let mut out = String::new();
+    let counters: &[(&str, u64)] = &[
+        ("scalify_jobs_total", snap.jobs),
+        ("scalify_session_runs_total", snap.runs),
+        ("scalify_memo_hits_total", snap.memo_hits),
+        ("scalify_memo_misses_total", snap.memo_misses),
+        ("scalify_memo_evictions_total", snap.memo_evictions),
+        ("scalify_egraph_nodes_total", snap.egraph_nodes_total),
+        ("scalify_ematch_tried_total", snap.ematch_tried_total),
+        ("scalify_rule_applications_total", snap.rule_applications_total),
+        ("scalify_cache_entries_loaded_total", snap.cache_entries_loaded),
+    ];
+    for (name, v) in counters {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let gauges: &[(&str, f64)] = &[
+        ("scalify_memo_entries", snap.memo_entries as f64),
+        ("scalify_rule_templates", snap.templates as f64),
+        ("scalify_session_threads", snap.threads as f64),
+        ("scalify_queue_capacity", snap.queue_capacity as f64),
+        ("scalify_scheduler_workers", snap.scheduler_workers as f64),
+        ("scalify_scheduler_inflight", state.scheduler.inflight() as f64),
+        ("scalify_uptime_seconds", snap.uptime_secs),
+    ];
+    for (name, v) in gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    obs::metrics::render_histogram(
+        &mut out,
+        "scalify_request_latency_seconds",
+        &state.latency_hist,
+    );
+    out.push_str(&obs::registry().render_prometheus());
+    out
 }
 
 /// Run one verify job under the scheduler's admission bound, cold or —
@@ -388,7 +428,7 @@ fn run_verify_job(
     source: VerifySource,
     prev: Option<Json>,
 ) -> Response {
-    let t0 = Instant::now();
+    let t0 = obs::stamp();
     let job_state = Arc::clone(state);
     // the whole job — pair construction included — runs under the
     // scheduler's admission bound; this call blocks (backpressure)
@@ -413,10 +453,12 @@ fn run_verify_job(
                             pair.dist.name,
                             pair.dist.num_cores
                         );
+                        crate::log_debug!("verify_diff degraded to cold: {warning}");
                         job_state.session.verify(&pair).map(|r| (r, Some(warning)))
                     }
                     Err(why) => {
                         let warning = format!("ignoring verify state ({why}); ran cold");
+                        crate::log_debug!("verify_diff degraded to cold: {why}");
                         job_state.session.verify(&pair).map(|r| (r, Some(warning)))
                     }
                 },
@@ -426,7 +468,7 @@ fn run_verify_job(
         // same error channel as a failed verify, so the response below is
         // `Error { .. }` and the daemon keeps serving
         .and_then(|r| r);
-    let latency_secs = t0.elapsed().as_secs_f64();
+    let latency_secs = t0.elapsed_secs();
     match outcome {
         Ok((report, warning)) => {
             state.jobs.fetch_add(1, Ordering::Relaxed);
@@ -549,6 +591,53 @@ mod tests {
             "second identical request must replay the memo: {first:?} -> {second:?}"
         );
         assert!(report.layers.iter().all(|l| l.memoized));
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn metrics_request_returns_prometheus_text() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client
+            .verify(VerifySource::Model {
+                model: "llama-tiny".into(),
+                par: "tp2".into(),
+                layers: None,
+                edit_layer: None,
+            })
+            .unwrap();
+
+        let text = client.metrics().unwrap();
+        // memo, e-match and latency-histogram series must all be present
+        assert!(text.contains("# TYPE scalify_jobs_total counter"), "{text}");
+        assert!(text.contains("scalify_jobs_total 1"), "{text}");
+        assert!(text.contains("scalify_memo_hits_total"), "{text}");
+        assert!(text.contains("scalify_memo_misses_total"), "{text}");
+        assert!(text.contains("scalify_ematch_tried_total"), "{text}");
+        assert!(
+            text.contains("# TYPE scalify_request_latency_seconds histogram"),
+            "{text}"
+        );
+        assert!(
+            text.contains("scalify_request_latency_seconds_bucket{le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("scalify_request_latency_seconds_count 1"), "{text}");
+        // exposition-format shape: every sample line is `name value` with
+        // a parseable float value
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let _name = parts.next().expect("sample name");
+            let value = parts.next().unwrap_or_else(|| panic!("no value in {line:?}"));
+            assert!(parts.next().is_none(), "extra token in {line:?}");
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
 
         client.shutdown().unwrap();
         server.wait();

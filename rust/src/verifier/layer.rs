@@ -169,12 +169,17 @@ pub fn verify_layer(
     let mut rule_stats: Vec<RuleStat> = Vec::new();
     let mut last_stop = StopReason::Saturated;
     let mut outcomes: Vec<StepOutcome> = vec![StepOutcome::NotReady; dslice.graph.len()];
-    for _round in 0..max_rounds {
+    for round in 0..max_rounds {
+        // one span per saturate+propagate fixpoint round, tagged with the
+        // relation facts it derived
+        let mut rsp = crate::obs::span_fmt("round", format_args!("round {round}"));
+        rsp.attr("layer", dslice.layer as u64);
         let report = runner.run(&mut eg);
         matches_tried += report.matches_tried;
         node_overshoot = node_overshoot.max(report.node_overshoot);
         merge_rule_stats(&mut rule_stats, &report.rules);
         last_stop = report.stop;
+        rsp.attr("matches_tried", report.matches_tried as u64);
         if report.stop == StopReason::NodeLimit {
             exhausted = true;
             break;
@@ -210,6 +215,10 @@ pub fn verify_layer(
             rel.rekey(&eg);
         }
 
+        let new_facts = rel.fact_count.saturating_sub(facts_before);
+        rsp.attr("facts", new_facts as u64);
+        rsp.attr("unions", unions as u64);
+        crate::obs::metrics::count("scalify_relation_facts_total", new_facts as u64);
         if rel.fact_count == facts_before && unions == 0 {
             break;
         }

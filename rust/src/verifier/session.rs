@@ -35,6 +35,7 @@ use crate::diff::{id_multiset_delta, layer_node_ids, LayerState, VerifyState};
 use crate::egraph::RuleSet;
 use crate::error::{Result, ScalifyError};
 use crate::localize::Discrepancy;
+use crate::obs;
 use crate::partition::{extract_layers, fingerprint_pair, LayerMemo, LayerSlice, MemoEntry};
 use crate::util::{Stopwatch, WorkerPool};
 use crate::verifier::GraphPair;
@@ -199,12 +200,15 @@ impl Session {
     ) -> Result<(VerifyReport, Option<VerifyState>)> {
         self.validate_pair(pair)?;
         self.runs.fetch_add(1, Ordering::Relaxed);
+        obs::metrics::count("scalify_verify_runs_total", 1);
+        let _run_span = obs::span_fmt("verify", format_args!("verify {}", pair.dist.name));
 
         let start = Instant::now();
         let mut sw = Stopwatch::new();
 
         // ---- partitioning ----
         let (base_layers, dist_layers) = sw.time("partition", || {
+            let _sp = obs::span("phase", "partition");
             if self.cfg.partition {
                 (extract_layers(&pair.base), extract_layers(&pair.dist))
             } else {
@@ -256,6 +260,7 @@ impl Session {
             && against.is_none()
         {
             sw.time("parallel-rewrite", || {
+                let _sp = obs::span("phase", "parallel-rewrite");
                 speculated = self.parallel_pass(
                     &base_layers,
                     &dist_layers,
@@ -279,6 +284,7 @@ impl Session {
         let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
         let mut exhausted: Option<String> = None;
         sw.time("verify-layers", || {
+            let _sp = obs::span("phase", "verify-layers");
             for dslice in dist_layers.iter() {
                 let Some(bslice) =
                     base_idx_by_tag.get(&dslice.layer).map(|&i| &base_layers[i])
@@ -294,6 +300,11 @@ impl Session {
                     continue;
                 };
                 let t0 = Instant::now();
+                // exactly one `layer`-category span per reported layer,
+                // whatever served it (replay, memo, promotion, cold)
+                let mut lsp =
+                    obs::span_fmt("layer", format_args!("layer {}", dslice.layer));
+                lsp.attr("layer", dslice.layer as u64);
                 let input_rels = layer::collect_input_rels(bslice, dslice, &boundary);
                 let fp = fingerprint_pair(bslice, dslice, &input_rels, pair.dist.num_cores);
                 // (the slice hashes its own mesh axes — see hash_slice)
@@ -313,6 +324,9 @@ impl Session {
                 let state_replay =
                     prev_layer.filter(|ls| ls.verified && ls.fingerprint == fp);
                 if let Some(ls) = state_replay {
+                    // diff replay decision: unchanged layer, no e-graph work
+                    lsp.attr("reused", 1);
+                    obs::metrics::count("scalify_layers_reused_total", 1);
                     let entry = MemoEntry {
                         verified: true,
                         out_rels: ls.out_rels.clone(),
@@ -370,6 +384,7 @@ impl Session {
                     .get(&dslice.layer)
                     .filter(|(rels, _)| rels == &input_rels)
                     .map(|(_, o)| o.clone());
+                let from_parallel = spec_hit.is_some();
                 // the memo lock is taken per lookup/insert, never across a
                 // verify_layer call, so concurrent `verify` callers on the
                 // same session interleave instead of serializing
@@ -469,6 +484,27 @@ impl Session {
                 } else {
                     0
                 };
+                lsp.attr("memoized", memoized as u64);
+                lsp.attr("verified", outcome.verified as u64);
+                lsp.attr("matches_tried", outcome.matches_tried as u64);
+                if from_parallel {
+                    // speculative-then-promoted DAG result served here
+                    lsp.attr("promoted", 1);
+                }
+                if reverified {
+                    // diff decision: downstream of the edit, re-derived
+                    lsp.attr("reverified", 1);
+                    lsp.attr("delta_nodes", delta_nodes as u64);
+                    obs::metrics::count("scalify_layers_reverified_total", 1);
+                }
+                obs::metrics::count(
+                    if memoized {
+                        "scalify_layers_memoized_total"
+                    } else {
+                        "scalify_layers_cold_total"
+                    },
+                    1,
+                );
                 reports.push(LayerReport {
                     layer: dslice.layer,
                     stage: dslice.stage(),
@@ -671,6 +707,7 @@ impl Session {
                     if let Some((jrels, o)) = pending[di].take() {
                         if jrels == rels {
                             // promotion: same relations ⇒ same outcome
+                            obs::metrics::count("scalify_parallel_promoted_total", 1);
                             exact_outs[di] = Some(o.out_rels.clone());
                             out.insert(d.layer, (jrels, o));
                             finalized[di] = true;
@@ -700,7 +737,7 @@ impl Session {
             // exact jobs for every dependency-satisfied layer, speculative
             // jobs (once) for the rest so the whole DAG is in flight, not
             // just the frontier
-            let mut jobs: Vec<(usize, Rels)> = Vec::new();
+            let mut jobs: Vec<(usize, bool, Rels)> = Vec::new();
             // per job-slot: (layer index, exact?, fingerprint-when-memoizing)
             let mut job_meta: Vec<(usize, bool, Option<u64>)> = Vec::new();
             let mut alias: FxHashMap<u64, Vec<usize>> = FxHashMap::default();
@@ -736,7 +773,10 @@ impl Session {
                     }
                     seen.insert(fp, di);
                 }
-                jobs.push((di, rels));
+                if !ready {
+                    obs::metrics::count("scalify_speculative_jobs_total", 1);
+                }
+                jobs.push((di, ready, rels));
                 job_meta.push((di, ready, fp));
             }
             if jobs.is_empty() {
@@ -747,13 +787,21 @@ impl Session {
             let max_rounds = cfg.max_rounds;
             let closures: Vec<_> = jobs
                 .into_iter()
-                .map(|(di, rels)| {
+                .map(|(di, exact, rels)| {
                     let base = Arc::clone(base_layers);
                     let dist = Arc::clone(dist_layers);
                     let rules = Arc::clone(&self.rules);
                     let bi = base_idx_by_tag[&dist_layers[di].layer];
                     move || {
                         let d = &dist[di];
+                        // job spans live on the worker thread that ran
+                        // them, so the trace shows the DAG's real packing;
+                        // a later promotion shows up on the assembly
+                        // pass's `layer` span (`promoted`)
+                        let mut jsp =
+                            obs::span_fmt("job", format_args!("job layer {}", d.layer));
+                        jsp.attr("layer", d.layer as u64);
+                        jsp.attr("speculative", u64::from(!exact));
                         let o = layer::verify_layer(
                             &base[bi],
                             d,
@@ -763,6 +811,8 @@ impl Session {
                             limits,
                             max_rounds,
                         );
+                        jsp.attr("matches_tried", o.matches_tried as u64);
+                        jsp.attr("verified", u64::from(o.verified));
                         (di, rels, o)
                     }
                 })

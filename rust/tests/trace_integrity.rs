@@ -1,0 +1,170 @@
+//! Trace-integrity suite (`cargo test --test trace_integrity`).
+//!
+//! The span tracer stitches one verify run across the main thread and
+//! the parallel pass's worker pool, so a trace is only trustworthy if
+//! the RAII guards actually produce well-formed timelines: on any one
+//! thread spans must nest or be disjoint (never partially overlap), the
+//! per-layer spans must agree one-to-one with the report's layer
+//! entries, and the exported Chrome trace-event document must be JSON a
+//! Perfetto-style consumer can load.
+//!
+//! The tracer is process-global state, so every test here serializes on
+//! one mutex and runs in this dedicated integration-test process —
+//! unit tests in the library cannot race it.
+
+use scalify::cli::model_pair;
+use scalify::obs::{self, SpanRecord};
+use scalify::prelude::*;
+use scalify::report::json::Json;
+use std::sync::Mutex;
+
+static TRACER: Mutex<()> = Mutex::new(());
+
+/// A 4-thread parallel cold verify with the tracer live. Memoization is
+/// off so every layer runs a real verification job and the worker
+/// threads all contribute spans.
+fn traced_cold_verify() -> (VerifyReport, Vec<SpanRecord>) {
+    obs::start_tracing();
+    let pair = model_pair("llama-tiny", Parallelism::Tensor { tp: 2 }, None)
+        .expect("llama-tiny tp2 builds");
+    let cfg = VerifyConfig {
+        parallel: true,
+        threads: 4,
+        memoize: false,
+        ..VerifyConfig::default()
+    };
+    let report = Session::new(cfg).verify(&pair).expect("llama-tiny tp2 verifies");
+    (report, obs::stop_tracing())
+}
+
+/// True when `a` and `b` partially overlap: each starts strictly inside
+/// the other's interior. Nested and disjoint pairs (including ones that
+/// merely touch at a boundary timestamp) are fine; a partial overlap
+/// means two RAII guards on one thread closed out of order.
+fn partially_overlap(a: &SpanRecord, b: &SpanRecord) -> bool {
+    let (a0, a1) = (a.start_us, a.start_us + a.dur_us);
+    let (b0, b1) = (b.start_us, b.start_us + b.dur_us);
+    a0 < b0 && b0 < a1 && a1 < b1
+}
+
+#[test]
+fn spans_nest_per_thread_and_match_the_report() {
+    let _serial = TRACER.lock().unwrap_or_else(|p| p.into_inner());
+    let (report, records) = traced_cold_verify();
+    assert!(report.verified(), "{}", report.summary());
+    assert!(!records.is_empty(), "a traced verify must record spans");
+
+    // one span per reported layer, carrying its layer tag as an attr
+    let layer_spans: Vec<&SpanRecord> =
+        records.iter().filter(|r| r.cat == "layer").collect();
+    assert_eq!(
+        layer_spans.len(),
+        report.layers.len(),
+        "per-layer spans must agree with the report's layer entries"
+    );
+    let mut span_tags: Vec<u64> = layer_spans
+        .iter()
+        .map(|s| {
+            s.args
+                .iter()
+                .find(|(k, _)| *k == "layer")
+                .map(|(_, v)| *v)
+                .expect("layer spans carry a 'layer' attr")
+        })
+        .collect();
+    let mut report_tags: Vec<u64> =
+        report.layers.iter().map(|l| l.layer as u64).collect();
+    span_tags.sort_unstable();
+    report_tags.sort_unstable();
+    assert_eq!(span_tags, report_tags);
+
+    // the parallel pass ran its per-layer jobs off the main thread
+    let run_tid = records
+        .iter()
+        .find(|r| r.cat == "verify")
+        .expect("the run emits a top-level verify span")
+        .tid;
+    let job_spans: Vec<&SpanRecord> =
+        records.iter().filter(|r| r.cat == "job").collect();
+    assert!(!job_spans.is_empty(), "parallel cold verify must emit job spans");
+    assert!(
+        job_spans.iter().any(|s| s.tid != run_tid),
+        "job spans must come from worker threads, not the run thread"
+    );
+
+    // per-thread timelines are well-formed: every pair of spans on one
+    // thread either nests or is disjoint
+    let mut tids: Vec<u64> = records.iter().map(|r| r.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    for tid in tids {
+        let own: Vec<&SpanRecord> =
+            records.iter().filter(|r| r.tid == tid).collect();
+        for (i, a) in own.iter().enumerate() {
+            for b in &own[i + 1..] {
+                assert!(
+                    !partially_overlap(a, b) && !partially_overlap(b, a),
+                    "spans '{}' and '{}' partially overlap on thread {tid}",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exported_trace_file_is_valid_chrome_trace_json() {
+    let _serial = TRACER.lock().unwrap_or_else(|p| p.into_inner());
+    let path = std::env::temp_dir()
+        .join(format!("scalify-trace-integrity-{}.json", std::process::id()));
+    obs::start_tracing();
+    let pair = model_pair("llama-tiny", Parallelism::Tensor { tp: 2 }, None)
+        .expect("llama-tiny tp2 builds");
+    let report = Session::new(VerifyConfig {
+        parallel: true,
+        threads: 4,
+        memoize: false,
+        ..VerifyConfig::default()
+    })
+    .verify(&pair)
+    .expect("llama-tiny tp2 verifies");
+    assert!(report.verified(), "{}", report.summary());
+    let spans = obs::export_chrome_trace(&path).expect("trace export writes");
+    assert!(spans > 0);
+
+    let text = std::fs::read_to_string(&path).expect("trace file readable");
+    let _ = std::fs::remove_file(&path);
+    let doc = Json::parse(&text).expect("trace file is valid JSON");
+    assert_eq!(doc.str_at("displayTimeUnit"), Some("ms"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("trace document has a traceEvents array");
+
+    let mut complete = 0usize;
+    let mut cats: Vec<String> = Vec::new();
+    for e in events {
+        let ph = e.str_at("ph").expect("every event has a phase");
+        assert!(e.str_at("name").is_some(), "every event has a name");
+        assert!(e.f64_at("pid").is_some(), "every event has a pid");
+        assert!(e.f64_at("tid").is_some(), "every event has a tid");
+        match ph {
+            "X" => {
+                complete += 1;
+                assert!(e.f64_at("ts").is_some(), "X events carry ts");
+                assert!(e.f64_at("dur").is_some(), "X events carry dur");
+                cats.push(e.str_at("cat").expect("X events carry cat").to_owned());
+            }
+            "M" => {}
+            other => panic!("unexpected event phase '{other}'"),
+        }
+    }
+    assert_eq!(complete, spans, "exported span count must match the document");
+    for expected in ["verify", "phase", "layer", "rule"] {
+        assert!(
+            cats.iter().any(|c| c == expected),
+            "trace must contain a '{expected}' span, got {cats:?}"
+        );
+    }
+}
