@@ -20,6 +20,8 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "transform",
     "scale",
     "diff",
+    "serve-load",
+    "stream",
     "no-partition",
     "no-parallel",
     "no-memoize",
@@ -238,8 +240,8 @@ pub fn usize_flag(
 }
 
 /// Build a validated [`crate::service::ServeConfig`] from `scalify serve`
-/// flags (`--addr`, `--cache-dir`, `--queue`, `--workers`, plus the
-/// common verifier flags).
+/// flags (`--addr`, `--cache-dir`, `--queue`, `--workers`, `--shards`,
+/// plus the common verifier flags).
 pub fn serve_config_from_flags(
     flags: &HashMap<String, String>,
 ) -> Result<crate::service::ServeConfig> {
@@ -259,6 +261,7 @@ pub fn serve_config_from_flags(
     }
     cfg.queue_capacity = usize_flag(flags, "queue", cfg.queue_capacity)?;
     cfg.workers = usize_flag(flags, "workers", cfg.workers)?;
+    cfg.shards = usize_flag(flags, "shards", cfg.shards)?;
     Ok(cfg)
 }
 
@@ -487,6 +490,8 @@ mod tests {
             "16",
             "--workers",
             "3",
+            "--shards",
+            "4",
         ]))
         .unwrap();
         let cfg = serve_config_from_flags(&f).unwrap();
@@ -494,16 +499,18 @@ mod tests {
         assert_eq!(cfg.cache_dir, Some(PathBuf::from("/tmp/scalify-cache")));
         assert_eq!(cfg.queue_capacity, 16);
         assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.shards, 4);
 
         // defaults apply when flags are absent (the CLI pins the
         // well-known port; the library default stays ephemeral for tests)
         let cfg = serve_config_from_flags(&parse_flags(&args(&[])).unwrap()).unwrap();
         assert_eq!(cfg.addr, "127.0.0.1:7878");
         assert_eq!(cfg.cache_dir, None);
+        assert_eq!(cfg.shards, 1, "one shard by default: the pre-fleet behavior");
         assert_eq!(crate::service::ServeConfig::default().addr, "127.0.0.1:0");
 
         // zero / junk are config errors
-        for bad in [["--queue", "0"], ["--workers", "many"]] {
+        for bad in [["--queue", "0"], ["--workers", "many"], ["--shards", "0"]] {
             let f = parse_flags(&args(&bad)).unwrap();
             assert!(matches!(
                 serve_config_from_flags(&f),

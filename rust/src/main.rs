@@ -4,11 +4,12 @@
 //! scalify verify --base <hlo> --dist <hlo> [--cores N] [--json]   verify two HLO files
 //! scalify model --model llama-8b --par tp32 [--layers N] [--json] verify a zoo model
 //! scalify batch --manifest pairs.txt [--json]                     verify a manifest through one session
-//! scalify serve --addr 127.0.0.1:7878 [--cache-dir DIR]           run the verification daemon
-//! scalify client verify|stats|metrics|shutdown --addr HOST:PORT   drive a running daemon
+//! scalify serve --addr 127.0.0.1:7878 [--cache-dir DIR] [--shards N]     run the verification fleet
+//! scalify client verify|stats|metrics|cancel|shutdown --addr HOST:PORT   drive a running daemon
 //! scalify bench [--json]                                          cold/warm service latency → BENCH_service.json
 //! scalify bench --scale [--json]                                  405B-class scale tier → BENCH_scale.json
 //! scalify bench --diff [--json]                                   incremental verify-on-diff tier → BENCH_diff.json
+//! scalify bench --serve-load [--json]                             concurrent fleet load tier → BENCH_serve.json
 //! scalify bugs [--reproduced|--new]                               run the bug corpus
 //! scalify exec --artifact <hlo>                                   run via the runtime
 //! scalify info                                                    version/build info
@@ -36,7 +37,9 @@ use scalify::ir::Graph;
 use scalify::obs;
 use scalify::report::json::Json;
 use scalify::report::Table;
-use scalify::service::{Client, Scheduler, Server, VerifySource};
+use scalify::service::{
+    Client, Request, Response, Scheduler, Server, VerifyOpts, VerifySource, PROTOCOL_V2,
+};
 use scalify::verifier::{GraphPair, Session, VerifyConfig, VerifyReport};
 use std::collections::HashMap;
 use std::io::Write as _;
@@ -368,13 +371,15 @@ fn cmd_serve(flags: &Flags) -> Result<ExitCode> {
         .as_ref()
         .map(|d| format!(", cache-dir {}", d.display()))
         .unwrap_or_default();
+    let fleet_note =
+        if cfg.shards > 1 { format!(", {} shards", cfg.shards) } else { String::new() };
     let server = Server::start(cfg)?;
     // the bound address goes to stdout (and is flushed) so scripts and
     // tests can read the ephemeral port; progress chatter stays on stderr
     println!("scalify: serving on {}", server.local_addr());
     let _ = std::io::stdout().flush();
     eprintln!(
-        "scalify: verification service ready{cache_note}; stop it with \
+        "scalify: verification service ready{fleet_note}{cache_note}; stop it with \
          `scalify client shutdown --addr {}`",
         server.local_addr()
     );
@@ -444,16 +449,84 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
             // --against FILE rides the verify_diff request: the client
             // ships the state document verbatim, the daemon decides
             // whether it is usable (degrading to cold with a warning)
-            let (report, latency_secs, stats, warning) = match flags.get("against") {
+            let state = match flags.get("against") {
                 Some(path) => {
                     let text = std::fs::read_to_string(path)
                         .with_ctx(|| format!("--against {path}"))?;
-                    let state = Json::parse(&text).with_ctx(|| format!("--against {path}"))?;
-                    client.verify_diff(source, state)?
+                    Some(Json::parse(&text).with_ctx(|| format!("--against {path}"))?)
                 }
-                None => {
-                    let (report, latency_secs, stats) = client.verify(source)?;
-                    (report, latency_secs, stats, None)
+                None => None,
+            };
+            // any v2 request option upgrades the connection; without
+            // them the request stays v1, byte-identical to older CLIs
+            let wants_v2 = flags.contains_key("id")
+                || flags.contains_key("priority")
+                || flags.contains_key("deadline-secs")
+                || flags.contains_key("stream");
+            let (report, latency_secs, stats, warning) = if wants_v2 {
+                let opts = VerifyOpts {
+                    id: flags.get("id").cloned(),
+                    priority: match flags.get("priority") {
+                        Some(p) => p.parse().map_err(|_| {
+                            ScalifyError::config(format!(
+                                "--priority wants an integer, got '{p}'"
+                            ))
+                        })?,
+                        None => 0,
+                    },
+                    deadline_secs: match flags.get("deadline-secs") {
+                        Some(d) => Some(d.parse().map_err(|_| {
+                            ScalifyError::config(format!(
+                                "--deadline-secs wants a number, got '{d}'"
+                            ))
+                        })?),
+                        None => None,
+                    },
+                    stream: flags.contains_key("stream"),
+                };
+                let negotiated = client.hello(PROTOCOL_V2)?;
+                if negotiated < PROTOCOL_V2 {
+                    return Err(ScalifyError::runtime(format!(
+                        "daemon only speaks protocol v{negotiated}; \
+                         --id/--priority/--deadline-secs/--stream need v{PROTOCOL_V2}"
+                    )));
+                }
+                let request = match state {
+                    Some(s) => Request::VerifyDiff { source, state: s },
+                    None => Request::Verify(source),
+                };
+                let resp = client.verify_opts(&request, &opts, |e| {
+                    eprintln!(
+                        "layer {} ({}/{}) {}",
+                        e.layer,
+                        e.index + 1,
+                        e.total,
+                        if e.verified { "verified" } else { "UNVERIFIED" }
+                    );
+                })?;
+                match resp {
+                    Response::VerifyDone { report, latency_secs, stats, warning, .. } => {
+                        (report, latency_secs, stats, warning)
+                    }
+                    Response::Cancelled { message, .. } => {
+                        return Err(ScalifyError::runtime(message));
+                    }
+                    Response::Error { message } => {
+                        return Err(ScalifyError::runtime(message));
+                    }
+                    other => {
+                        return Err(ScalifyError::runtime(format!(
+                            "unexpected response to verify: {other:?}"
+                        )));
+                    }
+                }
+            } else {
+                match state {
+                    Some(s) => client.verify_diff(source, s)?,
+                    None => {
+                        let (report, latency_secs, stats) = client.verify(source)?;
+                        (report, latency_secs, stats, None)
+                    }
                 }
             };
             if let Some(w) = &warning {
@@ -494,14 +567,25 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
             print!("{}", client.metrics()?);
             Ok(ExitCode::SUCCESS)
         }
+        "cancel" => {
+            let id = require(flags, "id", "request id to cancel")?;
+            client.hello(PROTOCOL_V2)?;
+            if client.cancel(id)? {
+                eprintln!("scalify: daemon cancelled in-flight request '{id}'");
+                Ok(ExitCode::SUCCESS)
+            } else {
+                eprintln!("scalify: no in-flight request with id '{id}'");
+                Ok(ExitCode::from(1))
+            }
+        }
         "shutdown" => {
             client.shutdown()?;
             eprintln!("scalify: daemon acknowledged shutdown");
             Ok(ExitCode::SUCCESS)
         }
         other => Err(ScalifyError::config(format!(
-            "unknown client operation '{other}' (expected verify, stats, metrics or \
-             shutdown; e.g. `scalify client stats --addr 127.0.0.1:7878`)"
+            "unknown client operation '{other}' (expected verify, stats, metrics, cancel \
+             or shutdown; e.g. `scalify client stats --addr 127.0.0.1:7878`)"
         ))),
     }
 }
@@ -521,6 +605,9 @@ fn bench_check(baseline_path: &str, fresh_path: &str, tier: &str) -> Result<Exit
     let (ratio, slack, metrics): (f64, f64, &[&str]) = match tier {
         "scale" => (2.0, 1.0, &["cold_secs", "warm_secs", "cold_nomemo_par_secs"]),
         "diff" => (2.0, 2.0, &["cold_secs", "incremental_secs"]),
+        // the load tier gates client-observed percentiles under
+        // saturation; generous slack because shared CI runners queue
+        "serve" => (2.0, 0.5, &["p50_secs", "p95_secs"]),
         _ => (1.5, 0.05, &["warm_secs"]),
     };
     let load = |path: &str| -> Result<Json> {
@@ -602,8 +689,11 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
 
     let scale = flags.contains_key("scale");
     let diff = flags.contains_key("diff");
-    if scale && diff {
-        return Err(ScalifyError::config("bench takes --scale or --diff, not both"));
+    let serve_load = flags.contains_key("serve-load");
+    if [scale, diff, serve_load].iter().filter(|b| **b).count() > 1 {
+        return Err(ScalifyError::config(
+            "bench takes at most one of --scale, --diff or --serve-load",
+        ));
     }
     let checking = flags.contains_key("check");
     let model = flags.get("model").map(String::as_str).unwrap_or(if scale || diff {
@@ -611,13 +701,16 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
     } else {
         "bench-llama"
     });
-    // under --check --scale/--diff the fresh capture defaults to the name
-    // the CI job writes, NOT the committed baseline's — comparing a file
-    // against itself would green-light any regression
+    // under --check --scale/--diff/--serve-load the fresh capture
+    // defaults to the name the CI job writes, NOT the committed
+    // baseline's — comparing a file against itself would green-light any
+    // regression
     let tier = if scale {
         "scale"
     } else if diff {
         "diff"
+    } else if serve_load {
+        "serve"
     } else {
         "service"
     };
@@ -626,6 +719,8 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
         ("scale", false) => "BENCH_scale.json",
         ("diff", true) => "BENCH_diff_fresh.json",
         ("diff", false) => "BENCH_diff.json",
+        ("serve", true) => "BENCH_serve_fresh.json",
+        ("serve", false) => "BENCH_serve.json",
         _ => "BENCH_service.json",
     });
     if let Some(baseline_path) = flags.get("check") {
@@ -642,6 +737,9 @@ fn cmd_bench(flags: &Flags) -> Result<ExitCode> {
     }
     if diff {
         return cmd_bench_diff(flags, model, out_path);
+    }
+    if serve_load {
+        return cmd_bench_serve_load(flags, out_path);
     }
     let pair_for = |par_spec: &str| -> Result<GraphPair> {
         let par = cli::parallelism(par_spec)?;
@@ -1141,6 +1239,149 @@ fn cmd_bench_diff(flags: &Flags, model: &str, out_path: &str) -> Result<ExitCode
     Ok(ExitCode::SUCCESS)
 }
 
+/// `scalify bench --serve-load`: the fleet load tier. Boots an
+/// in-process sharded daemon (4 shards, 4 scheduler workers, queue 16,
+/// 2 verifier threads per shard) and hammers it with 8 concurrent
+/// clients, each sending a mixed stream of zoo verifies, bug-corpus
+/// verifies and incremental `verify_diff` requests against a
+/// pre-captured state. Reports client-observed p50/p95/max latency and
+/// saturation throughput; `bench --check BENCH_serve.json
+/// --serve-load` gates the percentiles in nightly CI.
+fn cmd_bench_serve_load(flags: &Flags, out_path: &str) -> Result<ExitCode> {
+    use scalify::service::ServeConfig;
+
+    const CLIENTS: usize = 8;
+    const REQUESTS_PER_CLIENT: usize = 24;
+
+    let cfg = ServeConfig {
+        queue_capacity: 16,
+        workers: 4,
+        shards: 4,
+        verify: VerifyConfig { threads: 2, ..VerifyConfig::default() },
+        ..ServeConfig::default()
+    };
+    eprintln!(
+        "bench --serve-load: starting an in-process fleet ({} shards, {} workers, \
+         queue {})…",
+        cfg.shards, cfg.workers, cfg.queue_capacity
+    );
+    let server = Server::start(cfg)?;
+    let addr = server.local_addr().to_string();
+
+    // pre-capture the state the diff mix replays against, exactly as a
+    // client would have persisted it from an earlier --emit-state run
+    let diff_source = VerifySource::Model {
+        model: "llama-tiny".into(),
+        par: "tp2".into(),
+        layers: Some(4),
+        edit_layer: None,
+    };
+    let pair = cli::model_pair("llama-tiny", cli::parallelism("tp2")?, Some(4))?;
+    let capture_session = Session::new(VerifyConfig {
+        threads: 2,
+        parallel: false,
+        ..VerifyConfig::default()
+    });
+    let (_, captured) = capture_session.verify_capture(&pair)?;
+    let state_doc = captured.to_json();
+
+    eprintln!(
+        "bench --serve-load: {CLIENTS} clients × {REQUESTS_PER_CLIENT} mixed requests…"
+    );
+    let t_start = std::time::Instant::now();
+    // bounded channel sized for every sample: senders never block, and
+    // the harness stays std-only
+    let (tx, rx) = std::sync::mpsc::sync_channel::<f64>(CLIENTS * REQUESTS_PER_CLIENT);
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        let diff_source = diff_source.clone();
+        let state_doc = state_doc.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(&addr)?;
+            for r in 0..REQUESTS_PER_CLIENT {
+                let t0 = std::time::Instant::now();
+                match (c + r) % 3 {
+                    0 => {
+                        client.verify(VerifySource::Model {
+                            model: "llama-tiny".into(),
+                            par: "tp2".into(),
+                            layers: None,
+                            edit_layer: None,
+                        })?;
+                    }
+                    1 => {
+                        // bug-corpus requests come back unverified — that
+                        // is still a served request, not an error
+                        client.verify(VerifySource::Bug { id: "T4#1".into() })?;
+                    }
+                    _ => {
+                        client.verify_diff(diff_source.clone(), state_doc.clone())?;
+                    }
+                }
+                let _ = tx.send(t0.elapsed().as_secs_f64());
+            }
+            Ok(())
+        }));
+    }
+    drop(tx);
+    let mut latencies: Vec<f64> = rx.iter().collect();
+    for handle in handles {
+        handle
+            .join()
+            .map_err(|_| ScalifyError::runtime("a load-bench client thread panicked"))??;
+    }
+    let total_secs = t_start.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let pct = |q: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies.len() - 1) as f64 * q).round() as usize;
+        latencies[idx]
+    };
+    let total_requests = latencies.len();
+    let (p50, p95, max) = (pct(0.50), pct(0.95), latencies.last().copied().unwrap_or(0.0));
+    let throughput_rps = total_requests as f64 / total_secs.max(1e-9);
+    eprintln!(
+        "bench --serve-load: {total_requests} requests in {total_secs:.2}s — \
+         p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms, {throughput_rps:.1} req/s",
+        p50 * 1e3,
+        p95 * 1e3,
+        max * 1e3
+    );
+
+    // drain the daemon before reporting, so a wedged shutdown fails the
+    // bench instead of leaking a background fleet
+    let mut shutdown_client = Client::connect(&addr)?;
+    shutdown_client.shutdown()?;
+    server.wait();
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("serve".into())),
+        ("clients".into(), Json::Num(CLIENTS as f64)),
+        ("requests_per_client".into(), Json::Num(REQUESTS_PER_CLIENT as f64)),
+        (
+            "scenarios".into(),
+            Json::Arr(vec![Json::Obj(vec![
+                ("par".into(), Json::Str(format!("mixed-{CLIENTS}"))),
+                ("p50_secs".into(), Json::Num(p50)),
+                ("p95_secs".into(), Json::Num(p95)),
+                ("max_secs".into(), Json::Num(max)),
+                ("throughput_rps".into(), Json::Num(throughput_rps)),
+            ])]),
+        ),
+        ("total_secs".into(), Json::Num(total_secs)),
+    ]);
+    std::fs::write(out_path, doc.render_pretty()).with_ctx(|| format!("writing {out_path}"))?;
+    eprintln!("scalify: wrote {out_path}");
+    if flags.contains_key("json") {
+        print!("{}", doc.render_pretty());
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
 fn run_bug_table(title: &str, cases: Vec<scalify::bugs::BugCase>) -> bool {
     let mut table =
         Table::new(title, &["Bug ID", "Description", "Issue", "Expected", "Result", "Time"]);
@@ -1236,12 +1477,13 @@ fn usage() -> String {
          [--against STATE.json] [--emit-state STATE.json] [--edit-layer N] \
          [--trace TRACE.json] [--json]\n  \
          scalify batch --manifest pairs.txt [--workers N] [--trace TRACE.json] [--json]\n  \
-         scalify serve [--addr 127.0.0.1:7878] [--cache-dir DIR] [--queue N] [--workers N]\n  \
-         scalify client verify|stats|metrics|shutdown --addr HOST:PORT [--model M --par P \
-         | --bug ID | --base a.hlo --dist b.hlo] [--against STATE.json] [--edit-layer N] \
-         [--json]\n  \
-         scalify bench [--scale|--diff] [--model M] [--out FILE] [--check BASELINE.json] \
-         [--trace TRACE.json] [--json]\n  \
+         scalify serve [--addr 127.0.0.1:7878] [--cache-dir DIR] [--queue N] [--workers N] \
+         [--shards N]\n  \
+         scalify client verify|stats|metrics|cancel|shutdown --addr HOST:PORT [--model M \
+         --par P | --bug ID | --base a.hlo --dist b.hlo] [--against STATE.json] \
+         [--edit-layer N] [--id ID] [--priority N] [--deadline-secs S] [--stream] [--json]\n  \
+         scalify bench [--scale|--diff|--serve-load] [--model M] [--out FILE] \
+         [--check BASELINE.json] [--trace TRACE.json] [--json]\n  \
          scalify bugs [--reproduced|--new|--transform]\n  \
          scalify exec --artifact artifacts/model_single.hlo.txt\n  \
          scalify info\n\

@@ -177,6 +177,84 @@ pub fn render_histogram(out: &mut String, name: &str, hist: &Histogram) {
     let _ = writeln!(out, "{name}_count {}", hist.count());
 }
 
+/// Like [`render_histogram`], with extra labels on every series (the
+/// sharded service's per-shard latency, e.g. `labels = "shard=\"0\""`).
+/// The `# TYPE` line is the caller's job — labeled series of one metric
+/// share a single type declaration.
+pub fn render_histogram_labeled(
+    out: &mut String,
+    name: &str,
+    labels: &str,
+    hist: &Histogram,
+) {
+    for (bound, cum) in hist.cumulative_buckets() {
+        if bound.is_infinite() {
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {cum}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{bound}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", hist.sum_secs());
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", hist.count());
+}
+
+/// Total observations across a set of same-bounds histograms.
+pub fn merged_count(hists: &[&Histogram]) -> u64 {
+    hists.iter().map(|h| h.count()).sum()
+}
+
+/// Exact maximum across a set of histograms (0 when all are empty).
+pub fn merged_max(hists: &[&Histogram]) -> f64 {
+    hists.iter().map(|h| h.max()).fold(0.0, f64::max)
+}
+
+/// Quantile estimate over the **merged** bucket counts of several
+/// same-bounds histograms — how the sharded service rolls per-shard
+/// latency up into one `StatsSnapshot`.
+///
+/// The empty case is guarded explicitly: with zero total observations
+/// the answer is 0.0, never an interpolation over empty buckets (a
+/// fresh daemon must report all-zero percentiles). Mirrors
+/// [`Histogram::quantile`]: linear interpolation inside the containing
+/// bucket, clamped to the exact merged max.
+pub fn merged_quantile(hists: &[&Histogram], q: f64) -> f64 {
+    let total = merged_count(hists);
+    if total == 0 || hists.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(
+        hists.windows(2).all(|w| std::ptr::eq(w[0].bounds, w[1].bounds)),
+        "merged histograms must share bucket bounds"
+    );
+    let max = merged_max(hists);
+    let bounds = hists[0].bounds;
+    // merge per-bucket counts (not cumulative: the interpolation needs
+    // the count inside each bucket)
+    let mut merged = vec![0u64; bounds.len() + 1];
+    for h in hists {
+        let mut prev = 0u64;
+        for (i, (_, cum)) in h.cumulative_buckets().into_iter().enumerate() {
+            merged[i] += cum - prev;
+            prev = cum;
+        }
+    }
+    let rank = (q * total as f64).ceil().clamp(1.0, total as f64) as u64;
+    let mut seen = 0u64;
+    for (i, here) in merged.into_iter().enumerate() {
+        if here == 0 {
+            continue;
+        }
+        if seen + here >= rank {
+            let lo = if i == 0 { 0.0 } else { bounds[i - 1] };
+            let hi = if i < bounds.len() { bounds[i] } else { max };
+            let frac = (rank - seen) as f64 / here as f64;
+            return (lo + (hi - lo) * frac).min(max);
+        }
+        seen += here;
+    }
+    max
+}
+
 /// The process-wide instrument registry.
 #[derive(Default)]
 pub struct Registry {
@@ -283,6 +361,63 @@ mod tests {
         assert!(text.contains("test_latency_seconds_bucket{le=\"+Inf\"} 2"));
         assert!(text.contains("test_latency_seconds_count 2"));
         assert!(text.contains("test_latency_seconds_sum "));
+    }
+
+    #[test]
+    fn merged_quantiles_over_empty_histograms_are_exactly_zero() {
+        // the fresh-daemon regression: zero observations must roll up to
+        // 0s, never an interpolation over empty buckets
+        let a = Histogram::new(LATENCY_BUCKETS);
+        let b = Histogram::new(LATENCY_BUCKETS);
+        for q in [0.5, 0.95, 0.999] {
+            assert_eq!(merged_quantile(&[&a, &b], q), 0.0);
+        }
+        assert_eq!(merged_quantile(&[], 0.5), 0.0);
+        assert_eq!(merged_max(&[&a, &b]), 0.0);
+        assert_eq!(merged_count(&[&a, &b]), 0);
+    }
+
+    #[test]
+    fn merged_quantiles_agree_with_a_single_combined_histogram() {
+        let a = Histogram::new(LATENCY_BUCKETS);
+        let b = Histogram::new(LATENCY_BUCKETS);
+        let combined = Histogram::new(LATENCY_BUCKETS);
+        for i in 1..=100 {
+            let v = i as f64 / 1000.0;
+            if i % 2 == 0 { a.observe(v) } else { b.observe(v) }
+            combined.observe(v);
+        }
+        for q in [0.5, 0.95] {
+            let merged = merged_quantile(&[&a, &b], q);
+            let single = combined.quantile(q);
+            assert!((merged - single).abs() < 1e-9, "q={q}: {merged} vs {single}");
+        }
+        assert_eq!(merged_max(&[&a, &b]), combined.max());
+        assert_eq!(merged_count(&[&a, &b]), 100);
+        // one empty shard must not perturb the rollup
+        let empty = Histogram::new(LATENCY_BUCKETS);
+        assert_eq!(
+            merged_quantile(&[&a, &b, &empty], 0.95),
+            merged_quantile(&[&a, &b], 0.95)
+        );
+    }
+
+    #[test]
+    fn labeled_histogram_render_carries_the_labels_on_every_series() {
+        let h = Histogram::new(LATENCY_BUCKETS);
+        h.observe(0.004);
+        let mut text = String::new();
+        render_histogram_labeled(&mut text, "shard_latency_seconds", "shard=\"2\"", &h);
+        assert!(
+            text.contains("shard_latency_seconds_bucket{shard=\"2\",le=\"0.005\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("shard_latency_seconds_bucket{shard=\"2\",le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("shard_latency_seconds_count{shard=\"2\"} 1"), "{text}");
+        assert!(!text.contains("# TYPE"), "type line is the caller's job");
     }
 
     #[test]

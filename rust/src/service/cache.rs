@@ -1,67 +1,198 @@
-//! Persistent on-disk layer-memo store (`scalify serve --cache-dir`).
+//! Persistent on-disk layer-memo store (`scalify serve --cache-dir`):
+//! a single append-only **segment file** plus an in-memory fingerprint
+//! index.
 //!
-//! Verified [`MemoEntry`]s are JSON-serialized keyed by their **stable**
-//! structural fingerprint (see [`crate::partition::fingerprint`]), loaded
-//! at daemon startup and flushed on every write, so a restarted daemon —
-//! or a different CI job pointed at the same directory — starts warm:
-//! its first request replays every layer an earlier process already
-//! proved.
+//! Verified [`MemoEntry`]s are keyed by their **stable** structural
+//! fingerprint (see [`crate::partition::fingerprint`]), loaded at daemon
+//! startup and appended on write, so a restarted daemon — or a different
+//! CI job pointed at the same directory — starts warm: its first request
+//! replays every layer an earlier process already proved.
 //!
-//! The file records both a cache format version and the fingerprint
-//! scheme version; any mismatch, parse failure or torn write **degrades
-//! to a cold start with a warning** — a corrupted cache can cost time,
-//! never correctness. Writes go through a temp file + rename so a crash
-//! mid-flush leaves the previous generation intact. Fingerprints are
-//! written as fixed-width hex strings (JSON numbers are doubles and
-//! cannot carry 64 bits).
+//! ## On-disk layout
+//!
+//! ```text
+//! header   "SCLFYSEG" · format u32 LE · fingerprint-scheme u32 LE
+//! record*  payload-len u32 LE · fp u64 LE · checksum u64 LE · payload
+//! ```
+//!
+//! Each record is independently checksummed (FNV-1a over the fingerprint
+//! and payload bytes), so recording an entry is **one `O(record)`
+//! append**, not the full-file rewrite the old JSON store paid per write
+//! — under fleet load the write cost no longer grows with the number of
+//! entries already proved. The payload itself is the entry's compact
+//! JSON body, reusing the crate's hand-rolled codec.
+//!
+//! ## In-memory index
+//!
+//! Records live in flat arrays (`DenseStorage` idiom): one contiguous
+//! payload buffer, a prefix-sum array of record boundaries, a parallel
+//! fingerprint array and a fingerprint→record hash index. The layout is
+//! mmap-friendly — the byte buffer mirrors the file's record region —
+//! and costs two `Vec`s plus a hash map instead of one allocation per
+//! entry.
+//!
+//! ## Failure behavior
+//!
+//! Startup scans the segment and **compacts** it when recovery dropped
+//! anything: a crash mid-append leaves a truncated final record, which
+//! is detected, logged, cut off and rewritten — every fully-checksummed
+//! record before it survives. Bitrot *inside* a complete record (a
+//! checksum mismatch mid-file), an unknown header, or fingerprint-scheme
+//! skew all **degrade to a cold start with a warning** — a corrupted
+//! cache can cost time, never correctness. Caches written by the old
+//! JSON format (`layer-memo.json`) are migrated into the segment on
+//! first open.
 
 use crate::error::Result;
 use crate::partition::{check_fingerprint_version, MemoEntry, FINGERPRINT_VERSION};
 use crate::report::json::Json;
 use crate::report::{json_checksum, rel_summary_from_json, rel_summary_to_json};
 use rustc_hash::FxHashMap;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 /// On-disk format version (independent of the fingerprint scheme).
-pub const CACHE_FORMAT_VERSION: u32 = 1;
+/// v1 was the whole-file JSON document; v2 is the append-only segment.
+pub const CACHE_FORMAT_VERSION: u32 = 2;
 
 /// File name inside `--cache-dir`.
-pub const CACHE_FILE: &str = "layer-memo.json";
+pub const CACHE_FILE: &str = "layer-memo.seg";
+
+/// File name of the v1 whole-file JSON store, read once for migration.
+pub const LEGACY_CACHE_FILE: &str = "layer-memo.json";
+
+/// Segment magic: identifies the file before any parsing happens.
+const MAGIC: &[u8; 8] = b"SCLFYSEG";
+const HEADER_LEN: usize = 16;
+/// Bytes before each payload: length (u32) + fingerprint (u64) +
+/// checksum (u64).
+const RECORD_HEADER_LEN: usize = 4 + 8 + 8;
+/// Sanity bound on one payload — anything larger is corruption, not a
+/// layer summary.
+const MAX_RECORD_LEN: usize = 1 << 20;
 
 /// Outcome of opening a cache directory.
 #[derive(Clone, Debug, Default)]
 pub struct CacheLoad {
     /// Entries successfully loaded.
     pub loaded: usize,
-    /// Present when the store degraded to a cold start (corrupt file,
-    /// version skew, unreadable directory).
+    /// Present when the store degraded (corrupt file, version skew,
+    /// unreadable directory) or recovered from a torn append.
     pub warning: Option<String>,
 }
 
-/// Handle on a cache directory: an in-memory mirror plus flush-on-write
-/// persistence. Shared behind `Arc` between the session's memo-write hook
-/// and the service's stats plumbing.
+/// The flat-array record index: one contiguous payload buffer with
+/// prefix-sum boundaries, a parallel fingerprint array and a
+/// fingerprint→record map for duplicate suppression.
+struct SegmentIndex {
+    /// Record fingerprints, in append order.
+    fps: Vec<u64>,
+    /// All payload bytes, concatenated.
+    data: Vec<u8>,
+    /// Prefix sums into `data`: record `i` spans
+    /// `bounds[i]..bounds[i + 1]`. (u32 offsets: the capacity bound keeps
+    /// the buffer far below 4 GiB.)
+    bounds: Vec<u32>,
+    /// Fingerprint → record position.
+    by_fp: FxHashMap<u64, u32>,
+}
+
+impl SegmentIndex {
+    fn new() -> SegmentIndex {
+        SegmentIndex {
+            fps: Vec::new(),
+            data: Vec::new(),
+            bounds: vec![0],
+            by_fp: FxHashMap::default(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.fps.len()
+    }
+
+    /// Append one record; duplicate fingerprints are rejected (entries
+    /// are immutable once verified, so first-writer-wins is exact).
+    fn push(&mut self, fp: u64, payload: &[u8]) -> bool {
+        if self.by_fp.contains_key(&fp) {
+            return false;
+        }
+        self.by_fp.insert(fp, self.fps.len() as u32);
+        self.fps.push(fp);
+        self.data.extend_from_slice(payload);
+        self.bounds.push(self.data.len() as u32);
+        true
+    }
+
+    fn payload(&self, i: usize) -> &[u8] {
+        &self.data[self.bounds[i] as usize..self.bounds[i + 1] as usize]
+    }
+
+    /// Encoded record bytes for records `from..len` (the append tail).
+    fn encode_range(&self, from: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        for i in from..self.len() {
+            out.extend_from_slice(&record_bytes(self.fps[i], self.payload(i)));
+        }
+        out
+    }
+
+    /// The whole file image: header plus every record.
+    fn encode_all(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.data.len());
+        out.extend_from_slice(&header_bytes());
+        out.extend_from_slice(&self.encode_range(0));
+        out
+    }
+
+    fn decode_entries(&self) -> Vec<(u64, MemoEntry)> {
+        let mut out = Vec::with_capacity(self.len());
+        for i in 0..self.len() {
+            match decode_payload(self.payload(i)) {
+                Ok(entry) => out.push((self.fps[i], entry)),
+                // unreachable post-scan (payloads are validated at open,
+                // and appended payloads were just encoded) — but a skip
+                // beats a panic in a long-lived daemon
+                Err(why) => crate::log_warn!(
+                    "cache record {i} (fp {:016x}) became undecodable: {why}",
+                    self.fps[i]
+                ),
+            }
+        }
+        out
+    }
+}
+
+/// What the disk currently holds, tracked so appends stay `O(record)`.
+struct FileState {
+    /// True when the file is a valid segment holding exactly `records`
+    /// records. False after opening over garbage or a failed write —
+    /// healed by a full rewrite on the next append.
+    valid: bool,
+    /// Records currently persisted.
+    records: usize,
+}
+
+/// Handle on a cache directory: the in-memory segment index plus
+/// append-on-write persistence. Shared behind `Arc` between the session
+/// shards' memo-write hooks and the service's stats plumbing.
 ///
-/// The mirror is **bounded** (same spirit as `VerifyConfig::memo_capacity`
+/// The index is **bounded** (same spirit as `VerifyConfig::memo_capacity`
 /// — a long-lived daemon must not grow without limit): once `capacity`
 /// entries are held, further fingerprints are dropped from persistence,
-/// first-come-first-kept (the session's own memo still serves them for
-/// its lifetime; an LRU mirror would force a full-file rewrite per
-/// eviction for a workload that has already outgrown warm-start anyway).
-/// The bound also caps the flush cost, since every write rewrites the
-/// whole file.
+/// first-come-first-kept (the sessions' own memos still serve them for
+/// their lifetime; a workload past the bound has outgrown warm-start
+/// anyway).
 pub struct MemoCache {
     path: PathBuf,
     capacity: usize,
-    mirror: Mutex<FxHashMap<u64, MemoEntry>>,
-    /// Serializes flushes against each other without holding `mirror`
-    /// during disk I/O, so stats/preload readers and other memo-write
-    /// hooks are never blocked behind a file write. Holds the number of
-    /// entries already persisted: recorders that queued behind a flush
-    /// which already covered their entry skip their own write, so a
-    /// burst of fresh layers costs ~one file rewrite, not one each.
-    flush_lock: Mutex<usize>,
+    index: Mutex<SegmentIndex>,
+    /// Serializes disk writes without holding `index` during I/O, so
+    /// stats/preload readers and other memo-write hooks are never
+    /// blocked behind a file write. Lock order: `file` may acquire
+    /// `index`, never the reverse.
+    file: Mutex<FileState>,
 }
 
 impl MemoCache {
@@ -72,21 +203,23 @@ impl MemoCache {
     }
 
     /// Open (creating the directory if needed) and load whatever previous
-    /// processes persisted. Never fails on a bad cache *file* — that is a
-    /// cold start plus [`CacheLoad::warning`]; only an unusable directory
-    /// is an error.
+    /// processes persisted, compacting the segment if recovery dropped a
+    /// torn tail. Never fails on a bad cache *file* — that is a cold
+    /// start plus [`CacheLoad::warning`]; only an unusable directory is
+    /// an error.
     pub fn open_with_capacity(
         dir: &Path,
         capacity: usize,
     ) -> Result<(MemoCache, CacheLoad)> {
         std::fs::create_dir_all(dir)?;
         let path = dir.join(CACHE_FILE);
-        let (map, load) = match std::fs::read_to_string(&path) {
+        let capacity = capacity.max(1);
+        let (index, load, on_disk) = match std::fs::read(&path) {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                (FxHashMap::default(), CacheLoad::default())
+                open_legacy(dir, &path, capacity)
             }
             Err(e) => (
-                FxHashMap::default(),
+                SegmentIndex::new(),
                 CacheLoad {
                     loaded: 0,
                     warning: Some(format!(
@@ -94,14 +227,25 @@ impl MemoCache {
                         path.display()
                     )),
                 },
+                Disk::Invalid,
             ),
-            Ok(text) => match parse_cache(&text) {
-                Ok(map) => {
-                    let loaded = map.len();
-                    (map, CacheLoad { loaded, warning: None })
+            Ok(bytes) => match scan_segment(&bytes, capacity) {
+                Ok((index, torn)) => {
+                    let loaded = index.len();
+                    if torn == 0 {
+                        (index, CacheLoad { loaded, warning: None }, Disk::Holds(loaded))
+                    } else {
+                        let warning = format!(
+                            "cache file {} has a torn tail ({torn} trailing bytes \
+                             after {loaded} whole records, a crash mid-append); \
+                             compacting",
+                            path.display()
+                        );
+                        (index, CacheLoad { loaded, warning: Some(warning) }, Disk::Rewrite)
+                    }
                 }
                 Err(why) => (
-                    FxHashMap::default(),
+                    SegmentIndex::new(),
                     CacheLoad {
                         loaded: 0,
                         warning: Some(format!(
@@ -109,19 +253,29 @@ impl MemoCache {
                             path.display()
                         )),
                     },
+                    Disk::Invalid,
                 ),
             },
         };
-        let persisted = map.len();
-        Ok((
-            MemoCache {
-                path,
-                capacity: capacity.max(1),
-                mirror: Mutex::new(map),
-                flush_lock: Mutex::new(persisted),
-            },
-            load,
-        ))
+        let cache = MemoCache {
+            path,
+            capacity,
+            file: Mutex::new(FileState { valid: false, records: 0 }),
+            index: Mutex::new(index),
+        };
+        match on_disk {
+            Disk::Holds(records) => {
+                let mut file = cache.file.lock().expect("cache file lock");
+                file.valid = true;
+                file.records = records;
+            }
+            // startup compaction: rewrite the recovered prefix (or the
+            // migrated legacy entries) as a clean segment right away
+            Disk::Rewrite => cache.compact(),
+            // garbage stays untouched until the first append replaces it
+            Disk::Invalid => {}
+        }
+        Ok((cache, load))
     }
 
     /// Maximum entries persisted.
@@ -129,98 +283,321 @@ impl MemoCache {
         self.capacity
     }
 
-    /// The backing file.
+    /// The backing segment file.
     pub fn path(&self) -> &Path {
         &self.path
     }
 
-    /// Entries currently mirrored (== persisted, modulo write failures).
+    /// Entries currently indexed (== persisted, modulo write failures).
     pub fn len(&self) -> usize {
-        self.mirror.lock().expect("cache lock").len()
+        self.index.lock().expect("cache lock").len()
     }
 
-    /// True when the mirror is empty.
+    /// True when the index is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Snapshot of every entry, for preloading a fresh session's memo.
+    /// Snapshot of every entry, for preloading fresh session memos.
     pub fn entries(&self) -> Vec<(u64, MemoEntry)> {
-        self.mirror
-            .lock()
-            .expect("cache lock")
-            .iter()
-            .map(|(fp, e)| (*fp, e.clone()))
-            .collect()
+        self.index.lock().expect("cache lock").decode_entries()
     }
 
-    /// Record one entry and flush the store (the session's memo-write
-    /// hook). Entries are immutable once verified, so a known fingerprint
-    /// is a no-op — repeat hits never touch the disk — and a full mirror
-    /// drops new fingerprints instead of growing. Write failures are
-    /// reported on stderr, not propagated: persistence is an optimization
-    /// and must never fail a verify request.
+    /// Record one entry (the session's memo-write hook): one index push
+    /// plus **one appended record** — never a rewrite of what is already
+    /// on disk. Entries are immutable once verified, so a known
+    /// fingerprint is a no-op — repeat hits never touch the disk — and a
+    /// full index drops new fingerprints instead of growing. Write
+    /// failures are logged, not propagated: persistence is an
+    /// optimization and must never fail a verify request.
     pub fn record(&self, fp: u64, entry: &MemoEntry) {
+        let payload = encode_payload(entry);
         {
-            let mut mirror = self.mirror.lock().expect("cache lock");
-            if mirror.contains_key(&fp) || mirror.len() >= self.capacity {
+            let mut index = self.index.lock().expect("cache lock");
+            if index.len() >= self.capacity || !index.push(fp, &payload) {
                 return;
             }
-            mirror.insert(fp, entry.clone());
         }
-        // flushes serialize on their own lock; snapshotting *inside* it
-        // makes later flushes see supersets, so the last write on disk
-        // always carries every recorded entry. A recorder whose entry a
-        // queued-ahead flush already covered skips its own write.
-        let mut persisted = self.flush_lock.lock().expect("flush lock");
-        let snapshot = self.entries();
-        if snapshot.len() <= *persisted {
+        let mut file = self.file.lock().expect("cache file lock");
+        let (buf, total, fresh) = {
+            let index = self.index.lock().expect("cache lock");
+            if file.valid {
+                // usually just our record; a racing recorder that queued
+                // ahead may have persisted more, which `records` tracks
+                (index.encode_range(file.records), index.len(), false)
+            } else {
+                (index.encode_all(), index.len(), true)
+            }
+        };
+        if !fresh && buf.is_empty() {
             return;
         }
-        let count = snapshot.len();
-        match self.flush(snapshot) {
-            Ok(()) => *persisted = count,
-            Err(e) => crate::log_warn!(
-                "cache flush to {} failed: {e}",
-                self.path.display()
-            ),
+        let wrote = if fresh { self.replace_file(&buf) } else { self.append_file(&buf) };
+        match wrote {
+            Ok(()) => {
+                file.valid = true;
+                file.records = total;
+            }
+            Err(e) => {
+                // the disk may now hold a partial append; force the next
+                // write to lay down a clean segment from scratch
+                file.valid = false;
+                crate::log_warn!("cache append to {} failed: {e}", self.path.display());
+            }
         }
     }
 
-    fn flush(&self, mut entries: Vec<(u64, MemoEntry)>) -> std::io::Result<()> {
-        // stable file ordering: deterministic bytes for identical content
-        entries.sort_by_key(|(fp, _)| *fp);
-        let arr =
-            Json::Arr(entries.iter().map(|(fp, e)| entry_to_json(*fp, e)).collect());
-        let checksum = json_checksum(&arr);
-        let doc = Json::Obj(vec![
-            ("format".into(), Json::Num(CACHE_FORMAT_VERSION as f64)),
-            (
-                "fingerprint_version".into(),
-                Json::Num(FINGERPRINT_VERSION as f64),
-            ),
-            ("checksum".into(), Json::Str(checksum)),
-            ("entries".into(), arr),
-        ]);
-        // per-process temp name: concurrent daemons sharing one cache dir
-        // must not interleave writes into the same temp file (the atomic
-        // rename then keeps whichever finished last, both valid)
+    /// Rewrite the whole segment from the index (startup compaction).
+    fn compact(&self) {
+        let mut file = self.file.lock().expect("cache file lock");
+        let (buf, total) = {
+            let index = self.index.lock().expect("cache lock");
+            (index.encode_all(), index.len())
+        };
+        match self.replace_file(&buf) {
+            Ok(()) => {
+                file.valid = true;
+                file.records = total;
+            }
+            Err(e) => {
+                file.valid = false;
+                crate::log_warn!(
+                    "cache compaction to {} failed: {e}",
+                    self.path.display()
+                );
+            }
+        }
+    }
+
+    /// Atomically replace the segment via a per-process temp file —
+    /// concurrent daemons sharing one cache dir must not interleave
+    /// writes into the same temp file (the rename then keeps whichever
+    /// finished last, both valid).
+    fn replace_file(&self, buf: &[u8]) -> std::io::Result<()> {
         let tmp = self.path.with_extension(format!("tmp.{}", std::process::id()));
-        std::fs::write(&tmp, doc.render_pretty())?;
+        std::fs::write(&tmp, buf)?;
         std::fs::rename(&tmp, &self.path)
+    }
+
+    /// Append record bytes. One `write_all` call, so a crash tears at
+    /// most the final record — exactly what the startup scan recovers.
+    fn append_file(&self, buf: &[u8]) -> std::io::Result<()> {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&self.path)?;
+        f.write_all(buf)
     }
 }
 
-fn parse_cache(text: &str) -> std::result::Result<FxHashMap<u64, MemoEntry>, String> {
-    let doc = Json::parse(text).map_err(|e| format!("corrupted JSON: {e}"))?;
-    let format = doc.u64_at("format").ok_or("missing 'format' version")?;
-    if format != CACHE_FORMAT_VERSION as u64 {
+/// Where `open` left the disk relative to the in-memory index.
+enum Disk {
+    /// A valid segment holding this many records.
+    Holds(usize),
+    /// Index is right, file needs a compaction rewrite.
+    Rewrite,
+    /// File (if any) is garbage; first append replaces it.
+    Invalid,
+}
+
+/// No segment file: migrate a v1 JSON cache if one is present.
+fn open_legacy(dir: &Path, path: &Path, capacity: usize) -> (SegmentIndex, CacheLoad, Disk) {
+    let legacy = dir.join(LEGACY_CACHE_FILE);
+    let text = match std::fs::read_to_string(&legacy) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return (SegmentIndex::new(), CacheLoad::default(), Disk::Invalid);
+        }
+        Err(e) => {
+            return (
+                SegmentIndex::new(),
+                CacheLoad {
+                    loaded: 0,
+                    warning: Some(format!(
+                        "cache file {} is unreadable ({e}); starting cold",
+                        legacy.display()
+                    )),
+                },
+                Disk::Invalid,
+            );
+        }
+        Ok(text) => text,
+    };
+    match parse_legacy(&text) {
+        Ok(entries) => {
+            let mut index = SegmentIndex::new();
+            for (fp, entry) in entries {
+                if index.len() >= capacity {
+                    break;
+                }
+                index.push(fp, &encode_payload(&entry));
+            }
+            let loaded = index.len();
+            crate::log_debug!(
+                "migrating {loaded} entries from v1 cache {} into segment {}",
+                legacy.display(),
+                path.display()
+            );
+            (index, CacheLoad { loaded, warning: None }, Disk::Rewrite)
+        }
+        Err(why) => (
+            SegmentIndex::new(),
+            CacheLoad {
+                loaded: 0,
+                warning: Some(format!(
+                    "ignoring cache file {} ({why}); starting cold",
+                    legacy.display()
+                )),
+            },
+            Disk::Invalid,
+        ),
+    }
+}
+
+fn header_bytes() -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&CACHE_FORMAT_VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&FINGERPRINT_VERSION.to_le_bytes());
+    h
+}
+
+fn record_bytes(fp: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(RECORD_HEADER_LEN + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fp.to_le_bytes());
+    out.extend_from_slice(&record_checksum(fp, payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// FNV-1a over the fingerprint and payload bytes — same constants as the
+/// structural fingerprints themselves.
+fn record_checksum(fp: u64, payload: &[u8]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for b in fp.to_le_bytes().iter().chain(payload) {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One scanned record.
+enum Rec<'a> {
+    /// Complete, checksummed record: fingerprint, payload, next offset.
+    Full(u64, &'a [u8], usize),
+    /// The bytes from here to EOF are not a whole record (torn append).
+    Torn,
+    /// Unambiguous mid-file damage.
+    Corrupt(String),
+}
+
+fn read_record(bytes: &[u8], at: usize) -> Rec<'_> {
+    if bytes.len() - at < RECORD_HEADER_LEN {
+        return Rec::Torn;
+    }
+    let len =
+        u32::from_le_bytes(bytes[at..at + 4].try_into().expect("4 bytes")) as usize;
+    if len > MAX_RECORD_LEN {
+        return Rec::Corrupt(format!("implausible record length {len} at byte {at}"));
+    }
+    let fp = u64::from_le_bytes(bytes[at + 4..at + 12].try_into().expect("8 bytes"));
+    let sum = u64::from_le_bytes(bytes[at + 12..at + 20].try_into().expect("8 bytes"));
+    let start = at + RECORD_HEADER_LEN;
+    if start + len > bytes.len() {
+        return Rec::Torn;
+    }
+    let payload = &bytes[start..start + len];
+    if record_checksum(fp, payload) != sum {
+        // a *complete* record whose checksum fails is bitrot, not a torn
+        // append — torn writes can only truncate the file
+        return Rec::Corrupt(format!("checksum mismatch at record starting byte {at}"));
+    }
+    Rec::Full(fp, payload, start + len)
+}
+
+/// Parse and index a segment image. `Err` ⇒ nothing salvageable (cold
+/// start); `Ok((index, torn))` with `torn > 0` ⇒ the trailing `torn`
+/// bytes were an incomplete append and the checksummed prefix was kept.
+fn scan_segment(
+    bytes: &[u8],
+    capacity: usize,
+) -> std::result::Result<(SegmentIndex, usize), String> {
+    if bytes.len() < HEADER_LEN || &bytes[..8] != MAGIC {
+        return Err("not a scalify cache segment".into());
+    }
+    let format = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    if format != CACHE_FORMAT_VERSION {
         return Err(format!(
             "cache format v{format} (this build reads v{CACHE_FORMAT_VERSION})"
         ));
     }
-    // one shared gate with the diff VerifyState: skew degrades to a cold
-    // start with identical wording everywhere fingerprints are persisted
+    let fpv = u32::from_le_bytes(bytes[12..16].try_into().expect("4 bytes"));
+    // route the scheme check through the shared gate so skew degrades
+    // with identical wording everywhere fingerprints are persisted
+    let gate = Json::Obj(vec![("fingerprint_version".into(), Json::Num(fpv as f64))]);
+    check_fingerprint_version(&gate)?;
+    let mut index = SegmentIndex::new();
+    let mut at = HEADER_LEN;
+    while at < bytes.len() {
+        match read_record(bytes, at) {
+            Rec::Torn => return Ok((index, bytes.len() - at)),
+            Rec::Corrupt(why) => return Err(why),
+            Rec::Full(fp, payload, next) => {
+                // validate decodability up front: a checksummed-but-
+                // unparseable record means the writer and reader disagree,
+                // which is a cold start, not a runtime surprise later
+                decode_payload(payload)
+                    .map_err(|why| format!("record at byte {at}: {why}"))?;
+                if index.len() < capacity {
+                    index.push(fp, payload);
+                }
+                at = next;
+            }
+        }
+    }
+    Ok((index, 0))
+}
+
+/// Entry payload codec: the legacy JSON field contract minus `fp` (the
+/// record header carries it out-of-band).
+fn encode_payload(e: &MemoEntry) -> Vec<u8> {
+    Json::Obj(vec![
+        ("verified".into(), Json::Bool(e.verified)),
+        ("egraph_nodes".into(), Json::Num(e.egraph_nodes as f64)),
+        ("egraph_classes".into(), Json::Num(e.egraph_classes as f64)),
+        (
+            "out_rels".into(),
+            Json::Arr(e.out_rels.iter().map(rel_summary_to_json).collect()),
+        ),
+    ])
+    .render()
+    .into_bytes()
+}
+
+fn decode_payload(bytes: &[u8]) -> std::result::Result<MemoEntry, String> {
+    let text = std::str::from_utf8(bytes).map_err(|_| "payload is not UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("payload: {e}"))?;
+    let verified = doc.bool_at("verified").ok_or("payload is missing 'verified'")?;
+    let egraph_nodes =
+        doc.u64_at("egraph_nodes").ok_or("payload is missing 'egraph_nodes'")? as usize;
+    let egraph_classes = doc.u64_at("egraph_classes").unwrap_or(0) as usize;
+    let rels = doc
+        .get("out_rels")
+        .and_then(Json::as_arr)
+        .ok_or("payload is missing 'out_rels'")?;
+    let out_rels = rels
+        .iter()
+        .map(rel_summary_from_json)
+        .collect::<std::result::Result<Vec<_>, String>>()?;
+    Ok(MemoEntry { verified, out_rels, egraph_nodes, egraph_classes })
+}
+
+/// Parse the v1 whole-file JSON document (read-only migration path).
+fn parse_legacy(text: &str) -> std::result::Result<Vec<(u64, MemoEntry)>, String> {
+    let doc = Json::parse(text).map_err(|e| format!("corrupted JSON: {e}"))?;
+    let format = doc.u64_at("format").ok_or("missing 'format' version")?;
+    if format != 1 {
+        return Err(format!("cache format v{format} (the legacy reader takes v1)"));
+    }
     check_fingerprint_version(&doc)?;
     let items = doc
         .get("entries")
@@ -233,36 +610,20 @@ fn parse_cache(text: &str) -> std::result::Result<FxHashMap<u64, MemoEntry>, Str
             "checksum mismatch (file says {expected}, contents hash to {actual})"
         ));
     }
-    let mut map = FxHashMap::default();
+    let mut entries = Vec::with_capacity(items.len());
     for item in items {
-        let (fp, entry) = entry_from_json(item)?;
-        map.insert(fp, entry);
+        entries.push(legacy_entry_from_json(item)?);
     }
-    Ok(map)
+    Ok(entries)
 }
 
-fn entry_to_json(fp: u64, e: &MemoEntry) -> Json {
-    Json::Obj(vec![
-        ("fp".into(), Json::Str(format!("{fp:016x}"))),
-        ("verified".into(), Json::Bool(e.verified)),
-        ("egraph_nodes".into(), Json::Num(e.egraph_nodes as f64)),
-        ("egraph_classes".into(), Json::Num(e.egraph_classes as f64)),
-        (
-            "out_rels".into(),
-            Json::Arr(e.out_rels.iter().map(rel_summary_to_json).collect()),
-        ),
-    ])
-}
-
-fn entry_from_json(doc: &Json) -> std::result::Result<(u64, MemoEntry), String> {
+fn legacy_entry_from_json(doc: &Json) -> std::result::Result<(u64, MemoEntry), String> {
     let fp_hex = doc.str_at("fp").ok_or("entry is missing 'fp'")?;
     let fp = u64::from_str_radix(fp_hex, 16)
         .map_err(|_| format!("bad fingerprint '{fp_hex}'"))?;
     let verified = doc.bool_at("verified").ok_or("entry is missing 'verified'")?;
     let egraph_nodes =
         doc.u64_at("egraph_nodes").ok_or("entry is missing 'egraph_nodes'")? as usize;
-    // absent in caches written before the field existed: stats-only, so
-    // default to 0 instead of invalidating the warm start
     let egraph_classes = doc.u64_at("egraph_classes").unwrap_or(0) as usize;
     let rels = doc
         .get("out_rels")
@@ -304,6 +665,17 @@ mod tests {
         }
     }
 
+    /// A distinguishable second entry, so recovery tests can tell records
+    /// apart.
+    fn other_entry(nodes: usize) -> MemoEntry {
+        MemoEntry {
+            verified: true,
+            out_rels: vec![RelSummary::Duplicate],
+            egraph_nodes: nodes,
+            egraph_classes: 1,
+        }
+    }
+
     #[test]
     fn record_then_reopen_round_trips() {
         let dir = tmpdir("roundtrip");
@@ -312,9 +684,9 @@ mod tests {
             assert_eq!(load.loaded, 0);
             assert!(load.warning.is_none());
             cache.record(0xdead_beef_0000_0042, &sample_entry());
-            cache.record(7, &sample_entry());
+            cache.record(7, &other_entry(11));
             // duplicate fingerprints are no-ops
-            cache.record(7, &sample_entry());
+            cache.record(7, &other_entry(99));
             assert_eq!(cache.len(), 2);
         }
         let (cache, load) = MemoCache::open(&dir).unwrap();
@@ -324,8 +696,26 @@ mod tests {
         let (_, e) = entries
             .iter()
             .find(|(fp, _)| *fp == 0xdead_beef_0000_0042)
-            .expect("high-bit fingerprint survives the hex encoding");
+            .expect("high-bit fingerprint survives the record encoding");
         assert_eq!(e, &sample_entry());
+        let (_, e) = entries.iter().find(|(fp, _)| *fp == 7).unwrap();
+        assert_eq!(e.egraph_nodes, 11, "first writer wins on duplicates");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn appends_are_constant_size_not_full_rewrites() {
+        let dir = tmpdir("append");
+        let (cache, _) = MemoCache::open(&dir).unwrap();
+        let size = |entry: &MemoEntry| RECORD_HEADER_LEN + encode_payload(entry).len();
+        cache.record(1, &sample_entry());
+        let after_one = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().len();
+        assert_eq!(after_one as usize, HEADER_LEN + size(&sample_entry()));
+        cache.record(2, &other_entry(5));
+        let after_two = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().len();
+        // the second write appended exactly one record — the store never
+        // rewrites what is already on disk
+        assert_eq!((after_two - after_one) as usize, size(&other_entry(5)));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -333,15 +723,15 @@ mod tests {
     fn corrupted_file_degrades_to_cold_start_with_warning() {
         let dir = tmpdir("corrupt");
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join(CACHE_FILE), "{ this is not json").unwrap();
+        std::fs::write(dir.join(CACHE_FILE), "{ this is not a segment").unwrap();
         let (cache, load) = MemoCache::open(&dir).unwrap();
         assert_eq!(load.loaded, 0);
         let warning = load.warning.expect("corruption must warn");
         assert!(warning.contains("starting cold"), "{warning}");
-        // the cache still works: a write replaces the corrupt file
+        // the cache still works: the first write replaces the corrupt file
         cache.record(1, &sample_entry());
         let (_, load) = MemoCache::open(&dir).unwrap();
-        assert_eq!(load.loaded, 1);
+        assert_eq!(load.loaded, 1, "{:?}", load.warning);
         assert!(load.warning.is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -350,14 +740,11 @@ mod tests {
     fn version_skew_degrades_to_cold_start() {
         let dir = tmpdir("skew");
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join(CACHE_FILE),
-            format!(
-                "{{\"format\":{CACHE_FORMAT_VERSION},\"fingerprint_version\":9999,\
-                 \"entries\":[]}}"
-            ),
-        )
-        .unwrap();
+        // a segment whose header says the fingerprints were computed
+        // under a different scheme
+        let mut header = header_bytes();
+        header[12..16].copy_from_slice(&9999u32.to_le_bytes());
+        std::fs::write(dir.join(CACHE_FILE), header).unwrap();
         let (_, load) = MemoCache::open(&dir).unwrap();
         assert_eq!(load.loaded, 0);
         assert!(load.warning.unwrap().contains("scheme v9999"));
@@ -365,46 +752,125 @@ mod tests {
     }
 
     #[test]
-    fn bitrot_in_a_parseable_file_fails_the_checksum_and_starts_cold() {
+    fn format_skew_degrades_to_cold_start() {
+        let dir = tmpdir("format-skew");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut header = header_bytes();
+        header[8..12].copy_from_slice(&77u32.to_le_bytes());
+        std::fs::write(dir.join(CACHE_FILE), header).unwrap();
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0);
+        assert!(load.warning.unwrap().contains("cache format v77"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bitrot_inside_a_record_fails_the_checksum_and_starts_cold() {
         let dir = tmpdir("bitrot");
         {
             let (cache, _) = MemoCache::open(&dir).unwrap();
             cache.record(0x1111_2222_3333_4444, &sample_entry());
+            cache.record(5, &other_entry(9));
         }
-        // flip one hex digit of the stored fingerprint: still valid JSON,
-        // still valid hex — but now it names a different layer structure
+        // flip one payload byte of the FIRST record: lengths and framing
+        // stay intact, only the checksum can catch it
         let path = dir.join(CACHE_FILE);
-        let text = std::fs::read_to_string(&path).unwrap();
-        let tampered = text.replace("1111222233334444", "1111222233334445");
-        assert_ne!(text, tampered, "fixture must actually change");
-        std::fs::write(&path, tampered).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[HEADER_LEN + RECORD_HEADER_LEN + 3] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
 
         let (_, load) = MemoCache::open(&dir).unwrap();
-        assert_eq!(load.loaded, 0, "tampered entries must not be replayed");
+        assert_eq!(load.loaded, 0, "tampered segments must not be replayed");
         assert!(load.warning.unwrap().contains("checksum mismatch"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn duplicate_records_never_rewrite_the_file() {
+    fn torn_append_recovers_every_whole_record_and_compacts() {
+        let dir = tmpdir("torture");
+        {
+            let (cache, _) = MemoCache::open(&dir).unwrap();
+            cache.record(1, &sample_entry());
+            cache.record(2, &other_entry(7));
+            cache.record(3, &other_entry(8));
+        }
+        let path = dir.join(CACHE_FILE);
+        let full = std::fs::read(&path).unwrap();
+        let two_records = HEADER_LEN
+            + 2 * RECORD_HEADER_LEN
+            + encode_payload(&sample_entry()).len()
+            + encode_payload(&other_entry(7)).len();
+        // kill-mid-append torture: cut the file at EVERY byte inside the
+        // third record; the two whole records must survive each time
+        for cut in two_records + 1..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (cache, load) = MemoCache::open(&dir).unwrap();
+            assert_eq!(load.loaded, 2, "cut at byte {cut}");
+            let warning = load.warning.expect("a torn tail must warn");
+            assert!(warning.contains("torn tail"), "cut {cut}: {warning}");
+            let fps: Vec<u64> = cache.entries().iter().map(|(fp, _)| *fp).collect();
+            assert_eq!(fps, vec![1, 2], "cut at byte {cut}");
+            // startup compaction rewrote a clean two-record segment…
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len() as usize,
+                two_records,
+                "cut at byte {cut}"
+            );
+        }
+        // …so the next open is warning-free
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 2);
+        assert!(load.warning.is_none());
+        // and a truncation into the *header* is a plain cold start
+        std::fs::write(&path, &full[..HEADER_LEN - 3]).unwrap();
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0);
+        assert!(load.warning.unwrap().contains("starting cold"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recording_after_a_torn_recovery_appends_cleanly() {
+        let dir = tmpdir("torn-then-append");
+        {
+            let (cache, _) = MemoCache::open(&dir).unwrap();
+            cache.record(1, &sample_entry());
+            cache.record(2, &other_entry(7));
+        }
+        let path = dir.join(CACHE_FILE);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let (cache, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 1);
+        cache.record(9, &other_entry(4));
+        let (cache, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 2, "{:?}", load.warning);
+        assert!(load.warning.is_none());
+        let fps: Vec<u64> = cache.entries().iter().map(|(fp, _)| *fp).collect();
+        assert_eq!(fps, vec![1, 9]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_records_never_touch_the_file() {
         let dir = tmpdir("coalesce");
         let (cache, _) = MemoCache::open(&dir).unwrap();
         cache.record(1, &sample_entry());
-        let first = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().modified().ok();
-        // same fingerprint again: no mirror change, no rewrite
+        let first = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().len();
+        // same fingerprint again: no index change, no write
         cache.record(1, &sample_entry());
-        let second = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().modified().ok();
+        let second = std::fs::metadata(dir.join(CACHE_FILE)).unwrap().len();
         assert_eq!(first, second);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn mirror_is_bounded_by_capacity() {
+    fn index_is_bounded_by_capacity() {
         let dir = tmpdir("bounded");
         let (cache, _) = MemoCache::open_with_capacity(&dir, 2).unwrap();
         cache.record(1, &sample_entry());
         cache.record(2, &sample_entry());
-        cache.record(3, &sample_entry()); // dropped: mirror is full
+        cache.record(3, &sample_entry()); // dropped: index is full
         assert_eq!(cache.len(), 2);
         let (reopened, load) = MemoCache::open_with_capacity(&dir, 2).unwrap();
         assert_eq!(load.loaded, 2);
@@ -420,5 +886,70 @@ mod tests {
         cache.record(3, &sample_entry());
         assert!(dir.join(CACHE_FILE).exists());
         let _ = std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap());
+    }
+
+    /// Build a v1 whole-file JSON cache the way the old store wrote it.
+    fn legacy_v1_doc(entries: &[(u64, MemoEntry)]) -> String {
+        let arr = Json::Arr(
+            entries
+                .iter()
+                .map(|(fp, e)| {
+                    Json::Obj(vec![
+                        ("fp".into(), Json::Str(format!("{fp:016x}"))),
+                        ("verified".into(), Json::Bool(e.verified)),
+                        ("egraph_nodes".into(), Json::Num(e.egraph_nodes as f64)),
+                        ("egraph_classes".into(), Json::Num(e.egraph_classes as f64)),
+                        (
+                            "out_rels".into(),
+                            Json::Arr(e.out_rels.iter().map(rel_summary_to_json).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let checksum = json_checksum(&arr);
+        Json::Obj(vec![
+            ("format".into(), Json::Num(1.0)),
+            ("fingerprint_version".into(), Json::Num(FINGERPRINT_VERSION as f64)),
+            ("checksum".into(), Json::Str(checksum)),
+            ("entries".into(), arr),
+        ])
+        .render_pretty()
+    }
+
+    #[test]
+    fn legacy_v1_json_cache_migrates_into_the_segment() {
+        let dir = tmpdir("migrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let doc =
+            legacy_v1_doc(&[(0xdead_beef_0000_0042, sample_entry()), (7, other_entry(3))]);
+        std::fs::write(dir.join(LEGACY_CACHE_FILE), doc).unwrap();
+        let (cache, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 2, "{:?}", load.warning);
+        assert!(load.warning.is_none());
+        assert!(dir.join(CACHE_FILE).exists(), "migration compacts at open");
+        let entries = cache.entries();
+        let (_, e) =
+            entries.iter().find(|(fp, _)| *fp == 0xdead_beef_0000_0042).unwrap();
+        assert_eq!(e, &sample_entry());
+        // the segment, not the legacy file, serves the next open
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_version_skew_degrades_to_cold_start() {
+        let dir = tmpdir("legacy-skew");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(LEGACY_CACHE_FILE),
+            "{\"format\":1,\"fingerprint_version\":9999,\"entries\":[]}",
+        )
+        .unwrap();
+        let (_, load) = MemoCache::open(&dir).unwrap();
+        assert_eq!(load.loaded, 0);
+        assert!(load.warning.unwrap().contains("scheme v9999"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -2,9 +2,14 @@
 //!
 //! One TCP connection, one request line out, one response line back —
 //! the `scalify client` subcommand and the integration tests both drive
-//! the daemon through this type.
+//! the daemon through this type. After a [`Client::hello`] negotiation
+//! to protocol v2, [`Client::verify_opts`] can attach ids, priorities
+//! and deadlines and consume streamed per-layer events; the normative
+//! wire reference lives in `docs/PROTOCOL.md`.
 
-use super::protocol::{Request, Response, StatsSnapshot, VerifySource};
+use super::protocol::{
+    LayerEvent, Request, Response, StatsSnapshot, VerifyOpts, VerifySource,
+};
 use crate::error::{Result, ResultExt, ScalifyError};
 use crate::report::json::Json;
 use crate::verifier::VerifyReport;
@@ -76,7 +81,7 @@ impl Client {
         state: Json,
     ) -> Result<(VerifyReport, f64, StatsSnapshot, Option<String>)> {
         match self.request(&Request::VerifyDiff { source, state })? {
-            Response::VerifyDone { report, latency_secs, stats, warning } => {
+            Response::VerifyDone { report, latency_secs, stats, warning, .. } => {
                 Ok((report, latency_secs, stats, warning))
             }
             Response::Error { message } => Err(ScalifyError::runtime(message)),
@@ -106,6 +111,68 @@ impl Client {
             other => Err(ScalifyError::runtime(format!(
                 "unexpected response to metrics: {other:?}"
             ))),
+        }
+    }
+
+    /// Negotiate the connection's protocol version; returns the version
+    /// the daemon settled on (`min(ours, daemon's)`, at least 1). Until
+    /// this is called the connection speaks v1 and the daemon ignores
+    /// every v2 request option.
+    pub fn hello(&mut self, protocol: u32) -> Result<u32> {
+        match self.request(&Request::Hello { protocol })? {
+            Response::Hello { protocol, .. } => Ok(protocol),
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to hello: {other:?}"
+            ))),
+        }
+    }
+
+    /// Cancel the in-flight verify carrying `id` (daemon-global — the
+    /// request may have been submitted on another connection). Returns
+    /// whether anything was in flight under that id.
+    pub fn cancel(&mut self, id: &str) -> Result<bool> {
+        match self.request(&Request::Cancel { id: id.into() })? {
+            Response::CancelAck { cancelled, .. } => Ok(cancelled),
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to cancel: {other:?}"
+            ))),
+        }
+    }
+
+    /// Send a verify/verify_diff request with v2 per-request options
+    /// attached, invoke `on_event` for every streamed per-layer event
+    /// line, and return the terminal response ([`Response::VerifyDone`],
+    /// [`Response::Cancelled`] or [`Response::Error`]). Call
+    /// [`Client::hello`] first — on a v1 connection the daemon ignores
+    /// the options and streams nothing.
+    pub fn verify_opts(
+        &mut self,
+        request: &Request,
+        opts: &VerifyOpts,
+        mut on_event: impl FnMut(LayerEvent),
+    ) -> Result<Response> {
+        let mut doc = request.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            opts.extend_fields(fields);
+        }
+        let mut out = doc.render();
+        out.push('\n');
+        self.writer.write_all(out.as_bytes()).ctx("sending request")?;
+        self.writer.flush().ctx("sending request")?;
+        loop {
+            let mut buf = String::new();
+            let n = self.reader.read_line(&mut buf).ctx("reading response")?;
+            if n == 0 {
+                return Err(ScalifyError::runtime(
+                    "server closed the connection before responding",
+                ));
+            }
+            match Response::from_line(buf.trim())? {
+                Response::Event(event) => on_event(event),
+                terminal => return Ok(terminal),
+            }
         }
     }
 

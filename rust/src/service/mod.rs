@@ -4,19 +4,27 @@
 //! [`crate::verifier::Session`] amortizes compiled templates and the
 //! layer memo across calls, but dies with its process, so a fleet of CI
 //! jobs or training controllers each pay the cold start. This module
-//! turns the session into a shared long-running daemon:
+//! turns the session into a shared long-running daemon — a sharded
+//! verification fleet behind one socket:
 //!
 //! * [`protocol`] — the newline-delimited JSON wire format (`verify`,
-//!   `stats`, `shutdown`), reusing the crate's hand-rolled
-//!   [`crate::report::json`] machinery,
+//!   `stats`, `shutdown`; v2 adds `hello` negotiation, request ids,
+//!   priorities, deadlines, streamed per-layer events and `cancel`),
+//!   reusing the crate's hand-rolled [`crate::report::json`] machinery
+//!   — the normative reference is `docs/PROTOCOL.md`,
 //! * [`scheduler`] — a bounded admission queue with blocking
-//!   backpressure layered on the reusable [`crate::util::WorkerPool`],
+//!   backpressure, priority ordering and queue deadlines, layered on
+//!   the reusable [`crate::util::WorkerPool`],
 //! * [`cache`] — the persistent on-disk layer-memo store
-//!   (`--cache-dir`): stable-fingerprint-keyed entries loaded at startup
-//!   and flushed on write, so warm state survives restarts and is shared
-//!   across processes,
-//! * [`server`] — the accept loop and connection handling around ONE
-//!   shared session, and
+//!   (`--cache-dir`): a single append-only segment file plus an
+//!   in-memory fingerprint index, loaded at startup and appended on
+//!   write, so warm state survives restarts and is shared across
+//!   processes,
+//! * [`shard`] — the [`shard::ShardPool`]: N sessions behind one
+//!   daemon, routed by model-family key, sharing one compiled rule
+//!   set,
+//! * [`server`] — the accept loop, protocol negotiation and connection
+//!   handling around the shard pool, and
 //! * [`client`] — the blocking client the `scalify client` subcommand
 //!   and the tests drive the daemon with.
 
@@ -25,9 +33,14 @@ pub mod client;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use cache::{CacheLoad, MemoCache, CACHE_FILE, CACHE_FORMAT_VERSION};
 pub use client::Client;
-pub use protocol::{Request, Response, StatsSnapshot, VerifySource, PROTOCOL_VERSION};
+pub use protocol::{
+    LayerEvent, Request, Response, ShardStat, StatsSnapshot, VerifyOpts, VerifySource,
+    PROTOCOL_V2, PROTOCOL_VERSION,
+};
 pub use scheduler::Scheduler;
 pub use server::{ServeConfig, Server};
+pub use shard::{Shard, ShardPool};

@@ -1,8 +1,9 @@
 //! The newline-delimited JSON wire protocol of `scalify serve`.
 //!
-//! One request per line, one response per line, both single JSON
-//! documents rendered compactly (no embedded newlines). Three request
-//! kinds:
+//! One request per line, one response per line (plus, on v2 streaming
+//! connections, zero or more event lines before the terminal response),
+//! all single JSON documents rendered compactly (no embedded newlines).
+//! The baseline (v1) request kinds:
 //!
 //! ```text
 //! {"cmd":"verify","model":"llama-tiny","par":"tp4","layers":2}
@@ -19,14 +20,35 @@
 //! can watch memo hits grow without a second round trip. Every error —
 //! malformed request, unknown model, failed parse — is `{"ok":false,
 //! "error":...}`; the connection stays usable afterwards.
+//!
+//! **Protocol v2** is negotiated per connection with a `hello` exchange
+//! (`{"cmd":"hello","protocol":2}` → `{"ok":true,"kind":"hello",
+//! "protocol":2,...}`); a connection that never says hello speaks v1 and
+//! gets byte-identical v1 responses. v2 adds per-request options on
+//! `verify`/`verify_diff` ([`VerifyOpts`]: `id`, `priority`,
+//! `deadline_secs`, `stream`), per-layer progress events
+//! ([`LayerEvent`], streamed before the terminal response when
+//! `"stream":true`), cancellation (`{"cmd":"cancel","id":...}` and
+//! superseded-request abort — reusing an `id` cancels the in-flight
+//! request carrying it), and per-shard detail in [`StatsSnapshot`].
+//!
+//! The normative wire reference — every field of every request and
+//! response, negotiation, and the error/exit-code contract — lives in
+//! `docs/PROTOCOL.md` at the repository root.
 
 use crate::error::{Result, ScalifyError};
 use crate::report::json::Json;
 use crate::verifier::VerifyReport;
 
-/// Wire protocol version, included in stats responses so mixed-version
-/// fleets can detect skew.
+/// Baseline wire protocol version, included in stats responses so
+/// mixed-version fleets can detect skew. Connections speak v1 until
+/// they negotiate higher with a `hello` request.
 pub const PROTOCOL_VERSION: u32 = 1;
+
+/// The streaming protocol revision (progress events, priorities,
+/// deadlines, cancellation, per-shard stats). The highest version this
+/// build can negotiate.
+pub const PROTOCOL_V2: u32 = 2;
 
 /// What a `verify` request asks the daemon to check.
 #[derive(Clone, Debug, PartialEq)]
@@ -85,6 +107,20 @@ pub enum Request {
     Metrics,
     /// Stop accepting connections and exit.
     Shutdown,
+    /// Negotiate the connection's protocol version (v2+). The daemon
+    /// answers with its own version; the connection then speaks
+    /// `min(client, server)`.
+    Hello {
+        /// Highest protocol version the client speaks.
+        protocol: u32,
+    },
+    /// Cancel the in-flight verify carrying this request id (v2). The
+    /// id is daemon-global, so a cancel may arrive on a different
+    /// connection than the request it targets.
+    Cancel {
+        /// The `id` the verify request was submitted with.
+        id: String,
+    },
 }
 
 impl Request {
@@ -109,6 +145,14 @@ impl Request {
             Request::Shutdown => {
                 Json::Obj(vec![("cmd".into(), Json::Str("shutdown".into()))])
             }
+            Request::Hello { protocol } => Json::Obj(vec![
+                ("cmd".into(), Json::Str("hello".into())),
+                ("protocol".into(), Json::Num(*protocol as f64)),
+            ]),
+            Request::Cancel { id } => Json::Obj(vec![
+                ("cmd".into(), Json::Str("cancel".into())),
+                ("id".into(), Json::Str(id.clone())),
+            ]),
         }
     }
 
@@ -138,9 +182,24 @@ impl Request {
                     .clone();
                 Ok(Request::VerifyDiff { source: decode_source(doc)?, state })
             }
+            "hello" => {
+                let protocol = doc.u64_at("protocol").ok_or_else(|| {
+                    ScalifyError::parse("hello request is missing integer 'protocol'")
+                })?;
+                if protocol == 0 || protocol > u32::MAX as u64 {
+                    return Err(ScalifyError::parse("'protocol' must be in 1..=u32::MAX"));
+                }
+                Ok(Request::Hello { protocol: protocol as u32 })
+            }
+            "cancel" => {
+                let id = doc.str_at("id").ok_or_else(|| {
+                    ScalifyError::parse("cancel request is missing string 'id'")
+                })?;
+                Ok(Request::Cancel { id: id.to_string() })
+            }
             other => Err(ScalifyError::parse(format!(
                 "unknown request cmd '{other}' (expected verify, verify_diff, stats, \
-                 metrics or shutdown)"
+                 metrics, shutdown, hello or cancel)"
             ))),
         }
     }
@@ -230,10 +289,157 @@ fn decode_source(doc: &Json) -> Result<VerifySource> {
     ))
 }
 
+/// Per-request options a v2 client may attach to `verify`/`verify_diff`.
+///
+/// They ride as extra top-level fields on the request document —
+/// [`Request::from_json`] ignores unknown fields, which is exactly why a
+/// v1 daemon silently ignores them instead of erroring. The v2 daemon
+/// parses them separately with [`VerifyOpts::from_json`]; on a v1
+/// connection they are not parsed at all.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VerifyOpts {
+    /// Client-chosen request id: names the request for `cancel` and for
+    /// event correlation. Submitting a new request with an id already
+    /// in flight cancels the older request (superseded-request abort).
+    pub id: Option<String>,
+    /// Scheduler priority; higher runs first when the queue is
+    /// contended. Default 0 (FIFO among equals).
+    pub priority: i64,
+    /// Optional deadline: the request is abandoned (typed error) if it
+    /// is still queued or verifying this many seconds after arrival.
+    pub deadline_secs: Option<f64>,
+    /// Stream per-layer [`LayerEvent`] lines before the terminal
+    /// response.
+    pub stream: bool,
+}
+
+impl VerifyOpts {
+    /// Parse the v2 options off a verify/verify_diff document.
+    pub fn from_json(doc: &Json) -> Result<VerifyOpts> {
+        let priority = match doc.get("priority") {
+            None | Some(Json::Null) => 0,
+            Some(v) => v
+                .as_f64()
+                .filter(|p| p.fract() == 0.0 && p.abs() <= i64::MAX as f64)
+                .ok_or_else(|| ScalifyError::parse("'priority' must be an integer"))?
+                as i64,
+        };
+        let deadline_secs = match doc.get("deadline_secs") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let secs = v.as_f64().filter(|s| *s > 0.0).ok_or_else(|| {
+                    ScalifyError::parse("'deadline_secs' must be a positive number")
+                })?;
+                Some(secs)
+            }
+        };
+        Ok(VerifyOpts {
+            id: doc.str_at("id").map(str::to_owned),
+            priority,
+            deadline_secs,
+            stream: doc.bool_at("stream").unwrap_or(false),
+        })
+    }
+
+    /// Append the non-default options onto a request's field list (the
+    /// encoding side of [`VerifyOpts::from_json`]).
+    pub fn extend_fields(&self, fields: &mut Vec<(String, Json)>) {
+        if let Some(id) = &self.id {
+            fields.push(("id".into(), Json::Str(id.clone())));
+        }
+        if self.priority != 0 {
+            fields.push(("priority".into(), Json::Num(self.priority as f64)));
+        }
+        if let Some(d) = self.deadline_secs {
+            fields.push(("deadline_secs".into(), Json::Num(d)));
+        }
+        if self.stream {
+            fields.push(("stream".into(), Json::Bool(true)));
+        }
+    }
+}
+
+/// One per-layer progress event, streamed on v2 connections that asked
+/// for `"stream":true` — one line per completed layer, before the
+/// terminal verify response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerEvent {
+    /// The request id, when the request carried one.
+    pub id: Option<String>,
+    /// Layer tag.
+    pub layer: u32,
+    /// Zero-based position in assembly order.
+    pub index: u64,
+    /// Total layers in the verify.
+    pub total: u64,
+    /// Whether this layer verified.
+    pub verified: bool,
+}
+
+/// Per-shard counters (the v2 extension of [`StatsSnapshot`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStat {
+    /// Shard index (0-based).
+    pub shard: u64,
+    /// Requests routed to this shard.
+    pub jobs: u64,
+    /// `Session::verify` calls on this shard.
+    pub runs: u64,
+    /// Distinct memo fingerprints held by this shard.
+    pub memo_entries: u64,
+    /// Layer verifications served from this shard's memo.
+    pub memo_hits: u64,
+    /// Layer verifications computed by this shard.
+    pub memo_misses: u64,
+    /// Median request latency on this shard (0 when idle).
+    pub latency_p50_secs: f64,
+    /// 95th-percentile request latency on this shard.
+    pub latency_p95_secs: f64,
+}
+
+impl ShardStat {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("shard".into(), Json::Num(self.shard as f64)),
+            ("jobs".into(), Json::Num(self.jobs as f64)),
+            ("runs".into(), Json::Num(self.runs as f64)),
+            ("memo_entries".into(), Json::Num(self.memo_entries as f64)),
+            ("memo_hits".into(), Json::Num(self.memo_hits as f64)),
+            ("memo_misses".into(), Json::Num(self.memo_misses as f64)),
+            ("latency_p50_secs".into(), Json::Num(self.latency_p50_secs)),
+            ("latency_p95_secs".into(), Json::Num(self.latency_p95_secs)),
+        ])
+    }
+
+    /// Decode from [`ShardStat::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<ShardStat> {
+        let need = |key: &str| {
+            doc.u64_at(key).ok_or_else(|| {
+                ScalifyError::parse(format!("shard stat is missing counter '{key}'"))
+            })
+        };
+        Ok(ShardStat {
+            shard: need("shard")?,
+            jobs: need("jobs")?,
+            runs: need("runs")?,
+            memo_entries: need("memo_entries")?,
+            memo_hits: need("memo_hits")?,
+            memo_misses: need("memo_misses")?,
+            latency_p50_secs: doc.f64_at("latency_p50_secs").unwrap_or(0.0),
+            latency_p95_secs: doc.f64_at("latency_p95_secs").unwrap_or(0.0),
+        })
+    }
+}
+
 /// Point-in-time service counters (the `stats` response payload, also
 /// embedded in every verify response).
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StatsSnapshot {
+    /// Protocol version this snapshot is encoded for. 1 (the default)
+    /// produces exactly the v1 document; 2+ appends the `shards` array.
+    /// Set per connection from the negotiated version.
+    pub protocol: u32,
     /// Verify jobs completed by the daemon (successful reports).
     pub jobs: u64,
     /// `Session::verify` calls (includes jobs that errored mid-verify).
@@ -274,13 +480,43 @@ pub struct StatsSnapshot {
     pub latency_p95_secs: f64,
     /// Worst verify latency.
     pub latency_max_secs: f64,
+    /// Per-shard detail (v2 only; empty and unencoded on v1).
+    pub shards: Vec<ShardStat>,
+}
+
+impl Default for StatsSnapshot {
+    fn default() -> StatsSnapshot {
+        StatsSnapshot {
+            protocol: PROTOCOL_VERSION,
+            jobs: 0,
+            runs: 0,
+            memo_entries: 0,
+            memo_hits: 0,
+            memo_misses: 0,
+            memo_evictions: 0,
+            templates: 0,
+            threads: 0,
+            queue_capacity: 0,
+            scheduler_workers: 0,
+            egraph_nodes_total: 0,
+            ematch_tried_total: 0,
+            rule_applications_total: 0,
+            cache_entries_loaded: 0,
+            cache_dir: None,
+            uptime_secs: 0.0,
+            latency_p50_secs: 0.0,
+            latency_p95_secs: 0.0,
+            latency_max_secs: 0.0,
+            shards: Vec::new(),
+        }
+    }
 }
 
 impl StatsSnapshot {
     /// JSON encoding.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
-            ("protocol".into(), Json::Num(PROTOCOL_VERSION as f64)),
+            ("protocol".into(), Json::Num(self.protocol as f64)),
             ("jobs".into(), Json::Num(self.jobs as f64)),
             ("runs".into(), Json::Num(self.runs as f64)),
             ("memo_entries".into(), Json::Num(self.memo_entries as f64)),
@@ -309,6 +545,13 @@ impl StatsSnapshot {
         if let Some(dir) = &self.cache_dir {
             fields.push(("cache_dir".into(), Json::Str(dir.clone())));
         }
+        // v1 bytes stop here; the shard array is a v2-only appendix
+        if self.protocol >= PROTOCOL_V2 {
+            fields.push((
+                "shards".into(),
+                Json::Arr(self.shards.iter().map(ShardStat::to_json).collect()),
+            ));
+        }
         Json::Obj(fields)
     }
 
@@ -320,7 +563,17 @@ impl StatsSnapshot {
                 ScalifyError::parse(format!("stats is missing counter '{key}'"))
             })
         };
+        let shards = match doc.get("shards") {
+            Some(Json::Arr(items)) => {
+                items.iter().map(ShardStat::from_json).collect::<Result<Vec<_>>>()?
+            }
+            _ => Vec::new(),
+        };
         Ok(StatsSnapshot {
+            protocol: doc
+                .u64_at("protocol")
+                .filter(|p| *p <= u32::MAX as u64)
+                .unwrap_or(PROTOCOL_VERSION as u64) as u32,
             jobs: need("jobs")?,
             runs: need("runs")?,
             memo_entries: need("memo_entries")?,
@@ -341,6 +594,7 @@ impl StatsSnapshot {
             latency_p50_secs: doc.f64_at("latency_p50_secs").unwrap_or(0.0),
             latency_p95_secs: doc.f64_at("latency_p95_secs").unwrap_or(0.0),
             latency_max_secs: doc.f64_at("latency_max_secs").unwrap_or(0.0),
+            shards,
         })
     }
 }
@@ -360,6 +614,9 @@ pub enum Response {
         /// Non-fatal degradation notice (a `verify_diff` whose state was
         /// unusable ran cold; absent on clean runs).
         warning: Option<String>,
+        /// Echo of the request's v2 `id` (absent on v1 or id-less
+        /// requests, keeping v1 responses byte-identical).
+        id: Option<String>,
     },
     /// Stats request served.
     Stats(StatsSnapshot),
@@ -371,6 +628,36 @@ pub enum Response {
     },
     /// Shutdown acknowledged; the daemon exits after this line.
     ShuttingDown,
+    /// Version negotiation answered (v2): the version the connection
+    /// will speak from now on.
+    Hello {
+        /// `min(client, server)` — the negotiated version.
+        protocol: u32,
+        /// Server identification (`scalify <crate version>`).
+        server: String,
+    },
+    /// Cancel request acknowledged (v2).
+    CancelAck {
+        /// The id the cancel named.
+        id: String,
+        /// Whether an in-flight request with that id was found and
+        /// signalled (false: it had already finished, or never existed).
+        cancelled: bool,
+    },
+    /// One per-layer progress event (v2 streaming verify only; zero or
+    /// more precede the terminal verify response on the same line
+    /// stream).
+    Event(LayerEvent),
+    /// A verify aborted by cancellation, supersession or deadline (v2).
+    /// Encoded `ok:false` with `"cancelled":true`, so a v1 decoder sees
+    /// a plain error.
+    Cancelled {
+        /// The request's id, when it carried one.
+        id: Option<String>,
+        /// Why the request stopped (`cancelled`, `superseded`,
+        /// `deadline exceeded`).
+        message: String,
+    },
     /// The request failed (malformed input, unknown model, parse error).
     Error {
         /// Human-readable cause.
@@ -382,7 +669,7 @@ impl Response {
     /// JSON encoding.
     pub fn to_json(&self) -> Json {
         match self {
-            Response::VerifyDone { report, latency_secs, stats, warning } => {
+            Response::VerifyDone { report, latency_secs, stats, warning, id } => {
                 let mut fields = vec![
                     ("ok".into(), Json::Bool(true)),
                     ("kind".into(), Json::Str("verify".into())),
@@ -392,6 +679,9 @@ impl Response {
                 ];
                 if let Some(w) = warning {
                     fields.push(("warning".into(), Json::Str(w.clone())));
+                }
+                if let Some(id) = id {
+                    fields.push(("id".into(), Json::Str(id.clone())));
                 }
                 Json::Obj(fields)
             }
@@ -409,6 +699,44 @@ impl Response {
                 ("ok".into(), Json::Bool(true)),
                 ("kind".into(), Json::Str("shutdown".into())),
             ]),
+            Response::Hello { protocol, server } => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("hello".into())),
+                ("protocol".into(), Json::Num(*protocol as f64)),
+                ("server".into(), Json::Str(server.clone())),
+            ]),
+            Response::CancelAck { id, cancelled } => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("cancel".into())),
+                ("id".into(), Json::Str(id.clone())),
+                ("cancelled".into(), Json::Bool(*cancelled)),
+            ]),
+            Response::Event(ev) => {
+                let mut fields = vec![
+                    ("ok".into(), Json::Bool(true)),
+                    ("kind".into(), Json::Str("event".into())),
+                    ("event".into(), Json::Str("layer".into())),
+                    ("layer".into(), Json::Num(ev.layer as f64)),
+                    ("index".into(), Json::Num(ev.index as f64)),
+                    ("total".into(), Json::Num(ev.total as f64)),
+                    ("verified".into(), Json::Bool(ev.verified)),
+                ];
+                if let Some(id) = &ev.id {
+                    fields.push(("id".into(), Json::Str(id.clone())));
+                }
+                Json::Obj(fields)
+            }
+            Response::Cancelled { id, message } => {
+                let mut fields = vec![
+                    ("ok".into(), Json::Bool(false)),
+                    ("error".into(), Json::Str(message.clone())),
+                    ("cancelled".into(), Json::Bool(true)),
+                ];
+                if let Some(id) = id {
+                    fields.push(("id".into(), Json::Str(id.clone())));
+                }
+                Json::Obj(fields)
+            }
             Response::Error { message } => Json::Obj(vec![
                 ("ok".into(), Json::Bool(false)),
                 ("error".into(), Json::Str(message.clone())),
@@ -431,6 +759,12 @@ impl Response {
                 .str_at("error")
                 .ok_or_else(|| ScalifyError::parse("error response carries no 'error'"))?
                 .to_string();
+            if doc.bool_at("cancelled") == Some(true) {
+                return Ok(Response::Cancelled {
+                    id: doc.str_at("id").map(str::to_owned),
+                    message,
+                });
+            }
             return Ok(Response::Error { message });
         }
         match doc.str_at("kind") {
@@ -446,6 +780,7 @@ impl Response {
                     latency_secs: doc.f64_at("latency_secs").unwrap_or(0.0),
                     stats: StatsSnapshot::from_json(stats)?,
                     warning: doc.str_at("warning").map(str::to_owned),
+                    id: doc.str_at("id").map(str::to_owned),
                 })
             }
             Some("stats") => {
@@ -464,6 +799,45 @@ impl Response {
                 Ok(Response::Metrics { prometheus })
             }
             Some("shutdown") => Ok(Response::ShuttingDown),
+            Some("hello") => {
+                let protocol = doc.u64_at("protocol").ok_or_else(|| {
+                    ScalifyError::parse("hello response is missing 'protocol'")
+                })?;
+                if protocol == 0 || protocol > u32::MAX as u64 {
+                    return Err(ScalifyError::parse("'protocol' must be in 1..=u32::MAX"));
+                }
+                Ok(Response::Hello {
+                    protocol: protocol as u32,
+                    server: doc.str_at("server").unwrap_or("").to_string(),
+                })
+            }
+            Some("cancel") => {
+                let id = doc.str_at("id").ok_or_else(|| {
+                    ScalifyError::parse("cancel response is missing 'id'")
+                })?;
+                Ok(Response::CancelAck {
+                    id: id.to_string(),
+                    cancelled: doc.bool_at("cancelled").unwrap_or(false),
+                })
+            }
+            Some("event") => {
+                let need = |key: &str| {
+                    doc.u64_at(key).ok_or_else(|| {
+                        ScalifyError::parse(format!("event is missing integer '{key}'"))
+                    })
+                };
+                let layer = need("layer")?;
+                if layer > u32::MAX as u64 {
+                    return Err(ScalifyError::parse("'layer' must fit in u32"));
+                }
+                Ok(Response::Event(LayerEvent {
+                    id: doc.str_at("id").map(str::to_owned),
+                    layer: layer as u32,
+                    index: need("index")?,
+                    total: need("total")?,
+                    verified: doc.bool_at("verified").unwrap_or(false),
+                }))
+            }
             other => Err(ScalifyError::parse(format!(
                 "unknown response kind {other:?}"
             ))),
@@ -570,6 +944,7 @@ mod tests {
     #[test]
     fn stats_snapshot_round_trips() {
         let snap = StatsSnapshot {
+            protocol: PROTOCOL_VERSION,
             jobs: 12,
             runs: 13,
             memo_entries: 40,
@@ -589,6 +964,7 @@ mod tests {
             latency_p50_secs: 0.01,
             latency_p95_secs: 0.05,
             latency_max_secs: 0.2,
+            shards: vec![],
         };
         let back = StatsSnapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(back, snap);
@@ -636,15 +1012,18 @@ mod tests {
             latency_secs: 0.004,
             stats: StatsSnapshot { jobs: 1, ..Default::default() },
             warning: None,
+            id: None,
         };
         let line = resp.to_line();
         assert!(!line.contains('\n'));
+        assert!(!line.contains("\"id\""), "id-less verify must not encode an id");
         match Response::from_line(&line).unwrap() {
-            Response::VerifyDone { report, latency_secs, stats, warning } => {
+            Response::VerifyDone { report, latency_secs, stats, warning, id } => {
                 assert!(report.verified());
                 assert!((latency_secs - 0.004).abs() < 1e-12);
                 assert_eq!(stats.jobs, 1);
                 assert_eq!(warning, None);
+                assert_eq!(id, None);
             }
             other => panic!("expected verify response, got {other:?}"),
         }
@@ -662,6 +1041,7 @@ mod tests {
             latency_secs: 0.001,
             stats: StatsSnapshot::default(),
             warning: Some("state names model 'other'; ran cold".into()),
+            id: None,
         };
         match Response::from_line(&resp.to_line()).unwrap() {
             Response::VerifyDone { warning, .. } => {
@@ -669,5 +1049,117 @@ mod tests {
             }
             other => panic!("expected verify response, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn hello_and_cancel_requests_round_trip() {
+        round_trip_request(Request::Hello { protocol: PROTOCOL_V2 });
+        round_trip_request(Request::Cancel { id: "req-7".into() });
+        assert!(Request::from_line("{\"cmd\":\"hello\"}").is_err());
+        assert!(Request::from_line("{\"cmd\":\"hello\",\"protocol\":0}").is_err());
+        assert!(Request::from_line("{\"cmd\":\"cancel\"}").is_err());
+    }
+
+    #[test]
+    fn verify_opts_parse_off_the_request_document_and_back() {
+        // a bare v1 request parses to all defaults
+        let doc = Json::parse("{\"cmd\":\"verify\",\"model\":\"m\",\"par\":\"tp2\"}").unwrap();
+        assert_eq!(VerifyOpts::from_json(&doc).unwrap(), VerifyOpts::default());
+
+        let opts = VerifyOpts {
+            id: Some("r1".into()),
+            priority: 5,
+            deadline_secs: Some(1.5),
+            stream: true,
+        };
+        let mut fields = vec![
+            ("cmd".into(), Json::Str("verify".into())),
+            ("bug".into(), Json::Str("T4#1".into())),
+        ];
+        opts.extend_fields(&mut fields);
+        let doc = Json::Obj(fields);
+        // v1 Request decoding ignores the extra fields entirely
+        assert_eq!(
+            Request::from_json(&doc).unwrap(),
+            Request::Verify(VerifySource::Bug { id: "T4#1".into() })
+        );
+        assert_eq!(VerifyOpts::from_json(&doc).unwrap(), opts);
+
+        let bad = Json::parse("{\"cmd\":\"verify\",\"bug\":\"x\",\"priority\":1.5}").unwrap();
+        assert!(VerifyOpts::from_json(&bad).is_err());
+        let bad = Json::parse("{\"cmd\":\"verify\",\"bug\":\"x\",\"deadline_secs\":0}").unwrap();
+        assert!(VerifyOpts::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn hello_cancel_and_event_responses_round_trip() {
+        let line = Response::Hello { protocol: 2, server: "scalify 0.2.0".into() }.to_line();
+        match Response::from_line(&line).unwrap() {
+            Response::Hello { protocol, server } => {
+                assert_eq!(protocol, 2);
+                assert_eq!(server, "scalify 0.2.0");
+            }
+            other => panic!("expected hello, got {other:?}"),
+        }
+
+        let line = Response::CancelAck { id: "r1".into(), cancelled: true }.to_line();
+        match Response::from_line(&line).unwrap() {
+            Response::CancelAck { id, cancelled } => {
+                assert_eq!(id, "r1");
+                assert!(cancelled);
+            }
+            other => panic!("expected cancel ack, got {other:?}"),
+        }
+
+        let ev = LayerEvent {
+            id: Some("r1".into()),
+            layer: 3,
+            index: 2,
+            total: 6,
+            verified: true,
+        };
+        match Response::from_line(&Response::Event(ev.clone()).to_line()).unwrap() {
+            Response::Event(back) => assert_eq!(back, ev),
+            other => panic!("expected event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancelled_responses_decode_as_plain_errors_for_v1_decoders() {
+        let resp = Response::Cancelled {
+            id: Some("r9".into()),
+            message: "verify cancelled at a layer boundary".into(),
+        };
+        let line = resp.to_line();
+        // the v2 decoder sees the cancellation
+        match Response::from_line(&line).unwrap() {
+            Response::Cancelled { id, message } => {
+                assert_eq!(id.as_deref(), Some("r9"));
+                assert!(message.contains("cancelled"));
+            }
+            other => panic!("expected cancelled, got {other:?}"),
+        }
+        // the document is still shaped like a v1 error (`ok:false` +
+        // `error`), so a decoder that predates `cancelled` reads it as
+        // a failed request rather than choking
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.bool_at("ok"), Some(false));
+        assert!(doc.str_at("error").unwrap().contains("cancelled"));
+    }
+
+    #[test]
+    fn v1_stats_never_encode_the_shard_array() {
+        let mut snap = StatsSnapshot { jobs: 3, ..Default::default() };
+        snap.shards = vec![ShardStat { shard: 0, jobs: 3, ..Default::default() }];
+        assert_eq!(snap.protocol, PROTOCOL_VERSION);
+        let line = snap.to_json().render();
+        assert!(!line.contains("shards"), "v1 stats must stay byte-identical: {line}");
+
+        snap.protocol = PROTOCOL_V2;
+        let line = snap.to_json().render();
+        assert!(line.contains("\"shards\":[{\"shard\":0"), "{line}");
+        let back = StatsSnapshot::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.shards.len(), 1);
     }
 }

@@ -15,6 +15,13 @@
 //! answers the offending request with an error response and keeps
 //! serving; see the panic-isolation tests in `service::server`.
 //!
+//! The admission gate is **priority-aware** ([`Scheduler::execute_prio`]):
+//! when the window is contended, queued submitters are admitted
+//! highest-priority first (FIFO among equals — arrival order breaks
+//! ties), and a submitter with a deadline gives up with a typed error
+//! instead of waiting past it. `execute` is the priority-0, no-deadline
+//! case and behaves exactly as before.
+//!
 //! The session's own parallel-pass pool is a *different* pool —
 //! scheduler workers block on it while verifying, which is fine; the two
 //! pools must stay separate or a saturated scheduler could deadlock
@@ -22,17 +29,33 @@
 
 use crate::error::{Result, ScalifyError};
 use crate::util::{panic_message, WorkerPool};
+use std::cmp::Reverse;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Admission-gate state: the in-flight count plus the queue of waiting
+/// submitters. The queue is a plain vector, not a heap, because a
+/// deadline-expired waiter must remove itself from the middle; it is
+/// tiny (bounded by concurrent connections), so the `max_by_key` head
+/// scan is cheaper than heap bookkeeping.
+struct Gate {
+    inflight: usize,
+    /// Waiting submitters as `(priority, arrival seq)`; the head is the
+    /// max by `(priority, Reverse(seq))` — highest priority, earliest
+    /// arrival among equals.
+    waiting: Vec<(i64, u64)>,
+}
 
 /// Bounded scheduler over a private worker pool; see the module docs.
 pub struct Scheduler {
     pool: WorkerPool,
-    /// (in-flight count, wakeup for slot release).
-    slots: Arc<(Mutex<usize>, Condvar)>,
+    /// (gate state, wakeup for slot release / queue change).
+    slots: Arc<(Mutex<Gate>, Condvar)>,
     capacity: usize,
+    seq: AtomicU64,
     submitted: AtomicUsize,
     completed: Arc<AtomicUsize>,
 }
@@ -43,8 +66,12 @@ impl Scheduler {
     pub fn new(workers: usize, capacity: usize) -> Scheduler {
         Scheduler {
             pool: WorkerPool::new(workers),
-            slots: Arc::new((Mutex::new(0), Condvar::new())),
+            slots: Arc::new((
+                Mutex::new(Gate { inflight: 0, waiting: Vec::new() }),
+                Condvar::new(),
+            )),
             capacity: capacity.max(1),
+            seq: AtomicU64::new(0),
             submitted: AtomicUsize::new(0),
             completed: Arc::new(AtomicUsize::new(0)),
         }
@@ -72,31 +99,74 @@ impl Scheduler {
 
     /// Jobs currently admitted but not finished.
     pub fn inflight(&self) -> usize {
-        *self.slots.0.lock().unwrap_or_else(|p| p.into_inner())
+        self.slots.0.lock().unwrap_or_else(|p| p.into_inner()).inflight
     }
 
-    /// Block until an admission slot is free, then take it.
+    /// Block until an admission slot is free, then take it (priority 0,
+    /// no deadline — infallible).
     fn acquire(&self) {
+        self.acquire_prio(0, None).expect("acquire without a deadline cannot fail");
+    }
+
+    /// Block until this submitter is at the head of the priority queue
+    /// *and* a slot is free, then take the slot. With a deadline, gives
+    /// up at `deadline` with a typed error instead of waiting on.
+    fn acquire_prio(&self, priority: i64, deadline: Option<Instant>) -> Result<()> {
         // the admission gate is the service's queueing point: the span
         // length is exactly how long this job waited for a slot
         let mut qsp = crate::obs::span("scheduler", "queue-wait");
         let (lock, cv) = &*self.slots;
-        let mut inflight = lock.lock().unwrap_or_else(|p| p.into_inner());
-        if *inflight >= self.capacity {
+        let mut gate = lock.lock().unwrap_or_else(|p| p.into_inner());
+        if gate.inflight >= self.capacity || !gate.waiting.is_empty() {
             crate::obs::metrics::count("scalify_scheduler_queue_waits_total", 1);
+            let me = (priority, self.seq.fetch_add(1, Ordering::Relaxed));
+            gate.waiting.push(me);
+            loop {
+                let head = gate
+                    .waiting
+                    .iter()
+                    .copied()
+                    .max_by_key(|&(p, s)| (p, Reverse(s)))
+                    .expect("queue holds at least this waiter");
+                if head == me && gate.inflight < self.capacity {
+                    break;
+                }
+                match deadline {
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            gate.waiting.retain(|&w| w != me);
+                            // the head may have been blocked behind us
+                            cv.notify_all();
+                            return Err(ScalifyError::runtime(
+                                "deadline exceeded while queued",
+                            ));
+                        }
+                        gate = cv
+                            .wait_timeout(gate, dl - now)
+                            .unwrap_or_else(|p| p.into_inner())
+                            .0;
+                    }
+                    None => {
+                        gate = cv.wait(gate).unwrap_or_else(|p| p.into_inner());
+                    }
+                }
+            }
+            gate.waiting.retain(|&w| w != me);
+            // with capacity > 1 another slot may still be free — wake the
+            // new head so it can claim it without waiting for a release
+            cv.notify_all();
         }
-        while *inflight >= self.capacity {
-            inflight = cv.wait(inflight).unwrap_or_else(|p| p.into_inner());
-        }
-        *inflight += 1;
-        qsp.attr("inflight", *inflight as u64);
+        gate.inflight += 1;
+        qsp.attr("inflight", gate.inflight as u64);
         crate::obs::metrics::count("scalify_scheduler_admissions_total", 1);
+        Ok(())
     }
 
-    fn release(slots: &(Mutex<usize>, Condvar)) {
+    fn release(slots: &(Mutex<Gate>, Condvar)) {
         let (lock, cv) = slots;
-        let mut inflight = lock.lock().unwrap_or_else(|p| p.into_inner());
-        *inflight = inflight.saturating_sub(1);
+        let mut gate = lock.lock().unwrap_or_else(|p| p.into_inner());
+        gate.inflight = gate.inflight.saturating_sub(1);
         cv.notify_all();
     }
 
@@ -109,8 +179,28 @@ impl Scheduler {
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
+        self.execute_prio(0, None, job)
+    }
+
+    /// [`Scheduler::execute`] with an admission priority and an optional
+    /// queueing deadline. Higher priorities are admitted first when the
+    /// window is contended; a deadline that expires while still queued
+    /// returns a typed error (`deadline exceeded while queued`) without
+    /// running the job. A deadline does **not** interrupt a job that was
+    /// already admitted — in-verify deadlines are the session control's
+    /// job (checked at layer boundaries).
+    pub fn execute_prio<T, F>(
+        &self,
+        priority: i64,
+        deadline: Option<Instant>,
+        job: F,
+    ) -> Result<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
         let (tx, rx) = channel::<std::thread::Result<T>>();
-        self.acquire();
+        self.acquire_prio(priority, deadline)?;
         self.submitted.fetch_add(1, Ordering::Relaxed);
         let slots = Arc::clone(&self.slots);
         let completed = Arc::clone(&self.completed);
@@ -261,6 +351,97 @@ mod tests {
         assert!(s.execute::<(), _>(|| panic!("first")).is_err());
         // the slot released; the scheduler still works
         assert_eq!(s.execute(|| 7).unwrap(), 7);
+        assert_eq!(s.inflight(), 0);
+    }
+
+    #[test]
+    fn higher_priority_submitters_are_admitted_first() {
+        let s = Arc::new(Scheduler::new(1, 1));
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+
+        // occupy the single slot so every later submitter queues
+        let blocker = {
+            let s2 = Arc::clone(&s);
+            std::thread::spawn(move || {
+                s2.execute(move || {
+                    let _ = hold_rx.recv();
+                })
+                .unwrap()
+            })
+        };
+        while s.inflight() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        let mut handles = Vec::new();
+        for name in ["low-a", "low-b"] {
+            let s2 = Arc::clone(&s);
+            let order2 = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                s2.execute_prio(0, None, move || {
+                    order2.lock().unwrap().push(name);
+                })
+                .unwrap()
+            }));
+            // let this submitter reach the queue before the next
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        {
+            let s2 = Arc::clone(&s);
+            let order2 = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                s2.execute_prio(10, None, move || {
+                    order2.lock().unwrap().push("high");
+                })
+                .unwrap()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(30));
+
+        hold_tx.send(()).unwrap();
+        blocker.join().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let order = order.lock().unwrap();
+        assert_eq!(
+            order.first(),
+            Some(&"high"),
+            "priority 10 must jump the queued priority-0 jobs: {order:?}"
+        );
+        assert_eq!(order.len(), 3);
+    }
+
+    #[test]
+    fn deadline_expiring_in_the_queue_is_a_typed_error() {
+        let s = Arc::new(Scheduler::new(1, 1));
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let blocker = {
+            let s2 = Arc::clone(&s);
+            std::thread::spawn(move || {
+                s2.execute(move || {
+                    let _ = hold_rx.recv();
+                })
+                .unwrap()
+            })
+        };
+        while s.inflight() == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        let deadline = Instant::now() + Duration::from_millis(40);
+        let err = s
+            .execute_prio(0, Some(deadline), || {
+                unreachable!("must never be admitted");
+            })
+            .unwrap_err();
+        assert!(err.message().contains("deadline exceeded while queued"), "{err}");
+
+        // the abandoned waiter left no debris: the queue drains normally
+        hold_tx.send(()).unwrap();
+        blocker.join().unwrap();
+        assert_eq!(s.execute(|| 5).unwrap(), 5);
         assert_eq!(s.inflight(), 0);
     }
 

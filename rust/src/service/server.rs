@@ -1,40 +1,59 @@
-//! The `scalify serve` daemon: one warm [`Session`] serving many clients.
+//! The `scalify serve` daemon: a warm verification fleet serving many
+//! clients.
 //!
 //! Architecture:
 //!
 //! ```text
 //! accept loop ──► connection thread (1 per client)
-//!                    │  parse request line
+//!                    │  parse request line, negotiate protocol (hello)
 //!                    ▼
-//!                [`Scheduler`] — bounded admission, backpressure
-//!                    │
+//!                [`Scheduler`] — bounded admission, backpressure,
+//!                                priorities and queue deadlines
+//!                    │  route by model-family key
 //!                    ▼
-//!                shared [`Session`] — ONE compiled rule set,
-//!                ONE layer memo (optionally disk-backed), ONE
-//!                speculative worker pool
+//!                [`ShardPool`] — N [`crate::verifier::Session`] shards,
+//!                ONE shared compiled rule set, per-shard memo +
+//!                worker pool + latency histogram
+//!                    │  fresh memo inserts
+//!                    ▼
+//!                [`MemoCache`] — daemon-global append-only segment
+//!                store (optional, `--cache-dir`)
 //! ```
 //!
 //! Every connection thread blocks at the scheduler's admission gate when
 //! the daemon is saturated, so a burst of CI jobs queues at the socket
-//! instead of exhausting memory. With `--cache-dir`, the memo preloads
-//! from disk at startup and every fresh entry is flushed on write, so a
-//! restarted daemon answers its first request warm.
+//! instead of exhausting memory. With `--cache-dir`, every shard's memo
+//! preloads from disk at startup and every fresh entry is appended on
+//! write, so a restarted daemon answers its first request warm.
+//!
+//! Connections speak protocol v1 until they negotiate v2 with a `hello`
+//! request; v2 connections may attach ids, priorities, deadlines and
+//! streaming to verify requests, and may cancel in-flight requests by id
+//! (their own or another connection's — the id registry is
+//! daemon-global). Cancellation, supersession and deadlines take effect
+//! at layer boundaries inside the verify; see
+//! [`crate::verifier::VerifyControl`].
 
 use super::cache::MemoCache;
-use super::protocol::{Request, Response, StatsSnapshot, VerifySource};
+use super::protocol::{
+    LayerEvent, Request, Response, StatsSnapshot, VerifyOpts, VerifySource, PROTOCOL_V2,
+    PROTOCOL_VERSION,
+};
 use super::scheduler::Scheduler;
+use super::shard::ShardPool;
 use crate::cli;
 use crate::diff::VerifyState;
 use crate::error::{Result, ResultExt, ScalifyError};
 use crate::hlo::parse_hlo_module;
 use crate::obs::{self, Histogram};
 use crate::report::json::Json;
-use crate::verifier::{GraphPair, Session, VerifyConfig};
+use crate::verifier::{GraphPair, LayerProgress, VerifyConfig, VerifyControl};
+use rustc_hash::FxHashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -52,7 +71,11 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Scheduler worker threads (concurrent verify jobs).
     pub workers: usize,
-    /// Verifier configuration for the shared session.
+    /// Session shards. Requests route by model-family key, so `1` (the
+    /// default) behaves exactly like the pre-fleet single-session
+    /// daemon.
+    pub shards: usize,
+    /// Verifier configuration for every session shard.
     pub verify: VerifyConfig,
 }
 
@@ -63,6 +86,7 @@ impl Default for ServeConfig {
             cache_dir: None,
             queue_capacity: 64,
             workers: 4,
+            shards: 1,
             verify: VerifyConfig::default(),
         }
     }
@@ -70,10 +94,14 @@ impl Default for ServeConfig {
 
 /// Shared state behind every connection thread.
 struct ServiceState {
-    session: Session,
+    shards: ShardPool,
     scheduler: Scheduler,
     cache: Option<Arc<MemoCache>>,
     cache_loaded: usize,
+    /// Daemon-global registry of in-flight v2 request ids → their cancel
+    /// tokens. A `cancel` request (any connection) or a superseding
+    /// request with the same id sets the token.
+    inflight_ids: Mutex<FxHashMap<String, Arc<AtomicBool>>>,
     /// Verify jobs that produced a report.
     jobs: AtomicU64,
     /// Total e-graph nodes across completed jobs.
@@ -98,14 +126,52 @@ impl ServiceState {
         self.latency_hist.observe(secs);
     }
 
+    /// Register a v2 request id; a previous in-flight request with the
+    /// same id is superseded (its cancel token is set).
+    fn register_inflight(&self, id: &str, token: Arc<AtomicBool>) {
+        let mut map = self.inflight_ids.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(old) = map.insert(id.to_string(), token) {
+            old.store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Drop the id → token mapping, but only if it is still ours (a
+    /// superseding request may have replaced it already).
+    fn unregister_inflight(&self, id: &str, token: &Arc<AtomicBool>) {
+        let mut map = self.inflight_ids.lock().unwrap_or_else(|p| p.into_inner());
+        if map.get(id).map_or(false, |t| Arc::ptr_eq(t, token)) {
+            map.remove(id);
+        }
+    }
+
+    /// Signal the in-flight request carrying `id`; false when none is.
+    fn cancel_inflight(&self, id: &str) -> bool {
+        let map = self.inflight_ids.lock().unwrap_or_else(|p| p.into_inner());
+        match map.get(id) {
+            Some(token) => {
+                token.store(true, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
     fn snapshot(&self) -> StatsSnapshot {
+        self.snapshot_for(PROTOCOL_VERSION)
+    }
+
+    /// Counters snapshot encoded for a connection's negotiated protocol
+    /// (v2 adds the per-shard array). The global percentiles merge the
+    /// per-shard histograms — exactly 0 on a fresh daemon.
+    fn snapshot_for(&self, protocol: u32) -> StatsSnapshot {
         let (p50, p95, max) = (
-            self.latency_hist.quantile(0.50),
-            self.latency_hist.quantile(0.95),
-            self.latency_hist.max(),
+            self.shards.latency_quantile(0.50),
+            self.shards.latency_quantile(0.95),
+            self.shards.latency_max(),
         );
-        let session = self.session.stats();
+        let session = self.shards.stats();
         StatsSnapshot {
+            protocol,
             jobs: self.jobs.load(Ordering::Relaxed),
             runs: session.runs as u64,
             memo_entries: session.memo_entries as u64,
@@ -128,6 +194,11 @@ impl ServiceState {
             latency_p50_secs: p50,
             latency_p95_secs: p95,
             latency_max_secs: max,
+            shards: if protocol >= PROTOCOL_V2 {
+                self.shards.shard_stats()
+            } else {
+                Vec::new()
+            },
         }
     }
 
@@ -154,9 +225,10 @@ impl Server {
             .with_ctx(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
 
-        let mut session = Session::new(cfg.verify.clone());
-        let (cache, cache_loaded) = match &cfg.cache_dir {
-            None => (None, 0),
+        // open the persistent store first: every shard shares its write
+        // hook, and every shard preloads its entries
+        let (cache, hook, loaded_entries) = match &cfg.cache_dir {
+            None => (None, None, Vec::new()),
             Some(dir) => {
                 // the persistent mirror obeys the same bound as the memo
                 let (cache, load) =
@@ -171,21 +243,25 @@ impl Server {
                     );
                 }
                 let cache = Arc::new(cache);
-                let preloaded = session.preload_memo(cache.entries());
                 let hook_cache = Arc::clone(&cache);
-                session.set_memo_write_hook(Arc::new(move |fp, entry| {
-                    hook_cache.record(fp, entry);
-                }));
-                debug_assert_eq!(preloaded, load.loaded);
-                (Some(cache), load.loaded)
+                let hook: crate::verifier::MemoWriteHook =
+                    Arc::new(move |fp, entry| {
+                        hook_cache.record(fp, entry);
+                    });
+                let entries = cache.entries();
+                debug_assert_eq!(entries.len(), load.loaded);
+                (Some(cache), Some(hook), entries)
             }
         };
+        let shards = ShardPool::new(&cfg.verify, cfg.shards, hook);
+        let cache_loaded = shards.preload_memo(&loaded_entries);
 
         let state = Arc::new(ServiceState {
-            session,
+            shards,
             scheduler: Scheduler::new(cfg.workers, cfg.queue_capacity),
             cache,
             cache_loaded,
+            inflight_ids: Mutex::new(FxHashMap::default()),
             jobs: AtomicU64::new(0),
             egraph_nodes_total: AtomicU64::new(0),
             ematch_tried_total: AtomicU64::new(0),
@@ -268,22 +344,46 @@ fn accept_loop(listener: TcpListener, state: Arc<ServiceState>) {
 /// the shared daemon (everything else in the service is bounded too).
 const MAX_REQUEST_BYTES: usize = 64 << 20;
 
+/// Per-connection protocol state: everything a `hello` negotiation
+/// changes about how later lines on the same connection are served.
+struct ConnCtx {
+    /// Negotiated protocol version; starts (and, for v1 clients that
+    /// never say hello, stays) at [`PROTOCOL_VERSION`].
+    protocol: u32,
+}
+
+/// Write one response line through the shared connection writer (the
+/// mutex keeps streamed event lines and terminal responses from
+/// interleaving mid-line).
+fn write_line(writer: &Arc<Mutex<TcpStream>>, response: &Response) -> bool {
+    let mut out = response.to_line();
+    out.push('\n');
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    if w.write_all(out.as_bytes()).is_err() {
+        return false;
+    }
+    let _ = w.flush();
+    true
+}
+
 /// Serve one complete request line; returns `false` when the connection
 /// should close (write failure or shutdown).
-fn serve_line(line: &[u8], state: &Arc<ServiceState>, writer: &mut TcpStream) -> bool {
+fn serve_line(
+    line: &[u8],
+    state: &Arc<ServiceState>,
+    ctx: &mut ConnCtx,
+    writer: &Arc<Mutex<TcpStream>>,
+) -> bool {
     let text = String::from_utf8_lossy(line);
     let trimmed = text.trim();
     if trimmed.is_empty() {
         return true;
     }
-    let response = handle_request(trimmed, state);
+    let response = handle_request(trimmed, state, ctx, writer);
     let closing = matches!(response, Response::ShuttingDown);
-    let mut out = response.to_line();
-    out.push('\n');
-    if writer.write_all(out.as_bytes()).is_err() {
+    if !write_line(writer, &response) {
         return false;
     }
-    let _ = writer.flush();
     if closing {
         state.wake_accept();
         return false;
@@ -292,10 +392,11 @@ fn serve_line(line: &[u8], state: &Arc<ServiceState>, writer: &mut TcpStream) ->
 }
 
 fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
+    let mut ctx = ConnCtx { protocol: PROTOCOL_VERSION };
     // short read timeout: idle connections poll the shutdown flag instead
     // of pinning the daemon open forever
     let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
@@ -309,12 +410,12 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
             break;
         }
         if line.len() >= MAX_REQUEST_BYTES {
-            let mut out = Response::Error {
-                message: format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
-            }
-            .to_line();
-            out.push('\n');
-            let _ = writer.write_all(out.as_bytes());
+            let _ = write_line(
+                &writer,
+                &Response::Error {
+                    message: format!("request line exceeds {MAX_REQUEST_BYTES} bytes"),
+                },
+            );
             break;
         }
         // the per-read cap makes a newline-less flood surface at the
@@ -325,7 +426,7 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
             Ok(0) => {
                 // peer closed; serve a final unterminated line, if any
                 if !line.is_empty() {
-                    let _ = serve_line(&line, &state, &mut writer);
+                    let _ = serve_line(&line, &state, &mut ctx, &writer);
                 }
                 break;
             }
@@ -335,7 +436,7 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
                     // (next read returns Ok(0)); keep accumulating
                     continue;
                 }
-                if !serve_line(&line, &state, &mut writer) {
+                if !serve_line(&line, &state, &mut ctx, &writer) {
                     break;
                 }
                 line.clear();
@@ -353,22 +454,77 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
     }
 }
 
-fn handle_request(line: &str, state: &Arc<ServiceState>) -> Response {
-    let request = match Request::from_line(line) {
+fn handle_request(
+    line: &str,
+    state: &Arc<ServiceState>,
+    ctx: &mut ConnCtx,
+    writer: &Arc<Mutex<TcpStream>>,
+) -> Response {
+    // parse the document once: the request proper and (on v2
+    // connections) the per-request verify options both read from it
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return Response::Error { message: e.to_string() },
+    };
+    let request = match Request::from_json(&doc) {
         Ok(r) => r,
         Err(e) => return Response::Error { message: e.to_string() },
     };
     match request {
-        Request::Stats => Response::Stats(state.snapshot()),
+        Request::Hello { protocol } => {
+            // meet in the middle: never above what we speak, never below
+            // the v1 baseline
+            ctx.protocol = protocol.min(PROTOCOL_V2).max(PROTOCOL_VERSION);
+            Response::Hello {
+                protocol: ctx.protocol,
+                server: format!("scalify {}", env!("CARGO_PKG_VERSION")),
+            }
+        }
+        Request::Cancel { id } => {
+            let cancelled = state.cancel_inflight(&id);
+            Response::CancelAck { id, cancelled }
+        }
+        Request::Stats => Response::Stats(state.snapshot_for(ctx.protocol)),
         Request::Metrics => Response::Metrics { prometheus: render_metrics(state) },
         Request::Shutdown => {
             state.shutdown.store(true, Ordering::SeqCst);
             Response::ShuttingDown
         }
-        Request::Verify(source) => run_verify_job(state, source, None),
-        Request::VerifyDiff { source, state: prev } => {
-            run_verify_job(state, source, Some(prev))
+        Request::Verify(source) => {
+            let opts = match verify_opts_for(ctx, &doc) {
+                Ok(o) => o,
+                Err(e) => return Response::Error { message: e.to_string() },
+            };
+            run_verify_job(state, source, None, opts, ctx.protocol, writer)
         }
+        Request::VerifyDiff { source, state: prev } => {
+            let opts = match verify_opts_for(ctx, &doc) {
+                Ok(o) => o,
+                Err(e) => return Response::Error { message: e.to_string() },
+            };
+            run_verify_job(state, source, Some(prev), opts, ctx.protocol, writer)
+        }
+    }
+}
+
+/// Per-request verify options: parsed from the request document on v2
+/// connections, defaulted on v1 (where the fields, if present, are
+/// ignored exactly as the v1 daemon ignored them).
+fn verify_opts_for(ctx: &ConnCtx, doc: &Json) -> Result<VerifyOpts> {
+    if ctx.protocol >= PROTOCOL_V2 {
+        VerifyOpts::from_json(doc)
+    } else {
+        Ok(VerifyOpts::default())
+    }
+}
+
+/// The model-family routing key for a verify source: requests for the
+/// same family land on the same shard and keep hitting its warm memo.
+fn family_key(source: &VerifySource) -> &str {
+    match source {
+        VerifySource::Model { model, .. } => model,
+        VerifySource::Bug { id } => id,
+        VerifySource::Hlo { base, .. } => base,
     }
 }
 
@@ -414,6 +570,25 @@ fn render_metrics(state: &Arc<ServiceState>) -> String {
         "scalify_request_latency_seconds",
         &state.latency_hist,
     );
+    // per-shard fleet series alongside the unlabeled aggregate (labels
+    // carry no spaces: exposition sample lines stay `name value`)
+    let _ = writeln!(out, "# TYPE scalify_shard_jobs_total counter");
+    for (i, shard) in state.shards.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "scalify_shard_jobs_total{{shard=\"{i}\"}} {}",
+            shard.jobs.load(Ordering::Relaxed)
+        );
+    }
+    let _ = writeln!(out, "# TYPE scalify_shard_request_latency_seconds histogram");
+    for (i, shard) in state.shards.iter().enumerate() {
+        obs::metrics::render_histogram_labeled(
+            &mut out,
+            "scalify_shard_request_latency_seconds",
+            &format!("shard=\"{i}\""),
+            &shard.latency,
+        );
+    }
     out.push_str(&obs::registry().render_prometheus());
     out
 }
@@ -423,26 +598,65 @@ fn render_metrics(state: &Arc<ServiceState>) -> String {
 /// unusable state (parse failure, version skew, different graph) costs a
 /// cold run plus a warning in the response, never an error: the same
 /// degrade-only contract as the on-disk memo cache.
+///
+/// The job routes to a shard by model-family key, honors the request's
+/// v2 options (priority and deadline at the admission gate, cancellation
+/// and deadline at layer boundaries, streamed per-layer events), and
+/// answers a cancelled/expired job with [`Response::Cancelled`].
 fn run_verify_job(
     state: &Arc<ServiceState>,
     source: VerifySource,
     prev: Option<Json>,
+    opts: VerifyOpts,
+    protocol: u32,
+    writer: &Arc<Mutex<TcpStream>>,
 ) -> Response {
     let t0 = obs::stamp();
+    let shard_idx = state.shards.index_for(family_key(&source));
+    state.shards.shard(shard_idx).jobs.fetch_add(1, Ordering::Relaxed);
+
+    let deadline = opts.deadline_secs.map(|s| Instant::now() + Duration::from_secs_f64(s));
+    let mut control = VerifyControl::new();
+    control.deadline = deadline;
+    if protocol >= PROTOCOL_V2 && opts.stream {
+        let ev_writer = Arc::clone(writer);
+        let ev_id = opts.id.clone();
+        control.progress = Some(Arc::new(move |p: LayerProgress| {
+            let event = Response::Event(LayerEvent {
+                id: ev_id.clone(),
+                layer: p.layer,
+                index: p.index as u64,
+                total: p.total as u64,
+                verified: p.verified,
+            });
+            // a dead client is discovered at the terminal write; the
+            // verify itself never aborts on a lost event
+            let _ = write_line(&ev_writer, &event);
+        }) as Arc<dyn Fn(LayerProgress) + Send + Sync>);
+    }
+    let token = control.token();
+    if let Some(id) = &opts.id {
+        state.register_inflight(id, Arc::clone(&token));
+    }
+
     let job_state = Arc::clone(state);
+    let job_control = control.clone();
     // the whole job — pair construction included — runs under the
     // scheduler's admission bound; this call blocks (backpressure)
-    // when the daemon is saturated
+    // when the daemon is saturated, and a priority/deadline pair decides
+    // queue order and queue expiry
     let outcome = state
         .scheduler
-        .execute(move || {
+        .execute_prio(opts.priority, deadline, move || {
             let pair = build_pair(&source)?;
+            let session = job_state.shards.shard(shard_idx).session();
             match prev {
-                None => job_state.session.verify(&pair).map(|r| (r, None)),
+                None => {
+                    session.verify_controlled(&pair, &job_control).map(|r| (r, None))
+                }
                 Some(doc) => match VerifyState::from_json(&doc) {
-                    Ok(prev_state) if prev_state.matches_graph(&pair.dist) => job_state
-                        .session
-                        .verify_against(&pair, &prev_state)
+                    Ok(prev_state) if prev_state.matches_graph(&pair.dist) => session
+                        .verify_against_controlled(&pair, &prev_state, &job_control)
                         .map(|(r, _)| (r, None)),
                     Ok(prev_state) => {
                         let warning = format!(
@@ -454,12 +668,16 @@ fn run_verify_job(
                             pair.dist.num_cores
                         );
                         crate::log_debug!("verify_diff degraded to cold: {warning}");
-                        job_state.session.verify(&pair).map(|r| (r, Some(warning)))
+                        session
+                            .verify_controlled(&pair, &job_control)
+                            .map(|r| (r, Some(warning)))
                     }
                     Err(why) => {
                         let warning = format!("ignoring verify state ({why}); ran cold");
                         crate::log_debug!("verify_diff degraded to cold: {why}");
-                        job_state.session.verify(&pair).map(|r| (r, Some(warning)))
+                        session
+                            .verify_controlled(&pair, &job_control)
+                            .map(|r| (r, Some(warning)))
                     }
                 },
             }
@@ -468,6 +686,9 @@ fn run_verify_job(
         // same error channel as a failed verify, so the response below is
         // `Error { .. }` and the daemon keeps serving
         .and_then(|r| r);
+    if let Some(id) = &opts.id {
+        state.unregister_inflight(id, &token);
+    }
     let latency_secs = t0.elapsed_secs();
     match outcome {
         Ok((report, warning)) => {
@@ -484,14 +705,26 @@ fn run_verify_job(
                 .sum();
             state.rule_applications_total.fetch_add(applied, Ordering::Relaxed);
             state.record_latency(latency_secs);
+            state.shards.shard(shard_idx).latency.observe(latency_secs);
             Response::VerifyDone {
                 report,
                 latency_secs,
-                stats: state.snapshot(),
+                stats: state.snapshot_for(protocol),
                 warning,
+                id: opts.id,
             }
         }
-        Err(e) => Response::Error { message: e.to_string() },
+        Err(e) => {
+            let message = e.to_string();
+            // a set token (cancel / supersession) or an expired deadline
+            // is a cancellation, not a failure; v1 decoders read it as a
+            // plain error either way
+            if token.load(Ordering::SeqCst) || message.contains("deadline exceeded") {
+                Response::Cancelled { id: opts.id, message }
+            } else {
+                Response::Error { message }
+            }
+        }
     }
 }
 
@@ -535,6 +768,7 @@ fn build_pair(source: &VerifySource) -> Result<GraphPair> {
 mod tests {
     use super::*;
     use crate::service::client::Client;
+    use crate::verifier::Session;
 
     fn tiny_serve_config() -> ServeConfig {
         ServeConfig {
@@ -838,6 +1072,167 @@ mod tests {
             })
             .unwrap();
         assert!(report.verified(), "{:?}", report.verdict);
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    fn zoo_source() -> VerifySource {
+        VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp2".into(),
+            layers: None,
+            edit_layer: None,
+        }
+    }
+
+    #[test]
+    fn hello_negotiates_down_and_unlocks_shard_stats() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+
+        // a from-the-future client is met at the daemon's ceiling
+        assert_eq!(client.hello(9).unwrap(), PROTOCOL_V2);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.protocol, PROTOCOL_V2);
+        assert_eq!(stats.shards.len(), 1, "v2 stats must carry the shard rows");
+        assert_eq!(stats.shards[0].jobs, 0);
+
+        // a v1 hello downgrades the connection back
+        assert_eq!(client.hello(1).unwrap(), 1);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.protocol, 1);
+        assert!(stats.shards.is_empty(), "v1 stats must not carry shard rows");
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn cancel_with_no_such_inflight_id_acks_false() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.hello(PROTOCOL_V2).unwrap();
+        assert!(!client.cancel("no-such-job").unwrap());
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn sharded_daemon_keeps_memo_hits_and_counts_per_shard_jobs() {
+        let server = Server::start(ServeConfig {
+            shards: 2,
+            ..tiny_serve_config()
+        })
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+
+        // same family key routes to the same shard, so the second
+        // identical request replays that shard's warm memo
+        let (_, _, first) = client.verify(zoo_source()).unwrap();
+        let (report, _, second) = client.verify(zoo_source()).unwrap();
+        assert!(report.verified());
+        assert!(
+            second.memo_hits > first.memo_hits,
+            "sharded daemon must keep memo locality: {first:?} -> {second:?}"
+        );
+
+        client.hello(PROTOCOL_V2).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.shards.len(), 2);
+        let routed: u64 = stats.shards.iter().map(|s| s.jobs).sum();
+        assert_eq!(routed, 2, "both jobs must be counted on their shard");
+        assert!(
+            stats.shards.iter().any(|s| s.jobs == 2),
+            "one family must pin to one shard: {:?}",
+            stats.shards
+        );
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn expired_deadline_comes_back_as_a_cancelled_response() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.hello(PROTOCOL_V2).unwrap();
+
+        let opts = VerifyOpts {
+            id: Some("doomed".into()),
+            deadline_secs: Some(0.000000001),
+            ..VerifyOpts::default()
+        };
+        let resp = client
+            .verify_opts(&Request::Verify(zoo_source()), &opts, |_| {})
+            .unwrap();
+        match resp {
+            Response::Cancelled { id, message } => {
+                assert_eq!(id.as_deref(), Some("doomed"));
+                assert!(message.contains("deadline exceeded"), "{message}");
+            }
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+
+        // the daemon still serves fresh work, and the id registry is clean
+        let (report, _, _) = client.verify(zoo_source()).unwrap();
+        assert!(report.verified());
+        assert!(!client.cancel("doomed").unwrap(), "expired job must unregister");
+
+        client.shutdown().unwrap();
+        server.wait();
+    }
+
+    #[test]
+    fn streamed_verify_emits_one_event_per_layer_then_the_report() {
+        let server = Server::start(tiny_serve_config()).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.hello(PROTOCOL_V2).unwrap();
+
+        let opts = VerifyOpts {
+            id: Some("streamed".into()),
+            stream: true,
+            ..VerifyOpts::default()
+        };
+        let mut events = Vec::new();
+        let resp = client
+            .verify_opts(&Request::Verify(zoo_source()), &opts, |e| events.push(e))
+            .unwrap();
+        match resp {
+            Response::VerifyDone { report, id, .. } => {
+                assert!(report.verified(), "{:?}", report.verdict);
+                assert_eq!(id.as_deref(), Some("streamed"));
+                assert_eq!(
+                    events.len(),
+                    report.layers.len(),
+                    "one event per verified layer: {events:?}"
+                );
+            }
+            other => panic!("expected VerifyDone, got {other:?}"),
+        }
+        for event in &events {
+            assert_eq!(event.id.as_deref(), Some("streamed"));
+            assert_eq!(event.total as usize, events.len());
+            assert!(event.verified, "{event:?}");
+        }
+        // events arrive in assembly order
+        let indices: Vec<u64> = events.iter().map(|e| e.index).collect();
+        let sorted = {
+            let mut s = indices.clone();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(indices, sorted, "per-layer events must arrive in order");
+
+        // a v1-style request on the same negotiated connection streams
+        // nothing (stream defaults off)
+        let (report, _, _) = client.verify(zoo_source()).unwrap();
+        assert!(report.verified());
 
         client.shutdown().unwrap();
         server.wait();

@@ -1,0 +1,247 @@
+//! Session shard pool: N independent verification engines behind one
+//! daemon.
+//!
+//! A single [`Session`] serializes unrelated requests on one memo lock
+//! and mixes every model family's layer fingerprints into one LRU. The
+//! [`ShardPool`] runs `N` sessions side by side and routes each request
+//! by a **model-family key** (model name, bug-corpus id, or a hash of
+//! the HLO text — see the server's routing), so requests for the same
+//! family always land on the same shard and keep hitting its warm memo,
+//! while unrelated families stop contending entirely.
+//!
+//! All shards share one compiled rewrite-template set
+//! ([`Session::with_rules`]); each owns its own memo, worker pool,
+//! request counter and latency histogram. Per-shard latency histograms
+//! roll up into the global percentiles via
+//! [`crate::obs::metrics::merged_quantile`], and render as labeled
+//! Prometheus series next to the unlabeled aggregate.
+//!
+//! With `N = 1` (the default) the pool is behaviorally identical to the
+//! pre-fleet single-session daemon.
+
+use super::protocol::ShardStat;
+use crate::egraph::RuleSet;
+use crate::obs::{self, Histogram};
+use crate::partition::MemoEntry;
+use crate::verifier::{MemoWriteHook, Session, SessionStats, VerifyConfig};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One shard: a session plus its routing-level counters.
+pub struct Shard {
+    session: Session,
+    /// Requests routed to this shard.
+    pub jobs: AtomicU64,
+    /// Per-shard request latencies (merged for the global percentiles).
+    pub latency: Histogram,
+}
+
+impl Shard {
+    /// The shard's verification engine.
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+}
+
+/// Fixed pool of [`Session`] shards; see the module docs.
+pub struct ShardPool {
+    shards: Vec<Shard>,
+}
+
+impl ShardPool {
+    /// Build `n` shards (clamped to at least 1) sharing one compiled
+    /// rule set. When a memo-write hook is given, every shard gets a
+    /// clone — the persistent cache is daemon-global, so a fingerprint
+    /// verified by any shard survives restarts for all of them.
+    pub fn new(cfg: &VerifyConfig, n: usize, hook: Option<MemoWriteHook>) -> ShardPool {
+        let n = n.max(1);
+        let rules = Arc::new(RuleSet::compile());
+        let shards = (0..n)
+            .map(|_| {
+                let mut session = Session::with_rules(cfg.clone(), Arc::clone(&rules));
+                if let Some(h) = &hook {
+                    session.set_memo_write_hook(Arc::clone(h));
+                }
+                Shard {
+                    session,
+                    jobs: AtomicU64::new(0),
+                    latency: Histogram::new(obs::LATENCY_BUCKETS),
+                }
+            })
+            .collect();
+        ShardPool { shards }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Always false — the pool holds at least one shard.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Stable routing: the shard index for a model-family key. The same
+    /// key always routes to the same shard, so repeat requests for a
+    /// family keep hitting that shard's warm memo.
+    pub fn index_for(&self, key: &str) -> usize {
+        (fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// The shard a model-family key routes to.
+    pub fn shard_for(&self, key: &str) -> &Shard {
+        &self.shards[self.index_for(key)]
+    }
+
+    /// Shard by index (for iteration/rendering).
+    pub fn shard(&self, idx: usize) -> &Shard {
+        &self.shards[idx]
+    }
+
+    /// Iterate over all shards in index order.
+    pub fn iter(&self) -> impl Iterator<Item = &Shard> {
+        self.shards.iter()
+    }
+
+    /// Warm-start **every** shard from persisted cache entries: routing
+    /// is by request key, not fingerprint, so any shard may be asked
+    /// about any persisted layer. Returns the number of distinct entries
+    /// loaded (not multiplied by the shard count).
+    pub fn preload_memo(&self, entries: &[(u64, MemoEntry)]) -> usize {
+        for shard in &self.shards {
+            shard.session.preload_memo(entries.iter().cloned());
+        }
+        entries.len()
+    }
+
+    /// Session statistics rolled up across shards: counters sum,
+    /// `templates` is the shared rule-set size, `threads` sums the
+    /// per-shard worker pools.
+    pub fn stats(&self) -> SessionStats {
+        let mut total = SessionStats::default();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let s = shard.session.stats();
+            if i == 0 {
+                total.templates = s.templates;
+            }
+            total.runs += s.runs;
+            total.memo_entries += s.memo_entries;
+            total.memo_hits += s.memo_hits;
+            total.memo_misses += s.memo_misses;
+            total.memo_evictions += s.memo_evictions;
+            total.threads += s.threads;
+        }
+        total
+    }
+
+    /// Per-shard wire snapshot (the v2 `stats` extension).
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let s = shard.session.stats();
+                ShardStat {
+                    shard: i as u64,
+                    jobs: shard.jobs.load(Ordering::Relaxed),
+                    runs: s.runs as u64,
+                    memo_entries: s.memo_entries as u64,
+                    memo_hits: s.memo_hits as u64,
+                    memo_misses: s.memo_misses as u64,
+                    latency_p50_secs: shard.latency.quantile(0.50),
+                    latency_p95_secs: shard.latency.quantile(0.95),
+                }
+            })
+            .collect()
+    }
+
+    /// Global latency quantile merged across all shard histograms
+    /// (exactly 0.0 on a fresh daemon — see
+    /// [`crate::obs::metrics::merged_quantile`]).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let hists: Vec<&Histogram> = self.shards.iter().map(|s| &s.latency).collect();
+        obs::metrics::merged_quantile(&hists, q)
+    }
+
+    /// Largest latency observed by any shard (0.0 when idle).
+    pub fn latency_max(&self) -> f64 {
+        let hists: Vec<&Histogram> = self.shards.iter().map(|s| &s.latency).collect();
+        obs::metrics::merged_max(&hists)
+    }
+}
+
+/// FNV-1a over the routing key — stable across runs and platforms, so
+/// shard placement (and therefore memo locality) is deterministic.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> VerifyConfig {
+        VerifyConfig::builder().threads(1).build().expect("valid config")
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        let pool = ShardPool::new(&tiny_cfg(), 4, None);
+        for key in ["llama-tiny", "mixtral-tiny", "T4#1", "hlo:deadbeef"] {
+            let i = pool.index_for(key);
+            assert!(i < pool.len());
+            assert_eq!(i, pool.index_for(key), "same key must route to the same shard");
+        }
+        assert_eq!(pool.len(), 4);
+    }
+
+    #[test]
+    fn shards_share_one_compiled_rule_set() {
+        let pool = ShardPool::new(&tiny_cfg(), 3, None);
+        let first = pool.shard(0).session().rules();
+        for i in 1..pool.len() {
+            assert!(
+                Arc::ptr_eq(first, pool.shard(i).session().rules()),
+                "shard {i} compiled its own rule set"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let pool = ShardPool::new(&tiny_cfg(), 0, None);
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.index_for("anything"), 0);
+    }
+
+    #[test]
+    fn rollup_sums_counters_and_keeps_shared_template_count() {
+        let pool = ShardPool::new(&tiny_cfg(), 2, None);
+        let per_shard = pool.shard(0).session().stats();
+        let total = pool.stats();
+        assert_eq!(total.templates, per_shard.templates);
+        assert_eq!(total.runs, 0);
+        assert_eq!(total.memo_entries, 0);
+        let stats = pool.shard_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].shard, 0);
+        assert_eq!(stats[1].shard, 1);
+        assert_eq!(stats[0].latency_p50_secs, 0.0, "fresh shard percentiles must be 0");
+    }
+
+    #[test]
+    fn fresh_pool_merged_latency_is_exactly_zero() {
+        let pool = ShardPool::new(&tiny_cfg(), 3, None);
+        assert_eq!(pool.latency_quantile(0.50), 0.0);
+        assert_eq!(pool.latency_quantile(0.95), 0.0);
+        assert_eq!(pool.latency_max(), 0.0);
+    }
+}

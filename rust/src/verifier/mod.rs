@@ -24,7 +24,7 @@ use crate::error::{Result, ScalifyError};
 use crate::localize::Discrepancy;
 use crate::util::{fmt_duration, Stopwatch};
 pub use pair::GraphPair;
-pub use session::{MemoWriteHook, Session, SessionStats};
+pub use session::{LayerProgress, MemoWriteHook, Session, SessionStats, VerifyControl};
 
 /// Verifier configuration (the Figure-12 ablation toggles live here).
 ///

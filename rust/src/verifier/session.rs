@@ -40,7 +40,7 @@ use crate::partition::{extract_layers, fingerprint_pair, LayerMemo, LayerSlice, 
 use crate::util::{Stopwatch, WorkerPool};
 use crate::verifier::GraphPair;
 use rustc_hash::FxHashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -68,6 +68,90 @@ pub struct SessionStats {
 /// its persistent on-disk cache here so warm state survives restarts.
 pub type MemoWriteHook = Arc<dyn Fn(u64, &MemoEntry) + Send + Sync>;
 
+/// One per-layer progress notification delivered through
+/// [`VerifyControl::progress`] as the ordered assembly pass completes
+/// each layer (whatever served it: cold verify, memo hit or diff
+/// replay). Layers missing from the baseline graph produce a
+/// discrepancy, not a progress event.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerProgress {
+    /// Layer tag (`LayerSlice::layer`).
+    pub layer: u32,
+    /// Zero-based position in dist order.
+    pub index: usize,
+    /// Total layers in this verify call.
+    pub total: usize,
+    /// Whether the layer verified.
+    pub verified: bool,
+    /// Served from the memo / parallel pass rather than verified cold.
+    pub memoized: bool,
+    /// Replayed from a persisted [`VerifyState`] (diff runs only).
+    pub reused: bool,
+}
+
+/// Cooperative cancellation, deadline and progress hooks for a single
+/// verify call ([`Session::verify_controlled`] /
+/// [`Session::verify_against_controlled`]).
+///
+/// All three hooks are checked or fired **at layer boundaries** of the
+/// ordered assembly pass — the granularity the streaming service
+/// protocol exposes. A set `cancel` token or an expired `deadline`
+/// aborts the call with a typed [`ScalifyError::Runtime`] whose message
+/// contains `cancelled` or `deadline exceeded` respectively; no partial
+/// report is produced. The parallel cold pass is not interrupted
+/// mid-round (its jobs are short); cancellation takes effect when the
+/// assembly pass next reaches a layer boundary.
+#[derive(Clone, Default)]
+pub struct VerifyControl {
+    /// Shared flag; set to `true` (by any thread) to abort the call.
+    pub cancel: Arc<AtomicBool>,
+    /// Absolute deadline; past it the call aborts at the next boundary.
+    pub deadline: Option<Instant>,
+    /// Per-layer progress observer (e.g. the streaming event writer).
+    pub progress: Option<Arc<dyn Fn(LayerProgress) + Send + Sync>>,
+}
+
+impl VerifyControl {
+    /// Control block with no deadline, no observer and an unset token.
+    pub fn new() -> VerifyControl {
+        VerifyControl::default()
+    }
+
+    /// The shared cancellation token (clone to hand to another thread).
+    pub fn token(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.cancel)
+    }
+
+    /// Whether the token has been set.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.cancel.load(Ordering::Relaxed) {
+            return Err(ScalifyError::runtime("verify cancelled at a layer boundary"));
+        }
+        if let Some(deadline) = self.deadline {
+            if Instant::now() >= deadline {
+                return Err(ScalifyError::runtime(
+                    "deadline exceeded at a layer boundary",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn check_control(control: Option<&VerifyControl>) -> Result<()> {
+    control.map_or(Ok(()), VerifyControl::check)
+}
+
+fn notify_progress(control: Option<&VerifyControl>, p: LayerProgress) {
+    if let Some(cb) = control.and_then(|c| c.progress.as_ref()) {
+        cb(p);
+    }
+}
+
 /// Persistent verification engine; see the module docs.
 pub struct Session {
     cfg: VerifyConfig,
@@ -82,13 +166,21 @@ impl Session {
     /// New session owning compiled templates, an empty memo and (when the
     /// config enables parallelism) a worker pool.
     pub fn new(cfg: VerifyConfig) -> Session {
+        Session::with_rules(cfg, Arc::new(RuleSet::compile()))
+    }
+
+    /// New session sharing an already-compiled rule set. The shard pool
+    /// of the service daemon uses this so N shards compile the template
+    /// set once instead of N times; each shard still owns its own memo
+    /// and worker pool.
+    pub fn with_rules(cfg: VerifyConfig, rules: Arc<RuleSet>) -> Session {
         let pool = if cfg.parallel && cfg.threads > 1 {
             Some(WorkerPool::new(cfg.threads))
         } else {
             None
         };
         Session {
-            rules: Arc::new(RuleSet::compile()),
+            rules,
             memo: Mutex::new(LayerMemo::with_capacity(cfg.memo_capacity)),
             pool,
             runs: AtomicUsize::new(0),
@@ -163,14 +255,24 @@ impl Session {
     /// typed [`ScalifyError`] instead of a panic, and repeated calls reuse
     /// the session's templates, memo and workers.
     pub fn verify(&self, pair: &GraphPair) -> Result<VerifyReport> {
-        Ok(self.verify_full(pair, None, false)?.0)
+        Ok(self.verify_full(pair, None, false, None)?.0)
+    }
+
+    /// [`Session::verify`] with cancellation/deadline/progress hooks; see
+    /// [`VerifyControl`].
+    pub fn verify_controlled(
+        &self,
+        pair: &GraphPair,
+        control: &VerifyControl,
+    ) -> Result<VerifyReport> {
+        Ok(self.verify_full(pair, None, false, Some(control))?.0)
     }
 
     /// Verify and additionally capture a persistable [`VerifyState`]
     /// (per-layer fingerprints, boundary out-relations and stable node
     /// ids) that a later `verify_against` can replay.
     pub fn verify_capture(&self, pair: &GraphPair) -> Result<(VerifyReport, VerifyState)> {
-        let (report, state) = self.verify_full(pair, None, true)?;
+        let (report, state) = self.verify_full(pair, None, true, None)?;
         Ok((report, state.expect("capture always builds a state")))
     }
 
@@ -188,7 +290,19 @@ impl Session {
         pair: &GraphPair,
         prev: &VerifyState,
     ) -> Result<(VerifyReport, VerifyState)> {
-        let (report, state) = self.verify_full(pair, Some(prev), true)?;
+        let (report, state) = self.verify_full(pair, Some(prev), true, None)?;
+        Ok((report, state.expect("capture always builds a state")))
+    }
+
+    /// [`Session::verify_against`] with cancellation/deadline/progress
+    /// hooks; see [`VerifyControl`].
+    pub fn verify_against_controlled(
+        &self,
+        pair: &GraphPair,
+        prev: &VerifyState,
+        control: &VerifyControl,
+    ) -> Result<(VerifyReport, VerifyState)> {
+        let (report, state) = self.verify_full(pair, Some(prev), true, Some(control))?;
         Ok((report, state.expect("capture always builds a state")))
     }
 
@@ -197,6 +311,7 @@ impl Session {
         pair: &GraphPair,
         against: Option<&VerifyState>,
         capture: bool,
+        control: Option<&VerifyControl>,
     ) -> Result<(VerifyReport, Option<VerifyState>)> {
         self.validate_pair(pair)?;
         self.runs.fetch_add(1, Ordering::Relaxed);
@@ -283,9 +398,13 @@ impl Session {
         let mut state_layers: Option<Vec<LayerState>> = capture.then(Vec::new);
         let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
         let mut exhausted: Option<String> = None;
-        sw.time("verify-layers", || {
+        let total_layers = dist_layers.len();
+        sw.time("verify-layers", || -> Result<()> {
             let _sp = obs::span("phase", "verify-layers");
-            for dslice in dist_layers.iter() {
+            for (li, dslice) in dist_layers.iter().enumerate() {
+                // cancellation, deadlines and superseded-request aborts
+                // all take effect here, at layer boundaries
+                check_control(control)?;
                 let Some(bslice) =
                     base_idx_by_tag.get(&dslice.layer).map(|&i| &base_layers[i])
                 else {
@@ -373,6 +492,17 @@ impl Session {
                             node_ids: new_ids.to_vec(),
                         });
                     }
+                    notify_progress(
+                        control,
+                        LayerProgress {
+                            layer: dslice.layer,
+                            index: li,
+                            total: total_layers,
+                            verified: true,
+                            memoized: false,
+                            reused: true,
+                        },
+                    );
                     continue;
                 }
                 // `verify_layer` is a pure function of (slices, input
@@ -532,8 +662,20 @@ impl Session {
                         node_ids: new_ids.to_vec(),
                     });
                 }
+                notify_progress(
+                    control,
+                    LayerProgress {
+                        layer: dslice.layer,
+                        index: li,
+                        total: total_layers,
+                        verified: outcome.verified,
+                        memoized,
+                        reused: false,
+                    },
+                );
             }
-        });
+            Ok(())
+        })?;
 
         let verdict = if let Some(at) = exhausted {
             Verdict::ResourceExhausted { at }

@@ -1,0 +1,225 @@
+//! Wire-compatibility tests (`cargo test --test protocol_compat`): a v1
+//! client pointed at the fleet daemon must see byte-for-byte the same
+//! protocol surface it saw before sharding, streaming and cancellation
+//! existed. The golden-bytes test pins the exact v1 stats encoding;
+//! the socket tests pin that v2 never leaks into a connection that did
+//! not negotiate it; the spawned-binary test pins the fresh-daemon
+//! zero-percentile fix end to end through `scalify client stats`.
+
+use scalify::report::json::Json;
+use scalify::service::{
+    Client, ServeConfig, Server, StatsSnapshot, VerifySource, PROTOCOL_V2,
+};
+use scalify::verifier::VerifyConfig;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+
+fn tiny_server() -> Server {
+    Server::start(ServeConfig {
+        queue_capacity: 4,
+        workers: 2,
+        verify: VerifyConfig { threads: 2, ..VerifyConfig::default() },
+        ..ServeConfig::default()
+    })
+    .expect("server starts on an ephemeral port")
+}
+
+/// Netcat-style connection: one line out, lines back.
+struct RawConn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let writer = stream.try_clone().expect("clone");
+        RawConn { writer, reader: BufReader::new(stream) }
+    }
+
+    fn round_trip(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).expect("send");
+        self.writer.write_all(b"\n").expect("send");
+        self.writer.flush().expect("flush");
+        let mut out = String::new();
+        self.reader.read_line(&mut out).expect("recv");
+        out.trim_end().to_string()
+    }
+}
+
+#[test]
+fn v1_stats_snapshot_encoding_is_pinned_byte_for_byte() {
+    // the exact bytes a pre-fleet daemon put on the wire; if this test
+    // breaks, a v1 client broke — adding fields to the v1 encoding is a
+    // protocol bump, not a patch (docs/PROTOCOL.md)
+    let snap = StatsSnapshot {
+        jobs: 3,
+        runs: 2,
+        memo_hits: 1,
+        templates: 40,
+        threads: 4,
+        queue_capacity: 8,
+        scheduler_workers: 4,
+        uptime_secs: 1.5,
+        ..StatsSnapshot::default()
+    };
+    assert_eq!(
+        snap.to_json().render(),
+        "{\"protocol\":1,\"jobs\":3,\"runs\":2,\"memo_entries\":0,\"memo_hits\":1,\
+         \"memo_misses\":0,\"memo_evictions\":0,\"templates\":40,\"threads\":4,\
+         \"queue_capacity\":8,\"scheduler_workers\":4,\"egraph_nodes_total\":0,\
+         \"ematch_tried_total\":0,\"rule_applications_total\":0,\
+         \"cache_entries_loaded\":0,\"uptime_secs\":1.5,\"latency_p50_secs\":0,\
+         \"latency_p95_secs\":0,\"latency_max_secs\":0}"
+    );
+
+    // the optional cache_dir stays the final v1 field
+    let with_dir = StatsSnapshot {
+        cache_dir: Some("/tmp/scalify".into()),
+        ..StatsSnapshot::default()
+    };
+    assert!(
+        with_dir.to_json().render().ends_with("\"cache_dir\":\"/tmp/scalify\"}"),
+        "{}",
+        with_dir.to_json().render()
+    );
+
+    // and the same struct at protocol 2 appends exactly one new field
+    let v2 = StatsSnapshot { protocol: PROTOCOL_V2, ..StatsSnapshot::default() };
+    assert!(v2.to_json().render().ends_with("\"shards\":[]}"), "{}", v2.to_json().render());
+}
+
+#[test]
+fn a_v1_connection_never_sees_v2_fields_even_after_others_negotiate() {
+    let server = tiny_server();
+    let addr = server.local_addr().to_string();
+
+    let mut v1 = RawConn::connect(&addr);
+    let mut v2 = RawConn::connect(&addr);
+
+    // the fresh-daemon stats a v1 client decodes: protocol 1, no shard
+    // array, and *exactly* zero latency percentiles (the merged-quantile
+    // guard — an empty histogram must not interpolate)
+    let line = v1.round_trip("{\"cmd\":\"stats\"}");
+    assert!(line.starts_with("{\"ok\":true,\"kind\":\"stats\""), "{line}");
+    assert!(line.contains("\"protocol\":1"), "{line}");
+    assert!(!line.contains("\"shards\""), "{line}");
+    assert!(
+        line.contains(
+            "\"latency_p50_secs\":0,\"latency_p95_secs\":0,\"latency_max_secs\":0"
+        ),
+        "fresh-daemon percentiles must be exactly 0: {line}"
+    );
+
+    // another connection upgrading to v2 must not bleed into this one
+    let hello = v2.round_trip(&format!("{{\"cmd\":\"hello\",\"protocol\":{PROTOCOL_V2}}}"));
+    assert!(hello.contains("\"protocol\":2"), "{hello}");
+    let v2_stats = v2.round_trip("{\"cmd\":\"stats\"}");
+    assert!(v2_stats.contains("\"shards\":["), "{v2_stats}");
+
+    let line = v1.round_trip("{\"cmd\":\"stats\"}");
+    assert!(!line.contains("\"shards\""), "v2 leaked into a v1 connection: {line}");
+    assert!(line.contains("\"protocol\":1"), "{line}");
+
+    // a v1 verify response carries no id, no events, no cancelled flag —
+    // even when the request (like old clients sometimes did) carries
+    // extra fields the v1 daemon ignored
+    let line = v1.round_trip(
+        "{\"cmd\":\"verify\",\"model\":\"llama-tiny\",\"par\":\"tp2\",\"stream\":true,\
+         \"id\":\"ignored-on-v1\"}",
+    );
+    assert!(line.starts_with("{\"ok\":true,\"kind\":\"verify\""), "{line}");
+    let doc = Json::parse(&line).expect("valid response json");
+    assert!(doc.get("id").is_none(), "v1 verify must not echo an id: {line}");
+    assert!(doc.get("cancelled").is_none(), "{line}");
+    let stats = doc.get("stats").expect("stats object");
+    assert!(stats.get("shards").is_none(), "{line}");
+
+    v1.round_trip("{\"cmd\":\"shutdown\"}");
+    server.wait();
+}
+
+#[test]
+fn typed_v1_client_decodes_fleet_daemon_responses_unchanged() {
+    // the 0.2.0 Client type (no hello call) against the fleet daemon:
+    // verify/stats/metrics/shutdown behave exactly as before
+    let server = tiny_server();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+
+    let (report, latency, stats) = client
+        .verify(VerifySource::Model {
+            model: "llama-tiny".into(),
+            par: "tp2".into(),
+            layers: None,
+            edit_layer: None,
+        })
+        .expect("verify");
+    assert!(report.verified(), "{:?}", report.verdict);
+    assert!(latency >= 0.0);
+    assert_eq!(stats.protocol, 1);
+    assert!(stats.shards.is_empty());
+    assert!(stats.latency_max_secs >= stats.latency_p50_secs);
+
+    client.shutdown().expect("shutdown");
+    server.wait();
+}
+
+/// Child daemon killed even when an assertion fails mid-test.
+struct DaemonGuard {
+    child: Child,
+    addr: String,
+}
+
+impl DaemonGuard {
+    fn spawn() -> DaemonGuard {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_scalify"))
+            .args(["serve", "--addr", "127.0.0.1:0", "--threads", "2"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning the scalify binary");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("daemon banner");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .expect("banner carries the address")
+            .to_string();
+        assert!(addr.contains(':'), "unexpected banner: {line:?}");
+        DaemonGuard { child, addr }
+    }
+}
+
+impl Drop for DaemonGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn fresh_daemon_stats_through_the_cli_report_zero_percentiles() {
+    // regression: a fresh daemon used to report interpolated nonsense
+    // percentiles before any job ran; `scalify client stats` must print
+    // exact zeros
+    let daemon = DaemonGuard::spawn();
+    let out = Command::new(env!("CARGO_BIN_EXE_scalify"))
+        .args(["client", "stats", "--addr", &daemon.addr])
+        .output()
+        .expect("spawn scalify client");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // the trailing comma / newline pins the value as exactly `0` (a
+    // bare `": 0"` would also match an interpolated `0.5`)
+    assert!(stdout.contains("\"latency_p50_secs\": 0,"), "{stdout}");
+    assert!(stdout.contains("\"latency_p95_secs\": 0,"), "{stdout}");
+    assert!(stdout.contains("\"latency_max_secs\": 0\n"), "{stdout}");
+    assert!(stdout.contains("\"jobs\": 0,"), "{stdout}");
+    let _ = Command::new(env!("CARGO_BIN_EXE_scalify"))
+        .args(["client", "shutdown", "--addr", &daemon.addr])
+        .output();
+}
