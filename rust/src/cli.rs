@@ -25,6 +25,7 @@ pub const BOOLEAN_FLAGS: &[&str] = &[
     "no-partition",
     "no-parallel",
     "no-memoize",
+    "clear",
 ];
 
 /// Parse `--flag value` / `--switch` argument lists.

@@ -60,6 +60,10 @@ pub struct RunLimits {
     pub match_limit: usize,
     /// Initial ban length for the backoff scheduler.
     pub ban_length: usize,
+    /// Absolute deadline, checked at the top of every iteration, so a
+    /// blown verify deadline stops within one rewrite iteration instead
+    /// of overshooting to the next layer boundary.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for RunLimits {
@@ -70,6 +74,7 @@ impl Default for RunLimits {
             match_mode: MatchMode::from_env(),
             match_limit: 4096,
             ban_length: 2,
+            deadline: None,
         }
     }
 }
@@ -84,6 +89,11 @@ pub enum StopReason {
     /// Node budget exhausted (the "insufficient resources" outcome the
     /// paper reports for unpartitioned full-model rewriting).
     NodeLimit,
+    /// The [`RunLimits::deadline`] passed; the e-graph is left in a
+    /// consistent (rebuilt) state but saturation is incomplete, so any
+    /// equivalence *not yet* proven stays unproven — callers degrade
+    /// rather than report a discrepancy.
+    DeadlineExceeded,
 }
 
 /// Per-rule saturation counters (threaded into `LayerReport` and the
@@ -187,6 +197,11 @@ impl<'a> Runner<'a> {
         let mut matches_tried = 0;
         let mut node_overshoot = 0;
         let stop = loop {
+            if let Some(dl) = self.limits.deadline {
+                if Instant::now() >= dl {
+                    break StopReason::DeadlineExceeded;
+                }
+            }
             if iterations >= self.limits.max_iters {
                 break StopReason::IterLimit;
             }

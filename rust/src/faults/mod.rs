@@ -1,0 +1,364 @@
+//! Deterministic fault injection.
+//!
+//! A process-wide registry of named injection points threaded through the
+//! service stack: cache segment I/O (`cache-write`), worker-pool job
+//! execution (`pool-job`), scheduler admission (`sched-admit`), shard
+//! routing (`shard-route`), the verify job body (`shard-verify`), the
+//! connection read/write path (`conn-read`, `conn-write`) and the
+//! per-layer verify loop (`verify-layer`).
+//!
+//! Faults are installed from `SCALIFY_FAULTS=point:kind:rate:seed` (comma
+//! separated) or at runtime via the daemon's `faults` protocol request.
+//! Each point draws from its own seeded [`Prng`], so a given spec fires
+//! on a reproducible subsequence of evaluations regardless of wall-clock
+//! or thread interleaving at *other* points.
+//!
+//! When nothing is installed, [`fire`] is a single relaxed atomic load —
+//! the same zero-cost-when-off discipline as `obs::trace`.
+
+use crate::error::{Result, ScalifyError};
+use crate::util::Prng;
+use rustc_hash::FxHashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Every injection point wired into the codebase. `install` rejects
+/// unknown names so a typo in a chaos spec fails loudly instead of
+/// silently injecting nothing.
+pub const POINTS: &[&str] = &[
+    "cache-write",
+    "pool-job",
+    "sched-admit",
+    "shard-route",
+    "shard-verify",
+    "conn-read",
+    "conn-write",
+    "verify-layer",
+];
+
+/// What an armed injection point does when it fires.
+///
+/// Not every kind is meaningful at every point; sites interpret the
+/// actions they understand and ignore the rest (documented per site).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Panic at the injection site (exercises supervision / catch_unwind).
+    Panic,
+    /// Return a typed `ScalifyError::Runtime` from the site.
+    Error,
+    /// Sleep for the given duration before continuing.
+    Delay(Duration),
+    /// Drop the connection / skip the write (transport sites).
+    Drop,
+    /// Corrupt one byte of the buffer about to be written (cache site).
+    Bitrot,
+}
+
+impl FaultKind {
+    fn label(&self) -> String {
+        match self {
+            FaultKind::Panic => "panic".into(),
+            FaultKind::Error => "error".into(),
+            FaultKind::Delay(d) => format!("delay{}", d.as_millis()),
+            FaultKind::Drop => "drop".into(),
+            FaultKind::Bitrot => "bitrot".into(),
+        }
+    }
+}
+
+/// A fired fault, handed back to the injection site to act on. `noise`
+/// is a per-fire random value sites can use for deterministic variation
+/// (the cache site picks which byte to flip with it).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultAction {
+    /// The armed kind.
+    pub kind: FaultKind,
+    /// Per-fire draw from the point's PRNG.
+    pub noise: u64,
+}
+
+struct FaultPoint {
+    kind: FaultKind,
+    rate: f64,
+    seed: u64,
+    prng: Prng,
+    evaluated: u64,
+    fired: u64,
+}
+
+/// Externally visible state of one armed point (the `faults` protocol
+/// response and the CLI table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultStatus {
+    /// Injection-point name.
+    pub point: String,
+    /// Kind label as written in the spec (`panic`, `delay25`, ...).
+    pub kind: String,
+    /// Fire probability per evaluation.
+    pub rate: f64,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Times the point was reached while armed.
+    pub evaluated: u64,
+    /// Times it actually fired.
+    pub fired: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> MutexGuard<'static, FxHashMap<String, FaultPoint>> {
+    static REGISTRY: OnceLock<Mutex<FxHashMap<String, FaultPoint>>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| Mutex::new(FxHashMap::default()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// True when at least one fault is armed (one relaxed load).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Evaluate the named point. Returns `None` on the fast path (nothing
+/// armed, or the armed point's Bernoulli draw came up clean).
+pub fn fire(point: &str) -> Option<FaultAction> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut map = registry();
+    let fp = map.get_mut(point)?;
+    fp.evaluated += 1;
+    if !fp.prng.chance(fp.rate) {
+        return None;
+    }
+    fp.fired += 1;
+    Some(FaultAction { kind: fp.kind, noise: fp.prng.next_u64() })
+}
+
+/// Evaluate the named point on a `Result` path: panics on `Panic`,
+/// sleeps on `Delay`, returns a typed runtime error on `Error`.
+/// `Drop`/`Bitrot` are not meaningful here and are ignored.
+pub fn check(point: &str) -> Result<()> {
+    match fire(point) {
+        None => Ok(()),
+        Some(a) => match a.kind {
+            FaultKind::Panic => panic!("injected fault at {point}: panic"),
+            FaultKind::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            FaultKind::Error => Err(ScalifyError::runtime(format!(
+                "retryable: injected fault at {point}"
+            ))),
+            FaultKind::Drop | FaultKind::Bitrot => Ok(()),
+        },
+    }
+}
+
+/// Evaluate the named point on an infallible path: panics on `Panic`,
+/// sleeps on `Delay`, ignores everything else.
+pub fn disturb(point: &str) {
+    if let Some(a) = fire(point) {
+        match a.kind {
+            FaultKind::Panic => panic!("injected fault at {point}: panic"),
+            FaultKind::Delay(d) => std::thread::sleep(d),
+            _ => {}
+        }
+    }
+}
+
+fn parse_kind(s: &str) -> Result<FaultKind> {
+    match s {
+        "panic" => Ok(FaultKind::Panic),
+        "error" => Ok(FaultKind::Error),
+        "drop" => Ok(FaultKind::Drop),
+        "bitrot" => Ok(FaultKind::Bitrot),
+        _ => {
+            if let Some(ms) = s.strip_prefix("delay") {
+                let ms: u64 = if ms.is_empty() {
+                    100
+                } else {
+                    ms.parse().map_err(|_| {
+                        ScalifyError::config(format!("invalid delay in fault kind '{s}'"))
+                    })?
+                };
+                Ok(FaultKind::Delay(Duration::from_millis(ms)))
+            } else {
+                Err(ScalifyError::config(format!(
+                    "unknown fault kind '{s}' (expected panic, error, drop, bitrot or delayMS)"
+                )))
+            }
+        }
+    }
+}
+
+/// Install faults from a spec: comma-separated `point:kind:rate:seed`
+/// entries, e.g. `shard-verify:panic:0.2:42,conn-write:drop:0.1:7`.
+/// Replaces any previously armed point of the same name; other points
+/// stay armed. An empty spec is a no-op.
+pub fn install(spec: &str) -> Result<()> {
+    let mut parsed = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() != 4 {
+            return Err(ScalifyError::config(format!(
+                "invalid fault entry '{entry}' (expected point:kind:rate:seed)"
+            )));
+        }
+        let point = parts[0];
+        if !POINTS.contains(&point) {
+            return Err(ScalifyError::config(format!(
+                "unknown fault point '{point}' (known: {})",
+                POINTS.join(", ")
+            )));
+        }
+        let kind = parse_kind(parts[1])?;
+        let rate: f64 = parts[2].parse().map_err(|_| {
+            ScalifyError::config(format!("invalid fault rate '{}' in '{entry}'", parts[2]))
+        })?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(ScalifyError::config(format!(
+                "fault rate {rate} out of [0, 1] in '{entry}'"
+            )));
+        }
+        let seed: u64 = parts[3].parse().map_err(|_| {
+            ScalifyError::config(format!("invalid fault seed '{}' in '{entry}'", parts[3]))
+        })?;
+        parsed.push((point.to_string(), kind, rate, seed));
+    }
+    if parsed.is_empty() {
+        return Ok(());
+    }
+    let mut map = registry();
+    for (point, kind, rate, seed) in parsed {
+        map.insert(
+            point,
+            FaultPoint { kind, rate, seed, prng: Prng::new(seed), evaluated: 0, fired: 0 },
+        );
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Install faults from `SCALIFY_FAULTS`, if set. Invalid specs are a
+/// config error so a typo'd chaos run fails at startup, not silently.
+pub fn install_from_env() -> Result<()> {
+    match std::env::var("SCALIFY_FAULTS") {
+        Ok(spec) => install(&spec).map_err(|e| e.context("SCALIFY_FAULTS")),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Disarm every point and restore the zero-cost fast path.
+pub fn clear() {
+    let mut map = registry();
+    map.clear();
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Snapshot of every armed point, sorted by name for stable output.
+pub fn snapshot() -> Vec<FaultStatus> {
+    let map = registry();
+    let mut out: Vec<FaultStatus> = map
+        .iter()
+        .map(|(point, fp)| FaultStatus {
+            point: point.clone(),
+            kind: fp.kind.label(),
+            rate: fp.rate,
+            seed: fp.seed,
+            evaluated: fp.evaluated,
+            fired: fp.fired,
+        })
+        .collect();
+    out.sort_by(|a, b| a.point.cmp(&b.point));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-wide and other tests in this binary may
+    // arm faults; every test here clears before and after and runs the
+    // assertions under names it armed itself.
+
+    #[test]
+    fn disabled_registry_fires_nothing() {
+        clear();
+        assert!(!enabled());
+        assert!(fire("cache-write").is_none());
+        assert!(check("sched-admit").is_ok());
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_counts() {
+        clear();
+        install("conn-read:drop:1.0:7").unwrap();
+        for _ in 0..5 {
+            let a = fire("conn-read").expect("rate 1.0 must fire");
+            assert_eq!(a.kind, FaultKind::Drop);
+        }
+        // unarmed points still pass through
+        assert!(fire("conn-write").is_none());
+        let snap = snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].point, "conn-read");
+        assert_eq!(snap[0].evaluated, 5);
+        assert_eq!(snap[0].fired, 5);
+        clear();
+        assert!(fire("conn-read").is_none());
+    }
+
+    #[test]
+    fn same_seed_fires_the_same_subsequence() {
+        clear();
+        install("verify-layer:error:0.3:99").unwrap();
+        let a: Vec<bool> = (0..64).map(|_| fire("verify-layer").is_some()).collect();
+        clear();
+        install("verify-layer:error:0.3:99").unwrap();
+        let b: Vec<bool> = (0..64).map(|_| fire("verify-layer").is_some()).collect();
+        clear();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|f| *f));
+        assert!(a.iter().any(|f| !*f));
+    }
+
+    #[test]
+    fn error_kind_is_a_typed_retryable_runtime_error() {
+        clear();
+        install("sched-admit:error:1.0:1").unwrap();
+        let e = check("sched-admit").unwrap_err();
+        assert!(matches!(e, ScalifyError::Runtime(_)));
+        assert!(e.message().starts_with("retryable: "));
+        assert!(e.message().contains("sched-admit"));
+        clear();
+    }
+
+    #[test]
+    fn delay_kind_parses_with_and_without_millis() {
+        assert_eq!(parse_kind("delay").unwrap(), FaultKind::Delay(Duration::from_millis(100)));
+        assert_eq!(parse_kind("delay25").unwrap(), FaultKind::Delay(Duration::from_millis(25)));
+        assert!(parse_kind("delayx").is_err());
+    }
+
+    #[test]
+    fn bad_specs_are_config_errors() {
+        clear();
+        for spec in [
+            "nope:panic:1.0:1",          // unknown point
+            "cache-write:explode:1.0:1", // unknown kind
+            "cache-write:panic:1.5:1",   // rate out of range
+            "cache-write:panic:1.0",     // missing seed
+            "cache-write:panic:x:1",     // bad rate
+        ] {
+            let e = install(spec).unwrap_err();
+            assert!(matches!(e, ScalifyError::Config(_)), "{spec}: {e}");
+        }
+        assert!(!enabled(), "failed installs must not arm the registry");
+        // a valid multi-entry spec arms every listed point
+        install("cache-write:bitrot:1.0:3, conn-write:drop:0.5:4").unwrap();
+        assert_eq!(snapshot().len(), 2);
+        clear();
+    }
+}

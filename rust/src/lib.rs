@@ -70,6 +70,7 @@
 pub mod error;
 pub mod obs;
 pub mod util;
+pub mod faults;
 pub mod ir;
 pub mod hlo;
 pub mod interp;

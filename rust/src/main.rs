@@ -38,7 +38,8 @@ use scalify::obs;
 use scalify::report::json::Json;
 use scalify::report::Table;
 use scalify::service::{
-    Client, Request, Response, Scheduler, Server, VerifyOpts, VerifySource, PROTOCOL_V2,
+    verify_with_retry, Client, Request, Response, RetryPolicy, Scheduler, Server,
+    VerifyOpts, VerifySource, PROTOCOL_V2,
 };
 use scalify::verifier::{GraphPair, Session, VerifyConfig, VerifyReport};
 use std::collections::HashMap;
@@ -170,7 +171,7 @@ fn cmd_verify(flags: &Flags) -> Result<ExitCode> {
     let session = Session::new(cli::config_from_flags(flags)?);
     let report = verify_incremental(&session, &pair, flags)?;
     emit_report(&report, flags.contains_key("json"), usize::MAX);
-    Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+    Ok(report_exit(&report))
 }
 
 fn cmd_model(flags: &Flags) -> Result<ExitCode> {
@@ -215,7 +216,7 @@ fn cmd_model(flags: &Flags) -> Result<ExitCode> {
     let session = Session::new(cli::config_from_flags(flags)?);
     let report = verify_incremental(&session, &pair, flags)?;
     emit_report(&report, json, 10);
-    Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+    Ok(report_exit(&report))
 }
 
 /// Parse an HLO file through the batch arena: each distinct
@@ -439,9 +440,43 @@ fn client_source(flags: &Flags) -> Result<VerifySource> {
     Ok(VerifySource::Model { model, par, layers, edit_layer })
 }
 
+/// Exit code for a verify outcome: 0 verified, 1 unverified, 4 degraded
+/// (the deadline cut the run; the verdict covers only the verified
+/// prefix, so neither 0 nor 1 would be honest).
+fn report_exit(report: &VerifyReport) -> ExitCode {
+    if report.degraded {
+        ExitCode::from(4)
+    } else if report.verified() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
 fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
     let addr = require(flags, "addr", "daemon address host:port")?;
-    let mut client = Client::connect(addr)?;
+    let timeout_secs: f64 = match flags.get("timeout-secs") {
+        Some(t) => {
+            let secs = t.parse().map_err(|_| {
+                ScalifyError::config(format!("--timeout-secs wants a number, got '{t}'"))
+            })?;
+            if secs < 0.0 {
+                return Err(ScalifyError::config(format!(
+                    "--timeout-secs must be >= 0 (0 disables the bound), got '{t}'"
+                )));
+            }
+            secs
+        }
+        None => 30.0,
+    };
+    let timeout = std::time::Duration::from_secs_f64(timeout_secs);
+    let retries: u32 = match flags.get("retries") {
+        Some(r) => r.parse().map_err(|_| {
+            ScalifyError::config(format!("--retries wants an integer, got '{r}'"))
+        })?,
+        None => 0,
+    };
+    let mut client = Client::connect_with_timeout(addr, timeout)?;
     let json = flags.contains_key("json");
     match op {
         "verify" => {
@@ -463,27 +498,67 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
                 || flags.contains_key("priority")
                 || flags.contains_key("deadline-secs")
                 || flags.contains_key("stream");
-            let (report, latency_secs, stats, warning) = if wants_v2 {
-                let opts = VerifyOpts {
-                    id: flags.get("id").cloned(),
-                    priority: match flags.get("priority") {
-                        Some(p) => p.parse().map_err(|_| {
-                            ScalifyError::config(format!(
-                                "--priority wants an integer, got '{p}'"
-                            ))
-                        })?,
-                        None => 0,
-                    },
-                    deadline_secs: match flags.get("deadline-secs") {
-                        Some(d) => Some(d.parse().map_err(|_| {
-                            ScalifyError::config(format!(
-                                "--deadline-secs wants a number, got '{d}'"
-                            ))
-                        })?),
-                        None => None,
-                    },
-                    stream: flags.contains_key("stream"),
+            let opts = VerifyOpts {
+                id: flags.get("id").cloned(),
+                priority: match flags.get("priority") {
+                    Some(p) => p.parse().map_err(|_| {
+                        ScalifyError::config(format!(
+                            "--priority wants an integer, got '{p}'"
+                        ))
+                    })?,
+                    None => 0,
+                },
+                deadline_secs: match flags.get("deadline-secs") {
+                    Some(d) => Some(d.parse().map_err(|_| {
+                        ScalifyError::config(format!(
+                            "--deadline-secs wants a number, got '{d}'"
+                        ))
+                    })?),
+                    None => None,
+                },
+                stream: flags.contains_key("stream"),
+            };
+            let on_event = |e: scalify::service::LayerEvent| {
+                eprintln!(
+                    "layer {} ({}/{}) {}",
+                    e.layer,
+                    e.index + 1,
+                    e.total,
+                    if e.verified { "verified" } else { "UNVERIFIED" }
+                );
+            };
+            let (report, latency_secs, stats, warning) = if retries > 0 {
+                // reconnect-and-retry: each attempt is a fresh v2
+                // connection reusing ONE request id, so a retry after a
+                // lost response supersedes the stale attempt instead of
+                // running it twice
+                let policy = RetryPolicy {
+                    attempts: retries + 1,
+                    timeout,
+                    ..RetryPolicy::default()
                 };
+                let request = match state {
+                    Some(s) => Request::VerifyDiff { source, state: s },
+                    None => Request::Verify(source),
+                };
+                let resp = verify_with_retry(addr, &request, &opts, &policy, on_event)?;
+                match resp {
+                    Response::VerifyDone { report, latency_secs, stats, warning, .. } => {
+                        (report, latency_secs, stats, warning)
+                    }
+                    Response::Cancelled { message, .. } => {
+                        return Err(ScalifyError::runtime(message));
+                    }
+                    Response::Error { message } => {
+                        return Err(ScalifyError::runtime(message));
+                    }
+                    other => {
+                        return Err(ScalifyError::runtime(format!(
+                            "unexpected response to verify: {other:?}"
+                        )));
+                    }
+                }
+            } else if wants_v2 {
                 let negotiated = client.hello(PROTOCOL_V2)?;
                 if negotiated < PROTOCOL_V2 {
                     return Err(ScalifyError::runtime(format!(
@@ -495,15 +570,7 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
                     Some(s) => Request::VerifyDiff { source, state: s },
                     None => Request::Verify(source),
                 };
-                let resp = client.verify_opts(&request, &opts, |e| {
-                    eprintln!(
-                        "layer {} ({}/{}) {}",
-                        e.layer,
-                        e.index + 1,
-                        e.total,
-                        if e.verified { "verified" } else { "UNVERIFIED" }
-                    );
-                })?;
+                let resp = client.verify_opts(&request, &opts, on_event)?;
                 match resp {
                     Response::VerifyDone { report, latency_secs, stats, warning, .. } => {
                         (report, latency_secs, stats, warning)
@@ -555,7 +622,41 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
                     latency_secs * 1e3
                 );
             }
-            Ok(if report.verified() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+            Ok(report_exit(&report))
+        }
+        "faults" => {
+            // inspect/arm/disarm the daemon's fault-injection registry
+            // (chaos tooling; see TESTING.md for the spec syntax)
+            client.hello(PROTOCOL_V2)?;
+            let spec = flags.get("set").map(String::as_str);
+            let clear = flags.contains_key("clear");
+            let faults = client.faults(spec, clear)?;
+            if json {
+                let docs = faults
+                    .iter()
+                    .map(|f| {
+                        Json::Obj(vec![
+                            ("point".into(), Json::Str(f.point.clone())),
+                            ("kind".into(), Json::Str(f.kind.clone())),
+                            ("rate".into(), Json::Num(f.rate)),
+                            ("seed".into(), Json::Num(f.seed as f64)),
+                            ("evaluated".into(), Json::Num(f.evaluated as f64)),
+                            ("fired".into(), Json::Num(f.fired as f64)),
+                        ])
+                    })
+                    .collect();
+                print!("{}", Json::Obj(vec![("faults".into(), Json::Arr(docs))]).render_pretty());
+            } else if faults.is_empty() {
+                eprintln!("scalify: no fault points armed");
+            } else {
+                for f in &faults {
+                    println!(
+                        "{}: {} at rate {} (seed {}) — fired {}/{}",
+                        f.point, f.kind, f.rate, f.seed, f.fired, f.evaluated
+                    );
+                }
+            }
+            Ok(ExitCode::SUCCESS)
         }
         "stats" => {
             print!("{}", client.stats()?.to_json().render_pretty());
@@ -584,8 +685,8 @@ fn cmd_client(op: &str, flags: &Flags) -> Result<ExitCode> {
             Ok(ExitCode::SUCCESS)
         }
         other => Err(ScalifyError::config(format!(
-            "unknown client operation '{other}' (expected verify, stats, metrics, cancel \
-             or shutdown; e.g. `scalify client stats --addr 127.0.0.1:7878`)"
+            "unknown client operation '{other}' (expected verify, stats, metrics, cancel, \
+             faults or shutdown; e.g. `scalify client stats --addr 127.0.0.1:7878`)"
         ))),
     }
 }
@@ -606,8 +707,9 @@ fn bench_check(baseline_path: &str, fresh_path: &str, tier: &str) -> Result<Exit
         "scale" => (2.0, 1.0, &["cold_secs", "warm_secs", "cold_nomemo_par_secs"]),
         "diff" => (2.0, 2.0, &["cold_secs", "incremental_secs"]),
         // the load tier gates client-observed percentiles under
-        // saturation; generous slack because shared CI runners queue
-        "serve" => (2.0, 0.5, &["p50_secs", "p95_secs"]),
+        // saturation; slack absorbs shared-CI queueing noise without
+        // letting a real regression through
+        "serve" => (2.0, 0.3, &["p50_secs", "p95_secs"]),
         _ => (1.5, 0.05, &["warm_secs"]),
     };
     let load = |path: &str| -> Result<Json> {
@@ -1352,6 +1454,60 @@ fn cmd_bench_serve_load(flags: &Flags, out_path: &str) -> Result<ExitCode> {
         max * 1e3
     );
 
+    // second phase: the same mix under a 10% slow-layer fault — measures
+    // the fleet's degraded throughput floor for the BENCH artifact
+    const DEGRADED_CLIENTS: usize = 4;
+    const DEGRADED_REQUESTS: usize = 8;
+    let mut fault_client = Client::connect(&addr)?;
+    fault_client.faults(Some("verify-layer:delay25:0.1:97"), false)?;
+    eprintln!(
+        "bench --serve-load: degraded phase — {DEGRADED_CLIENTS} clients × \
+         {DEGRADED_REQUESTS} requests under verify-layer:delay25:0.1:97…"
+    );
+    let t_deg = std::time::Instant::now();
+    let mut deg_handles = Vec::new();
+    for c in 0..DEGRADED_CLIENTS {
+        let addr = addr.clone();
+        let diff_source = diff_source.clone();
+        let state_doc = state_doc.clone();
+        deg_handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(&addr)?;
+            for r in 0..DEGRADED_REQUESTS {
+                match (c + r) % 3 {
+                    0 => {
+                        client.verify(VerifySource::Model {
+                            model: "llama-tiny".into(),
+                            par: "tp2".into(),
+                            layers: None,
+                            edit_layer: None,
+                        })?;
+                    }
+                    1 => {
+                        client.verify(VerifySource::Bug { id: "T4#1".into() })?;
+                    }
+                    _ => {
+                        client.verify_diff(diff_source.clone(), state_doc.clone())?;
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    for handle in deg_handles {
+        handle
+            .join()
+            .map_err(|_| ScalifyError::runtime("a degraded-phase client thread panicked"))??;
+    }
+    let degraded_secs = t_deg.elapsed().as_secs_f64();
+    let degraded_rps =
+        (DEGRADED_CLIENTS * DEGRADED_REQUESTS) as f64 / degraded_secs.max(1e-9);
+    fault_client.faults(None, true)?;
+    eprintln!(
+        "bench --serve-load: degraded phase — {} requests in {degraded_secs:.2}s, \
+         {degraded_rps:.1} req/s",
+        DEGRADED_CLIENTS * DEGRADED_REQUESTS
+    );
+
     // drain the daemon before reporting, so a wedged shutdown fails the
     // bench instead of leaking a background fleet
     let mut shutdown_client = Client::connect(&addr)?;
@@ -1370,6 +1526,7 @@ fn cmd_bench_serve_load(flags: &Flags, out_path: &str) -> Result<ExitCode> {
                 ("p95_secs".into(), Json::Num(p95)),
                 ("max_secs".into(), Json::Num(max)),
                 ("throughput_rps".into(), Json::Num(throughput_rps)),
+                ("degraded_rps".into(), Json::Num(degraded_rps)),
             ])]),
         ),
         ("total_secs".into(), Json::Num(total_secs)),
@@ -1479,17 +1636,21 @@ fn usage() -> String {
          scalify batch --manifest pairs.txt [--workers N] [--trace TRACE.json] [--json]\n  \
          scalify serve [--addr 127.0.0.1:7878] [--cache-dir DIR] [--queue N] [--workers N] \
          [--shards N]\n  \
-         scalify client verify|stats|metrics|cancel|shutdown --addr HOST:PORT [--model M \
-         --par P | --bug ID | --base a.hlo --dist b.hlo] [--against STATE.json] \
-         [--edit-layer N] [--id ID] [--priority N] [--deadline-secs S] [--stream] [--json]\n  \
+         scalify client verify|stats|metrics|cancel|faults|shutdown --addr HOST:PORT \
+         [--model M --par P | --bug ID | --base a.hlo --dist b.hlo] [--against STATE.json] \
+         [--edit-layer N] [--id ID] [--priority N] [--deadline-secs S] [--stream] \
+         [--timeout-secs S] [--retries N] [--set SPEC] [--clear] [--json]\n  \
          scalify bench [--scale|--diff|--serve-load] [--model M] [--out FILE] \
          [--check BASELINE.json] [--trace TRACE.json] [--json]\n  \
          scalify bugs [--reproduced|--new|--transform]\n  \
          scalify exec --artifact artifacts/model_single.hlo.txt\n  \
          scalify info\n\
          common flags: --threads N --memo-capacity N --no-partition --no-parallel --no-memoize\n\
-         env: SCALIFY_LOG=warn|info|debug (stderr log level, default warn)\n\
-         exit codes: 0 verified/ok · 1 unverified · 2 usage/input error · 3 runtime error",
+         env: SCALIFY_LOG=warn|info|debug (stderr log level, default warn)\n     \
+         SCALIFY_FAULTS=point:kind:rate:seed[,...] (deterministic fault injection,\n     \
+         e.g. shard-verify:panic:0.2:42 — see TESTING.md § chaos suite)\n\
+         exit codes: 0 verified/ok · 1 unverified · 2 usage/input error · 3 runtime error \
+         · 4 degraded (deadline hit; partial verdict)",
         scalify::VERSION
     )
 }
@@ -1532,6 +1693,12 @@ fn run(args: &[String]) -> Result<ExitCode> {
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // arm chaos faults before any subsystem runs, so injection covers
+    // startup paths (cache load, shard construction) too
+    if let Err(e) = scalify::faults::install_from_env() {
+        eprintln!("scalify: {e}");
+        return ExitCode::from(2);
+    }
     match run(&args) {
         Ok(code) => code,
         Err(e) => {

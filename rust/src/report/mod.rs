@@ -314,6 +314,14 @@ impl VerifyReport {
         if let Verdict::ResourceExhausted { at } = &self.verdict {
             fields.push(("exhausted_at".into(), Json::Str(at.clone())));
         }
+        // only emitted on degraded runs, so non-degraded renders stay
+        // byte-identical to pre-degradation captures
+        if self.degraded {
+            fields.push(("degraded".into(), Json::Bool(true)));
+            if let Some(at) = &self.first_unverified {
+                fields.push(("first_unverified".into(), Json::Str(at.clone())));
+            }
+        }
         fields.push((
             "discrepancies".into(),
             Json::Arr(self.discrepancies().iter().map(Discrepancy::to_json).collect()),
@@ -381,6 +389,8 @@ impl VerifyReport {
             layers,
             stopwatch,
             total: Duration::from_secs_f64(num_field(doc, "total_secs")?.max(0.0)),
+            degraded: doc.bool_at("degraded").unwrap_or(false),
+            first_unverified: doc.str_at("first_unverified").map(str::to_string),
         })
     }
 
@@ -503,9 +513,13 @@ mod tests {
                 sw
             },
             total: Duration::from_millis(8),
+            degraded: true,
+            first_unverified: Some("layer 4".into()),
         };
         let text = report.to_json_string();
         let back = VerifyReport::from_json_str(&text).unwrap();
+        assert!(back.degraded);
+        assert_eq!(back.first_unverified.as_deref(), Some("layer 4"));
         assert_eq!(back.verdict.status(), report.verdict.status());
         assert_eq!(back.verified(), report.verified());
         assert_eq!(back.discrepancies().len(), 1);

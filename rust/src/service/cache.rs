@@ -319,7 +319,7 @@ impl MemoCache {
             }
         }
         let mut file = self.file.lock().expect("cache file lock");
-        let (buf, total, fresh) = {
+        let (mut buf, total, fresh) = {
             let index = self.index.lock().expect("cache lock");
             if file.valid {
                 // usually just our record; a racing recorder that queued
@@ -331,6 +331,23 @@ impl MemoCache {
         };
         if !fresh && buf.is_empty() {
             return;
+        }
+        if let Some(action) = crate::faults::fire("cache-write") {
+            match action.kind {
+                crate::faults::FaultKind::Bitrot if !buf.is_empty() => {
+                    // corrupt one byte of the outgoing record; the startup
+                    // checksum scan must catch it and degrade to cold
+                    let at = (action.noise % buf.len() as u64) as usize;
+                    buf[at] ^= 0x01;
+                }
+                crate::faults::FaultKind::Error => {
+                    file.valid = false;
+                    crate::log_warn!("cache append skipped: injected fault at cache-write");
+                    return;
+                }
+                crate::faults::FaultKind::Delay(d) => std::thread::sleep(d),
+                _ => {}
+            }
         }
         let wrote = if fresh { self.replace_file(&buf) } else { self.append_file(&buf) };
         match wrote {

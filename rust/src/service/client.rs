@@ -8,27 +8,207 @@
 //! wire reference lives in `docs/PROTOCOL.md`.
 
 use super::protocol::{
-    LayerEvent, Request, Response, StatsSnapshot, VerifyOpts, VerifySource,
+    LayerEvent, Request, Response, StatsSnapshot, VerifyOpts, VerifySource, PROTOCOL_V2,
 };
 use crate::error::{Result, ResultExt, ScalifyError};
 use crate::report::json::Json;
+use crate::util::Prng;
 use crate::verifier::VerifyReport;
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Default per-attempt socket timeout (connect, read and write): a hung
+/// daemon surfaces as a typed error instead of pinning the caller
+/// forever. `scalify client --timeout-secs` overrides it.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Monotone counter behind [`next_request_id`].
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(0);
+
+/// A process-unique v2 request id. Retry loops reuse ONE id across every
+/// attempt of the same logical request: re-submitting under an in-flight
+/// id supersedes (cancels) the stale attempt on the daemon, so a retry
+/// after a lost response never runs the same verify twice concurrently.
+pub fn next_request_id() -> String {
+    format!("req-{}-{}", std::process::id(), NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed))
+}
+
+/// True for errors worth re-submitting: transport faults (the response
+/// was lost; the daemon may or may not have served the request) and
+/// daemon errors carrying the `retryable: ` convention (shard restarted
+/// mid-job, injected fault). Verdicts, parse errors and unknown-model
+/// errors are terminal.
+pub fn is_retryable(message: &str) -> bool {
+    // OS error strings vary in case ("Connection refused (os error 111)")
+    let m = message.to_ascii_lowercase();
+    m.contains("retryable: ")
+        || m.contains("timed out")
+        || m.contains("connection refused")
+        || m.contains("connection reset")
+        || m.contains("broken pipe")
+        || m.contains("closed the connection")
+        || m.contains("connecting to")
+}
+
+/// Client-side resilience policy: per-attempt socket timeouts plus
+/// truncated exponential backoff with deterministic jitter between
+/// attempts.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, first try included (1 = no retry).
+    pub attempts: u32,
+    /// Backoff before retry `n` is `base_backoff * 2^(n-1)`, capped at
+    /// [`RetryPolicy::max_backoff`], plus up to 50% jitter.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Per-attempt connect/read/write timeout.
+    pub timeout: Duration,
+    /// Jitter PRNG seed (deterministic for tests; vary per process for
+    /// fleet de-synchronization).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 3,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+            timeout: DEFAULT_TIMEOUT,
+            jitter_seed: std::process::id() as u64,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry attempt `n` (1-based): truncated binary
+    /// exponential backoff with up to +50% deterministic jitter.
+    pub fn backoff(&self, n: u32, prng: &mut Prng) -> Duration {
+        let exp = self.base_backoff.saturating_mul(1u32 << n.saturating_sub(1).min(16));
+        let capped = exp.min(self.max_backoff);
+        let jitter_ms = capped.as_millis() as u64 / 2;
+        let jitter = if jitter_ms == 0 { 0 } else { prng.below(jitter_ms + 1) };
+        capped + Duration::from_millis(jitter)
+    }
+}
+
+/// Submit one verify request under a [`RetryPolicy`]: reconnect per
+/// attempt (the previous connection may be dead), negotiate v2, reuse a
+/// single request id across attempts (supersession makes the retry
+/// idempotent), and back off between attempts. Streamed events from any
+/// attempt reach `on_event`. Returns the first terminal outcome:
+/// [`Response::VerifyDone`], [`Response::Cancelled`], a non-retryable
+/// daemon error, or — attempts exhausted — the last retryable error.
+pub fn verify_with_retry(
+    addr: &str,
+    request: &Request,
+    opts: &VerifyOpts,
+    policy: &RetryPolicy,
+    mut on_event: impl FnMut(LayerEvent),
+) -> Result<Response> {
+    let mut opts = opts.clone();
+    if opts.id.is_none() {
+        opts.id = Some(next_request_id());
+    }
+    let mut prng = Prng::new(policy.jitter_seed);
+    let attempts = policy.attempts.max(1);
+    let mut last: Option<ScalifyError> = None;
+    for attempt in 1..=attempts {
+        if attempt > 1 {
+            std::thread::sleep(policy.backoff(attempt - 1, &mut prng));
+        }
+        let outcome = Client::connect_with_timeout(addr, policy.timeout)
+            .and_then(|mut client| {
+                client.hello(PROTOCOL_V2)?;
+                client.verify_opts(request, &opts, &mut on_event)
+            });
+        match outcome {
+            Ok(Response::Error { message }) if is_retryable(&message) => {
+                crate::log_debug!("attempt {attempt}/{attempts} failed: {message}");
+                last = Some(ScalifyError::runtime(message));
+            }
+            Ok(terminal) => return Ok(terminal),
+            Err(e) if is_retryable(e.message()) => {
+                crate::log_debug!("attempt {attempt}/{attempts} failed: {e}");
+                last = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| ScalifyError::runtime("no attempts were made")))
+}
 
 /// A connected protocol client.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    timeout: Duration,
 }
 
 impl Client {
-    /// Connect to a daemon at `host:port`.
+    /// Connect to a daemon at `host:port` with the
+    /// [`DEFAULT_TIMEOUT`] on connect and per-request I/O.
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream =
-            TcpStream::connect(addr).with_ctx(|| format!("connecting to {addr}"))?;
+        Client::connect_with_timeout(addr, DEFAULT_TIMEOUT)
+    }
+
+    /// Connect with an explicit timeout applied to the connect itself
+    /// and to every later read/write. A zero timeout disables the
+    /// bound (blocking I/O).
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        let stream = if timeout.is_zero() {
+            TcpStream::connect(addr).with_ctx(|| format!("connecting to {addr}"))?
+        } else {
+            let resolved = addr
+                .to_socket_addrs()
+                .with_ctx(|| format!("connecting to {addr}"))?
+                .next()
+                .ok_or_else(|| {
+                    ScalifyError::runtime(format!("connecting to {addr}: no address"))
+                })?;
+            TcpStream::connect_timeout(&resolved, timeout).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::WouldBlock
+                {
+                    ScalifyError::runtime(format!(
+                        "connecting to {addr}: timed out after {:.1}s",
+                        timeout.as_secs_f64()
+                    ))
+                } else {
+                    ScalifyError::from(e).context(format!("connecting to {addr}"))
+                }
+            })?
+        };
+        if !timeout.is_zero() {
+            stream.set_read_timeout(Some(timeout)).ctx("configuring socket")?;
+            stream.set_write_timeout(Some(timeout)).ctx("configuring socket")?;
+        }
         let writer = stream.try_clone().ctx("cloning connection")?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client { reader: BufReader::new(stream), writer, timeout })
+    }
+
+    /// The configured per-request I/O timeout (zero = unbounded).
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Typed mapping for an I/O failure: socket-timeout kinds become a
+    /// `timed out` runtime error (retryable), everything else keeps the
+    /// plain I/O context.
+    fn io_error(&self, e: std::io::Error, doing: &str) -> ScalifyError {
+        if e.kind() == std::io::ErrorKind::TimedOut
+            || e.kind() == std::io::ErrorKind::WouldBlock
+        {
+            ScalifyError::runtime(format!(
+                "{doing}: timed out after {:.1}s",
+                self.timeout.as_secs_f64()
+            ))
+        } else {
+            ScalifyError::from(e).context(doing)
+        }
     }
 
     /// Send one request, read one response.
@@ -41,10 +221,15 @@ impl Client {
     pub fn request_line(&mut self, line: &str) -> Result<Response> {
         let mut out = line.to_string();
         out.push('\n');
-        self.writer.write_all(out.as_bytes()).ctx("sending request")?;
-        self.writer.flush().ctx("sending request")?;
+        self.writer
+            .write_all(out.as_bytes())
+            .map_err(|e| self.io_error(e, "sending request"))?;
+        self.writer.flush().map_err(|e| self.io_error(e, "sending request"))?;
         let mut buf = String::new();
-        let n = self.reader.read_line(&mut buf).ctx("reading response")?;
+        let n = self
+            .reader
+            .read_line(&mut buf)
+            .map_err(|e| self.io_error(e, "reading response"))?;
         if n == 0 {
             return Err(ScalifyError::runtime(
                 "server closed the connection before responding",
@@ -159,11 +344,16 @@ impl Client {
         }
         let mut out = doc.render();
         out.push('\n');
-        self.writer.write_all(out.as_bytes()).ctx("sending request")?;
-        self.writer.flush().ctx("sending request")?;
+        self.writer
+            .write_all(out.as_bytes())
+            .map_err(|e| self.io_error(e, "sending request"))?;
+        self.writer.flush().map_err(|e| self.io_error(e, "sending request"))?;
         loop {
             let mut buf = String::new();
-            let n = self.reader.read_line(&mut buf).ctx("reading response")?;
+            let n = self
+                .reader
+                .read_line(&mut buf)
+                .map_err(|e| self.io_error(e, "reading response"))?;
             if n == 0 {
                 return Err(ScalifyError::runtime(
                     "server closed the connection before responding",
@@ -176,6 +366,25 @@ impl Client {
         }
     }
 
+    /// Inspect or change the daemon's fault-injection registry (v2):
+    /// optionally disarm everything (`clear`), optionally install a
+    /// `SCALIFY_FAULTS`-syntax `spec`, and return the armed points with
+    /// their evaluated/fired counters.
+    pub fn faults(
+        &mut self,
+        spec: Option<&str>,
+        clear: bool,
+    ) -> Result<Vec<crate::faults::FaultStatus>> {
+        let request = Request::Faults { set: spec.map(str::to_owned), clear };
+        match self.request(&request)? {
+            Response::Faults { faults } => Ok(faults),
+            Response::Error { message } => Err(ScalifyError::runtime(message)),
+            other => Err(ScalifyError::runtime(format!(
+                "unexpected response to faults: {other:?}"
+            ))),
+        }
+    }
+
     /// Ask the daemon to exit.
     pub fn shutdown(&mut self) -> Result<()> {
         match self.request(&Request::Shutdown)? {
@@ -185,5 +394,74 @@ impl Client {
                 "unexpected response to shutdown: {other:?}"
             ))),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retryable_classification_covers_transport_and_convention() {
+        for msg in [
+            "retryable: shard 0 restarted after a crashed verify job (x); retry the request",
+            "reading response: timed out after 30.0s",
+            "connecting to 127.0.0.1:1: connection refused",
+            "server closed the connection before responding",
+        ] {
+            assert!(is_retryable(msg), "{msg}");
+        }
+        for msg in [
+            "unknown model 'gpt-5'",
+            "parse error: missing a limit",
+            "deadline exceeded while queued",
+        ] {
+            assert!(!is_retryable(msg), "{msg}");
+        }
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let policy = RetryPolicy {
+            attempts: 8,
+            base_backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_millis(400),
+            timeout: DEFAULT_TIMEOUT,
+            jitter_seed: 7,
+        };
+        let mut prng = Prng::new(policy.jitter_seed);
+        let b1 = policy.backoff(1, &mut prng);
+        let b2 = policy.backoff(2, &mut prng);
+        let b4 = policy.backoff(4, &mut prng);
+        assert!(b1 >= Duration::from_millis(100) && b1 <= Duration::from_millis(150), "{b1:?}");
+        assert!(b2 >= Duration::from_millis(200) && b2 <= Duration::from_millis(300), "{b2:?}");
+        // capped: never beyond max + 50% jitter
+        assert!(b4 <= Duration::from_millis(600), "{b4:?}");
+        // deterministic for a fixed seed
+        let mut again = Prng::new(policy.jitter_seed);
+        assert_eq!(policy.backoff(1, &mut again), b1);
+    }
+
+    #[test]
+    fn request_ids_are_process_unique_and_monotone() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+        assert!(a.starts_with("req-"), "{a}");
+    }
+
+    #[test]
+    fn connecting_to_a_dead_port_is_a_typed_retryable_error() {
+        // bind-then-drop: the port was just free, so connect must fail fast
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = Client::connect_with_timeout(
+            &format!("127.0.0.1:{port}"),
+            Duration::from_millis(500),
+        )
+        .unwrap_err();
+        assert!(is_retryable(err.message()), "{err}");
     }
 }

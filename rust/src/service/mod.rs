@@ -26,7 +26,14 @@
 //! * [`server`] — the accept loop, protocol negotiation and connection
 //!   handling around the shard pool, and
 //! * [`client`] — the blocking client the `scalify client` subcommand
-//!   and the tests drive the daemon with.
+//!   and the tests drive the daemon with: per-attempt socket timeouts,
+//!   plus [`client::RetryPolicy`] reconnect-and-retry with exponential
+//!   backoff for transient faults (`retryable: `-prefixed daemon errors
+//!   and transport failures).
+//!
+//! Failure domains and the chaos-testing story (the [`crate::faults`]
+//! registry, shard supervision, deadline degradation) are documented in
+//! `ARCHITECTURE.md` § "Failure domains & recovery".
 
 pub mod cache;
 pub mod client;
@@ -36,7 +43,10 @@ pub mod server;
 pub mod shard;
 
 pub use cache::{CacheLoad, MemoCache, CACHE_FILE, CACHE_FORMAT_VERSION};
-pub use client::Client;
+pub use client::{
+    is_retryable, next_request_id, verify_with_retry, Client, RetryPolicy,
+    DEFAULT_TIMEOUT,
+};
 pub use protocol::{
     LayerEvent, Request, Response, ShardStat, StatsSnapshot, VerifyOpts, VerifySource,
     PROTOCOL_V2, PROTOCOL_VERSION,

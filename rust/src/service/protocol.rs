@@ -121,6 +121,16 @@ pub enum Request {
         /// The `id` the verify request was submitted with.
         id: String,
     },
+    /// Inspect or change the daemon's fault-injection registry (v2,
+    /// chaos testing). With neither `set` nor `clear` this just lists
+    /// the armed points and their evaluated/fired counters.
+    Faults {
+        /// `SCALIFY_FAULTS`-syntax spec to install (`point:kind:rate:seed`,
+        /// comma separated), merged over the armed points.
+        set: Option<String>,
+        /// Disarm every point first.
+        clear: bool,
+    },
 }
 
 impl Request {
@@ -153,6 +163,16 @@ impl Request {
                 ("cmd".into(), Json::Str("cancel".into())),
                 ("id".into(), Json::Str(id.clone())),
             ]),
+            Request::Faults { set, clear } => {
+                let mut fields = vec![("cmd".into(), Json::Str("faults".into()))];
+                if let Some(spec) = set {
+                    fields.push(("set".into(), Json::Str(spec.clone())));
+                }
+                if *clear {
+                    fields.push(("clear".into(), Json::Bool(true)));
+                }
+                Json::Obj(fields)
+            }
         }
     }
 
@@ -197,9 +217,13 @@ impl Request {
                 })?;
                 Ok(Request::Cancel { id: id.to_string() })
             }
+            "faults" => Ok(Request::Faults {
+                set: doc.str_at("set").map(str::to_owned),
+                clear: doc.bool_at("clear").unwrap_or(false),
+            }),
             other => Err(ScalifyError::parse(format!(
                 "unknown request cmd '{other}' (expected verify, verify_diff, stats, \
-                 metrics, shutdown, hello or cancel)"
+                 metrics, shutdown, hello, cancel or faults)"
             ))),
         }
     }
@@ -480,6 +504,12 @@ pub struct StatsSnapshot {
     pub latency_p95_secs: f64,
     /// Worst verify latency.
     pub latency_max_secs: f64,
+    /// Verify jobs that returned a degraded (deadline-truncated) report
+    /// (v2 only; 0 and unencoded on v1).
+    pub degraded_total: u64,
+    /// Supervisor restarts of panicked/poisoned shards (v2 only; 0 and
+    /// unencoded on v1).
+    pub shard_restarts_total: u64,
     /// Per-shard detail (v2 only; empty and unencoded on v1).
     pub shards: Vec<ShardStat>,
 }
@@ -507,6 +537,8 @@ impl Default for StatsSnapshot {
             latency_p50_secs: 0.0,
             latency_p95_secs: 0.0,
             latency_max_secs: 0.0,
+            degraded_total: 0,
+            shard_restarts_total: 0,
             shards: Vec::new(),
         }
     }
@@ -545,8 +577,15 @@ impl StatsSnapshot {
         if let Some(dir) = &self.cache_dir {
             fields.push(("cache_dir".into(), Json::Str(dir.clone())));
         }
-        // v1 bytes stop here; the shard array is a v2-only appendix
+        // v1 bytes stop here; the fleet-health counters and the shard
+        // array are a v2-only appendix (shards stays last: v2 consumers
+        // pin the render's tail)
         if self.protocol >= PROTOCOL_V2 {
+            fields.push(("degraded_total".into(), Json::Num(self.degraded_total as f64)));
+            fields.push((
+                "shard_restarts_total".into(),
+                Json::Num(self.shard_restarts_total as f64),
+            ));
             fields.push((
                 "shards".into(),
                 Json::Arr(self.shards.iter().map(ShardStat::to_json).collect()),
@@ -594,6 +633,8 @@ impl StatsSnapshot {
             latency_p50_secs: doc.f64_at("latency_p50_secs").unwrap_or(0.0),
             latency_p95_secs: doc.f64_at("latency_p95_secs").unwrap_or(0.0),
             latency_max_secs: doc.f64_at("latency_max_secs").unwrap_or(0.0),
+            degraded_total: doc.u64_at("degraded_total").unwrap_or(0),
+            shard_restarts_total: doc.u64_at("shard_restarts_total").unwrap_or(0),
             shards,
         })
     }
@@ -657,6 +698,12 @@ pub enum Response {
         /// Why the request stopped (`cancelled`, `superseded`,
         /// `deadline exceeded`).
         message: String,
+    },
+    /// Faults request served (v2): the armed injection points after any
+    /// requested install/clear.
+    Faults {
+        /// Snapshot of every armed point.
+        faults: Vec<crate::faults::FaultStatus>,
     },
     /// The request failed (malformed input, unknown model, parse error).
     Error {
@@ -737,6 +784,28 @@ impl Response {
                 }
                 Json::Obj(fields)
             }
+            Response::Faults { faults } => Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("kind".into(), Json::Str("faults".into())),
+                (
+                    "faults".into(),
+                    Json::Arr(
+                        faults
+                            .iter()
+                            .map(|f| {
+                                Json::Obj(vec![
+                                    ("point".into(), Json::Str(f.point.clone())),
+                                    ("kind".into(), Json::Str(f.kind.clone())),
+                                    ("rate".into(), Json::Num(f.rate)),
+                                    ("seed".into(), Json::Num(f.seed as f64)),
+                                    ("evaluated".into(), Json::Num(f.evaluated as f64)),
+                                    ("fired".into(), Json::Num(f.fired as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
             Response::Error { message } => Json::Obj(vec![
                 ("ok".into(), Json::Bool(false)),
                 ("error".into(), Json::Str(message.clone())),
@@ -837,6 +906,33 @@ impl Response {
                     total: need("total")?,
                     verified: doc.bool_at("verified").unwrap_or(false),
                 }))
+            }
+            Some("faults") => {
+                let items = doc
+                    .get("faults")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        ScalifyError::parse("faults response is missing the 'faults' array")
+                    })?;
+                let faults = items
+                    .iter()
+                    .map(|f| {
+                        Ok(crate::faults::FaultStatus {
+                            point: f
+                                .str_at("point")
+                                .ok_or_else(|| {
+                                    ScalifyError::parse("fault entry is missing 'point'")
+                                })?
+                                .to_string(),
+                            kind: f.str_at("kind").unwrap_or("").to_string(),
+                            rate: f.f64_at("rate").unwrap_or(0.0),
+                            seed: f.u64_at("seed").unwrap_or(0),
+                            evaluated: f.u64_at("evaluated").unwrap_or(0),
+                            fired: f.u64_at("fired").unwrap_or(0),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Response::Faults { faults })
             }
             other => Err(ScalifyError::parse(format!(
                 "unknown response kind {other:?}"
@@ -964,6 +1060,8 @@ mod tests {
             latency_p50_secs: 0.01,
             latency_p95_secs: 0.05,
             latency_max_secs: 0.2,
+            degraded_total: 0,
+            shard_restarts_total: 0,
             shards: vec![],
         };
         let back = StatsSnapshot::from_json(&snap.to_json()).unwrap();
@@ -1006,6 +1104,8 @@ mod tests {
             layers: vec![],
             stopwatch: crate::util::Stopwatch::new(),
             total: std::time::Duration::from_millis(3),
+            degraded: false,
+            first_unverified: None,
         };
         let resp = Response::VerifyDone {
             report,
@@ -1037,6 +1137,8 @@ mod tests {
                 layers: vec![],
                 stopwatch: crate::util::Stopwatch::new(),
                 total: std::time::Duration::from_millis(1),
+                degraded: false,
+                first_unverified: None,
             },
             latency_secs: 0.001,
             stats: StatsSnapshot::default(),
@@ -1151,15 +1253,53 @@ mod tests {
     fn v1_stats_never_encode_the_shard_array() {
         let mut snap = StatsSnapshot { jobs: 3, ..Default::default() };
         snap.shards = vec![ShardStat { shard: 0, jobs: 3, ..Default::default() }];
+        snap.degraded_total = 2;
+        snap.shard_restarts_total = 1;
         assert_eq!(snap.protocol, PROTOCOL_VERSION);
         let line = snap.to_json().render();
         assert!(!line.contains("shards"), "v1 stats must stay byte-identical: {line}");
+        assert!(!line.contains("degraded_total"), "{line}");
+        assert!(!line.contains("shard_restarts_total"), "{line}");
 
         snap.protocol = PROTOCOL_V2;
         let line = snap.to_json().render();
         assert!(line.contains("\"shards\":[{\"shard\":0"), "{line}");
+        assert!(line.contains("\"degraded_total\":2"), "{line}");
+        assert!(line.contains("\"shard_restarts_total\":1"), "{line}");
         let back = StatsSnapshot::from_json(&Json::parse(&line).unwrap()).unwrap();
         assert_eq!(back, snap);
         assert_eq!(back.shards.len(), 1);
+    }
+
+    #[test]
+    fn faults_requests_and_responses_round_trip() {
+        round_trip_request(Request::Faults {
+            set: Some("shard-verify:panic:0.1:7".into()),
+            clear: false,
+        });
+        round_trip_request(Request::Faults { set: None, clear: true });
+
+        let resp = Response::Faults {
+            faults: vec![crate::faults::FaultStatus {
+                point: "conn-write".into(),
+                kind: "drop".into(),
+                rate: 0.25,
+                seed: 9,
+                evaluated: 12,
+                fired: 3,
+            }],
+        };
+        let line = resp.to_line();
+        match Response::from_line(&line).unwrap() {
+            Response::Faults { faults } => {
+                assert_eq!(faults.len(), 1);
+                assert_eq!(faults[0].point, "conn-write");
+                assert_eq!(faults[0].kind, "drop");
+                assert!((faults[0].rate - 0.25).abs() < 1e-9);
+                assert_eq!(faults[0].evaluated, 12);
+                assert_eq!(faults[0].fired, 3);
+            }
+            other => panic!("expected faults response, got {other:?}"),
+        }
     }
 }

@@ -200,6 +200,7 @@ impl Scheduler {
         F: FnOnce() -> T + Send + 'static,
     {
         let (tx, rx) = channel::<std::thread::Result<T>>();
+        crate::faults::check("sched-admit")?;
         self.acquire_prio(priority, deadline)?;
         self.submitted.fetch_add(1, Ordering::Relaxed);
         let slots = Arc::clone(&self.slots);

@@ -104,6 +104,8 @@ struct ServiceState {
     inflight_ids: Mutex<FxHashMap<String, Arc<AtomicBool>>>,
     /// Verify jobs that produced a report.
     jobs: AtomicU64,
+    /// Verify jobs that produced a deadline-degraded (partial) report.
+    degraded: AtomicU64,
     /// Total e-graph nodes across completed jobs.
     egraph_nodes_total: AtomicU64,
     /// Total e-nodes examined by the e-matcher across completed jobs.
@@ -194,6 +196,16 @@ impl ServiceState {
             latency_p50_secs: p50,
             latency_p95_secs: p95,
             latency_max_secs: max,
+            degraded_total: if protocol >= PROTOCOL_V2 {
+                self.degraded.load(Ordering::Relaxed)
+            } else {
+                0
+            },
+            shard_restarts_total: if protocol >= PROTOCOL_V2 {
+                self.shards.restarts_total()
+            } else {
+                0
+            },
             shards: if protocol >= PROTOCOL_V2 {
                 self.shards.shard_stats()
             } else {
@@ -263,6 +275,7 @@ impl Server {
             cache_loaded,
             inflight_ids: Mutex::new(FxHashMap::default()),
             jobs: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             egraph_nodes_total: AtomicU64::new(0),
             ematch_tried_total: AtomicU64::new(0),
             rule_applications_total: AtomicU64::new(0),
@@ -356,6 +369,14 @@ struct ConnCtx {
 /// mutex keeps streamed event lines and terminal responses from
 /// interleaving mid-line).
 fn write_line(writer: &Arc<Mutex<TcpStream>>, response: &Response) -> bool {
+    if let Some(action) = crate::faults::fire("conn-write") {
+        match action.kind {
+            crate::faults::FaultKind::Delay(d) => std::thread::sleep(d),
+            // any other kind swallows the response, as a torn socket
+            // would; the caller closes the connection
+            _ => return false,
+        }
+    }
     let mut out = response.to_line();
     out.push('\n');
     let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
@@ -408,6 +429,14 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>) {
     loop {
         if state.shutdown.load(Ordering::SeqCst) {
             break;
+        }
+        if let Some(action) = crate::faults::fire("conn-read") {
+            match action.kind {
+                crate::faults::FaultKind::Delay(d) => std::thread::sleep(d),
+                // any other kind drops the connection mid-read, as a
+                // flaky network would; clients are expected to retry
+                _ => break,
+            }
         }
         if line.len() >= MAX_REQUEST_BYTES {
             let _ = write_line(
@@ -485,6 +514,17 @@ fn handle_request(
             Response::CancelAck { id, cancelled }
         }
         Request::Stats => Response::Stats(state.snapshot_for(ctx.protocol)),
+        Request::Faults { set, clear } => {
+            if clear {
+                crate::faults::clear();
+            }
+            if let Some(spec) = set {
+                if let Err(e) = crate::faults::install(&spec) {
+                    return Response::Error { message: e.to_string() };
+                }
+            }
+            Response::Faults { faults: crate::faults::snapshot() }
+        }
         Request::Metrics => Response::Metrics { prometheus: render_metrics(state) },
         Request::Shutdown => {
             state.shutdown.store(true, Ordering::SeqCst);
@@ -612,6 +652,7 @@ fn run_verify_job(
     writer: &Arc<Mutex<TcpStream>>,
 ) -> Response {
     let t0 = obs::stamp();
+    crate::faults::disturb("shard-route");
     let shard_idx = state.shards.index_for(family_key(&source));
     state.shards.shard(shard_idx).jobs.fetch_add(1, Ordering::Relaxed);
 
@@ -648,6 +689,7 @@ fn run_verify_job(
     let outcome = state
         .scheduler
         .execute_prio(opts.priority, deadline, move || {
+            crate::faults::check("shard-verify")?;
             let pair = build_pair(&source)?;
             let session = job_state.shards.shard(shard_idx).session();
             match prev {
@@ -706,6 +748,10 @@ fn run_verify_job(
             state.rule_applications_total.fetch_add(applied, Ordering::Relaxed);
             state.record_latency(latency_secs);
             state.shards.shard(shard_idx).latency.observe(latency_secs);
+            if report.degraded {
+                state.degraded.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::count("scalify_degraded_total", 1);
+            }
             Response::VerifyDone {
                 report,
                 latency_secs,
@@ -721,6 +767,24 @@ fn run_verify_job(
             // plain error either way
             if token.load(Ordering::SeqCst) || message.contains("deadline exceeded") {
                 Response::Cancelled { id: opts.id, message }
+            } else if message.contains("panicked") {
+                // supervision: a panicking job may have poisoned the
+                // shard's session internals mid-layer. Swap in a fresh
+                // session warm from the persistent cache (sibling shards
+                // keep serving throughout) and answer with a typed
+                // retryable error so the client re-submits.
+                let warm = state.cache.as_ref().map(|c| c.entries()).unwrap_or_default();
+                let preloaded = state.shards.restart_shard(shard_idx, &warm);
+                crate::log_warn!(
+                    "shard {shard_idx} restarted after a crashed verify job \
+                     ({preloaded} memo entries preloaded warm)"
+                );
+                Response::Error {
+                    message: format!(
+                        "retryable: shard {shard_idx} restarted after a crashed \
+                         verify job ({message}); retry the request"
+                    ),
+                }
             } else {
                 Response::Error { message }
             }
@@ -988,12 +1052,17 @@ mod tests {
             Response::Error { message } => {
                 assert!(message.contains("panicked"), "{message}");
                 assert!(message.contains("deliberate test panic"), "{message}");
+                // the supervisor marks the error retryable and names the
+                // restarted shard
+                assert!(message.starts_with("retryable: "), "{message}");
+                assert!(message.contains("restarted"), "{message}");
             }
             other => panic!("expected error, got {other:?}"),
         }
 
         // …and the very next request on the same daemon still verifies
-        // (the admission slot released; the pool lock did not poison)
+        // (the admission slot released; the supervisor swapped the shard's
+        // session for a fresh one)
         let (report, _, stats) = client
             .verify(VerifySource::Model {
                 model: "llama-tiny".into(),
@@ -1004,6 +1073,11 @@ mod tests {
             .unwrap();
         assert!(report.verified(), "{:?}", report.verdict);
         assert_eq!(stats.jobs, 1);
+
+        // the restart is visible in the v2 counters
+        client.hello(PROTOCOL_V2).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.shard_restarts_total, 1, "{stats:?}");
 
         client.shutdown().unwrap();
         server.wait();
@@ -1156,7 +1230,7 @@ mod tests {
     }
 
     #[test]
-    fn expired_deadline_comes_back_as_a_cancelled_response() {
+    fn expired_deadline_degrades_to_a_partial_verdict() {
         let server = Server::start(tiny_serve_config()).unwrap();
         let addr = server.local_addr().to_string();
         let mut client = Client::connect(&addr).unwrap();
@@ -1171,17 +1245,21 @@ mod tests {
             .verify_opts(&Request::Verify(zoo_source()), &opts, |_| {})
             .unwrap();
         match resp {
-            Response::Cancelled { id, message } => {
+            Response::VerifyDone { report, id, stats, .. } => {
                 assert_eq!(id.as_deref(), Some("doomed"));
-                assert!(message.contains("deadline exceeded"), "{message}");
+                assert!(report.degraded, "an expired deadline must degrade: {report:?}");
+                let at = report.first_unverified.as_deref().expect("first unverified");
+                assert!(at.starts_with("layer "), "{at}");
+                assert!(report.summary().contains("DEGRADED"), "{}", report.summary());
+                assert_eq!(stats.degraded_total, 1, "{stats:?}");
             }
-            other => panic!("expected Cancelled, got {other:?}"),
+            other => panic!("expected a degraded VerifyDone, got {other:?}"),
         }
 
         // the daemon still serves fresh work, and the id registry is clean
         let (report, _, _) = client.verify(zoo_source()).unwrap();
         assert!(report.verified());
-        assert!(!client.cancel("doomed").unwrap(), "expired job must unregister");
+        assert!(!client.cancel("doomed").unwrap(), "finished job must unregister");
 
         client.shutdown().unwrap();
         server.wait();

@@ -1,5 +1,5 @@
 //! Session shard pool: N independent verification engines behind one
-//! daemon.
+//! daemon, with per-shard supervision.
 //!
 //! A single [`Session`] serializes unrelated requests on one memo lock
 //! and mixes every model family's layer fingerprints into one LRU. The
@@ -16,6 +16,16 @@
 //! [`crate::obs::metrics::merged_quantile`], and render as labeled
 //! Prometheus series next to the unlabeled aggregate.
 //!
+//! **Supervision:** a verify job that panics may leave its shard's
+//! session poisoned (a worker died holding the memo lock, a half-built
+//! e-graph, …). The server calls [`ShardPool::restart_shard`], which
+//! marks the shard unhealthy, builds a fresh [`Session`] against the
+//! shared rule set, warms it from the persistent segment cache, and
+//! swaps it in. While a shard is restarting, [`ShardPool::index_for`]
+//! probes forward to the next healthy sibling so new traffic keeps
+//! flowing; in-flight jobs on the old session keep their own
+//! [`Arc<Session>`] and finish (or fail) independently.
+//!
 //! With `N = 1` (the default) the pool is behaviorally identical to the
 //! pre-fleet single-session daemon.
 
@@ -24,28 +34,43 @@ use crate::egraph::RuleSet;
 use crate::obs::{self, Histogram};
 use crate::partition::MemoEntry;
 use crate::verifier::{MemoWriteHook, Session, SessionStats, VerifyConfig};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 /// One shard: a session plus its routing-level counters.
 pub struct Shard {
-    session: Session,
+    /// Swapped wholesale on supervisor restart; jobs clone the `Arc` at
+    /// admission and are unaffected by a mid-flight swap.
+    session: RwLock<Arc<Session>>,
     /// Requests routed to this shard.
     pub jobs: AtomicU64,
     /// Per-shard request latencies (merged for the global percentiles).
     pub latency: Histogram,
+    /// Supervisor restarts of this shard.
+    pub restarts: AtomicU64,
+    healthy: AtomicBool,
 }
 
 impl Shard {
-    /// The shard's verification engine.
-    pub fn session(&self) -> &Session {
-        &self.session
+    /// The shard's verification engine (a clone of the current `Arc`;
+    /// stable for the caller even across a concurrent restart).
+    pub fn session(&self) -> Arc<Session> {
+        Arc::clone(&self.session.read().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// False only during a supervisor restart.
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::SeqCst)
     }
 }
 
 /// Fixed pool of [`Session`] shards; see the module docs.
 pub struct ShardPool {
     shards: Vec<Shard>,
+    // what restart_shard needs to rebuild a session in place
+    cfg: VerifyConfig,
+    rules: Arc<RuleSet>,
+    hook: Option<MemoWriteHook>,
 }
 
 impl ShardPool {
@@ -57,19 +82,15 @@ impl ShardPool {
         let n = n.max(1);
         let rules = Arc::new(RuleSet::compile());
         let shards = (0..n)
-            .map(|_| {
-                let mut session = Session::with_rules(cfg.clone(), Arc::clone(&rules));
-                if let Some(h) = &hook {
-                    session.set_memo_write_hook(Arc::clone(h));
-                }
-                Shard {
-                    session,
-                    jobs: AtomicU64::new(0),
-                    latency: Histogram::new(obs::LATENCY_BUCKETS),
-                }
+            .map(|_| Shard {
+                session: RwLock::new(Arc::new(build_session(cfg, &rules, &hook))),
+                jobs: AtomicU64::new(0),
+                latency: Histogram::new(obs::LATENCY_BUCKETS),
+                restarts: AtomicU64::new(0),
+                healthy: AtomicBool::new(true),
             })
             .collect();
-        ShardPool { shards }
+        ShardPool { shards, cfg: cfg.clone(), rules, hook }
     }
 
     /// Number of shards.
@@ -84,9 +105,19 @@ impl ShardPool {
 
     /// Stable routing: the shard index for a model-family key. The same
     /// key always routes to the same shard, so repeat requests for a
-    /// family keep hitting that shard's warm memo.
+    /// family keep hitting that shard's warm memo — except while that
+    /// shard is mid-restart, when the key probes forward to the next
+    /// healthy sibling (losing memo locality beats losing the request).
     pub fn index_for(&self, key: &str) -> usize {
-        (fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
+        let n = self.shards.len();
+        let home = (fnv1a(key.as_bytes()) % n as u64) as usize;
+        for probe in 0..n {
+            let i = (home + probe) % n;
+            if self.shards[i].healthy() {
+                return i;
+            }
+        }
+        home
     }
 
     /// The shard a model-family key routes to.
@@ -104,13 +135,35 @@ impl ShardPool {
         self.shards.iter()
     }
 
+    /// Supervisor restart: replace shard `idx`'s session with a fresh
+    /// one (shared rule set, same memo-write hook) warm-started from
+    /// `warm` — normally the persistent cache's current entries. The
+    /// shard is unhealthy (siblings absorb its traffic) only for the
+    /// duration of the rebuild. Returns the number of entries preloaded.
+    pub fn restart_shard(&self, idx: usize, warm: &[(u64, MemoEntry)]) -> usize {
+        let shard = &self.shards[idx];
+        shard.healthy.store(false, Ordering::SeqCst);
+        let session = build_session(&self.cfg, &self.rules, &self.hook);
+        let loaded = session.preload_memo(warm.iter().cloned());
+        *shard.session.write().unwrap_or_else(|p| p.into_inner()) = Arc::new(session);
+        shard.restarts.fetch_add(1, Ordering::SeqCst);
+        shard.healthy.store(true, Ordering::SeqCst);
+        obs::metrics::count("scalify_shard_restarts_total", 1);
+        loaded
+    }
+
+    /// Total supervisor restarts across all shards.
+    pub fn restarts_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.restarts.load(Ordering::SeqCst)).sum()
+    }
+
     /// Warm-start **every** shard from persisted cache entries: routing
     /// is by request key, not fingerprint, so any shard may be asked
     /// about any persisted layer. Returns the number of distinct entries
     /// loaded (not multiplied by the shard count).
     pub fn preload_memo(&self, entries: &[(u64, MemoEntry)]) -> usize {
         for shard in &self.shards {
-            shard.session.preload_memo(entries.iter().cloned());
+            shard.session().preload_memo(entries.iter().cloned());
         }
         entries.len()
     }
@@ -121,7 +174,7 @@ impl ShardPool {
     pub fn stats(&self) -> SessionStats {
         let mut total = SessionStats::default();
         for (i, shard) in self.shards.iter().enumerate() {
-            let s = shard.session.stats();
+            let s = shard.session().stats();
             if i == 0 {
                 total.templates = s.templates;
             }
@@ -141,7 +194,7 @@ impl ShardPool {
             .iter()
             .enumerate()
             .map(|(i, shard)| {
-                let s = shard.session.stats();
+                let s = shard.session().stats();
                 ShardStat {
                     shard: i as u64,
                     jobs: shard.jobs.load(Ordering::Relaxed),
@@ -169,6 +222,18 @@ impl ShardPool {
         let hists: Vec<&Histogram> = self.shards.iter().map(|s| &s.latency).collect();
         obs::metrics::merged_max(&hists)
     }
+}
+
+fn build_session(
+    cfg: &VerifyConfig,
+    rules: &Arc<RuleSet>,
+    hook: &Option<MemoWriteHook>,
+) -> Session {
+    let mut session = Session::with_rules(cfg.clone(), Arc::clone(rules));
+    if let Some(h) = hook {
+        session.set_memo_write_hook(Arc::clone(h));
+    }
+    session
 }
 
 /// FNV-1a over the routing key — stable across runs and platforms, so
@@ -206,10 +271,12 @@ mod tests {
     #[test]
     fn shards_share_one_compiled_rule_set() {
         let pool = ShardPool::new(&tiny_cfg(), 3, None);
-        let first = pool.shard(0).session().rules();
+        let s0 = pool.shard(0).session();
+        let first = s0.rules();
         for i in 1..pool.len() {
+            let si = pool.shard(i).session();
             assert!(
-                Arc::ptr_eq(first, pool.shard(i).session().rules()),
+                Arc::ptr_eq(first, si.rules()),
                 "shard {i} compiled its own rule set"
             );
         }
@@ -243,5 +310,47 @@ mod tests {
         assert_eq!(pool.latency_quantile(0.50), 0.0);
         assert_eq!(pool.latency_quantile(0.95), 0.0);
         assert_eq!(pool.latency_max(), 0.0);
+    }
+
+    #[test]
+    fn restart_swaps_the_session_and_keeps_the_shared_rules() {
+        let pool = ShardPool::new(&tiny_cfg(), 2, None);
+        let before = pool.shard(1).session();
+        assert_eq!(pool.restart_shard(1, &[]), 0);
+        let after = pool.shard(1).session();
+        assert!(!Arc::ptr_eq(&before, &after), "restart must swap the session");
+        assert!(Arc::ptr_eq(before.rules(), after.rules()), "rules stay shared");
+        assert_eq!(pool.shard(1).restarts.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.restarts_total(), 1);
+        assert!(pool.shard(1).healthy(), "restart must end healthy");
+    }
+
+    #[test]
+    fn unhealthy_shards_route_to_the_next_healthy_sibling() {
+        let pool = ShardPool::new(&tiny_cfg(), 3, None);
+        let key = "llama-tiny";
+        let home = pool.index_for(key);
+        pool.shards[home].healthy.store(false, Ordering::SeqCst);
+        let rerouted = pool.index_for(key);
+        assert_ne!(rerouted, home, "unhealthy home shard must be skipped");
+        assert!(pool.shards[rerouted].healthy());
+        pool.shards[home].healthy.store(true, Ordering::SeqCst);
+        assert_eq!(pool.index_for(key), home, "healthy home shard routes again");
+    }
+
+    #[test]
+    fn restart_preloads_the_warm_entries() {
+        let pool = ShardPool::new(&tiny_cfg(), 1, None);
+        let warm = vec![(
+            0xfeed_beef_u64,
+            MemoEntry {
+                verified: true,
+                out_rels: vec![],
+                egraph_nodes: 3,
+                egraph_classes: 2,
+            },
+        )];
+        assert_eq!(pool.restart_shard(0, &warm), 1);
+        assert_eq!(pool.shard(0).session().stats().memo_entries, 1);
     }
 }

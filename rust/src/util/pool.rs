@@ -68,7 +68,12 @@ impl WorkerPool {
                             // result-returning callers observe the panic
                             // through their own catch_unwind wrapper
                             Ok(job) => {
-                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                let _ = catch_unwind(AssertUnwindSafe(move || {
+                                    // panic/delay faults fire inside the
+                                    // unwind guard, like any job panic
+                                    crate::faults::disturb("pool-job");
+                                    job()
+                                }));
                             }
                             Err(_) => break, // sender dropped: shut down
                         }

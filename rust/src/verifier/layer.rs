@@ -184,6 +184,11 @@ pub fn verify_layer(
             exhausted = true;
             break;
         }
+        if report.stop == StopReason::DeadlineExceeded {
+            // not a resource verdict: the caller sees the stop reason and
+            // degrades to a partial (verified-prefix) report
+            break;
+        }
         rel.rekey(&eg);
         let facts_before = rel.fact_count;
 

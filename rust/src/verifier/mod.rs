@@ -236,6 +236,12 @@ pub struct VerifyReport {
     pub stopwatch: Stopwatch,
     /// Total wall time.
     pub total: std::time::Duration,
+    /// The deadline expired mid-run: `layers` holds only the verified
+    /// prefix, and the verdict covers that prefix — nothing is claimed
+    /// about the layers after [`VerifyReport::first_unverified`].
+    pub degraded: bool,
+    /// First layer the run did not get to (set iff `degraded`).
+    pub first_unverified: Option<String>,
 }
 
 impl VerifyReport {
@@ -268,8 +274,16 @@ impl VerifyReport {
         } else {
             String::new()
         };
+        let degraded = if self.degraded {
+            match &self.first_unverified {
+                Some(at) => format!(" [DEGRADED: deadline hit before {at}]"),
+                None => " [DEGRADED: deadline hit]".to_string(),
+            }
+        } else {
+            String::new()
+        };
         format!(
-            "{status} — {} layers ({} memoized{reuse}) in {}",
+            "{status}{degraded} — {} layers ({} memoized{reuse}) in {}",
             self.layers.len(),
             memoized,
             fmt_duration(self.total)

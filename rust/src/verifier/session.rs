@@ -95,12 +95,16 @@ pub struct LayerProgress {
 ///
 /// All three hooks are checked or fired **at layer boundaries** of the
 /// ordered assembly pass — the granularity the streaming service
-/// protocol exposes. A set `cancel` token or an expired `deadline`
-/// aborts the call with a typed [`ScalifyError::Runtime`] whose message
-/// contains `cancelled` or `deadline exceeded` respectively; no partial
-/// report is produced. The parallel cold pass is not interrupted
-/// mid-round (its jobs are short); cancellation takes effect when the
-/// assembly pass next reaches a layer boundary.
+/// protocol exposes. A set `cancel` token aborts the call with a typed
+/// [`ScalifyError::Runtime`] whose message contains `cancelled`; no
+/// partial report is produced. An expired `deadline` instead *degrades*:
+/// the call returns a [`VerifyReport`] carrying the verified-layer
+/// prefix with `degraded: true` and the first unverified layer named,
+/// and the deadline is also threaded into
+/// [`crate::egraph::RunLimits::deadline`] so a single long saturation
+/// stops within one rewrite iteration. The parallel cold pass is not
+/// interrupted mid-round (its jobs are short); cancellation takes
+/// effect when the assembly pass next reaches a layer boundary.
 #[derive(Clone, Default)]
 pub struct VerifyControl {
     /// Shared flag; set to `true` (by any thread) to abort the call.
@@ -127,23 +131,24 @@ impl VerifyControl {
         self.cancel.load(Ordering::Relaxed)
     }
 
-    fn check(&self) -> Result<()> {
+    fn check_cancel(&self) -> Result<()> {
         if self.cancel.load(Ordering::Relaxed) {
             return Err(ScalifyError::runtime("verify cancelled at a layer boundary"));
         }
-        if let Some(deadline) = self.deadline {
-            if Instant::now() >= deadline {
-                return Err(ScalifyError::runtime(
-                    "deadline exceeded at a layer boundary",
-                ));
-            }
-        }
         Ok(())
+    }
+
+    fn deadline_passed(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
-fn check_control(control: Option<&VerifyControl>) -> Result<()> {
-    control.map_or(Ok(()), VerifyControl::check)
+fn check_cancel(control: Option<&VerifyControl>) -> Result<()> {
+    control.map_or(Ok(()), VerifyControl::check_cancel)
+}
+
+fn deadline_passed(control: Option<&VerifyControl>) -> bool {
+    control.is_some_and(VerifyControl::deadline_passed)
 }
 
 fn notify_progress(control: Option<&VerifyControl>, p: LayerProgress) {
@@ -321,6 +326,13 @@ impl Session {
         let start = Instant::now();
         let mut sw = Stopwatch::new();
 
+        // thread the call's deadline into the saturation limits so one
+        // long rewrite stops within an iteration, not a layer
+        let mut limits = self.cfg.limits;
+        if let Some(d) = control.and_then(|c| c.deadline) {
+            limits.deadline = Some(limits.deadline.map_or(d, |l| l.min(d)));
+        }
+
         // ---- partitioning ----
         let (base_layers, dist_layers) = sw.time("partition", || {
             let _sp = obs::span("phase", "partition");
@@ -381,6 +393,7 @@ impl Session {
                     &dist_layers,
                     &base_idx_by_tag,
                     &boundary,
+                    limits,
                 );
             });
         }
@@ -398,13 +411,21 @@ impl Session {
         let mut state_layers: Option<Vec<LayerState>> = capture.then(Vec::new);
         let mut all_discrepancies: Vec<Discrepancy> = Vec::new();
         let mut exhausted: Option<String> = None;
+        let mut degraded_at: Option<String> = None;
         let total_layers = dist_layers.len();
         sw.time("verify-layers", || -> Result<()> {
             let _sp = obs::span("phase", "verify-layers");
             for (li, dslice) in dist_layers.iter().enumerate() {
                 // cancellation, deadlines and superseded-request aborts
-                // all take effect here, at layer boundaries
-                check_control(control)?;
+                // all take effect here, at layer boundaries: cancel is a
+                // typed error, a blown deadline degrades to the verified
+                // prefix instead of throwing it away
+                check_cancel(control)?;
+                if deadline_passed(control) {
+                    degraded_at = Some(format!("layer {}", dslice.layer));
+                    break;
+                }
+                crate::faults::check("verify-layer")?;
                 let Some(bslice) =
                     base_idx_by_tag.get(&dslice.layer).map(|&i| &base_layers[i])
                 else {
@@ -575,7 +596,7 @@ impl Session {
                             &input_rels,
                             pair.dist.num_cores,
                             &self.rules,
-                            self.cfg.limits,
+                            limits,
                             self.cfg.max_rounds,
                         );
                         if self.cfg.memoize && o.verified {
@@ -593,6 +614,18 @@ impl Session {
                         (o, false)
                     }
                 };
+                if outcome.stop == crate::egraph::StopReason::DeadlineExceeded
+                    && !outcome.verified
+                {
+                    // the saturation was cut short, so "not verified" means
+                    // "not *yet* verified" — drop the truncated layer's
+                    // outcome (its discrepancies would be artifacts of the
+                    // interrupted run) and degrade at this boundary.
+                    // A layer that verified *despite* the cut is a complete
+                    // proof (verification is monotone) and is kept above.
+                    degraded_at = Some(format!("layer {}", dslice.layer));
+                    break;
+                }
                 if outcome.exhausted {
                     exhausted = Some(format!("layer {}", dslice.layer));
                 }
@@ -691,8 +724,14 @@ impl Session {
             status: verdict.status().into(),
             layers,
         });
-        let report =
-            VerifyReport { verdict, layers: reports, stopwatch: sw, total: start.elapsed() };
+        let report = VerifyReport {
+            verdict,
+            layers: reports,
+            stopwatch: sw,
+            total: start.elapsed(),
+            degraded: degraded_at.is_some(),
+            first_unverified: degraded_at,
+        };
         Ok((report, state))
     }
 
@@ -757,6 +796,7 @@ impl Session {
         dist_layers: &Arc<Vec<LayerSlice>>,
         base_idx_by_tag: &FxHashMap<u32, usize>,
         boundary: &FxHashMap<crate::ir::NodeId, (crate::ir::NodeId, RelSummary)>,
+        limits: crate::egraph::RunLimits,
     ) -> FxHashMap<u32, (Vec<(usize, usize, RelSummary)>, layer::LayerOutcome)> {
         type Rels = Vec<(usize, usize, RelSummary)>;
         let Some(pool) = &self.pool else {
@@ -925,7 +965,6 @@ impl Session {
                 break;
             }
 
-            let limits = cfg.limits;
             let max_rounds = cfg.max_rounds;
             let closures: Vec<_> = jobs
                 .into_iter()

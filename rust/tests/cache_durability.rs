@@ -1,0 +1,116 @@
+//! Kill -9 durability fuzz (`cargo test --test cache_durability`): a
+//! daemon writing its layer-memo segment cache is SIGKILLed mid-verify
+//! at randomized offsets, over several rounds against the same cache
+//! directory. Every restart must load a consistent index — a torn tail
+//! record may be dropped, but nothing previously durable disappears and
+//! the daemon always comes back serving.
+
+use scalify::service::Client;
+use scalify::service::VerifySource;
+use scalify::util::Prng;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+const ROUNDS: usize = 4;
+
+fn spawn_daemon(cache_dir: &Path) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_scalify"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--threads",
+            "2",
+            "--cache-dir",
+            cache_dir.to_str().expect("utf-8 temp path"),
+        ])
+        // the fuzz is about torn writes, not injected faults — keep the
+        // child deterministic even if the outer environment arms chaos
+        .env_remove("SCALIFY_FAULTS")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning the scalify binary");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("daemon banner");
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .expect("banner carries the address")
+        .to_string();
+    assert!(addr.contains(':'), "unexpected banner: {line:?}");
+    (child, addr)
+}
+
+fn tiny_model() -> VerifySource {
+    VerifySource::Model {
+        model: "llama-tiny".into(),
+        par: "tp2".into(),
+        layers: None,
+        edit_layer: None,
+    }
+}
+
+#[test]
+fn sigkill_mid_verify_never_corrupts_the_segment_cache() {
+    let cache_dir =
+        std::env::temp_dir().join(format!("scalify-durability-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    std::fs::create_dir_all(&cache_dir).expect("creating the cache dir");
+
+    // deterministic offsets: the rounds kill the daemon at staggered
+    // points of the verify/cache-append window
+    let mut prng = Prng::new(0xD00D);
+    let mut durable_floor: u64 = 0;
+
+    for round in 0..ROUNDS {
+        let (mut child, addr) = spawn_daemon(&cache_dir);
+
+        // restart invariant: whatever the previous round made durable
+        // is still in the index — a crash may lose its own in-flight
+        // tail, never an earlier round's records
+        let mut stats_client = Client::connect_with_timeout(&addr, Duration::from_secs(10))
+            .expect("connect for stats");
+        let loaded = stats_client.stats().expect("stats after restart").cache_entries_loaded;
+        assert!(
+            loaded >= durable_floor,
+            "round {round}: restart lost durable cache entries ({loaded} < {durable_floor})"
+        );
+        durable_floor = loaded;
+
+        // fire a verify (it appends memo records as layers finish) and
+        // SIGKILL the daemon a randomized slice into it
+        let verify_addr = addr.clone();
+        let verifier = std::thread::spawn(move || {
+            let Ok(mut client) =
+                Client::connect_with_timeout(&verify_addr, Duration::from_secs(10))
+            else {
+                return;
+            };
+            // the kill usually lands mid-request: connection reset /
+            // EOF / timeout are all expected here
+            let _ = client.verify(tiny_model());
+        });
+        std::thread::sleep(Duration::from_millis(prng.below(300)));
+        child.kill().expect("SIGKILL the daemon");
+        let _ = child.wait();
+        verifier.join().expect("verify thread exits once the daemon dies");
+    }
+
+    // final restart: index loads, the daemon serves a full verify from
+    // whatever survived, and shuts down cleanly
+    let (mut child, addr) = spawn_daemon(&cache_dir);
+    let mut client =
+        Client::connect_with_timeout(&addr, Duration::from_secs(30)).expect("final connect");
+    let stats = client.stats().expect("final stats");
+    assert!(stats.cache_entries_loaded >= durable_floor, "{}", stats.cache_entries_loaded);
+    let (report, _latency, _stats) = client.verify(tiny_model()).expect("final verify");
+    assert!(report.verified(), "{}", report.summary());
+    client.shutdown().expect("clean shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}

@@ -1,0 +1,229 @@
+//! Chaos suite (`cargo test --test chaos`): deterministic fault
+//! injection against an in-process fleet daemon. The acceptance
+//! scenario drives eight concurrent clients through injected shard
+//! panics and connection drops and requires every request to terminate
+//! with a typed outcome — success via retry, or a `retryable: ` error
+//! after exhaustion — with the daemon still serving and
+//! `shard_restarts_total` > 0 at the end.
+//!
+//! The fault registry is process-global, so every test here serializes
+//! on one lock and clears the registry on entry and exit; the nightly
+//! CI `chaos` job re-runs the same scenarios against the spawned binary
+//! via `SCALIFY_FAULTS` (see TESTING.md § "The chaos suite").
+
+use scalify::service::{
+    verify_with_retry, Client, Request, Response, RetryPolicy, ServeConfig, Server,
+    VerifyOpts, VerifySource, PROTOCOL_V2,
+};
+use scalify::verifier::VerifyConfig;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serializes the tests in this binary: they all mutate the
+/// process-global fault registry and an in-process server shares it.
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // a previous test panicking while holding the lock must not wedge
+    // the rest of the suite
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn fleet(shards: usize) -> Server {
+    Server::start(ServeConfig {
+        queue_capacity: 16,
+        workers: 4,
+        shards,
+        verify: VerifyConfig { threads: 2, ..VerifyConfig::default() },
+        ..ServeConfig::default()
+    })
+    .expect("fleet starts on an ephemeral port")
+}
+
+fn tiny_model() -> VerifySource {
+    VerifySource::Model {
+        model: "llama-tiny".into(),
+        par: "tp2".into(),
+        layers: None,
+        edit_layer: None,
+    }
+}
+
+#[test]
+fn fleet_self_heals_under_shard_panics_and_conn_drops() {
+    let _guard = chaos_lock();
+    scalify::faults::clear();
+
+    let server = fleet(4);
+    let addr = server.local_addr().to_string();
+
+    // arm the chaos mix: 20% of verify jobs panic on a worker thread,
+    // 10% of response writes drop the connection instead
+    let mut ctl = Client::connect(&addr).expect("control connection");
+    ctl.faults(Some("shard-verify:panic:0.2:42,conn-write:drop:0.1:43"), false)
+        .expect("arming the chaos faults");
+
+    const CLIENTS: usize = 8;
+    const REQUESTS: usize = 6;
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> Vec<String> {
+            let policy = RetryPolicy {
+                attempts: 8,
+                base_backoff: Duration::from_millis(5),
+                max_backoff: Duration::from_millis(40),
+                // bounds every read: a hung client would fail the test
+                // with a typed timeout instead of wedging the harness
+                timeout: Duration::from_secs(30),
+                jitter_seed: c as u64 + 1,
+            };
+            let mut outcomes = Vec::new();
+            for r in 0..REQUESTS {
+                let request = Request::Verify(tiny_model());
+                let opts = VerifyOpts {
+                    id: Some(format!("chaos-{c}-{r}")),
+                    ..VerifyOpts::default()
+                };
+                let outcome = match verify_with_retry(&addr, &request, &opts, &policy, |_| {})
+                {
+                    Ok(Response::VerifyDone { report, .. }) => {
+                        format!("done:{}", report.verified())
+                    }
+                    Ok(Response::Cancelled { .. }) => "cancelled".into(),
+                    Ok(Response::Error { message }) => format!("error:{message}"),
+                    Ok(other) => format!("unexpected:{other:?}"),
+                    Err(e) => format!("err:{}", e.message()),
+                };
+                outcomes.push(outcome);
+            }
+            outcomes
+        }));
+    }
+
+    let mut successes = 0usize;
+    let mut retry_exhausted = 0usize;
+    for handle in handles {
+        // a hung client never joins; the per-attempt socket timeout
+        // guarantees this join terminates
+        let outcomes = handle.join().expect("chaos client thread completed");
+        for outcome in outcomes {
+            if outcome == "done:true" {
+                successes += 1;
+            } else if let Some(msg) =
+                outcome.strip_prefix("error:").or_else(|| outcome.strip_prefix("err:"))
+            {
+                // attempts exhausted is acceptable — but only with a
+                // typed retryable error, never a hang or a hard failure
+                assert!(
+                    scalify::service::is_retryable(msg),
+                    "non-retryable terminal outcome under chaos: {outcome}"
+                );
+                retry_exhausted += 1;
+            } else {
+                panic!("untyped chaos outcome: {outcome}");
+            }
+        }
+    }
+    assert_eq!(successes + retry_exhausted, CLIENTS * REQUESTS);
+    assert!(
+        successes > 0,
+        "retry must carry most requests through 20% panics ({retry_exhausted} exhausted)"
+    );
+
+    // disarm, then prove the fleet is still healthy and supervised:
+    // a fresh verify succeeds and the restart counter saw the panics
+    let mut ctl = Client::connect(&addr).expect("reconnect after chaos");
+    ctl.faults(None, true).expect("clearing the chaos faults");
+    ctl.hello(PROTOCOL_V2).expect("hello");
+    let (report, _latency, stats) = ctl.verify(tiny_model()).expect("fleet serves after chaos");
+    assert!(report.verified(), "{}", report.summary());
+    assert!(
+        stats.shard_restarts_total > 0,
+        "20% panics across {} requests must restart at least one shard",
+        CLIENTS * REQUESTS
+    );
+    ctl.shutdown().expect("daemon survived the whole run");
+    server.wait();
+    scalify::faults::clear();
+}
+
+#[test]
+fn deadline_with_slow_layers_degrades_to_a_partial_verdict() {
+    let _guard = chaos_lock();
+    scalify::faults::clear();
+
+    let server = fleet(2);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+    // every layer boundary stalls 100ms; a 50ms deadline therefore
+    // expires after the first slice and the run must degrade, not hang
+    // and not cancel
+    client.faults(Some("verify-layer:delay100:1.0:7"), false).expect("arm slow layers");
+    client.hello(PROTOCOL_V2).expect("hello");
+
+    let request = Request::Verify(VerifySource::Model {
+        model: "llama-tiny".into(),
+        par: "tp2".into(),
+        layers: Some(4),
+        edit_layer: None,
+    });
+    let opts = VerifyOpts {
+        id: Some("chaos-degraded".into()),
+        deadline_secs: Some(0.05),
+        ..VerifyOpts::default()
+    };
+    match client.verify_opts(&request, &opts, |_| {}).expect("typed response") {
+        Response::VerifyDone { report, stats, .. } => {
+            assert!(report.degraded, "{}", report.summary());
+            let at = report.first_unverified.as_deref().expect("degraded names the boundary");
+            assert!(at.starts_with("layer "), "{at}");
+            assert!(report.summary().contains("DEGRADED"), "{}", report.summary());
+            assert!(stats.degraded_total >= 1, "{}", stats.degraded_total);
+        }
+        other => panic!("expected a degraded VerifyDone, got {other:?}"),
+    }
+
+    // with the fault cleared and no deadline the same request verifies
+    // fully — degradation was the deadline's doing, not corruption
+    client.faults(None, true).expect("clear");
+    let (report, _, _) = client.verify(tiny_model()).expect("clean verify");
+    assert!(report.verified() && !report.degraded, "{}", report.summary());
+    client.shutdown().expect("shutdown");
+    server.wait();
+    scalify::faults::clear();
+}
+
+#[test]
+fn faults_protocol_arms_inspects_and_clears_the_registry() {
+    let _guard = chaos_lock();
+    scalify::faults::clear();
+
+    let server = fleet(1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+
+    assert!(client.faults(None, false).expect("inspect").is_empty());
+
+    // arm two points in one spec; the snapshot comes back sorted with
+    // zeroed counters (rate 0 / unreachable points never fire)
+    let snap = client
+        .faults(Some("cache-write:bitrot:0.5:3,sched-admit:error:0.0:4"), false)
+        .expect("arm");
+    assert_eq!(snap.len(), 2);
+    assert_eq!((snap[0].point.as_str(), snap[0].kind.as_str()), ("cache-write", "bitrot"));
+    assert_eq!((snap[1].point.as_str(), snap[1].kind.as_str()), ("sched-admit", "error"));
+    assert_eq!(snap[0].seed, 3);
+    assert_eq!(snap[0].fired, 0);
+
+    // a typo'd spec is a typed error and leaves the registry untouched
+    let err = client.faults(Some("bogus:panic:1.0:1"), false).unwrap_err();
+    assert!(err.message().contains("unknown fault point"), "{err}");
+    assert_eq!(client.faults(None, false).expect("inspect").len(), 2);
+
+    // clear disarms everything and restores the fast path
+    assert!(client.faults(None, true).expect("clear").is_empty());
+    assert!(!scalify::faults::enabled());
+
+    client.shutdown().expect("shutdown");
+    server.wait();
+}
